@@ -1,0 +1,47 @@
+//! Fig. 10 tour: sweep the 20-kernel NPBench corpus with pointer
+//! incrementation, printing modeled speedups per compiler and *measured*
+//! VM wall-clock ratios for a few highlighted kernels.
+//!
+//!     cargo run --release --example npbench_tour
+
+use std::time::Instant;
+
+use silo::exec::Vm;
+use silo::kernels::{gen_inputs, npbench_corpus, Preset};
+use silo::schedules::schedule_all_ptr_inc;
+
+fn main() -> anyhow::Result<()> {
+    print!("{}", silo::coordinator::experiments::run("fig10")?);
+
+    println!("\n== measured VM wall-clock ratios (this host, Small preset) ==");
+    for name in ["jacobi_1d", "softmax", "gemm", "floyd_warshall"] {
+        let entry = npbench_corpus()
+            .into_iter()
+            .find(|k| k.name == name)
+            .unwrap();
+        let params = (entry.preset)(Preset::Small);
+        let mut times = Vec::new();
+        for ptr_inc in [false, true] {
+            let mut p = (entry.build)();
+            if ptr_inc {
+                schedule_all_ptr_inc(&mut p);
+            }
+            let inputs = gen_inputs(&p, &params, entry.init)?;
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let vm = Vm::compile(&p)?;
+            vm.run(&params, &refs, 1)?; // warmup
+            let t0 = Instant::now();
+            for _ in 0..3 {
+                vm.run(&params, &refs, 1)?;
+            }
+            times.push(t0.elapsed().as_secs_f64() / 3.0);
+        }
+        println!(
+            "  {name:>15}: naive {:.1} ms → ptr-inc {:.1} ms  ({:.2}×)",
+            times[0] * 1e3,
+            times[1] * 1e3,
+            times[0] / times[1]
+        );
+    }
+    Ok(())
+}

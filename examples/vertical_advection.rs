@@ -1,0 +1,92 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md): the paper's headline
+//! vertical-advection workload through every layer of the stack —
+//!
+//!   1. build the kernel in the loop IR;
+//!   2. optimize with SILO cfg1 and cfg2 (privatization, fusion,
+//!      interchange, DOACROSS pipelining);
+//!   3. execute baseline + both configs on the bytecode VM, including the
+//!      threaded DOACROSS runtime (wait/release synchronization);
+//!   4. validate numerics against BOTH oracles: the pure-Rust reference
+//!      and the AOT-compiled JAX/Pallas artifact executed via PJRT
+//!      (`make artifacts` first);
+//!   5. simulate Fig. 9's strong scaling on the Intel node model.
+//!
+//!     make artifacts && cargo run --release --example vertical_advection
+
+use silo::coordinator::{self, MemSchedules, OptConfig};
+use silo::kernels::{self, gen_inputs, vadv, Preset};
+use silo::runtime::Oracle;
+
+fn main() -> anyhow::Result<()> {
+    println!("== vertical advection end-to-end ==");
+    let preset = Preset::Small; // 32×32×45
+
+    // 1–3: run the three configurations on the VM.
+    let mut results = Vec::new();
+    for (name, cfg) in [
+        ("baseline", OptConfig::None),
+        ("SILO cfg1", OptConfig::Cfg1),
+        ("SILO cfg2", OptConfig::Cfg2),
+    ] {
+        let threads = if name == "baseline" { 1 } else { 3 };
+        let out = coordinator::optimize_and_run(
+            "vadv",
+            cfg,
+            MemSchedules { ptr_inc: cfg != OptConfig::None, prefetch: false },
+            preset,
+            threads,
+        )?;
+        println!(
+            "{name:>9}: VM wall {:.2} ms ({threads} thread(s))",
+            out.wall.as_secs_f64() * 1e3
+        );
+        results.push((name, out));
+    }
+
+    // Outputs agree bit-for-bit across configs.
+    let base_x = results[0].1.storage.by_name("x").unwrap().to_vec();
+    for (name, out) in &results[1..] {
+        assert_eq!(
+            base_x,
+            out.storage.by_name("x").unwrap(),
+            "{name} diverged"
+        );
+    }
+    println!("all configs agree on x ✓");
+
+    // 4a: pure-Rust oracle.
+    let (iv, jv, kv) = (32usize, 32, 45);
+    let vol = iv * jv * kv;
+    let mk = |n: &str| (0..vol).map(|i| vadv::init(n, i)).collect::<Vec<f64>>();
+    let (a, b, c, d) = (mk("a"), mk("b"), mk("c"), mk("d"));
+    let (x_ref, _) = vadv::reference(iv, jv, kv, &a, &b, &c, &d);
+    let max_err = base_x
+        .iter()
+        .zip(&x_ref)
+        .map(|(g, e)| (g - e).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |x − rust oracle| = {max_err:.2e}");
+    assert!(max_err < 1e-9);
+
+    // 4b: JAX/Pallas artifact via PJRT (three-layer composition).
+    match Oracle::open_default() {
+        Ok(mut oracle) if oracle.has("vadv_small") => {
+            let result = oracle.run("vadv_small", &[&a, &b, &c, &d])?;
+            let max_err = base_x
+                .iter()
+                .zip(&result[0])
+                .map(|(g, e)| (g - e).abs())
+                .fold(0.0f64, f64::max);
+            println!("max |x − PJRT (JAX/Pallas) oracle| = {max_err:.2e}");
+            assert!(max_err < 1e-9);
+        }
+        _ => println!("PJRT oracle unavailable (run `make artifacts`)"),
+    }
+
+    // 5: Fig. 9 strong-scaling simulation.
+    println!();
+    print!("{}", silo::coordinator::experiments::run("fig9")?);
+
+    let _ = gen_inputs(&kernels::vadv::build(), &vadv::preset(preset), vadv::init)?;
+    Ok(())
+}

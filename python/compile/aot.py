@@ -1,0 +1,88 @@
+"""AOT lowering: jax → HLO *text* artifacts the rust runtime loads.
+
+HLO text (NOT `.serialize()`): jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --outdir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+DTYPE = "float64"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_specs():
+    """(name, fn, input shapes) for every artifact. Shapes match the rust
+    presets (kernels/*.rs) so the artifacts serve as oracles."""
+    vadv_shapes = {
+        "tiny": (6, 5, 8),   # (I, J, K) — rust Preset::Tiny, K contiguous
+        "small": (32, 32, 45),
+    }
+    specs = []
+    for tag, (i, j, k) in vadv_shapes.items():
+        s = jax.ShapeDtypeStruct((i, j, k), DTYPE)
+        specs.append((f"vadv_{tag}", model.vadv_model, (s, s, s, s)))
+    for tag, (jj, ii) in {"tiny": (12, 14), "small": (254, 254)}.items():
+        g = jax.ShapeDtypeStruct((jj + 2, ii + 2), DTYPE)
+        specs.append((f"laplace_{tag}", model.laplace_model, (g,)))
+    for tag, n in {"tiny": (64), "small": (128)}.items():
+        m = jax.ShapeDtypeStruct((n, n), DTYPE)
+        specs.append((f"matmul_{tag}", model.matmul_model, (m, m)))
+    return specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {}
+    for name, fn, shapes in artifact_specs():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "inputs": [list(s.shape) for s in shapes],
+            "dtype": DTYPE,
+            "path": f"{name}.hlo.txt",
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.outdir, "manifest.json")
+    existing = {}
+    if os.path.exists(mpath) and only:
+        with open(mpath) as f:
+            existing = json.load(f)
+    existing.update(manifest)
+    with open(mpath, "w") as f:
+        json.dump(existing, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

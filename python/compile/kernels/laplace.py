@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: 5-point Laplace stencil (the Fig. 1 computation).
+
+The grid walks row blocks; each instance loads a (BJ+2, I+2) halo slab
+into VMEM and produces BJ interior rows. interpret=True (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _laplace_kernel(g_ref, out_ref):
+    g = g_ref[...]
+    lap = (
+        4.0 * g[1:-1, 1:-1]
+        - g[1:-1, 2:]
+        - g[1:-1, :-2]
+        - g[2:, 1:-1]
+        - g[:-2, 1:-1]
+    )
+    out = jnp.zeros_like(g)
+    out_ref[...] = out.at[1:-1, 1:-1].set(lap)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def laplace(grid):
+    """Apply the 5-point operator to a [J+2, I+2] grid (interior only)."""
+    return pl.pallas_call(
+        _laplace_kernel,
+        out_shape=jax.ShapeDtypeStruct(grid.shape, grid.dtype),
+        interpret=True,
+    )(grid)

@@ -1,0 +1,73 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1's ground truth).
+
+Every Pallas kernel in this package is checked against these references by
+pytest (+ hypothesis shape sweeps) at build time; the lowered HLO artifacts
+then serve as numerical oracles for the rust VM (runtime/pjrt.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def vadv_ref(a, b, c, d):
+    """Thomas-algorithm vertical advection over an [I, J, K] domain
+    (K contiguous, NPBench's layout).
+
+    Forward sweep (cp/dp recurrences across K), a column-scratch output
+    stage (utens), and backward substitution (x) — mirroring
+    rust/src/kernels/vadv.rs statement for statement.
+    """
+    # Work K-leading internally; move back at the end.
+    a, b, c, d = (jnp.moveaxis(v, -1, 0) for v in (a, b, c, d))
+    K = a.shape[0]
+
+    cp0 = c[0] / b[0]
+    dp0 = d[0] / b[0]
+
+    def fwd(carry, inputs):
+        cp_prev, dp_prev = carry
+        ak, bk, ck, dk = inputs
+        den = bk - ak * cp_prev
+        cp_k = ck / den
+        dp_k = (dk - ak * dp_prev) / den
+        col = 0.25 * ak + 0.5 * bk
+        utens_k = 0.1 * dp_k + col
+        return (cp_k, dp_k), (cp_k, dp_k, utens_k)
+
+    (_, _), (cps, dps, utens_rest) = jax.lax.scan(
+        fwd, (cp0, dp0), (a[1:], b[1:], c[1:], d[1:])
+    )
+    cp = jnp.concatenate([cp0[None], cps], axis=0)
+    dp = jnp.concatenate([dp0[None], dps], axis=0)
+    utens = jnp.concatenate([jnp.zeros_like(a[0])[None], utens_rest], axis=0)
+
+    def bwd(x_next, inputs):
+        cp_k, dp_k = inputs
+        x_k = dp_k - cp_k * x_next
+        return x_k, x_k
+
+    x_last = dp[K - 1]
+    _, xs = jax.lax.scan(bwd, x_last, (cp[: K - 1], dp[: K - 1]), reverse=True)
+    x = jnp.concatenate([xs, x_last[None]], axis=0)
+    return jnp.moveaxis(x, 0, -1), jnp.moveaxis(utens, 0, -1)
+
+
+def laplace_ref(grid):
+    """5-point Laplace operator: 4·center − N − S − E − W on the interior
+    of a [J+2, I+2] grid (zero elsewhere), matching Fig. 1's math."""
+    lap = (
+        4.0 * grid[1:-1, 1:-1]
+        - grid[1:-1, 2:]
+        - grid[1:-1, :-2]
+        - grid[2:, 1:-1]
+        - grid[:-2, 1:-1]
+    )
+    out = jnp.zeros_like(grid)
+    return out.at[1:-1, 1:-1].set(lap)
+
+
+def matmul_ref(a, b):
+    """Plain matrix product (the Table 1 workload's semantics)."""
+    return a @ b

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: vertical-advection Thomas solve.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the (J, I) plane is
+the parallel dimension — the Pallas grid walks J so each program instance
+holds one (K, 1, I) column slab in VMEM and runs the K recurrence as a
+`fori_loop` inside the kernel. That is the TPU analogue of the paper's
+"DOALL over I×J, pipeline K". `interpret=True` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _vadv_kernel(a_ref, b_ref, c_ref, d_ref, x_ref, utens_ref):
+    # Block shape (1, J, K): move K leading for the recurrence, move back
+    # on store.
+    import jax.numpy as jnp  # noqa: F811 (kernel-local alias)
+    a = jnp.moveaxis(a_ref[...], -1, 0)
+    b = jnp.moveaxis(b_ref[...], -1, 0)
+    c = jnp.moveaxis(c_ref[...], -1, 0)
+    d = jnp.moveaxis(d_ref[...], -1, 0)
+    K = a.shape[0]
+
+    cp0 = c[0] / b[0]
+    dp0 = d[0] / b[0]
+    cp = jnp.zeros_like(a).at[0].set(cp0)
+    dp = jnp.zeros_like(a).at[0].set(dp0)
+    utens = jnp.zeros_like(a)
+
+    def fwd(k, state):
+        cp, dp, utens = state
+        den = b[k] - a[k] * cp[k - 1]
+        cp_k = c[k] / den
+        dp_k = (d[k] - a[k] * dp[k - 1]) / den
+        col = 0.25 * a[k] + 0.5 * b[k]
+        utens = utens.at[k].set(0.1 * dp_k + col)
+        return cp.at[k].set(cp_k), dp.at[k].set(dp_k), utens
+
+    cp, dp, utens = jax.lax.fori_loop(1, K, fwd, (cp, dp, utens))
+
+    x = jnp.zeros_like(a).at[K - 1].set(dp[K - 1])
+
+    def bwd(t, x):
+        k = K - 2 - t
+        return x.at[k].set(dp[k] - cp[k] * x[k + 1])
+
+    x = jax.lax.fori_loop(0, K - 1, bwd, x)
+    x_ref[...] = jnp.moveaxis(x, 0, -1)
+    utens_ref[...] = jnp.moveaxis(utens, 0, -1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def vadv(a, b, c, d):
+    """x, utens = vadv(a, b, c, d) over [I, J, K] arrays (K contiguous)."""
+    I, J, K = a.shape
+    out_shape = (
+        jax.ShapeDtypeStruct((I, J, K), a.dtype),
+        jax.ShapeDtypeStruct((I, J, K), a.dtype),
+    )
+    # One (1, J, K) slab per program instance: the whole K column set of
+    # one i row lives in VMEM while the recurrence runs.
+    spec = pl.BlockSpec((1, J, K), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _vadv_kernel,
+        out_shape=out_shape,
+        grid=(I,),
+        in_specs=[spec] * 4,
+        out_specs=(spec, spec),
+        interpret=True,
+    )(a, b, c, d)

@@ -1,0 +1,27 @@
+"""L2: the jax compute graphs the coordinator AOT-loads, calling the L1
+Pallas kernels so everything lowers into one HLO module per artifact.
+
+Build-time only — python never runs on the rust request path.
+"""
+
+import jax
+
+from .kernels.laplace import laplace
+from .kernels.matmul import matmul
+from .kernels.vadv import vadv
+
+jax.config.update("jax_enable_x64", True)
+
+
+def vadv_model(a, b, c, d):
+    """Vertical advection: returns (x, utens) as a tuple."""
+    x, utens = vadv(a, b, c, d)
+    return (x, utens)
+
+
+def laplace_model(grid):
+    return (laplace(grid),)
+
+
+def matmul_model(a, b):
+    return (matmul(a, b),)

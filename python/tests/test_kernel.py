@@ -1,0 +1,122 @@
+"""pytest: Pallas kernels vs pure-jnp oracles — the core L1 correctness
+signal. Hypothesis sweeps shapes and dtypes (per-session guidance)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.laplace import laplace
+from compile.kernels.matmul import matmul
+from compile.kernels.vadv import vadv
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(shape, seed, lo=-0.5, hi=0.5, dtype="float64"):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, shape), dtype=dtype)
+
+
+def _vadv_inputs(i, j, k, seed=0, dtype="float64"):
+    a = _rand((i, j, k), seed, -0.2, 0.2, dtype)
+    b = _rand((i, j, k), seed + 1, 2.0, 3.0, dtype)
+    c = _rand((i, j, k), seed + 2, -0.2, 0.2, dtype)
+    d = _rand((i, j, k), seed + 3, -0.5, 0.5, dtype)
+    return a, b, c, d
+
+
+class TestVadv:
+    def test_matches_ref_tiny(self):
+        a, b, c, d = _vadv_inputs(6, 5, 8)
+        x, utens = vadv(a, b, c, d)
+        xr, utr = ref.vadv_ref(a, b, c, d)
+        np.testing.assert_allclose(x, xr, rtol=1e-12)
+        np.testing.assert_allclose(utens, utr, rtol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        k=st.integers(2, 12),
+        j=st.integers(1, 6),
+        i=st.integers(1, 8),
+        seed=st.integers(0, 1000),
+    )
+    def test_shape_sweep(self, k, j, i, seed):
+        a, b, c, d = _vadv_inputs(i, j, k, seed)
+        x, utens = vadv(a, b, c, d)
+        xr, utr = ref.vadv_ref(a, b, c, d)
+        np.testing.assert_allclose(x, xr, rtol=1e-11)
+        np.testing.assert_allclose(utens, utr, rtol=1e-11)
+
+    @pytest.mark.parametrize("dtype", ["float32", "float64"])
+    def test_dtypes(self, dtype):
+        a, b, c, d = _vadv_inputs(4, 3, 6, dtype=dtype)
+        x, _ = vadv(a, b, c, d)
+        xr, _ = ref.vadv_ref(a, b, c, d)
+        tol = 1e-5 if dtype == "float32" else 1e-12
+        np.testing.assert_allclose(x, xr, rtol=tol)
+        assert x.dtype == jnp.dtype(dtype)
+
+    def test_solves_tridiagonal_system(self):
+        # x must satisfy the tridiagonal system per column.
+        k, j, i = 10, 2, 3
+        a, b, c, d = _vadv_inputs(i, j, k, seed=7)
+        x, _ = vadv(a, b, c, d)
+        x = np.asarray(x)
+        a_, b_, c_, d_ = map(np.asarray, (a, b, c, d))
+        for jj in range(j):
+            for ii in range(i):
+                xa, aa = x[ii, jj, :], a_[ii, jj, :]
+                bb, cc, dd = b_[ii, jj, :], c_[ii, jj, :], d_[ii, jj, :]
+                resid = bb[0] * xa[0] + cc[0] * xa[1] - dd[0]
+                assert abs(resid) < 1e-9
+                for kk in range(1, k - 1):
+                    resid = (
+                        aa[kk] * xa[kk - 1]
+                        + bb[kk] * xa[kk]
+                        + cc[kk] * xa[kk + 1]
+                        - dd[kk]
+                    )
+                    assert abs(resid) < 1e-9
+
+
+class TestLaplace:
+    def test_matches_ref(self):
+        g = _rand((14, 16), 3)
+        np.testing.assert_allclose(laplace(g), ref.laplace_ref(g), rtol=1e-13)
+
+    @settings(max_examples=10, deadline=None)
+    @given(j=st.integers(3, 20), i=st.integers(3, 20), seed=st.integers(0, 100))
+    def test_shape_sweep(self, j, i, seed):
+        g = _rand((j, i), seed)
+        np.testing.assert_allclose(laplace(g), ref.laplace_ref(g), rtol=1e-12)
+
+    def test_boundary_untouched(self):
+        g = _rand((10, 10), 5)
+        out = np.asarray(laplace(g))
+        assert (out[0, :] == 0).all() and (out[-1, :] == 0).all()
+        assert (out[:, 0] == 0).all() and (out[:, -1] == 0).all()
+
+
+class TestMatmul:
+    @pytest.mark.parametrize("n", [32, 64, 96])
+    def test_matches_ref(self, n):
+        a = _rand((n, n), 11)
+        b = _rand((n, n), 12)
+        np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), rtol=1e-11)
+
+    def test_identity(self):
+        n = 32
+        a = _rand((n, n), 13)
+        eye = jnp.eye(n, dtype="float64")
+        np.testing.assert_allclose(matmul(a, eye), a, rtol=1e-13)
+
+    @pytest.mark.parametrize("dtype", ["float32", "float64"])
+    def test_dtypes(self, dtype):
+        n = 32
+        a = _rand((n, n), 14, dtype=dtype)
+        b = _rand((n, n), 15, dtype=dtype)
+        tol = 1e-4 if dtype == "float32" else 1e-11
+        np.testing.assert_allclose(matmul(a, b), a @ b, rtol=tol)

@@ -1,0 +1,37 @@
+//! Bench: Fig. 10 — pointer incrementation across the NPBench corpus:
+//! modeled speedups + measured VM wall-clock for the headline kernels.
+//! `cargo bench --bench bench_fig10_ptrinc`
+
+use silo::bench::{black_box, time_budgeted};
+use silo::exec::Vm;
+use silo::kernels::{gen_inputs, npbench_corpus, Preset};
+use silo::schedules::schedule_all_ptr_inc;
+use std::time::Duration;
+
+fn main() {
+    println!("{}", silo::coordinator::experiments::run("fig10").unwrap());
+    for name in ["jacobi_1d", "softmax"] {
+        let entry = npbench_corpus().into_iter().find(|k| k.name == name).unwrap();
+        let params = (entry.preset)(Preset::Small);
+        let mut means = Vec::new();
+        for ptr_inc in [false, true] {
+            let mut p = (entry.build)();
+            if ptr_inc {
+                schedule_all_ptr_inc(&mut p);
+            }
+            let inputs = gen_inputs(&p, &params, entry.init).unwrap();
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let vm = Vm::compile(&p).unwrap();
+            let st = time_budgeted(Duration::from_secs(2), || {
+                black_box(vm.run(&params, &refs, 1).unwrap());
+            });
+            println!(
+                "{name}_{}: {:.3} ms/iter",
+                if ptr_inc { "ptrinc" } else { "naive" },
+                st.mean_ms()
+            );
+            means.push(st.mean_ms());
+        }
+        println!("{name}: measured VM speedup {:.2}×", means[0] / means[1]);
+    }
+}

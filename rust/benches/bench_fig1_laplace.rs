@@ -1,0 +1,31 @@
+//! Bench: Fig. 1 — Laplace with parametric strides, naive vs ptr-inc VM
+//! wall-clock + the toolchain-model table. `cargo bench --bench bench_fig1_laplace`
+
+use silo::bench::{black_box, time_budgeted};
+use silo::exec::Vm;
+use silo::kernels::{self, gen_inputs, laplace, Preset};
+use silo::schedules::schedule_all_ptr_inc;
+use std::time::Duration;
+
+fn main() {
+    println!("{}", silo::coordinator::experiments::run("fig1").unwrap());
+    let params = laplace::preset(Preset::Small);
+    for ptr_inc in [false, true] {
+        let mut p = laplace::build();
+        if ptr_inc {
+            schedule_all_ptr_inc(&mut p);
+        }
+        let inputs = gen_inputs(&p, &params, kernels::default_init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let vm = Vm::compile(&p).unwrap();
+        let st = time_budgeted(Duration::from_secs(2), || {
+            black_box(vm.run(&params, &refs, 1).unwrap());
+        });
+        println!(
+            "laplace_{}: {:.3} ms/iter ({} iters)",
+            if ptr_inc { "ptrinc" } else { "naive" },
+            st.mean_ms(),
+            st.iters
+        );
+    }
+}

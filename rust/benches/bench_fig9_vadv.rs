@@ -1,0 +1,24 @@
+//! Bench: Fig. 9 — vertical advection. VM wall-clock per config + the
+//! strong-scaling simulation. `cargo bench --bench bench_fig9_vadv`
+
+use silo::bench::{black_box, time_budgeted};
+use silo::coordinator::{optimize_and_run, MemSchedules, OptConfig};
+use silo::kernels::Preset;
+use std::time::Duration;
+
+fn main() {
+    for (name, cfg) in [
+        ("baseline", OptConfig::None),
+        ("cfg1", OptConfig::Cfg1),
+        ("cfg2", OptConfig::Cfg2),
+    ] {
+        let st = time_budgeted(Duration::from_secs(2), || {
+            black_box(
+                optimize_and_run("vadv", cfg, MemSchedules::default(), Preset::Small, 2)
+                    .unwrap(),
+            );
+        });
+        println!("vadv_{name}: {:.2} ms/iter (opt+run, {} iters)", st.mean_ms(), st.iters);
+    }
+    println!("{}", silo::coordinator::experiments::run("fig9").unwrap());
+}

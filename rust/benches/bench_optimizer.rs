@@ -1,0 +1,26 @@
+//! Bench: analysis + transform throughput over the whole NPBench corpus
+//! (ablation: how expensive is SILO itself). `cargo bench --bench bench_optimizer`
+
+use silo::bench::{black_box, time_budgeted};
+use silo::kernels::npbench_corpus;
+use silo::lowering::lower;
+use silo::schedules::schedule_all_ptr_inc;
+use std::time::Duration;
+
+fn main() {
+    let st = time_budgeted(Duration::from_secs(3), || {
+        for entry in npbench_corpus() {
+            let mut p = (entry.build)();
+            black_box(silo::analysis::classify_program(&p).is_scop());
+            for l in p.loops() {
+                black_box(silo::analysis::loop_deps(l, &p.containers));
+            }
+            schedule_all_ptr_inc(&mut p);
+            black_box(lower(&p).unwrap());
+        }
+    });
+    println!(
+        "analyze+schedule+lower 20-kernel corpus: {:.1} ms/sweep",
+        st.mean_ms()
+    );
+}

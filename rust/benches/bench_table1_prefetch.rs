@@ -1,0 +1,6 @@
+//! Bench: Table 1 — software prefetching on the tiled matmul (trace-driven
+//! cache simulation). `cargo bench --bench bench_table1_prefetch`
+
+fn main() {
+    println!("{}", silo::coordinator::experiments::run("table1").unwrap());
+}

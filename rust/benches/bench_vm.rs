@@ -1,0 +1,33 @@
+//! Bench: VM hot path — statement-instance throughput on jacobi_1d and the
+//! optimizer pipeline latency. `cargo bench --bench bench_vm`
+
+use silo::bench::{black_box, time_budgeted};
+use silo::exec::Vm;
+use silo::kernels::{gen_inputs, npbench_corpus, Preset};
+use std::time::Duration;
+
+fn main() {
+    let entry = npbench_corpus().into_iter().find(|k| k.name == "jacobi_1d").unwrap();
+    let p = (entry.build)();
+    let params = (entry.preset)(Preset::Medium);
+    let inputs = gen_inputs(&p, &params, entry.init).unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let vm = Vm::compile(&p).unwrap();
+    let st = time_budgeted(Duration::from_secs(3), || {
+        black_box(vm.run(&params, &refs, 1).unwrap());
+    });
+    // medium preset: 100 steps × 2 sweeps × ~16k points
+    let instances = 100.0 * 2.0 * 15998.0;
+    println!(
+        "vm jacobi_1d: {:.3} ms/run → {:.1} M stmt-instances/s",
+        st.mean_ms(),
+        instances / st.mean.as_secs_f64() / 1e6
+    );
+
+    // Optimizer pipeline latency on vadv.
+    let st = time_budgeted(Duration::from_secs(2), || {
+        let mut p = silo::kernels::vadv::build();
+        black_box(silo::transforms::silo_cfg2(&mut p).unwrap());
+    });
+    println!("optimizer silo_cfg2(vadv): {:.2} ms/iter", st.mean_ms());
+}

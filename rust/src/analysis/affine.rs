@@ -1,0 +1,249 @@
+//! Affinity (SCoP) classification — the restriction polyhedral baselines
+//! live under.
+//!
+//! Polly/Pluto require *affine* loop bounds and accesses: every offset must
+//! be `Σ cₖ·varₖ + g(params)` with **integer constant** coefficients cₖ on
+//! the loop variables, and strides must be integer constants. Multiplying a
+//! loop variable by a *symbolic* stride (`i*isI`, the Fig. 1 pattern) makes
+//! the access a multivariate polynomial and ejects the loop from the
+//! polyhedral model — precisely the class SILO still analyzes.
+
+use crate::ir::{Loop, Node, Program};
+use crate::symbolic::{to_poly, Atom, Expr, Sym};
+
+/// Why a loop nest was rejected from the polyhedral model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AffineViolation {
+    /// A loop stride is not an integer constant (e.g. `i += i`, `j += i+1`).
+    NonConstantStride { var: Sym },
+    /// A loop bound is not affine in outer variables and parameters.
+    NonAffineBound { var: Sym },
+    /// An access offset has a loop variable multiplied by a parameter or
+    /// another variable (multivariate polynomial, Fig. 1).
+    NonAffineAccess { offset: Expr },
+    /// An access offset contains a non-polynomial construct (log2, mod, …).
+    NonPolynomialAccess { offset: Expr },
+}
+
+/// Result of classifying a loop nest.
+#[derive(Debug, Clone)]
+pub struct AffinityReport {
+    pub violations: Vec<AffineViolation>,
+}
+
+impl AffinityReport {
+    pub fn is_scop(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Is `e` affine in `vars` (loop variables), with everything else treated
+/// as a parameter? Affine = each var appears at degree ≤ 1 with an integer
+/// constant coefficient, no var·var or var·param products, and no opaque
+/// atoms mentioning a var.
+pub fn is_affine_in(e: &Expr, vars: &[Sym]) -> Result<(), AffineViolation> {
+    is_affine_in_with(e, vars, &[])
+}
+
+/// Like [`is_affine_in`], but `dim_strides` lists parameters that are
+/// array-dimension extents: `var·extent` products are accepted (multidim
+/// array notation — a polyhedral tool sees `A[k][j][i]`, not the
+/// linearized polynomial).
+pub fn is_affine_in_with(
+    e: &Expr,
+    vars: &[Sym],
+    dim_strides: &[Sym],
+) -> Result<(), AffineViolation> {
+    let Some(p) = to_poly(e) else {
+        return Err(AffineViolation::NonPolynomialAccess { offset: e.clone() });
+    };
+    for (m, _c) in &p.0 {
+        let mut var_degree = 0u32;
+        let mut has_param_factor = false;
+        for (a, pw) in &m.0 {
+            match a {
+                Atom::Sym(s) if vars.contains(s) => var_degree += pw,
+                Atom::Sym(_) => has_param_factor = true,
+                Atom::Opaque(inner) => {
+                    if vars.iter().any(|v| inner.depends_on(*v)) {
+                        return Err(AffineViolation::NonPolynomialAccess {
+                            offset: e.clone(),
+                        });
+                    }
+                    has_param_factor = true;
+                }
+            }
+        }
+        if var_degree > 1 {
+            return Err(AffineViolation::NonAffineAccess { offset: e.clone() });
+        }
+        if var_degree == 1 && has_param_factor {
+            // var·param: reject unless every param factor is a declared
+            // dimension extent (multidim linearization).
+            let all_dims = m.0.iter().all(|(a, _)| match a {
+                Atom::Sym(s) if vars.contains(s) => true,
+                Atom::Sym(s) => dim_strides.contains(s),
+                Atom::Opaque(_) => false,
+            });
+            if !all_dims {
+                return Err(AffineViolation::NonAffineAccess { offset: e.clone() });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Classify a loop nest rooted at `l` against the polyhedral restrictions.
+/// `outer_vars` are loop variables already in scope.
+pub fn classify_nest(l: &Loop, outer_vars: &[Sym]) -> AffinityReport {
+    classify_nest_with(l, outer_vars, &[])
+}
+
+/// [`classify_nest`] with declared dimension-extent parameters.
+pub fn classify_nest_with(l: &Loop, outer_vars: &[Sym], dim_strides: &[Sym]) -> AffinityReport {
+    let mut violations = Vec::new();
+    let mut vars = outer_vars.to_vec();
+    classify_rec(l, &mut vars, dim_strides, &mut violations);
+    AffinityReport { violations }
+}
+
+/// Classify every top-level nest of a program (uses the program's declared
+/// dimension extents).
+pub fn classify_program(p: &Program) -> AffinityReport {
+    let mut violations = Vec::new();
+    for n in &p.body {
+        if let Node::Loop(l) = n {
+            let mut vars = Vec::new();
+            classify_rec(l, &mut vars, &p.dim_syms, &mut violations);
+        }
+    }
+    AffinityReport { violations }
+}
+
+fn classify_rec(
+    l: &Loop,
+    vars: &mut Vec<Sym>,
+    dim_strides: &[Sym],
+    violations: &mut Vec<AffineViolation>,
+) {
+    // Stride must be a nonzero integer constant.
+    if l.stride.as_int().is_none() {
+        violations.push(AffineViolation::NonConstantStride { var: l.var });
+    }
+    // Bounds affine in outer vars + params.
+    for bound in [&l.start, &l.end] {
+        if is_affine_in_with(bound, vars, dim_strides).is_err() {
+            violations.push(AffineViolation::NonAffineBound { var: l.var });
+        }
+    }
+    vars.push(l.var);
+    for n in &l.body {
+        match n {
+            Node::Stmt(s) => {
+                if let Err(v) = is_affine_in_with(&s.write.offset, vars, dim_strides) {
+                    violations.push(v);
+                }
+                for r in s.reads() {
+                    if let Err(v) = is_affine_in_with(&r.offset, vars, dim_strides) {
+                        violations.push(v);
+                    }
+                }
+            }
+            Node::Loop(inner) => classify_rec(inner, vars, dim_strides, violations),
+        }
+    }
+    vars.pop();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    #[test]
+    fn constant_stride_affine_access_is_scop() {
+        let mut b = ProgramBuilder::new("aff1");
+        let n = b.param_positive("aff1_N");
+        let a = b.array("A", Expr::Sym(n) * int(64));
+        let i = b.sym("aff1_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            // A[64*i + 3] — constant coefficient: affine.
+            b.assign(a, int(64) * Expr::Sym(i) + int(3), Expr::real(0.0));
+        });
+        let p = b.finish();
+        assert!(classify_program(&p).is_scop());
+    }
+
+    #[test]
+    fn parametric_stride_rejected() {
+        // The Fig. 1 Laplace pattern: in[i*isI + j*isJ].
+        let mut b = ProgramBuilder::new("aff2");
+        let n = b.param_positive("aff2_N");
+        let is_i = b.param_positive("aff2_isI");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(is_i));
+        let i = b.sym("aff2_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i) * Expr::Sym(is_i), Expr::real(0.0));
+        });
+        let p = b.finish();
+        let r = classify_program(&p);
+        assert!(!r.is_scop());
+        assert!(matches!(
+            r.violations[0],
+            AffineViolation::NonAffineAccess { .. }
+        ));
+    }
+
+    #[test]
+    fn variable_stride_rejected() {
+        // Fig. 2: i += i.
+        let mut b = ProgramBuilder::new("aff3");
+        let n = b.param_positive("aff3_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("aff3_i");
+        b.for_(i, int(1), Expr::Sym(n), Expr::Sym(i), |b| {
+            b.assign(a, Expr::Sym(i), Expr::real(1.0));
+        });
+        let p = b.finish();
+        let r = classify_program(&p);
+        assert!(r
+            .violations
+            .iter()
+            .any(|v| matches!(v, AffineViolation::NonConstantStride { .. })));
+    }
+
+    #[test]
+    fn log2_access_rejected() {
+        use crate::symbolic::{func, FuncKind};
+        let mut b = ProgramBuilder::new("aff4");
+        let n = b.param_positive("aff4_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("aff4_i");
+        b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(a, func(FuncKind::Log2, vec![Expr::Sym(i)]), Expr::real(1.0));
+        });
+        let p = b.finish();
+        assert!(classify_program(&p)
+            .violations
+            .iter()
+            .any(|v| matches!(v, AffineViolation::NonPolynomialAccess { .. })));
+    }
+
+    #[test]
+    fn affine_bound_on_outer_var_ok() {
+        // Triangular bounds (j from i) are affine and SCoP-legal.
+        let mut b = ProgramBuilder::new("aff5");
+        let n = b.param_positive("aff5_N");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(n));
+        let i = b.sym("aff5_i");
+        let j = b.sym("aff5_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, Expr::Sym(i), Expr::Sym(n), int(1), |b| {
+                b.assign(a, int(8) * Expr::Sym(i) + Expr::Sym(j), Expr::real(0.0));
+            });
+        });
+        let p = b.finish();
+        assert!(classify_program(&p).is_scop());
+    }
+}

@@ -1,0 +1,418 @@
+//! Loop-carried dependence analysis via the inductive δ-test
+//! (paper §3.2.2 and §3.3.1).
+//!
+//! For a loop `L` with externally visible per-iteration reads `D[f]` and
+//! writes `D[g]`, a dependence across iterations exists when
+//! `∃ δ > 0 : f(var) = g(var ± δ·stride)`:
+//! * RAW (loop-carried): read at `var` sees a write from iteration
+//!   `var − δ·stride` (shift [`ShiftDir::Earlier`]).
+//! * WAR (input): read at `var` is overwritten by iteration
+//!   `var + δ·stride` (shift [`ShiftDir::Later`]).
+//! * WAW (output): two writes collide across iterations.
+
+use crate::ir::{Container, Loop, StmtId};
+use crate::symbolic::{solve_delta, ContainerId, DeltaSolution, Expr, ShiftDir, Truth};
+
+use super::visibility::iter_visibility;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepKind {
+    Raw,
+    War,
+    Waw,
+}
+
+/// How certain / resolvable the dependence is.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DepDistance {
+    /// Exact constant iteration distance δ.
+    Constant(i64),
+    /// Symbolic δ provably positive.
+    Symbolic(Expr),
+    /// The solver could not decide — conservatively assume dependent at
+    /// unknown distance (paper's over-approximation).
+    Unknown,
+    /// The accesses collide at *every* iteration (loop-invariant offsets) —
+    /// e.g. a scalar accumulated across iterations.
+    AllIterations,
+}
+
+/// One loop-carried dependence on `container`, from the statement that
+/// writes (`writer`) to the statement that reads/writes (`sink`).
+#[derive(Debug, Clone)]
+pub struct Dep {
+    pub kind: DepKind,
+    pub container: ContainerId,
+    pub writer: StmtId,
+    pub sink: StmtId,
+    pub distance: DepDistance,
+}
+
+/// Full dependence report for one loop level.
+#[derive(Debug, Clone, Default)]
+pub struct DepReport {
+    pub deps: Vec<Dep>,
+}
+
+impl DepReport {
+    pub fn of_kind(&self, k: DepKind) -> impl Iterator<Item = &Dep> {
+        self.deps.iter().filter(move |d| d.kind == k)
+    }
+
+    pub fn has(&self, k: DepKind) -> bool {
+        self.of_kind(k).next().is_some()
+    }
+
+    /// DOALL-parallelizable: no loop-carried dependence of any kind.
+    pub fn is_doall(&self) -> bool {
+        self.deps.is_empty()
+    }
+
+    /// Containers involved in dependencies of kind `k`.
+    pub fn containers(&self, k: DepKind) -> Vec<ContainerId> {
+        let mut out = Vec::new();
+        for d in self.of_kind(k) {
+            if !out.contains(&d.container) {
+                out.push(d.container);
+            }
+        }
+        out
+    }
+}
+
+/// Interpret a solver verdict as an iteration-distance classification.
+/// `None` means "no dependence".
+///
+/// Range feasibility: a positive δ only denotes a real dependence when the
+/// source iteration `var ∓ δ·stride` can lie inside the loop's range —
+/// if `δ·|stride| ≥ end − start` is provable, the "colliding" iteration is
+/// outside the loop and the accesses never actually conflict (e.g. the
+/// i-loop of a k-recurrence reading row k−1: δ = N ≥ trip count).
+fn classify(sol: DeltaSolution, l: &Loop) -> Option<DepDistance> {
+    match sol {
+        DeltaSolution::NoSolution => None,
+        DeltaSolution::AlwaysEqual => Some(DepDistance::AllIterations),
+        DeltaSolution::Unsolvable => Some(DepDistance::Unknown),
+        DeltaSolution::Unique { delta, positive } => match positive {
+            Truth::Yes => {
+                if delta_out_of_range(&delta, l) {
+                    return None;
+                }
+                match delta.as_int() {
+                    Some(v) => Some(DepDistance::Constant(v)),
+                    None => Some(DepDistance::Symbolic(delta)),
+                }
+            }
+            // δ exists but is provably non-positive ⇒ this direction of the
+            // test carries no dependence (the opposite direction finds it).
+            Truth::No => None,
+            // Can't prove sign ⇒ conservative.
+            Truth::Unknown => Some(DepDistance::Unknown),
+        },
+    }
+}
+
+/// Is `δ·|stride| ≥ span` provable (iteration distance exceeds the loop's
+/// extent)? Sound: `false` when unknown.
+fn delta_out_of_range(delta: &Expr, l: &Loop) -> bool {
+    use crate::symbolic::{is_nonneg, is_positive};
+    let (dist, span) = if is_positive(&l.stride) == Truth::Yes {
+        (
+            delta.clone() * l.stride.clone(),
+            l.end.clone() - l.start.clone(),
+        )
+    } else if is_positive(&(-l.stride.clone())) == Truth::Yes {
+        (
+            delta.clone() * (-l.stride.clone()),
+            l.start.clone() - l.end.clone(),
+        )
+    } else {
+        return false; // stride sign unknown: stay conservative
+    };
+    is_nonneg(&(dist - span)) == Truth::Yes
+}
+
+/// True when accesses `f` and `g` on the same container provably never
+/// alias at any iteration pair of `l` (δ > 0 in both directions is
+/// infeasible and the δ = 0 offsets provably differ). Used by fusion
+/// legality: a read of a cross-plane value (`cp[k−1]` vs the write
+/// `cp[k]`) is disjoint, not a fusion blocker.
+pub fn provably_independent(f: &Expr, g: &Expr, l: &Loop) -> bool {
+    use crate::symbolic::{is_zero, poly_diff};
+    for dir in [ShiftDir::Earlier, ShiftDir::Later] {
+        let sol = solve_delta(f, g, l.var, &l.stride, dir);
+        if classify(sol, l).is_some() {
+            return false;
+        }
+    }
+    match poly_diff(f, g) {
+        Some(d) => !d.is_zero() && is_zero(&d.to_expr()) == Truth::No,
+        None => false,
+    }
+}
+
+/// Analyze the loop-carried dependencies of `l` (w.r.t. `l.var` only; inner
+/// loops are summarized by the visibility analysis).
+pub fn loop_deps(l: &Loop, containers: &[Container]) -> DepReport {
+    let vis = iter_visibility(l, containers);
+    let mut report = DepReport::default();
+
+    // RAW: read f vs writes g from earlier iterations.
+    for (rs, read) in &vis.reads {
+        for (ws, write) in &vis.writes {
+            if read.container != write.container {
+                continue;
+            }
+            let sol = solve_delta(
+                &read.offset,
+                &write.offset,
+                l.var,
+                &l.stride,
+                ShiftDir::Earlier,
+            );
+            if let Some(distance) = classify(sol, l) {
+                report.deps.push(Dep {
+                    kind: DepKind::Raw,
+                    container: read.container,
+                    writer: *ws,
+                    sink: *rs,
+                    distance,
+                });
+            }
+        }
+    }
+
+    // WAR: read f vs writes g from later iterations.
+    for (rs, read) in &vis.reads {
+        for (ws, write) in &vis.writes {
+            if read.container != write.container {
+                continue;
+            }
+            let sol = solve_delta(
+                &read.offset,
+                &write.offset,
+                l.var,
+                &l.stride,
+                ShiftDir::Later,
+            );
+            if let Some(distance) = classify(sol, l) {
+                // AllIterations RAW and WAR coincide for loop-invariant
+                // offsets; report both (transforms handle them jointly).
+                report.deps.push(Dep {
+                    kind: DepKind::War,
+                    container: read.container,
+                    writer: *ws,
+                    sink: *rs,
+                    distance,
+                });
+            }
+        }
+    }
+
+    // WAW: write pairs across iterations.
+    for (ws1, w1) in &vis.writes {
+        for (ws2, w2) in &vis.writes {
+            if w1.container != w2.container {
+                continue;
+            }
+            let sol = solve_delta(&w1.offset, &w2.offset, l.var, &l.stride, ShiftDir::Earlier);
+            if let Some(distance) = classify(sol, l) {
+                // Deduplicate the symmetric pair: keep writer ≤ sink.
+                if ws1.0 <= ws2.0 {
+                    report.deps.push(Dep {
+                        kind: DepKind::Waw,
+                        container: w1.container,
+                        writer: *ws2,
+                        sink: *ws1,
+                        distance,
+                    });
+                }
+            }
+        }
+    }
+
+    // Deduplicate identical entries (multiple reads of the same offset).
+    report.deps.dedup_by(|a, b| {
+        a.kind == b.kind
+            && a.container == b.container
+            && a.writer == b.writer
+            && a.sink == b.sink
+            && a.distance == b.distance
+    });
+    report
+}
+
+/// Synchronization points for DOACROSS parallelization (§3.3.1): for each
+/// externally visible read with a RAW dependence at constant δ, the sink
+/// statement must wait for iteration `var − δ·stride` to pass the writer.
+/// Returns `None` if any dependence is not expressible as a constant δ
+/// (the paper then skips pipelining).
+pub fn sync_points(l: &Loop, containers: &[Container]) -> Option<Vec<(StmtId, StmtId, i64)>> {
+    let report = loop_deps(l, containers);
+    let mut out = Vec::new();
+    for d in &report.deps {
+        match d.kind {
+            DepKind::Raw => match &d.distance {
+                DepDistance::Constant(delta) if *delta > 0 => {
+                    out.push((d.sink, d.writer, *delta));
+                }
+                _ => return None,
+            },
+            // WAR/WAW must have been resolved before pipelining (§3.3:
+            // "if any data access exhibits one of the other types of
+            // dependencies and that dependency cannot be resolved, no
+            // parallelization is possible with this strategy").
+            DepKind::War | DepKind::Waw => return None,
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    /// `for i in 1..N: A[i] = A[i-1] + B[i]` — classic RAW δ=1.
+    #[test]
+    fn raw_distance_one() {
+        let mut b = ProgramBuilder::new("dep1");
+        let n = b.param_positive("dep1_N");
+        let a = b.array("A", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n));
+        let i = b.sym("dep1_i");
+        b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(
+                a,
+                Expr::Sym(i),
+                load(a, Expr::Sym(i) - int(1)) + load(bb, Expr::Sym(i)),
+            );
+        });
+        let p = b.finish();
+        let l = p.loops()[0];
+        let r = loop_deps(l, &p.containers);
+        assert!(r.has(DepKind::Raw));
+        let raw: Vec<_> = r.of_kind(DepKind::Raw).collect();
+        assert_eq!(raw.len(), 1);
+        assert_eq!(raw[0].distance, DepDistance::Constant(1));
+        // The A[i] write vs A[i-1] read is also a WAR in the Later
+        // direction? f = i-1, g(i+δ) = i+δ ⇒ δ = -1 < 0 ⇒ no WAR.
+        assert!(!r.has(DepKind::War));
+        // WAW: A written at i vs i ± δ ⇒ δ=0 only ⇒ none.
+        assert!(!r.has(DepKind::Waw));
+        // Sync points exist for DOACROSS.
+        let sp = sync_points(l, &p.containers).unwrap();
+        assert_eq!(sp.len(), 1);
+        assert_eq!(sp[0].2, 1);
+    }
+
+    /// `for i: A[i] = B[i] * 2` — no deps, DOALL.
+    #[test]
+    fn independent_loop_is_doall() {
+        let mut b = ProgramBuilder::new("dep2");
+        let n = b.param_positive("dep2_N");
+        let a = b.array("A", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n));
+        let i = b.sym("dep2_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(bb, Expr::Sym(i)) * Expr::real(2.0));
+        });
+        let p = b.finish();
+        let r = loop_deps(p.loops()[0], &p.containers);
+        assert!(r.is_doall(), "{:?}", r.deps);
+    }
+
+    /// `for i: B[i] = C[i+1]; C[i] = ...` — WAR (input) dependence δ=1.
+    #[test]
+    fn war_detected() {
+        let mut b = ProgramBuilder::new("dep3");
+        let n = b.param_positive("dep3_N");
+        let bb = b.array("B", Expr::Sym(n) + int(1));
+        let cc = b.array("C", Expr::Sym(n) + int(1));
+        let i = b.sym("dep3_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(bb, Expr::Sym(i), load(cc, Expr::Sym(i) + int(1)));
+            b.assign(cc, Expr::Sym(i), Expr::real(0.0));
+        });
+        let p = b.finish();
+        let r = loop_deps(p.loops()[0], &p.containers);
+        assert!(r.has(DepKind::War));
+        let war: Vec<_> = r.of_kind(DepKind::War).collect();
+        assert_eq!(war[0].distance, DepDistance::Constant(1));
+        assert!(!r.has(DepKind::Raw));
+    }
+
+    /// Scalar accumulator: `for i: s[0] = s[0] + A[i]` — RAW/WAR/WAW at all
+    /// distances (AllIterations).
+    #[test]
+    fn scalar_accumulation_all_iterations() {
+        let mut b = ProgramBuilder::new("dep4");
+        let n = b.param_positive("dep4_N");
+        let a = b.array("A", Expr::Sym(n));
+        let s = b.scalar("s");
+        let i = b.sym("dep4_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(s, int(0), load(s, int(0)) + load(a, Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let r = loop_deps(p.loops()[0], &p.containers);
+        assert!(r
+            .of_kind(DepKind::Waw)
+            .any(|d| d.distance == DepDistance::AllIterations));
+        assert!(r
+            .of_kind(DepKind::Raw)
+            .any(|d| d.distance == DepDistance::AllIterations));
+        assert!(sync_points(p.loops()[0], &p.containers).is_none());
+    }
+
+    /// Parametric stride: `A[i*S] = A[(i-2)*S] + 1` with positive S —
+    /// δ = 2 despite the symbolic coefficient.
+    #[test]
+    fn parametric_stride_raw() {
+        let mut b = ProgramBuilder::new("dep5");
+        let n = b.param_positive("dep5_N");
+        let s = b.param_positive("dep5_S");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(s));
+        let i = b.sym("dep5_i");
+        b.for_(i, int(2), Expr::Sym(n), int(1), |b| {
+            b.assign(
+                a,
+                Expr::Sym(i) * Expr::Sym(s),
+                load(a, (Expr::Sym(i) - int(2)) * Expr::Sym(s)) + Expr::real(1.0),
+            );
+        });
+        let p = b.finish();
+        let r = loop_deps(p.loops()[0], &p.containers);
+        let raw: Vec<_> = r.of_kind(DepKind::Raw).collect();
+        assert_eq!(raw.len(), 1);
+        assert_eq!(raw[0].distance, DepDistance::Constant(2));
+    }
+
+    /// Triangular inner loop (Fig. 2 right): stride of inner loop depends
+    /// on the outer variable — still analyzable w.r.t. the *inner* loop.
+    #[test]
+    fn fig2_triangular_inner_analyzable() {
+        let mut b = ProgramBuilder::new("dep6");
+        let n = b.param_positive("dep6_N");
+        let a = b.array("A", Expr::Sym(n) + int(1));
+        let i = b.sym("dep6_i");
+        let j = b.sym("dep6_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, Expr::Sym(i), Expr::Sym(n), Expr::Sym(i) + int(1), |b| {
+                b.assign(a, Expr::Sym(j), Expr::real(0.0));
+            });
+        });
+        let p = b.finish();
+        let inner = p.loops()[1];
+        // Writes a[j] with stride (i+1): g(j) - g(j - δ(i+1)) = δ(i+1) ≠ 0
+        // for δ>0 under positivity of... i is not assumed positive, so the
+        // solver yields δ·(i+1) with unknown positivity ⇒ conservative or
+        // no-dep; crucially never a wrong parallel claim. With the bound
+        // i ≥ 0 the transform layer can refine. Here we check the report
+        // shape only.
+        let r = loop_deps(inner, &p.containers);
+        // Single write, no reads: only possible WAW.
+        assert!(!r.has(DepKind::Raw) && !r.has(DepKind::War));
+    }
+}

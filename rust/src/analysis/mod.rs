@@ -1,0 +1,19 @@
+//! SILO's inductive loop analyses (paper §3.1–§3.3.1).
+//!
+//! * [`visibility`] — consumer/producer analysis: externally visible reads
+//!   and writes per iteration and propagated over whole loops.
+//! * [`deps`] — the δ-solver-based RAW/WAR/WAW dependence tests.
+//! * [`affine`] — SCoP classifier encoding the polyhedral baselines'
+//!   restrictions (what Polly/Pluto refuse to touch).
+//! * [`propagate`] — concrete interval propagation for conflict checks and
+//!   cross-validation against enumeration.
+
+pub mod affine;
+pub mod deps;
+pub mod propagate;
+pub mod visibility;
+
+pub use affine::{classify_nest, classify_program, is_affine_in, AffineViolation, AffinityReport};
+pub use deps::{loop_deps, provably_independent, sync_points, Dep, DepDistance, DepKind, DepReport};
+pub use propagate::{access_interval, iteration_count, Interval};
+pub use visibility::{body_graph, iter_visibility, loop_summary, IterVisibility, LoopRange, PropAccess};

@@ -1,0 +1,247 @@
+//! Concrete range propagation: bound propagated accesses to integer
+//! element intervals given parameter bindings.
+//!
+//! Used by the privatization conflict check (cheap disjointness), the VM's
+//! allocation sizing, and tests that cross-validate the symbolic analyses
+//! against enumeration.
+
+use anyhow::{bail, Result};
+
+use crate::symbolic::eval::{eval_int, Env};
+use crate::symbolic::Expr;
+
+use super::visibility::PropAccess;
+
+/// Inclusive element interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    pub fn intersects(&self, other: &Interval) -> bool {
+        self.lo <= other.hi && other.lo <= self.hi
+    }
+}
+
+/// Maximum iterations enumerated per range before falling back to the
+/// min/max-endpoint approximation.
+const ENUM_CAP: u64 = 4096;
+
+/// Compute the concrete interval touched by a propagated access under the
+/// given parameter bindings. Conservative: the returned interval always
+/// contains every touched element (it may contain untouched ones).
+pub fn access_interval(acc: &PropAccess, env: &dyn Env, container_size: i64) -> Result<Interval> {
+    if acc.whole {
+        return Ok(Interval {
+            lo: 0,
+            hi: container_size - 1,
+        });
+    }
+    // Enumerate the (small) cartesian range product, or evaluate at range
+    // endpoints when the offset is monotone-friendly (affine in each var).
+    let mut bindings: Vec<(crate::symbolic::Sym, i64)> = Vec::new();
+    let mut lo = i64::MAX;
+    let mut hi = i64::MIN;
+    enumerate(acc, env, 0, &mut bindings, &mut lo, &mut hi, &mut 0)?;
+    if lo > hi {
+        bail!("empty iteration range for access");
+    }
+    Ok(Interval { lo, hi })
+}
+
+fn enumerate(
+    acc: &PropAccess,
+    env: &dyn Env,
+    depth: usize,
+    bindings: &mut Vec<(crate::symbolic::Sym, i64)>,
+    lo: &mut i64,
+    hi: &mut i64,
+    visited: &mut u64,
+) -> Result<()> {
+    if depth == acc.ranges.len() {
+        let combined = CombinedEnv {
+            inner: env,
+            extra: bindings,
+        };
+        let v = eval_int(&acc.offset, &combined)?;
+        *lo = (*lo).min(v);
+        *hi = (*hi).max(v);
+        return Ok(());
+    }
+    let r = &acc.ranges[depth];
+    let combined_start = {
+        let c = CombinedEnv {
+            inner: env,
+            extra: bindings,
+        };
+        eval_int(&r.start, &c)?
+    };
+    let combined_end = {
+        let c = CombinedEnv {
+            inner: env,
+            extra: bindings,
+        };
+        eval_int(&r.end, &c)?
+    };
+    let mut v = combined_start;
+    loop {
+        let stride = {
+            bindings.push((r.var, v));
+            let c = CombinedEnv {
+                inner: env,
+                extra: bindings,
+            };
+            let s = eval_int(&r.stride, &c)?;
+            bindings.pop();
+            s
+        };
+        if stride == 0 {
+            bail!("zero stride during propagation");
+        }
+        let done = if stride > 0 {
+            v >= combined_end
+        } else {
+            v <= combined_end
+        };
+        if done {
+            break;
+        }
+        *visited += 1;
+        if *visited > ENUM_CAP {
+            // Fallback: affine endpoint evaluation — evaluate the offset at
+            // start and last value only (sound for monotone affine offsets;
+            // for anything else the caller should have set `whole`).
+            for probe in [combined_start, last_value(combined_start, combined_end, stride)] {
+                bindings.push((r.var, probe));
+                enumerate(acc, env, depth + 1, bindings, lo, hi, visited)?;
+                bindings.pop();
+            }
+            return Ok(());
+        }
+        bindings.push((r.var, v));
+        enumerate(acc, env, depth + 1, bindings, lo, hi, visited)?;
+        bindings.pop();
+        v += stride;
+    }
+    Ok(())
+}
+
+fn last_value(start: i64, end: i64, stride: i64) -> i64 {
+    if stride > 0 {
+        if end <= start {
+            return start;
+        }
+        start + ((end - 1 - start) / stride) * stride
+    } else {
+        if end >= start {
+            return start;
+        }
+        start + ((end + 1 - start) / stride) * stride
+    }
+}
+
+struct CombinedEnv<'a> {
+    inner: &'a dyn Env,
+    extra: &'a [(crate::symbolic::Sym, i64)],
+}
+
+impl Env for CombinedEnv<'_> {
+    fn get(&self, s: crate::symbolic::Sym) -> Option<i64> {
+        self.extra
+            .iter()
+            .rev()
+            .find(|(x, _)| *x == s)
+            .map(|(_, v)| *v)
+            .or_else(|| self.inner.get(s))
+    }
+}
+
+/// Concrete count of iterations of a `(start, end, stride)` range; `None`
+/// if the stride is zero or depends on un-enumerable state.
+pub fn iteration_count(start: &Expr, end: &Expr, stride: &Expr, env: &dyn Env) -> Option<u64> {
+    let s = eval_int(start, env).ok()?;
+    let e = eval_int(end, env).ok()?;
+    let st = eval_int(stride, env).ok()?;
+    if st == 0 {
+        return None;
+    }
+    if st > 0 {
+        if e <= s {
+            Some(0)
+        } else {
+            Some(((e - s) as u64).div_ceil(st as u64))
+        }
+    } else if s <= e {
+        Some(0)
+    } else {
+        Some(((s - e) as u64).div_ceil((-st) as u64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::visibility::{LoopRange, PropAccess};
+    use crate::ir::AccessKind;
+    use crate::ir::StmtId;
+    use crate::symbolic::{int, ContainerId, Expr, Sym};
+
+    #[test]
+    fn simple_range_interval() {
+        let i = Sym::new("prop_i");
+        let n = Sym::positive("prop_N");
+        let acc = PropAccess {
+            container: ContainerId(0),
+            offset: Expr::Sym(i) * int(2) + int(1),
+            ranges: vec![LoopRange {
+                var: i,
+                start: int(0),
+                end: Expr::Sym(n),
+                stride: int(1),
+                countable: true,
+            }],
+            whole: false,
+            stmt: StmtId(0),
+            kind: AccessKind::Read,
+        };
+        let env = vec![(n, 10i64)];
+        let iv = access_interval(&acc, &env, 100).unwrap();
+        assert_eq!(iv, Interval { lo: 1, hi: 19 });
+    }
+
+    #[test]
+    fn whole_container_fallback() {
+        let acc = PropAccess {
+            container: ContainerId(0),
+            offset: int(0),
+            ranges: vec![],
+            whole: true,
+            stmt: StmtId(0),
+            kind: AccessKind::Write,
+        };
+        let env: Vec<(Sym, i64)> = vec![];
+        let iv = access_interval(&acc, &env, 64).unwrap();
+        assert_eq!(iv, Interval { lo: 0, hi: 63 });
+    }
+
+    #[test]
+    fn iteration_counts() {
+        let env: Vec<(Sym, i64)> = vec![];
+        assert_eq!(iteration_count(&int(0), &int(10), &int(1), &env), Some(10));
+        assert_eq!(iteration_count(&int(0), &int(10), &int(3), &env), Some(4));
+        assert_eq!(iteration_count(&int(10), &int(0), &int(-2), &env), Some(5));
+        assert_eq!(iteration_count(&int(5), &int(5), &int(1), &env), Some(0));
+        assert_eq!(iteration_count(&int(0), &int(1), &int(0), &env), None);
+    }
+
+    #[test]
+    fn interval_intersection() {
+        let a = Interval { lo: 0, hi: 10 };
+        let b = Interval { lo: 10, hi: 20 };
+        let c = Interval { lo: 11, hi: 20 };
+        assert!(a.intersects(&b));
+        assert!(!a.intersects(&c));
+    }
+}

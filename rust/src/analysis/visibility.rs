@@ -1,0 +1,347 @@
+//! Consumer/producer analysis (paper §3.1): which reads and writes of a
+//! loop iteration are *externally visible*, and the propagation of those
+//! accesses over the loop's full iteration range.
+
+use crate::dataflow::BodyGraph;
+use crate::ir::{Access, AccessKind, Container, ContainerKind, Loop, Node, StmtId};
+use crate::symbolic::{ContainerId, Expr, Sym};
+
+/// The symbolic iteration range of one loop level, attached to a
+/// propagated access.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoopRange {
+    pub var: Sym,
+    pub start: Expr,
+    pub end: Expr,
+    pub stride: Expr,
+    /// Whether the iteration set is statically countable from the symbolic
+    /// expressions (false when e.g. the stride depends on the loop variable
+    /// itself — the paper's over-approximation trigger).
+    pub countable: bool,
+}
+
+impl LoopRange {
+    pub fn of(l: &Loop) -> LoopRange {
+        // Countable iff the stride does not depend on the loop's own
+        // variable and no bound depends on it either.
+        let countable = !l.stride.depends_on(l.var)
+            && !l.start.depends_on(l.var)
+            && !l.end.depends_on(l.var);
+        LoopRange {
+            var: l.var,
+            start: l.start.clone(),
+            end: l.end.clone(),
+            stride: l.stride.clone(),
+            countable,
+        }
+    }
+}
+
+/// An access propagated over one or more loop ranges (paper §3.1:
+/// "instances of the loop's iteration variable inside the offset
+/// expressions are given a specific range of values").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PropAccess {
+    pub container: ContainerId,
+    pub offset: Expr,
+    pub ranges: Vec<LoopRange>,
+    /// Conservative fallback: the access may touch the whole container
+    /// (uncountable range or unsolvable offset).
+    pub whole: bool,
+    /// Statement the access originates from.
+    pub stmt: StmtId,
+    pub kind: AccessKind,
+}
+
+/// Externally visible reads/writes of a *single iteration* of a loop.
+#[derive(Debug, Clone, Default)]
+pub struct IterVisibility {
+    pub reads: Vec<(StmtId, Access)>,
+    pub writes: Vec<(StmtId, Access)>,
+}
+
+/// Is a write to this container externally invisible by construction?
+fn iteration_local(c: &Container) -> bool {
+    matches!(c.kind, ContainerKind::Register)
+}
+
+/// Compute the externally visible reads and writes of one iteration of
+/// loop `l` (§3.1). Writes: everything except iteration-local containers.
+/// Reads: everything not *self-contained* (dominated by a write of the
+/// same symbolic offset within the iteration).
+pub fn iter_visibility(l: &Loop, containers: &[Container]) -> IterVisibility {
+    let graph = body_graph(l, containers);
+    let mut out = IterVisibility::default();
+    for (idx, node) in graph.nodes.iter().enumerate() {
+        for w in &node.writes {
+            if !iteration_local(&containers[w.container.0 as usize]) {
+                out.writes.push((stmt_of(node, l), w.clone()));
+            }
+        }
+        for r in &node.reads {
+            if iteration_local(&containers[r.container.0 as usize]) {
+                continue;
+            }
+            if !graph.is_self_contained(idx, r) {
+                out.reads.push((stmt_of(node, l), r.clone()));
+            }
+        }
+    }
+    out
+}
+
+fn stmt_of(node: &crate::dataflow::GraphNode, l: &Loop) -> StmtId {
+    match node.node {
+        crate::dataflow::NodeRef::Stmt(s) => s,
+        crate::dataflow::NodeRef::Loop(lid) => {
+            // Attribute a summarized nested loop's accesses to its first
+            // statement (used only for reporting; dependence analysis on
+            // nested statements re-resolves precisely).
+            l.find_loop(lid)
+                .and_then(|nl| Node::Loop(nl.clone()).stmts().first().map(|s| s.id))
+                .unwrap_or(StmtId(u32::MAX))
+        }
+    }
+}
+
+/// Build the dataflow graph for `l`'s body, summarizing nested loops with
+/// their *propagated* external accesses.
+pub fn body_graph(l: &Loop, containers: &[Container]) -> BodyGraph {
+    let summarize = |n: &Node| -> (Vec<Access>, Vec<Access>) {
+        match n {
+            Node::Loop(inner) => {
+                let (reads, writes) = loop_summary(inner, containers);
+                (
+                    reads
+                        .into_iter()
+                        .map(|p| Access::read(p.container, p.offset))
+                        .collect(),
+                    writes
+                        .into_iter()
+                        .map(|p| Access::write(p.container, p.offset))
+                        .collect(),
+                )
+            }
+            Node::Stmt(_) => unreachable!("summarize called on stmt"),
+        }
+    };
+    BodyGraph::build(&l.body, &summarize)
+}
+
+/// Propagate the externally visible accesses of loop `l` over its full
+/// iteration range (§3.1), recursively summarizing nested loops. Returns
+/// `(reads, writes)` for the loop as a whole — each a [`PropAccess`] whose
+/// `ranges` binds every loop variable the offset still mentions.
+pub fn loop_summary(l: &Loop, containers: &[Container]) -> (Vec<PropAccess>, Vec<PropAccess>) {
+    let graph = body_graph(l, containers);
+    let mut reads: Vec<PropAccess> = Vec::new();
+    let mut writes: Vec<PropAccess> = Vec::new();
+
+    for (idx, node) in l.body.iter().enumerate() {
+        match node {
+            Node::Stmt(s) => {
+                for r in s.reads() {
+                    if iteration_local(&containers[r.container.0 as usize]) {
+                        continue;
+                    }
+                    if graph.is_self_contained(idx, &r) {
+                        continue;
+                    }
+                    reads.push(PropAccess {
+                        container: r.container,
+                        offset: r.offset,
+                        ranges: Vec::new(),
+                        whole: false,
+                        stmt: s.id,
+                        kind: AccessKind::Read,
+                    });
+                }
+                if !iteration_local(&containers[s.write.container.0 as usize]) {
+                    writes.push(PropAccess {
+                        container: s.write.container,
+                        offset: s.write.offset.clone(),
+                        ranges: Vec::new(),
+                        whole: false,
+                        stmt: s.id,
+                        kind: AccessKind::Write,
+                    });
+                }
+            }
+            Node::Loop(inner) => {
+                let (ir, iw) = loop_summary(inner, containers);
+                for r in ir {
+                    let as_access = Access::read(r.container, r.offset.clone());
+                    if graph.is_self_contained(idx, &as_access) {
+                        continue;
+                    }
+                    reads.push(r);
+                }
+                writes.extend(iw);
+            }
+        }
+    }
+
+    // Bind this loop's range on every access whose offset mentions its var,
+    // *normalizing* the variable to `start + var~` (var~ a per-loop fresh
+    // symbol ranging over [0, end−start)). Normalization keeps offsets of
+    // tiled/triangular inner loops explicitly dependent on the outer
+    // variables their start expressions mention — without it, a summarized
+    // `A[.. + i]` with `i ∈ [i_t, i_t+T)` would look invariant to the tile
+    // loop `i_t` and produce phantom all-iteration WAW conflicts.
+    let range = LoopRange::of(l);
+    let tilde = crate::symbolic::Sym::nonneg(&format!("{}~", l.var.name()));
+    for p in reads.iter_mut().chain(writes.iter_mut()) {
+        if p.whole || !p.offset.depends_on(l.var) {
+            continue;
+        }
+        if range.countable {
+            p.offset = crate::symbolic::subs(
+                &p.offset,
+                l.var,
+                &(l.start.clone() + crate::symbolic::Expr::Sym(tilde)),
+            );
+            p.ranges.push(LoopRange {
+                var: tilde,
+                start: crate::symbolic::Expr::Int(0),
+                end: crate::symbolic::simplify(&(l.end.clone() - l.start.clone())),
+                stride: l.stride.clone(),
+                countable: true,
+            });
+        } else {
+            p.whole = true;
+        }
+    }
+    (reads, writes)
+}
+
+/// Do two propagated accesses possibly overlap? Sound over-approximation:
+/// `false` only when provably disjoint.
+pub fn may_overlap(a: &PropAccess, b: &PropAccess) -> bool {
+    use crate::symbolic::{poly_diff, is_zero, Truth};
+    if a.container != b.container {
+        return false;
+    }
+    if a.whole || b.whole {
+        return true;
+    }
+    // Quick exact check: identical offsets on identical ranges obviously
+    // overlap; provably constant nonzero difference with no free loop vars
+    // means disjoint only if neither ranges over anything... keep it sound:
+    if a.ranges.is_empty() && b.ranges.is_empty() {
+        return match poly_diff(&a.offset, &b.offset) {
+            Some(d) if d.is_zero() => true,
+            Some(d) => is_zero(&d.to_expr()) != Truth::No,
+            None => true,
+        };
+    }
+    // Ranged accesses: conservatively overlap. (The dependence analysis
+    // does the precise δ-based disambiguation; this helper only gates
+    // privatization, where over-approximation is safe.)
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    /// Fig. 4's didactic loop nest:
+    /// for k: for i: { S1: t = B[i][k-1]*0.2; S2: A[i] = t + C[i][k+1];
+    ///                 S3: B[i][k] = A[i]; C[i][k] = t; }
+    /// (flattened to 1D offsets with symbolic row stride M)
+    fn fig4() -> (crate::ir::Program, [crate::symbolic::ContainerId; 4]) {
+        let mut b = ProgramBuilder::new("fig4");
+        let n = b.param_positive("vis_N");
+        let m = b.param_positive("vis_M");
+        let a = b.array("A", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n) * Expr::Sym(m));
+        let cc = b.array("C", Expr::Sym(n) * Expr::Sym(m));
+        let t = b.transient("t", int(1));
+        let k = b.sym("vis_k");
+        let i = b.sym("vis_i");
+        b.for_(k, int(1), Expr::Sym(m) - int(1), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                let iv = Expr::Sym(i);
+                let kv = Expr::Sym(k);
+                let off = |col: Expr| iv.clone() * Expr::Sym(m) + col;
+                // S1: t = B[i][k-1] * 0.2
+                b.assign(t, int(0), load(bb, off(kv.clone() - int(1))) * Expr::real(0.2));
+                // S2: A[i] = t + C[i][k+1]
+                b.assign(a, iv.clone(), load(t, int(0)) + load(cc, off(kv.clone() + int(1))));
+                // S3: B[i][k] = A[i]
+                b.assign(bb, off(kv.clone()), load(a, iv.clone()));
+                // S4: C[i][k] = t
+                b.assign(cc, off(kv.clone()), load(t, int(0)));
+            });
+        });
+        (b.finish(), [a, bb, cc, t])
+    }
+
+    #[test]
+    fn self_contained_reads_hidden() {
+        let (p, [a, _bb, _cc, t]) = fig4();
+        let outer = p.loops()[0];
+        let inner = p.loops()[1];
+        let vis = iter_visibility(inner, &p.containers);
+        // Reads of t (s2, s4) are self-contained (t written in s1);
+        // the read of A in S3 is self-contained (written in S2).
+        assert!(
+            !vis.reads.iter().any(|(_, r)| r.container == t),
+            "t reads should be self-contained"
+        );
+        assert!(
+            !vis.reads.iter().any(|(_, r)| r.container == a),
+            "A read dominated by same-iteration write"
+        );
+        // B[i][k-1] and C[i][k+1] remain externally visible.
+        assert_eq!(vis.reads.len(), 2);
+        let _ = outer;
+    }
+
+    #[test]
+    fn outer_loop_sees_summarized_inner() {
+        let (p, [_a, bb, cc, _t]) = fig4();
+        let outer = p.loops()[0];
+        let vis = iter_visibility(outer, &p.containers);
+        // From the k-iteration's perspective the i-loop is one black box:
+        // it reads B[.][k-1], C[.][k+1] and writes t, A, B[.][k], C[.][k]
+        // (the transient scalar t stays visible until privatization
+        // decides it is iteration-local — §3.2.1 is a *transform*, not part
+        // of this analysis).
+        assert!(vis.reads.iter().any(|(_, r)| r.container == bb));
+        assert!(vis.reads.iter().any(|(_, r)| r.container == cc));
+        assert_eq!(vis.writes.len(), 4);
+    }
+
+    #[test]
+    fn propagation_binds_ranges() {
+        let (p, [_a, bb, _cc, _t]) = fig4();
+        let outer = p.loops()[0];
+        let (reads, writes) = loop_summary(outer, &p.containers);
+        let b_read = reads.iter().find(|r| r.container == bb).unwrap();
+        // Offset depends on both i and k; the i range was bound by the
+        // inner summary, the k range by the outer propagation.
+        assert!(!b_read.whole);
+        assert_eq!(b_read.ranges.len(), 2);
+        assert!(writes.iter().all(|w| !w.whole));
+    }
+
+    #[test]
+    fn uncountable_range_over_approximates() {
+        // Fig. 2 left: for (i=1; i<=n; i+=i) a[log2(i)] = 1.0
+        let mut b = ProgramBuilder::new("vis_fig2");
+        let n = b.param_positive("vis2_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("vis2_i");
+        use crate::symbolic::{func, FuncKind};
+        b.for_(i, int(1), Expr::Sym(n), Expr::Sym(i), |b| {
+            b.assign(a, func(FuncKind::Log2, vec![Expr::Sym(i)]), Expr::real(1.0));
+        });
+        let p = b.finish();
+        let l = p.loops()[0];
+        let (_, writes) = loop_summary(l, &p.containers);
+        assert_eq!(writes.len(), 1);
+        assert!(writes[0].whole, "variable stride must over-approximate");
+    }
+}

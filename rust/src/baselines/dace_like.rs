@@ -1,0 +1,72 @@
+//! DaCe-auto-opt-like baseline (§6.1: "DaCe fails to perform any tiling or
+//! vectorization, but fuses many loops together, which results in some
+//! arrays being converted to temporary scalars … and consequently only
+//! extracts parallelism across the I and J dimensions").
+//!
+//! Pipeline: fusion + scalarization, then DOALL marking. Crucially it does
+//! **not** run SILO's privatization/input-copy passes, so WAW/RAW-carrying
+//! loops (the K dimension) stay sequential.
+
+use anyhow::Result;
+
+use crate::ir::Program;
+use crate::transforms::{fuse_program, parallelize_doall, PipelineReport};
+
+/// Run the DaCe-like auto optimizer.
+pub fn dace_auto_optimize(p: &mut Program) -> Result<PipelineReport> {
+    let mut report = PipelineReport::default();
+    let fu = fuse_program(p)?;
+    if fu.fused > 0 || !fu.scalarized.is_empty() {
+        report.log.push(crate::transforms::pass::PassLog {
+            pass: "fusion".into(),
+            detail: format!(
+                "fused {} loops, scalarized {}",
+                fu.fused,
+                fu.scalarized.len()
+            ),
+        });
+    }
+    let da = parallelize_doall(p, true)?;
+    if !da.parallelized.is_empty() {
+        report.log.push(crate::transforms::pass::PassLog {
+            pass: "doall".into(),
+            detail: format!("{} loops", da.parallelized.len()),
+        });
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{LoopSchedule, ProgramBuilder};
+    use crate::symbolic::{int, load, Expr};
+
+    /// On a vadv-shaped nest, DaCe parallelizes I but leaves K sequential
+    /// (no privatization pass).
+    #[test]
+    fn k_dimension_stays_sequential() {
+        let mut b = ProgramBuilder::new("dace1");
+        let n = b.param_positive("dace1_N");
+        let m = b.dim_param("dace1_M");
+        let a = b.transient("A", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n) * Expr::Sym(m));
+        let k = b.sym("dace1_k");
+        let i = b.sym("dace1_i");
+        b.for_(k, int(1), Expr::Sym(m), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                let off = Expr::Sym(i) * Expr::Sym(m) + Expr::Sym(k);
+                b.assign(a, Expr::Sym(i), load(bb, off.clone() - int(1)) * Expr::real(0.3));
+                b.assign(bb, off, load(a, Expr::Sym(i)));
+            });
+        });
+        let mut p = b.finish();
+        dace_auto_optimize(&mut p).unwrap();
+        let loops = p.loops();
+        // K sequential (WAW on A), I parallel? The WAW on A also blocks I?
+        // No: within one i-iteration A[i] is written then read (self-
+        // contained), and distinct i's touch distinct A[i] ⇒ i is DOALL.
+        assert!(matches!(loops[0].schedule, LoopSchedule::Sequential));
+        assert!(loops[1].is_parallel());
+    }
+}

@@ -1,0 +1,133 @@
+//! icc-like auto-parallelization baseline: `-parallel` behavior — outer
+//! loops whose dependence test proves independence get DOALL; any
+//! *possible* dependence (including symbolic strides it cannot reason
+//! about) reports "loop was not parallelized: existence of parallel
+//! dependence" and stays sequential. No data-allocation changes, no
+//! pipelining.
+
+use anyhow::Result;
+
+use crate::analysis::{loop_deps, DepDistance};
+use crate::ir::{LoopId, LoopSchedule, Node, Program};
+
+/// Outcome per considered loop.
+#[derive(Debug, Clone)]
+pub struct IccReport {
+    pub parallelized: Vec<LoopId>,
+    pub refused: Vec<(LoopId, &'static str)>,
+}
+
+/// Run the icc model. Unlike SILO it additionally *refuses* loops whose
+/// bounds or strides are not compile-time analyzable (symbolic stride
+/// expressions defeat its dependence test — Fig. 1's "Fails
+/// parallelization").
+pub fn icc_auto_parallelize(p: &mut Program) -> Result<IccReport> {
+    let mut report = IccReport {
+        parallelized: Vec::new(),
+        refused: Vec::new(),
+    };
+    let containers = p.containers.clone();
+    let dim_syms = p.dim_syms.clone();
+    fn walk(
+        nodes: &mut [Node],
+        containers: &[crate::ir::Container],
+        dim_syms: &[crate::symbolic::Sym],
+        under_parallel: bool,
+        report: &mut IccReport,
+    ) {
+        for n in nodes {
+            if let Node::Loop(l) = n {
+                let mut now_parallel = under_parallel;
+                if !under_parallel && matches!(l.schedule, LoopSchedule::Sequential) {
+                    // icc's test: constant stride required.
+                    if l.stride.as_int().is_none() {
+                        report.refused.push((l.id, "non-constant stride"));
+                    } else {
+                        let deps = loop_deps(l, containers);
+                        if deps.is_doall() {
+                            // Parametric-stride offsets: icc's dependence
+                            // test gives up on symbolic coefficient
+                            // products even when independent — model via
+                            // the affinity classifier.
+                            let affine =
+                                crate::analysis::affine::classify_nest_with(l, &[], dim_syms)
+                                    .is_scop();
+                            if affine {
+                                l.schedule = LoopSchedule::Parallel;
+                                report.parallelized.push(l.id);
+                                now_parallel = true;
+                            } else {
+                                report.refused.push((l.id, "unanalyzable subscripts"));
+                            }
+                        } else if deps
+                            .deps
+                            .iter()
+                            .all(|d| matches!(d.distance, DepDistance::Constant(_)))
+                        {
+                            report.refused.push((l.id, "parallel dependence"));
+                        } else {
+                            report.refused.push((l.id, "assumed dependence"));
+                        }
+                    }
+                }
+                walk(&mut l.body, containers, dim_syms, now_parallel, report);
+            }
+        }
+    }
+    walk(&mut p.body, &containers, &dim_syms, false, &mut report);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    #[test]
+    fn parallelizes_clean_affine_loop() {
+        let mut b = ProgramBuilder::new("icc1");
+        let n = b.param_positive("icc1_N");
+        let a = b.array("A", Expr::Sym(n));
+        let x = b.array("X", Expr::Sym(n));
+        let i = b.sym("icc1_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(x, Expr::Sym(i)));
+        });
+        let mut p = b.finish();
+        let rep = icc_auto_parallelize(&mut p).unwrap();
+        assert_eq!(rep.parallelized.len(), 1);
+    }
+
+    #[test]
+    fn refuses_parametric_strides_even_when_independent() {
+        // Fig. 1: independent but multivariate-polynomial subscripts.
+        let mut b = ProgramBuilder::new("icc2");
+        let n = b.param_positive("icc2_N");
+        let s = b.param_positive("icc2_S");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(s));
+        let i = b.sym("icc2_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i) * Expr::Sym(s), Expr::real(1.0));
+        });
+        let mut p = b.finish();
+        let rep = icc_auto_parallelize(&mut p).unwrap();
+        assert!(rep.parallelized.is_empty());
+        assert_eq!(rep.refused[0].1, "unanalyzable subscripts");
+    }
+
+    #[test]
+    fn refuses_recurrence() {
+        let mut b = ProgramBuilder::new("icc3");
+        let n = b.param_positive("icc3_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("icc3_i");
+        b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(a, Expr::Sym(i) - int(1)));
+        });
+        let mut p = b.finish();
+        let rep = icc_auto_parallelize(&mut p).unwrap();
+        assert!(rep.parallelized.is_empty());
+        assert_eq!(rep.refused[0].1, "parallel dependence");
+    }
+}

@@ -1,0 +1,15 @@
+//! Baseline optimizer models (DESIGN.md §Substitutions).
+//!
+//! Each baseline is a pass pipeline over the same IR that enforces the
+//! corresponding tool's *documented restrictions* — the paper's
+//! comparisons hinge on what each tool refuses to do (reject non-affine
+//! strides, never change data allocation), so encoding the refusal rules
+//! reproduces the crossovers without shipping LLVM/Pluto/ICC.
+
+pub mod dace_like;
+pub mod icc_like;
+pub mod polyhedral;
+
+pub use dace_like::dace_auto_optimize;
+pub use icc_like::icc_auto_parallelize;
+pub use polyhedral::{pluto_like, polly_like, PolyhedralOutcome};

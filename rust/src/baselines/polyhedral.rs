@@ -1,0 +1,198 @@
+//! Polly-like and Pluto-like baselines.
+//!
+//! Both demand a SCoP: constant integer strides and affine bounds/accesses
+//! (see [`crate::analysis::affine`]). Outside a SCoP they perform **no
+//! optimization** — Fig. 1's "No optimization (multivariate polynomial)".
+//! Inside a SCoP they tile and parallelize dependence-free dimensions but
+//! never change data allocation, so WAW/WAR-carrying loops stay
+//! sequential (the §6.1 failure mode on vertical advection).
+
+use anyhow::Result;
+
+use crate::analysis::classify_program;
+use crate::ir::{LoopId, LoopSchedule, Node, Program};
+use crate::transforms::{parallelize_doall, tile};
+
+/// What the polyhedral tool did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PolyhedralOutcome {
+    /// Not a SCoP: tool bails, program untouched (Fig. 1 / Fig. 2).
+    Rejected { reason: String },
+    /// SCoP detected and optimized.
+    Optimized {
+        parallelized: Vec<LoopId>,
+        tiled: Vec<LoopId>,
+    },
+}
+
+/// Polly-like: SCoP check → (optional) tiling of parallel band → DOALL
+/// marking of dependence-free loops. `-polly-parallel` behavior.
+pub fn polly_like(p: &mut Program) -> Result<PolyhedralOutcome> {
+    run_polyhedral(p, /*tile_size*/ Some(32), /*multipar*/ false)
+}
+
+/// Pluto-like (`--parallel --multipar`): same SCoP restriction, tiles and
+/// parallelizes *multiple* dependence-free dimensions where present.
+pub fn pluto_like(p: &mut Program) -> Result<PolyhedralOutcome> {
+    run_polyhedral(p, Some(32), true)
+}
+
+fn run_polyhedral(
+    p: &mut Program,
+    tile_size: Option<i64>,
+    multipar: bool,
+) -> Result<PolyhedralOutcome> {
+    let report = classify_program(p);
+    if !report.is_scop() {
+        return Ok(PolyhedralOutcome::Rejected {
+            reason: format!("{:?}", report.violations[0]),
+        });
+    }
+
+    // Parallelism is decided on the *original* nest (the polyhedral
+    // schedule legality is computed before tiling); Pluto's --multipar
+    // additionally parallelizes nested free dimensions.
+    let rep = parallelize_doall(p, !multipar)?;
+
+    // Then tile the parallel bands for locality (the tile loop keeps the
+    // parallel schedule; the intra-tile loop runs sequentially).
+    let mut tiled = Vec::new();
+    if let Some(ts) = tile_size {
+        let candidates: Vec<LoopId> = p
+            .loops()
+            .iter()
+            .filter(|l| l.is_parallel() && l.stride.as_int() == Some(1))
+            .map(|l| l.id)
+            .collect();
+        // Tile at most the two outermost parallel loops (rectangular
+        // tiling; deeper tiling rarely changes the comparison).
+        for id in candidates.into_iter().take(2) {
+            if let Ok(tl) = tile(p, id, ts) {
+                tiled.push(tl);
+            }
+        }
+    }
+    Ok(PolyhedralOutcome::Optimized {
+        parallelized: rep.parallelized,
+        tiled,
+    })
+}
+
+/// Did the baseline leave every loop over container-carried dependencies
+/// sequential? (Test/report helper.)
+pub fn sequential_loop_count(p: &Program) -> usize {
+    p.loops()
+        .iter()
+        .filter(|l| matches!(l.schedule, LoopSchedule::Sequential))
+        .count()
+}
+
+/// All loops in the program (report helper).
+pub fn parallel_loop_count(p: &Program) -> usize {
+    p.loops().iter().filter(|l| l.is_parallel()).count()
+}
+
+/// Does any statement sit under a parallel loop? (coarse coverage check)
+pub fn has_parallel_coverage(p: &Program) -> bool {
+    fn walk(nodes: &[Node], under: bool) -> bool {
+        for n in nodes {
+            match n {
+                Node::Stmt(_) if under => return true,
+                Node::Stmt(_) => {}
+                Node::Loop(l) => {
+                    if walk(&l.body, under || l.is_parallel()) {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+    walk(&p.body, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    /// Fig. 1: parametric-stride Laplace is rejected outright.
+    #[test]
+    fn parametric_strides_rejected() {
+        let mut b = ProgramBuilder::new("poly1");
+        let n = b.param_positive("poly1_N");
+        let is_i = b.param_positive("poly1_isI");
+        let a = b.array("A", (Expr::Sym(n) + int(2)) * Expr::Sym(is_i));
+        let i = b.sym("poly1_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i) * Expr::Sym(is_i), Expr::real(1.0));
+        });
+        let mut p = b.finish();
+        let before = p.clone();
+        match polly_like(&mut p).unwrap() {
+            PolyhedralOutcome::Rejected { .. } => {}
+            other => panic!("expected rejection, got {other:?}"),
+        }
+        // Untouched.
+        assert_eq!(p.loops().len(), before.loops().len());
+        assert_eq!(sequential_loop_count(&p), 1);
+    }
+
+    /// Affine stencil: accepted, tiled, parallelized.
+    #[test]
+    fn affine_scop_optimized() {
+        let mut b = ProgramBuilder::new("poly2");
+        let n = b.param_positive("poly2_N");
+        let a = b.array("A", Expr::Sym(n) * int(512));
+        let x = b.array("X", Expr::Sym(n) * int(512));
+        let i = b.sym("poly2_i");
+        let j = b.sym("poly2_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, int(0), int(512), int(1), |b| {
+                let off = int(512) * Expr::Sym(i) + Expr::Sym(j);
+                b.assign(a, off.clone(), load(x, off) * Expr::real(2.0));
+            });
+        });
+        let mut p = b.finish();
+        match pluto_like(&mut p).unwrap() {
+            PolyhedralOutcome::Optimized { parallelized, tiled } => {
+                assert!(!parallelized.is_empty());
+                assert!(!tiled.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        crate::ir::validate::validate(&p).unwrap();
+    }
+
+    /// Vertical-advection shape: SCoP accepted (multidim notation — the
+    /// row stride is the declared extent N) but the K recurrence keeps K
+    /// sequential — only I parallelizes (the §6.1 baseline behavior).
+    #[test]
+    fn waw_keeps_k_sequential() {
+        let mut b = ProgramBuilder::new("poly3");
+        let n = b.dim_param("poly3_N");
+        let kk = b.dim_param("poly3_K");
+        let a = b.array("A", Expr::Sym(kk) * Expr::Sym(n));
+        let k = b.sym("poly3_k");
+        let i = b.sym("poly3_i");
+        b.for_(k, int(1), Expr::Sym(kk), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                // A[k][i] / A[k-1][i] in multidim notation.
+                let cur = Expr::Sym(n) * Expr::Sym(k) + Expr::Sym(i);
+                let prev = Expr::Sym(n) * (Expr::Sym(k) - int(1)) + Expr::Sym(i);
+                b.assign(a, cur, load(a, prev) * Expr::real(0.5));
+            });
+        });
+        let mut p = b.finish();
+        match pluto_like(&mut p).unwrap() {
+            PolyhedralOutcome::Optimized { parallelized, .. } => {
+                // i parallelized, k not.
+                let k_loop = p.loops()[0].clone();
+                assert!(matches!(k_loop.schedule, LoopSchedule::Sequential));
+                assert!(!parallelized.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

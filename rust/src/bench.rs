@@ -1,0 +1,59 @@
+//! Minimal timing harness (no external bench crates in the vendored set;
+//! `cargo bench` targets use this with `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` for `warmup` + `iters` iterations and report wall-clock stats.
+pub fn time<F: FnMut()>(warmup: u32, iters: u32, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut min = Duration::MAX;
+    let mut max = Duration::ZERO;
+    let mut total = Duration::ZERO;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        min = min.min(dt);
+        max = max.max(dt);
+        total += dt;
+    }
+    Stats {
+        iters,
+        mean: total / iters.max(1),
+        min,
+        max,
+    }
+}
+
+/// Auto-calibrating variant: picks an iteration count so the measurement
+/// lasts roughly `budget`.
+pub fn time_budgeted<F: FnMut()>(budget: Duration, mut f: F) -> Stats {
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_micros(1));
+    let iters = (budget.as_secs_f64() / once.as_secs_f64()).clamp(1.0, 1000.0) as u32;
+    time(0, iters, f)
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

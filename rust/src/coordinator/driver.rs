@@ -1,0 +1,148 @@
+//! The optimize → lower → execute → validate pipeline (the coordinator's
+//! programmatic API; the CLI and examples are thin wrappers over this).
+
+use anyhow::{bail, Result};
+
+use crate::exec::Vm;
+use crate::ir::Program;
+use crate::kernels::{self, gen_inputs, Preset};
+use crate::schedules::{schedule_all_ptr_inc, schedule_prefetches};
+use crate::symbolic::Sym;
+use crate::transforms::{silo_cfg1, silo_cfg2, PipelineReport};
+
+/// Which optimization pipeline to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptConfig {
+    /// No SILO passes (framework baseline).
+    None,
+    /// Dependency elimination + auto optimization (§6.1 config 1).
+    Cfg1,
+    /// Cfg1 + DOACROSS pipelining (§6.1 config 2).
+    Cfg2,
+}
+
+/// Memory-schedule options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemSchedules {
+    pub ptr_inc: bool,
+    pub prefetch: bool,
+}
+
+/// Result of a driver run.
+pub struct RunOutcome {
+    pub program: Program,
+    pub pipeline: Option<PipelineReport>,
+    pub storage: crate::exec::Storage,
+    pub wall: std::time::Duration,
+}
+
+/// Optimize and execute a registered kernel.
+pub fn optimize_and_run(
+    name: &str,
+    cfg: OptConfig,
+    mem: MemSchedules,
+    preset: Preset,
+    threads: usize,
+) -> Result<RunOutcome> {
+    let Some(entry) = kernels::kernel(name) else {
+        bail!(
+            "unknown kernel {name}; available: {}",
+            kernels::all_kernels()
+                .iter()
+                .map(|k| k.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    };
+    let mut program = (entry.build)();
+    let pipeline = match cfg {
+        OptConfig::None => None,
+        OptConfig::Cfg1 => Some(silo_cfg1(&mut program)?),
+        OptConfig::Cfg2 => Some(silo_cfg2(&mut program)?),
+    };
+    if mem.ptr_inc {
+        schedule_all_ptr_inc(&mut program);
+    }
+    if mem.prefetch {
+        schedule_prefetches(&mut program);
+    }
+    crate::ir::validate::validate(&program)?;
+
+    let params: Vec<(Sym, i64)> = (entry.preset)(preset);
+    let inputs = gen_inputs(&program, &params, entry.init)?;
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let vm = Vm::compile(&program)?;
+    let t0 = std::time::Instant::now();
+    let storage = vm.run(&params, &refs, threads)?;
+    let wall = t0.elapsed();
+    Ok(RunOutcome {
+        program,
+        pipeline,
+        storage,
+        wall,
+    })
+}
+
+/// Validate an optimized configuration against the unoptimized baseline:
+/// every output container must match bit-for-bit (same canonical
+/// expression trees ⇒ same rounding).
+pub fn validate_config(name: &str, cfg: OptConfig, mem: MemSchedules, threads: usize) -> Result<()> {
+    let base = optimize_and_run(name, OptConfig::None, MemSchedules::default(), Preset::Tiny, 1)?;
+    let opt = optimize_and_run(name, cfg, mem, Preset::Tiny, threads)?;
+    // Compare *observable* outputs only: argument containers. Transients
+    // may legitimately diverge (privatized scratch stays thread-local).
+    for c in &base.program.containers {
+        if c.kind != crate::ir::ContainerKind::Argument {
+            continue;
+        }
+        let i = c.id.0 as usize;
+        if base.storage.arrays[i] != opt.storage.arrays[i] {
+            bail!(
+                "{name}: output container {} ({}) diverged under {:?}",
+                i,
+                base.storage.names[i],
+                cfg
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn driver_runs_and_validates_vadv() {
+        validate_config(
+            "vadv",
+            OptConfig::Cfg2,
+            MemSchedules { ptr_inc: true, prefetch: false },
+            3,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn driver_rejects_unknown_kernel() {
+        assert!(optimize_and_run(
+            "no_such_kernel",
+            OptConfig::None,
+            MemSchedules::default(),
+            Preset::Tiny,
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn driver_runs_corpus_kernel_with_schedules() {
+        validate_config(
+            "jacobi_1d",
+            OptConfig::Cfg1,
+            MemSchedules { ptr_inc: true, prefetch: true },
+            1,
+        )
+        .unwrap();
+    }
+}

@@ -1,0 +1,9 @@
+//! The L3 coordinator: optimization-pipeline driver, experiment harnesses
+//! (one per paper table/figure), and report rendering.
+
+pub mod driver;
+pub mod experiments;
+pub mod report;
+
+pub use driver::{optimize_and_run, validate_config, MemSchedules, OptConfig, RunOutcome};
+pub use report::Table;

@@ -1,0 +1,95 @@
+//! Dominance / post-dominance over loop-body sequences.
+//!
+//! Loop bodies in this IR are straight-line sequences of elements (guards
+//! live *inside* statements), so dominance collapses to sequence order:
+//! element `u` dominates `v` iff `u ≤ v`, and `u` post-dominates `v` iff
+//! `u ≥ v` and `u` is unguarded. This is exactly the structure the paper's
+//! release-placement rule (§3.3.2) needs.
+
+use super::graph::BodyGraph;
+
+/// Does element `u` dominate element `v` (every execution reaching `v`
+/// passed `u` first, within one iteration)?
+pub fn dominates(g: &BodyGraph, u: usize, v: usize) -> bool {
+    u <= v && !g.nodes[u].guarded
+}
+
+/// Does element `u` post-dominate element `v` (every execution leaving `v`
+/// later passes `u`)?
+pub fn post_dominates(g: &BodyGraph, u: usize, v: usize) -> bool {
+    u >= v && !g.nodes[u].guarded
+}
+
+/// Among `candidates` (dependency-resolving writes, §3.3.2), find the one
+/// that post-dominates all others — the single release point. `None` means
+/// "release at end of body".
+pub fn post_dominating_resolver(g: &BodyGraph, candidates: &[usize]) -> Option<usize> {
+    'outer: for &u in candidates {
+        for &v in candidates {
+            if !post_dominates(g, u, v) {
+                continue 'outer;
+            }
+        }
+        return Some(u);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::graph::BodyGraph;
+    use crate::ir::{Access, Node, ProgramBuilder};
+    use crate::symbolic::{int, Expr};
+
+    fn three_stmt_graph(guard_last: bool) -> BodyGraph {
+        let mut b = ProgramBuilder::new("dom");
+        let n = b.param_positive("dom_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("dom_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), Expr::real(1.0));
+            b.assign(a, Expr::Sym(i) + int(1), Expr::real(2.0));
+            if guard_last {
+                b.assign_if(Expr::Sym(i), a, Expr::Sym(i) + int(2), Expr::real(3.0));
+            } else {
+                b.assign(a, Expr::Sym(i) + int(2), Expr::real(3.0));
+            }
+        });
+        let p = b.finish();
+        let l = p.loops()[0];
+        let syntactic = |n: &Node| {
+            let mut reads = Vec::new();
+            let mut writes: Vec<Access> = Vec::new();
+            for s in n.stmts() {
+                reads.extend(s.reads());
+                writes.push(s.write.clone());
+            }
+            (reads, writes)
+        };
+        BodyGraph::build(&l.body, &syntactic)
+    }
+
+    #[test]
+    fn sequence_dominance() {
+        let g = three_stmt_graph(false);
+        assert!(dominates(&g, 0, 2));
+        assert!(!dominates(&g, 2, 0));
+        assert!(post_dominates(&g, 2, 0));
+        assert!(!post_dominates(&g, 0, 2));
+    }
+
+    #[test]
+    fn post_dominating_resolver_picks_last() {
+        let g = three_stmt_graph(false);
+        assert_eq!(post_dominating_resolver(&g, &[0, 2]), Some(2));
+        assert_eq!(post_dominating_resolver(&g, &[1]), Some(1));
+    }
+
+    #[test]
+    fn guarded_element_cannot_postdominate() {
+        let g = three_stmt_graph(true);
+        // Element 2 is guarded: not a valid single release point.
+        assert_eq!(post_dominating_resolver(&g, &[0, 2]), None);
+    }
+}

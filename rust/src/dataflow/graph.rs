@@ -1,0 +1,235 @@
+//! Loop-body dataflow graph construction.
+
+use crate::ir::{Access, AccessKind, LoopId, Node, StmtId};
+use crate::symbolic::{sym_eq, ContainerId};
+
+/// Reference to a top-level element of a loop body.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeRef {
+    Stmt(StmtId),
+    Loop(LoopId),
+}
+
+/// A dataflow-graph node: one top-level body element with its (possibly
+/// summarized) reads and writes.
+#[derive(Debug, Clone)]
+pub struct GraphNode {
+    pub index: usize,
+    pub node: NodeRef,
+    pub reads: Vec<Access>,
+    pub writes: Vec<Access>,
+    /// Guarded statements may not execute; they neither dominate nor
+    /// post-dominate for the purposes of §3.1/§3.3.2.
+    pub guarded: bool,
+}
+
+/// How confident the edge is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Offsets are symbolically equal — the value definitely flows.
+    Definite,
+    /// Same container, offsets not provably equal/unequal — may alias.
+    Possible,
+}
+
+/// Dataflow edge `src → dst` carrying container data.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    pub src: usize,
+    pub dst: usize,
+    pub container: ContainerId,
+    pub kind: EdgeKind,
+}
+
+/// Dataflow graph over one loop body (element sequence).
+#[derive(Debug, Clone)]
+pub struct BodyGraph {
+    pub nodes: Vec<GraphNode>,
+    pub edges: Vec<Edge>,
+}
+
+impl BodyGraph {
+    /// Build the graph for a body. `summarize` maps a *nested loop* node to
+    /// its externally visible (reads, writes) — the visibility analysis
+    /// supplies the propagated version; tests may pass a syntactic one.
+    pub fn build(
+        body: &[Node],
+        summarize: &dyn Fn(&Node) -> (Vec<Access>, Vec<Access>),
+    ) -> BodyGraph {
+        let mut nodes: Vec<GraphNode> = Vec::with_capacity(body.len());
+        for (i, n) in body.iter().enumerate() {
+            match n {
+                Node::Stmt(s) => nodes.push(GraphNode {
+                    index: i,
+                    node: NodeRef::Stmt(s.id),
+                    reads: s.reads(),
+                    writes: vec![s.write.clone()],
+                    guarded: s.guard.is_some(),
+                }),
+                Node::Loop(l) => {
+                    let (reads, writes) = summarize(n);
+                    nodes.push(GraphNode {
+                        index: i,
+                        node: NodeRef::Loop(l.id),
+                        reads,
+                        writes,
+                        guarded: false,
+                    });
+                }
+            }
+        }
+        let mut edges = Vec::new();
+        for dst in 0..nodes.len() {
+            for src in 0..dst {
+                for w in &nodes[src].writes {
+                    for r in &nodes[dst].reads {
+                        if w.container != r.container {
+                            continue;
+                        }
+                        let kind = if sym_eq(&w.offset, &r.offset) {
+                            EdgeKind::Definite
+                        } else {
+                            EdgeKind::Possible
+                        };
+                        edges.push(Edge {
+                            src,
+                            dst,
+                            container: w.container,
+                            kind,
+                        });
+                    }
+                }
+            }
+        }
+        BodyGraph { nodes, edges }
+    }
+
+    /// Is the read `(dst_index, access)` *self-contained* (paper §3.1): is
+    /// there an earlier, unguarded write to the same container with a
+    /// symbolically equivalent offset that dominates it?
+    pub fn is_self_contained(&self, dst_index: usize, read: &Access) -> bool {
+        debug_assert_eq!(read.kind, AccessKind::Read);
+        for src in (0..dst_index).rev() {
+            let n = &self.nodes[src];
+            if n.guarded {
+                continue;
+            }
+            // Summarized loops write ranges, not single offsets; only exact
+            // statement writes dominate (conservative).
+            if matches!(n.node, NodeRef::Loop(_)) {
+                continue;
+            }
+            for w in &n.writes {
+                if w.container == read.container && sym_eq(&w.offset, &read.offset) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Indices of nodes that write container `c`.
+    pub fn writers_of(&self, c: ContainerId) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| n.writes.iter().any(|w| w.container == c))
+            .map(|n| n.index)
+            .collect()
+    }
+
+    /// Indices of nodes that read container `c`.
+    pub fn readers_of(&self, c: ContainerId) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| n.reads.iter().any(|r| r.container == c))
+            .map(|n| n.index)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    /// Syntactic summarizer: all reads/writes of the subtree, unpropagated.
+    fn syntactic(n: &Node) -> (Vec<Access>, Vec<Access>) {
+        let mut reads = Vec::new();
+        let mut writes = Vec::new();
+        for s in n.stmts() {
+            reads.extend(s.reads());
+            writes.push(s.write.clone());
+        }
+        (reads, writes)
+    }
+
+    #[test]
+    fn definite_edge_and_self_containment() {
+        // s0: T[i] = A[i];  s1: B[i] = T[i] * 2   — T read is self-contained.
+        let mut b = ProgramBuilder::new("df");
+        let n = b.param_positive("df_N");
+        let a = b.array("A", Expr::Sym(n));
+        let t = b.transient("T", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n));
+        let i = b.sym("df_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(t, Expr::Sym(i), load(a, Expr::Sym(i)));
+            b.assign(bb, Expr::Sym(i), load(t, Expr::Sym(i)) * Expr::real(2.0));
+        });
+        let p = b.finish();
+        let l = p.loops()[0];
+        let g = BodyGraph::build(&l.body, &syntactic);
+        assert_eq!(g.nodes.len(), 2);
+        assert!(g
+            .edges
+            .iter()
+            .any(|e| e.src == 0 && e.dst == 1 && e.kind == EdgeKind::Definite));
+        let read = Access::read(t, Expr::Sym(i));
+        assert!(g.is_self_contained(1, &read));
+        // A's read in s0 is NOT self-contained (no earlier writer).
+        let read_a = Access::read(a, Expr::Sym(i));
+        assert!(!g.is_self_contained(0, &read_a));
+    }
+
+    #[test]
+    fn offset_mismatch_is_possible_edge_not_self_contained() {
+        // s0: T[i] = ...;  s1: B[i] = T[i-1]  — not self-contained.
+        let mut b = ProgramBuilder::new("df2");
+        let n = b.param_positive("df2_N");
+        let t = b.transient("T", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n));
+        let i = b.sym("df2_i");
+        b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(t, Expr::Sym(i), Expr::real(1.0));
+            b.assign(bb, Expr::Sym(i), load(t, Expr::Sym(i) - int(1)));
+        });
+        let p = b.finish();
+        let l = p.loops()[0];
+        let g = BodyGraph::build(&l.body, &syntactic);
+        assert!(g
+            .edges
+            .iter()
+            .any(|e| e.src == 0 && e.dst == 1 && e.kind == EdgeKind::Possible));
+        let read = Access::read(t, Expr::Sym(i) - int(1));
+        assert!(!g.is_self_contained(1, &read));
+    }
+
+    #[test]
+    fn guarded_writes_do_not_dominate() {
+        let mut b = ProgramBuilder::new("df3");
+        let n = b.param_positive("df3_N");
+        let t = b.transient("T", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n));
+        let i = b.sym("df3_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign_if(Expr::Sym(i), t, Expr::Sym(i), Expr::real(1.0));
+            b.assign(bb, Expr::Sym(i), load(t, Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let l = p.loops()[0];
+        let g = BodyGraph::build(&l.body, &syntactic);
+        let read = Access::read(t, Expr::Sym(i));
+        assert!(!g.is_self_contained(1, &read));
+    }
+}

@@ -1,0 +1,14 @@
+//! Dataflow graphs over loop bodies (paper §3.1).
+//!
+//! The consumer/producer analysis builds, per loop body, a graph whose
+//! nodes are the body's top-level elements (statements or summarized
+//! nested loops) and whose edges carry `(container, offset)` dataflow. The
+//! graph answers the two questions the paper's analyses need: which reads
+//! are *self-contained* (dominated by a symbolically-equal write in the
+//! same iteration), and which resolving access *post-dominates* the others
+//! (release placement, §3.3.2).
+
+pub mod dominance;
+pub mod graph;
+
+pub use graph::{BodyGraph, EdgeKind, GraphNode, NodeRef};

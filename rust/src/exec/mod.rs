@@ -1,0 +1,11 @@
+//! Program execution: the bytecode VM, the threaded DOALL/DOACROSS
+//! runtime, storage, and trace hooks.
+
+pub mod parallel;
+pub mod trace;
+pub mod values;
+pub mod vm;
+
+pub use trace::{CollectingTracer, CountingTracer, NullTracer, TraceEvent, Tracer};
+pub use values::{Frame, Storage};
+pub use vm::{exec_block, exec_nodes, Vm};

@@ -1,0 +1,146 @@
+//! Threaded DOALL and DOACROSS runtimes (std::thread::scope; no external
+//! crates). On this single-core sandbox these validate *correctness* of the
+//! schedules (sync semantics, privatization); the paper's speedup numbers
+//! come from the machine simulator (`machine::simsched`), which runs the
+//! same schedules against a multicore model.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::lowering::bytecode::{ExecProgram, LoopExec};
+
+use super::trace::NullTracer;
+use super::values::Frame;
+use super::vm::{exec_block, exec_nodes};
+
+/// Iteration values of a loop given evaluated bounds. Stride is evaluated
+/// once at entry (parallel loops require an iteration-invariant stride).
+fn iteration_values(
+    l: &LoopExec,
+    frame: &mut Frame,
+    start_val: i64,
+    end_val: i64,
+) -> (Vec<i64>, i64) {
+    let mut tr = NullTracer;
+    frame.ints[l.var_reg as usize] = start_val;
+    exec_block(&l.stride.ops, frame, &mut tr);
+    let s = frame.ints[l.stride_reg as usize];
+    let mut vals = Vec::new();
+    if s != 0 {
+        let mut v = start_val;
+        while (s > 0 && v < end_val) || (s < 0 && v > end_val) {
+            vals.push(v);
+            v += s;
+        }
+    }
+    (vals, s)
+}
+
+/// DOALL: partition contiguous chunks of the iteration space over workers.
+#[allow(clippy::too_many_arguments)]
+pub fn run_par(
+    prog: &ExecProgram,
+    l: &LoopExec,
+    frame: &mut Frame,
+    lens: &[usize],
+    start_val: i64,
+    end_val: i64,
+    threads: usize,
+) {
+    let (vals, _s) = iteration_values(l, frame, start_val, end_val);
+    if vals.is_empty() {
+        return;
+    }
+    let nthreads = threads.min(vals.len()).max(1);
+    let chunk = vals.len().div_ceil(nthreads);
+    std::thread::scope(|scope| {
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(vals.len());
+            if lo >= hi {
+                continue;
+            }
+            let my_vals = &vals[lo..hi];
+            let mut my_frame = frame.fork(prog, lens);
+            scope.spawn(move || {
+                let mut tr = NullTracer;
+                for &v in my_vals {
+                    my_frame.ints[l.var_reg as usize] = v;
+                    exec_block(&l.pre_body.ops, &mut my_frame, &mut tr);
+                    // Prefetch hints are omitted on parallel loops (§4.1.2)
+                    // but execute harmlessly if present.
+                    exec_block(&l.prefetch.ops, &mut my_frame, &mut tr);
+                    exec_nodes(prog, &l.body, &mut my_frame, lens, 1, &mut tr);
+                    exec_block(&l.post_body.ops, &mut my_frame, &mut tr);
+                }
+            });
+        }
+    });
+}
+
+/// DOACROSS: iterations round-robin across workers; wait/release flags
+/// enforce the δ-distance dependences (paper §3.3, OpenMP-4.5-ordered-
+/// style synchronization).
+#[allow(clippy::too_many_arguments)]
+pub fn run_doacross(
+    prog: &ExecProgram,
+    l: &LoopExec,
+    frame: &mut Frame,
+    lens: &[usize],
+    start_val: i64,
+    end_val: i64,
+    threads: usize,
+    waits: &[(usize, i64)],
+    release_after: Option<usize>,
+) {
+    let (vals, _s) = iteration_values(l, frame, start_val, end_val);
+    if vals.is_empty() {
+        return;
+    }
+    let nthreads = threads.min(vals.len()).max(1);
+    let flags: Vec<AtomicU8> = (0..vals.len()).map(|_| AtomicU8::new(0)).collect();
+    let flags = &flags;
+    let vals_ref = &vals;
+
+    std::thread::scope(|scope| {
+        for tid in 0..nthreads {
+            let mut my_frame = frame.fork(prog, lens);
+            scope.spawn(move || {
+                let mut tr = NullTracer;
+                let mut t = tid;
+                while t < vals_ref.len() {
+                    let v = vals_ref[t];
+                    my_frame.ints[l.var_reg as usize] = v;
+                    exec_block(&l.pre_body.ops, &mut my_frame, &mut tr);
+                    exec_block(&l.prefetch.ops, &mut my_frame, &mut tr);
+                    for (ei, node) in l.body.iter().enumerate() {
+                        // Block until every producing iteration released.
+                        for (w_elem, delta) in waits {
+                            if *w_elem == ei && t as i64 - delta >= 0 {
+                                let target = t - *delta as usize;
+                                while flags[target].load(Ordering::Acquire) == 0 {
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                        exec_nodes(
+                            prog,
+                            std::slice::from_ref(node),
+                            &mut my_frame,
+                            lens,
+                            1,
+                            &mut tr,
+                        );
+                        if release_after == Some(ei) {
+                            flags[t].store(1, Ordering::Release);
+                        }
+                    }
+                    exec_block(&l.post_body.ops, &mut my_frame, &mut tr);
+                    if release_after.is_none() {
+                        flags[t].store(1, Ordering::Release);
+                    }
+                    t += nthreads;
+                }
+            });
+        }
+    });
+}

@@ -1,0 +1,61 @@
+//! Memory-trace hooks feeding the machine models.
+
+/// Observer of every data access the VM performs (element granularity).
+pub trait Tracer {
+    fn access(&mut self, cont: u16, idx: i64, write: bool, prefetch: bool);
+}
+
+/// Zero-cost tracer for untraced runs — all calls inline to nothing.
+pub struct NullTracer;
+
+impl Tracer for NullTracer {
+    #[inline(always)]
+    fn access(&mut self, _cont: u16, _idx: i64, _write: bool, _prefetch: bool) {}
+}
+
+/// Record of one access (testing / offline analysis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub cont: u16,
+    pub idx: i64,
+    pub write: bool,
+    pub prefetch: bool,
+}
+
+/// Collects the full trace in memory (tests, small workloads).
+#[derive(Default)]
+pub struct CollectingTracer {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Tracer for CollectingTracer {
+    fn access(&mut self, cont: u16, idx: i64, write: bool, prefetch: bool) {
+        self.events.push(TraceEvent {
+            cont,
+            idx,
+            write,
+            prefetch,
+        });
+    }
+}
+
+/// Counts accesses without storing them.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct CountingTracer {
+    pub reads: u64,
+    pub writes: u64,
+    pub prefetches: u64,
+}
+
+impl Tracer for CountingTracer {
+    #[inline(always)]
+    fn access(&mut self, _cont: u16, _idx: i64, write: bool, prefetch: bool) {
+        if prefetch {
+            self.prefetches += 1;
+        } else if write {
+            self.writes += 1;
+        } else {
+            self.reads += 1;
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Runtime storage and register frames.
+
+use anyhow::{bail, Result};
+
+use crate::lowering::bytecode::ExecProgram;
+use crate::symbolic::eval::eval_int;
+use crate::symbolic::{ContainerId, Sym};
+
+/// Concrete container storage: one f64 array per container (f32 containers
+/// store rounded-through-f32 values in f64 lanes).
+#[derive(Debug, Clone)]
+pub struct Storage {
+    pub arrays: Vec<Vec<f64>>,
+    pub names: Vec<String>,
+}
+
+impl Storage {
+    /// Allocate all containers for `prog` under the given parameter
+    /// bindings; arrays are zero-initialized.
+    pub fn allocate(prog: &ExecProgram, params: &[(Sym, i64)]) -> Result<Storage> {
+        let mut arrays = Vec::with_capacity(prog.containers.len());
+        let mut names = Vec::with_capacity(prog.containers.len());
+        for c in &prog.containers {
+            let n = eval_int(&c.size, &params.to_vec())?;
+            if n < 0 {
+                bail!("container {} has negative size {n}", c.name);
+            }
+            arrays.push(vec![0.0; n as usize]);
+            names.push(c.name.clone());
+        }
+        Ok(Storage { arrays, names })
+    }
+
+    pub fn set(&mut self, c: ContainerId, data: &[f64]) -> Result<()> {
+        let a = &mut self.arrays[c.0 as usize];
+        if a.len() != data.len() {
+            bail!(
+                "container {} size mismatch: {} vs {}",
+                self.names[c.0 as usize],
+                a.len(),
+                data.len()
+            );
+        }
+        a.copy_from_slice(data);
+        Ok(())
+    }
+
+    pub fn get(&self, c: ContainerId) -> &[f64] {
+        &self.arrays[c.0 as usize]
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&[f64]> {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .map(|i| self.arrays[i].as_slice())
+    }
+}
+
+/// Per-thread execution frame: register files plus per-container base
+/// pointers (private containers point at thread-local buffers).
+pub struct Frame {
+    pub ints: Vec<i64>,
+    pub floats: Vec<f64>,
+    pub bases: Vec<*mut f64>,
+    #[cfg(debug_assertions)]
+    pub lens: Vec<usize>,
+    /// Thread-local buffers backing private containers (kept alive while
+    /// `bases` points into them).
+    pub private: Vec<Vec<f64>>,
+}
+
+impl Frame {
+    pub fn new(prog: &ExecProgram, storage: &mut Storage, params: &[(Sym, i64)]) -> Frame {
+        let mut ints = vec![0i64; prog.n_int as usize];
+        let floats = vec![0f64; prog.n_float as usize];
+        for (s, r) in &prog.sym_regs {
+            if let Some(v) = params.iter().find(|(x, _)| x == s).map(|(_, v)| *v) {
+                ints[*r as usize] = v;
+            }
+        }
+        let bases: Vec<*mut f64> = storage.arrays.iter_mut().map(|a| a.as_mut_ptr()).collect();
+        #[cfg(debug_assertions)]
+        let lens = storage.arrays.iter().map(|a| a.len()).collect();
+        Frame {
+            ints,
+            floats,
+            bases,
+            #[cfg(debug_assertions)]
+            lens,
+            private: Vec::new(),
+        }
+    }
+
+    /// Clone for a worker thread: registers copied, shared bases aliased,
+    /// private containers re-backed by thread-local buffers.
+    pub fn fork(&self, prog: &ExecProgram, storage_lens: &[usize]) -> Frame {
+        let mut f = Frame {
+            ints: self.ints.clone(),
+            floats: self.floats.clone(),
+            bases: self.bases.clone(),
+            #[cfg(debug_assertions)]
+            lens: {
+                #[cfg(debug_assertions)]
+                {
+                    self.lens.clone()
+                }
+            },
+            private: Vec::new(),
+        };
+        for (i, c) in prog.containers.iter().enumerate() {
+            if c.private {
+                let mut buf = vec![0.0; storage_lens[i]];
+                f.bases[i] = buf.as_mut_ptr();
+                f.private.push(buf);
+            }
+        }
+        f
+    }
+}
+
+/// `Frame` holds raw pointers into shared storage; sharing across scoped
+/// threads is sound because (a) transforms guarantee disjoint write sets
+/// for Parallel loops, (b) Doacross loops order conflicting accesses via
+/// wait/release, and (c) private containers are re-backed per thread.
+unsafe impl Send for Frame {}

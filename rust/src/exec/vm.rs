@@ -1,0 +1,311 @@
+//! The sequential bytecode interpreter and the tree executor.
+
+use anyhow::Result;
+
+use crate::ir::Program;
+use crate::lowering::bytecode::{ExecNode, ExecProgram, ExecSchedule, LoopExec, Op};
+use crate::lowering::compile::lower;
+use crate::symbolic::{ContainerId, Sym};
+
+use super::trace::{NullTracer, Tracer};
+use super::values::{Frame, Storage};
+
+/// A compiled, executable program.
+pub struct Vm {
+    pub prog: ExecProgram,
+}
+
+impl Vm {
+    pub fn compile(p: &Program) -> Result<Vm> {
+        Ok(Vm { prog: lower(p)? })
+    }
+
+    /// Run with `threads` workers. `inputs` seeds argument containers.
+    pub fn run(
+        &self,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+    ) -> Result<Storage> {
+        let mut tr = NullTracer;
+        self.run_traced(params, inputs, threads, &mut tr)
+    }
+
+    /// Run with a memory-trace observer. With `threads > 1`, parallel
+    /// loops' accesses are traced per-thread in nondeterministic order —
+    /// the machine models use `threads == 1` (deterministic program order).
+    pub fn run_traced<T: Tracer>(
+        &self,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+        tracer: &mut T,
+    ) -> Result<Storage> {
+        let mut storage = Storage::allocate(&self.prog, params)?;
+        for (c, data) in inputs {
+            storage.set(*c, data)?;
+        }
+        let lens: Vec<usize> = storage.arrays.iter().map(|a| a.len()).collect();
+        let mut frame = Frame::new(&self.prog, &mut storage, params);
+        exec_nodes(&self.prog, &self.prog.root, &mut frame, &lens, threads, tracer);
+        Ok(storage)
+    }
+}
+
+/// Execute a tree-node sequence on one frame.
+pub fn exec_nodes<T: Tracer>(
+    prog: &ExecProgram,
+    nodes: &[ExecNode],
+    frame: &mut Frame,
+    lens: &[usize],
+    threads: usize,
+    tr: &mut T,
+) {
+    for n in nodes {
+        match n {
+            ExecNode::Code(block) => exec_block(&block.ops, frame, tr),
+            ExecNode::Loop(l) => exec_tree_loop(prog, l, frame, lens, threads, tr),
+        }
+    }
+}
+
+fn exec_tree_loop<T: Tracer>(
+    prog: &ExecProgram,
+    l: &LoopExec,
+    frame: &mut Frame,
+    lens: &[usize],
+    threads: usize,
+    tr: &mut T,
+) {
+    exec_block(&l.start.ops, frame, tr);
+    let start_val = frame.ints[l.start_reg as usize];
+    exec_block(&l.end.ops, frame, tr);
+    let end_val = frame.ints[l.end_reg as usize];
+
+    let effective_threads = match l.schedule {
+        ExecSchedule::Seq => 1,
+        _ => threads,
+    };
+
+    if effective_threads <= 1 {
+        // Sequential execution honors every schedule trivially (iteration
+        // order satisfies all wait/release orderings).
+        let mut v = start_val;
+        loop {
+            frame.ints[l.var_reg as usize] = v;
+            exec_block(&l.stride.ops, frame, tr);
+            let s = frame.ints[l.stride_reg as usize];
+            if s == 0 || (s > 0 && v >= end_val) || (s < 0 && v <= end_val) {
+                break;
+            }
+            exec_block(&l.pre_body.ops, frame, tr);
+            exec_block(&l.prefetch.ops, frame, tr);
+            exec_nodes(prog, &l.body, frame, lens, threads, tr);
+            exec_block(&l.post_body.ops, frame, tr);
+            v += s;
+        }
+        exec_block(&l.post_loop.ops, frame, tr);
+        return;
+    }
+
+    match &l.schedule {
+        ExecSchedule::Par => {
+            super::parallel::run_par(prog, l, frame, lens, start_val, end_val, threads);
+            let mut null = NullTracer;
+            exec_block(&l.post_loop.ops, frame, &mut null);
+        }
+        ExecSchedule::Doacross {
+            waits,
+            release_after,
+        } => {
+            super::parallel::run_doacross(
+                prog,
+                l,
+                frame,
+                lens,
+                start_val,
+                end_val,
+                threads,
+                waits,
+                *release_after,
+            );
+            let mut null = NullTracer;
+            exec_block(&l.post_loop.ops, frame, &mut null);
+        }
+        ExecSchedule::Seq => unreachable!(),
+    }
+}
+
+/// The flat-bytecode interpreter — the VM hot path.
+#[inline]
+pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) {
+    let mut pc = 0usize;
+    let n = ops.len();
+    let ints = f.ints.as_mut_ptr();
+    let floats = f.floats.as_mut_ptr();
+    macro_rules! i {
+        ($r:expr) => {
+            unsafe { *ints.add($r as usize) }
+        };
+    }
+    macro_rules! iset {
+        ($r:expr, $v:expr) => {
+            unsafe { *ints.add($r as usize) = $v }
+        };
+    }
+    macro_rules! fl {
+        ($r:expr) => {
+            unsafe { *floats.add($r as usize) }
+        };
+    }
+    macro_rules! fset {
+        ($r:expr, $v:expr) => {
+            unsafe { *floats.add($r as usize) = $v }
+        };
+    }
+    macro_rules! heap_idx {
+        ($cont:expr, $idx:expr) => {{
+            #[cfg(debug_assertions)]
+            {
+                let len = f.lens[$cont as usize];
+                debug_assert!(
+                    ($idx as i64) >= 0 && ($idx as usize) < len,
+                    "container {} access out of bounds: {} (len {})",
+                    $cont,
+                    $idx,
+                    len
+                );
+            }
+            unsafe { f.bases[$cont as usize].add($idx as usize) }
+        }};
+    }
+    while pc < n {
+        // Safety: pc < n checked by the loop condition; jump targets are
+        // compiler-generated indices within the block.
+        match *unsafe { ops.get_unchecked(pc) } {
+            Op::IConst { dst, val } => iset!(dst, val),
+            Op::ICopy { dst, src } => iset!(dst, i!(src)),
+            Op::IAdd { dst, a, b } => iset!(dst, i!(a).wrapping_add(i!(b))),
+            Op::IAddImm { dst, a, imm } => iset!(dst, i!(a).wrapping_add(imm)),
+            Op::ISub { dst, a, b } => iset!(dst, i!(a).wrapping_sub(i!(b))),
+            Op::IMul { dst, a, b } => iset!(dst, i!(a).wrapping_mul(i!(b))),
+            Op::IMulImm { dst, a, imm } => iset!(dst, i!(a).wrapping_mul(imm)),
+            Op::IFloorDiv { dst, a, b } => {
+                let d = i!(b);
+                iset!(dst, if d == 0 { 0 } else { i!(a).div_euclid(d) })
+            }
+            Op::IMod { dst, a, b } => {
+                let d = i!(b);
+                iset!(dst, if d == 0 { 0 } else { i!(a).rem_euclid(d) })
+            }
+            Op::IMin { dst, a, b } => iset!(dst, i!(a).min(i!(b))),
+            Op::IMax { dst, a, b } => iset!(dst, i!(a).max(i!(b))),
+            Op::IPow { dst, a, exp } => iset!(dst, i!(a).wrapping_pow(exp)),
+            Op::ILog2 { dst, a } => {
+                let v = i!(a);
+                iset!(dst, if v > 0 { 63 - (v as u64).leading_zeros() as i64 } else { 0 })
+            }
+            Op::IAbs { dst, a } => iset!(dst, i!(a).abs()),
+
+            Op::FConst { dst, bits } => fset!(dst, f64::from_bits(bits)),
+            Op::FCopy { dst, src } => fset!(dst, fl!(src)),
+            Op::FAdd { dst, a, b } => fset!(dst, fl!(a) + fl!(b)),
+            Op::FSub { dst, a, b } => fset!(dst, fl!(a) - fl!(b)),
+            Op::FMul { dst, a, b } => fset!(dst, fl!(a) * fl!(b)),
+            Op::FDiv { dst, a, b } => fset!(dst, fl!(a) / fl!(b)),
+            Op::FMin { dst, a, b } => fset!(dst, fl!(a).min(fl!(b))),
+            Op::FMax { dst, a, b } => fset!(dst, fl!(a).max(fl!(b))),
+            Op::FPow { dst, a, exp } => fset!(dst, fl!(a).powi(exp as i32)),
+            Op::FExp { dst, a } => fset!(dst, fl!(a).exp()),
+            Op::FSqrt { dst, a } => fset!(dst, fl!(a).sqrt()),
+            Op::FAbs { dst, a } => fset!(dst, fl!(a).abs()),
+            Op::FLog2 { dst, a } => fset!(dst, fl!(a).log2()),
+            Op::FFloor { dst, a } => fset!(dst, fl!(a).floor()),
+            Op::FSelect { dst, cond, a, b } => {
+                fset!(dst, if fl!(cond) > 0.0 { fl!(a) } else { fl!(b) })
+            }
+            Op::FFromI { dst, src } => fset!(dst, i!(src) as f64),
+
+            Op::Load { dst, cont, idx } => {
+                let at = i!(idx);
+                tr.access(cont, at, false, false);
+                fset!(dst, unsafe { *heap_idx!(cont, at) });
+            }
+            Op::LoadOff {
+                dst,
+                cont,
+                idx,
+                off,
+            } => {
+                let at = i!(idx) + off as i64;
+                tr.access(cont, at, false, false);
+                fset!(dst, unsafe { *heap_idx!(cont, at) });
+            }
+            Op::LoadAt2 { dst, cont, a, b } => {
+                let at = i!(a) + i!(b);
+                tr.access(cont, at, false, false);
+                fset!(dst, unsafe { *heap_idx!(cont, at) });
+            }
+            Op::Store { cont, idx, src } => {
+                let at = i!(idx);
+                tr.access(cont, at, true, false);
+                unsafe { *heap_idx!(cont, at) = fl!(src) };
+            }
+            Op::StoreOff {
+                cont,
+                idx,
+                off,
+                src,
+            } => {
+                let at = i!(idx) + off as i64;
+                tr.access(cont, at, true, false);
+                unsafe { *heap_idx!(cont, at) = fl!(src) };
+            }
+            Op::StoreF32 { cont, idx, src } => {
+                let at = i!(idx);
+                tr.access(cont, at, true, false);
+                unsafe { *heap_idx!(cont, at) = fl!(src) as f32 as f64 };
+            }
+            Op::StoreOffF32 {
+                cont,
+                idx,
+                off,
+                src,
+            } => {
+                let at = i!(idx) + off as i64;
+                tr.access(cont, at, true, false);
+                unsafe { *heap_idx!(cont, at) = fl!(src) as f32 as f64 };
+            }
+            Op::Prefetch { cont, idx, write } => {
+                tr.access(cont, i!(idx), write, true);
+            }
+
+            Op::Jump { target } => {
+                pc = target as usize;
+                continue;
+            }
+            Op::LoopCond {
+                var,
+                end,
+                stride,
+                exit,
+            } => {
+                let v = i!(var);
+                let e = i!(end);
+                let s = i!(stride);
+                let done = s == 0 || (s > 0 && v >= e) || (s < 0 && v <= e);
+                if done {
+                    pc = exit as usize;
+                    continue;
+                }
+            }
+            Op::GuardSkip { cond, skip } => {
+                if fl!(cond) <= 0.0 {
+                    pc += skip as usize;
+                }
+            }
+            Op::Halt => return,
+        }
+        pc += 1;
+    }
+}

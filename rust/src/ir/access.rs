@@ -1,0 +1,37 @@
+//! Data accesses: `container[offset]` pairs with read/write direction.
+
+use crate::symbolic::{ContainerId, Expr};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    Read,
+    Write,
+}
+
+/// A single data access — the unit the paper's analyses reason about
+/// (§2.1: "each read and write is represented by the name of a data
+/// container D and a symbolic expression f … denoted D[f]").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Access {
+    pub container: ContainerId,
+    pub offset: Expr,
+    pub kind: AccessKind,
+}
+
+impl Access {
+    pub fn read(container: ContainerId, offset: Expr) -> Access {
+        Access {
+            container,
+            offset,
+            kind: AccessKind::Read,
+        }
+    }
+
+    pub fn write(container: ContainerId, offset: Expr) -> Access {
+        Access {
+            container,
+            offset,
+            kind: AccessKind::Write,
+        }
+    }
+}

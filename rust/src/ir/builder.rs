@@ -1,0 +1,236 @@
+//! Fluent construction of loop programs (used by the kernel corpus, the
+//! examples, and tests).
+
+use crate::symbolic::{ContainerId, Expr, Sym};
+
+use super::access::Access;
+use super::container::{ContainerKind, DType};
+use super::nest::{Loop, LoopSchedule, Node, Stmt};
+use super::program::Program;
+
+/// Builder over a [`Program`] with a cursor into the loop tree.
+///
+/// ```no_run
+/// use silo::ir::ProgramBuilder;
+/// use silo::symbolic::{int, load, psym, Expr};
+///
+/// let mut b = ProgramBuilder::new("axpy");
+/// let n = b.param_positive("axpy_N");
+/// let x = b.array("x", Expr::Sym(n));
+/// let y = b.array("y", Expr::Sym(n));
+/// let i = b.sym("axpy_i");
+/// b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+///     let iv = Expr::Sym(i);
+///     b.assign(y, iv.clone(), Expr::real(2.0) * load(x, iv.clone()) + load(y, iv));
+/// });
+/// let prog = b.finish();
+/// assert_eq!(prog.stmts().len(), 1);
+/// ```
+pub struct ProgramBuilder {
+    prog: Program,
+    /// Stack of open loops; statements append to the innermost.
+    stack: Vec<Loop>,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: &str) -> ProgramBuilder {
+        ProgramBuilder {
+            prog: Program::new(name),
+            stack: Vec::new(),
+        }
+    }
+
+    /// Declare a symbolic program parameter (assumed positive — array
+    /// extents and strides).
+    pub fn param_positive(&mut self, name: &str) -> Sym {
+        let s = Sym::positive(name);
+        if !self.prog.params.contains(&s) {
+            self.prog.params.push(s);
+        }
+        s
+    }
+
+    /// Plain (unassumed) symbol, e.g. loop variables.
+    pub fn sym(&mut self, name: &str) -> Sym {
+        Sym::new(name)
+    }
+
+    /// Declare an array *dimension extent* parameter: positive, ≥ 2, and
+    /// registered so the affinity classifier accepts `var·extent` products
+    /// as multidimensional-affine (the paper's multidim array notation).
+    pub fn dim_param(&mut self, name: &str) -> Sym {
+        let s = Sym::positive_min(name, 2);
+        if !self.prog.params.contains(&s) {
+            self.prog.params.push(s);
+        }
+        if !self.prog.dim_syms.contains(&s) {
+            self.prog.dim_syms.push(s);
+        }
+        s
+    }
+
+    /// Declare an f64 argument array of `size` elements.
+    pub fn array(&mut self, name: &str, size: Expr) -> ContainerId {
+        self.prog
+            .add_container(name, size, DType::F64, ContainerKind::Argument)
+    }
+
+    pub fn array_typed(&mut self, name: &str, size: Expr, dtype: DType) -> ContainerId {
+        self.prog
+            .add_container(name, size, dtype, ContainerKind::Argument)
+    }
+
+    /// Declare a transient (program-allocated) array.
+    pub fn transient(&mut self, name: &str, size: Expr) -> ContainerId {
+        self.prog
+            .add_container(name, size, DType::F64, ContainerKind::Transient)
+    }
+
+    /// Declare a scalar transient.
+    pub fn scalar(&mut self, name: &str) -> ContainerId {
+        self.prog
+            .add_container(name, Expr::Int(1), DType::F64, ContainerKind::Transient)
+    }
+
+    /// Open a loop `for (var = start; var <?> end; var += stride)`, build
+    /// the body in the closure, close it.
+    pub fn for_(
+        &mut self,
+        var: Sym,
+        start: Expr,
+        end: Expr,
+        stride: Expr,
+        body: impl FnOnce(&mut ProgramBuilder),
+    ) {
+        let id = self.prog.fresh_loop_id();
+        self.stack.push(Loop {
+            id,
+            var,
+            start,
+            end,
+            stride,
+            schedule: LoopSchedule::Sequential,
+            body: Vec::new(),
+        });
+        body(self);
+        let l = self.stack.pop().expect("builder loop stack underflow");
+        self.push_node(Node::Loop(l));
+    }
+
+    /// `for_` with a returned loop id (when transforms/tests need it).
+    pub fn for_id(
+        &mut self,
+        var: Sym,
+        start: Expr,
+        end: Expr,
+        stride: Expr,
+        body: impl FnOnce(&mut ProgramBuilder),
+    ) -> super::nest::LoopId {
+        let id_probe = self.prog.fresh_loop_id();
+        self.stack.push(Loop {
+            id: id_probe,
+            var,
+            start,
+            end,
+            stride,
+            schedule: LoopSchedule::Sequential,
+            body: Vec::new(),
+        });
+        body(self);
+        let l = self.stack.pop().expect("builder loop stack underflow");
+        let id = l.id;
+        self.push_node(Node::Loop(l));
+        id
+    }
+
+    /// Append `container[offset] := rhs`.
+    pub fn assign(&mut self, container: ContainerId, offset: Expr, rhs: Expr) -> super::nest::StmtId {
+        let id = self.prog.fresh_stmt_id();
+        self.push_node(Node::Stmt(Stmt {
+            id,
+            write: Access::write(container, crate::symbolic::simplify(&offset)),
+            rhs: crate::symbolic::simplify(&rhs),
+            guard: None,
+        }));
+        id
+    }
+
+    /// Append a guarded assignment (executes iff guard != 0).
+    pub fn assign_if(
+        &mut self,
+        guard: Expr,
+        container: ContainerId,
+        offset: Expr,
+        rhs: Expr,
+    ) -> super::nest::StmtId {
+        let id = self.prog.fresh_stmt_id();
+        self.push_node(Node::Stmt(Stmt {
+            id,
+            write: Access::write(container, crate::symbolic::simplify(&offset)),
+            rhs: crate::symbolic::simplify(&rhs),
+            guard: Some(crate::symbolic::simplify(&guard)),
+        }));
+        id
+    }
+
+    fn push_node(&mut self, n: Node) {
+        if let Some(top) = self.stack.last_mut() {
+            top.body.push(n);
+        } else {
+            self.prog.body.push(n);
+        }
+    }
+
+    pub fn finish(self) -> Program {
+        assert!(
+            self.stack.is_empty(),
+            "unclosed loops at ProgramBuilder::finish"
+        );
+        self.prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::{int, load};
+
+    #[test]
+    fn nested_loops_build() {
+        let mut b = ProgramBuilder::new("t");
+        let n = b.param_positive("bld_N");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(n));
+        let i = b.sym("bld_i");
+        let j = b.sym("bld_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, int(0), Expr::Sym(n), int(1), |b| {
+                let off = Expr::Sym(i) * Expr::Sym(n) + Expr::Sym(j);
+                b.assign(a, off.clone(), load(a, off) + Expr::real(1.0));
+            });
+        });
+        let p = b.finish();
+        assert_eq!(p.loops().len(), 2);
+        assert_eq!(p.stmts().len(), 1);
+        let parents = p.stmt_parents();
+        let sid = p.stmts()[0].id;
+        assert_eq!(parents[&sid].len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unclosed")]
+    fn unclosed_loop_panics() {
+        let mut b = ProgramBuilder::new("bad");
+        let i = b.sym("bld_bad_i");
+        let id = b.prog.fresh_loop_id();
+        b.stack.push(Loop {
+            id,
+            var: i,
+            start: int(0),
+            end: int(1),
+            stride: int(1),
+            schedule: LoopSchedule::Sequential,
+            body: vec![],
+        });
+        let _ = b.finish();
+    }
+}

@@ -1,0 +1,55 @@
+//! Data containers: arrays, transients and scalars operated on by loops.
+
+use crate::symbolic::{ContainerId, Expr};
+
+/// Element type of a container. The VM stores everything as f64 lanes; the
+/// dtype controls rounding on store (f32 simulation) and element size for
+/// the cache model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F64,
+    F32,
+    I64,
+}
+
+impl DType {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F64 | DType::I64 => 8,
+            DType::F32 => 4,
+        }
+    }
+}
+
+/// Lifetime/visibility class of a container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerKind {
+    /// Program input/output — externally visible by definition.
+    Argument,
+    /// Allocated inside the program; visibility is determined by dataflow
+    /// analysis (paper §3.1).
+    Transient,
+    /// Scalar register value produced by privatization (§3.2.1). Never
+    /// externally visible; one live instance per loop iteration.
+    Register,
+}
+
+/// A data container declaration.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: ContainerId,
+    pub name: String,
+    /// Total number of elements (symbolic expressions allowed; scalars = 1).
+    pub size: Expr,
+    pub dtype: DType,
+    pub kind: ContainerKind,
+    /// Base address in the simulated flat heap (filled by the lowering; the
+    /// cache model needs distinct address ranges per container).
+    pub base: u64,
+}
+
+impl Container {
+    pub fn is_scalar(&self) -> bool {
+        matches!(self.size, Expr::Int(1))
+    }
+}

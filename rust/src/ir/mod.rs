@@ -1,0 +1,23 @@
+//! The loop-nest intermediate representation SILO analyzes and transforms.
+//!
+//! Mirrors the paper's program model (§2.1): a program is a tree of loops
+//! and statements. A loop is characterized by `(var, start, end, stride)` —
+//! all symbolic — plus a body; a statement is a guarded single assignment
+//! `D[f] := expr(loads…)` whose reads/writes are container+offset pairs with
+//! injective symbolic offset expressions. Memory schedules (§4) are
+//! *properties on accesses*, kept out of the tree and materialized only at
+//! lowering.
+
+pub mod access;
+pub mod builder;
+pub mod container;
+pub mod nest;
+pub mod pretty;
+pub mod program;
+pub mod validate;
+
+pub use access::{Access, AccessKind};
+pub use builder::ProgramBuilder;
+pub use container::{Container, ContainerKind, DType};
+pub use nest::{Loop, LoopId, LoopSchedule, Node, ReleaseSpec, Stmt, StmtId, WaitSpec};
+pub use program::{PrefetchHint, Program, ScheduleSet};

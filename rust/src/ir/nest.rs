@@ -1,0 +1,232 @@
+//! Loop-nest tree: loops characterized by `(var, start, end, stride)` and
+//! guarded single-assignment statements.
+
+use crate::symbolic::{ContainerId, Expr, Sym};
+
+use super::access::{Access, AccessKind};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LoopId(pub u32);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StmtId(pub u32);
+
+/// How a loop's iterations are scheduled after optimization.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LoopSchedule {
+    /// Iterations run in order (default).
+    Sequential,
+    /// DOALL: iterations are independent and may run concurrently.
+    Parallel,
+    /// DOACROSS pipeline parallelism (§3.3): iterations run concurrently
+    /// but synchronize on the listed wait/release points.
+    Doacross {
+        waits: Vec<WaitSpec>,
+        release: ReleaseSpec,
+    },
+}
+
+/// "Iteration `var` must block before `before_stmt` until iteration
+/// `var − delta·stride` has released" (§3.3.1's iteration vector, expressed
+/// per loop — cross-loop components with δᵢ = 0 need no wait).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WaitSpec {
+    pub before_stmt: StmtId,
+    /// Dependence distance in iterations of this loop (δ from the solver).
+    pub delta: i64,
+}
+
+/// Where a loop iteration signals completion of its dependency-resolving
+/// writes (§3.3.2: after the post-dominating resolving access, or at the
+/// end of the body if none post-dominates).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReleaseSpec {
+    AfterStmt(StmtId),
+    EndOfBody,
+}
+
+/// A loop: the paper's four characterizing parameters plus the body.
+///
+/// Iteration semantics follow the C pattern
+/// `for (var = start; cond; var += stride)` where `cond` is `var < end`
+/// for ascending iteration and `var > end` for descending (the sign of the
+/// evaluated stride decides; strides may themselves be symbolic and even
+/// depend on `var` — e.g. Fig. 2's `i += i`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Loop {
+    pub id: LoopId,
+    pub var: Sym,
+    pub start: Expr,
+    pub end: Expr,
+    pub stride: Expr,
+    pub schedule: LoopSchedule,
+    pub body: Vec<Node>,
+}
+
+/// A guarded single-assignment statement: `if guard != 0: D[f] := rhs`.
+/// `rhs` is a compute expression whose `Load` leaves are the reads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stmt {
+    pub id: StmtId,
+    pub write: Access,
+    pub rhs: Expr,
+    pub guard: Option<Expr>,
+}
+
+impl Stmt {
+    /// All reads performed by this statement (loads in rhs + guard).
+    pub fn reads(&self) -> Vec<Access> {
+        let mut out: Vec<Access> = self
+            .rhs
+            .loads()
+            .into_iter()
+            .map(|(c, off)| Access::read(c, off))
+            .collect();
+        if let Some(g) = &self.guard {
+            out.extend(
+                g.loads()
+                    .into_iter()
+                    .map(|(c, off)| Access::read(c, off)),
+            );
+        }
+        out
+    }
+
+    /// Reads and the write, in evaluation order (reads first).
+    pub fn accesses(&self) -> Vec<Access> {
+        let mut out = self.reads();
+        out.push(self.write.clone());
+        out
+    }
+}
+
+/// A node in the loop tree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Node {
+    Stmt(Stmt),
+    Loop(Loop),
+}
+
+impl Node {
+    pub fn as_loop(&self) -> Option<&Loop> {
+        match self {
+            Node::Loop(l) => Some(l),
+            _ => None,
+        }
+    }
+
+    pub fn as_stmt(&self) -> Option<&Stmt> {
+        match self {
+            Node::Stmt(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Visit every node in the subtree (pre-order).
+    pub fn visit(&self, f: &mut impl FnMut(&Node)) {
+        f(self);
+        if let Node::Loop(l) = self {
+            for c in &l.body {
+                c.visit(f);
+            }
+        }
+    }
+
+    /// Mutable pre-order visit.
+    pub fn visit_mut(&mut self, f: &mut impl FnMut(&mut Node)) {
+        f(self);
+        if let Node::Loop(l) = self {
+            for c in &mut l.body {
+                c.visit_mut(f);
+            }
+        }
+    }
+
+    /// All statements in the subtree, in program order.
+    pub fn stmts(&self) -> Vec<&Stmt> {
+        let mut out = Vec::new();
+        self.collect_stmts(&mut out);
+        out
+    }
+
+    fn collect_stmts<'a>(&'a self, out: &mut Vec<&'a Stmt>) {
+        match self {
+            Node::Stmt(s) => out.push(s),
+            Node::Loop(l) => {
+                for c in &l.body {
+                    c.collect_stmts(out);
+                }
+            }
+        }
+    }
+
+    /// All accesses (reads then write per statement) in the subtree.
+    pub fn accesses(&self) -> Vec<Access> {
+        self.stmts().iter().flat_map(|s| s.accesses()).collect()
+    }
+
+    /// Does the subtree write container `c`?
+    pub fn writes_container(&self, c: ContainerId) -> bool {
+        self.stmts().iter().any(|s| s.write.container == c)
+    }
+
+    /// Does the subtree read container `c`?
+    pub fn reads_container(&self, c: ContainerId) -> bool {
+        self.stmts()
+            .iter()
+            .any(|s| s.reads().iter().any(|a| a.container == c))
+    }
+}
+
+impl Loop {
+    /// Loop variables of this loop and all nested loops, outermost first.
+    pub fn nest_vars(&self) -> Vec<Sym> {
+        let mut out = vec![self.var];
+        for n in &self.body {
+            if let Node::Loop(l) = n {
+                out.extend(l.nest_vars());
+            }
+        }
+        out
+    }
+
+    /// Is the schedule parallel (DOALL or DOACROSS)?
+    pub fn is_parallel(&self) -> bool {
+        !matches!(self.schedule, LoopSchedule::Sequential)
+    }
+
+    /// Find a nested loop by id (including self).
+    pub fn find_loop(&self, id: LoopId) -> Option<&Loop> {
+        if self.id == id {
+            return Some(self);
+        }
+        for n in &self.body {
+            if let Node::Loop(l) = n {
+                if let Some(found) = l.find_loop(id) {
+                    return Some(found);
+                }
+            }
+        }
+        None
+    }
+}
+
+/// All accesses performed by one statement to a given container, split by
+/// kind. Convenience used throughout the analyses.
+pub fn accesses_to(stmt: &Stmt, c: ContainerId, kind: AccessKind) -> Vec<Expr> {
+    match kind {
+        AccessKind::Write => {
+            if stmt.write.container == c {
+                vec![stmt.write.offset.clone()]
+            } else {
+                vec![]
+            }
+        }
+        AccessKind::Read => stmt
+            .reads()
+            .into_iter()
+            .filter(|a| a.container == c)
+            .map(|a| a.offset)
+            .collect(),
+    }
+}

@@ -1,0 +1,141 @@
+//! Pretty-printer for loop programs (CLI/report output and debugging).
+
+use std::fmt::Write;
+
+use super::nest::{LoopSchedule, Node, ReleaseSpec};
+use super::program::Program;
+
+/// Render the full program as pseudo-C with schedule annotations.
+pub fn pretty(p: &Program) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "program {} {{", p.name);
+    if !p.params.is_empty() {
+        let names: Vec<String> = p.params.iter().map(|s| s.name()).collect();
+        let _ = writeln!(out, "  params: {}", names.join(", "));
+    }
+    for c in &p.containers {
+        let kind = match c.kind {
+            super::container::ContainerKind::Argument => "arg",
+            super::container::ContainerKind::Transient => "transient",
+            super::container::ContainerKind::Register => "register",
+        };
+        let _ = writeln!(out, "  {} %{} \"{}\"[{}]", kind, c.id.0, c.name, c.size);
+    }
+    for n in &p.body {
+        write_node(&mut out, p, n, 1);
+    }
+    if !p.schedules.ptr_inc.is_empty() {
+        let _ = writeln!(out, "  // memory schedules:");
+        for (s, c) in &p.schedules.ptr_inc {
+            let _ = writeln!(
+                out,
+                "  //   ptr-inc on stmt s{} container \"{}\"",
+                s.0,
+                p.container(*c).name
+            );
+        }
+    }
+    for pf in &p.schedules.prefetches {
+        let _ = writeln!(
+            out,
+            "  //   prefetch \"{}\"[{}] ({}) at loop L{}",
+            p.container(pf.container).name,
+            pf.offset,
+            if pf.for_write { "write" } else { "read" },
+            pf.at_loop.0
+        );
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn write_node(out: &mut String, p: &Program, n: &Node, depth: usize) {
+    let pad = "  ".repeat(depth);
+    match n {
+        Node::Stmt(s) => {
+            let guard = s
+                .guard
+                .as_ref()
+                .map(|g| format!("if ({g}) "))
+                .unwrap_or_default();
+            let _ = writeln!(
+                out,
+                "{pad}{guard}s{}: \"{}\"[{}] = {};",
+                s.id.0,
+                p.container(s.write.container).name,
+                s.write.offset,
+                render_rhs(p, &s.rhs)
+            );
+        }
+        Node::Loop(l) => {
+            let sched = match &l.schedule {
+                LoopSchedule::Sequential => String::new(),
+                LoopSchedule::Parallel => " // parallel (DOALL)".to_string(),
+                LoopSchedule::Doacross { waits, release } => {
+                    let w: Vec<String> = waits
+                        .iter()
+                        .map(|w| format!("wait(s{}, δ={})", w.before_stmt.0, w.delta))
+                        .collect();
+                    let r = match release {
+                        ReleaseSpec::AfterStmt(s) => format!("release after s{}", s.0),
+                        ReleaseSpec::EndOfBody => "release at end".to_string(),
+                    };
+                    format!(" // DOACROSS [{} | {}]", w.join(", "), r)
+                }
+            };
+            let _ = writeln!(
+                out,
+                "{pad}L{}: for ({} = {}; {} <> {}; {} += {}) {{{}",
+                l.id.0,
+                l.var.name(),
+                l.start,
+                l.var.name(),
+                l.end,
+                l.var.name(),
+                l.stride,
+                sched
+            );
+            for c in &l.body {
+                write_node(out, p, c, depth + 1);
+            }
+            let _ = writeln!(out, "{pad}}}");
+        }
+    }
+}
+
+/// Render an rhs, replacing `%id[...]` loads with container names.
+fn render_rhs(p: &Program, e: &crate::symbolic::Expr) -> String {
+    use crate::symbolic::Expr;
+    let renamed = e.map(&|x| x.clone());
+    // Simple textual pass: render, then replace %N with names.
+    let mut s = format!("{renamed}");
+    // Longest ids first so %12 is not clobbered by %1.
+    let mut ids: Vec<_> = p.containers.iter().collect();
+    ids.sort_by_key(|c| std::cmp::Reverse(c.id.0));
+    for c in ids {
+        s = s.replace(&format!("%{}", c.id.0), &format!("\"{}\"", c.name));
+    }
+    let _ = Expr::Int(0); // keep import used
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    #[test]
+    fn pretty_renders_structure() {
+        let mut b = ProgramBuilder::new("pp");
+        let n = b.param_positive("pp_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("pp_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(a, Expr::Sym(i)) + Expr::real(1.0));
+        });
+        let p = b.finish();
+        let s = super::pretty(&p);
+        assert!(s.contains("for (pp_i = 0"), "{s}");
+        assert!(s.contains("\"A\""), "{s}");
+    }
+}

@@ -1,0 +1,227 @@
+//! Whole-program container: declarations, the loop tree, and the memory
+//! schedule set (kept separate from the tree per the paper's §4 design —
+//! "a memory schedule … does not directly modify the IR").
+
+use std::collections::HashMap;
+
+use crate::symbolic::{ContainerId, Expr, Sym};
+
+use super::container::{Container, ContainerKind, DType};
+use super::nest::{Loop, LoopId, Node, Stmt, StmtId};
+
+/// A software-prefetch hint (§4.1): before each iteration of `at_loop`,
+/// prefetch `container[offset]` (offset already shifted by the loop stride
+/// so it targets the *next* iteration's first access).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PrefetchHint {
+    pub at_loop: LoopId,
+    pub container: ContainerId,
+    pub offset: Expr,
+    /// Prepare for write (true) or read (false) — the second argument of
+    /// `__builtin_prefetch`.
+    pub for_write: bool,
+}
+
+/// Memory schedules attached to accesses (realized at lowering).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ScheduleSet {
+    /// `(stmt, container)` pairs whose accesses use pointer incrementation
+    /// (§4.2). All accesses to that container in that statement share the
+    /// cursor (constant-offset reuse, §4.2.3).
+    pub ptr_inc: Vec<(StmtId, ContainerId)>,
+    /// Software prefetch hints (§4.1).
+    pub prefetches: Vec<PrefetchHint>,
+}
+
+impl ScheduleSet {
+    pub fn has_ptr_inc(&self, s: StmtId, c: ContainerId) -> bool {
+        self.ptr_inc.contains(&(s, c))
+    }
+}
+
+/// A complete loop program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    /// Symbolic parameters (sizes, strides) that must be bound at run time.
+    pub params: Vec<Sym>,
+    /// Parameters registered as array *dimension extents* (row strides of
+    /// multidimensional arrays). The affinity classifier treats
+    /// `var·extent` products as multidim-affine — what C's `A[k][j][i]`
+    /// notation gives polyhedral tools (§6.1's "compatible
+    /// multidimensional array notation").
+    pub dim_syms: Vec<Sym>,
+    pub containers: Vec<Container>,
+    pub body: Vec<Node>,
+    pub schedules: ScheduleSet,
+    next_loop: u32,
+    next_stmt: u32,
+    next_container: u32,
+}
+
+impl Program {
+    pub fn new(name: &str) -> Program {
+        Program {
+            name: name.to_string(),
+            params: Vec::new(),
+            dim_syms: Vec::new(),
+            containers: Vec::new(),
+            body: Vec::new(),
+            schedules: ScheduleSet::default(),
+            next_loop: 0,
+            next_stmt: 0,
+            next_container: 0,
+        }
+    }
+
+    pub fn add_container(
+        &mut self,
+        name: &str,
+        size: Expr,
+        dtype: DType,
+        kind: ContainerKind,
+    ) -> ContainerId {
+        let id = ContainerId(self.next_container);
+        self.next_container += 1;
+        self.containers.push(Container {
+            id,
+            name: name.to_string(),
+            size,
+            dtype,
+            kind,
+            base: 0,
+        });
+        id
+    }
+
+    pub fn container(&self, id: ContainerId) -> &Container {
+        &self.containers[id.0 as usize]
+    }
+
+    pub fn container_mut(&mut self, id: ContainerId) -> &mut Container {
+        &mut self.containers[id.0 as usize]
+    }
+
+    pub fn fresh_loop_id(&mut self) -> LoopId {
+        let id = LoopId(self.next_loop);
+        self.next_loop += 1;
+        id
+    }
+
+    pub fn fresh_stmt_id(&mut self) -> StmtId {
+        let id = StmtId(self.next_stmt);
+        self.next_stmt += 1;
+        id
+    }
+
+    /// Visit every node (pre-order across the top-level sequence).
+    pub fn visit(&self, f: &mut impl FnMut(&Node)) {
+        for n in &self.body {
+            n.visit(f);
+        }
+    }
+
+    pub fn visit_mut(&mut self, f: &mut impl FnMut(&mut Node)) {
+        for n in &mut self.body {
+            n.visit_mut(f);
+        }
+    }
+
+    /// All loops, outermost-first pre-order.
+    pub fn loops(&self) -> Vec<&Loop> {
+        let mut out = Vec::new();
+        self.visit(&mut |n| {
+            if let Node::Loop(_) = n {}
+        });
+        // visit takes a closure that can't easily capture lifetimes; do it
+        // manually instead.
+        fn collect<'a>(nodes: &'a [Node], out: &mut Vec<&'a Loop>) {
+            for n in nodes {
+                if let Node::Loop(l) = n {
+                    out.push(l);
+                    collect(&l.body, out);
+                }
+            }
+        }
+        collect(&self.body, &mut out);
+        out
+    }
+
+    /// All statements in program order.
+    pub fn stmts(&self) -> Vec<&Stmt> {
+        let mut out = Vec::new();
+        for n in &self.body {
+            out.extend(n.stmts());
+        }
+        out
+    }
+
+    pub fn find_loop(&self, id: LoopId) -> Option<&Loop> {
+        self.loops().into_iter().find(|l| l.id == id)
+    }
+
+    pub fn find_stmt(&self, id: StmtId) -> Option<&Stmt> {
+        self.stmts().into_iter().find(|s| s.id == id)
+    }
+
+    /// Map loop-id → chain of enclosing loop ids (outermost first,
+    /// excluding the loop itself).
+    pub fn loop_parents(&self) -> HashMap<LoopId, Vec<LoopId>> {
+        let mut out = HashMap::new();
+        fn walk(nodes: &[Node], chain: &mut Vec<LoopId>, out: &mut HashMap<LoopId, Vec<LoopId>>) {
+            for n in nodes {
+                if let Node::Loop(l) = n {
+                    out.insert(l.id, chain.clone());
+                    chain.push(l.id);
+                    walk(&l.body, chain, out);
+                    chain.pop();
+                }
+            }
+        }
+        walk(&self.body, &mut Vec::new(), &mut out);
+        out
+    }
+
+    /// Map stmt-id → chain of enclosing loop ids (outermost first).
+    pub fn stmt_parents(&self) -> HashMap<StmtId, Vec<LoopId>> {
+        let mut out = HashMap::new();
+        fn walk(nodes: &[Node], chain: &mut Vec<LoopId>, out: &mut HashMap<StmtId, Vec<LoopId>>) {
+            for n in nodes {
+                match n {
+                    Node::Stmt(s) => {
+                        out.insert(s.id, chain.clone());
+                    }
+                    Node::Loop(l) => {
+                        chain.push(l.id);
+                        walk(&l.body, chain, out);
+                        chain.pop();
+                    }
+                }
+            }
+        }
+        walk(&self.body, &mut Vec::new(), &mut out);
+        out
+    }
+
+    /// Resolve a container by name (test/debug convenience).
+    pub fn container_by_name(&self, name: &str) -> Option<ContainerId> {
+        self.containers
+            .iter()
+            .find(|c| c.name == name)
+            .map(|c| c.id)
+    }
+
+    /// Assign flat-heap base addresses to all containers given concrete
+    /// parameter bindings. Returns total heap size in elements.
+    pub fn assign_bases(&mut self, env: &dyn crate::symbolic::eval::Env) -> anyhow::Result<u64> {
+        let mut base = 0u64;
+        for c in &mut self.containers {
+            c.base = base;
+            let n = crate::symbolic::eval::eval_int(&c.size, env)? as u64;
+            // 64-byte align each container so the cache model sees
+            // realistic line boundaries.
+            base += n.div_ceil(8) * 8;
+        }
+        Ok(base)
+    }
+}

@@ -1,0 +1,208 @@
+//! Structural validation of loop programs.
+//!
+//! Catches builder/transform bugs early: duplicate ids, unbound symbols,
+//! accesses to undeclared containers, malformed schedules.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::symbolic::Sym;
+
+use super::nest::{LoopSchedule, Node};
+use super::program::Program;
+
+/// Validate program structure. Transform passes call this in debug builds
+/// and tests call it on every kernel in the corpus.
+pub fn validate(p: &Program) -> Result<()> {
+    let mut loop_ids = HashSet::new();
+    let mut stmt_ids = HashSet::new();
+    let n_containers = p.containers.len() as u32;
+
+    // Bound symbols: params + loop vars (collected on the way down).
+    fn check_nodes(
+        nodes: &[Node],
+        p: &Program,
+        bound: &mut Vec<Sym>,
+        loop_ids: &mut HashSet<u32>,
+        stmt_ids: &mut HashSet<u32>,
+        n_containers: u32,
+    ) -> Result<()> {
+        for n in nodes {
+            match n {
+                Node::Stmt(s) => {
+                    if !stmt_ids.insert(s.id.0) {
+                        bail!("duplicate stmt id s{}", s.id.0);
+                    }
+                    if s.write.container.0 >= n_containers {
+                        bail!("stmt s{} writes undeclared container", s.id.0);
+                    }
+                    for a in s.reads() {
+                        if a.container.0 >= n_containers {
+                            bail!("stmt s{} reads undeclared container", s.id.0);
+                        }
+                    }
+                    for sym in s.write.offset.symbols() {
+                        if !bound.contains(&sym) && !p.params.contains(&sym) {
+                            bail!(
+                                "stmt s{} offset uses unbound symbol {}",
+                                s.id.0,
+                                sym.name()
+                            );
+                        }
+                    }
+                    for sym in s.rhs.symbols() {
+                        if !bound.contains(&sym) && !p.params.contains(&sym) {
+                            bail!("stmt s{} rhs uses unbound symbol {}", s.id.0, sym.name());
+                        }
+                    }
+                }
+                Node::Loop(l) => {
+                    if !loop_ids.insert(l.id.0) {
+                        bail!("duplicate loop id L{}", l.id.0);
+                    }
+                    if bound.contains(&l.var) {
+                        bail!("loop L{} shadows loop variable {}", l.id.0, l.var.name());
+                    }
+                    for e in [&l.start, &l.end] {
+                        for sym in e.symbols() {
+                            if sym != l.var && !bound.contains(&sym) && !p.params.contains(&sym) {
+                                bail!(
+                                    "loop L{} bound uses unbound symbol {}",
+                                    l.id.0,
+                                    sym.name()
+                                );
+                            }
+                        }
+                    }
+                    // Stride may reference the loop's own variable (Fig. 2).
+                    for sym in l.stride.symbols() {
+                        if sym != l.var && !bound.contains(&sym) && !p.params.contains(&sym) {
+                            bail!(
+                                "loop L{} stride uses unbound symbol {}",
+                                l.id.0,
+                                sym.name()
+                            );
+                        }
+                    }
+                    if l.stride.is_zero() {
+                        bail!("loop L{} has zero stride", l.id.0);
+                    }
+                    // DOACROSS wait/release targets must be in this body.
+                    if let LoopSchedule::Doacross { waits, release } = &l.schedule {
+                        let body_stmts: HashSet<u32> =
+                            Node::Loop(l.clone()).stmts().iter().map(|s| s.id.0).collect();
+                        for w in waits {
+                            if !body_stmts.contains(&w.before_stmt.0) {
+                                bail!(
+                                    "L{} DOACROSS waits on stmt s{} outside its body",
+                                    l.id.0,
+                                    w.before_stmt.0
+                                );
+                            }
+                            if w.delta <= 0 {
+                                bail!("L{} DOACROSS wait with non-positive δ", l.id.0);
+                            }
+                        }
+                        if let super::nest::ReleaseSpec::AfterStmt(sid) = release {
+                            if !body_stmts.contains(&sid.0) {
+                                bail!("L{} DOACROSS release outside its body", l.id.0);
+                            }
+                        }
+                    }
+                    bound.push(l.var);
+                    check_nodes(&l.body, p, bound, loop_ids, stmt_ids, n_containers)?;
+                    bound.pop();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    let mut bound = Vec::new();
+    check_nodes(
+        &p.body,
+        p,
+        &mut bound,
+        &mut loop_ids,
+        &mut stmt_ids,
+        n_containers,
+    )?;
+
+    // Schedule set references must resolve.
+    for (sid, cid) in &p.schedules.ptr_inc {
+        if p.find_stmt(*sid).is_none() {
+            bail!("ptr-inc schedule names missing stmt s{}", sid.0);
+        }
+        if cid.0 >= n_containers {
+            bail!("ptr-inc schedule names undeclared container");
+        }
+    }
+    for pf in &p.schedules.prefetches {
+        if p.find_loop(pf.at_loop).is_none() {
+            bail!("prefetch hint names missing loop L{}", pf.at_loop.0);
+        }
+        if pf.container.0 >= n_containers {
+            bail!("prefetch hint names undeclared container");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    #[test]
+    fn valid_program_passes() {
+        let mut b = ProgramBuilder::new("v");
+        let n = b.param_positive("val_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("val_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(a, Expr::Sym(i)));
+        });
+        validate(&b.finish()).unwrap();
+    }
+
+    #[test]
+    fn unbound_symbol_rejected() {
+        let mut b = ProgramBuilder::new("v2");
+        let n = b.param_positive("val2_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("val2_i");
+        let rogue = b.sym("val2_rogue");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(rogue), Expr::real(0.0));
+        });
+        assert!(validate(&b.finish()).is_err());
+    }
+
+    #[test]
+    fn variable_stride_is_legal() {
+        // Fig. 2: for (i=1; i<=n; i+=i)
+        let mut b = ProgramBuilder::new("v3");
+        let n = b.param_positive("val3_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("val3_i");
+        b.for_(i, int(1), Expr::Sym(n), Expr::Sym(i), |b| {
+            use crate::symbolic::{func, FuncKind};
+            b.assign(a, func(FuncKind::Log2, vec![Expr::Sym(i)]), Expr::real(1.0));
+        });
+        validate(&b.finish()).unwrap();
+    }
+
+    #[test]
+    fn zero_stride_rejected() {
+        let mut b = ProgramBuilder::new("v4");
+        let n = b.param_positive("val4_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("val4_i");
+        b.for_(i, int(0), Expr::Sym(n), int(0), |b| {
+            b.assign(a, Expr::Sym(i), Expr::real(0.0));
+        });
+        assert!(validate(&b.finish()).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! The two didactic loops of Fig. 2 — variable strides that eject both
+//! nests from the polyhedral model while SILO's representation captures
+//! them exactly.
+
+use crate::ir::{Program, ProgramBuilder};
+use crate::symbolic::{func, int, Expr, FuncKind, Sym};
+
+use super::Preset;
+
+/// `for (i=1; i <= n; i += i) a[log2(i)] = 1.0;`
+pub fn build_log2() -> Program {
+    let mut b = ProgramBuilder::new("fig2_log2");
+    let n = b.param_positive("fig2a_N");
+    let a = b.array("A", int(64));
+    let i = b.sym("fig2a_i");
+    b.for_(i, int(1), Expr::Sym(n) + int(1), Expr::Sym(i), |b| {
+        b.assign(a, func(FuncKind::Log2, vec![Expr::Sym(i)]), Expr::real(1.0));
+    });
+    b.finish()
+}
+
+/// `for (i=0; i <= n/2+1; ++i) for (j=i; j <= n; j += i+1) a[j] = 0.0;`
+pub fn build_triangular() -> Program {
+    let mut b = ProgramBuilder::new("fig2_tri");
+    let n = b.param_positive("fig2b_N");
+    let a = b.array("A", Expr::Sym(n) + int(2));
+    let i = b.sym("fig2b_i");
+    let j = b.sym("fig2b_j");
+    b.for_(
+        i,
+        int(0),
+        crate::symbolic::floordiv(Expr::Sym(n), int(2)) + int(2),
+        int(1),
+        |b| {
+            b.for_(j, Expr::Sym(i), Expr::Sym(n) + int(1), Expr::Sym(i) + int(1), |b| {
+                b.assign(a, Expr::Sym(j), Expr::real(0.0));
+            });
+        },
+    );
+    b.finish()
+}
+
+pub fn preset(p: Preset) -> Vec<(Sym, i64)> {
+    let n = match p {
+        Preset::Tiny => 16,
+        Preset::Small => 1 << 10,
+        Preset::Medium => 1 << 20,
+    };
+    vec![(Sym::new("fig2a_N"), n), (Sym::new("fig2b_N"), n)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{classify_program, AffineViolation};
+    use crate::exec::Vm;
+
+    #[test]
+    fn both_rejected_by_polyhedral_model() {
+        for p in [build_log2(), build_triangular()] {
+            let r = classify_program(&p);
+            assert!(
+                r.violations
+                    .iter()
+                    .any(|v| matches!(v, AffineViolation::NonConstantStride { .. })),
+                "{}: {:?}",
+                p.name,
+                r.violations
+            );
+        }
+    }
+
+    #[test]
+    fn silo_analyzes_and_executes_both() {
+        // log2 loop: executes, sets a[0..log2(n)] = 1.
+        let p = build_log2();
+        let vm = Vm::compile(&p).unwrap();
+        let out = vm
+            .run(&[(Sym::new("fig2a_N"), 16)], &[], 1)
+            .unwrap();
+        let a = out.by_name("A").unwrap();
+        assert_eq!(&a[0..5], &[1.0; 5]);
+        assert_eq!(a[5], 0.0);
+
+        // triangular loop: every index 0..=n written (each j reachable:
+        // for i=0, stride 1 covers all).
+        let p = build_triangular();
+        let vm = Vm::compile(&p).unwrap();
+        let out = vm
+            .run(&[(Sym::new("fig2b_N"), 16)], &[], 1)
+            .unwrap();
+        let a = out.by_name("A").unwrap();
+        assert!(a[0..17].iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn visibility_over_approximates_log2_loop() {
+        let p = build_log2();
+        let l = p.loops()[0];
+        let (_, writes) = crate::analysis::loop_summary(l, &p.containers);
+        assert!(writes[0].whole, "variable stride ⇒ whole-container");
+    }
+}

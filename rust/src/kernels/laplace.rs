@@ -1,0 +1,150 @@
+//! The Fig. 1 kernel: 2-D Laplace operator with *parametric strides*.
+//!
+//! `lap[i*lsI + j*lsJ] = 4·in[i*isI + j*isJ] − in[(i±1)·isI + j·isJ] −
+//! in[i·isI + (j±1)·isJ]` — the access strides `isI/isJ/lsI/lsJ` are plain
+//! parameters (custom padding), which makes every offset a multivariate
+//! polynomial: polyhedral tools reject the nest, icc fails its dependence
+//! test, and general-purpose compilers drown in index-arithmetic register
+//! pressure. SILO analyzes it inductively and schedules the accesses with
+//! pointer incrementation.
+
+use crate::ir::{Program, ProgramBuilder};
+use crate::symbolic::{int, load, Expr, Sym};
+
+use super::Preset;
+
+pub fn build() -> Program {
+    let mut b = ProgramBuilder::new("laplace2d");
+    // NOT dim_params: the strides are opaque padding parameters (Fig. 1).
+    let ii = b.param_positive("lap_I");
+    let jj = b.param_positive("lap_J");
+    let isi = b.param_positive("lap_isI");
+    let isj = b.param_positive("lap_isJ");
+    let lsi = b.param_positive("lap_lsI");
+    let lsj = b.param_positive("lap_lsJ");
+    let (iie, jje) = (Expr::Sym(ii), Expr::Sym(jj));
+    let input = b.array(
+        "in",
+        (iie.clone() + int(2)) * Expr::Sym(isi) + (jje.clone() + int(2)) * Expr::Sym(isj) + int(1),
+    );
+    let lap = b.array(
+        "lap",
+        (iie.clone() + int(2)) * Expr::Sym(lsi) + (jje.clone() + int(2)) * Expr::Sym(lsj) + int(1),
+    );
+    let j = b.sym("lap_j");
+    let i = b.sym("lap_i");
+    b.for_(j, int(1), jje.clone() - int(1), int(1), |b| {
+        b.for_(i, int(1), iie.clone() - int(1), int(1), |b| {
+            let at = |di: i64, dj: i64| {
+                (Expr::Sym(i) + int(di)) * Expr::Sym(isi)
+                    + (Expr::Sym(j) + int(dj)) * Expr::Sym(isj)
+            };
+            b.assign(
+                lap,
+                Expr::Sym(i) * Expr::Sym(lsi) + Expr::Sym(j) * Expr::Sym(lsj),
+                Expr::real(4.0) * load(input, at(0, 0))
+                    - load(input, at(1, 0))
+                    - load(input, at(-1, 0))
+                    - load(input, at(0, 1))
+                    - load(input, at(0, -1)),
+            );
+        });
+    });
+    b.finish()
+}
+
+pub fn preset(p: Preset) -> Vec<(Sym, i64)> {
+    // Row-major with one element of padding per row: isI = 1, isJ = I+2.
+    let (i, j) = match p {
+        Preset::Tiny => (14, 12),
+        Preset::Small => (254, 254),
+        Preset::Medium => (1022, 1022),
+    };
+    vec![
+        (Sym::new("lap_I"), i),
+        (Sym::new("lap_J"), j),
+        (Sym::new("lap_isI"), 1),
+        (Sym::new("lap_isJ"), i + 2),
+        (Sym::new("lap_lsI"), 1),
+        (Sym::new("lap_lsJ"), i + 2),
+    ]
+}
+
+/// Rust oracle.
+pub fn reference(iv: usize, jv: usize, input: &[f64]) -> Vec<f64> {
+    let (isi, isj, lsi, lsj) = (1usize, iv + 2, 1usize, iv + 2);
+    let mut lap = vec![0.0; (iv + 2) * lsi + (jv + 2) * lsj + 1];
+    for j in 1..jv - 1 {
+        for i in 1..iv - 1 {
+            let at = |di: i64, dj: i64| {
+                ((i as i64 + di) as usize) * isi + ((j as i64 + dj) as usize) * isj
+            };
+            lap[i * lsi + j * lsj] = 4.0 * input[at(0, 0)]
+                - input[at(1, 0)]
+                - input[at(-1, 0)]
+                - input[at(0, 1)]
+                - input[at(0, -1)];
+        }
+    }
+    lap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::classify_program;
+    use crate::exec::Vm;
+    use crate::kernels::{default_init, gen_inputs};
+
+    #[test]
+    fn rejected_by_polyhedral_model() {
+        let p = build();
+        assert!(!classify_program(&p).is_scop(), "Fig. 1's whole point");
+    }
+
+    #[test]
+    fn silo_parallelizes_it() {
+        let mut p = build();
+        crate::transforms::silo_cfg1(&mut p).unwrap();
+        assert!(p.loops().iter().any(|l| l.is_parallel()));
+    }
+
+    #[test]
+    fn vm_matches_reference() {
+        let p = build();
+        let params = preset(Preset::Tiny);
+        let inputs = gen_inputs(&p, &params, default_init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let vm = Vm::compile(&p).unwrap();
+        let out = vm.run(&params, &refs, 1).unwrap();
+        let got = out.by_name("lap").unwrap();
+        let in_data = &inputs[0].1;
+        let expect = reference(14, 12, in_data);
+        // Compare only the interior the kernel writes (unwritten positions
+        // keep the generated input pattern, the reference keeps zeros).
+        let (iv, jv, lsi, lsj) = (14usize, 12usize, 1usize, 16usize);
+        for j in 1..jv - 1 {
+            for i in 1..iv - 1 {
+                let o = i * lsi + j * lsj;
+                assert!((got[o] - expect[o]).abs() < 1e-9, "{} vs {}", got[o], expect[o]);
+            }
+        }
+    }
+
+    #[test]
+    fn ptr_inc_matches_naive() {
+        let params = preset(Preset::Tiny);
+        let run = |ptr_inc: bool| {
+            let mut p = build();
+            if ptr_inc {
+                crate::schedules::schedule_all_ptr_inc(&mut p);
+            }
+            let inputs = gen_inputs(&p, &params, default_init).unwrap();
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let vm = Vm::compile(&p).unwrap();
+            let out = vm.run(&params, &refs, 1).unwrap();
+            out.by_name("lap").unwrap().to_vec()
+        };
+        assert_eq!(run(false), run(true));
+    }
+}

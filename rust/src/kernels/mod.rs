@@ -1,0 +1,89 @@
+//! The kernel corpus: every workload the paper's evaluation touches,
+//! expressed in the loop IR (DESIGN.md §Per-experiment index).
+
+pub mod fig2;
+pub mod laplace;
+pub mod matmul;
+pub mod npbench;
+pub mod vadv;
+
+use crate::ir::{ContainerKind, Program};
+use crate::symbolic::eval::eval_int;
+use crate::symbolic::{ContainerId, Sym};
+
+/// Problem-size presets. `Tiny` is for tests; `Small`/`Medium` scale the
+/// paper's sizes down to this sandbox (DESIGN.md §Substitutions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Preset {
+    Tiny,
+    Small,
+    Medium,
+}
+
+/// A registered kernel: builder + presets + deterministic input generator.
+pub struct KernelEntry {
+    pub name: &'static str,
+    pub build: fn() -> Program,
+    pub preset: fn(Preset) -> Vec<(Sym, i64)>,
+    /// Deterministic element initializer: `(container name, index) → value`.
+    pub init: fn(&str, usize) -> f64,
+}
+
+/// Default initializer: a smooth, bounded, container-dependent pattern.
+pub fn default_init(name: &str, i: usize) -> f64 {
+    let seed = name.bytes().fold(0u64, |a, b| a.wrapping_mul(31).wrapping_add(b as u64));
+    let x = (i as u64).wrapping_mul(2654435761).wrapping_add(seed) % 1024;
+    (x as f64) / 1024.0 - 0.5
+}
+
+/// Generate inputs for every argument container of `p`.
+pub fn gen_inputs(
+    p: &Program,
+    params: &[(Sym, i64)],
+    init: fn(&str, usize) -> f64,
+) -> anyhow::Result<Vec<(ContainerId, Vec<f64>)>> {
+    let mut out = Vec::new();
+    for c in &p.containers {
+        if c.kind != ContainerKind::Argument {
+            continue;
+        }
+        let n = eval_int(&c.size, &params.to_vec())? as usize;
+        let data: Vec<f64> = (0..n).map(|i| init(&c.name, i)).collect();
+        out.push((c.id, data));
+    }
+    Ok(out)
+}
+
+/// The NPBench corpus evaluated in Fig. 10 (20 kernels).
+pub fn npbench_corpus() -> Vec<KernelEntry> {
+    npbench::corpus()
+}
+
+/// Every kernel in the repository (corpus + the headline workloads).
+pub fn all_kernels() -> Vec<KernelEntry> {
+    let mut v = npbench_corpus();
+    v.push(KernelEntry {
+        name: "vadv",
+        build: vadv::build,
+        preset: vadv::preset,
+        init: vadv::init,
+    });
+    v.push(KernelEntry {
+        name: "laplace2d",
+        build: laplace::build,
+        preset: laplace::preset,
+        init: default_init,
+    });
+    v.push(KernelEntry {
+        name: "matmul_tiled",
+        build: matmul::build_tiled,
+        preset: matmul::preset,
+        init: default_init,
+    });
+    v
+}
+
+/// Find a kernel by name.
+pub fn kernel(name: &str) -> Option<KernelEntry> {
+    all_kernels().into_iter().find(|k| k.name == name)
+}

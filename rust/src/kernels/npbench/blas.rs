@@ -1,0 +1,607 @@
+//! NPBench/PolyBench-style dense linear-algebra kernels (Fig. 10 corpus).
+
+use crate::ir::{Program, ProgramBuilder};
+use crate::symbolic::{int, load, Expr, Sym};
+
+use crate::kernels::Preset;
+
+fn n_of(p: Preset, tiny: i64, small: i64, medium: i64) -> i64 {
+    match p {
+        Preset::Tiny => tiny,
+        Preset::Small => small,
+        Preset::Medium => medium,
+    }
+}
+
+/// C = α·A@B + β·C
+pub fn gemm() -> Program {
+    let mut b = ProgramBuilder::new("gemm");
+    let n = b.dim_param("gemm_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let bb = b.array("B", ne.clone() * ne.clone());
+    let c = b.array("C", ne.clone() * ne.clone());
+    let (i0, j0) = (b.sym("gemm_i0"), b.sym("gemm_j0"));
+    b.for_(i0, int(0), ne.clone(), int(1), |b| {
+        b.for_(j0, int(0), ne.clone(), int(1), |b| {
+            let off = Expr::Sym(i0) * ne.clone() + Expr::Sym(j0);
+            b.assign(c, off.clone(), Expr::real(1.2) * load(c, off));
+        });
+    });
+    let (i, j, k) = (b.sym("gemm_i"), b.sym("gemm_j"), b.sym("gemm_k"));
+    b.for_(i, int(0), ne.clone(), int(1), |b| {
+        b.for_(j, int(0), ne.clone(), int(1), |b| {
+            b.for_(k, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i) * ne.clone() + Expr::Sym(j);
+                b.assign(
+                    c,
+                    off.clone(),
+                    load(c, off)
+                        + Expr::real(1.5)
+                            * load(a, Expr::Sym(i) * ne.clone() + Expr::Sym(k))
+                            * load(bb, Expr::Sym(k) * ne.clone() + Expr::Sym(j)),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn gemm_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("gemm_N"), n_of(p, 12, 70, 140))]
+}
+
+/// tmp = α·A@B ; D = tmp@C + β·D
+pub fn k2mm() -> Program {
+    let mut b = ProgramBuilder::new("k2mm");
+    let n = b.dim_param("k2mm_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let bb = b.array("B", ne.clone() * ne.clone());
+    let c = b.array("C", ne.clone() * ne.clone());
+    let d = b.array("D", ne.clone() * ne.clone());
+    let tmp = b.transient("tmp", ne.clone() * ne.clone());
+    let (i0, j0, k0) = (b.sym("k2mm_i0"), b.sym("k2mm_j0"), b.sym("k2mm_k0"));
+    b.for_(i0, int(0), ne.clone(), int(1), |b| {
+        b.for_(j0, int(0), ne.clone(), int(1), |b| {
+            b.assign(tmp, Expr::Sym(i0) * ne.clone() + Expr::Sym(j0), Expr::real(0.0));
+            let _ = k0;
+        });
+    });
+    let (i1, j1, k1) = (b.sym("k2mm_i1"), b.sym("k2mm_j1"), b.sym("k2mm_k1"));
+    b.for_(i1, int(0), ne.clone(), int(1), |b| {
+        b.for_(j1, int(0), ne.clone(), int(1), |b| {
+            b.for_(k1, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i1) * ne.clone() + Expr::Sym(j1);
+                b.assign(
+                    tmp,
+                    off.clone(),
+                    load(tmp, off)
+                        + Expr::real(1.5)
+                            * load(a, Expr::Sym(i1) * ne.clone() + Expr::Sym(k1))
+                            * load(bb, Expr::Sym(k1) * ne.clone() + Expr::Sym(j1)),
+                );
+            });
+        });
+    });
+    let (i2, j2, k2) = (b.sym("k2mm_i2"), b.sym("k2mm_j2"), b.sym("k2mm_k2"));
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), ne.clone(), int(1), |b| {
+            let off = Expr::Sym(i2) * ne.clone() + Expr::Sym(j2);
+            b.assign(d, off.clone(), Expr::real(1.2) * load(d, off));
+        });
+    });
+    b.for_(k2, int(0), ne.clone(), int(1), |_b| {});
+    let (i3, j3, k3) = (b.sym("k2mm_i3"), b.sym("k2mm_j3"), b.sym("k2mm_k3"));
+    b.for_(i3, int(0), ne.clone(), int(1), |b| {
+        b.for_(j3, int(0), ne.clone(), int(1), |b| {
+            b.for_(k3, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i3) * ne.clone() + Expr::Sym(j3);
+                b.assign(
+                    d,
+                    off.clone(),
+                    load(d, off)
+                        + load(tmp, Expr::Sym(i3) * ne.clone() + Expr::Sym(k3))
+                            * load(c, Expr::Sym(k3) * ne.clone() + Expr::Sym(j3)),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn k2mm_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("k2mm_N"), n_of(p, 10, 50, 100))]
+}
+
+/// E = A@B ; F = C@D ; G = E@F
+pub fn k3mm() -> Program {
+    let mut b = ProgramBuilder::new("k3mm");
+    let n = b.dim_param("k3mm_N");
+    let ne = Expr::Sym(n);
+    let names = ["A", "B", "C", "D"];
+    let args: Vec<_> = names
+        .iter()
+        .map(|nm| b.array(nm, ne.clone() * ne.clone()))
+        .collect();
+    let e = b.transient("E", ne.clone() * ne.clone());
+    let f = b.transient("F", ne.clone() * ne.clone());
+    let g = b.array("G", ne.clone() * ne.clone());
+    for (idx, (dst, (x, y))) in [(e, (args[0], args[1])), (f, (args[2], args[3]))]
+        .into_iter()
+        .enumerate()
+    {
+        let (i, j, k) = (
+            b.sym(&format!("k3mm_i{idx}")),
+            b.sym(&format!("k3mm_j{idx}")),
+            b.sym(&format!("k3mm_k{idx}")),
+        );
+        let ne2 = ne.clone();
+        b.for_(i, int(0), ne2.clone(), int(1), |b| {
+            b.for_(j, int(0), ne2.clone(), int(1), |b| {
+                b.assign(dst, Expr::Sym(i) * ne2.clone() + Expr::Sym(j), Expr::real(0.0));
+            });
+        });
+        let (i2, j2) = (
+            b.sym(&format!("k3mm_ii{idx}")),
+            b.sym(&format!("k3mm_jj{idx}")),
+        );
+        b.for_(i2, int(0), ne2.clone(), int(1), |b| {
+            b.for_(j2, int(0), ne2.clone(), int(1), |b| {
+                b.for_(k, int(0), ne2.clone(), int(1), |b| {
+                    let off = Expr::Sym(i2) * ne2.clone() + Expr::Sym(j2);
+                    b.assign(
+                        dst,
+                        off.clone(),
+                        load(dst, off)
+                            + load(x, Expr::Sym(i2) * ne2.clone() + Expr::Sym(k))
+                                * load(y, Expr::Sym(k) * ne2.clone() + Expr::Sym(j2)),
+                    );
+                });
+            });
+        });
+    }
+    let (gi, gj, gk) = (b.sym("k3mm_gi"), b.sym("k3mm_gj"), b.sym("k3mm_gk"));
+    b.for_(gi, int(0), ne.clone(), int(1), |b| {
+        b.for_(gj, int(0), ne.clone(), int(1), |b| {
+            b.assign(g, Expr::Sym(gi) * ne.clone() + Expr::Sym(gj), Expr::real(0.0));
+        });
+    });
+    let (gi2, gj2) = (b.sym("k3mm_gi2"), b.sym("k3mm_gj2"));
+    b.for_(gi2, int(0), ne.clone(), int(1), |b| {
+        b.for_(gj2, int(0), ne.clone(), int(1), |b| {
+            b.for_(gk, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(gi2) * ne.clone() + Expr::Sym(gj2);
+                b.assign(
+                    g,
+                    off.clone(),
+                    load(g, off)
+                        + load(e, Expr::Sym(gi2) * ne.clone() + Expr::Sym(gk))
+                            * load(f, Expr::Sym(gk) * ne.clone() + Expr::Sym(gj2)),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn k3mm_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("k3mm_N"), n_of(p, 10, 40, 80))]
+}
+
+/// y = Aᵀ(Ax)
+pub fn atax() -> Program {
+    let mut b = ProgramBuilder::new("atax");
+    let n = b.dim_param("atax_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let x = b.array("x", ne.clone());
+    let y = b.array("y", ne.clone());
+    let tmp = b.transient("tmp", ne.clone());
+    let (i0, i1, j1, i2, j2) = (
+        b.sym("atax_i0"),
+        b.sym("atax_i1"),
+        b.sym("atax_j1"),
+        b.sym("atax_i2"),
+        b.sym("atax_j2"),
+    );
+    b.for_(i0, int(0), ne.clone(), int(1), |b| {
+        b.assign(y, Expr::Sym(i0), Expr::real(0.0));
+        b.assign(tmp, Expr::Sym(i0), Expr::real(0.0));
+    });
+    b.for_(i1, int(0), ne.clone(), int(1), |b| {
+        b.for_(j1, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                tmp,
+                Expr::Sym(i1),
+                load(tmp, Expr::Sym(i1))
+                    + load(a, Expr::Sym(i1) * ne.clone() + Expr::Sym(j1)) * load(x, Expr::Sym(j1)),
+            );
+        });
+    });
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                y,
+                Expr::Sym(j2),
+                load(y, Expr::Sym(j2))
+                    + load(a, Expr::Sym(i2) * ne.clone() + Expr::Sym(j2)) * load(tmp, Expr::Sym(i2)),
+            );
+        });
+    });
+    b.finish()
+}
+
+pub fn atax_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("atax_N"), n_of(p, 16, 250, 500))]
+}
+
+/// s = Aᵀr ; q = Ap
+pub fn bicg() -> Program {
+    let mut b = ProgramBuilder::new("bicg");
+    let n = b.dim_param("bicg_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let r = b.array("r", ne.clone());
+    let pp = b.array("p", ne.clone());
+    let s = b.array("s", ne.clone());
+    let q = b.array("q", ne.clone());
+    let (i0, i1, j1, i2, j2) = (
+        b.sym("bicg_i0"),
+        b.sym("bicg_i1"),
+        b.sym("bicg_j1"),
+        b.sym("bicg_i2"),
+        b.sym("bicg_j2"),
+    );
+    b.for_(i0, int(0), ne.clone(), int(1), |b| {
+        b.assign(s, Expr::Sym(i0), Expr::real(0.0));
+        b.assign(q, Expr::Sym(i0), Expr::real(0.0));
+    });
+    b.for_(i1, int(0), ne.clone(), int(1), |b| {
+        b.for_(j1, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                s,
+                Expr::Sym(j1),
+                load(s, Expr::Sym(j1))
+                    + load(r, Expr::Sym(i1)) * load(a, Expr::Sym(i1) * ne.clone() + Expr::Sym(j1)),
+            );
+        });
+    });
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                q,
+                Expr::Sym(i2),
+                load(q, Expr::Sym(i2))
+                    + load(a, Expr::Sym(i2) * ne.clone() + Expr::Sym(j2)) * load(pp, Expr::Sym(j2)),
+            );
+        });
+    });
+    b.finish()
+}
+
+pub fn bicg_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("bicg_N"), n_of(p, 16, 250, 500))]
+}
+
+/// x1 += A·y1 ; x2 += Aᵀ·y2
+pub fn mvt() -> Program {
+    let mut b = ProgramBuilder::new("mvt");
+    let n = b.dim_param("mvt_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let x1 = b.array("x1", ne.clone());
+    let x2 = b.array("x2", ne.clone());
+    let y1 = b.array("y1", ne.clone());
+    let y2 = b.array("y2", ne.clone());
+    let (i1, j1, i2, j2) = (
+        b.sym("mvt_i1"),
+        b.sym("mvt_j1"),
+        b.sym("mvt_i2"),
+        b.sym("mvt_j2"),
+    );
+    b.for_(i1, int(0), ne.clone(), int(1), |b| {
+        b.for_(j1, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                x1,
+                Expr::Sym(i1),
+                load(x1, Expr::Sym(i1))
+                    + load(a, Expr::Sym(i1) * ne.clone() + Expr::Sym(j1)) * load(y1, Expr::Sym(j1)),
+            );
+        });
+    });
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                x2,
+                Expr::Sym(i2),
+                load(x2, Expr::Sym(i2))
+                    + load(a, Expr::Sym(j2) * ne.clone() + Expr::Sym(i2)) * load(y2, Expr::Sym(j2)),
+            );
+        });
+    });
+    b.finish()
+}
+
+pub fn mvt_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("mvt_N"), n_of(p, 16, 250, 500))]
+}
+
+/// A += u1·v1ᵀ + u2·v2ᵀ ; x += β·Aᵀ·y ; x += z ; w += α·A·x
+pub fn gemver() -> Program {
+    let mut b = ProgramBuilder::new("gemver");
+    let n = b.dim_param("gemver_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let (u1, v1, u2, v2) = (
+        b.array("u1", ne.clone()),
+        b.array("v1", ne.clone()),
+        b.array("u2", ne.clone()),
+        b.array("v2", ne.clone()),
+    );
+    let (x, y, z, w) = (
+        b.array("x", ne.clone()),
+        b.array("y", ne.clone()),
+        b.array("z", ne.clone()),
+        b.array("w", ne.clone()),
+    );
+    let (i1, j1) = (b.sym("gemver_i1"), b.sym("gemver_j1"));
+    b.for_(i1, int(0), ne.clone(), int(1), |b| {
+        b.for_(j1, int(0), ne.clone(), int(1), |b| {
+            let off = Expr::Sym(i1) * ne.clone() + Expr::Sym(j1);
+            b.assign(
+                a,
+                off.clone(),
+                load(a, off)
+                    + load(u1, Expr::Sym(i1)) * load(v1, Expr::Sym(j1))
+                    + load(u2, Expr::Sym(i1)) * load(v2, Expr::Sym(j1)),
+            );
+        });
+    });
+    let (i2, j2) = (b.sym("gemver_i2"), b.sym("gemver_j2"));
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                x,
+                Expr::Sym(i2),
+                load(x, Expr::Sym(i2))
+                    + Expr::real(1.2)
+                        * load(a, Expr::Sym(j2) * ne.clone() + Expr::Sym(i2))
+                        * load(y, Expr::Sym(j2)),
+            );
+        });
+    });
+    let i3 = b.sym("gemver_i3");
+    b.for_(i3, int(0), ne.clone(), int(1), |b| {
+        b.assign(x, Expr::Sym(i3), load(x, Expr::Sym(i3)) + load(z, Expr::Sym(i3)));
+    });
+    let (i4, j4) = (b.sym("gemver_i4"), b.sym("gemver_j4"));
+    b.for_(i4, int(0), ne.clone(), int(1), |b| {
+        b.for_(j4, int(0), ne.clone(), int(1), |b| {
+            b.assign(
+                w,
+                Expr::Sym(i4),
+                load(w, Expr::Sym(i4))
+                    + Expr::real(1.5)
+                        * load(a, Expr::Sym(i4) * ne.clone() + Expr::Sym(j4))
+                        * load(x, Expr::Sym(j4)),
+            );
+        });
+    });
+    b.finish()
+}
+
+pub fn gemver_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("gemver_N"), n_of(p, 16, 200, 400))]
+}
+
+/// y = α·A·x + β·B·x
+pub fn gesummv() -> Program {
+    let mut b = ProgramBuilder::new("gesummv");
+    let n = b.dim_param("gesummv_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let bb = b.array("B", ne.clone() * ne.clone());
+    let x = b.array("x", ne.clone());
+    let y = b.array("y", ne.clone());
+    let tmp = b.transient("tmp", ne.clone());
+    let (i0, i, j) = (b.sym("gesummv_i0"), b.sym("gesummv_i"), b.sym("gesummv_j"));
+    b.for_(i0, int(0), ne.clone(), int(1), |b| {
+        b.assign(tmp, Expr::Sym(i0), Expr::real(0.0));
+        b.assign(y, Expr::Sym(i0), Expr::real(0.0));
+    });
+    b.for_(i, int(0), ne.clone(), int(1), |b| {
+        b.for_(j, int(0), ne.clone(), int(1), |b| {
+            let off = Expr::Sym(i) * ne.clone() + Expr::Sym(j);
+            b.assign(
+                tmp,
+                Expr::Sym(i),
+                load(tmp, Expr::Sym(i)) + load(a, off.clone()) * load(x, Expr::Sym(j)),
+            );
+            b.assign(
+                y,
+                Expr::Sym(i),
+                load(y, Expr::Sym(i)) + load(bb, off) * load(x, Expr::Sym(j)),
+            );
+        });
+    });
+    let i2 = b.sym("gesummv_i2");
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.assign(
+            y,
+            Expr::Sym(i2),
+            Expr::real(1.5) * load(tmp, Expr::Sym(i2)) + Expr::real(1.2) * load(y, Expr::Sym(i2)),
+        );
+    });
+    b.finish()
+}
+
+pub fn gesummv_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("gesummv_N"), n_of(p, 16, 250, 500))]
+}
+
+/// C = α·A·Aᵀ + β·C (lower triangle)
+pub fn syrk() -> Program {
+    let mut b = ProgramBuilder::new("syrk");
+    let n = b.dim_param("syrk_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let c = b.array("C", ne.clone() * ne.clone());
+    let (i, j) = (b.sym("syrk_i"), b.sym("syrk_j"));
+    b.for_(i, int(0), ne.clone(), int(1), |b| {
+        b.for_(j, int(0), Expr::Sym(i) + int(1), int(1), |b| {
+            let off = Expr::Sym(i) * ne.clone() + Expr::Sym(j);
+            b.assign(c, off.clone(), Expr::real(1.2) * load(c, off));
+        });
+    });
+    let (i2, j2, k2) = (b.sym("syrk_i2"), b.sym("syrk_j2"), b.sym("syrk_k2"));
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), Expr::Sym(i2) + int(1), int(1), |b| {
+            b.for_(k2, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i2) * ne.clone() + Expr::Sym(j2);
+                b.assign(
+                    c,
+                    off.clone(),
+                    load(c, off)
+                        + Expr::real(1.5)
+                            * load(a, Expr::Sym(i2) * ne.clone() + Expr::Sym(k2))
+                            * load(a, Expr::Sym(j2) * ne.clone() + Expr::Sym(k2)),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn syrk_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("syrk_N"), n_of(p, 12, 70, 140))]
+}
+
+/// C = α·(A·Bᵀ + B·Aᵀ) + β·C (lower triangle)
+pub fn syr2k() -> Program {
+    let mut b = ProgramBuilder::new("syr2k");
+    let n = b.dim_param("syr2k_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let bb = b.array("B", ne.clone() * ne.clone());
+    let c = b.array("C", ne.clone() * ne.clone());
+    let (i, j) = (b.sym("syr2k_i"), b.sym("syr2k_j"));
+    b.for_(i, int(0), ne.clone(), int(1), |b| {
+        b.for_(j, int(0), Expr::Sym(i) + int(1), int(1), |b| {
+            let off = Expr::Sym(i) * ne.clone() + Expr::Sym(j);
+            b.assign(c, off.clone(), Expr::real(1.2) * load(c, off));
+        });
+    });
+    let (i2, j2, k2) = (b.sym("syr2k_i2"), b.sym("syr2k_j2"), b.sym("syr2k_k2"));
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), Expr::Sym(i2) + int(1), int(1), |b| {
+            b.for_(k2, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i2) * ne.clone() + Expr::Sym(j2);
+                b.assign(
+                    c,
+                    off.clone(),
+                    load(c, off)
+                        + Expr::real(1.5)
+                            * (load(a, Expr::Sym(i2) * ne.clone() + Expr::Sym(k2))
+                                * load(bb, Expr::Sym(j2) * ne.clone() + Expr::Sym(k2))
+                                + load(bb, Expr::Sym(i2) * ne.clone() + Expr::Sym(k2))
+                                    * load(a, Expr::Sym(j2) * ne.clone() + Expr::Sym(k2))),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn syr2k_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("syr2k_N"), n_of(p, 12, 60, 120))]
+}
+
+/// B = α·Aᵀ·B, A unit lower triangular — the inner k loop *starts at i+1*:
+/// the §4.1 stride-discontinuity pattern.
+pub fn trmm() -> Program {
+    let mut b = ProgramBuilder::new("trmm");
+    let n = b.dim_param("trmm_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let bb = b.array("B", ne.clone() * ne.clone());
+    let (i, j, k) = (b.sym("trmm_i"), b.sym("trmm_j"), b.sym("trmm_k"));
+    b.for_(i, int(0), ne.clone(), int(1), |b| {
+        b.for_(j, int(0), ne.clone(), int(1), |b| {
+            b.for_(k, Expr::Sym(i) + int(1), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i) * ne.clone() + Expr::Sym(j);
+                b.assign(
+                    bb,
+                    off.clone(),
+                    load(bb, off)
+                        + load(a, Expr::Sym(k) * ne.clone() + Expr::Sym(i))
+                            * load(bb, Expr::Sym(k) * ne.clone() + Expr::Sym(j)),
+                );
+            });
+        });
+    });
+    let (i2, j2) = (b.sym("trmm_i2"), b.sym("trmm_j2"));
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), ne.clone(), int(1), |b| {
+            let off = Expr::Sym(i2) * ne.clone() + Expr::Sym(j2);
+            b.assign(bb, off.clone(), Expr::real(1.5) * load(bb, off));
+        });
+    });
+    b.finish()
+}
+
+pub fn trmm_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("trmm_N"), n_of(p, 12, 70, 140))]
+}
+
+/// sum[r,q,p] = Σ_s A[r,q,s]·C4[s,p]; A[r,q,:] = sum
+pub fn doitgen() -> Program {
+    let mut b = ProgramBuilder::new("doitgen");
+    let nr = b.dim_param("doitgen_R");
+    let np = b.dim_param("doitgen_P");
+    let (re, pe) = (Expr::Sym(nr), Expr::Sym(np));
+    let a = b.array("A", re.clone() * re.clone() * pe.clone());
+    let c4 = b.array("C4", pe.clone() * pe.clone());
+    let sum = b.transient("sum", pe.clone());
+    let (r, q, p0, p, s, p2) = (
+        b.sym("doitgen_r"),
+        b.sym("doitgen_q"),
+        b.sym("doitgen_p0"),
+        b.sym("doitgen_p"),
+        b.sym("doitgen_s"),
+        b.sym("doitgen_p2"),
+    );
+    b.for_(r, int(0), re.clone(), int(1), |b| {
+        b.for_(q, int(0), re.clone(), int(1), |b| {
+            b.for_(p0, int(0), pe.clone(), int(1), |b| {
+                b.assign(sum, Expr::Sym(p0), Expr::real(0.0));
+            });
+            b.for_(p, int(0), pe.clone(), int(1), |b| {
+                b.for_(s, int(0), pe.clone(), int(1), |b| {
+                    let aoff =
+                        (Expr::Sym(r) * re.clone() + Expr::Sym(q)) * pe.clone() + Expr::Sym(s);
+                    b.assign(
+                        sum,
+                        Expr::Sym(p),
+                        load(sum, Expr::Sym(p))
+                            + load(a, aoff) * load(c4, Expr::Sym(s) * pe.clone() + Expr::Sym(p)),
+                    );
+                });
+            });
+            b.for_(p2, int(0), pe.clone(), int(1), |b| {
+                let aoff = (Expr::Sym(r) * re.clone() + Expr::Sym(q)) * pe.clone() + Expr::Sym(p2);
+                b.assign(a, aoff, load(sum, Expr::Sym(p2)));
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn doitgen_preset(p: Preset) -> Vec<(Sym, i64)> {
+    let (r, pp) = match p {
+        Preset::Tiny => (6, 8),
+        Preset::Small => (30, 40),
+        Preset::Medium => (60, 80),
+    };
+    vec![(Sym::new("doitgen_R"), r), (Sym::new("doitgen_P"), pp)]
+}

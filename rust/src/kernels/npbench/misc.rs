@@ -1,0 +1,187 @@
+//! Remaining Fig. 10 corpus kernels: softmax (the 3.62× icc example),
+//! floyd_warshall, durbin-style recurrence, and cholesky-like updates.
+
+use crate::ir::{Program, ProgramBuilder};
+use crate::symbolic::{fdiv, func, int, load, max, Expr, FuncKind, Sym};
+
+use crate::kernels::Preset;
+
+fn n_of(p: Preset, tiny: i64, small: i64, medium: i64) -> i64 {
+    match p {
+        Preset::Tiny => tiny,
+        Preset::Small => small,
+        Preset::Medium => medium,
+    }
+}
+
+/// softmax over rows of an `N×M` matrix: rowmax → exp/sum → normalize.
+pub fn softmax() -> Program {
+    let mut b = ProgramBuilder::new("softmax");
+    let n = b.dim_param("sm_N");
+    let m = b.dim_param("sm_M");
+    let (ne, me) = (Expr::Sym(n), Expr::Sym(m));
+    let x = b.array("x", ne.clone() * me.clone());
+    let out = b.array("out", ne.clone() * me.clone());
+    let rowmax = b.transient("rowmax", ne.clone());
+    let rowsum = b.transient("rowsum", ne.clone());
+    let (i0, i1, j1, i2, j2, i3, j3) = (
+        b.sym("sm_i0"),
+        b.sym("sm_i1"),
+        b.sym("sm_j1"),
+        b.sym("sm_i2"),
+        b.sym("sm_j2"),
+        b.sym("sm_i3"),
+        b.sym("sm_j3"),
+    );
+    b.for_(i0, int(0), ne.clone(), int(1), |b| {
+        b.assign(rowmax, Expr::Sym(i0), Expr::real(-1e30));
+        b.assign(rowsum, Expr::Sym(i0), Expr::real(0.0));
+    });
+    b.for_(i1, int(0), ne.clone(), int(1), |b| {
+        b.for_(j1, int(0), me.clone(), int(1), |b| {
+            b.assign(
+                rowmax,
+                Expr::Sym(i1),
+                max(
+                    load(rowmax, Expr::Sym(i1)),
+                    load(x, Expr::Sym(i1) * me.clone() + Expr::Sym(j1)),
+                ),
+            );
+        });
+    });
+    b.for_(i2, int(0), ne.clone(), int(1), |b| {
+        b.for_(j2, int(0), me.clone(), int(1), |b| {
+            let e = func(
+                FuncKind::Exp,
+                vec![load(x, Expr::Sym(i2) * me.clone() + Expr::Sym(j2)) - load(rowmax, Expr::Sym(i2))],
+            );
+            b.assign(out, Expr::Sym(i2) * me.clone() + Expr::Sym(j2), e.clone());
+            b.assign(rowsum, Expr::Sym(i2), load(rowsum, Expr::Sym(i2)) + e);
+        });
+    });
+    b.for_(i3, int(0), ne.clone(), int(1), |b| {
+        b.for_(j3, int(0), me.clone(), int(1), |b| {
+            let off = Expr::Sym(i3) * me.clone() + Expr::Sym(j3);
+            b.assign(out, off.clone(), fdiv(load(out, off), load(rowsum, Expr::Sym(i3))));
+        });
+    });
+    b.finish()
+}
+
+pub fn softmax_preset(p: Preset) -> Vec<(Sym, i64)> {
+    let (n, m) = match p {
+        Preset::Tiny => (8, 10),
+        Preset::Small => (128, 128),
+        Preset::Medium => (256, 256),
+    };
+    vec![(Sym::new("sm_N"), n), (Sym::new("sm_M"), m)]
+}
+
+/// Rust oracle for softmax.
+pub fn softmax_reference(n: usize, m: usize, x: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; n * m];
+    for i in 0..n {
+        let mut mx = -1e30f64;
+        for j in 0..m {
+            mx = mx.max(x[i * m + j]);
+        }
+        let mut s = 0.0;
+        for j in 0..m {
+            out[i * m + j] = (x[i * m + j] - mx).exp();
+            s += out[i * m + j];
+        }
+        for j in 0..m {
+            out[i * m + j] /= s;
+        }
+    }
+    out
+}
+
+/// floyd_warshall all-pairs shortest paths (min updates).
+pub fn floyd_warshall() -> Program {
+    let mut b = ProgramBuilder::new("floyd_warshall");
+    let n = b.dim_param("fw_N");
+    let ne = Expr::Sym(n);
+    let d = b.array("D", ne.clone() * ne.clone());
+    let (k, i, j) = (b.sym("fw_k"), b.sym("fw_i"), b.sym("fw_j"));
+    b.for_(k, int(0), ne.clone(), int(1), |b| {
+        b.for_(i, int(0), ne.clone(), int(1), |b| {
+            b.for_(j, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i) * ne.clone() + Expr::Sym(j);
+                b.assign(
+                    d,
+                    off.clone(),
+                    crate::symbolic::min(
+                        load(d, off),
+                        load(d, Expr::Sym(i) * ne.clone() + Expr::Sym(k))
+                            + load(d, Expr::Sym(k) * ne.clone() + Expr::Sym(j)),
+                    ),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn floyd_warshall_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("fw_N"), n_of(p, 12, 80, 160))]
+}
+
+/// durbin-style first-order recurrence chain (Levinson-Durbin inner
+/// structure, simplified to the loop-carried shape that matters).
+pub fn durbin() -> Program {
+    let mut b = ProgramBuilder::new("durbin");
+    let n = b.dim_param("dur_N");
+    let ne = Expr::Sym(n);
+    let r = b.array("r", ne.clone());
+    let y = b.array("y", ne.clone());
+    let i = b.sym("dur_i");
+    b.assign(y, int(0), Expr::real(0.0) - load(r, int(0)));
+    b.for_(i, int(1), ne.clone(), int(1), |b| {
+        // y[i] = -(r[i] + 0.5·y[i-1]) / (1 + 0.1·y[i-1])  — RAW δ=1 chain.
+        let prev = load(y, Expr::Sym(i) - int(1));
+        b.assign(
+            y,
+            Expr::Sym(i),
+            fdiv(
+                Expr::real(0.0) - (load(r, Expr::Sym(i)) + Expr::real(0.5) * prev.clone()),
+                Expr::real(1.0) + Expr::real(0.1) * prev,
+            ),
+        );
+    });
+    b.finish()
+}
+
+pub fn durbin_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("dur_N"), n_of(p, 32, 4000, 16000))]
+}
+
+/// cholesky-like in-place column update (lower-triangular sweep with the
+/// triangular-bound prefetch pattern; guards keep it single-assignment).
+pub fn cholesky_update() -> Program {
+    let mut b = ProgramBuilder::new("cholesky_update");
+    let n = b.dim_param("chol_N");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let (i, j, k) = (b.sym("chol_i"), b.sym("chol_j"), b.sym("chol_k"));
+    // A[i,j] -= A[i,k]·A[j,k] for k < j ≤ i  (the O(N³) update sweep).
+    b.for_(i, int(0), ne.clone(), int(1), |b| {
+        b.for_(j, int(0), Expr::Sym(i) + int(1), int(1), |b| {
+            b.for_(k, int(0), Expr::Sym(j), int(1), |b| {
+                let off = Expr::Sym(i) * ne.clone() + Expr::Sym(j);
+                b.assign(
+                    a,
+                    off.clone(),
+                    load(a, off)
+                        - load(a, Expr::Sym(i) * ne.clone() + Expr::Sym(k))
+                            * load(a, Expr::Sym(j) * ne.clone() + Expr::Sym(k)),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn cholesky_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("chol_N"), n_of(p, 12, 70, 140))]
+}

@@ -1,0 +1,159 @@
+//! The 20-kernel NPBench corpus of Fig. 10.
+
+pub mod blas;
+pub mod misc;
+pub mod stencils;
+
+use super::{default_init, KernelEntry};
+
+/// Positive-weight initializer for floyd_warshall (distances) and
+/// diagonally-safe values for the recurrence kernels.
+fn positive_init(name: &str, i: usize) -> f64 {
+    default_init(name, i) + 1.0 // in [0.5, 1.5)
+}
+
+/// All 20 Fig. 10 kernels.
+pub fn corpus() -> Vec<KernelEntry> {
+    vec![
+        KernelEntry { name: "gemm", build: blas::gemm, preset: blas::gemm_preset, init: default_init },
+        KernelEntry { name: "2mm", build: blas::k2mm, preset: blas::k2mm_preset, init: default_init },
+        KernelEntry { name: "3mm", build: blas::k3mm, preset: blas::k3mm_preset, init: default_init },
+        KernelEntry { name: "atax", build: blas::atax, preset: blas::atax_preset, init: default_init },
+        KernelEntry { name: "bicg", build: blas::bicg, preset: blas::bicg_preset, init: default_init },
+        KernelEntry { name: "mvt", build: blas::mvt, preset: blas::mvt_preset, init: default_init },
+        KernelEntry { name: "gemver", build: blas::gemver, preset: blas::gemver_preset, init: default_init },
+        KernelEntry { name: "gesummv", build: blas::gesummv, preset: blas::gesummv_preset, init: default_init },
+        KernelEntry { name: "syrk", build: blas::syrk, preset: blas::syrk_preset, init: default_init },
+        KernelEntry { name: "syr2k", build: blas::syr2k, preset: blas::syr2k_preset, init: default_init },
+        KernelEntry { name: "trmm", build: blas::trmm, preset: blas::trmm_preset, init: default_init },
+        KernelEntry { name: "doitgen", build: blas::doitgen, preset: blas::doitgen_preset, init: default_init },
+        KernelEntry { name: "jacobi_1d", build: stencils::jacobi_1d, preset: stencils::jacobi_1d_preset, init: default_init },
+        KernelEntry { name: "jacobi_2d", build: stencils::jacobi_2d, preset: stencils::jacobi_2d_preset, init: default_init },
+        KernelEntry { name: "seidel_2d", build: stencils::seidel_2d, preset: stencils::seidel_2d_preset, init: default_init },
+        KernelEntry { name: "heat_3d", build: stencils::heat_3d, preset: stencils::heat_3d_preset, init: default_init },
+        KernelEntry { name: "fdtd_2d", build: stencils::fdtd_2d, preset: stencils::fdtd_2d_preset, init: default_init },
+        KernelEntry { name: "conv2d", build: stencils::conv2d, preset: stencils::conv2d_preset, init: default_init },
+        KernelEntry { name: "softmax", build: misc::softmax, preset: misc::softmax_preset, init: default_init },
+        KernelEntry { name: "floyd_warshall", build: misc::floyd_warshall, preset: misc::floyd_warshall_preset, init: positive_init },
+    ]
+}
+
+/// Extension kernels beyond the Fig. 10 set (ablations / extra coverage).
+pub fn extras() -> Vec<KernelEntry> {
+    vec![
+        KernelEntry { name: "durbin", build: misc::durbin, preset: misc::durbin_preset, init: default_init },
+        KernelEntry { name: "cholesky_update", build: misc::cholesky_update, preset: misc::cholesky_preset, init: default_init },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Vm;
+    use crate::kernels::{gen_inputs, Preset};
+
+    /// Every corpus kernel validates, lowers, executes at Tiny size, and
+    /// produces identical results with pointer incrementation scheduled —
+    /// the Fig. 10 precondition.
+    #[test]
+    fn corpus_executes_and_ptr_inc_is_equivalent() {
+        for entry in corpus().into_iter().chain(extras()) {
+            let p = (entry.build)();
+            crate::ir::validate::validate(&p).unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+            let params = (entry.preset)(Preset::Tiny);
+            let inputs = gen_inputs(&p, &params, entry.init).unwrap();
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let vm = Vm::compile(&p).unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+            let base = vm
+                .run(&params, &refs, 1)
+                .unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+
+            let mut p2 = (entry.build)();
+            crate::schedules::schedule_all_ptr_inc(&mut p2);
+            let inputs2 = gen_inputs(&p2, &params, entry.init).unwrap();
+            let refs2: Vec<_> = inputs2.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let vm2 = Vm::compile(&p2).unwrap();
+            let opt = vm2.run(&params, &refs2, 1).unwrap();
+            for (i, (a, b)) in base.arrays.iter().zip(&opt.arrays).enumerate() {
+                assert_eq!(a, b, "{} container {} mismatch under ptr-inc", entry.name, i);
+            }
+        }
+    }
+
+    /// gemm numeric spot-check against a plain Rust implementation.
+    #[test]
+    fn gemm_matches_reference() {
+        let entry = corpus().into_iter().find(|k| k.name == "gemm").unwrap();
+        let p = (entry.build)();
+        let params = (entry.preset)(Preset::Tiny);
+        let n = 12usize;
+        let inputs = gen_inputs(&p, &params, entry.init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let vm = Vm::compile(&p).unwrap();
+        let out = vm.run(&params, &refs, 1).unwrap();
+        let got = out.by_name("C").unwrap();
+        let (a, bb, c0) = (&inputs[0].1, &inputs[1].1, &inputs[2].1);
+        let mut expect = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 1.2 * c0[i * n + j];
+                for k in 0..n {
+                    acc += 1.5 * a[i * n + k] * bb[k * n + j];
+                }
+                expect[i * n + j] = acc;
+            }
+        }
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-9, "{g} vs {e}");
+        }
+    }
+
+    /// softmax numeric spot-check (rows sum to 1).
+    #[test]
+    fn softmax_matches_reference() {
+        let entry = corpus().into_iter().find(|k| k.name == "softmax").unwrap();
+        let p = (entry.build)();
+        let params = (entry.preset)(Preset::Tiny);
+        let inputs = gen_inputs(&p, &params, entry.init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let vm = Vm::compile(&p).unwrap();
+        let out = vm.run(&params, &refs, 1).unwrap();
+        let got = out.by_name("out").unwrap();
+        let expect = super::misc::softmax_reference(8, 10, &inputs[0].1);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-12);
+        }
+        for i in 0..8 {
+            let s: f64 = got[i * 10..(i + 1) * 10].iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    /// jacobi_1d matches a hand-rolled reference (the Fig. 10 headline).
+    #[test]
+    fn jacobi_1d_matches_reference() {
+        let entry = corpus().into_iter().find(|k| k.name == "jacobi_1d").unwrap();
+        let p = (entry.build)();
+        let params = (entry.preset)(Preset::Tiny);
+        let inputs = gen_inputs(&p, &params, entry.init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let vm = Vm::compile(&p).unwrap();
+        let out = vm.run(&params, &refs, 1).unwrap();
+        let (n, t) = (30usize, 4usize);
+        let mut a = inputs[0].1.clone();
+        let mut bvec = inputs[1].1.clone();
+        for _ in 0..t {
+            for i in 1..n - 1 {
+                bvec[i] = (a[i - 1] + a[i] + a[i + 1]) / 3.0;
+            }
+            for i in 1..n - 1 {
+                a[i] = (bvec[i - 1] + bvec[i] + bvec[i + 1]) / 3.0;
+            }
+        }
+        for (g, e) in out.by_name("A").unwrap().iter().zip(&a) {
+            // Canonicalized sums evaluate in a different association order
+            // than the source-order reference: compare with tolerance.
+            assert!((g - e).abs() < 1e-12, "{g} vs {e}");
+        }
+    }
+}

@@ -1,0 +1,341 @@
+//! NPBench stencil kernels (Fig. 10 corpus).
+
+use crate::ir::{Program, ProgramBuilder};
+use crate::symbolic::{int, load, Expr, Sym};
+
+use crate::kernels::Preset;
+
+fn n_of(p: Preset, tiny: i64, small: i64, medium: i64) -> i64 {
+    match p {
+        Preset::Tiny => tiny,
+        Preset::Small => small,
+        Preset::Medium => medium,
+    }
+}
+
+/// jacobi_1d: TSTEPS of A→B→A three-point averaging (the paper's star
+/// Fig. 10 example: 1.76× with clang under pointer incrementation).
+pub fn jacobi_1d() -> Program {
+    let mut b = ProgramBuilder::new("jacobi_1d");
+    let n = b.dim_param("j1d_N");
+    let ts = b.param_positive("j1d_T");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone());
+    let bb = b.array("B", ne.clone());
+    let t = b.sym("j1d_t");
+    let (i1, i2) = (b.sym("j1d_i1"), b.sym("j1d_i2"));
+    let third = Expr::real(1.0 / 3.0);
+    b.for_(t, int(0), Expr::Sym(ts), int(1), |b| {
+        b.for_(i1, int(1), ne.clone() - int(1), int(1), |b| {
+            b.assign(
+                bb,
+                Expr::Sym(i1),
+                third.clone()
+                    * (load(a, Expr::Sym(i1) - int(1))
+                        + load(a, Expr::Sym(i1))
+                        + load(a, Expr::Sym(i1) + int(1))),
+            );
+        });
+        b.for_(i2, int(1), ne.clone() - int(1), int(1), |b| {
+            b.assign(
+                a,
+                Expr::Sym(i2),
+                third.clone()
+                    * (load(bb, Expr::Sym(i2) - int(1))
+                        + load(bb, Expr::Sym(i2))
+                        + load(bb, Expr::Sym(i2) + int(1))),
+            );
+        });
+    });
+    b.finish()
+}
+
+pub fn jacobi_1d_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![
+        (Sym::new("j1d_N"), n_of(p, 30, 4000, 16000)),
+        (Sym::new("j1d_T"), n_of(p, 4, 50, 100)),
+    ]
+}
+
+/// jacobi_2d: five-point averaging, two buffers.
+pub fn jacobi_2d() -> Program {
+    let mut b = ProgramBuilder::new("jacobi_2d");
+    let n = b.dim_param("j2d_N");
+    let ts = b.param_positive("j2d_T");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let bb = b.array("B", ne.clone() * ne.clone());
+    let t = b.sym("j2d_t");
+    let (i1, j1, i2, j2) = (
+        b.sym("j2d_i1"),
+        b.sym("j2d_j1"),
+        b.sym("j2d_i2"),
+        b.sym("j2d_j2"),
+    );
+    let fifth = Expr::real(0.2);
+    b.for_(t, int(0), Expr::Sym(ts), int(1), |b| {
+        b.for_(i1, int(1), ne.clone() - int(1), int(1), |b| {
+            b.for_(j1, int(1), ne.clone() - int(1), int(1), |b| {
+                let at = |di: i64, dj: i64| {
+                    (Expr::Sym(i1) + int(di)) * ne.clone() + Expr::Sym(j1) + int(dj)
+                };
+                b.assign(
+                    bb,
+                    at(0, 0),
+                    fifth.clone()
+                        * (load(a, at(0, 0))
+                            + load(a, at(0, -1))
+                            + load(a, at(0, 1))
+                            + load(a, at(1, 0))
+                            + load(a, at(-1, 0))),
+                );
+            });
+        });
+        b.for_(i2, int(1), ne.clone() - int(1), int(1), |b| {
+            b.for_(j2, int(1), ne.clone() - int(1), int(1), |b| {
+                let at = |di: i64, dj: i64| {
+                    (Expr::Sym(i2) + int(di)) * ne.clone() + Expr::Sym(j2) + int(dj)
+                };
+                b.assign(
+                    a,
+                    at(0, 0),
+                    fifth.clone()
+                        * (load(bb, at(0, 0))
+                            + load(bb, at(0, -1))
+                            + load(bb, at(0, 1))
+                            + load(bb, at(1, 0))
+                            + load(bb, at(-1, 0))),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn jacobi_2d_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![
+        (Sym::new("j2d_N"), n_of(p, 12, 90, 180)),
+        (Sym::new("j2d_T"), n_of(p, 3, 20, 40)),
+    ]
+}
+
+/// seidel_2d: in-place Gauss-Seidel — genuinely sequential (RAW in both
+/// dimensions); exercises the "no parallelization possible" path.
+pub fn seidel_2d() -> Program {
+    let mut b = ProgramBuilder::new("seidel_2d");
+    let n = b.dim_param("s2d_N");
+    let ts = b.param_positive("s2d_T");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone());
+    let t = b.sym("s2d_t");
+    let (i, j) = (b.sym("s2d_i"), b.sym("s2d_j"));
+    let ninth = Expr::real(1.0 / 9.0);
+    b.for_(t, int(0), Expr::Sym(ts), int(1), |b| {
+        b.for_(i, int(1), ne.clone() - int(1), int(1), |b| {
+            b.for_(j, int(1), ne.clone() - int(1), int(1), |b| {
+                let at = |di: i64, dj: i64| {
+                    (Expr::Sym(i) + int(di)) * ne.clone() + Expr::Sym(j) + int(dj)
+                };
+                b.assign(
+                    a,
+                    at(0, 0),
+                    ninth.clone()
+                        * (load(a, at(-1, -1))
+                            + load(a, at(-1, 0))
+                            + load(a, at(-1, 1))
+                            + load(a, at(0, -1))
+                            + load(a, at(0, 0))
+                            + load(a, at(0, 1))
+                            + load(a, at(1, -1))
+                            + load(a, at(1, 0))
+                            + load(a, at(1, 1))),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn seidel_2d_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![
+        (Sym::new("s2d_N"), n_of(p, 12, 60, 120)),
+        (Sym::new("s2d_T"), n_of(p, 3, 10, 20)),
+    ]
+}
+
+/// heat_3d: 7-point 3-D stencil, two buffers.
+pub fn heat_3d() -> Program {
+    let mut b = ProgramBuilder::new("heat_3d");
+    let n = b.dim_param("h3d_N");
+    let ts = b.param_positive("h3d_T");
+    let ne = Expr::Sym(n);
+    let a = b.array("A", ne.clone() * ne.clone() * ne.clone());
+    let bb = b.array("B", ne.clone() * ne.clone() * ne.clone());
+    let t = b.sym("h3d_t");
+    let vars1 = (b.sym("h3d_i1"), b.sym("h3d_j1"), b.sym("h3d_k1"));
+    let vars2 = (b.sym("h3d_i2"), b.sym("h3d_j2"), b.sym("h3d_k2"));
+    let stencil = |src: crate::symbolic::ContainerId,
+                   iv: Expr,
+                   jv: Expr,
+                   kv: Expr,
+                   ne: Expr|
+     -> Expr {
+        let at = |di: i64, dj: i64, dk: i64| {
+            ((iv.clone() + int(di)) * ne.clone() + jv.clone() + int(dj)) * ne.clone()
+                + kv.clone()
+                + int(dk)
+        };
+        Expr::real(0.125)
+            * (load(src, at(1, 0, 0)) - Expr::real(2.0) * load(src, at(0, 0, 0))
+                + load(src, at(-1, 0, 0)))
+            + Expr::real(0.125)
+                * (load(src, at(0, 1, 0)) - Expr::real(2.0) * load(src, at(0, 0, 0))
+                    + load(src, at(0, -1, 0)))
+            + Expr::real(0.125)
+                * (load(src, at(0, 0, 1)) - Expr::real(2.0) * load(src, at(0, 0, 0))
+                    + load(src, at(0, 0, -1)))
+            + load(src, at(0, 0, 0))
+    };
+    b.for_(t, int(0), Expr::Sym(ts), int(1), |b| {
+        let (i1, j1, k1) = vars1;
+        b.for_(i1, int(1), ne.clone() - int(1), int(1), |b| {
+            b.for_(j1, int(1), ne.clone() - int(1), int(1), |b| {
+                b.for_(k1, int(1), ne.clone() - int(1), int(1), |b| {
+                    let off = (Expr::Sym(i1) * ne.clone() + Expr::Sym(j1)) * ne.clone()
+                        + Expr::Sym(k1);
+                    b.assign(
+                        bb,
+                        off,
+                        stencil(a, Expr::Sym(i1), Expr::Sym(j1), Expr::Sym(k1), ne.clone()),
+                    );
+                });
+            });
+        });
+        let (i2, j2, k2) = vars2;
+        b.for_(i2, int(1), ne.clone() - int(1), int(1), |b| {
+            b.for_(j2, int(1), ne.clone() - int(1), int(1), |b| {
+                b.for_(k2, int(1), ne.clone() - int(1), int(1), |b| {
+                    let off = (Expr::Sym(i2) * ne.clone() + Expr::Sym(j2)) * ne.clone()
+                        + Expr::Sym(k2);
+                    b.assign(
+                        a,
+                        off,
+                        stencil(bb, Expr::Sym(i2), Expr::Sym(j2), Expr::Sym(k2), ne.clone()),
+                    );
+                });
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn heat_3d_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![
+        (Sym::new("h3d_N"), n_of(p, 8, 25, 50)),
+        (Sym::new("h3d_T"), n_of(p, 3, 10, 20)),
+    ]
+}
+
+/// fdtd_2d: 2-D finite-difference time domain (ey/ex/hz updates).
+pub fn fdtd_2d() -> Program {
+    let mut b = ProgramBuilder::new("fdtd_2d");
+    let n = b.dim_param("fdtd_N");
+    let ts = b.param_positive("fdtd_T");
+    let ne = Expr::Sym(n);
+    let ex = b.array("ex", ne.clone() * ne.clone());
+    let ey = b.array("ey", ne.clone() * ne.clone());
+    let hz = b.array("hz", ne.clone() * ne.clone());
+    let fict = b.array("fict", Expr::Sym(ts));
+    let t = b.sym("fdtd_t");
+    let (j0, i1, j1, i2, j2, i3, j3) = (
+        b.sym("fdtd_j0"),
+        b.sym("fdtd_i1"),
+        b.sym("fdtd_j1"),
+        b.sym("fdtd_i2"),
+        b.sym("fdtd_j2"),
+        b.sym("fdtd_i3"),
+        b.sym("fdtd_j3"),
+    );
+    b.for_(t, int(0), Expr::Sym(ts), int(1), |b| {
+        b.for_(j0, int(0), ne.clone(), int(1), |b| {
+            b.assign(ey, Expr::Sym(j0), load(fict, Expr::Sym(t)));
+        });
+        b.for_(i1, int(1), ne.clone(), int(1), |b| {
+            b.for_(j1, int(0), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i1) * ne.clone() + Expr::Sym(j1);
+                b.assign(
+                    ey,
+                    off.clone(),
+                    load(ey, off.clone())
+                        - Expr::real(0.5)
+                            * (load(hz, off) - load(hz, (Expr::Sym(i1) - int(1)) * ne.clone() + Expr::Sym(j1))),
+                );
+            });
+        });
+        b.for_(i2, int(0), ne.clone(), int(1), |b| {
+            b.for_(j2, int(1), ne.clone(), int(1), |b| {
+                let off = Expr::Sym(i2) * ne.clone() + Expr::Sym(j2);
+                b.assign(
+                    ex,
+                    off.clone(),
+                    load(ex, off.clone())
+                        - Expr::real(0.5) * (load(hz, off.clone()) - load(hz, off - int(1))),
+                );
+            });
+        });
+        b.for_(i3, int(0), ne.clone() - int(1), int(1), |b| {
+            b.for_(j3, int(0), ne.clone() - int(1), int(1), |b| {
+                let off = Expr::Sym(i3) * ne.clone() + Expr::Sym(j3);
+                b.assign(
+                    hz,
+                    off.clone(),
+                    load(hz, off.clone())
+                        - Expr::real(0.7)
+                            * (load(ex, off.clone() + int(1)) - load(ex, off.clone())
+                                + load(ey, (Expr::Sym(i3) + int(1)) * ne.clone() + Expr::Sym(j3))
+                                - load(ey, off)),
+                );
+            });
+        });
+    });
+    b.finish()
+}
+
+pub fn fdtd_2d_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![
+        (Sym::new("fdtd_N"), n_of(p, 12, 80, 160)),
+        (Sym::new("fdtd_T"), n_of(p, 3, 20, 40)),
+    ]
+}
+
+/// conv2d: 3×3 valid convolution.
+pub fn conv2d() -> Program {
+    let mut b = ProgramBuilder::new("conv2d");
+    let n = b.dim_param("conv_N");
+    let ne = Expr::Sym(n);
+    let input = b.array("in", ne.clone() * ne.clone());
+    let w = b.array("w", int(9));
+    let out = b.array("out", (ne.clone() - int(2)) * (ne.clone() - int(2)));
+    let (i, j) = (b.sym("conv_i"), b.sym("conv_j"));
+    b.for_(i, int(0), ne.clone() - int(2), int(1), |b| {
+        b.for_(j, int(0), ne.clone() - int(2), int(1), |b| {
+            let mut acc = Expr::real(0.0);
+            for di in 0..3i64 {
+                for dj in 0..3i64 {
+                    acc = acc
+                        + load(w, int(di * 3 + dj))
+                            * load(
+                                input,
+                                (Expr::Sym(i) + int(di)) * ne.clone() + Expr::Sym(j) + int(dj),
+                            );
+                }
+            }
+            b.assign(out, Expr::Sym(i) * (ne.clone() - int(2)) + Expr::Sym(j), acc);
+        });
+    });
+    b.finish()
+}
+
+pub fn conv2d_preset(p: Preset) -> Vec<(Sym, i64)> {
+    vec![(Sym::new("conv_N"), n_of(p, 12, 130, 260))]
+}

@@ -1,0 +1,21 @@
+//! SILO-RS — Symbolic Inductive Loop Optimization.
+//!
+//! Reproduction of "Inductive Loop Analysis for Practical HPC Application
+//! Optimization" (CS.DC 2025). See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod analysis;
+pub mod baselines;
+pub mod bench;
+pub mod coordinator;
+pub mod dataflow;
+pub mod exec;
+pub mod ir;
+pub mod kernels;
+pub mod lowering;
+pub mod machine;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod symbolic;
+pub mod schedules;
+pub mod transforms;

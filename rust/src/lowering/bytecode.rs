@@ -1,0 +1,185 @@
+//! Register-machine bytecode the VM executes.
+//!
+//! Index arithmetic runs on an i64 register file, compute on an f64 file.
+//! Sequential loop nests compile to flat blocks with explicit jumps; loops
+//! with Parallel/Doacross schedules stay tree nodes (see
+//! [`super::compile`]) so the runtime can distribute their iterations.
+
+use crate::symbolic::{ContainerId, Sym};
+
+/// One bytecode instruction. `u16` register ids; containers are referenced
+/// by their dense id.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    // ---- integer (index) ops ----
+    IConst { dst: u16, val: i64 },
+    ICopy { dst: u16, src: u16 },
+    IAdd { dst: u16, a: u16, b: u16 },
+    IAddImm { dst: u16, a: u16, imm: i64 },
+    ISub { dst: u16, a: u16, b: u16 },
+    IMul { dst: u16, a: u16, b: u16 },
+    IMulImm { dst: u16, a: u16, imm: i64 },
+    IFloorDiv { dst: u16, a: u16, b: u16 },
+    IMod { dst: u16, a: u16, b: u16 },
+    IMin { dst: u16, a: u16, b: u16 },
+    IMax { dst: u16, a: u16, b: u16 },
+    IPow { dst: u16, a: u16, exp: u32 },
+    ILog2 { dst: u16, a: u16 },
+    IAbs { dst: u16, a: u16 },
+
+    // ---- float (compute) ops ----
+    FConst { dst: u16, bits: u64 },
+    FCopy { dst: u16, src: u16 },
+    FAdd { dst: u16, a: u16, b: u16 },
+    FSub { dst: u16, a: u16, b: u16 },
+    FMul { dst: u16, a: u16, b: u16 },
+    FDiv { dst: u16, a: u16, b: u16 },
+    FMin { dst: u16, a: u16, b: u16 },
+    FMax { dst: u16, a: u16, b: u16 },
+    FPow { dst: u16, a: u16, exp: u32 },
+    FExp { dst: u16, a: u16 },
+    FSqrt { dst: u16, a: u16 },
+    FAbs { dst: u16, a: u16 },
+    FLog2 { dst: u16, a: u16 },
+    FFloor { dst: u16, a: u16 },
+    /// dst = cond > 0.0 ? a : b
+    FSelect { dst: u16, cond: u16, a: u16, b: u16 },
+    FFromI { dst: u16, src: u16 },
+
+    // ---- memory ----
+    /// f[dst] = heap[cont][ i[idx] ]
+    Load { dst: u16, cont: u16, idx: u16 },
+    /// f[dst] = heap[cont][ i[idx] + off ]  — pointer-increment path.
+    LoadOff { dst: u16, cont: u16, idx: u16, off: i32 },
+    /// f[dst] = heap[cont][ i[a] + i[b] ] — cursor + hoisted symbolic
+    /// delta register (x86 base+index addressing; zero extra pressure).
+    LoadAt2 { dst: u16, cont: u16, a: u16, b: u16 },
+    /// heap[cont][ i[idx] ] = f[src]
+    Store { cont: u16, idx: u16, src: u16 },
+    StoreOff { cont: u16, idx: u16, off: i32, src: u16 },
+    /// f32 containers round through f32 on store.
+    StoreF32 { cont: u16, idx: u16, src: u16 },
+    StoreOffF32 { cont: u16, idx: u16, off: i32, src: u16 },
+    /// Software prefetch hint — a no-op for results; drives the cache model
+    /// through the trace hook.
+    Prefetch { cont: u16, idx: u16, write: bool },
+
+    // ---- control ----
+    Jump { target: u32 },
+    /// Loop back-edge test: continue when `(stride > 0 && var < end) ||
+    /// (stride < 0 && var > end)`; otherwise fall through to `exit`.
+    LoopCond { var: u16, end: u16, stride: u16, exit: u32 },
+    /// Skip the next `skip` instructions when f[cond] <= 0 (stmt guards).
+    GuardSkip { cond: u16, skip: u32 },
+    Halt,
+}
+
+/// A flat instruction block with its register budget.
+#[derive(Debug, Clone, Default)]
+pub struct CodeBlock {
+    pub ops: Vec<Op>,
+    pub n_int: u16,
+    pub n_float: u16,
+}
+
+/// How a tree-level loop is executed by the runtime.
+#[derive(Debug, Clone)]
+pub enum ExecSchedule {
+    Seq,
+    /// DOALL: iterations partitioned across worker threads.
+    Par,
+    /// DOACROSS pipeline: `waits` = (body element index, δ); iteration `t`
+    /// blocks before that element until iteration `t − δ` has released.
+    /// `release_after` = body element index after which iteration `t`
+    /// releases (None = end of body).
+    Doacross {
+        waits: Vec<(usize, i64)>,
+        release_after: Option<usize>,
+    },
+}
+
+/// Executable tree node.
+#[derive(Debug, Clone)]
+pub enum ExecNode {
+    /// Fully sequential subtree compiled to flat bytecode.
+    Code(CodeBlock),
+    /// A loop that is parallel/doacross or contains one.
+    Loop(Box<LoopExec>),
+}
+
+/// Tree-level loop.
+#[derive(Debug, Clone)]
+pub struct LoopExec {
+    pub loop_id: crate::ir::LoopId,
+    /// Int register holding the loop variable (global symbol register).
+    pub var_reg: u16,
+    /// Evaluates start/end/stride into `*_reg` (run at loop entry; stride
+    /// re-evaluated per iteration to support variable strides).
+    pub start: CodeBlock,
+    pub start_reg: u16,
+    pub end: CodeBlock,
+    pub end_reg: u16,
+    pub stride: CodeBlock,
+    pub stride_reg: u16,
+    pub schedule: ExecSchedule,
+    pub body: Vec<ExecNode>,
+    /// Pointer-increment maintenance: run after each iteration's body /
+    /// after the loop exits.
+    pub post_body: CodeBlock,
+    pub post_loop: CodeBlock,
+    /// Cursor initializations that §4.2.1 pins to the top of this loop's
+    /// body (parallel involved loops — thread-private cursors).
+    pub pre_body: CodeBlock,
+    /// Prefetch hints (§4.1) executed at the top of each iteration.
+    pub prefetch: CodeBlock,
+}
+
+/// Container metadata the executor needs.
+#[derive(Debug, Clone)]
+pub struct ContainerMeta {
+    pub id: ContainerId,
+    pub name: String,
+    pub size: crate::symbolic::Expr,
+    pub f32_storage: bool,
+    /// Thread-private (privatized registers, §3.2.1).
+    pub private: bool,
+}
+
+/// A fully lowered program.
+#[derive(Debug, Clone)]
+pub struct ExecProgram {
+    pub name: String,
+    pub params: Vec<Sym>,
+    pub containers: Vec<ContainerMeta>,
+    pub root: Vec<ExecNode>,
+    /// Global symbol → int register assignment (params and loop vars).
+    pub sym_regs: Vec<(Sym, u16)>,
+    pub n_int: u16,
+    pub n_float: u16,
+}
+
+impl ExecProgram {
+    pub fn sym_reg(&self, s: Sym) -> Option<u16> {
+        self.sym_regs.iter().find(|(x, _)| *x == s).map(|(_, r)| *r)
+    }
+
+    /// Total op count across all blocks (diagnostics / cost model).
+    pub fn op_count(&self) -> usize {
+        fn node_ops(n: &ExecNode) -> usize {
+            match n {
+                ExecNode::Code(c) => c.ops.len(),
+                ExecNode::Loop(l) => {
+                    l.start.ops.len()
+                        + l.end.ops.len()
+                        + l.stride.ops.len()
+                        + l.pre_body.ops.len()
+                        + l.prefetch.ops.len()
+                        + l.post_body.ops.len()
+                        + l.post_loop.ops.len()
+                        + l.body.iter().map(node_ops).sum::<usize>()
+                }
+            }
+        }
+        self.root.iter().map(node_ops).sum()
+    }
+}

@@ -1,0 +1,685 @@
+//! IR → bytecode lowering.
+//!
+//! Fully sequential subtrees flatten into single [`CodeBlock`]s (the VM hot
+//! path); loops that are Parallel/Doacross — or contain one — stay tree
+//! nodes so the runtime can distribute their iterations. Memory schedules
+//! are realized here, per the paper's §4 architecture: prefetch hints
+//! become [`Op::Prefetch`] at loop-body tops, pointer-increment plans
+//! become cursor registers with init/increment/reset code.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Loop, LoopId, LoopSchedule, Node, Program, Stmt};
+use crate::schedules::ptr_inc::{all_plans, PtrPlan};
+use crate::symbolic::{Expr, Sym};
+
+use super::bytecode::{
+    CodeBlock, ContainerMeta, ExecNode, ExecProgram, ExecSchedule, LoopExec, Op,
+};
+use super::expr_compile::{compile_float, compile_int, CursorBinding, CursorDelta, ExprCtx};
+
+/// Cache lines each software-prefetch hint covers (8 f64 elements per
+/// 64-byte line).
+const PREFETCH_LINES: usize = 4;
+
+/// Lower a program to its executable form.
+pub fn lower(p: &Program) -> Result<ExecProgram> {
+    crate::ir::validate::validate(p)?;
+
+    // 1. Global symbol registers: params first, then every loop variable.
+    let mut sym_regs: Vec<(Sym, u16)> = Vec::new();
+    for s in &p.params {
+        sym_regs.push((*s, sym_regs.len() as u16));
+    }
+    for l in p.loops() {
+        if !sym_regs.iter().any(|(s, _)| *s == l.var) {
+            sym_regs.push((l.var, sym_regs.len() as u16));
+        }
+    }
+
+    // 2. Pointer-increment plans → global cursor registers.
+    let plans = all_plans(p);
+    let cursor_base = sym_regs.len() as u16;
+    let mut cursor_regs: Vec<u16> = Vec::new();
+    for (i, _) in plans.iter().enumerate() {
+        cursor_regs.push(cursor_base + i as u16);
+    }
+    // Hoisted symbolic delta registers (shared across plans).
+    let delta_base = cursor_base + plans.len() as u16;
+    let mut delta_exprs: Vec<Expr> = Vec::new();
+    for plan in &plans {
+        for (_, d) in &plan.accesses {
+            if let crate::schedules::ptr_inc::AccessDelta::Sym(e) = d {
+                if !delta_exprs.contains(e) {
+                    delta_exprs.push(e.clone());
+                }
+            }
+        }
+    }
+    let scratch_int_base = delta_base + delta_exprs.len() as u16;
+
+    // Plan-derived lowering tables.
+    let mut lowering = Lowering {
+        program: p,
+        sym_regs: sym_regs.clone(),
+        scratch_int_base,
+        plans: &plans,
+        cursor_regs: &cursor_regs,
+        init_before: HashMap::new(),
+        init_inside: HashMap::new(),
+        incs: HashMap::new(),
+        resets: HashMap::new(),
+        prefetches: HashMap::new(),
+        delta_base,
+        delta_exprs: delta_exprs.clone(),
+        max_int: scratch_int_base,
+        max_float: 0,
+    };
+    for (idx, plan) in plans.iter().enumerate() {
+        match plan.init_inside {
+            Some(lid) => lowering.init_inside.entry(lid).or_default().push(idx),
+            None => lowering
+                .init_before
+                .entry(plan.outermost)
+                .or_default()
+                .push(idx),
+        }
+        for d in &plan.deltas {
+            lowering
+                .incs
+                .entry(d.loop_id)
+                .or_default()
+                .push((cursor_regs[idx], d.inc.clone()));
+            if let Some(r) = &d.reset {
+                lowering
+                    .resets
+                    .entry(d.loop_id)
+                    .or_default()
+                    .push((cursor_regs[idx], r.clone()));
+            }
+        }
+    }
+    for h in &p.schedules.prefetches {
+        lowering
+            .prefetches
+            .entry(h.at_loop)
+            .or_default()
+            .push(h.clone());
+    }
+
+    // 3. Build the tree (prefixed by the delta-register prelude).
+    let mut root = Vec::new();
+    if !delta_exprs.is_empty() {
+        root.push(ExecNode::Code(lowering.compile_delta_prelude()?));
+    }
+    root.extend(lowering.lower_sequence(&p.body)?);
+
+    // 4. Container metadata.
+    let containers: Vec<ContainerMeta> = p
+        .containers
+        .iter()
+        .map(|c| ContainerMeta {
+            id: c.id,
+            name: c.name.clone(),
+            size: c.size.clone(),
+            f32_storage: c.dtype == crate::ir::DType::F32,
+            private: c.kind == crate::ir::ContainerKind::Register,
+        })
+        .collect();
+
+    Ok(ExecProgram {
+        name: p.name.clone(),
+        params: p.params.clone(),
+        containers,
+        root,
+        sym_regs,
+        n_int: lowering.max_int,
+        n_float: lowering.max_float.max(1),
+    })
+}
+
+struct Lowering<'a> {
+    program: &'a Program,
+    sym_regs: Vec<(Sym, u16)>,
+    scratch_int_base: u16,
+    plans: &'a [PtrPlan],
+    cursor_regs: &'a [u16],
+    /// plan indices whose cursor init is emitted before loop L.
+    init_before: HashMap<LoopId, Vec<usize>>,
+    /// plan indices whose cursor init runs at the top of L's body.
+    init_inside: HashMap<LoopId, Vec<usize>>,
+    /// per-loop cursor increments (after each iteration).
+    incs: HashMap<LoopId, Vec<(u16, Expr)>>,
+    /// per-loop cursor resets (after the loop completes).
+    resets: HashMap<LoopId, Vec<(u16, Expr)>>,
+    prefetches: HashMap<LoopId, Vec<crate::ir::PrefetchHint>>,
+    /// First hoisted-delta register; `delta_exprs[i]` lives in
+    /// `delta_base + i`.
+    delta_base: u16,
+    delta_exprs: Vec<Expr>,
+    max_int: u16,
+    max_float: u16,
+}
+
+impl<'a> Lowering<'a> {
+    fn ctx(&self) -> ExprCtx {
+        ExprCtx::new(self.sym_regs.clone(), self.scratch_int_base, 0)
+    }
+
+    fn bindings_for_ctx(&self) -> Vec<CursorBinding> {
+        let mut out = Vec::new();
+        for (idx, plan) in self.plans.iter().enumerate() {
+            for (off, delta) in &plan.accesses {
+                let delta = match delta {
+                    crate::schedules::ptr_inc::AccessDelta::Const(c) => {
+                        CursorDelta::Const(*c as i32)
+                    }
+                    crate::schedules::ptr_inc::AccessDelta::Sym(e) => {
+                        let pos = self
+                            .delta_exprs
+                            .iter()
+                            .position(|x| x == e)
+                            .expect("delta expr registered");
+                        CursorDelta::Reg(self.delta_base + pos as u16)
+                    }
+                };
+                out.push(CursorBinding {
+                    stmt: plan.stmt,
+                    container: plan.container,
+                    offset: off.clone(),
+                    reg: self.cursor_regs[idx],
+                    delta,
+                });
+            }
+        }
+        out
+    }
+
+    /// Program prelude: evaluate each hoisted symbolic delta into its
+    /// dedicated register (param-only expressions — loop-invariant).
+    fn compile_delta_prelude(&mut self) -> Result<CodeBlock> {
+        let mut ctx = self.ctx();
+        let mut ops = Vec::new();
+        for (i, e) in self.delta_exprs.clone().iter().enumerate() {
+            let r = compile_int(e, &mut ctx, &mut ops)?;
+            ops.push(Op::ICopy {
+                dst: self.delta_base + i as u16,
+                src: r,
+            });
+            ctx.free_int(r);
+        }
+        ops.push(Op::Halt);
+        let block = CodeBlock {
+            ops,
+            n_int: ctx.max_int,
+            n_float: ctx.max_float,
+        };
+        self.absorb(&ctx);
+        Ok(block)
+    }
+
+    fn absorb(&mut self, ctx: &ExprCtx) {
+        self.max_int = self.max_int.max(ctx.max_int);
+        self.max_float = self.max_float.max(ctx.max_float);
+    }
+
+    fn sym_reg(&self, s: Sym) -> u16 {
+        self.sym_regs
+            .iter()
+            .find(|(x, _)| *x == s)
+            .map(|(_, r)| *r)
+            .expect("symbol register")
+    }
+
+    /// Does this subtree stay on the sequential fast path?
+    fn fully_sequential(n: &Node) -> bool {
+        match n {
+            Node::Stmt(_) => true,
+            Node::Loop(l) => {
+                matches!(l.schedule, LoopSchedule::Sequential)
+                    && l.body.iter().all(Self::fully_sequential)
+            }
+        }
+    }
+
+    /// Lower a node sequence: coalesce runs of sequential nodes into flat
+    /// blocks; parallel-bearing loops become tree nodes.
+    fn lower_sequence(&mut self, nodes: &[Node]) -> Result<Vec<ExecNode>> {
+        let mut out: Vec<ExecNode> = Vec::new();
+        let mut run: Vec<&Node> = Vec::new();
+        for n in nodes {
+            if Self::fully_sequential(n) {
+                run.push(n);
+            } else {
+                if !run.is_empty() {
+                    out.push(ExecNode::Code(self.compile_flat(&run)?));
+                    run.clear();
+                }
+                let Node::Loop(l) = n else {
+                    unreachable!("statements are always sequential");
+                };
+                out.push(self.lower_tree_loop(l)?);
+            }
+        }
+        if !run.is_empty() {
+            out.push(ExecNode::Code(self.compile_flat(&run)?));
+        }
+        Ok(out)
+    }
+
+    /// Lower a loop that is parallel/doacross or contains one.
+    fn lower_tree_loop(&mut self, l: &Loop) -> Result<ExecNode> {
+        let var_reg = self.sym_reg(l.var);
+        let mk_block = |this: &mut Self, e: &Expr| -> Result<(CodeBlock, u16)> {
+            let mut ctx = this.ctx();
+            let mut ops = Vec::new();
+            let r = compile_int(e, &mut ctx, &mut ops)?;
+            this.absorb(&ctx);
+            Ok((
+                CodeBlock {
+                    ops,
+                    n_int: ctx.max_int,
+                    n_float: ctx.max_float,
+                },
+                r,
+            ))
+        };
+        let (start, start_reg) = mk_block(self, &l.start)?;
+        let (end, end_reg) = mk_block(self, &l.end)?;
+        let (stride, stride_reg) = mk_block(self, &l.stride)?;
+
+        // pre_body: cursor inits pinned to the top of this loop's body.
+        let mut pre_body = CodeBlock::default();
+        if let Some(idxs) = self.init_inside.get(&l.id).cloned() {
+            let mut ctx = self.ctx();
+            for idx in idxs {
+                let init = self.plans[idx].init.clone();
+                let r = compile_int(&init, &mut ctx, &mut pre_body.ops)?;
+                pre_body.ops.push(Op::ICopy {
+                    dst: self.cursor_regs[idx],
+                    src: r,
+                });
+                ctx.free_int(r);
+            }
+            pre_body.n_int = ctx.max_int;
+            self.absorb(&ctx);
+        }
+
+        // prefetch hints at the top of each iteration: cover the first
+        // few cache lines (8 elements apart) of the next iteration's
+        // access region, like a compiler unrolling __builtin_prefetch.
+        let mut prefetch = CodeBlock::default();
+        if let Some(hints) = self.prefetches.get(&l.id).cloned() {
+            let mut ctx = self.ctx();
+            for h in hints {
+                let r = compile_int(&h.offset, &mut ctx, &mut prefetch.ops)?;
+                for line in 0..PREFETCH_LINES {
+                    let idx = if line == 0 {
+                        r
+                    } else {
+                        let t = ctx.alloc_int();
+                        prefetch.ops.push(Op::IAddImm {
+                            dst: t,
+                            a: r,
+                            imm: (line * 8) as i64,
+                        });
+                        t
+                    };
+                    prefetch.ops.push(Op::Prefetch {
+                        cont: h.container.0 as u16,
+                        idx,
+                        write: h.for_write,
+                    });
+                    if line != 0 {
+                        ctx.free_int(idx);
+                    }
+                }
+                ctx.free_int(r);
+            }
+            prefetch.n_int = ctx.max_int;
+            self.absorb(&ctx);
+        }
+
+        // post_body: cursor increments for this loop.
+        let mut post_body = CodeBlock::default();
+        if let Some(incs) = self.incs.get(&l.id).cloned() {
+            let mut ctx = self.ctx();
+            for (reg, inc) in incs {
+                self.emit_cursor_add(&mut ctx, &mut post_body.ops, reg, &inc, false)?;
+            }
+            post_body.n_int = ctx.max_int;
+            self.absorb(&ctx);
+        }
+
+        // post_loop: cursor resets after this loop exits.
+        let mut post_loop = CodeBlock::default();
+        if let Some(resets) = self.resets.get(&l.id).cloned() {
+            let mut ctx = self.ctx();
+            for (reg, r) in resets {
+                self.emit_cursor_add(&mut ctx, &mut post_loop.ops, reg, &r, true)?;
+            }
+            post_loop.n_int = ctx.max_int;
+            self.absorb(&ctx);
+        }
+
+        let body = self.lower_sequence(&l.body)?;
+
+        // Schedule: map WaitSpecs (stmt ids) to body element indices.
+        let schedule = match &l.schedule {
+            LoopSchedule::Sequential => ExecSchedule::Seq,
+            LoopSchedule::Parallel => ExecSchedule::Par,
+            LoopSchedule::Doacross { waits, release } => {
+                let elem_of_stmt = |sid: crate::ir::StmtId| -> Option<usize> {
+                    l.body
+                        .iter()
+                        .position(|n| n.stmts().iter().any(|s| s.id == sid))
+                };
+                let mut ws = Vec::new();
+                for w in waits {
+                    let Some(elem) = elem_of_stmt(w.before_stmt) else {
+                        bail!("DOACROSS wait target not in body");
+                    };
+                    ws.push((elem, w.delta));
+                }
+                // Deduplicate (same element, same delta).
+                ws.sort();
+                ws.dedup();
+                let release_after = match release {
+                    crate::ir::ReleaseSpec::AfterStmt(sid) => {
+                        Some(elem_of_stmt(*sid).ok_or_else(|| {
+                            anyhow::anyhow!("DOACROSS release target not in body")
+                        })?)
+                    }
+                    crate::ir::ReleaseSpec::EndOfBody => None,
+                };
+                // Body element indices must match ExecNode indices: they do
+                // only when each IR body node lowers to exactly one
+                // ExecNode. Guarantee it by lowering each element alone.
+                let mut tree_body = Vec::new();
+                for n in &l.body {
+                    let lowered = self.lower_sequence(std::slice::from_ref(n))?;
+                    debug_assert_eq!(lowered.len(), 1);
+                    tree_body.extend(lowered);
+                }
+                return Ok(ExecNode::Loop(Box::new(LoopExec {
+                    loop_id: l.id,
+                    var_reg,
+                    start,
+                    start_reg,
+                    end,
+                    end_reg,
+                    stride,
+                    stride_reg,
+                    schedule: ExecSchedule::Doacross {
+                        waits: ws,
+                        release_after,
+                    },
+                    body: tree_body,
+                    post_body,
+                    post_loop,
+                    pre_body,
+                    prefetch,
+                })));
+            }
+        };
+
+        Ok(ExecNode::Loop(Box::new(LoopExec {
+            loop_id: l.id,
+            var_reg,
+            start,
+            start_reg,
+            end,
+            end_reg,
+            stride,
+            stride_reg,
+            schedule,
+            body,
+            post_body,
+            post_loop,
+            pre_body,
+            prefetch,
+        })))
+    }
+
+    /// `cursor += expr` (or `-=` when `negate`), constant-folded when the
+    /// expr is a literal.
+    fn emit_cursor_add(
+        &mut self,
+        ctx: &mut ExprCtx,
+        ops: &mut Vec<Op>,
+        reg: u16,
+        e: &Expr,
+        negate: bool,
+    ) -> Result<()> {
+        if let Some(v) = e.as_int() {
+            let imm = if negate { -v } else { v };
+            ops.push(Op::IAddImm { dst: reg, a: reg, imm });
+            return Ok(());
+        }
+        let r = compile_int(e, ctx, ops)?;
+        if negate {
+            ops.push(Op::ISub { dst: reg, a: reg, b: r });
+        } else {
+            ops.push(Op::IAdd { dst: reg, a: reg, b: r });
+        }
+        ctx.free_int(r);
+        Ok(())
+    }
+
+    /// Flatten a run of fully sequential nodes into one code block.
+    fn compile_flat(&mut self, nodes: &[&Node]) -> Result<CodeBlock> {
+        let mut ctx = self.ctx();
+        ctx.cursors = self.bindings_for_ctx();
+        let mut ops: Vec<Op> = Vec::new();
+        for n in nodes {
+            self.flat_node(n, &mut ctx, &mut ops)?;
+        }
+        ops.push(Op::Halt);
+        let block = CodeBlock {
+            ops,
+            n_int: ctx.max_int,
+            n_float: ctx.max_float,
+        };
+        self.absorb(&ctx);
+        Ok(block)
+    }
+
+    fn flat_node(&self, n: &Node, ctx: &mut ExprCtx, ops: &mut Vec<Op>) -> Result<()> {
+        match n {
+            Node::Stmt(s) => self.flat_stmt(s, ctx, ops),
+            Node::Loop(l) => self.flat_loop(l, ctx, ops),
+        }
+    }
+
+    fn flat_stmt(&self, s: &Stmt, ctx: &mut ExprCtx, ops: &mut Vec<Op>) -> Result<()> {
+        ctx.current_stmt = Some(s.id);
+        // Guard: skip the statement when guard <= 0.
+        let guard_pos = if let Some(g) = &s.guard {
+            let cond = compile_float(g, ctx, ops)?;
+            let pos = ops.len();
+            ops.push(Op::GuardSkip { cond, skip: 0 });
+            ctx.free_float(cond);
+            Some(pos)
+        } else {
+            None
+        };
+
+        let val = compile_float(&s.rhs, ctx, ops)?;
+        let cont = s.write.container.0 as u16;
+        let f32s = self.program.container(s.write.container).dtype == crate::ir::DType::F32;
+        if let Some((reg, CursorDelta::Const(delta))) = ctx
+            .cursors
+            .iter()
+            .find(|b| {
+                b.stmt == s.id && b.container == s.write.container && b.offset == s.write.offset
+            })
+            .map(|b| (b.reg, b.delta))
+        {
+            ops.push(if f32s {
+                Op::StoreOffF32 {
+                    cont,
+                    idx: reg,
+                    off: delta,
+                    src: val,
+                }
+            } else {
+                Op::StoreOff {
+                    cont,
+                    idx: reg,
+                    off: delta,
+                    src: val,
+                }
+            });
+        } else {
+            let idx = compile_int(&s.write.offset, ctx, ops)?;
+            ops.push(if f32s {
+                Op::StoreF32 {
+                    cont,
+                    idx,
+                    src: val,
+                }
+            } else {
+                Op::Store {
+                    cont,
+                    idx,
+                    src: val,
+                }
+            });
+            ctx.free_int(idx);
+        }
+        ctx.free_float(val);
+
+        if let Some(pos) = guard_pos {
+            let skip = (ops.len() - pos - 1) as u32;
+            if let Op::GuardSkip { skip: s, .. } = &mut ops[pos] {
+                *s = skip;
+            }
+        }
+        ctx.flush_deferred();
+        ctx.current_stmt = None;
+        Ok(())
+    }
+
+    fn flat_loop(&self, l: &Loop, ctx: &mut ExprCtx, ops: &mut Vec<Op>) -> Result<()> {
+        // Cursor inits placed before this loop.
+        if let Some(idxs) = self.init_before.get(&l.id) {
+            for idx in idxs {
+                let init = self.plans[*idx].init.clone();
+                let r = compile_int(&init, ctx, ops)?;
+                ops.push(Op::ICopy {
+                    dst: self.cursor_regs[*idx],
+                    src: r,
+                });
+                ctx.free_int(r);
+            }
+        }
+        let var = self.sym_reg(l.var);
+        // start → var
+        let r = compile_int(&l.start, ctx, ops)?;
+        ops.push(Op::ICopy { dst: var, src: r });
+        ctx.free_int(r);
+        // end → held register (not freed until loop done)
+        let end_reg = compile_int(&l.end, ctx, ops)?;
+        // loop head
+        let head = ops.len();
+        // stride (re-evaluated each iteration: may depend on the loop var)
+        let stride_reg = compile_int(&l.stride, ctx, ops)?;
+        let cond_pos = ops.len();
+        ops.push(Op::LoopCond {
+            var,
+            end: end_reg,
+            stride: stride_reg,
+            exit: 0,
+        });
+        // prefetch hints at iteration top (multi-line, see lower_tree_loop)
+        if let Some(hints) = self.prefetches.get(&l.id) {
+            for h in hints {
+                let ri = compile_int(&h.offset, ctx, ops)?;
+                for line in 0..PREFETCH_LINES {
+                    let idx = if line == 0 {
+                        ri
+                    } else {
+                        let t = ctx.alloc_int();
+                        ops.push(Op::IAddImm {
+                            dst: t,
+                            a: ri,
+                            imm: (line * 8) as i64,
+                        });
+                        t
+                    };
+                    ops.push(Op::Prefetch {
+                        cont: h.container.0 as u16,
+                        idx,
+                        write: h.for_write,
+                    });
+                    if line != 0 {
+                        ctx.free_int(idx);
+                    }
+                }
+                ctx.free_int(ri);
+            }
+        }
+        // body
+        for n in &l.body {
+            self.flat_node(n, ctx, ops)?;
+        }
+        // post-body cursor increments
+        if let Some(incs) = self.incs.get(&l.id) {
+            for (reg, inc) in incs {
+                if let Some(v) = inc.as_int() {
+                    ops.push(Op::IAddImm {
+                        dst: *reg,
+                        a: *reg,
+                        imm: v,
+                    });
+                } else {
+                    let ri = compile_int(inc, ctx, ops)?;
+                    ops.push(Op::IAdd {
+                        dst: *reg,
+                        a: *reg,
+                        b: ri,
+                    });
+                    ctx.free_int(ri);
+                }
+            }
+        }
+        // var += stride; loop back
+        ops.push(Op::IAdd {
+            dst: var,
+            a: var,
+            b: stride_reg,
+        });
+        ops.push(Op::Jump {
+            target: head as u32,
+        });
+        let exit = ops.len() as u32;
+        if let Op::LoopCond { exit: e, .. } = &mut ops[cond_pos] {
+            *e = exit;
+        }
+        // post-loop cursor resets
+        if let Some(resets) = self.resets.get(&l.id) {
+            for (reg, reset) in resets {
+                if let Some(v) = reset.as_int() {
+                    ops.push(Op::IAddImm {
+                        dst: *reg,
+                        a: *reg,
+                        imm: -v,
+                    });
+                } else {
+                    let ri = compile_int(reset, ctx, ops)?;
+                    ops.push(Op::ISub {
+                        dst: *reg,
+                        a: *reg,
+                        b: ri,
+                    });
+                    ctx.free_int(ri);
+                }
+            }
+        }
+        ctx.free_int(stride_reg);
+        ctx.free_int(end_reg);
+        Ok(())
+    }
+}

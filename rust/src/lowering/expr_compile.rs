@@ -1,0 +1,385 @@
+//! Expression → bytecode compilation.
+
+use anyhow::{bail, Result};
+
+use crate::symbolic::{Expr, FuncKind, Sym};
+
+use super::bytecode::Op;
+
+/// Compilation context: global symbol registers plus a scratch allocator.
+pub struct ExprCtx {
+    pub sym_regs: Vec<(Sym, u16)>,
+    /// First scratch int / float register (symbols live below).
+    pub int_base: u16,
+    pub float_base: u16,
+    int_free: Vec<u16>,
+    int_next: u16,
+    float_free: Vec<u16>,
+    float_next: u16,
+    pub max_int: u16,
+    pub max_float: u16,
+    /// Cursor registers for ptr-inc loads: (stmt, container, const-off) →
+    /// cursor int reg. Filled by the lowering before compiling rhs.
+    pub cursors: Vec<CursorBinding>,
+    pub current_stmt: Option<crate::ir::StmtId>,
+    /// Address registers of naive (non-cursor) accesses in the current
+    /// statement — kept live until the statement completes, modeling the
+    /// out-of-order scheduling that overlaps load latencies (and thereby
+    /// the register pressure §4.2 attributes to offset arithmetic).
+    deferred_int: Vec<u16>,
+}
+
+/// How a cursor-served access is addressed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CursorDelta {
+    /// `cursor + c` — folds into the addressing mode.
+    Const(i32),
+    /// `cursor + i[reg]` — hoisted loop-invariant symbolic delta.
+    Reg(u16),
+}
+
+/// "Loads of `container` at symbolic `offset` in statement `stmt` read
+/// through int register `reg` plus `delta`."
+#[derive(Debug, Clone)]
+pub struct CursorBinding {
+    pub stmt: crate::ir::StmtId,
+    pub container: crate::symbolic::ContainerId,
+    pub offset: Expr,
+    pub reg: u16,
+    pub delta: CursorDelta,
+}
+
+impl ExprCtx {
+    pub fn new(sym_regs: Vec<(Sym, u16)>, int_base: u16, float_base: u16) -> ExprCtx {
+        ExprCtx {
+            sym_regs,
+            int_base,
+            float_base,
+            int_free: Vec::new(),
+            int_next: int_base,
+            float_free: Vec::new(),
+            float_next: float_base,
+            max_int: int_base,
+            max_float: float_base,
+            cursors: Vec::new(),
+            current_stmt: None,
+            deferred_int: Vec::new(),
+        }
+    }
+
+    /// Keep an address register live until `flush_deferred`.
+    pub fn defer_free_int(&mut self, r: u16) {
+        self.deferred_int.push(r);
+    }
+
+    /// Release all deferred address registers (statement boundary).
+    pub fn flush_deferred(&mut self) {
+        while let Some(r) = self.deferred_int.pop() {
+            self.free_int(r);
+        }
+    }
+
+    pub fn alloc_int(&mut self) -> u16 {
+        let r = self.int_free.pop().unwrap_or_else(|| {
+            let r = self.int_next;
+            self.int_next += 1;
+            r
+        });
+        self.max_int = self.max_int.max(r + 1);
+        r
+    }
+
+    pub fn free_int(&mut self, r: u16) {
+        if r >= self.int_base {
+            self.int_free.push(r);
+        }
+    }
+
+    pub fn alloc_float(&mut self) -> u16 {
+        let r = self.float_free.pop().unwrap_or_else(|| {
+            let r = self.float_next;
+            self.float_next += 1;
+            r
+        });
+        self.max_float = self.max_float.max(r + 1);
+        r
+    }
+
+    pub fn free_float(&mut self, r: u16) {
+        if r >= self.float_base {
+            self.float_free.push(r);
+        }
+    }
+
+    fn sym_reg(&self, s: Sym) -> Result<u16> {
+        match self.sym_regs.iter().find(|(x, _)| *x == s) {
+            Some((_, r)) => Ok(*r),
+            None => bail!("symbol {} has no register", s.name()),
+        }
+    }
+
+    pub fn cursor_for(&self, c: crate::symbolic::ContainerId, off: &Expr) -> Option<(u16, CursorDelta)> {
+        let stmt = self.current_stmt?;
+        self.cursors
+            .iter()
+            .find(|b| b.stmt == stmt && b.container == c && &b.offset == off)
+            .map(|b| (b.reg, b.delta))
+    }
+}
+
+/// Compile an integer (index) expression; returns the register holding the
+/// result. Caller frees it.
+pub fn compile_int(e: &Expr, ctx: &mut ExprCtx, ops: &mut Vec<Op>) -> Result<u16> {
+    Ok(match e {
+        Expr::Int(v) => {
+            let dst = ctx.alloc_int();
+            ops.push(Op::IConst { dst, val: *v });
+            dst
+        }
+        Expr::Real(_) => bail!("real constant in index expression"),
+        Expr::Sym(s) => {
+            // Symbols live in fixed registers below the scratch base:
+            // return them directly — `free_int` ignores sub-base ids and
+            // no op ever writes through a returned source register.
+            ctx.sym_reg(*s)?
+        }
+        Expr::Add(xs) => fold_int(xs, ctx, ops, |dst, a, b| Op::IAdd { dst, a, b })?,
+        Expr::Mul(xs) => fold_int(xs, ctx, ops, |dst, a, b| Op::IMul { dst, a, b })?,
+        Expr::Pow(b, p) => {
+            let a = compile_int(b, ctx, ops)?;
+            let dst = ctx.alloc_int();
+            ops.push(Op::IPow { dst, a, exp: *p });
+            ctx.free_int(a);
+            dst
+        }
+        Expr::FloorDiv(a, b) => binary_int(a, b, ctx, ops, |dst, a, b| Op::IFloorDiv {
+            dst,
+            a,
+            b,
+        })?,
+        Expr::Mod(a, b) => binary_int(a, b, ctx, ops, |dst, a, b| Op::IMod { dst, a, b })?,
+        Expr::Min(a, b) => binary_int(a, b, ctx, ops, |dst, a, b| Op::IMin { dst, a, b })?,
+        Expr::Max(a, b) => binary_int(a, b, ctx, ops, |dst, a, b| Op::IMax { dst, a, b })?,
+        Expr::Func(FuncKind::Log2, args) => {
+            let a = compile_int(&args[0], ctx, ops)?;
+            let dst = ctx.alloc_int();
+            ops.push(Op::ILog2 { dst, a });
+            ctx.free_int(a);
+            dst
+        }
+        Expr::Func(FuncKind::Abs, args) => {
+            let a = compile_int(&args[0], ctx, ops)?;
+            let dst = ctx.alloc_int();
+            ops.push(Op::IAbs { dst, a });
+            ctx.free_int(a);
+            dst
+        }
+        Expr::Func(k, _) => bail!("function {} in index expression", k.name()),
+        Expr::Load(..) => bail!("load in index expression"),
+    })
+}
+
+fn fold_int(
+    xs: &[Expr],
+    ctx: &mut ExprCtx,
+    ops: &mut Vec<Op>,
+    mk: impl Fn(u16, u16, u16) -> Op,
+) -> Result<u16> {
+    let mut acc = compile_int(&xs[0], ctx, ops)?;
+    for x in &xs[1..] {
+        let r = compile_int(x, ctx, ops)?;
+        let dst = ctx.alloc_int();
+        ops.push(mk(dst, acc, r));
+        ctx.free_int(acc);
+        ctx.free_int(r);
+        acc = dst;
+    }
+    Ok(acc)
+}
+
+fn binary_int(
+    a: &Expr,
+    b: &Expr,
+    ctx: &mut ExprCtx,
+    ops: &mut Vec<Op>,
+    mk: impl Fn(u16, u16, u16) -> Op,
+) -> Result<u16> {
+    let ra = compile_int(a, ctx, ops)?;
+    let rb = compile_int(b, ctx, ops)?;
+    let dst = ctx.alloc_int();
+    ops.push(mk(dst, ra, rb));
+    ctx.free_int(ra);
+    ctx.free_int(rb);
+    Ok(dst)
+}
+
+/// Compile a float (compute) expression.
+pub fn compile_float(e: &Expr, ctx: &mut ExprCtx, ops: &mut Vec<Op>) -> Result<u16> {
+    Ok(match e {
+        Expr::Int(v) => {
+            let dst = ctx.alloc_float();
+            ops.push(Op::FConst {
+                dst,
+                bits: (*v as f64).to_bits(),
+            });
+            dst
+        }
+        Expr::Real(bits) => {
+            let dst = ctx.alloc_float();
+            ops.push(Op::FConst { dst, bits: *bits });
+            dst
+        }
+        Expr::Sym(_) => {
+            // Integer symbol promoted to float.
+            let ri = compile_int(e, ctx, ops)?;
+            let dst = ctx.alloc_float();
+            ops.push(Op::FFromI { dst, src: ri });
+            ctx.free_int(ri);
+            dst
+        }
+        Expr::Add(xs) => fold_float(xs, ctx, ops, |dst, a, b| Op::FAdd { dst, a, b })?,
+        Expr::Mul(xs) => fold_float(xs, ctx, ops, |dst, a, b| Op::FMul { dst, a, b })?,
+        Expr::Pow(b, p) => {
+            let a = compile_float(b, ctx, ops)?;
+            let dst = ctx.alloc_float();
+            ops.push(Op::FPow { dst, a, exp: *p });
+            ctx.free_float(a);
+            dst
+        }
+        Expr::FloorDiv(a, b) => {
+            let ra = compile_float(a, ctx, ops)?;
+            let rb = compile_float(b, ctx, ops)?;
+            let t = ctx.alloc_float();
+            ops.push(Op::FDiv { dst: t, a: ra, b: rb });
+            let dst = ctx.alloc_float();
+            ops.push(Op::FFloor { dst, a: t });
+            ctx.free_float(ra);
+            ctx.free_float(rb);
+            ctx.free_float(t);
+            dst
+        }
+        Expr::Mod(a, b) => {
+            // a - b*floor(a/b)
+            let ra = compile_float(a, ctx, ops)?;
+            let rb = compile_float(b, ctx, ops)?;
+            let q = ctx.alloc_float();
+            ops.push(Op::FDiv { dst: q, a: ra, b: rb });
+            let fl = ctx.alloc_float();
+            ops.push(Op::FFloor { dst: fl, a: q });
+            let prod = ctx.alloc_float();
+            ops.push(Op::FMul { dst: prod, a: rb, b: fl });
+            let dst = ctx.alloc_float();
+            ops.push(Op::FSub { dst, a: ra, b: prod });
+            for r in [ra, rb, q, fl, prod] {
+                ctx.free_float(r);
+            }
+            dst
+        }
+        Expr::Min(a, b) => binary_float(a, b, ctx, ops, |dst, a, b| Op::FMin { dst, a, b })?,
+        Expr::Max(a, b) => binary_float(a, b, ctx, ops, |dst, a, b| Op::FMax { dst, a, b })?,
+        Expr::Func(k, args) => match k {
+            FuncKind::Select => {
+                let c = compile_float(&args[0], ctx, ops)?;
+                let a = compile_float(&args[1], ctx, ops)?;
+                let b = compile_float(&args[2], ctx, ops)?;
+                let dst = ctx.alloc_float();
+                ops.push(Op::FSelect { dst, cond: c, a, b });
+                for r in [c, a, b] {
+                    ctx.free_float(r);
+                }
+                dst
+            }
+            FuncKind::Recip => {
+                let a = compile_float(&args[0], ctx, ops)?;
+                let one = ctx.alloc_float();
+                ops.push(Op::FConst {
+                    dst: one,
+                    bits: 1f64.to_bits(),
+                });
+                let dst = ctx.alloc_float();
+                ops.push(Op::FDiv { dst, a: one, b: a });
+                ctx.free_float(a);
+                ctx.free_float(one);
+                dst
+            }
+            _ => {
+                let a = compile_float(&args[0], ctx, ops)?;
+                let dst = ctx.alloc_float();
+                ops.push(match k {
+                    FuncKind::Exp => Op::FExp { dst, a },
+                    FuncKind::Sqrt => Op::FSqrt { dst, a },
+                    FuncKind::Abs => Op::FAbs { dst, a },
+                    FuncKind::Log2 => Op::FLog2 { dst, a },
+                    FuncKind::Select | FuncKind::Recip => unreachable!(),
+                });
+                ctx.free_float(a);
+                dst
+            }
+        },
+        Expr::Load(c, off) => {
+            let dst = ctx.alloc_float();
+            // Pointer-increment path: the lowering pre-registered a cursor
+            // for this (stmt, container, offset).
+            if let Some((reg, delta)) = ctx.cursor_for(*c, off) {
+                match delta {
+                    CursorDelta::Const(d) => ops.push(Op::LoadOff {
+                        dst,
+                        cont: c.0 as u16,
+                        idx: reg,
+                        off: d,
+                    }),
+                    CursorDelta::Reg(dr) => ops.push(Op::LoadAt2 {
+                        dst,
+                        cont: c.0 as u16,
+                        a: reg,
+                        b: dr,
+                    }),
+                }
+            } else {
+                let idx = compile_int(off, ctx, ops)?;
+                ops.push(Op::Load {
+                    dst,
+                    cont: c.0 as u16,
+                    idx,
+                });
+                // Address stays live until the statement ends (OoO model).
+                ctx.defer_free_int(idx);
+            }
+            dst
+        }
+    })
+}
+
+fn fold_float(
+    xs: &[Expr],
+    ctx: &mut ExprCtx,
+    ops: &mut Vec<Op>,
+    mk: impl Fn(u16, u16, u16) -> Op,
+) -> Result<u16> {
+    let mut acc = compile_float(&xs[0], ctx, ops)?;
+    for x in &xs[1..] {
+        let r = compile_float(x, ctx, ops)?;
+        let dst = ctx.alloc_float();
+        ops.push(mk(dst, acc, r));
+        ctx.free_float(acc);
+        ctx.free_float(r);
+        acc = dst;
+    }
+    Ok(acc)
+}
+
+fn binary_float(
+    a: &Expr,
+    b: &Expr,
+    ctx: &mut ExprCtx,
+    ops: &mut Vec<Op>,
+    mk: impl Fn(u16, u16, u16) -> Op,
+) -> Result<u16> {
+    let ra = compile_float(a, ctx, ops)?;
+    let rb = compile_float(b, ctx, ops)?;
+    let dst = ctx.alloc_float();
+    ops.push(mk(dst, ra, rb));
+    ctx.free_float(ra);
+    ctx.free_float(rb);
+    Ok(dst)
+}

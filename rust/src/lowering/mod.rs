@@ -1,0 +1,9 @@
+//! IR → bytecode lowering. Memory schedules (§4) are materialized here,
+//! keeping them out of the analyzable IR per the paper's architecture.
+
+pub mod bytecode;
+pub mod compile;
+pub mod expr_compile;
+
+pub use bytecode::{CodeBlock, ContainerMeta, ExecNode, ExecProgram, ExecSchedule, LoopExec, Op};
+pub use compile::lower;

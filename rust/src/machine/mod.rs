@@ -1,0 +1,16 @@
+//! Simulated-machine models: cache hierarchy + hardware prefetcher,
+//! register-pressure/spill estimation, cycle cost model, node/compiler
+//! models, and the multicore makespan simulator. Together these stand in
+//! for the paper's testbed (DESIGN.md §Substitutions).
+
+pub mod cache;
+pub mod cost;
+pub mod nodes;
+pub mod regalloc;
+pub mod simsched;
+
+pub use cache::{CacheCfg, CacheSim, CacheStats, LevelCfg};
+pub use cost::{cycles_per_iteration, modeled_ms, op_cost};
+pub use nodes::{all_compilers, amd_node, clang, gcc, icc, intel_node, CompilerModel, NodeModel};
+pub use regalloc::{analyze, LoopPressure, PressureReport};
+pub use simsched::{barriered_phases, doacross_grid, doacross_grid_segmented, doall_phase, makespan, seq_chain, Task};

@@ -1,0 +1,124 @@
+//! Testbed models: the paper's two evaluation nodes and three compilers
+//! (DESIGN.md §Substitutions — parameterized models standing in for
+//! hardware/toolchains this sandbox does not have).
+
+use super::cache::CacheCfg;
+
+/// A machine-node model.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeModel {
+    pub name: &'static str,
+    pub cores: usize,
+    pub ghz: f64,
+    pub cache: CacheCfg,
+    /// Fork/join cost of a parallel region (cycles).
+    pub fork_join_cycles: f64,
+    /// Per-wait synchronization cost in a DOACROSS pipeline (cycles).
+    pub sync_cycles: f64,
+}
+
+/// 2× Intel Xeon Gold 6140 (18 cores/socket, 2.3 GHz) — §6's Intel node.
+pub fn intel_node() -> NodeModel {
+    NodeModel {
+        name: "intel-xeon-6140",
+        cores: 36,
+        ghz: 2.3,
+        cache: CacheCfg::intel_scaled(),
+        fork_join_cycles: 12_000.0,
+        sync_cycles: 120.0,
+    }
+}
+
+/// 2× AMD EPYC 7742 (64 cores/socket, 2.25 GHz) — §6's AMD node.
+pub fn amd_node() -> NodeModel {
+    NodeModel {
+        name: "amd-epyc-7742",
+        cores: 128,
+        ghz: 2.25,
+        cache: CacheCfg::amd_scaled(),
+        fork_join_cycles: 16_000.0,
+        sync_cycles: 150.0,
+    }
+}
+
+impl NodeModel {
+    pub fn cycles_to_ms(&self, cycles: f64) -> f64 {
+        cycles / (self.ghz * 1e6)
+    }
+}
+
+/// A compiler model: register budget, allocator quality, and how the
+/// toolchain treats prefetching. Calibrated to reproduce the *shape* of
+/// Fig. 1 / Table 1 / Fig. 10 (who wins, by roughly what factor), not the
+/// absolute numbers of the authors' testbed.
+#[derive(Debug, Clone, Copy)]
+pub struct CompilerModel {
+    pub name: &'static str,
+    /// General-purpose integer registers the allocator can use (x86-64
+    /// leaves ~14 after SP/BP and calling-convention reservations).
+    pub int_regs: usize,
+    /// Vector/FP registers.
+    pub fp_regs: usize,
+    /// Allocator quality: extra registers effectively wasted vs. the ideal
+    /// allocation (gcc's allocator spills earlier than clang's — Fig. 1's
+    /// 13 vs 6 spills on identical code).
+    pub alloc_slack: usize,
+    /// Cycle penalty per spilled value per iteration (store+reload).
+    pub spill_penalty: f64,
+    /// Scheduling window: index-arithmetic ops the compiler keeps in
+    /// flight per extra live register (larger = better scheduler).
+    pub sched_window: usize,
+    /// Baseline scalar-code quality factor (IPC relative to clang = 1.0).
+    pub code_quality: f64,
+    /// Does the compiler emit the `__builtin_prefetch` hints we generate?
+    pub honors_sw_prefetch: bool,
+    /// Does the compiler already insert its own aggressive prefetching
+    /// (icc) — making our hints redundant?
+    pub auto_prefetch: bool,
+}
+
+pub fn gcc() -> CompilerModel {
+    CompilerModel {
+        name: "gcc",
+        int_regs: 14,
+        fp_regs: 16,
+        alloc_slack: 3,
+        spill_penalty: 3.0,
+        sched_window: 3,
+        code_quality: 0.92,
+        honors_sw_prefetch: true,
+        auto_prefetch: false,
+    }
+}
+
+pub fn clang() -> CompilerModel {
+    CompilerModel {
+        name: "clang",
+        int_regs: 14,
+        fp_regs: 16,
+        alloc_slack: 0,
+        spill_penalty: 3.0,
+        sched_window: 4,
+        code_quality: 1.0,
+        honors_sw_prefetch: true,
+        auto_prefetch: false,
+    }
+}
+
+pub fn icc() -> CompilerModel {
+    CompilerModel {
+        name: "icc",
+        int_regs: 14,
+        fp_regs: 16,
+        alloc_slack: 1,
+        spill_penalty: 3.0,
+        sched_window: 4,
+        code_quality: 0.97,
+        honors_sw_prefetch: false,
+        auto_prefetch: true,
+    }
+}
+
+pub fn all_compilers() -> [CompilerModel; 3] {
+    [gcc(), clang(), icc()]
+}

@@ -1,0 +1,351 @@
+//! Register-pressure / spill estimation (Fig. 1's "13 register spills" and
+//! the Fig. 10 pointer-incrementation mechanism).
+//!
+//! The estimator runs linear-scan liveness over the lowered bytecode of
+//! each innermost loop body and reports max-live virtual registers. A
+//! compiler model turns that into a spill count: values the loop needs
+//! live simultaneously beyond the architectural budget (minus the model's
+//! allocator slack) spill to the stack every iteration.
+
+use std::collections::HashMap;
+
+use crate::lowering::bytecode::{CodeBlock, ExecNode, ExecProgram, Op};
+
+use super::nodes::CompilerModel;
+
+/// Pressure report for one innermost loop.
+#[derive(Debug, Clone)]
+pub struct LoopPressure {
+    /// Max simultaneously-live integer registers (incl. loop-invariants:
+    /// bounds, strides, parameters, cursors, base pointers).
+    pub int_live: usize,
+    /// Max live FP registers.
+    pub fp_live: usize,
+    /// Ops per iteration (cost accounting).
+    pub ops_per_iter: usize,
+    /// Integer (index-arithmetic) ops per iteration — §4.2: "stride
+    /// calculations increase the register count".
+    pub index_ops_per_iter: usize,
+    /// Memory accesses per iteration.
+    pub accesses_per_iter: usize,
+}
+
+impl LoopPressure {
+    /// Effective integer pressure under a compiler model: measured
+    /// max-live plus the in-flight address-arithmetic chains the compiler
+    /// keeps alive while software-pipelining/unrolling the loop (one extra
+    /// live value per `sched_window` index ops — the §4.2 mechanism that
+    /// pointer incrementation removes).
+    pub fn effective_int_live(&self, cm: &CompilerModel) -> usize {
+        // Capped: a compiler keeps at most a handful of address chains in
+        // flight regardless of loop size.
+        self.int_live + (self.index_ops_per_iter / cm.sched_window).min(8)
+    }
+
+    /// Spills under a compiler model (§4.2's motivation).
+    pub fn spills(&self, cm: &CompilerModel) -> usize {
+        let int_avail = cm.int_regs.saturating_sub(cm.alloc_slack);
+        let fp_avail = cm.fp_regs.saturating_sub(cm.alloc_slack / 2);
+        self.effective_int_live(cm).saturating_sub(int_avail)
+            + self.fp_live.saturating_sub(fp_avail)
+    }
+}
+
+/// Whole-program pressure report: per innermost loop, plus the worst one.
+#[derive(Debug, Clone, Default)]
+pub struct PressureReport {
+    pub loops: Vec<LoopPressure>,
+}
+
+impl PressureReport {
+    pub fn worst(&self) -> Option<&LoopPressure> {
+        self.loops.iter().max_by_key(|l| l.int_live + l.fp_live)
+    }
+
+    pub fn total_spills(&self, cm: &CompilerModel) -> usize {
+        self.loops.iter().map(|l| l.spills(cm)).sum()
+    }
+
+    pub fn worst_spills(&self, cm: &CompilerModel) -> usize {
+        self.worst().map(|l| l.spills(cm)).unwrap_or(0)
+    }
+}
+
+/// Analyze every innermost loop in the lowered program.
+pub fn analyze(prog: &ExecProgram) -> PressureReport {
+    let mut report = PressureReport::default();
+    for node in &prog.root {
+        walk(node, &mut report);
+    }
+    report
+}
+
+fn walk(node: &ExecNode, report: &mut PressureReport) {
+    match node {
+        ExecNode::Code(block) => {
+            for range in innermost_loop_ranges(block) {
+                report.loops.push(pressure_of(block, range));
+            }
+        }
+        ExecNode::Loop(l) => {
+            // Tree loops: recurse; if the body is a single Code block whose
+            // flat loops are the innermost ones they are handled there. A
+            // leaf tree-loop body of straight-line code is itself an
+            // innermost loop.
+            let has_inner_loop = l.body.iter().any(|n| match n {
+                ExecNode::Loop(_) => true,
+                ExecNode::Code(b) => !innermost_loop_ranges(b).is_empty(),
+            });
+            if has_inner_loop {
+                for n in &l.body {
+                    walk(n, report);
+                }
+            } else {
+                // Concatenate body blocks as one iteration body.
+                let mut combined = CodeBlock::default();
+                for n in &l.body {
+                    if let ExecNode::Code(b) = n {
+                        combined.ops.extend(b.ops.iter().copied());
+                    }
+                }
+                combined.ops.extend(l.post_body.ops.iter().copied());
+                let range = 0..combined.ops.len();
+                report.loops.push(pressure_of(&combined, range));
+            }
+        }
+    }
+}
+
+/// Byte ranges of innermost flat loops: a `LoopCond` whose body (up to its
+/// back-jump) contains no further `LoopCond`.
+fn innermost_loop_ranges(block: &CodeBlock) -> Vec<std::ops::Range<usize>> {
+    let mut out = Vec::new();
+    for (i, op) in block.ops.iter().enumerate() {
+        if let Op::LoopCond { exit, .. } = op {
+            let body = i + 1..(*exit as usize).saturating_sub(1).min(block.ops.len());
+            let inner = block.ops[body.clone()]
+                .iter()
+                .any(|o| matches!(o, Op::LoopCond { .. }));
+            if !inner {
+                out.push(body);
+            }
+        }
+    }
+    out
+}
+
+/// Linear-scan max-live over one op range. Loop-invariant inputs (regs
+/// read before being defined in the range) count as live throughout —
+/// they occupy architectural registers across the whole loop, exactly the
+/// pressure §4.2 says parametric-stride index arithmetic creates.
+fn pressure_of(block: &CodeBlock, range: std::ops::Range<usize>) -> LoopPressure {
+    let ops = &block.ops[range.clone()];
+    // Last use position per register (int/float spaces separate).
+    let mut int_last: HashMap<u16, usize> = HashMap::new();
+    let mut fp_last: HashMap<u16, usize> = HashMap::new();
+    let mut int_def: HashMap<u16, usize> = HashMap::new();
+    let mut fp_def: HashMap<u16, usize> = HashMap::new();
+    let mut accesses = 0usize;
+    let mut index_ops = 0usize;
+    for (pos, op) in ops.iter().enumerate() {
+        let (iu, id, fu, fd) = uses_defs(op);
+        for r in iu {
+            int_last.insert(r, pos);
+            int_def.entry(r).or_insert(0); // read-before-def ⇒ invariant
+        }
+        for r in fu {
+            fp_last.insert(r, pos);
+            fp_def.entry(r).or_insert(0);
+        }
+        if let Some(r) = id {
+            int_def.entry(r).or_insert(pos);
+            int_last.entry(r).or_insert(pos);
+        }
+        if let Some(r) = fd {
+            fp_def.entry(r).or_insert(pos);
+            fp_last.entry(r).or_insert(pos);
+        }
+        if matches!(
+            op,
+            Op::Load { .. }
+                | Op::LoadOff { .. }
+                | Op::LoadAt2 { .. }
+                | Op::Store { .. }
+                | Op::StoreOff { .. }
+                | Op::StoreF32 { .. }
+                | Op::StoreOffF32 { .. }
+        ) {
+            accesses += 1;
+        }
+        if matches!(
+            op,
+            Op::IConst { .. }
+                | Op::ICopy { .. }
+                | Op::IAdd { .. }
+                | Op::IAddImm { .. }
+                | Op::ISub { .. }
+                | Op::IMul { .. }
+                | Op::IMulImm { .. }
+                | Op::IFloorDiv { .. }
+                | Op::IMod { .. }
+                | Op::IMin { .. }
+                | Op::IMax { .. }
+                | Op::IPow { .. }
+                | Op::ILog2 { .. }
+                | Op::IAbs { .. }
+        ) {
+            index_ops += 1;
+        }
+    }
+    // Loop-invariants stay live to the end (used again next iteration).
+    for (r, d) in &int_def {
+        if *d == 0 {
+            int_last.insert(*r, ops.len());
+        }
+    }
+    for (r, d) in &fp_def {
+        if *d == 0 {
+            fp_last.insert(*r, ops.len());
+        }
+    }
+    // Sweep: count live intervals.
+    let max_live = |def: &HashMap<u16, usize>, last: &HashMap<u16, usize>| -> usize {
+        let mut events: Vec<(usize, i32)> = Vec::new();
+        for (r, d) in def {
+            let l = last.get(r).copied().unwrap_or(*d);
+            events.push((*d, 1));
+            events.push((l + 1, -1));
+        }
+        events.sort();
+        let mut live = 0i32;
+        let mut max = 0i32;
+        for (_, e) in events {
+            live += e;
+            max = max.max(live);
+        }
+        max as usize
+    };
+    LoopPressure {
+        int_live: max_live(&int_def, &int_last),
+        fp_live: max_live(&fp_def, &fp_last),
+        ops_per_iter: ops.len(),
+        index_ops_per_iter: index_ops,
+        accesses_per_iter: accesses,
+    }
+}
+
+/// (int uses, int def, float uses, float def) of an op.
+#[allow(clippy::type_complexity)]
+fn uses_defs(op: &Op) -> (Vec<u16>, Option<u16>, Vec<u16>, Option<u16>) {
+    use Op::*;
+    match *op {
+        IConst { dst, .. } => (vec![], Some(dst), vec![], None),
+        ICopy { dst, src } => (vec![src], Some(dst), vec![], None),
+        IAdd { dst, a, b } | ISub { dst, a, b } | IMul { dst, a, b } | IFloorDiv { dst, a, b }
+        | IMod { dst, a, b } | IMin { dst, a, b } | IMax { dst, a, b } => {
+            (vec![a, b], Some(dst), vec![], None)
+        }
+        IAddImm { dst, a, .. } | IMulImm { dst, a, .. } => (vec![a], Some(dst), vec![], None),
+        IPow { dst, a, .. } | ILog2 { dst, a } | IAbs { dst, a } => {
+            (vec![a], Some(dst), vec![], None)
+        }
+        FConst { dst, .. } => (vec![], None, vec![], Some(dst)),
+        FCopy { dst, src } => (vec![], None, vec![src], Some(dst)),
+        FAdd { dst, a, b } | FSub { dst, a, b } | FMul { dst, a, b } | FDiv { dst, a, b }
+        | FMin { dst, a, b } | FMax { dst, a, b } => (vec![], None, vec![a, b], Some(dst)),
+        FPow { dst, a, .. } | FExp { dst, a } | FSqrt { dst, a } | FAbs { dst, a }
+        | FLog2 { dst, a } | FFloor { dst, a } => (vec![], None, vec![a], Some(dst)),
+        FSelect { dst, cond, a, b } => (vec![], None, vec![cond, a, b], Some(dst)),
+        FFromI { dst, src } => (vec![src], None, vec![], Some(dst)),
+        Load { dst, idx, .. } => (vec![idx], None, vec![], Some(dst)),
+        LoadOff { dst, idx, .. } => (vec![idx], None, vec![], Some(dst)),
+        LoadAt2 { dst, a, b, .. } => (vec![a, b], None, vec![], Some(dst)),
+        Store { idx, src, .. } => (vec![idx], None, vec![src], None),
+        StoreOff { idx, src, .. } => (vec![idx], None, vec![src], None),
+        StoreF32 { idx, src, .. } => (vec![idx], None, vec![src], None),
+        StoreOffF32 { idx, src, .. } => (vec![idx], None, vec![src], None),
+        Prefetch { idx, .. } => (vec![idx], None, vec![], None),
+        Jump { .. } | Halt => (vec![], None, vec![], None),
+        LoopCond { var, end, stride, .. } => (vec![var, end, stride], None, vec![], None),
+        GuardSkip { cond, .. } => (vec![], None, vec![cond], None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::lowering::lower;
+    use crate::machine::nodes::{clang, gcc};
+    use crate::symbolic::{int, load, Expr};
+
+    /// Pointer incrementation must reduce measured int pressure on the
+    /// parametric-stride Laplace pattern (the Fig. 1 mechanism).
+    #[test]
+    fn ptr_inc_reduces_pressure() {
+        let build = |ptr_inc: bool| {
+            let mut b = ProgramBuilder::new("ra1");
+            let n = b.param_positive("ra1_N");
+            let (isi, isj) = (b.param_positive("ra1_isI"), b.param_positive("ra1_isJ"));
+            let (lsi, lsj) = (b.param_positive("ra1_lsI"), b.param_positive("ra1_lsJ"));
+            let input = b.array("in", (Expr::Sym(n) + int(2)) * (Expr::Sym(isi) + Expr::Sym(isj)));
+            let lap = b.array("lap", (Expr::Sym(n) + int(2)) * (Expr::Sym(lsi) + Expr::Sym(lsj)));
+            let i = b.sym("ra1_i");
+            let j = b.sym("ra1_j");
+            b.for_(j, int(1), Expr::Sym(n), int(1), |b| {
+                b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+                    let at = |di: i64, dj: i64| {
+                        (Expr::Sym(i) + int(di)) * Expr::Sym(isi)
+                            + (Expr::Sym(j) + int(dj)) * Expr::Sym(isj)
+                    };
+                    b.assign(
+                        lap,
+                        Expr::Sym(i) * Expr::Sym(lsi) + Expr::Sym(j) * Expr::Sym(lsj),
+                        Expr::real(4.0) * load(input, at(0, 0))
+                            - load(input, at(1, 0))
+                            - load(input, at(-1, 0))
+                            - load(input, at(0, 1))
+                            - load(input, at(0, -1)),
+                    );
+                });
+            });
+            let mut p = b.finish();
+            if ptr_inc {
+                crate::schedules::schedule_all_ptr_inc(&mut p);
+            }
+            analyze(&lower(&p).unwrap())
+        };
+        let naive = build(false);
+        let opt = build(true);
+        let cl = clang();
+        let (n_live, o_live) = (
+            naive.worst().unwrap().effective_int_live(&cl),
+            opt.worst().unwrap().effective_int_live(&cl),
+        );
+        assert!(
+            o_live < n_live,
+            "ptr-inc should cut effective int pressure: {n_live} -> {o_live}"
+        );
+        // The Fig. 1 shape: the naive parametric-stride loop spills under
+        // both compilers; the cursor version spills (much) less.
+        assert!(naive.worst_spills(&clang()) > opt.worst_spills(&clang()));
+        assert!(naive.worst_spills(&gcc()) > naive.worst_spills(&clang()));
+        // gcc (more slack wasted) spills at least as much as clang.
+        assert!(naive.worst_spills(&gcc()) >= naive.worst_spills(&clang()));
+    }
+
+    #[test]
+    fn trivial_loop_fits_registers() {
+        let mut b = ProgramBuilder::new("ra2");
+        let n = b.param_positive("ra2_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("ra2_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), Expr::real(1.0));
+        });
+        let p = b.finish();
+        let rep = analyze(&lower(&p).unwrap());
+        assert_eq!(rep.loops.len(), 1);
+        assert_eq!(rep.worst_spills(&clang()), 0);
+    }
+}

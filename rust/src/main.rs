@@ -1,0 +1,146 @@
+//! `silo` — CLI over the SILO coordinator.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is not in the vendored set):
+//!   silo list                                  — registered kernels
+//!   silo show <kernel> [--cfg1|--cfg2] [--ptr-inc] [--prefetch]
+//!   silo run <kernel> [--cfg1|--cfg2] [--ptr-inc] [--prefetch]
+//!            [--preset tiny|small|medium] [--threads N]
+//!   silo validate <kernel> [--cfg1|--cfg2] [--ptr-inc] [--threads N]
+//!   silo experiment <fig1|fig2|fig9|table1|fig10|all>
+//!   silo artifacts                             — list PJRT artifacts
+
+use silo::coordinator::{self, MemSchedules, OptConfig};
+use silo::kernels::Preset;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for a in std::env::args().skip(1) {
+            if a.starts_with("--") {
+                flags.push(a);
+            } else {
+                positional.push(a);
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn has(&self, f: &str) -> bool {
+        self.flags.iter().any(|x| x == f)
+    }
+
+    fn value(&self, f: &str) -> Option<String> {
+        self.flags
+            .iter()
+            .find(|x| x.starts_with(&format!("{f}=")))
+            .map(|x| x.splitn(2, '=').nth(1).unwrap().to_string())
+    }
+
+    fn opt_config(&self) -> OptConfig {
+        if self.has("--cfg2") {
+            OptConfig::Cfg2
+        } else if self.has("--cfg1") {
+            OptConfig::Cfg1
+        } else {
+            OptConfig::None
+        }
+    }
+
+    fn mem(&self) -> MemSchedules {
+        MemSchedules {
+            ptr_inc: self.has("--ptr-inc"),
+            prefetch: self.has("--prefetch"),
+        }
+    }
+
+    fn preset(&self) -> Preset {
+        match self.value("--preset").as_deref() {
+            Some("small") => Preset::Small,
+            Some("medium") => Preset::Medium,
+            _ => Preset::Tiny,
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.value("--threads")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1)
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("list") => {
+            for k in silo::kernels::all_kernels() {
+                println!("{}", k.name);
+            }
+        }
+        Some("show") => {
+            let name = args.positional.get(1).ok_or_else(usage)?;
+            let out = coordinator::optimize_and_run(
+                name,
+                args.opt_config(),
+                args.mem(),
+                Preset::Tiny,
+                1,
+            )?;
+            println!("{}", silo::ir::pretty::pretty(&out.program));
+            if let Some(rep) = out.pipeline {
+                println!("-- passes --\n{}", rep.summary());
+            }
+        }
+        Some("run") => {
+            let name = args.positional.get(1).ok_or_else(usage)?;
+            let out = coordinator::optimize_and_run(
+                name,
+                args.opt_config(),
+                args.mem(),
+                args.preset(),
+                args.threads(),
+            )?;
+            println!(
+                "{name}: executed in {:.3} ms ({} containers)",
+                out.wall.as_secs_f64() * 1e3,
+                out.storage.arrays.len()
+            );
+        }
+        Some("validate") => {
+            let name = args.positional.get(1).ok_or_else(usage)?;
+            coordinator::validate_config(name, args.opt_config(), args.mem(), args.threads())?;
+            println!("{name}: optimized output identical to baseline ✓");
+        }
+        Some("experiment") => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            print!("{}", coordinator::experiments::run(id)?);
+        }
+        Some("artifacts") => {
+            let oracle = silo::runtime::Oracle::open_default()?;
+            for a in oracle.available() {
+                println!("{a}");
+            }
+        }
+        _ => return Err(usage()),
+    }
+    Ok(())
+}
+
+fn usage() -> anyhow::Error {
+    anyhow::anyhow!(
+        "usage: silo <list|show|run|validate|experiment|artifacts> [args]\n\
+         see rust/src/main.rs header for details"
+    )
+}

@@ -1,0 +1,53 @@
+//! Minimal in-crate property testing (proptest is not in the vendored
+//! crate set): a deterministic xorshift generator plus helpers for
+//! randomized invariant checks with reproducible seeds.
+
+/// Deterministic xorshift64* PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + (self.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (self.next_u64() as f64 / u64::MAX as f64) * (hi - lo)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next_u64() % xs.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run `f` for `cases` seeded cases; panic messages name the failing seed
+/// so failures reproduce exactly.
+pub fn check(name: &str, cases: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(case + 1);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! python/compile/aot.py) and executes them as numerical oracles.
+
+pub mod pjrt;
+
+pub use pjrt::{ArtifactMeta, Executable, Oracle};

@@ -1,0 +1,223 @@
+//! PJRT oracle client: loads AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT plugin.
+//!
+//! This is the runtime half of the three-layer architecture: python runs
+//! once at build time (`make artifacts`); the rust coordinator uses the
+//! compiled executables as *numerical oracles* for the optimizer's output
+//! (and as the end-to-end validation path in examples/). Interchange is
+//! HLO **text** — see /opt/xla-example/README.md for why serialized protos
+//! from jax ≥ 0.5 are rejected by xla_extension 0.5.1.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub input_shapes: Vec<Vec<i64>>,
+}
+
+/// The PJRT client plus the artifact registry.
+pub struct Oracle {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub inputs: Vec<Vec<i64>>,
+    pub path: String,
+}
+
+impl Oracle {
+    /// Open the artifact directory (default `./artifacts`, override with
+    /// `SILO_ARTIFACTS`).
+    pub fn open_default() -> Result<Oracle> {
+        let dir = std::env::var("SILO_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Oracle::open(Path::new(&dir))
+    }
+
+    pub fn open(dir: &Path) -> Result<Oracle> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let manifest_path = dir.join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            parse_manifest(&std::fs::read_to_string(&manifest_path)?)?
+        } else {
+            HashMap::new()
+        };
+        Ok(Oracle {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn available(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.manifest.contains_key(name)
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest (run `make artifacts`)"))?
+            .clone();
+        let path = self.dir.join(&meta.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let exec = std::rc::Rc::new(Executable {
+            exe,
+            name: name.to_string(),
+            input_shapes: meta.inputs.clone(),
+        });
+        self.cache.insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Execute an artifact on f64 inputs; returns the tuple elements as
+    /// flat f64 vectors.
+    pub fn run(&mut self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let exec = self.load(name)?;
+        if inputs.len() != exec.input_shapes.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                exec.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&exec.input_shapes) {
+            let expect: i64 = shape.iter().product();
+            if expect != data.len() as i64 {
+                bail!("{name}: input length {} != shape {:?}", data.len(), shape);
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exec
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+/// Minimal JSON parsing for the manifest (no serde in the vendored set).
+/// Format written by aot.py:
+/// `{"name": {"inputs": [[..],..], "dtype": "float64", "path": "..."}}`.
+fn parse_manifest(text: &str) -> Result<HashMap<String, ArtifactMeta>> {
+    let mut out = HashMap::new();
+    let mut rest = text;
+    while let Some(kstart) = rest.find('"') {
+        let after = &rest[kstart + 1..];
+        let Some(kend) = after.find('"') else { break };
+        let key = &after[..kend];
+        let after_key = &after[kend + 1..];
+        // Values we need: inputs [[...]] and path "..."
+        let Some(obj_start) = after_key.find('{') else {
+            break;
+        };
+        let Some(obj_end) = after_key.find('}') else {
+            break;
+        };
+        let obj = &after_key[obj_start..obj_end];
+        let inputs = parse_inputs(obj)?;
+        let path = obj
+            .split("\"path\"")
+            .nth(1)
+            .and_then(|s| s.split('"').nth(1))
+            .ok_or_else(|| anyhow!("manifest entry {key} missing path"))?
+            .to_string();
+        out.insert(key.to_string(), ArtifactMeta { inputs, path });
+        rest = &after_key[obj_end + 1..];
+    }
+    Ok(out)
+}
+
+fn parse_inputs(obj: &str) -> Result<Vec<Vec<i64>>> {
+    let seg = obj
+        .split("\"inputs\"")
+        .nth(1)
+        .ok_or_else(|| anyhow!("manifest entry missing inputs"))?;
+    let start = seg.find('[').ok_or_else(|| anyhow!("bad inputs"))?;
+    // Find matching close bracket.
+    let mut depth = 0;
+    let mut end = start;
+    for (i, ch) in seg[start..].char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = start + i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let inner = &seg[start + 1..end];
+    let mut out = Vec::new();
+    for shape in inner.split('[').skip(1) {
+        let nums = shape.split(']').next().unwrap_or("");
+        let dims: Result<Vec<i64>, _> = nums
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| s.trim().parse::<i64>())
+            .collect();
+        out.push(dims?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let text = r#"{
+  "vadv_tiny": {"inputs": [[8, 5, 6], [8, 5, 6], [8, 5, 6], [8, 5, 6]], "dtype": "float64", "path": "vadv_tiny.hlo.txt"},
+  "laplace_tiny": {"inputs": [[14, 16]], "dtype": "float64", "path": "laplace_tiny.hlo.txt"}
+}"#;
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m["vadv_tiny"].inputs.len(), 4);
+        assert_eq!(m["vadv_tiny"].inputs[0], vec![8, 5, 6]);
+        assert_eq!(m["laplace_tiny"].path, "laplace_tiny.hlo.txt");
+    }
+}

@@ -1,0 +1,8 @@
+//! Memory schedules (paper §4): per-access properties realized at lowering
+//! — software prefetch hints and pointer incrementation.
+
+pub mod prefetch;
+pub mod ptr_inc;
+
+pub use prefetch::{clear_prefetches, hinted_loops, schedule_prefetches};
+pub use ptr_inc::{all_plans, plan_ptr_inc, schedule_all_ptr_inc, LoopDelta, PtrPlan};

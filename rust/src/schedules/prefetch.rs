@@ -1,0 +1,238 @@
+//! Automatic software-prefetch placement (paper §4.1).
+//!
+//! Hardware stream prefetchers learn constant strides but mispredict at
+//! *sudden* stride changes. §4.1.2's rule: such a change happens whenever a
+//! data access uses a loop variable `w` whose loop's **starting value
+//! depends on a surrounding loop's variable** (tiled loops, sliding
+//! windows, Fig. 6). The fix: at the top of each iteration of the
+//! surrounding loop `S`, prefetch the address of the *first* access the
+//! next `S`-iteration will make — offset obtained by substituting inner
+//! vars with their start expressions and `S`'s var with `var + stride`.
+
+use crate::ir::{Loop, LoopSchedule, Node, PrefetchHint, Program};
+use crate::symbolic::{subs, ContainerId, Expr};
+
+/// Generate prefetch hints for the whole program. Returns hints added.
+///
+/// Rule (§4.1.2): a stride discontinuity happens at loop `W` when `W`'s
+/// starting value depends on any surrounding loop variable (tiled loops,
+/// sliding windows, staged tile copies). The hint goes on `W`'s *parent*
+/// loop — "the lowest one in the hierarchy (closest to the access)" — and
+/// prefetches where the first access of the parent's next iteration will
+/// land: `W`-subtree variables replaced by their starts, the parent's
+/// variable shifted by its stride. Parallel parents are skipped.
+pub fn schedule_prefetches(p: &mut Program) -> usize {
+    let mut hints: Vec<PrefetchHint> = Vec::new();
+    // Walk every statement with its enclosing loop chain.
+    fn walk<'a>(
+        nodes: &'a [Node],
+        chain: &mut Vec<&'a Loop>,
+        p: &Program,
+        hints: &mut Vec<PrefetchHint>,
+    ) {
+        for n in nodes {
+            match n {
+                Node::Stmt(st) => {
+                    let mut consider = |c: ContainerId, off: &Expr, is_write: bool| {
+                        hint_for_access(c, off, is_write, chain, p, hints);
+                    };
+                    for r in st.reads() {
+                        consider(r.container, &r.offset, false);
+                    }
+                    consider(st.write.container, &st.write.offset, true);
+                }
+                Node::Loop(l) => {
+                    chain.push(l);
+                    walk(&l.body, chain, p, hints);
+                    chain.pop();
+                }
+            }
+        }
+    }
+    let mut chain = Vec::new();
+    walk(&p.body, &mut chain, p, &mut hints);
+    // Deduplicate (same loop, container, offset).
+    hints.dedup_by(|a, b| a.at_loop == b.at_loop && a.container == b.container && a.offset == b.offset);
+    let mut added = 0;
+    for h in hints {
+        if !p
+            .schedules
+            .prefetches
+            .iter()
+            .any(|e| e.at_loop == h.at_loop && e.container == h.container && e.offset == h.offset)
+        {
+            p.schedules.prefetches.push(h);
+            added += 1;
+        }
+    }
+    added
+}
+
+/// One hint per access (§4.1.2): `W` = the innermost enclosing loop whose
+/// variable the offset uses; a stride discontinuity exists when `W`'s
+/// start depends on a surrounding loop variable. The hint goes on `W`'s
+/// parent ("the lowest one in the hierarchy, closest to the access") and
+/// targets the parent's next iteration's first access.
+fn hint_for_access(
+    c: ContainerId,
+    off: &Expr,
+    is_write: bool,
+    chain: &[&Loop],
+    p: &Program,
+    hints: &mut Vec<PrefetchHint>,
+) {
+    // Small constant-size buffers (staged tiles) live in cache — never
+    // worth a hint.
+    if let Some(n) = p.container(c).size.as_int() {
+        if n <= 4096 {
+            return;
+        }
+    }
+    // Innermost involved loop W and its position.
+    let Some(wpos) = chain.iter().rposition(|l| off.depends_on(l.var)) else {
+        return;
+    };
+    if wpos == 0 {
+        return; // no parent to host the hint
+    }
+    let w = chain[wpos];
+    let parent = chain[wpos - 1];
+    // Discontinuity: W's start depends on some enclosing loop variable.
+    if !chain[..wpos].iter().any(|l| w.start.depends_on(l.var)) {
+        return;
+    }
+    if !matches!(parent.schedule, LoopSchedule::Sequential) {
+        return; // §4.1.2: parallel loops get no hints
+    }
+    // Offset of the first access in the parent's next iteration:
+    // W → its start, then parent.var → parent.var + stride.
+    let at_start = subs(off, w.var, &w.start);
+    let next = subs(
+        &at_start,
+        parent.var,
+        &(Expr::Sym(parent.var) + parent.stride.clone()),
+    );
+    hints.push(PrefetchHint {
+        at_loop: parent.id,
+        container: c,
+        offset: next,
+        for_write: is_write,
+    });
+}
+
+/// Convenience for experiments: strip all prefetch hints (the "No
+/// Prefetch" column of Table 1).
+pub fn clear_prefetches(p: &mut Program) {
+    p.schedules.prefetches.clear();
+}
+
+/// Which loops carry at least one hint (reporting).
+pub fn hinted_loops(p: &Program) -> Vec<crate::ir::LoopId> {
+    let mut out = Vec::new();
+    for h in &p.schedules.prefetches {
+        if !out.contains(&h.at_loop) {
+            out.push(h.at_loop);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, sym_eq};
+
+    /// Fig. 6 shape: for i { for j = START_J(i): A[g(j)] } — hint on the
+    /// i loop, offset at next i's first j.
+    #[test]
+    fn tiled_start_triggers_hint() {
+        let mut b = ProgramBuilder::new("pf1");
+        let n = b.param_positive("pf1_N");
+        let a = b.array("A", Expr::Sym(n) * int(4) + int(64));
+        let o = b.array("O", Expr::Sym(n) * int(4) + int(64));
+        let i = b.sym("pf1_i");
+        let j = b.sym("pf1_j");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            // j starts at 4*i — start depends on i (tile transition).
+            b.for_(j, int(4) * Expr::Sym(i), int(4) * Expr::Sym(i) + int(4), int(1), |b| {
+                b.assign(o, Expr::Sym(j), load(a, Expr::Sym(j) * int(2)));
+            });
+        });
+        let mut p = b.finish();
+        let added = schedule_prefetches(&mut p);
+        assert!(added >= 1, "expected at least the A hint");
+        let h = p
+            .schedules
+            .prefetches
+            .iter()
+            .find(|h| h.container == a)
+            .unwrap();
+        assert_eq!(h.at_loop, il);
+        assert!(!h.for_write);
+        // offset: j→4i, then i→i+1 ⇒ 2*(4(i+1)) = 8i + 8.
+        let expect = int(8) * Expr::Sym(i) + int(8);
+        assert!(sym_eq(&h.offset, &expect), "got {}", h.offset);
+    }
+
+    /// Plain rectangular nest: no start-dependency ⇒ no hints.
+    #[test]
+    fn rectangular_nest_no_hints() {
+        let mut b = ProgramBuilder::new("pf2");
+        let n = b.param_positive("pf2_N");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(n));
+        let i = b.sym("pf2_i");
+        let j = b.sym("pf2_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, int(0), Expr::Sym(n), int(1), |b| {
+                b.assign(a, Expr::Sym(i) * Expr::Sym(n) + Expr::Sym(j), Expr::real(1.0));
+            });
+        });
+        let mut p = b.finish();
+        assert_eq!(schedule_prefetches(&mut p), 0);
+    }
+
+    /// Parallel surrounding loop ⇒ hint omitted (§4.1.2).
+    #[test]
+    fn parallel_loop_skipped() {
+        use crate::ir::LoopSchedule;
+        let mut b = ProgramBuilder::new("pf3");
+        let n = b.param_positive("pf3_N");
+        let a = b.array("A", Expr::Sym(n) * int(8));
+        let i = b.sym("pf3_i");
+        let j = b.sym("pf3_j");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, int(4) * Expr::Sym(i), int(4) * Expr::Sym(i) + int(4), int(1), |b| {
+                b.assign(a, Expr::Sym(j), Expr::real(1.0));
+            });
+        });
+        let mut p = b.finish();
+        p.visit_mut(&mut |n| {
+            if let Node::Loop(l) = n {
+                if l.id == il {
+                    l.schedule = LoopSchedule::Parallel;
+                }
+            }
+        });
+        assert_eq!(schedule_prefetches(&mut p), 0);
+    }
+
+    /// Tiling a loop then scheduling produces a tile-boundary hint — the
+    /// Table 1 mechanism.
+    #[test]
+    fn tiling_then_prefetch() {
+        let mut b = ProgramBuilder::new("pf4");
+        let n = b.param_positive("pf4_N");
+        let a = b.array("A", Expr::Sym(n));
+        let o = b.array("O", Expr::Sym(n));
+        let i = b.sym("pf4_i");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(o, Expr::Sym(i), load(a, Expr::Sym(i)));
+        });
+        let mut p = b.finish();
+        let tile_loop = crate::transforms::tile(&mut p, il, 64).unwrap();
+        let added = schedule_prefetches(&mut p);
+        assert!(added >= 1);
+        assert!(p.schedules.prefetches.iter().all(|h| h.at_loop == tile_loop));
+    }
+}

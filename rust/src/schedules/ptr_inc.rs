@@ -1,0 +1,444 @@
+//! Pointer-incrementation memory schedule (paper §4.2).
+//!
+//! For a scheduled access `D[f]` the lowering replaces per-access offset
+//! arithmetic with a *cursor*: initialized once (§4.2.1), incremented by
+//! `Δᵢ = f(var + stride) − f(var)` at the end of each involved loop
+//! iteration (§4.2.2), reset by `Δᵣ = f(end) − f(start)` when an inner
+//! involved loop completes, and dereferenced with a constant offset
+//! (§4.2.3) when several accesses sit a compile-time-constant distance
+//! apart.
+
+use anyhow::{bail, Result};
+
+use crate::ir::{LoopId, LoopSchedule, Program, Stmt, StmtId};
+use crate::symbolic::{poly_diff, shift, simplify, subs, ContainerId, Expr, Sym};
+
+/// Per-loop increment plan for one cursor.
+#[derive(Debug, Clone)]
+pub struct LoopDelta {
+    pub loop_id: LoopId,
+    /// Δᵢ: added after each iteration of this loop.
+    pub inc: Expr,
+    /// Δᵣ: subtracted when this loop finishes, restoring the cursor to
+    /// its value before the loop entered (always emitted — enclosing
+    /// uninvolved loops may re-enter the managed nest without re-running
+    /// the initialization).
+    pub reset: Option<Expr>,
+}
+
+/// How one access's offset relates to the cursor's base offset.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AccessDelta {
+    /// Compile-time constant distance (§4.2.3): `cursor + c` folds into
+    /// the addressing mode with zero register cost.
+    Const(i64),
+    /// Loop-invariant symbolic distance (e.g. `±isI` in the Laplace star):
+    /// lowered to `cursor + delta_reg` (x86 base+index addressing). The
+    /// delta register is hoisted to program start and shared by every
+    /// access with the same distance.
+    Sym(Expr),
+}
+
+/// Complete lowering plan for one `(stmt, container)` ptr-inc schedule.
+#[derive(Debug, Clone)]
+pub struct PtrPlan {
+    pub stmt: StmtId,
+    pub container: ContainerId,
+    /// The *base* offset expression the cursor tracks.
+    pub base_offset: Expr,
+    /// Cursor initialization expression: `base_offset` with every managed
+    /// loop variable replaced by that loop's start expression. Evaluated at
+    /// `init_at` (see below).
+    pub init: Expr,
+    /// Loop whose body the initialization runs at the top of; `None` means
+    /// "before the outermost managed loop" (§4.2.1's placement rule,
+    /// respecting parallel loops — cursors are thread-local).
+    pub init_inside: Option<LoopId>,
+    /// Outermost managed loop (the cursor is initialized just before it
+    /// when `init_inside` is None).
+    pub outermost: LoopId,
+    /// Increment/reset amounts per managed (sequential, involved) loop,
+    /// ordered outermost → innermost.
+    pub deltas: Vec<LoopDelta>,
+    /// Accesses served by this cursor: `(original offset, delta)` — each is
+    /// dereferenced as `cursor + delta` (§4.2.3, extended to loop-invariant
+    /// symbolic deltas).
+    pub accesses: Vec<(Expr, AccessDelta)>,
+}
+
+/// Schedule every array access inside loops for pointer incrementation
+/// (the paper's §6.3 methodology: "schedule all memory accesses to arrays
+/// inside of loops with pointer incrementation"). Scalars and accesses
+/// whose offsets mention no loop variable are skipped (nothing to
+/// increment).
+pub fn schedule_all_ptr_inc(p: &mut Program) -> usize {
+    let mut added = 0;
+    let stmt_parents = p.stmt_parents();
+    let mut marks: Vec<(StmtId, ContainerId)> = Vec::new();
+    for s in p.stmts() {
+        let Some(chain) = stmt_parents.get(&s.id) else {
+            continue;
+        };
+        if chain.is_empty() {
+            continue;
+        }
+        let loop_vars: Vec<Sym> = chain
+            .iter()
+            .filter_map(|lid| p.find_loop(*lid).map(|l| l.var))
+            .collect();
+        let mut containers: Vec<ContainerId> = Vec::new();
+        let mut consider = |c: ContainerId, off: &Expr| {
+            if p.container(c).is_scalar() {
+                return;
+            }
+            if !loop_vars.iter().any(|v| off.depends_on(*v)) {
+                return;
+            }
+            if !containers.contains(&c) {
+                containers.push(c);
+            }
+        };
+        consider(s.write.container, &s.write.offset);
+        for r in s.reads() {
+            consider(r.container, &r.offset);
+        }
+        for c in containers {
+            if !p.schedules.has_ptr_inc(s.id, c) {
+                marks.push((s.id, c));
+            }
+        }
+    }
+    for m in marks {
+        p.schedules.ptr_inc.push(m);
+        added += 1;
+    }
+    added
+}
+
+/// Compute the lowering plan for one scheduled `(stmt, container)` pair.
+/// Returns `None` when the schedule is not realizable (e.g. an involved
+/// loop's Δᵢ is not loop-invariant in a way we can re-evaluate) — the
+/// lowering then falls back to the default schedule, which is always
+/// semantically safe.
+pub fn plan_ptr_inc(p: &Program, stmt_id: StmtId, container: ContainerId) -> Result<Option<PtrPlan>> {
+    let Some(stmt) = p.find_stmt(stmt_id) else {
+        bail!("ptr-inc plan for missing stmt s{}", stmt_id.0);
+    };
+    let stmt_parents = p.stmt_parents();
+    let chain = stmt_parents.get(&stmt_id).cloned().unwrap_or_default();
+    if chain.is_empty() {
+        return Ok(None);
+    }
+
+    // All offsets this statement uses on `container`.
+    let mut offsets: Vec<Expr> = Vec::new();
+    if stmt.write.container == container {
+        offsets.push(stmt.write.offset.clone());
+    }
+    for r in stmt.reads() {
+        if r.container == container && !offsets.contains(&r.offset) {
+            offsets.push(r.offset);
+        }
+    }
+    if offsets.is_empty() {
+        return Ok(None);
+    }
+
+    // §4.2.3: group all accesses onto one cursor. Constant distances fold
+    // into the addressing mode; loop-invariant symbolic distances become
+    // hoisted delta registers; anything else keeps the default path.
+    let chain_vars: Vec<Sym> = chain
+        .iter()
+        .filter_map(|lid| p.find_loop(*lid).map(|l| l.var))
+        .collect();
+    let base = offsets[0].clone();
+    let mut accesses: Vec<(Expr, AccessDelta)> = vec![(base.clone(), AccessDelta::Const(0))];
+    for off in offsets.iter().skip(1) {
+        if let Some(d) = poly_diff(off, &base) {
+            let de = d.to_expr();
+            if let Some(c) = d.as_constant() {
+                accesses.push((off.clone(), AccessDelta::Const(c)));
+            } else if !chain_vars.iter().any(|v| de.depends_on(*v)) {
+                // Loop-invariant symbolic distance: hoistable.
+                accesses.push((off.clone(), AccessDelta::Sym(de)));
+            }
+            // else: served by its own (default) access path.
+        }
+    }
+
+    // Involved loops: enclosing loops whose variable appears in the base
+    // offset (§4.2.1), ordered outermost → innermost.
+    let involved: Vec<&crate::ir::Loop> = chain
+        .iter()
+        .filter_map(|lid| p.find_loop(*lid))
+        .filter(|l| base.depends_on(l.var))
+        .collect();
+    if involved.is_empty() {
+        return Ok(None);
+    }
+
+    // Managed loops: the *sequential* involved loops below the innermost
+    // parallel involved loop. Parallel loop variables stay symbolic in the
+    // init expression (each thread initializes its own cursor).
+    let last_parallel = involved
+        .iter()
+        .rposition(|l| !matches!(l.schedule, LoopSchedule::Sequential));
+    let managed: Vec<&crate::ir::Loop> = match last_parallel {
+        Some(idx) => involved[idx + 1..].to_vec(),
+        None => involved.clone(),
+    };
+    if managed.is_empty() {
+        // Offset only depends on parallel loop vars: a cursor would never
+        // be incremented — no benefit.
+        return Ok(None);
+    }
+    let init_inside = last_parallel.map(|idx| involved[idx].id);
+    let outermost = managed[0].id;
+
+    // §4.2.1: init = base with each managed var → its loop's start expr.
+    // Substitute innermost-first so starts that reference outer managed
+    // vars (triangular nests) resolve too.
+    let mut init = base.clone();
+    for l in managed.iter().rev() {
+        init = subs(&init, l.var, &l.start);
+    }
+
+    // §4.2.2: Δᵢ and Δᵣ per managed loop. Both are computed on gₘ — the
+    // base offset with every *inner* managed variable substituted by its
+    // loop's start expression (innermost-first). For rectangular nests
+    // gₘ ≡ base; for triangular/tiled nests (inner start depends on this
+    // loop's variable) the substitution folds the start shift into Δᵢ —
+    // the cursor must advance by the inter-iteration distance of the
+    // *first* inner access, not of the raw offset.
+    let mut deltas = Vec::new();
+    for (pos, l) in managed.iter().enumerate() {
+        let mut g = base.clone();
+        for inner in managed.iter().skip(pos + 1).rev() {
+            g = subs(&g, inner.var, &inner.start);
+        }
+        let inc = simplify(&(shift(&g, l.var, &l.stride) - g.clone()));
+        if inc.depends_on(l.var) {
+            // Δᵢ varies with the iteration (non-affine in this var):
+            // realizable only by re-evaluating — we bail out to the default
+            // schedule for safety.
+            return Ok(None);
+        }
+        // Δᵣ telescopes the loop's own increments: g at `end` minus g at
+        // `start` (exact when the trip divides evenly — guaranteed for
+        // unit strides; tiled presets keep multiples of the tile). Emitted
+        // for *every* managed loop, including the outermost: an enclosing
+        // uninvolved loop (gemm's j around the k loop) re-enters the
+        // managed nest without re-running the initialization, so the
+        // cursor must return to its pre-loop value unconditionally.
+        let reset = {
+            let at_end = subs(&g, l.var, &l.end);
+            let at_start = subs(&g, l.var, &l.start);
+            Some(simplify(&(at_end - at_start)))
+        };
+        deltas.push(LoopDelta {
+            loop_id: l.id,
+            inc,
+            reset,
+        });
+    }
+
+    Ok(Some(PtrPlan {
+        stmt: stmt_id,
+        container,
+        base_offset: base,
+        init,
+        init_inside,
+        outermost,
+        deltas,
+        accesses,
+    }))
+}
+
+/// All realizable plans for a program's ptr-inc schedule set.
+pub fn all_plans(p: &Program) -> Vec<PtrPlan> {
+    let mut out = Vec::new();
+    for (sid, cid) in &p.schedules.ptr_inc {
+        if let Ok(Some(plan)) = plan_ptr_inc(p, *sid, *cid) {
+            out.push(plan);
+        }
+    }
+    out
+}
+
+/// Register-pressure accounting helper: how many live index temporaries the
+/// *naive* offset computation of `stmt` on `container` needs vs. the
+/// cursor-based schedule (cursor + constant folds). Used by the regalloc
+/// model (Fig. 1 / Fig. 10 spill counts).
+pub fn naive_index_temps(stmt: &Stmt, container: ContainerId) -> usize {
+    let mut temps = 0;
+    let mut count = |off: &Expr| {
+        // One temp per multiply/add node in the offset tree (models the
+        // address-computation chain the compiler must keep live).
+        let mut n = 0;
+        off.visit(&mut |e| match e {
+            Expr::Add(xs) | Expr::Mul(xs) => n += xs.len() - 1,
+            Expr::FloorDiv(..) | Expr::Mod(..) | Expr::Func(..) => n += 1,
+            _ => {}
+        });
+        temps += n.max(1);
+    };
+    if stmt.write.container == container {
+        count(&stmt.write.offset);
+    }
+    for r in stmt.reads() {
+        if r.container == container {
+            count(&r.offset);
+        }
+    }
+    temps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load};
+
+    /// Fig. 7: A[(2+j)*SJ + 2*i*SI] inside for(i) for(j=2; j<J; ++j).
+    #[test]
+    fn fig7_plan() {
+        let mut b = ProgramBuilder::new("pi1");
+        let ii = b.param_positive("pi1_I");
+        let jj = b.param_positive("pi1_J");
+        let si = b.param_positive("pi1_SI");
+        let sj = b.param_positive("pi1_SJ");
+        let a = b.array("A", Expr::Sym(ii) * Expr::Sym(si) + Expr::Sym(jj) * Expr::Sym(sj));
+        let out = b.array("Out", Expr::Sym(ii) * Expr::Sym(jj));
+        let i = b.sym("pi1_i");
+        let j = b.sym("pi1_j");
+        let mut sid = None;
+        b.for_(i, int(0), Expr::Sym(ii), int(1), |b| {
+            b.for_(j, int(2), Expr::Sym(jj), int(1), |b| {
+                let off = Expr::Sym(j) * Expr::Sym(sj) + int(2) * Expr::Sym(i) * Expr::Sym(si);
+                sid = Some(b.assign(
+                    out,
+                    Expr::Sym(i) * Expr::Sym(jj) + Expr::Sym(j),
+                    load(a, off),
+                ));
+            });
+        });
+        let mut p = b.finish();
+        p.schedules.ptr_inc.push((sid.unwrap(), a));
+        let plan = plan_ptr_inc(&p, sid.unwrap(), a).unwrap().unwrap();
+        // Managed loops: i then j. Δᵢ(j-loop) = SJ, Δᵢ(i-loop) = 2*SI.
+        assert_eq!(plan.deltas.len(), 2);
+        assert_eq!(plan.deltas[0].inc, int(2) * Expr::Sym(si));
+        assert_eq!(plan.deltas[1].inc, Expr::Sym(sj));
+        // Reset of the j loop: (J - 2) * SJ.
+        let expect_reset = (Expr::Sym(jj) - int(2)) * Expr::Sym(sj);
+        assert_eq!(plan.deltas[1].reset.clone().unwrap(), expect_reset);
+        // The outer loop now also resets (restores the pre-loop cursor).
+        assert!(plan.deltas[0].reset.is_some());
+        // Init: j→2, i→0 ⇒ 2*SJ.
+        assert_eq!(plan.init, int(2) * Expr::Sym(sj));
+    }
+
+    /// Constant-distance accesses share a cursor (§4.2.3): the Laplace
+    /// 5-point star on unit strides.
+    #[test]
+    fn shared_cursor_constant_offsets() {
+        let mut b = ProgramBuilder::new("pi2");
+        let n = b.param_positive("pi2_N");
+        let a = b.array("A", (Expr::Sym(n) + int(2)) * (Expr::Sym(n) + int(2)));
+        let o = b.array("O", Expr::Sym(n) * Expr::Sym(n));
+        let i = b.sym("pi2_i");
+        let mut sid = None;
+        let w = Expr::Sym(n) + int(2);
+        b.for_(i, int(1), Expr::Sym(n) + int(1), int(1), |b| {
+            let c = Expr::Sym(i) * w.clone();
+            sid = Some(b.assign(
+                o,
+                Expr::Sym(i),
+                load(a, c.clone() - int(1)) + load(a, c.clone() + int(1)) + load(a, c.clone()),
+            ));
+        });
+        let mut p = b.finish();
+        p.schedules.ptr_inc.push((sid.unwrap(), a));
+        let plan = plan_ptr_inc(&p, sid.unwrap(), a).unwrap().unwrap();
+        assert_eq!(plan.accesses.len(), 3);
+        assert!(plan
+            .accesses
+            .iter()
+            .all(|(_, d)| matches!(d, AccessDelta::Const(_))));
+    }
+
+    /// Symbolic (loop-invariant) distances are hoistable delta registers:
+    /// the Fig. 1 Laplace star with parametric strides.
+    #[test]
+    fn symbolic_delta_accesses_share_cursor() {
+        let mut b = ProgramBuilder::new("pi5");
+        let n = b.param_positive("pi5_N");
+        let si = b.param_positive("pi5_SI");
+        let sj = b.param_positive("pi5_SJ");
+        let a = b.array("A", (Expr::Sym(n) + int(2)) * (Expr::Sym(si) + Expr::Sym(sj)));
+        let o = b.array("O", Expr::Sym(n) * Expr::Sym(n));
+        let i = b.sym("pi5_i");
+        let j = b.sym("pi5_j");
+        let mut sid = None;
+        b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+            b.for_(j, int(1), Expr::Sym(n), int(1), |b| {
+                let at = |di: i64, dj: i64| {
+                    (Expr::Sym(i) + int(di)) * Expr::Sym(si)
+                        + (Expr::Sym(j) + int(dj)) * Expr::Sym(sj)
+                };
+                sid = Some(b.assign(
+                    o,
+                    Expr::Sym(i) * Expr::Sym(n) + Expr::Sym(j),
+                    load(a, at(0, 0)) + load(a, at(1, 0)) + load(a, at(-1, 0))
+                        + load(a, at(0, 1))
+                        + load(a, at(0, -1)),
+                ));
+            });
+        });
+        let mut p = b.finish();
+        p.schedules.ptr_inc.push((sid.unwrap(), a));
+        let plan = plan_ptr_inc(&p, sid.unwrap(), a).unwrap().unwrap();
+        // All five star points served by one cursor: one Const(0) + four
+        // symbolic deltas (±SI, ±SJ).
+        assert_eq!(plan.accesses.len(), 5);
+        let sym_count = plan
+            .accesses
+            .iter()
+            .filter(|(_, d)| matches!(d, AccessDelta::Sym(_)))
+            .count();
+        assert_eq!(sym_count, 4);
+    }
+
+    /// Variable-stride loop (Fig. 2, `i += i`): Δᵢ depends on the variable —
+    /// plan falls back to None (default schedule).
+    #[test]
+    fn variable_stride_unrealizable() {
+        let mut b = ProgramBuilder::new("pi3");
+        let n = b.param_positive("pi3_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("pi3_i");
+        let mut sid = None;
+        b.for_(i, int(1), Expr::Sym(n), Expr::Sym(i), |b| {
+            sid = Some(b.assign(a, Expr::Sym(i), Expr::real(1.0)));
+        });
+        let mut p = b.finish();
+        p.schedules.ptr_inc.push((sid.unwrap(), a));
+        assert!(plan_ptr_inc(&p, sid.unwrap(), a).unwrap().is_none());
+    }
+
+    #[test]
+    fn schedule_all_marks_array_accesses_only() {
+        let mut b = ProgramBuilder::new("pi4");
+        let n = b.param_positive("pi4_N");
+        let a = b.array("A", Expr::Sym(n));
+        let s = b.scalar("s");
+        let i = b.sym("pi4_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(s, int(0), load(a, Expr::Sym(i)));
+        });
+        let mut p = b.finish();
+        let added = schedule_all_ptr_inc(&mut p);
+        assert_eq!(added, 1); // only A, not the scalar s
+        assert_eq!(p.schedules.ptr_inc.len(), 1);
+    }
+}

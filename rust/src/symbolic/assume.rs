@@ -1,0 +1,282 @@
+//! Sign queries under symbol assumptions.
+//!
+//! The dependence tests need to decide "is δ > 0?" for symbolic δ (paper
+//! §3.2.2: `∃ δ > 0 : f(L) = g(L + δ·stride)`). We answer with a sound,
+//! incomplete three-valued query: `Yes` / `No` only when provable from the
+//! atoms' assumptions, `Unknown` otherwise (callers treat `Unknown`
+//! conservatively, exactly like the paper's over-approximation rule).
+
+use super::expr::Expr;
+use super::poly::{to_poly, Atom};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Truth {
+    Yes,
+    No,
+    Unknown,
+}
+
+impl Truth {
+    pub fn known_true(self) -> bool {
+        self == Truth::Yes
+    }
+}
+
+fn atom_sign(a: &Atom) -> (bool, bool) {
+    // (provably_positive, provably_nonneg)
+    match a {
+        Atom::Sym(s) => {
+            let asm = s.assumptions();
+            (asm.positive, asm.nonneg || asm.positive)
+        }
+        Atom::Opaque(_) => (false, false),
+    }
+}
+
+/// Is `e > 0` provable?
+pub fn is_positive(e: &Expr) -> Truth {
+    match classify(e) {
+        Sign::Pos => Truth::Yes,
+        Sign::Neg | Sign::Zero => Truth::No,
+        Sign::NonNeg | Sign::NonPos | Sign::Unknown => Truth::Unknown,
+    }
+}
+
+/// Is `e >= 0` provable?
+pub fn is_nonneg(e: &Expr) -> Truth {
+    match classify(e) {
+        Sign::Pos | Sign::Zero | Sign::NonNeg => Truth::Yes,
+        Sign::Neg => Truth::No,
+        Sign::NonPos | Sign::Unknown => Truth::Unknown,
+    }
+}
+
+/// Is `e == 0` provable / refutable?
+pub fn is_zero(e: &Expr) -> Truth {
+    match to_poly(e) {
+        Some(p) => {
+            if p.is_zero() {
+                Truth::Yes
+            } else {
+                match classify(e) {
+                    Sign::Pos | Sign::Neg => Truth::No,
+                    _ => Truth::Unknown,
+                }
+            }
+        }
+        None => Truth::Unknown,
+    }
+}
+
+/// Provable lower bound of an expression under the symbol assumptions, or
+/// `None` when no bound is derivable. Sound: the true value is always
+/// ≥ the returned bound.
+pub fn lower_bound(e: &Expr) -> Option<i64> {
+    let p = to_poly(e)?;
+    poly_lower_bound(&p)
+}
+
+fn poly_lower_bound(p: &crate::symbolic::poly::Poly) -> Option<i64> {
+    let mut total: i64 = 0;
+    for (m, c) in &p.0 {
+        if *c <= 0 {
+            // A negative *constant* term only shifts the bound; negative
+            // variable terms are unbounded below under our assumptions.
+            if m.0.is_empty() {
+                total = total.checked_add(*c)?;
+                continue;
+            }
+            return None;
+        }
+        let mut mono_min: i64 = 1;
+        for (a, pw) in &m.0 {
+            let amin = match a {
+                Atom::Sym(s) => {
+                    let asm = s.assumptions();
+                    if asm.min >= 1 {
+                        asm.min
+                    } else {
+                        return None;
+                    }
+                }
+                Atom::Opaque(_) => return None,
+            };
+            mono_min = mono_min.checked_mul(amin.checked_pow(*pw)?)?;
+        }
+        total = total.checked_add(c.checked_mul(mono_min)?)?;
+    }
+    Some(total)
+}
+
+/// Lower-bound after factoring out the GCD monomial: `I·J − I = I·(J−1)`
+/// is nonneg when `I > 0` and `J ≥ 1` even though the raw polynomial has a
+/// negative term. Returns a bound on the *quotient* sign scaled by the
+/// (positive) factor's minimum — sufficient for sign queries.
+fn factored_lower_bound(p: &crate::symbolic::poly::Poly) -> Option<i64> {
+    use crate::symbolic::poly::Monomial;
+    if p.0.is_empty() {
+        return Some(0);
+    }
+    // GCD monomial across all terms.
+    let mut it = p.0.keys();
+    let first = it.next()?.clone();
+    let mut gcd: Vec<(Atom, u32)> = first.0.clone();
+    for m in it {
+        gcd.retain(|(a, _)| m.0.iter().any(|(b, _)| b == a));
+        for e in gcd.iter_mut() {
+            let other = m.0.iter().find(|(b, _)| *b == e.0).map(|(_, pw)| *pw)?;
+            e.1 = e.1.min(other);
+        }
+    }
+    if gcd.is_empty() {
+        return None;
+    }
+    // Factor must be provably positive with a known minimum.
+    let mut factor_min: i64 = 1;
+    for (a, pw) in &gcd {
+        match a {
+            Atom::Sym(s) if s.assumptions().min >= 1 => {
+                factor_min = factor_min.checked_mul(s.assumptions().min.checked_pow(*pw)?)?;
+            }
+            _ => return None,
+        }
+    }
+    // Quotient = divide each monomial by the gcd.
+    let mut q = crate::symbolic::poly::Poly::zero();
+    for (m, c) in &p.0 {
+        let div = m.div(&Monomial(gcd.clone()))?;
+        q.0.insert(div, *c);
+    }
+    let qlb = poly_lower_bound(&q)?;
+    if qlb >= 0 {
+        Some(factor_min.checked_mul(qlb)?)
+    } else {
+        None
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Sign {
+    Pos,
+    Neg,
+    Zero,
+    NonNeg,
+    NonPos,
+    Unknown,
+}
+
+fn classify(e: &Expr) -> Sign {
+    match classify_basic(e) {
+        Sign::Unknown => {
+            // Factored lower-bound refinement: I·J − I ≥ I·(2−1) ≥ 1.
+            if let Some(p) = to_poly(e) {
+                if let Some(lb) = poly_lower_bound(&p).or_else(|| factored_lower_bound(&p)) {
+                    if lb > 0 {
+                        return Sign::Pos;
+                    }
+                    if lb == 0 {
+                        return Sign::NonNeg;
+                    }
+                }
+            }
+            Sign::Unknown
+        }
+        s => s,
+    }
+}
+
+fn classify_basic(e: &Expr) -> Sign {
+    let Some(p) = to_poly(e) else {
+        // Real constant
+        return match e.real_value() {
+            Some(v) if v > 0.0 => Sign::Pos,
+            Some(v) if v < 0.0 => Sign::Neg,
+            Some(_) => Sign::Zero,
+            None => Sign::Unknown,
+        };
+    };
+    if p.is_zero() {
+        return Sign::Zero;
+    }
+    // Each monomial: sign known if all atoms nonneg/positive.
+    let mut all_pos = true; // every term provably > 0
+    let mut all_nonneg = true;
+    let mut all_neg = true;
+    let mut all_nonpos = true;
+    for (m, c) in &p.0 {
+        let mut mono_pos = true; // monomial (without coeff) provably > 0
+        let mut mono_nonneg = true;
+        for (a, _) in &m.0 {
+            let (pos, nonneg) = atom_sign(a);
+            mono_pos &= pos;
+            mono_nonneg &= nonneg;
+        }
+        let term_pos = *c > 0 && mono_pos;
+        let term_nonneg = (*c > 0 && mono_nonneg) || (*c >= 0 && mono_nonneg);
+        let term_neg = *c < 0 && mono_pos;
+        let term_nonpos = *c < 0 && mono_nonneg;
+        all_pos &= term_pos;
+        all_nonneg &= term_nonneg;
+        all_neg &= term_neg;
+        all_nonpos &= term_nonpos;
+    }
+    if all_pos {
+        Sign::Pos
+    } else if all_neg {
+        Sign::Neg
+    } else if all_nonneg {
+        Sign::NonNeg
+    } else if all_nonpos {
+        Sign::NonPos
+    } else {
+        Sign::Unknown
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::expr::{int, psym, sym};
+
+    #[test]
+    fn constants() {
+        assert_eq!(is_positive(&int(3)), Truth::Yes);
+        assert_eq!(is_positive(&int(0)), Truth::No);
+        assert_eq!(is_positive(&int(-2)), Truth::No);
+        assert_eq!(is_nonneg(&int(0)), Truth::Yes);
+        assert_eq!(is_zero(&int(0)), Truth::Yes);
+        assert_eq!(is_zero(&int(4)), Truth::No);
+    }
+
+    #[test]
+    fn positive_symbols() {
+        let n = psym("asm_n");
+        assert_eq!(is_positive(&n), Truth::Yes);
+        assert_eq!(is_positive(&(n.clone() * int(2))), Truth::Yes);
+        assert_eq!(is_positive(&(n.clone() + int(1))), Truth::Yes);
+        assert_eq!(is_positive(&-n), Truth::No);
+    }
+
+    #[test]
+    fn unknown_symbols() {
+        let x = sym("asm_x");
+        assert_eq!(is_positive(&x), Truth::Unknown);
+        assert_eq!(is_zero(&x), Truth::Unknown);
+    }
+
+    #[test]
+    fn mixed_sums() {
+        let n = psym("asm_mn");
+        let x = sym("asm_mx");
+        assert_eq!(is_positive(&(n.clone() + x.clone())), Truth::Unknown);
+        assert_eq!(is_positive(&(n.clone() * n.clone() + n)), Truth::Yes);
+        let _ = x;
+    }
+
+    #[test]
+    fn product_of_positives() {
+        let (a, b) = (psym("asm_pa"), psym("asm_pb"));
+        assert_eq!(is_positive(&(a.clone() * b.clone())), Truth::Yes);
+        assert_eq!(is_positive(&(a * b * int(-1))), Truth::No);
+    }
+}

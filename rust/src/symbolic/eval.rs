@@ -1,0 +1,200 @@
+//! Numeric evaluation of expressions (used by the analyses, the test
+//! oracles, and non-hot-path interpretation; the VM compiles expressions to
+//! bytecode instead — see [`crate::lowering`]).
+
+use anyhow::{bail, Result};
+
+use super::expr::{Expr, FuncKind, Sym};
+
+/// Environment mapping symbols to integer values.
+pub trait Env {
+    fn get(&self, s: Sym) -> Option<i64>;
+}
+
+impl Env for std::collections::HashMap<Sym, i64> {
+    fn get(&self, s: Sym) -> Option<i64> {
+        std::collections::HashMap::get(self, &s).copied()
+    }
+}
+
+impl Env for [(Sym, i64)] {
+    fn get(&self, s: Sym) -> Option<i64> {
+        self.iter().find(|(x, _)| *x == s).map(|(_, v)| *v)
+    }
+}
+
+impl Env for Vec<(Sym, i64)> {
+    fn get(&self, s: Sym) -> Option<i64> {
+        Env::get(self.as_slice(), s)
+    }
+}
+
+/// Evaluate an integer-valued (index) expression. Fails on loads, reals and
+/// unbound symbols.
+pub fn eval_int(e: &Expr, env: &dyn Env) -> Result<i64> {
+    Ok(match e {
+        Expr::Int(v) => *v,
+        Expr::Real(_) => bail!("real constant in index expression"),
+        Expr::Sym(s) => match env.get(*s) {
+            Some(v) => v,
+            None => bail!("unbound symbol {} in index expression", s.name()),
+        },
+        Expr::Add(xs) => {
+            let mut acc = 0i64;
+            for x in xs {
+                acc = acc.wrapping_add(eval_int(x, env)?);
+            }
+            acc
+        }
+        Expr::Mul(xs) => {
+            let mut acc = 1i64;
+            for x in xs {
+                acc = acc.wrapping_mul(eval_int(x, env)?);
+            }
+            acc
+        }
+        Expr::Pow(b, p) => eval_int(b, env)?.pow(*p),
+        Expr::FloorDiv(a, b) => {
+            let (a, b) = (eval_int(a, env)?, eval_int(b, env)?);
+            if b == 0 {
+                bail!("division by zero");
+            }
+            a.div_euclid(b)
+        }
+        Expr::Mod(a, b) => {
+            let (a, b) = (eval_int(a, env)?, eval_int(b, env)?);
+            if b == 0 {
+                bail!("mod by zero");
+            }
+            a.rem_euclid(b)
+        }
+        Expr::Min(a, b) => eval_int(a, env)?.min(eval_int(b, env)?),
+        Expr::Max(a, b) => eval_int(a, env)?.max(eval_int(b, env)?),
+        Expr::Func(FuncKind::Log2, args) => {
+            let v = eval_int(&args[0], env)?;
+            if v <= 0 {
+                bail!("log2 of non-positive value {v}");
+            }
+            63 - (v as u64).leading_zeros() as i64
+        }
+        Expr::Func(FuncKind::Abs, args) => eval_int(&args[0], env)?.abs(),
+        Expr::Func(k, _) => bail!("function {} in index expression", k.name()),
+        Expr::Load(..) => bail!("load in index expression"),
+    })
+}
+
+/// Memory interface for compute-expression evaluation.
+pub trait Memory {
+    fn load(&self, c: super::expr::ContainerId, offset: i64) -> f64;
+}
+
+/// Evaluate a real-valued compute expression against symbol bindings and a
+/// memory. Integer subexpressions promote to f64.
+pub fn eval_f64(e: &Expr, env: &dyn Env, mem: &dyn Memory) -> Result<f64> {
+    Ok(match e {
+        Expr::Int(v) => *v as f64,
+        Expr::Real(b) => f64::from_bits(*b),
+        Expr::Sym(s) => match env.get(*s) {
+            Some(v) => v as f64,
+            None => bail!("unbound symbol {}", s.name()),
+        },
+        Expr::Add(xs) => {
+            let mut acc = 0.0;
+            for x in xs {
+                acc += eval_f64(x, env, mem)?;
+            }
+            acc
+        }
+        Expr::Mul(xs) => {
+            let mut acc = 1.0;
+            for x in xs {
+                acc *= eval_f64(x, env, mem)?;
+            }
+            acc
+        }
+        Expr::Pow(b, p) => eval_f64(b, env, mem)?.powi(*p as i32),
+        Expr::FloorDiv(a, b) => {
+            (eval_f64(a, env, mem)? / eval_f64(b, env, mem)?).floor()
+        }
+        Expr::Mod(a, b) => {
+            let (a, b) = (eval_f64(a, env, mem)?, eval_f64(b, env, mem)?);
+            a - b * (a / b).floor()
+        }
+        Expr::Min(a, b) => eval_f64(a, env, mem)?.min(eval_f64(b, env, mem)?),
+        Expr::Max(a, b) => eval_f64(a, env, mem)?.max(eval_f64(b, env, mem)?),
+        Expr::Func(k, args) => match k {
+            FuncKind::Log2 => eval_f64(&args[0], env, mem)?.log2(),
+            FuncKind::Exp => eval_f64(&args[0], env, mem)?.exp(),
+            FuncKind::Sqrt => eval_f64(&args[0], env, mem)?.sqrt(),
+            FuncKind::Abs => eval_f64(&args[0], env, mem)?.abs(),
+            FuncKind::Recip => 1.0 / eval_f64(&args[0], env, mem)?,
+            FuncKind::Select => {
+                if eval_f64(&args[0], env, mem)? > 0.0 {
+                    eval_f64(&args[1], env, mem)?
+                } else {
+                    eval_f64(&args[2], env, mem)?
+                }
+            }
+        },
+        Expr::Load(c, off) => {
+            let o = eval_int(off, env)?;
+            mem.load(*c, o)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::expr::{int, load, ContainerId, Expr};
+
+    struct ZeroMem;
+    impl Memory for ZeroMem {
+        fn load(&self, _c: ContainerId, offset: i64) -> f64 {
+            offset as f64 * 10.0
+        }
+    }
+
+    #[test]
+    fn int_eval() {
+        let i = Sym::new("ev_i");
+        let env = vec![(i, 7i64)];
+        let e = Expr::Sym(i) * int(3) + int(1);
+        assert_eq!(eval_int(&e, &env).unwrap(), 22);
+    }
+
+    #[test]
+    fn unbound_symbol_errors() {
+        let e = Expr::Sym(Sym::new("ev_unbound"));
+        let env: Vec<(Sym, i64)> = vec![];
+        assert!(eval_int(&e, &env).is_err());
+    }
+
+    #[test]
+    fn log2_eval() {
+        use crate::symbolic::expr::func;
+        let e = func(FuncKind::Log2, vec![int(1024)]);
+        let env: Vec<(Sym, i64)> = vec![];
+        assert_eq!(eval_int(&e, &env).unwrap(), 10);
+    }
+
+    #[test]
+    fn f64_with_loads() {
+        let i = Sym::new("ev_fi");
+        let env = vec![(i, 3i64)];
+        let c = ContainerId(0);
+        // load(c, i+1) * 2.0 => (4*10) * 2
+        let e = load(c, Expr::Sym(i) + int(1)) * Expr::real(2.0);
+        assert_eq!(eval_f64(&e, &env, &ZeroMem).unwrap(), 80.0);
+    }
+
+    #[test]
+    fn select_eval() {
+        use crate::symbolic::expr::func;
+        let env: Vec<(Sym, i64)> = vec![];
+        let e = func(FuncKind::Select, vec![int(1), Expr::real(5.0), Expr::real(9.0)]);
+        assert_eq!(eval_f64(&e, &env, &ZeroMem).unwrap(), 5.0);
+        let e2 = func(FuncKind::Select, vec![int(0), Expr::real(5.0), Expr::real(9.0)]);
+        assert_eq!(eval_f64(&e2, &env, &ZeroMem).unwrap(), 9.0);
+    }
+}

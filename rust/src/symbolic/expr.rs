@@ -1,0 +1,450 @@
+//! Core symbolic expression ADT.
+//!
+//! SILO characterizes loops by four symbolic quantities and data accesses by
+//! symbolic offset expressions (paper §2.1). This module provides the
+//! expression tree those quantities are made of. Expressions are plain
+//! value types (`Eq + Ord + Hash`) so canonical forms can be compared and
+//! used as map keys; floating-point constants are stored as bit patterns to
+//! keep those derives sound.
+//!
+//! Index expressions are integer-valued; compute expressions (statement
+//! right-hand sides) may additionally contain [`Expr::Load`] leaves reading
+//! from data containers and real-valued constants/functions.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Interned symbol identifier. Symbols are global to the process and carry
+/// a name plus assumptions (see [`crate::symbolic::assume`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Sym(pub u32);
+
+/// Identifier of a data container (declared in [`crate::ir::Program`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ContainerId(pub u32);
+
+/// Uninterpreted / numeric function heads usable in expressions.
+///
+/// For *index* analysis these are uninterpreted atoms: two applications are
+/// equal iff their canonicalized arguments are equal, which preserves the
+/// injectivity reasoning of the paper (e.g. `a[log2(i)]` in Fig. 2). For
+/// *compute* evaluation each head has a numeric semantics in `eval`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FuncKind {
+    Log2,
+    Exp,
+    Sqrt,
+    Abs,
+    /// select(cond, a, b): cond > 0 ? a : b  (used for guards / max-style updates)
+    Select,
+    /// 1/x — compute-only (division is not index arithmetic); uninterpreted
+    /// for the dependence analysis like every other function head.
+    Recip,
+}
+
+impl FuncKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FuncKind::Log2 => "log2",
+            FuncKind::Exp => "exp",
+            FuncKind::Sqrt => "sqrt",
+            FuncKind::Abs => "abs",
+            FuncKind::Select => "select",
+            FuncKind::Recip => "recip",
+        }
+    }
+}
+
+/// Symbolic expression.
+///
+/// Canonical-form invariants (established by [`crate::symbolic::simplify`]):
+/// * `Add`/`Mul` operand lists are flattened, sorted, and have ≥ 2 elements;
+///   integer constants are folded and, if present, appear first.
+/// * `Add` carries no duplicate non-constant terms (they are collected with
+///   integer coefficients); `Mul` collects repeated factors into `Pow`.
+/// * `Pow` exponents are ≥ 2 (x^0, x^1 never survive simplification).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Expr {
+    /// Integer constant.
+    Int(i64),
+    /// Real constant, stored as `f64::to_bits` so `Eq`/`Hash` are derivable.
+    Real(u64),
+    /// Reference to an interned symbol.
+    Sym(Sym),
+    /// n-ary sum.
+    Add(Vec<Expr>),
+    /// n-ary product.
+    Mul(Vec<Expr>),
+    /// Integer power (exponent ≥ 2 in canonical form).
+    Pow(Box<Expr>, u32),
+    /// Floor division `a / b` (integer semantics).
+    FloorDiv(Box<Expr>, Box<Expr>),
+    /// Remainder `a mod b`.
+    Mod(Box<Expr>, Box<Expr>),
+    Min(Box<Expr>, Box<Expr>),
+    Max(Box<Expr>, Box<Expr>),
+    /// Function application (uninterpreted for index analysis).
+    Func(FuncKind, Vec<Expr>),
+    /// Read of `container[offset]` — only valid in compute expressions.
+    Load(ContainerId, Box<Expr>),
+}
+
+impl Expr {
+    pub fn real(v: f64) -> Expr {
+        Expr::Real(v.to_bits())
+    }
+
+    pub fn real_value(&self) -> Option<f64> {
+        match self {
+            Expr::Real(bits) => Some(f64::from_bits(*bits)),
+            Expr::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Expr::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        matches!(self, Expr::Int(0)) || matches!(self, Expr::Real(b) if f64::from_bits(*b) == 0.0)
+    }
+
+    pub fn is_one(&self) -> bool {
+        matches!(self, Expr::Int(1))
+    }
+
+    /// All symbols occurring in the expression.
+    pub fn symbols(&self) -> Vec<Sym> {
+        let mut out = Vec::new();
+        self.visit(&mut |e| {
+            if let Expr::Sym(s) = e {
+                if !out.contains(s) {
+                    out.push(*s);
+                }
+            }
+        });
+        out
+    }
+
+    /// Does the expression mention symbol `s`?
+    pub fn depends_on(&self, s: Sym) -> bool {
+        let mut found = false;
+        self.visit(&mut |e| {
+            if let Expr::Sym(x) = e {
+                if *x == s {
+                    found = true;
+                }
+            }
+        });
+        found
+    }
+
+    /// All containers loaded from (compute expressions).
+    pub fn loads(&self) -> Vec<(ContainerId, Expr)> {
+        let mut out = Vec::new();
+        self.visit(&mut |e| {
+            if let Expr::Load(c, off) = e {
+                out.push((*c, (**off).clone()));
+            }
+        });
+        out
+    }
+
+    pub fn contains_load(&self) -> bool {
+        let mut found = false;
+        self.visit(&mut |e| {
+            if matches!(e, Expr::Load(..)) {
+                found = true;
+            }
+        });
+        found
+    }
+
+    /// Pre-order visit of every node.
+    pub fn visit(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Add(xs) | Expr::Mul(xs) | Expr::Func(_, xs) => {
+                for x in xs {
+                    x.visit(f);
+                }
+            }
+            Expr::Pow(b, _) => b.visit(f),
+            Expr::FloorDiv(a, b) | Expr::Mod(a, b) | Expr::Min(a, b) | Expr::Max(a, b) => {
+                a.visit(f);
+                b.visit(f);
+            }
+            Expr::Load(_, off) => off.visit(f),
+            Expr::Int(_) | Expr::Real(_) | Expr::Sym(_) => {}
+        }
+    }
+
+    /// Structural map over children (bottom-up rebuild).
+    pub fn map(&self, f: &impl Fn(&Expr) -> Expr) -> Expr {
+        let rebuilt = match self {
+            Expr::Add(xs) => Expr::Add(xs.iter().map(|x| x.map(f)).collect()),
+            Expr::Mul(xs) => Expr::Mul(xs.iter().map(|x| x.map(f)).collect()),
+            Expr::Func(k, xs) => Expr::Func(*k, xs.iter().map(|x| x.map(f)).collect()),
+            Expr::Pow(b, e) => Expr::Pow(Box::new(b.map(f)), *e),
+            Expr::FloorDiv(a, b) => Expr::FloorDiv(Box::new(a.map(f)), Box::new(b.map(f))),
+            Expr::Mod(a, b) => Expr::Mod(Box::new(a.map(f)), Box::new(b.map(f))),
+            Expr::Min(a, b) => Expr::Min(Box::new(a.map(f)), Box::new(b.map(f))),
+            Expr::Max(a, b) => Expr::Max(Box::new(a.map(f)), Box::new(b.map(f))),
+            Expr::Load(c, off) => Expr::Load(*c, Box::new(off.map(f))),
+            Expr::Int(_) | Expr::Real(_) | Expr::Sym(_) => self.clone(),
+        };
+        f(&rebuilt)
+    }
+
+    /// Number of nodes (used by cost heuristics and tests).
+    pub fn size(&self) -> usize {
+        let mut n = 0;
+        self.visit(&mut |_| n += 1);
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Symbol interner
+// ---------------------------------------------------------------------------
+
+/// Assumption flags carried by a symbol (paper: "program parameters that do
+/// not change over the course of the loop" are typically positive sizes).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Assumptions {
+    /// Known strictly positive (array extents, strides in canonical kernels).
+    pub positive: bool,
+    /// Known non-negative (loop counters starting at 0).
+    pub nonneg: bool,
+    /// Provable lower bound (array extents are ≥ 2 — the assumption a
+    /// multidimensional-array IR gives for free and that disambiguates
+    /// linearized cross-dimension accesses).
+    pub min: i64,
+}
+
+#[derive(Default)]
+struct SymTable {
+    names: Vec<String>,
+    assume: Vec<Assumptions>,
+    by_name: HashMap<String, Sym>,
+}
+
+fn table() -> &'static Mutex<SymTable> {
+    static TABLE: OnceLock<Mutex<SymTable>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(SymTable::default()))
+}
+
+impl Sym {
+    /// Intern a symbol by name. Repeated calls with the same name return the
+    /// same symbol (assumptions are preserved from the first registration).
+    pub fn new(name: &str) -> Sym {
+        let mut t = table().lock().unwrap();
+        if let Some(s) = t.by_name.get(name) {
+            return *s;
+        }
+        let s = Sym(t.names.len() as u32);
+        t.names.push(name.to_string());
+        t.assume.push(Assumptions::default());
+        t.by_name.insert(name.to_string(), s);
+        s
+    }
+
+    /// Intern a symbol assumed strictly positive (e.g. array sizes/strides).
+    pub fn positive(name: &str) -> Sym {
+        let s = Sym::new(name);
+        let mut t = table().lock().unwrap();
+        t.assume[s.0 as usize].positive = true;
+        t.assume[s.0 as usize].nonneg = true;
+        t.assume[s.0 as usize].min = t.assume[s.0 as usize].min.max(1);
+        s
+    }
+
+    /// Intern a symbol assumed ≥ `min` (array dimension extents: ≥ 2).
+    pub fn positive_min(name: &str, min: i64) -> Sym {
+        let s = Sym::positive(name);
+        let mut t = table().lock().unwrap();
+        t.assume[s.0 as usize].min = t.assume[s.0 as usize].min.max(min);
+        s
+    }
+
+    /// Intern a symbol assumed non-negative.
+    pub fn nonneg(name: &str) -> Sym {
+        let s = Sym::new(name);
+        let mut t = table().lock().unwrap();
+        t.assume[s.0 as usize].nonneg = true;
+        s
+    }
+
+    /// A fresh symbol guaranteed not to collide with any existing name.
+    pub fn fresh(prefix: &str) -> Sym {
+        let mut t = table().lock().unwrap();
+        let mut i = t.names.len();
+        loop {
+            let name = format!("{prefix}#{i}");
+            if !t.by_name.contains_key(&name) {
+                let s = Sym(t.names.len() as u32);
+                t.names.push(name.clone());
+                t.assume.push(Assumptions::default());
+                t.by_name.insert(name, s);
+                return s;
+            }
+            i += 1;
+        }
+    }
+
+    pub fn name(self) -> String {
+        table().lock().unwrap().names[self.0 as usize].clone()
+    }
+
+    pub fn assumptions(self) -> Assumptions {
+        table().lock().unwrap().assume[self.0 as usize]
+    }
+
+    pub fn expr(self) -> Expr {
+        Expr::Sym(self)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operator sugar
+// ---------------------------------------------------------------------------
+
+use crate::symbolic::simplify::simplify;
+
+impl std::ops::Add for Expr {
+    type Output = Expr;
+    fn add(self, rhs: Expr) -> Expr {
+        simplify(&Expr::Add(vec![self, rhs]))
+    }
+}
+
+impl std::ops::Sub for Expr {
+    type Output = Expr;
+    fn sub(self, rhs: Expr) -> Expr {
+        simplify(&Expr::Add(vec![
+            self,
+            Expr::Mul(vec![Expr::Int(-1), rhs]),
+        ]))
+    }
+}
+
+impl std::ops::Mul for Expr {
+    type Output = Expr;
+    fn mul(self, rhs: Expr) -> Expr {
+        simplify(&Expr::Mul(vec![self, rhs]))
+    }
+}
+
+impl std::ops::Neg for Expr {
+    type Output = Expr;
+    fn neg(self) -> Expr {
+        simplify(&Expr::Mul(vec![Expr::Int(-1), self]))
+    }
+}
+
+impl From<i64> for Expr {
+    fn from(v: i64) -> Expr {
+        Expr::Int(v)
+    }
+}
+
+impl From<Sym> for Expr {
+    fn from(s: Sym) -> Expr {
+        Expr::Sym(s)
+    }
+}
+
+/// Convenience constructors used by kernel builders and tests.
+pub fn sym(name: &str) -> Expr {
+    Expr::Sym(Sym::new(name))
+}
+
+pub fn psym(name: &str) -> Expr {
+    Expr::Sym(Sym::positive(name))
+}
+
+pub fn int(v: i64) -> Expr {
+    Expr::Int(v)
+}
+
+pub fn load(c: ContainerId, off: Expr) -> Expr {
+    Expr::Load(c, Box::new(off))
+}
+
+pub fn min(a: Expr, b: Expr) -> Expr {
+    simplify(&Expr::Min(Box::new(a), Box::new(b)))
+}
+
+pub fn max(a: Expr, b: Expr) -> Expr {
+    simplify(&Expr::Max(Box::new(a), Box::new(b)))
+}
+
+pub fn floordiv(a: Expr, b: Expr) -> Expr {
+    simplify(&Expr::FloorDiv(Box::new(a), Box::new(b)))
+}
+
+pub fn imod(a: Expr, b: Expr) -> Expr {
+    simplify(&Expr::Mod(Box::new(a), Box::new(b)))
+}
+
+pub fn func(k: FuncKind, args: Vec<Expr>) -> Expr {
+    simplify(&Expr::Func(k, args))
+}
+
+/// Compute-expression division: `a * recip(b)`.
+pub fn fdiv(a: Expr, b: Expr) -> Expr {
+    simplify(&Expr::Mul(vec![
+        a,
+        Expr::Func(FuncKind::Recip, vec![b]),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_stable() {
+        let a = Sym::new("interning_a");
+        let b = Sym::new("interning_a");
+        assert_eq!(a, b);
+        assert_eq!(a.name(), "interning_a");
+    }
+
+    #[test]
+    fn positive_assumption_sticks() {
+        let n = Sym::positive("interning_n");
+        assert!(n.assumptions().positive);
+        // Re-interning by plain name keeps the assumption.
+        let n2 = Sym::new("interning_n");
+        assert!(n2.assumptions().positive);
+    }
+
+    #[test]
+    fn fresh_never_collides() {
+        let a = Sym::fresh("tmp");
+        let b = Sym::fresh("tmp");
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn symbols_and_depends_on() {
+        let i = Sym::new("expr_i");
+        let j = Sym::new("expr_j");
+        let e = Expr::Add(vec![Expr::Sym(i), Expr::Mul(vec![Expr::Int(3), Expr::Sym(j)])]);
+        let syms = e.symbols();
+        assert!(syms.contains(&i) && syms.contains(&j));
+        assert!(e.depends_on(i));
+        assert!(!e.depends_on(Sym::new("expr_k")));
+    }
+
+    #[test]
+    fn real_bits_roundtrip() {
+        let e = Expr::real(2.5);
+        assert_eq!(e.real_value(), Some(2.5));
+    }
+}

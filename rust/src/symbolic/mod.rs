@@ -1,0 +1,26 @@
+//! The symbolic-algebra engine underpinning SILO's inductive loop analysis.
+//!
+//! This is the in-crate replacement for the paper's use of SymPy (§5): a
+//! small computer-algebra system covering exactly the fragment the
+//! analyses need — canonicalized expressions, multivariate polynomials with
+//! exact division, substitution/shifting, sign queries under assumptions,
+//! and the δ-equation solver of §3.2/§3.3.
+
+pub mod assume;
+pub mod eval;
+pub mod expr;
+pub mod fmt;
+pub mod poly;
+pub mod simplify;
+pub mod solve;
+pub mod subs;
+
+pub use assume::{is_nonneg, is_positive, is_zero, Truth};
+pub use expr::{
+    fdiv, floordiv, func, imod, int, load, max, min, psym, sym, Assumptions, ContainerId, Expr,
+    FuncKind, Sym,
+};
+pub use poly::{poly_diff, sym_eq, to_poly, Atom, Monomial, Poly};
+pub use simplify::simplify;
+pub use solve::{solve_delta, solve_linear, DeltaSolution, ShiftDir};
+pub use subs::{shift, subs, subs_many};

@@ -1,0 +1,483 @@
+//! Canonical multivariate polynomials over integer coefficients.
+//!
+//! The δ-dependence test at the heart of SILO (paper §3.2.2/§3.3.1) solves
+//! `f(L) − g(L ± δ·stride) = 0` for δ. For the expression fragment HPC index
+//! arithmetic lives in — sums/products of loop variables, array strides and
+//! constants — this is polynomial algebra. Non-polynomial subexpressions
+//! (`log2(i)`, `floordiv`, `mod`, `min/max`, loads) become *uninterpreted
+//! atoms*: equal canonical arguments ⇒ equal atoms. That preserves the
+//! injectivity reasoning of the paper and degrades to its conservative
+//! over-approximation everywhere else.
+
+use std::collections::BTreeMap;
+
+use super::expr::{Expr, Sym};
+use super::simplify::simplify;
+
+/// An indivisible multiplicand: either a symbol or an opaque subexpression.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Atom {
+    Sym(Sym),
+    /// Canonicalized non-polynomial subexpression (FloorDiv, Mod, Min, Max,
+    /// Func, Load) treated as an opaque variable.
+    Opaque(Expr),
+}
+
+impl Atom {
+    pub fn to_expr(&self) -> Expr {
+        match self {
+            Atom::Sym(s) => Expr::Sym(*s),
+            Atom::Opaque(e) => e.clone(),
+        }
+    }
+
+    /// Does this atom (transitively) mention symbol `s`?
+    pub fn depends_on(&self, s: Sym) -> bool {
+        match self {
+            Atom::Sym(x) => *x == s,
+            Atom::Opaque(e) => e.depends_on(s),
+        }
+    }
+}
+
+/// A monomial: sorted `(atom, power)` pairs, powers ≥ 1. Empty = constant 1.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Monomial(pub Vec<(Atom, u32)>);
+
+impl Monomial {
+    pub fn one() -> Monomial {
+        Monomial(Vec::new())
+    }
+
+    pub fn var(a: Atom) -> Monomial {
+        Monomial(vec![(a, 1)])
+    }
+
+    pub fn degree(&self) -> u32 {
+        self.0.iter().map(|(_, p)| p).sum()
+    }
+
+    pub fn degree_in(&self, a: &Atom) -> u32 {
+        self.0
+            .iter()
+            .find(|(x, _)| x == a)
+            .map(|(_, p)| *p)
+            .unwrap_or(0)
+    }
+
+    pub fn mul(&self, other: &Monomial) -> Monomial {
+        let mut map: BTreeMap<Atom, u32> = BTreeMap::new();
+        for (a, p) in self.0.iter().chain(other.0.iter()) {
+            *map.entry(a.clone()).or_insert(0) += p;
+        }
+        Monomial(map.into_iter().collect())
+    }
+
+    /// self / other, if other's atoms all divide self.
+    pub fn div(&self, other: &Monomial) -> Option<Monomial> {
+        let mut map: BTreeMap<Atom, u32> = self.0.iter().cloned().collect();
+        for (a, p) in &other.0 {
+            let have = map.get_mut(a)?;
+            if *have < *p {
+                return None;
+            }
+            *have -= p;
+            if *have == 0 {
+                map.remove(a);
+            }
+        }
+        Some(Monomial(map.into_iter().collect()))
+    }
+
+    /// Strip all powers of atom `a`, returning (remaining monomial, power).
+    pub fn without(&self, a: &Atom) -> (Monomial, u32) {
+        let mut p = 0;
+        let rest: Vec<(Atom, u32)> = self
+            .0
+            .iter()
+            .filter(|(x, q)| {
+                if x == a {
+                    p = *q;
+                    false
+                } else {
+                    true
+                }
+            })
+            .cloned()
+            .collect();
+        (Monomial(rest), p)
+    }
+
+    pub fn to_expr(&self) -> Expr {
+        let factors: Vec<Expr> = self
+            .0
+            .iter()
+            .map(|(a, p)| {
+                if *p == 1 {
+                    a.to_expr()
+                } else {
+                    Expr::Pow(Box::new(a.to_expr()), *p)
+                }
+            })
+            .collect();
+        match factors.len() {
+            0 => Expr::Int(1),
+            1 => factors.into_iter().next().unwrap(),
+            _ => simplify(&Expr::Mul(factors)),
+        }
+    }
+}
+
+/// Multivariate polynomial: monomial → nonzero integer coefficient.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Poly(pub BTreeMap<Monomial, i64>);
+
+impl Poly {
+    pub fn zero() -> Poly {
+        Poly(BTreeMap::new())
+    }
+
+    pub fn constant(c: i64) -> Poly {
+        let mut p = Poly::zero();
+        if c != 0 {
+            p.0.insert(Monomial::one(), c);
+        }
+        p
+    }
+
+    pub fn var(a: Atom) -> Poly {
+        let mut p = Poly::zero();
+        p.0.insert(Monomial::var(a), 1);
+        p
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn as_constant(&self) -> Option<i64> {
+        if self.0.is_empty() {
+            return Some(0);
+        }
+        if self.0.len() == 1 {
+            if let Some(c) = self.0.get(&Monomial::one()) {
+                return Some(*c);
+            }
+        }
+        None
+    }
+
+    pub fn add(&self, other: &Poly) -> Poly {
+        let mut out = self.0.clone();
+        for (m, c) in &other.0 {
+            let e = out.entry(m.clone()).or_insert(0);
+            *e += c;
+            if *e == 0 {
+                out.remove(m);
+            }
+        }
+        Poly(out)
+    }
+
+    pub fn neg(&self) -> Poly {
+        Poly(self.0.iter().map(|(m, c)| (m.clone(), -c)).collect())
+    }
+
+    pub fn sub(&self, other: &Poly) -> Poly {
+        self.add(&other.neg())
+    }
+
+    pub fn mul(&self, other: &Poly) -> Poly {
+        let mut out: BTreeMap<Monomial, i64> = BTreeMap::new();
+        for (m1, c1) in &self.0 {
+            for (m2, c2) in &other.0 {
+                let m = m1.mul(m2);
+                let e = out.entry(m.clone()).or_insert(0);
+                *e += c1 * c2;
+                if *e == 0 {
+                    out.remove(&m);
+                }
+            }
+        }
+        Poly(out)
+    }
+
+    pub fn scale(&self, k: i64) -> Poly {
+        if k == 0 {
+            return Poly::zero();
+        }
+        Poly(self.0.iter().map(|(m, c)| (m.clone(), c * k)).collect())
+    }
+
+    pub fn pow(&self, e: u32) -> Poly {
+        let mut acc = Poly::constant(1);
+        for _ in 0..e {
+            acc = acc.mul(self);
+        }
+        acc
+    }
+
+    /// Exact multivariate division: returns `q` with `self = q * d`, if one
+    /// exists with integer coefficients. Long division by `d`'s leading
+    /// monomial under graded-lex order (a genuine monomial order, so each
+    /// step strictly decreases the remainder's leading monomial and the
+    /// loop terminates).
+    pub fn div_exact(&self, d: &Poly) -> Option<Poly> {
+        if d.is_zero() {
+            return None;
+        }
+        let lead = |p: &Poly| -> Option<(Monomial, i64)> {
+            p.0.iter()
+                .max_by(|(a, _), (b, _)| grlex_cmp(a, b))
+                .map(|(m, c)| (m.clone(), *c))
+        };
+        let (dm, dc) = lead(d)?;
+        let mut rem = self.clone();
+        let mut q = Poly::zero();
+        // Safety cap far above any realistic quotient size.
+        for _ in 0..10_000 {
+            if rem.is_zero() {
+                return Some(q);
+            }
+            let (rm, rc) = lead(&rem)?;
+            let mq = rm.div(&dm)?;
+            if rc % dc != 0 {
+                return None;
+            }
+            let qc = rc / dc;
+            let mut t = Poly::zero();
+            t.0.insert(mq, qc);
+            q = q.add(&t);
+            rem = rem.sub(&t.mul(d));
+        }
+        None
+    }
+
+    /// Collect by powers of atom `a`: power → coefficient polynomial
+    /// (free of `a` at the top level; `a` may still hide inside opaque atoms).
+    pub fn collect(&self, a: &Atom) -> BTreeMap<u32, Poly> {
+        let mut out: BTreeMap<u32, Poly> = BTreeMap::new();
+        for (m, c) in &self.0 {
+            let (rest, p) = m.without(a);
+            let entry = out.entry(p).or_insert_with(Poly::zero);
+            let mut t = Poly::zero();
+            t.0.insert(rest, *c);
+            *entry = entry.add(&t);
+        }
+        out.retain(|_, p| !p.is_zero());
+        out
+    }
+
+    /// Highest power of atom `a` at the top level.
+    pub fn degree_in(&self, a: &Atom) -> u32 {
+        self.0.keys().map(|m| m.degree_in(a)).max().unwrap_or(0)
+    }
+
+    /// Does any monomial (incl. inside opaque atoms) depend on symbol `s`?
+    pub fn depends_on(&self, s: Sym) -> bool {
+        self.0
+            .keys()
+            .any(|m| m.0.iter().any(|(a, _)| a.depends_on(s)))
+    }
+
+    pub fn to_expr(&self) -> Expr {
+        let terms: Vec<Expr> = self
+            .0
+            .iter()
+            .map(|(m, c)| {
+                if m.0.is_empty() {
+                    Expr::Int(*c)
+                } else if *c == 1 {
+                    m.to_expr()
+                } else {
+                    simplify(&Expr::Mul(vec![Expr::Int(*c), m.to_expr()]))
+                }
+            })
+            .collect();
+        match terms.len() {
+            0 => Expr::Int(0),
+            1 => terms.into_iter().next().unwrap(),
+            _ => simplify(&Expr::Add(terms)),
+        }
+    }
+
+    /// All atoms appearing at the top level.
+    pub fn atoms(&self) -> Vec<Atom> {
+        let mut out: Vec<Atom> = Vec::new();
+        for m in self.0.keys() {
+            for (a, _) in &m.0 {
+                if !out.contains(a) {
+                    out.push(a.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Graded-lexicographic monomial comparison: first by total degree, then
+/// lexicographically over the (sorted) atom exponent vectors. Compatible
+/// with monomial multiplication, as polynomial long division requires.
+pub fn grlex_cmp(a: &Monomial, b: &Monomial) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match a.degree().cmp(&b.degree()) {
+        Ordering::Equal => {}
+        other => return other,
+    }
+    // Merge-walk both sorted atom lists; the first atom where exponents
+    // differ decides (an atom missing on one side has exponent 0; smaller
+    // atoms rank as "earlier variables").
+    let mut ia = a.0.iter().peekable();
+    let mut ib = b.0.iter().peekable();
+    loop {
+        match (ia.peek(), ib.peek()) {
+            (None, None) => return Ordering::Equal,
+            (Some((aa, ap)), Some((ba, bp))) => match aa.cmp(ba) {
+                Ordering::Equal => {
+                    match ap.cmp(bp) {
+                        Ordering::Equal => {
+                            ia.next();
+                            ib.next();
+                        }
+                        other => return other,
+                    }
+                }
+                // `a` has the earlier variable with a positive exponent.
+                Ordering::Less => return Ordering::Greater,
+                Ordering::Greater => return Ordering::Less,
+            },
+            (Some(_), None) => return Ordering::Greater,
+            (None, Some(_)) => return Ordering::Less,
+        }
+    }
+}
+
+/// Convert a canonicalized expression to a polynomial. Returns `None` only
+/// for `Real` constants (polynomials are integer-coefficient; index
+/// expressions never contain reals).
+pub fn to_poly(e: &Expr) -> Option<Poly> {
+    let e = simplify(e);
+    to_poly_inner(&e)
+}
+
+fn to_poly_inner(e: &Expr) -> Option<Poly> {
+    match e {
+        Expr::Int(v) => Some(Poly::constant(*v)),
+        Expr::Real(_) => None,
+        Expr::Sym(s) => Some(Poly::var(Atom::Sym(*s))),
+        Expr::Add(xs) => {
+            let mut acc = Poly::zero();
+            for x in xs {
+                acc = acc.add(&to_poly_inner(x)?);
+            }
+            Some(acc)
+        }
+        Expr::Mul(xs) => {
+            let mut acc = Poly::constant(1);
+            for x in xs {
+                acc = acc.mul(&to_poly_inner(x)?);
+            }
+            Some(acc)
+        }
+        Expr::Pow(b, p) => Some(to_poly_inner(b)?.pow(*p)),
+        // Opaque atoms — keyed by their canonical form.
+        Expr::FloorDiv(..) | Expr::Mod(..) | Expr::Min(..) | Expr::Max(..) | Expr::Func(..)
+        | Expr::Load(..) => Some(Poly::var(Atom::Opaque(e.clone()))),
+    }
+}
+
+/// Symbolic equality via polynomial normal form (falls back to canonical
+/// expression comparison when reals are involved).
+pub fn sym_eq(a: &Expr, b: &Expr) -> bool {
+    match (to_poly(a), to_poly(b)) {
+        (Some(pa), Some(pb)) => pa.sub(&pb).is_zero(),
+        _ => simplify(a) == simplify(b),
+    }
+}
+
+/// `a - b` as a polynomial, when both convert.
+pub fn poly_diff(a: &Expr, b: &Expr) -> Option<Poly> {
+    Some(to_poly(a)?.sub(&to_poly(b)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::expr::{int, psym, sym};
+
+    #[test]
+    fn roundtrip() {
+        let (i, s) = (sym("poly_i"), psym("poly_s"));
+        let e = i.clone() * s.clone() + int(3) * i.clone() + int(7);
+        let p = to_poly(&e).unwrap();
+        assert!(sym_eq(&p.to_expr(), &e));
+    }
+
+    #[test]
+    fn exact_division_by_symbol() {
+        let (i, s) = (sym("pd_i"), psym("pd_s"));
+        // (2*i*s + 4*s) / s = 2*i + 4
+        let num = to_poly(&(int(2) * i.clone() * s.clone() + int(4) * s.clone())).unwrap();
+        let den = to_poly(&s).unwrap();
+        let q = num.div_exact(&den).unwrap();
+        assert!(sym_eq(&q.to_expr(), &(int(2) * i + int(4))));
+    }
+
+    #[test]
+    fn division_fails_when_inexact() {
+        let (i, s) = (sym("pdf_i"), psym("pdf_s"));
+        let num = to_poly(&(i.clone() * s.clone() + int(1))).unwrap();
+        let den = to_poly(&s).unwrap();
+        assert!(num.div_exact(&den).is_none());
+        // coefficient divisibility
+        let num2 = to_poly(&(int(3) * i)).unwrap();
+        let den2 = to_poly(&int(2)).unwrap();
+        assert!(num2.div_exact(&den2).is_none());
+    }
+
+    #[test]
+    fn division_multiterm_divisor() {
+        let (a, b) = (sym("pdm_a"), sym("pdm_b"));
+        // (a^2 - b^2) / (a + b) = a - b
+        let num = to_poly(&(a.clone() * a.clone() - b.clone() * b.clone())).unwrap();
+        let den = to_poly(&(a.clone() + b.clone())).unwrap();
+        let q = num.div_exact(&den).unwrap();
+        assert!(sym_eq(&q.to_expr(), &(a - b)));
+    }
+
+    #[test]
+    fn collect_powers() {
+        let (d, s) = (sym("pc_d"), psym("pc_s"));
+        // 3*d^2 + s*d + 5
+        let e = int(3) * d.clone() * d.clone() + s.clone() * d.clone() + int(5);
+        let p = to_poly(&e).unwrap();
+        let by = p.collect(&Atom::Sym(match d {
+            Expr::Sym(x) => x,
+            _ => unreachable!(),
+        }));
+        assert_eq!(by.len(), 3);
+        assert_eq!(by[&0].as_constant(), Some(5));
+        assert!(sym_eq(&by[&1].to_expr(), &s));
+        assert_eq!(by[&2].as_constant(), Some(3));
+    }
+
+    #[test]
+    fn opaque_atoms_equal_iff_args_equal() {
+        use crate::symbolic::expr::{func, FuncKind};
+        let i = sym("po_i");
+        let a = func(FuncKind::Log2, vec![i.clone()]);
+        let b = func(FuncKind::Log2, vec![i.clone() + int(0)]);
+        assert!(sym_eq(&a, &b));
+        let c = func(FuncKind::Log2, vec![i + int(1)]);
+        assert!(!sym_eq(&a, &c));
+    }
+
+    #[test]
+    fn sym_eq_detects_laplace_stride_identity() {
+        let (i, j) = (sym("pl_i"), sym("pl_j"));
+        let (si, sj) = (psym("pl_si"), psym("pl_sj"));
+        let f = i.clone() * si.clone() + j.clone() * sj.clone();
+        let g = j * sj + i * si;
+        assert!(sym_eq(&f, &g));
+    }
+}

@@ -1,0 +1,417 @@
+//! Canonicalizing simplifier.
+//!
+//! Establishes the canonical-form invariants documented on [`Expr`]:
+//! flattened, sorted n-ary sums/products with folded constants and collected
+//! like terms. Canonical forms make symbolic equality a structural
+//! comparison, which the dependence tests (paper §3.2/§3.3) rely on.
+
+use std::collections::BTreeMap;
+
+use super::expr::{Expr, FuncKind};
+
+/// Fully simplify an expression to canonical form (bottom-up, fixpoint per
+/// node — the rewrite rules here are confluent for the fragment we use).
+pub fn simplify(e: &Expr) -> Expr {
+    match e {
+        Expr::Int(_) | Expr::Real(_) | Expr::Sym(_) => e.clone(),
+        Expr::Add(xs) => simplify_add(xs),
+        Expr::Mul(xs) => simplify_mul(xs),
+        Expr::Pow(b, exp) => simplify_pow(&simplify(b), *exp),
+        Expr::FloorDiv(a, b) => {
+            let (a, b) = (simplify(a), simplify(b));
+            match (&a, &b) {
+                (Expr::Int(x), Expr::Int(y)) if *y != 0 => Expr::Int(x.div_euclid(*y)),
+                (_, Expr::Int(1)) => a,
+                _ if a.is_zero() => Expr::Int(0),
+                _ => Expr::FloorDiv(Box::new(a), Box::new(b)),
+            }
+        }
+        Expr::Mod(a, b) => {
+            let (a, b) = (simplify(a), simplify(b));
+            match (&a, &b) {
+                (Expr::Int(x), Expr::Int(y)) if *y != 0 => Expr::Int(x.rem_euclid(*y)),
+                (_, Expr::Int(1)) => Expr::Int(0),
+                _ if a.is_zero() => Expr::Int(0),
+                _ => Expr::Mod(Box::new(a), Box::new(b)),
+            }
+        }
+        Expr::Min(a, b) => {
+            let (a, b) = (simplify(a), simplify(b));
+            match (&a, &b) {
+                (Expr::Int(x), Expr::Int(y)) => Expr::Int(*x.min(y)),
+                _ if a == b => a,
+                _ => {
+                    // Canonical operand order for commutativity.
+                    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                    Expr::Min(Box::new(lo), Box::new(hi))
+                }
+            }
+        }
+        Expr::Max(a, b) => {
+            let (a, b) = (simplify(a), simplify(b));
+            match (&a, &b) {
+                (Expr::Int(x), Expr::Int(y)) => Expr::Int(*x.max(y)),
+                _ if a == b => a,
+                _ => {
+                    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                    Expr::Max(Box::new(lo), Box::new(hi))
+                }
+            }
+        }
+        Expr::Func(k, args) => {
+            let args: Vec<Expr> = args.iter().map(simplify).collect();
+            // Fold a few numerically-safe cases; otherwise keep uninterpreted.
+            match (k, args.as_slice()) {
+                (FuncKind::Log2, [Expr::Int(v)]) if *v > 0 && (*v as u64).is_power_of_two() => {
+                    Expr::Int((*v as u64).trailing_zeros() as i64)
+                }
+                (FuncKind::Abs, [Expr::Int(v)]) => Expr::Int(v.abs()),
+                _ => Expr::Func(*k, args),
+            }
+        }
+        Expr::Load(c, off) => Expr::Load(*c, Box::new(simplify(off))),
+    }
+}
+
+/// Key identifying a non-constant additive term: the term with its integer
+/// coefficient stripped. `3*i*SJ` → key `i*SJ`, coeff 3.
+fn split_coeff(term: &Expr) -> (i64, Expr) {
+    match term {
+        Expr::Int(v) => (*v, Expr::Int(1)),
+        Expr::Mul(fs) => {
+            let mut coeff = 1i64;
+            let mut rest: Vec<Expr> = Vec::with_capacity(fs.len());
+            for f in fs {
+                if let Expr::Int(v) = f {
+                    coeff = coeff.wrapping_mul(*v);
+                } else {
+                    rest.push(f.clone());
+                }
+            }
+            let key = match rest.len() {
+                0 => Expr::Int(1),
+                1 => rest.pop().unwrap(),
+                _ => Expr::Mul(rest),
+            };
+            (coeff, key)
+        }
+        other => (1, other.clone()),
+    }
+}
+
+fn simplify_add(xs: &[Expr]) -> Expr {
+    // Flatten + simplify children.
+    let mut flat: Vec<Expr> = Vec::with_capacity(xs.len());
+    for x in xs {
+        match simplify(x) {
+            Expr::Add(inner) => flat.extend(inner),
+            other => flat.push(other),
+        }
+    }
+    // Fold real constants separately from ints (mixed arithmetic promotes).
+    let mut int_c: i64 = 0;
+    let mut real_c: f64 = 0.0;
+    let mut has_real = false;
+    let mut terms: BTreeMap<Expr, i64> = BTreeMap::new();
+    let mut real_terms: Vec<Expr> = Vec::new(); // terms with real coefficients kept verbatim
+    for t in flat {
+        match t {
+            Expr::Int(v) => int_c = int_c.wrapping_add(v),
+            Expr::Real(b) => {
+                real_c += f64::from_bits(b);
+                has_real = true;
+            }
+            other => {
+                let (c, key) = split_coeff(&other);
+                if key == Expr::Int(1) {
+                    int_c = int_c.wrapping_add(c);
+                } else if key_has_real(&key) {
+                    real_terms.push(other);
+                } else {
+                    *terms.entry(key).or_insert(0) += c;
+                }
+            }
+        }
+    }
+    let mut out: Vec<Expr> = Vec::new();
+    if has_real {
+        let total = real_c + int_c as f64;
+        if total != 0.0 {
+            out.push(Expr::real(total));
+        }
+    } else if int_c != 0 {
+        out.push(Expr::Int(int_c));
+    }
+    for (key, c) in terms {
+        if c == 0 {
+            continue;
+        }
+        out.push(if c == 1 {
+            key
+        } else {
+            simplify_mul(&[Expr::Int(c), key])
+        });
+    }
+    out.extend(real_terms);
+    match out.len() {
+        0 => Expr::Int(0),
+        1 => out.pop().unwrap(),
+        _ => {
+            out.sort();
+            Expr::Add(out)
+        }
+    }
+}
+
+fn key_has_real(e: &Expr) -> bool {
+    let mut found = false;
+    e.visit(&mut |x| {
+        if matches!(x, Expr::Real(_)) {
+            found = true;
+        }
+    });
+    found
+}
+
+fn simplify_mul(xs: &[Expr]) -> Expr {
+    let mut flat: Vec<Expr> = Vec::with_capacity(xs.len());
+    for x in xs {
+        match simplify(x) {
+            Expr::Mul(inner) => flat.extend(inner),
+            other => flat.push(other),
+        }
+    }
+    let mut int_c: i64 = 1;
+    let mut real_c: f64 = 1.0;
+    let mut has_real = false;
+    // base -> accumulated power
+    let mut powers: BTreeMap<Expr, u32> = BTreeMap::new();
+    for f in flat {
+        match f {
+            Expr::Int(0) => return Expr::Int(0),
+            Expr::Int(v) => int_c = int_c.wrapping_mul(v),
+            Expr::Real(b) => {
+                real_c *= f64::from_bits(b);
+                has_real = true;
+            }
+            Expr::Pow(b, e) => *powers.entry((*b).clone()).or_insert(0) += e,
+            other => *powers.entry(other).or_insert(0) += 1,
+        }
+    }
+    if has_real && real_c == 0.0 {
+        return Expr::real(0.0);
+    }
+    // Fully distribute products over sums so that `(i+1)*S` and `i*S + S`
+    // share one canonical form — polynomial normal form requires expansion.
+    let expandable = powers.keys().any(|b| matches!(b, Expr::Add(_)));
+    if expandable {
+        if let Some(expanded) = expand_product(int_c, real_c, has_real, &powers) {
+            return expanded;
+        }
+    }
+    let mut out: Vec<Expr> = Vec::new();
+    if has_real {
+        let total = real_c * int_c as f64;
+        if total != 1.0 {
+            out.push(Expr::real(total));
+        }
+    } else if int_c != 1 {
+        out.push(Expr::Int(int_c));
+    }
+    for (base, p) in powers {
+        match p {
+            0 => {}
+            1 => out.push(base),
+            _ => out.push(Expr::Pow(Box::new(base), p)),
+        }
+    }
+    match out.len() {
+        0 => Expr::Int(1),
+        1 => out.pop().unwrap(),
+        _ => {
+            out.sort();
+            Expr::Mul(out)
+        }
+    }
+}
+
+/// Distribute a product whose factors include sums. `powers` maps canonical
+/// bases to exponents. Returns `None` if expansion would blow up (> 4096
+/// terms or a sum raised to a power > 4) — the caller then keeps the
+/// unexpanded form.
+fn expand_product(
+    int_c: i64,
+    real_c: f64,
+    has_real: bool,
+    powers: &BTreeMap<Expr, u32>,
+) -> Option<Expr> {
+    // Each factor contributes a list of addends (non-sums contribute one).
+    let mut factor_sums: Vec<Vec<Expr>> = Vec::new();
+    for (base, p) in powers {
+        match base {
+            Expr::Add(ts) => {
+                if *p > 4 {
+                    return None;
+                }
+                for _ in 0..*p {
+                    factor_sums.push(ts.clone());
+                }
+            }
+            other => {
+                let f = if *p == 1 {
+                    other.clone()
+                } else {
+                    Expr::Pow(Box::new(other.clone()), *p)
+                };
+                factor_sums.push(vec![f]);
+            }
+        }
+    }
+    let head = if has_real {
+        Expr::real(real_c * int_c as f64)
+    } else {
+        Expr::Int(int_c)
+    };
+    let mut acc: Vec<Expr> = vec![head];
+    for addends in &factor_sums {
+        let mut next: Vec<Expr> = Vec::with_capacity(acc.len() * addends.len());
+        for a in &acc {
+            for t in addends {
+                // Terms of canonical sums are themselves Add-free, so this
+                // recursion cannot re-enter expansion unboundedly.
+                next.push(simplify_mul(&[a.clone(), t.clone()]));
+            }
+        }
+        if next.len() > 4096 {
+            return None;
+        }
+        acc = next;
+    }
+    Some(simplify_add(&acc))
+}
+
+fn simplify_pow(base: &Expr, exp: u32) -> Expr {
+    match exp {
+        0 => Expr::Int(1),
+        1 => base.clone(),
+        _ => match base {
+            Expr::Int(v) => {
+                if let Some(r) = v.checked_pow(exp) {
+                    Expr::Int(r)
+                } else {
+                    Expr::Pow(Box::new(base.clone()), exp)
+                }
+            }
+            Expr::Real(b) => Expr::real(f64::from_bits(*b).powi(exp as i32)),
+            Expr::Pow(inner, e2) => Expr::Pow(inner.clone(), e2 * exp),
+            // Expand small powers of sums for canonical polynomial form.
+            Expr::Add(_) if exp <= 4 => simplify_mul(&vec![base.clone(); exp as usize]),
+            _ => Expr::Pow(Box::new(base.clone()), exp),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::expr::{int, psym, sym};
+
+    #[test]
+    fn constant_folding() {
+        assert_eq!(int(2) + int(3), int(5));
+        assert_eq!(int(2) * int(3), int(6));
+        assert_eq!(int(7) - int(7), int(0));
+    }
+
+    #[test]
+    fn like_terms_collect() {
+        let i = sym("simp_i");
+        let e = i.clone() + i.clone() + i.clone();
+        assert_eq!(e, int(3) * i);
+    }
+
+    #[test]
+    fn cancellation() {
+        let i = sym("simp_i2");
+        let e = (i.clone() + int(5)) - (i.clone() + int(5));
+        assert_eq!(e, int(0));
+    }
+
+    #[test]
+    fn distribution_canonicalizes() {
+        let (a, b) = (sym("simp_a"), sym("simp_b"));
+        let lhs = int(2) * (a.clone() + b.clone());
+        let rhs = int(2) * a + int(2) * b;
+        assert_eq!(lhs, rhs);
+    }
+
+    #[test]
+    fn mul_zero_annihilates() {
+        let x = sym("simp_x");
+        assert_eq!(x * int(0), int(0));
+    }
+
+    #[test]
+    fn pow_collection() {
+        let x = sym("simp_px");
+        let e = x.clone() * x.clone() * x.clone();
+        assert_eq!(e, Expr::Pow(Box::new(x), 3));
+    }
+
+    #[test]
+    fn commutative_canonical_order() {
+        let (a, b) = (sym("simp_ca"), sym("simp_cb"));
+        assert_eq!(a.clone() + b.clone(), b.clone() + a.clone());
+        assert_eq!(a.clone() * b.clone(), b * a);
+    }
+
+    #[test]
+    fn floordiv_mod_folding() {
+        use crate::symbolic::expr::{floordiv, imod};
+        assert_eq!(floordiv(int(7), int(2)), int(3));
+        assert_eq!(imod(int(7), int(2)), int(1));
+        assert_eq!(floordiv(int(-7), int(2)), int(-4)); // euclidean
+        let x = sym("simp_fd");
+        assert_eq!(floordiv(x.clone(), int(1)), x.clone());
+        assert_eq!(imod(x, int(1)), int(0));
+    }
+
+    #[test]
+    fn min_max_folding() {
+        use crate::symbolic::expr::{max, min};
+        assert_eq!(min(int(3), int(5)), int(3));
+        assert_eq!(max(int(3), int(5)), int(5));
+        let x = sym("simp_mm");
+        assert_eq!(min(x.clone(), x.clone()), x.clone());
+        // commutative canonicalization
+        let n = psym("simp_mmn");
+        assert_eq!(min(x.clone(), n.clone()), min(n, x));
+    }
+
+    #[test]
+    fn log2_power_of_two_folds() {
+        use crate::symbolic::expr::func;
+        assert_eq!(func(FuncKind::Log2, vec![int(8)]), int(3));
+        // non-power-of-two stays symbolic
+        let e = func(FuncKind::Log2, vec![int(6)]);
+        assert!(matches!(e, Expr::Func(FuncKind::Log2, _)));
+    }
+
+    #[test]
+    fn real_arithmetic() {
+        let e = Expr::real(1.5) + Expr::real(2.5);
+        assert_eq!(e.real_value(), Some(4.0));
+        let m = Expr::real(2.0) * int(3);
+        assert_eq!(m.real_value(), Some(6.0));
+    }
+
+    #[test]
+    fn laplace_offset_equivalence() {
+        // (i+1)*isI + j*isJ - (i*isI + j*isJ) == isI  — the Fig. 1 pattern.
+        let (i, j) = (sym("simp_li"), sym("simp_lj"));
+        let (is_i, is_j) = (psym("simp_isI"), psym("simp_isJ"));
+        let f1 = (i.clone() + int(1)) * is_i.clone() + j.clone() * is_j.clone();
+        let f0 = i * is_i.clone() + j * is_j;
+        assert_eq!(f1 - f0, is_i);
+    }
+}

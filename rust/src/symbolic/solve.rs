@@ -1,0 +1,355 @@
+//! Equation solving for the inductive dependence tests.
+//!
+//! The paper's central machinery (§3.2.2, §3.3.1): given access offsets
+//! `f`, `g` and a loop `(var, stride)`, decide whether
+//! `∃ δ > 0 : f(var) = g(var ± δ·stride)` and produce δ.
+//!
+//! We form `f − g[var → var ± δ·stride]` as a polynomial in a fresh δ
+//! symbol and solve:
+//! * degree 0, nonzero ⇒ no solution (accesses never collide across
+//!   iterations);
+//! * degree 0, zero ⇒ same address every iteration (`δ = 0`,
+//!   loop-independent or all-iterations conflict — callers distinguish);
+//! * degree 1 ⇒ δ = −b/a by exact polynomial division;
+//! * degree 2 with constant coefficients ⇒ integer root search;
+//! * anything else ⇒ `Unsolvable` (callers over-approximate, as the paper
+//!   prescribes).
+
+use super::assume::{is_positive, is_zero, Truth};
+use super::expr::{Expr, Sym};
+use super::poly::{to_poly, Atom, Poly};
+use super::subs::subs;
+
+/// Result of solving `f(var) = g(var + dir·δ·stride)` for δ.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DeltaSolution {
+    /// No δ exists: the two accesses never alias across iterations.
+    NoSolution,
+    /// The accesses alias at every iteration distance (f ≡ g at δ = 0 and
+    /// the shifted difference vanished identically).
+    AlwaysEqual,
+    /// A unique symbolic δ. `positive` reports whether δ > 0 is provable
+    /// under the symbol assumptions.
+    Unique { delta: Expr, positive: Truth },
+    /// The equation is outside the solvable fragment; callers must
+    /// over-approximate conservatively.
+    Unsolvable,
+}
+
+/// Direction of the iteration shift in the dependence test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShiftDir {
+    /// `g(var + δ·stride)` — a *later* iteration (WAR / input-dependency
+    /// test, paper §3.2.2).
+    Later,
+    /// `g(var − δ·stride)` — an *earlier* iteration (RAW / synchronization
+    /// test, paper §3.3.1).
+    Earlier,
+}
+
+/// Solve `f(var) = g(var ± δ·stride) ` for δ.
+pub fn solve_delta(f: &Expr, g: &Expr, var: Sym, stride: &Expr, dir: ShiftDir) -> DeltaSolution {
+    let delta = Sym::fresh("δ");
+    let sign = match dir {
+        ShiftDir::Later => Expr::Int(1),
+        ShiftDir::Earlier => Expr::Int(-1),
+    };
+    let shift_amount = sign * Expr::Sym(delta) * stride.clone();
+    let g_shifted = subs(g, var, &(Expr::Sym(var) + shift_amount));
+    let diff = f.clone() - g_shifted;
+
+    let Some(p) = to_poly(&diff) else {
+        return DeltaSolution::Unsolvable;
+    };
+    solve_poly_for(&p, delta)
+}
+
+/// Solve polynomial equation `p = 0` for symbol `x`.
+pub fn solve_poly_for(p: &Poly, x: Sym) -> DeltaSolution {
+    let ax = Atom::Sym(x);
+    // If x hides inside an opaque atom we cannot solve.
+    for a in p.atoms() {
+        if a != ax && a.depends_on(x) {
+            return DeltaSolution::Unsolvable;
+        }
+    }
+    let by_power = p.collect(&ax);
+    let degree = by_power.keys().max().copied().unwrap_or(0);
+    match degree {
+        0 => {
+            let c = by_power.get(&0).cloned().unwrap_or_else(Poly::zero);
+            if c.is_zero() {
+                DeltaSolution::AlwaysEqual
+            } else if is_zero(&c.to_expr()) == Truth::Unknown {
+                // Symbolic constant that *could* be zero ⇒ can't rule out a
+                // collision; treat as unsolvable (conservative).
+                DeltaSolution::Unsolvable
+            } else {
+                DeltaSolution::NoSolution
+            }
+        }
+        1 => {
+            let a = by_power.get(&1).cloned().unwrap_or_else(Poly::zero);
+            let b = by_power.get(&0).cloned().unwrap_or_else(Poly::zero);
+            if a.is_zero() {
+                return DeltaSolution::Unsolvable;
+            }
+            // δ = -b / a  (must divide exactly over the polynomial ring —
+            // otherwise there is no *uniform symbolic* integer solution).
+            if b.is_zero() {
+                return DeltaSolution::Unique {
+                    delta: Expr::Int(0),
+                    positive: Truth::No,
+                };
+            }
+            match b.neg().div_exact(&a) {
+                Some(q) => {
+                    let delta = q.to_expr();
+                    let positive = is_positive(&delta);
+                    DeltaSolution::Unique { delta, positive }
+                }
+                None => {
+                    // If a is a nonzero integer constant and b is constant,
+                    // there is genuinely no integer solution.
+                    if a.as_constant().is_some() && b.as_constant().is_some() {
+                        DeltaSolution::NoSolution
+                    } else if let Some(bc) = b.as_constant() {
+                        // δ = -b/a with symbolic a: an integer solution
+                        // needs |a| ≤ |b|; a provable lower bound on a
+                        // beyond |b| rules it out (linearized multidim
+                        // accesses: δ·M = c with extent M ≥ 2 > |c|).
+                        let lb = super::assume::lower_bound(&a.to_expr())
+                            .or_else(|| super::assume::lower_bound(&a.neg().to_expr()));
+                        match lb {
+                            Some(lb) if lb > bc.abs() => DeltaSolution::NoSolution,
+                            _ => DeltaSolution::Unsolvable,
+                        }
+                    } else {
+                        DeltaSolution::Unsolvable
+                    }
+                }
+            }
+        }
+        2 => {
+            // Constant-coefficient quadratics only: search integer roots.
+            let c2 = by_power.get(&2).and_then(|p| p.as_constant());
+            let c1 = by_power.get(&1).and_then(|p| p.as_constant()).or(Some(0));
+            let c0 = by_power.get(&0).and_then(|p| p.as_constant()).or(Some(0));
+            match (c2, c1, c0) {
+                (Some(a2), Some(a1), Some(a0)) if a2 != 0 => {
+                    let disc = a1 * a1 - 4 * a2 * a0;
+                    if disc < 0 {
+                        return DeltaSolution::NoSolution;
+                    }
+                    let root = (disc as f64).sqrt() as i64;
+                    for r in [root - 1, root, root + 1] {
+                        if r >= 0 && r * r == disc {
+                            let num = -a1 + r;
+                            if num % (2 * a2) == 0 {
+                                let d = num / (2 * a2);
+                                return DeltaSolution::Unique {
+                                    delta: Expr::Int(d),
+                                    positive: if d > 0 { Truth::Yes } else { Truth::No },
+                                };
+                            }
+                            let num2 = -a1 - r;
+                            if num2 % (2 * a2) == 0 {
+                                let d = num2 / (2 * a2);
+                                return DeltaSolution::Unique {
+                                    delta: Expr::Int(d),
+                                    positive: if d > 0 { Truth::Yes } else { Truth::No },
+                                };
+                            }
+                        }
+                    }
+                    DeltaSolution::NoSolution
+                }
+                _ => DeltaSolution::Unsolvable,
+            }
+        }
+        _ => DeltaSolution::Unsolvable,
+    }
+}
+
+/// Solve the linear equation `e = 0` for symbol `x`, returning the unique
+/// symbolic solution if one exists (used by pointer-increment Δ checks and
+/// tests).
+pub fn solve_linear(e: &Expr, x: Sym) -> Option<Expr> {
+    let p = to_poly(e)?;
+    match solve_poly_for(&p, x) {
+        DeltaSolution::Unique { delta, .. } => Some(delta),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::expr::{int, psym, sym, Expr};
+
+    fn var(name: &str) -> (Sym, Expr) {
+        let s = Sym::new(name);
+        (s, Expr::Sym(s))
+    }
+
+    #[test]
+    fn unit_stride_raw() {
+        // f = i-1 (read), g = i (write of previous iterations): solve
+        // f(i) = g(i - δ·1) ⇒ i-1 = i-δ ⇒ δ = 1.
+        let (i, ie) = var("slv_i");
+        let f = ie.clone() - int(1);
+        let g = ie.clone();
+        match solve_delta(&f, &g, i, &int(1), ShiftDir::Earlier) {
+            DeltaSolution::Unique { delta, positive } => {
+                assert_eq!(delta, int(1));
+                assert_eq!(positive, Truth::Yes);
+            }
+            other => panic!("expected unique, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parametric_stride() {
+        // Accesses i*SI: f(i) = g(i - δ·1) with g = (i)*SI, f = (i-2)*SI
+        // ⇒ (i-2)SI = (i-δ)SI ⇒ δ = 2 — stride symbol divides out exactly.
+        let (i, ie) = var("slv_pi");
+        let si = psym("slv_SI");
+        let f = (ie.clone() - int(2)) * si.clone();
+        let g = ie.clone() * si.clone();
+        match solve_delta(&f, &g, i, &int(1), ShiftDir::Earlier) {
+            DeltaSolution::Unique { delta, positive } => {
+                assert_eq!(delta, int(2));
+                assert_eq!(positive, Truth::Yes);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn symbolic_loop_stride() {
+        // Loop stride is a parameter S; write g = i, read f = i - S.
+        // f(i) = g(i - δ·S) ⇒ i - S = i - δS ⇒ δ = 1.
+        let (i, ie) = var("slv_si");
+        let s = psym("slv_S");
+        let f = ie.clone() - s.clone();
+        let g = ie.clone();
+        match solve_delta(&f, &g, i, &s, ShiftDir::Earlier) {
+            DeltaSolution::Unique { delta, positive } => {
+                assert_eq!(delta, int(1));
+                assert_eq!(positive, Truth::Yes);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_dependency_between_distinct_offsets() {
+        // f = 2i, g = 2i+1: 2i - (2(i-δ)+1) = 2δ - 1 = 0 has no integer δ.
+        let (i, ie) = var("slv_ni");
+        let f = int(2) * ie.clone();
+        let g = int(2) * ie.clone() + int(1);
+        assert_eq!(
+            solve_delta(&f, &g, i, &int(1), ShiftDir::Earlier),
+            DeltaSolution::NoSolution
+        );
+    }
+
+    #[test]
+    fn always_equal_detected() {
+        // Same loop-invariant offset on both sides: n vs n.
+        let (i, _ie) = var("slv_ai");
+        let n = psym("slv_n");
+        assert_eq!(
+            solve_delta(&n, &n, i, &int(1), ShiftDir::Earlier),
+            DeltaSolution::AlwaysEqual
+        );
+    }
+
+    #[test]
+    fn later_iteration_war() {
+        // Input dependency (paper Fig. 4: C read at k+1, written at k):
+        // f = i+1 (read), g = i (write): f(i) = g(i + δ) ⇒ δ = 1.
+        let (i, ie) = var("slv_wi");
+        let f = ie.clone() + int(1);
+        let g = ie.clone();
+        match solve_delta(&f, &g, i, &int(1), ShiftDir::Later) {
+            DeltaSolution::Unique { delta, positive } => {
+                assert_eq!(delta, int(1));
+                assert_eq!(positive, Truth::Yes);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn descending_loop() {
+        // stride = -1, read f = i+1, write g = i:
+        // f(i) = g(i - δ·(-1)) = i + δ ⇒ δ = 1 (works for descending order,
+        // as claimed in §3.2.2).
+        let (i, ie) = var("slv_di");
+        let f = ie.clone() + int(1);
+        let g = ie.clone();
+        match solve_delta(&f, &g, i, &int(-1), ShiftDir::Earlier) {
+            DeltaSolution::Unique { delta, positive } => {
+                assert_eq!(delta, int(1));
+                assert_eq!(positive, Truth::Yes);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn nonlinear_is_conservative() {
+        use crate::symbolic::expr::{func, FuncKind};
+        // a[log2(i)] (read) vs a[i] (write): δ = i - log2(i) is formally a
+        // linear solution whose positivity cannot be proven — the caller
+        // must treat this conservatively. The key property: never
+        // `NoSolution` (which would wrongly license parallelization).
+        let (i, ie) = var("slv_li");
+        let f = func(FuncKind::Log2, vec![ie.clone()]);
+        let g = ie.clone();
+        match solve_delta(&f, &g, i, &int(1), ShiftDir::Earlier) {
+            DeltaSolution::NoSolution => panic!("unsound: claimed independence"),
+            DeltaSolution::Unique { positive, .. } => assert_ne!(positive, Truth::Yes),
+            _ => {}
+        }
+    }
+
+    #[test]
+    fn log2_self_dependence_no_solution_pattern() {
+        use crate::symbolic::expr::{func, FuncKind};
+        // Fig. 2 left: writes a[log2(i)] with stride i (i += i). Two
+        // iterations write log2(i) and log2(2i) — distinct opaque atoms,
+        // solver says Unsolvable (conservative), never a wrong "parallel".
+        let (i, ie) = var("slv_l2i");
+        let f = func(FuncKind::Log2, vec![ie.clone()]);
+        match solve_delta(&f, &f, i, &ie, ShiftDir::Earlier) {
+            DeltaSolution::Unsolvable => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn quadratic_constant_coeffs() {
+        // δ² - 3δ + 2 = 0 ⇒ δ ∈ {1, 2}; solver returns one positive root.
+        let d = Sym::fresh("slv_q");
+        let de = Expr::Sym(d);
+        let p = to_poly(&(de.clone() * de.clone() - int(3) * de + int(2))).unwrap();
+        match solve_poly_for(&p, d) {
+            DeltaSolution::Unique { delta, positive } => {
+                assert!(delta == int(1) || delta == int(2));
+                assert_eq!(positive, Truth::Yes);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_linear_api() {
+        let (x, xe) = var("slv_lin");
+        let n = psym("slv_ln");
+        // 2x - 4n = 0 ⇒ x = 2n
+        let sol = solve_linear(&(int(2) * xe - int(4) * n.clone()), x).unwrap();
+        assert_eq!(sol, int(2) * n);
+    }
+}

@@ -1,0 +1,75 @@
+//! Substitution of symbols by expressions (with re-simplification).
+
+use super::expr::{Expr, Sym};
+use super::simplify::simplify;
+
+/// Substitute `target → replacement` everywhere in `e`, then canonicalize.
+pub fn subs(e: &Expr, target: Sym, replacement: &Expr) -> Expr {
+    let mapped = e.map(&|x| match x {
+        Expr::Sym(s) if *s == target => replacement.clone(),
+        other => other.clone(),
+    });
+    simplify(&mapped)
+}
+
+/// Simultaneous substitution of several symbols.
+pub fn subs_many(e: &Expr, pairs: &[(Sym, Expr)]) -> Expr {
+    let mapped = e.map(&|x| match x {
+        Expr::Sym(s) => pairs
+            .iter()
+            .find(|(t, _)| t == s)
+            .map(|(_, r)| r.clone())
+            .unwrap_or_else(|| x.clone()),
+        other => other.clone(),
+    });
+    simplify(&mapped)
+}
+
+/// Shift a symbol by an expression: `e[s → s + delta]`. This is the core
+/// "inductive step" operation: the paper's dependence tests compare an
+/// access at iteration `L_var` against one at `L_var ± δ·L_stride`.
+pub fn shift(e: &Expr, s: Sym, delta: &Expr) -> Expr {
+    subs(e, s, &(Expr::Sym(s) + delta.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::expr::{int, psym, sym};
+
+    #[test]
+    fn basic_subs() {
+        let i = Sym::new("subs_i");
+        let e = Expr::Sym(i) * int(3) + int(1);
+        assert_eq!(subs(&e, i, &int(4)), int(13));
+    }
+
+    #[test]
+    fn shift_by_stride() {
+        let i = Sym::new("subs_si");
+        let s = psym("subs_stride");
+        let e = Expr::Sym(i) * s.clone();
+        // f(i + stride_sym) = i*s + stride_sym*s
+        let shifted = shift(&e, i, &sym("subs_d"));
+        let expect = Expr::Sym(i) * s.clone() + sym("subs_d") * s;
+        assert_eq!(shifted, expect);
+    }
+
+    #[test]
+    fn subs_inside_opaque() {
+        use crate::symbolic::expr::{func, FuncKind};
+        let i = Sym::new("subs_oi");
+        let e = func(FuncKind::Log2, vec![Expr::Sym(i)]);
+        assert_eq!(subs(&e, i, &int(8)), int(3));
+    }
+
+    #[test]
+    fn simultaneous() {
+        let a = Sym::new("subs_ma");
+        let b = Sym::new("subs_mb");
+        let e = Expr::Sym(a) + Expr::Sym(b);
+        // swap a and b simultaneously — must not cascade
+        let r = subs_many(&e, &[(a, Expr::Sym(b)), (b, Expr::Sym(a))]);
+        assert_eq!(r, e);
+    }
+}

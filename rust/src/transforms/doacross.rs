@@ -1,0 +1,342 @@
+//! DOACROSS (pipeline) parallelization of read-after-write dependencies
+//! (paper §3.3).
+//!
+//! After privatization and input-copying have cleared WAW/WAR deps, loops
+//! whose only remaining dependencies are RAW at constant iteration
+//! distance δ can run pipelined: iterations execute concurrently but each
+//! statement that consumes another iteration's value *waits* until the
+//! producing iteration has *released*.
+//!
+//! Three steps, mirroring §3.3.1/§3.3.2:
+//! 1. sync-point identification (δ-solve on every read/write pair);
+//! 2. code motion pushing dependent statements as late as legal;
+//! 3. wait insertion before dependent statements and a single release
+//!    after the post-dominating resolving write (or end-of-body).
+
+use anyhow::Result;
+
+use crate::analysis::deps::{loop_deps, DepDistance, DepKind};
+use crate::analysis::visibility::body_graph;
+use crate::dataflow::dominance::post_dominating_resolver;
+use crate::dataflow::NodeRef;
+use crate::ir::{LoopId, LoopSchedule, Node, Program, ReleaseSpec, StmtId, WaitSpec};
+
+#[derive(Debug, Clone, Default)]
+pub struct DoacrossReport {
+    pub pipelined: Vec<LoopId>,
+    /// Loops considered but skipped, with the reason.
+    pub skipped: Vec<(LoopId, SkipReason)>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SkipReason {
+    /// Unresolved WAR/WAW or non-constant δ — §3.3's "no parallelization is
+    /// possible with this strategy".
+    UnresolvedDependence,
+    /// First statement depends on a previous iteration and no
+    /// post-dominating release exists — no pipelining benefit (§3.3.2).
+    NoPipelineBenefit,
+    /// No RAW dependence at all (DOALL should handle it instead).
+    NoRawDependence,
+}
+
+/// Attempt DOACROSS parallelization of loop `loop_id`.
+pub fn pipeline_doacross(p: &mut Program, loop_id: LoopId) -> Result<DoacrossReport> {
+    let mut report = DoacrossReport::default();
+    let Some(l) = p.find_loop(loop_id).cloned() else {
+        return Ok(report);
+    };
+    if l.is_parallel() {
+        return Ok(report);
+    }
+    let deps = loop_deps(&l, &p.containers);
+    if !deps.has(DepKind::Raw) {
+        report.skipped.push((loop_id, SkipReason::NoRawDependence));
+        return Ok(report);
+    }
+
+    // §3.3.1: every dependence must be RAW at a constant positive δ.
+    let mut waits: Vec<WaitSpec> = Vec::new();
+    let mut resolving_writers: Vec<StmtId> = Vec::new();
+    for d in &deps.deps {
+        match (&d.kind, &d.distance) {
+            (DepKind::Raw, DepDistance::Constant(delta)) if *delta > 0 => {
+                if !waits
+                    .iter()
+                    .any(|w| w.before_stmt == d.sink && w.delta == *delta)
+                {
+                    waits.push(WaitSpec {
+                        before_stmt: d.sink,
+                        delta: *delta,
+                    });
+                }
+                if !resolving_writers.contains(&d.writer) {
+                    resolving_writers.push(d.writer);
+                }
+            }
+            _ => {
+                report
+                    .skipped
+                    .push((loop_id, SkipReason::UnresolvedDependence));
+                return Ok(report);
+            }
+        }
+    }
+
+    // §3.3.2 code motion: reorder the body so wait-carrying elements sit as
+    // late as dataflow allows.
+    let wait_stmts: Vec<StmtId> = waits.iter().map(|w| w.before_stmt).collect();
+    reorder_body_late(p, loop_id, &wait_stmts);
+
+    // Re-resolve the (possibly reordered) loop and compute the release.
+    let l = p.find_loop(loop_id).unwrap().clone();
+    let graph = body_graph(&l, &p.containers);
+    let resolver_indices: Vec<usize> = graph
+        .nodes
+        .iter()
+        .filter(|n| match n.node {
+            NodeRef::Stmt(sid) => resolving_writers.contains(&sid),
+            NodeRef::Loop(lid) => l
+                .find_loop(lid)
+                .map(|inner| {
+                    Node::Loop(inner.clone())
+                        .stmts()
+                        .iter()
+                        .any(|s| resolving_writers.contains(&s.id))
+                })
+                .unwrap_or(false),
+        })
+        .map(|n| n.index)
+        .collect();
+
+    let release = match post_dominating_resolver(&graph, &resolver_indices) {
+        Some(idx) => match graph.nodes[idx].node {
+            NodeRef::Stmt(sid) => ReleaseSpec::AfterStmt(sid),
+            NodeRef::Loop(_) => ReleaseSpec::EndOfBody,
+        },
+        None => {
+            // No post-dominating resolver: release at end — but if the
+            // *first* element also waits, there is no pipeline overlap at
+            // all; skip (§3.3.2).
+            let first_waits = graph.nodes.first().is_some_and(|n| match n.node {
+                NodeRef::Stmt(sid) => wait_stmts.contains(&sid),
+                NodeRef::Loop(lid) => l
+                    .find_loop(lid)
+                    .map(|inner| {
+                        Node::Loop(inner.clone())
+                            .stmts()
+                            .first()
+                            .is_some_and(|s| wait_stmts.contains(&s.id))
+                    })
+                    .unwrap_or(false),
+            });
+            if first_waits {
+                report
+                    .skipped
+                    .push((loop_id, SkipReason::NoPipelineBenefit));
+                return Ok(report);
+            }
+            ReleaseSpec::EndOfBody
+        }
+    };
+
+    set_schedule(
+        p,
+        loop_id,
+        LoopSchedule::Doacross {
+            waits,
+            release,
+        },
+    );
+    report.pipelined.push(loop_id);
+    Ok(report)
+}
+
+/// Apply DOACROSS to every still-sequential loop that qualifies.
+pub fn pipeline_all(p: &mut Program) -> Result<DoacrossReport> {
+    let ids: Vec<LoopId> = p.loops().iter().map(|l| l.id).collect();
+    let mut combined = DoacrossReport::default();
+    for id in ids {
+        let r = pipeline_doacross(p, id)?;
+        combined.pipelined.extend(r.pipelined);
+        combined.skipped.extend(r.skipped);
+    }
+    Ok(combined)
+}
+
+fn set_schedule(p: &mut Program, loop_id: LoopId, sched: LoopSchedule) {
+    p.visit_mut(&mut |n| {
+        if let Node::Loop(l) = n {
+            if l.id == loop_id {
+                l.schedule = sched.clone();
+            }
+        }
+    });
+}
+
+/// Stable list scheduling of the loop body: respect intra-iteration
+/// dataflow edges, prefer placing elements whose statements carry waits as
+/// late as possible.
+fn reorder_body_late(p: &mut Program, loop_id: LoopId, wait_stmts: &[StmtId]) {
+    let l = p.find_loop(loop_id).unwrap().clone();
+    let graph = body_graph(&l, &p.containers);
+    let n = graph.nodes.len();
+    if n <= 1 {
+        return;
+    }
+    // Element carries a wait if any of its statements do.
+    let carries_wait: Vec<bool> = l
+        .body
+        .iter()
+        .map(|node| node.stmts().iter().any(|s| wait_stmts.contains(&s.id)))
+        .collect();
+    // preds[i] = indices that must precede i (dataflow edges in either
+    // direction of hazard: flow, anti, output — reordering must preserve
+    // all intra-iteration hazards, so add edges for shared containers).
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for e in &graph.edges {
+        preds[e.dst].push(e.src);
+    }
+    // Anti/output hazards between elements (writes vs earlier reads/writes
+    // of the same container).
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let wi: Vec<_> = graph.nodes[i].writes.iter().map(|a| a.container).collect();
+            let wj: Vec<_> = graph.nodes[j].writes.iter().map(|a| a.container).collect();
+            let ri: Vec<_> = graph.nodes[i].reads.iter().map(|a| a.container).collect();
+            let war = wj.iter().any(|c| ri.contains(c));
+            let waw = wj.iter().any(|c| wi.contains(c));
+            if (war || waw) && !preds[j].contains(&i) {
+                preds[j].push(i);
+            }
+        }
+    }
+    // Greedy topological order, non-wait elements first.
+    let mut placed = vec![false; n];
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+    while order.len() < n {
+        let mut ready: Vec<usize> = (0..n)
+            .filter(|&i| !placed[i] && preds[i].iter().all(|&pr| placed[pr]))
+            .collect();
+        debug_assert!(!ready.is_empty(), "cyclic body hazards");
+        if ready.is_empty() {
+            return; // give up reordering, keep original
+        }
+        // Prefer non-wait, then original order for stability.
+        ready.sort_by_key(|&i| (carries_wait[i], i));
+        let pick = ready[0];
+        placed[pick] = true;
+        order.push(pick);
+    }
+    if order.iter().enumerate().all(|(a, b)| a == *b) {
+        return; // already in place
+    }
+    let new_body: Vec<Node> = order.iter().map(|&i| l.body[i].clone()).collect();
+    p.visit_mut(&mut |node| {
+        if let Node::Loop(cl) = node {
+            if cl.id == loop_id {
+                cl.body = new_body.clone();
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    /// Fig. 5 right-hand side: after WAW/WAR elimination, the k-loop has
+    /// one RAW at δ=1 ⇒ DOACROSS with wait before the consumer and release
+    /// after the producing write.
+    #[test]
+    fn raw_pipeline_inserted() {
+        let mut b = ProgramBuilder::new("dx1");
+        let n = b.param_positive("dx1_N");
+        let a = b.array("A", Expr::Sym(n) + int(1));
+        let x = b.array("X", Expr::Sym(n) + int(1));
+        let k = b.sym("dx1_k");
+        let kl = b.for_id(k, int(1), Expr::Sym(n), int(1), |b| {
+            // consumer: X[k] = A[k-1]  (RAW δ=1)
+            b.assign(x, Expr::Sym(k), load(a, Expr::Sym(k) - int(1)));
+            // producer: A[k] = X[k] * 2
+            b.assign(a, Expr::Sym(k), load(x, Expr::Sym(k)) * Expr::real(2.0));
+        });
+        let mut p = b.finish();
+        let rep = pipeline_doacross(&mut p, kl).unwrap();
+        assert_eq!(rep.pipelined, vec![kl]);
+        let l = p.find_loop(kl).unwrap();
+        match &l.schedule {
+            LoopSchedule::Doacross { waits, release } => {
+                assert_eq!(waits.len(), 1);
+                assert_eq!(waits[0].delta, 1);
+                // Producer write post-dominates (it's last) ⇒ release after it.
+                assert!(matches!(release, ReleaseSpec::AfterStmt(_)));
+            }
+            other => panic!("expected Doacross, got {other:?}"),
+        }
+        crate::ir::validate::validate(&p).unwrap();
+    }
+
+    /// Unresolved WAW blocks pipelining.
+    #[test]
+    fn waw_blocks_pipeline() {
+        let mut b = ProgramBuilder::new("dx2");
+        let n = b.param_positive("dx2_N");
+        let a = b.array("A", Expr::Sym(n) + int(1));
+        let s = b.array("acc", int(1));
+        let k = b.sym("dx2_k");
+        let kl = b.for_id(k, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(k), load(a, Expr::Sym(k) - int(1)));
+            b.assign(s, int(0), load(s, int(0)) + load(a, Expr::Sym(k)));
+        });
+        let mut p = b.finish();
+        let rep = pipeline_doacross(&mut p, kl).unwrap();
+        assert!(rep.pipelined.is_empty());
+        assert_eq!(rep.skipped[0].1, SkipReason::UnresolvedDependence);
+    }
+
+    /// Code motion: an independent statement after the consumer moves
+    /// before it, shrinking the dependent region.
+    #[test]
+    fn code_motion_moves_consumer_late() {
+        let mut b = ProgramBuilder::new("dx3");
+        let n = b.param_positive("dx3_N");
+        let a = b.array("A", Expr::Sym(n) + int(1));
+        let y = b.array("Y", Expr::Sym(n) + int(1));
+        let z = b.array("Z", Expr::Sym(n) + int(1));
+        let k = b.sym("dx3_k");
+        let kl = b.for_id(k, int(1), Expr::Sym(n), int(1), |b| {
+            // consumer first (would stall the pipeline) ...
+            b.assign(a, Expr::Sym(k), load(a, Expr::Sym(k) - int(1)) + Expr::real(1.0));
+            // ... independent statement second.
+            b.assign(y, Expr::Sym(k), load(z, Expr::Sym(k)) * Expr::real(3.0));
+        });
+        let mut p = b.finish();
+        let rep = pipeline_doacross(&mut p, kl).unwrap();
+        assert_eq!(rep.pipelined, vec![kl]);
+        let l = p.find_loop(kl).unwrap();
+        // Independent Y statement now first.
+        let first = l.body[0].as_stmt().unwrap();
+        assert_eq!(first.write.container, y);
+        crate::ir::validate::validate(&p).unwrap();
+    }
+
+    /// Pure DOALL loop is not pipelined (no RAW).
+    #[test]
+    fn doall_loop_skipped() {
+        let mut b = ProgramBuilder::new("dx4");
+        let n = b.param_positive("dx4_N");
+        let a = b.array("A", Expr::Sym(n));
+        let x = b.array("X", Expr::Sym(n));
+        let i = b.sym("dx4_i");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(x, Expr::Sym(i)));
+        });
+        let mut p = b.finish();
+        let rep = pipeline_doacross(&mut p, il).unwrap();
+        assert!(rep.pipelined.is_empty());
+        assert_eq!(rep.skipped[0].1, SkipReason::NoRawDependence);
+    }
+}

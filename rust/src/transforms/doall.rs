@@ -1,0 +1,122 @@
+//! DOALL parallelization: mark loops with no loop-carried dependencies as
+//! [`LoopSchedule::Parallel`].
+
+use anyhow::Result;
+
+use crate::analysis::loop_deps;
+use crate::ir::{LoopId, LoopSchedule, Node, Program};
+
+#[derive(Debug, Clone, Default)]
+pub struct DoallReport {
+    pub parallelized: Vec<LoopId>,
+}
+
+/// Mark every dependence-free loop in the program as Parallel.
+///
+/// `outermost_only`: stop descending below the first parallelized loop in
+/// each nest (the common OpenMP-style policy — inner parallelism wastes
+/// fork/join overhead once an outer level is parallel).
+pub fn parallelize_doall(p: &mut Program, outermost_only: bool) -> Result<DoallReport> {
+    let mut report = DoallReport::default();
+    let containers = p.containers.clone();
+    fn walk(
+        nodes: &mut [Node],
+        containers: &[crate::ir::Container],
+        outermost_only: bool,
+        under_parallel: bool,
+        report: &mut DoallReport,
+    ) {
+        for n in nodes {
+            if let Node::Loop(l) = n {
+                let mut now_parallel = under_parallel;
+                if matches!(l.schedule, LoopSchedule::Sequential)
+                    && !(outermost_only && under_parallel)
+                {
+                    let deps = loop_deps(l, containers);
+                    if deps.is_doall() {
+                        l.schedule = LoopSchedule::Parallel;
+                        report.parallelized.push(l.id);
+                        now_parallel = true;
+                    }
+                } else if l.is_parallel() {
+                    now_parallel = true;
+                }
+                walk(&mut l.body, containers, outermost_only, now_parallel, report);
+            }
+        }
+    }
+    walk(
+        &mut p.body,
+        &containers,
+        outermost_only,
+        false,
+        &mut report,
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    #[test]
+    fn independent_nest_parallelizes_outer_only() {
+        let mut b = ProgramBuilder::new("da1");
+        let n = b.param_positive("da1_N");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(n));
+        let x = b.array("X", Expr::Sym(n) * Expr::Sym(n));
+        let i = b.sym("da1_i");
+        let j = b.sym("da1_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, int(0), Expr::Sym(n), int(1), |b| {
+                let off = Expr::Sym(i) * Expr::Sym(n) + Expr::Sym(j);
+                b.assign(a, off.clone(), load(x, off) * Expr::real(2.0));
+            });
+        });
+        let mut p = b.finish();
+        let rep = parallelize_doall(&mut p, true).unwrap();
+        assert_eq!(rep.parallelized.len(), 1);
+        let loops = p.loops();
+        assert!(loops[0].is_parallel());
+        assert!(!loops[1].is_parallel());
+    }
+
+    #[test]
+    fn sequential_recurrence_stays_sequential() {
+        let mut b = ProgramBuilder::new("da2");
+        let n = b.param_positive("da2_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("da2_i");
+        b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(a, Expr::Sym(i) - int(1)));
+        });
+        let mut p = b.finish();
+        let rep = parallelize_doall(&mut p, true).unwrap();
+        assert!(rep.parallelized.is_empty());
+        assert!(!p.loops()[0].is_parallel());
+    }
+
+    #[test]
+    fn inner_parallel_under_sequential_outer() {
+        // Outer k has a recurrence, inner i is free: inner parallelizes.
+        let mut b = ProgramBuilder::new("da3");
+        let n = b.param_positive("da3_N");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(n));
+        let k = b.sym("da3_k");
+        let i = b.sym("da3_i");
+        b.for_(k, int(1), Expr::Sym(n), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                let cur = Expr::Sym(k) * Expr::Sym(n) + Expr::Sym(i);
+                let prev = (Expr::Sym(k) - int(1)) * Expr::Sym(n) + Expr::Sym(i);
+                b.assign(a, cur, load(a, prev) * Expr::real(0.5));
+            });
+        });
+        let mut p = b.finish();
+        let rep = parallelize_doall(&mut p, true).unwrap();
+        assert_eq!(rep.parallelized.len(), 1);
+        assert!(!p.loops()[0].is_parallel());
+        assert!(p.loops()[1].is_parallel());
+    }
+}

@@ -1,0 +1,339 @@
+//! Loop fusion (the DaCe-auto-opt-style pass the paper compares against):
+//! fuse adjacent sibling loops with identical `(start, end, stride)` when
+//! the second's reads of the first's writes are pointwise (same symbolic
+//! offset after renaming the loop variable). After fusion, transients that
+//! are only ever accessed at one offset inside the fused body and nowhere
+//! else shrink to scalars ("some arrays being converted to temporary
+//! scalars", §6.1).
+
+use anyhow::Result;
+
+use crate::ir::{ContainerKind, Loop, Node, Program};
+use crate::symbolic::{subs, sym_eq, ContainerId, Expr};
+
+#[derive(Debug, Clone, Default)]
+pub struct FusionReport {
+    pub fused: usize,
+    pub scalarized: Vec<ContainerId>,
+}
+
+/// Fuse where legal, then scalarize single-offset transients.
+pub fn fuse_program(p: &mut Program) -> Result<FusionReport> {
+    let mut report = FusionReport::default();
+    // Top-level fusion sweep, repeated until fixpoint.
+    loop {
+        let fused_this_round = fuse_sequence(&mut p.body);
+        report.fused += fused_this_round;
+        if fused_this_round == 0 {
+            break;
+        }
+    }
+    // Also fuse inside loop bodies (one level is enough for the corpus).
+    let mut bodies_fused = 0;
+    p.visit_mut(&mut |n| {
+        if let Node::Loop(l) = n {
+            bodies_fused += fuse_sequence(&mut l.body);
+        }
+    });
+    report.fused += bodies_fused;
+    report.scalarized = scalarize(p);
+    Ok(report)
+}
+
+/// Try to fuse adjacent loop pairs in a node sequence. Returns fusions done.
+fn fuse_sequence(nodes: &mut Vec<Node>) -> usize {
+    let mut i = 0;
+    let mut fused = 0;
+    while i + 1 < nodes.len() {
+        let can = match (&nodes[i], &nodes[i + 1]) {
+            (Node::Loop(a), Node::Loop(b)) => can_fuse(a, b),
+            _ => false,
+        };
+        if can {
+            let Node::Loop(second) = nodes.remove(i + 1) else {
+                unreachable!()
+            };
+            let Node::Loop(first) = &mut nodes[i] else {
+                unreachable!()
+            };
+            // Rename the second loop's var to the first's throughout.
+            let renamed: Vec<Node> = second
+                .body
+                .into_iter()
+                .map(|n| rename_var(n, second.var, first.var))
+                .collect();
+            first.body.extend(renamed);
+            fused += 1;
+        } else {
+            i += 1;
+        }
+    }
+    fused
+}
+
+fn rename_var(n: Node, from: crate::symbolic::Sym, to: crate::symbolic::Sym) -> Node {
+    let replace = |e: &Expr| subs(e, from, &Expr::Sym(to));
+    match n {
+        Node::Stmt(mut s) => {
+            s.write.offset = replace(&s.write.offset);
+            s.rhs = replace(&s.rhs);
+            s.guard = s.guard.as_ref().map(replace);
+            Node::Stmt(s)
+        }
+        Node::Loop(mut l) => {
+            l.start = replace(&l.start);
+            l.end = replace(&l.end);
+            l.stride = replace(&l.stride);
+            l.body = l
+                .body
+                .into_iter()
+                .map(|c| rename_var(c, from, to))
+                .collect();
+            Node::Loop(l)
+        }
+    }
+}
+
+/// Legality: identical ranges; for every container written by `a` and read
+/// by `b`, all of b's offsets must be pointwise-equal to a's write offsets
+/// (after renaming b's var to a's). Writes-vs-writes likewise must not
+/// collide at different offsets.
+fn can_fuse(a: &Loop, b: &Loop) -> bool {
+    if !(sym_eq(&a.start, &b.start)
+        && sym_eq(&a.end, &subs(&b.end, b.var, &Expr::Sym(a.var)))
+        && sym_eq(&a.stride, &b.stride))
+    {
+        return false;
+    }
+    if a.is_parallel() != b.is_parallel() {
+        return false;
+    }
+    let a_node = Node::Loop(a.clone());
+    let b_writes: Vec<(ContainerId, Expr)> = Node::Loop(b.clone())
+        .stmts()
+        .iter()
+        .map(|s| {
+            (
+                s.write.container,
+                subs(&s.write.offset, b.var, &Expr::Sym(a.var)),
+            )
+        })
+        .collect();
+    for s in a_node.stmts() {
+        let wc = s.write.container;
+        let woff = &s.write.offset;
+        // b reads of wc: pointwise (value flows within the fused
+        // iteration) or provably disjoint across all iteration pairs
+        // (cross-plane reads like cp[k−1] vs the cp[k] write).
+        for bs in Node::Loop(b.clone()).stmts() {
+            for r in bs.reads() {
+                if r.container != wc {
+                    continue;
+                }
+                let roff = subs(&r.offset, b.var, &Expr::Sym(a.var));
+                // Pointwise flow is only sound when the matched offset
+                // varies with the fused variable: a loop-invariant write
+                // (an accumulator like softmax's rowsum[i] inside the j
+                // loop) is not final until the whole loop completes, so a
+                // fused reader would see partial values.
+                if sym_eq(&roff, woff) {
+                    if !woff.depends_on(a.var) {
+                        return false;
+                    }
+                } else if !crate::analysis::provably_independent(&roff, woff, a) {
+                    return false;
+                }
+            }
+        }
+        // b writes of wc: pointwise WAW is fine (same iteration
+        // overwrites); disjoint writes never conflict.
+        for (bc, boff) in &b_writes {
+            if *bc == wc
+                && !sym_eq(boff, woff)
+                && !crate::analysis::provably_independent(boff, woff, a)
+            {
+                return false;
+            }
+        }
+        // Anti-dependence: a's reads vs b's writes — fusing must not let
+        // iteration p of b overwrite what a later iteration of a reads
+        // (the doitgen A-writeback hazard).
+        for r in s.reads() {
+            for (bc, boff) in &b_writes {
+                if *bc == r.container
+                    && !sym_eq(boff, &r.offset)
+                    && !crate::analysis::provably_independent(&r.offset, boff, a)
+                {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Shrink transients to scalars when every access across the program uses
+/// one single symbolic offset *and* all accesses sit inside one loop body
+/// (value never escapes an iteration after fusion). Conservative and
+/// syntactic: requires every access offset to be symbolically identical.
+fn scalarize(p: &mut Program) -> Vec<ContainerId> {
+    let mut out = Vec::new();
+    let candidates: Vec<ContainerId> = p
+        .containers
+        .iter()
+        .filter(|c| c.kind == ContainerKind::Transient && !c.is_scalar())
+        .map(|c| c.id)
+        .collect();
+    for c in candidates {
+        let mut offsets: Vec<Expr> = Vec::new();
+        for s in p.stmts() {
+            if s.write.container == c {
+                offsets.push(s.write.offset.clone());
+            }
+            for r in s.reads() {
+                if r.container == c {
+                    offsets.push(r.offset);
+                }
+            }
+        }
+        if offsets.is_empty() {
+            continue;
+        }
+        let first = offsets[0].clone();
+        if !offsets.iter().all(|o| sym_eq(o, &first)) {
+            continue;
+        }
+        // All accesses at one symbolic offset: collapse to scalar. Rewrite
+        // offsets to 0 and size to 1.
+        p.visit_mut(&mut |n| {
+            if let Node::Stmt(s) = n {
+                if s.write.container == c {
+                    s.write.offset = Expr::Int(0);
+                }
+                s.rhs = s.rhs.map(&|e| match e {
+                    Expr::Load(lc, _) if *lc == c => Expr::Load(c, Box::new(Expr::Int(0))),
+                    other => other.clone(),
+                });
+            }
+        });
+        p.container_mut(c).size = Expr::Int(1);
+        // DaCe's scalarized temporaries live *inside* the map scope: when
+        // every read of the scalar is self-contained in its innermost loop
+        // body, the value never crosses an iteration and the container is
+        // iteration-local (Register) — otherwise the scalar would serialize
+        // the loop it sits in.
+        if scalar_is_iteration_local(p, c) {
+            p.container_mut(c).kind = ContainerKind::Register;
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Is every read of scalar `c` dominated by a same-iteration write in the
+/// innermost loop body containing the accesses?
+fn scalar_is_iteration_local(p: &Program, c: ContainerId) -> bool {
+    use crate::analysis::visibility::body_graph;
+    use crate::ir::Access;
+    fn check(l: &crate::ir::Loop, p: &Program, c: ContainerId, ok: &mut bool) {
+        let graph = body_graph(l, &p.containers);
+        for (idx, n) in l.body.iter().enumerate() {
+            match n {
+                crate::ir::Node::Stmt(s) => {
+                    for r in s.reads() {
+                        if r.container == c
+                            && !graph.is_self_contained(idx, &Access::read(c, r.offset.clone()))
+                        {
+                            *ok = false;
+                        }
+                    }
+                }
+                crate::ir::Node::Loop(inner) => check(inner, p, c, ok),
+            }
+        }
+    }
+    let mut ok = true;
+    for n in &p.body {
+        if let crate::ir::Node::Loop(l) = n {
+            check(l, p, c, &mut ok);
+        }
+        if let crate::ir::Node::Stmt(s) = n {
+            // Top-level (un-looped) reads are never iteration-local.
+            if s.reads().iter().any(|r| r.container == c) {
+                ok = false;
+            }
+        }
+    }
+    ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load};
+
+    #[test]
+    fn pointwise_loops_fuse_and_scalarize() {
+        // L1: T[i] = X[i]*2 ; L2: Y[i] = T[i]+1  → fused, T scalarized.
+        let mut b = ProgramBuilder::new("fu1");
+        let n = b.param_positive("fu1_N");
+        let x = b.array("X", Expr::Sym(n));
+        let t = b.transient("T", Expr::Sym(n));
+        let y = b.array("Y", Expr::Sym(n));
+        let i = b.sym("fu1_i");
+        let j = b.sym("fu1_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(t, Expr::Sym(i), load(x, Expr::Sym(i)) * Expr::real(2.0));
+        });
+        b.for_(j, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(y, Expr::Sym(j), load(t, Expr::Sym(j)) + Expr::real(1.0));
+        });
+        let mut p = b.finish();
+        let rep = fuse_program(&mut p).unwrap();
+        assert_eq!(rep.fused, 1);
+        assert_eq!(p.body.len(), 1);
+        assert_eq!(rep.scalarized, vec![t]);
+        assert_eq!(p.container(t).size, int(1));
+        crate::ir::validate::validate(&p).unwrap();
+    }
+
+    #[test]
+    fn offset_shift_blocks_fusion() {
+        // L2 reads T[i-1]: not pointwise — no fusion.
+        let mut b = ProgramBuilder::new("fu2");
+        let n = b.param_positive("fu2_N");
+        let t = b.transient("T", Expr::Sym(n) + int(1));
+        let y = b.array("Y", Expr::Sym(n));
+        let i = b.sym("fu2_i");
+        let j = b.sym("fu2_j");
+        b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(t, Expr::Sym(i), Expr::real(2.0));
+        });
+        b.for_(j, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(y, Expr::Sym(j), load(t, Expr::Sym(j) - int(1)));
+        });
+        let mut p = b.finish();
+        let rep = fuse_program(&mut p).unwrap();
+        assert_eq!(rep.fused, 0);
+        assert_eq!(p.body.len(), 2);
+    }
+
+    #[test]
+    fn different_ranges_block_fusion() {
+        let mut b = ProgramBuilder::new("fu3");
+        let n = b.param_positive("fu3_N");
+        let t = b.transient("T", Expr::Sym(n) + int(8));
+        let i = b.sym("fu3_i");
+        let j = b.sym("fu3_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(t, Expr::Sym(i), Expr::real(1.0));
+        });
+        b.for_(j, int(0), Expr::Sym(n) + int(8), int(1), |b| {
+            b.assign(t, Expr::Sym(j), Expr::real(2.0));
+        });
+        let mut p = b.finish();
+        let rep = fuse_program(&mut p).unwrap();
+        assert_eq!(rep.fused, 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Input-dependency (WAR) resolution by container copying (paper §3.2.2).
+//!
+//! When a loop iteration reads `D[f]` and a *later* iteration writes
+//! `D[g]` with `f(var) = g(var + δ·stride)`, parallel execution could see
+//! the new value. The fix: snapshot `D` into `D_copy` before the loop and
+//! redirect the endangered reads to the copy — every iteration then reads
+//! the original value regardless of execution order.
+
+use anyhow::Result;
+
+use crate::analysis::visibility::body_graph;
+use crate::analysis::{loop_deps, DepKind};
+use crate::ir::{Access, ContainerKind, Loop, LoopId, LoopSchedule, Node, Program, Stmt};
+use crate::symbolic::{ContainerId, Expr, Sym};
+
+#[derive(Debug, Clone, Default)]
+pub struct InputCopyReport {
+    /// (original, copy) pairs created.
+    pub copied: Vec<(ContainerId, ContainerId)>,
+}
+
+/// Resolve WAR (input) dependencies of loop `loop_id` by copying.
+///
+/// Eligibility (§3.2.2 "if no other dependencies involve the data container
+/// D"): container must have WAR deps but **no RAW or WAW** deps at this
+/// loop level — a RAW read must see the *live* array, and a WAW means the
+/// write set itself conflicts.
+pub fn resolve_input_deps(p: &mut Program, loop_id: LoopId) -> Result<InputCopyReport> {
+    let mut report = InputCopyReport::default();
+    let Some(l) = p.find_loop(loop_id).cloned() else {
+        return Ok(report);
+    };
+    let deps = loop_deps(&l, &p.containers);
+    let war_containers = deps.containers(DepKind::War);
+    for c in war_containers {
+        let has_other = deps
+            .deps
+            .iter()
+            .any(|d| d.container == c && d.kind != DepKind::War);
+        if has_other {
+            continue;
+        }
+        let copy = make_copy(p, c);
+        redirect_reads(p, loop_id, c, copy);
+        insert_copy_loop(p, loop_id, c, copy);
+        report.copied.push((c, copy));
+    }
+    Ok(report)
+}
+
+/// Declare `D_copy` with the same size/dtype as `D`.
+fn make_copy(p: &mut Program, c: ContainerId) -> ContainerId {
+    let (name, size, dtype) = {
+        let orig = p.container(c);
+        (
+            format!("{}_silo_copy", orig.name),
+            orig.size.clone(),
+            orig.dtype,
+        )
+    };
+    p.add_container(&name, size, dtype, ContainerKind::Transient)
+}
+
+/// Replace reads of `c` with reads of `copy` inside the loop body, except
+/// reads dominated by a same-iteration write to the same offset (§3.2.2:
+/// "only reads dominated by a write to the same offset … can be left
+/// unchanged" — those must keep seeing the fresh value).
+fn redirect_reads(p: &mut Program, loop_id: LoopId, c: ContainerId, copy: ContainerId) {
+    // Collect (stmt-id, whether-dominated) decisions first (immutable pass),
+    // then rewrite (mutable pass).
+    let l = p.find_loop(loop_id).unwrap().clone();
+    let mut redirect: Vec<(u32, Expr)> = Vec::new(); // (stmt id, offset to redirect)
+    collect_redirects(&l, p, c, &mut redirect);
+
+    p.visit_mut(&mut |n| {
+        if let Node::Stmt(s) = n {
+            if let Some((_, _)) = redirect.iter().find(|(id, _)| *id == s.id.0) {
+                let offsets: Vec<Expr> = redirect
+                    .iter()
+                    .filter(|(id, _)| *id == s.id.0)
+                    .map(|(_, o)| o.clone())
+                    .collect();
+                s.rhs = s.rhs.map(&|e| match e {
+                    Expr::Load(lc, off) if *lc == c && offsets.contains(off) => {
+                        Expr::Load(copy, off.clone())
+                    }
+                    other => other.clone(),
+                });
+                if let Some(g) = &s.guard {
+                    s.guard = Some(g.map(&|e| match e {
+                        Expr::Load(lc, off) if *lc == c && offsets.contains(off) => {
+                            Expr::Load(copy, off.clone())
+                        }
+                        other => other.clone(),
+                    }));
+                }
+            }
+        }
+    });
+}
+
+fn collect_redirects(l: &Loop, p: &Program, c: ContainerId, out: &mut Vec<(u32, Expr)>) {
+    let graph = body_graph(l, &p.containers);
+    for (idx, n) in l.body.iter().enumerate() {
+        match n {
+            Node::Stmt(s) => {
+                for r in s.reads() {
+                    if r.container != c {
+                        continue;
+                    }
+                    if graph.is_self_contained(idx, &Access::read(c, r.offset.clone())) {
+                        continue; // dominated by same-iteration write
+                    }
+                    out.push((s.id.0, r.offset));
+                }
+            }
+            Node::Loop(inner) => collect_redirects(inner, p, c, out),
+        }
+    }
+}
+
+/// Insert `for c_i in 0..size: D_copy[c_i] = D[c_i]` directly before the
+/// loop (a DOALL-schedulable copy).
+fn insert_copy_loop(p: &mut Program, loop_id: LoopId, c: ContainerId, copy: ContainerId) {
+    let size = p.container(c).size.clone();
+    let var = Sym::nonneg(&format!("{}_cpy_i", p.container(c).name));
+    let stmt_id = p.fresh_stmt_id();
+    let lid = p.fresh_loop_id();
+    let copy_loop = Node::Loop(Loop {
+        id: lid,
+        var,
+        start: Expr::Int(0),
+        end: size,
+        stride: Expr::Int(1),
+        schedule: LoopSchedule::Parallel,
+        body: vec![Node::Stmt(Stmt {
+            id: stmt_id,
+            write: Access::write(copy, Expr::Sym(var)),
+            rhs: Expr::Load(c, Box::new(Expr::Sym(var))),
+            guard: None,
+        })],
+    });
+    // Splice before the target loop wherever it sits.
+    fn insert_before(nodes: &mut Vec<Node>, target: LoopId, new: &Node) -> bool {
+        for i in 0..nodes.len() {
+            if let Node::Loop(l) = &nodes[i] {
+                if l.id == target {
+                    nodes.insert(i, new.clone());
+                    return true;
+                }
+            }
+            if let Node::Loop(l) = &mut nodes[i] {
+                if insert_before(&mut l.body, target, new) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+    let inserted = insert_before(&mut p.body, loop_id, &copy_loop);
+    debug_assert!(inserted, "copy loop insertion point not found");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::loop_deps;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load};
+
+    /// `for i: B[i] = C[i+1]; C[i] = B[i]*2` — WAR on C resolved by copy.
+    #[test]
+    fn war_resolved_by_copy() {
+        let mut b = ProgramBuilder::new("ic1");
+        let n = b.param_positive("ic1_N");
+        let bb = b.array("B", Expr::Sym(n) + int(1));
+        let cc = b.array("C", Expr::Sym(n) + int(1));
+        let i = b.sym("ic1_i");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(bb, Expr::Sym(i), load(cc, Expr::Sym(i) + int(1)));
+            b.assign(cc, Expr::Sym(i), load(bb, Expr::Sym(i)) * Expr::real(2.0));
+        });
+        let mut p = b.finish();
+        let before = loop_deps(p.find_loop(il).unwrap(), &p.containers);
+        assert!(before.has(DepKind::War));
+
+        let rep = resolve_input_deps(&mut p, il).unwrap();
+        assert_eq!(rep.copied.len(), 1);
+        let (orig, copy) = rep.copied[0];
+        assert_eq!(orig, cc);
+
+        // The read now targets the copy; the write still targets C.
+        let l = p.find_loop(il).unwrap();
+        let binding = Node::Loop(l.clone());
+        let stmts = binding.stmts();
+        let first_reads = stmts[0].reads();
+        assert!(first_reads.iter().any(|a| a.container == copy));
+        assert!(stmts.iter().any(|s| s.write.container == cc));
+
+        // No WAR remains at this loop level.
+        let after = loop_deps(p.find_loop(il).unwrap(), &p.containers);
+        assert!(!after.has(DepKind::War), "{:?}", after.deps);
+        crate::ir::validate::validate(&p).unwrap();
+        // And a copy loop precedes the original loop at top level.
+        assert_eq!(p.body.len(), 2);
+    }
+
+    /// Container with RAW *and* WAR is left untouched.
+    #[test]
+    fn raw_blocks_copy() {
+        let mut b = ProgramBuilder::new("ic2");
+        let n = b.param_positive("ic2_N");
+        let cc = b.array("C", Expr::Sym(n) + int(2));
+        let i = b.sym("ic2_i");
+        let il = b.for_id(i, int(1), Expr::Sym(n), int(1), |b| {
+            // reads C[i-1] (RAW) and C[i+1] (WAR), writes C[i]
+            b.assign(
+                cc,
+                Expr::Sym(i),
+                load(cc, Expr::Sym(i) - int(1)) + load(cc, Expr::Sym(i) + int(1)),
+            );
+        });
+        let mut p = b.finish();
+        let rep = resolve_input_deps(&mut p, il).unwrap();
+        assert!(rep.copied.is_empty());
+    }
+
+    /// Reads dominated by a same-iteration write keep reading the original
+    /// (they must observe the fresh value).
+    #[test]
+    fn dominated_reads_not_redirected() {
+        let mut b = ProgramBuilder::new("ic3");
+        let n = b.param_positive("ic3_N");
+        let cc = b.array("C", Expr::Sym(n) + int(1));
+        let out = b.array("O", Expr::Sym(n));
+        let i = b.sym("ic3_i");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            // O[i] = C[i+1]  (WAR with next write)
+            b.assign(out, Expr::Sym(i), load(cc, Expr::Sym(i) + int(1)));
+            // C[i] = 5
+            b.assign(cc, Expr::Sym(i), Expr::real(5.0));
+            // O[i] += C[i]  — dominated read of C[i]; must stay on C
+            b.assign(out, Expr::Sym(i), load(out, Expr::Sym(i)) + load(cc, Expr::Sym(i)));
+        });
+        let mut p = b.finish();
+        let rep = resolve_input_deps(&mut p, il).unwrap();
+        assert_eq!(rep.copied.len(), 1);
+        let copy = rep.copied[0].1;
+        let l = p.find_loop(il).unwrap();
+        let binding = Node::Loop(l.clone());
+        let stmts = binding.stmts();
+        // First read redirected; dominated read (third stmt) untouched.
+        assert!(stmts[0].reads().iter().any(|a| a.container == copy));
+        assert!(stmts[2].reads().iter().any(|a| a.container == cc));
+        assert!(!stmts[2].reads().iter().any(|a| a.container == copy));
+    }
+}

@@ -1,0 +1,195 @@
+//! Loop interchange: swap a loop with its single, perfectly nested child.
+//!
+//! Used by the cfg1 pipeline to move a sequential K loop inside parallel
+//! I/J loops once privatization has removed the blocking WAW deps (the
+//! paper's "the automatic optimization [moves] the K loops inside of the
+//! I and J loops in a subsequent pass").
+
+use anyhow::{bail, Result};
+
+use crate::analysis::loop_deps;
+use crate::ir::{Loop, LoopId, Node, Program};
+
+/// Is `outer` perfectly nested over exactly one inner loop?
+fn perfect_child(outer: &Loop) -> Option<&Loop> {
+    if outer.body.len() != 1 {
+        return None;
+    }
+    outer.body[0].as_loop()
+}
+
+/// Legality: bounds/strides of each loop must not reference the other's
+/// variable, and the interchange must not reorder conflicting accesses —
+/// we require that at least one of the two loops is dependence-free
+/// (sufficient condition; full direction-vector legality is future work).
+pub fn can_interchange(p: &Program, outer_id: LoopId) -> bool {
+    let Some(outer) = p.find_loop(outer_id) else {
+        return false;
+    };
+    let Some(inner) = perfect_child(outer) else {
+        return false;
+    };
+    // Bound/stride independence.
+    for e in [&inner.start, &inner.end, &inner.stride] {
+        if e.depends_on(outer.var) {
+            return false;
+        }
+    }
+    for e in [&outer.start, &outer.end, &outer.stride] {
+        if e.depends_on(inner.var) {
+            return false;
+        }
+    }
+    // Sufficient dependence condition.
+    let outer_deps = loop_deps(outer, &p.containers);
+    let inner_deps = loop_deps(inner, &p.containers);
+    outer_deps.is_doall() || inner_deps.is_doall()
+}
+
+/// Swap `outer` with its perfectly nested child. Loop ids, schedules and
+/// bodies travel with their loops.
+pub fn interchange(p: &mut Program, outer_id: LoopId) -> Result<()> {
+    if !can_interchange(p, outer_id) {
+        bail!("interchange of L{} is not legal", outer_id.0);
+    }
+    // After the header swap the child carries `outer_id`; guard against the
+    // pre-order visit re-entering it.
+    let mut done = false;
+    p.visit_mut(&mut |n| {
+        if let Node::Loop(outer) = n {
+            if outer.id == outer_id && !done {
+                done = true;
+                // Take the inner loop out.
+                let Node::Loop(mut inner) = outer.body.remove(0) else {
+                    unreachable!("checked by can_interchange");
+                };
+                // outer becomes the child: swap headers, keep bodies.
+                std::mem::swap(&mut outer.id, &mut inner.id);
+                std::mem::swap(&mut outer.var, &mut inner.var);
+                std::mem::swap(&mut outer.start, &mut inner.start);
+                std::mem::swap(&mut outer.end, &mut inner.end);
+                std::mem::swap(&mut outer.stride, &mut inner.stride);
+                std::mem::swap(&mut outer.schedule, &mut inner.schedule);
+                outer.body = std::mem::take(&mut inner.body);
+                inner.body = Vec::new();
+                // Rebuild: new outer (old inner header) wraps old outer
+                // header with the original body.
+                let new_inner = Loop {
+                    id: inner.id,
+                    var: inner.var,
+                    start: inner.start.clone(),
+                    end: inner.end.clone(),
+                    stride: inner.stride.clone(),
+                    schedule: inner.schedule.clone(),
+                    body: std::mem::take(&mut outer.body),
+                };
+                outer.body = vec![Node::Loop(new_inner)];
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Sink a sequential loop below its parallelizable child(ren): repeatedly
+/// interchange while legal and the child is DOALL-clean. Returns how many
+/// levels it sank. Loop ids travel with their headers, so after each swap
+/// `loop_id` still names the sinking (sequential) header — now one level
+/// down, outer over the next child.
+pub fn sink_sequential_loop(p: &mut Program, loop_id: LoopId) -> usize {
+    let mut sank = 0;
+    loop {
+        let Some(outer) = p.find_loop(loop_id) else {
+            break;
+        };
+        let Some(child) = perfect_child(outer) else {
+            break;
+        };
+        let child_deps = loop_deps(child, &p.containers);
+        if !child_deps.is_doall() {
+            break;
+        }
+        if !can_interchange(p, loop_id) {
+            break;
+        }
+        if interchange(p, loop_id).is_err() {
+            break;
+        }
+        sank += 1;
+    }
+    sank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    fn k_outer_recurrence() -> (Program, LoopId) {
+        // for k: for i: A[k*N + i] = A[(k-1)*N + i] * 0.5
+        let mut b = ProgramBuilder::new("ix1");
+        let n = b.param_positive("ix1_N");
+        let m = b.param_positive("ix1_M");
+        let a = b.array("A", Expr::Sym(m) * Expr::Sym(n));
+        let k = b.sym("ix1_k");
+        let i = b.sym("ix1_i");
+        let kl = b.for_id(k, int(1), Expr::Sym(m), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                let cur = Expr::Sym(k) * Expr::Sym(n) + Expr::Sym(i);
+                let prev = (Expr::Sym(k) - int(1)) * Expr::Sym(n) + Expr::Sym(i);
+                b.assign(a, cur, load(a, prev) * Expr::real(0.5));
+            });
+        });
+        (b.finish(), kl)
+    }
+
+    #[test]
+    fn interchange_swaps_headers() {
+        let (mut p, kl) = k_outer_recurrence();
+        let before_vars: Vec<String> = p.loops().iter().map(|l| l.var.name()).collect();
+        assert_eq!(before_vars, vec!["ix1_k", "ix1_i"]);
+        interchange(&mut p, kl).unwrap();
+        let after_vars: Vec<String> = p.loops().iter().map(|l| l.var.name()).collect();
+        assert_eq!(after_vars, vec!["ix1_i", "ix1_k"]);
+        crate::ir::validate::validate(&p).unwrap();
+        // Statement untouched.
+        assert_eq!(p.stmts().len(), 1);
+    }
+
+    #[test]
+    fn illegal_when_bounds_depend() {
+        // Triangular: inner bound depends on outer var.
+        let mut b = ProgramBuilder::new("ix2");
+        let n = b.param_positive("ix2_N");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(n));
+        let i = b.sym("ix2_i");
+        let j = b.sym("ix2_j");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, Expr::Sym(i), Expr::Sym(n), int(1), |b| {
+                b.assign(a, Expr::Sym(i) * Expr::Sym(n) + Expr::Sym(j), Expr::real(1.0));
+            });
+        });
+        let mut p = b.finish();
+        assert!(!can_interchange(&p, il));
+        assert!(interchange(&mut p, il).is_err());
+    }
+
+    #[test]
+    fn imperfect_nest_rejected() {
+        let mut b = ProgramBuilder::new("ix3");
+        let n = b.param_positive("ix3_N");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(n));
+        let s = b.array("S", Expr::Sym(n));
+        let i = b.sym("ix3_i");
+        let j = b.sym("ix3_j");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(s, Expr::Sym(i), Expr::real(0.0)); // statement between loops
+            b.for_(j, int(0), Expr::Sym(n), int(1), |b| {
+                b.assign(a, Expr::Sym(i) * Expr::Sym(n) + Expr::Sym(j), Expr::real(1.0));
+            });
+        });
+        let p = b.finish();
+        assert!(!can_interchange(&p, il));
+        let _ = il;
+    }
+}

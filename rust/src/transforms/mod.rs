@@ -1,0 +1,19 @@
+//! SILO's optimization transforms (paper §3).
+
+pub mod doacross;
+pub mod doall;
+pub mod fusion;
+pub mod input_copy;
+pub mod interchange;
+pub mod pass;
+pub mod privatize;
+pub mod tiling;
+
+pub use doacross::{pipeline_all, pipeline_doacross, DoacrossReport, SkipReason};
+pub use doall::{parallelize_doall, DoallReport};
+pub use fusion::{fuse_program, FusionReport};
+pub use input_copy::{resolve_input_deps, InputCopyReport};
+pub use interchange::{can_interchange, interchange, sink_sequential_loop};
+pub use pass::{auto_optimize, eliminate_dependencies, silo_cfg1, silo_cfg2, PipelineReport};
+pub use privatize::{privatize, PrivatizeReport};
+pub use tiling::tile;

@@ -1,0 +1,246 @@
+//! Pass manager and the two SILO optimization configurations evaluated in
+//! the paper (§6.1):
+//!
+//! * **cfg1** — eliminate sequential dependencies (privatization §3.2.1 +
+//!   input copies §3.2.2), then hand back to the framework auto-optimizer
+//!   (fusion, DOALL, sinking sequential loops inward).
+//! * **cfg2** — cfg1, plus DOACROSS pipelining of remaining RAW loops
+//!   (§3.3).
+
+use anyhow::Result;
+
+use crate::ir::{LoopId, Program};
+
+use super::doacross::pipeline_all;
+use super::doall::parallelize_doall;
+use super::fusion::fuse_program;
+use super::input_copy::resolve_input_deps;
+use super::interchange::sink_sequential_loop;
+use super::privatize::privatize;
+
+/// A log entry from a pipeline run.
+#[derive(Debug, Clone)]
+pub struct PassLog {
+    pub pass: String,
+    pub detail: String,
+}
+
+/// Outcome of an optimization pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineReport {
+    pub log: Vec<PassLog>,
+}
+
+impl PipelineReport {
+    fn push(&mut self, pass: &str, detail: String) {
+        self.log.push(PassLog {
+            pass: pass.to_string(),
+            detail,
+        });
+    }
+
+    pub fn summary(&self) -> String {
+        self.log
+            .iter()
+            .map(|l| format!("{}: {}", l.pass, l.detail))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Run privatization + input-copying over every loop, innermost-first (the
+/// "SILO passes in tandem with HPC framework optimizations", Fig. 3).
+pub fn eliminate_dependencies(p: &mut Program) -> Result<PipelineReport> {
+    let mut report = PipelineReport::default();
+    // Innermost-first: post-order of the loop tree.
+    let mut order: Vec<LoopId> = Vec::new();
+    fn post_order(nodes: &[crate::ir::Node], out: &mut Vec<LoopId>) {
+        for n in nodes {
+            if let crate::ir::Node::Loop(l) = n {
+                post_order(&l.body, out);
+                out.push(l.id);
+            }
+        }
+    }
+    post_order(&p.body, &mut order);
+
+    let top_level: Vec<LoopId> = p
+        .body
+        .iter()
+        .filter_map(|n| match n {
+            crate::ir::Node::Loop(l) => Some(l.id),
+            _ => None,
+        })
+        .collect();
+    for id in order {
+        let priv_rep = privatize(p, id)?;
+        if !priv_rep.privatized.is_empty() {
+            let names: Vec<String> = priv_rep
+                .privatized
+                .iter()
+                .map(|c| p.container(*c).name.clone())
+                .collect();
+            report.push("privatize", format!("L{}: {}", id.0, names.join(", ")));
+        }
+        // Input copies run O(container) work: profitable only when the
+        // copy hoists *before the loop* at top level (the paper's §3.2.2
+        // placement) — a copy inside an enclosing loop would re-run per
+        // outer iteration.
+        if !top_level.contains(&id) {
+            continue;
+        }
+        let copy_rep = resolve_input_deps(p, id)?;
+        if !copy_rep.copied.is_empty() {
+            let names: Vec<String> = copy_rep
+                .copied
+                .iter()
+                .map(|(c, _)| p.container(*c).name.clone())
+                .collect();
+            report.push("input-copy", format!("L{}: {}", id.0, names.join(", ")));
+        }
+    }
+    Ok(report)
+}
+
+/// Framework-style auto optimization: fuse, mark DOALL, sink remaining
+/// sequential loops below parallel ones.
+pub fn auto_optimize(p: &mut Program) -> Result<PipelineReport> {
+    let mut report = PipelineReport::default();
+    let fu = fuse_program(p)?;
+    if fu.fused > 0 || !fu.scalarized.is_empty() {
+        report.push(
+            "fusion",
+            format!("fused {} loops, scalarized {}", fu.fused, fu.scalarized.len()),
+        );
+    }
+    // Sink sequential outer loops with DOALL-clean children inward so the
+    // parallel dimension surfaces.
+    let seq_loops: Vec<LoopId> = p
+        .loops()
+        .iter()
+        .filter(|l| !l.is_parallel())
+        .map(|l| l.id)
+        .collect();
+    for id in seq_loops {
+        let deps = match p.find_loop(id) {
+            Some(l) => crate::analysis::loop_deps(l, &p.containers),
+            None => continue,
+        };
+        if deps.is_doall() {
+            continue; // will parallelize directly
+        }
+        let sank = sink_sequential_loop(p, id);
+        if sank > 0 {
+            report.push("interchange", format!("sank L{} by {} level(s)", id.0, sank));
+        }
+    }
+    let da = parallelize_doall(p, true)?;
+    if !da.parallelized.is_empty() {
+        let ids: Vec<String> = da.parallelized.iter().map(|l| format!("L{}", l.0)).collect();
+        report.push("doall", ids.join(", "));
+    }
+    Ok(report)
+}
+
+/// SILO configuration 1 (§6.1): dependency elimination + auto optimization.
+pub fn silo_cfg1(p: &mut Program) -> Result<PipelineReport> {
+    let mut report = eliminate_dependencies(p)?;
+    let auto = auto_optimize(p)?;
+    report.log.extend(auto.log);
+    debug_assert!(crate::ir::validate::validate(p).is_ok());
+    Ok(report)
+}
+
+/// SILO configuration 2 (§6.1): cfg1's dependency elimination plus
+/// DOACROSS pipelining of the remaining RAW loops *in place* (the paper's
+/// Fig. 5: the sequential K loop stays outermost and is pipelined, adding
+/// a parallel dimension on top of the DOALL inner loops).
+pub fn silo_cfg2(p: &mut Program) -> Result<PipelineReport> {
+    let mut report = eliminate_dependencies(p)?;
+    let fu = fuse_program(p)?;
+    if fu.fused > 0 || !fu.scalarized.is_empty() {
+        report.push(
+            "fusion",
+            format!("fused {} loops, scalarized {}", fu.fused, fu.scalarized.len()),
+        );
+    }
+    // Pipeline outer RAW loops before any sinking, so the pipelined
+    // dimension is the outer one (Fig. 5's k-loop).
+    let dx = pipeline_all(p)?;
+    if !dx.pipelined.is_empty() {
+        let ids: Vec<String> = dx.pipelined.iter().map(|l| format!("L{}", l.0)).collect();
+        report.push("doacross", ids.join(", "));
+    }
+    // Expose the DOALL dimensions inside (and any remaining loops).
+    let da = parallelize_doall(p, true)?;
+    if !da.parallelized.is_empty() {
+        let ids: Vec<String> = da.parallelized.iter().map(|l| format!("L{}", l.0)).collect();
+        report.push("doall", ids.join(", "));
+    }
+    debug_assert!(crate::ir::validate::validate(p).is_ok());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{LoopSchedule, ProgramBuilder};
+    use crate::symbolic::{int, load, Expr};
+
+    /// End-to-end on the Fig. 4 nest: cfg1 privatizes A and parallelizes
+    /// the i loop; cfg2 additionally pipelines the k loop.
+    fn fig4_like() -> Program {
+        let mut b = ProgramBuilder::new("pipe");
+        let n = b.param_positive("pip_N");
+        let m = b.param_positive("pip_M");
+        let a = b.transient("A", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n) * Expr::Sym(m));
+        let cc = b.array("C", Expr::Sym(n) * Expr::Sym(m));
+        let k = b.sym("pip_k");
+        let i = b.sym("pip_i");
+        b.for_(k, int(1), Expr::Sym(m) - int(1), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                let iv = Expr::Sym(i);
+                let kv = Expr::Sym(k);
+                let off = |col: Expr| iv.clone() * Expr::Sym(m) + col;
+                b.assign(
+                    a,
+                    iv.clone(),
+                    load(bb, off(kv.clone() - int(1))) * Expr::real(0.2)
+                        + load(cc, off(kv.clone() + int(1))),
+                );
+                b.assign(bb, off(kv.clone()), load(a, iv.clone()));
+                b.assign(cc, off(kv.clone()), load(a, iv.clone()) * Expr::real(0.5));
+            });
+        });
+        b.finish()
+    }
+
+    #[test]
+    fn cfg1_privatizes_and_parallelizes_inner() {
+        let mut p = fig4_like();
+        let rep = silo_cfg1(&mut p).unwrap();
+        assert!(rep.log.iter().any(|l| l.pass == "privatize"));
+        assert!(rep.log.iter().any(|l| l.pass == "input-copy"));
+        // The i loop (or a copy loop) is parallel; the k loop stays
+        // sequential (RAW remains).
+        let loops = p.loops();
+        assert!(loops.iter().any(|l| l.schedule == LoopSchedule::Parallel));
+        crate::ir::validate::validate(&p).unwrap();
+    }
+
+    #[test]
+    fn cfg2_pipelines_k() {
+        let mut p = fig4_like();
+        let _ = silo_cfg2(&mut p).unwrap();
+        let loops = p.loops();
+        assert!(
+            loops
+                .iter()
+                .any(|l| matches!(l.schedule, LoopSchedule::Doacross { .. })),
+            "expected a DOACROSS loop: {:?}",
+            loops.iter().map(|l| (&l.schedule,)).collect::<Vec<_>>()
+        );
+        crate::ir::validate::validate(&p).unwrap();
+    }
+}

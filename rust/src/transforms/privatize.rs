@@ -1,0 +1,297 @@
+//! Write privatization (paper §3.2.1): replace externally visible writes
+//! that nobody outside the loop reads with iteration-private registers,
+//! eliminating WAW (output) dependencies.
+//!
+//! The transform reclassifies the container as [`ContainerKind::Register`]:
+//! the VM and the parallel runtime then give each in-flight iteration its
+//! own private storage, and the visibility analysis stops reporting its
+//! accesses — exactly the paper's "write and subsequent reads from a
+//! register".
+
+use anyhow::Result;
+
+use crate::analysis::visibility::{body_graph, iter_visibility};
+use crate::ir::{ContainerKind, Loop, LoopId, Node, Program};
+use crate::symbolic::ContainerId;
+
+/// Report of one privatization run.
+#[derive(Debug, Clone, Default)]
+pub struct PrivatizeReport {
+    pub privatized: Vec<ContainerId>,
+}
+
+/// Attempt to privatize containers written inside loop `loop_id`.
+///
+/// A container `D` is privatizable w.r.t. `L` when (§3.2.1):
+/// 1. it is a transient (arguments are read by the caller — never private);
+/// 2. every read of `D` inside `L` is *self-contained* (dominated by a
+///    same-iteration write with a symbolically equal offset) — otherwise
+///    iterations genuinely communicate through `D`;
+/// 3. no statement outside `L`'s subtree reads `D` (the surrounding-program
+///    dataflow check).
+pub fn privatize(p: &mut Program, loop_id: LoopId) -> Result<PrivatizeReport> {
+    let mut report = PrivatizeReport::default();
+    let Some(l) = p.find_loop(loop_id).cloned() else {
+        return Ok(report);
+    };
+
+    // Candidates: containers written inside L that are still transients.
+    let mut candidates: Vec<ContainerId> = Vec::new();
+    for s in Node::Loop(l.clone()).stmts() {
+        let c = s.write.container;
+        if p.container(c).kind == ContainerKind::Transient && !candidates.contains(&c) {
+            candidates.push(c);
+        }
+    }
+
+    for c in candidates {
+        if reads_escape_loop(p, &l, c) {
+            continue;
+        }
+        if !reads_inside_self_contained(&l, p, c) {
+            continue;
+        }
+        p.container_mut(c).kind = ContainerKind::Register;
+        report.privatized.push(c);
+    }
+    Ok(report)
+}
+
+/// Does any statement outside `l`'s subtree read container `c`? Also treats
+/// `l`'s own externally visible reads of `c` as escaping (paper: "including
+/// the loop's own externally visible reads").
+fn reads_escape_loop(p: &Program, l: &Loop, c: ContainerId) -> bool {
+    // Reads outside the subtree.
+    let inside: std::collections::HashSet<u32> = Node::Loop(l.clone())
+        .stmts()
+        .iter()
+        .map(|s| s.id.0)
+        .collect();
+    for s in p.stmts() {
+        if inside.contains(&s.id.0) {
+            continue;
+        }
+        if s.reads().iter().any(|a| a.container == c) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Are all reads of `c` inside `l` self-contained within their iteration
+/// (at every nesting level or *covered* by an earlier sibling nest's
+/// writes — the cross-nest case: nest A writes `col[j,i]` for all (j,i),
+/// nest B reads it back within the same `l` iteration)?
+fn reads_inside_self_contained(l: &Loop, p: &Program, c: ContainerId) -> bool {
+    // Summaries of each body element (reads/writes of c, with ranges).
+    let summaries: Vec<(Vec<crate::analysis::PropAccess>, Vec<crate::analysis::PropAccess>)> = l
+        .body
+        .iter()
+        .map(|n| match n {
+            Node::Loop(inner) => crate::analysis::loop_summary(inner, &p.containers),
+            Node::Stmt(_) => (Vec::new(), Vec::new()),
+        })
+        .collect();
+
+    // Is a read (offset + ranges) covered by an earlier element's write?
+    let covered = |idx: usize, off: &crate::symbolic::Expr, ranges: &[crate::analysis::LoopRange]| -> bool {
+        use crate::symbolic::sym_eq;
+        for prev in (0..idx).rev() {
+            match &l.body[prev] {
+                Node::Stmt(s) => {
+                    if s.guard.is_none()
+                        && s.write.container == c
+                        && sym_eq(&s.write.offset, off)
+                        && ranges.is_empty()
+                    {
+                        return true;
+                    }
+                }
+                Node::Loop(_) => {
+                    for w in &summaries[prev].1 {
+                        if w.container == c
+                            && !w.whole
+                            && sym_eq(&w.offset, off)
+                            && w.ranges == ranges
+                        {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    };
+
+    // Plain statement reads at this level: dominated per the body graph.
+    let graph = body_graph(l, &p.containers);
+    for (idx, n) in l.body.iter().enumerate() {
+        match n {
+            Node::Stmt(s) => {
+                for r in s.reads() {
+                    if r.container == c && !graph.is_self_contained(idx, &r) {
+                        return false;
+                    }
+                }
+            }
+            Node::Loop(inner) => {
+                // Nested loop: its externally visible reads of c must be
+                // covered by an earlier sibling's writes (same iteration of
+                // l); reads internal to the nest were already hidden by the
+                // summary when self-contained there.
+                for r in &summaries[idx].0 {
+                    if r.container != c {
+                        continue;
+                    }
+                    if r.whole || !covered(idx, &r.offset, &r.ranges) {
+                        return false;
+                    }
+                }
+                let _ = inner;
+            }
+        }
+    }
+    // Finally: no *loop-carried* consumption at l's level — every read of c
+    // visible at this level was handled above, so check that l's own
+    // externally visible reads of c are all covered too (they are exactly
+    // the ones that failed coverage).
+    let vis = iter_visibility(l, &p.containers);
+    for (_, a) in &vis.reads {
+        if a.container == c {
+            // iter_visibility hides stmt-level dominated reads but not
+            // cross-nest covered ones; re-check coverage on the summarized
+            // form is already done above, so reaching here with an exact
+            // stmt-level read means it was uncovered.
+            // (Loop-element reads were checked against `covered`.)
+            // Only fail for stmt-level reads:
+            let stmt_level = l.body.iter().any(|n| matches!(n, Node::Stmt(s) if s.reads().iter().any(|r| r.container == c)));
+            if stmt_level {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{loop_deps, DepKind};
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    /// Fig. 4/5: A[i] is written then read in the same k-iteration and not
+    /// read outside ⇒ privatizable; kills the WAW on A across k.
+    #[test]
+    fn fig4_privatizes_a() {
+        let mut b = ProgramBuilder::new("priv1");
+        let n = b.param_positive("priv1_N");
+        let m = b.param_positive("priv1_M");
+        let a = b.transient("A", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n) * Expr::Sym(m));
+        let cc = b.array("C", Expr::Sym(n) * Expr::Sym(m));
+        let k = b.sym("priv1_k");
+        let i = b.sym("priv1_i");
+        let kl = b.for_id(k, int(1), Expr::Sym(m) - int(1), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                let iv = Expr::Sym(i);
+                let kv = Expr::Sym(k);
+                let off = |col: Expr| iv.clone() * Expr::Sym(m) + col;
+                b.assign(
+                    a,
+                    iv.clone(),
+                    load(bb, off(kv.clone() - int(1))) * Expr::real(0.2)
+                        + load(cc, off(kv.clone() + int(1))),
+                );
+                b.assign(bb, off(kv.clone()), load(a, iv.clone()));
+                b.assign(cc, off(kv.clone()), load(a, iv.clone()) * Expr::real(0.5));
+            });
+        });
+        let mut p = b.finish();
+        // Before: WAW on A across k iterations.
+        let before = loop_deps(p.find_loop(kl).unwrap(), &p.containers);
+        assert!(before.of_kind(DepKind::Waw).any(|d| d.container == a));
+
+        let rep = privatize(&mut p, kl).unwrap();
+        assert_eq!(rep.privatized, vec![a]);
+
+        // After: no WAW on A (B/C write distinct offsets per k).
+        let after = loop_deps(p.find_loop(kl).unwrap(), &p.containers);
+        assert!(!after.of_kind(DepKind::Waw).any(|d| d.container == a));
+        crate::ir::validate::validate(&p).unwrap();
+    }
+
+    /// An argument array must never be privatized, even if reads are
+    /// self-contained — the caller observes it.
+    #[test]
+    fn arguments_not_privatized() {
+        let mut b = ProgramBuilder::new("priv2");
+        let n = b.param_positive("priv2_N");
+        let a = b.array("A", Expr::Sym(n));
+        let k = b.sym("priv2_k");
+        let kl = b.for_id(k, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, int(0), Expr::Sym(k) * Expr::real(1.0));
+        });
+        let mut p = b.finish();
+        let rep = privatize(&mut p, kl).unwrap();
+        assert!(rep.privatized.is_empty());
+    }
+
+    /// A transient read by a *later* loop escapes — not privatizable.
+    #[test]
+    fn escaping_reads_block_privatization() {
+        let mut b = ProgramBuilder::new("priv3");
+        let n = b.param_positive("priv3_N");
+        let t = b.transient("T", Expr::Sym(n));
+        let out = b.array("O", Expr::Sym(n));
+        let k = b.sym("priv3_k");
+        let j = b.sym("priv3_j");
+        let kl = b.for_id(k, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(t, Expr::Sym(k), Expr::real(2.0));
+        });
+        b.for_(j, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(out, Expr::Sym(j), load(t, Expr::Sym(j)));
+        });
+        let mut p = b.finish();
+        let rep = privatize(&mut p, kl).unwrap();
+        assert!(rep.privatized.is_empty());
+    }
+
+    /// Cross-iteration RAW through the transient (recurrence) blocks
+    /// privatization: reads are not self-contained.
+    #[test]
+    fn recurrence_blocks_privatization() {
+        let mut b = ProgramBuilder::new("priv4");
+        let n = b.param_positive("priv4_N");
+        let t = b.transient("T", Expr::Sym(n));
+        let k = b.sym("priv4_k");
+        let kl = b.for_id(k, int(1), Expr::Sym(n), int(1), |b| {
+            b.assign(t, Expr::Sym(k), load(t, Expr::Sym(k) - int(1)) + Expr::real(1.0));
+        });
+        let mut p = b.finish();
+        let rep = privatize(&mut p, kl).unwrap();
+        assert!(rep.privatized.is_empty());
+    }
+
+    /// The scalar temporary of Fig. 4 (t) privatizes at the *inner* loop.
+    #[test]
+    fn scalar_temp_privatizes() {
+        let mut b = ProgramBuilder::new("priv5");
+        let n = b.param_positive("priv5_N");
+        let t = b.scalar("t");
+        let x = b.array("X", Expr::Sym(n));
+        let y = b.array("Y", Expr::Sym(n));
+        let i = b.sym("priv5_i");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(t, int(0), load(x, Expr::Sym(i)) * Expr::real(0.2));
+            b.assign(y, Expr::Sym(i), load(t, int(0)) + Expr::real(1.0));
+        });
+        let mut p = b.finish();
+        let before = loop_deps(p.find_loop(il).unwrap(), &p.containers);
+        assert!(before.of_kind(DepKind::Waw).any(|d| d.container == t));
+        let rep = privatize(&mut p, il).unwrap();
+        assert_eq!(rep.privatized, vec![t]);
+        let after = loop_deps(p.find_loop(il).unwrap(), &p.containers);
+        assert!(after.is_doall(), "{:?}", after.deps);
+    }
+}

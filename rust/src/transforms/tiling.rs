@@ -1,0 +1,103 @@
+//! Loop tiling (strip-mine + leave in place). Used by the DaCe-recipe-style
+//! matmul optimization (Table 1) and available as a general transform.
+
+use anyhow::{bail, Result};
+
+use crate::ir::{Loop, LoopId, LoopSchedule, Node, Program};
+use crate::symbolic::{min, Expr, Sym};
+
+/// Strip-mine loop `loop_id` by `factor`:
+/// `for (i = s; i < e; i += st)` becomes
+/// `for (it = s; it < e; it += factor*st) for (i = it; i < min(it+factor*st, e); i += st)`.
+///
+/// Returns the id of the new *tile* (outer) loop; the original id stays on
+/// the intra-tile loop. Requires a constant positive original stride.
+pub fn tile(p: &mut Program, loop_id: LoopId, factor: i64) -> Result<LoopId> {
+    if factor < 2 {
+        bail!("tile factor must be ≥ 2");
+    }
+    let Some(l) = p.find_loop(loop_id) else {
+        bail!("loop L{} not found", loop_id.0);
+    };
+    let Some(stride) = l.stride.as_int() else {
+        bail!("tiling requires a constant stride");
+    };
+    if stride <= 0 {
+        bail!("tiling requires a positive stride");
+    }
+    let tile_var = Sym::nonneg(&format!("{}_t", l.var.name()));
+    let new_id = p.fresh_loop_id();
+
+    // The rebuilt intra-tile loop keeps `loop_id`; guard against the
+    // pre-order visit re-entering it.
+    let mut done = false;
+    p.visit_mut(&mut |n| {
+        if let Node::Loop(outer) = n {
+            if outer.id == loop_id && !done {
+                done = true;
+                let tile_stride = Expr::Int(factor * stride);
+                let inner = Loop {
+                    id: outer.id,
+                    var: outer.var,
+                    start: Expr::Sym(tile_var),
+                    end: min(
+                        Expr::Sym(tile_var) + tile_stride.clone(),
+                        outer.end.clone(),
+                    ),
+                    stride: outer.stride.clone(),
+                    schedule: LoopSchedule::Sequential,
+                    body: std::mem::take(&mut outer.body),
+                };
+                outer.id = new_id;
+                outer.var = tile_var;
+                outer.stride = tile_stride;
+                // start/end stay; schedule stays on the tile loop.
+                outer.body = vec![Node::Loop(inner)];
+            }
+        }
+    });
+    Ok(new_id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load};
+
+    #[test]
+    fn tiling_preserves_structure() {
+        let mut b = ProgramBuilder::new("tile1");
+        let n = b.param_positive("tile1_N");
+        let a = b.array("A", Expr::Sym(n));
+        let x = b.array("X", Expr::Sym(n));
+        let i = b.sym("tile1_i");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(x, Expr::Sym(i)));
+        });
+        let mut p = b.finish();
+        let tl = tile(&mut p, il, 64).unwrap();
+        let loops = p.loops();
+        assert_eq!(loops.len(), 2);
+        assert_eq!(loops[0].id, tl);
+        assert_eq!(loops[0].stride, int(64));
+        assert_eq!(loops[1].id, il);
+        // Inner end is min(tile_start + 64, N).
+        assert!(matches!(loops[1].end, Expr::Min(..)));
+        crate::ir::validate::validate(&p).unwrap();
+    }
+
+    #[test]
+    fn non_constant_stride_rejected() {
+        let mut b = ProgramBuilder::new("tile2");
+        let n = b.param_positive("tile2_N");
+        let s = b.param_positive("tile2_S");
+        let a = b.array("A", Expr::Sym(n) * Expr::Sym(s));
+        let i = b.sym("tile2_i");
+        let il = b.for_id(i, int(0), Expr::Sym(n), Expr::Sym(s), |b| {
+            b.assign(a, Expr::Sym(i), Expr::real(1.0));
+        });
+        let mut p = b.finish();
+        assert!(tile(&mut p, il, 16).is_err());
+    }
+}

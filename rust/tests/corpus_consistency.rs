@@ -1,0 +1,171 @@
+//! Corpus-wide cross-validation: every kernel × every optimization
+//! configuration × memory schedule must leave the observable outputs
+//! unchanged, and the baselines must stay inside their documented
+//! restrictions. Failure-injection cases check that invalid programs are
+//! rejected rather than miscompiled.
+
+use silo::analysis::classify_program;
+use silo::baselines::{dace_auto_optimize, icc_auto_parallelize, pluto_like, polly_like};
+use silo::exec::Vm;
+use silo::ir::{ContainerKind, Program};
+use silo::kernels::{gen_inputs, npbench_corpus, Preset};
+use silo::schedules::{schedule_all_ptr_inc, schedule_prefetches};
+use silo::symbolic::Sym;
+use silo::transforms::{silo_cfg1, silo_cfg2};
+
+fn run(p: &Program, params: &[(Sym, i64)], init: fn(&str, usize) -> f64, threads: usize) -> Vec<Vec<f64>> {
+    let inputs = gen_inputs(p, &params.to_vec(), init).unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let vm = Vm::compile(p).unwrap_or_else(|e| panic!("{}: {e}", p.name));
+    let out = vm.run(params, &refs, threads).unwrap_or_else(|e| panic!("{}: {e}", p.name));
+    out.arrays
+}
+
+/// Observable (argument) outputs only.
+fn outputs(p: &Program, arrays: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    p.containers
+        .iter()
+        .filter(|c| c.kind == ContainerKind::Argument)
+        .map(|c| arrays[c.id.0 as usize].clone())
+        .collect()
+}
+
+/// Every corpus kernel agrees across {baseline, cfg1, cfg2} × {default,
+/// ptr-inc+prefetch} × {1, 3} threads.
+#[test]
+fn corpus_all_configs_agree() {
+    for entry in npbench_corpus() {
+        let params = (entry.preset)(Preset::Tiny);
+        let base_p = (entry.build)();
+        let base = outputs(&base_p, &run(&base_p, &params, entry.init, 1));
+        for cfg in 0..3 {
+            for schedules in [false, true] {
+                let mut p = (entry.build)();
+                match cfg {
+                    1 => {
+                        silo_cfg1(&mut p).unwrap();
+                    }
+                    2 => {
+                        silo_cfg2(&mut p).unwrap();
+                    }
+                    _ => {}
+                }
+                if schedules {
+                    schedule_all_ptr_inc(&mut p);
+                    schedule_prefetches(&mut p);
+                }
+                silo::ir::validate::validate(&p)
+                    .unwrap_or_else(|e| panic!("{} cfg{cfg}: {e}", entry.name));
+                let threads = if cfg == 0 { 1 } else { 3 };
+                let got = outputs(&p, &run(&p, &params, entry.init, threads));
+                assert_eq!(
+                    base, got,
+                    "{} diverged at cfg{cfg} schedules={schedules}",
+                    entry.name
+                );
+            }
+        }
+    }
+}
+
+/// The baselines never mutate a program they reject, and the affine
+/// classifier's verdict is stable across clones.
+#[test]
+fn baselines_respect_their_restrictions() {
+    for entry in npbench_corpus() {
+        let pristine = (entry.build)();
+        let scop = classify_program(&pristine).is_scop();
+        let mut p1 = (entry.build)();
+        let r = polly_like(&mut p1).unwrap();
+        match r {
+            silo::baselines::PolyhedralOutcome::Rejected { .. } => {
+                assert!(!scop, "{}: rejected but classified SCoP", entry.name);
+                assert_eq!(p1.loops().len(), pristine.loops().len());
+                assert!(p1.loops().iter().all(|l| !l.is_parallel()));
+            }
+            silo::baselines::PolyhedralOutcome::Optimized { .. } => {
+                assert!(scop, "{}: optimized but not a SCoP", entry.name);
+            }
+        }
+        let mut p2 = (entry.build)();
+        pluto_like(&mut p2).unwrap();
+        let mut p3 = (entry.build)();
+        icc_auto_parallelize(&mut p3).unwrap();
+        let mut p4 = (entry.build)();
+        dace_auto_optimize(&mut p4).unwrap();
+        // Whatever the baselines did, semantics must hold.
+        let params = (entry.preset)(Preset::Tiny);
+        let base = outputs(&pristine, &run(&pristine, &params, entry.init, 1));
+        for (tag, p) in [("pluto", &p2), ("icc", &p3), ("dace", &p4)] {
+            let got = outputs(p, &run(p, &params, entry.init, 2));
+            assert_eq!(base, got, "{} under {tag} baseline", entry.name);
+        }
+    }
+}
+
+/// Failure injection: malformed programs must be rejected by validation /
+/// compilation, never silently miscompiled.
+#[test]
+fn failure_injection_rejected() {
+    use silo::ir::ProgramBuilder;
+    use silo::symbolic::{int, Expr};
+
+    // Unbound symbol in an offset.
+    let mut b = ProgramBuilder::new("bad1");
+    let n = b.param_positive("cc_bad1_N");
+    let a = b.array("A", Expr::Sym(n));
+    let i = b.sym("cc_bad1_i");
+    let rogue = Sym::new("cc_bad1_rogue");
+    b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+        b.assign(a, Expr::Sym(rogue), Expr::real(1.0));
+    });
+    let p = b.finish();
+    assert!(Vm::compile(&p).is_err(), "unbound symbol must fail compile");
+
+    // Zero stride.
+    let mut b = ProgramBuilder::new("bad2");
+    let n = b.param_positive("cc_bad2_N");
+    let a = b.array("A", Expr::Sym(n));
+    let i = b.sym("cc_bad2_i");
+    b.for_(i, int(0), Expr::Sym(n), int(0), |b| {
+        b.assign(a, Expr::Sym(i), Expr::real(1.0));
+    });
+    assert!(Vm::compile(&b.finish()).is_err(), "zero stride must fail");
+
+    // Negative container size at runtime binds (jacobi_1d's containers
+    // are linear in N, so N = −4 yields a negative allocation).
+    let entry = npbench_corpus()
+        .into_iter()
+        .find(|k| k.name == "jacobi_1d")
+        .unwrap();
+    let p = (entry.build)();
+    let vm = Vm::compile(&p).unwrap();
+    let bad_params: Vec<(Sym, i64)> = (entry.preset)(Preset::Tiny)
+        .into_iter()
+        .map(|(s, _)| (s, -4))
+        .collect();
+    assert!(
+        vm.run(&bad_params, &[], 1).is_err(),
+        "negative sizes must be rejected at allocation"
+    );
+}
+
+/// Out-of-bounds accesses are caught by the debug-build bounds checks
+/// (the release VM trades checks for speed — documented in exec/vm.rs).
+#[test]
+#[cfg(debug_assertions)]
+#[should_panic(expected = "out of bounds")]
+fn failure_injection_oob_caught_in_debug() {
+    use silo::ir::ProgramBuilder;
+    use silo::symbolic::{int, Expr};
+    let mut b = ProgramBuilder::new("oob");
+    let n = b.param_positive("cc_oob_N");
+    let a = b.array("A", Expr::Sym(n));
+    let i = b.sym("cc_oob_i");
+    b.for_(i, int(0), Expr::Sym(n) + int(5), int(1), |b| {
+        b.assign(a, Expr::Sym(i), Expr::real(1.0));
+    });
+    let p = b.finish();
+    let vm = Vm::compile(&p).unwrap();
+    let _ = vm.run(&[(Sym::new("cc_oob_N"), 8)], &[], 1);
+}

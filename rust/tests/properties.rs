@@ -1,0 +1,162 @@
+//! Property tests over the coordinator's core invariants (proptest-style,
+//! via the in-crate `proptest_lite` harness — see DESIGN.md §6 on the
+//! vendored-crate constraint).
+
+use silo::analysis::{loop_deps, DepKind};
+use silo::exec::Vm;
+use silo::ir::{Program, ProgramBuilder};
+use silo::proptest_lite::{check, Rng};
+use silo::symbolic::{int, load, solve_delta, DeltaSolution, Expr, ShiftDir, Sym, Truth};
+
+/// Random affine offset expressions: the δ-solver must agree with brute
+/// force enumeration of iteration pairs.
+#[test]
+fn prop_delta_solver_sound_vs_enumeration() {
+    check("delta-solver-soundness", 200, |rng: &mut Rng| {
+        let var = Sym::new("prop_i");
+        let stride = rng.int(1, 3);
+        // f = a·i + b, g = c·i + d with small coefficients.
+        let (a, b) = (rng.int(1, 4), rng.int(-6, 6));
+        let (c, d) = (rng.int(1, 4), rng.int(-6, 6));
+        let f = int(a) * Expr::Sym(var) + int(b);
+        let g = int(c) * Expr::Sym(var) + int(d);
+        let sol = solve_delta(&f, &g, var, &int(stride), ShiftDir::Earlier);
+        // Brute force: does any i0 in range read g's write from δ·stride
+        // earlier (same representative i)?
+        let n = 24i64;
+        let mut found: Option<i64> = None;
+        'outer: for delta in 1..n {
+            for i0 in 0..n {
+                let fi = a * i0 + b;
+                let gi = c * (i0 - delta * stride) + d;
+                if fi == gi {
+                    found = Some(delta);
+                    break 'outer;
+                }
+            }
+        }
+        match sol {
+            DeltaSolution::NoSolution => {
+                assert!(found.is_none(), "solver claimed independence, brute force found δ={found:?} (f={f}, g={g}, stride={stride})");
+            }
+            DeltaSolution::Unique { delta, positive } => {
+                if positive == Truth::Yes {
+                    let dv = delta.as_int().expect("constant coefficients ⇒ constant δ");
+                    // brute force must agree (it may also find nothing if
+                    // dv is beyond its window).
+                    if dv < n {
+                        assert_eq!(found, Some(dv), "δ mismatch for f={f}, g={g}");
+                    }
+                }
+            }
+            _ => {} // conservative answers are always sound
+        }
+    });
+}
+
+/// DOALL legality: whenever the analysis marks a random 1-D loop
+/// dependence-free, parallel VM execution matches sequential execution.
+#[test]
+fn prop_doall_marking_is_safe() {
+    check("doall-safety", 60, |rng: &mut Rng| {
+        let n = 48i64;
+        let shift = rng.int(-2, 2);
+        let scale = rng.int(1, 2);
+        let mut b = ProgramBuilder::new("prop_da");
+        let nn = b.param_positive("prop_da_N");
+        let src = b.array("S", Expr::Sym(nn) * int(2) + int(8));
+        let dst = b.array("D", Expr::Sym(nn) * int(2) + int(8));
+        let i = b.sym("prop_da_i");
+        // D[scale·i + 4] = S[scale·i + 4 + shift] — never self-conflicting;
+        // sometimes the analysis must still prove it.
+        b.for_(i, int(0), Expr::Sym(nn), int(1), |b| {
+            let w = int(scale) * Expr::Sym(i) + int(4);
+            b.assign(dst, w.clone(), load(src, w + int(shift)) * Expr::real(1.5));
+        });
+        let mut p = b.finish();
+        let before = run(&p, &[(Sym::new("prop_da_N"), n)], 1);
+        silo::transforms::parallelize_doall(&mut p, true).unwrap();
+        if p.loops()[0].is_parallel() {
+            let after = run(&p, &[(Sym::new("prop_da_N"), n)], 4);
+            assert_eq!(before, after, "parallel run diverged (shift={shift}, scale={scale})");
+        }
+    });
+}
+
+/// Pointer incrementation must be semantics-preserving on random 2-D
+/// nests with random constant-offset access patterns.
+#[test]
+fn prop_ptr_inc_preserves_semantics() {
+    check("ptr-inc-equivalence", 40, |rng: &mut Rng| {
+        let taps = rng.int(1, 4);
+        let mut b = ProgramBuilder::new("prop_pi");
+        let nn = b.param_positive("prop_pi_N");
+        let s1 = b.param_positive("prop_pi_S");
+        let a = b.array("A", (Expr::Sym(nn) + int(4)) * (Expr::Sym(s1) + int(4)) + int(64));
+        let o = b.array("O", Expr::Sym(nn) * Expr::Sym(nn));
+        let i = b.sym("prop_pi_i");
+        let j = b.sym("prop_pi_j");
+        let mut offs = Vec::new();
+        for _ in 0..taps {
+            offs.push(rng.int(0, 6));
+        }
+        b.for_(i, int(0), Expr::Sym(nn), int(1), |b| {
+            b.for_(j, int(0), Expr::Sym(nn), int(1), |b| {
+                let base = Expr::Sym(i) * Expr::Sym(s1) + Expr::Sym(j);
+                let mut rhs = Expr::real(0.0);
+                for d in &offs {
+                    rhs = rhs + load(a, base.clone() + int(*d));
+                }
+                b.assign(o, Expr::Sym(i) * Expr::Sym(nn) + Expr::Sym(j), rhs);
+            });
+        });
+        let p0 = b.finish();
+        let params = vec![(Sym::new("prop_pi_N"), 12i64), (Sym::new("prop_pi_S"), 17)];
+        let base = run(&p0, &params, 1);
+        let mut p1 = p0.clone();
+        silo::schedules::schedule_all_ptr_inc(&mut p1);
+        let opt = run(&p1, &params, 1);
+        assert_eq!(base, opt, "ptr-inc diverged with taps {offs:?}");
+    });
+}
+
+/// The dependence report is stable under loop-variable renaming
+/// (α-equivalence of the inductive analysis).
+#[test]
+fn prop_deps_alpha_invariant() {
+    check("deps-alpha-invariance", 30, |rng: &mut Rng| {
+        let d1 = rng.int(1, 3);
+        let build = |tag: &str| -> Program {
+            let mut b = ProgramBuilder::new("prop_al");
+            let nn = b.param_positive("prop_al_N");
+            let a = b.array("A", Expr::Sym(nn) + int(8));
+            let i = b.sym(&format!("prop_al_{tag}"));
+            b.for_(i, int(3), Expr::Sym(nn), int(1), |b| {
+                b.assign(
+                    a,
+                    Expr::Sym(i),
+                    load(a, Expr::Sym(i) - int(d1)) * Expr::real(0.5),
+                );
+            });
+            b.finish()
+        };
+        let p1 = build("x");
+        let p2 = build(&format!("y{}", rng.int(0, 1 << 30)));
+        let r1 = loop_deps(p1.loops()[0], &p1.containers);
+        let r2 = loop_deps(p2.loops()[0], &p2.containers);
+        assert_eq!(r1.deps.len(), r2.deps.len());
+        for (a, b) in r1.deps.iter().zip(&r2.deps) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.distance, b.distance);
+        }
+        assert!(r1.of_kind(DepKind::Raw).next().is_some());
+    });
+}
+
+fn run(p: &Program, params: &[(Sym, i64)], threads: usize) -> Vec<Vec<f64>> {
+    let inputs = silo::kernels::gen_inputs(p, &params.to_vec(), silo::kernels::default_init).unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let vm = Vm::compile(p).unwrap();
+    let out = vm.run(params, &refs, threads).unwrap();
+    out.arrays
+}

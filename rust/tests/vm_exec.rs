@@ -1,0 +1,294 @@
+//! Integration tests: IR → lowering → VM execution, including memory
+//! schedules and the threaded DOALL/DOACROSS runtime.
+
+use silo::exec::{CollectingTracer, Vm};
+use silo::ir::{ProgramBuilder, Program};
+use silo::symbolic::{int, load, Expr, Sym};
+use silo::transforms::{silo_cfg1, silo_cfg2};
+
+fn axpy() -> (Program, silo::symbolic::ContainerId, silo::symbolic::ContainerId, Sym) {
+    let mut b = ProgramBuilder::new("axpy");
+    let n = b.param_positive("vme_N");
+    let x = b.array("x", Expr::Sym(n));
+    let y = b.array("y", Expr::Sym(n));
+    let i = b.sym("vme_i");
+    b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+        b.assign(
+            y,
+            Expr::Sym(i),
+            Expr::real(2.0) * load(x, Expr::Sym(i)) + load(y, Expr::Sym(i)),
+        );
+    });
+    (b.finish(), x, y, n)
+}
+
+#[test]
+fn axpy_executes_correctly() {
+    let (p, x, y, n) = axpy();
+    let vm = Vm::compile(&p).unwrap();
+    let xs: Vec<f64> = (0..10).map(|v| v as f64).collect();
+    let ys: Vec<f64> = vec![1.0; 10];
+    let out = vm
+        .run(&[(n, 10)], &[(x, &xs), (y, &ys)], 1)
+        .unwrap();
+    let got = out.get(y);
+    for i in 0..10 {
+        assert_eq!(got[i], 2.0 * i as f64 + 1.0);
+    }
+}
+
+#[test]
+fn sequential_recurrence_is_ordered() {
+    // A[i] = A[i-1] * 0.5 + 1  — prefix recurrence; order matters.
+    let mut b = ProgramBuilder::new("rec");
+    let n = b.param_positive("vme2_N");
+    let a = b.array("A", Expr::Sym(n));
+    let i = b.sym("vme2_i");
+    b.for_(i, int(1), Expr::Sym(n), int(1), |b| {
+        b.assign(
+            a,
+            Expr::Sym(i),
+            load(a, Expr::Sym(i) - int(1)) * Expr::real(0.5) + Expr::real(1.0),
+        );
+    });
+    let p = b.finish();
+    let vm = Vm::compile(&p).unwrap();
+    let mut init = vec![0.0; 8];
+    init[0] = 4.0;
+    let out = vm.run(&[(n, 8)], &[(a, &init)], 1).unwrap();
+    let got = out.get(a);
+    let mut expect = vec![0.0; 8];
+    expect[0] = 4.0;
+    for k in 1..8 {
+        expect[k] = expect[k - 1] * 0.5 + 1.0;
+    }
+    assert_eq!(got, expect.as_slice());
+}
+
+/// The Fig. 4 didactic nest: run untransformed (sequential), cfg1, and
+/// cfg2 (pipelined, 4 threads) — all three must agree bit-for-bit.
+fn fig4_nest() -> Program {
+    let mut b = ProgramBuilder::new("fig4_exec");
+    let n = b.param_positive("vme3_N");
+    let m = b.param_positive("vme3_M");
+    let a = b.transient("A", Expr::Sym(n));
+    let bb = b.array("B", Expr::Sym(n) * Expr::Sym(m));
+    let cc = b.array("C", Expr::Sym(n) * Expr::Sym(m));
+    let k = b.sym("vme3_k");
+    let i = b.sym("vme3_i");
+    b.for_(k, int(1), Expr::Sym(m) - int(1), int(1), |b| {
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            let iv = Expr::Sym(i);
+            let kv = Expr::Sym(k);
+            let off = |col: Expr| iv.clone() * Expr::Sym(m) + col;
+            b.assign(
+                a,
+                iv.clone(),
+                load(bb, off(kv.clone() - int(1))) * Expr::real(0.2)
+                    + load(cc, off(kv.clone() + int(1))),
+            );
+            b.assign(bb, off(kv.clone()), load(a, iv.clone()));
+            b.assign(cc, off(kv.clone()), load(a, iv.clone()) * Expr::real(0.5));
+        });
+    });
+    b.finish()
+}
+
+fn run_fig4(p: &Program, threads: usize) -> (Vec<f64>, Vec<f64>) {
+    let n = Sym::new("vme3_N");
+    let m = Sym::new("vme3_M");
+    let bb = p.container_by_name("B").unwrap();
+    let cc = p.container_by_name("C").unwrap();
+    let (nn, mm) = (6i64, 9i64);
+    let binit: Vec<f64> = (0..nn * mm).map(|v| (v % 13) as f64 * 0.25 + 1.0).collect();
+    let cinit: Vec<f64> = (0..nn * mm).map(|v| (v % 7) as f64 * 0.5 - 1.0).collect();
+    let vm = Vm::compile(p).unwrap();
+    let out = vm
+        .run(&[(n, nn), (m, mm)], &[(bb, &binit), (cc, &cinit)], threads)
+        .unwrap();
+    (out.get(bb).to_vec(), out.get(cc).to_vec())
+}
+
+#[test]
+fn cfg1_preserves_semantics() {
+    let base = fig4_nest();
+    let (b0, c0) = run_fig4(&base, 1);
+    let mut opt = fig4_nest();
+    silo_cfg1(&mut opt).unwrap();
+    for threads in [1, 4] {
+        let (b1, c1) = run_fig4(&opt, threads);
+        assert_eq!(b0, b1, "B mismatch at {threads} threads");
+        assert_eq!(c0, c1, "C mismatch at {threads} threads");
+    }
+}
+
+#[test]
+fn cfg2_doacross_preserves_semantics() {
+    let base = fig4_nest();
+    let (b0, c0) = run_fig4(&base, 1);
+    let mut opt = fig4_nest();
+    silo_cfg2(&mut opt).unwrap();
+    // Must actually contain a DOACROSS loop for the test to mean anything.
+    assert!(opt
+        .loops()
+        .iter()
+        .any(|l| matches!(l.schedule, silo::ir::LoopSchedule::Doacross { .. })));
+    for threads in [1, 2, 4] {
+        let (b1, c1) = run_fig4(&opt, threads);
+        assert_eq!(b0, b1, "B mismatch at {threads} threads");
+        assert_eq!(c0, c1, "C mismatch at {threads} threads");
+    }
+}
+
+#[test]
+fn ptr_inc_schedule_is_equivalent() {
+    // 2D traversal with parametric strides (the Fig. 7 pattern).
+    let build = |ptr_inc: bool| -> (Program, Vec<f64>) {
+        let mut b = ProgramBuilder::new("pinc");
+        let ii = b.param_positive("vme4_I");
+        let jj = b.param_positive("vme4_J");
+        let si = b.param_positive("vme4_SI");
+        let sj = b.param_positive("vme4_SJ");
+        let a = b.array("A", Expr::Sym(ii) * Expr::Sym(si) + Expr::Sym(jj) * Expr::Sym(sj) + int(4));
+        let o = b.array("O", Expr::Sym(ii) * Expr::Sym(jj));
+        let i = b.sym("vme4_i");
+        let j = b.sym("vme4_j");
+        b.for_(i, int(0), Expr::Sym(ii), int(1), |b| {
+            b.for_(j, int(0), Expr::Sym(jj), int(1), |b| {
+                let off = Expr::Sym(i) * Expr::Sym(si) + Expr::Sym(j) * Expr::Sym(sj);
+                b.assign(
+                    o,
+                    Expr::Sym(i) * Expr::Sym(jj) + Expr::Sym(j),
+                    load(a, off.clone()) + load(a, off + int(2)),
+                );
+            });
+        });
+        let mut p = b.finish();
+        if ptr_inc {
+            let marked = silo::schedules::schedule_all_ptr_inc(&mut p);
+            assert!(marked >= 1);
+            // Ensure plans were realizable (cursor path actually taken).
+            assert!(!silo::schedules::all_plans(&p).is_empty());
+        }
+        let vm = Vm::compile(&p).unwrap();
+        let (iv, jv, siv, sjv) = (5i64, 7i64, 11i64, 1i64);
+        let asz = (iv * siv + jv * sjv + 4) as usize;
+        let ainit: Vec<f64> = (0..asz).map(|v| (v as f64).sin()).collect();
+        let a_id = p.container_by_name("A").unwrap();
+        let o_id = p.container_by_name("O").unwrap();
+        let out = vm
+            .run(
+                &[
+                    (Sym::new("vme4_I"), iv),
+                    (Sym::new("vme4_J"), jv),
+                    (Sym::new("vme4_SI"), siv),
+                    (Sym::new("vme4_SJ"), sjv),
+                ],
+                &[(a_id, &ainit)],
+                1,
+            )
+            .unwrap();
+        (p, out.get(o_id).to_vec())
+    };
+    let (_, naive) = build(false);
+    let (_, cursor) = build(true);
+    assert_eq!(naive, cursor);
+}
+
+#[test]
+fn prefetch_hints_do_not_change_results() {
+    let mut b = ProgramBuilder::new("pfx");
+    let n = b.param_positive("vme5_N");
+    let a = b.array("A", Expr::Sym(n));
+    let o = b.array("O", Expr::Sym(n));
+    let i = b.sym("vme5_i");
+    let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+        b.assign(o, Expr::Sym(i), load(a, Expr::Sym(i)) * Expr::real(3.0));
+    });
+    let mut p = b.finish();
+    silo::transforms::tile(&mut p, il, 8).unwrap();
+    let hints = silo::schedules::schedule_prefetches(&mut p);
+    assert!(hints >= 1);
+    let vm = Vm::compile(&p).unwrap();
+    let ainit: Vec<f64> = (0..32).map(|v| v as f64).collect();
+    let a_id = p.container_by_name("A").unwrap();
+    let o_id = p.container_by_name("O").unwrap();
+    let mut tracer = CollectingTracer::default();
+    let out = vm
+        .run_traced(&[(Sym::new("vme5_N"), 32)], &[(a_id, &ainit)], 1, &mut tracer)
+        .unwrap();
+    for k in 0..32 {
+        assert_eq!(out.get(o_id)[k], 3.0 * k as f64);
+    }
+    // Prefetch events appear in the trace.
+    assert!(tracer.events.iter().any(|e| e.prefetch));
+}
+
+#[test]
+fn guarded_statement_skips() {
+    // O[i] = 1 if i > 2 else stays 0.
+    let mut b = ProgramBuilder::new("grd");
+    let n = b.param_positive("vme6_N");
+    let o = b.array("O", Expr::Sym(n));
+    let i = b.sym("vme6_i");
+    b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+        b.assign_if(Expr::Sym(i) - int(2), o, Expr::Sym(i), Expr::real(1.0));
+    });
+    let p = b.finish();
+    let vm = Vm::compile(&p).unwrap();
+    let out = vm.run(&[(Sym::new("vme6_N"), 6)], &[], 1).unwrap();
+    let o_id = p.container_by_name("O").unwrap();
+    assert_eq!(out.get(o_id), &[0.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+}
+
+#[test]
+fn f32_container_rounds() {
+    use silo::ir::DType;
+    let mut b = ProgramBuilder::new("f32t");
+    let n = b.param_positive("vme7_N");
+    let o = b.array_typed("O", Expr::Sym(n), DType::F32);
+    let i = b.sym("vme7_i");
+    b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+        b.assign(o, Expr::Sym(i), Expr::real(0.1));
+    });
+    let p = b.finish();
+    let vm = Vm::compile(&p).unwrap();
+    let out = vm.run(&[(Sym::new("vme7_N"), 2)], &[], 1).unwrap();
+    let o_id = p.container_by_name("O").unwrap();
+    assert_eq!(out.get(o_id)[0], 0.1f32 as f64);
+    assert_ne!(out.get(o_id)[0], 0.1f64);
+}
+
+#[test]
+fn variable_stride_loop_executes() {
+    // Fig. 2 left: for (i=1; i<=n; i+=i) a[log2(i)] = 1.0
+    use silo::symbolic::{func, FuncKind};
+    let mut b = ProgramBuilder::new("vstr");
+    let n = b.param_positive("vme8_N");
+    let a = b.array("A", int(8));
+    let i = b.sym("vme8_i");
+    b.for_(i, int(1), Expr::Sym(n) + int(1), Expr::Sym(i), |b| {
+        b.assign(a, func(FuncKind::Log2, vec![Expr::Sym(i)]), Expr::real(1.0));
+    });
+    let p = b.finish();
+    let vm = Vm::compile(&p).unwrap();
+    let out = vm.run(&[(Sym::new("vme8_N"), 64)], &[], 1).unwrap();
+    let a_id = p.container_by_name("A").unwrap();
+    // i takes 1,2,4,8,16,32,64 → log2 = 0..6 set to 1.0; index 7 untouched.
+    assert_eq!(out.get(a_id), &[1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.0]);
+}
+
+#[test]
+fn doall_parallel_matches_sequential() {
+    let (p, x, y, n) = axpy();
+    let mut opt = p.clone();
+    silo::transforms::parallelize_doall(&mut opt, true).unwrap();
+    assert!(opt.loops()[0].is_parallel());
+    let xs: Vec<f64> = (0..1000).map(|v| (v as f64) * 0.5).collect();
+    let ys: Vec<f64> = (0..1000).map(|v| (v as f64) * -0.25).collect();
+    let vm_seq = Vm::compile(&p).unwrap();
+    let vm_par = Vm::compile(&opt).unwrap();
+    let o1 = vm_seq.run(&[(n, 1000)], &[(x, &xs), (y, &ys)], 1).unwrap();
+    let o2 = vm_par.run(&[(n, 1000)], &[(x, &xs), (y, &ys)], 4).unwrap();
+    assert_eq!(o1.get(y), o2.get(y));
+}
