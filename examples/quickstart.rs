@@ -7,7 +7,7 @@ use silo::analysis::{loop_deps, DepKind};
 use silo::exec::Vm;
 use silo::ir::ProgramBuilder;
 use silo::symbolic::{int, load, Expr, Sym};
-use silo::transforms::silo_cfg2;
+use silo::transforms::Pipeline;
 
 fn main() -> anyhow::Result<()> {
     // for k: for i: { A[i] = 0.2*B[i][k-1] + C[i][k+1];
@@ -49,9 +49,13 @@ fn main() -> anyhow::Result<()> {
     }
     assert!(deps.has(DepKind::Raw) && deps.has(DepKind::War) && deps.has(DepKind::Waw));
 
-    // SILO cfg2: privatize A, copy C, pipeline the k loop.
-    let rep = silo_cfg2(&mut p)?;
-    println!("\n--- SILO cfg2 passes ---\n{}", rep.summary());
+    // SILO cfg2 as a declarative pipeline: privatize A, copy C, pipeline
+    // the k loop. (`Pipeline::from_spec("privatize,fusion,doacross,doall")`
+    // would build a custom variant of the same machinery.)
+    let pipeline = Pipeline::cfg2();
+    println!("\n--- pipeline spec: {} ---", pipeline.pass_names().join(" → "));
+    let rep = pipeline.run(&mut p)?;
+    println!("--- SILO cfg2 passes ---\n{}", rep.summary());
     println!("\n--- optimized program ---\n{}", silo::ir::pretty::pretty(&p));
 
     // Execute on the threaded VM and show a checksum.

@@ -13,7 +13,7 @@
 //!
 //!     make artifacts && cargo run --release --example vertical_advection
 
-use silo::coordinator::{self, MemSchedules, OptConfig};
+use silo::coordinator::{self, MemSchedules, OptConfig, PipelineSpec};
 use silo::kernels::{self, gen_inputs, vadv, Preset};
 use silo::runtime::Oracle;
 
@@ -21,18 +21,25 @@ fn main() -> anyhow::Result<()> {
     println!("== vertical advection end-to-end ==");
     let preset = Preset::Small; // 32×32×45
 
-    // 1–3: run the three configurations on the VM.
+    // 1–3: run the four pipeline configurations on the VM. cfg3 carries
+    // its own (cost-model-gated) memory schedules as pipeline stages; the
+    // others get an explicit ptr-inc stage appended by the driver.
     let mut results = Vec::new();
     for (name, cfg) in [
         ("baseline", OptConfig::None),
         ("SILO cfg1", OptConfig::Cfg1),
         ("SILO cfg2", OptConfig::Cfg2),
+        ("SILO cfg3", OptConfig::Cfg3),
     ] {
         let threads = if name == "baseline" { 1 } else { 3 };
-        let out = coordinator::optimize_and_run(
+        let mem = MemSchedules {
+            ptr_inc: cfg == OptConfig::Cfg1 || cfg == OptConfig::Cfg2,
+            prefetch: false,
+        };
+        let out = coordinator::optimize_and_run_spec(
             "vadv",
-            cfg,
-            MemSchedules { ptr_inc: cfg != OptConfig::None, prefetch: false },
+            &PipelineSpec::Config(cfg),
+            mem,
             preset,
             threads,
         )?;

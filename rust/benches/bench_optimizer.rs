@@ -1,14 +1,55 @@
-//! Bench: analysis + transform throughput over the whole NPBench corpus
-//! (ablation: how expensive is SILO itself). `cargo bench --bench bench_optimizer`
+//! Bench: optimizer throughput with the analysis cache on vs. off — how
+//! expensive is SILO itself, and how much does memoizing per-loop
+//! analyses buy (DESIGN.md §Pass manager).
+//!
+//! Runs the full cfg2 pipeline over every registered kernel with (a) a
+//! fresh enabled `AnalysisCache` per kernel and (b) a disabled cache that
+//! recomputes every query, then repeats the seed's analyze+schedule+lower
+//! sweep for continuity. Emits `BENCH_optimizer.json` next to the
+//! manifest so future PRs have a machine-readable perf trajectory.
+//!
+//!     cargo bench --bench bench_optimizer
 
+use silo::analysis::AnalysisCache;
 use silo::bench::{black_box, time_budgeted};
-use silo::kernels::npbench_corpus;
+use silo::kernels::{all_kernels, npbench_corpus};
 use silo::lowering::lower;
 use silo::schedules::schedule_all_ptr_inc;
+use silo::transforms::Pipeline;
 use std::time::Duration;
 
 fn main() {
-    let st = time_budgeted(Duration::from_secs(3), || {
+    let n_kernels = all_kernels().len();
+
+    // (a) cfg2 pipeline, cache enabled.
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    let cached = time_budgeted(Duration::from_secs(2), || {
+        let pipeline = Pipeline::cfg2();
+        let (mut h, mut m) = (0u64, 0u64);
+        for entry in all_kernels() {
+            let mut p = (entry.build)();
+            let mut cache = AnalysisCache::new();
+            black_box(pipeline.run_with(&mut p, &mut cache).unwrap());
+            h += cache.hits();
+            m += cache.misses();
+        }
+        hits = h;
+        misses = m;
+    });
+
+    // (b) cfg2 pipeline, cache disabled (every query recomputes).
+    let uncached = time_budgeted(Duration::from_secs(2), || {
+        let pipeline = Pipeline::cfg2();
+        for entry in all_kernels() {
+            let mut p = (entry.build)();
+            let mut cache = AnalysisCache::disabled();
+            black_box(pipeline.run_with(&mut p, &mut cache).unwrap());
+        }
+    });
+
+    // (c) the seed's analyze+schedule+lower sweep (continuity series).
+    let legacy = time_budgeted(Duration::from_secs(2), || {
         for entry in npbench_corpus() {
             let mut p = (entry.build)();
             black_box(silo::analysis::classify_program(&p).is_scop());
@@ -19,8 +60,29 @@ fn main() {
             black_box(lower(&p).unwrap());
         }
     });
+
+    let speedup = uncached.mean_ms() / cached.mean_ms().max(1e-9);
+    println!(
+        "cfg2 pipeline over {n_kernels} kernels: {:.1} ms/sweep cached, {:.1} ms/sweep uncached ({speedup:.2}x, {hits} hits / {misses} misses)",
+        cached.mean_ms(),
+        uncached.mean_ms(),
+    );
     println!(
         "analyze+schedule+lower 20-kernel corpus: {:.1} ms/sweep",
-        st.mean_ms()
+        legacy.mean_ms()
     );
+
+    // Machine-readable trajectory (hand-rolled JSON; no serde in the
+    // vendored set).
+    let json = format!(
+        "{{\n  \"bench\": \"optimizer\",\n  \"kernels\": {n_kernels},\n  \"pipeline\": \"cfg2\",\n  \"cache_on_ms_per_sweep\": {:.3},\n  \"cache_off_ms_per_sweep\": {:.3},\n  \"cache_speedup\": {:.3},\n  \"cache_hits\": {hits},\n  \"cache_misses\": {misses},\n  \"legacy_analyze_schedule_lower_ms\": {:.3}\n}}\n",
+        cached.mean_ms(),
+        uncached.mean_ms(),
+        speedup,
+        legacy.mean_ms(),
+    );
+    match std::fs::write("BENCH_optimizer.json", &json) {
+        Ok(()) => println!("wrote BENCH_optimizer.json"),
+        Err(e) => eprintln!("could not write BENCH_optimizer.json: {e}"),
+    }
 }

@@ -1,0 +1,352 @@
+//! Memoized analysis cache shared by every optimization pass (DESIGN.md
+//! §Pass manager).
+//!
+//! The SILO pipeline re-queries the same per-loop analyses — dependence
+//! reports, body dataflow graphs, iteration visibility, and propagated
+//! summaries — at every pass, and the recursive summarization re-walks a
+//! depth-d nest once per enclosing level. The cache memoizes all four per
+//! [`LoopId`], keyed by a program *version counter* that transforms bump
+//! through the invalidation API:
+//!
+//! * [`AnalysisCache::dirty`] — a transform mutated loop *L*: evict *L*'s
+//!   subtree (its body changed) and its ancestors (their summaries include
+//!   *L*'s). Sibling nests stay cached — the cross-pass win.
+//! * [`AnalysisCache::dirty_all`] — global restructurings (fusion,
+//!   scalarization) evict everything.
+//!
+//! Transforms that only flip a loop's `schedule` need no invalidation:
+//! none of the cached analyses read schedules.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::dataflow::BodyGraph;
+use crate::ir::{Container, Loop, LoopId, Node, Program};
+
+use super::deps::{loop_deps_memo, DepReport};
+use super::visibility::{
+    body_graph_memo, iter_visibility_memo, loop_summary_memo, IterVisibility, SummaryMemo,
+    SummaryPair,
+};
+
+/// Hit/miss/invalidation counters (summary counters live in the memo and
+/// are folded in by the accessors below).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub invalidations: u64,
+}
+
+/// Per-loop memoization of SILO's analyses. See the module docs for the
+/// invalidation contract.
+#[derive(Debug)]
+pub struct AnalysisCache {
+    enabled: bool,
+    version: u64,
+    summaries: SummaryMemo,
+    graphs: HashMap<LoopId, Arc<BodyGraph>>,
+    deps: HashMap<LoopId, Arc<DepReport>>,
+    vis: HashMap<LoopId, Arc<IterVisibility>>,
+    stats: CacheStats,
+}
+
+impl AnalysisCache {
+    pub fn new() -> AnalysisCache {
+        AnalysisCache {
+            enabled: true,
+            version: 0,
+            summaries: SummaryMemo::new(),
+            graphs: HashMap::new(),
+            deps: HashMap::new(),
+            vis: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Prepare the cache for a pipeline run over `_p`: evict everything
+    /// unless the cache is still pristine. `LoopId`s restart at 0 in
+    /// every [`Program`] instance (and instances can share a name), so a
+    /// cache that has ever been populated cannot be trusted for a program
+    /// handed to a new run. `Pipeline::run_with` calls this; do the same
+    /// before reusing one cache with ad-hoc transform calls. (The program
+    /// parameter reserves room for a real instance identity later.)
+    pub fn rebind(&mut self, _p: &Program) {
+        if !self.is_pristine() {
+            self.dirty_all();
+        }
+    }
+
+    fn is_pristine(&self) -> bool {
+        self.deps.is_empty()
+            && self.graphs.is_empty()
+            && self.vis.is_empty()
+            && self.summaries.is_empty()
+    }
+
+    /// A cache that never stores: every query recomputes. The uncached
+    /// baseline for `bench_optimizer`'s ablation and the backing for the
+    /// legacy free-function transform entry points.
+    pub fn disabled() -> AnalysisCache {
+        AnalysisCache {
+            enabled: false,
+            version: 0,
+            summaries: SummaryMemo::disabled(),
+            graphs: HashMap::new(),
+            deps: HashMap::new(),
+            vis: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Program version this cache believes it matches; bumped on every
+    /// invalidation.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Total hits across all four analysis kinds.
+    pub fn hits(&self) -> u64 {
+        self.stats.hits + self.summaries.hits
+    }
+
+    /// Total misses (recomputations) across all four analysis kinds.
+    pub fn misses(&self) -> u64 {
+        self.stats.misses + self.summaries.misses
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.stats.invalidations
+    }
+
+    /// Loop-carried dependence report for `l` (memoized).
+    pub fn deps(&mut self, l: &Loop, containers: &[Container]) -> Arc<DepReport> {
+        if self.enabled {
+            if let Some(hit) = self.deps.get(&l.id) {
+                self.stats.hits += 1;
+                return hit.clone();
+            }
+        }
+        self.stats.misses += 1;
+        let d = Arc::new(loop_deps_memo(l, containers, &mut self.summaries));
+        if self.enabled {
+            self.deps.insert(l.id, d.clone());
+        }
+        d
+    }
+
+    /// Body dataflow graph for `l` (memoized).
+    pub fn body_graph(&mut self, l: &Loop, containers: &[Container]) -> Arc<BodyGraph> {
+        if self.enabled {
+            if let Some(hit) = self.graphs.get(&l.id) {
+                self.stats.hits += 1;
+                return hit.clone();
+            }
+        }
+        self.stats.misses += 1;
+        let g = Arc::new(body_graph_memo(l, containers, &mut self.summaries));
+        if self.enabled {
+            self.graphs.insert(l.id, g.clone());
+        }
+        g
+    }
+
+    /// Externally visible per-iteration reads/writes of `l` (memoized).
+    pub fn visibility(&mut self, l: &Loop, containers: &[Container]) -> Arc<IterVisibility> {
+        if self.enabled {
+            if let Some(hit) = self.vis.get(&l.id) {
+                self.stats.hits += 1;
+                return hit.clone();
+            }
+        }
+        self.stats.misses += 1;
+        let v = Arc::new(iter_visibility_memo(l, containers, &mut self.summaries));
+        if self.enabled {
+            self.vis.insert(l.id, v.clone());
+        }
+        v
+    }
+
+    /// Propagated whole-loop summary of `l` (memoized; also feeds the
+    /// recursion inside the other three analyses).
+    pub fn summary(&mut self, l: &Loop, containers: &[Container]) -> Arc<SummaryPair> {
+        loop_summary_memo(l, containers, &mut self.summaries)
+    }
+
+    /// Is a dependence report currently cached for `id`? (Test hook for
+    /// the invalidation contract.)
+    pub fn has_deps_for(&self, id: LoopId) -> bool {
+        self.deps.contains_key(&id)
+    }
+
+    /// Is a visibility/summary entry currently cached for `id`?
+    pub fn has_summary_for(&self, id: LoopId) -> bool {
+        self.summaries.contains(id)
+    }
+
+    /// A transform mutated loop `id` (body, bounds, or the containers its
+    /// subtree touches): evict the loop's subtree and its ancestor chain.
+    /// Call *after* the mutation — the ancestor chain is read from the
+    /// current tree. Falls back to [`Self::dirty_all`] when the loop no
+    /// longer exists (it was dissolved by a restructuring).
+    pub fn dirty(&mut self, p: &Program, id: LoopId) {
+        self.version += 1;
+        self.stats.invalidations += 1;
+        let Some(l) = p.find_loop(id) else {
+            self.evict_all();
+            return;
+        };
+        let mut ids: Vec<LoopId> = Vec::new();
+        fn subtree(l: &Loop, out: &mut Vec<LoopId>) {
+            out.push(l.id);
+            for n in &l.body {
+                if let Node::Loop(c) = n {
+                    subtree(c, out);
+                }
+            }
+        }
+        subtree(l, &mut ids);
+        if let Some(parents) = p.loop_parents().get(&id) {
+            ids.extend(parents.iter().copied());
+        }
+        for i in ids {
+            self.evict(i);
+        }
+    }
+
+    /// Global restructuring: evict everything and bump the version.
+    pub fn dirty_all(&mut self) {
+        self.version += 1;
+        self.stats.invalidations += 1;
+        self.evict_all();
+    }
+
+    fn evict(&mut self, id: LoopId) {
+        self.graphs.remove(&id);
+        self.deps.remove(&id);
+        self.vis.remove(&id);
+        self.summaries.remove(id);
+    }
+
+    fn evict_all(&mut self) {
+        self.graphs.clear();
+        self.deps.clear();
+        self.vis.clear();
+        self.summaries.clear();
+    }
+}
+
+impl Default for AnalysisCache {
+    fn default() -> AnalysisCache {
+        AnalysisCache::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{loop_deps, DepKind};
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    /// Two independent top-level nests; nest 1 has a privatizable
+    /// transient (WAW across k), nest 2 is a plain streaming loop.
+    fn two_nests() -> (crate::ir::Program, crate::ir::LoopId, crate::ir::LoopId) {
+        let mut b = ProgramBuilder::new("cache1");
+        let n = b.param_positive("cache1_N");
+        let m = b.param_positive("cache1_M");
+        let t = b.transient("T", Expr::Sym(n));
+        let bb = b.array("B", Expr::Sym(n) * Expr::Sym(m));
+        let out = b.array("O", Expr::Sym(n));
+        let k = b.sym("cache1_k");
+        let i = b.sym("cache1_i");
+        let j = b.sym("cache1_j");
+        let kl = b.for_id(k, int(1), Expr::Sym(m), int(1), |b| {
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                let off = Expr::Sym(i) * Expr::Sym(m) + Expr::Sym(k);
+                b.assign(t, Expr::Sym(i), load(bb, off.clone() - int(1)) * Expr::real(0.2));
+                b.assign(bb, off, load(t, Expr::Sym(i)));
+            });
+        });
+        let jl = b.for_id(j, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(out, Expr::Sym(j), Expr::Sym(j) * Expr::real(2.0));
+        });
+        (b.finish(), kl, jl)
+    }
+
+    #[test]
+    fn hit_on_repeat_query_and_agrees_with_uncached() {
+        let (p, kl, _) = two_nests();
+        let mut cache = AnalysisCache::new();
+        let l = p.find_loop(kl).unwrap();
+        let first = cache.deps(l, &p.containers);
+        assert_eq!(cache.hits(), 0);
+        let second = cache.deps(l, &p.containers);
+        assert!(cache.hits() > 0);
+        assert_eq!(first.deps.len(), second.deps.len());
+        let fresh = loop_deps(l, &p.containers);
+        assert_eq!(first.deps.len(), fresh.deps.len());
+    }
+
+    #[test]
+    fn mutating_one_loop_invalidates_it_and_spares_siblings() {
+        let (mut p, kl, jl) = two_nests();
+        let mut cache = AnalysisCache::new();
+        // Warm both nests.
+        let before = cache.deps(p.find_loop(kl).unwrap(), &p.containers);
+        cache.deps(p.find_loop(jl).unwrap(), &p.containers);
+        assert!(before.of_kind(DepKind::Waw).next().is_some());
+        assert!(cache.has_deps_for(kl) && cache.has_deps_for(jl));
+        let v0 = cache.version();
+
+        // Privatize T at the k loop through the cache-aware transform.
+        let rep = crate::transforms::privatize::privatize_with(&mut p, kl, &mut cache).unwrap();
+        assert_eq!(rep.privatized.len(), 1);
+
+        // Exactly the mutated loop's entries are gone; the sibling nest
+        // stays cached.
+        assert!(!cache.has_deps_for(kl), "mutated loop must be evicted");
+        assert!(cache.has_deps_for(jl), "untouched sibling must stay");
+        assert!(cache.version() > v0);
+
+        // Stale-read regression: a fresh query must see the WAW gone.
+        let after = cache.deps(p.find_loop(kl).unwrap(), &p.containers);
+        assert!(
+            after.of_kind(DepKind::Waw).next().is_none(),
+            "stale WAW served from the cache: {:?}",
+            after.deps
+        );
+    }
+
+    #[test]
+    fn dirty_evicts_ancestors_and_subtree() {
+        let (p, kl, jl) = two_nests();
+        let mut cache = AnalysisCache::new();
+        let outer = p.find_loop(kl).unwrap();
+        let inner = match &outer.body[0] {
+            crate::ir::Node::Loop(l) => l.id,
+            _ => unreachable!(),
+        };
+        cache.deps(outer, &p.containers);
+        cache.deps(p.find_loop(inner).unwrap(), &p.containers);
+        cache.deps(p.find_loop(jl).unwrap(), &p.containers);
+        cache.dirty(&p, inner);
+        assert!(!cache.has_deps_for(inner));
+        assert!(!cache.has_deps_for(kl), "ancestor must be evicted");
+        assert!(cache.has_deps_for(jl), "sibling nest must survive");
+    }
+
+    #[test]
+    fn disabled_cache_never_stores() {
+        let (p, kl, _) = two_nests();
+        let mut cache = AnalysisCache::disabled();
+        cache.deps(p.find_loop(kl).unwrap(), &p.containers);
+        cache.deps(p.find_loop(kl).unwrap(), &p.containers);
+        assert_eq!(cache.hits(), 0);
+        assert!(!cache.has_deps_for(kl));
+    }
+}

@@ -13,7 +13,7 @@
 use crate::ir::{Container, Loop, StmtId};
 use crate::symbolic::{solve_delta, ContainerId, DeltaSolution, Expr, ShiftDir, Truth};
 
-use super::visibility::iter_visibility;
+use super::visibility::{iter_visibility_memo, SummaryMemo};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DepKind {
@@ -154,7 +154,13 @@ pub fn provably_independent(f: &Expr, g: &Expr, l: &Loop) -> bool {
 /// Analyze the loop-carried dependencies of `l` (w.r.t. `l.var` only; inner
 /// loops are summarized by the visibility analysis).
 pub fn loop_deps(l: &Loop, containers: &[Container]) -> DepReport {
-    let vis = iter_visibility(l, containers);
+    loop_deps_memo(l, containers, &mut SummaryMemo::disabled())
+}
+
+/// [`loop_deps`] with nested-loop summaries served from `memo` (see
+/// [`crate::analysis::AnalysisCache`]).
+pub fn loop_deps_memo(l: &Loop, containers: &[Container], memo: &mut SummaryMemo) -> DepReport {
+    let vis = iter_visibility_memo(l, containers, memo);
     let mut report = DepReport::default();
 
     // RAW: read f vs writes g from earlier iterations.

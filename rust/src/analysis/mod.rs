@@ -7,13 +7,20 @@
 //!   restrictions (what Polly/Pluto refuse to touch).
 //! * [`propagate`] — concrete interval propagation for conflict checks and
 //!   cross-validation against enumeration.
+//! * [`cache`] — per-loop memoization of the above with version-counted
+//!   invalidation, shared by every pass in a [`crate::transforms::Pipeline`].
 
 pub mod affine;
+pub mod cache;
 pub mod deps;
 pub mod propagate;
 pub mod visibility;
 
 pub use affine::{classify_nest, classify_program, is_affine_in, AffineViolation, AffinityReport};
+pub use cache::{AnalysisCache, CacheStats};
 pub use deps::{loop_deps, provably_independent, sync_points, Dep, DepDistance, DepKind, DepReport};
 pub use propagate::{access_interval, iteration_count, Interval};
-pub use visibility::{body_graph, iter_visibility, loop_summary, IterVisibility, LoopRange, PropAccess};
+pub use visibility::{
+    body_graph, iter_visibility, loop_summary, IterVisibility, LoopRange, PropAccess, SummaryMemo,
+    SummaryPair,
+};

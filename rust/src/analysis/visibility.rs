@@ -2,9 +2,94 @@
 //! loop iteration are *externally visible*, and the propagation of those
 //! accesses over the loop's full iteration range.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
 use crate::dataflow::BodyGraph;
-use crate::ir::{Access, AccessKind, Container, ContainerKind, Loop, Node, StmtId};
+use crate::ir::{Access, AccessKind, Container, ContainerKind, Loop, LoopId, Node, StmtId};
 use crate::symbolic::{ContainerId, Expr, Sym};
+
+/// Propagated `(reads, writes)` of one whole loop.
+pub type SummaryPair = (Vec<PropAccess>, Vec<PropAccess>);
+
+/// Memo table for per-loop propagated summaries, threaded through the
+/// recursive analyses so a nested loop is summarized once per program
+/// version instead of once per enclosing query. [`crate::analysis::cache`]
+/// owns one per [`crate::analysis::AnalysisCache`]; the plain entry points
+/// below use a disabled (always-miss) memo for drop-in compatibility.
+#[derive(Debug)]
+pub struct SummaryMemo {
+    enabled: bool,
+    map: HashMap<LoopId, Arc<SummaryPair>>,
+    /// Memo hits/misses (misses count every recomputation, cached or not).
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl SummaryMemo {
+    pub fn new() -> SummaryMemo {
+        SummaryMemo {
+            enabled: true,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// A memo that never stores: every lookup recomputes (the uncached
+    /// baseline the optimizer bench compares against).
+    pub fn disabled() -> SummaryMemo {
+        SummaryMemo {
+            enabled: false,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn lookup(&mut self, id: LoopId) -> Option<Arc<SummaryPair>> {
+        if self.enabled {
+            if let Some(hit) = self.map.get(&id) {
+                self.hits += 1;
+                return Some(hit.clone());
+            }
+        }
+        self.misses += 1;
+        None
+    }
+
+    fn store(&mut self, id: LoopId, pair: Arc<SummaryPair>) {
+        if self.enabled {
+            self.map.insert(id, pair);
+        }
+    }
+
+    /// Drop the entry for one loop (cache invalidation).
+    pub fn remove(&mut self, id: LoopId) {
+        self.map.remove(&id);
+    }
+
+    /// Drop every entry.
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    /// Is a summary currently memoized for `id`?
+    pub fn contains(&self, id: LoopId) -> bool {
+        self.map.contains_key(&id)
+    }
+
+    /// Is the memo empty?
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+impl Default for SummaryMemo {
+    fn default() -> SummaryMemo {
+        SummaryMemo::new()
+    }
+}
 
 /// The symbolic iteration range of one loop level, attached to a
 /// propagated access.
@@ -70,7 +155,16 @@ fn iteration_local(c: &Container) -> bool {
 /// Reads: everything not *self-contained* (dominated by a write of the
 /// same symbolic offset within the iteration).
 pub fn iter_visibility(l: &Loop, containers: &[Container]) -> IterVisibility {
-    let graph = body_graph(l, containers);
+    iter_visibility_memo(l, containers, &mut SummaryMemo::disabled())
+}
+
+/// [`iter_visibility`] with nested-loop summaries served from `memo`.
+pub fn iter_visibility_memo(
+    l: &Loop,
+    containers: &[Container],
+    memo: &mut SummaryMemo,
+) -> IterVisibility {
+    let graph = body_graph_memo(l, containers, memo);
     let mut out = IterVisibility::default();
     for (idx, node) in graph.nodes.iter().enumerate() {
         for w in &node.writes {
@@ -107,18 +201,31 @@ fn stmt_of(node: &crate::dataflow::GraphNode, l: &Loop) -> StmtId {
 /// Build the dataflow graph for `l`'s body, summarizing nested loops with
 /// their *propagated* external accesses.
 pub fn body_graph(l: &Loop, containers: &[Container]) -> BodyGraph {
+    body_graph_memo(l, containers, &mut SummaryMemo::disabled())
+}
+
+/// [`body_graph`] with nested-loop summaries served from `memo`.
+pub fn body_graph_memo(l: &Loop, containers: &[Container], memo: &mut SummaryMemo) -> BodyGraph {
+    // Resolve child summaries first (the memo borrow), then build the
+    // graph from the immutable table.
+    let mut child: HashMap<LoopId, Arc<SummaryPair>> = HashMap::new();
+    for n in &l.body {
+        if let Node::Loop(inner) = n {
+            child.insert(inner.id, loop_summary_memo(inner, containers, memo));
+        }
+    }
     let summarize = |n: &Node| -> (Vec<Access>, Vec<Access>) {
         match n {
             Node::Loop(inner) => {
-                let (reads, writes) = loop_summary(inner, containers);
+                let pair = &child[&inner.id];
                 (
-                    reads
-                        .into_iter()
-                        .map(|p| Access::read(p.container, p.offset))
+                    pair.0
+                        .iter()
+                        .map(|p| Access::read(p.container, p.offset.clone()))
                         .collect(),
-                    writes
-                        .into_iter()
-                        .map(|p| Access::write(p.container, p.offset))
+                    pair.1
+                        .iter()
+                        .map(|p| Access::write(p.container, p.offset.clone()))
                         .collect(),
                 )
             }
@@ -133,7 +240,22 @@ pub fn body_graph(l: &Loop, containers: &[Container]) -> BodyGraph {
 /// `(reads, writes)` for the loop as a whole — each a [`PropAccess`] whose
 /// `ranges` binds every loop variable the offset still mentions.
 pub fn loop_summary(l: &Loop, containers: &[Container]) -> (Vec<PropAccess>, Vec<PropAccess>) {
-    let graph = body_graph(l, containers);
+    let pair = loop_summary_memo(l, containers, &mut SummaryMemo::disabled());
+    (pair.0.clone(), pair.1.clone())
+}
+
+/// [`loop_summary`] memoized per [`LoopId`]: the recursion checks `memo`
+/// before recomputing, so summarizing a depth-d nest touches each loop
+/// once instead of once per enclosing level.
+pub fn loop_summary_memo(
+    l: &Loop,
+    containers: &[Container],
+    memo: &mut SummaryMemo,
+) -> Arc<SummaryPair> {
+    if let Some(hit) = memo.lookup(l.id) {
+        return hit;
+    }
+    let graph = body_graph_memo(l, containers, memo);
     let mut reads: Vec<PropAccess> = Vec::new();
     let mut writes: Vec<PropAccess> = Vec::new();
 
@@ -168,15 +290,15 @@ pub fn loop_summary(l: &Loop, containers: &[Container]) -> (Vec<PropAccess>, Vec
                 }
             }
             Node::Loop(inner) => {
-                let (ir, iw) = loop_summary(inner, containers);
-                for r in ir {
+                let pair = loop_summary_memo(inner, containers, memo);
+                for r in pair.0.iter() {
                     let as_access = Access::read(r.container, r.offset.clone());
                     if graph.is_self_contained(idx, &as_access) {
                         continue;
                     }
-                    reads.push(r);
+                    reads.push(r.clone());
                 }
-                writes.extend(iw);
+                writes.extend(pair.1.iter().cloned());
             }
         }
     }
@@ -211,7 +333,9 @@ pub fn loop_summary(l: &Loop, containers: &[Container]) -> (Vec<PropAccess>, Vec
             p.whole = true;
         }
     }
-    (reads, writes)
+    let pair = Arc::new((reads, writes));
+    memo.store(l.id, pair.clone());
+    pair
 }
 
 /// Do two propagated accesses possibly overlap? Sound over-approximation:

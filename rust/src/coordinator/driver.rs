@@ -1,14 +1,19 @@
 //! The optimize → lower → execute → validate pipeline (the coordinator's
 //! programmatic API; the CLI and examples are thin wrappers over this).
+//!
+//! Optimization is selected by a [`PipelineSpec`] — a named paper
+//! configuration or an explicit comma-separated pass list — which the
+//! driver resolves to a [`Pipeline`]. Memory schedules requested through
+//! [`MemSchedules`] are appended to that pipeline as ordinary stages
+//! (§4 schedules are passes, not driver special cases).
 
 use anyhow::{bail, Result};
 
 use crate::exec::Vm;
 use crate::ir::Program;
 use crate::kernels::{self, gen_inputs, Preset};
-use crate::schedules::{schedule_all_ptr_inc, schedule_prefetches};
 use crate::symbolic::Sym;
-use crate::transforms::{silo_cfg1, silo_cfg2, PipelineReport};
+use crate::transforms::{Pipeline, PipelineReport, PrefetchPass, PtrIncPass};
 
 /// Which optimization pipeline to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,6 +24,58 @@ pub enum OptConfig {
     Cfg1,
     /// Cfg1 + DOACROSS pipelining (§6.1 config 2).
     Cfg2,
+    /// Cfg2 + tiling + cost-model-gated memory schedules.
+    Cfg3,
+}
+
+impl OptConfig {
+    /// Spec-string name understood by [`Pipeline::from_spec`].
+    pub fn name(self) -> &'static str {
+        match self {
+            OptConfig::None => "none",
+            OptConfig::Cfg1 => "cfg1",
+            OptConfig::Cfg2 => "cfg2",
+            OptConfig::Cfg3 => "cfg3",
+        }
+    }
+}
+
+/// How to optimize: a named configuration or a custom pass list
+/// (`--pipeline privatize,fusion,doall,...`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PipelineSpec {
+    Config(OptConfig),
+    Custom(String),
+}
+
+impl PipelineSpec {
+    /// Parse a CLI-style spec string.
+    pub fn parse(s: &str) -> PipelineSpec {
+        match s.trim() {
+            "" | "none" => PipelineSpec::Config(OptConfig::None),
+            "cfg1" => PipelineSpec::Config(OptConfig::Cfg1),
+            "cfg2" => PipelineSpec::Config(OptConfig::Cfg2),
+            "cfg3" => PipelineSpec::Config(OptConfig::Cfg3),
+            other => PipelineSpec::Custom(other.to_string()),
+        }
+    }
+
+    /// Resolve to a runnable [`Pipeline`], appending the memory-schedule
+    /// stages `mem` asks for. Both variants go through
+    /// [`Pipeline::from_spec`] — the one authoritative name table.
+    pub fn build(&self, mem: MemSchedules) -> Result<Pipeline> {
+        let mut pl = match self {
+            PipelineSpec::Config(cfg) => Pipeline::from_spec(cfg.name())?,
+            PipelineSpec::Custom(spec) => Pipeline::from_spec(spec)?,
+        };
+        if mem.ptr_inc {
+            pl = pl.with(PtrIncPass { gated: false });
+        }
+        if mem.prefetch {
+            pl = pl.with(PrefetchPass { gated: false });
+        }
+        Ok(pl)
+    }
 }
 
 /// Memory-schedule options.
@@ -36,10 +93,22 @@ pub struct RunOutcome {
     pub wall: std::time::Duration,
 }
 
-/// Optimize and execute a registered kernel.
+/// Optimize and execute a registered kernel under a named configuration.
 pub fn optimize_and_run(
     name: &str,
     cfg: OptConfig,
+    mem: MemSchedules,
+    preset: Preset,
+    threads: usize,
+) -> Result<RunOutcome> {
+    optimize_and_run_spec(name, &PipelineSpec::Config(cfg), mem, preset, threads)
+}
+
+/// Optimize and execute a registered kernel under an arbitrary pipeline
+/// spec.
+pub fn optimize_and_run_spec(
+    name: &str,
+    spec: &PipelineSpec,
     mem: MemSchedules,
     preset: Preset,
     threads: usize,
@@ -55,17 +124,13 @@ pub fn optimize_and_run(
         );
     };
     let mut program = (entry.build)();
-    let pipeline = match cfg {
-        OptConfig::None => None,
-        OptConfig::Cfg1 => Some(silo_cfg1(&mut program)?),
-        OptConfig::Cfg2 => Some(silo_cfg2(&mut program)?),
+    let pl = spec.build(mem)?;
+    let pipeline = if pl.is_empty() {
+        None
+    } else {
+        let rep = pl.run(&mut program)?;
+        Some(rep)
     };
-    if mem.ptr_inc {
-        schedule_all_ptr_inc(&mut program);
-    }
-    if mem.prefetch {
-        schedule_prefetches(&mut program);
-    }
     crate::ir::validate::validate(&program)?;
 
     let params: Vec<(Sym, i64)> = (entry.preset)(preset);
@@ -87,8 +152,19 @@ pub fn optimize_and_run(
 /// every output container must match bit-for-bit (same canonical
 /// expression trees ⇒ same rounding).
 pub fn validate_config(name: &str, cfg: OptConfig, mem: MemSchedules, threads: usize) -> Result<()> {
-    let base = optimize_and_run(name, OptConfig::None, MemSchedules::default(), Preset::Tiny, 1)?;
-    let opt = optimize_and_run(name, cfg, mem, Preset::Tiny, threads)?;
+    validate_spec(name, &PipelineSpec::Config(cfg), mem, threads)
+}
+
+/// [`validate_config`] for an arbitrary pipeline spec.
+pub fn validate_spec(
+    name: &str,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+    threads: usize,
+) -> Result<()> {
+    let base =
+        optimize_and_run(name, OptConfig::None, MemSchedules::default(), Preset::Tiny, 1)?;
+    let opt = optimize_and_run_spec(name, spec, mem, Preset::Tiny, threads)?;
     // Compare *observable* outputs only: argument containers. Transients
     // may legitimately diverge (privatized scratch stays thread-local).
     for c in &base.program.containers {
@@ -101,7 +177,7 @@ pub fn validate_config(name: &str, cfg: OptConfig, mem: MemSchedules, threads: u
                 "{name}: output container {} ({}) diverged under {:?}",
                 i,
                 base.storage.names[i],
-                cfg
+                spec
             );
         }
     }
@@ -144,5 +220,32 @@ mod tests {
             1,
         )
         .unwrap();
+    }
+
+    /// cfg3 (tiling + gated schedules) must stay bit-identical to the
+    /// baseline on the two headline kernels.
+    #[test]
+    fn cfg3_validates_on_vadv_and_laplace() {
+        for kernel in ["vadv", "laplace2d"] {
+            validate_config(kernel, OptConfig::Cfg3, MemSchedules::default(), 3)
+                .unwrap_or_else(|e| panic!("{kernel} under cfg3: {e:#}"));
+        }
+    }
+
+    /// A custom pass-list spec drives the same machinery end to end.
+    #[test]
+    fn custom_spec_runs_and_validates() {
+        let spec = PipelineSpec::parse("privatize,fusion,doall,ptr-inc");
+        assert!(matches!(spec, PipelineSpec::Custom(_)));
+        validate_spec("jacobi_1d", &spec, MemSchedules::default(), 2).unwrap();
+    }
+
+    #[test]
+    fn bad_custom_spec_is_rejected() {
+        let spec = PipelineSpec::parse("doall,no-such-pass");
+        assert!(
+            optimize_and_run_spec("vadv", &spec, MemSchedules::default(), Preset::Tiny, 1)
+                .is_err()
+        );
     }
 }

@@ -15,7 +15,7 @@ use crate::machine::{
 };
 use crate::schedules::{schedule_all_ptr_inc, schedule_prefetches};
 use crate::symbolic::Sym;
-use crate::transforms::{silo_cfg1, silo_cfg2};
+use crate::transforms::{silo_cfg1, silo_cfg2, Pipeline};
 
 use super::report::{ms, speedup, Table};
 
@@ -89,10 +89,12 @@ fn fig1() -> Result<String> {
         t.row(vec![name.into(), txt.into(), "—".into(), "N/A".into()]);
     }
 
-    // SILO + clang: cfg1 parallelizes, pointer incrementation cuts spills.
+    // SILO + clang: cfg1 parallelizes, pointer incrementation cuts spills
+    // (the ptr-inc stage rides the same pipeline, §4-as-a-pass).
     let mut p = kernels::laplace::build();
-    silo_cfg1(&mut p)?;
-    schedule_all_ptr_inc(&mut p);
+    Pipeline::from_spec("cfg1")?
+        .with(crate::transforms::PtrIncPass { gated: false })
+        .run(&mut p)?;
     let prog = lower(&p)?;
     let cm = clang();
     let pressure = machine::analyze(&prog);
@@ -256,7 +258,7 @@ fn fig9() -> Result<String> {
     let base_elem = vadv_elem_cycles(&kernels::vadv::build(), &node)?;
     let cfg1_elem = {
         let mut p = kernels::vadv::build();
-        silo_cfg1(&mut p)?;
+        Pipeline::cfg1().run(&mut p)?;
         vadv_elem_cycles(&p, &node)?
     };
     // cfg2's fine-grained (k,i) pipeline keeps column locality per worker

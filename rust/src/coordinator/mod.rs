@@ -5,5 +5,8 @@ pub mod driver;
 pub mod experiments;
 pub mod report;
 
-pub use driver::{optimize_and_run, validate_config, MemSchedules, OptConfig, RunOutcome};
+pub use driver::{
+    optimize_and_run, optimize_and_run_spec, validate_config, validate_spec, MemSchedules,
+    OptConfig, PipelineSpec, RunOutcome,
+};
 pub use report::Table;

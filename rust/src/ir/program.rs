@@ -130,9 +130,6 @@ impl Program {
     /// All loops, outermost-first pre-order.
     pub fn loops(&self) -> Vec<&Loop> {
         let mut out = Vec::new();
-        self.visit(&mut |n| {
-            if let Node::Loop(_) = n {}
-        });
         // visit takes a closure that can't easily capture lifetimes; do it
         // manually instead.
         fn collect<'a>(nodes: &'a [Node], out: &mut Vec<&'a Loop>) {

@@ -4,6 +4,17 @@
 //! Optimization" (CS.DC 2025). See DESIGN.md for the system inventory and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+// Stylistic lints the analysis/transform code trips by design: index-led
+// loops mirror the paper's iteration-vector notation, and the symbolic
+// types get large without boxing.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::large_enum_variant,
+    clippy::result_large_err
+)]
+
 pub mod analysis;
 pub mod baselines;
 pub mod bench;

@@ -2,14 +2,20 @@
 //!
 //! Subcommands (hand-rolled arg parsing; clap is not in the vendored set):
 //!   silo list                                  — registered kernels
-//!   silo show <kernel> [--cfg1|--cfg2] [--ptr-inc] [--prefetch]
-//!   silo run <kernel> [--cfg1|--cfg2] [--ptr-inc] [--prefetch]
-//!            [--preset tiny|small|medium] [--threads N]
-//!   silo validate <kernel> [--cfg1|--cfg2] [--ptr-inc] [--threads N]
+//!   silo show <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
+//!            [--ptr-inc] [--prefetch]
+//!   silo run <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
+//!            [--ptr-inc] [--prefetch] [--preset tiny|small|medium]
+//!            [--threads N]
+//!   silo validate <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
+//!            [--ptr-inc] [--threads N]
 //!   silo experiment <fig1|fig2|fig9|table1|fig10|all>
 //!   silo artifacts                             — list PJRT artifacts
+//!
+//! `--pipeline` takes a named configuration (`none|cfg1|cfg2|cfg3`) or a
+//! comma-separated pass list, e.g. `--pipeline=privatize,fusion,doall`.
 
-use silo::coordinator::{self, MemSchedules, OptConfig};
+use silo::coordinator::{self, MemSchedules, OptConfig, PipelineSpec};
 use silo::kernels::Preset;
 
 fn main() {
@@ -49,13 +55,17 @@ impl Args {
             .map(|x| x.splitn(2, '=').nth(1).unwrap().to_string())
     }
 
-    fn opt_config(&self) -> OptConfig {
-        if self.has("--cfg2") {
-            OptConfig::Cfg2
+    fn spec(&self) -> PipelineSpec {
+        if let Some(v) = self.value("--pipeline") {
+            PipelineSpec::parse(&v)
+        } else if self.has("--cfg3") {
+            PipelineSpec::Config(OptConfig::Cfg3)
+        } else if self.has("--cfg2") {
+            PipelineSpec::Config(OptConfig::Cfg2)
         } else if self.has("--cfg1") {
-            OptConfig::Cfg1
+            PipelineSpec::Config(OptConfig::Cfg1)
         } else {
-            OptConfig::None
+            PipelineSpec::Config(OptConfig::None)
         }
     }
 
@@ -91,9 +101,9 @@ fn real_main() -> anyhow::Result<()> {
         }
         Some("show") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
-            let out = coordinator::optimize_and_run(
+            let out = coordinator::optimize_and_run_spec(
                 name,
-                args.opt_config(),
+                &args.spec(),
                 args.mem(),
                 Preset::Tiny,
                 1,
@@ -105,9 +115,9 @@ fn real_main() -> anyhow::Result<()> {
         }
         Some("run") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
-            let out = coordinator::optimize_and_run(
+            let out = coordinator::optimize_and_run_spec(
                 name,
-                args.opt_config(),
+                &args.spec(),
                 args.mem(),
                 args.preset(),
                 args.threads(),
@@ -120,7 +130,7 @@ fn real_main() -> anyhow::Result<()> {
         }
         Some("validate") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
-            coordinator::validate_config(name, args.opt_config(), args.mem(), args.threads())?;
+            coordinator::validate_spec(name, &args.spec(), args.mem(), args.threads())?;
             println!("{name}: optimized output identical to baseline ✓");
         }
         Some("experiment") => {
@@ -141,6 +151,7 @@ fn real_main() -> anyhow::Result<()> {
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
         "usage: silo <list|show|run|validate|experiment|artifacts> [args]\n\
+         optimization: --cfg1|--cfg2|--cfg3 or --pipeline=<none|cfg1|cfg2|cfg3|pass,pass,...>\n\
          see rust/src/main.rs header for details"
     )
 }

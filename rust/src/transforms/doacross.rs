@@ -15,8 +15,8 @@
 
 use anyhow::Result;
 
-use crate::analysis::deps::{loop_deps, DepDistance, DepKind};
-use crate::analysis::visibility::body_graph;
+use crate::analysis::deps::{DepDistance, DepKind};
+use crate::analysis::AnalysisCache;
 use crate::dataflow::dominance::post_dominating_resolver;
 use crate::dataflow::NodeRef;
 use crate::ir::{LoopId, LoopSchedule, Node, Program, ReleaseSpec, StmtId, WaitSpec};
@@ -42,6 +42,17 @@ pub enum SkipReason {
 
 /// Attempt DOACROSS parallelization of loop `loop_id`.
 pub fn pipeline_doacross(p: &mut Program, loop_id: LoopId) -> Result<DoacrossReport> {
+    pipeline_doacross_with(p, loop_id, &mut AnalysisCache::disabled())
+}
+
+/// [`pipeline_doacross`] with analyses served from (and invalidated in)
+/// `cache`. Code motion reorders the loop body, so a successful reorder
+/// dirties the loop before the release point is re-resolved.
+pub fn pipeline_doacross_with(
+    p: &mut Program,
+    loop_id: LoopId,
+    cache: &mut AnalysisCache,
+) -> Result<DoacrossReport> {
     let mut report = DoacrossReport::default();
     let Some(l) = p.find_loop(loop_id).cloned() else {
         return Ok(report);
@@ -49,7 +60,7 @@ pub fn pipeline_doacross(p: &mut Program, loop_id: LoopId) -> Result<DoacrossRep
     if l.is_parallel() {
         return Ok(report);
     }
-    let deps = loop_deps(&l, &p.containers);
+    let deps = cache.deps(&l, &p.containers);
     if !deps.has(DepKind::Raw) {
         report.skipped.push((loop_id, SkipReason::NoRawDependence));
         return Ok(report);
@@ -86,11 +97,11 @@ pub fn pipeline_doacross(p: &mut Program, loop_id: LoopId) -> Result<DoacrossRep
     // §3.3.2 code motion: reorder the body so wait-carrying elements sit as
     // late as dataflow allows.
     let wait_stmts: Vec<StmtId> = waits.iter().map(|w| w.before_stmt).collect();
-    reorder_body_late(p, loop_id, &wait_stmts);
+    reorder_body_late(p, loop_id, &wait_stmts, cache);
 
     // Re-resolve the (possibly reordered) loop and compute the release.
     let l = p.find_loop(loop_id).unwrap().clone();
-    let graph = body_graph(&l, &p.containers);
+    let graph = cache.body_graph(&l, &p.containers);
     let resolver_indices: Vec<usize> = graph
         .nodes
         .iter()
@@ -109,7 +120,7 @@ pub fn pipeline_doacross(p: &mut Program, loop_id: LoopId) -> Result<DoacrossRep
         .map(|n| n.index)
         .collect();
 
-    let release = match post_dominating_resolver(&graph, &resolver_indices) {
+    let release = match post_dominating_resolver(graph.as_ref(), &resolver_indices) {
         Some(idx) => match graph.nodes[idx].node {
             NodeRef::Stmt(sid) => ReleaseSpec::AfterStmt(sid),
             NodeRef::Loop(_) => ReleaseSpec::EndOfBody,
@@ -154,10 +165,15 @@ pub fn pipeline_doacross(p: &mut Program, loop_id: LoopId) -> Result<DoacrossRep
 
 /// Apply DOACROSS to every still-sequential loop that qualifies.
 pub fn pipeline_all(p: &mut Program) -> Result<DoacrossReport> {
+    pipeline_all_with(p, &mut AnalysisCache::disabled())
+}
+
+/// [`pipeline_all`] with analyses served from `cache`.
+pub fn pipeline_all_with(p: &mut Program, cache: &mut AnalysisCache) -> Result<DoacrossReport> {
     let ids: Vec<LoopId> = p.loops().iter().map(|l| l.id).collect();
     let mut combined = DoacrossReport::default();
     for id in ids {
-        let r = pipeline_doacross(p, id)?;
+        let r = pipeline_doacross_with(p, id, cache)?;
         combined.pipelined.extend(r.pipelined);
         combined.skipped.extend(r.skipped);
     }
@@ -177,9 +193,14 @@ fn set_schedule(p: &mut Program, loop_id: LoopId, sched: LoopSchedule) {
 /// Stable list scheduling of the loop body: respect intra-iteration
 /// dataflow edges, prefer placing elements whose statements carry waits as
 /// late as possible.
-fn reorder_body_late(p: &mut Program, loop_id: LoopId, wait_stmts: &[StmtId]) {
+fn reorder_body_late(
+    p: &mut Program,
+    loop_id: LoopId,
+    wait_stmts: &[StmtId],
+    cache: &mut AnalysisCache,
+) {
     let l = p.find_loop(loop_id).unwrap().clone();
-    let graph = body_graph(&l, &p.containers);
+    let graph = cache.body_graph(&l, &p.containers);
     let n = graph.nodes.len();
     if n <= 1 {
         return;
@@ -239,6 +260,7 @@ fn reorder_body_late(p: &mut Program, loop_id: LoopId, wait_stmts: &[StmtId]) {
             }
         }
     });
+    cache.dirty(p, loop_id);
 }
 
 #[cfg(test)]

@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::analysis::loop_deps;
+use crate::analysis::AnalysisCache;
 use crate::ir::{LoopId, LoopSchedule, Node, Program};
 
 #[derive(Debug, Clone, Default)]
@@ -17,6 +17,17 @@ pub struct DoallReport {
 /// each nest (the common OpenMP-style policy — inner parallelism wastes
 /// fork/join overhead once an outer level is parallel).
 pub fn parallelize_doall(p: &mut Program, outermost_only: bool) -> Result<DoallReport> {
+    parallelize_doall_with(p, outermost_only, &mut AnalysisCache::disabled())
+}
+
+/// [`parallelize_doall`] with dependence queries served from `cache`.
+/// Marking a loop Parallel touches only its schedule, which no cached
+/// analysis reads — no invalidation needed.
+pub fn parallelize_doall_with(
+    p: &mut Program,
+    outermost_only: bool,
+    cache: &mut AnalysisCache,
+) -> Result<DoallReport> {
     let mut report = DoallReport::default();
     let containers = p.containers.clone();
     fn walk(
@@ -25,6 +36,7 @@ pub fn parallelize_doall(p: &mut Program, outermost_only: bool) -> Result<DoallR
         outermost_only: bool,
         under_parallel: bool,
         report: &mut DoallReport,
+        cache: &mut AnalysisCache,
     ) {
         for n in nodes {
             if let Node::Loop(l) = n {
@@ -32,7 +44,7 @@ pub fn parallelize_doall(p: &mut Program, outermost_only: bool) -> Result<DoallR
                 if matches!(l.schedule, LoopSchedule::Sequential)
                     && !(outermost_only && under_parallel)
                 {
-                    let deps = loop_deps(l, containers);
+                    let deps = cache.deps(l, containers);
                     if deps.is_doall() {
                         l.schedule = LoopSchedule::Parallel;
                         report.parallelized.push(l.id);
@@ -41,7 +53,14 @@ pub fn parallelize_doall(p: &mut Program, outermost_only: bool) -> Result<DoallR
                 } else if l.is_parallel() {
                     now_parallel = true;
                 }
-                walk(&mut l.body, containers, outermost_only, now_parallel, report);
+                walk(
+                    &mut l.body,
+                    containers,
+                    outermost_only,
+                    now_parallel,
+                    report,
+                    cache,
+                );
             }
         }
     }
@@ -51,6 +70,7 @@ pub fn parallelize_doall(p: &mut Program, outermost_only: bool) -> Result<DoallR
         outermost_only,
         false,
         &mut report,
+        cache,
     );
     Ok(report)
 }

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::analysis::visibility::body_graph;
-use crate::analysis::{loop_deps, DepKind};
+use crate::analysis::{AnalysisCache, DepKind};
 use crate::ir::{Access, ContainerKind, Loop, LoopId, LoopSchedule, Node, Program, Stmt};
 use crate::symbolic::{ContainerId, Expr, Sym};
 
@@ -26,11 +26,27 @@ pub struct InputCopyReport {
 /// loop level — a RAW read must see the *live* array, and a WAW means the
 /// write set itself conflicts.
 pub fn resolve_input_deps(p: &mut Program, loop_id: LoopId) -> Result<InputCopyReport> {
+    resolve_input_deps_with(p, loop_id, &mut AnalysisCache::disabled())
+}
+
+/// [`resolve_input_deps`] with the dependence query served from `cache`.
+///
+/// Invalidation: the transform redirects reads inside `loop_id`'s subtree
+/// and inserts a copy loop as a new sibling, so the loop, its subtree, and
+/// its ancestors are dirtied; unrelated nests stay cached. (The per-
+/// container rewrite passes below intentionally re-derive their body
+/// graphs from the live tree, not the cache — each container's redirect
+/// changes the graphs the next one must see.)
+pub fn resolve_input_deps_with(
+    p: &mut Program,
+    loop_id: LoopId,
+    cache: &mut AnalysisCache,
+) -> Result<InputCopyReport> {
     let mut report = InputCopyReport::default();
     let Some(l) = p.find_loop(loop_id).cloned() else {
         return Ok(report);
     };
-    let deps = loop_deps(&l, &p.containers);
+    let deps = cache.deps(&l, &p.containers);
     let war_containers = deps.containers(DepKind::War);
     for c in war_containers {
         let has_other = deps
@@ -44,6 +60,9 @@ pub fn resolve_input_deps(p: &mut Program, loop_id: LoopId) -> Result<InputCopyR
         redirect_reads(p, loop_id, c, copy);
         insert_copy_loop(p, loop_id, c, copy);
         report.copied.push((c, copy));
+    }
+    if !report.copied.is_empty() {
+        cache.dirty(p, loop_id);
     }
     Ok(report)
 }

@@ -7,7 +7,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::analysis::loop_deps;
+use crate::analysis::AnalysisCache;
 use crate::ir::{Loop, LoopId, Node, Program};
 
 /// Is `outer` perfectly nested over exactly one inner loop?
@@ -23,6 +23,11 @@ fn perfect_child(outer: &Loop) -> Option<&Loop> {
 /// we require that at least one of the two loops is dependence-free
 /// (sufficient condition; full direction-vector legality is future work).
 pub fn can_interchange(p: &Program, outer_id: LoopId) -> bool {
+    can_interchange_with(p, outer_id, &mut AnalysisCache::disabled())
+}
+
+/// [`can_interchange`] with dependence queries served from `cache`.
+pub fn can_interchange_with(p: &Program, outer_id: LoopId, cache: &mut AnalysisCache) -> bool {
     let Some(outer) = p.find_loop(outer_id) else {
         return false;
     };
@@ -41,8 +46,8 @@ pub fn can_interchange(p: &Program, outer_id: LoopId) -> bool {
         }
     }
     // Sufficient dependence condition.
-    let outer_deps = loop_deps(outer, &p.containers);
-    let inner_deps = loop_deps(inner, &p.containers);
+    let outer_deps = cache.deps(outer, &p.containers);
+    let inner_deps = cache.deps(inner, &p.containers);
     outer_deps.is_doall() || inner_deps.is_doall()
 }
 
@@ -96,6 +101,18 @@ pub fn interchange(p: &mut Program, outer_id: LoopId) -> Result<()> {
 /// `loop_id` still names the sinking (sequential) header — now one level
 /// down, outer over the next child.
 pub fn sink_sequential_loop(p: &mut Program, loop_id: LoopId) -> usize {
+    sink_sequential_loop_with(p, loop_id, &mut AnalysisCache::disabled())
+}
+
+/// [`sink_sequential_loop`] with analyses served from (and invalidated in)
+/// `cache`. Each successful interchange rewrites the two swapped headers
+/// in place, so the sinking loop (whose id travels with its header) is
+/// dirtied after every level.
+pub fn sink_sequential_loop_with(
+    p: &mut Program,
+    loop_id: LoopId,
+    cache: &mut AnalysisCache,
+) -> usize {
     let mut sank = 0;
     loop {
         let Some(outer) = p.find_loop(loop_id) else {
@@ -104,16 +121,20 @@ pub fn sink_sequential_loop(p: &mut Program, loop_id: LoopId) -> usize {
         let Some(child) = perfect_child(outer) else {
             break;
         };
-        let child_deps = loop_deps(child, &p.containers);
+        let child = child.clone();
+        let child_deps = cache.deps(&child, &p.containers);
         if !child_deps.is_doall() {
             break;
         }
-        if !can_interchange(p, loop_id) {
+        if !can_interchange_with(p, loop_id, cache) {
             break;
         }
         if interchange(p, loop_id).is_err() {
             break;
         }
+        // After the swap `loop_id` names the sunk header one level down;
+        // dirtying it evicts both swapped loops plus the ancestors.
+        cache.dirty(p, child.id);
         sank += 1;
     }
     sank

@@ -1,4 +1,5 @@
-//! SILO's optimization transforms (paper §3).
+//! SILO's optimization transforms (paper §3) and the pass manager that
+//! composes them (DESIGN.md §Pass manager).
 
 pub mod doacross;
 pub mod doall;
@@ -6,14 +7,25 @@ pub mod fusion;
 pub mod input_copy;
 pub mod interchange;
 pub mod pass;
+pub mod pipeline;
 pub mod privatize;
 pub mod tiling;
 
-pub use doacross::{pipeline_all, pipeline_doacross, DoacrossReport, SkipReason};
-pub use doall::{parallelize_doall, DoallReport};
+pub use doacross::{
+    pipeline_all, pipeline_all_with, pipeline_doacross, pipeline_doacross_with, DoacrossReport,
+    SkipReason,
+};
+pub use doall::{parallelize_doall, parallelize_doall_with, DoallReport};
 pub use fusion::{fuse_program, FusionReport};
-pub use input_copy::{resolve_input_deps, InputCopyReport};
-pub use interchange::{can_interchange, interchange, sink_sequential_loop};
-pub use pass::{auto_optimize, eliminate_dependencies, silo_cfg1, silo_cfg2, PipelineReport};
-pub use privatize::{privatize, PrivatizeReport};
+pub use input_copy::{resolve_input_deps, resolve_input_deps_with, InputCopyReport};
+pub use interchange::{
+    can_interchange, can_interchange_with, interchange, sink_sequential_loop,
+    sink_sequential_loop_with,
+};
+pub use pass::{auto_optimize, eliminate_dependencies, silo_cfg1, silo_cfg2, PassLog, PipelineReport};
+pub use pipeline::{
+    DepElimPass, DoacrossPass, DoallPass, FusionPass, InputCopyPass, Pass, PassReport, Pipeline,
+    PrefetchPass, PrivatizePass, PtrIncPass, SinkSequentialPass, TilingPass,
+};
+pub use privatize::{privatize, privatize_with, PrivatizeReport};
 pub use tiling::tile;

@@ -1,22 +1,19 @@
-//! Pass manager and the two SILO optimization configurations evaluated in
-//! the paper (§6.1):
+//! Report types shared by every pass, plus the two SILO optimization
+//! configurations the paper evaluates (§6.1), kept as thin wrappers over
+//! the declarative [`Pipeline`] specs in [`super::pipeline`]:
 //!
 //! * **cfg1** — eliminate sequential dependencies (privatization §3.2.1 +
 //!   input copies §3.2.2), then hand back to the framework auto-optimizer
 //!   (fusion, DOALL, sinking sequential loops inward).
-//! * **cfg2** — cfg1, plus DOACROSS pipelining of remaining RAW loops
-//!   (§3.3).
+//! * **cfg2** — cfg1's dependence elimination, plus DOACROSS pipelining of
+//!   remaining RAW loops (§3.3).
 
 use anyhow::Result;
 
-use crate::ir::{LoopId, Program};
+use crate::analysis::AnalysisCache;
+use crate::ir::Program;
 
-use super::doacross::pipeline_all;
-use super::doall::parallelize_doall;
-use super::fusion::fuse_program;
-use super::input_copy::resolve_input_deps;
-use super::interchange::sink_sequential_loop;
-use super::privatize::privatize;
+use super::pipeline::{DepElimPass, DoallPass, FusionPass, Pass, Pipeline, SinkSequentialPass};
 
 /// A log entry from a pipeline run.
 #[derive(Debug, Clone)]
@@ -32,7 +29,9 @@ pub struct PipelineReport {
 }
 
 impl PipelineReport {
-    fn push(&mut self, pass: &str, detail: String) {
+    /// Append one entry (baseline models like `dace_auto_optimize` build
+    /// their reports through this too).
+    pub fn push(&mut self, pass: &str, detail: String) {
         self.log.push(PassLog {
             pass: pass.to_string(),
             detail,
@@ -51,104 +50,29 @@ impl PipelineReport {
 /// Run privatization + input-copying over every loop, innermost-first (the
 /// "SILO passes in tandem with HPC framework optimizations", Fig. 3).
 pub fn eliminate_dependencies(p: &mut Program) -> Result<PipelineReport> {
-    let mut report = PipelineReport::default();
-    // Innermost-first: post-order of the loop tree.
-    let mut order: Vec<LoopId> = Vec::new();
-    fn post_order(nodes: &[crate::ir::Node], out: &mut Vec<LoopId>) {
-        for n in nodes {
-            if let crate::ir::Node::Loop(l) = n {
-                post_order(&l.body, out);
-                out.push(l.id);
-            }
-        }
-    }
-    post_order(&p.body, &mut order);
-
-    let top_level: Vec<LoopId> = p
-        .body
-        .iter()
-        .filter_map(|n| match n {
-            crate::ir::Node::Loop(l) => Some(l.id),
-            _ => None,
-        })
-        .collect();
-    for id in order {
-        let priv_rep = privatize(p, id)?;
-        if !priv_rep.privatized.is_empty() {
-            let names: Vec<String> = priv_rep
-                .privatized
-                .iter()
-                .map(|c| p.container(*c).name.clone())
-                .collect();
-            report.push("privatize", format!("L{}: {}", id.0, names.join(", ")));
-        }
-        // Input copies run O(container) work: profitable only when the
-        // copy hoists *before the loop* at top level (the paper's §3.2.2
-        // placement) — a copy inside an enclosing loop would re-run per
-        // outer iteration.
-        if !top_level.contains(&id) {
-            continue;
-        }
-        let copy_rep = resolve_input_deps(p, id)?;
-        if !copy_rep.copied.is_empty() {
-            let names: Vec<String> = copy_rep
-                .copied
-                .iter()
-                .map(|(c, _)| p.container(*c).name.clone())
-                .collect();
-            report.push("input-copy", format!("L{}: {}", id.0, names.join(", ")));
-        }
-    }
-    Ok(report)
+    let rep = DepElimPass.run(p, &mut AnalysisCache::new())?;
+    Ok(PipelineReport { log: rep.log })
 }
 
 /// Framework-style auto optimization: fuse, mark DOALL, sink remaining
 /// sequential loops below parallel ones.
 pub fn auto_optimize(p: &mut Program) -> Result<PipelineReport> {
     let mut report = PipelineReport::default();
-    let fu = fuse_program(p)?;
-    if fu.fused > 0 || !fu.scalarized.is_empty() {
-        report.push(
-            "fusion",
-            format!("fused {} loops, scalarized {}", fu.fused, fu.scalarized.len()),
-        );
-    }
-    // Sink sequential outer loops with DOALL-clean children inward so the
-    // parallel dimension surfaces.
-    let seq_loops: Vec<LoopId> = p
-        .loops()
-        .iter()
-        .filter(|l| !l.is_parallel())
-        .map(|l| l.id)
-        .collect();
-    for id in seq_loops {
-        let deps = match p.find_loop(id) {
-            Some(l) => crate::analysis::loop_deps(l, &p.containers),
-            None => continue,
-        };
-        if deps.is_doall() {
-            continue; // will parallelize directly
-        }
-        let sank = sink_sequential_loop(p, id);
-        if sank > 0 {
-            report.push("interchange", format!("sank L{} by {} level(s)", id.0, sank));
-        }
-    }
-    let da = parallelize_doall(p, true)?;
-    if !da.parallelized.is_empty() {
-        let ids: Vec<String> = da.parallelized.iter().map(|l| format!("L{}", l.0)).collect();
-        report.push("doall", ids.join(", "));
+    let mut cache = AnalysisCache::new();
+    for pass in [
+        Box::new(FusionPass) as Box<dyn Pass>,
+        Box::new(SinkSequentialPass),
+        Box::new(DoallPass),
+    ] {
+        let r = pass.run(p, &mut cache)?;
+        report.log.extend(r.log);
     }
     Ok(report)
 }
 
 /// SILO configuration 1 (§6.1): dependency elimination + auto optimization.
 pub fn silo_cfg1(p: &mut Program) -> Result<PipelineReport> {
-    let mut report = eliminate_dependencies(p)?;
-    let auto = auto_optimize(p)?;
-    report.log.extend(auto.log);
-    debug_assert!(crate::ir::validate::validate(p).is_ok());
-    Ok(report)
+    Pipeline::cfg1().run(p)
 }
 
 /// SILO configuration 2 (§6.1): cfg1's dependency elimination plus
@@ -156,29 +80,7 @@ pub fn silo_cfg1(p: &mut Program) -> Result<PipelineReport> {
 /// Fig. 5: the sequential K loop stays outermost and is pipelined, adding
 /// a parallel dimension on top of the DOALL inner loops).
 pub fn silo_cfg2(p: &mut Program) -> Result<PipelineReport> {
-    let mut report = eliminate_dependencies(p)?;
-    let fu = fuse_program(p)?;
-    if fu.fused > 0 || !fu.scalarized.is_empty() {
-        report.push(
-            "fusion",
-            format!("fused {} loops, scalarized {}", fu.fused, fu.scalarized.len()),
-        );
-    }
-    // Pipeline outer RAW loops before any sinking, so the pipelined
-    // dimension is the outer one (Fig. 5's k-loop).
-    let dx = pipeline_all(p)?;
-    if !dx.pipelined.is_empty() {
-        let ids: Vec<String> = dx.pipelined.iter().map(|l| format!("L{}", l.0)).collect();
-        report.push("doacross", ids.join(", "));
-    }
-    // Expose the DOALL dimensions inside (and any remaining loops).
-    let da = parallelize_doall(p, true)?;
-    if !da.parallelized.is_empty() {
-        let ids: Vec<String> = da.parallelized.iter().map(|l| format!("L{}", l.0)).collect();
-        report.push("doall", ids.join(", "));
-    }
-    debug_assert!(crate::ir::validate::validate(p).is_ok());
-    Ok(report)
+    Pipeline::cfg2().run(p)
 }
 
 #[cfg(test)]

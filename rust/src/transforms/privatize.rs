@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 
-use crate::analysis::visibility::{body_graph, iter_visibility};
+use crate::analysis::AnalysisCache;
 use crate::ir::{ContainerKind, Loop, LoopId, Node, Program};
 use crate::symbolic::ContainerId;
 
@@ -30,6 +30,22 @@ pub struct PrivatizeReport {
 /// 3. no statement outside `L`'s subtree reads `D` (the surrounding-program
 ///    dataflow check).
 pub fn privatize(p: &mut Program, loop_id: LoopId) -> Result<PrivatizeReport> {
+    privatize_with(p, loop_id, &mut AnalysisCache::disabled())
+}
+
+/// [`privatize`] with analyses served from (and invalidated in) `cache`.
+///
+/// Invalidation: reclassifying a container to `Register` changes the
+/// visibility of every loop that accesses it. Legality guarantees all its
+/// *reads* are inside `loop_id`'s subtree, so dirtying the loop and its
+/// ancestors suffices — unless some unrelated nest also *writes* the
+/// container (dead stores elsewhere), in which case we fall back to a full
+/// invalidation.
+pub fn privatize_with(
+    p: &mut Program,
+    loop_id: LoopId,
+    cache: &mut AnalysisCache,
+) -> Result<PrivatizeReport> {
     let mut report = PrivatizeReport::default();
     let Some(l) = p.find_loop(loop_id).cloned() else {
         return Ok(report);
@@ -44,29 +60,65 @@ pub fn privatize(p: &mut Program, loop_id: LoopId) -> Result<PrivatizeReport> {
         }
     }
 
+    let inside = subtree_stmt_ids(&l);
     for c in candidates {
-        if reads_escape_loop(p, &l, c) {
+        if reads_escape_loop(p, &inside, c) {
             continue;
         }
-        if !reads_inside_self_contained(&l, p, c) {
+        if !reads_inside_self_contained(&l, p, c, cache) {
             continue;
         }
         p.container_mut(c).kind = ContainerKind::Register;
         report.privatized.push(c);
+        // Invalidate per reclassification, not once at the end: the next
+        // candidate's legality check must see this container as
+        // iteration-local, exactly like the uncached path does.
+        if written_outside_loop(p, &inside, c) {
+            cache.dirty_all();
+        } else {
+            cache.dirty(p, loop_id);
+        }
     }
     Ok(report)
 }
 
-/// Does any statement outside `l`'s subtree read container `c`? Also treats
+/// Statement ids of `l`'s subtree (borrowing walk, no clone).
+fn subtree_stmt_ids(l: &Loop) -> std::collections::HashSet<u32> {
+    fn walk(nodes: &[Node], out: &mut std::collections::HashSet<u32>) {
+        for n in nodes {
+            match n {
+                Node::Stmt(s) => {
+                    out.insert(s.id.0);
+                }
+                Node::Loop(inner) => walk(&inner.body, out),
+            }
+        }
+    }
+    let mut out = std::collections::HashSet::new();
+    walk(&l.body, &mut out);
+    out
+}
+
+/// Does any statement outside the subtree (given by its stmt-id set) write
+/// container `c`?
+fn written_outside_loop(
+    p: &Program,
+    inside: &std::collections::HashSet<u32>,
+    c: ContainerId,
+) -> bool {
+    p.stmts()
+        .iter()
+        .any(|s| !inside.contains(&s.id.0) && s.write.container == c)
+}
+
+/// Does any statement outside the subtree read container `c`? Also treats
 /// `l`'s own externally visible reads of `c` as escaping (paper: "including
 /// the loop's own externally visible reads").
-fn reads_escape_loop(p: &Program, l: &Loop, c: ContainerId) -> bool {
-    // Reads outside the subtree.
-    let inside: std::collections::HashSet<u32> = Node::Loop(l.clone())
-        .stmts()
-        .iter()
-        .map(|s| s.id.0)
-        .collect();
+fn reads_escape_loop(
+    p: &Program,
+    inside: &std::collections::HashSet<u32>,
+    c: ContainerId,
+) -> bool {
     for s in p.stmts() {
         if inside.contains(&s.id.0) {
             continue;
@@ -82,14 +134,19 @@ fn reads_escape_loop(p: &Program, l: &Loop, c: ContainerId) -> bool {
 /// (at every nesting level or *covered* by an earlier sibling nest's
 /// writes — the cross-nest case: nest A writes `col[j,i]` for all (j,i),
 /// nest B reads it back within the same `l` iteration)?
-fn reads_inside_self_contained(l: &Loop, p: &Program, c: ContainerId) -> bool {
+fn reads_inside_self_contained(
+    l: &Loop,
+    p: &Program,
+    c: ContainerId,
+    cache: &mut AnalysisCache,
+) -> bool {
     // Summaries of each body element (reads/writes of c, with ranges).
-    let summaries: Vec<(Vec<crate::analysis::PropAccess>, Vec<crate::analysis::PropAccess>)> = l
+    let summaries: Vec<std::sync::Arc<crate::analysis::SummaryPair>> = l
         .body
         .iter()
         .map(|n| match n {
-            Node::Loop(inner) => crate::analysis::loop_summary(inner, &p.containers),
-            Node::Stmt(_) => (Vec::new(), Vec::new()),
+            Node::Loop(inner) => cache.summary(inner, &p.containers),
+            Node::Stmt(_) => std::sync::Arc::new((Vec::new(), Vec::new())),
         })
         .collect();
 
@@ -124,7 +181,7 @@ fn reads_inside_self_contained(l: &Loop, p: &Program, c: ContainerId) -> bool {
     };
 
     // Plain statement reads at this level: dominated per the body graph.
-    let graph = body_graph(l, &p.containers);
+    let graph = cache.body_graph(l, &p.containers);
     for (idx, n) in l.body.iter().enumerate() {
         match n {
             Node::Stmt(s) => {
@@ -155,7 +212,7 @@ fn reads_inside_self_contained(l: &Loop, p: &Program, c: ContainerId) -> bool {
     // visible at this level was handled above, so check that l's own
     // externally visible reads of c are all covered too (they are exactly
     // the ones that failed coverage).
-    let vis = iter_visibility(l, &p.containers);
+    let vis = cache.visibility(l, &p.containers);
     for (_, a) in &vis.reads {
         if a.container == c {
             // iter_visibility hides stmt-level dominated reads but not

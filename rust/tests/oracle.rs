@@ -1,6 +1,9 @@
 //! Cross-layer validation: the rust VM's kernel outputs vs the PJRT
 //! artifacts lowered from the JAX/Pallas implementations — the
-//! three-layer composition check.
+//! three-layer composition check — plus the pipeline-equivalence oracle:
+//! the declarative `Pipeline::cfg1`/`cfg2` specs must produce programs
+//! identical to the pre-refactor hardcoded pass sequences on every
+//! registered kernel, cached or not.
 
 use silo::exec::Vm;
 use silo::kernels::{gen_inputs, vadv, Preset};
@@ -110,5 +113,148 @@ fn matmul_vm_matches_pjrt_artifact() {
         .expect("PJRT");
     for (g, e) in c_vm.iter().zip(&result[0]) {
         assert!((g - e).abs() < 1e-8, "{g} vs {e}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline equivalence: new-style declarative specs vs the pre-refactor
+// hardcoded pass sequences.
+// ---------------------------------------------------------------------------
+
+/// Literal transcriptions of the pre-refactor `silo_cfg1`/`silo_cfg2`
+/// bodies (composed from the individual transform entry points), kept as
+/// the behavioral oracle for the pass-manager refactor.
+mod legacy {
+    use silo::ir::{LoopId, Node, Program};
+    use silo::transforms::{
+        fuse_program, parallelize_doall, pipeline_all, privatize, resolve_input_deps,
+        sink_sequential_loop,
+    };
+
+    fn eliminate_dependencies(p: &mut Program) {
+        let mut order: Vec<LoopId> = Vec::new();
+        fn post_order(nodes: &[Node], out: &mut Vec<LoopId>) {
+            for n in nodes {
+                if let Node::Loop(l) = n {
+                    post_order(&l.body, out);
+                    out.push(l.id);
+                }
+            }
+        }
+        post_order(&p.body, &mut order);
+        let top_level: Vec<LoopId> = p
+            .body
+            .iter()
+            .filter_map(|n| match n {
+                Node::Loop(l) => Some(l.id),
+                _ => None,
+            })
+            .collect();
+        for id in order {
+            privatize(p, id).unwrap();
+            if !top_level.contains(&id) {
+                continue;
+            }
+            resolve_input_deps(p, id).unwrap();
+        }
+    }
+
+    pub fn cfg1(p: &mut Program) {
+        eliminate_dependencies(p);
+        fuse_program(p).unwrap();
+        let seq_loops: Vec<LoopId> = p
+            .loops()
+            .iter()
+            .filter(|l| !l.is_parallel())
+            .map(|l| l.id)
+            .collect();
+        for id in seq_loops {
+            let deps = match p.find_loop(id) {
+                Some(l) => silo::analysis::loop_deps(l, &p.containers),
+                None => continue,
+            };
+            if deps.is_doall() {
+                continue;
+            }
+            sink_sequential_loop(p, id);
+        }
+        parallelize_doall(p, true).unwrap();
+    }
+
+    pub fn cfg2(p: &mut Program) {
+        eliminate_dependencies(p);
+        fuse_program(p).unwrap();
+        pipeline_all(p).unwrap();
+        parallelize_doall(p, true).unwrap();
+    }
+}
+
+/// Everything observable about an optimized program, as one comparable
+/// string: pretty-printed tree (containers, kinds, schedules, memory
+/// schedules) plus the explicit loop-schedule list.
+fn fingerprint(p: &silo::ir::Program) -> String {
+    let schedules: Vec<String> = p
+        .loops()
+        .iter()
+        .map(|l| format!("L{}={:?}", l.id.0, l.schedule))
+        .collect();
+    format!("{}\n{}", silo::ir::pretty::pretty(p), schedules.join("\n"))
+}
+
+#[test]
+fn pipeline_cfg1_matches_pre_refactor_on_every_kernel() {
+    for entry in silo::kernels::all_kernels() {
+        let mut want = (entry.build)();
+        legacy::cfg1(&mut want);
+        let mut got = (entry.build)();
+        silo::transforms::Pipeline::cfg1().run(&mut got).unwrap();
+        assert_eq!(
+            fingerprint(&want),
+            fingerprint(&got),
+            "cfg1 diverged from pre-refactor output on kernel {}",
+            entry.name
+        );
+    }
+}
+
+#[test]
+fn pipeline_cfg2_matches_pre_refactor_on_every_kernel() {
+    for entry in silo::kernels::all_kernels() {
+        let mut want = (entry.build)();
+        legacy::cfg2(&mut want);
+        let mut got = (entry.build)();
+        silo::transforms::Pipeline::cfg2().run(&mut got).unwrap();
+        assert_eq!(
+            fingerprint(&want),
+            fingerprint(&got),
+            "cfg2 diverged from pre-refactor output on kernel {}",
+            entry.name
+        );
+    }
+}
+
+/// The cache must be semantically invisible: every named pipeline produces
+/// the identical program with the cache enabled and disabled, on every
+/// registered kernel.
+#[test]
+fn cached_and_uncached_pipelines_agree_on_every_kernel() {
+    for spec in ["cfg1", "cfg2", "cfg3"] {
+        let pipeline = silo::transforms::Pipeline::from_spec(spec).unwrap();
+        for entry in silo::kernels::all_kernels() {
+            let mut cached = (entry.build)();
+            pipeline
+                .run_with(&mut cached, &mut silo::analysis::AnalysisCache::new())
+                .unwrap();
+            let mut uncached = (entry.build)();
+            pipeline
+                .run_with(&mut uncached, &mut silo::analysis::AnalysisCache::disabled())
+                .unwrap();
+            assert_eq!(
+                fingerprint(&cached),
+                fingerprint(&uncached),
+                "stale analysis served from the cache under {spec} on kernel {}",
+                entry.name
+            );
+        }
     }
 }
