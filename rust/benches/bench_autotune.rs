@@ -1,0 +1,86 @@
+//! Bench: the autotuner vs the hand-written configurations — what does
+//! `--pipeline auto` pick per kernel, how does its modeled score compare
+//! to cfg1/cfg2/cfg3, and how expensive is the search itself.
+//!
+//! Uses the shared comparison protocol
+//! (`tuner::compare_with_named_configs`, the same code path the autotune
+//! experiment and acceptance tests run) and emits `BENCH_autotune.json`
+//! next to the manifest (hand-rolled JSON; no serde in the vendored set)
+//! so future PRs have a machine-readable trajectory of the tuner's
+//! decisions.
+//!
+//!     cargo bench --bench bench_autotune
+
+use std::time::Instant;
+
+use silo::kernels::all_kernels;
+use silo::tuner::{compare_with_named_configs, TuneOptions};
+
+fn main() {
+    let opts = TuneOptions::default();
+
+    let mut rows = Vec::new();
+    let mut never_worse = true;
+    let mut total_ms = 0.0f64;
+    println!(
+        "{:<16} {:>8} {:>8} {:>8} {:>8}  {:<24} {:>9}",
+        "kernel", "cfg1", "cfg2", "cfg3", "auto", "auto schedule", "ms"
+    );
+    for entry in all_kernels() {
+        let t0 = Instant::now();
+        let cmp = compare_with_named_configs(entry.build, &opts)
+            .unwrap_or_else(|e| panic!("autotune {}: {e:#}", entry.name));
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        total_ms += ms;
+        never_worse &= cmp.auto_never_worse();
+        println!(
+            "{:<16} {:>8.2} {:>8.2} {:>8.2} {:>8.2}  {:<24} {:>9.1}",
+            entry.name,
+            cmp.cfg_scores[0],
+            cmp.cfg_scores[1],
+            cmp.cfg_scores[2],
+            cmp.outcome.cost.score,
+            cmp.outcome.best.candidate.spec(),
+            ms
+        );
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"auto_spec\": \"{}\", \"auto_score\": {:.4}, \
+             \"cfg1\": {:.4}, \"cfg2\": {:.4}, \"cfg3\": {:.4}, \"best_cfg\": {:.4}, \
+             \"improvement_vs_best_cfg\": {:.4}, \"compare_ms\": {:.3}, \
+             \"candidates\": {}, \"analysis_hits\": {}, \"refined_nests\": {}}}",
+            entry.name,
+            cmp.outcome.best.candidate.spec(),
+            cmp.outcome.cost.score,
+            cmp.cfg_scores[0],
+            cmp.cfg_scores[1],
+            cmp.cfg_scores[2],
+            cmp.best_cfg,
+            cmp.best_cfg / cmp.outcome.cost.score,
+            ms,
+            cmp.outcome.candidates.len(),
+            cmp.outcome.analysis_hits,
+            cmp.outcome.refined_nests
+        ));
+    }
+    println!(
+        "\nauto ≤ best named config on every kernel: {}; total compare time {:.0} ms",
+        if never_worse { "yes" } else { "NO" },
+        total_ms
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"autotune\",\n  \"compiler\": \"{}\",\n  \"node\": \"{}\",\n  \
+         \"kernels_tuned\": {},\n  \"auto_never_worse\": {},\n  \
+         \"total_compare_ms\": {:.3},\n  \"kernels\": [\n{}\n  ]\n}}\n",
+        opts.compiler.name,
+        opts.node.name,
+        rows.len(),
+        never_worse,
+        total_ms,
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_autotune.json", &json) {
+        Ok(()) => println!("wrote BENCH_autotune.json"),
+        Err(e) => eprintln!("could not write BENCH_autotune.json: {e}"),
+    }
+}

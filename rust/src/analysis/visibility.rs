@@ -371,8 +371,8 @@ mod tests {
     use crate::symbolic::{int, load, Expr};
 
     /// Fig. 4's didactic loop nest:
-    /// for k: for i: { S1: t = B[i][k-1]*0.2; S2: A[i] = t + C[i][k+1];
-    ///                 S3: B[i][k] = A[i]; C[i][k] = t; }
+    /// `for k: for i: { S1: t = B[i][k-1]*0.2; S2: A[i] = t + C[i][k+1];`
+    /// `S3: B[i][k] = A[i]; C[i][k] = t; }`
     /// (flattened to 1D offsets with symbolic row stride M)
     fn fig4() -> (crate::ir::Program, [crate::symbolic::ContainerId; 4]) {
         let mut b = ProgramBuilder::new("fig4");

@@ -2,10 +2,12 @@
 //! programmatic API; the CLI and examples are thin wrappers over this).
 //!
 //! Optimization is selected by a [`PipelineSpec`] — a named paper
-//! configuration or an explicit comma-separated pass list — which the
-//! driver resolves to a [`Pipeline`]. Memory schedules requested through
-//! [`MemSchedules`] are appended to that pipeline as ordinary stages
-//! (§4 schedules are passes, not driver special cases).
+//! configuration, the cost-model-driven autotuner (`auto`, resolved per
+//! program through [`crate::tuner::autotune_program`]), or an explicit
+//! comma-separated pass list — which the driver resolves to a
+//! [`Pipeline`]. Memory schedules requested through [`MemSchedules`] are
+//! appended to that pipeline as ordinary stages (§4 schedules are
+//! passes, not driver special cases).
 
 use anyhow::{bail, Result};
 
@@ -40,11 +42,15 @@ impl OptConfig {
     }
 }
 
-/// How to optimize: a named configuration or a custom pass list
+/// How to optimize: a named configuration, the cost-model-driven
+/// autotuner (`--pipeline auto`), or a custom pass list
 /// (`--pipeline privatize,fusion,doall,...`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum PipelineSpec {
     Config(OptConfig),
+    /// Search the schedule space with the `tuner` subsystem and apply the
+    /// candidate the `machine/` cost model ranks best for this program.
+    Auto,
     Custom(String),
 }
 
@@ -56,23 +62,31 @@ impl PipelineSpec {
             "cfg1" => PipelineSpec::Config(OptConfig::Cfg1),
             "cfg2" => PipelineSpec::Config(OptConfig::Cfg2),
             "cfg3" => PipelineSpec::Config(OptConfig::Cfg3),
+            "auto" => PipelineSpec::Auto,
             other => PipelineSpec::Custom(other.to_string()),
         }
     }
 
     /// Resolve to a runnable [`Pipeline`], appending the memory-schedule
-    /// stages `mem` asks for. Both variants go through
+    /// stages `mem` asks for. Named and custom variants go through
     /// [`Pipeline::from_spec`] — the one authoritative name table.
+    /// [`PipelineSpec::Auto`] is program-dependent and cannot become a
+    /// static pass list; the driver resolves it through the tuner
+    /// instead.
     pub fn build(&self, mem: MemSchedules) -> Result<Pipeline> {
         let mut pl = match self {
             PipelineSpec::Config(cfg) => Pipeline::from_spec(cfg.name())?,
+            PipelineSpec::Auto => bail!(
+                "the auto spec is resolved per program by the driver \
+                 (tuner::autotune_program), not as a static pipeline"
+            ),
             PipelineSpec::Custom(spec) => Pipeline::from_spec(spec)?,
         };
         if mem.ptr_inc {
             pl = pl.with(PtrIncPass { gated: false });
         }
         if mem.prefetch {
-            pl = pl.with(PrefetchPass { gated: false });
+            pl = pl.with(PrefetchPass { gated: false, dist: 1 });
         }
         Ok(pl)
     }
@@ -124,12 +138,32 @@ pub fn optimize_and_run_spec(
         );
     };
     let mut program = (entry.build)();
-    let pl = spec.build(mem)?;
-    let pipeline = if pl.is_empty() {
-        None
-    } else {
-        let rep = pl.run(&mut program)?;
+    let pipeline = if matches!(spec, PipelineSpec::Auto) {
+        // Cost-model-driven schedule search: the tuner picks the pipeline
+        // per program; explicit --ptr-inc/--prefetch requests still apply
+        // on top (ungated, exactly as for the named configurations).
+        let outcome =
+            crate::tuner::autotune_program(&program, &crate::tuner::TuneOptions::default())?;
+        let mut rep = outcome.report();
+        program = outcome.program;
+        let mut extra = Pipeline::new();
+        if mem.ptr_inc {
+            extra = extra.with(PtrIncPass { gated: false });
+        }
+        if mem.prefetch {
+            extra = extra.with(PrefetchPass { gated: false, dist: 1 });
+        }
+        if !extra.is_empty() {
+            rep.log.extend(extra.run(&mut program)?.log);
+        }
         Some(rep)
+    } else {
+        let pl = spec.build(mem)?;
+        if pl.is_empty() {
+            None
+        } else {
+            Some(pl.run(&mut program)?)
+        }
     };
     crate::ir::validate::validate(&program)?;
 
@@ -151,7 +185,12 @@ pub fn optimize_and_run_spec(
 /// Validate an optimized configuration against the unoptimized baseline:
 /// every output container must match bit-for-bit (same canonical
 /// expression trees ⇒ same rounding).
-pub fn validate_config(name: &str, cfg: OptConfig, mem: MemSchedules, threads: usize) -> Result<()> {
+pub fn validate_config(
+    name: &str,
+    cfg: OptConfig,
+    mem: MemSchedules,
+    threads: usize,
+) -> Result<()> {
     validate_spec(name, &PipelineSpec::Config(cfg), mem, threads)
 }
 
@@ -238,6 +277,20 @@ mod tests {
         let spec = PipelineSpec::parse("privatize,fusion,doall,ptr-inc");
         assert!(matches!(spec, PipelineSpec::Custom(_)));
         validate_spec("jacobi_1d", &spec, MemSchedules::default(), 2).unwrap();
+    }
+
+    /// `--pipeline auto` resolves through the tuner and stays
+    /// bit-identical to the unoptimized baseline.
+    #[test]
+    fn auto_spec_runs_and_validates() {
+        assert_eq!(PipelineSpec::parse("auto"), PipelineSpec::Auto);
+        validate_spec("jacobi_1d", &PipelineSpec::Auto, MemSchedules::default(), 2).unwrap();
+    }
+
+    /// Auto cannot be flattened to a static pass list.
+    #[test]
+    fn auto_spec_has_no_static_pipeline() {
+        assert!(PipelineSpec::Auto.build(MemSchedules::default()).is_err());
     }
 
     #[test]

@@ -27,15 +27,18 @@ pub fn run(id: &str) -> Result<String> {
         "fig9" => fig9(),
         "table1" => table1(),
         "fig10" => fig10(),
+        "autotune" => autotune(),
         "all" => {
             let mut out = String::new();
-            for id in ["fig1", "fig2", "fig9", "table1", "fig10"] {
+            for id in ["fig1", "fig2", "fig9", "table1", "fig10", "autotune"] {
                 out.push_str(&run(id)?);
                 out.push('\n');
             }
             Ok(out)
         }
-        other => anyhow::bail!("unknown experiment {other} (fig1|fig2|fig9|table1|fig10|all)"),
+        other => {
+            anyhow::bail!("unknown experiment {other} (fig1|fig2|fig9|table1|fig10|autotune|all)")
+        }
     }
 }
 
@@ -459,6 +462,49 @@ fn table1() -> Result<String> {
 }
 
 // ---------------------------------------------------------------------------
+// Autotuner — cost-model-driven schedule selection vs the named configs
+// ---------------------------------------------------------------------------
+
+/// `--pipeline auto` across the whole kernel registry: the tuner's pick
+/// vs cfg1/cfg2/cfg3 under the same modeled score (cycles/iteration of
+/// the worst innermost loop ÷ modeled parallel speedup; see
+/// DESIGN.md §Autotuner).
+fn autotune() -> Result<String> {
+    autotune_over(&kernels::all_kernels())
+}
+
+/// The sweep over an explicit kernel list (tests drive a single kernel to
+/// keep the suite cheap; the full-registry assertion lives in
+/// `rust/tests/autotune.rs`).
+fn autotune_over(entries: &[kernels::KernelEntry]) -> Result<String> {
+    let opts = crate::tuner::TuneOptions::default();
+    let mut t = Table::new(
+        "Autotuner — modeled score per kernel (clang model, Intel node; lower is better)",
+        &["kernel", "cfg1", "cfg2", "cfg3", "auto", "auto schedule", "vs best cfg"],
+    );
+    let mut never_worse = true;
+    for entry in entries {
+        let cmp = crate::tuner::compare_with_named_configs(entry.build, &opts)?;
+        never_worse &= cmp.auto_never_worse();
+        t.row(vec![
+            entry.name.into(),
+            format!("{:.2}", cmp.cfg_scores[0]),
+            format!("{:.2}", cmp.cfg_scores[1]),
+            format!("{:.2}", cmp.cfg_scores[2]),
+            format!("{:.2}", cmp.outcome.cost.score),
+            cmp.outcome.best.candidate.spec(),
+            speedup(cmp.best_cfg / cmp.outcome.cost.score),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "auto ≤ best named config on every kernel: {}\n",
+        if never_worse { "✓" } else { "✗" }
+    ));
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
 // Fig. 10 — pointer incrementation across the NPBench corpus
 // ---------------------------------------------------------------------------
 
@@ -555,6 +601,20 @@ mod tests {
             (c2_narrow as f64) < 0.8 * c1_narrow,
             "pipelining must win on narrow grids: cfg2 {c2_narrow} cfg1 {c1_narrow}"
         );
+    }
+
+    /// One-kernel smoke of the experiment harness (rendering + the
+    /// never-worse flag); the full-registry sweep is asserted once, in
+    /// `rust/tests/autotune.rs`.
+    #[test]
+    fn autotune_experiment_renders() {
+        let entry = kernels::npbench_corpus()
+            .into_iter()
+            .find(|k| k.name == "jacobi_1d")
+            .unwrap();
+        let s = autotune_over(&[entry]).unwrap();
+        assert!(s.contains("jacobi_1d"), "{s}");
+        assert!(s.contains("every kernel: ✓"), "{s}");
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub enum AccessKind {
 
 /// A single data access — the unit the paper's analyses reason about
 /// (§2.1: "each read and write is represented by the name of a data
-/// container D and a symbolic expression f … denoted D[f]").
+/// container D and a symbolic expression f … denoted `D[f]`").
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Access {
     pub container: ContainerId,

@@ -144,7 +144,12 @@ impl ProgramBuilder {
     }
 
     /// Append `container[offset] := rhs`.
-    pub fn assign(&mut self, container: ContainerId, offset: Expr, rhs: Expr) -> super::nest::StmtId {
+    pub fn assign(
+        &mut self,
+        container: ContainerId,
+        offset: Expr,
+        rhs: Expr,
+    ) -> super::nest::StmtId {
         let id = self.prog.fresh_stmt_id();
         self.push_node(Node::Stmt(Stmt {
             id,

@@ -33,6 +33,8 @@ pub fn build_tiled() -> Program {
     let (mi, mk, mj) = (b.sym("mm_mi"), b.sym("mm_mk"), b.sym("mm_mj"));
 
     let t = int(TILE);
+    // Upper bound of the intra-tile loop starting at tile variable `v`.
+    let hi = |v: Sym| min(Expr::Sym(v) + int(TILE), ne.clone());
     b.for_(it, int(0), ne.clone(), t.clone(), |b| {
         b.for_(jt, int(0), ne.clone(), t.clone(), |b| {
             // Zero the output-tile buffer.
@@ -44,8 +46,8 @@ pub fn build_tiled() -> Program {
             // Accumulate over k tiles.
             b.for_(kt, int(0), ne.clone(), t.clone(), |b| {
                 // Stage the B tile (tile-boundary stride jump → prefetch).
-                b.for_(bk, Expr::Sym(kt), min(Expr::Sym(kt) + t.clone(), ne.clone()), int(1), |b| {
-                    b.for_(bj, Expr::Sym(jt), min(Expr::Sym(jt) + t.clone(), ne.clone()), int(1), |b| {
+                b.for_(bk, Expr::Sym(kt), hi(kt), int(1), |b| {
+                    b.for_(bj, Expr::Sym(jt), hi(jt), int(1), |b| {
                         b.assign(
                             bbuf,
                             (Expr::Sym(bk) - Expr::Sym(kt)) * t.clone()
@@ -55,9 +57,9 @@ pub fn build_tiled() -> Program {
                     });
                 });
                 // Micro-kernel: i-k-j over the tile.
-                b.for_(mi, Expr::Sym(it), min(Expr::Sym(it) + t.clone(), ne.clone()), int(1), |b| {
-                    b.for_(mk, Expr::Sym(kt), min(Expr::Sym(kt) + t.clone(), ne.clone()), int(1), |b| {
-                        b.for_(mj, Expr::Sym(jt), min(Expr::Sym(jt) + t.clone(), ne.clone()), int(1), |b| {
+                b.for_(mi, Expr::Sym(it), hi(it), int(1), |b| {
+                    b.for_(mk, Expr::Sym(kt), hi(kt), int(1), |b| {
+                        b.for_(mj, Expr::Sym(jt), hi(jt), int(1), |b| {
                             let coff = (Expr::Sym(mi) - Expr::Sym(it)) * t.clone()
                                 + (Expr::Sym(mj) - Expr::Sym(jt));
                             b.assign(
@@ -76,8 +78,8 @@ pub fn build_tiled() -> Program {
                 });
             });
             // Write the tile back.
-            b.for_(ci, Expr::Sym(it), min(Expr::Sym(it) + t.clone(), ne.clone()), int(1), |b| {
-                b.for_(cj, Expr::Sym(jt), min(Expr::Sym(jt) + t.clone(), ne.clone()), int(1), |b| {
+            b.for_(ci, Expr::Sym(it), hi(it), int(1), |b| {
+                b.for_(cj, Expr::Sym(jt), hi(jt), int(1), |b| {
                     b.assign(
                         c,
                         Expr::Sym(ci) * ne.clone() + Expr::Sym(cj),

@@ -225,7 +225,8 @@ pub fn atax() -> Program {
                 y,
                 Expr::Sym(j2),
                 load(y, Expr::Sym(j2))
-                    + load(a, Expr::Sym(i2) * ne.clone() + Expr::Sym(j2)) * load(tmp, Expr::Sym(i2)),
+                    + load(a, Expr::Sym(i2) * ne.clone() + Expr::Sym(j2))
+                        * load(tmp, Expr::Sym(i2)),
             );
         });
     });

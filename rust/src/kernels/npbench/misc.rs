@@ -53,7 +53,10 @@ pub fn softmax() -> Program {
         b.for_(j2, int(0), me.clone(), int(1), |b| {
             let e = func(
                 FuncKind::Exp,
-                vec![load(x, Expr::Sym(i2) * me.clone() + Expr::Sym(j2)) - load(rowmax, Expr::Sym(i2))],
+                vec![
+                    load(x, Expr::Sym(i2) * me.clone() + Expr::Sym(j2))
+                        - load(rowmax, Expr::Sym(i2)),
+                ],
             );
             b.assign(out, Expr::Sym(i2) * me.clone() + Expr::Sym(j2), e.clone());
             b.assign(rowsum, Expr::Sym(i2), load(rowsum, Expr::Sym(i2)) + e);

@@ -15,34 +15,144 @@ fn positive_init(name: &str, i: usize) -> f64 {
 /// All 20 Fig. 10 kernels.
 pub fn corpus() -> Vec<KernelEntry> {
     vec![
-        KernelEntry { name: "gemm", build: blas::gemm, preset: blas::gemm_preset, init: default_init },
-        KernelEntry { name: "2mm", build: blas::k2mm, preset: blas::k2mm_preset, init: default_init },
-        KernelEntry { name: "3mm", build: blas::k3mm, preset: blas::k3mm_preset, init: default_init },
-        KernelEntry { name: "atax", build: blas::atax, preset: blas::atax_preset, init: default_init },
-        KernelEntry { name: "bicg", build: blas::bicg, preset: blas::bicg_preset, init: default_init },
-        KernelEntry { name: "mvt", build: blas::mvt, preset: blas::mvt_preset, init: default_init },
-        KernelEntry { name: "gemver", build: blas::gemver, preset: blas::gemver_preset, init: default_init },
-        KernelEntry { name: "gesummv", build: blas::gesummv, preset: blas::gesummv_preset, init: default_init },
-        KernelEntry { name: "syrk", build: blas::syrk, preset: blas::syrk_preset, init: default_init },
-        KernelEntry { name: "syr2k", build: blas::syr2k, preset: blas::syr2k_preset, init: default_init },
-        KernelEntry { name: "trmm", build: blas::trmm, preset: blas::trmm_preset, init: default_init },
-        KernelEntry { name: "doitgen", build: blas::doitgen, preset: blas::doitgen_preset, init: default_init },
-        KernelEntry { name: "jacobi_1d", build: stencils::jacobi_1d, preset: stencils::jacobi_1d_preset, init: default_init },
-        KernelEntry { name: "jacobi_2d", build: stencils::jacobi_2d, preset: stencils::jacobi_2d_preset, init: default_init },
-        KernelEntry { name: "seidel_2d", build: stencils::seidel_2d, preset: stencils::seidel_2d_preset, init: default_init },
-        KernelEntry { name: "heat_3d", build: stencils::heat_3d, preset: stencils::heat_3d_preset, init: default_init },
-        KernelEntry { name: "fdtd_2d", build: stencils::fdtd_2d, preset: stencils::fdtd_2d_preset, init: default_init },
-        KernelEntry { name: "conv2d", build: stencils::conv2d, preset: stencils::conv2d_preset, init: default_init },
-        KernelEntry { name: "softmax", build: misc::softmax, preset: misc::softmax_preset, init: default_init },
-        KernelEntry { name: "floyd_warshall", build: misc::floyd_warshall, preset: misc::floyd_warshall_preset, init: positive_init },
+        KernelEntry {
+            name: "gemm",
+            build: blas::gemm,
+            preset: blas::gemm_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "2mm",
+            build: blas::k2mm,
+            preset: blas::k2mm_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "3mm",
+            build: blas::k3mm,
+            preset: blas::k3mm_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "atax",
+            build: blas::atax,
+            preset: blas::atax_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "bicg",
+            build: blas::bicg,
+            preset: blas::bicg_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "mvt",
+            build: blas::mvt,
+            preset: blas::mvt_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "gemver",
+            build: blas::gemver,
+            preset: blas::gemver_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "gesummv",
+            build: blas::gesummv,
+            preset: blas::gesummv_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "syrk",
+            build: blas::syrk,
+            preset: blas::syrk_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "syr2k",
+            build: blas::syr2k,
+            preset: blas::syr2k_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "trmm",
+            build: blas::trmm,
+            preset: blas::trmm_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "doitgen",
+            build: blas::doitgen,
+            preset: blas::doitgen_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "jacobi_1d",
+            build: stencils::jacobi_1d,
+            preset: stencils::jacobi_1d_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "jacobi_2d",
+            build: stencils::jacobi_2d,
+            preset: stencils::jacobi_2d_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "seidel_2d",
+            build: stencils::seidel_2d,
+            preset: stencils::seidel_2d_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "heat_3d",
+            build: stencils::heat_3d,
+            preset: stencils::heat_3d_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "fdtd_2d",
+            build: stencils::fdtd_2d,
+            preset: stencils::fdtd_2d_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "conv2d",
+            build: stencils::conv2d,
+            preset: stencils::conv2d_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "softmax",
+            build: misc::softmax,
+            preset: misc::softmax_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "floyd_warshall",
+            build: misc::floyd_warshall,
+            preset: misc::floyd_warshall_preset,
+            init: positive_init,
+        },
     ]
 }
 
 /// Extension kernels beyond the Fig. 10 set (ablations / extra coverage).
 pub fn extras() -> Vec<KernelEntry> {
     vec![
-        KernelEntry { name: "durbin", build: misc::durbin, preset: misc::durbin_preset, init: default_init },
-        KernelEntry { name: "cholesky_update", build: misc::cholesky_update, preset: misc::cholesky_preset, init: default_init },
+        KernelEntry {
+            name: "durbin",
+            build: misc::durbin,
+            preset: misc::durbin_preset,
+            init: default_init,
+        },
+        KernelEntry {
+            name: "cholesky_update",
+            build: misc::cholesky_update,
+            preset: misc::cholesky_preset,
+            init: default_init,
+        },
     ]
 }
 

@@ -268,7 +268,8 @@ pub fn fdtd_2d() -> Program {
                     off.clone(),
                     load(ey, off.clone())
                         - Expr::real(0.5)
-                            * (load(hz, off) - load(hz, (Expr::Sym(i1) - int(1)) * ne.clone() + Expr::Sym(j1))),
+                            * (load(hz, off)
+                                - load(hz, (Expr::Sym(i1) - int(1)) * ne.clone() + Expr::Sym(j1))),
                 );
             });
         });

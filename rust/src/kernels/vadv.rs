@@ -331,10 +331,8 @@ mod tests {
     #[test]
     fn optimized_variants_agree_with_baseline() {
         let base = run(&build(), 1);
-        for (name, f) in [
-            ("cfg1", silo_cfg1 as fn(&mut Program) -> anyhow::Result<crate::transforms::PipelineReport>),
-            ("cfg2", silo_cfg2),
-        ] {
+        type OptFn = fn(&mut Program) -> anyhow::Result<crate::transforms::PipelineReport>;
+        for (name, f) in [("cfg1", silo_cfg1 as OptFn), ("cfg2", silo_cfg2)] {
             let mut p = build();
             f(&mut p).unwrap();
             for threads in [1, 3] {

@@ -30,3 +30,4 @@ pub mod runtime;
 pub mod symbolic;
 pub mod schedules;
 pub mod transforms;
+pub mod tuner;

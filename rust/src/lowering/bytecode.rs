@@ -47,14 +47,14 @@ pub enum Op {
     FFromI { dst: u16, src: u16 },
 
     // ---- memory ----
-    /// f[dst] = heap[cont][ i[idx] ]
+    /// `f[dst] = heap[cont][ i[idx] ]`
     Load { dst: u16, cont: u16, idx: u16 },
-    /// f[dst] = heap[cont][ i[idx] + off ]  — pointer-increment path.
+    /// `f[dst] = heap[cont][ i[idx] + off ]` — pointer-increment path.
     LoadOff { dst: u16, cont: u16, idx: u16, off: i32 },
-    /// f[dst] = heap[cont][ i[a] + i[b] ] — cursor + hoisted symbolic
+    /// `f[dst] = heap[cont][ i[a] + i[b] ]` — cursor + hoisted symbolic
     /// delta register (x86 base+index addressing; zero extra pressure).
     LoadAt2 { dst: u16, cont: u16, a: u16, b: u16 },
-    /// heap[cont][ i[idx] ] = f[src]
+    /// `heap[cont][ i[idx] ] = f[src]`
     Store { cont: u16, idx: u16, src: u16 },
     StoreOff { cont: u16, idx: u16, off: i32, src: u16 },
     /// f32 containers round through f32 on store.
@@ -69,7 +69,7 @@ pub enum Op {
     /// Loop back-edge test: continue when `(stride > 0 && var < end) ||
     /// (stride < 0 && var > end)`; otherwise fall through to `exit`.
     LoopCond { var: u16, end: u16, stride: u16, exit: u32 },
-    /// Skip the next `skip` instructions when f[cond] <= 0 (stmt guards).
+    /// Skip the next `skip` instructions when `f[cond] <= 0` (stmt guards).
     GuardSkip { cond: u16, skip: u32 },
     Halt,
 }

@@ -118,7 +118,11 @@ impl ExprCtx {
         }
     }
 
-    pub fn cursor_for(&self, c: crate::symbolic::ContainerId, off: &Expr) -> Option<(u16, CursorDelta)> {
+    pub fn cursor_for(
+        &self,
+        c: crate::symbolic::ContainerId,
+        off: &Expr,
+    ) -> Option<(u16, CursorDelta)> {
         let stmt = self.current_stmt?;
         self.cursors
             .iter()

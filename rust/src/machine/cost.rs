@@ -71,7 +71,15 @@ fn visit_ops(prog: &ExecProgram, f: &mut impl FnMut(&Op)) {
         match n {
             crate::lowering::bytecode::ExecNode::Code(b) => b.ops.iter().for_each(|o| f(o)),
             crate::lowering::bytecode::ExecNode::Loop(l) => {
-                for b in [&l.start, &l.end, &l.stride, &l.pre_body, &l.prefetch, &l.post_body, &l.post_loop] {
+                for b in [
+                    &l.start,
+                    &l.end,
+                    &l.stride,
+                    &l.pre_body,
+                    &l.prefetch,
+                    &l.post_body,
+                    &l.post_loop,
+                ] {
                     b.ops.iter().for_each(|o| f(o));
                 }
                 for c in &l.body {

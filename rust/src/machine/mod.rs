@@ -1,7 +1,16 @@
-//! Simulated-machine models: cache hierarchy + hardware prefetcher,
-//! register-pressure/spill estimation, cycle cost model, node/compiler
-//! models, and the multicore makespan simulator. Together these stand in
-//! for the paper's testbed (DESIGN.md §Substitutions).
+//! Simulated-machine models: cache hierarchy + hardware prefetcher
+//! ([`cache`]), register-pressure/spill estimation over the lowered
+//! bytecode ([`regalloc`]), the cycle cost model ([`cost`]), node and
+//! compiler models ([`nodes`]), and the multicore makespan simulator
+//! ([`simsched`]). Together these stand in for the paper's testbed
+//! (DESIGN.md §Substitutions).
+//!
+//! Besides powering the experiment harnesses, this layer is the
+//! *decision oracle* of the optimizer: the cost-gated schedule stages in
+//! `transforms::pipeline` and the whole `tuner` search rank candidate
+//! schedules by [`cycles_per_iteration`] (op mix + spill penalties from
+//! [`analyze`]) — so every number the optimizer acts on is derived from
+//! the actual lowered program, not from constants.
 
 pub mod cache;
 pub mod cost;
@@ -13,4 +22,7 @@ pub use cache::{CacheCfg, CacheSim, CacheStats, LevelCfg};
 pub use cost::{cycles_per_iteration, modeled_ms, op_cost};
 pub use nodes::{all_compilers, amd_node, clang, gcc, icc, intel_node, CompilerModel, NodeModel};
 pub use regalloc::{analyze, LoopPressure, PressureReport};
-pub use simsched::{barriered_phases, doacross_grid, doacross_grid_segmented, doall_phase, makespan, seq_chain, Task};
+pub use simsched::{
+    barriered_phases, doacross_grid, doacross_grid_segmented, doall_phase, makespan, seq_chain,
+    Task,
+};

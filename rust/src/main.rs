@@ -5,15 +5,17 @@
 //!   silo show <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
 //!            [--ptr-inc] [--prefetch]
 //!   silo run <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
-//!            [--ptr-inc] [--prefetch] [--preset tiny|small|medium]
-//!            [--threads N]
+//!            [--ptr-inc] [--prefetch] [--preset=tiny|small|medium]
+//!            [--threads=N]
 //!   silo validate <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
-//!            [--ptr-inc] [--threads N]
-//!   silo experiment <fig1|fig2|fig9|table1|fig10|all>
+//!            [--ptr-inc] [--threads=N]
+//!   silo tune <kernel>                         — autotuner candidate table
+//!   silo experiment <fig1|fig2|fig9|table1|fig10|autotune|all>
 //!   silo artifacts                             — list PJRT artifacts
 //!
-//! `--pipeline` takes a named configuration (`none|cfg1|cfg2|cfg3`) or a
-//! comma-separated pass list, e.g. `--pipeline=privatize,fusion,doall`.
+//! `--pipeline` takes a named configuration (`none|cfg1|cfg2|cfg3`), the
+//! cost-model-driven autotuner (`auto`), or a comma-separated pass list,
+//! e.g. `--pipeline=privatize,fusion,doall`.
 
 use silo::coordinator::{self, MemSchedules, OptConfig, PipelineSpec};
 use silo::kernels::Preset;
@@ -133,6 +135,22 @@ fn real_main() -> anyhow::Result<()> {
             coordinator::validate_spec(name, &args.spec(), args.mem(), args.threads())?;
             println!("{name}: optimized output identical to baseline ✓");
         }
+        Some("tune") => {
+            let name = args.positional.get(1).ok_or_else(usage)?;
+            let outcome =
+                silo::tuner::autotune_kernel(name, &silo::tuner::TuneOptions::default())?;
+            print!("{}", outcome.summary_table());
+            println!(
+                "\nselected: {} (modeled score {:.3}, {} candidates, {} shared analysis hits)",
+                outcome.best.candidate.spec(),
+                outcome.cost.score,
+                outcome.candidates.len(),
+                outcome.analysis_hits
+            );
+            if outcome.refined_nests > 0 {
+                println!("per-loop ptr-inc kept on {} nest(s)", outcome.refined_nests);
+            }
+        }
         Some("experiment") => {
             let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             print!("{}", coordinator::experiments::run(id)?);
@@ -150,8 +168,9 @@ fn real_main() -> anyhow::Result<()> {
 
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
-        "usage: silo <list|show|run|validate|experiment|artifacts> [args]\n\
-         optimization: --cfg1|--cfg2|--cfg3 or --pipeline=<none|cfg1|cfg2|cfg3|pass,pass,...>\n\
+        "usage: silo <list|show|run|validate|tune|experiment|artifacts> [args]\n\
+         optimization: --cfg1|--cfg2|--cfg3 or \
+         --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
          see rust/src/main.rs header for details"
     )
 }

@@ -1,8 +1,29 @@
-//! Memory schedules (paper §4): per-access properties realized at lowering
-//! — software prefetch hints and pointer incrementation.
+//! Memory schedules (paper §4): per-access properties realized at
+//! lowering, never by rewriting the loop tree — "a memory schedule does
+//! not directly modify the IR".
+//!
+//! Two schedules are implemented:
+//!
+//! * **software prefetch** ([`prefetch`], §4.1) — hints placed where the
+//!   hardware stream prefetcher mispredicts (stride discontinuities at
+//!   tile/window boundaries), parameterized by a prefetch *distance*;
+//! * **pointer incrementation** ([`ptr_inc`], §4.2) — per-access offset
+//!   arithmetic replaced by a cursor with per-loop increment/reset
+//!   deltas, scheduled program-wide ([`schedule_all_ptr_inc`]) or per
+//!   nest ([`schedule_ptr_inc_in`]).
+//!
+//! Both are ordinary pipeline stages (`transforms::pipeline`), optionally
+//! gated by the `machine::cost` model, and both are axes of the
+//! autotuner's search space (`tuner::space`): the tuner picks the
+//! prefetch distance and the per-nest ptr-inc plans the cost model
+//! favors.
 
 pub mod prefetch;
 pub mod ptr_inc;
 
-pub use prefetch::{clear_prefetches, hinted_loops, schedule_prefetches};
-pub use ptr_inc::{all_plans, plan_ptr_inc, schedule_all_ptr_inc, LoopDelta, PtrPlan};
+pub use prefetch::{
+    clear_prefetches, hinted_loops, schedule_prefetches, schedule_prefetches_dist,
+};
+pub use ptr_inc::{
+    all_plans, plan_ptr_inc, schedule_all_ptr_inc, schedule_ptr_inc_in, LoopDelta, PtrPlan,
+};

@@ -5,36 +5,50 @@
 //! data access uses a loop variable `w` whose loop's **starting value
 //! depends on a surrounding loop's variable** (tiled loops, sliding
 //! windows, Fig. 6). The fix: at the top of each iteration of the
-//! surrounding loop `S`, prefetch the address of the *first* access the
-//! next `S`-iteration will make — offset obtained by substituting inner
-//! vars with their start expressions and `S`'s var with `var + stride`.
+//! surrounding loop `S`, prefetch the address of the *first* access a
+//! later `S`-iteration will make — offset obtained by substituting inner
+//! vars with their start expressions and `S`'s var with
+//! `var + dist·stride`. The paper's rule is distance 1
+//! ([`schedule_prefetches`]); the autotuner also searches larger
+//! distances ([`schedule_prefetches_dist`]) to cover deeper memory
+//! tiers.
 
 use crate::ir::{Loop, LoopSchedule, Node, PrefetchHint, Program};
 use crate::symbolic::{subs, ContainerId, Expr};
 
-/// Generate prefetch hints for the whole program. Returns hints added.
+/// Generate prefetch hints for the whole program at distance 1 (the next
+/// iteration of the hint-hosting loop). Returns hints added.
+pub fn schedule_prefetches(p: &mut Program) -> usize {
+    schedule_prefetches_dist(p, 1)
+}
+
+/// Generate prefetch hints for the whole program, targeting `dist`
+/// iterations of the hint-hosting loop ahead. Returns hints added.
 ///
 /// Rule (§4.1.2): a stride discontinuity happens at loop `W` when `W`'s
 /// starting value depends on any surrounding loop variable (tiled loops,
 /// sliding windows, staged tile copies). The hint goes on `W`'s *parent*
 /// loop — "the lowest one in the hierarchy (closest to the access)" — and
-/// prefetches where the first access of the parent's next iteration will
-/// land: `W`-subtree variables replaced by their starts, the parent's
-/// variable shifted by its stride. Parallel parents are skipped.
-pub fn schedule_prefetches(p: &mut Program) -> usize {
+/// prefetches where the first access of the parent's `dist`-away
+/// iteration will land: `W`-subtree variables replaced by their starts,
+/// the parent's variable shifted by `dist` strides. Distance 1 is §4.1.2
+/// verbatim; the autotuner searches larger distances to cover deeper
+/// memory tiers. Parallel parents are skipped.
+pub fn schedule_prefetches_dist(p: &mut Program, dist: i64) -> usize {
     let mut hints: Vec<PrefetchHint> = Vec::new();
     // Walk every statement with its enclosing loop chain.
     fn walk<'a>(
         nodes: &'a [Node],
         chain: &mut Vec<&'a Loop>,
         p: &Program,
+        dist: i64,
         hints: &mut Vec<PrefetchHint>,
     ) {
         for n in nodes {
             match n {
                 Node::Stmt(st) => {
                     let mut consider = |c: ContainerId, off: &Expr, is_write: bool| {
-                        hint_for_access(c, off, is_write, chain, p, hints);
+                        hint_for_access(c, off, is_write, chain, p, dist, hints);
                     };
                     for r in st.reads() {
                         consider(r.container, &r.offset, false);
@@ -43,16 +57,18 @@ pub fn schedule_prefetches(p: &mut Program) -> usize {
                 }
                 Node::Loop(l) => {
                     chain.push(l);
-                    walk(&l.body, chain, p, hints);
+                    walk(&l.body, chain, p, dist, hints);
                     chain.pop();
                 }
             }
         }
     }
     let mut chain = Vec::new();
-    walk(&p.body, &mut chain, p, &mut hints);
+    walk(&p.body, &mut chain, p, dist.max(1), &mut hints);
     // Deduplicate (same loop, container, offset).
-    hints.dedup_by(|a, b| a.at_loop == b.at_loop && a.container == b.container && a.offset == b.offset);
+    hints.dedup_by(|a, b| {
+        a.at_loop == b.at_loop && a.container == b.container && a.offset == b.offset
+    });
     let mut added = 0;
     for h in hints {
         if !p
@@ -72,13 +88,14 @@ pub fn schedule_prefetches(p: &mut Program) -> usize {
 /// variable the offset uses; a stride discontinuity exists when `W`'s
 /// start depends on a surrounding loop variable. The hint goes on `W`'s
 /// parent ("the lowest one in the hierarchy, closest to the access") and
-/// targets the parent's next iteration's first access.
+/// targets the first access of the parent's `dist`-away iteration.
 fn hint_for_access(
     c: ContainerId,
     off: &Expr,
     is_write: bool,
     chain: &[&Loop],
     p: &Program,
+    dist: i64,
     hints: &mut Vec<PrefetchHint>,
 ) {
     // Small constant-size buffers (staged tiles) live in cache — never
@@ -104,14 +121,15 @@ fn hint_for_access(
     if !matches!(parent.schedule, LoopSchedule::Sequential) {
         return; // §4.1.2: parallel loops get no hints
     }
-    // Offset of the first access in the parent's next iteration:
-    // W → its start, then parent.var → parent.var + stride.
+    // Offset of the first access in the parent's dist-away iteration:
+    // W → its start, then parent.var → parent.var + dist·stride.
     let at_start = subs(off, w.var, &w.start);
-    let next = subs(
-        &at_start,
-        parent.var,
-        &(Expr::Sym(parent.var) + parent.stride.clone()),
-    );
+    let step = if dist == 1 {
+        parent.stride.clone()
+    } else {
+        Expr::Int(dist) * parent.stride.clone()
+    };
+    let next = subs(&at_start, parent.var, &(Expr::Sym(parent.var) + step));
     hints.push(PrefetchHint {
         at_loop: parent.id,
         container: c,
@@ -172,6 +190,37 @@ mod tests {
         assert!(!h.for_write);
         // offset: j→4i, then i→i+1 ⇒ 2*(4(i+1)) = 8i + 8.
         let expect = int(8) * Expr::Sym(i) + int(8);
+        assert!(sym_eq(&h.offset, &expect), "got {}", h.offset);
+    }
+
+    /// Distance-`d` hints land `d` parent strides ahead of the distance-1
+    /// target.
+    #[test]
+    fn prefetch_distance_scales_the_target() {
+        let build = || {
+            let mut b = ProgramBuilder::new("pf5");
+            let n = b.param_positive("pf5_N");
+            let a = b.array("A", Expr::Sym(n) * int(4) + int(64));
+            let o = b.array("O", Expr::Sym(n) * int(4) + int(64));
+            let i = b.sym("pf5_i");
+            let j = b.sym("pf5_j");
+            b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+                b.for_(j, int(4) * Expr::Sym(i), int(4) * Expr::Sym(i) + int(4), int(1), |b| {
+                    b.assign(o, Expr::Sym(j), load(a, Expr::Sym(j) * int(2)));
+                });
+            });
+            (b.finish(), a, i)
+        };
+        let (mut p, a, i) = build();
+        assert!(schedule_prefetches_dist(&mut p, 3) >= 1);
+        let h = p
+            .schedules
+            .prefetches
+            .iter()
+            .find(|h| h.container == a)
+            .unwrap();
+        // offset: j→4i, then i→i+3 ⇒ 2·4(i+3) = 8i + 24.
+        let expect = int(8) * Expr::Sym(i) + int(24);
         assert!(sym_eq(&h.offset, &expect), "got {}", h.offset);
     }
 

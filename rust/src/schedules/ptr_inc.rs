@@ -72,6 +72,17 @@ pub struct PtrPlan {
 /// whose offsets mention no loop variable are skipped (nothing to
 /// increment).
 pub fn schedule_all_ptr_inc(p: &mut Program) -> usize {
+    schedule_ptr_inc_filtered(p, None)
+}
+
+/// Schedule pointer incrementation only for statements nested (at any
+/// depth) inside loop `root` — the per-nest granularity the autotuner's
+/// refinement decides at. Returns marks added.
+pub fn schedule_ptr_inc_in(p: &mut Program, root: LoopId) -> usize {
+    schedule_ptr_inc_filtered(p, Some(root))
+}
+
+fn schedule_ptr_inc_filtered(p: &mut Program, root: Option<LoopId>) -> usize {
     let mut added = 0;
     let stmt_parents = p.stmt_parents();
     let mut marks: Vec<(StmtId, ContainerId)> = Vec::new();
@@ -81,6 +92,11 @@ pub fn schedule_all_ptr_inc(p: &mut Program) -> usize {
         };
         if chain.is_empty() {
             continue;
+        }
+        if let Some(r) = root {
+            if !chain.contains(&r) {
+                continue;
+            }
         }
         let loop_vars: Vec<Sym> = chain
             .iter()
@@ -120,7 +136,11 @@ pub fn schedule_all_ptr_inc(p: &mut Program) -> usize {
 /// loop's Δᵢ is not loop-invariant in a way we can re-evaluate) — the
 /// lowering then falls back to the default schedule, which is always
 /// semantically safe.
-pub fn plan_ptr_inc(p: &Program, stmt_id: StmtId, container: ContainerId) -> Result<Option<PtrPlan>> {
+pub fn plan_ptr_inc(
+    p: &Program,
+    stmt_id: StmtId,
+    container: ContainerId,
+) -> Result<Option<PtrPlan>> {
     let Some(stmt) = p.find_stmt(stmt_id) else {
         bail!("ptr-inc plan for missing stmt s{}", stmt_id.0);
     };
@@ -424,6 +444,36 @@ mod tests {
         let mut p = b.finish();
         p.schedules.ptr_inc.push((sid.unwrap(), a));
         assert!(plan_ptr_inc(&p, sid.unwrap(), a).unwrap().is_none());
+    }
+
+    /// Per-nest scheduling marks only the requested nest's statements.
+    #[test]
+    fn schedule_in_restricts_to_one_nest() {
+        let mut b = ProgramBuilder::new("pi6");
+        let n = b.param_positive("pi6_N");
+        let a = b.array("A", Expr::Sym(n));
+        let o = b.array("O", Expr::Sym(n));
+        let i = b.sym("pi6_i");
+        let j = b.sym("pi6_j");
+        let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), Expr::real(1.0));
+        });
+        let jl = b.for_id(j, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(o, Expr::Sym(j), load(a, Expr::Sym(j)));
+        });
+        let mut p = b.finish();
+        let added = schedule_ptr_inc_in(&mut p, jl);
+        assert_eq!(added, 2, "O write + A read in the j nest");
+        let _ = il;
+        // All marked statements live under the j loop.
+        let parents = p.stmt_parents();
+        assert!(p
+            .schedules
+            .ptr_inc
+            .iter()
+            .all(|(s, _)| parents.get(s).map(|c| c.contains(&jl)).unwrap_or(false)));
+        // The full sweep adds the remaining (i-nest) mark.
+        assert_eq!(schedule_all_ptr_inc(&mut p), 1);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //!
 //! Used by the cfg1 pipeline to move a sequential K loop inside parallel
 //! I/J loops once privatization has removed the blocking WAW deps (the
-//! paper's "the automatic optimization [moves] the K loops inside of the
+//! paper's "the automatic optimization \[moves\] the K loops inside of the
 //! I and J loops in a subsequent pass").
 
 use anyhow::{bail, Result};

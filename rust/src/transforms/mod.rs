@@ -22,7 +22,9 @@ pub use interchange::{
     can_interchange, can_interchange_with, interchange, sink_sequential_loop,
     sink_sequential_loop_with,
 };
-pub use pass::{auto_optimize, eliminate_dependencies, silo_cfg1, silo_cfg2, PassLog, PipelineReport};
+pub use pass::{
+    auto_optimize, eliminate_dependencies, silo_cfg1, silo_cfg2, PassLog, PipelineReport,
+};
 pub use pipeline::{
     DepElimPass, DoacrossPass, DoallPass, FusionPass, InputCopyPass, Pass, PassReport, Pipeline,
     PrefetchPass, PrivatizePass, PtrIncPass, SinkSequentialPass, TilingPass,

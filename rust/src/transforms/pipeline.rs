@@ -378,12 +378,15 @@ impl Pass for PtrIncPass {
     }
 }
 
-/// Software-prefetch stage (§4.1). With `gated`, hints are kept only when
-/// their issue-slot overhead per the `machine::cost` model stays under 5%
-/// of the loop's cycle budget (the latency they hide is off-model here —
-/// the cache simulator prices it in the experiments).
+/// Software-prefetch stage (§4.1). `dist` is the prefetch distance in
+/// iterations of the hint-hosting loop (1 = next iteration; the tuner
+/// searches larger distances for long-latency tiers). With `gated`, hints
+/// are kept only when their issue-slot overhead per the `machine::cost`
+/// model stays under 5% of the loop's cycle budget (the latency they hide
+/// is off-model here — the cache simulator prices it in the experiments).
 pub struct PrefetchPass {
     pub gated: bool,
+    pub dist: i64,
 }
 
 impl Pass for PrefetchPass {
@@ -394,14 +397,14 @@ impl Pass for PrefetchPass {
     fn run(&self, p: &mut Program, _cache: &mut AnalysisCache) -> Result<PassReport> {
         let mut report = PassReport::default();
         if !self.gated {
-            let n = crate::schedules::schedule_prefetches(p);
+            let n = crate::schedules::schedule_prefetches_dist(p, self.dist);
             if n > 0 {
-                report.push("prefetch", format!("{n} hints"));
+                report.push("prefetch", format!("{n} hints (d{})", self.dist));
             }
             return Ok(report);
         }
         let mut trial = p.clone();
-        let n = crate::schedules::schedule_prefetches(&mut trial);
+        let n = crate::schedules::schedule_prefetches_dist(&mut trial, self.dist);
         if n == 0 {
             return Ok(report);
         }
@@ -416,7 +419,11 @@ impl Pass for PrefetchPass {
             *p = trial;
             report.push(
                 "prefetch",
-                format!("{n} hints (+{:.1}% issue cost)", (after / before - 1.0) * 100.0),
+                format!(
+                    "{n} hints, d{} (+{:.1}% issue cost)",
+                    self.dist,
+                    (after / before - 1.0) * 100.0
+                ),
             );
         }
         Ok(report)
@@ -483,8 +490,28 @@ impl Pipeline {
     pub fn cfg3() -> Pipeline {
         Pipeline::cfg2()
             .with(TilingPass { factor: 32 })
-            .with(PrefetchPass { gated: true })
+            .with(PrefetchPass { gated: true, dist: 1 })
             .with(PtrIncPass { gated: true })
+    }
+
+    /// Cost-model-driven schedule search (the `tuner` subsystem): score
+    /// every point of the default [`SearchSpace`](crate::tuner::SearchSpace)
+    /// on `p` and return the winning pipeline together with the full
+    /// [`TuneOutcome`](crate::tuner::TuneOutcome). The returned pipeline
+    /// reproduces the winning candidate when run on a fresh build of the
+    /// same program; `outcome.program` already carries the result
+    /// (including the per-loop ptr-inc refinement, which has no
+    /// pass-list equivalent).
+    pub fn autotuned(p: &Program) -> Result<(Pipeline, crate::tuner::TuneOutcome)> {
+        let outcome = crate::tuner::autotune_program(p, &crate::tuner::TuneOptions::default())?;
+        Ok((outcome.best.candidate.pipeline(), outcome))
+    }
+
+    /// Concatenate two pipelines (the tuner composes strategy prefixes
+    /// with schedule tails this way).
+    pub fn append(mut self, other: Pipeline) -> Pipeline {
+        self.passes.extend(other.passes);
+        self
     }
 
     /// Parse a pipeline spec: a named configuration (`none`, `cfg1`,
@@ -496,6 +523,10 @@ impl Pipeline {
             "cfg1" => Ok(Pipeline::cfg1()),
             "cfg2" => Ok(Pipeline::cfg2()),
             "cfg3" => Ok(Pipeline::cfg3()),
+            "auto" => bail!(
+                "'auto' is program-dependent and resolved by the driver \
+                 (PipelineSpec::Auto / tuner::autotune_program), not by a static pass list"
+            ),
             list => {
                 let mut pl = Pipeline::new();
                 for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
@@ -509,7 +540,7 @@ impl Pipeline {
                         "doacross" => pl.with(DoacrossPass),
                         "tiling" => pl.with(TilingPass { factor: 32 }),
                         "ptr-inc" => pl.with(PtrIncPass { gated: false }),
-                        "prefetch" => pl.with(PrefetchPass { gated: false }),
+                        "prefetch" => pl.with(PrefetchPass { gated: false, dist: 1 }),
                         other => bail!(
                             "unknown pass {other} (expected dep-elim|privatize|input-copy|\
                              fusion|interchange|doall|doacross|tiling|ptr-inc|prefetch)"

@@ -151,7 +151,10 @@ fn reads_inside_self_contained(
         .collect();
 
     // Is a read (offset + ranges) covered by an earlier element's write?
-    let covered = |idx: usize, off: &crate::symbolic::Expr, ranges: &[crate::analysis::LoopRange]| -> bool {
+    let covered = |idx: usize,
+                   off: &crate::symbolic::Expr,
+                   ranges: &[crate::analysis::LoopRange]|
+     -> bool {
         use crate::symbolic::sym_eq;
         for prev in (0..idx).rev() {
             match &l.body[prev] {
@@ -221,7 +224,9 @@ fn reads_inside_self_contained(
             // stmt-level read means it was uncovered.
             // (Loop-element reads were checked against `covered`.)
             // Only fail for stmt-level reads:
-            let stmt_level = l.body.iter().any(|n| matches!(n, Node::Stmt(s) if s.reads().iter().any(|r| r.container == c)));
+            let stmt_level = l.body.iter().any(
+                |n| matches!(n, Node::Stmt(s) if s.reads().iter().any(|r| r.container == c)),
+            );
             if stmt_level {
                 return false;
             }
@@ -237,7 +242,7 @@ mod tests {
     use crate::ir::ProgramBuilder;
     use crate::symbolic::{int, load, Expr};
 
-    /// Fig. 4/5: A[i] is written then read in the same k-iteration and not
+    /// Fig. 4/5: `A[i]` is written then read in the same k-iteration and not
     /// read outside ⇒ privatizable; kills the WAW on A across k.
     #[test]
     fn fig4_privatizes_a() {

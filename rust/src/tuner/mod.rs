@@ -1,0 +1,343 @@
+//! Cost-model-driven schedule autotuning (`--pipeline auto`,
+//! [`Pipeline::autotuned`](crate::transforms::Pipeline::autotuned)).
+//!
+//! The paper's 12× speedups come from *choosing* schedules, not merely
+//! having them: per kernel, the right combination of parallelization
+//! (DOALL vs DOACROSS pipelining), locality tiling, software-prefetch
+//! distance, and pointer-increment plans. This subsystem makes that
+//! choice automatically:
+//!
+//! 1. **Space** ([`space`]) — candidates are the cross product of the
+//!    cfg1/cfg2 pass prefixes with tile factors, prefetch distances, and
+//!    gated pointer incrementation. The named paper configurations are
+//!    exact points of the default space, so the search can never pick
+//!    something the cost model ranks worse than cfg1/cfg2/cfg3.
+//! 2. **Cost** ([`cost`]) — each candidate is scored with the `machine/`
+//!    model: cycles per iteration of the worst innermost loop (op mix +
+//!    register-pressure spills from `machine/regalloc.rs`) divided by the
+//!    modeled parallel speedup of the scheduled loop tree.
+//! 3. **Search** ([`search`]) — candidates sharing a strategy reuse one
+//!    prefix run against a single memoized
+//!    [`AnalysisCache`](crate::analysis::AnalysisCache) (dependence and
+//!    visibility analyses are computed once per strategy, not per
+//!    candidate); schedule tails are evaluated in parallel on worker
+//!    threads; the earliest strict minimum wins, so the result is
+//!    deterministic for a fixed cost model regardless of worker count.
+//!    A final refinement re-derives the pointer-increment schedule one
+//!    top-level nest at a time, keeping it only where the model agrees.
+//!
+//! Entry points: [`autotune_program`] / [`autotune_kernel`] here,
+//! [`Pipeline::autotuned`](crate::transforms::Pipeline::autotuned) on the
+//! pipeline API, `--pipeline auto` (and the `tune` subcommand) on the
+//! CLI, and `cargo bench --bench bench_autotune` for the
+//! auto-vs-cfg1/2/3 comparison (`BENCH_autotune.json`).
+
+pub mod cost;
+pub mod search;
+pub mod space;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::ir::Program;
+use crate::machine::{clang, intel_node, CompilerModel, NodeModel};
+use crate::transforms::PipelineReport;
+
+pub use cost::{parallel_speedup, schedule_cost, ScheduleCost};
+pub use search::CandidateResult;
+pub use space::{Candidate, ParallelStrategy, SearchSpace};
+
+/// Tuning knobs. [`TuneOptions::default`] reproduces the paper setting:
+/// the full search space scored with the clang compiler model on the
+/// Intel node, evaluated on up to 8 worker threads.
+#[derive(Debug, Clone)]
+pub struct TuneOptions {
+    pub space: SearchSpace,
+    /// Worker threads for candidate evaluation; 0 = auto (available
+    /// parallelism, capped at 8). The choice of schedule is independent
+    /// of this value.
+    pub workers: usize,
+    pub compiler: CompilerModel,
+    pub node: NodeModel,
+    /// Run the per-loop pointer-increment refinement on the winner.
+    pub per_loop_ptr_inc: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> TuneOptions {
+        TuneOptions {
+            space: SearchSpace::paper(),
+            workers: 0,
+            compiler: clang(),
+            node: intel_node(),
+            per_loop_ptr_inc: true,
+        }
+    }
+}
+
+impl TuneOptions {
+    pub(crate) fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    }
+}
+
+/// What the tuner decided and everything it looked at on the way.
+#[derive(Debug, Clone)]
+pub struct TuneOutcome {
+    /// Name of the tuned program.
+    pub kernel: String,
+    /// The winning candidate (pre-refinement cost).
+    pub best: CandidateResult,
+    /// Final modeled cost of [`TuneOutcome::program`] (after the
+    /// per-loop ptr-inc refinement, when it was kept).
+    pub cost: ScheduleCost,
+    /// The optimized program under the winning schedule.
+    pub program: Program,
+    /// Every evaluated candidate, in deterministic enumeration order.
+    pub candidates: Vec<CandidateResult>,
+    /// Analysis-cache hits/misses across the shared prefix runs.
+    pub analysis_hits: u64,
+    pub analysis_misses: u64,
+    /// Top-level nests that kept the per-loop ptr-inc schedule (0 when
+    /// the refinement was disabled or did not pay).
+    pub refined_nests: usize,
+}
+
+impl TuneOutcome {
+    /// The winner's pass log plus a summary entry, shaped like any other
+    /// pipeline report so the driver/CLI render it uniformly.
+    pub fn report(&self) -> PipelineReport {
+        let mut rep = PipelineReport {
+            log: self.best.log.clone(),
+        };
+        rep.push(
+            "auto",
+            format!(
+                "selected {} (modeled score {:.3}, {} candidates, {} analysis hits)",
+                self.best.candidate.spec(),
+                self.cost.score,
+                self.candidates.len(),
+                self.analysis_hits
+            ),
+        );
+        if self.refined_nests > 0 {
+            rep.push(
+                "auto",
+                format!("per-loop ptr-inc kept on {} nest(s)", self.refined_nests),
+            );
+        }
+        rep
+    }
+
+    /// Candidate table sorted by score (best first), for the CLI `tune`
+    /// subcommand and the examples.
+    pub fn summary_table(&self) -> String {
+        let mut idx: Vec<usize> = (0..self.candidates.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.candidates[a]
+                .cost
+                .score
+                .partial_cmp(&self.candidates[b].cost.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut out = format!(
+            "{:<28} {:>10} {:>10} {:>9} {:>7}\n",
+            "candidate", "score", "cyc/iter", "speedup", "spills"
+        );
+        for &i in &idx {
+            let c = &self.candidates[i];
+            out.push_str(&format!(
+                "{:<28} {:>10.3} {:>10.2} {:>8.1}x {:>7}\n",
+                c.candidate.spec(),
+                c.cost.score,
+                c.cost.cycles_per_iter,
+                c.cost.parallel_speedup,
+                c.cost.spills
+            ));
+        }
+        out
+    }
+}
+
+/// Search the schedule space for `base` and return the best schedule the
+/// cost model can find, with the full candidate table.
+pub fn autotune_program(base: &Program, opts: &TuneOptions) -> Result<TuneOutcome> {
+    let cands = opts.space.candidates();
+    ensure!(!cands.is_empty(), "autotuner invoked with an empty search space");
+    let prefixes = search::run_prefixes(base, &opts.space.strategies)?;
+    let analysis_hits: u64 = prefixes.iter().map(|p| p.hits).sum();
+    let analysis_misses: u64 = prefixes.iter().map(|p| p.misses).sum();
+
+    let evaluated = search::evaluate_all(&cands, &prefixes, opts)?;
+
+    // Deterministic argmin: strict `<`, so the earliest (simplest)
+    // candidate wins ties — identical inputs always pick the same point.
+    let mut best_i = 0usize;
+    for i in 1..evaluated.len() {
+        if evaluated[i].0.cost.score < evaluated[best_i].0.cost.score {
+            best_i = i;
+        }
+    }
+    let candidates: Vec<CandidateResult> = evaluated.iter().map(|(r, _)| r.clone()).collect();
+    let best = candidates[best_i].clone();
+    let mut program = evaluated[best_i].1.clone();
+    let mut cost = best.cost;
+
+    let mut refined_nests = 0usize;
+    if opts.per_loop_ptr_inc && best.candidate.ptr_inc {
+        let (p2, c2, kept) =
+            search::refine_ptr_inc_per_loop(&program, &opts.compiler, &opts.node)?;
+        if c2.score <= cost.score {
+            program = p2;
+            cost = c2;
+            refined_nests = kept;
+        }
+    }
+    crate::ir::validate::validate(&program)?;
+
+    Ok(TuneOutcome {
+        kernel: base.name.clone(),
+        best,
+        cost,
+        program,
+        candidates,
+        analysis_hits,
+        analysis_misses,
+        refined_nests,
+    })
+}
+
+/// Autotune vs the named configurations on one kernel build — the shared
+/// protocol behind the autotune experiment, `bench_autotune`, and the
+/// acceptance tests, kept in one place so the three surfaces cannot
+/// drift.
+#[derive(Debug, Clone)]
+pub struct NamedComparison {
+    /// Modeled scores of cfg1/cfg2/cfg3 under `opts`' cost model.
+    pub cfg_scores: [f64; 3],
+    /// The best (lowest) of the three named scores.
+    pub best_cfg: f64,
+    pub outcome: TuneOutcome,
+}
+
+impl NamedComparison {
+    /// The acceptance criterion: auto's score is no worse than the best
+    /// named configuration (small tolerance for float accumulation).
+    pub fn auto_never_worse(&self) -> bool {
+        self.outcome.cost.score <= self.best_cfg + 1e-9
+    }
+}
+
+/// Score cfg1/cfg2/cfg3 and the autotuner on fresh builds from `build`,
+/// all under the same cost model.
+pub fn compare_with_named_configs(
+    build: fn() -> Program,
+    opts: &TuneOptions,
+) -> Result<NamedComparison> {
+    let mut cfg_scores = [0.0f64; 3];
+    for (i, spec) in ["cfg1", "cfg2", "cfg3"].iter().enumerate() {
+        let mut p = build();
+        crate::transforms::Pipeline::from_spec(spec)?.run(&mut p)?;
+        cfg_scores[i] = schedule_cost(&p, &opts.compiler, &opts.node)?.score;
+    }
+    let outcome = autotune_program(&build(), opts)?;
+    let best_cfg = cfg_scores.iter().copied().fold(f64::INFINITY, f64::min);
+    Ok(NamedComparison {
+        cfg_scores,
+        best_cfg,
+        outcome,
+    })
+}
+
+/// [`autotune_program`] for a registered kernel by name.
+pub fn autotune_kernel(name: &str, opts: &TuneOptions) -> Result<TuneOutcome> {
+    let Some(entry) = crate::kernels::kernel(name) else {
+        bail!(
+            "unknown kernel {name}; available: {}",
+            crate::kernels::all_kernels()
+                .iter()
+                .map(|k| k.name)
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    };
+    autotune_program(&(entry.build)(), opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+
+    fn stream_loop() -> Program {
+        let mut b = ProgramBuilder::new("tu1");
+        let n = b.param_positive("tu1_N");
+        let a = b.array("A", Expr::Sym(n));
+        let x = b.array("X", Expr::Sym(n));
+        let i = b.sym("tu1_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(x, Expr::Sym(i)) * Expr::real(2.0));
+        });
+        b.finish()
+    }
+
+    #[test]
+    fn best_is_global_minimum_of_candidate_table() {
+        let outcome = autotune_program(&stream_loop(), &TuneOptions::default()).unwrap();
+        assert_eq!(outcome.candidates.len(), 48);
+        for c in &outcome.candidates {
+            assert!(
+                outcome.best.cost.score <= c.cost.score,
+                "{} beat the winner {}",
+                c.candidate.spec(),
+                outcome.best.candidate.spec()
+            );
+        }
+        // Refinement never regresses the final cost.
+        assert!(outcome.cost.score <= outcome.best.cost.score);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_choice() {
+        let p = stream_loop();
+        let serial = autotune_program(
+            &p,
+            &TuneOptions {
+                workers: 1,
+                ..TuneOptions::default()
+            },
+        )
+        .unwrap();
+        let parallel = autotune_program(
+            &p,
+            &TuneOptions {
+                workers: 4,
+                ..TuneOptions::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(serial.best.candidate, parallel.best.candidate);
+        assert_eq!(serial.cost.score.to_bits(), parallel.cost.score.to_bits());
+    }
+
+    #[test]
+    fn prefix_analyses_are_shared() {
+        let outcome = autotune_program(&stream_loop(), &TuneOptions::default()).unwrap();
+        assert!(
+            outcome.analysis_hits > 0,
+            "strategy prefixes shared no analyses"
+        );
+    }
+
+    #[test]
+    fn unknown_kernel_is_rejected() {
+        assert!(autotune_kernel("no_such_kernel", &TuneOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,183 @@
+//! The search engine: shared strategy prefixes, worker-thread candidate
+//! evaluation, and the per-loop pointer-increment refinement.
+//!
+//! Candidates are organized as a prefix tree. All candidates with the
+//! same [`ParallelStrategy`] share one run of that strategy's pass prefix
+//! (dep-elim → fusion → parallelization), executed once against a single
+//! memoized [`AnalysisCache`] — the expensive dependence/visibility
+//! analyses are computed once per strategy, not once per candidate. The
+//! schedule tails (tiling, prefetch, ptr-inc) then run on clones of the
+//! prefix program, fanned out across worker threads. Selection is
+//! deterministic regardless of worker count: results are collected by
+//! candidate index and the earliest strict minimum wins.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::analysis::AnalysisCache;
+use crate::ir::{LoopId, Node, Program};
+use crate::machine::{CompilerModel, NodeModel};
+use crate::transforms::PassLog;
+
+use super::cost::{schedule_cost, ScheduleCost};
+use super::space::{Candidate, ParallelStrategy};
+use super::TuneOptions;
+
+/// One evaluated candidate: its point in the space, its modeled cost, and
+/// the pass log of the full (prefix + tail) pipeline run.
+#[derive(Debug, Clone)]
+pub struct CandidateResult {
+    pub candidate: Candidate,
+    pub cost: ScheduleCost,
+    pub log: Vec<PassLog>,
+}
+
+/// A strategy prefix run once and shared by every candidate tail.
+pub(super) struct PrefixRun {
+    pub strategy: ParallelStrategy,
+    pub program: Program,
+    pub log: Vec<PassLog>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// Run each distinct strategy prefix once (one shared [`AnalysisCache`]
+/// per prefix).
+pub(super) fn run_prefixes(
+    base: &Program,
+    strategies: &[ParallelStrategy],
+) -> Result<Vec<PrefixRun>> {
+    let mut out: Vec<PrefixRun> = Vec::new();
+    for &strategy in strategies {
+        if out.iter().any(|r| r.strategy == strategy) {
+            continue;
+        }
+        let mut program = base.clone();
+        let mut cache = AnalysisCache::new();
+        let rep = strategy
+            .prefix()
+            .run_with(&mut program, &mut cache)
+            .with_context(|| format!("{} prefix on {}", strategy.name(), base.name))?;
+        out.push(PrefixRun {
+            strategy,
+            program,
+            log: rep.log,
+            hits: cache.hits(),
+            misses: cache.misses(),
+        });
+    }
+    Ok(out)
+}
+
+/// Evaluate one candidate: clone its strategy's prefix program, run the
+/// schedule tail, and score the result.
+fn evaluate(
+    cand: &Candidate,
+    prefixes: &[PrefixRun],
+    cm: &CompilerModel,
+    node: &NodeModel,
+) -> Result<(CandidateResult, Program)> {
+    let prefix = prefixes
+        .iter()
+        .find(|r| r.strategy == cand.strategy)
+        .expect("strategy prefix missing for candidate");
+    let mut program = prefix.program.clone();
+    let rep = cand
+        .tail()
+        .run(&mut program)
+        .with_context(|| format!("schedule tail {}", cand.spec()))?;
+    let cost = schedule_cost(&program, cm, node)?;
+    let mut log = prefix.log.clone();
+    log.extend(rep.log);
+    Ok((
+        CandidateResult {
+            candidate: *cand,
+            cost,
+            log,
+        },
+        program,
+    ))
+}
+
+/// Evaluate every candidate, fanned out over worker threads. Results come
+/// back in candidate order whatever the interleaving.
+pub(super) fn evaluate_all(
+    cands: &[Candidate],
+    prefixes: &[PrefixRun],
+    opts: &TuneOptions,
+) -> Result<Vec<(CandidateResult, Program)>> {
+    let workers = opts.resolved_workers().min(cands.len()).max(1);
+    if workers == 1 {
+        return cands
+            .iter()
+            .map(|c| evaluate(c, prefixes, &opts.compiler, &opts.node))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<Result<(CandidateResult, Program)>>> =
+        (0..cands.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let next = &next;
+        let mut handles = Vec::new();
+        for _ in 0..workers {
+            handles.push(scope.spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cands.len() {
+                        break;
+                    }
+                    got.push((i, evaluate(&cands[i], prefixes, &opts.compiler, &opts.node)));
+                }
+                got
+            }));
+        }
+        for h in handles {
+            for (i, r) in h.join().expect("tuner worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("candidate left unevaluated"))
+        .collect()
+}
+
+/// Per-loop pointer-increment refinement (§4.2 as a per-nest decision):
+/// starting from the winner with all ptr-inc marks cleared, re-add the
+/// schedule one top-level nest at a time and keep a nest's marks only
+/// when the modeled score does not regress. Returns the refined program,
+/// its cost, and how many nests kept the schedule.
+pub(super) fn refine_ptr_inc_per_loop(
+    winner: &Program,
+    cm: &CompilerModel,
+    node: &NodeModel,
+) -> Result<(Program, ScheduleCost, usize)> {
+    let mut p = winner.clone();
+    p.schedules.ptr_inc.clear();
+    let mut cur = schedule_cost(&p, cm, node)?;
+    let mut kept = 0usize;
+    let tops: Vec<LoopId> = p
+        .body
+        .iter()
+        .filter_map(|n| match n {
+            Node::Loop(l) => Some(l.id),
+            _ => None,
+        })
+        .collect();
+    for lid in tops {
+        let mut trial = p.clone();
+        if crate::schedules::schedule_ptr_inc_in(&mut trial, lid) == 0 {
+            continue;
+        }
+        let c = schedule_cost(&trial, cm, node)?;
+        if c.score <= cur.score {
+            p = trial;
+            cur = c;
+            kept += 1;
+        }
+    }
+    Ok((p, cur, kept))
+}

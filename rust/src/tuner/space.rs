@@ -1,0 +1,233 @@
+//! The schedule search space: everything the [`Pipeline`] building blocks
+//! can express, factored into four independent axes.
+//!
+//! A [`Candidate`] is one point in the cross product
+//! `strategy × tile × prefetch-distance × ptr-inc`:
+//!
+//! * **strategy** — which paper parallelization prefix to run
+//!   ([`ParallelStrategy::Doall`] is cfg1's `dep-elim → fusion →
+//!   interchange → doall`; [`ParallelStrategy::Doacross`] is cfg2's
+//!   `dep-elim → fusion → doacross → doall`);
+//! * **tile** — locality strip-mining factor for innermost sequential
+//!   loops (`None` = no tiling);
+//! * **prefetch distance** — how many iterations of the hint-hosting loop
+//!   ahead software prefetches target (§4.1; `None` = no hints), always
+//!   cost-model-gated;
+//! * **ptr-inc** — cost-model-gated pointer incrementation (§4.2).
+//!
+//! The default space ([`SearchSpace::paper`]) contains the three named
+//! configurations as exact points: cfg1 = `(Doall, -, -, -)`, cfg2 =
+//! `(Doacross, -, -, -)`, cfg3 = `(Doacross, tile 32, prefetch d1,
+//! ptr-inc)`. The autotuner's minimum over the space is therefore never
+//! worse (under the cost model) than the best hand-written configuration.
+
+use crate::transforms::{
+    DepElimPass, DoacrossPass, DoallPass, FusionPass, Pipeline, PrefetchPass, PtrIncPass,
+    SinkSequentialPass, TilingPass,
+};
+
+/// Which §6.1 parallelization prefix a candidate starts from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParallelStrategy {
+    /// cfg1's prefix: surface one DOALL dimension (fusion + interchange).
+    Doall,
+    /// cfg2's prefix: DOACROSS-pipeline the remaining RAW loops, then
+    /// DOALL the inner dimensions.
+    Doacross,
+}
+
+impl ParallelStrategy {
+    /// Spec-style name of the prefix (`cfg1` / `cfg2`).
+    pub fn name(self) -> &'static str {
+        match self {
+            ParallelStrategy::Doall => "cfg1",
+            ParallelStrategy::Doacross => "cfg2",
+        }
+    }
+
+    /// The shared pass prefix for this strategy. Candidates with the same
+    /// strategy reuse one run of this pipeline (and its analysis cache).
+    pub fn prefix(self) -> Pipeline {
+        match self {
+            ParallelStrategy::Doall => Pipeline::new()
+                .with(DepElimPass)
+                .with(FusionPass)
+                .with(SinkSequentialPass)
+                .with(DoallPass),
+            ParallelStrategy::Doacross => Pipeline::new()
+                .with(DepElimPass)
+                .with(FusionPass)
+                .with(DoacrossPass)
+                .with(DoallPass),
+        }
+    }
+}
+
+/// One point in the schedule search space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub strategy: ParallelStrategy,
+    /// Tiling factor for innermost sequential loops (`None` = no tiling).
+    pub tile: Option<i64>,
+    /// Prefetch distance in iterations of the hint-hosting loop (`None` =
+    /// no prefetch stage). Hints are cost-model-gated as in cfg3.
+    pub prefetch_dist: Option<i64>,
+    /// Cost-model-gated pointer incrementation (§4.2).
+    pub ptr_inc: bool,
+}
+
+impl Candidate {
+    /// The schedule tail applied after the strategy prefix, in cfg3's
+    /// stage order: tiling → prefetch → ptr-inc.
+    pub fn tail(&self) -> Pipeline {
+        let mut pl = Pipeline::new();
+        if let Some(factor) = self.tile {
+            pl = pl.with(TilingPass { factor });
+        }
+        if let Some(dist) = self.prefetch_dist {
+            pl = pl.with(PrefetchPass { gated: true, dist });
+        }
+        if self.ptr_inc {
+            pl = pl.with(PtrIncPass { gated: true });
+        }
+        pl
+    }
+
+    /// The complete pipeline (prefix + tail) this candidate denotes.
+    pub fn pipeline(&self) -> Pipeline {
+        self.strategy.prefix().append(self.tail())
+    }
+
+    /// Human-readable spec, e.g. `cfg2+tile32+pf1+ptr-inc`. The named
+    /// configurations print as themselves (`cfg3` ≡ `cfg2+tile32+pf1+
+    /// ptr-inc`).
+    pub fn spec(&self) -> String {
+        let mut s = self.strategy.name().to_string();
+        if let Some(f) = self.tile {
+            s.push_str(&format!("+tile{f}"));
+        }
+        if let Some(d) = self.prefetch_dist {
+            s.push_str(&format!("+pf{d}"));
+        }
+        if self.ptr_inc {
+            s.push_str("+ptr-inc");
+        }
+        s
+    }
+}
+
+/// The set of candidate axes the tuner enumerates (cross product).
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub strategies: Vec<ParallelStrategy>,
+    pub tiles: Vec<Option<i64>>,
+    pub prefetch_dists: Vec<Option<i64>>,
+    pub ptr_inc: Vec<bool>,
+}
+
+impl SearchSpace {
+    /// The default space: both §6.1 strategies, tile factors
+    /// {off, 16, 32, 64}, prefetch distances {off, 1, 4}, ptr-inc
+    /// {off, gated} — 48 candidates containing cfg1/cfg2/cfg3 exactly.
+    pub fn paper() -> SearchSpace {
+        SearchSpace {
+            strategies: vec![ParallelStrategy::Doall, ParallelStrategy::Doacross],
+            tiles: vec![None, Some(16), Some(32), Some(64)],
+            prefetch_dists: vec![None, Some(1), Some(4)],
+            ptr_inc: vec![false, true],
+        }
+    }
+
+    /// A minimal space (strategies only, no schedule tail) for cheap
+    /// smoke runs.
+    pub fn strategies_only() -> SearchSpace {
+        SearchSpace {
+            strategies: vec![ParallelStrategy::Doall, ParallelStrategy::Doacross],
+            tiles: vec![None],
+            prefetch_dists: vec![None],
+            ptr_inc: vec![false],
+        }
+    }
+
+    /// All candidates in deterministic order. Simpler schedules enumerate
+    /// first on every axis, so cost ties resolve toward fewer stages
+    /// (the tuner keeps the earliest minimum).
+    pub fn candidates(&self) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for &strategy in &self.strategies {
+            for &tile in &self.tiles {
+                for &prefetch_dist in &self.prefetch_dists {
+                    for &ptr_inc in &self.ptr_inc {
+                        out.push(Candidate {
+                            strategy,
+                            tile,
+                            prefetch_dist,
+                            ptr_inc,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.strategies.len() * self.tiles.len() * self.prefetch_dists.len() * self.ptr_inc.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for SearchSpace {
+    fn default() -> SearchSpace {
+        SearchSpace::paper()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_space_contains_named_configs() {
+        let cands = SearchSpace::paper().candidates();
+        assert_eq!(cands.len(), 48);
+        let cfg1 = Candidate {
+            strategy: ParallelStrategy::Doall,
+            tile: None,
+            prefetch_dist: None,
+            ptr_inc: false,
+        };
+        let cfg3 = Candidate {
+            strategy: ParallelStrategy::Doacross,
+            tile: Some(32),
+            prefetch_dist: Some(1),
+            ptr_inc: true,
+        };
+        assert!(cands.contains(&cfg1));
+        assert!(cands.contains(&cfg3));
+        // The first candidate is the simplest one (tie-break target).
+        assert_eq!(cands[0], cfg1);
+        assert_eq!(cfg3.spec(), "cfg2+tile32+pf1+ptr-inc");
+    }
+
+    #[test]
+    fn candidate_pipelines_match_named_configs() {
+        let cfg1 = Candidate {
+            strategy: ParallelStrategy::Doall,
+            tile: None,
+            prefetch_dist: None,
+            ptr_inc: false,
+        };
+        assert_eq!(cfg1.pipeline().pass_names(), Pipeline::cfg1().pass_names());
+        let cfg3 = Candidate {
+            strategy: ParallelStrategy::Doacross,
+            tile: Some(32),
+            prefetch_dist: Some(1),
+            ptr_inc: true,
+        };
+        assert_eq!(cfg3.pipeline().pass_names(), Pipeline::cfg3().pass_names());
+    }
+}

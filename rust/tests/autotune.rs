@@ -1,0 +1,86 @@
+//! Autotuner acceptance: on every registered kernel the cost model must
+//! rank `--pipeline auto`'s pick no worse than the best hand-written
+//! configuration, the choice must be deterministic for a fixed cost
+//! model, and the tuned program must stay bit-identical to the
+//! unoptimized baseline on the VM.
+
+use silo::coordinator::{validate_spec, MemSchedules, PipelineSpec};
+use silo::kernels::all_kernels;
+use silo::tuner::{autotune_kernel, compare_with_named_configs, TuneOptions};
+
+/// The headline acceptance criterion: for every registered kernel, auto's
+/// modeled score ≤ min(cfg1, cfg2, cfg3) under the same cost model.
+#[test]
+fn auto_matches_or_beats_named_configs_on_every_kernel() {
+    let opts = TuneOptions::default();
+    for entry in all_kernels() {
+        let cmp = compare_with_named_configs(entry.build, &opts)
+            .unwrap_or_else(|e| panic!("autotune {}: {e:#}", entry.name));
+        for (i, spec) in ["cfg1", "cfg2", "cfg3"].iter().enumerate() {
+            assert!(
+                cmp.outcome.cost.score <= cmp.cfg_scores[i] + 1e-9,
+                "{}: auto {} (score {:.3}) lost to {spec} (score {:.3})",
+                entry.name,
+                cmp.outcome.best.candidate.spec(),
+                cmp.outcome.cost.score,
+                cmp.cfg_scores[i]
+            );
+        }
+        assert!(cmp.auto_never_worse(), "{}", entry.name);
+    }
+}
+
+/// For a fixed cost model the search is a pure function of the program:
+/// repeated runs and different worker counts pick the same schedule.
+#[test]
+fn auto_is_deterministic_for_fixed_cost_model() {
+    let a = autotune_kernel("vadv", &TuneOptions::default()).unwrap();
+    let b = autotune_kernel("vadv", &TuneOptions::default()).unwrap();
+    assert_eq!(a.best.candidate, b.best.candidate);
+    assert_eq!(a.cost.score.to_bits(), b.cost.score.to_bits());
+    assert_eq!(a.refined_nests, b.refined_nests);
+
+    let serial = autotune_kernel(
+        "vadv",
+        &TuneOptions {
+            workers: 1,
+            ..TuneOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(a.best.candidate, serial.best.candidate);
+    assert_eq!(a.cost.score.to_bits(), serial.cost.score.to_bits());
+}
+
+/// The driver-level `--pipeline auto` path is deterministic too: the
+/// reported pass log (which names the selected schedule) is identical
+/// across runs.
+#[test]
+fn auto_driver_reports_same_schedule_across_runs() {
+    let run = || {
+        silo::coordinator::optimize_and_run_spec(
+            "jacobi_1d",
+            &PipelineSpec::parse("auto"),
+            MemSchedules::default(),
+            silo::kernels::Preset::Tiny,
+            1,
+        )
+        .unwrap()
+        .pipeline
+        .expect("auto must produce a pipeline report")
+        .summary()
+    };
+    let first = run();
+    assert!(first.contains("auto: selected"), "{first}");
+    assert_eq!(first, run());
+}
+
+/// The tuned schedule must preserve semantics: outputs bit-identical to
+/// the unoptimized baseline, including under threads.
+#[test]
+fn auto_validates_on_vm() {
+    for kernel in ["vadv", "jacobi_1d", "laplace2d"] {
+        validate_spec(kernel, &PipelineSpec::Auto, MemSchedules::default(), 3)
+            .unwrap_or_else(|e| panic!("{kernel} under auto: {e:#}"));
+    }
+}

@@ -13,7 +13,12 @@ use silo::schedules::{schedule_all_ptr_inc, schedule_prefetches};
 use silo::symbolic::Sym;
 use silo::transforms::{silo_cfg1, silo_cfg2};
 
-fn run(p: &Program, params: &[(Sym, i64)], init: fn(&str, usize) -> f64, threads: usize) -> Vec<Vec<f64>> {
+fn run(
+    p: &Program,
+    params: &[(Sym, i64)],
+    init: fn(&str, usize) -> f64,
+    threads: usize,
+) -> Vec<Vec<f64>> {
     let inputs = gen_inputs(p, &params.to_vec(), init).unwrap();
     let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
     let vm = Vm::compile(p).unwrap_or_else(|e| panic!("{}: {e}", p.name));

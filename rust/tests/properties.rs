@@ -37,7 +37,11 @@ fn prop_delta_solver_sound_vs_enumeration() {
         }
         match sol {
             DeltaSolution::NoSolution => {
-                assert!(found.is_none(), "solver claimed independence, brute force found δ={found:?} (f={f}, g={g}, stride={stride})");
+                assert!(
+                    found.is_none(),
+                    "solver claimed independence, brute force found \
+                     δ={found:?} (f={f}, g={g}, stride={stride})"
+                );
             }
             DeltaSolution::Unique { delta, positive } => {
                 if positive == Truth::Yes {
@@ -154,7 +158,8 @@ fn prop_deps_alpha_invariant() {
 }
 
 fn run(p: &Program, params: &[(Sym, i64)], threads: usize) -> Vec<Vec<f64>> {
-    let inputs = silo::kernels::gen_inputs(p, &params.to_vec(), silo::kernels::default_init).unwrap();
+    let inputs =
+        silo::kernels::gen_inputs(p, &params.to_vec(), silo::kernels::default_init).unwrap();
     let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
     let vm = Vm::compile(p).unwrap();
     let out = vm.run(params, &refs, threads).unwrap();

@@ -1,0 +1,116 @@
+//! Memory-schedule coverage on the paper kernels: prefetch hint
+//! distances (§4.1.2) on the Fig. 2 triangular nest and pointer-increment
+//! plan deltas (§4.2.2) on the strided accesses of Fig. 2 and vertical
+//! advection.
+
+use silo::kernels::{fig2, vadv};
+use silo::schedules::{
+    plan_ptr_inc, schedule_all_ptr_inc, schedule_prefetches, schedule_prefetches_dist,
+};
+use silo::symbolic::{int, sym_eq, Expr, Sym};
+
+/// Fig. 2's triangular nest (`for i { for j = i; …; j += i+1 }`): the
+/// inner start depends on `i`, so §4.1.2 places a hint on the `i` loop
+/// targeting the first access of the next `i` iteration — `A[i + 1]` at
+/// distance 1, `A[i + d]` at distance `d`.
+#[test]
+fn fig2_triangular_prefetch_hint_distances() {
+    let mut p = fig2::build_triangular();
+    let a = p.container_by_name("A").unwrap();
+    let il = p
+        .loops()
+        .iter()
+        .find(|l| l.var.name() == "fig2b_i")
+        .map(|l| (l.id, l.var))
+        .unwrap();
+    let added = schedule_prefetches(&mut p);
+    assert_eq!(added, 1, "exactly the A write gets a hint");
+    let h = p.schedules.prefetches[0].clone();
+    assert_eq!(h.at_loop, il.0, "hint must sit on the i loop");
+    assert_eq!(h.container, a);
+    assert!(h.for_write);
+    let expect = Expr::Sym(il.1) + int(1);
+    assert!(sym_eq(&h.offset, &expect), "d1 offset: got {}", h.offset);
+
+    // Distance 4 shifts the same target four i-strides ahead.
+    let mut p4 = fig2::build_triangular();
+    assert_eq!(schedule_prefetches_dist(&mut p4, 4), 1);
+    let h4 = &p4.schedules.prefetches[0];
+    let expect4 = Expr::Sym(il.1) + int(4);
+    assert!(sym_eq(&h4.offset, &expect4), "d4 offset: got {}", h4.offset);
+}
+
+/// Vertical advection is rectangular (every inner start is constant):
+/// no stride discontinuities, so §4.1.2 generates no hints at any
+/// distance.
+#[test]
+fn vadv_rectangular_nests_get_no_hints() {
+    let mut p = vadv::build();
+    assert_eq!(schedule_prefetches(&mut p), 0);
+    assert_eq!(schedule_prefetches_dist(&mut p, 4), 0);
+}
+
+/// Pointer-increment deltas on vadv's forward-sweep `cp` recurrence
+/// (K-contiguous `[I][J][K]` layout): Δ(k) = 1, Δ(j) = K, Δ(i) = J·K,
+/// cursor initialized at the k = 1 start of the sweep.
+#[test]
+fn vadv_ptr_inc_plan_deltas() {
+    let mut p = vadv::build();
+    assert!(schedule_all_ptr_inc(&mut p) > 0);
+    let cp = p.container_by_name("cp").unwrap();
+    let kf = Sym::new("vadv_kf");
+    let stmt = p
+        .stmts()
+        .into_iter()
+        .find(|s| s.write.container == cp && s.write.offset.depends_on(kf))
+        .map(|s| s.id)
+        .expect("forward-sweep cp statement");
+    assert!(p.schedules.has_ptr_inc(stmt, cp), "sweep must mark cp");
+    let plan = plan_ptr_inc(&p, stmt, cp).unwrap().expect("realizable plan");
+
+    let jj = Expr::Sym(Sym::new("vadv_J"));
+    let kk = Expr::Sym(Sym::new("vadv_K"));
+    // Managed loops outermost → innermost: kf, j, i.
+    assert_eq!(plan.deltas.len(), 3);
+    assert!(sym_eq(&plan.deltas[0].inc, &int(1)), "Δ(k): {}", plan.deltas[0].inc);
+    assert!(sym_eq(&plan.deltas[1].inc, &kk), "Δ(j): {}", plan.deltas[1].inc);
+    let slab = jj.clone() * kk.clone();
+    assert!(sym_eq(&plan.deltas[2].inc, &slab), "Δ(i): {}", plan.deltas[2].inc);
+    // The j loop's reset telescopes its J iterations of K-strided bumps.
+    let j_reset = plan.deltas[1].reset.clone().expect("j reset");
+    assert!(sym_eq(&j_reset, &slab), "Δr(j): {j_reset}");
+    // Init: i→0, j→0, k→1 (the sweep starts at k = 1).
+    assert!(sym_eq(&plan.init, &int(1)), "init: {}", plan.init);
+}
+
+/// Fig. 2's strided accesses: the triangular loop's delta is the
+/// loop-invariant `i + 1` stride; the log2 loop's delta varies with its
+/// own variable, so the plan soundly falls back to the default schedule.
+#[test]
+fn fig2_ptr_inc_plans() {
+    let p = fig2::build_triangular();
+    let a = p.container_by_name("A").unwrap();
+    let j_stmt = p
+        .stmts()
+        .into_iter()
+        .find(|s| s.write.container == a)
+        .map(|s| s.id)
+        .unwrap();
+    let plan = plan_ptr_inc(&p, j_stmt, a).unwrap().expect("realizable");
+    assert_eq!(plan.deltas.len(), 1);
+    let i_var = Expr::Sym(Sym::new("fig2b_i"));
+    let expect = i_var + int(1);
+    assert!(
+        sym_eq(&plan.deltas[0].inc, &expect),
+        "Δ(j): {}",
+        plan.deltas[0].inc
+    );
+
+    let p2 = fig2::build_log2();
+    let a2 = p2.container_by_name("A").unwrap();
+    let s2 = p2.stmts()[0].id;
+    assert!(
+        plan_ptr_inc(&p2, s2, a2).unwrap().is_none(),
+        "log2 stride must be unrealizable"
+    );
+}

@@ -149,7 +149,10 @@ fn ptr_inc_schedule_is_equivalent() {
         let jj = b.param_positive("vme4_J");
         let si = b.param_positive("vme4_SI");
         let sj = b.param_positive("vme4_SJ");
-        let a = b.array("A", Expr::Sym(ii) * Expr::Sym(si) + Expr::Sym(jj) * Expr::Sym(sj) + int(4));
+        let a = b.array(
+            "A",
+            Expr::Sym(ii) * Expr::Sym(si) + Expr::Sym(jj) * Expr::Sym(sj) + int(4),
+        );
         let o = b.array("O", Expr::Sym(ii) * Expr::Sym(jj));
         let i = b.sym("vme4_i");
         let j = b.sym("vme4_j");
