@@ -13,7 +13,7 @@ use anyhow::{bail, Result};
 
 use crate::exec::Vm;
 use crate::ir::Program;
-use crate::kernels::{self, gen_inputs, Preset};
+use crate::kernels::{self, Preset};
 use crate::symbolic::Sym;
 use crate::transforms::{Pipeline, PipelineReport, PrefetchPass, PtrIncPass};
 
@@ -118,8 +118,12 @@ pub fn optimize_and_run(
     optimize_and_run_spec(name, &PipelineSpec::Config(cfg), mem, preset, threads)
 }
 
-/// Optimize and execute a registered kernel under an arbitrary pipeline
-/// spec.
+/// Optimize and execute a kernel under an arbitrary pipeline spec.
+///
+/// `name` is either a registered kernel name or a path to a SILO-Text
+/// file (`corpus/stencil_time.silo`) — resolution goes through
+/// [`kernels::resolve`], so parsed programs flow through the identical
+/// optimize → lower → execute path with zero special cases.
 pub fn optimize_and_run_spec(
     name: &str,
     spec: &PipelineSpec,
@@ -127,17 +131,8 @@ pub fn optimize_and_run_spec(
     preset: Preset,
     threads: usize,
 ) -> Result<RunOutcome> {
-    let Some(entry) = kernels::kernel(name) else {
-        bail!(
-            "unknown kernel {name}; available: {}",
-            kernels::all_kernels()
-                .iter()
-                .map(|k| k.name)
-                .collect::<Vec<_>>()
-                .join(", ")
-        );
-    };
-    let mut program = (entry.build)();
+    let kernel = kernels::resolve(name)?;
+    let mut program = kernel.program();
     let pipeline = if matches!(spec, PipelineSpec::Auto) {
         // Cost-model-driven schedule search: the tuner picks the pipeline
         // per program; explicit --ptr-inc/--prefetch requests still apply
@@ -167,8 +162,8 @@ pub fn optimize_and_run_spec(
     };
     crate::ir::validate::validate(&program)?;
 
-    let params: Vec<(Sym, i64)> = (entry.preset)(preset);
-    let inputs = gen_inputs(&program, &params, entry.init)?;
+    let params: Vec<(Sym, i64)> = kernel.params(preset)?;
+    let inputs = kernel.inputs(&program, &params)?;
     let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
     let vm = Vm::compile(&program)?;
     let t0 = std::time::Instant::now();
@@ -248,6 +243,40 @@ mod tests {
             1
         )
         .is_err());
+    }
+
+    /// Near-miss kernel names get a "did you mean" suggestion instead of a
+    /// bare lookup failure.
+    #[test]
+    fn driver_suggests_close_kernel_names() {
+        let e = optimize_and_run(
+            "vavd",
+            OptConfig::None,
+            MemSchedules::default(),
+            Preset::Tiny,
+            1,
+        )
+        .unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("did you mean"), "{msg}");
+        assert!(msg.contains("vadv"), "{msg}");
+    }
+
+    /// A `.silo` path drives the same optimize → execute → validate path
+    /// as a registry name.
+    #[test]
+    fn driver_runs_silo_files_by_path() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../corpus/stencil_time.silo");
+        let out = optimize_and_run_spec(
+            path,
+            &PipelineSpec::Config(OptConfig::Cfg1),
+            MemSchedules::default(),
+            Preset::Tiny,
+            2,
+        )
+        .unwrap();
+        assert_eq!(out.program.name, "stencil_time");
+        validate_spec(path, &PipelineSpec::Auto, MemSchedules::default(), 2).unwrap();
     }
 
     #[test]

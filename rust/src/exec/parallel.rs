@@ -12,30 +12,34 @@ use super::trace::NullTracer;
 use super::values::Frame;
 use super::vm::{exec_block, exec_nodes};
 
-/// Iteration values of a loop given evaluated bounds. Stride is evaluated
-/// once at entry (parallel loops require an iteration-invariant stride).
-fn iteration_values(
+/// Stride and trip count of a loop given evaluated bounds. The stride is
+/// evaluated once at entry (parallel loops require an iteration-invariant
+/// stride), so iteration `t` runs at `start + t·stride` and the whole
+/// space needs O(1) memory — no materialized value vector.
+fn stride_and_trip_count(
     l: &LoopExec,
     frame: &mut Frame,
     start_val: i64,
     end_val: i64,
-) -> (Vec<i64>, i64) {
+) -> (i64, usize) {
     let mut tr = NullTracer;
     frame.ints[l.var_reg as usize] = start_val;
     exec_block(&l.stride.ops, frame, &mut tr);
     let s = frame.ints[l.stride_reg as usize];
-    let mut vals = Vec::new();
-    if s != 0 {
-        let mut v = start_val;
-        while (s > 0 && v < end_val) || (s < 0 && v > end_val) {
-            vals.push(v);
-            v += s;
-        }
-    }
-    (vals, s)
+    let count: u128 = if s > 0 && start_val < end_val {
+        let span = (end_val as i128 - start_val as i128) as u128;
+        span.div_ceil(s as u128)
+    } else if s < 0 && start_val > end_val {
+        let span = (start_val as i128 - end_val as i128) as u128;
+        span.div_ceil((s as i128).unsigned_abs())
+    } else {
+        0
+    };
+    (s, usize::try_from(count).unwrap_or(usize::MAX))
 }
 
-/// DOALL: partition contiguous chunks of the iteration space over workers.
+/// DOALL: partition contiguous `(lo, hi)` index ranges of the iteration
+/// space over workers (same chunking as the old materialized form).
 #[allow(clippy::too_many_arguments)]
 pub fn run_par(
     prog: &ExecProgram,
@@ -46,24 +50,24 @@ pub fn run_par(
     end_val: i64,
     threads: usize,
 ) {
-    let (vals, _s) = iteration_values(l, frame, start_val, end_val);
-    if vals.is_empty() {
+    let (s, count) = stride_and_trip_count(l, frame, start_val, end_val);
+    if count == 0 {
         return;
     }
-    let nthreads = threads.min(vals.len()).max(1);
-    let chunk = vals.len().div_ceil(nthreads);
+    let nthreads = threads.min(count).max(1);
+    let chunk = count.div_ceil(nthreads);
     std::thread::scope(|scope| {
         for t in 0..nthreads {
             let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(vals.len());
+            let hi = ((t + 1) * chunk).min(count);
             if lo >= hi {
                 continue;
             }
-            let my_vals = &vals[lo..hi];
             let mut my_frame = frame.fork(prog, lens);
             scope.spawn(move || {
                 let mut tr = NullTracer;
-                for &v in my_vals {
+                for idx in lo..hi {
+                    let v = start_val + (idx as i64) * s;
                     my_frame.ints[l.var_reg as usize] = v;
                     exec_block(&l.pre_body.ops, &mut my_frame, &mut tr);
                     // Prefetch hints are omitted on parallel loops (§4.1.2)
@@ -92,14 +96,15 @@ pub fn run_doacross(
     waits: &[(usize, i64)],
     release_after: Option<usize>,
 ) {
-    let (vals, _s) = iteration_values(l, frame, start_val, end_val);
-    if vals.is_empty() {
+    let (s, count) = stride_and_trip_count(l, frame, start_val, end_val);
+    if count == 0 {
         return;
     }
-    let nthreads = threads.min(vals.len()).max(1);
-    let flags: Vec<AtomicU8> = (0..vals.len()).map(|_| AtomicU8::new(0)).collect();
+    let nthreads = threads.min(count).max(1);
+    // The release flags are the synchronization state itself — one per
+    // iteration — but the iteration *values* stay arithmetic.
+    let flags: Vec<AtomicU8> = (0..count).map(|_| AtomicU8::new(0)).collect();
     let flags = &flags;
-    let vals_ref = &vals;
 
     std::thread::scope(|scope| {
         for tid in 0..nthreads {
@@ -107,8 +112,8 @@ pub fn run_doacross(
             scope.spawn(move || {
                 let mut tr = NullTracer;
                 let mut t = tid;
-                while t < vals_ref.len() {
-                    let v = vals_ref[t];
+                while t < count {
+                    let v = start_val + (t as i64) * s;
                     my_frame.ints[l.var_reg as usize] = v;
                     exec_block(&l.pre_body.ops, &mut my_frame, &mut tr);
                     exec_block(&l.prefetch.ops, &mut my_frame, &mut tr);

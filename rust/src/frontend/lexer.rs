@@ -1,0 +1,307 @@
+//! Tokenizer for SILO-Text. Every token carries its source position so the
+//! parser can report `line:col` diagnostics.
+
+use super::{ParseError, Span};
+
+/// A lexical token. Keywords are not distinguished here — the parser matches
+/// identifier spellings contextually (`program`, `param`, `for`, …), which
+/// keeps the keyword set open for future extensions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier (also covers keywords and function names).
+    Ident(String),
+    /// Double-quoted string (container names with non-identifier characters).
+    Str(String),
+    Int(i64),
+    Real(f64),
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Semi,
+    Comma,
+    Colon,
+    Assign,
+    Plus,
+    PlusAssign,
+    Minus,
+    Star,
+    Slash,
+    Caret,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    /// `<>` — the printer's "direction decided by the stride sign" comparator.
+    AnyDir,
+    Eof,
+}
+
+impl Tok {
+    /// Human-readable token description for "expected X, found Y" messages.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("`{s}`"),
+            Tok::Str(s) => format!("\"{s}\""),
+            Tok::Int(v) => format!("`{v}`"),
+            Tok::Real(v) => format!("`{v}`"),
+            Tok::LBrace => "`{`".into(),
+            Tok::RBrace => "`}`".into(),
+            Tok::LParen => "`(`".into(),
+            Tok::RParen => "`)`".into(),
+            Tok::LBracket => "`[`".into(),
+            Tok::RBracket => "`]`".into(),
+            Tok::Semi => "`;`".into(),
+            Tok::Comma => "`,`".into(),
+            Tok::Colon => "`:`".into(),
+            Tok::Assign => "`=`".into(),
+            Tok::Plus => "`+`".into(),
+            Tok::PlusAssign => "`+=`".into(),
+            Tok::Minus => "`-`".into(),
+            Tok::Star => "`*`".into(),
+            Tok::Slash => "`/`".into(),
+            Tok::Caret => "`^`".into(),
+            Tok::Lt => "`<`".into(),
+            Tok::Le => "`<=`".into(),
+            Tok::Gt => "`>`".into(),
+            Tok::Ge => "`>=`".into(),
+            Tok::AnyDir => "`<>`".into(),
+            Tok::Eof => "end of input".into(),
+        }
+    }
+}
+
+/// A token plus the position of its first character.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}
+
+/// Tokenize an entire source string. `//` comments run to end of line.
+pub fn lex(src: &str) -> Result<Vec<Token>, ParseError> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+
+    macro_rules! push {
+        ($tok:expr, $len:expr) => {{
+            toks.push(Token {
+                tok: $tok,
+                span: Span { line, col },
+            });
+            let n: usize = $len;
+            i += n;
+            col += n as u32;
+        }};
+    }
+
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '\n' => {
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            ' ' | '\t' | '\r' => {
+                i += 1;
+                col += 1;
+            }
+            '/' if bytes.get(i + 1) == Some(&b'/') => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+                // Newline handled by the main loop (keeps line counting in
+                // one place).
+            }
+            '{' => push!(Tok::LBrace, 1),
+            '}' => push!(Tok::RBrace, 1),
+            '(' => push!(Tok::LParen, 1),
+            ')' => push!(Tok::RParen, 1),
+            '[' => push!(Tok::LBracket, 1),
+            ']' => push!(Tok::RBracket, 1),
+            ';' => push!(Tok::Semi, 1),
+            ',' => push!(Tok::Comma, 1),
+            ':' => push!(Tok::Colon, 1),
+            '=' => push!(Tok::Assign, 1),
+            '*' => push!(Tok::Star, 1),
+            '/' => push!(Tok::Slash, 1),
+            '^' => push!(Tok::Caret, 1),
+            '-' => push!(Tok::Minus, 1),
+            '+' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push!(Tok::PlusAssign, 2);
+                } else {
+                    push!(Tok::Plus, 1);
+                }
+            }
+            '<' => match bytes.get(i + 1) {
+                Some(&b'=') => push!(Tok::Le, 2),
+                Some(&b'>') => push!(Tok::AnyDir, 2),
+                _ => push!(Tok::Lt, 1),
+            },
+            '>' => {
+                if bytes.get(i + 1) == Some(&b'=') {
+                    push!(Tok::Ge, 2);
+                } else {
+                    push!(Tok::Gt, 1);
+                }
+            }
+            '"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'"' && bytes[j] != b'\n' {
+                    j += 1;
+                }
+                if j >= bytes.len() || bytes[j] != b'"' {
+                    return Err(ParseError::new(
+                        Span { line, col },
+                        "unterminated string literal".into(),
+                    ));
+                }
+                let s = src[start..j].to_string();
+                let len = j + 1 - i;
+                push!(Tok::Str(s), len);
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                let mut j = i;
+                while j < bytes.len() && bytes[j].is_ascii_digit() {
+                    j += 1;
+                }
+                let mut is_real = false;
+                if j < bytes.len()
+                    && bytes[j] == b'.'
+                    && bytes.get(j + 1).is_some_and(u8::is_ascii_digit)
+                {
+                    is_real = true;
+                    j += 1;
+                    while j < bytes.len() && bytes[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                if j < bytes.len()
+                    && (bytes[j] == b'e' || bytes[j] == b'E')
+                    && (bytes.get(j + 1).is_some_and(u8::is_ascii_digit)
+                        || ((bytes.get(j + 1) == Some(&b'+') || bytes.get(j + 1) == Some(&b'-'))
+                            && bytes.get(j + 2).is_some_and(u8::is_ascii_digit)))
+                {
+                    is_real = true;
+                    j += 1;
+                    if bytes[j] == b'+' || bytes[j] == b'-' {
+                        j += 1;
+                    }
+                    while j < bytes.len() && bytes[j].is_ascii_digit() {
+                        j += 1;
+                    }
+                }
+                let text = &src[start..j];
+                let len = j - start;
+                if is_real {
+                    let v: f64 = text.parse().map_err(|_| {
+                        ParseError::new(
+                            Span { line, col },
+                            format!("malformed number `{text}`"),
+                        )
+                    })?;
+                    push!(Tok::Real(v), len);
+                } else if let Ok(v) = text.parse::<i64>() {
+                    push!(Tok::Int(v), len);
+                } else {
+                    // Integer literal too large for i64: fall back to a real
+                    // (the printer writes large real constants without a dot).
+                    let v: f64 = text.parse().map_err(|_| {
+                        ParseError::new(
+                            Span { line, col },
+                            format!("malformed number `{text}`"),
+                        )
+                    })?;
+                    push!(Tok::Real(v), len);
+                }
+            }
+            _ if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                let mut j = i;
+                while j < bytes.len()
+                    && ((bytes[j] as char).is_ascii_alphanumeric()
+                        || bytes[j] == b'_'
+                        || bytes[j] == b'#')
+                {
+                    j += 1;
+                }
+                let s = src[start..j].to_string();
+                let len = j - start;
+                push!(Tok::Ident(s), len);
+            }
+            other => {
+                return Err(ParseError::new(
+                    Span { line, col },
+                    format!("unexpected character `{other}`"),
+                ));
+            }
+        }
+    }
+    toks.push(Token {
+        tok: Tok::Eof,
+        span: Span { line, col },
+    });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_basic_stream() {
+        let toks = lex("for (i = 0; i < n; i += 1) { }").unwrap();
+        assert!(matches!(toks[0].tok, Tok::Ident(ref s) if s == "for"));
+        assert!(toks.iter().any(|t| t.tok == Tok::PlusAssign));
+        assert!(toks.iter().any(|t| t.tok == Tok::Lt));
+        assert_eq!(toks.last().unwrap().tok, Tok::Eof);
+    }
+
+    #[test]
+    fn tracks_line_and_column() {
+        let toks = lex("a\n  bb").unwrap();
+        assert_eq!((toks[0].span.line, toks[0].span.col), (1, 1));
+        assert_eq!((toks[1].span.line, toks[1].span.col), (2, 3));
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let toks = lex("a // comment <>\nb").unwrap();
+        let idents: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Ident(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idents, ["a", "b"]);
+    }
+
+    #[test]
+    fn numbers_int_real_and_overflow() {
+        let toks = lex("42 4.25 1e3 99999999999999999999999").unwrap();
+        assert_eq!(toks[0].tok, Tok::Int(42));
+        assert_eq!(toks[1].tok, Tok::Real(4.25));
+        assert_eq!(toks[2].tok, Tok::Real(1000.0));
+        assert!(matches!(toks[3].tok, Tok::Real(_)));
+    }
+
+    #[test]
+    fn strings_and_errors() {
+        let toks = lex("\"cp col\"").unwrap();
+        assert_eq!(toks[0].tok, Tok::Str("cp col".into()));
+        let err = lex("\"open").unwrap_err();
+        assert!(err.to_string().contains("unterminated"), "{err}");
+        let err = lex("@").unwrap_err();
+        assert!(err.to_string().contains("unexpected character"), "{err}");
+    }
+}

@@ -1,0 +1,253 @@
+//! SILO-Text — the textual frontend.
+//!
+//! A small loop-nest DSL that elaborates into the existing [`crate::ir`]:
+//! `param`/`array` declarations, C-style `for (var = start; var < end;
+//! var += stride)` nests with fully symbolic bounds and strides, and
+//! guarded single-assignment statements over subscripted containers. The
+//! canonical printer ([`crate::ir::pretty`]) emits this exact grammar, so
+//! `parse ∘ print` round-trips on every registered kernel (pinned by
+//! `rust/tests/frontend.rs`).
+//!
+//! ```text
+//! program stencil_time {
+//!   param st_T = { tiny: 4, small: 16, medium: 64 };   // presets bind at run time
+//!   param st_N = { tiny: 64, small: 4096, medium: 65536 };
+//!   array u[st_N];            // argument container (externally visible)
+//!   transient tmp[st_N];      // program-allocated scratch
+//!   for (t = 0; t < st_T; t += 1) {
+//!     for (i = 1; i < st_N - 1; i += 1) {
+//!       tmp[i] = 0.25*u[i - 1] + 0.5*u[i] + 0.25*u[i + 1];
+//!     }
+//!     for (j = 1; j < st_N - 1; j += 1) {
+//!       u[j] = tmp[j];
+//!     }
+//!   }
+//! }
+//! ```
+//!
+//! Diagnostics carry `line:column` spans and name what was expected;
+//! duplicate/undeclared-symbol structure is double-checked through
+//! [`crate::ir::validate`] after elaboration. See DESIGN.md §SILO-Text for
+//! the full grammar (EBNF).
+//!
+//! Two scoping caveats, inherited from the crate's design:
+//!
+//! * Symbols are interned in a **process-global table** (like the Rust
+//!   kernel builders): `param N;` registers `N` as strictly positive for
+//!   the whole process, so two programs parsed in one process that reuse
+//!   a name share one symbol *and its assumptions*. Corpus files follow
+//!   the builders' convention of kernel-prefixed names (`st_N`, `gs_S`);
+//!   do the same when parsing multiple programs in one process. Preset
+//!   bindings are checked against the assumed floor at parse time.
+//! * Presets and `init(...)` annotations live on [`ParsedKernel`], not
+//!   on the [`Program`] — the canonical printer round-trips the program
+//!   structure exactly, but its output carries no preset bindings (add
+//!   them before running a printed file; the runtime error names the
+//!   param and the syntax).
+
+pub mod lexer;
+pub mod parser;
+
+use crate::ir::Program;
+use crate::kernels::Preset;
+use crate::symbolic::Sym;
+
+/// Source position (1-based line and column) of a token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A parse/elaboration failure with its source position.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    span: Span,
+    msg: String,
+}
+
+impl ParseError {
+    pub(crate) fn new(span: Span, msg: String) -> ParseError {
+        ParseError { span, msg }
+    }
+
+    /// 1-based source line of the error.
+    pub fn line(&self) -> u32 {
+        self.span.line
+    }
+
+    /// 1-based source column of the error.
+    pub fn col(&self) -> u32 {
+        self.span.col
+    }
+
+    /// The bare message (without the position prefix).
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "parse error at line {}, column {}: {}",
+            self.span.line, self.span.col, self.msg
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Per-preset integer bindings of one `param`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PresetBindings {
+    pub tiny: Option<i64>,
+    pub small: Option<i64>,
+    pub medium: Option<i64>,
+}
+
+impl PresetBindings {
+    pub fn get(&self, p: Preset) -> Option<i64> {
+        match p {
+            Preset::Tiny => self.tiny,
+            Preset::Small => self.small,
+            Preset::Medium => self.medium,
+        }
+    }
+}
+
+/// Deterministic input annotation on an argument container:
+/// `value = shift + scale · default_init(name, index)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InitSpec {
+    pub container: String,
+    pub shift: f64,
+    pub scale: f64,
+}
+
+/// A parsed SILO-Text module: the elaborated program plus the run-time
+/// annotations (presets, input initialization) that live outside the IR.
+#[derive(Debug, Clone)]
+pub struct ParsedKernel {
+    pub program: Program,
+    pub presets: Vec<(Sym, PresetBindings)>,
+    pub inits: Vec<InitSpec>,
+}
+
+impl ParsedKernel {
+    /// Bind every program param for `preset`. Errors name the param that
+    /// has no binding (so `silo run file.silo` failures are actionable).
+    pub fn params_for(&self, preset: Preset) -> anyhow::Result<Vec<(Sym, i64)>> {
+        let mut out = Vec::new();
+        for sym in &self.program.params {
+            let bound = self
+                .presets
+                .iter()
+                .find(|(s, _)| s == sym)
+                .and_then(|(_, b)| b.get(preset));
+            match bound {
+                Some(v) => out.push((*sym, v)),
+                None => anyhow::bail!(
+                    "param `{}` of program `{}` has no {:?} preset binding; annotate it, \
+                     e.g. `param {} = {{ tiny: 16, small: 1024, medium: 1048576 }};`",
+                    sym.name(),
+                    self.program.name,
+                    preset,
+                    sym.name()
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Element initializer honoring `init(shift, scale)` annotations;
+    /// containers without one use [`crate::kernels::default_init`].
+    pub fn init_value(&self, name: &str, i: usize) -> f64 {
+        let base = crate::kernels::default_init(name, i);
+        match self.inits.iter().find(|s| s.container == name) {
+            Some(s) => s.shift + s.scale * base,
+            None => base,
+        }
+    }
+}
+
+/// Parse a SILO-Text module from a string.
+pub fn parse_str(src: &str) -> Result<ParsedKernel, ParseError> {
+    parser::parse(src)
+}
+
+/// Parse a SILO-Text module from a file path (errors are prefixed with the
+/// path so CLI messages stay readable).
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<ParsedKernel> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    parse_str(&src).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_program() {
+        let src = "program t {\n  param fe_N;\n  array A[fe_N];\n  for (fe_i = 0; fe_i < fe_N; \
+                   fe_i += 1) {\n    A[fe_i] = 2.0*A[fe_i];\n  }\n}\n";
+        let k = parse_str(src).unwrap();
+        assert_eq!(k.program.name, "t");
+        assert_eq!(k.program.loops().len(), 1);
+        assert_eq!(k.program.stmts().len(), 1);
+        crate::ir::validate::validate(&k.program).unwrap();
+    }
+
+    #[test]
+    fn error_carries_line_and_column() {
+        let src = "program t {\n  array A[8];\n  A[0] = ;\n}\n";
+        let e = parse_str(src).unwrap_err();
+        assert_eq!(e.line(), 3);
+        assert!(e.col() > 0);
+        assert!(e.to_string().contains("expected an expression"), "{e}");
+    }
+
+    #[test]
+    fn undeclared_symbol_is_reported_with_span() {
+        let src = "program t {\n  array A[8];\n  for (i = 0; i < 8; i += 1) {\n    A[i] = \
+                   1.0 + rogue;\n  }\n}\n";
+        let e = parse_str(src).unwrap_err();
+        assert_eq!(e.line(), 4);
+        assert!(e.message().contains("undeclared symbol `rogue`"), "{e}");
+    }
+
+    #[test]
+    fn presets_bind_per_size() {
+        let src = "program t {\n  param pe_N = { tiny: 4, small: 8, medium: 16 };\n  \
+                   param pe_M = 3;\n  array A[pe_N*pe_M];\n}\n";
+        let k = parse_str(src).unwrap();
+        let tiny = k.params_for(Preset::Tiny).unwrap();
+        assert!(tiny.contains(&(Sym::new("pe_N"), 4)));
+        assert!(tiny.contains(&(Sym::new("pe_M"), 3)));
+        let med = k.params_for(Preset::Medium).unwrap();
+        assert!(med.contains(&(Sym::new("pe_N"), 16)));
+    }
+
+    #[test]
+    fn non_positive_preset_bindings_rejected() {
+        // Params are interned strictly positive; a binding below the floor
+        // would hand the analyses a false invariant.
+        let src = "program t {\n  param bp_N = { tiny: 0, small: 8, medium: 16 };\n  \
+                   array A[bp_N];\n}\n";
+        let e = parse_str(src).unwrap_err();
+        assert!(e.message().contains("below its assumed minimum"), "{e}");
+        let src = "program t {\n  param bp_M: dim = 1;\n  array A[bp_M];\n}\n";
+        let e = parse_str(src).unwrap_err();
+        assert!(e.message().contains("minimum 2"), "{e}");
+    }
+
+    #[test]
+    fn missing_preset_binding_is_actionable() {
+        let src = "program t {\n  param pm_N;\n  array A[pm_N];\n}\n";
+        let k = parse_str(src).unwrap();
+        let e = k.params_for(Preset::Tiny).unwrap_err();
+        assert!(e.to_string().contains("pm_N"), "{e}");
+    }
+}

@@ -1,0 +1,859 @@
+//! Recursive-descent parser + elaboration for SILO-Text.
+//!
+//! The parser builds [`crate::ir::Program`] directly (no separate AST):
+//! every expression is constructed through the same simplifying operators
+//! the Rust kernel builders use, so a parsed program is structurally equal
+//! to the equivalent builder-constructed program — the property the
+//! `parse ∘ print` round-trip tests pin.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::nest::{Loop, LoopId, LoopSchedule, Node, Stmt, StmtId};
+use crate::ir::{Access, ContainerKind, DType, Program};
+use crate::symbolic::{fdiv, floordiv, func, imod, load, max, min, simplify};
+use crate::symbolic::{ContainerId, Expr, FuncKind, Sym};
+
+use super::lexer::{lex, Tok, Token};
+use super::{InitSpec, ParseError, ParsedKernel, PresetBindings, Span};
+
+/// Parse a complete SILO-Text module.
+pub fn parse(src: &str) -> Result<ParsedKernel, ParseError> {
+    Parser::new(lex(src)?).parse_program()
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+    prog: Program,
+    params: HashMap<String, Sym>,
+    containers: HashMap<String, ContainerId>,
+    /// Enclosing loop variables, outermost first.
+    scopes: Vec<(String, Sym)>,
+    presets: Vec<(Sym, PresetBindings)>,
+    inits: Vec<InitSpec>,
+    used_loop_ids: HashSet<u32>,
+    used_stmt_ids: HashSet<u32>,
+    next_loop: u32,
+    next_stmt: u32,
+}
+
+impl Parser {
+    fn new(toks: Vec<Token>) -> Parser {
+        Parser {
+            toks,
+            pos: 0,
+            prog: Program::new(""),
+            params: HashMap::new(),
+            containers: HashMap::new(),
+            scopes: Vec::new(),
+            presets: Vec::new(),
+            inits: Vec::new(),
+            used_loop_ids: HashSet::new(),
+            used_stmt_ids: HashSet::new(),
+            next_loop: 0,
+            next_stmt: 0,
+        }
+    }
+
+    // -- token plumbing ----------------------------------------------------
+
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        let i = (self.pos + 1).min(self.toks.len() - 1);
+        &self.toks[i].tok
+    }
+
+    fn span(&self) -> Span {
+        self.toks[self.pos].span
+    }
+
+    fn bump(&mut self) -> Token {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err<T>(&self, span: Span, msg: String) -> Result<T, ParseError> {
+        Err(ParseError::new(span, msg))
+    }
+
+    fn expect(&mut self, want: Tok, ctx: &str) -> Result<Token, ParseError> {
+        if *self.peek() == want {
+            Ok(self.bump())
+        } else {
+            self.err(
+                self.span(),
+                format!(
+                    "expected {} {ctx}, found {}",
+                    want.describe(),
+                    self.peek().describe()
+                ),
+            )
+        }
+    }
+
+    /// Consume an identifier with the exact spelling `kw`.
+    fn expect_kw(&mut self, kw: &str) -> Result<Token, ParseError> {
+        match self.peek() {
+            Tok::Ident(s) if s == kw => Ok(self.bump()),
+            other => self.err(
+                self.span(),
+                format!("expected `{kw}`, found {}", other.describe()),
+            ),
+        }
+    }
+
+    fn at_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(s) if s == kw)
+    }
+
+    fn expect_ident(&mut self, ctx: &str) -> Result<(String, Span), ParseError> {
+        let span = self.span();
+        match self.bump().tok {
+            Tok::Ident(s) => Ok((s, span)),
+            other => self.err(span, format!("expected {ctx}, found {}", other.describe())),
+        }
+    }
+
+    /// Identifier or quoted string (container names may be quoted).
+    fn expect_name(&mut self, ctx: &str) -> Result<(String, Span), ParseError> {
+        let span = self.span();
+        match self.bump().tok {
+            Tok::Ident(s) | Tok::Str(s) => Ok((s, span)),
+            other => self.err(span, format!("expected {ctx}, found {}", other.describe())),
+        }
+    }
+
+    /// Signed integer literal.
+    fn expect_int(&mut self, ctx: &str) -> Result<i64, ParseError> {
+        let neg = if *self.peek() == Tok::Minus {
+            self.bump();
+            true
+        } else {
+            false
+        };
+        let span = self.span();
+        match self.bump().tok {
+            Tok::Int(v) => Ok(if neg { -v } else { v }),
+            other => self.err(
+                span,
+                format!("expected integer {ctx}, found {}", other.describe()),
+            ),
+        }
+    }
+
+    /// Signed numeric literal (integers promote to f64).
+    fn expect_number(&mut self, ctx: &str) -> Result<f64, ParseError> {
+        let neg = if *self.peek() == Tok::Minus {
+            self.bump();
+            true
+        } else {
+            false
+        };
+        let span = self.span();
+        let v = match self.bump().tok {
+            Tok::Int(v) => v as f64,
+            Tok::Real(v) => v,
+            other => {
+                return self.err(
+                    span,
+                    format!("expected number {ctx}, found {}", other.describe()),
+                )
+            }
+        };
+        Ok(if neg { -v } else { v })
+    }
+
+    // -- program -----------------------------------------------------------
+
+    fn parse_program(mut self) -> Result<ParsedKernel, ParseError> {
+        let prog_span = self.span();
+        self.expect_kw("program")?;
+        let (name, _) = self.expect_name("a program name after `program`")?;
+        self.prog.name = name;
+        self.expect(Tok::LBrace, "to open the program body")?;
+
+        // Declarations first, then the loop nest.
+        loop {
+            if self.at_kw("param") {
+                self.parse_param_decl()?;
+            } else if self.at_kw("array") || self.at_kw("transient") || self.at_kw("register") {
+                self.parse_container_decl()?;
+            } else {
+                break;
+            }
+        }
+        while *self.peek() != Tok::RBrace {
+            if *self.peek() == Tok::Eof {
+                return self.err(self.span(), "unexpected end of input (missing `}`)".into());
+            }
+            let n = self.parse_node()?;
+            self.prog.body.push(n);
+        }
+        self.expect(Tok::RBrace, "to close the program")?;
+        if *self.peek() != Tok::Eof {
+            return self.err(
+                self.span(),
+                format!("trailing input after program: {}", self.peek().describe()),
+            );
+        }
+
+        self.prog.reserve_ids(
+            self.used_loop_ids.iter().max().map_or(0, |m| m + 1),
+            self.used_stmt_ids.iter().max().map_or(0, |m| m + 1),
+        );
+        crate::ir::validate::validate(&self.prog)
+            .map_err(|e| ParseError::new(prog_span, format!("program validation failed: {e}")))?;
+        Ok(ParsedKernel {
+            program: self.prog,
+            presets: self.presets,
+            inits: self.inits,
+        })
+    }
+
+    // -- declarations ------------------------------------------------------
+
+    fn parse_param_decl(&mut self) -> Result<(), ParseError> {
+        self.expect_kw("param")?;
+        let (name, span) = self.expect_ident("a parameter name")?;
+        if self.params.contains_key(&name) {
+            return self.err(span, format!("duplicate param `{name}`"));
+        }
+        let mut dim = false;
+        if *self.peek() == Tok::Colon {
+            self.bump();
+            let (kind, kspan) = self.expect_ident("`dim` after `:`")?;
+            match kind.as_str() {
+                "dim" => dim = true,
+                other => {
+                    return self.err(
+                        kspan,
+                        format!("unknown param kind `{other}` (expected `dim`)"),
+                    )
+                }
+            }
+        }
+        let sym = if dim {
+            Sym::positive_min(&name, 2)
+        } else {
+            Sym::positive(&name)
+        };
+        self.params.insert(name, sym);
+        if !self.prog.params.contains(&sym) {
+            self.prog.params.push(sym);
+        }
+        if dim && !self.prog.dim_syms.contains(&sym) {
+            self.prog.dim_syms.push(sym);
+        }
+        if *self.peek() == Tok::Assign {
+            self.bump();
+            let vspan = self.span();
+            let bindings = self.parse_preset_bindings()?;
+            // Params are interned with positivity assumptions the symbolic
+            // analyses rely on (dependence directions, §3.2); a run-time
+            // binding below the assumed floor would let a transform through
+            // under a false invariant and silently corrupt parallel output.
+            let floor = if dim { 2 } else { 1 };
+            for v in [bindings.tiny, bindings.small, bindings.medium] {
+                if let Some(v) = v {
+                    if v < floor {
+                        return self.err(
+                            vspan,
+                            format!(
+                                "preset value {v} for param `{}` is below its assumed \
+                                 minimum {floor} ({})",
+                                sym.name(),
+                                if dim {
+                                    "`: dim` params are array extents ≥ 2"
+                                } else {
+                                    "params are strictly positive sizes/strides"
+                                }
+                            ),
+                        );
+                    }
+                }
+            }
+            self.presets.push((sym, bindings));
+        }
+        self.expect(Tok::Semi, "after the param declaration")?;
+        Ok(())
+    }
+
+    fn parse_preset_bindings(&mut self) -> Result<PresetBindings, ParseError> {
+        if *self.peek() != Tok::LBrace {
+            // Single value bound for every preset.
+            let v = self.expect_int("preset value")?;
+            return Ok(PresetBindings {
+                tiny: Some(v),
+                small: Some(v),
+                medium: Some(v),
+            });
+        }
+        self.bump();
+        let mut b = PresetBindings::default();
+        loop {
+            let (key, kspan) = self.expect_ident("a preset name (`tiny`, `small`, `medium`)")?;
+            self.expect(Tok::Colon, "after the preset name")?;
+            let v = self.expect_int("preset value")?;
+            let slot = match key.as_str() {
+                "tiny" => &mut b.tiny,
+                "small" => &mut b.small,
+                "medium" => &mut b.medium,
+                other => {
+                    return self.err(
+                        kspan,
+                        format!("unknown preset `{other}` (expected tiny/small/medium)"),
+                    )
+                }
+            };
+            if slot.replace(v).is_some() {
+                return self.err(kspan, format!("preset `{key}` given twice"));
+            }
+            if *self.peek() == Tok::Comma {
+                self.bump();
+                continue;
+            }
+            break;
+        }
+        self.expect(Tok::RBrace, "to close the preset bindings")?;
+        Ok(b)
+    }
+
+    fn parse_container_decl(&mut self) -> Result<(), ParseError> {
+        let (kw, _) = self.expect_ident("a declaration keyword")?;
+        let kind = match kw.as_str() {
+            "array" => ContainerKind::Argument,
+            "transient" => ContainerKind::Transient,
+            "register" => ContainerKind::Register,
+            _ => unreachable!("caller checked the keyword"),
+        };
+        let (name, span) = self.expect_name("a container name")?;
+        if self.containers.contains_key(&name) {
+            return self.err(span, format!("duplicate container `{name}`"));
+        }
+        self.expect(Tok::LBracket, "to open the container size")?;
+        let size = self.parse_expr()?;
+        self.expect(Tok::RBracket, "to close the container size")?;
+        let mut dtype = DType::F64;
+        if *self.peek() == Tok::Colon {
+            self.bump();
+            let (t, tspan) = self.expect_ident("a dtype (`f64`, `f32`, `i64`)")?;
+            dtype = match t.as_str() {
+                "f64" => DType::F64,
+                "f32" => DType::F32,
+                "i64" => DType::I64,
+                other => {
+                    return self.err(tspan, format!("unknown dtype `{other}`"));
+                }
+            };
+        }
+        if self.at_kw("init") {
+            self.bump();
+            self.expect(Tok::LParen, "after `init`")?;
+            let shift = self.expect_number("(init shift)")?;
+            self.expect(Tok::Comma, "between init shift and scale")?;
+            let scale = self.expect_number("(init scale)")?;
+            self.expect(Tok::RParen, "to close `init(...)`")?;
+            self.inits.push(InitSpec {
+                container: name.clone(),
+                shift,
+                scale,
+            });
+        }
+        self.expect(Tok::Semi, "after the container declaration")?;
+        let id = self.prog.add_container(&name, size, dtype, kind);
+        self.containers.insert(name, id);
+        Ok(())
+    }
+
+    // -- loop nest ---------------------------------------------------------
+
+    /// `L<n>:` / `s<n>:` labels ahead of loops and statements. Returns the
+    /// explicit id and whether it is a loop (`L`) label.
+    fn try_label(&mut self) -> Result<Option<(u32, bool)>, ParseError> {
+        let (is_label, id, is_loop) = match (self.peek(), self.peek2()) {
+            (Tok::Ident(s), Tok::Colon) => {
+                let (head, digits) = (s.chars().next(), &s[1..]);
+                let numeric = !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit());
+                match head {
+                    Some('L') | Some('s') if numeric => {
+                        (true, digits.parse::<u32>().ok(), head == Some('L'))
+                    }
+                    _ => (false, None, false),
+                }
+            }
+            _ => (false, None, false),
+        };
+        if !is_label {
+            return Ok(None);
+        }
+        let span = self.span();
+        let Some(id) = id else {
+            return self.err(span, "label id does not fit in 32 bits".into());
+        };
+        self.bump(); // label
+        self.bump(); // colon
+        Ok(Some((id, is_loop)))
+    }
+
+    fn alloc_loop_id(&mut self, explicit: Option<u32>, span: Span) -> Result<LoopId, ParseError> {
+        let id = match explicit {
+            Some(n) => {
+                if !self.used_loop_ids.insert(n) {
+                    return self.err(span, format!("duplicate loop label `L{n}`"));
+                }
+                n
+            }
+            None => {
+                while self.used_loop_ids.contains(&self.next_loop) {
+                    self.next_loop += 1;
+                }
+                let n = self.next_loop;
+                self.used_loop_ids.insert(n);
+                n
+            }
+        };
+        Ok(LoopId(id))
+    }
+
+    fn alloc_stmt_id(&mut self, explicit: Option<u32>, span: Span) -> Result<StmtId, ParseError> {
+        let id = match explicit {
+            Some(n) => {
+                if !self.used_stmt_ids.insert(n) {
+                    return self.err(span, format!("duplicate statement label `s{n}`"));
+                }
+                n
+            }
+            None => {
+                while self.used_stmt_ids.contains(&self.next_stmt) {
+                    self.next_stmt += 1;
+                }
+                let n = self.next_stmt;
+                self.used_stmt_ids.insert(n);
+                n
+            }
+        };
+        Ok(StmtId(id))
+    }
+
+    fn parse_node(&mut self) -> Result<Node, ParseError> {
+        if self.at_kw("param")
+            || self.at_kw("array")
+            || self.at_kw("transient")
+            || self.at_kw("register")
+        {
+            return self.err(
+                self.span(),
+                "declarations must precede the loop nest".into(),
+            );
+        }
+        // Guard prefix: `if (expr) <statement>`.
+        if self.at_kw("if") {
+            let span = self.span();
+            self.bump();
+            self.expect(Tok::LParen, "after `if`")?;
+            let guard = self.parse_expr()?;
+            self.expect(Tok::RParen, "to close the guard")?;
+            let label = self.try_label()?;
+            if let Some((_, true)) = label {
+                return self.err(span, "guards apply to statements, not loops".into());
+            }
+            if self.at_kw("for") {
+                return self.err(span, "guards apply to statements, not loops".into());
+            }
+            return self.parse_stmt(label.map(|(n, _)| n), Some(guard));
+        }
+        let label = self.try_label()?;
+        if self.at_kw("for") {
+            match label {
+                Some((_, false)) => self.err(
+                    self.span(),
+                    "statement label `s<n>:` ahead of a loop (use `L<n>:`)".into(),
+                ),
+                other => self.parse_loop(other.map(|(n, _)| n)),
+            }
+        } else {
+            match label {
+                Some((_, true)) => self.err(
+                    self.span(),
+                    "loop label `L<n>:` ahead of a statement (use `s<n>:`)".into(),
+                ),
+                other => self.parse_stmt(other.map(|(n, _)| n), None),
+            }
+        }
+    }
+
+    fn parse_loop(&mut self, explicit_id: Option<u32>) -> Result<Node, ParseError> {
+        let for_span = self.span();
+        self.expect_kw("for")?;
+        let id = self.alloc_loop_id(explicit_id, for_span)?;
+        self.expect(Tok::LParen, "after `for`")?;
+        let (var_name, vspan) = self.expect_ident("a loop variable")?;
+        if self.scopes.iter().any(|(n, _)| *n == var_name) {
+            return self.err(
+                vspan,
+                format!("loop variable `{var_name}` shadows an enclosing loop variable"),
+            );
+        }
+        if self.params.contains_key(&var_name) {
+            return self.err(
+                vspan,
+                format!("loop variable `{var_name}` collides with a param of the same name"),
+            );
+        }
+        let var = Sym::new(&var_name);
+        // The variable is in scope for the whole header: strides may
+        // reference it (Fig. 2's `i += i`).
+        self.scopes.push((var_name.clone(), var));
+        let header = (|| -> Result<(Expr, Expr, Expr), ParseError> {
+            self.expect(Tok::Assign, "after the loop variable")?;
+            let start = self.parse_expr()?;
+            self.expect(Tok::Semi, "after the loop start")?;
+            let (cond_var, cspan) = self.expect_ident("the loop variable in the condition")?;
+            if cond_var != var_name {
+                return self.err(
+                    cspan,
+                    format!("loop condition must test `{var_name}`, found `{cond_var}`"),
+                );
+            }
+            let cmp = self.bump();
+            let raw_end = self.parse_expr()?;
+            let end = match cmp.tok {
+                Tok::Lt | Tok::Gt | Tok::AnyDir => raw_end,
+                // Inclusive bounds normalize onto the exclusive IR form.
+                Tok::Le => raw_end + Expr::Int(1),
+                Tok::Ge => raw_end - Expr::Int(1),
+                other => {
+                    return self.err(
+                        cmp.span,
+                        format!(
+                            "expected a comparison (`<`, `<=`, `>`, `>=`, `<>`), found {}",
+                            other.describe()
+                        ),
+                    )
+                }
+            };
+            self.expect(Tok::Semi, "after the loop condition")?;
+            let (step_var, sspan) = self.expect_ident("the loop variable in the step")?;
+            if step_var != var_name {
+                return self.err(
+                    sspan,
+                    format!("loop step must update `{var_name}`, found `{step_var}`"),
+                );
+            }
+            self.expect(Tok::PlusAssign, "in the loop step")?;
+            let stride = self.parse_expr()?;
+            Ok((start, end, stride))
+        })();
+        let (start, end, stride) = match header {
+            Ok(h) => h,
+            Err(e) => {
+                self.scopes.pop();
+                return Err(e);
+            }
+        };
+        let body = (|| -> Result<Vec<Node>, ParseError> {
+            self.expect(Tok::RParen, "to close the loop header")?;
+            self.expect(Tok::LBrace, "to open the loop body")?;
+            let mut body = Vec::new();
+            while *self.peek() != Tok::RBrace {
+                if *self.peek() == Tok::Eof {
+                    return self.err(
+                        self.span(),
+                        "unexpected end of input inside a loop body".into(),
+                    );
+                }
+                body.push(self.parse_node()?);
+            }
+            self.expect(Tok::RBrace, "to close the loop body")?;
+            Ok(body)
+        })();
+        self.scopes.pop();
+        Ok(Node::Loop(Loop {
+            id,
+            var,
+            start,
+            end,
+            stride,
+            schedule: LoopSchedule::Sequential,
+            body: body?,
+        }))
+    }
+
+    fn parse_stmt(
+        &mut self,
+        explicit_id: Option<u32>,
+        guard: Option<Expr>,
+    ) -> Result<Node, ParseError> {
+        let span = self.span();
+        let (name, nspan) = self.expect_name("a container name to assign to")?;
+        let Some(&cid) = self.containers.get(&name) else {
+            let declared: Vec<&str> = self.container_names();
+            let hint = if self.params.contains_key(&name) {
+                format!("`{name}` is a param, not a container")
+            } else {
+                format!("declared containers: {}", declared.join(", "))
+            };
+            return self.err(nspan, format!("undeclared container `{name}` ({hint})"));
+        };
+        let id = self.alloc_stmt_id(explicit_id, span)?;
+        self.expect(Tok::LBracket, "to open the write offset")?;
+        let offset = self.parse_expr()?;
+        self.expect(Tok::RBracket, "to close the write offset")?;
+        self.expect(Tok::Assign, "in the assignment")?;
+        let rhs = self.parse_expr()?;
+        self.expect(Tok::Semi, "after the statement")?;
+        Ok(Node::Stmt(Stmt {
+            id,
+            write: Access::write(cid, simplify(&offset)),
+            rhs: simplify(&rhs),
+            guard: guard.map(|g| simplify(&g)),
+        }))
+    }
+
+    fn container_names(&self) -> Vec<&str> {
+        self.prog
+            .containers
+            .iter()
+            .map(|c| c.name.as_str())
+            .collect()
+    }
+
+    // -- expressions -------------------------------------------------------
+
+    fn parse_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.parse_term()?;
+        loop {
+            match self.peek() {
+                Tok::Plus => {
+                    self.bump();
+                    e = e + self.parse_term()?;
+                }
+                Tok::Minus => {
+                    self.bump();
+                    e = e - self.parse_term()?;
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn parse_term(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.parse_unary()?;
+        loop {
+            match self.peek() {
+                Tok::Star => {
+                    self.bump();
+                    e = e * self.parse_unary()?;
+                }
+                // `/` is compute division: `a * recip(b)`, exactly the
+                // builders' `fdiv`. Integer division is `floordiv(a, b)`.
+                Tok::Slash => {
+                    self.bump();
+                    let rhs = self.parse_unary()?;
+                    e = fdiv(e, rhs);
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn parse_unary(&mut self) -> Result<Expr, ParseError> {
+        if *self.peek() == Tok::Minus {
+            self.bump();
+            let e = self.parse_unary()?;
+            return Ok(-e);
+        }
+        self.parse_power()
+    }
+
+    fn parse_power(&mut self) -> Result<Expr, ParseError> {
+        let base = self.parse_primary()?;
+        if *self.peek() == Tok::Caret {
+            self.bump();
+            let span = self.span();
+            match self.bump().tok {
+                Tok::Int(v) if (0..=u32::MAX as i64).contains(&v) => {
+                    return Ok(simplify(&Expr::Pow(Box::new(base), v as u32)));
+                }
+                other => {
+                    return self.err(
+                        span,
+                        format!(
+                            "exponent must be a non-negative integer, found {}",
+                            other.describe()
+                        ),
+                    )
+                }
+            }
+        }
+        Ok(base)
+    }
+
+    fn parse_primary(&mut self) -> Result<Expr, ParseError> {
+        let span = self.span();
+        match self.peek().clone() {
+            Tok::Int(v) => {
+                self.bump();
+                Ok(Expr::Int(v))
+            }
+            Tok::Real(v) => {
+                self.bump();
+                Ok(Expr::real(v))
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.parse_expr()?;
+                self.expect(Tok::RParen, "to close the parenthesized expression")?;
+                Ok(e)
+            }
+            Tok::Str(name) => {
+                self.bump();
+                self.parse_load(&name, span)
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                if *self.peek() == Tok::LBracket {
+                    return self.parse_load(&name, span);
+                }
+                if *self.peek() == Tok::LParen {
+                    return self.parse_call(&name, span);
+                }
+                // Loop variables shadow params (distinct names are enforced
+                // at declaration, so this is just innermost-out lookup).
+                if let Some((_, sym)) = self.scopes.iter().rev().find(|(n, _)| *n == name) {
+                    return Ok(Expr::Sym(*sym));
+                }
+                if let Some(sym) = self.params.get(&name) {
+                    return Ok(Expr::Sym(*sym));
+                }
+                if self.containers.contains_key(&name) {
+                    return self.err(
+                        span,
+                        format!("container `{name}` must be subscripted (`{name}[...]`)"),
+                    );
+                }
+                let in_scope: Vec<String> = self
+                    .scopes
+                    .iter()
+                    .map(|(n, _)| n.clone())
+                    .chain(self.params.keys().cloned())
+                    .collect();
+                self.err(
+                    span,
+                    format!(
+                        "undeclared symbol `{name}` (params and loop variables in scope: {})",
+                        if in_scope.is_empty() {
+                            "none".to_string()
+                        } else {
+                            in_scope.join(", ")
+                        }
+                    ),
+                )
+            }
+            other => self.err(
+                span,
+                format!("expected an expression, found {}", other.describe()),
+            ),
+        }
+    }
+
+    fn parse_load(&mut self, name: &str, span: Span) -> Result<Expr, ParseError> {
+        let Some(&cid) = self.containers.get(name) else {
+            return self.err(
+                span,
+                format!(
+                    "undeclared container `{name}` (declared containers: {})",
+                    self.container_names().join(", ")
+                ),
+            );
+        };
+        self.expect(Tok::LBracket, "to open the access offset")?;
+        let off = self.parse_expr()?;
+        self.expect(Tok::RBracket, "to close the access offset")?;
+        Ok(load(cid, off))
+    }
+
+    fn parse_call(&mut self, name: &str, span: Span) -> Result<Expr, ParseError> {
+        self.expect(Tok::LParen, "to open the argument list")?;
+        let mut args = vec![self.parse_expr()?];
+        while *self.peek() == Tok::Comma {
+            self.bump();
+            args.push(self.parse_expr()?);
+        }
+        self.expect(Tok::RParen, "to close the argument list")?;
+        let got = args.len();
+        let arity = move |want: usize| -> Result<(), ParseError> {
+            if got == want {
+                Ok(())
+            } else {
+                Err(ParseError::new(
+                    span,
+                    format!("`{name}` takes {want} argument(s), found {got}"),
+                ))
+            }
+        };
+        match name {
+            "min" => {
+                arity(2)?;
+                let b = args.pop().unwrap();
+                let a = args.pop().unwrap();
+                Ok(min(a, b))
+            }
+            "max" => {
+                arity(2)?;
+                let b = args.pop().unwrap();
+                let a = args.pop().unwrap();
+                Ok(max(a, b))
+            }
+            "floordiv" => {
+                arity(2)?;
+                let b = args.pop().unwrap();
+                let a = args.pop().unwrap();
+                Ok(floordiv(a, b))
+            }
+            "mod" => {
+                arity(2)?;
+                let b = args.pop().unwrap();
+                let a = args.pop().unwrap();
+                Ok(imod(a, b))
+            }
+            "log2" => {
+                arity(1)?;
+                Ok(func(FuncKind::Log2, args))
+            }
+            "exp" => {
+                arity(1)?;
+                Ok(func(FuncKind::Exp, args))
+            }
+            "sqrt" => {
+                arity(1)?;
+                Ok(func(FuncKind::Sqrt, args))
+            }
+            "abs" => {
+                arity(1)?;
+                Ok(func(FuncKind::Abs, args))
+            }
+            "recip" => {
+                arity(1)?;
+                Ok(func(FuncKind::Recip, args))
+            }
+            "select" => {
+                arity(3)?;
+                Ok(func(FuncKind::Select, args))
+            }
+            other => self.err(
+                span,
+                format!(
+                    "unknown function `{other}` (available: min, max, floordiv, mod, \
+                     log2, exp, sqrt, abs, recip, select)"
+                ),
+            ),
+        }
+    }
+}

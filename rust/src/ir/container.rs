@@ -35,7 +35,7 @@ pub enum ContainerKind {
 }
 
 /// A data container declaration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Container {
     pub id: ContainerId,
     pub name: String,

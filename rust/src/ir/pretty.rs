@@ -1,25 +1,50 @@
-//! Pretty-printer for loop programs (CLI/report output and debugging).
+//! Canonical printer for loop programs.
+//!
+//! The output is valid SILO-Text: `frontend::parse_str(pretty(p))`
+//! reconstructs `p` exactly (ids included — loops and statements print
+//! `L<n>:`/`s<n>:` labels the parser honors). Schedule information that
+//! lives outside the grammar (DOALL/DOACROSS annotations, memory
+//! schedules) prints as `//` comments, which the lexer skips.
+//!
+//! The identity is on [`Program`]: preset bindings and `init(...)`
+//! annotations belong to `frontend::ParsedKernel`, not the IR, so a
+//! printed file needs presets re-added before `silo run` can bind its
+//! params (the runtime error names the param and the exact syntax).
 
 use std::fmt::Write;
 
+use super::container::DType;
 use super::nest::{LoopSchedule, Node, ReleaseSpec};
 use super::program::Program;
 
-/// Render the full program as pseudo-C with schedule annotations.
+/// Render the full program as parseable SILO-Text with schedule comments.
 pub fn pretty(p: &Program) -> String {
     let mut out = String::new();
     let _ = writeln!(out, "program {} {{", p.name);
-    if !p.params.is_empty() {
-        let names: Vec<String> = p.params.iter().map(|s| s.name()).collect();
-        let _ = writeln!(out, "  params: {}", names.join(", "));
+    for s in &p.params {
+        if p.dim_syms.contains(s) {
+            let _ = writeln!(out, "  param {}: dim;", s.name());
+        } else {
+            let _ = writeln!(out, "  param {};", s.name());
+        }
     }
     for c in &p.containers {
         let kind = match c.kind {
-            super::container::ContainerKind::Argument => "arg",
+            super::container::ContainerKind::Argument => "array",
             super::container::ContainerKind::Transient => "transient",
             super::container::ContainerKind::Register => "register",
         };
-        let _ = writeln!(out, "  {} %{} \"{}\"[{}]", kind, c.id.0, c.name, c.size);
+        let dtype = match c.dtype {
+            DType::F64 => "",
+            DType::F32 => ": f32",
+            DType::I64 => ": i64",
+        };
+        let _ = writeln!(
+            out,
+            "  {kind} \"{}\"[{}]{dtype};",
+            c.name,
+            render_expr(p, &c.size)
+        );
     }
     for n in &p.body {
         write_node(&mut out, p, n, 1);
@@ -56,15 +81,15 @@ fn write_node(out: &mut String, p: &Program, n: &Node, depth: usize) {
             let guard = s
                 .guard
                 .as_ref()
-                .map(|g| format!("if ({g}) "))
+                .map(|g| format!("if ({}) ", render_expr(p, g)))
                 .unwrap_or_default();
             let _ = writeln!(
                 out,
                 "{pad}{guard}s{}: \"{}\"[{}] = {};",
                 s.id.0,
                 p.container(s.write.container).name,
-                s.write.offset,
-                render_rhs(p, &s.rhs)
+                render_expr(p, &s.write.offset),
+                render_expr(p, &s.rhs)
             );
         }
         Node::Loop(l) => {
@@ -83,16 +108,19 @@ fn write_node(out: &mut String, p: &Program, n: &Node, depth: usize) {
                     format!(" // DOACROSS [{} | {}]", w.join(", "), r)
                 }
             };
+            // `<>`: iteration direction decided by the stride's run-time
+            // sign (`<` ascending, `>` descending) — the parser accepts
+            // either comparator spelling for the same IR.
             let _ = writeln!(
                 out,
                 "{pad}L{}: for ({} = {}; {} <> {}; {} += {}) {{{}",
                 l.id.0,
                 l.var.name(),
-                l.start,
+                render_expr(p, &l.start),
                 l.var.name(),
-                l.end,
+                render_expr(p, &l.end),
                 l.var.name(),
-                l.stride,
+                render_expr(p, &l.stride),
                 sched
             );
             for c in &l.body {
@@ -103,19 +131,20 @@ fn write_node(out: &mut String, p: &Program, n: &Node, depth: usize) {
     }
 }
 
-/// Render an rhs, replacing `%id[...]` loads with container names.
-fn render_rhs(p: &Program, e: &crate::symbolic::Expr) -> String {
-    use crate::symbolic::Expr;
-    let renamed = e.map(&|x| x.clone());
-    // Simple textual pass: render, then replace %N with names.
-    let mut s = format!("{renamed}");
+/// Render an expression, replacing `%id[...]` loads with quoted container
+/// names (the parser resolves them back to the same ids, since containers
+/// print in declaration order).
+fn render_expr(p: &Program, e: &crate::symbolic::Expr) -> String {
+    let mut s = e.to_string();
+    if !s.contains('%') {
+        return s;
+    }
     // Longest ids first so %12 is not clobbered by %1.
     let mut ids: Vec<_> = p.containers.iter().collect();
     ids.sort_by_key(|c| std::cmp::Reverse(c.id.0));
     for c in ids {
         s = s.replace(&format!("%{}", c.id.0), &format!("\"{}\"", c.name));
     }
-    let _ = Expr::Int(0); // keep import used
     s
 }
 
@@ -137,5 +166,24 @@ mod tests {
         let s = super::pretty(&p);
         assert!(s.contains("for (pp_i = 0"), "{s}");
         assert!(s.contains("\"A\""), "{s}");
+        assert!(s.contains("param pp_N;"), "{s}");
+        assert!(s.contains("array \"A\"[pp_N];"), "{s}");
+    }
+
+    #[test]
+    fn guards_and_dims_render_parseably() {
+        let mut b = ProgramBuilder::new("pp2");
+        let n = b.dim_param("pp2_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("pp2_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign_if(Expr::Sym(i), a, Expr::Sym(i), load(a, Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let s = super::pretty(&p);
+        assert!(s.contains("param pp2_N: dim;"), "{s}");
+        assert!(s.contains("if (pp2_i) s0:"), "{s}");
+        // Guard loads render with container names, not raw %ids.
+        assert!(!s.contains('%'), "{s}");
     }
 }

@@ -40,7 +40,11 @@ impl ScheduleSet {
 }
 
 /// A complete loop program.
-#[derive(Debug, Clone)]
+///
+/// Structural equality (`PartialEq`) compares declarations, the loop tree,
+/// and the schedule set — the property the SILO-Text round-trip tests pin
+/// (`parse(print(p)) == p`).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Program {
     pub name: String,
     /// Symbolic parameters (sizes, strides) that must be bound at run time.
@@ -112,6 +116,14 @@ impl Program {
         let id = StmtId(self.next_stmt);
         self.next_stmt += 1;
         id
+    }
+
+    /// Raise the id allocators so subsequently created loops/statements do
+    /// not collide with explicitly numbered ones (the textual frontend can
+    /// carry `L<n>:`/`s<n>:` labels).
+    pub fn reserve_ids(&mut self, next_loop: u32, next_stmt: u32) {
+        self.next_loop = self.next_loop.max(next_loop);
+        self.next_stmt = self.next_stmt.max(next_stmt);
     }
 
     /// Visit every node (pre-order across the top-level sequence).

@@ -1,0 +1,152 @@
+//! The file-backed kernel corpus: SILO-Text sources under `corpus/*.silo`,
+//! embedded at build time and elaborated through the frontend.
+//!
+//! Two groups:
+//!
+//! * **Registered** corpus kernels ([`corpus_kernels`]) — workloads that
+//!   exist *only* as text (the Fig. 2 loops plus kernels no Rust builder
+//!   expresses) and join [`super::all_kernels`], so every harness
+//!   (autotuner, experiments, VM validation, benches) runs over parsed
+//!   programs with zero special cases.
+//! * **Mirror** sources ([`mirror_sources`]) — textual transcriptions of
+//!   kernels that already have Rust builders (`laplace2d`, `vadv`,
+//!   `matmul_tiled`). They are not registered twice; instead
+//!   `rust/tests/frontend.rs` pins `parse(text) == build()`, which
+//!   cross-validates the parser against the builders statement by
+//!   statement.
+
+use crate::frontend::{parse_str, ParsedKernel};
+use crate::ir::Program;
+use crate::symbolic::Sym;
+
+use super::{KernelEntry, Preset};
+
+/// `(kernel name, embedded SILO-Text source)` for every corpus file.
+pub fn embedded_sources() -> Vec<(&'static str, &'static str)> {
+    let mut v = mirror_sources();
+    v.extend(registered_sources());
+    v
+}
+
+/// Corpus files that mirror Rust-builder kernels (parser cross-checks).
+pub fn mirror_sources() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("laplace2d", include_str!("../../../corpus/laplace.silo")),
+        ("vadv", include_str!("../../../corpus/vadv.silo")),
+        (
+            "matmul_tiled",
+            include_str!("../../../corpus/matmul_tiled.silo"),
+        ),
+    ]
+}
+
+/// Corpus files registered as kernels in their own right.
+pub fn registered_sources() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig2_log2", include_str!("../../../corpus/fig2_log2.silo")),
+        ("fig2_tri", include_str!("../../../corpus/fig2_tri.silo")),
+        (
+            "gather_stride",
+            include_str!("../../../corpus/gather_stride.silo"),
+        ),
+        (
+            "stencil_time",
+            include_str!("../../../corpus/stencil_time.silo"),
+        ),
+        ("blur_guard", include_str!("../../../corpus/blur_guard.silo")),
+    ]
+}
+
+fn parse_embedded(name: &'static str) -> ParsedKernel {
+    let src = embedded_sources()
+        .into_iter()
+        .find(|(n, _)| *n == name)
+        .unwrap_or_else(|| panic!("no embedded corpus source named {name}"))
+        .1;
+    parse_str(src).unwrap_or_else(|e| panic!("embedded corpus kernel {name}: {e}"))
+}
+
+macro_rules! corpus_entry {
+    ($build:ident, $preset:ident, $name:literal) => {
+        fn $build() -> Program {
+            parse_embedded($name).program
+        }
+
+        fn $preset(p: Preset) -> Vec<(Sym, i64)> {
+            parse_embedded($name)
+                .params_for(p)
+                .unwrap_or_else(|e| panic!("embedded corpus kernel {}: {e}", $name))
+        }
+    };
+}
+
+corpus_entry!(build_fig2_log2, preset_fig2_log2, "fig2_log2");
+corpus_entry!(build_fig2_tri, preset_fig2_tri, "fig2_tri");
+corpus_entry!(build_gather, preset_gather, "gather_stride");
+corpus_entry!(build_stencil_time, preset_stencil_time, "stencil_time");
+corpus_entry!(build_blur_guard, preset_blur_guard, "blur_guard");
+
+/// Kernel entries for the registered corpus files. Registered corpus
+/// kernels use [`super::default_init`] (enforced by `tests/frontend.rs`:
+/// `init(...)` annotations are reserved for mirror files, whose registered
+/// twins carry their own Rust init functions).
+pub fn corpus_kernels() -> Vec<KernelEntry> {
+    vec![
+        KernelEntry {
+            name: "fig2_log2",
+            build: build_fig2_log2,
+            preset: preset_fig2_log2,
+            init: super::default_init,
+        },
+        KernelEntry {
+            name: "fig2_tri",
+            build: build_fig2_tri,
+            preset: preset_fig2_tri,
+            init: super::default_init,
+        },
+        KernelEntry {
+            name: "gather_stride",
+            build: build_gather,
+            preset: preset_gather,
+            init: super::default_init,
+        },
+        KernelEntry {
+            name: "stencil_time",
+            build: build_stencil_time,
+            preset: preset_stencil_time,
+            init: super::default_init,
+        },
+        KernelEntry {
+            name: "blur_guard",
+            build: build_blur_guard,
+            preset: preset_blur_guard,
+            init: super::default_init,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_embedded_source_parses_and_validates() {
+        for (name, src) in embedded_sources() {
+            let k = parse_str(src).unwrap_or_else(|e| panic!("{name}: {e}"));
+            crate::ir::validate::validate(&k.program).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(k.program.name, name, "file name / program name drift");
+        }
+    }
+
+    #[test]
+    fn registered_corpus_kernels_build_and_bind_presets() {
+        for entry in corpus_kernels() {
+            let p = (entry.build)();
+            assert!(!p.stmts().is_empty(), "{}", entry.name);
+            for preset in [Preset::Tiny, Preset::Small, Preset::Medium] {
+                let params = (entry.preset)(preset);
+                assert_eq!(params.len(), p.params.len(), "{}", entry.name);
+            }
+        }
+    }
+}

@@ -1,11 +1,14 @@
 //! The kernel corpus: every workload the paper's evaluation touches,
 //! expressed in the loop IR (DESIGN.md §Per-experiment index).
 
+pub mod corpus;
 pub mod fig2;
 pub mod laplace;
 pub mod matmul;
 pub mod npbench;
 pub mod vadv;
+
+use anyhow::{bail, Result};
 
 use crate::ir::{ContainerKind, Program};
 use crate::symbolic::eval::eval_int;
@@ -21,6 +24,7 @@ pub enum Preset {
 }
 
 /// A registered kernel: builder + presets + deterministic input generator.
+#[derive(Clone, Copy)]
 pub struct KernelEntry {
     pub name: &'static str,
     pub build: fn() -> Program,
@@ -42,6 +46,17 @@ pub fn gen_inputs(
     params: &[(Sym, i64)],
     init: fn(&str, usize) -> f64,
 ) -> anyhow::Result<Vec<(ContainerId, Vec<f64>)>> {
+    gen_inputs_with(p, params, init)
+}
+
+/// [`gen_inputs`] over an arbitrary initializer closure (used for parsed
+/// `.silo` kernels, whose `init(shift, scale)` annotations are data, not
+/// function pointers).
+pub fn gen_inputs_with(
+    p: &Program,
+    params: &[(Sym, i64)],
+    init: impl Fn(&str, usize) -> f64,
+) -> anyhow::Result<Vec<(ContainerId, Vec<f64>)>> {
     let mut out = Vec::new();
     for c in &p.containers {
         if c.kind != ContainerKind::Argument {
@@ -59,7 +74,8 @@ pub fn npbench_corpus() -> Vec<KernelEntry> {
     npbench::corpus()
 }
 
-/// Every kernel in the repository (corpus + the headline workloads).
+/// Every kernel in the repository: the NPBench corpus, the headline
+/// workloads, and the parsed `corpus/*.silo` kernels.
 pub fn all_kernels() -> Vec<KernelEntry> {
     let mut v = npbench_corpus();
     v.push(KernelEntry {
@@ -80,10 +96,142 @@ pub fn all_kernels() -> Vec<KernelEntry> {
         preset: matmul::preset,
         init: default_init,
     });
+    v.extend(corpus::corpus_kernels());
     v
 }
 
 /// Find a kernel by name.
 pub fn kernel(name: &str) -> Option<KernelEntry> {
     all_kernels().into_iter().find(|k| k.name == name)
+}
+
+/// [`kernel`], with an actionable error: a "did you mean" suggestion when
+/// the name is a near miss, plus the full registry listing.
+pub fn lookup(name: &str) -> Result<KernelEntry> {
+    if let Some(k) = kernel(name) {
+        return Ok(k);
+    }
+    let names: Vec<&'static str> = all_kernels().iter().map(|k| k.name).collect();
+    let hint = suggestion(name)
+        .map(|s| format!(" — did you mean `{s}`?"))
+        .unwrap_or_default();
+    bail!(
+        "unknown kernel `{name}`{hint}\navailable kernels: {}\n\
+         (a path to a .silo file also works, e.g. `corpus/stencil_time.silo`)",
+        names.join(", ")
+    )
+}
+
+/// Closest registered kernel name within a small edit distance.
+pub fn suggestion(name: &str) -> Option<&'static str> {
+    let mut best: Option<(usize, &'static str)> = None;
+    for k in all_kernels() {
+        let d = edit_distance(name, k.name);
+        let better = match best {
+            None => true,
+            Some((bd, _)) => d < bd,
+        };
+        if better {
+            best = Some((d, k.name));
+        }
+    }
+    let (d, n) = best?;
+    // Accept near misses only: a third of the name, at least 2 edits.
+    if d <= (name.len() / 3).max(2) {
+        Some(n)
+    } else {
+        None
+    }
+}
+
+/// Plain Levenshtein distance (two-row dynamic program).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let sub = prev[j - 1] + usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = sub.min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// A kernel resolved from either the registry (by name) or a `.silo` file
+/// (by path) — the single intake the driver, tuner, and CLI share, so
+/// parsed files flow through every harness with zero special cases.
+pub enum ResolvedKernel {
+    Registry(KernelEntry),
+    File {
+        name: String,
+        parsed: crate::frontend::ParsedKernel,
+    },
+}
+
+/// Resolve a kernel name or `.silo` path. Registry names win; anything
+/// with a path separator or a `.silo` suffix is read from disk.
+pub fn resolve(spec: &str) -> Result<ResolvedKernel> {
+    let looks_like_path =
+        spec.contains('/') || spec.contains('\\') || spec.ends_with(".silo");
+    if !looks_like_path {
+        if let Some(entry) = kernel(spec) {
+            return Ok(ResolvedKernel::Registry(entry));
+        }
+    }
+    let path = std::path::Path::new(spec);
+    if path.is_file() {
+        let parsed = crate::frontend::parse_file(path)?;
+        return Ok(ResolvedKernel::File {
+            name: parsed.program.name.clone(),
+            parsed,
+        });
+    }
+    if looks_like_path {
+        bail!("no such file: {spec}");
+    }
+    // Not a file either — fall through to the registry error with its
+    // did-you-mean hint.
+    lookup(spec).map(ResolvedKernel::Registry)
+}
+
+impl ResolvedKernel {
+    pub fn name(&self) -> &str {
+        match self {
+            ResolvedKernel::Registry(e) => e.name,
+            ResolvedKernel::File { name, .. } => name,
+        }
+    }
+
+    /// A pristine (unoptimized) copy of the program.
+    pub fn program(&self) -> Program {
+        match self {
+            ResolvedKernel::Registry(e) => (e.build)(),
+            ResolvedKernel::File { parsed, .. } => parsed.program.clone(),
+        }
+    }
+
+    /// Parameter bindings for `preset`.
+    pub fn params(&self, preset: Preset) -> Result<Vec<(Sym, i64)>> {
+        match self {
+            ResolvedKernel::Registry(e) => Ok((e.preset)(preset)),
+            ResolvedKernel::File { parsed, .. } => parsed.params_for(preset),
+        }
+    }
+
+    /// Deterministic inputs for every argument container of `p`.
+    pub fn inputs(
+        &self,
+        p: &Program,
+        params: &[(Sym, i64)],
+    ) -> Result<Vec<(ContainerId, Vec<f64>)>> {
+        match self {
+            ResolvedKernel::Registry(e) => gen_inputs(p, params, e.init),
+            ResolvedKernel::File { parsed, .. } => {
+                gen_inputs_with(p, params, |name, i| parsed.init_value(name, i))
+            }
+        }
+    }
 }

@@ -21,6 +21,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod dataflow;
 pub mod exec;
+pub mod frontend;
 pub mod ir;
 pub mod kernels;
 pub mod lowering;

@@ -13,6 +13,10 @@
 //!   silo experiment <fig1|fig2|fig9|table1|fig10|autotune|all>
 //!   silo artifacts                             — list PJRT artifacts
 //!
+//! `<kernel>` is a registered name (`silo list`) **or a path to a
+//! SILO-Text file** — `silo run corpus/stencil_time.silo --pipeline=auto`
+//! parses, autotunes, and executes the textual loop nest end to end.
+//!
 //! `--pipeline` takes a named configuration (`none|cfg1|cfg2|cfg3`), the
 //! cost-model-driven autotuner (`auto`), or a comma-separated pass list,
 //! e.g. `--pipeline=privatize,fusion,doall`.
@@ -169,6 +173,7 @@ fn real_main() -> anyhow::Result<()> {
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
         "usage: silo <list|show|run|validate|tune|experiment|artifacts> [args]\n\
+         kernels: a registered name (see `silo list`) or a .silo file path\n\
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
          see rust/src/main.rs header for details"

@@ -19,7 +19,9 @@ fn write_expr(out: &mut String, e: &Expr, parent_prec: u8) {
         }
         Expr::Real(b) => {
             let v = f64::from_bits(*b);
-            if v == v.trunc() && v.abs() < 1e15 {
+            // Integral reals keep a `.0` suffix so the SILO-Text parser
+            // reads them back as reals, not integers.
+            if v.is_finite() && v == v.trunc() {
                 let _ = write!(out, "{v:.1}");
             } else {
                 let _ = write!(out, "{v}");
@@ -68,20 +70,10 @@ fn write_expr(out: &mut String, e: &Expr, parent_prec: u8) {
             write_expr(out, b, 2);
             let _ = write!(out, "^{p}");
         }
-        Expr::FloorDiv(a, b) => {
-            out.push_str("floor(");
-            write_expr(out, a, 0);
-            out.push_str(" / ");
-            write_expr(out, b, 0);
-            out.push(')');
-        }
-        Expr::Mod(a, b) => {
-            out.push('(');
-            write_expr(out, a, 1);
-            out.push_str(" mod ");
-            write_expr(out, b, 1);
-            out.push(')');
-        }
+        // Function-call syntax: unambiguous to reparse (SILO-Text), unlike
+        // infix `floor(a / b)` / `(a mod b)` forms.
+        Expr::FloorDiv(a, b) => binary_fn(out, "floordiv", a, b),
+        Expr::Mod(a, b) => binary_fn(out, "mod", a, b),
         Expr::Min(a, b) => binary_fn(out, "min", a, b),
         Expr::Max(a, b) => binary_fn(out, "max", a, b),
         Expr::Func(k, args) => {
@@ -162,6 +154,14 @@ mod tests {
         assert_eq!(render(&e), "-1 + fmt_si"); // canonical order: const first
         // The important bit: it parses visually; just check it round-trips terms.
         assert!(render(&e).contains("fmt_si"));
+    }
+
+    #[test]
+    fn renders_floordiv_and_mod_as_calls() {
+        use crate::symbolic::expr::{floordiv, imod};
+        let x = sym("fmt_fd");
+        assert_eq!(render(&floordiv(x.clone(), int(2))), "floordiv(fmt_fd, 2)");
+        assert_eq!(render(&imod(x, int(3))), "mod(fmt_fd, 3)");
     }
 
     #[test]

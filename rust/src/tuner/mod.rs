@@ -36,7 +36,7 @@ pub mod cost;
 pub mod search;
 pub mod space;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{ensure, Result};
 
 use crate::ir::Program;
 use crate::machine::{clang, intel_node, CompilerModel, NodeModel};
@@ -255,19 +255,12 @@ pub fn compare_with_named_configs(
     })
 }
 
-/// [`autotune_program`] for a registered kernel by name.
+/// [`autotune_program`] for a registered kernel name or a `.silo` path
+/// (resolution through [`crate::kernels::resolve`], did-you-mean
+/// suggestions included).
 pub fn autotune_kernel(name: &str, opts: &TuneOptions) -> Result<TuneOutcome> {
-    let Some(entry) = crate::kernels::kernel(name) else {
-        bail!(
-            "unknown kernel {name}; available: {}",
-            crate::kernels::all_kernels()
-                .iter()
-                .map(|k| k.name)
-                .collect::<Vec<_>>()
-                .join(", ")
-        );
-    };
-    autotune_program(&(entry.build)(), opts)
+    let kernel = crate::kernels::resolve(name)?;
+    autotune_program(&kernel.program(), opts)
 }
 
 #[cfg(test)]

@@ -1,0 +1,368 @@
+//! SILO-Text frontend acceptance.
+//!
+//! Pins the PR's headline invariants:
+//! * `parse(print(p)) == p` (exact structural equality, ids included) and
+//!   print → parse → print idempotence on **every registered kernel**;
+//! * the hand-written mirror corpus files elaborate to programs identical
+//!   to their Rust builders (cross-validates the parser statement by
+//!   statement);
+//! * golden snapshots of the canonical printer (regenerate with
+//!   `SILO_BLESS=1 cargo test -q --test frontend`);
+//! * every `corpus/*.silo` file on disk parses, validates, and — for the
+//!   registered ones — stays bit-identical under `--pipeline auto`;
+//! * parse errors carry line/column and a readable message;
+//! * a randomized print/parse round-trip over generated programs.
+
+use silo::coordinator::{validate_spec, MemSchedules, PipelineSpec};
+use silo::frontend::{parse_file, parse_str};
+use silo::ir::pretty::pretty;
+use silo::ir::{Program, ProgramBuilder};
+use silo::kernels::{all_kernels, corpus, fig2, laplace, matmul, vadv};
+use silo::proptest_lite::Rng;
+use silo::symbolic::{func, imod, int, load, max, min, Expr, FuncKind, Sym};
+
+fn manifest_path(rel: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+// ---------------------------------------------------------------------------
+// Round-trip + golden snapshots
+// ---------------------------------------------------------------------------
+
+/// The canonical printer emits parseable SILO-Text, and reparsing it
+/// reconstructs the identical program — on every registered kernel.
+#[test]
+fn print_parse_round_trips_exactly_on_every_registered_kernel() {
+    for entry in all_kernels() {
+        let p = (entry.build)();
+        let text = pretty(&p);
+        let q = parse_str(&text)
+            .unwrap_or_else(|e| panic!("{}: printed text failed to parse: {e}\n{text}", entry.name))
+            .program;
+        assert_eq!(q, p, "{}: parse(print(p)) != p", entry.name);
+        // Idempotence: printing the reparsed program is a fixpoint.
+        assert_eq!(pretty(&q), text, "{}: print not idempotent", entry.name);
+    }
+}
+
+/// Golden snapshots pin the printer grammar byte for byte. Every kernel
+/// with a committed `tests/golden/<name>.silo` must match; `SILO_BLESS=1`
+/// rewrites the snapshots (and seeds missing ones) for printer changes.
+#[test]
+fn golden_snapshots_match_canonical_printer() {
+    let bless = std::env::var("SILO_BLESS").is_ok();
+    let dir = manifest_path("tests/golden");
+    let mut checked = 0;
+    for entry in all_kernels() {
+        let path = dir.join(format!("{}.silo", entry.name));
+        let text = pretty(&(entry.build)());
+        if bless {
+            std::fs::write(&path, &text).unwrap();
+            continue;
+        }
+        if !path.is_file() {
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            text, want,
+            "{}: printer output drifted from {} (re-bless with SILO_BLESS=1)",
+            entry.name,
+            path.display()
+        );
+        checked += 1;
+    }
+    // The committed snapshot set must stay present.
+    for name in ["fig2_log2", "fig2_tri", "gather_stride", "stencil_time", "blur_guard"] {
+        assert!(
+            dir.join(format!("{name}.silo")).is_file() || bless,
+            "missing committed golden snapshot for {name}"
+        );
+    }
+    assert!(bless || checked >= 5, "only {checked} golden snapshots checked");
+}
+
+// ---------------------------------------------------------------------------
+// Corpus files
+// ---------------------------------------------------------------------------
+
+/// The mirror corpus files elaborate to exactly the programs their Rust
+/// builders construct — statement ids, containers, and expressions alike.
+#[test]
+fn mirror_corpus_files_match_rust_builders() {
+    let builders: &[(&str, fn() -> Program)] = &[
+        ("laplace2d", laplace::build),
+        ("vadv", vadv::build),
+        ("matmul_tiled", matmul::build_tiled),
+    ];
+    for (name, src) in corpus::mirror_sources() {
+        let build = builders
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("no Rust builder registered for mirror {name}"))
+            .1;
+        let parsed = parse_str(src).unwrap_or_else(|e| panic!("{name}: {e}")).program;
+        assert_eq!(parsed, build(), "{name}: corpus file diverged from builder");
+    }
+    // The Fig. 2 kernels are registered *from* the corpus files; they must
+    // still equal the didactic Rust builders.
+    let fig2_pairs: &[(&str, fn() -> Program)] =
+        &[("fig2_log2", fig2::build_log2), ("fig2_tri", fig2::build_triangular)];
+    for &(name, build) in fig2_pairs {
+        let entry = silo::kernels::lookup(name).unwrap();
+        assert_eq!((entry.build)(), build(), "{name}");
+    }
+}
+
+/// Every `.silo` file under `corpus/` parses and validates — including any
+/// file a future PR drops in without registering it.
+#[test]
+fn every_corpus_file_on_disk_parses_and_validates() {
+    let dir = manifest_path("../corpus");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("silo") {
+            continue;
+        }
+        let parsed = parse_file(&path).unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        silo::ir::validate::validate(&parsed.program)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        seen += 1;
+    }
+    assert!(seen >= 8, "expected the full corpus on disk, found {seen} files");
+}
+
+/// Registered corpus kernels flow through the autotuner + VM exactly like
+/// built-in ones: `--pipeline auto` output is bit-identical to `none`.
+#[test]
+fn registered_corpus_kernels_validate_under_auto() {
+    for entry in corpus::corpus_kernels() {
+        validate_spec(entry.name, &PipelineSpec::Auto, MemSchedules::default(), 3)
+            .unwrap_or_else(|e| panic!("{} under auto: {e:#}", entry.name));
+    }
+}
+
+/// Registered corpus files must not carry `init(...)` annotations — the
+/// registry pairs them with `default_init`, and a silent drift between
+/// `silo run name` and `silo run file.silo` would be confusing.
+#[test]
+fn registered_corpus_files_use_default_init() {
+    for (name, src) in corpus::registered_sources() {
+        let parsed = parse_str(src).unwrap();
+        assert!(
+            parsed.inits.is_empty(),
+            "{name}: init annotations are reserved for mirror files"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parse_errors_carry_line_column_and_readable_messages() {
+    // (source, expected line, expected message fragment)
+    let cases: &[(&str, u32, &str)] = &[
+        ("program p {\n  array A[8]\n}\n", 3, "expected `;`"),
+        ("program p {\n  array A[8];\n  array A[9];\n}\n", 3, "duplicate container"),
+        (
+            "program p {\n  array A[8];\n  for (i = 0; i < 8; i += 1) {\n    B[i] = 1.0;\n  }\n}\n",
+            4,
+            "undeclared container `B`",
+        ),
+        (
+            "program p {\n  array A[8];\n  for (i = 0; j < 8; i += 1) {\n    A[i] = 1.0;\n  }\n}\n",
+            3,
+            "loop condition must test `i`",
+        ),
+        (
+            "program p {\n  array A[8];\n  for (i = 0; i < 8; i += 1) {\n    for (i = 0; i < 4; \
+             i += 1) {\n      A[i] = 1.0;\n    }\n  }\n}\n",
+            4,
+            "shadows an enclosing loop variable",
+        ),
+        (
+            "program p {\n  param n;\n  array A[n];\n  for (i = 0; i < n; i += 1) {\n    A[i] = \
+             nope(i);\n  }\n}\n",
+            5,
+            "unknown function `nope`",
+        ),
+        ("program p {\n  array A[8];\n  A[0] = 1.0\n}\n", 4, "expected `;`"),
+    ];
+    for (src, line, frag) in cases {
+        let e = parse_str(src).unwrap_err();
+        assert_eq!(e.line(), *line, "wrong line for {frag:?}: {e}");
+        assert!(e.col() >= 1);
+        assert!(
+            e.message().contains(frag),
+            "expected {frag:?} in: {e}"
+        );
+        // The Display form is the CLI-facing diagnostic.
+        assert!(e.to_string().contains("line"), "{e}");
+    }
+}
+
+#[test]
+fn resolve_handles_paths_and_near_misses() {
+    let ok = silo::kernels::resolve(
+        manifest_path("../corpus/blur_guard.silo").to_str().unwrap(),
+    )
+    .unwrap();
+    assert_eq!(ok.name(), "blur_guard");
+    assert_eq!(ok.program().name, "blur_guard");
+
+    let e = silo::kernels::resolve("no/such/file.silo").unwrap_err();
+    assert!(e.to_string().contains("no such file"), "{e}");
+
+    let e = silo::kernels::lookup("stencil_timr").unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("did you mean"), "{msg}");
+    assert!(msg.contains("stencil_time"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Randomized round-trip
+// ---------------------------------------------------------------------------
+
+/// Random index expression over the bound symbols.
+fn gen_index(rng: &mut Rng, syms: &[Sym], depth: usize) -> Expr {
+    if depth == 0 || rng.int(0, 3) == 0 {
+        return if rng.bool() {
+            int(rng.int(-4, 4))
+        } else {
+            Expr::Sym(*rng.pick(syms))
+        };
+    }
+    let a = gen_index(rng, syms, depth - 1);
+    let b = gen_index(rng, syms, depth - 1);
+    match rng.int(0, 5) {
+        0 => a + b,
+        1 => a - b,
+        2 => a * Expr::Sym(*rng.pick(syms)),
+        3 => min(a, b),
+        4 => max(a, b),
+        _ => imod(a, int(rng.int(2, 5))),
+    }
+}
+
+/// Random compute expression: index arithmetic + loads + real constants.
+fn gen_rhs(rng: &mut Rng, syms: &[Sym], containers: &[silo::symbolic::ContainerId]) -> Expr {
+    let reals = [0.25, 0.5, 1.5, 2.0, -1.0];
+    let coeff = Expr::real(*rng.pick(&reals));
+    let mut e = coeff * load(*rng.pick(containers), gen_index(rng, syms, 2));
+    for _ in 0..rng.int(0, 2) {
+        let term = if rng.bool() {
+            load(*rng.pick(containers), gen_index(rng, syms, 2))
+        } else {
+            func(FuncKind::Sqrt, vec![gen_index(rng, syms, 1)])
+        };
+        e = e + term;
+    }
+    e
+}
+
+fn gen_nodes(
+    b: &mut ProgramBuilder,
+    rng: &mut Rng,
+    case: u64,
+    depth: usize,
+    var_counter: &mut usize,
+    syms: &mut Vec<Sym>,
+    containers: &[silo::symbolic::ContainerId],
+) {
+    for _ in 0..rng.int(1, 2) {
+        if depth > 0 && rng.bool() {
+            let name = format!("fz{case}_v{}", *var_counter);
+            *var_counter += 1;
+            let v = b.sym(&name);
+            let start = gen_index(rng, syms, 1);
+            let end = gen_index(rng, syms, 1) + int(rng.int(1, 8));
+            let stride = match rng.int(0, 3) {
+                0 => int(1),
+                1 => int(2),
+                2 => int(-1),
+                _ => Expr::Sym(v), // Fig. 2-style self-referential stride.
+            };
+            syms.push(v);
+            b.for_(v, start, end, stride, |b| {
+                gen_nodes(b, rng, case, depth - 1, var_counter, syms, containers);
+            });
+            syms.pop();
+        } else {
+            let c = *rng.pick(containers);
+            let off = gen_index(rng, syms, 2);
+            let rhs = gen_rhs(rng, syms, containers);
+            if rng.bool() {
+                b.assign(c, off, rhs);
+            } else {
+                b.assign_if(gen_index(rng, syms, 1), c, off, rhs);
+            }
+        }
+    }
+}
+
+/// Fuzz: arbitrary generated programs survive print → parse exactly.
+#[test]
+fn random_programs_round_trip_through_the_printer() {
+    silo::proptest_lite::check("frontend_round_trip", 64, |rng| {
+        let case = rng.int(0, 1_000_000) as u64; // unique-ish name seed
+        let mut b = ProgramBuilder::new(&format!("fz_{case}"));
+        let n = b.param_positive(&format!("fz{case}_N"));
+        let m = b.dim_param(&format!("fz{case}_M"));
+        let size = Expr::Sym(n) * Expr::Sym(m) + int(64);
+        let containers = vec![
+            b.array("A", size.clone()),
+            b.array("B", size.clone()),
+            b.transient("T", size),
+        ];
+        let mut syms = vec![n, m];
+        let mut var_counter = 0;
+        gen_nodes(&mut b, rng, case, 2, &mut var_counter, &mut syms, &containers);
+        let p = b.finish();
+        silo::ir::validate::validate(&p).unwrap();
+
+        let text = pretty(&p);
+        let q = parse_str(&text)
+            .unwrap_or_else(|e| panic!("generated program failed to reparse: {e}\n{text}"))
+            .program;
+        assert_eq!(q, p, "round-trip mismatch on:\n{text}");
+        assert_eq!(pretty(&q), text);
+    });
+}
+
+/// Targeted grammar cases the fuzzer rarely hits: quoted names, dtypes,
+/// `<=`/`>=` bounds, pow, select, floordiv, explicit labels out of order.
+#[test]
+fn grammar_corner_cases_round_trip() {
+    let src = r#"
+program corners {
+  param cn_N: dim;
+  array "odd name"[cn_N]: f32;
+  transient acc[1]: i64;
+  L3: for (cn_i = 0; cn_i <= cn_N; cn_i += 2) {
+    s5: "odd name"[cn_i] = select(cn_i - 1, 0.5, 1.5);
+    acc[0] = "odd name"[floordiv(cn_i, 2)]^2 + abs(cn_i - cn_N);
+  }
+  L1: for (cn_j = cn_N; cn_j >= 1; cn_j += -1) {
+    "odd name"[cn_j] = recip("odd name"[cn_j]);
+  }
+}
+"#;
+    let p = parse_str(src).unwrap().program;
+    // `<=` normalizes to an exclusive end; `>=` likewise.
+    let loops = p.loops();
+    assert_eq!(loops.len(), 2);
+    assert_eq!(loops[0].id.0, 3);
+    assert_eq!(loops[1].id.0, 1);
+    assert_eq!(loops[0].end, Expr::Sym(Sym::new("cn_N")) + int(1));
+    assert_eq!(loops[1].end, int(0));
+    // Auto ids skip the explicit `s5`.
+    let ids: Vec<u32> = p.stmts().iter().map(|s| s.id.0).collect();
+    assert_eq!(ids, vec![5, 0, 1]);
+    // Exact round-trip (quoted names, dtypes, pow, functions included).
+    let text = pretty(&p);
+    let q = parse_str(&text).unwrap().program;
+    assert_eq!(q, p, "{text}");
+}
