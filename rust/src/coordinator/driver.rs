@@ -11,10 +11,10 @@
 
 use anyhow::{bail, Result};
 
-use crate::exec::Vm;
+use crate::exec::{Storage, Vm};
 use crate::ir::Program;
 use crate::kernels::{self, Preset};
-use crate::symbolic::Sym;
+use crate::symbolic::{ContainerId, Sym};
 use crate::transforms::{Pipeline, PipelineReport, PrefetchPass, PtrIncPass};
 
 /// Which optimization pipeline to run.
@@ -107,32 +107,46 @@ pub struct RunOutcome {
     pub wall: std::time::Duration,
 }
 
-/// Optimize and execute a registered kernel under a named configuration.
-pub fn optimize_and_run(
-    name: &str,
-    cfg: OptConfig,
-    mem: MemSchedules,
-    preset: Preset,
-    threads: usize,
-) -> Result<RunOutcome> {
-    optimize_and_run_spec(name, &PipelineSpec::Config(cfg), mem, preset, threads)
+/// A reusable compiled artifact: the optimized program, its pass report,
+/// and the lowered bytecode — the product of one optimize → lower run
+/// that can then execute any number of times under different parameter
+/// bindings and inputs. The service daemon's schedule cache stores
+/// exactly this, so repeated submissions skip analysis, autotuning, and
+/// lowering entirely.
+pub struct CompiledKernel {
+    pub name: String,
+    /// The program after optimization (what [`CompiledKernel::vm`] runs).
+    pub program: Program,
+    /// Pass log of the pipeline that produced [`CompiledKernel::program`]
+    /// (`None` when the spec resolved to an empty pipeline).
+    pub pipeline: Option<PipelineReport>,
+    /// The lowered, executable form.
+    pub vm: Vm,
 }
 
-/// Optimize and execute a kernel under an arbitrary pipeline spec.
-///
-/// `name` is either a registered kernel name or a path to a SILO-Text
-/// file (`corpus/stencil_time.silo`) — resolution goes through
-/// [`kernels::resolve`], so parsed programs flow through the identical
-/// optimize → lower → execute path with zero special cases.
-pub fn optimize_and_run_spec(
-    name: &str,
+impl CompiledKernel {
+    /// Execute the lowered program without recompiling anything. Returns
+    /// the final storage and the wall-clock execution time.
+    pub fn execute(
+        &self,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+    ) -> Result<(Storage, std::time::Duration)> {
+        let t0 = std::time::Instant::now();
+        let storage = self.vm.run(params, inputs, threads)?;
+        Ok((storage, t0.elapsed()))
+    }
+}
+
+/// Optimize `program` under `spec` (resolving `auto` through the tuner)
+/// and lower the result to bytecode once, yielding a [`CompiledKernel`]
+/// that executes without further compilation.
+pub fn compile_program(
+    mut program: Program,
     spec: &PipelineSpec,
     mem: MemSchedules,
-    preset: Preset,
-    threads: usize,
-) -> Result<RunOutcome> {
-    let kernel = kernels::resolve(name)?;
-    let mut program = kernel.program();
+) -> Result<CompiledKernel> {
     let pipeline = if matches!(spec, PipelineSpec::Auto) {
         // Cost-model-driven schedule search: the tuner picks the pipeline
         // per program; explicit --ptr-inc/--prefetch requests still apply
@@ -161,17 +175,48 @@ pub fn optimize_and_run_spec(
         }
     };
     crate::ir::validate::validate(&program)?;
-
-    let params: Vec<(Sym, i64)> = kernel.params(preset)?;
-    let inputs = kernel.inputs(&program, &params)?;
-    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
     let vm = Vm::compile(&program)?;
-    let t0 = std::time::Instant::now();
-    let storage = vm.run(&params, &refs, threads)?;
-    let wall = t0.elapsed();
-    Ok(RunOutcome {
+    Ok(CompiledKernel {
+        name: program.name.clone(),
         program,
         pipeline,
+        vm,
+    })
+}
+
+/// Optimize and execute a registered kernel under a named configuration.
+pub fn optimize_and_run(
+    name: &str,
+    cfg: OptConfig,
+    mem: MemSchedules,
+    preset: Preset,
+    threads: usize,
+) -> Result<RunOutcome> {
+    optimize_and_run_spec(name, &PipelineSpec::Config(cfg), mem, preset, threads)
+}
+
+/// Optimize and execute a kernel under an arbitrary pipeline spec.
+///
+/// `name` is either a registered kernel name or a path to a SILO-Text
+/// file (`corpus/stencil_time.silo`) — resolution goes through
+/// [`kernels::resolve`], so parsed programs flow through the identical
+/// optimize → lower → execute path with zero special cases.
+pub fn optimize_and_run_spec(
+    name: &str,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+    preset: Preset,
+    threads: usize,
+) -> Result<RunOutcome> {
+    let kernel = kernels::resolve(name)?;
+    let compiled = compile_program(kernel.program(), spec, mem)?;
+    let params: Vec<(Sym, i64)> = kernel.params(preset)?;
+    let inputs = kernel.inputs(&compiled.program, &params)?;
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let (storage, wall) = compiled.execute(&params, &refs, threads)?;
+    Ok(RunOutcome {
+        program: compiled.program,
+        pipeline: compiled.pipeline,
         storage,
         wall,
     })
@@ -320,6 +365,26 @@ mod tests {
     #[test]
     fn auto_spec_has_no_static_pipeline() {
         assert!(PipelineSpec::Auto.build(MemSchedules::default()).is_err());
+    }
+
+    /// A [`CompiledKernel`] is a reusable artifact: one compile, many
+    /// executions, identical results each time (the service cache's
+    /// contract).
+    #[test]
+    fn compiled_kernel_executes_repeatedly_without_recompiling() {
+        let kernel = kernels::resolve("jacobi_1d").unwrap();
+        let compiled = compile_program(
+            kernel.program(),
+            &PipelineSpec::Config(OptConfig::Cfg1),
+            MemSchedules::default(),
+        )
+        .unwrap();
+        let params = kernel.params(Preset::Tiny).unwrap();
+        let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let (a, _) = compiled.execute(&params, &refs, 1).unwrap();
+        let (b, _) = compiled.execute(&params, &refs, 3).unwrap();
+        assert_eq!(a.arrays, b.arrays, "repeat executions diverged");
     }
 
     #[test]

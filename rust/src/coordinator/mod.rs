@@ -6,7 +6,7 @@ pub mod experiments;
 pub mod report;
 
 pub use driver::{
-    optimize_and_run, optimize_and_run_spec, validate_config, validate_spec, MemSchedules,
-    OptConfig, PipelineSpec, RunOutcome,
+    compile_program, optimize_and_run, optimize_and_run_spec, validate_config, validate_spec,
+    CompiledKernel, MemSchedules, OptConfig, PipelineSpec, RunOutcome,
 };
 pub use report::Table;

@@ -164,11 +164,18 @@ impl ParsedKernel {
     /// Element initializer honoring `init(shift, scale)` annotations;
     /// containers without one use [`crate::kernels::default_init`].
     pub fn init_value(&self, name: &str, i: usize) -> f64 {
-        let base = crate::kernels::default_init(name, i);
-        match self.inits.iter().find(|s| s.container == name) {
-            Some(s) => s.shift + s.scale * base,
-            None => base,
-        }
+        init_value_with(&self.inits, name, i)
+    }
+}
+
+/// [`ParsedKernel::init_value`] over a bare annotation list — for
+/// callers (the service daemon) that keep the annotations without the
+/// rest of the parse.
+pub fn init_value_with(inits: &[InitSpec], name: &str, i: usize) -> f64 {
+    let base = crate::kernels::default_init(name, i);
+    match inits.iter().find(|s| s.container == name) {
+        Some(s) => s.shift + s.scale * base,
+        None => base,
     }
 }
 

@@ -35,6 +35,10 @@ struct Parser {
     used_stmt_ids: HashSet<u32>,
     next_loop: u32,
     next_stmt: u32,
+    /// Live recursion depth across nested loops/exprs — capped so a
+    /// hostile source (the service daemon parses network input) errors
+    /// instead of overflowing the stack.
+    depth: u32,
 }
 
 impl Parser {
@@ -52,7 +56,18 @@ impl Parser {
             used_stmt_ids: HashSet::new(),
             next_loop: 0,
             next_stmt: 0,
+            depth: 0,
         }
+    }
+
+    /// Bump the recursion depth; errors past the cap (deeply nested
+    /// parens/unary chains/loops cannot be legitimate kernels).
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > 512 {
+            return self.err(self.span(), "nesting too deep (max 512 levels)".into());
+        }
+        Ok(())
     }
 
     // -- token plumbing ----------------------------------------------------
@@ -442,6 +457,13 @@ impl Parser {
     }
 
     fn parse_node(&mut self) -> Result<Node, ParseError> {
+        self.enter()?;
+        let r = self.parse_node_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn parse_node_inner(&mut self) -> Result<Node, ParseError> {
         if self.at_kw("param")
             || self.at_kw("array")
             || self.at_kw("transient")
@@ -627,6 +649,13 @@ impl Parser {
     // -- expressions -------------------------------------------------------
 
     fn parse_expr(&mut self) -> Result<Expr, ParseError> {
+        self.enter()?;
+        let r = self.parse_expr_inner();
+        self.depth -= 1;
+        r
+    }
+
+    fn parse_expr_inner(&mut self) -> Result<Expr, ParseError> {
         let mut e = self.parse_term()?;
         loop {
             match self.peek() {
@@ -664,12 +693,15 @@ impl Parser {
     }
 
     fn parse_unary(&mut self) -> Result<Expr, ParseError> {
-        if *self.peek() == Tok::Minus {
+        self.enter()?;
+        let r = if *self.peek() == Tok::Minus {
             self.bump();
-            let e = self.parse_unary()?;
-            return Ok(-e);
-        }
-        self.parse_power()
+            self.parse_unary().map(|e| -e)
+        } else {
+            self.parse_power()
+        };
+        self.depth -= 1;
+        r
     }
 
     fn parse_power(&mut self) -> Result<Expr, ParseError> {

@@ -54,6 +54,8 @@ pub fn registered_sources() -> Vec<(&'static str, &'static str)> {
             include_str!("../../../corpus/stencil_time.silo"),
         ),
         ("blur_guard", include_str!("../../../corpus/blur_guard.silo")),
+        ("hdiff", include_str!("../../../corpus/hdiff.silo")),
+        ("csr_gather", include_str!("../../../corpus/csr_gather.silo")),
     ]
 }
 
@@ -85,6 +87,8 @@ corpus_entry!(build_fig2_tri, preset_fig2_tri, "fig2_tri");
 corpus_entry!(build_gather, preset_gather, "gather_stride");
 corpus_entry!(build_stencil_time, preset_stencil_time, "stencil_time");
 corpus_entry!(build_blur_guard, preset_blur_guard, "blur_guard");
+corpus_entry!(build_hdiff, preset_hdiff, "hdiff");
+corpus_entry!(build_csr_gather, preset_csr_gather, "csr_gather");
 
 /// Kernel entries for the registered corpus files. Registered corpus
 /// kernels use [`super::default_init`] (enforced by `tests/frontend.rs`:
@@ -120,6 +124,18 @@ pub fn corpus_kernels() -> Vec<KernelEntry> {
             name: "blur_guard",
             build: build_blur_guard,
             preset: preset_blur_guard,
+            init: super::default_init,
+        },
+        KernelEntry {
+            name: "hdiff",
+            build: build_hdiff,
+            preset: preset_hdiff,
+            init: super::default_init,
+        },
+        KernelEntry {
+            name: "csr_gather",
+            build: build_csr_gather,
+            preset: preset_csr_gather,
             init: super::default_init,
         },
     ]

@@ -23,6 +23,19 @@ pub enum Preset {
     Medium,
 }
 
+impl Preset {
+    /// Parse a CLI/wire preset name — the one mapping the CLI, the
+    /// service daemon, and the client all share.
+    pub fn parse(s: &str) -> Result<Preset> {
+        match s {
+            "tiny" => Ok(Preset::Tiny),
+            "small" => Ok(Preset::Small),
+            "medium" => Ok(Preset::Medium),
+            other => bail!("unknown preset `{other}` (tiny|small|medium)"),
+        }
+    }
+}
+
 /// A registered kernel: builder + presets + deterministic input generator.
 #[derive(Clone, Copy)]
 pub struct KernelEntry {

@@ -28,6 +28,7 @@ pub mod lowering;
 pub mod machine;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod service;
 pub mod symbolic;
 pub mod schedules;
 pub mod transforms;

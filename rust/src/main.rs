@@ -12,6 +12,14 @@
 //!   silo tune <kernel>                         — autotuner candidate table
 //!   silo experiment <fig1|fig2|fig9|table1|fig10|autotune|all>
 //!   silo artifacts                             — list PJRT artifacts
+//!   silo serve [--addr=H:P] [--threads=N] [--cache-cap=N]
+//!            — the service daemon: POST /compile + /run/<id>, GET
+//!              /kernels /metrics /healthz, content-addressed LRU
+//!              schedule cache (default addr 127.0.0.1:7420)
+//!   silo submit <file>.silo [--addr=H:P] [--pipeline=SPEC]
+//!            [--preset=tiny|small|medium] [--threads=N] [--check]
+//!            — compile + run on a daemon; --check re-runs the program
+//!              locally (unoptimized) and compares outputs bitwise
 //!
 //! `<kernel>` is a registered name (`silo list`) **or a path to a
 //! SILO-Text file** — `silo run corpus/stencil_time.silo --pipeline=auto`
@@ -82,11 +90,10 @@ impl Args {
         }
     }
 
-    fn preset(&self) -> Preset {
-        match self.value("--preset").as_deref() {
-            Some("small") => Preset::Small,
-            Some("medium") => Preset::Medium,
-            _ => Preset::Tiny,
+    fn preset(&self) -> anyhow::Result<Preset> {
+        match self.value("--preset") {
+            Some(v) => Preset::parse(&v),
+            None => Ok(Preset::Tiny),
         }
     }
 
@@ -125,7 +132,7 @@ fn real_main() -> anyhow::Result<()> {
                 name,
                 &args.spec(),
                 args.mem(),
-                args.preset(),
+                args.preset()?,
                 args.threads(),
             )?;
             println!(
@@ -165,6 +172,76 @@ fn real_main() -> anyhow::Result<()> {
                 println!("{a}");
             }
         }
+        Some("serve") => {
+            let config = silo::service::ServiceConfig {
+                addr: args
+                    .value("--addr")
+                    .unwrap_or_else(|| "127.0.0.1:7420".to_string()),
+                workers: args
+                    .value("--threads")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(4),
+                cache_cap: args
+                    .value("--cache-cap")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(64),
+                ..silo::service::ServiceConfig::default()
+            };
+            let server = silo::service::Server::serve(&config)?;
+            println!(
+                "silo service listening on http://{} ({} workers, cache capacity {})",
+                server.addr(),
+                config.workers.max(1),
+                config.cache_cap
+            );
+            server.join();
+        }
+        Some("submit") => {
+            let file = args.positional.get(1).ok_or_else(usage)?;
+            let source = std::fs::read_to_string(file)
+                .map_err(|e| anyhow::anyhow!("cannot read {file}: {e}"))?;
+            let addr = args
+                .value("--addr")
+                .unwrap_or_else(|| "127.0.0.1:7420".to_string());
+            let pipeline = args
+                .value("--pipeline")
+                .unwrap_or_else(|| "auto".to_string());
+            let run_req = silo::service::RunRequest {
+                preset: args.value("--preset").unwrap_or_else(|| "tiny".to_string()),
+                threads: args.threads(),
+                ..silo::service::RunRequest::default()
+            };
+            let client = silo::service::Client::new(&addr);
+            let out = client.submit_source(&source, &pipeline, &run_req)?;
+            let status = if out.compile.cached {
+                "cache hit: analysis + autotuning skipped"
+            } else if out.compile.coalesced {
+                "coalesced onto a concurrent compile"
+            } else {
+                "compiled"
+            };
+            println!(
+                "{}: kernel {} ({}, {status})",
+                out.compile.name, out.compile.kernel, out.compile.pipeline
+            );
+            for (pass, detail) in &out.compile.passes {
+                println!("  [{pass}] {detail}");
+            }
+            println!(
+                "ran {} preset on the daemon in {:.3} ms — {} output container(s):",
+                run_req.preset,
+                out.run.wall_ms,
+                out.run.outputs.len()
+            );
+            for (name, data) in &out.run.outputs {
+                let sum: f64 = data.iter().sum();
+                println!("  {name}[{}] checksum {sum:.6}", data.len());
+            }
+            if args.has("--check") {
+                silo::service::check_against_local(&source, &run_req, &out.run)?;
+                println!("outputs bit-identical to the local unoptimized baseline ✓");
+            }
+        }
         _ => return Err(usage()),
     }
     Ok(())
@@ -172,10 +249,12 @@ fn real_main() -> anyhow::Result<()> {
 
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
-        "usage: silo <list|show|run|validate|tune|experiment|artifacts> [args]\n\
+        "usage: silo <list|show|run|validate|tune|experiment|artifacts|serve|submit> [args]\n\
          kernels: a registered name (see `silo list`) or a .silo file path\n\
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
+         service: `silo serve [--addr=H:P --threads=N --cache-cap=N]`, then\n\
+         `silo submit file.silo [--addr=H:P --pipeline=SPEC --preset=P --check]`\n\
          see rust/src/main.rs header for details"
     )
 }

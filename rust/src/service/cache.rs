@@ -1,0 +1,396 @@
+//! The sharded, content-addressed schedule cache — the heart of the
+//! service daemon.
+//!
+//! Keys are 64-bit content hashes ([`kernel_key`]): FNV-1a over the
+//! **canonical printing** of the parsed program (so whitespace, comments,
+//! and label spelling never fragment the cache), its preset/`init`
+//! annotations (they live outside the printed grammar), and the
+//! normalized pipeline spec. Values are whatever the caller compiles —
+//! the daemon stores a full `ServedKernel` (tuned program + lowered VM),
+//! so a repeat submission skips parsing-to-bytecode entirely.
+//!
+//! Three properties the tests pin:
+//!
+//! * **LRU at capacity** — each shard evicts its least-recently-used
+//!   completed entry once it exceeds its share of the capacity;
+//! * **coalescing** — concurrent `get_or_build` calls for one key run
+//!   the builder exactly once, with every other caller blocking on the
+//!   in-flight slot instead of duplicating the (expensive) autotune;
+//! * **error transparency** — failed builds are reported to all waiters
+//!   but never occupy a cache slot.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::frontend::ParsedKernel;
+use crate::ir::pretty::pretty;
+
+/// How a [`ScheduleCache::get_or_build`] call was satisfied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Completed entry found — no compile work at all.
+    Hit,
+    /// This call ran the builder.
+    Miss,
+    /// Another thread was already building the same key; this call
+    /// waited for its result instead of duplicating the work.
+    Coalesced,
+}
+
+/// Point-in-time counter snapshot (`GET /metrics`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+struct Slot<V> {
+    val: Arc<V>,
+    last_used: u64,
+    /// Compile-path hits only (`touch` bumps recency, not this).
+    hits: u64,
+}
+
+struct Inflight<V> {
+    done: Mutex<Option<Result<Arc<V>, String>>>,
+    cv: Condvar,
+}
+
+struct Shard<V> {
+    entries: HashMap<u64, Slot<V>>,
+    inflight: HashMap<u64, Arc<Inflight<V>>>,
+}
+
+impl<V> Shard<V> {
+    fn new() -> Shard<V> {
+        Shard {
+            entries: HashMap::new(),
+            inflight: HashMap::new(),
+        }
+    }
+}
+
+/// A sharded LRU map with single-flight builds. Lock granularity is one
+/// mutex per shard; builders run with no lock held.
+pub struct ScheduleCache<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    cap_per_shard: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<V> ScheduleCache<V> {
+    /// `capacity` completed entries across the default 8 shards.
+    pub fn new(capacity: usize) -> ScheduleCache<V> {
+        ScheduleCache::with_shards(capacity, 8)
+    }
+
+    /// Explicit shard count (tests use 1 shard for deterministic LRU).
+    /// Each shard holds `max(1, capacity / shards)` entries.
+    pub fn with_shards(capacity: usize, shards: usize) -> ScheduleCache<V> {
+        let shards = shards.max(1);
+        ScheduleCache {
+            shards: (0..shards).map(|_| Mutex::new(Shard::new())).collect(),
+            cap_per_shard: (capacity / shards).max(1),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard<V>> {
+        &self.shards[(key % self.shards.len() as u64) as usize]
+    }
+
+    fn next_tick(&self) -> u64 {
+        self.tick.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Return the cached value for `key`, or run `build` to create it.
+    /// Concurrent calls for the same key coalesce onto one build; the
+    /// builder runs outside every lock.
+    pub fn get_or_build(
+        &self,
+        key: u64,
+        build: impl FnOnce() -> Result<V, String>,
+    ) -> (Result<Arc<V>, String>, Outcome) {
+        let waiting = {
+            let mut s = self.shard(key).lock().unwrap();
+            if let Some(slot) = s.entries.get_mut(&key) {
+                slot.last_used = self.next_tick();
+                slot.hits += 1;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return (Ok(slot.val.clone()), Outcome::Hit);
+            }
+            match s.inflight.get(&key) {
+                Some(inf) => Some(inf.clone()),
+                None => {
+                    let inf = Arc::new(Inflight {
+                        done: Mutex::new(None),
+                        cv: Condvar::new(),
+                    });
+                    s.inflight.insert(key, inf);
+                    None
+                }
+            }
+        };
+        if let Some(inf) = waiting {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            let mut done = inf.done.lock().unwrap();
+            while done.is_none() {
+                done = inf.cv.wait(done).unwrap();
+            }
+            return (done.clone().unwrap(), Outcome::Coalesced);
+        }
+        // This call owns the build (no lock held while it runs). A panic
+        // is demoted to an error so waiters are never stranded.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(build))
+            .unwrap_or_else(|_| Err("builder panicked".to_string()))
+            .map(Arc::new);
+        {
+            let mut s = self.shard(key).lock().unwrap();
+            if let Ok(v) = &result {
+                let slot = Slot {
+                    val: v.clone(),
+                    last_used: self.next_tick(),
+                    hits: 0,
+                };
+                s.entries.insert(key, slot);
+                while s.entries.len() > self.cap_per_shard {
+                    let Some(lru) =
+                        s.entries.iter().min_by_key(|(_, sl)| sl.last_used).map(|(k, _)| *k)
+                    else {
+                        break;
+                    };
+                    s.entries.remove(&lru);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Publish to waiters and clear the in-flight slot under the
+            // same shard lock, so no reader can observe "neither entry
+            // nor in-flight" for a completed build.
+            if let Some(inf) = s.inflight.remove(&key) {
+                let mut done = inf.done.lock().unwrap();
+                *done = Some(result.clone());
+                inf.cv.notify_all();
+            }
+        }
+        (result, Outcome::Miss)
+    }
+
+    /// Recency-bumping lookup that does **not** count toward hit/miss —
+    /// the run path touches entries without implying compile reuse.
+    pub fn touch(&self, key: u64) -> Option<Arc<V>> {
+        let mut s = self.shard(key).lock().unwrap();
+        let slot = s.entries.get_mut(&key)?;
+        slot.last_used = self.next_tick();
+        Some(slot.val.clone())
+    }
+
+    /// Lookup without any side effect (tests).
+    pub fn peek(&self, key: u64) -> Option<Arc<V>> {
+        let s = self.shard(key).lock().unwrap();
+        s.entries.get(&key).map(|slot| slot.val.clone())
+    }
+
+    /// Resident completed entries.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total completed-entry capacity across shards.
+    pub fn capacity(&self) -> usize {
+        self.cap_per_shard * self.shards.len()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+            capacity: self.capacity(),
+        }
+    }
+
+    /// `(key, value, compile-path hits)` for every resident entry,
+    /// sorted by key for deterministic listings (`GET /kernels`).
+    pub fn entries(&self) -> Vec<(u64, Arc<V>, u64)> {
+        let mut out: Vec<(u64, Arc<V>, u64)> = Vec::new();
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            out.extend(s.entries.iter().map(|(k, sl)| (*k, sl.val.clone(), sl.hits)));
+        }
+        out.sort_by_key(|(k, _, _)| *k);
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Content-addressed keys
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Content hash of one submission: canonical program text × annotations
+/// × normalized pipeline spec. Submissions that differ only in
+/// formatting, comments, or declaration spelling collapse onto one key;
+/// anything observable (structure, presets, `init`s, spec) separates.
+pub fn kernel_key(parsed: &ParsedKernel, spec: &str) -> u64 {
+    let mut h = fnv(FNV_OFFSET, pretty(&parsed.program).as_bytes());
+    h = fnv(h, &[0]);
+    h = fnv(h, spec.as_bytes());
+    for (sym, b) in &parsed.presets {
+        h = fnv(h, &[1]);
+        h = fnv(h, sym.name().as_bytes());
+        for v in [b.tiny, b.small, b.medium] {
+            match v {
+                Some(v) => h = fnv(h, &v.to_le_bytes()),
+                None => h = fnv(h, &[0xff]),
+            }
+        }
+    }
+    for init in &parsed.inits {
+        h = fnv(h, &[2]);
+        h = fnv(h, init.container.as_bytes());
+        h = fnv(h, &init.shift.to_bits().to_le_bytes());
+        h = fnv(h, &init.scale.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Wire form of a cache key: `k` + 16 hex digits.
+pub fn kernel_id(key: u64) -> String {
+    format!("k{key:016x}")
+}
+
+/// Parse a wire kernel id back to its key.
+pub fn parse_kernel_id(id: &str) -> Option<u64> {
+    let hex = id.strip_prefix('k')?;
+    if hex.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn hit_after_insert_and_stats() {
+        let cache: ScheduleCache<i32> = ScheduleCache::with_shards(4, 1);
+        let (v, o) = cache.get_or_build(7, || Ok(42));
+        assert_eq!((*v.unwrap(), o), (42, Outcome::Miss));
+        let (v, o) = cache.get_or_build(7, || panic!("must not rebuild"));
+        assert_eq!((*v.unwrap(), o), (42, Outcome::Hit));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries, s.capacity), (1, 1, 1, 4));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_at_capacity() {
+        let cache: ScheduleCache<&'static str> = ScheduleCache::with_shards(2, 1);
+        cache.get_or_build(1, || Ok("a"));
+        cache.get_or_build(2, || Ok("b"));
+        assert!(cache.touch(1).is_some()); // 1 is now more recent than 2
+        cache.get_or_build(3, || Ok("c")); // evicts 2
+        assert!(cache.peek(1).is_some());
+        assert!(cache.peek(2).is_none());
+        assert!(cache.peek(3).is_some());
+        let s = cache.stats();
+        assert_eq!((s.evictions, s.entries), (1, 2));
+        // Rebuilding the evicted key is a miss, not a hit.
+        let (_, o) = cache.get_or_build(2, || Ok("b2"));
+        assert_eq!(o, Outcome::Miss);
+    }
+
+    #[test]
+    fn concurrent_builds_for_one_key_coalesce() {
+        let cache: ScheduleCache<u64> = ScheduleCache::new(8);
+        let builds = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    let (v, _) = cache.get_or_build(99, || {
+                        builds.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(25));
+                        Ok(123)
+                    });
+                    assert_eq!(*v.unwrap(), 123);
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "duplicate builds ran");
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits + s.coalesced, 7);
+    }
+
+    #[test]
+    fn failed_builds_are_not_cached_and_wake_waiters() {
+        let cache: ScheduleCache<i32> = ScheduleCache::new(8);
+        let (r, o) = cache.get_or_build(5, || Err("boom".to_string()));
+        assert_eq!(o, Outcome::Miss);
+        assert_eq!(r.unwrap_err(), "boom");
+        assert!(cache.peek(5).is_none());
+        // A panicking builder is demoted to an error, not a poisoned slot.
+        let (r, _) = cache.get_or_build(6, || panic!("bang"));
+        assert!(r.unwrap_err().contains("panicked"));
+        assert!(cache.peek(6).is_none());
+        // The keys stay buildable.
+        let (r, o) = cache.get_or_build(5, || Ok(1));
+        assert_eq!((*r.unwrap(), o), (1, Outcome::Miss));
+    }
+
+    #[test]
+    fn kernel_keys_hash_canonical_structure_not_text() {
+        let a = crate::frontend::parse_str("program ck1 {\n  array A[8];\n  A[0] = 1.0;\n}\n")
+            .unwrap();
+        let b = crate::frontend::parse_str(
+            "// formatting-only differences\nprogram ck1 {\n  array  A[ 8 ];\n  A[0]   = \
+             1.0;\n}\n",
+        )
+        .unwrap();
+        assert_eq!(kernel_key(&a, "auto"), kernel_key(&b, "auto"));
+        assert_ne!(kernel_key(&a, "auto"), kernel_key(&a, "cfg1"));
+    }
+
+    #[test]
+    fn kernel_ids_round_trip() {
+        for key in [0u64, 1, u64::MAX, 0xdead_beef_0123_4567] {
+            let id = kernel_id(key);
+            assert_eq!(parse_kernel_id(&id), Some(key), "{id}");
+        }
+        assert_eq!(parse_kernel_id("nope"), None);
+        assert_eq!(parse_kernel_id("k123"), None);
+        assert_eq!(parse_kernel_id("kzzzzzzzzzzzzzzzz"), None);
+    }
+}

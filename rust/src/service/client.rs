@@ -1,0 +1,154 @@
+//! Client for the service wire protocol — `silo submit`, the tests, and
+//! CI all drive the daemon through this, so the loop from SILO-Text
+//! source to validated outputs closes end to end in-crate.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{compile_program, MemSchedules, OptConfig, PipelineSpec};
+use crate::ir::ContainerKind;
+use crate::kernels::Preset;
+use crate::symbolic::Sym;
+
+use super::http;
+use super::json::Json;
+use super::protocol::{CompileReply, CompileRequest, RunReply, RunRequest};
+
+/// A thin, connection-per-request client (mirrors the daemon's
+/// `Connection: close` policy).
+#[derive(Debug, Clone)]
+pub struct Client {
+    addr: String,
+}
+
+/// What one `submit` (compile + run) produced.
+pub struct SubmitOutcome {
+    pub compile: CompileReply,
+    pub run: RunReply,
+}
+
+impl Client {
+    /// `addr` is `host:port` (the daemon default is `127.0.0.1:7420`).
+    pub fn new(addr: &str) -> Client {
+        Client {
+            addr: addr.to_string(),
+        }
+    }
+
+    fn request(&self, method: &str, path: &str, body: &str) -> Result<Json> {
+        let (status, text) = http::roundtrip(&self.addr, method, path, body)?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("{method} {path}: malformed response body: {e}"))?;
+        if status != 200 {
+            let msg = v.get("error").and_then(Json::as_str).unwrap_or(&text);
+            bail!("{method} {path}: HTTP {status}: {msg}");
+        }
+        Ok(v)
+    }
+
+    pub fn healthz(&self) -> Result<Json> {
+        self.request("GET", "/healthz", "")
+    }
+
+    pub fn metrics(&self) -> Result<Json> {
+        self.request("GET", "/metrics", "")
+    }
+
+    pub fn kernels(&self) -> Result<Json> {
+        self.request("GET", "/kernels", "")
+    }
+
+    /// Submit SILO-Text for compilation under `pipeline` (e.g. `auto`).
+    pub fn compile(&self, source: &str, pipeline: &str) -> Result<CompileReply> {
+        let body = CompileRequest::new(source, pipeline).to_json().to_string();
+        let v = self.request("POST", "/compile", &body)?;
+        CompileReply::from_json(&v).map_err(|e| anyhow!("POST /compile: {e}"))
+    }
+
+    /// Execute a compiled kernel by id.
+    pub fn run(&self, id: &str, req: &RunRequest) -> Result<RunReply> {
+        let path = format!("/run/{id}");
+        let v = self.request("POST", &path, &req.to_json().to_string())?;
+        RunReply::from_json(&v).map_err(|e| anyhow!("POST {path}: {e}"))
+    }
+
+    /// Compile + run in one call — the `silo submit` path.
+    pub fn submit_source(
+        &self,
+        source: &str,
+        pipeline: &str,
+        run: &RunRequest,
+    ) -> Result<SubmitOutcome> {
+        let compile = self.compile(source, pipeline)?;
+        let run = self.run(&compile.kernel, run)?;
+        Ok(SubmitOutcome { compile, run })
+    }
+}
+
+/// The end-to-end check behind `silo submit --check` and the CI smoke
+/// job: the daemon's outputs must be **bit-identical** to a local,
+/// unoptimized run of the same source — the same invariant `silo
+/// validate` pins for local pipelines, stretched across the wire.
+pub fn check_against_local(source: &str, run_req: &RunRequest, reply: &RunReply) -> Result<()> {
+    let parsed = crate::frontend::parse_str(source)?;
+    let compiled = compile_program(
+        parsed.program.clone(),
+        &PipelineSpec::Config(OptConfig::None),
+        MemSchedules::default(),
+    )?;
+    let preset = Preset::parse(&run_req.preset)?;
+    // Rebuild the daemon's parameter bindings: explicit wins, preset
+    // annotation otherwise.
+    let mut params: Vec<(Sym, i64)> = Vec::new();
+    for sym in &compiled.program.params {
+        let explicit = run_req
+            .params
+            .iter()
+            .find(|(n, _)| n.as_str() == sym.name())
+            .map(|(_, v)| *v);
+        let value = explicit.or_else(|| {
+            parsed
+                .presets
+                .iter()
+                .find(|(s, _)| s == sym)
+                .and_then(|(_, b)| b.get(preset))
+        });
+        match value {
+            Some(v) => params.push((*sym, v)),
+            None => bail!("param `{}` unbound locally", sym.name()),
+        }
+    }
+    let inputs = crate::kernels::gen_inputs_with(&compiled.program, &params, |name, i| {
+        match run_req.inputs.iter().find(|(n, _)| n == name) {
+            Some((_, data)) => data[i],
+            None => parsed.init_value(name, i),
+        }
+    })?;
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let (storage, _) = compiled.execute(&params, &refs, 1)?;
+
+    for (name, remote) in &reply.outputs {
+        let container = compiled
+            .program
+            .containers
+            .iter()
+            .find(|c| c.kind == ContainerKind::Argument && c.name == *name)
+            .ok_or_else(|| anyhow!("daemon returned unknown container `{name}`"))?;
+        let local = &storage.arrays[container.id.0 as usize];
+        if local.len() != remote.len() {
+            bail!(
+                "output `{name}`: daemon returned {} elements, local run has {}",
+                remote.len(),
+                local.len()
+            );
+        }
+        for (i, (l, r)) in local.iter().zip(remote.iter()).enumerate() {
+            if l.to_bits() != r.to_bits() {
+                bail!(
+                    "output `{name}`[{i}] diverged: daemon {r:?} vs local baseline {l:?} \
+                     (bitwise)"
+                );
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! Tiny HTTP/1.1 framing over `std::net` — exactly enough for the
+//! service's fixed-length JSON bodies. Shared by the daemon and the
+//! client so the two ends cannot drift: one request per connection
+//! (`Connection: close`), bodies framed by `Content-Length`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Largest accepted message body. Compile sources and run inputs sit far
+/// below this; the cap keeps a misbehaving peer from ballooning a
+/// worker's memory.
+pub const MAX_BODY: usize = 16 * 1024 * 1024;
+
+/// Largest accepted request/status/header line — same rationale as
+/// [`MAX_BODY`], enforced by the capped line reader so a newline-free
+/// byte stream cannot grow a worker's memory either.
+const MAX_LINE: usize = 64 * 1024;
+
+/// Per-connection socket timeout (both directions). Generous because a
+/// cold `/compile` of a large program autotunes before replying.
+pub const IO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// A parsed request: method, path, headers, raw body.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The body as UTF-8 text (the protocol is all JSON).
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not UTF-8")
+    }
+}
+
+/// `read_line` with a hard cap: returns the line including its
+/// terminator, or everything up to EOF (empty string = clean EOF).
+fn read_line_capped<R: BufRead>(stream: &mut R, cap: usize) -> Result<String> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let buf = stream.fill_buf()?;
+        if buf.is_empty() {
+            break; // EOF
+        }
+        let (chunk_len, done) = match buf.iter().position(|&b| b == b'\n') {
+            Some(p) => (p + 1, true),
+            None => (buf.len(), false),
+        };
+        line.extend_from_slice(&buf[..chunk_len]);
+        stream.consume(chunk_len);
+        if done {
+            break;
+        }
+        if line.len() > cap {
+            bail!("line too long ({} bytes, cap {cap})", line.len());
+        }
+    }
+    Ok(String::from_utf8_lossy(&line).into_owned())
+}
+
+/// Read one request (blocking; body framed by `Content-Length`).
+pub fn read_request<R: BufRead>(stream: &mut R) -> Result<Request> {
+    let line = read_line_capped(stream, MAX_LINE)?;
+    if line.is_empty() {
+        bail!("peer closed before sending a request");
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1") {
+        bail!("malformed request line: {}", line.trim_end());
+    }
+    let headers = read_headers(stream)?;
+    let len = content_length(&headers)?;
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).context("truncated request body")?;
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body,
+    })
+}
+
+/// Write a JSON response with a fixed status set and `Connection: close`.
+pub fn write_response<W: Write>(stream: &mut W, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    };
+    let msg = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// One client-side exchange: connect, send, read the full response.
+/// Returns `(status, body)`.
+pub fn roundtrip(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("cannot connect to {addr}"))?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    (&stream).write_all(req.as_bytes())?;
+    (&stream).flush()?;
+    let mut reader = BufReader::new(&stream);
+    read_response(&mut reader)
+}
+
+/// Read a response (status + headers + `Content-Length` body).
+pub fn read_response<R: BufRead>(stream: &mut R) -> Result<(u16, String)> {
+    let line = read_line_capped(stream, MAX_LINE)?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("malformed status line: {}", line.trim_end()))?;
+    let headers = read_headers(stream)?;
+    let len = content_length(&headers)?;
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body).context("truncated response body")?;
+    Ok((status, String::from_utf8(body).context("response body is not UTF-8")?))
+}
+
+fn read_headers<R: BufRead>(stream: &mut R) -> Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    for _ in 0..64 {
+        let h = read_line_capped(stream, MAX_LINE)?;
+        if h.is_empty() {
+            bail!("peer closed mid-headers");
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            return Ok(headers);
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    bail!("too many headers")
+}
+
+fn content_length(headers: &[(String, String)]) -> Result<usize> {
+    let len = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| v.parse::<usize>().context("malformed Content-Length"))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        bail!("body too large: {len} bytes (max {MAX_BODY})");
+    }
+    Ok(len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_parses_with_body() {
+        let raw = "POST /compile HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/compile");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body_str().unwrap(), "hello");
+    }
+
+    #[test]
+    fn request_without_body_parses() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut Cursor::new(raw)).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        for raw in [
+            "",
+            "GARBAGE\r\n\r\n",
+            "GET /x SPDY/3\r\n\r\n",
+            "POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort",
+            "POST /x HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n",
+        ] {
+            assert!(read_request(&mut Cursor::new(raw)).is_err(), "accepted {raw:?}");
+        }
+    }
+
+    #[test]
+    fn newline_free_streams_are_rejected_not_buffered() {
+        // A request line with no terminator must hit the line cap, not
+        // grow the worker's memory until OOM.
+        let huge = vec![b'a'; MAX_LINE + 8192];
+        let e = read_request(&mut Cursor::new(huge)).unwrap_err();
+        assert!(e.to_string().contains("line too long"), "{e}");
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 404, "{\"error\":\"nope\"}").unwrap();
+        let (status, body) = read_response(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body, "{\"error\":\"nope\"}");
+    }
+}

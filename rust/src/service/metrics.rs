@@ -1,0 +1,56 @@
+//! Service request counters (`GET /metrics`).
+//!
+//! All updates are relaxed atomics — the endpoint is an observability
+//! surface, not a synchronization point. Cache-level counters
+//! (hits/misses/coalesced/evictions) live on the
+//! [`ScheduleCache`](super::cache::ScheduleCache) itself; the metrics
+//! endpoint merges both sets into one JSON document.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Monotonic daemon counters. Latency totals are in microseconds so tiny
+/// kernels still register; `/metrics` reports derived milliseconds.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Every request that reached the router (any endpoint, any status).
+    pub requests: AtomicU64,
+    /// Responses with a non-200 status.
+    pub errors: AtomicU64,
+    /// Builder runs: compile-path cache misses that actually optimized,
+    /// tuned, and lowered a program.
+    pub compiles: AtomicU64,
+    pub compile_us_total: AtomicU64,
+    /// Completed `/run/<id>` executions.
+    pub runs: AtomicU64,
+    pub run_us_total: AtomicU64,
+}
+
+impl Metrics {
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add_time(counter: &AtomicU64, wall: Duration) {
+        counter.fetch_add(wall.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        Metrics::bump(&m.requests);
+        Metrics::bump(&m.requests);
+        Metrics::add_time(&m.run_us_total, Duration::from_millis(3));
+        assert_eq!(Metrics::get(&m.requests), 2);
+        assert_eq!(Metrics::get(&m.run_us_total), 3000);
+    }
+}

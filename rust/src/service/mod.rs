@@ -1,0 +1,46 @@
+//! The SILO service daemon — a cached compile-and-run server over the
+//! whole optimizer stack (`silo serve` / `silo submit`).
+//!
+//! The paper positions SILO as a practical optimization pipeline for
+//! real HPC applications; this subsystem makes the pipeline *persistent*:
+//! a dependency-free HTTP/1.1 daemon (std::net + a worker thread pool)
+//! that accepts SILO-Text over `POST /compile`, resolves it through the
+//! frontend → autotuner → lowering stack exactly once, and keeps the
+//! resulting [`CompiledKernel`](crate::coordinator::CompiledKernel) in a
+//! sharded, content-addressed LRU cache ([`cache::ScheduleCache`]). A
+//! repeat submission — byte-identical or merely *canonically* identical
+//! (comments, whitespace, label spelling) — skips dependence analysis,
+//! schedule search, and bytecode lowering entirely, amortizing the
+//! optimizer across submissions the way a Daisytuner-style tuning
+//! service amortizes normalization. `POST /run/<id>` then executes the
+//! cached artifact on the threaded VM with per-request parameter
+//! bindings and inputs.
+//!
+//! Layers (each its own module, server-side top down):
+//!
+//! | Module      | Role                                                  |
+//! |-------------|-------------------------------------------------------|
+//! | [`server`]  | Listener, worker pool, router, endpoint handlers      |
+//! | [`cache`]   | Sharded LRU + single-flight builds, content hashing   |
+//! | [`protocol`]| Request/response shapes shared by daemon and client   |
+//! | [`http`]    | Minimal HTTP/1.1 framing over std::net                |
+//! | [`json`]    | Dependency-free JSON with bit-exact f64 round-trips   |
+//! | [`metrics`] | Relaxed-atomic counters behind `GET /metrics`         |
+//! | [`client`]  | `silo submit`, tests, and CI drive the daemon here    |
+//!
+//! Wire protocol and cache-key definition: DESIGN.md §Service.
+
+pub mod cache;
+pub mod client;
+pub mod http;
+pub mod json;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+
+pub use cache::{CacheStats, Outcome, ScheduleCache};
+pub use client::{check_against_local, Client, SubmitOutcome};
+pub use json::Json;
+pub use metrics::Metrics;
+pub use protocol::{CompileReply, CompileRequest, RunReply, RunRequest};
+pub use server::{ServedKernel, Server, ServiceConfig};

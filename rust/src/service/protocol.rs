@@ -1,0 +1,397 @@
+//! Wire protocol: the request/response shapes of every endpoint, in one
+//! place so the daemon and the client cannot drift. All bodies are JSON
+//! (see [`super::json`]); DESIGN.md §Service documents the schemas.
+//!
+//! | Endpoint          | Request            | Response           |
+//! |-------------------|--------------------|--------------------|
+//! | `POST /compile`   | [`CompileRequest`] | [`CompileReply`]   |
+//! | `POST /run/<id>`  | [`RunRequest`]     | [`RunReply`]       |
+//! | `GET /kernels`    | —                  | array of kernels   |
+//! | `GET /metrics`    | —                  | counter object     |
+//! | `GET /healthz`    | —                  | `{"ok":true,...}`  |
+//!
+//! Non-200 responses carry `{"error": "<message>"}` ([`error_body`]).
+
+use super::json::Json;
+
+/// `POST /compile`: a SILO-Text module plus a pipeline spec (the same
+/// strings `--pipeline` accepts; defaults to `auto`).
+#[derive(Debug, Clone)]
+pub struct CompileRequest {
+    pub source: String,
+    pub pipeline: String,
+}
+
+impl CompileRequest {
+    pub fn new(source: &str, pipeline: &str) -> CompileRequest {
+        CompileRequest {
+            source: source.to_string(),
+            pipeline: pipeline.to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("source".into(), Json::Str(self.source.clone())),
+            ("pipeline".into(), Json::Str(self.pipeline.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CompileRequest, String> {
+        let source = v
+            .get("source")
+            .and_then(Json::as_str)
+            .ok_or("missing string field `source` (SILO-Text)")?
+            .to_string();
+        let pipeline = match v.get("pipeline") {
+            None | Some(Json::Null) => "auto".to_string(),
+            Some(p) => p.as_str().ok_or("field `pipeline` must be a string")?.to_string(),
+        };
+        Ok(CompileRequest { source, pipeline })
+    }
+}
+
+/// `POST /compile` success reply.
+#[derive(Debug, Clone)]
+pub struct CompileReply {
+    /// Content-addressed kernel id (`k` + 16 hex digits) for `/run/<id>`.
+    pub kernel: String,
+    pub name: String,
+    /// Normalized pipeline spec the artifact was compiled under.
+    pub pipeline: String,
+    /// True when the submission was served from the schedule cache
+    /// (analysis + autotuning + lowering all skipped).
+    pub cached: bool,
+    /// True when this submission piggybacked on a concurrent in-flight
+    /// compile of the same program.
+    pub coalesced: bool,
+    /// `(pass, detail)` log of the pipeline that built the artifact.
+    pub passes: Vec<(String, String)>,
+    /// Program parameter names (bind via presets or explicit values).
+    pub params: Vec<String>,
+    /// Argument (externally visible) container names.
+    pub arguments: Vec<String>,
+}
+
+impl CompileReply {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("kernel".into(), Json::Str(self.kernel.clone())),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("pipeline".into(), Json::Str(self.pipeline.clone())),
+            ("cached".into(), Json::Bool(self.cached)),
+            ("coalesced".into(), Json::Bool(self.coalesced)),
+            (
+                "passes".into(),
+                Json::Arr(
+                    self.passes
+                        .iter()
+                        .map(|(p, d)| {
+                            Json::Obj(vec![
+                                ("pass".into(), Json::Str(p.clone())),
+                                ("detail".into(), Json::Str(d.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "params".into(),
+                Json::Arr(self.params.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            (
+                "arguments".into(),
+                Json::Arr(self.arguments.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<CompileReply, String> {
+        let field = |k: &str| -> Result<&str, String> {
+            v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("missing string field `{k}`"))
+        };
+        let strings = |k: &str| -> Result<Vec<String>, String> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("missing array field `{k}`"))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| format!("`{k}`: non-string entry"))
+                })
+                .collect()
+        };
+        let passes = v
+            .get("passes")
+            .and_then(Json::as_arr)
+            .ok_or("missing array field `passes`")?
+            .iter()
+            .map(|x| {
+                let pass = x.get("pass").and_then(Json::as_str).unwrap_or("?").to_string();
+                let detail = x.get("detail").and_then(Json::as_str).unwrap_or("").to_string();
+                (pass, detail)
+            })
+            .collect();
+        Ok(CompileReply {
+            kernel: field("kernel")?.to_string(),
+            name: field("name")?.to_string(),
+            pipeline: field("pipeline")?.to_string(),
+            cached: v.get("cached").and_then(Json::as_bool).unwrap_or(false),
+            coalesced: v.get("coalesced").and_then(Json::as_bool).unwrap_or(false),
+            passes,
+            params: strings("params")?,
+            arguments: strings("arguments")?,
+        })
+    }
+}
+
+/// `POST /run/<id>`: parameter bindings and inputs for one execution.
+/// Every field is optional on the wire — an empty body runs the tiny
+/// preset on one thread with the kernel's default inputs.
+#[derive(Debug, Clone)]
+pub struct RunRequest {
+    /// Preset used for any param without an explicit binding
+    /// (`tiny` | `small` | `medium`).
+    pub preset: String,
+    /// Explicit `name → value` param bindings (override the preset).
+    pub params: Vec<(String, i64)>,
+    /// Explicit argument-container contents (defaults: the kernel's
+    /// `init(...)` annotations / deterministic default initializer).
+    pub inputs: Vec<(String, Vec<f64>)>,
+    /// VM worker threads (clamped to 1..=8 by the daemon).
+    pub threads: usize,
+    /// Argument containers to return (`None` = all of them).
+    pub outputs: Option<Vec<String>>,
+}
+
+impl Default for RunRequest {
+    fn default() -> RunRequest {
+        RunRequest {
+            preset: "tiny".to_string(),
+            params: Vec::new(),
+            inputs: Vec::new(),
+            threads: 1,
+            outputs: None,
+        }
+    }
+}
+
+impl RunRequest {
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("preset".into(), Json::Str(self.preset.clone())),
+            ("threads".into(), Json::Num(self.threads as f64)),
+        ];
+        if !self.params.is_empty() {
+            kv.push((
+                "params".into(),
+                Json::Obj(
+                    self.params.iter().map(|(k, v)| (k.clone(), Json::Num(*v as f64))).collect(),
+                ),
+            ));
+        }
+        if !self.inputs.is_empty() {
+            kv.push((
+                "inputs".into(),
+                Json::Obj(
+                    self.inputs
+                        .iter()
+                        .map(|(k, data)| {
+                            (k.clone(), Json::Arr(data.iter().map(|x| Json::Num(*x)).collect()))
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(outs) = &self.outputs {
+            kv.push((
+                "outputs".into(),
+                Json::Arr(outs.iter().map(|s| Json::Str(s.clone())).collect()),
+            ));
+        }
+        Json::Obj(kv)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunRequest, String> {
+        let mut req = RunRequest::default();
+        if let Some(p) = v.get("preset") {
+            req.preset = p.as_str().ok_or("field `preset` must be a string")?.to_string();
+        }
+        if let Some(t) = v.get("threads") {
+            req.threads =
+                t.as_i64().ok_or("field `threads` must be an integer")?.clamp(0, 1 << 16) as usize;
+        }
+        if let Some(p) = v.get("params") {
+            for (k, x) in p.as_obj().ok_or("field `params` must be an object")? {
+                let val = x.as_i64().ok_or_else(|| format!("param `{k}` must be an integer"))?;
+                req.params.push((k.clone(), val));
+            }
+        }
+        if let Some(inp) = v.get("inputs") {
+            for (k, x) in inp.as_obj().ok_or("field `inputs` must be an object")? {
+                let arr = x.as_arr().ok_or_else(|| format!("input `{k}` must be a number array"))?;
+                let data = arr
+                    .iter()
+                    .map(|e| e.as_f64().ok_or_else(|| format!("input `{k}`: non-numeric entry")))
+                    .collect::<Result<Vec<f64>, String>>()?;
+                req.inputs.push((k.clone(), data));
+            }
+        }
+        if let Some(outs) = v.get("outputs") {
+            let arr = outs.as_arr().ok_or("field `outputs` must be a string array")?;
+            let names = arr
+                .iter()
+                .map(|e| e.as_str().map(str::to_string).ok_or("`outputs`: non-string entry"))
+                .collect::<Result<Vec<String>, _>>()?;
+            req.outputs = Some(names);
+        }
+        Ok(req)
+    }
+}
+
+/// `POST /run/<id>` success reply.
+#[derive(Debug, Clone)]
+pub struct RunReply {
+    pub kernel: String,
+    pub name: String,
+    /// Wall-clock VM execution time on the daemon, milliseconds.
+    pub wall_ms: f64,
+    /// `name → contents` for each requested argument container.
+    pub outputs: Vec<(String, Vec<f64>)>,
+}
+
+impl RunReply {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("kernel".into(), Json::Str(self.kernel.clone())),
+            ("name".into(), Json::Str(self.name.clone())),
+            ("wall_ms".into(), Json::Num(self.wall_ms)),
+            (
+                "outputs".into(),
+                Json::Obj(
+                    self.outputs
+                        .iter()
+                        .map(|(k, data)| {
+                            (k.clone(), Json::Arr(data.iter().map(|x| Json::Num(*x)).collect()))
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunReply, String> {
+        let mut outputs = Vec::new();
+        for (k, x) in v
+            .get("outputs")
+            .and_then(Json::as_obj)
+            .ok_or("missing object field `outputs`")?
+        {
+            let data = x
+                .as_arr()
+                .ok_or_else(|| format!("output `{k}` must be a number array"))?
+                .iter()
+                .map(|e| e.as_f64().ok_or_else(|| format!("output `{k}`: non-numeric entry")))
+                .collect::<Result<Vec<f64>, String>>()?;
+            outputs.push((k.clone(), data));
+        }
+        Ok(RunReply {
+            kernel: v
+                .get("kernel")
+                .and_then(Json::as_str)
+                .ok_or("missing string field `kernel`")?
+                .to_string(),
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("missing string field `name`")?
+                .to_string(),
+            wall_ms: v.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            outputs,
+        })
+    }
+}
+
+/// The uniform non-200 body.
+pub fn error_body(msg: &str) -> String {
+    Json::Obj(vec![("error".to_string(), Json::Str(msg.to_string()))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_request_round_trips_and_defaults_pipeline() {
+        let req = CompileRequest::new("program t { }", "cfg2");
+        let back = CompileRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.source, "program t { }");
+        assert_eq!(back.pipeline, "cfg2");
+        let v = Json::parse(r#"{"source": "program t { }"}"#).unwrap();
+        assert_eq!(CompileRequest::from_json(&v).unwrap().pipeline, "auto");
+        assert!(CompileRequest::from_json(&Json::Obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn run_request_round_trips() {
+        let req = RunRequest {
+            preset: "small".into(),
+            params: vec![("st_N".into(), 64)],
+            inputs: vec![("u".into(), vec![1.0, -0.5])],
+            threads: 4,
+            outputs: Some(vec!["u".into()]),
+        };
+        let back = RunRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.preset, "small");
+        assert_eq!(back.params, vec![("st_N".to_string(), 64)]);
+        assert_eq!(back.inputs.len(), 1);
+        assert_eq!(back.inputs[0].1, vec![1.0, -0.5]);
+        assert_eq!(back.threads, 4);
+        assert_eq!(back.outputs.as_deref(), Some(&["u".to_string()][..]));
+        // Empty object = all defaults.
+        let d = RunRequest::from_json(&Json::Obj(vec![])).unwrap();
+        assert_eq!((d.preset.as_str(), d.threads), ("tiny", 1));
+        // Type errors are reported by field.
+        let bad = Json::parse(r#"{"params": {"N": 1.5}}"#).unwrap();
+        assert!(RunRequest::from_json(&bad).unwrap_err().contains("`N`"));
+    }
+
+    #[test]
+    fn replies_round_trip() {
+        let reply = CompileReply {
+            kernel: "k0123456789abcdef".into(),
+            name: "stencil_time".into(),
+            pipeline: "auto".into(),
+            cached: true,
+            coalesced: false,
+            passes: vec![("doall".into(), "L1".into())],
+            params: vec!["st_N".into()],
+            arguments: vec!["u".into()],
+        };
+        let back = CompileReply::from_json(&reply.to_json()).unwrap();
+        assert_eq!(back.kernel, reply.kernel);
+        assert!(back.cached);
+        assert_eq!(back.passes, reply.passes);
+        assert_eq!(back.arguments, reply.arguments);
+
+        let run = RunReply {
+            kernel: reply.kernel.clone(),
+            name: reply.name.clone(),
+            wall_ms: 0.25,
+            outputs: vec![("u".into(), vec![0.0, -0.0, 2.5])],
+        };
+        let back = RunReply::from_json(&run.to_json()).unwrap();
+        assert_eq!(back.outputs[0].0, "u");
+        let bits: Vec<u64> = back.outputs[0].1.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(bits, vec![0.0f64.to_bits(), (-0.0f64).to_bits(), 2.5f64.to_bits()]);
+    }
+
+    #[test]
+    fn error_bodies_are_json() {
+        let v = Json::parse(&error_body("parse error at line 3")).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("parse error at line 3"));
+    }
+}

@@ -1,0 +1,582 @@
+//! The daemon: a `std::net` HTTP/1.1 listener, a worker thread pool, and
+//! the router over the schedule cache (`silo serve`).
+//!
+//! Request flow for `POST /compile`: parse the SILO-Text body → hash its
+//! canonical printing × pipeline spec ([`super::cache::kernel_key`]) →
+//! either return the resident [`ServedKernel`] (a cache hit skips
+//! analysis, autotuning, and lowering entirely) or compile under the
+//! shard's single-flight slot, so concurrent submissions of one program
+//! tune exactly once. `POST /run/<id>` executes the cached artifact on
+//! the VM with per-request parameter bindings, inputs, and thread count
+//! — no optimizer work at all.
+//!
+//! **Trust model.** The daemon executes submitted programs on the same
+//! VM the CLI uses — a release-build interpreter that (by documented
+//! design, see `exec/vm.rs`) trades bounds checks for speed, and loop
+//! trip counts follow the caller's param bindings. Submissions are
+//! therefore trusted exactly like local CLI input: bind to localhost
+//! (the default `127.0.0.1:7420`) or an otherwise-authenticated
+//! network, and do not expose the port to untrusted clients. What the
+//! daemon *does* harden is everything before execution: capped HTTP
+//! framing, depth-limited parsing, spec validation, per-run total
+//! allocation caps with checked arithmetic, and panic-isolated workers.
+//! A bounds-proved or fuel-budgeted service mode is a ROADMAP item.
+//!
+//! The daemon inherits the frontend's process-global symbol table, so
+//! two submitted programs that reuse a `param` name share one symbol and
+//! its assumptions — follow the corpus convention of kernel-prefixed
+//! names (`st_N`, `hd_N`) when submitting many programs to one daemon.
+//! Two daemon-relevant consequences, both snapshotted/bounded where the
+//! service can and documented where it cannot:
+//!
+//! * assumption floors are captured per artifact at compile time
+//!   ([`ServedKernel::param_floors`]), so a later submission raising a
+//!   shared symbol's floor never changes which runs a cached kernel
+//!   accepts;
+//! * the intern table itself is append-only — a daemon serving an
+//!   unbounded stream of programs with *distinct* identifier sets grows
+//!   it monotonically (cache eviction frees compiled artifacts, not
+//!   interned names). Bounding that requires a scoped symbol table in
+//!   `symbolic/` (tracked in ROADMAP.md).
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{compile_program, CompiledKernel, MemSchedules, PipelineSpec};
+use crate::frontend::{init_value_with, InitSpec, PresetBindings};
+use crate::ir::ContainerKind;
+use crate::kernels::Preset;
+use crate::symbolic::eval::eval_int;
+use crate::symbolic::{ContainerId, Sym};
+
+use super::cache::{self, Outcome, ScheduleCache};
+use super::http::{self, Request};
+use super::json::Json;
+use super::metrics::Metrics;
+use super::protocol::{error_body, CompileReply, CompileRequest, RunReply, RunRequest};
+
+/// Daemon configuration (`silo serve --addr --threads --cache-cap`).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Worker threads handling requests.
+    pub workers: usize,
+    /// Schedule-cache capacity in compiled kernels.
+    pub cache_cap: usize,
+    /// Cache shard count (tests pin 1 for deterministic LRU order).
+    pub cache_shards: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            addr: "127.0.0.1:7420".to_string(),
+            workers: 4,
+            cache_cap: 64,
+            cache_shards: 8,
+        }
+    }
+}
+
+/// One cached compile: the optimized, lowered artifact plus the run-time
+/// annotations (presets, input initialization) that live outside the IR.
+/// Deliberately *not* the whole `ParsedKernel` — the pristine program is
+/// only needed for key computation, and duplicating it per entry would
+/// double the cache's program footprint.
+pub struct ServedKernel {
+    pub id: String,
+    pub name: String,
+    /// Normalized pipeline spec this artifact was compiled under.
+    pub spec: String,
+    /// Per-preset param bindings from the submission's annotations.
+    pub presets: Vec<(Sym, PresetBindings)>,
+    /// `init(shift, scale)` input annotations from the submission.
+    pub inits: Vec<InitSpec>,
+    /// Assumed lower bound of each param, snapshotted at compile time —
+    /// the symbol table's assumptions are process-global and may be
+    /// raised by a *later* submission reusing a name, which must not
+    /// retroactively change which runs this cached artifact accepts.
+    pub param_floors: Vec<(Sym, i64)>,
+    pub compiled: CompiledKernel,
+    /// Wall-clock cost of the build (optimize + tune + lower), ms.
+    pub compile_ms: f64,
+}
+
+struct ServiceState {
+    cache: ScheduleCache<ServedKernel>,
+    metrics: Metrics,
+    stop: AtomicBool,
+}
+
+/// A running daemon. Dropping the handle leaves the threads running
+/// until process exit; call [`Server::shutdown`] for an orderly stop or
+/// [`Server::join`] to serve until killed.
+pub struct Server {
+    addr: SocketAddr,
+    state: Arc<ServiceState>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `config.addr` and start the accept loop + worker pool.
+    pub fn serve(config: &ServiceConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&config.addr)
+            .with_context(|| format!("cannot bind {}", config.addr))?;
+        let addr = listener.local_addr()?;
+        let state = Arc::new(ServiceState {
+            cache: ScheduleCache::with_shards(config.cache_cap, config.cache_shards),
+            metrics: Metrics::default(),
+            stop: AtomicBool::new(false),
+        });
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers: Vec<JoinHandle<()>> = (0..config.workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let state = Arc::clone(&state);
+                std::thread::spawn(move || loop {
+                    // Standard shared-receiver pool: hold the lock only
+                    // while dequeuing, never while handling.
+                    let next = rx.lock().unwrap().recv();
+                    match next {
+                        Ok(stream) => {
+                            // A panicking request must not shrink the
+                            // pool: catch it, drop the connection, keep
+                            // serving.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    handle_connection(stream, &state)
+                                }),
+                            );
+                        }
+                        Err(_) => break, // sender dropped: shutting down
+                    }
+                })
+            })
+            .collect();
+        let accept = {
+            let state = Arc::clone(&state);
+            std::thread::spawn(move || {
+                for stream in listener.incoming() {
+                    if state.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(s) = stream {
+                        let _ = tx.send(s);
+                    }
+                }
+                // tx drops here; workers drain the queue and exit.
+            })
+        };
+        Ok(Server {
+            addr,
+            state,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (i.e. serve until killed).
+    pub fn join(mut self) {
+        self.join_threads();
+    }
+
+    /// Stop accepting, let in-flight requests finish, and return.
+    pub fn shutdown(mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        self.join_threads();
+    }
+
+    fn join_threads(&mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ServiceState) {
+    let _ = stream.set_read_timeout(Some(http::IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(http::IO_TIMEOUT));
+    let mut reader = BufReader::new(&stream);
+    let (status, body) = match http::read_request(&mut reader) {
+        Ok(req) => route(&req, state),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            // Framing-layer size rejections are 413 per the wire
+            // protocol; everything else malformed is a 400.
+            let status = if msg.contains("body too large") { 413 } else { 400 };
+            (status, error_body(&msg))
+        }
+    };
+    Metrics::bump(&state.metrics.requests);
+    if status != 200 {
+        Metrics::bump(&state.metrics.errors);
+    }
+    let _ = http::write_response(&mut (&stream), status, &body);
+}
+
+fn route(req: &Request, state: &ServiceState) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, healthz_body()),
+        ("GET", "/metrics") => (200, metrics_body(state)),
+        ("GET", "/kernels") => (200, kernels_body(state)),
+        ("POST", "/compile") => compile_endpoint(req, state),
+        ("POST", p) if p.starts_with("/run/") => {
+            run_endpoint(req, state, &p["/run/".len()..])
+        }
+        ("GET" | "POST", _) => (
+            404,
+            error_body(&format!(
+                "no such route {} {} (endpoints: GET /healthz /metrics /kernels, \
+                 POST /compile /run/<id>)",
+                req.method, req.path
+            )),
+        ),
+        _ => (405, error_body(&format!("method {} not allowed", req.method))),
+    }
+}
+
+fn healthz_body() -> String {
+    Json::Obj(vec![
+        ("ok".into(), Json::Bool(true)),
+        ("service".into(), Json::Str("silo".into())),
+        ("version".into(), Json::Str(env!("CARGO_PKG_VERSION").into())),
+    ])
+    .to_string()
+}
+
+fn metrics_body(state: &ServiceState) -> String {
+    let s = state.cache.stats();
+    let m = &state.metrics;
+    let num = |v: u64| Json::Num(v as f64);
+    Json::Obj(vec![
+        ("hits".into(), num(s.hits)),
+        ("misses".into(), num(s.misses)),
+        ("coalesced".into(), num(s.coalesced)),
+        ("evictions".into(), num(s.evictions)),
+        ("entries".into(), num(s.entries as u64)),
+        ("capacity".into(), num(s.capacity as u64)),
+        ("requests".into(), num(Metrics::get(&m.requests))),
+        ("errors".into(), num(Metrics::get(&m.errors))),
+        ("compiles".into(), num(Metrics::get(&m.compiles))),
+        (
+            "compile_ms_total".into(),
+            Json::Num(Metrics::get(&m.compile_us_total) as f64 / 1e3),
+        ),
+        ("runs".into(), num(Metrics::get(&m.runs))),
+        (
+            "run_ms_total".into(),
+            Json::Num(Metrics::get(&m.run_us_total) as f64 / 1e3),
+        ),
+    ])
+    .to_string()
+}
+
+fn kernels_body(state: &ServiceState) -> String {
+    let list: Vec<Json> = state
+        .cache
+        .entries()
+        .into_iter()
+        .map(|(_, k, hits)| {
+            Json::Obj(vec![
+                ("id".into(), Json::Str(k.id.clone())),
+                ("name".into(), Json::Str(k.name.clone())),
+                ("pipeline".into(), Json::Str(k.spec.clone())),
+                ("hits".into(), Json::Num(hits as f64)),
+                ("compile_ms".into(), Json::Num(k.compile_ms)),
+            ])
+        })
+        .collect();
+    Json::Arr(list).to_string()
+}
+
+/// Normalized spec string (the cache-key component): named configs print
+/// their canonical name, pass lists their trimmed spelling.
+fn normalize_spec(spec: &PipelineSpec) -> String {
+    match spec {
+        PipelineSpec::Config(c) => c.name().to_string(),
+        PipelineSpec::Auto => "auto".to_string(),
+        PipelineSpec::Custom(s) => s.trim().to_string(),
+    }
+}
+
+fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return (400, error_body(&format!("{e:#}"))),
+    };
+    let v = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return (400, error_body(&format!("malformed JSON body: {e}"))),
+    };
+    let creq = match CompileRequest::from_json(&v) {
+        Ok(r) => r,
+        Err(e) => return (400, error_body(&e)),
+    };
+    let spec = PipelineSpec::parse(&creq.pipeline);
+    // Validate custom pass lists up front: a bad spec is the caller's
+    // fault and must not occupy a cache slot or a build attempt.
+    if let PipelineSpec::Custom(_) = &spec {
+        if let Err(e) = spec.build(MemSchedules::default()) {
+            return (400, error_body(&format!("{e:#}")));
+        }
+    }
+    let parsed = match crate::frontend::parse_str(&creq.source) {
+        Ok(p) => p,
+        Err(e) => return (400, error_body(&e.to_string())),
+    };
+    let spec_name = normalize_spec(&spec);
+    let key = cache::kernel_key(&parsed, &spec_name);
+    let id = cache::kernel_id(key);
+    let (result, outcome) = state.cache.get_or_build(key, || {
+        let t0 = Instant::now();
+        let compiled = compile_program(parsed.program.clone(), &spec, MemSchedules::default())
+            .map_err(|e| format!("{e:#}"))?;
+        let wall = t0.elapsed();
+        Metrics::bump(&state.metrics.compiles);
+        Metrics::add_time(&state.metrics.compile_us_total, wall);
+        Ok(ServedKernel {
+            id: id.clone(),
+            name: parsed.program.name.clone(),
+            spec: spec_name.clone(),
+            presets: parsed.presets.clone(),
+            inits: parsed.inits.clone(),
+            param_floors: parsed
+                .program
+                .params
+                .iter()
+                .map(|s| (*s, s.assumptions().min))
+                .collect(),
+            compiled,
+            compile_ms: wall.as_secs_f64() * 1e3,
+        })
+    });
+    let kernel = match result {
+        Ok(k) => k,
+        Err(e) => return (400, error_body(&e)),
+    };
+    let reply = CompileReply {
+        kernel: kernel.id.clone(),
+        name: kernel.name.clone(),
+        pipeline: kernel.spec.clone(),
+        cached: outcome == Outcome::Hit,
+        coalesced: outcome == Outcome::Coalesced,
+        passes: kernel
+            .compiled
+            .pipeline
+            .as_ref()
+            .map(|r| r.log.iter().map(|l| (l.pass.clone(), l.detail.clone())).collect())
+            .unwrap_or_default(),
+        params: kernel.compiled.program.params.iter().map(|s| s.name().to_string()).collect(),
+        arguments: kernel
+            .compiled
+            .program
+            .containers
+            .iter()
+            .filter(|c| c.kind == ContainerKind::Argument)
+            .map(|c| c.name.clone())
+            .collect(),
+    };
+    (200, reply.to_json().to_string())
+}
+
+fn run_endpoint(req: &Request, state: &ServiceState, id_str: &str) -> (u16, String) {
+    let Some(key) = cache::parse_kernel_id(id_str) else {
+        return (404, error_body(&format!("malformed kernel id `{id_str}`")));
+    };
+    let Some(kernel) = state.cache.touch(key) else {
+        return (
+            404,
+            error_body(&format!(
+                "unknown kernel id `{id_str}` (evicted or never compiled — resubmit \
+                 via POST /compile)"
+            )),
+        );
+    };
+    let rreq = if req.body.is_empty() {
+        RunRequest::default()
+    } else {
+        let parsed = match req.body_str().map_err(|e| format!("{e:#}")).and_then(|b| {
+            Json::parse(b).map_err(|e| format!("malformed JSON body: {e}"))
+        }) {
+            Ok(v) => v,
+            Err(e) => return (400, error_body(&e)),
+        };
+        match RunRequest::from_json(&parsed) {
+            Ok(r) => r,
+            Err(e) => return (400, error_body(&e)),
+        }
+    };
+    match execute_run(&kernel, &rreq, state) {
+        Ok(reply) => (200, reply.to_json().to_string()),
+        Err(e) => (400, error_body(&e)),
+    }
+}
+
+/// Bind params, materialize inputs, execute the cached VM, and shape the
+/// reply. All failures are caller errors (HTTP 400) — the artifact
+/// itself is known-good.
+fn execute_run(
+    kernel: &ServedKernel,
+    rreq: &RunRequest,
+    state: &ServiceState,
+) -> Result<RunReply, String> {
+    let preset = Preset::parse(&rreq.preset).map_err(|e| format!("{e:#}"))?;
+    let prog = &kernel.compiled.program;
+
+    // Parameter bindings: explicit values win, preset annotations fill
+    // the rest; anything unbound is an actionable error.
+    let mut params: Vec<(Sym, i64)> = Vec::new();
+    for sym in &prog.params {
+        let name = sym.name();
+        let explicit = rreq.params.iter().find(|(n, _)| n == name).map(|(_, v)| *v);
+        let value = explicit.or_else(|| {
+            kernel
+                .presets
+                .iter()
+                .find(|(s, _)| s == sym)
+                .and_then(|(_, b)| b.get(preset))
+        });
+        let Some(value) = value else {
+            return Err(format!(
+                "param `{name}` has no {preset:?} preset binding and no explicit value; \
+                 pass {{\"params\": {{\"{name}\": <int>}}}}"
+            ));
+        };
+        // The optimizer's positivity assumptions were baked in at compile
+        // time; a binding below the assumed floor would execute a program
+        // whose analyses no longer hold. Compare against the floor
+        // *snapshotted at compile time*, not the live global table.
+        let floor = kernel
+            .param_floors
+            .iter()
+            .find(|(s, _)| s == sym)
+            .map(|(_, f)| *f)
+            .unwrap_or(i64::MIN);
+        if value < floor {
+            return Err(format!(
+                "param `{name}` = {value} is below its assumed minimum {floor}"
+            ));
+        }
+        params.push((*sym, value));
+    }
+    for (n, _) in &rreq.params {
+        if !prog.params.iter().any(|s| s.name() == n.as_str()) {
+            return Err(format!("program `{}` has no param `{n}`", kernel.name));
+        }
+    }
+
+    // Inputs: explicit contents (size-checked) or the deterministic
+    // default initializer with the kernel's `init(...)` annotations.
+    // The *total* extent across all containers — transients included —
+    // is capped, since the VM allocates everything up front and an
+    // oversized request must come back as a 400, not abort the daemon
+    // in the allocator.
+    let mut inputs: Vec<(ContainerId, Vec<f64>)> = Vec::new();
+    let mut total_elems: i64 = 0;
+    for c in &prog.containers {
+        let n = eval_int(&c.size, &params).map_err(|e| format!("{e:#}"))?;
+        // Checked arithmetic: size polynomials over caller-chosen params
+        // can wrap i64, which must read as "too big", not sneak under
+        // the cap.
+        let total = total_elems.checked_add(n).unwrap_or(i64::MAX);
+        if !(0..=(1 << 28)).contains(&n) || total > (1 << 28) {
+            return Err(format!(
+                "container `{}` holds {n} elements under these params ({total} total); \
+                 the service caps one run's allocation at 2^28 elements",
+                c.name
+            ));
+        }
+        total_elems = total;
+        if c.kind != ContainerKind::Argument {
+            continue;
+        }
+        let n = n as usize;
+        let data = match rreq.inputs.iter().find(|(name, _)| *name == c.name) {
+            Some((_, provided)) => {
+                if provided.len() != n {
+                    return Err(format!(
+                        "input `{}` has {} elements, expected {n}",
+                        c.name,
+                        provided.len()
+                    ));
+                }
+                provided.clone()
+            }
+            None => (0..n).map(|i| init_value_with(&kernel.inits, &c.name, i)).collect(),
+        };
+        inputs.push((c.id, data));
+    }
+    for (n, _) in &rreq.inputs {
+        if !prog
+            .containers
+            .iter()
+            .any(|c| c.kind == ContainerKind::Argument && c.name == *n)
+        {
+            return Err(format!("program `{}` has no argument container `{n}`", kernel.name));
+        }
+    }
+
+    // Requested outputs must name argument containers.
+    let arg_names: Vec<&str> = prog
+        .containers
+        .iter()
+        .filter(|c| c.kind == ContainerKind::Argument)
+        .map(|c| c.name.as_str())
+        .collect();
+    if let Some(outs) = &rreq.outputs {
+        for n in outs {
+            if !arg_names.contains(&n.as_str()) {
+                return Err(format!(
+                    "no argument container `{n}` (available: {})",
+                    arg_names.join(", ")
+                ));
+            }
+        }
+    }
+
+    let refs: Vec<(ContainerId, &[f64])> =
+        inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let threads = rreq.threads.clamp(1, 8);
+    let (storage, wall) = kernel
+        .compiled
+        .execute(&params, &refs, threads)
+        .map_err(|e| format!("{e:#}"))?;
+    Metrics::bump(&state.metrics.runs);
+    Metrics::add_time(&state.metrics.run_us_total, wall);
+
+    let wanted = |name: &str| match &rreq.outputs {
+        Some(outs) => outs.iter().any(|n| n == name),
+        None => true,
+    };
+    let outputs: Vec<(String, Vec<f64>)> = prog
+        .containers
+        .iter()
+        .filter(|c| c.kind == ContainerKind::Argument && wanted(&c.name))
+        .map(|c| (c.name.clone(), storage.arrays[c.id.0 as usize].clone()))
+        .collect();
+    Ok(RunReply {
+        kernel: kernel.id.clone(),
+        name: kernel.name.clone(),
+        wall_ms: wall.as_secs_f64() * 1e3,
+        outputs,
+    })
+}

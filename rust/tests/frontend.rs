@@ -130,7 +130,7 @@ fn every_corpus_file_on_disk_parses_and_validates() {
             .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
         seen += 1;
     }
-    assert!(seen >= 8, "expected the full corpus on disk, found {seen} files");
+    assert!(seen >= 10, "expected the full corpus on disk, found {seen} files");
 }
 
 /// Registered corpus kernels flow through the autotuner + VM exactly like
@@ -202,6 +202,26 @@ fn parse_errors_carry_line_column_and_readable_messages() {
         // The Display form is the CLI-facing diagnostic.
         assert!(e.to_string().contains("line"), "{e}");
     }
+}
+
+/// Hostile nesting (the service daemon parses network input) errors at
+/// the parser's depth cap instead of overflowing the stack.
+#[test]
+fn hostile_nesting_errors_instead_of_overflowing_the_stack() {
+    let mut src = String::from("program deep {\n  array A[8];\n  A[0] = ");
+    src.push_str(&"(".repeat(20_000));
+    src.push_str("1.0");
+    src.push_str(&")".repeat(20_000));
+    src.push_str(";\n}\n");
+    let e = parse_str(&src).unwrap_err();
+    assert!(e.message().contains("nesting too deep"), "{e}");
+    // Unary-minus chains recurse through a different path.
+    let src2 = format!(
+        "program deep2 {{\n  array B[8];\n  B[0] = {}1.0;\n}}\n",
+        "-".repeat(20_000)
+    );
+    let e = parse_str(&src2).unwrap_err();
+    assert!(e.message().contains("nesting too deep"), "{e}");
 }
 
 #[test]
@@ -329,6 +349,174 @@ fn random_programs_round_trip_through_the_printer() {
             .program;
         assert_eq!(q, p, "round-trip mismatch on:\n{text}");
         assert_eq!(pretty(&q), text);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Differential VM fuzz (parse → autotune → execute vs plain execute)
+// ---------------------------------------------------------------------------
+
+const DF_SIZE: i64 = 64; // container length for generated programs
+const DF_PAD: i64 = 4; // subscript headroom: every index is base + δ, δ < DF_PAD
+
+/// Random in-bounds RHS: Σ coeff·read[base + δ], optionally led by a
+/// self-read of the written cell (a genuine loop-carried reduction).
+fn df_rhs(
+    rng: &mut Rng,
+    conts: &[silo::symbolic::ContainerId],
+    write: silo::symbolic::ContainerId,
+    off: &Expr,
+    base: &Expr,
+) -> Expr {
+    let coeffs = [0.25, 0.5, -0.5, 1.0, 2.0, -1.0];
+    let mut e = if rng.bool() {
+        load(write, off.clone())
+    } else {
+        Expr::real(*rng.pick(&coeffs))
+            * load(*rng.pick(conts), base.clone() + int(rng.int(0, DF_PAD - 1)))
+    };
+    for _ in 0..rng.int(1, 2) {
+        e = e + Expr::real(*rng.pick(&coeffs))
+            * load(*rng.pick(conts), base.clone() + int(rng.int(0, DF_PAD - 1)));
+    }
+    e
+}
+
+/// Exec-safe program generator: loop ranges are compile-time constants
+/// and every subscript is `base + δ` with `base + δ < DF_SIZE` by
+/// construction, so all accesses are provably in bounds. Shapes cover
+/// forward/strided/reversed 1-D loops (guarded statements and
+/// reductions included), flattened 2-D nests, and stencil pairs with a
+/// shared transient (RAW across sibling loops — fusion/DOACROSS bait).
+fn df_gen(
+    b: &mut ProgramBuilder,
+    rng: &mut Rng,
+    case: u64,
+    conts: &[silo::symbolic::ContainerId],
+) {
+    for nest in 0..rng.int(1, 3) {
+        match rng.int(0, 2) {
+            0 => {
+                let v = b.sym(&format!("df{case}_a{nest}"));
+                let hi = rng.int(8, DF_SIZE - DF_PAD);
+                let (start, end, stride) = match rng.int(0, 2) {
+                    0 => (int(0), int(hi), int(1)),
+                    1 => (int(0), int(hi), int(2)),
+                    _ => (int(hi), int(0), int(-1)),
+                };
+                // Each statement writes its own container, so the only
+                // WAW/RAW structure is across loops and via self-reads.
+                let mut targets: Vec<usize> = (0..conts.len()).collect();
+                let n_stmts = rng.int(1, 2);
+                b.for_(v, start, end, stride, |b| {
+                    for _ in 0..n_stmts {
+                        let slot = (rng.next_u64() % targets.len() as u64) as usize;
+                        let w = conts[targets.remove(slot)];
+                        let off = Expr::Sym(v) + int(rng.int(0, DF_PAD - 1));
+                        let rhs = df_rhs(rng, conts, w, &off, &Expr::Sym(v));
+                        if rng.int(0, 3) == 0 {
+                            b.assign_if(Expr::Sym(v) - int(1), w, off, rhs);
+                        } else {
+                            b.assign(w, off, rhs);
+                        }
+                    }
+                });
+            }
+            1 => {
+                let vo = b.sym(&format!("df{case}_o{nest}"));
+                let vi = b.sym(&format!("df{case}_n{nest}"));
+                let w = *rng.pick(conts);
+                let (r1, r2) = (*rng.pick(conts), *rng.pick(conts));
+                b.for_(vo, int(0), int(6), int(1), |b| {
+                    b.for_(vi, int(0), int(6), int(1), |b| {
+                        let idx = Expr::Sym(vo) * int(6) + Expr::Sym(vi);
+                        let rhs = Expr::real(0.5)
+                            * load(r1, idx.clone() + int(rng.int(0, DF_PAD - 1)))
+                            + Expr::real(0.25)
+                                * load(r2, idx.clone() + int(rng.int(0, DF_PAD - 1)));
+                        b.assign(w, idx, rhs);
+                    });
+                });
+            }
+            _ => {
+                let v1 = b.sym(&format!("df{case}_s{nest}"));
+                let v2 = b.sym(&format!("df{case}_t{nest}"));
+                let (src, tmp) = (conts[0], conts[2]);
+                let k = rng.int(8, DF_SIZE - 2);
+                b.for_(v1, int(1), int(k), int(1), |b| {
+                    b.assign(
+                        tmp,
+                        Expr::Sym(v1),
+                        Expr::real(0.25) * load(src, Expr::Sym(v1) - int(1))
+                            + Expr::real(0.5) * load(src, Expr::Sym(v1))
+                            + Expr::real(0.25) * load(src, Expr::Sym(v1) + int(1)),
+                    );
+                });
+                b.for_(v2, int(1), int(k), int(1), |b| {
+                    b.assign(src, Expr::Sym(v2), load(tmp, Expr::Sym(v2)));
+                });
+            }
+        }
+    }
+}
+
+/// Differential fuzz over the VM (ROADMAP item): randomized programs,
+/// printed and reparsed through the frontend, must produce bit-identical
+/// argument outputs under `--pipeline auto` (threaded) and under no
+/// pipeline at all (sequential) — the parser, the tuner, every schedule
+/// it picks, and the runtime agree end to end, not just the printer.
+#[test]
+fn random_programs_agree_bitwise_under_auto_on_the_vm() {
+    use silo::tuner::{autotune_program, TuneOptions};
+    silo::proptest_lite::check("frontend_vm_differential", 16, |rng| {
+        let case = rng.int(0, 1_000_000) as u64;
+        let mut b = ProgramBuilder::new(&format!("dfz_{case}"));
+        let conts = vec![
+            b.array("A", int(DF_SIZE)),
+            b.array("B", int(DF_SIZE)),
+            b.transient("T", int(DF_SIZE)),
+        ];
+        df_gen(&mut b, rng, case, &conts);
+        let p = b.finish();
+        silo::ir::validate::validate(&p).unwrap();
+
+        // Parse leg: run what a submission would reconstruct, not the
+        // in-memory builder output.
+        let text = pretty(&p);
+        let parsed = parse_str(&text)
+            .unwrap_or_else(|e| panic!("generated program failed to reparse: {e}\n{text}"))
+            .program;
+        assert_eq!(parsed, p);
+
+        let run = |prog: &Program, threads: usize| -> Vec<Vec<f64>> {
+            let inputs =
+                silo::kernels::gen_inputs(prog, &[], silo::kernels::default_init).unwrap();
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let vm = silo::exec::Vm::compile(prog)
+                .unwrap_or_else(|e| panic!("VM compile failed: {e}\n{text}"));
+            vm.run(&[], &refs, threads)
+                .unwrap_or_else(|e| panic!("VM run failed: {e}\n{text}"))
+                .arrays
+        };
+        let base = run(&parsed, 1);
+        let tuned = autotune_program(&parsed, &TuneOptions::default())
+            .unwrap_or_else(|e| panic!("autotune failed: {e:#}\n{text}"));
+        let opt = run(&tuned.program, 3);
+        for c in &parsed.containers {
+            if c.kind != silo::ir::ContainerKind::Argument {
+                continue;
+            }
+            let i = c.id.0 as usize;
+            assert_eq!(base[i].len(), opt[i].len(), "{}\n{text}", c.name);
+            for (j, (x, y)) in base[i].iter().zip(opt[i].iter()).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{}[{j}] diverged under {}: {x} vs {y}\n{text}",
+                    c.name,
+                    tuned.best.candidate.spec(),
+                );
+            }
+        }
     });
 }
 

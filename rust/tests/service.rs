@@ -1,0 +1,469 @@
+//! Service daemon acceptance: the `silo serve` / `silo submit` loop.
+//!
+//! Pins the PR's headline invariants:
+//! * every registered kernel round-trips through the daemon — canonical
+//!   source in, bit-identical-to-local outputs back — and a second
+//!   submission is a cache hit (verified via `GET /metrics`) that skips
+//!   analysis + autotuning entirely;
+//! * submissions differing only in formatting/comments hit the same
+//!   content-addressed entry, different pipeline specs do not;
+//! * LRU eviction at capacity, deterministic with one shard;
+//! * concurrent submissions of one program compile exactly once;
+//! * explicit params/inputs/outputs work over the wire, and caller
+//!   mistakes come back as actionable HTTP errors.
+
+use silo::coordinator::{compile_program, MemSchedules, OptConfig, PipelineSpec};
+use silo::ir::pretty::pretty;
+use silo::kernels::{all_kernels, default_init, gen_inputs, Preset};
+use silo::service::{
+    check_against_local, Client, Json, RunRequest, Server, ServiceConfig,
+};
+use silo::symbolic::Sym;
+
+fn start(cache_cap: usize, cache_shards: usize, workers: usize) -> Server {
+    Server::serve(&ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        cache_cap,
+        cache_shards,
+    })
+    .unwrap()
+}
+
+fn client(server: &Server) -> Client {
+    Client::new(&server.addr().to_string())
+}
+
+fn metric(m: &Json, key: &str) -> i64 {
+    m.get(key)
+        .and_then(Json::as_i64)
+        .unwrap_or_else(|| panic!("metric `{key}` missing in {m}"))
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance criterion: every registered kernel, end to end
+// ---------------------------------------------------------------------------
+
+/// Canonical source of every registered kernel compiles, runs with
+/// explicit tiny params, returns outputs bit-identical to a local
+/// unoptimized run, and hits the cache on resubmission — all verified
+/// through `/metrics`.
+#[test]
+fn every_registered_kernel_round_trips_with_cache_hits() {
+    let server = start(512, 8, 4);
+    let c = client(&server);
+    let kernels = all_kernels();
+    let mut sources = Vec::new();
+    for entry in &kernels {
+        let program = (entry.build)();
+        let source = pretty(&program);
+        let reply = c
+            .compile(&source, "auto")
+            .unwrap_or_else(|e| panic!("{}: compile: {e:#}", entry.name));
+        assert_eq!(reply.name, entry.name);
+        assert!(!reply.cached, "{}: first submission cannot be cached", entry.name);
+
+        // Printed sources carry no presets: bind explicitly, exactly the
+        // program's params.
+        let preset = (entry.preset)(Preset::Tiny);
+        let params: Vec<(String, i64)> = program
+            .params
+            .iter()
+            .map(|sym| {
+                let v = preset
+                    .iter()
+                    .find(|(s, _)| s == sym)
+                    .unwrap_or_else(|| panic!("{}: no tiny binding for {}", entry.name, sym.name()))
+                    .1;
+                (sym.name().to_string(), v)
+            })
+            .collect();
+        let run = c
+            .run(
+                &reply.kernel,
+                &RunRequest {
+                    params,
+                    threads: 2,
+                    ..RunRequest::default()
+                },
+            )
+            .unwrap_or_else(|e| panic!("{}: run: {e:#}", entry.name));
+
+        // Local unoptimized baseline with the daemon's default inputs.
+        let baseline = compile_program(
+            (entry.build)(),
+            &PipelineSpec::Config(OptConfig::None),
+            MemSchedules::default(),
+        )
+        .unwrap();
+        let bind: Vec<(Sym, i64)> = preset
+            .iter()
+            .filter(|(s, _)| program.params.contains(s))
+            .copied()
+            .collect();
+        let inputs = gen_inputs(&baseline.program, &bind, default_init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let (storage, _) = baseline.execute(&bind, &refs, 1).unwrap();
+        for (name, remote) in &run.outputs {
+            let local = storage.by_name(name).unwrap_or_else(|| {
+                panic!("{}: daemon invented container `{name}`", entry.name)
+            });
+            assert_eq!(local.len(), remote.len(), "{}.{name}: length", entry.name);
+            for (i, (l, r)) in local.iter().zip(remote.iter()).enumerate() {
+                assert_eq!(
+                    l.to_bits(),
+                    r.to_bits(),
+                    "{}.{name}[{i}]: daemon {r} vs local {l}",
+                    entry.name
+                );
+            }
+        }
+        sources.push((entry.name, source, reply.kernel));
+    }
+
+    // Second pass: every kernel must still be resident and hit.
+    for (name, source, id) in &sources {
+        let again = c.compile(source, "auto").unwrap();
+        assert!(again.cached, "{name}: second submission missed the cache");
+        assert_eq!(&again.kernel, id, "{name}: content address changed");
+    }
+
+    let n = kernels.len() as i64;
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "misses"), n, "{m}");
+    assert_eq!(metric(&m, "hits"), n, "{m}");
+    assert_eq!(metric(&m, "compiles"), n, "every miss compiles exactly once: {m}");
+    assert_eq!(metric(&m, "runs"), n, "{m}");
+    assert_eq!(metric(&m, "evictions"), 0, "{m}");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Content addressing
+// ---------------------------------------------------------------------------
+
+/// Formatting, comments, and label spelling do not fragment the cache;
+/// a different pipeline spec does.
+#[test]
+fn cache_keys_are_canonical_not_textual() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let original = "program svc_canon {\n  param svc_ca_N = { tiny: 16, small: 64, \
+                    medium: 256 };\n  array A[svc_ca_N];\n  for (svc_ca_i = 0; svc_ca_i < \
+                    svc_ca_N; svc_ca_i += 1) {\n    A[svc_ca_i] = 2.0*A[svc_ca_i];\n  }\n}\n";
+    let reformatted = "// a comment the lexer skips\nprogram svc_canon {\n\n  param svc_ca_N \
+                       = { tiny: 16, small: 64, medium: 256 };\n  array A[ svc_ca_N ];\n  \
+                       for (svc_ca_i = 0; svc_ca_i < svc_ca_N; svc_ca_i += 1) {\n      \
+                       A[svc_ca_i]   = 2.0 * A[svc_ca_i];   // doubled\n  }\n}\n";
+    let a = c.compile(original, "cfg1").unwrap();
+    let b = c.compile(reformatted, "cfg1").unwrap();
+    assert_eq!(a.kernel, b.kernel, "canonically equal programs must share one entry");
+    assert!(!a.cached && b.cached);
+    let d = c.compile(original, "cfg2").unwrap();
+    assert_ne!(a.kernel, d.kernel, "the pipeline spec is part of the content address");
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "misses"), 2, "{m}");
+    assert_eq!(metric(&m, "hits"), 1, "{m}");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// LRU eviction at capacity
+// ---------------------------------------------------------------------------
+
+/// With capacity 2 (one shard), the least-recently-used kernel is
+/// evicted, running an evicted id 404s, and resubmission recompiles.
+#[test]
+fn lru_eviction_at_capacity_end_to_end() {
+    let server = start(2, 1, 2);
+    let c = client(&server);
+    let src = |tag: &str| {
+        format!(
+            "program svc_lru_{tag} {{\n  param svc_lru_{tag}_N = {{ tiny: 8, small: 16, \
+             medium: 32 }};\n  array A[svc_lru_{tag}_N];\n  for (svc_lru_{tag}_i = 0; \
+             svc_lru_{tag}_i < svc_lru_{tag}_N; svc_lru_{tag}_i += 1) {{\n    \
+             A[svc_lru_{tag}_i] = 2.0*A[svc_lru_{tag}_i];\n  }}\n}}\n"
+        )
+    };
+    let a = c.compile(&src("a"), "cfg1").unwrap();
+    assert!(!a.cached);
+    let b = c.compile(&src("b"), "cfg1").unwrap();
+    assert!(c.compile(&src("a"), "cfg1").unwrap().cached); // a is now MRU
+    let d = c.compile(&src("c"), "cfg1").unwrap(); // evicts b
+    assert!(c.compile(&src("a"), "cfg1").unwrap().cached, "a must survive");
+    let b2 = c.compile(&src("b"), "cfg1").unwrap();
+    assert!(!b2.cached, "b was evicted and must recompile");
+    assert_eq!(b2.kernel, b.kernel, "recompiled b keeps its content address");
+    // b's return evicted the then-LRU entry (c): running it 404s.
+    let err = c.run(&d.kernel, &RunRequest::default()).unwrap_err().to_string();
+    assert!(err.contains("404"), "{err}");
+    assert!(err.contains("resubmit"), "{err}");
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "misses"), 4, "{m}"); // a, b, c, b again
+    assert_eq!(metric(&m, "hits"), 2, "{m}"); // a twice
+    assert_eq!(metric(&m, "evictions"), 2, "{m}"); // b, then c
+    assert_eq!(metric(&m, "entries"), 2, "{m}");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent submissions coalesce
+// ---------------------------------------------------------------------------
+
+/// Four simultaneous submissions of one program autotune exactly once:
+/// one miss compiles, the rest hit the finished entry or coalesce onto
+/// the in-flight build. Never two compiles.
+#[test]
+fn concurrent_submissions_compile_once() {
+    let server = start(16, 1, 6);
+    let addr = server.addr().to_string();
+    let source = "program svc_conc {\n  param svc_co_N = { tiny: 48, small: 512, \
+                  medium: 4096 };\n  array x[svc_co_N];\n  array y[svc_co_N];\n  \
+                  transient t[svc_co_N];\n  for (svc_co_i = 1; svc_co_i < svc_co_N - 1; \
+                  svc_co_i += 1) {\n    t[svc_co_i] = 0.25*x[svc_co_i - 1] + 0.5*x[svc_co_i] \
+                  + 0.25*x[svc_co_i + 1];\n  }\n  for (svc_co_j = 1; svc_co_j < svc_co_N - 1; \
+                  svc_co_j += 1) {\n    y[svc_co_j] = t[svc_co_j];\n  }\n}\n";
+    std::thread::scope(|scope| {
+        for _ in 0..4 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let reply = Client::new(&addr).compile(source, "auto").unwrap();
+                assert_eq!(reply.name, "svc_conc");
+            });
+        }
+    });
+    let c = client(&server);
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "compiles"), 1, "duplicate autotune ran: {m}");
+    assert_eq!(metric(&m, "misses"), 1, "{m}");
+    assert_eq!(
+        metric(&m, "hits") + metric(&m, "coalesced"),
+        3,
+        "every other submission reused the one build: {m}"
+    );
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Wire-level params / inputs / outputs
+// ---------------------------------------------------------------------------
+
+/// Explicit inputs drive the computation, `outputs` filters the reply,
+/// and the `--check` helper accepts the result.
+#[test]
+fn explicit_inputs_and_output_selection() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let source = "program svc_io {\n  param svc_io_N = { tiny: 8, small: 64, medium: 256 };\n  \
+                  array x[svc_io_N];\n  array y[svc_io_N];\n  for (svc_io_i = 0; svc_io_i < \
+                  svc_io_N; svc_io_i += 1) {\n    y[svc_io_i] = 2.0*x[svc_io_i] + 1.0;\n  }\n}\n";
+    let reply = c.compile(source, "auto").unwrap();
+    assert_eq!(reply.params, vec!["svc_io_N"]);
+    assert_eq!(reply.arguments, vec!["x", "y"]);
+
+    let x: Vec<f64> = (0..8).map(|i| i as f64).collect();
+    let req = RunRequest {
+        inputs: vec![("x".to_string(), x.clone())],
+        outputs: Some(vec!["y".to_string()]),
+        threads: 2,
+        ..RunRequest::default()
+    };
+    let run = c.run(&reply.kernel, &req).unwrap();
+    assert_eq!(run.outputs.len(), 1, "output filter ignored");
+    let (name, y) = &run.outputs[0];
+    assert_eq!(name, "y");
+    let want: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+    assert_eq!(y, &want);
+    check_against_local(source, &req, &run).unwrap();
+
+    // Caller mistakes are 400s with actionable messages.
+    let cases: Vec<(RunRequest, &str)> = vec![
+        (
+            RunRequest {
+                inputs: vec![("x".to_string(), vec![1.0])],
+                ..RunRequest::default()
+            },
+            "expected 8",
+        ),
+        (
+            RunRequest {
+                inputs: vec![("nope".to_string(), vec![1.0])],
+                ..RunRequest::default()
+            },
+            "no argument container",
+        ),
+        (
+            RunRequest {
+                outputs: Some(vec!["t".to_string()]),
+                ..RunRequest::default()
+            },
+            "no argument container",
+        ),
+        (
+            RunRequest {
+                params: vec![("bogus".to_string(), 3)],
+                ..RunRequest::default()
+            },
+            "no param",
+        ),
+        (
+            RunRequest {
+                preset: "huge".to_string(),
+                ..RunRequest::default()
+            },
+            "unknown preset",
+        ),
+        (
+            RunRequest {
+                params: vec![("svc_io_N".to_string(), 0)],
+                ..RunRequest::default()
+            },
+            "below its assumed minimum",
+        ),
+    ];
+    for (bad, frag) in cases {
+        let err = c.run(&reply.kernel, &bad).unwrap_err().to_string();
+        assert!(err.contains("400"), "{frag}: {err}");
+        assert!(err.contains(frag), "expected {frag:?} in: {err}");
+    }
+    server.shutdown();
+}
+
+/// An explicit `small` preset run binds the annotated sizes.
+#[test]
+fn presets_bind_over_the_wire() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let source = "program svc_pre {\n  param svc_pre_N = { tiny: 4, small: 32, \
+                  medium: 128 };\n  array A[svc_pre_N];\n  for (svc_pre_i = 0; svc_pre_i < \
+                  svc_pre_N; svc_pre_i += 1) {\n    A[svc_pre_i] = A[svc_pre_i] + 1.0;\n  }\n}\n";
+    let reply = c.compile(source, "cfg1").unwrap();
+    let tiny = c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    assert_eq!(tiny.outputs[0].1.len(), 4);
+    let small = c
+        .run(
+            &reply.kernel,
+            &RunRequest {
+                preset: "small".to_string(),
+                ..RunRequest::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(small.outputs[0].1.len(), 32);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Daemon-level error paths + listings
+// ---------------------------------------------------------------------------
+
+#[test]
+fn healthz_kernels_and_error_paths() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    assert_eq!(c.healthz().unwrap().get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(c.kernels().unwrap().as_arr().unwrap().len(), 0);
+
+    // Parse errors surface with their line/column diagnostics.
+    let err = c.compile("program broken {\n  array A[8]\n}\n", "auto").unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("line 3"), "{err}");
+
+    // Bad pipeline specs are rejected without occupying a cache slot.
+    let err = c
+        .compile("program svc_ok2 {\n  array A[8];\n}\n", "doall,no-such-pass")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown pass"), "{err}");
+
+    // Unknown routes and malformed ids 404.
+    let err = c.run("not-an-id", &RunRequest::default()).unwrap_err().to_string();
+    assert!(err.contains("404"), "{err}");
+    let (status, _) = silo::service::http::roundtrip(
+        &server.addr().to_string(),
+        "GET",
+        "/nope",
+        "",
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+
+    // A successful compile shows up in /kernels with its id.
+    let ok = c
+        .compile("program svc_list {\n  array A[8];\n  A[0] = 1.0;\n}\n", "none")
+        .unwrap();
+    let listing = c.kernels().unwrap();
+    let entries = listing.as_arr().unwrap();
+    assert_eq!(entries.len(), 1);
+    assert_eq!(entries[0].get("id").and_then(Json::as_str), Some(ok.kernel.as_str()));
+    assert_eq!(entries[0].get("name").and_then(Json::as_str), Some("svc_list"));
+
+    let m = c.metrics().unwrap();
+    assert!(metric(&m, "errors") >= 3, "{m}");
+    server.shutdown();
+}
+
+/// Oversized bodies are refused at the framing layer with a 413, before
+/// any buffering of the payload.
+#[test]
+fn oversized_bodies_get_413() {
+    use std::io::{Read, Write};
+    let server = start(4, 1, 2);
+    let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+    write!(s, "POST /compile HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    assert!(buf.starts_with("HTTP/1.1 413"), "{buf}");
+    assert!(buf.contains("body too large"), "{buf}");
+    drop(s);
+    server.shutdown();
+}
+
+/// Transients never leak into replies: only argument containers return.
+#[test]
+fn transients_stay_server_side() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let source = "program svc_tr {\n  param svc_tr_N = { tiny: 8, small: 16, medium: 32 };\n  \
+                  array a[svc_tr_N];\n  transient tmp[svc_tr_N];\n  for (svc_tr_i = 0; \
+                  svc_tr_i < svc_tr_N; svc_tr_i += 1) {\n    tmp[svc_tr_i] = \
+                  2.0*a[svc_tr_i];\n  }\n  for (svc_tr_j = 0; svc_tr_j < svc_tr_N; \
+                  svc_tr_j += 1) {\n    a[svc_tr_j] = tmp[svc_tr_j] + 1.0;\n  }\n}\n";
+    let reply = c.compile(source, "auto").unwrap();
+    assert_eq!(reply.arguments, vec!["a"]);
+    let run = c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    let names: Vec<&str> = run.outputs.iter().map(|(n, _)| n.as_str()).collect();
+    assert_eq!(names, vec!["a"]);
+    server.shutdown();
+}
+
+/// The compiled-artifact handle really is reused: two runs of one cached
+/// kernel with different thread counts agree bitwise (and the program is
+/// compiled only once per the compile counter).
+#[test]
+fn repeat_runs_reuse_the_artifact() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let source = "program svc_rr {\n  param svc_rr_N = { tiny: 32, small: 128, \
+                  medium: 512 };\n  array v[svc_rr_N];\n  for (svc_rr_i = 0; svc_rr_i < \
+                  svc_rr_N; svc_rr_i += 1) {\n    v[svc_rr_i] = 0.5*v[svc_rr_i] + 2.0;\n  }\n}\n";
+    let reply = c.compile(source, "auto").unwrap();
+    let r1 = c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    let r2 = c
+        .run(
+            &reply.kernel,
+            &RunRequest {
+                threads: 4,
+                ..RunRequest::default()
+            },
+        )
+        .unwrap();
+    let bits = |r: &silo::service::RunReply| -> Vec<u64> {
+        r.outputs[0].1.iter().map(|x| x.to_bits()).collect()
+    };
+    assert_eq!(bits(&r1), bits(&r2));
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "compiles"), 1, "{m}");
+    assert_eq!(metric(&m, "runs"), 2, "{m}");
+    server.shutdown();
+}
