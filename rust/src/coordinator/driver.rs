@@ -11,11 +11,12 @@
 
 use anyhow::{bail, Result};
 
-use crate::exec::{Storage, Vm};
+use crate::exec::{ExecLimits, Storage, Vm};
 use crate::ir::Program;
 use crate::kernels::{self, Preset};
 use crate::symbolic::{ContainerId, Sym};
 use crate::transforms::{Pipeline, PipelineReport, PrefetchPass, PtrIncPass};
+use crate::verify::{self, CheckSet, SafetyTier, VerifyReport};
 
 /// Which optimization pipeline to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -107,6 +108,25 @@ pub struct RunOutcome {
     pub wall: std::time::Duration,
 }
 
+/// Stable prefix of verifier-refusal messages. The service daemon
+/// classifies refusals (HTTP 422, code `rejected`) by this exact
+/// constant, so the two sides cannot drift apart: the refusal `bail!`
+/// below and the server's `starts_with` both reference it.
+pub const REJECTED_PREFIX: &str = "rejected: ";
+
+/// How a compile treats safety (see [`crate::verify`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SafetyPolicy {
+    /// No verification, no checks — submissions execute with CLI-level
+    /// trust (today's default).
+    Trusted,
+    /// Run the static bounds verifier after optimization: fully proven
+    /// programs lower unchecked (tier `Proven`), unproven accesses get
+    /// runtime bounds checks (tier `Checked`), and programs containing
+    /// a provably-out-of-bounds access are refused.
+    Verified,
+}
+
 /// A reusable compiled artifact: the optimized program, its pass report,
 /// and the lowered bytecode — the product of one optimize → lower run
 /// that can then execute any number of times under different parameter
@@ -122,6 +142,10 @@ pub struct CompiledKernel {
     pub pipeline: Option<PipelineReport>,
     /// The lowered, executable form.
     pub vm: Vm,
+    /// Which safety tier the artifact earned at compile time.
+    pub tier: SafetyTier,
+    /// The verifier's report (`None` under [`SafetyPolicy::Trusted`]).
+    pub verify: Option<VerifyReport>,
 }
 
 impl CompiledKernel {
@@ -133,9 +157,24 @@ impl CompiledKernel {
         inputs: &[(ContainerId, &[f64])],
         threads: usize,
     ) -> Result<(Storage, std::time::Duration)> {
+        let (storage, wall, _) =
+            self.execute_limited(params, inputs, threads, &ExecLimits::none())?;
+        Ok((storage, wall))
+    }
+
+    /// [`CompiledKernel::execute`] under fuel/wall-clock limits; also
+    /// returns the fuel spent (loop back-edges). Traps surface as
+    /// errors wrapping [`crate::exec::Trap`].
+    pub fn execute_limited(
+        &self,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+        limits: &ExecLimits,
+    ) -> Result<(Storage, std::time::Duration, u64)> {
         let t0 = std::time::Instant::now();
-        let storage = self.vm.run(params, inputs, threads)?;
-        Ok((storage, t0.elapsed()))
+        let run = self.vm.run_limited(params, inputs, threads, limits)?;
+        Ok((run.storage, t0.elapsed(), run.fuel_used))
     }
 }
 
@@ -143,9 +182,32 @@ impl CompiledKernel {
 /// and lower the result to bytecode once, yielding a [`CompiledKernel`]
 /// that executes without further compilation.
 pub fn compile_program(
+    program: Program,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+) -> Result<CompiledKernel> {
+    compile_program_with(program, spec, mem, SafetyPolicy::Trusted)
+}
+
+/// [`compile_program`] under [`SafetyPolicy::Verified`]: the artifact
+/// comes back tier-`Proven` (no runtime cost) or tier-`Checked`
+/// (bounds guards on exactly the unproven accesses); programs with a
+/// provably-out-of-bounds access are refused with the verifier's
+/// reasons.
+pub fn compile_program_verified(
+    program: Program,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+) -> Result<CompiledKernel> {
+    compile_program_with(program, spec, mem, SafetyPolicy::Verified)
+}
+
+/// The policy-parameterized compile everything above routes through.
+pub fn compile_program_with(
     mut program: Program,
     spec: &PipelineSpec,
     mem: MemSchedules,
+    policy: SafetyPolicy,
 ) -> Result<CompiledKernel> {
     let pipeline = if matches!(spec, PipelineSpec::Auto) {
         // Cost-model-driven schedule search: the tuner picks the pipeline
@@ -175,12 +237,53 @@ pub fn compile_program(
         }
     };
     crate::ir::validate::validate(&program)?;
-    let vm = Vm::compile(&program)?;
+    let (vm, tier, report) = match policy {
+        SafetyPolicy::Trusted => (Vm::compile(&program)?, SafetyTier::Trusted, None),
+        SafetyPolicy::Verified => {
+            // Verify the *optimized* program — the exact loop nest the
+            // bytecode is lowered from.
+            let report = verify::verify_program(&program);
+            let oob = report.proven_oob();
+            if !oob.is_empty() {
+                let detail: Vec<String> = oob
+                    .iter()
+                    .map(|a| {
+                        format!(
+                            "{}[{}]: {}",
+                            a.container_name,
+                            a.offset,
+                            match &a.verdict {
+                                crate::verify::AccessVerdict::ProvenOutOfBounds { reason } =>
+                                    reason.clone(),
+                                _ => String::new(),
+                            }
+                        )
+                    })
+                    .collect();
+                bail!(
+                    "{REJECTED_PREFIX}program `{}` contains access(es) that can never be \
+                     in bounds under its declared parameter assumptions: {}",
+                    program.name,
+                    detail.join("; ")
+                );
+            }
+            let checks = CheckSet::from_report(&report);
+            let tier = report.tier();
+            let vm = if checks.is_empty() {
+                Vm::compile(&program)?
+            } else {
+                Vm::compile_checked(&program, &checks)?
+            };
+            (vm, tier, Some(report))
+        }
+    };
     Ok(CompiledKernel {
         name: program.name.clone(),
         program,
         pipeline,
         vm,
+        tier,
+        verify: report,
     })
 }
 

@@ -1,5 +1,6 @@
 //! Program execution: the bytecode VM, the threaded DOALL/DOACROSS
-//! runtime, storage, and trace hooks.
+//! runtime, storage, trace hooks, and the structured trap/limit types
+//! of the checked execution tier.
 
 pub mod parallel;
 pub mod trace;
@@ -8,4 +9,51 @@ pub mod vm;
 
 pub use trace::{CollectingTracer, CountingTracer, NullTracer, TraceEvent, Tracer};
 pub use values::{Frame, Storage};
-pub use vm::{exec_block, exec_nodes, Vm};
+pub use vm::{exec_block, exec_nodes, ExecLimits, Vm, VmRun};
+
+/// A structured abort of the checked execution tier. The VM never
+/// continues past a trap: storage is left partially written and the
+/// caller reports the trap instead of outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trap {
+    /// A bounds-checked access ([`crate::lowering::bytecode::Op::BoundsCheck`])
+    /// computed an index outside its container.
+    OutOfBounds {
+        /// Dense container id (resolve to a name via the `ExecProgram`).
+        cont: u16,
+        index: i64,
+        len: usize,
+    },
+    /// The cooperative fuel meter (decremented at every loop back-edge)
+    /// reached zero before the program finished.
+    FuelExhausted,
+    /// The wall-clock deadline passed (checked every
+    /// [`values::DEADLINE_TICK`] back-edges).
+    TimeLimit,
+}
+
+impl Trap {
+    /// Stable machine-readable code (the wire protocol's `code` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Trap::OutOfBounds { .. } => "out_of_bounds",
+            Trap::FuelExhausted => "fuel_exhausted",
+            Trap::TimeLimit => "time_limit",
+        }
+    }
+}
+
+impl std::fmt::Display for Trap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Trap::OutOfBounds { cont, index, len } => write!(
+                f,
+                "out-of-bounds access: container #{cont} index {index} (length {len})"
+            ),
+            Trap::FuelExhausted => write!(f, "fuel budget exhausted before the program finished"),
+            Trap::TimeLimit => write!(f, "wall-clock limit exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for Trap {}

@@ -3,14 +3,22 @@
 //! schedules (sync semantics, privatization); the paper's speedup numbers
 //! come from the machine simulator (`machine::simsched`), which runs the
 //! same schedules against a multicore model.
+//!
+//! Checked-tier semantics: a worker that traps (bounds, fuel, deadline)
+//! stops, flags the run as aborted, and the first trap is reported to
+//! the caller. DOACROSS waiters poll the abort flag so a trapped
+//! producer can never deadlock its consumers. Metered runs split the
+//! remaining fuel evenly across workers (the total spent never exceeds
+//! the budget; a worker may trap early — that is the budget working).
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 
 use crate::lowering::bytecode::{ExecProgram, LoopExec};
 
 use super::trace::NullTracer;
 use super::values::Frame;
 use super::vm::{exec_block, exec_nodes};
+use super::Trap;
 
 /// Stride and trip count of a loop given evaluated bounds. The stride is
 /// evaluated once at entry (parallel loops require an iteration-invariant
@@ -21,10 +29,10 @@ fn stride_and_trip_count(
     frame: &mut Frame,
     start_val: i64,
     end_val: i64,
-) -> (i64, usize) {
+) -> Result<(i64, usize), Trap> {
     let mut tr = NullTracer;
     frame.ints[l.var_reg as usize] = start_val;
-    exec_block(&l.stride.ops, frame, &mut tr);
+    exec_block(&l.stride.ops, frame, &mut tr)?;
     let s = frame.ints[l.stride_reg as usize];
     let count: u128 = if s > 0 && start_val < end_val {
         let span = (end_val as i128 - start_val as i128) as u128;
@@ -35,7 +43,44 @@ fn stride_and_trip_count(
     } else {
         0
     };
-    (s, usize::try_from(count).unwrap_or(usize::MAX))
+    Ok((s, usize::try_from(count).unwrap_or(usize::MAX)))
+}
+
+/// Per-worker fuel share for a metered frame; unmetered workers keep
+/// the effectively-infinite budget. Shares may round down to zero —
+/// such workers trap on their first back-edge, which is correct when
+/// the remaining budget is smaller than the worker count (the total
+/// handed out never exceeds what remains).
+fn fuel_share(frame: &Frame, nthreads: usize) -> i64 {
+    if frame.metered {
+        frame.fuel.max(0) / nthreads as i64
+    } else {
+        i64::MAX
+    }
+}
+
+/// Settle worker results back into the parent frame: fold unspent fuel
+/// back into the budget and surface the first trap.
+fn settle(
+    frame: &mut Frame,
+    share: i64,
+    shares_handed_out: usize,
+    results: Vec<Result<i64, Trap>>,
+) -> Result<(), Trap> {
+    if frame.metered {
+        let distributed = share.saturating_mul(shares_handed_out as i64);
+        let mut remaining = frame.fuel.saturating_sub(distributed);
+        for r in &results {
+            if let Ok(leftover) = r {
+                remaining = remaining.saturating_add((*leftover).max(0));
+            }
+        }
+        frame.fuel = remaining;
+    }
+    for r in results {
+        r?;
+    }
+    Ok(())
 }
 
 /// DOALL: partition contiguous `(lo, hi)` index ranges of the iteration
@@ -49,14 +94,18 @@ pub fn run_par(
     start_val: i64,
     end_val: i64,
     threads: usize,
-) {
-    let (s, count) = stride_and_trip_count(l, frame, start_val, end_val);
+) -> Result<(), Trap> {
+    let (s, count) = stride_and_trip_count(l, frame, start_val, end_val)?;
     if count == 0 {
-        return;
+        return Ok(());
     }
     let nthreads = threads.min(count).max(1);
     let chunk = count.div_ceil(nthreads);
+    let share = fuel_share(frame, nthreads);
+    let mut results: Vec<Result<i64, Trap>> = Vec::new();
+    let mut handed_out = 0usize;
     std::thread::scope(|scope| {
+        let mut handles = Vec::new();
         for t in 0..nthreads {
             let lo = t * chunk;
             let hi = ((t + 1) * chunk).min(count);
@@ -64,21 +113,29 @@ pub fn run_par(
                 continue;
             }
             let mut my_frame = frame.fork(prog, lens);
-            scope.spawn(move || {
+            my_frame.fuel = share;
+            handed_out += 1;
+            handles.push(scope.spawn(move || -> Result<i64, Trap> {
                 let mut tr = NullTracer;
                 for idx in lo..hi {
                     let v = start_val + (idx as i64) * s;
                     my_frame.ints[l.var_reg as usize] = v;
-                    exec_block(&l.pre_body.ops, &mut my_frame, &mut tr);
+                    my_frame.backedge()?;
+                    exec_block(&l.pre_body.ops, &mut my_frame, &mut tr)?;
                     // Prefetch hints are omitted on parallel loops (§4.1.2)
                     // but execute harmlessly if present.
-                    exec_block(&l.prefetch.ops, &mut my_frame, &mut tr);
-                    exec_nodes(prog, &l.body, &mut my_frame, lens, 1, &mut tr);
-                    exec_block(&l.post_body.ops, &mut my_frame, &mut tr);
+                    exec_block(&l.prefetch.ops, &mut my_frame, &mut tr)?;
+                    exec_nodes(prog, &l.body, &mut my_frame, lens, 1, &mut tr)?;
+                    exec_block(&l.post_body.ops, &mut my_frame, &mut tr)?;
                 }
-            });
+                Ok(my_frame.fuel)
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("parallel worker panicked"));
         }
     });
+    settle(frame, share, handed_out, results)
 }
 
 /// DOACROSS: iterations round-robin across workers; wait/release flags
@@ -95,57 +152,83 @@ pub fn run_doacross(
     threads: usize,
     waits: &[(usize, i64)],
     release_after: Option<usize>,
-) {
-    let (s, count) = stride_and_trip_count(l, frame, start_val, end_val);
+) -> Result<(), Trap> {
+    let (s, count) = stride_and_trip_count(l, frame, start_val, end_val)?;
     if count == 0 {
-        return;
+        return Ok(());
     }
     let nthreads = threads.min(count).max(1);
     // The release flags are the synchronization state itself — one per
     // iteration — but the iteration *values* stay arithmetic.
     let flags: Vec<AtomicU8> = (0..count).map(|_| AtomicU8::new(0)).collect();
     let flags = &flags;
+    // A trapped worker can never release its iterations; waiters poll
+    // this flag so the pipeline unwinds instead of spinning forever.
+    let aborted = AtomicBool::new(false);
+    let aborted = &aborted;
+    let share = fuel_share(frame, nthreads);
+    let mut results: Vec<Result<i64, Trap>> = Vec::new();
 
     std::thread::scope(|scope| {
+        let mut handles = Vec::new();
         for tid in 0..nthreads {
             let mut my_frame = frame.fork(prog, lens);
-            scope.spawn(move || {
+            my_frame.fuel = share;
+            handles.push(scope.spawn(move || -> Result<i64, Trap> {
                 let mut tr = NullTracer;
                 let mut t = tid;
-                while t < count {
-                    let v = start_val + (t as i64) * s;
-                    my_frame.ints[l.var_reg as usize] = v;
-                    exec_block(&l.pre_body.ops, &mut my_frame, &mut tr);
-                    exec_block(&l.prefetch.ops, &mut my_frame, &mut tr);
-                    for (ei, node) in l.body.iter().enumerate() {
-                        // Block until every producing iteration released.
-                        for (w_elem, delta) in waits {
-                            if *w_elem == ei && t as i64 - delta >= 0 {
-                                let target = t - *delta as usize;
-                                while flags[target].load(Ordering::Acquire) == 0 {
-                                    std::thread::yield_now();
+                let mut run = || -> Result<i64, Trap> {
+                    while t < count {
+                        let v = start_val + (t as i64) * s;
+                        my_frame.ints[l.var_reg as usize] = v;
+                        my_frame.backedge()?;
+                        exec_block(&l.pre_body.ops, &mut my_frame, &mut tr)?;
+                        exec_block(&l.prefetch.ops, &mut my_frame, &mut tr)?;
+                        for (ei, node) in l.body.iter().enumerate() {
+                            // Block until every producing iteration released.
+                            for (w_elem, delta) in waits {
+                                if *w_elem == ei && t as i64 - delta >= 0 {
+                                    let target = t - *delta as usize;
+                                    while flags[target].load(Ordering::Acquire) == 0 {
+                                        if aborted.load(Ordering::Acquire) {
+                                            // A peer trapped: stop cleanly,
+                                            // return unspent fuel.
+                                            return Ok(my_frame.fuel);
+                                        }
+                                        std::thread::yield_now();
+                                    }
                                 }
                             }
+                            exec_nodes(
+                                prog,
+                                std::slice::from_ref(node),
+                                &mut my_frame,
+                                lens,
+                                1,
+                                &mut tr,
+                            )?;
+                            if release_after == Some(ei) {
+                                flags[t].store(1, Ordering::Release);
+                            }
                         }
-                        exec_nodes(
-                            prog,
-                            std::slice::from_ref(node),
-                            &mut my_frame,
-                            lens,
-                            1,
-                            &mut tr,
-                        );
-                        if release_after == Some(ei) {
+                        exec_block(&l.post_body.ops, &mut my_frame, &mut tr)?;
+                        if release_after.is_none() {
                             flags[t].store(1, Ordering::Release);
                         }
+                        t += nthreads;
                     }
-                    exec_block(&l.post_body.ops, &mut my_frame, &mut tr);
-                    if release_after.is_none() {
-                        flags[t].store(1, Ordering::Release);
-                    }
-                    t += nthreads;
+                    Ok(my_frame.fuel)
+                };
+                let out = run();
+                if out.is_err() {
+                    aborted.store(true, Ordering::Release);
                 }
-            });
+                out
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("doacross worker panicked"));
         }
     });
+    settle(frame, share, nthreads, results)
 }

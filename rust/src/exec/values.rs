@@ -57,14 +57,32 @@ impl Storage {
     }
 }
 
+/// How many loop back-edges run between wall-clock deadline probes
+/// (`Instant::now` is far too expensive to call per iteration).
+pub const DEADLINE_TICK: u32 = 4096;
+
 /// Per-thread execution frame: register files plus per-container base
-/// pointers (private containers point at thread-local buffers).
+/// pointers (private containers point at thread-local buffers), the
+/// container lengths for checked-tier bounds guards, and the
+/// cooperative fuel/deadline meters.
 pub struct Frame {
     pub ints: Vec<i64>,
     pub floats: Vec<f64>,
     pub bases: Vec<*mut f64>,
-    #[cfg(debug_assertions)]
+    /// Container lengths — what `Op::BoundsCheck` guards compare
+    /// against.
     pub lens: Vec<usize>,
+    /// Remaining fuel (loop back-edges). Initialized to `i64::MAX` for
+    /// unmetered runs, so the per-back-edge decrement-and-test never
+    /// fires in practice; metered runs start at the caller's budget.
+    pub fuel: i64,
+    /// Whether this run carries a real fuel budget (drives the
+    /// fuel-splitting of parallel loops).
+    pub metered: bool,
+    /// Wall-clock deadline, probed every [`DEADLINE_TICK`] back-edges.
+    pub deadline: Option<std::time::Instant>,
+    /// Countdown to the next deadline probe.
+    pub tick: u32,
     /// Thread-local buffers backing private containers (kept alive while
     /// `bases` points into them).
     pub private: Vec<Vec<f64>>,
@@ -80,32 +98,34 @@ impl Frame {
             }
         }
         let bases: Vec<*mut f64> = storage.arrays.iter_mut().map(|a| a.as_mut_ptr()).collect();
-        #[cfg(debug_assertions)]
         let lens = storage.arrays.iter().map(|a| a.len()).collect();
         Frame {
             ints,
             floats,
             bases,
-            #[cfg(debug_assertions)]
             lens,
+            fuel: i64::MAX,
+            metered: false,
+            deadline: None,
+            tick: DEADLINE_TICK,
             private: Vec::new(),
         }
     }
 
     /// Clone for a worker thread: registers copied, shared bases aliased,
-    /// private containers re-backed by thread-local buffers.
+    /// private containers re-backed by thread-local buffers. Fuel is
+    /// copied verbatim — parallel runtimes overwrite it with the
+    /// worker's share before spawning.
     pub fn fork(&self, prog: &ExecProgram, storage_lens: &[usize]) -> Frame {
         let mut f = Frame {
             ints: self.ints.clone(),
             floats: self.floats.clone(),
             bases: self.bases.clone(),
-            #[cfg(debug_assertions)]
-            lens: {
-                #[cfg(debug_assertions)]
-                {
-                    self.lens.clone()
-                }
-            },
+            lens: self.lens.clone(),
+            fuel: self.fuel,
+            metered: self.metered,
+            deadline: self.deadline,
+            tick: DEADLINE_TICK,
             private: Vec::new(),
         };
         for (i, c) in prog.containers.iter().enumerate() {
@@ -116,6 +136,29 @@ impl Frame {
             }
         }
         f
+    }
+
+    /// One loop back-edge: burn a unit of fuel and occasionally probe
+    /// the wall clock. `Err` aborts the enclosing execution. A budget
+    /// of N permits exactly N back-edges (trap on the N+1st), so a
+    /// client may set its budget to a previous run's `fuel_used` or to
+    /// the verifier's fuel bound and still complete.
+    #[inline]
+    pub fn backedge(&mut self) -> Result<(), super::Trap> {
+        self.fuel -= 1;
+        if self.fuel < 0 {
+            return Err(super::Trap::FuelExhausted);
+        }
+        self.tick -= 1;
+        if self.tick == 0 {
+            self.tick = DEADLINE_TICK;
+            if let Some(d) = self.deadline {
+                if std::time::Instant::now() >= d {
+                    return Err(super::Trap::TimeLimit);
+                }
+            }
+        }
+        Ok(())
     }
 }
 

@@ -1,14 +1,56 @@
 //! The sequential bytecode interpreter and the tree executor.
+//!
+//! Execution happens on one of two tiers:
+//!
+//! * **Unchecked** (trusted / fully proven): bytecode carries no
+//!   [`Op::BoundsCheck`] guards and runs exactly as fast as before the
+//!   checked tier existed.
+//! * **Checked**: accesses the static verifier could not prove carry a
+//!   guard that aborts with a structured [`Trap::OutOfBounds`] instead
+//!   of dereferencing out of range.
+//!
+//! Orthogonally, every run owns a cooperative **fuel meter**: one unit
+//! per loop back-edge, checked before each iteration's body. Unmetered
+//! runs start at `i64::MAX` (the decrement never observes zero);
+//! metered runs ([`ExecLimits`]) abort with [`Trap::FuelExhausted`] /
+//! [`Trap::TimeLimit`] instead of running (or hanging) forever.
 
 use anyhow::Result;
 
 use crate::ir::Program;
 use crate::lowering::bytecode::{ExecNode, ExecProgram, ExecSchedule, LoopExec, Op};
-use crate::lowering::compile::lower;
+use crate::lowering::compile::{lower, lower_with_checks};
 use crate::symbolic::{ContainerId, Sym};
+use crate::verify::CheckSet;
 
 use super::trace::{NullTracer, Tracer};
 use super::values::{Frame, Storage};
+use super::Trap;
+
+/// Resource limits of one VM run (the untrusted service tier).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecLimits {
+    /// Fuel budget in loop back-edges; `None` = unmetered.
+    pub fuel: Option<u64>,
+    /// Wall-clock budget; `None` = unlimited.
+    pub wall: Option<std::time::Duration>,
+}
+
+impl ExecLimits {
+    /// No limits — the trusted CLI tier.
+    pub fn none() -> ExecLimits {
+        ExecLimits::default()
+    }
+}
+
+/// Outcome of a limit-aware run.
+pub struct VmRun {
+    pub storage: Storage,
+    /// Loop back-edges executed. Exact on the sequential path; on
+    /// metered runs parallel workers' consumption is folded back into
+    /// the budget (unmetered parallel work is not tracked).
+    pub fuel_used: u64,
+}
 
 /// A compiled, executable program.
 pub struct Vm {
@@ -18,6 +60,15 @@ pub struct Vm {
 impl Vm {
     pub fn compile(p: &Program) -> Result<Vm> {
         Ok(Vm { prog: lower(p)? })
+    }
+
+    /// Compile with runtime bounds guards on every access in `checks`
+    /// (see [`crate::verify`]). An empty set yields bytecode identical
+    /// to [`Vm::compile`].
+    pub fn compile_checked(p: &Program, checks: &CheckSet) -> Result<Vm> {
+        Ok(Vm {
+            prog: lower_with_checks(p, checks)?,
+        })
     }
 
     /// Run with `threads` workers. `inputs` seeds argument containers.
@@ -41,14 +92,66 @@ impl Vm {
         threads: usize,
         tracer: &mut T,
     ) -> Result<Storage> {
+        self.run_limited_traced(params, inputs, threads, &ExecLimits::none(), tracer)
+            .map(|r| r.storage)
+    }
+
+    /// Run under fuel/wall-clock limits. Traps surface as `anyhow`
+    /// errors wrapping the structured [`Trap`] (downcast to branch on
+    /// the kind).
+    pub fn run_limited(
+        &self,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+        limits: &ExecLimits,
+    ) -> Result<VmRun> {
+        let mut tr = NullTracer;
+        self.run_limited_traced(params, inputs, threads, limits, &mut tr)
+    }
+
+    pub fn run_limited_traced<T: Tracer>(
+        &self,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+        limits: &ExecLimits,
+        tracer: &mut T,
+    ) -> Result<VmRun> {
         let mut storage = Storage::allocate(&self.prog, params)?;
         for (c, data) in inputs {
             storage.set(*c, data)?;
         }
         let lens: Vec<usize> = storage.arrays.iter().map(|a| a.len()).collect();
         let mut frame = Frame::new(&self.prog, &mut storage, params);
-        exec_nodes(&self.prog, &self.prog.root, &mut frame, &lens, threads, tracer);
-        Ok(storage)
+        let initial_fuel = match limits.fuel {
+            Some(f) => {
+                frame.metered = true;
+                i64::try_from(f).unwrap_or(i64::MAX).max(1)
+            }
+            None => i64::MAX,
+        };
+        frame.fuel = initial_fuel;
+        frame.deadline = limits.wall.map(|w| std::time::Instant::now() + w);
+        let res = exec_nodes(&self.prog, &self.prog.root, &mut frame, &lens, threads, tracer);
+        let fuel_used = initial_fuel.saturating_sub(frame.fuel.max(0)) as u64;
+        drop(frame);
+        match res {
+            Ok(()) => Ok(VmRun { storage, fuel_used }),
+            // Bounds traps gain a short context resolving the container
+            // name (the Trap itself only knows the dense id); other
+            // traps' Display is already the full story.
+            Err(trap @ Trap::OutOfBounds { cont, .. }) => {
+                let name = self
+                    .prog
+                    .containers
+                    .get(cont as usize)
+                    .map(|c| c.name.clone())
+                    .unwrap_or_else(|| format!("#{cont}"));
+                Err(anyhow::Error::new(trap).context(format!("in container `{name}`")))
+            }
+            Err(trap) => Err(anyhow::Error::new(trap)),
+        }
     }
 }
 
@@ -60,13 +163,14 @@ pub fn exec_nodes<T: Tracer>(
     lens: &[usize],
     threads: usize,
     tr: &mut T,
-) {
+) -> Result<(), Trap> {
     for n in nodes {
         match n {
-            ExecNode::Code(block) => exec_block(&block.ops, frame, tr),
-            ExecNode::Loop(l) => exec_tree_loop(prog, l, frame, lens, threads, tr),
+            ExecNode::Code(block) => exec_block(&block.ops, frame, tr)?,
+            ExecNode::Loop(l) => exec_tree_loop(prog, l, frame, lens, threads, tr)?,
         }
     }
+    Ok(())
 }
 
 fn exec_tree_loop<T: Tracer>(
@@ -76,10 +180,10 @@ fn exec_tree_loop<T: Tracer>(
     lens: &[usize],
     threads: usize,
     tr: &mut T,
-) {
-    exec_block(&l.start.ops, frame, tr);
+) -> Result<(), Trap> {
+    exec_block(&l.start.ops, frame, tr)?;
     let start_val = frame.ints[l.start_reg as usize];
-    exec_block(&l.end.ops, frame, tr);
+    exec_block(&l.end.ops, frame, tr)?;
     let end_val = frame.ints[l.end_reg as usize];
 
     let effective_threads = match l.schedule {
@@ -93,26 +197,27 @@ fn exec_tree_loop<T: Tracer>(
         let mut v = start_val;
         loop {
             frame.ints[l.var_reg as usize] = v;
-            exec_block(&l.stride.ops, frame, tr);
+            exec_block(&l.stride.ops, frame, tr)?;
             let s = frame.ints[l.stride_reg as usize];
             if s == 0 || (s > 0 && v >= end_val) || (s < 0 && v <= end_val) {
                 break;
             }
-            exec_block(&l.pre_body.ops, frame, tr);
-            exec_block(&l.prefetch.ops, frame, tr);
-            exec_nodes(prog, &l.body, frame, lens, threads, tr);
-            exec_block(&l.post_body.ops, frame, tr);
+            frame.backedge()?;
+            exec_block(&l.pre_body.ops, frame, tr)?;
+            exec_block(&l.prefetch.ops, frame, tr)?;
+            exec_nodes(prog, &l.body, frame, lens, threads, tr)?;
+            exec_block(&l.post_body.ops, frame, tr)?;
             v += s;
         }
-        exec_block(&l.post_loop.ops, frame, tr);
-        return;
+        exec_block(&l.post_loop.ops, frame, tr)?;
+        return Ok(());
     }
 
     match &l.schedule {
         ExecSchedule::Par => {
-            super::parallel::run_par(prog, l, frame, lens, start_val, end_val, threads);
+            super::parallel::run_par(prog, l, frame, lens, start_val, end_val, threads)?;
             let mut null = NullTracer;
-            exec_block(&l.post_loop.ops, frame, &mut null);
+            exec_block(&l.post_loop.ops, frame, &mut null)?;
         }
         ExecSchedule::Doacross {
             waits,
@@ -128,17 +233,18 @@ fn exec_tree_loop<T: Tracer>(
                 threads,
                 waits,
                 *release_after,
-            );
+            )?;
             let mut null = NullTracer;
-            exec_block(&l.post_loop.ops, frame, &mut null);
+            exec_block(&l.post_loop.ops, frame, &mut null)?;
         }
         ExecSchedule::Seq => unreachable!(),
     }
+    Ok(())
 }
 
 /// The flat-bytecode interpreter — the VM hot path.
 #[inline]
-pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) {
+pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) -> Result<(), Trap> {
     let mut pc = 0usize;
     let n = ops.len();
     let ints = f.ints.as_mut_ptr();
@@ -279,6 +385,17 @@ pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) {
             Op::Prefetch { cont, idx, write } => {
                 tr.access(cont, i!(idx), write, true);
             }
+            Op::BoundsCheck { cont, idx, off } => {
+                let at = i!(idx) + off as i64;
+                let len = f.lens[cont as usize];
+                if at < 0 || at as usize >= len {
+                    return Err(Trap::OutOfBounds {
+                        cont,
+                        index: at,
+                        len,
+                    });
+                }
+            }
 
             Op::Jump { target } => {
                 pc = target as usize;
@@ -298,14 +415,17 @@ pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) {
                     pc = exit as usize;
                     continue;
                 }
+                // One back-edge about to run: burn fuel / probe deadline.
+                f.backedge()?;
             }
             Op::GuardSkip { cond, skip } => {
                 if fl!(cond) <= 0.0 {
                     pc += skip as usize;
                 }
             }
-            Op::Halt => return,
+            Op::Halt => return Ok(()),
         }
         pc += 1;
     }
+    Ok(())
 }

@@ -33,3 +33,4 @@ pub mod symbolic;
 pub mod schedules;
 pub mod transforms;
 pub mod tuner;
+pub mod verify;

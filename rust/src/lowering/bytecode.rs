@@ -63,6 +63,12 @@ pub enum Op {
     /// Software prefetch hint — a no-op for results; drives the cache model
     /// through the trace hook.
     Prefetch { cont: u16, idx: u16, write: bool },
+    /// Checked-tier guard: trap with a structured
+    /// [`Trap::OutOfBounds`](crate::exec::Trap) unless
+    /// `0 ≤ i[idx] + off < len(cont)`. Emitted only for accesses the
+    /// static verifier could not prove in bounds, immediately before the
+    /// load/store they protect — fully proven programs carry none.
+    BoundsCheck { cont: u16, idx: u16, off: i32 },
 
     // ---- control ----
     Jump { target: u32 },
@@ -156,6 +162,9 @@ pub struct ExecProgram {
     pub sym_regs: Vec<(Sym, u16)>,
     pub n_int: u16,
     pub n_float: u16,
+    /// Number of [`Op::BoundsCheck`] guards emitted (0 = the unchecked
+    /// fast tier — bitwise-identical bytecode to a trusted compile).
+    pub checked_accesses: u32,
 }
 
 impl ExecProgram {

@@ -8,12 +8,14 @@
 //! become cursor registers with init/increment/reset code.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::ir::{Loop, LoopId, LoopSchedule, Node, Program, Stmt};
 use crate::schedules::ptr_inc::{all_plans, PtrPlan};
 use crate::symbolic::{Expr, Sym};
+use crate::verify::CheckSet;
 
 use super::bytecode::{
     CodeBlock, ContainerMeta, ExecNode, ExecProgram, ExecSchedule, LoopExec, Op,
@@ -24,8 +26,18 @@ use super::expr_compile::{compile_float, compile_int, CursorBinding, CursorDelta
 /// 64-byte line).
 const PREFETCH_LINES: usize = 4;
 
-/// Lower a program to its executable form.
+/// Lower a program to its executable form (unchecked — the trusted
+/// fast tier; see [`lower_with_checks`] for the verifier-driven tier).
 pub fn lower(p: &Program) -> Result<ExecProgram> {
+    lower_with_checks(p, &CheckSet::none())
+}
+
+/// Lower a program, guarding every access in `checks` with an
+/// [`Op::BoundsCheck`] immediately before its load/store. With an empty
+/// set this emits bytecode identical to [`lower`]; with
+/// [`CheckSet::all`] every access is guarded (the differential-test
+/// tier).
+pub fn lower_with_checks(p: &Program, checks: &CheckSet) -> Result<ExecProgram> {
     crate::ir::validate::validate(p)?;
 
     // 1. Global symbol registers: params first, then every loop variable.
@@ -76,6 +88,8 @@ pub fn lower(p: &Program) -> Result<ExecProgram> {
         delta_exprs: delta_exprs.clone(),
         max_int: scratch_int_base,
         max_float: 0,
+        checks: Arc::new(checks.clone()),
+        checks_emitted: 0,
     };
     for (idx, plan) in plans.iter().enumerate() {
         match plan.init_inside {
@@ -137,6 +151,7 @@ pub fn lower(p: &Program) -> Result<ExecProgram> {
         sym_regs,
         n_int: lowering.max_int,
         n_float: lowering.max_float.max(1),
+        checked_accesses: lowering.checks_emitted,
     })
 }
 
@@ -161,11 +176,16 @@ struct Lowering<'a> {
     delta_exprs: Vec<Expr>,
     max_int: u16,
     max_float: u16,
+    /// Verifier-unproven accesses to guard ([`lower_with_checks`]).
+    checks: Arc<CheckSet>,
+    checks_emitted: u32,
 }
 
 impl<'a> Lowering<'a> {
     fn ctx(&self) -> ExprCtx {
-        ExprCtx::new(self.sym_regs.clone(), self.scratch_int_base, 0)
+        let mut ctx = ExprCtx::new(self.sym_regs.clone(), self.scratch_int_base, 0);
+        ctx.checks = Arc::clone(&self.checks);
+        ctx
     }
 
     fn bindings_for_ctx(&self) -> Vec<CursorBinding> {
@@ -223,6 +243,7 @@ impl<'a> Lowering<'a> {
     fn absorb(&mut self, ctx: &ExprCtx) {
         self.max_int = self.max_int.max(ctx.max_int);
         self.max_float = self.max_float.max(ctx.max_float);
+        self.checks_emitted += ctx.checks_emitted;
     }
 
     fn sym_reg(&self, s: Sym) -> u16 {
@@ -509,7 +530,28 @@ impl<'a> Lowering<'a> {
         let val = compile_float(&s.rhs, ctx, ops)?;
         let cont = s.write.container.0 as u16;
         let f32s = self.program.container(s.write.container).dtype == crate::ir::DType::F32;
-        if let Some((reg, CursorDelta::Const(delta))) = ctx
+        let checked = ctx.needs_check(s.write.container, &s.write.offset);
+        if checked {
+            // Checked writes recompute the index so the guard covers
+            // exactly the stored-through address (no cursor addressing).
+            let idx = compile_int(&s.write.offset, ctx, ops)?;
+            ops.push(Op::BoundsCheck { cont, idx, off: 0 });
+            ctx.checks_emitted += 1;
+            ops.push(if f32s {
+                Op::StoreF32 {
+                    cont,
+                    idx,
+                    src: val,
+                }
+            } else {
+                Op::Store {
+                    cont,
+                    idx,
+                    src: val,
+                }
+            });
+            ctx.free_int(idx);
+        } else if let Some((reg, CursorDelta::Const(delta))) = ctx
             .cursors
             .iter()
             .find(|b| {

@@ -1,8 +1,11 @@
 //! Expression → bytecode compilation.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::symbolic::{Expr, FuncKind, Sym};
+use crate::verify::CheckSet;
 
 use super::bytecode::Op;
 
@@ -22,6 +25,14 @@ pub struct ExprCtx {
     /// cursor int reg. Filled by the lowering before compiling rhs.
     pub cursors: Vec<CursorBinding>,
     pub current_stmt: Option<crate::ir::StmtId>,
+    /// Accesses the static verifier could not prove in bounds: they
+    /// compile through an explicit index register guarded by
+    /// [`Op::BoundsCheck`] (bypassing cursor addressing so the checked
+    /// index is exactly the dereferenced one). Proven accesses keep all
+    /// fast paths.
+    pub checks: Arc<CheckSet>,
+    /// `BoundsCheck` ops emitted through this context.
+    pub checks_emitted: u32,
     /// Address registers of naive (non-cursor) accesses in the current
     /// statement — kept live until the statement completes, modeling the
     /// out-of-order scheduling that overlaps load latencies (and thereby
@@ -63,8 +74,17 @@ impl ExprCtx {
             max_float: float_base,
             cursors: Vec::new(),
             current_stmt: None,
+            checks: Arc::new(CheckSet::none()),
+            checks_emitted: 0,
             deferred_int: Vec::new(),
         }
+    }
+
+    /// Must this (current-statement) access be bounds-checked?
+    pub fn needs_check(&self, c: crate::symbolic::ContainerId, off: &Expr) -> bool {
+        self.current_stmt
+            .map(|s| self.checks.needs(s, c, off))
+            .unwrap_or(false)
     }
 
     /// Keep an address register live until `flush_deferred`.
@@ -322,10 +342,12 @@ pub fn compile_float(e: &Expr, ctx: &mut ExprCtx, ops: &mut Vec<Op>) -> Result<u
         },
         Expr::Load(c, off) => {
             let dst = ctx.alloc_float();
+            let checked = ctx.needs_check(*c, off);
             // Pointer-increment path: the lowering pre-registered a cursor
-            // for this (stmt, container, offset).
-            if let Some((reg, delta)) = ctx.cursor_for(*c, off) {
-                match delta {
+            // for this (stmt, container, offset). Checked accesses bypass
+            // it so the guard covers exactly the dereferenced index.
+            match (checked, ctx.cursor_for(*c, off)) {
+                (false, Some((reg, delta))) => match delta {
                     CursorDelta::Const(d) => ops.push(Op::LoadOff {
                         dst,
                         cont: c.0 as u16,
@@ -338,16 +360,25 @@ pub fn compile_float(e: &Expr, ctx: &mut ExprCtx, ops: &mut Vec<Op>) -> Result<u
                         a: reg,
                         b: dr,
                     }),
+                },
+                _ => {
+                    let idx = compile_int(off, ctx, ops)?;
+                    if checked {
+                        ops.push(Op::BoundsCheck {
+                            cont: c.0 as u16,
+                            idx,
+                            off: 0,
+                        });
+                        ctx.checks_emitted += 1;
+                    }
+                    ops.push(Op::Load {
+                        dst,
+                        cont: c.0 as u16,
+                        idx,
+                    });
+                    // Address stays live until the statement ends (OoO model).
+                    ctx.defer_free_int(idx);
                 }
-            } else {
-                let idx = compile_int(off, ctx, ops)?;
-                ops.push(Op::Load {
-                    dst,
-                    cont: c.0 as u16,
-                    idx,
-                });
-                // Address stays live until the statement ends (OoO model).
-                ctx.defer_free_int(idx);
             }
             dst
         }

@@ -29,6 +29,8 @@ pub fn op_cost(op: &Op) -> f64 {
         Load { .. } | LoadOff { .. } | LoadAt2 { .. } => 1.0,
         Store { .. } | StoreOff { .. } | StoreF32 { .. } | StoreOffF32 { .. } => 1.0,
         Prefetch { .. } => 0.5,
+        // Compare + well-predicted branch (the in-bounds path).
+        BoundsCheck { .. } => 0.5,
         Jump { .. } | LoopCond { .. } | GuardSkip { .. } | Halt => 0.5,
     }
 }

@@ -265,6 +265,7 @@ fn uses_defs(op: &Op) -> (Vec<u16>, Option<u16>, Vec<u16>, Option<u16>) {
         StoreF32 { idx, src, .. } => (vec![idx], None, vec![src], None),
         StoreOffF32 { idx, src, .. } => (vec![idx], None, vec![src], None),
         Prefetch { idx, .. } => (vec![idx], None, vec![], None),
+        BoundsCheck { idx, .. } => (vec![idx], None, vec![], None),
         Jump { .. } | Halt => (vec![], None, vec![], None),
         LoopCond { var, end, stride, .. } => (vec![var, end, stride], None, vec![], None),
         GuardSkip { cond, .. } => (vec![], None, vec![cond], None),

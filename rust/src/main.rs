@@ -10,12 +10,22 @@
 //!   silo validate <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
 //!            [--ptr-inc] [--threads=N]
 //!   silo tune <kernel>                         — autotuner candidate table
+//!   silo verify <kernel> [--pipeline=SPEC] [--preset=P]
+//!            — static bounds report: per-access ProvenInBounds /
+//!              NeedsCheck / ProvenOutOfBounds verdicts plus the
+//!              symbolic worst-case fuel bound (nonzero exit on a
+//!              provably out-of-bounds access)
 //!   silo experiment <fig1|fig2|fig9|table1|fig10|autotune|all>
 //!   silo artifacts                             — list PJRT artifacts
 //!   silo serve [--addr=H:P] [--threads=N] [--cache-cap=N]
+//!            [--untrusted] [--fuel=N] [--wall-ms=N]
 //!            — the service daemon: POST /compile + /run/<id>, GET
 //!              /kernels /metrics /healthz, content-addressed LRU
-//!              schedule cache (default addr 127.0.0.1:7420)
+//!              schedule cache (default addr 127.0.0.1:7420).
+//!              --untrusted verifies every submission (rejecting
+//!              provably out-of-bounds programs, check-compiling
+//!              unproven accesses) and meters every run with a fuel
+//!              budget and wall-clock cap
 //!   silo submit <file>.silo [--addr=H:P] [--pipeline=SPEC]
 //!            [--preset=tiny|small|medium] [--threads=N] [--check]
 //!            — compile + run on a daemon; --check re-runs the program
@@ -162,6 +172,29 @@ fn real_main() -> anyhow::Result<()> {
                 println!("per-loop ptr-inc kept on {} nest(s)", outcome.refined_nests);
             }
         }
+        Some("verify") => {
+            let name = args.positional.get(1).ok_or_else(usage)?;
+            let kernel = silo::kernels::resolve(name)?;
+            // Verify the program exactly as it would execute: after the
+            // requested optimization pipeline (default: none).
+            let compiled =
+                coordinator::compile_program(kernel.program(), &args.spec(), args.mem())?;
+            let report = silo::verify::verify_program(&compiled.program);
+            print!("{}", report.summary());
+            if let Some(f) = &report.fuel_bound {
+                if let Ok(params) = kernel.params(args.preset()?) {
+                    if let Ok(v) = silo::symbolic::eval::eval_int(f, &params) {
+                        println!("fuel under the {:?} preset: {v}", args.preset()?);
+                    }
+                }
+            }
+            if !report.proven_oob().is_empty() {
+                anyhow::bail!(
+                    "program `{}` contains provably out-of-bounds accesses",
+                    compiled.name
+                );
+            }
+        }
         Some("experiment") => {
             let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             print!("{}", coordinator::experiments::run(id)?);
@@ -173,6 +206,7 @@ fn real_main() -> anyhow::Result<()> {
             }
         }
         Some("serve") => {
+            let defaults = silo::service::ServiceConfig::default();
             let config = silo::service::ServiceConfig {
                 addr: args
                     .value("--addr")
@@ -185,11 +219,28 @@ fn real_main() -> anyhow::Result<()> {
                     .value("--cache-cap")
                     .and_then(|v| v.parse().ok())
                     .unwrap_or(64),
-                ..silo::service::ServiceConfig::default()
+                untrusted: args.has("--untrusted"),
+                fuel_limit: args
+                    .value("--fuel")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(defaults.fuel_limit),
+                wall_ms: args
+                    .value("--wall-ms")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(defaults.wall_ms),
+                ..defaults
             };
             let server = silo::service::Server::serve(&config)?;
+            let mode = if config.untrusted {
+                format!(
+                    ", untrusted mode: verify + fuel {} + wall {} ms",
+                    config.fuel_limit, config.wall_ms
+                )
+            } else {
+                String::new()
+            };
             println!(
-                "silo service listening on http://{} ({} workers, cache capacity {})",
+                "silo service listening on http://{} ({} workers, cache capacity {}{mode})",
                 server.addr(),
                 config.workers.max(1),
                 config.cache_cap
@@ -224,13 +275,29 @@ fn real_main() -> anyhow::Result<()> {
                 "{}: kernel {} ({}, {status})",
                 out.compile.name, out.compile.kernel, out.compile.pipeline
             );
+            if out.compile.tier != "trusted" {
+                let fuel = out
+                    .compile
+                    .fuel_bound
+                    .as_deref()
+                    .map(|f| format!(", worst-case fuel {f}"))
+                    .unwrap_or_else(|| ", fuel unbounded".to_string());
+                println!(
+                    "  safety tier: {} ({} runtime-checked access(es){fuel})",
+                    out.compile.tier, out.compile.unproven
+                );
+            }
             for (pass, detail) in &out.compile.passes {
                 println!("  [{pass}] {detail}");
             }
+            let fuel = out
+                .run
+                .fuel_used
+                .map(|f| format!(", {f} fuel"))
+                .unwrap_or_default();
             println!(
-                "ran {} preset on the daemon in {:.3} ms — {} output container(s):",
-                run_req.preset,
-                out.run.wall_ms,
+                "ran {} preset on the daemon in {:.3} ms{fuel} — {} output container(s):",
+                run_req.preset, out.run.wall_ms,
                 out.run.outputs.len()
             );
             for (name, data) in &out.run.outputs {
@@ -249,11 +316,15 @@ fn real_main() -> anyhow::Result<()> {
 
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
-        "usage: silo <list|show|run|validate|tune|experiment|artifacts|serve|submit> [args]\n\
+        "usage: silo <list|show|run|validate|tune|verify|experiment|artifacts|serve|submit> \
+         [args]\n\
          kernels: a registered name (see `silo list`) or a .silo file path\n\
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
-         service: `silo serve [--addr=H:P --threads=N --cache-cap=N]`, then\n\
+         safety: `silo verify kernel [--pipeline=SPEC]` prints per-access bounds \
+         verdicts + the worst-case fuel bound\n\
+         service: `silo serve [--addr=H:P --threads=N --cache-cap=N --untrusted \
+         --fuel=N --wall-ms=N]`, then\n\
          `silo submit file.silo [--addr=H:P --pipeline=SPEC --preset=P --check]`\n\
          see rust/src/main.rs header for details"
     )

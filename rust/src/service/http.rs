@@ -1,7 +1,9 @@
 //! Tiny HTTP/1.1 framing over `std::net` — exactly enough for the
 //! service's fixed-length JSON bodies. Shared by the daemon and the
-//! client so the two ends cannot drift: one request per connection
-//! (`Connection: close`), bodies framed by `Content-Length`.
+//! client so the two ends cannot drift: bodies framed by
+//! `Content-Length`, connections reused (`Connection: keep-alive`) up
+//! to the daemon's per-connection request cap, closed when either side
+//! says `Connection: close`.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
@@ -73,9 +75,18 @@ fn read_line_capped<R: BufRead>(stream: &mut R, cap: usize) -> Result<String> {
 
 /// Read one request (blocking; body framed by `Content-Length`).
 pub fn read_request<R: BufRead>(stream: &mut R) -> Result<Request> {
+    match read_request_opt(stream)? {
+        Some(req) => Ok(req),
+        None => bail!("peer closed before sending a request"),
+    }
+}
+
+/// [`read_request`] distinguishing a clean EOF (`Ok(None)` — the peer
+/// finished a keep-alive conversation) from a malformed request.
+pub fn read_request_opt<R: BufRead>(stream: &mut R) -> Result<Option<Request>> {
     let line = read_line_capped(stream, MAX_LINE)?;
     if line.is_empty() {
-        bail!("peer closed before sending a request");
+        return Ok(None);
     }
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_ascii_uppercase();
@@ -88,28 +99,42 @@ pub fn read_request<R: BufRead>(stream: &mut R) -> Result<Request> {
     let len = content_length(&headers)?;
     let mut body = vec![0u8; len];
     stream.read_exact(&mut body).context("truncated request body")?;
-    Ok(Request {
+    Ok(Some(Request {
         method,
         path,
         headers,
         body,
-    })
+    }))
 }
 
 /// Write a JSON response with a fixed status set and `Connection: close`.
 pub fn write_response<W: Write>(stream: &mut W, status: u16, body: &str) -> Result<()> {
+    write_response_conn(stream, status, body, true)
+}
+
+/// [`write_response`] with an explicit connection disposition: `close =
+/// false` advertises `Connection: keep-alive` so the peer may send the
+/// next request on the same socket.
+pub fn write_response_conn<W: Write>(
+    stream: &mut W,
+    status: u16,
+    body: &str,
+    close: bool,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
         500 => "Internal Server Error",
         _ => "Unknown",
     };
+    let conn = if close { "close" } else { "keep-alive" };
     let msg = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(msg.as_bytes())?;
@@ -224,6 +249,26 @@ mod tests {
         let huge = vec![b'a'; MAX_LINE + 8192];
         let e = read_request(&mut Cursor::new(huge)).unwrap_err();
         assert!(e.to_string().contains("line too long"), "{e}");
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_error() {
+        // A keep-alive peer that simply hangs up between requests is a
+        // clean end of conversation, not a protocol error.
+        assert!(read_request_opt(&mut Cursor::new("")).unwrap().is_none());
+    }
+
+    #[test]
+    fn keep_alive_response_advertises_connection() {
+        let mut buf = Vec::new();
+        write_response_conn(&mut buf, 200, "{}", false).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Connection: keep-alive"), "{text}");
+        let mut buf = Vec::new();
+        write_response_conn(&mut buf, 422, "{}", true).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.contains("Connection: close"), "{text}");
+        assert!(text.contains("422 Unprocessable Entity"), "{text}");
     }
 
     #[test]

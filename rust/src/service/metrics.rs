@@ -24,6 +24,16 @@ pub struct Metrics {
     /// Completed `/run/<id>` executions.
     pub runs: AtomicU64,
     pub run_us_total: AtomicU64,
+    /// Completed runs of artifacts the verifier fully proved (executed
+    /// on the unchecked fast tier).
+    pub runs_proven: AtomicU64,
+    /// Completed runs of artifacts carrying runtime bounds checks.
+    pub runs_checked: AtomicU64,
+    /// Untrusted-mode compiles refused by the verifier (provably
+    /// out-of-bounds accesses).
+    pub rejected: AtomicU64,
+    /// Runs aborted by a structured trap (bounds / fuel / wall clock).
+    pub trapped: AtomicU64,
 }
 
 impl Metrics {

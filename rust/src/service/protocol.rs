@@ -71,6 +71,15 @@ pub struct CompileReply {
     pub params: Vec<String>,
     /// Argument (externally visible) container names.
     pub arguments: Vec<String>,
+    /// Safety tier the artifact earned: `"trusted"` (no verification —
+    /// the default daemon), `"proven"` (every access statically proven
+    /// in bounds), or `"checked"` (runtime bounds guards on unproven
+    /// accesses).
+    pub tier: String,
+    /// How many accesses carry runtime checks (0 on proven/trusted).
+    pub unproven: u64,
+    /// Symbolic worst-case fuel (loop back-edges), when boundable.
+    pub fuel_bound: Option<String>,
 }
 
 impl CompileReply {
@@ -102,6 +111,15 @@ impl CompileReply {
             (
                 "arguments".into(),
                 Json::Arr(self.arguments.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            ("tier".into(), Json::Str(self.tier.clone())),
+            ("unproven".into(), Json::Num(self.unproven as f64)),
+            (
+                "fuel_bound".into(),
+                match &self.fuel_bound {
+                    Some(f) => Json::Str(f.clone()),
+                    None => Json::Null,
+                },
             ),
         ])
     }
@@ -144,6 +162,17 @@ impl CompileReply {
             passes,
             params: strings("params")?,
             arguments: strings("arguments")?,
+            // Absent on replies from pre-verifier daemons: trusted.
+            tier: v
+                .get("tier")
+                .and_then(Json::as_str)
+                .unwrap_or("trusted")
+                .to_string(),
+            unproven: v.get("unproven").and_then(Json::as_i64).unwrap_or(0).max(0) as u64,
+            fuel_bound: v
+                .get("fuel_bound")
+                .and_then(Json::as_str)
+                .map(str::to_string),
         })
     }
 }
@@ -259,28 +288,35 @@ pub struct RunReply {
     pub name: String,
     /// Wall-clock VM execution time on the daemon, milliseconds.
     pub wall_ms: f64,
+    /// Fuel spent (loop back-edges), reported on metered (untrusted)
+    /// runs; `None` on unmetered daemons.
+    pub fuel_used: Option<u64>,
     /// `name → contents` for each requested argument container.
     pub outputs: Vec<(String, Vec<f64>)>,
 }
 
 impl RunReply {
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut kv = vec![
             ("kernel".into(), Json::Str(self.kernel.clone())),
             ("name".into(), Json::Str(self.name.clone())),
             ("wall_ms".into(), Json::Num(self.wall_ms)),
-            (
-                "outputs".into(),
-                Json::Obj(
-                    self.outputs
-                        .iter()
-                        .map(|(k, data)| {
-                            (k.clone(), Json::Arr(data.iter().map(|x| Json::Num(*x)).collect()))
-                        })
-                        .collect(),
-                ),
+        ];
+        if let Some(f) = self.fuel_used {
+            kv.push(("fuel_used".into(), Json::Num(f as f64)));
+        }
+        kv.push((
+            "outputs".into(),
+            Json::Obj(
+                self.outputs
+                    .iter()
+                    .map(|(k, data)| {
+                        (k.clone(), Json::Arr(data.iter().map(|x| Json::Num(*x)).collect()))
+                    })
+                    .collect(),
             ),
-        ])
+        ));
+        Json::Obj(kv)
     }
 
     pub fn from_json(v: &Json) -> Result<RunReply, String> {
@@ -310,6 +346,10 @@ impl RunReply {
                 .ok_or("missing string field `name`")?
                 .to_string(),
             wall_ms: v.get("wall_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            fuel_used: v
+                .get("fuel_used")
+                .and_then(Json::as_i64)
+                .map(|f| f.max(0) as u64),
             outputs,
         })
     }
@@ -318,6 +358,17 @@ impl RunReply {
 /// The uniform non-200 body.
 pub fn error_body(msg: &str) -> String {
     Json::Obj(vec![("error".to_string(), Json::Str(msg.to_string()))]).to_string()
+}
+
+/// Non-200 body with a machine-readable `code` (structured traps:
+/// `out_of_bounds`, `fuel_exhausted`, `time_limit`; verifier refusals:
+/// `rejected`).
+pub fn error_body_code(msg: &str, code: &str) -> String {
+    Json::Obj(vec![
+        ("error".to_string(), Json::Str(msg.to_string())),
+        ("code".to_string(), Json::Str(code.to_string())),
+    ])
+    .to_string()
 }
 
 #[cfg(test)]
@@ -370,17 +421,32 @@ mod tests {
             passes: vec![("doall".into(), "L1".into())],
             params: vec!["st_N".into()],
             arguments: vec!["u".into()],
+            tier: "proven".into(),
+            unproven: 0,
+            fuel_bound: Some("st_T*st_N".into()),
         };
         let back = CompileReply::from_json(&reply.to_json()).unwrap();
         assert_eq!(back.kernel, reply.kernel);
         assert!(back.cached);
         assert_eq!(back.passes, reply.passes);
         assert_eq!(back.arguments, reply.arguments);
+        assert_eq!(back.tier, "proven");
+        assert_eq!(back.fuel_bound.as_deref(), Some("st_T*st_N"));
+        // A pre-verifier reply (no tier fields) parses as trusted.
+        let legacy = Json::parse(
+            r#"{"kernel":"k0","name":"t","pipeline":"auto","passes":[],
+                "params":[],"arguments":[]}"#,
+        )
+        .unwrap();
+        let back = CompileReply::from_json(&legacy).unwrap();
+        assert_eq!(back.tier, "trusted");
+        assert_eq!(back.fuel_bound, None);
 
         let run = RunReply {
             kernel: reply.kernel.clone(),
             name: reply.name.clone(),
             wall_ms: 0.25,
+            fuel_used: Some(12),
             outputs: vec![("u".into(), vec![0.0, -0.0, 2.5])],
         };
         let back = RunReply::from_json(&run.to_json()).unwrap();

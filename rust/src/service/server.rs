@@ -10,17 +10,30 @@
 //! the VM with per-request parameter bindings, inputs, and thread count
 //! — no optimizer work at all.
 //!
-//! **Trust model.** The daemon executes submitted programs on the same
-//! VM the CLI uses — a release-build interpreter that (by documented
-//! design, see `exec/vm.rs`) trades bounds checks for speed, and loop
-//! trip counts follow the caller's param bindings. Submissions are
-//! therefore trusted exactly like local CLI input: bind to localhost
-//! (the default `127.0.0.1:7420`) or an otherwise-authenticated
-//! network, and do not expose the port to untrusted clients. What the
-//! daemon *does* harden is everything before execution: capped HTTP
-//! framing, depth-limited parsing, spec validation, per-run total
-//! allocation caps with checked arithmetic, and panic-isolated workers.
-//! A bounds-proved or fuel-budgeted service mode is a ROADMAP item.
+//! **Trust model.** The daemon runs in one of two modes:
+//!
+//! * **Default (trusted)**: submissions execute on the same unchecked
+//!   VM the CLI uses — no subscript bounds checks, no iteration
+//!   budget. Bind to localhost (the default `127.0.0.1:7420`) or an
+//!   otherwise-authenticated network; treat submissions like local CLI
+//!   input.
+//! * **`--untrusted`**: every submission is run through the static
+//!   bounds verifier (`crate::verify`) *after* optimization. Programs
+//!   whose accesses are all proven in bounds execute on the unchecked
+//!   fast tier (`tier: "proven"` on the wire); unproven accesses are
+//!   check-compiled so the VM traps with a structured `out_of_bounds`
+//!   error instead of dereferencing wild (`tier: "checked"`); programs
+//!   containing an access that can *never* be in bounds are refused
+//!   with HTTP 422. Every `/run` is additionally metered: a fuel
+//!   budget (`--fuel`, loop back-edges, checked at every back-edge)
+//!   and a wall-clock cap (`--wall-ms`) turn runaway submissions into
+//!   structured `fuel_exhausted` / `time_limit` errors instead of a
+//!   wedged worker.
+//!
+//! In both modes the pre-execution surface is hardened: capped HTTP
+//! framing with a per-connection keep-alive request cap, depth-limited
+//! parsing, spec validation, per-run total allocation caps with
+//! checked arithmetic, and panic-isolated workers.
 //!
 //! The daemon inherits the frontend's process-global symbol table, so
 //! two submitted programs that reuse a `param` name share one symbol and
@@ -48,20 +61,38 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{compile_program, CompiledKernel, MemSchedules, PipelineSpec};
+use crate::coordinator::{
+    compile_program_with, CompiledKernel, MemSchedules, PipelineSpec, SafetyPolicy,
+};
+use crate::exec::{ExecLimits, Trap};
 use crate::frontend::{init_value_with, InitSpec, PresetBindings};
 use crate::ir::ContainerKind;
 use crate::kernels::Preset;
 use crate::symbolic::eval::eval_int;
 use crate::symbolic::{ContainerId, Sym};
+use crate::verify::SafetyTier;
 
 use super::cache::{self, Outcome, ScheduleCache};
 use super::http::{self, Request};
 use super::json::Json;
 use super::metrics::Metrics;
-use super::protocol::{error_body, CompileReply, CompileRequest, RunReply, RunRequest};
+use super::protocol::{
+    error_body, error_body_code, CompileReply, CompileRequest, RunReply, RunRequest,
+};
 
-/// Daemon configuration (`silo serve --addr --threads --cache-cap`).
+/// Requests served on one keep-alive connection before the daemon
+/// closes it (bounds per-connection resource pinning).
+const MAX_REQUESTS_PER_CONN: usize = 32;
+
+/// Idle window between keep-alive requests. Much shorter than the
+/// in-request [`http::IO_TIMEOUT`]: a connection waiting for its *next*
+/// request pins a blocking worker thread, so idle peers are hung up on
+/// quickly (and silently) instead of holding a worker for the full
+/// compile timeout 32 times over.
+const KEEPALIVE_IDLE: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Daemon configuration (`silo serve --addr --threads --cache-cap
+/// [--untrusted --fuel --wall-ms]`).
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
     /// Bind address; port 0 picks an ephemeral port (tests).
@@ -72,6 +103,14 @@ pub struct ServiceConfig {
     pub cache_cap: usize,
     /// Cache shard count (tests pin 1 for deterministic LRU order).
     pub cache_shards: usize,
+    /// Untrusted mode: verify every submission (refusing provable
+    /// out-of-bounds programs, check-compiling unproven accesses) and
+    /// meter every run with fuel + wall-clock caps.
+    pub untrusted: bool,
+    /// Per-run fuel budget (loop back-edges) in untrusted mode.
+    pub fuel_limit: u64,
+    /// Per-run wall-clock cap (milliseconds) in untrusted mode.
+    pub wall_ms: u64,
 }
 
 impl Default for ServiceConfig {
@@ -81,6 +120,9 @@ impl Default for ServiceConfig {
             workers: 4,
             cache_cap: 64,
             cache_shards: 8,
+            untrusted: false,
+            fuel_limit: 1 << 32,
+            wall_ms: 30_000,
         }
     }
 }
@@ -113,6 +155,9 @@ struct ServiceState {
     cache: ScheduleCache<ServedKernel>,
     metrics: Metrics,
     stop: AtomicBool,
+    untrusted: bool,
+    fuel_limit: u64,
+    wall_ms: u64,
 }
 
 /// A running daemon. Dropping the handle leaves the threads running
@@ -135,6 +180,9 @@ impl Server {
             cache: ScheduleCache::with_shards(config.cache_cap, config.cache_shards),
             metrics: Metrics::default(),
             stop: AtomicBool::new(false),
+            untrusted: config.untrusted,
+            fuel_limit: config.fuel_limit.max(1),
+            wall_ms: config.wall_ms.max(1),
         });
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
@@ -212,25 +260,67 @@ impl Server {
     }
 }
 
+/// Serve one connection: up to [`MAX_REQUESTS_PER_CONN`] requests over
+/// HTTP keep-alive. The connection closes when the client asks
+/// (`Connection: close`), on a framing error, at the request cap, or
+/// on a clean client hang-up between requests.
 fn handle_connection(stream: TcpStream, state: &ServiceState) {
     let _ = stream.set_read_timeout(Some(http::IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(http::IO_TIMEOUT));
     let mut reader = BufReader::new(&stream);
-    let (status, body) = match http::read_request(&mut reader) {
-        Ok(req) => route(&req, state),
-        Err(e) => {
-            let msg = format!("{e:#}");
-            // Framing-layer size rejections are 413 per the wire
-            // protocol; everything else malformed is a 400.
-            let status = if msg.contains("body too large") { 413 } else { 400 };
-            (status, error_body(&msg))
+    for served in 0..MAX_REQUESTS_PER_CONN {
+        if served > 0 {
+            // Between keep-alive requests only a short idle window is
+            // tolerated (see [`KEEPALIVE_IDLE`]).
+            let _ = stream.set_read_timeout(Some(KEEPALIVE_IDLE));
         }
-    };
-    Metrics::bump(&state.metrics.requests);
-    if status != 200 {
-        Metrics::bump(&state.metrics.errors);
+        let req = match http::read_request_opt(&mut reader) {
+            Ok(Some(req)) => req,
+            // Clean EOF between requests: the peer is done.
+            Ok(None) => return,
+            Err(e) => {
+                // An idle keep-alive peer timing out is a normal hangup,
+                // not a protocol error — close without a 400 or an
+                // `errors` bump.
+                let idle = e
+                    .downcast_ref::<std::io::Error>()
+                    .map(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                        )
+                    })
+                    .unwrap_or(false);
+                if idle && served > 0 {
+                    return;
+                }
+                let msg = format!("{e:#}");
+                // Framing-layer size rejections are 413 per the wire
+                // protocol; everything else malformed is a 400.
+                let status = if msg.contains("body too large") { 413 } else { 400 };
+                Metrics::bump(&state.metrics.requests);
+                Metrics::bump(&state.metrics.errors);
+                let _ = http::write_response(&mut (&stream), status, &error_body(&msg));
+                return;
+            }
+        };
+        // Reading the body may have started under the idle timeout; the
+        // in-request budget applies while handling and responding.
+        let _ = stream.set_read_timeout(Some(http::IO_TIMEOUT));
+        let client_close = req
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        let close = client_close || served + 1 == MAX_REQUESTS_PER_CONN;
+        let (status, body) = route(&req, state);
+        Metrics::bump(&state.metrics.requests);
+        if status != 200 {
+            Metrics::bump(&state.metrics.errors);
+        }
+        if http::write_response_conn(&mut (&stream), status, &body, close).is_err() || close {
+            return;
+        }
     }
-    let _ = http::write_response(&mut (&stream), status, &body);
 }
 
 fn route(req: &Request, state: &ServiceState) -> (u16, String) {
@@ -285,6 +375,17 @@ fn metrics_body(state: &ServiceState) -> String {
         (
             "run_ms_total".into(),
             Json::Num(Metrics::get(&m.run_us_total) as f64 / 1e3),
+        ),
+        ("runs_proven".into(), num(Metrics::get(&m.runs_proven))),
+        ("runs_checked".into(), num(Metrics::get(&m.runs_checked))),
+        ("rejected".into(), num(Metrics::get(&m.rejected))),
+        ("trapped".into(), num(Metrics::get(&m.trapped))),
+        ("untrusted".into(), Json::Bool(state.untrusted)),
+        // The ROADMAP-flagged monotonic growth, made observable: the
+        // process-global symbol intern table only ever grows.
+        (
+            "symbols_interned".into(),
+            num(crate::symbolic::intern_table_size() as u64),
         ),
     ])
     .to_string()
@@ -343,13 +444,22 @@ fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
         Ok(p) => p,
         Err(e) => return (400, error_body(&e.to_string())),
     };
+    // The safety policy is daemon-wide (one process is either trusted
+    // or untrusted for its lifetime), so it needs no cache-key
+    // component: every cached artifact was built under this policy.
+    let policy = if state.untrusted {
+        SafetyPolicy::Verified
+    } else {
+        SafetyPolicy::Trusted
+    };
     let spec_name = normalize_spec(&spec);
     let key = cache::kernel_key(&parsed, &spec_name);
     let id = cache::kernel_id(key);
     let (result, outcome) = state.cache.get_or_build(key, || {
         let t0 = Instant::now();
-        let compiled = compile_program(parsed.program.clone(), &spec, MemSchedules::default())
-            .map_err(|e| format!("{e:#}"))?;
+        let compiled =
+            compile_program_with(parsed.program.clone(), &spec, MemSchedules::default(), policy)
+                .map_err(|e| format!("{e:#}"))?;
         let wall = t0.elapsed();
         Metrics::bump(&state.metrics.compiles);
         Metrics::add_time(&state.metrics.compile_us_total, wall);
@@ -371,7 +481,17 @@ fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
     });
     let kernel = match result {
         Ok(k) => k,
-        Err(e) => return (400, error_body(&e)),
+        Err(e) => {
+            // Verifier refusals are 422 with a machine-readable code so
+            // clients can distinguish "your program is unsafe" from
+            // "your request is malformed". The prefix is the shared
+            // constant, so driver rewording cannot silently break this.
+            if e.starts_with(crate::coordinator::REJECTED_PREFIX) {
+                Metrics::bump(&state.metrics.rejected);
+                return (422, error_body_code(&e, "rejected"));
+            }
+            return (400, error_body(&e));
+        }
     };
     let reply = CompileReply {
         kernel: kernel.id.clone(),
@@ -394,6 +514,19 @@ fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
             .filter(|c| c.kind == ContainerKind::Argument)
             .map(|c| c.name.clone())
             .collect(),
+        tier: kernel.compiled.tier.as_str().to_string(),
+        unproven: kernel
+            .compiled
+            .verify
+            .as_ref()
+            .map(|r| r.unproven().len() as u64)
+            .unwrap_or(0),
+        fuel_bound: kernel
+            .compiled
+            .verify
+            .as_ref()
+            .and_then(|r| r.fuel_bound.as_ref())
+            .map(|f| f.to_string()),
     };
     (200, reply.to_json().to_string())
 }
@@ -427,19 +560,20 @@ fn run_endpoint(req: &Request, state: &ServiceState, id_str: &str) -> (u16, Stri
     };
     match execute_run(&kernel, &rreq, state) {
         Ok(reply) => (200, reply.to_json().to_string()),
-        Err(e) => (400, error_body(&e)),
+        Err((status, body)) => (status, body),
     }
 }
 
 /// Bind params, materialize inputs, execute the cached VM, and shape the
-/// reply. All failures are caller errors (HTTP 400) — the artifact
-/// itself is known-good.
+/// reply. Pre-execution failures are caller errors (HTTP 400); checked
+/// runs can additionally trap (HTTP 422 with a structured code).
 fn execute_run(
     kernel: &ServedKernel,
     rreq: &RunRequest,
     state: &ServiceState,
-) -> Result<RunReply, String> {
-    let preset = Preset::parse(&rreq.preset).map_err(|e| format!("{e:#}"))?;
+) -> Result<RunReply, (u16, String)> {
+    let caller = |m: String| (400u16, error_body(&m));
+    let preset = Preset::parse(&rreq.preset).map_err(|e| caller(format!("{e:#}")))?;
     let prog = &kernel.compiled.program;
 
     // Parameter bindings: explicit values win, preset annotations fill
@@ -456,10 +590,10 @@ fn execute_run(
                 .and_then(|(_, b)| b.get(preset))
         });
         let Some(value) = value else {
-            return Err(format!(
+            return Err(caller(format!(
                 "param `{name}` has no {preset:?} preset binding and no explicit value; \
                  pass {{\"params\": {{\"{name}\": <int>}}}}"
-            ));
+            )));
         };
         // The optimizer's positivity assumptions were baked in at compile
         // time; a binding below the assumed floor would execute a program
@@ -472,15 +606,15 @@ fn execute_run(
             .map(|(_, f)| *f)
             .unwrap_or(i64::MIN);
         if value < floor {
-            return Err(format!(
+            return Err(caller(format!(
                 "param `{name}` = {value} is below its assumed minimum {floor}"
-            ));
+            )));
         }
         params.push((*sym, value));
     }
     for (n, _) in &rreq.params {
         if !prog.params.iter().any(|s| s.name() == n.as_str()) {
-            return Err(format!("program `{}` has no param `{n}`", kernel.name));
+            return Err(caller(format!("program `{}` has no param `{n}`", kernel.name)));
         }
     }
 
@@ -493,17 +627,17 @@ fn execute_run(
     let mut inputs: Vec<(ContainerId, Vec<f64>)> = Vec::new();
     let mut total_elems: i64 = 0;
     for c in &prog.containers {
-        let n = eval_int(&c.size, &params).map_err(|e| format!("{e:#}"))?;
+        let n = eval_int(&c.size, &params).map_err(|e| caller(format!("{e:#}")))?;
         // Checked arithmetic: size polynomials over caller-chosen params
         // can wrap i64, which must read as "too big", not sneak under
         // the cap.
         let total = total_elems.checked_add(n).unwrap_or(i64::MAX);
         if !(0..=(1 << 28)).contains(&n) || total > (1 << 28) {
-            return Err(format!(
+            return Err(caller(format!(
                 "container `{}` holds {n} elements under these params ({total} total); \
                  the service caps one run's allocation at 2^28 elements",
                 c.name
-            ));
+            )));
         }
         total_elems = total;
         if c.kind != ContainerKind::Argument {
@@ -513,11 +647,11 @@ fn execute_run(
         let data = match rreq.inputs.iter().find(|(name, _)| *name == c.name) {
             Some((_, provided)) => {
                 if provided.len() != n {
-                    return Err(format!(
+                    return Err(caller(format!(
                         "input `{}` has {} elements, expected {n}",
                         c.name,
                         provided.len()
-                    ));
+                    )));
                 }
                 provided.clone()
             }
@@ -531,7 +665,10 @@ fn execute_run(
             .iter()
             .any(|c| c.kind == ContainerKind::Argument && c.name == *n)
         {
-            return Err(format!("program `{}` has no argument container `{n}`", kernel.name));
+            return Err(caller(format!(
+                "program `{}` has no argument container `{n}`",
+                kernel.name
+            )));
         }
     }
 
@@ -545,10 +682,10 @@ fn execute_run(
     if let Some(outs) = &rreq.outputs {
         for n in outs {
             if !arg_names.contains(&n.as_str()) {
-                return Err(format!(
+                return Err(caller(format!(
                     "no argument container `{n}` (available: {})",
                     arg_names.join(", ")
-                ));
+                )));
             }
         }
     }
@@ -556,12 +693,36 @@ fn execute_run(
     let refs: Vec<(ContainerId, &[f64])> =
         inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
     let threads = rreq.threads.clamp(1, 8);
-    let (storage, wall) = kernel
+    // Untrusted daemons meter every run; trusted daemons run unlimited.
+    let limits = if state.untrusted {
+        ExecLimits {
+            fuel: Some(state.fuel_limit),
+            wall: Some(std::time::Duration::from_millis(state.wall_ms)),
+        }
+    } else {
+        ExecLimits::none()
+    };
+    let (storage, wall, fuel_used) = kernel
         .compiled
-        .execute(&params, &refs, threads)
-        .map_err(|e| format!("{e:#}"))?;
+        .execute_limited(&params, &refs, threads, &limits)
+        .map_err(|e| {
+            // Structured traps (bounds/fuel/wall) are 422 with a code;
+            // anything else on this path is a caller error.
+            match e.downcast_ref::<Trap>() {
+                Some(trap) => {
+                    Metrics::bump(&state.metrics.trapped);
+                    (422u16, error_body_code(&format!("{e:#}"), trap.code()))
+                }
+                None => caller(format!("{e:#}")),
+            }
+        })?;
     Metrics::bump(&state.metrics.runs);
     Metrics::add_time(&state.metrics.run_us_total, wall);
+    match kernel.compiled.tier {
+        SafetyTier::Proven => Metrics::bump(&state.metrics.runs_proven),
+        SafetyTier::Checked => Metrics::bump(&state.metrics.runs_checked),
+        SafetyTier::Trusted => {}
+    }
 
     let wanted = |name: &str| match &rreq.outputs {
         Some(outs) => outs.iter().any(|n| n == name),
@@ -577,6 +738,7 @@ fn execute_run(
         kernel: kernel.id.clone(),
         name: kernel.name.clone(),
         wall_ms: wall.as_secs_f64() * 1e3,
+        fuel_used: state.untrusted.then_some(fuel_used),
         outputs,
     })
 }

@@ -238,6 +238,14 @@ fn table() -> &'static Mutex<SymTable> {
     TABLE.get_or_init(|| Mutex::new(SymTable::default()))
 }
 
+/// Number of symbols interned so far. The table is process-global and
+/// append-only, so this is a monotonic gauge — the service daemon
+/// exposes it on `/metrics` to make the documented unbounded-identifier
+/// growth observable.
+pub fn intern_table_size() -> usize {
+    table().lock().unwrap().names.len()
+}
+
 impl Sym {
     /// Intern a symbol by name. Repeated calls with the same name return the
     /// same symbol (assumptions are preserved from the first registration).

@@ -1,0 +1,657 @@
+//! The symbolic interval engine behind the static bounds prover.
+//!
+//! Bounds are *expressions over program parameters* (never loop
+//! variables): every loop variable is eliminated through its iteration
+//! range, so the final obligations — `lo ≥ 0` and `extent − 1 − hi ≥ 0`
+//! — are sign queries the assumption machinery
+//! (`crate::symbolic::assume`) can discharge under the parameter
+//! floors.
+//!
+//! Three mechanisms carry all of the precision:
+//!
+//! * **Polynomial intervals.** An offset is converted with [`to_poly`]
+//!   and bounded by *variable-wise elimination*: written as `A·v + B`
+//!   for an environment variable `v` (so coefficient structure like
+//!   `i·(N−2)` stays intact instead of splitting into decorrelated
+//!   monomials), with sign-aware endpoint products and the bilinear
+//!   corner rule as fallback; polynomials without a top-level ranged
+//!   variable fall back to monomial-wise atom products.
+//! * **Min/Max case analysis.** `min`/`max` subterms (tiled loop bounds)
+//!   are eliminated by substituting each argument for the whole subterm
+//!   — sound pointwise because `min(a,b)` *equals* one of its arguments
+//!   at every valuation. When the subterm's polarity in the expression
+//!   is a constant coefficient, one arm alone is a valid bound (e.g. an
+//!   upper bound of `min(kt+T, N) − kt` is `T`), which is what keeps
+//!   tile-relative offsets tight.
+//! * **Opaque rules.** Non-polynomial heads get sound VM-semantics
+//!   intervals: `mod(a,b) ∈ [0, b−1]` for a provably positive divisor
+//!   (the VM computes `rem_euclid`, and 0 on a zero divisor),
+//!   `floordiv` by a positive divisor stays within `[min(a,0),
+//!   max(a,0)]`, `log2 ∈ [0, 62]` (i64 inputs; non-positive clamps to
+//!   0), `abs ∈ [0, max(hi, −lo)]`.
+
+use crate::symbolic::{
+    int, is_nonneg, max as emax, min as emin, simplify, to_poly, Atom, Expr, FuncKind, Sym, Truth,
+};
+
+/// Recursion budget for interval derivation (min/max splits nest).
+const MAX_DEPTH: u32 = 24;
+
+/// Recursion budget for [`prove_nonneg`] case splits.
+const PROVE_DEPTH: u32 = 10;
+
+/// Inclusive symbolic range of one eliminated variable. Both endpoints
+/// are closed: they mention parameters (and resolved min/max over them)
+/// only.
+#[derive(Debug, Clone)]
+pub struct Range {
+    pub lo: Expr,
+    pub hi: Expr,
+}
+
+/// Variable environment of one loop-nest position: ranges for bounded
+/// variables, an explicit "unknown" set for variables whose iteration
+/// set could not be bounded (non-sign-provable strides). Symbols in
+/// neither set are treated as exact parameters (`[s, s]`).
+#[derive(Debug, Clone, Default)]
+pub struct BoundEnv {
+    ranges: Vec<(Sym, Range)>,
+    unknown: Vec<Sym>,
+}
+
+impl BoundEnv {
+    pub fn push_range(&mut self, s: Sym, r: Range) {
+        self.ranges.push((s, r));
+    }
+
+    pub fn push_unknown(&mut self, s: Sym) {
+        self.unknown.push(s);
+    }
+
+    /// Undo the most recent `push_range`/`push_unknown` for `s`.
+    pub fn pop(&mut self, s: Sym) {
+        if self.ranges.last().map(|(x, _)| *x == s).unwrap_or(false) {
+            self.ranges.pop();
+        } else if self.unknown.last() == Some(&s) {
+            self.unknown.pop();
+        }
+    }
+
+    fn get(&self, s: Sym) -> Option<&Range> {
+        self.ranges.iter().rev().find(|(x, _)| *x == s).map(|(_, r)| r)
+    }
+
+    fn is_unknown(&self, s: Sym) -> bool {
+        self.unknown.contains(&s)
+    }
+
+    /// Is `s` a bounded environment variable?
+    pub fn has(&self, s: Sym) -> bool {
+        self.get(s).is_some()
+    }
+
+    /// Does `e` mention any environment variable (bounded or unknown)?
+    pub fn mentions_env(&self, e: &Expr) -> bool {
+        e.symbols()
+            .iter()
+            .any(|s| self.has(*s) || self.is_unknown(*s))
+    }
+
+    /// A copy with `s`'s range tightened (new endpoints already proven
+    /// sound by the caller — guard refinement).
+    pub fn refined(&self, s: Sym, lo: Option<Expr>, hi: Option<Expr>) -> BoundEnv {
+        let mut out = self.clone();
+        for (x, r) in out.ranges.iter_mut().rev() {
+            if *x == s {
+                if let Some(l) = lo {
+                    r.lo = smax(r.lo.clone(), l);
+                }
+                if let Some(h) = hi {
+                    r.hi = smin(r.hi.clone(), h);
+                }
+                break;
+            }
+        }
+        out
+    }
+}
+
+/// A (possibly half-open) symbolic interval: `None` = no bound derived.
+#[derive(Debug, Clone, Default)]
+pub struct Iv {
+    pub lo: Option<Expr>,
+    pub hi: Option<Expr>,
+}
+
+/// Provable-order-resolving `min`: returns the provably smaller operand,
+/// or the symbolic `Min` when the order is not decidable.
+pub fn smin(a: Expr, b: Expr) -> Expr {
+    match resolve_ordered(true, &a, &b) {
+        Some(r) => r,
+        None => emin(a, b),
+    }
+}
+
+/// Provable-order-resolving `max`.
+pub fn smax(a: Expr, b: Expr) -> Expr {
+    match resolve_ordered(false, &a, &b) {
+        Some(r) => r,
+        None => emax(a, b),
+    }
+}
+
+/// If `a ≥ b` or `b ≥ a` is provable, return the min/max accordingly.
+fn resolve_ordered(is_min: bool, a: &Expr, b: &Expr) -> Option<Expr> {
+    let a_ge_b = is_nonneg(&(a.clone() - b.clone())) == Truth::Yes;
+    if is_min {
+        if is_nonneg(&(b.clone() - a.clone())) == Truth::Yes {
+            return Some(a.clone());
+        }
+        if a_ge_b {
+            return Some(b.clone());
+        }
+    } else {
+        if a_ge_b {
+            return Some(a.clone());
+        }
+        if is_nonneg(&(b.clone() - a.clone())) == Truth::Yes {
+            return Some(b.clone());
+        }
+    }
+    None
+}
+
+/// Derive a symbolic interval containing every value `e` takes over the
+/// environment's variable ranges. Sound: may be wider than the true
+/// range, endpoints may be `None` when no bound is derivable.
+pub fn interval(e: &Expr, env: &BoundEnv) -> Iv {
+    interval_at(e, env, MAX_DEPTH)
+}
+
+fn interval_at(e: &Expr, env: &BoundEnv, depth: u32) -> Iv {
+    if depth == 0 {
+        return Iv::default();
+    }
+    let e = simplify(e);
+    if let Some(v) = e.as_int() {
+        return Iv {
+            lo: Some(int(v)),
+            hi: Some(int(v)),
+        };
+    }
+    if let Some(m) = find_minmax(&e) {
+        return split_minmax(&e, &m, env, depth);
+    }
+    poly_interval(&e, env, depth)
+}
+
+/// First `Min`/`Max` subterm of `e` (pre-order), if any.
+fn find_minmax(e: &Expr) -> Option<Expr> {
+    let mut found: Option<Expr> = None;
+    e.visit(&mut |x| {
+        if found.is_none() && matches!(x, Expr::Min(..) | Expr::Max(..)) {
+            found = Some(x.clone());
+        }
+    });
+    found
+}
+
+/// Replace every occurrence of subterm `target` in `e` with `with`.
+fn replace_subterm(e: &Expr, target: &Expr, with: &Expr) -> Expr {
+    let mapped = e.map(&|x| {
+        if x == target {
+            with.clone()
+        } else {
+            x.clone()
+        }
+    });
+    simplify(&mapped)
+}
+
+/// Constant top-level coefficient of subterm `m` inside `e`, when `m`
+/// appears linearly and outside any opaque atom; `None` = unknown
+/// polarity.
+fn minmax_polarity(e: &Expr, m: &Expr) -> Option<i64> {
+    // `#` is unlexable in identifiers, so no untrusted program can intern
+    // a symbol that collides with the hole (which would corrupt the
+    // polarity computation); reusing one name keeps the table bounded.
+    let hole = Sym::new("silo#bounds#hole");
+    let et = replace_subterm(e, m, &Expr::Sym(hole));
+    let p = to_poly(&et)?;
+    let ah = Atom::Sym(hole);
+    // The hole must not hide inside another opaque atom.
+    for (mono, _) in &p.0 {
+        for (a, _) in &mono.0 {
+            if *a != ah && a.depends_on(hole) {
+                return None;
+            }
+        }
+    }
+    let by = p.collect(&ah);
+    if by.keys().max().copied().unwrap_or(0) > 1 {
+        return None;
+    }
+    match by.get(&1) {
+        Some(c) => c.as_constant(),
+        None => Some(0),
+    }
+}
+
+/// Interval of an expression containing a `Min`/`Max` subterm `m`, by
+/// pointwise case analysis (`m` equals one of its arguments at every
+/// valuation). With a constant polarity, one arm alone bounds the
+/// appropriate side tightly.
+fn split_minmax(e: &Expr, m: &Expr, env: &BoundEnv, depth: u32) -> Iv {
+    let (is_min, a, b) = match m {
+        Expr::Min(a, b) => (true, (**a).clone(), (**b).clone()),
+        Expr::Max(a, b) => (false, (**a).clone(), (**b).clone()),
+        _ => return Iv::default(),
+    };
+    if let Some(r) = resolve_ordered(is_min, &a, &b) {
+        return interval_at(&replace_subterm(e, m, &r), env, depth - 1);
+    }
+    let ia = interval_at(&replace_subterm(e, m, &a), env, depth - 1);
+    let ib = interval_at(&replace_subterm(e, m, &b), env, depth - 1);
+    let (either_hi, either_lo) = match minmax_polarity(e, m) {
+        Some(c) => (
+            (is_min && c >= 0) || (!is_min && c <= 0),
+            (is_min && c <= 0) || (!is_min && c >= 0),
+        ),
+        None => (false, false),
+    };
+    let hi = if either_hi {
+        pick(smin, ia.hi, ib.hi)
+    } else {
+        both(smax, ia.hi, ib.hi)
+    };
+    let lo = if either_lo {
+        pick(smax, ia.lo, ib.lo)
+    } else {
+        both(smin, ia.lo, ib.lo)
+    };
+    Iv { lo, hi }
+}
+
+/// Either arm alone is sound: keep whichever exists, combine when both do.
+fn pick(f: fn(Expr, Expr) -> Expr, a: Option<Expr>, b: Option<Expr>) -> Option<Expr> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(f(x, y)),
+        (Some(x), None) | (None, Some(x)) => Some(x),
+        (None, None) => None,
+    }
+}
+
+/// Both arms are needed (pointwise case analysis).
+fn both(f: fn(Expr, Expr) -> Expr, a: Option<Expr>, b: Option<Expr>) -> Option<Expr> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(f(x, y)),
+        _ => None,
+    }
+}
+
+fn poly_interval(e: &Expr, env: &BoundEnv, depth: u32) -> Iv {
+    let Some(p) = to_poly(e) else {
+        return Iv::default();
+    };
+    // Variable-wise elimination: writing the polynomial as `A·v + B`
+    // (A, B free of v at the top level) and bounding `A`'s and `B`'s
+    // intervals recursively keeps coefficient cancellation exact —
+    // monomial-wise bounding would split `i·(N−2)` into `i·N − 2i` and
+    // lose the correlation between the two terms.
+    if let Some(s) = pick_env_var(&p, env) {
+        let a = Atom::Sym(s);
+        if p.degree_in(&a) == 1 {
+            let by = p.collect(&a);
+            let coef = by.get(&1).map(|q| q.to_expr()).unwrap_or_else(|| int(0));
+            let rest = by.get(&0).map(|q| q.to_expr()).unwrap_or_else(|| int(0));
+            let iva = interval_at(&coef, env, depth - 1);
+            let ivr = interval_at(&rest, env, depth - 1);
+            let Some(r) = env.get(s).cloned() else {
+                return Iv::default();
+            };
+            let prod = mul_range(&iva, &r);
+            return Iv {
+                lo: add_opt(prod.lo, ivr.lo),
+                hi: add_opt(prod.hi, ivr.hi),
+            };
+        }
+    }
+    monomial_interval(&p, env, depth)
+}
+
+/// First top-level symbol atom that carries an environment range.
+fn pick_env_var(p: &crate::symbolic::Poly, env: &BoundEnv) -> Option<Sym> {
+    for (mono, _) in &p.0 {
+        for (a, _) in &mono.0 {
+            if let Atom::Sym(s) = a {
+                if env.has(*s) {
+                    return Some(*s);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Interval of `A·v` for `A ∈ iva` and `v` in range `r`, by sign-aware
+/// endpoint products (corner rule as the sign-oblivious fallback —
+/// a bilinear form over a box is extremal at the corners).
+fn mul_range(a: &Iv, v: &Range) -> Iv {
+    if prove_nonneg(&v.lo) {
+        let lo = a.lo.as_ref().map(|a1| {
+            if prove_nonneg(a1) {
+                a1.clone() * v.lo.clone()
+            } else if prove_nonneg(&(-a1.clone())) {
+                a1.clone() * v.hi.clone()
+            } else {
+                smin(a1.clone() * v.lo.clone(), a1.clone() * v.hi.clone())
+            }
+        });
+        let hi = a.hi.as_ref().map(|a2| {
+            if prove_nonneg(a2) {
+                a2.clone() * v.hi.clone()
+            } else if prove_nonneg(&(-a2.clone())) {
+                a2.clone() * v.lo.clone()
+            } else {
+                smax(a2.clone() * v.lo.clone(), a2.clone() * v.hi.clone())
+            }
+        });
+        return Iv { lo, hi };
+    }
+    if prove_nonneg(&(-v.hi.clone())) {
+        // v ≤ 0: A·v = −(A·(−v)) with −v ∈ [−hi, −lo] ⊆ [0, ∞).
+        let flipped = mul_range(
+            a,
+            &Range {
+                lo: -v.hi.clone(),
+                hi: -v.lo.clone(),
+            },
+        );
+        return Iv {
+            lo: flipped.hi.map(|h| -h),
+            hi: flipped.lo.map(|l| -l),
+        };
+    }
+    match (&a.lo, &a.hi) {
+        (Some(a1), Some(a2)) => {
+            let prod = |x: &Expr, y: &Expr| x.clone() * y.clone();
+            Iv {
+                lo: Some(smin(
+                    smin(prod(a1, &v.lo), prod(a1, &v.hi)),
+                    smin(prod(a2, &v.lo), prod(a2, &v.hi)),
+                )),
+                hi: Some(smax(
+                    smax(prod(a1, &v.lo), prod(a1, &v.hi)),
+                    smax(prod(a2, &v.lo), prod(a2, &v.hi)),
+                )),
+            }
+        }
+        _ => Iv::default(),
+    }
+}
+
+/// Monomial-wise fallback (no top-level degree-1 environment variable):
+/// each monomial is the product of its atoms' intervals, which must
+/// have provably nonnegative lower bounds.
+fn monomial_interval(p: &crate::symbolic::Poly, env: &BoundEnv, depth: u32) -> Iv {
+    let mut lo: Option<Expr> = Some(int(0));
+    let mut hi: Option<Expr> = Some(int(0));
+    for (mono, c) in &p.0 {
+        if *c == 0 {
+            continue;
+        }
+        if mono.0.is_empty() {
+            lo = add_opt(lo, Some(int(*c)));
+            hi = add_opt(hi, Some(int(*c)));
+            continue;
+        }
+        let (mut mlo, mut mhi): (Option<Expr>, Option<Expr>) = (Some(int(1)), Some(int(1)));
+        for (atom, pw) in &mono.0 {
+            let iv = atom_interval(atom, env, depth);
+            // Monomial products require provably nonnegative factors.
+            let nonneg = iv
+                .lo
+                .as_ref()
+                .map(|l| prove_nonneg(l))
+                .unwrap_or(false);
+            if !nonneg {
+                mlo = None;
+                mhi = None;
+                break;
+            }
+            let alo = iv.lo.unwrap();
+            for _ in 0..*pw {
+                mlo = mlo.map(|x| x * alo.clone());
+                mhi = match (mhi, iv.hi.clone()) {
+                    (Some(x), Some(h)) => Some(x * h),
+                    _ => None,
+                };
+            }
+        }
+        if *c > 0 {
+            lo = add_scaled(lo, *c, mlo);
+            hi = add_scaled(hi, *c, mhi);
+        } else {
+            lo = add_scaled(lo, *c, mhi);
+            hi = add_scaled(hi, *c, mlo);
+        }
+    }
+    Iv { lo, hi }
+}
+
+fn add_opt(acc: Option<Expr>, t: Option<Expr>) -> Option<Expr> {
+    match (acc, t) {
+        (Some(a), Some(b)) => Some(a + b),
+        _ => None,
+    }
+}
+
+fn add_scaled(acc: Option<Expr>, c: i64, t: Option<Expr>) -> Option<Expr> {
+    match (acc, t) {
+        (Some(a), Some(b)) => Some(a + int(c) * b),
+        _ => None,
+    }
+}
+
+fn atom_interval(a: &Atom, env: &BoundEnv, depth: u32) -> Iv {
+    match a {
+        Atom::Sym(s) => {
+            if let Some(r) = env.get(*s) {
+                Iv {
+                    lo: Some(r.lo.clone()),
+                    hi: Some(r.hi.clone()),
+                }
+            } else if env.is_unknown(*s) {
+                Iv::default()
+            } else {
+                // A free parameter is exactly itself.
+                let e = Expr::Sym(*s);
+                Iv {
+                    lo: Some(e.clone()),
+                    hi: Some(e),
+                }
+            }
+        }
+        Atom::Opaque(inner) => opaque_interval(inner, env, depth),
+    }
+}
+
+/// VM-semantics intervals for non-polynomial heads.
+fn opaque_interval(e: &Expr, env: &BoundEnv, depth: u32) -> Iv {
+    if depth == 0 {
+        return Iv::default();
+    }
+    match e {
+        Expr::Mod(_, b) => {
+            // rem_euclid lies in [0, |b|−1]; a zero divisor yields 0.
+            let ib = interval_at(b, env, depth - 1);
+            let hi = match (&ib.lo, &ib.hi) {
+                (Some(l), Some(h)) if prove_nonneg(&(l.clone() - int(1))) => {
+                    Some(h.clone() - int(1))
+                }
+                _ => b.as_int().filter(|c| *c != 0).map(|c| int(c.abs() - 1)),
+            };
+            Iv {
+                lo: Some(int(0)),
+                hi,
+            }
+        }
+        Expr::FloorDiv(a, b) => {
+            let ib = interval_at(b, env, depth - 1);
+            let pos = ib
+                .lo
+                .as_ref()
+                .map(|l| prove_nonneg(&(l.clone() - int(1))))
+                .unwrap_or(false);
+            if !pos {
+                return Iv::default();
+            }
+            let ia = interval_at(a, env, depth - 1);
+            Iv {
+                lo: ia.lo.map(|l| smin(l, int(0))),
+                hi: ia.hi.map(|h| smax(h, int(0))),
+            }
+        }
+        // i64 inputs: floor(log2) ≤ 62; non-positive inputs clamp to 0.
+        Expr::Func(FuncKind::Log2, _) => Iv {
+            lo: Some(int(0)),
+            hi: Some(int(62)),
+        },
+        Expr::Func(FuncKind::Abs, args) => {
+            let ia = interval_at(&args[0], env, depth - 1);
+            let hi = match (ia.lo, ia.hi) {
+                (Some(l), Some(h)) => Some(smax(h, -l)),
+                _ => None,
+            };
+            Iv {
+                lo: Some(int(0)),
+                hi,
+            }
+        }
+        // Nested min/max reached through an opaque shell: recurse.
+        Expr::Min(..) | Expr::Max(..) => interval_at(e, env, depth - 1),
+        _ => Iv::default(),
+    }
+}
+
+/// Prove `e ≥ 0` under the global symbol assumptions, case-splitting on
+/// `min`/`max` subterms: both arms must hold in general; a single arm
+/// suffices when the subterm's constant polarity makes that arm a lower
+/// bound of `e` (e.g. `X − min(a,b) ≥ X − a`).
+pub fn prove_nonneg(e: &Expr) -> bool {
+    prove_nonneg_at(e, PROVE_DEPTH)
+}
+
+fn prove_nonneg_at(e: &Expr, depth: u32) -> bool {
+    let e = simplify(e);
+    if is_nonneg(&e) == Truth::Yes {
+        return true;
+    }
+    if depth == 0 {
+        return false;
+    }
+    let Some(m) = find_minmax(&e) else {
+        return false;
+    };
+    let (is_min, a, b) = match &m {
+        Expr::Min(a, b) => (true, (**a).clone(), (**b).clone()),
+        Expr::Max(a, b) => (false, (**a).clone(), (**b).clone()),
+        _ => return false,
+    };
+    if let Some(r) = resolve_ordered(is_min, &a, &b) {
+        return prove_nonneg_at(&replace_subterm(&e, &m, &r), depth - 1);
+    }
+    let ea = replace_subterm(&e, &m, &a);
+    let eb = replace_subterm(&e, &m, &b);
+    let either = match minmax_polarity(&e, &m) {
+        Some(c) => (is_min && c <= 0) || (!is_min && c >= 0),
+        None => false,
+    };
+    if either {
+        prove_nonneg_at(&ea, depth - 1) || prove_nonneg_at(&eb, depth - 1)
+    } else {
+        prove_nonneg_at(&ea, depth - 1) && prove_nonneg_at(&eb, depth - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbolic::{imod, psym, sym};
+
+    fn env_with(s: Sym, lo: Expr, hi: Expr) -> BoundEnv {
+        let mut env = BoundEnv::default();
+        env.push_range(s, Range { lo, hi });
+        env
+    }
+
+    #[test]
+    fn affine_offset_interval() {
+        let n = psym("bnd_N");
+        let i = Sym::new("bnd_i");
+        let env = env_with(i, int(1), n.clone() - int(2));
+        // 2i + 1 over i ∈ [1, N−2] → [3, 2N−3].
+        let iv = interval(&(int(2) * Expr::Sym(i) + int(1)), &env);
+        assert_eq!(iv.lo, Some(int(3)));
+        assert_eq!(iv.hi, Some(int(2) * n.clone() - int(3)));
+        // Negative coefficient swaps endpoints: N − i ∈ [2, N−1].
+        let iv = interval(&(n.clone() - Expr::Sym(i)), &env);
+        assert!(prove_nonneg(&(iv.lo.unwrap() - int(2))));
+        assert_eq!(iv.hi, Some(n - int(1)));
+    }
+
+    #[test]
+    fn min_polarity_keeps_tile_bounds_tight() {
+        // upper(min(kt + 32, N) − kt) must be 32, not N.
+        let n = psym("bnd_tN");
+        let kt = Sym::nonneg("bnd_kt");
+        let env = env_with(kt, int(0), n.clone() - int(1));
+        let e = emin(Expr::Sym(kt) + int(32), n.clone()) - Expr::Sym(kt);
+        let iv = interval(&e, &env);
+        let hi = iv.hi.expect("upper bound");
+        assert!(prove_nonneg(&(int(32) - hi)), "tile span bound too loose");
+    }
+
+    #[test]
+    fn mod_rule_bounds_gather() {
+        let r = psym("bnd_R");
+        let k = Sym::nonneg("bnd_k");
+        let env = env_with(k, int(0), r.clone() - int(1));
+        let off = imod(int(7) * Expr::Sym(k) + int(3), r.clone());
+        let iv = interval(&off, &env);
+        assert_eq!(iv.lo, Some(int(0)));
+        // hi = R − 1 → extent R − 1 − hi = 0 ≥ 0.
+        let slack = r - int(1) - iv.hi.unwrap();
+        assert!(prove_nonneg(&slack));
+    }
+
+    #[test]
+    fn log2_rule_is_word_bounded() {
+        let x = sym("bnd_lx");
+        let off = crate::symbolic::func(FuncKind::Log2, vec![x]);
+        let iv = interval(&off, &BoundEnv::default());
+        assert_eq!(iv.lo, Some(int(0)));
+        assert_eq!(iv.hi, Some(int(62)));
+    }
+
+    #[test]
+    fn prove_nonneg_case_splits_minmax() {
+        let n = psym("bnd_pn");
+        // 1056 − 33·min(32, N) ≥ 0 via the min→32 arm.
+        let e = int(1056) - int(33) * emin(int(32), n.clone());
+        assert!(prove_nonneg(&e));
+        // min in positive polarity needs both arms: min(32, N) ≥ 0 holds.
+        assert!(prove_nonneg(&emin(int(32), n.clone())));
+        // max needs only one arm for a lower bound: max(N − 100, 5) ≥ 0.
+        assert!(prove_nonneg(&emax(n - int(100), int(5))));
+    }
+
+    #[test]
+    fn unknown_vars_yield_no_bound() {
+        let mut env = BoundEnv::default();
+        let v = Sym::new("bnd_uv");
+        env.push_unknown(v);
+        let iv = interval(&(Expr::Sym(v) + int(1)), &env);
+        assert!(iv.lo.is_none() && iv.hi.is_none());
+    }
+}

@@ -1,0 +1,736 @@
+//! Static bounds verifier — the safety side of the paper's symbolic
+//! loop model.
+//!
+//! The same machinery that characterizes subscripts as symbolic
+//! functions of loop strides for *optimization* also suffices to
+//! *prove memory safety*: for every container subscript we derive a
+//! symbolic `[min, max]` over the enclosing nest ([`bounds`]) and
+//! compare it against the container extent under the parameter
+//! assumption floors. Each access gets a verdict:
+//!
+//! * [`AccessVerdict::ProvenInBounds`] — every execution under the
+//!   declared parameter assumptions stays inside the container; no
+//!   runtime check is needed.
+//! * [`AccessVerdict::NeedsCheck`] — the prover could not discharge one
+//!   of the two obligations; the checked VM tier guards this access
+//!   with an [`Op::BoundsCheck`](crate::lowering::bytecode::Op) at run
+//!   time.
+//! * [`AccessVerdict::ProvenOutOfBounds`] — the access can *never* be
+//!   in bounds (its derived lower bound is ≥ the extent, or its upper
+//!   bound is < 0); an untrusted service refuses such programs outright.
+//!
+//! The verdict lattice orders `ProvenInBounds < NeedsCheck <
+//! ProvenOutOfBounds`; a program's tier is the join over its accesses.
+//! The report also carries a **symbolic worst-case fuel bound** — an
+//! upper bound on loop back-edges the program can execute — which is
+//! what a fuel-budgeted runtime compares its meter against.
+//!
+//! Statement guards participate: `if (g) D[f] = …` only executes its
+//! body accesses when `g > 0`, so for integer-valued guards linear in a
+//! single loop variable the variable's range is tightened before
+//! judging the guarded accesses (the `blur_guard` boundary pattern).
+//!
+//! Soundness direction: everything here over-approximates. A
+//! `ProvenInBounds` verdict is a theorem under the parameter floors the
+//! program was compiled with (which is why the service validates run
+//! parameters against the floors snapshotted at compile time);
+//! `NeedsCheck` is always a safe answer.
+
+pub mod bounds;
+
+use std::collections::HashSet;
+
+use crate::ir::{AccessKind, Loop, Node, Program, Stmt, StmtId};
+use crate::symbolic::{floordiv, int, subs_many, to_poly, Atom, ContainerId, Expr, FuncKind, Sym};
+
+use bounds::{interval, prove_nonneg, smax, BoundEnv, Range};
+
+/// Safety tier of a compiled artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SafetyTier {
+    /// Compiled without verification — executes with CLI-level trust.
+    Trusted,
+    /// Every access statically proven in bounds; runs unchecked at full
+    /// speed.
+    Proven,
+    /// One or more accesses carry runtime bounds checks in the bytecode.
+    Checked,
+}
+
+impl SafetyTier {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SafetyTier::Trusted => "trusted",
+            SafetyTier::Proven => "proven",
+            SafetyTier::Checked => "checked",
+        }
+    }
+}
+
+/// Per-access verdict (see the module docs for the lattice).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AccessVerdict {
+    ProvenInBounds,
+    NeedsCheck { reason: String },
+    ProvenOutOfBounds { reason: String },
+}
+
+/// One verified access.
+#[derive(Debug, Clone)]
+pub struct AccessReport {
+    pub stmt: StmtId,
+    pub container: ContainerId,
+    pub container_name: String,
+    pub kind: AccessKind,
+    pub offset: Expr,
+    pub verdict: AccessVerdict,
+}
+
+/// The whole-program verification result.
+#[derive(Debug, Clone)]
+pub struct VerifyReport {
+    pub program: String,
+    pub accesses: Vec<AccessReport>,
+    /// Symbolic upper bound on loop back-edges (the fuel meter's unit);
+    /// `None` when some loop's trip count could not be bounded.
+    pub fuel_bound: Option<Expr>,
+}
+
+impl VerifyReport {
+    pub fn all_proven(&self) -> bool {
+        self.accesses
+            .iter()
+            .all(|a| a.verdict == AccessVerdict::ProvenInBounds)
+    }
+
+    pub fn proven_count(&self) -> usize {
+        self.accesses
+            .iter()
+            .filter(|a| a.verdict == AccessVerdict::ProvenInBounds)
+            .count()
+    }
+
+    pub fn unproven(&self) -> Vec<&AccessReport> {
+        self.accesses
+            .iter()
+            .filter(|a| a.verdict != AccessVerdict::ProvenInBounds)
+            .collect()
+    }
+
+    pub fn proven_oob(&self) -> Vec<&AccessReport> {
+        self.accesses
+            .iter()
+            .filter(|a| matches!(a.verdict, AccessVerdict::ProvenOutOfBounds { .. }))
+            .collect()
+    }
+
+    /// The tier this program earns when lowered with
+    /// [`CheckSet::from_report`]. A `ProvenOutOfBounds` access still
+    /// maps to `Checked` here — refusing it is a policy decision made
+    /// by the caller (the untrusted service refuses; the CLI reports).
+    pub fn tier(&self) -> SafetyTier {
+        if self.all_proven() {
+            SafetyTier::Proven
+        } else {
+            SafetyTier::Checked
+        }
+    }
+
+    /// Human-readable per-access report (the `silo verify` output).
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "program {}: {} accesses, {} proven in bounds, {} need runtime checks, \
+             {} provably out of bounds",
+            self.program,
+            self.accesses.len(),
+            self.proven_count(),
+            self.accesses.len() - self.proven_count() - self.proven_oob().len(),
+            self.proven_oob().len(),
+        );
+        for a in &self.accesses {
+            let kind = match a.kind {
+                AccessKind::Read => "read ",
+                AccessKind::Write => "write",
+            };
+            let verdict = match &a.verdict {
+                AccessVerdict::ProvenInBounds => "proven in bounds".to_string(),
+                AccessVerdict::NeedsCheck { reason } => format!("NEEDS CHECK — {reason}"),
+                AccessVerdict::ProvenOutOfBounds { reason } => {
+                    format!("OUT OF BOUNDS — {reason}")
+                }
+            };
+            let _ = writeln!(
+                out,
+                "  [s{}] {kind} {}[{}]: {verdict}",
+                a.stmt.0, a.container_name, a.offset
+            );
+        }
+        match &self.fuel_bound {
+            Some(f) => {
+                let _ = writeln!(out, "worst-case fuel (loop back-edges): {f}");
+            }
+            None => {
+                let _ = writeln!(out, "worst-case fuel: unbounded (non-sign-provable stride)");
+            }
+        }
+        out
+    }
+}
+
+/// Which accesses the lowering must guard with runtime bounds checks.
+/// Keyed by `(statement, container, offset)` — exactly the identity the
+/// bytecode compiler sees, so proven accesses keep every fast path
+/// (cursors, offset folding) and only unproven ones pay.
+#[derive(Debug, Clone, Default)]
+pub struct CheckSet {
+    all: bool,
+    keys: HashSet<(StmtId, ContainerId, Expr)>,
+}
+
+impl CheckSet {
+    /// Check nothing (today's trusted tier).
+    pub fn none() -> CheckSet {
+        CheckSet::default()
+    }
+
+    /// Check every access (paranoid tier; used by differential tests).
+    pub fn all() -> CheckSet {
+        CheckSet {
+            all: true,
+            keys: HashSet::new(),
+        }
+    }
+
+    /// Check exactly the accesses the report could not prove.
+    pub fn from_report(r: &VerifyReport) -> CheckSet {
+        let mut keys = HashSet::new();
+        for a in &r.accesses {
+            if a.verdict != AccessVerdict::ProvenInBounds {
+                keys.insert((a.stmt, a.container, a.offset.clone()));
+            }
+        }
+        CheckSet { all: false, keys }
+    }
+
+    pub fn needs(&self, stmt: StmtId, c: ContainerId, off: &Expr) -> bool {
+        self.all || self.keys.contains(&(stmt, c, off.clone()))
+    }
+
+    /// True when lowering with this set emits no checks at all.
+    pub fn is_empty(&self) -> bool {
+        !self.all && self.keys.is_empty()
+    }
+}
+
+/// Verify every access of `p` and bound its worst-case fuel.
+pub fn verify_program(p: &Program) -> VerifyReport {
+    let mut v = Verifier {
+        p,
+        accesses: Vec::new(),
+    };
+    let mut ctx = Ctx::default();
+    for n in &p.body {
+        v.walk_node(n, &mut ctx);
+    }
+    let mut fuel_env = BoundEnv::default();
+    let fuel_bound =
+        fuel_bound_nodes(&p.body, &mut fuel_env).map(|e| crate::symbolic::simplify(&e));
+    VerifyReport {
+        program: p.name.clone(),
+        accesses: v.accesses,
+        fuel_bound,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The nest walker
+// ---------------------------------------------------------------------------
+
+/// Provable stride direction of a loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dirn {
+    Asc,
+    Desc,
+    Unknown,
+}
+
+fn stride_dir(stride: &Expr, env: &BoundEnv) -> Dirn {
+    if let Some(c) = stride.as_int() {
+        return match c.cmp(&0) {
+            std::cmp::Ordering::Greater => Dirn::Asc,
+            std::cmp::Ordering::Less => Dirn::Desc,
+            std::cmp::Ordering::Equal => Dirn::Unknown,
+        };
+    }
+    let iv = interval(stride, env);
+    if iv
+        .lo
+        .as_ref()
+        .map(|l| prove_nonneg(&(l.clone() - int(1))))
+        .unwrap_or(false)
+    {
+        Dirn::Asc
+    } else if iv
+        .hi
+        .as_ref()
+        .map(|h| prove_nonneg(&(int(-1) - h.clone())))
+        .unwrap_or(false)
+    {
+        Dirn::Desc
+    } else {
+        Dirn::Unknown
+    }
+}
+
+/// A loop whose own variable feeds its stride or bounds (Fig. 2's
+/// `i += i`) has no closed characterization — over-approximate.
+fn self_dependent(l: &Loop) -> bool {
+    l.stride.depends_on(l.var) || l.start.depends_on(l.var) || l.end.depends_on(l.var)
+}
+
+/// Absolute range of `l.var` (closed over parameters), via the loop's
+/// own bounds: ascending loops run in `[start, end − 1]`, descending in
+/// `[end + 1, start]`.
+fn abs_range(l: &Loop, env: &BoundEnv) -> (Dirn, Option<Range>) {
+    if self_dependent(l) {
+        return (Dirn::Unknown, None);
+    }
+    let d = stride_dir(&l.stride, env);
+    let r = match d {
+        Dirn::Asc => {
+            let lo = interval(&l.start, env).lo;
+            let hi = interval(&l.end, env).hi.map(|h| h - int(1));
+            match (lo, hi) {
+                (Some(lo), Some(hi)) => Some(Range { lo, hi }),
+                _ => None,
+            }
+        }
+        Dirn::Desc => {
+            let lo = interval(&l.end, env).lo.map(|l| l + int(1));
+            let hi = interval(&l.start, env).hi;
+            match (lo, hi) {
+                (Some(lo), Some(hi)) => Some(Range { lo, hi }),
+                _ => None,
+            }
+        }
+        Dirn::Unknown => None,
+    };
+    (d, r)
+}
+
+#[derive(Default)]
+struct Ctx {
+    /// Absolute mode: loop variables bounded by their own loop's range.
+    abs: BoundEnv,
+    /// Relative mode: variables rewritten to `start ± ṽ` with `ṽ`
+    /// spanning the (normalized) trip range — keeps start-relative
+    /// offsets like `bk − kt` exact for tile-local buffers.
+    rel: BoundEnv,
+    subs: Vec<(Sym, Expr)>,
+}
+
+struct Verifier<'a> {
+    p: &'a Program,
+    accesses: Vec<AccessReport>,
+}
+
+impl Verifier<'_> {
+    fn walk_node(&mut self, n: &Node, ctx: &mut Ctx) {
+        match n {
+            Node::Stmt(s) => self.walk_stmt(s, ctx),
+            Node::Loop(l) => self.walk_loop(l, ctx),
+        }
+    }
+
+    fn walk_loop(&mut self, l: &Loop, ctx: &mut Ctx) {
+        // Absolute entry.
+        let (_, abs_r) = abs_range(l, &ctx.abs);
+        match abs_r {
+            Some(r) => ctx.abs.push_range(l.var, r),
+            None => ctx.abs.push_unknown(l.var),
+        }
+
+        // Relative entry: substitute var → start ± ṽ.
+        let mut rel_sym = l.var;
+        let mut pushed_sub = false;
+        if !self_dependent(l) {
+            let start_s = subs_many(&l.start, &ctx.subs);
+            let end_s = subs_many(&l.end, &ctx.subs);
+            let stride_s = subs_many(&l.stride, &ctx.subs);
+            let dir = stride_dir(&stride_s, &ctx.rel);
+            if dir != Dirn::Unknown {
+                // `#` cannot appear in a lexed identifier, so an untrusted
+                // submission can never intern a symbol colliding with the
+                // elimination variable (a same-named collision would hand
+                // the attacker's symbol our trip range — an unsound proof).
+                // Interning by name (not `Sym::fresh`) keeps the table
+                // growth bounded by the set of loop-variable names.
+                let tilde = Sym::nonneg(&format!("{}#vr", l.var.name()));
+                let span = match dir {
+                    Dirn::Asc => end_s.clone() - start_s.clone(),
+                    _ => start_s.clone() - end_s.clone(),
+                };
+                rel_sym = tilde;
+                match interval(&span, &ctx.rel).hi {
+                    Some(h) => ctx.rel.push_range(
+                        tilde,
+                        Range {
+                            lo: int(0),
+                            hi: h - int(1),
+                        },
+                    ),
+                    None => ctx.rel.push_unknown(tilde),
+                }
+                let repl = match dir {
+                    Dirn::Asc => start_s + Expr::Sym(tilde),
+                    _ => start_s - Expr::Sym(tilde),
+                };
+                ctx.subs.push((l.var, repl));
+                pushed_sub = true;
+            } else {
+                ctx.rel.push_unknown(l.var);
+            }
+        } else {
+            ctx.rel.push_unknown(l.var);
+        }
+
+        for n in &l.body {
+            self.walk_node(n, ctx);
+        }
+
+        ctx.abs.pop(l.var);
+        ctx.rel.pop(rel_sym);
+        if pushed_sub {
+            ctx.subs.pop();
+        }
+    }
+
+    fn walk_stmt(&mut self, s: &Stmt, ctx: &Ctx) {
+        let mut seen: HashSet<(ContainerId, Expr, bool)> = HashSet::new();
+        // Guard-expression reads execute unconditionally: judge them
+        // under the unrefined environment.
+        if let Some(g) = &s.guard {
+            for (c, off) in g.loads() {
+                if seen.insert((c, off.clone(), false)) {
+                    self.record(s, c, &off, AccessKind::Read, &ctx.abs, &ctx.rel, &ctx.subs);
+                }
+            }
+        }
+        // The guarded body only runs when guard > 0 — tighten ranges.
+        let (abs_ref, rel_ref) = match &s.guard {
+            Some(g) if integer_guard(g) => (
+                guard_refinement(g, &ctx.abs),
+                guard_refinement(&subs_many(g, &ctx.subs), &ctx.rel),
+            ),
+            _ => (None, None),
+        };
+        let abs_env = abs_ref.as_ref().unwrap_or(&ctx.abs);
+        let rel_env = rel_ref.as_ref().unwrap_or(&ctx.rel);
+        for (c, off) in s.rhs.loads() {
+            if seen.insert((c, off.clone(), false)) {
+                self.record(s, c, &off, AccessKind::Read, abs_env, rel_env, &ctx.subs);
+            }
+        }
+        self.record(
+            s,
+            s.write.container,
+            &s.write.offset,
+            AccessKind::Write,
+            abs_env,
+            rel_env,
+            &ctx.subs,
+        );
+    }
+
+    fn record(
+        &mut self,
+        s: &Stmt,
+        c: ContainerId,
+        off: &Expr,
+        kind: AccessKind,
+        abs: &BoundEnv,
+        rel: &BoundEnv,
+        subs: &[(Sym, Expr)],
+    ) {
+        let size = self.p.container(c).size.clone();
+        let verdict = match judge(off, abs, &size) {
+            Judge::Proven => AccessVerdict::ProvenInBounds,
+            Judge::Oob(reason) => AccessVerdict::ProvenOutOfBounds { reason },
+            Judge::Unknown(reason) => {
+                // Second attempt in start-relative form.
+                let off_rel = subs_many(off, subs);
+                match judge(&off_rel, rel, &size) {
+                    Judge::Proven => AccessVerdict::ProvenInBounds,
+                    Judge::Oob(reason) => AccessVerdict::ProvenOutOfBounds { reason },
+                    Judge::Unknown(_) => AccessVerdict::NeedsCheck { reason },
+                }
+            }
+        };
+        self.accesses.push(AccessReport {
+            stmt: s.id,
+            container: c,
+            container_name: self.p.container(c).name.clone(),
+            kind,
+            offset: off.clone(),
+            verdict,
+        });
+    }
+}
+
+enum Judge {
+    Proven,
+    Oob(String),
+    Unknown(String),
+}
+
+/// Judge one offset against one extent under one environment.
+fn judge(off: &Expr, env: &BoundEnv, size: &Expr) -> Judge {
+    let iv = interval(off, env);
+    let lo_ok = iv.lo.as_ref().map(|l| prove_nonneg(l)).unwrap_or(false);
+    let hi_ok = iv
+        .hi
+        .as_ref()
+        .map(|h| prove_nonneg(&(size.clone() - int(1) - h.clone())))
+        .unwrap_or(false);
+    if lo_ok && hi_ok {
+        return Judge::Proven;
+    }
+    if let Some(h) = &iv.hi {
+        if prove_nonneg(&(int(-1) - h.clone())) {
+            return Judge::Oob(format!("upper bound {h} is below 0"));
+        }
+    }
+    if let Some(l) = &iv.lo {
+        if prove_nonneg(&(l.clone() - size.clone())) {
+            return Judge::Oob(format!("lower bound {l} reaches or exceeds extent {size}"));
+        }
+    }
+    let side = if !lo_ok {
+        match &iv.lo {
+            Some(l) => format!("cannot prove offset ≥ 0 (derived lower bound {l})"),
+            None => "no lower bound derivable".to_string(),
+        }
+    } else {
+        match &iv.hi {
+            Some(h) => format!("cannot prove offset ≤ {size} − 1 (derived upper bound {h})"),
+            None => "no upper bound derivable".to_string(),
+        }
+    };
+    Judge::Unknown(side)
+}
+
+/// Is `g` a purely integer-valued expression (so `g > 0 ⟺ g ≥ 1`)?
+fn integer_guard(g: &Expr) -> bool {
+    let mut ok = true;
+    g.visit(&mut |e| match e {
+        Expr::Real(_) | Expr::Load(..) => ok = false,
+        Expr::Func(k, _) if !matches!(k, FuncKind::Log2 | FuncKind::Abs) => ok = false,
+        _ => {}
+    });
+    ok
+}
+
+/// Tighten an environment using `g ≥ 1`, when `g` is linear with unit
+/// coefficient in a single environment variable and the rest is closed
+/// over parameters: `v + r ≥ 1 ⇒ v ≥ 1 − r`; `r − v ≥ 1 ⇒ v ≤ r − 1`.
+fn guard_refinement(g: &Expr, env: &BoundEnv) -> Option<BoundEnv> {
+    if g.contains_load() {
+        return None;
+    }
+    let p = to_poly(g)?;
+    for s in g.symbols() {
+        if !env.has(s) {
+            continue;
+        }
+        let a = Atom::Sym(s);
+        let hidden = p
+            .0
+            .keys()
+            .any(|m| m.0.iter().any(|(x, _)| *x != a && x.depends_on(s)));
+        if hidden {
+            continue;
+        }
+        let by = p.collect(&a);
+        if by.keys().max().copied().unwrap_or(0) != 1 {
+            continue;
+        }
+        let Some(c) = by.get(&1).and_then(|q| q.as_constant()) else {
+            continue;
+        };
+        if c != 1 && c != -1 {
+            continue;
+        }
+        let rest = by
+            .get(&0)
+            .cloned()
+            .unwrap_or_else(crate::symbolic::Poly::zero)
+            .to_expr();
+        if env.mentions_env(&rest) {
+            continue;
+        }
+        return Some(if c == 1 {
+            env.refined(s, Some(int(1) - rest), None)
+        } else {
+            env.refined(s, None, Some(rest - int(1)))
+        });
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Worst-case fuel
+// ---------------------------------------------------------------------------
+
+/// Closed upper bound on loop back-edges executed by `nodes` (each loop
+/// contributes its iteration bound times `1 + ` its body's bound).
+fn fuel_bound_nodes(nodes: &[Node], env: &mut BoundEnv) -> Option<Expr> {
+    let mut total = int(0);
+    for n in nodes {
+        if let Node::Loop(l) = n {
+            let (dirn, r) = abs_range(l, env);
+            let iters = loop_iter_bound(l, env, dirn)?;
+            match r {
+                Some(r) => env.push_range(l.var, r),
+                None => env.push_unknown(l.var),
+            }
+            let inner = fuel_bound_nodes(&l.body, env);
+            env.pop(l.var);
+            total = total + iters * (int(1) + inner?);
+        }
+    }
+    Some(total)
+}
+
+fn loop_iter_bound(l: &Loop, env: &BoundEnv, d: Dirn) -> Option<Expr> {
+    let span = match d {
+        Dirn::Asc => {
+            let u_end = interval(&l.end, env).hi?;
+            let l_start = interval(&l.start, env).lo?;
+            u_end - l_start
+        }
+        Dirn::Desc => {
+            let u_start = interval(&l.start, env).hi?;
+            let l_end = interval(&l.end, env).lo?;
+            u_start - l_end
+        }
+        Dirn::Unknown => return None,
+    };
+    let step = l.stride.as_int().map(i64::abs).unwrap_or(1);
+    let count = if step > 1 {
+        floordiv(span + int(step - 1), int(step))
+    } else {
+        span
+    };
+    Some(smax(int(0), count))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{load, Expr};
+
+    #[test]
+    fn interior_stencil_is_proven() {
+        let mut b = ProgramBuilder::new("ver_stencil");
+        let n = b.dim_param("ver_N");
+        let a = b.array("A", Expr::Sym(n));
+        let t = b.transient("T", Expr::Sym(n));
+        let i = b.sym("ver_i");
+        b.for_(i, int(1), Expr::Sym(n) - int(1), int(1), |b| {
+            b.assign(
+                t,
+                Expr::Sym(i),
+                load(a, Expr::Sym(i) - int(1)) + load(a, Expr::Sym(i) + int(1)),
+            );
+        });
+        let p = b.finish();
+        let r = verify_program(&p);
+        assert!(r.all_proven(), "{}", r.summary());
+        // Worst-case fuel: the single loop runs ≤ N − 2 back-edges.
+        let fuel = r.fuel_bound.expect("bounded");
+        let slack = Expr::Sym(n) - fuel;
+        assert!(bounds::prove_nonneg(&slack), "fuel bound too loose: {fuel}");
+    }
+
+    #[test]
+    fn overrunning_gather_needs_check() {
+        let mut b = ProgramBuilder::new("ver_gather");
+        let n = b.param_positive("verg_N");
+        let src = b.array("src", Expr::Sym(n));
+        let dst = b.array("dst", Expr::Sym(n));
+        let i = b.sym("verg_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(dst, Expr::Sym(i), load(src, int(2) * Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let r = verify_program(&p);
+        assert!(!r.all_proven());
+        let checks = CheckSet::from_report(&r);
+        assert!(!checks.is_empty());
+        // The in-bounds write is NOT in the check set.
+        let w = p.stmts()[0].write.clone();
+        assert!(!checks.needs(p.stmts()[0].id, w.container, &w.offset));
+    }
+
+    #[test]
+    fn definitely_oob_access_is_flagged() {
+        let mut b = ProgramBuilder::new("ver_oob");
+        let n = b.param_positive("vero_N");
+        let a = b.array("A", Expr::Sym(n));
+        let i = b.sym("vero_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, Expr::Sym(i) + Expr::Sym(n), Expr::real(0.0));
+        });
+        let p = b.finish();
+        let r = verify_program(&p);
+        assert_eq!(r.proven_oob().len(), 1, "{}", r.summary());
+    }
+
+    #[test]
+    fn guards_refine_boundary_accesses() {
+        // if (i) y[i] = x[i-1]; if (1-i) y[i] = x[i]  — the blur_guard
+        // pattern: both statements proven only through the guard.
+        let mut b = ProgramBuilder::new("ver_guard");
+        let n = b.param_positive("vgd_N");
+        let x = b.array("x", Expr::Sym(n));
+        let y = b.array("y", Expr::Sym(n));
+        let i = b.sym("vgd_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign_if(
+                Expr::Sym(i),
+                y,
+                Expr::Sym(i),
+                load(x, Expr::Sym(i) - int(1)),
+            );
+            b.assign_if(
+                int(1) - Expr::Sym(i),
+                y,
+                Expr::Sym(i),
+                load(x, Expr::Sym(i)),
+            );
+        });
+        let p = b.finish();
+        let r = verify_program(&p);
+        assert!(r.all_proven(), "{}", r.summary());
+    }
+
+    #[test]
+    fn variable_stride_loop_is_fuel_unbounded_but_log2_access_proves() {
+        use crate::symbolic::{func, FuncKind};
+        let mut b = ProgramBuilder::new("ver_fig2");
+        let n = b.param_positive("vf2_N");
+        let a = b.array("A", int(64));
+        let i = b.sym("vf2_i");
+        b.for_(i, int(1), Expr::Sym(n), Expr::Sym(i), |b| {
+            b.assign(a, func(FuncKind::Log2, vec![Expr::Sym(i)]), Expr::real(1.0));
+        });
+        let p = b.finish();
+        let r = verify_program(&p);
+        assert!(r.all_proven(), "{}", r.summary());
+        assert!(r.fuel_bound.is_none());
+    }
+}

@@ -26,6 +26,7 @@ fn start(cache_cap: usize, cache_shards: usize, workers: usize) -> Server {
         workers,
         cache_cap,
         cache_shards,
+        ..ServiceConfig::default()
     })
     .unwrap()
 }
@@ -465,5 +466,151 @@ fn repeat_runs_reuse_the_artifact() {
     let m = c.metrics().unwrap();
     assert_eq!(metric(&m, "compiles"), 1, "{m}");
     assert_eq!(metric(&m, "runs"), 2, "{m}");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// HTTP keep-alive
+// ---------------------------------------------------------------------------
+
+/// One TCP connection serves several requests under `Connection:
+/// keep-alive`; a request asking `Connection: close` ends the
+/// conversation.
+#[test]
+fn keep_alive_serves_multiple_requests_per_connection() {
+    use std::io::{BufReader, Write};
+    let server = start(4, 1, 2);
+    let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut reader = BufReader::new(&stream);
+    for i in 0..3 {
+        write!(
+            &stream,
+            "GET /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        let (status, body) =
+            silo::service::http::read_response(&mut reader).unwrap_or_else(|e| {
+                panic!("request {i} on the shared connection failed: {e:#}")
+            });
+        assert_eq!(status, 200, "request {i}");
+        assert!(body.contains("\"ok\":true"), "{body}");
+    }
+    // The daemon saw all 3 requests from the one socket.
+    let m = client(&server).metrics().unwrap();
+    assert!(metric(&m, "requests") >= 3, "{m}");
+    // An explicit close is honored: the next read sees EOF.
+    write!(
+        &stream,
+        "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: 0\r\n\r\n"
+    )
+    .unwrap();
+    let (status, _) = silo::service::http::read_response(&mut reader).unwrap();
+    assert_eq!(status, 200);
+    use std::io::Read;
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "daemon kept the connection open after close");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Untrusted mode: verify + fuel + structured traps over the wire
+// ---------------------------------------------------------------------------
+
+fn start_untrusted(fuel: u64) -> Server {
+    Server::serve(&ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        cache_cap: 16,
+        cache_shards: 1,
+        untrusted: true,
+        fuel_limit: fuel,
+        wall_ms: 60_000,
+    })
+    .unwrap()
+}
+
+/// An untrusted daemon proves a clean submission (tier `proven`), runs
+/// it at full speed, and reports the fuel spent.
+#[test]
+fn untrusted_daemon_proves_clean_programs() {
+    let server = start_untrusted(1 << 30);
+    let c = client(&server);
+    let source = "program svc_ut_ok {\n  param svc_ut_N = { tiny: 16, small: 64, \
+                  medium: 256 };\n  array A[svc_ut_N];\n  for (svc_ut_i = 0; svc_ut_i < \
+                  svc_ut_N; svc_ut_i += 1) {\n    A[svc_ut_i] = 2.0*A[svc_ut_i] + 1.0;\n  }\n}\n";
+    // `none` keeps the loop structure deterministic for the fuel
+    // assertion below; a separate submission proves under `auto` too.
+    let reply = c.compile(source, "none").unwrap();
+    assert_eq!(reply.tier, "proven", "clean program must prove statically");
+    assert_eq!(reply.unproven, 0);
+    assert!(reply.fuel_bound.is_some(), "trip count must be boundable");
+    let run = c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    // Tiny preset: 16 iterations of one loop = 16 back-edges.
+    assert_eq!(run.fuel_used, Some(16), "fuel accounting");
+    let tuned = c.compile(source, "auto").unwrap();
+    assert_eq!(tuned.tier, "proven", "autotuned form must stay proven");
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "runs_proven"), 1, "{m}");
+    assert_eq!(metric(&m, "runs_checked"), 0, "{m}");
+    assert!(m.get("untrusted").and_then(Json::as_bool).unwrap(), "{m}");
+    assert!(metric(&m, "symbols_interned") > 0, "{m}");
+    server.shutdown();
+}
+
+/// A hostile out-of-bounds gather check-compiles (tier `checked`) and
+/// its run comes back as HTTP 422 with the structured trap code —
+/// never UB.
+#[test]
+fn untrusted_daemon_traps_hostile_gather() {
+    let server = start_untrusted(1 << 30);
+    let c = client(&server);
+    let source = include_str!("hostile/oob_gather.silo");
+    let reply = c.compile(source, "none").unwrap();
+    assert_eq!(reply.tier, "checked", "unproven access must check-compile");
+    assert!(reply.unproven >= 1);
+    let err = c
+        .run(&reply.kernel, &RunRequest::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("422"), "{err}");
+    assert!(err.contains("out-of-bounds access"), "{err}");
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "trapped"), 1, "{m}");
+    assert_eq!(metric(&m, "runs_checked"), 0, "a trapped run never completes: {m}");
+    server.shutdown();
+}
+
+/// A provably out-of-bounds program is refused at compile time (422,
+/// code `rejected`) and never occupies a cache slot.
+#[test]
+fn untrusted_daemon_rejects_provable_oob() {
+    let server = start_untrusted(1 << 30);
+    let c = client(&server);
+    let source = include_str!("hostile/definite_oob.silo");
+    let err = c.compile(source, "none").unwrap_err().to_string();
+    assert!(err.contains("422"), "{err}");
+    assert!(err.contains("rejected"), "{err}");
+    assert_eq!(c.kernels().unwrap().as_arr().unwrap().len(), 0, "refusals must not cache");
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "rejected"), 1, "{m}");
+    server.shutdown();
+}
+
+/// A fuel-hungry (but memory-safe) program exhausts the daemon's budget
+/// deterministically instead of wedging a worker.
+#[test]
+fn untrusted_daemon_enforces_fuel() {
+    let server = start_untrusted(1_000);
+    let c = client(&server);
+    let source = include_str!("hostile/fuel_burn.silo");
+    let reply = c.compile(source, "none").unwrap();
+    assert_eq!(reply.tier, "proven", "fuel_burn is memory-safe");
+    let err = c
+        .run(&reply.kernel, &RunRequest::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("422"), "{err}");
+    assert!(err.contains("fuel budget exhausted"), "{err}");
     server.shutdown();
 }

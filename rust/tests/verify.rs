@@ -1,0 +1,236 @@
+//! Static bounds verifier + checked execution tier acceptance.
+//!
+//! Pins the PR's headline invariants:
+//! * every registered kernel is statically proven in bounds — both as
+//!   authored and after the autotuner reshapes it (tiling introduces
+//!   `min` bounds, fusion/doacross reschedule) — so the untrusted
+//!   service serves the whole corpus on the unchecked fast tier;
+//! * force-checking every access (`CheckSet::all`) produces bitwise
+//!   identical outputs to the unchecked tier on the whole corpus;
+//! * the hostile corpus (`tests/hostile/*.silo`) is flagged by the
+//!   prover and the checked VM traps with the right structured error —
+//!   deterministically — instead of exhibiting UB or hanging.
+
+use silo::coordinator::{
+    compile_program_verified, MemSchedules, OptConfig, PipelineSpec,
+};
+use silo::exec::{ExecLimits, Trap, Vm};
+use silo::frontend::{parse_str, ParsedKernel};
+use silo::kernels::{self, Preset};
+use silo::symbolic::eval::eval_int;
+use silo::verify::{verify_program, CheckSet, SafetyTier};
+
+const OOB_GATHER: &str = include_str!("hostile/oob_gather.silo");
+const NEG_UNDERRUN: &str = include_str!("hostile/neg_stride_underrun.silo");
+const FUEL_BURN: &str = include_str!("hostile/fuel_burn.silo");
+const DEFINITE_OOB: &str = include_str!("hostile/definite_oob.silo");
+
+// ---------------------------------------------------------------------------
+// The acceptance criterion: the whole corpus proves statically
+// ---------------------------------------------------------------------------
+
+/// Every registered kernel, as authored, is fully proven in bounds.
+#[test]
+fn every_registered_kernel_is_statically_proven() {
+    for k in kernels::all_kernels() {
+        let p = (k.build)();
+        let r = verify_program(&p);
+        assert!(r.all_proven(), "{}:\n{}", k.name, r.summary());
+    }
+}
+
+/// Every registered kernel still proves after `--pipeline auto`
+/// reshapes it, so a verified compile earns the `Proven` tier (zero
+/// runtime checks — the bytecode is identical to a trusted compile).
+#[test]
+fn every_registered_kernel_proves_after_autotuning() {
+    for k in kernels::all_kernels() {
+        let compiled = compile_program_verified(
+            (k.build)(),
+            &PipelineSpec::Auto,
+            MemSchedules::default(),
+        )
+        .unwrap_or_else(|e| panic!("{}: verified compile refused: {e:#}", k.name));
+        let report = compiled.verify.as_ref().expect("verified compile carries a report");
+        assert_eq!(
+            compiled.tier,
+            SafetyTier::Proven,
+            "{} fell to the checked tier:\n{}",
+            k.name,
+            report.summary()
+        );
+        assert_eq!(compiled.vm.prog.checked_accesses, 0, "{}", k.name);
+    }
+}
+
+/// Force-checking every access must not change a single bit of output:
+/// the checked tier is a safety net, not a different semantics.
+#[test]
+fn checked_tier_is_bitwise_identical_to_unchecked() {
+    for k in kernels::all_kernels() {
+        let p = (k.build)();
+        let params = (k.preset)(Preset::Tiny);
+        let inputs = kernels::gen_inputs(&p, &params, k.init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let plain = Vm::compile(&p).unwrap();
+        let checked = Vm::compile_checked(&p, &CheckSet::all()).unwrap();
+        assert!(
+            checked.prog.checked_accesses > 0,
+            "{}: paranoid tier emitted no guards",
+            k.name
+        );
+        assert_eq!(plain.prog.checked_accesses, 0, "{}", k.name);
+        let a = plain.run(&params, &refs, 1).unwrap();
+        let b = checked.run(&params, &refs, 1).unwrap();
+        for (ai, (x, y)) in a.arrays.iter().zip(&b.arrays).enumerate() {
+            let xb: Vec<u64> = x.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(xb, yb, "{}: container {ai} diverged between tiers", k.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hostile corpus
+// ---------------------------------------------------------------------------
+
+fn compile_hostile(src: &str) -> (ParsedKernel, silo::coordinator::CompiledKernel) {
+    let parsed = parse_str(src).unwrap();
+    let compiled = compile_program_verified(
+        parsed.program.clone(),
+        &PipelineSpec::Config(OptConfig::None),
+        MemSchedules::default(),
+    )
+    .unwrap();
+    (parsed, compiled)
+}
+
+fn run_hostile(
+    parsed: &ParsedKernel,
+    compiled: &silo::coordinator::CompiledKernel,
+    limits: &ExecLimits,
+) -> anyhow::Result<u64> {
+    let params = parsed.params_for(Preset::Tiny).unwrap();
+    let inputs =
+        kernels::gen_inputs_with(&compiled.program, &params, |n, i| parsed.init_value(n, i))
+            .unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    compiled
+        .execute_limited(&params, &refs, 1, limits)
+        .map(|(_, _, fuel)| fuel)
+}
+
+/// The overrunning gather is flagged `NeedsCheck` (it is fine for half
+/// the iteration space), check-compiles, and traps deterministically at
+/// the first out-of-range index.
+#[test]
+fn hostile_gather_is_flagged_and_traps() {
+    let (parsed, compiled) = compile_hostile(OOB_GATHER);
+    let report = compiled.verify.as_ref().unwrap();
+    assert!(!report.all_proven(), "{}", report.summary());
+    assert!(report.proven_oob().is_empty(), "not *provably* OOB: {}", report.summary());
+    assert_eq!(compiled.tier, SafetyTier::Checked);
+    assert!(compiled.vm.prog.checked_accesses >= 1);
+
+    let err = run_hostile(&parsed, &compiled, &ExecLimits::none()).unwrap_err();
+    // Tiny preset: src[2i] with N = 32 first leaves bounds at i = 16.
+    match err.downcast_ref::<Trap>() {
+        Some(Trap::OutOfBounds { index, len, .. }) => {
+            assert_eq!((*index, *len), (32, 32), "{err:#}");
+        }
+        other => panic!("expected OutOfBounds, got {other:?}: {err:#}"),
+    }
+    // Deterministic: the same trap on every run.
+    let again = run_hostile(&parsed, &compiled, &ExecLimits::none()).unwrap_err();
+    assert_eq!(err.downcast_ref::<Trap>(), again.downcast_ref::<Trap>());
+    assert!(format!("{err:#}").contains("`src`"), "names the container: {err:#}");
+}
+
+/// The descending underrun traps on the first negative index.
+#[test]
+fn hostile_negative_stride_underrun_traps() {
+    let (parsed, compiled) = compile_hostile(NEG_UNDERRUN);
+    assert_eq!(compiled.tier, SafetyTier::Checked);
+    let err = run_hostile(&parsed, &compiled, &ExecLimits::none()).unwrap_err();
+    match err.downcast_ref::<Trap>() {
+        Some(Trap::OutOfBounds { index, len, .. }) => {
+            assert_eq!((*index, *len), (-1, 16), "{err:#}");
+        }
+        other => panic!("expected OutOfBounds, got {other:?}: {err:#}"),
+    }
+}
+
+/// The fuel burner is memory-safe (tier `Proven` — the mod-subscript
+/// rule) but must hit the fuel meter, deterministically, and complete
+/// under a sufficient budget with exact accounting.
+#[test]
+fn hostile_fuel_burn_exhausts_budget_deterministically() {
+    let (parsed, compiled) = compile_hostile(FUEL_BURN);
+    assert_eq!(
+        compiled.tier,
+        SafetyTier::Proven,
+        "{}",
+        compiled.verify.as_ref().unwrap().summary()
+    );
+    // Tiny preset: N = 8 → 8^5 = 32768 back-edges, predicted exactly by
+    // the symbolic fuel bound.
+    let report = compiled.verify.as_ref().unwrap();
+    let bound = report.fuel_bound.as_ref().expect("boundable");
+    let params = parsed.params_for(Preset::Tiny).unwrap();
+    assert_eq!(eval_int(bound, &params).unwrap(), 32768, "fuel bound {bound}");
+
+    let starved = ExecLimits { fuel: Some(1_000), wall: None };
+    for _ in 0..2 {
+        let err = run_hostile(&parsed, &compiled, &starved).unwrap_err();
+        assert_eq!(err.downcast_ref::<Trap>(), Some(&Trap::FuelExhausted), "{err:#}");
+    }
+    let fed = ExecLimits { fuel: Some(50_000), wall: None };
+    let used = run_hostile(&parsed, &compiled, &fed).unwrap();
+    assert_eq!(used, 32768, "exact back-edge accounting");
+}
+
+/// The definitely-out-of-bounds program is refused by a verified
+/// compile — it never reaches the VM at all.
+#[test]
+fn hostile_definite_oob_is_refused() {
+    let parsed = parse_str(DEFINITE_OOB).unwrap();
+    let report = verify_program(&parsed.program);
+    assert_eq!(report.proven_oob().len(), 1, "{}", report.summary());
+    let err = compile_program_verified(
+        parsed.program.clone(),
+        &PipelineSpec::Config(OptConfig::None),
+        MemSchedules::default(),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rejected"), "{msg}");
+    assert!(msg.contains("never be in bounds"), "{msg}");
+}
+
+/// A verified compile of a hostile-but-checkable program still runs the
+/// *in-range* prefix faithfully: the checked tier only changes what
+/// happens at the boundary violation.
+#[test]
+fn checked_tier_matches_unchecked_prefix_semantics() {
+    // A shifted read kept in range only by its guard (`g ≥ 1 ⇒ i ≤
+    // N − 3 ⇒ i + 2 ≤ N − 1`): fully proven through the guard
+    // refinement, and bitwise equal between tiers.
+    let src = "program ver_guarded_gather {\n  param vgg_N = { tiny: 32, small: 256, \
+               medium: 4096 };\n  array src[vgg_N];\n  array dst[vgg_N];\n  for (vgg_i = 0; \
+               vgg_i < vgg_N; vgg_i += 1) {\n    if (vgg_N - 2 - vgg_i) dst[vgg_i] = \
+               2.0*src[vgg_i + 2];\n  }\n}\n";
+    let parsed = parse_str(src).unwrap();
+    let report = verify_program(&parsed.program);
+    assert!(report.all_proven(), "guard refinement failed:\n{}", report.summary());
+    let params = parsed.params_for(Preset::Tiny).unwrap();
+    let inputs = kernels::gen_inputs_with(&parsed.program, &params, |n, i| {
+        parsed.init_value(n, i)
+    })
+    .unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let plain = Vm::compile(&parsed.program).unwrap();
+    let checked = Vm::compile_checked(&parsed.program, &CheckSet::all()).unwrap();
+    let a = plain.run(&params, &refs, 1).unwrap();
+    let b = checked.run(&params, &refs, 1).unwrap();
+    assert_eq!(a.arrays, b.arrays);
+}
