@@ -1,0 +1,173 @@
+//! Bench: the native x86-64 tier vs the bytecode VM — per named config,
+//! on every registered kernel — and the measured-cycles calibration of
+//! the tuner's cost model. `cargo bench --bench bench_native`
+//!
+//! Emits `BENCH_native.json` at the repository root so the perf
+//! trajectory is pinned across PRs. The headline number is the geomean
+//! native speedup on the ptr-inc/prefetch kernels (the Fig. 10 and
+//! Table 1 workloads: jacobi_1d, softmax, matmul_tiled) measured with
+//! both memory schedules applied — the schedules whose wins the JIT
+//! exists to make real.
+//!
+//! Per-measurement time budget defaults to 300 ms; set
+//! `BENCH_NATIVE_BUDGET_MS` to change it.
+
+use std::time::Duration;
+
+use silo::bench::{black_box, time_budgeted};
+use silo::coordinator::{compile_program, CompiledKernel, MemSchedules, PipelineSpec};
+use silo::exec::ExecLimits;
+use silo::kernels::{resolve, all_kernels, Preset};
+use silo::native::Tier;
+use silo::tuner::{schedule_cost, schedule_cost_with, CostCalibration};
+
+/// Fig. 10 + Table 1 workloads: the geomean acceptance set.
+const HEADLINE: [&str; 3] = ["jacobi_1d", "softmax", "matmul_tiled"];
+
+fn budget() -> Duration {
+    let ms = std::env::var("BENCH_NATIVE_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(300);
+    Duration::from_millis(ms.max(10))
+}
+
+/// Mean wall-clock of one tier on one compiled artifact, milliseconds.
+fn measure(
+    compiled: &CompiledKernel,
+    tier: Tier,
+    params: &[(silo::symbolic::Sym, i64)],
+    refs: &[(silo::symbolic::ContainerId, &[f64])],
+) -> f64 {
+    let st = time_budgeted(budget(), || {
+        black_box(
+            compiled
+                .execute_limited_tier(tier, params, refs, 1, &ExecLimits::none())
+                .unwrap(),
+        );
+    });
+    st.mean_ms()
+}
+
+fn main() {
+    let native = silo::native::available();
+    if !native {
+        eprintln!("native tier unavailable on this host; emitting VM-only baseline");
+    }
+    let specs = ["none", "cfg1", "cfg2", "cfg3"];
+    let mut rows = Vec::new();
+    println!(
+        "{:<16} {:<6} {:>10} {:>10} {:>8}",
+        "kernel", "config", "vm ms", "native ms", "speedup"
+    );
+    for entry in all_kernels() {
+        let kernel = resolve(entry.name).unwrap();
+        for spec in specs {
+            let compiled = compile_program(
+                kernel.program(),
+                &PipelineSpec::parse(spec),
+                MemSchedules::default(),
+            )
+            .unwrap_or_else(|e| panic!("{}/{spec}: {e:#}", entry.name));
+            let params = kernel.params(Preset::Small).unwrap();
+            let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let vm_ms = measure(&compiled, Tier::Vm, &params, &refs);
+            let nat_ms = (native && compiled.native.is_some())
+                .then(|| measure(&compiled, Tier::Native, &params, &refs));
+            match nat_ms {
+                Some(n) => println!(
+                    "{:<16} {:<6} {:>10.3} {:>10.3} {:>7.2}x",
+                    entry.name,
+                    spec,
+                    vm_ms,
+                    n,
+                    vm_ms / n
+                ),
+                None => println!(
+                    "{:<16} {:<6} {:>10.3} {:>10} {:>8}",
+                    entry.name, spec, vm_ms, "-", "-"
+                ),
+            }
+            rows.push(format!(
+                "    {{\"name\": \"{}\", \"config\": \"{spec}\", \"vm_ms\": {:.4}, \
+                 \"native_ms\": {}, \"speedup\": {}}}",
+                entry.name,
+                vm_ms,
+                nat_ms.map_or("null".into(), |n| format!("{n:.4}")),
+                nat_ms.map_or("null".into(), |n| format!("{:.3}", vm_ms / n)),
+            ));
+        }
+    }
+
+    // Headline: the ptr-inc + prefetch schedules on the Fig. 10 /
+    // Table 1 kernels, native vs VM.
+    let mem = MemSchedules { ptr_inc: true, prefetch: true };
+    let mut headline_rows = Vec::new();
+    let mut log_sum = 0.0f64;
+    let mut measured = 0usize;
+    let mut calibration = CostCalibration::identity();
+    for name in HEADLINE {
+        let kernel = resolve(name).unwrap();
+        let compiled =
+            compile_program(kernel.program(), &PipelineSpec::parse("cfg1"), mem).unwrap();
+        let params = kernel.params(Preset::Small).unwrap();
+        let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let vm_ms = measure(&compiled, Tier::Vm, &params, &refs);
+        let Some(()) = (native && compiled.native.is_some()).then_some(()) else {
+            headline_rows.push(format!(
+                "    {{\"name\": \"{name}\", \"vm_ms\": {vm_ms:.4}, \"native_ms\": null}}"
+            ));
+            continue;
+        };
+        let nat_ms = measure(&compiled, Tier::Native, &params, &refs);
+        let speedup = vm_ms / nat_ms;
+        log_sum += speedup.ln();
+        measured += 1;
+        println!("headline {name}: {speedup:.2}x (vm {vm_ms:.3} ms, native {nat_ms:.3} ms)");
+        headline_rows.push(format!(
+            "    {{\"name\": \"{name}\", \"vm_ms\": {vm_ms:.4}, \"native_ms\": {nat_ms:.4}, \
+             \"speedup\": {speedup:.3}}}"
+        ));
+        // Calibrate the cost model against the first measured kernel:
+        // modeled cycles/iter vs the native measurement (the VM's
+        // interpretation overhead is exactly what calibration factors
+        // out). The scale feeds schedule_cost_with without re-ranking.
+        if measured == 1 {
+            let opts = silo::tuner::TuneOptions::default();
+            let modeled = schedule_cost(&compiled.program, &opts.compiler, &opts.node)
+                .map(|c| c.cycles_per_iter)
+                .unwrap_or(0.0);
+            calibration = CostCalibration::from_measurement(modeled, nat_ms * 1e6);
+            let recal =
+                schedule_cost_with(&compiled.program, &opts.compiler, &opts.node, calibration)
+                    .unwrap();
+            println!(
+                "calibration on {name}: scale {:.4} → {:.2} calibrated cycles/iter",
+                calibration.scale, recal.cycles_per_iter
+            );
+        }
+    }
+    let geomean = (measured > 0).then(|| (log_sum / measured as f64).exp());
+    if let Some(g) = geomean {
+        println!("\nptr-inc/prefetch geomean native speedup: {g:.2}x");
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"native\",\n  \"native_available\": {},\n  \
+         \"preset\": \"small\",\n  \"headline_geomean_speedup\": {},\n  \
+         \"calibration_scale\": {:.6},\n  \"headline\": [\n{}\n  ],\n  \
+         \"kernels\": [\n{}\n  ]\n}}\n",
+        native,
+        geomean.map_or("null".into(), |g| format!("{g:.3}")),
+        calibration.scale,
+        headline_rows.join(",\n"),
+        rows.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_native.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

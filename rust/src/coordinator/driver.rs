@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 use crate::exec::{ExecLimits, Storage, Vm};
 use crate::ir::Program;
 use crate::kernels::{self, Preset};
+use crate::native::{NativeProgram, Tier};
 use crate::symbolic::{ContainerId, Sym};
 use crate::transforms::{Pipeline, PipelineReport, PrefetchPass, PtrIncPass};
 use crate::verify::{self, CheckSet, SafetyTier, VerifyReport};
@@ -106,6 +107,9 @@ pub struct RunOutcome {
     pub pipeline: Option<PipelineReport>,
     pub storage: crate::exec::Storage,
     pub wall: std::time::Duration,
+    /// The backend that actually executed (a `--backend native` request
+    /// falls back to [`Tier::Vm`] when the JIT is unavailable).
+    pub backend: Tier,
 }
 
 /// Stable prefix of verifier-refusal messages. The service daemon
@@ -146,6 +150,11 @@ pub struct CompiledKernel {
     pub tier: SafetyTier,
     /// The verifier's report (`None` under [`SafetyPolicy::Trusted`]).
     pub verify: Option<VerifyReport>,
+    /// JIT-compiled form of the same bytecode (`None` when the host or
+    /// program is outside what the native backend supports). Checked
+    /// bytecode compiles its `BoundsCheck` guards into branch-to-trap
+    /// stubs, so the checked/untrusted tier runs natively too.
+    pub native: Option<NativeProgram>,
 }
 
 impl CompiledKernel {
@@ -175,6 +184,30 @@ impl CompiledKernel {
         let t0 = std::time::Instant::now();
         let run = self.vm.run_limited(params, inputs, threads, limits)?;
         Ok((run.storage, t0.elapsed(), run.fuel_used))
+    }
+
+    /// [`CompiledKernel::execute_limited`] on a chosen backend. A
+    /// [`Tier::Native`] request silently degrades to the VM when the
+    /// artifact has no native form (non-x86-64 host, JIT probe failure,
+    /// unsupported program); the tier that actually ran is returned so
+    /// callers can report it.
+    pub fn execute_limited_tier(
+        &self,
+        backend: Tier,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+        limits: &ExecLimits,
+    ) -> Result<(Storage, std::time::Duration, u64, Tier)> {
+        if backend == Tier::Native {
+            if let Some(native) = &self.native {
+                let t0 = std::time::Instant::now();
+                let run = native.run_limited(&self.vm.prog, params, inputs, threads, limits)?;
+                return Ok((run.storage, t0.elapsed(), run.fuel_used, Tier::Native));
+            }
+        }
+        let (storage, wall, fuel) = self.execute_limited(params, inputs, threads, limits)?;
+        Ok((storage, wall, fuel, Tier::Vm))
     }
 }
 
@@ -277,6 +310,14 @@ pub fn compile_program_with(
             (vm, tier, Some(report))
         }
     };
+    // JIT the lowered bytecode whenever the host supports it. Failure is
+    // not an error — the artifact simply has no native form and every
+    // `Tier::Native` request degrades to the VM.
+    let native = if crate::native::available() {
+        NativeProgram::compile(&vm.prog).ok()
+    } else {
+        None
+    };
     Ok(CompiledKernel {
         name: program.name.clone(),
         program,
@@ -284,6 +325,7 @@ pub fn compile_program_with(
         vm,
         tier,
         verify: report,
+        native,
     })
 }
 
@@ -311,17 +353,33 @@ pub fn optimize_and_run_spec(
     preset: Preset,
     threads: usize,
 ) -> Result<RunOutcome> {
+    optimize_and_run_backend(name, spec, mem, preset, threads, Tier::Vm)
+}
+
+/// [`optimize_and_run_spec`] on a chosen execution backend
+/// (`--backend native|vm`). The returned [`RunOutcome::backend`] is the
+/// tier that actually ran.
+pub fn optimize_and_run_backend(
+    name: &str,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+    preset: Preset,
+    threads: usize,
+    backend: Tier,
+) -> Result<RunOutcome> {
     let kernel = kernels::resolve(name)?;
     let compiled = compile_program(kernel.program(), spec, mem)?;
     let params: Vec<(Sym, i64)> = kernel.params(preset)?;
     let inputs = kernel.inputs(&compiled.program, &params)?;
     let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
-    let (storage, wall) = compiled.execute(&params, &refs, threads)?;
+    let (storage, wall, _, ran_on) =
+        compiled.execute_limited_tier(backend, &params, &refs, threads, &ExecLimits::none())?;
     Ok(RunOutcome {
         program: compiled.program,
         pipeline: compiled.pipeline,
         storage,
         wall,
+        backend: ran_on,
     })
 }
 

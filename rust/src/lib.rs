@@ -26,6 +26,7 @@ pub mod ir;
 pub mod kernels;
 pub mod lowering;
 pub mod machine;
+pub mod native;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod service;

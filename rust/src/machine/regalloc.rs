@@ -234,9 +234,10 @@ fn pressure_of(block: &CodeBlock, range: std::ops::Range<usize>) -> LoopPressure
     }
 }
 
-/// (int uses, int def, float uses, float def) of an op.
+/// (int uses, int def, float uses, float def) of an op. Shared with the
+/// native JIT, which seeds its register pinning from this model.
 #[allow(clippy::type_complexity)]
-fn uses_defs(op: &Op) -> (Vec<u16>, Option<u16>, Vec<u16>, Option<u16>) {
+pub(crate) fn uses_defs(op: &Op) -> (Vec<u16>, Option<u16>, Vec<u16>, Option<u16>) {
     use Op::*;
     match *op {
         IConst { dst, .. } => (vec![], Some(dst), vec![], None),

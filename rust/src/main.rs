@@ -6,7 +6,10 @@
 //!            [--ptr-inc] [--prefetch]
 //!   silo run <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
 //!            [--ptr-inc] [--prefetch] [--preset=tiny|small|medium]
-//!            [--threads=N]
+//!            [--threads=N] [--backend=vm|native]
+//!            — --backend=native executes the JIT'd x86-64 code tier
+//!              (silently falls back to the VM on hosts without it;
+//!              the output line reports the tier that actually ran)
 //!   silo validate <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
 //!            [--ptr-inc] [--threads=N]
 //!   silo tune <kernel>                         — autotuner candidate table
@@ -15,10 +18,15 @@
 //!              NeedsCheck / ProvenOutOfBounds verdicts plus the
 //!              symbolic worst-case fuel bound (nonzero exit on a
 //!              provably out-of-bounds access)
+//!   silo verify <dir|file>... — sweep mode: verify every .silo file
+//!            under the given paths (directories recurse), one compact
+//!            proven/checked/rejected line each; exits nonzero only on
+//!            parse/compile errors, so CI can sweep the benign corpus
+//!            and the hostile corpus in one invocation
 //!   silo experiment <fig1|fig2|fig9|table1|fig10|autotune|all>
 //!   silo artifacts                             — list PJRT artifacts
 //!   silo serve [--addr=H:P] [--threads=N] [--cache-cap=N]
-//!            [--untrusted] [--fuel=N] [--wall-ms=N]
+//!            [--untrusted] [--fuel=N] [--wall-ms=N] [--backend=vm|native]
 //!            — the service daemon: POST /compile + /run/<id>, GET
 //!              /kernels /metrics /healthz, content-addressed LRU
 //!              schedule cache (default addr 127.0.0.1:7420).
@@ -27,7 +35,8 @@
 //!              unproven accesses) and meters every run with a fuel
 //!              budget and wall-clock cap
 //!   silo submit <file>.silo [--addr=H:P] [--pipeline=SPEC]
-//!            [--preset=tiny|small|medium] [--threads=N] [--check]
+//!            [--preset=tiny|small|medium] [--threads=N]
+//!            [--backend=vm|native] [--check]
 //!            — compile + run on a daemon; --check re-runs the program
 //!              locally (unoptimized) and compares outputs bitwise
 //!
@@ -41,6 +50,7 @@
 
 use silo::coordinator::{self, MemSchedules, OptConfig, PipelineSpec};
 use silo::kernels::Preset;
+use silo::native::Tier;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -112,6 +122,13 @@ impl Args {
             .and_then(|v| v.parse().ok())
             .unwrap_or(1)
     }
+
+    fn backend(&self) -> anyhow::Result<Tier> {
+        match self.value("--backend") {
+            Some(v) => Tier::parse(&v).map_err(|e| anyhow::anyhow!(e)),
+            None => Ok(Tier::Vm),
+        }
+    }
 }
 
 fn real_main() -> anyhow::Result<()> {
@@ -138,16 +155,18 @@ fn real_main() -> anyhow::Result<()> {
         }
         Some("run") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
-            let out = coordinator::optimize_and_run_spec(
+            let out = coordinator::optimize_and_run_backend(
                 name,
                 &args.spec(),
                 args.mem(),
                 args.preset()?,
                 args.threads(),
+                args.backend()?,
             )?;
             println!(
-                "{name}: executed in {:.3} ms ({} containers)",
+                "{name}: executed in {:.3} ms on the {} tier ({} containers)",
                 out.wall.as_secs_f64() * 1e3,
+                out.backend.as_str(),
                 out.storage.arrays.len()
             );
         }
@@ -174,6 +193,14 @@ fn real_main() -> anyhow::Result<()> {
         }
         Some("verify") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
+            // Directory targets (or several targets) switch to sweep mode:
+            // one compact verdict line per .silo file, for CI to run the
+            // whole corpus in a single invocation.
+            if args.positional.len() > 2
+                || std::path::Path::new(name.as_str()).is_dir()
+            {
+                return sweep_verify(&args.positional[1..], &args.spec(), args.mem());
+            }
             let kernel = silo::kernels::resolve(name)?;
             // Verify the program exactly as it would execute: after the
             // requested optimization pipeline (default: none).
@@ -228,6 +255,7 @@ fn real_main() -> anyhow::Result<()> {
                     .value("--wall-ms")
                     .and_then(|v| v.parse().ok())
                     .unwrap_or(defaults.wall_ms),
+                backend: args.backend()?,
                 ..defaults
             };
             let server = silo::service::Server::serve(&config)?;
@@ -260,6 +288,7 @@ fn real_main() -> anyhow::Result<()> {
             let run_req = silo::service::RunRequest {
                 preset: args.value("--preset").unwrap_or_else(|| "tiny".to_string()),
                 threads: args.threads(),
+                backend: args.value("--backend"),
                 ..silo::service::RunRequest::default()
             };
             let client = silo::service::Client::new(&addr);
@@ -296,8 +325,9 @@ fn real_main() -> anyhow::Result<()> {
                 .map(|f| format!(", {f} fuel"))
                 .unwrap_or_default();
             println!(
-                "ran {} preset on the daemon in {:.3} ms{fuel} — {} output container(s):",
-                run_req.preset, out.run.wall_ms,
+                "ran {} preset on the daemon's {} tier in {:.3} ms{fuel} — \
+                 {} output container(s):",
+                run_req.preset, out.run.backend, out.run.wall_ms,
                 out.run.outputs.len()
             );
             for (name, data) in &out.run.outputs {
@@ -314,6 +344,81 @@ fn real_main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `silo verify <dir|file>...` sweep: verify every `.silo` file under the
+/// given paths (directories recurse), one compact verdict line each —
+/// `proven`, `checked (N unproven)`, or `rejected (N provably oob)`.
+/// Rejections are *expected* for a hostile corpus, so only files that
+/// fail to parse or compile make the sweep exit nonzero.
+fn sweep_verify(
+    targets: &[String],
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+) -> anyhow::Result<()> {
+    fn collect(path: &std::path::Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+        if path.is_dir() {
+            for entry in std::fs::read_dir(path)? {
+                collect(&entry?.path(), out)?;
+            }
+        } else if path.extension().is_some_and(|e| e == "silo") {
+            out.push(path.to_path_buf());
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    for t in targets {
+        let p = std::path::Path::new(t);
+        if !p.exists() {
+            anyhow::bail!("no such file or directory: {t}");
+        }
+        if p.is_dir() {
+            collect(p, &mut files)?;
+        } else {
+            files.push(p.to_path_buf());
+        }
+    }
+    files.sort();
+    files.dedup();
+    if files.is_empty() {
+        anyhow::bail!("no .silo files under {}", targets.join(" "));
+    }
+    let (mut proven, mut checked, mut rejected, mut errors) = (0usize, 0usize, 0usize, 0usize);
+    for file in &files {
+        let path = file.display();
+        let program = match silo::kernels::resolve(&file.to_string_lossy())
+            .and_then(|k| coordinator::compile_program(k.program(), spec, mem))
+        {
+            Ok(compiled) => compiled.program,
+            Err(e) => {
+                errors += 1;
+                println!("{path}: error: {e:#}");
+                continue;
+            }
+        };
+        let report = silo::verify::verify_program(&program);
+        let oob = report.proven_oob().len();
+        let unproven = report.unproven().len() - oob;
+        if oob > 0 {
+            rejected += 1;
+            println!("{path}: rejected ({oob} provably out of bounds)");
+        } else if unproven > 0 {
+            checked += 1;
+            println!("{path}: checked ({unproven} unproven access(es))");
+        } else {
+            proven += 1;
+            println!("{path}: proven");
+        }
+    }
+    println!(
+        "verified {} file(s): {proven} proven, {checked} checked, {rejected} rejected, \
+         {errors} error(s)",
+        files.len()
+    );
+    if errors > 0 {
+        anyhow::bail!("{errors} file(s) failed to parse or compile");
+    }
+    Ok(())
+}
+
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
         "usage: silo <list|show|run|validate|tune|verify|experiment|artifacts|serve|submit> \
@@ -321,11 +426,15 @@ fn usage() -> anyhow::Error {
          kernels: a registered name (see `silo list`) or a .silo file path\n\
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
+         backend: --backend=vm|native on run/serve/submit (native = JIT'd x86-64 \
+         code tier, VM fallback elsewhere)\n\
          safety: `silo verify kernel [--pipeline=SPEC]` prints per-access bounds \
-         verdicts + the worst-case fuel bound\n\
+         verdicts + the worst-case fuel bound; `silo verify <dir>...` sweeps \
+         every .silo file under the paths\n\
          service: `silo serve [--addr=H:P --threads=N --cache-cap=N --untrusted \
-         --fuel=N --wall-ms=N]`, then\n\
-         `silo submit file.silo [--addr=H:P --pipeline=SPEC --preset=P --check]`\n\
+         --fuel=N --wall-ms=N --backend=B]`, then\n\
+         `silo submit file.silo [--addr=H:P --pipeline=SPEC --preset=P \
+         --backend=B --check]`\n\
          see rust/src/main.rs header for details"
     )
 }

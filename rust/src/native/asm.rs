@@ -1,0 +1,911 @@
+//! A minimal x86-64 instruction encoder for the JIT.
+//!
+//! Only the forms the bytecode compiler ([`super::emit`]) actually emits
+//! are supported: 64-bit GPR moves/ALU, scalar-double SSE2, rel32
+//! branches with label fixups, and `prefetcht0`. Every encoding here is
+//! pinned by golden-byte tests transcribed from GNU `as` + `objdump`
+//! output (see the `tests` module), so a regression in the encoder is a
+//! test failure, not a SIGILL.
+//!
+//! Register numbering follows the hardware: 0=rax 1=rcx 2=rdx 3=rbx
+//! 4=rsp 5=rbp 6=rsi 7=rdi 8..=15=r8..r15, and xmm0..xmm15 likewise.
+
+pub const RAX: u8 = 0;
+pub const RCX: u8 = 1;
+pub const RDX: u8 = 2;
+pub const RBX: u8 = 3;
+pub const RSP: u8 = 4;
+pub const RBP: u8 = 5;
+pub const RSI: u8 = 6;
+pub const RDI: u8 = 7;
+pub const R12: u8 = 12;
+pub const R13: u8 = 13;
+pub const R14: u8 = 14;
+pub const R15: u8 = 15;
+
+pub const XMM0: u8 = 0;
+pub const XMM1: u8 = 1;
+
+/// Condition codes (the low nibble of the `0F 8x` jcc opcodes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cc {
+    E = 0x4,
+    Ne = 0x5,
+    L = 0xC,
+    Le = 0xE,
+    G = 0xF,
+    Ge = 0xD,
+    S = 0x8,
+    Ns = 0x9,
+    A = 0x7,
+    Be = 0x6,
+    P = 0xA,
+}
+
+/// A forward-referenceable code position. rel32 branch sites record a
+/// fixup that [`Asm::finish`] patches once every label is bound.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Label(usize);
+
+pub struct Asm {
+    code: Vec<u8>,
+    /// (position of the rel32 immediate, target label)
+    fixups: Vec<(usize, Label)>,
+    labels: Vec<Option<usize>>,
+}
+
+impl Asm {
+    pub fn new() -> Asm {
+        Asm {
+            code: Vec::new(),
+            fixups: Vec::new(),
+            labels: Vec::new(),
+        }
+    }
+
+    pub fn here(&self) -> usize {
+        self.code.len()
+    }
+
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    pub fn bind(&mut self, l: Label) {
+        debug_assert!(self.labels[l.0].is_none(), "label bound twice");
+        self.labels[l.0] = Some(self.code.len());
+    }
+
+    /// Patch every recorded rel32 fixup and return the code bytes.
+    pub fn finish(self) -> Result<Vec<u8>, String> {
+        let mut code = self.code;
+        for (pos, l) in self.fixups {
+            let target = self.labels[l.0].ok_or("unbound label in emitted code")?;
+            let rel = target as i64 - (pos as i64 + 4);
+            let rel = i32::try_from(rel).map_err(|_| "branch displacement overflow")?;
+            code[pos..pos + 4].copy_from_slice(&rel.to_le_bytes());
+        }
+        Ok(code)
+    }
+
+    fn b(&mut self, byte: u8) {
+        self.code.push(byte);
+    }
+
+    fn b4(&mut self, v: i32) {
+        self.code.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// REX prefix. `w`: 64-bit operand; `r`/`x`/`b`: extension bits of
+    /// the modrm reg field, SIB index, and modrm rm / SIB base.
+    fn rex(&mut self, w: bool, r: u8, x: u8, b: u8) {
+        let mut v = 0x40u8;
+        if w {
+            v |= 8;
+        }
+        if r >= 8 {
+            v |= 4;
+        }
+        if x >= 8 {
+            v |= 2;
+        }
+        if b >= 8 {
+            v |= 1;
+        }
+        self.b(v);
+    }
+
+    /// REX only when one of the registers needs an extension bit (SSE
+    /// forms where REX.W is not wanted).
+    fn rex_opt(&mut self, r: u8, x: u8, b: u8) {
+        if r >= 8 || x >= 8 || b >= 8 {
+            self.rex(false, r, x, b);
+        }
+    }
+
+    fn modrm(&mut self, md: u8, reg: u8, rm: u8) {
+        self.b((md << 6) | ((reg & 7) << 3) | (rm & 7));
+    }
+
+    /// modrm + optional SIB + displacement for `[base + disp]`.
+    /// rsp/r12 bases force a SIB byte; rbp/r13 bases force at least a
+    /// disp8 (their mod=00 encodings mean RIP-relative / absolute).
+    fn mem(&mut self, reg: u8, base: u8, disp: i32) {
+        let b7 = base & 7;
+        let need_sib = b7 == 4;
+        let (md, small) = if disp == 0 && b7 != 5 {
+            (0u8, true)
+        } else if (-128..=127).contains(&disp) {
+            (1u8, true)
+        } else {
+            (2u8, false)
+        };
+        self.modrm(md, reg, if need_sib { 4 } else { base });
+        if need_sib {
+            self.b(0x24); // scale=0, index=none, base=rsp/r12
+        }
+        if md == 1 {
+            self.b(disp as u8);
+        } else if md == 2 || !small {
+            self.b4(disp);
+        }
+    }
+
+    /// modrm + SIB + displacement for `[base + index*8 + disp]`.
+    /// `index` must not be rsp (no-index encoding).
+    fn mem_sib(&mut self, reg: u8, base: u8, index: u8, disp: i32) {
+        debug_assert!(index & 7 != 4, "rsp cannot be an index");
+        let b7 = base & 7;
+        let (md, has8, has32) = if disp == 0 && b7 != 5 {
+            (0u8, false, false)
+        } else if (-128..=127).contains(&disp) {
+            (1u8, true, false)
+        } else {
+            (2u8, false, true)
+        };
+        self.modrm(md, reg, 4);
+        // scale=8 (bits 11), index, base.
+        self.b((3 << 6) | ((index & 7) << 3) | b7);
+        if has8 {
+            self.b(disp as u8);
+        } else if has32 {
+            self.b4(disp);
+        }
+    }
+
+    // ---- stack / control ----
+
+    pub fn push(&mut self, r: u8) {
+        if r >= 8 {
+            self.b(0x41);
+        }
+        self.b(0x50 + (r & 7));
+    }
+
+    pub fn pop(&mut self, r: u8) {
+        if r >= 8 {
+            self.b(0x41);
+        }
+        self.b(0x58 + (r & 7));
+    }
+
+    pub fn ret(&mut self) {
+        self.b(0xc3);
+    }
+
+    pub fn sub_rsp8(&mut self) {
+        self.code.extend_from_slice(&[0x48, 0x83, 0xec, 0x08]);
+    }
+
+    pub fn add_rsp8(&mut self) {
+        self.code.extend_from_slice(&[0x48, 0x83, 0xc4, 0x08]);
+    }
+
+    pub fn call(&mut self, r: u8) {
+        if r >= 8 {
+            self.b(0x41);
+        }
+        self.b(0xff);
+        self.modrm(3, 2, r);
+    }
+
+    pub fn jmp(&mut self, l: Label) {
+        self.b(0xe9);
+        self.fixups.push((self.code.len(), l));
+        self.b4(0);
+    }
+
+    pub fn jcc(&mut self, cc: Cc, l: Label) {
+        self.b(0x0f);
+        self.b(0x80 + cc as u8);
+        self.fixups.push((self.code.len(), l));
+        self.b4(0);
+    }
+
+    // ---- 64-bit moves ----
+
+    pub fn mov_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, src, 0, dst);
+        self.b(0x89);
+        self.modrm(3, src, dst);
+    }
+
+    /// mov dst, [base + disp]
+    pub fn mov_rm(&mut self, dst: u8, base: u8, disp: i32) {
+        self.rex(true, dst, 0, base);
+        self.b(0x8b);
+        self.mem(dst, base, disp);
+    }
+
+    /// mov [base + disp], src
+    pub fn mov_mr(&mut self, base: u8, disp: i32, src: u8) {
+        self.rex(true, src, 0, base);
+        self.b(0x89);
+        self.mem(src, base, disp);
+    }
+
+    /// movabs dst, imm64
+    pub fn mov_ri(&mut self, dst: u8, imm: i64) {
+        self.rex(true, 0, 0, dst);
+        self.b(0xb8 + (dst & 7));
+        self.code.extend_from_slice(&imm.to_le_bytes());
+    }
+
+    /// mov dst, [base + index*8 + disp]
+    pub fn mov_rm_sib(&mut self, dst: u8, base: u8, index: u8, disp: i32) {
+        self.rex(true, dst, index, base);
+        self.b(0x8b);
+        self.mem_sib(dst, base, index, disp);
+    }
+
+    /// mov [base + index*8 + disp], src
+    pub fn mov_mr_sib(&mut self, base: u8, index: u8, disp: i32, src: u8) {
+        self.rex(true, src, index, base);
+        self.b(0x89);
+        self.mem_sib(src, base, index, disp);
+    }
+
+    /// mov qword [base + disp], imm32 (sign-extended)
+    pub fn mov_mi32(&mut self, base: u8, disp: i32, imm: i32) {
+        self.rex(true, 0, 0, base);
+        self.b(0xc7);
+        self.mem(0, base, disp);
+        self.b4(imm);
+    }
+
+    // ---- 64-bit ALU ----
+
+    pub fn add_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, src, 0, dst);
+        self.b(0x01);
+        self.modrm(3, src, dst);
+    }
+
+    pub fn sub_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, src, 0, dst);
+        self.b(0x29);
+        self.modrm(3, src, dst);
+    }
+
+    pub fn imul_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, dst, 0, src);
+        self.b(0x0f);
+        self.b(0xaf);
+        self.modrm(3, dst, src);
+    }
+
+    pub fn xor_rr(&mut self, dst: u8, src: u8) {
+        self.rex(true, src, 0, dst);
+        self.b(0x31);
+        self.modrm(3, src, dst);
+    }
+
+    pub fn cmp_rr(&mut self, a: u8, b: u8) {
+        self.rex(true, b, 0, a);
+        self.b(0x39);
+        self.modrm(3, b, a);
+    }
+
+    pub fn test_rr(&mut self, a: u8, b: u8) {
+        self.rex(true, b, 0, a);
+        self.b(0x85);
+        self.modrm(3, b, a);
+    }
+
+    /// add dst, imm32 (sign-extended); uses the imm8 form when it fits.
+    pub fn add_ri(&mut self, dst: u8, imm: i32) {
+        self.alu_ri(0, dst, imm);
+    }
+
+    pub fn sub_ri(&mut self, dst: u8, imm: i32) {
+        self.alu_ri(5, dst, imm);
+    }
+
+    fn alu_ri(&mut self, op: u8, dst: u8, imm: i32) {
+        self.rex(true, 0, 0, dst);
+        if (-128..=127).contains(&imm) {
+            self.b(0x83);
+            self.modrm(3, op, dst);
+            self.b(imm as u8);
+        } else {
+            self.b(0x81);
+            self.modrm(3, op, dst);
+            self.b4(imm);
+        }
+    }
+
+    /// imul dst, src, imm32
+    pub fn imul_rri(&mut self, dst: u8, src: u8, imm: i32) {
+        self.rex(true, dst, 0, src);
+        if (-128..=127).contains(&imm) {
+            self.b(0x6b);
+            self.modrm(3, dst, src);
+            self.b(imm as u8);
+        } else {
+            self.b(0x69);
+            self.modrm(3, dst, src);
+            self.b4(imm);
+        }
+    }
+
+    /// sar r, imm8
+    pub fn sar_ri(&mut self, r: u8, imm: u8) {
+        self.rex(true, 0, 0, r);
+        self.b(0xc1);
+        self.modrm(3, 7, r);
+        self.b(imm);
+    }
+
+    /// shl r, 1
+    pub fn shl1(&mut self, r: u8) {
+        self.rex(true, 0, 0, r);
+        self.b(0xd1);
+        self.modrm(3, 4, r);
+    }
+
+    /// shr r, 1
+    pub fn shr1(&mut self, r: u8) {
+        self.rex(true, 0, 0, r);
+        self.b(0xd1);
+        self.modrm(3, 5, r);
+    }
+
+    pub fn cmovg(&mut self, dst: u8, src: u8) {
+        self.rex(true, dst, 0, src);
+        self.b(0x0f);
+        self.b(0x4f);
+        self.modrm(3, dst, src);
+    }
+
+    pub fn cmovl(&mut self, dst: u8, src: u8) {
+        self.rex(true, dst, 0, src);
+        self.b(0x0f);
+        self.b(0x4c);
+        self.modrm(3, dst, src);
+    }
+
+    /// sub qword [base + disp], 1 — the fuel decrement (sets SF).
+    pub fn sub_mem1(&mut self, base: u8, disp: i32) {
+        self.rex(true, 0, 0, base);
+        self.b(0x83);
+        self.mem(5, base, disp);
+        self.b(1);
+    }
+
+    // ---- scalar-double SSE2 ----
+
+    fn sse(&mut self, prefix: u8, op: u8, reg: u8, rm: u8) {
+        self.b(prefix);
+        self.rex_opt(reg, 0, rm);
+        self.b(0x0f);
+        self.b(op);
+        self.modrm(3, reg, rm);
+    }
+
+    /// movsd x, [base + disp]
+    pub fn movsd_xm(&mut self, x: u8, base: u8, disp: i32) {
+        self.b(0xf2);
+        self.rex_opt(x, 0, base);
+        self.b(0x0f);
+        self.b(0x10);
+        self.mem(x, base, disp);
+    }
+
+    /// movsd [base + disp], x
+    pub fn movsd_mx(&mut self, base: u8, disp: i32, x: u8) {
+        self.b(0xf2);
+        self.rex_opt(x, 0, base);
+        self.b(0x0f);
+        self.b(0x11);
+        self.mem(x, base, disp);
+    }
+
+    /// movsd x, [base + index*8 + disp]
+    pub fn movsd_xm_sib(&mut self, x: u8, base: u8, index: u8, disp: i32) {
+        self.b(0xf2);
+        self.rex_opt(x, index, base);
+        self.b(0x0f);
+        self.b(0x10);
+        self.mem_sib(x, base, index, disp);
+    }
+
+    /// movsd [base + index*8 + disp], x
+    pub fn movsd_mx_sib(&mut self, base: u8, index: u8, disp: i32, x: u8) {
+        self.b(0xf2);
+        self.rex_opt(x, index, base);
+        self.b(0x0f);
+        self.b(0x11);
+        self.mem_sib(x, base, index, disp);
+    }
+
+    pub fn addsd(&mut self, dst: u8, src: u8) {
+        self.sse(0xf2, 0x58, dst, src);
+    }
+
+    pub fn subsd(&mut self, dst: u8, src: u8) {
+        self.sse(0xf2, 0x5c, dst, src);
+    }
+
+    pub fn mulsd(&mut self, dst: u8, src: u8) {
+        self.sse(0xf2, 0x59, dst, src);
+    }
+
+    pub fn divsd(&mut self, dst: u8, src: u8) {
+        self.sse(0xf2, 0x5e, dst, src);
+    }
+
+    pub fn sqrtsd(&mut self, dst: u8, src: u8) {
+        self.sse(0xf2, 0x51, dst, src);
+    }
+
+    pub fn ucomisd(&mut self, a: u8, b: u8) {
+        self.sse(0x66, 0x2e, a, b);
+    }
+
+    pub fn xorpd(&mut self, dst: u8, src: u8) {
+        self.sse(0x66, 0x57, dst, src);
+    }
+
+    /// cvtsi2sd x, r64
+    pub fn cvtsi2sd(&mut self, x: u8, r: u8) {
+        self.b(0xf2);
+        self.rex(true, x, 0, r);
+        self.b(0x0f);
+        self.b(0x2a);
+        self.modrm(3, x, r);
+    }
+
+    /// cvtsd2ss x, x (round to f32)
+    pub fn cvtsd2ss(&mut self, dst: u8, src: u8) {
+        self.sse(0xf2, 0x5a, dst, src);
+    }
+
+    /// cvtss2sd x, x (widen back to f64)
+    pub fn cvtss2sd(&mut self, dst: u8, src: u8) {
+        self.sse(0xf3, 0x5a, dst, src);
+    }
+
+    /// prefetcht0 [base + index*8 + disp]
+    pub fn prefetcht0_sib(&mut self, base: u8, index: u8, disp: i32) {
+        self.rex_opt(0, index, base);
+        self.b(0x0f);
+        self.b(0x18);
+        self.mem_sib(1, base, index, disp);
+    }
+}
+
+impl Default for Asm {
+    fn default() -> Self {
+        Asm::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Golden bytes transcribed from `as` (GNU Binutils) + `objdump -d`,
+    //! assembled on this machine. Each case pins one encoder form.
+
+    use super::*;
+
+    fn enc(f: impl FnOnce(&mut Asm)) -> Vec<u8> {
+        let mut a = Asm::new();
+        f(&mut a);
+        a.finish().unwrap()
+    }
+
+    #[test]
+    fn prologue_epilogue() {
+        // push rbp/rbx/r12..r15; sub rsp,8; add rsp,8; pops; ret
+        let got = enc(|a| {
+            for &r in &[RBP, RBX, R12, R13, R14, R15] {
+                a.push(r);
+            }
+            a.sub_rsp8();
+            a.add_rsp8();
+            for &r in &[R15, R14, R13, R12, RBX, RBP] {
+                a.pop(r);
+            }
+            a.ret();
+        });
+        assert_eq!(
+            got,
+            vec![
+                0x55, 0x53, 0x41, 0x54, 0x41, 0x55, 0x41, 0x56, 0x41, 0x57, 0x48, 0x83, 0xec,
+                0x08, 0x48, 0x83, 0xc4, 0x08, 0x41, 0x5f, 0x41, 0x5e, 0x41, 0x5d, 0x41, 0x5c,
+                0x5b, 0x5d, 0xc3
+            ]
+        );
+    }
+
+    #[test]
+    fn mov_reg_reg() {
+        assert_eq!(enc(|a| a.mov_rr(RAX, RCX)), vec![0x48, 0x89, 0xc8]);
+        assert_eq!(enc(|a| a.mov_rr(8, R15)), vec![0x4d, 0x89, 0xf8]);
+        assert_eq!(enc(|a| a.mov_rr(RBP, RDI)), vec![0x48, 0x89, 0xfd]);
+        assert_eq!(enc(|a| a.mov_rr(RBX, 9)), vec![0x4c, 0x89, 0xcb]);
+    }
+
+    #[test]
+    fn mov_reg_mem() {
+        // r12 base forces SIB; rbp/r13 bases force disp8.
+        assert_eq!(enc(|a| a.mov_rm(RAX, R12, 0)), vec![0x49, 0x8b, 0x04, 0x24]);
+        assert_eq!(
+            enc(|a| a.mov_rm(RAX, R12, 8)),
+            vec![0x49, 0x8b, 0x44, 0x24, 0x08]
+        );
+        assert_eq!(
+            enc(|a| a.mov_rm(RCX, R12, 1024)),
+            vec![0x49, 0x8b, 0x8c, 0x24, 0x00, 0x04, 0x00, 0x00]
+        );
+        assert_eq!(enc(|a| a.mov_rm(RDX, RBP, 0)), vec![0x48, 0x8b, 0x55, 0x00]);
+        assert_eq!(enc(|a| a.mov_rm(RDX, RBP, 16)), vec![0x48, 0x8b, 0x55, 0x10]);
+        assert_eq!(
+            enc(|a| a.mov_rm(10, R13, 4096)),
+            vec![0x4d, 0x8b, 0x95, 0x00, 0x10, 0x00, 0x00]
+        );
+        assert_eq!(enc(|a| a.mov_rm(R15, RBP, 48)), vec![0x4c, 0x8b, 0x7d, 0x30]);
+    }
+
+    #[test]
+    fn mov_mem_reg() {
+        assert_eq!(enc(|a| a.mov_mr(R12, 0, RAX)), vec![0x49, 0x89, 0x04, 0x24]);
+        assert_eq!(
+            enc(|a| a.mov_mr(R12, 8, RCX)),
+            vec![0x49, 0x89, 0x4c, 0x24, 0x08]
+        );
+        assert_eq!(
+            enc(|a| a.mov_mr(RBP, 1024, 9)),
+            vec![0x4c, 0x89, 0x8d, 0x00, 0x04, 0x00, 0x00]
+        );
+        assert_eq!(enc(|a| a.mov_mr(R13, 0, RDX)), vec![0x49, 0x89, 0x55, 0x00]);
+    }
+
+    #[test]
+    fn mov_imm64() {
+        let mut want = vec![0x48, 0xb8];
+        want.extend_from_slice(&0x123456789abcdef0u64.to_le_bytes());
+        assert_eq!(enc(|a| a.mov_ri(RAX, 0x123456789abcdef0u64 as i64)), want);
+        let mut want = vec![0x48, 0xb9];
+        want.extend_from_slice(&(-1i64).to_le_bytes());
+        assert_eq!(enc(|a| a.mov_ri(RCX, -1)), want);
+        let mut want = vec![0x49, 0xbb];
+        want.extend_from_slice(&42i64.to_le_bytes());
+        assert_eq!(enc(|a| a.mov_ri(11, 42)), want);
+    }
+
+    #[test]
+    fn mov_sib() {
+        assert_eq!(
+            enc(|a| a.mov_rm_sib(RAX, RCX, RAX, 0)),
+            vec![0x48, 0x8b, 0x04, 0xc1]
+        );
+        assert_eq!(
+            enc(|a| a.mov_rm_sib(RDX, RCX, RAX, 64)),
+            vec![0x48, 0x8b, 0x54, 0xc1, 0x40]
+        );
+        assert_eq!(
+            enc(|a| a.mov_rm_sib(9, 8, 10, 0)),
+            vec![0x4f, 0x8b, 0x0c, 0xd0]
+        );
+        assert_eq!(
+            enc(|a| a.mov_rm_sib(RAX, R12, RCX, 0)),
+            vec![0x49, 0x8b, 0x04, 0xcc]
+        );
+        assert_eq!(
+            enc(|a| a.mov_rm_sib(RAX, RBP, RDX, 8)),
+            vec![0x48, 0x8b, 0x44, 0xd5, 0x08]
+        );
+        // r13 base forces disp8 even when disp == 0.
+        assert_eq!(
+            enc(|a| a.mov_rm_sib(RAX, R13, R15, 0)),
+            vec![0x4b, 0x8b, 0x44, 0xfd, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.mov_mr_sib(RCX, RAX, 0, RDX)),
+            vec![0x48, 0x89, 0x14, 0xc1]
+        );
+        assert_eq!(
+            enc(|a| a.mov_mr_sib(RCX, RAX, 64, 9)),
+            vec![0x4c, 0x89, 0x4c, 0xc1, 0x40]
+        );
+        assert_eq!(
+            enc(|a| a.mov_mr_sib(R12, 8, 0, RAX)),
+            vec![0x4b, 0x89, 0x04, 0xc4]
+        );
+        assert_eq!(
+            enc(|a| a.mov_mr_sib(R13, R15, 0, RDX)),
+            vec![0x4b, 0x89, 0x54, 0xfd, 0x00]
+        );
+    }
+
+    #[test]
+    fn alu_reg_reg() {
+        assert_eq!(enc(|a| a.add_rr(RAX, RCX)), vec![0x48, 0x01, 0xc8]);
+        assert_eq!(enc(|a| a.add_rr(8, R15)), vec![0x4d, 0x01, 0xf8]);
+        assert_eq!(enc(|a| a.sub_rr(RAX, RCX)), vec![0x48, 0x29, 0xc8]);
+        assert_eq!(enc(|a| a.imul_rr(RAX, RCX)), vec![0x48, 0x0f, 0xaf, 0xc1]);
+        assert_eq!(enc(|a| a.imul_rr(9, R12)), vec![0x4d, 0x0f, 0xaf, 0xcc]);
+        assert_eq!(enc(|a| a.xor_rr(RAX, RAX)), vec![0x48, 0x31, 0xc0]);
+        assert_eq!(enc(|a| a.xor_rr(10, 10)), vec![0x4d, 0x31, 0xd2]);
+        assert_eq!(enc(|a| a.cmp_rr(RAX, RCX)), vec![0x48, 0x39, 0xc8]);
+        assert_eq!(enc(|a| a.cmp_rr(R15, RBX)), vec![0x49, 0x39, 0xdf]);
+        assert_eq!(enc(|a| a.test_rr(RAX, RAX)), vec![0x48, 0x85, 0xc0]);
+        assert_eq!(enc(|a| a.test_rr(11, 11)), vec![0x4d, 0x85, 0xdb]);
+    }
+
+    #[test]
+    fn alu_reg_imm() {
+        assert_eq!(
+            enc(|a| a.add_ri(RAX, 1000)),
+            vec![0x48, 0x81, 0xc0, 0xe8, 0x03, 0x00, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.add_ri(9, -1000)),
+            vec![0x49, 0x81, 0xc1, 0x18, 0xfc, 0xff, 0xff]
+        );
+        assert_eq!(enc(|a| a.sub_ri(RAX, 123)), vec![0x48, 0x83, 0xe8, 0x7b]);
+        assert_eq!(enc(|a| a.add_ri(RAX, 127)), vec![0x48, 0x83, 0xc0, 0x7f]);
+        assert_eq!(enc(|a| a.add_ri(RAX, -128)), vec![0x48, 0x83, 0xc0, 0x80]);
+        assert_eq!(
+            enc(|a| a.imul_rri(RAX, RCX, 1000)),
+            vec![0x48, 0x69, 0xc1, 0xe8, 0x03, 0x00, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.imul_rri(9, 9, -7)),
+            vec![0x4d, 0x6b, 0xc9, 0xf9]
+        );
+    }
+
+    #[test]
+    fn unary_and_cmov() {
+        assert_eq!(enc(|a| a.sar_ri(RAX, 63)), vec![0x48, 0xc1, 0xf8, 0x3f]);
+        assert_eq!(enc(|a| a.sar_ri(9, 63)), vec![0x49, 0xc1, 0xf9, 0x3f]);
+        assert_eq!(enc(|a| a.shl1(RAX)), vec![0x48, 0xd1, 0xe0]);
+        assert_eq!(enc(|a| a.shr1(RAX)), vec![0x48, 0xd1, 0xe8]);
+        assert_eq!(enc(|a| a.shl1(10)), vec![0x49, 0xd1, 0xe2]);
+        assert_eq!(enc(|a| a.shr1(11)), vec![0x49, 0xd1, 0xeb]);
+        assert_eq!(enc(|a| a.cmovg(RAX, RCX)), vec![0x48, 0x0f, 0x4f, 0xc1]);
+        assert_eq!(enc(|a| a.cmovl(RAX, RCX)), vec![0x48, 0x0f, 0x4c, 0xc1]);
+        assert_eq!(enc(|a| a.cmovg(9, R12)), vec![0x4d, 0x0f, 0x4f, 0xcc]);
+        assert_eq!(enc(|a| a.cmovl(RBX, 8)), vec![0x49, 0x0f, 0x4c, 0xd8]);
+        assert_eq!(enc(|a| a.cmovg(RBX, 8)), vec![0x49, 0x0f, 0x4f, 0xd8]);
+        assert_eq!(enc(|a| a.cmovl(R15, RAX)), vec![0x4c, 0x0f, 0x4c, 0xf8]);
+    }
+
+    #[test]
+    fn control_flow() {
+        // jmp / all jcc forms to an immediately-following label → rel32 0.
+        let got = enc(|a| {
+            let l = a.label();
+            a.jmp(l);
+            for cc in [
+                Cc::E,
+                Cc::Ne,
+                Cc::L,
+                Cc::Le,
+                Cc::G,
+                Cc::Ge,
+                Cc::S,
+                Cc::Ns,
+                Cc::A,
+                Cc::Be,
+                Cc::P,
+            ] {
+                a.jcc(cc, l);
+            }
+            a.bind(l);
+        });
+        let mut want = vec![0xe9];
+        // label sits at the end; each site's rel32 = distance to it.
+        let end = 5 + 11 * 6;
+        want.extend_from_slice(&((end - 5) as i32).to_le_bytes());
+        for (i, op) in [
+            0x84u8, 0x85, 0x8c, 0x8e, 0x8f, 0x8d, 0x88, 0x89, 0x87, 0x86, 0x8a,
+        ]
+        .iter()
+        .enumerate()
+        {
+            want.push(0x0f);
+            want.push(*op);
+            let pos = 5 + i * 6 + 6;
+            want.extend_from_slice(&((end - pos) as i32).to_le_bytes());
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn backward_branch() {
+        let got = enc(|a| {
+            let l = a.label();
+            a.bind(l);
+            a.xor_rr(RAX, RAX); // 3 bytes
+            a.jmp(l);
+        });
+        // jmp rel32 back over 3 + 5 bytes.
+        let mut want = vec![0x48, 0x31, 0xc0, 0xe9];
+        want.extend_from_slice(&(-8i32).to_le_bytes());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn call_and_mem_rmw() {
+        assert_eq!(enc(|a| a.call(RAX)), vec![0xff, 0xd0]);
+        assert_eq!(enc(|a| a.call(11)), vec![0x41, 0xff, 0xd3]);
+        assert_eq!(enc(|a| a.sub_mem1(RSI, 0)), vec![0x48, 0x83, 0x2e, 0x01]);
+        assert_eq!(enc(|a| a.sub_mem1(9, 0)), vec![0x49, 0x83, 0x29, 0x01]);
+        assert_eq!(
+            enc(|a| a.sub_mem1(RBP, 0x30)),
+            vec![0x48, 0x83, 0x6d, 0x30, 0x01]
+        );
+        assert_eq!(
+            enc(|a| a.sub_mem1(R12, 0)),
+            vec![0x49, 0x83, 0x2c, 0x24, 0x01]
+        );
+        assert_eq!(
+            enc(|a| a.sub_mem1(R13, 8)),
+            vec![0x49, 0x83, 0x6d, 0x08, 0x01]
+        );
+        assert_eq!(
+            enc(|a| a.mov_mi32(RBP, 64, 4096)),
+            vec![0x48, 0xc7, 0x45, 0x40, 0x00, 0x10, 0x00, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.mov_mi32(R12, 8, -1)),
+            vec![0x49, 0xc7, 0x44, 0x24, 0x08, 0xff, 0xff, 0xff, 0xff]
+        );
+    }
+
+    #[test]
+    fn sse_moves() {
+        assert_eq!(
+            enc(|a| a.movsd_xm(XMM0, R13, 8)),
+            vec![0xf2, 0x41, 0x0f, 0x10, 0x45, 0x08]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_xm(XMM1, R13, 0)),
+            vec![0xf2, 0x41, 0x0f, 0x10, 0x4d, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_xm(XMM1, R13, 4096)),
+            vec![0xf2, 0x41, 0x0f, 0x10, 0x8d, 0x00, 0x10, 0x00, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_xm(7, RBP, 0)),
+            vec![0xf2, 0x0f, 0x10, 0x7d, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_mx(R13, 8, XMM0)),
+            vec![0xf2, 0x41, 0x0f, 0x11, 0x45, 0x08]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_mx(R13, 4096, 2)),
+            vec![0xf2, 0x41, 0x0f, 0x11, 0x95, 0x00, 0x10, 0x00, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_xm_sib(XMM0, RCX, RAX, 0)),
+            vec![0xf2, 0x0f, 0x10, 0x04, 0xc1]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_xm_sib(XMM0, RCX, RAX, 64)),
+            vec![0xf2, 0x0f, 0x10, 0x44, 0xc1, 0x40]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_xm_sib(5, R12, RCX, 16)),
+            vec![0xf2, 0x41, 0x0f, 0x10, 0x6c, 0xcc, 0x10]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_mx_sib(RCX, RAX, 0, XMM0)),
+            vec![0xf2, 0x0f, 0x11, 0x04, 0xc1]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_mx_sib(RCX, RAX, 64, XMM1)),
+            vec![0xf2, 0x0f, 0x11, 0x4c, 0xc1, 0x40]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_mx_sib(R12, RCX, 0, 5)),
+            vec![0xf2, 0x41, 0x0f, 0x11, 0x2c, 0xcc]
+        );
+        assert_eq!(
+            enc(|a| a.movsd_mx_sib(R13, R15, 0, XMM0)),
+            vec![0xf2, 0x43, 0x0f, 0x11, 0x44, 0xfd, 0x00]
+        );
+    }
+
+    #[test]
+    fn sse_arith() {
+        assert_eq!(enc(|a| a.addsd(XMM0, XMM1)), vec![0xf2, 0x0f, 0x58, 0xc1]);
+        assert_eq!(enc(|a| a.subsd(XMM0, XMM1)), vec![0xf2, 0x0f, 0x5c, 0xc1]);
+        assert_eq!(enc(|a| a.mulsd(XMM0, XMM1)), vec![0xf2, 0x0f, 0x59, 0xc1]);
+        assert_eq!(enc(|a| a.divsd(XMM0, XMM1)), vec![0xf2, 0x0f, 0x5e, 0xc1]);
+        assert_eq!(enc(|a| a.sqrtsd(XMM0, XMM1)), vec![0xf2, 0x0f, 0x51, 0xc1]);
+        assert_eq!(enc(|a| a.sqrtsd(XMM0, XMM0)), vec![0xf2, 0x0f, 0x51, 0xc0]);
+        assert_eq!(enc(|a| a.ucomisd(XMM0, XMM1)), vec![0x66, 0x0f, 0x2e, 0xc1]);
+        assert_eq!(
+            enc(|a| a.ucomisd(9, 8)),
+            vec![0x66, 0x45, 0x0f, 0x2e, 0xc8]
+        );
+        assert_eq!(enc(|a| a.xorpd(XMM1, XMM1)), vec![0x66, 0x0f, 0x57, 0xc9]);
+        assert_eq!(enc(|a| a.xorpd(XMM0, XMM0)), vec![0x66, 0x0f, 0x57, 0xc0]);
+    }
+
+    #[test]
+    fn sse_convert() {
+        assert_eq!(
+            enc(|a| a.cvtsi2sd(XMM0, RAX)),
+            vec![0xf2, 0x48, 0x0f, 0x2a, 0xc0]
+        );
+        assert_eq!(
+            enc(|a| a.cvtsi2sd(XMM0, 9)),
+            vec![0xf2, 0x49, 0x0f, 0x2a, 0xc1]
+        );
+        assert_eq!(
+            enc(|a| a.cvtsi2sd(XMM1, RBX)),
+            vec![0xf2, 0x48, 0x0f, 0x2a, 0xcb]
+        );
+        assert_eq!(
+            enc(|a| a.cvtsi2sd(XMM0, R15)),
+            vec![0xf2, 0x49, 0x0f, 0x2a, 0xc7]
+        );
+        assert_eq!(
+            enc(|a| a.cvtsd2ss(XMM0, XMM0)),
+            vec![0xf2, 0x0f, 0x5a, 0xc0]
+        );
+        assert_eq!(
+            enc(|a| a.cvtss2sd(XMM0, XMM0)),
+            vec![0xf3, 0x0f, 0x5a, 0xc0]
+        );
+    }
+
+    #[test]
+    fn prefetch() {
+        assert_eq!(
+            enc(|a| a.prefetcht0_sib(RCX, RAX, 0)),
+            vec![0x0f, 0x18, 0x0c, 0xc1]
+        );
+        assert_eq!(
+            enc(|a| a.prefetcht0_sib(RCX, RAX, 256)),
+            vec![0x0f, 0x18, 0x8c, 0xc1, 0x00, 0x01, 0x00, 0x00]
+        );
+        assert_eq!(
+            enc(|a| a.prefetcht0_sib(8, 9, 0)),
+            vec![0x43, 0x0f, 0x18, 0x0c, 0xc8]
+        );
+        assert_eq!(
+            enc(|a| a.prefetcht0_sib(RCX, 9, 0)),
+            vec![0x42, 0x0f, 0x18, 0x0c, 0xc9]
+        );
+        assert_eq!(
+            enc(|a| a.prefetcht0_sib(RAX, RCX, 64)),
+            vec![0x0f, 0x18, 0x4c, 0xc8, 0x40]
+        );
+    }
+
+    #[test]
+    fn unbound_label_is_error() {
+        let mut a = Asm::new();
+        let l = a.label();
+        a.jmp(l);
+        assert!(a.finish().is_err());
+    }
+}

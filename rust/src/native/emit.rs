@@ -1,0 +1,601 @@
+//! Compile one [`CodeBlock`] of lowered bytecode into an x86-64
+//! function.
+//!
+//! # ABI and register roles
+//!
+//! Each block becomes `extern "C" fn(*mut NativeCtx) -> i64` (return
+//! codes in [`super::runtime`]). Callee-saved registers carry the
+//! loop-invariant machine state so helper calls need no spills:
+//!
+//! | reg   | role                                  |
+//! |-------|---------------------------------------|
+//! | `rbp` | `*mut NativeCtx`                      |
+//! | `r12` | int register file base                |
+//! | `r13` | float register file base              |
+//! | `r14` | container base-pointer array          |
+//! | `rbx`, `r15` | pinned hot int virtual registers |
+//!
+//! `rax/rcx/rdx/rsi/rdi` and `xmm0/xmm1` are scratch within a single
+//! op. Prologue pushes all six callee-saved registers plus `sub rsp,8`,
+//! so `rsp ≡ 0 (mod 16)` at every helper call site, per the SysV ABI.
+//!
+//! # Pinning
+//!
+//! Up to two int virtual registers are held in `rbx`/`r15` for the
+//! whole block, chosen by loop-depth-weighted use counts over
+//! [`crate::machine::regalloc::uses_defs`] — the same use/def model the
+//! register-pressure estimator is built on, so the JIT's allocation is
+//! seeded from the paper's pressure analysis. Pinned values are loaded
+//! once in the prologue and flushed back in the shared epilogue, which
+//! every exit (fallthrough, `Halt`, and all trap stubs) funnels
+//! through — the VM-visible `Frame` state is identical on every path.
+//!
+//! # Trap stubs
+//!
+//! Bounds failures jump to a per-block out-of-line stub that stores the
+//! failing index, container length, and container id into the
+//! `NativeCtx` trap fields and returns [`RC_OOB`]; fuel and deadline
+//! stubs return their codes directly. No unwinding crosses the JIT
+//! boundary.
+
+use std::collections::HashMap;
+
+use crate::exec::values::DEADLINE_TICK;
+use crate::lowering::bytecode::Op;
+use crate::machine::regalloc::uses_defs;
+
+use super::asm::{Asm, Cc, Label, RAX, RBP, RBX, RCX, RDI, RDX, RSI, R12, R13, R14, R15, XMM0, XMM1};
+use super::runtime::{
+    nat_deadline_hit, nat_fexp, nat_ffloor, nat_flog2, nat_fmax, nat_fmin, nat_fpow,
+    nat_ifloordiv, nat_ilog2, nat_imod, nat_ipow, CTX_BASES, CTX_FLOATS, CTX_FUEL, CTX_INTS,
+    CTX_LENS, CTX_TICK, CTX_TRAP_CONT, CTX_TRAP_INDEX, CTX_TRAP_LEN, RC_FUEL, RC_OOB, RC_TIME,
+};
+
+/// Pinned int virtual registers → physical registers for one block.
+struct Pins {
+    map: HashMap<u16, u8>,
+}
+
+impl Pins {
+    fn of(&self, vreg: u16) -> Option<u8> {
+        self.map.get(&vreg).copied()
+    }
+}
+
+/// Pick up to two int vregs to pin, weighting each use by
+/// `4^loop-depth` so registers hot in inner flat loops win. Blocks
+/// without a flat loop (straight-line bound/stride/prefetch blocks) are
+/// executed once per invocation and skip pinning entirely.
+fn choose_pins(ops: &[Op]) -> Pins {
+    let mut map = HashMap::new();
+    if !ops.iter().any(|o| matches!(o, Op::LoopCond { .. })) {
+        return Pins { map };
+    }
+    // Depth profile: ops between a LoopCond and its exit are one level
+    // deeper.
+    let mut delta = vec![0i32; ops.len() + 1];
+    for (pc, op) in ops.iter().enumerate() {
+        if let Op::LoopCond { exit, .. } = op {
+            let exit = (*exit as usize).min(ops.len());
+            if exit > pc + 1 {
+                delta[pc + 1] += 1;
+                delta[exit] -= 1;
+            }
+        }
+    }
+    let mut weights: HashMap<u16, u64> = HashMap::new();
+    let mut depth = 0i32;
+    for (pc, op) in ops.iter().enumerate() {
+        depth += delta[pc];
+        let w = 1u64 << (2 * depth.clamp(0, 12)) as u32;
+        let (int_uses, int_def, _, _) = uses_defs(op);
+        for r in int_uses.into_iter().chain(int_def) {
+            *weights.entry(r).or_insert(0) += w;
+        }
+    }
+    let mut ranked: Vec<(u16, u64)> = weights.into_iter().collect();
+    ranked.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    for (vreg, phys) in ranked.into_iter().zip([RBX, R15]) {
+        map.insert(vreg.0, phys);
+    }
+    Pins { map }
+}
+
+fn disp_of(vreg: u16) -> i32 {
+    vreg as i32 * 8
+}
+
+struct BlockEmitter<'a> {
+    a: &'a mut Asm,
+    pins: Pins,
+    oob: Label,
+    fuel: Label,
+    time: Label,
+    oob_used: bool,
+    fuel_used: bool,
+    time_used: bool,
+}
+
+impl BlockEmitter<'_> {
+    /// Load int vreg into a physical scratch register.
+    fn iload(&mut self, phys: u8, vreg: u16) {
+        match self.pins.of(vreg) {
+            Some(p) => self.a.mov_rr(phys, p),
+            None => self.a.mov_rm(phys, R12, disp_of(vreg)),
+        }
+    }
+
+    /// Store a physical register into an int vreg.
+    fn istore(&mut self, vreg: u16, phys: u8) {
+        match self.pins.of(vreg) {
+            Some(p) => self.a.mov_rr(p, phys),
+            None => self.a.mov_mr(R12, disp_of(vreg), phys),
+        }
+    }
+
+    fn helper(&mut self, f: usize) {
+        self.a.mov_ri(RAX, f as i64);
+        self.a.call(RAX);
+    }
+
+    /// `rcx ← bases[cont]`.
+    fn load_base(&mut self, cont: u16) {
+        self.a.mov_rm(RCX, R14, cont as i32 * 8);
+    }
+
+    /// Effective index into `rax`: vreg `idx` plus a compile-time
+    /// element offset, matching the VM's `i!(idx) + off as i64`.
+    fn eff_index(&mut self, idx: u16, off: i32) {
+        self.iload(RAX, idx);
+        if off != 0 {
+            self.a.add_ri(RAX, off);
+        }
+    }
+
+    fn emit_op(&mut self, pc: usize, op: &Op, op_labels: &[Label]) -> Result<(), String> {
+        let a_ptr = |l: &[Label], i: usize| -> Result<Label, String> {
+            l.get(i)
+                .copied()
+                .ok_or_else(|| format!("branch target {i} outside block"))
+        };
+        match *op {
+            Op::IConst { dst, val } => {
+                self.a.mov_ri(RAX, val);
+                self.istore(dst, RAX);
+            }
+            Op::ICopy { dst, src } => {
+                self.iload(RAX, src);
+                self.istore(dst, RAX);
+            }
+            Op::IAdd { dst, a, b } => {
+                self.iload(RAX, a);
+                self.iload(RCX, b);
+                self.a.add_rr(RAX, RCX);
+                self.istore(dst, RAX);
+            }
+            Op::IAddImm { dst, a, imm } => {
+                self.iload(RAX, a);
+                match i32::try_from(imm) {
+                    Ok(v) => self.a.add_ri(RAX, v),
+                    Err(_) => {
+                        self.a.mov_ri(RCX, imm);
+                        self.a.add_rr(RAX, RCX);
+                    }
+                }
+                self.istore(dst, RAX);
+            }
+            Op::ISub { dst, a, b } => {
+                self.iload(RAX, a);
+                self.iload(RCX, b);
+                self.a.sub_rr(RAX, RCX);
+                self.istore(dst, RAX);
+            }
+            Op::IMul { dst, a, b } => {
+                self.iload(RAX, a);
+                self.iload(RCX, b);
+                self.a.imul_rr(RAX, RCX);
+                self.istore(dst, RAX);
+            }
+            Op::IMulImm { dst, a, imm } => {
+                self.iload(RCX, a);
+                match i32::try_from(imm) {
+                    Ok(v) => self.a.imul_rri(RAX, RCX, v),
+                    Err(_) => {
+                        self.a.mov_ri(RAX, imm);
+                        self.a.imul_rr(RAX, RCX);
+                    }
+                }
+                self.istore(dst, RAX);
+            }
+            Op::IFloorDiv { dst, a, b } => {
+                self.iload(RDI, a);
+                self.iload(RSI, b);
+                self.helper(nat_ifloordiv as usize);
+                self.istore(dst, RAX);
+            }
+            Op::IMod { dst, a, b } => {
+                self.iload(RDI, a);
+                self.iload(RSI, b);
+                self.helper(nat_imod as usize);
+                self.istore(dst, RAX);
+            }
+            Op::IMin { dst, a, b } => {
+                self.iload(RAX, a);
+                self.iload(RCX, b);
+                self.a.cmp_rr(RAX, RCX);
+                self.a.cmovg(RAX, RCX);
+                self.istore(dst, RAX);
+            }
+            Op::IMax { dst, a, b } => {
+                self.iload(RAX, a);
+                self.iload(RCX, b);
+                self.a.cmp_rr(RAX, RCX);
+                self.a.cmovl(RAX, RCX);
+                self.istore(dst, RAX);
+            }
+            Op::IPow { dst, a, exp } => {
+                self.iload(RDI, a);
+                self.a.mov_ri(RSI, exp as i64);
+                self.helper(nat_ipow as usize);
+                self.istore(dst, RAX);
+            }
+            Op::ILog2 { dst, a } => {
+                self.iload(RDI, a);
+                self.helper(nat_ilog2 as usize);
+                self.istore(dst, RAX);
+            }
+            Op::IAbs { dst, a } => {
+                // Branchless |x| (wrapping at i64::MIN, like release-mode
+                // `i64::abs`): t = x >> 63; (x ^ t) - t.
+                self.iload(RAX, a);
+                self.a.mov_rr(RCX, RAX);
+                self.a.sar_ri(RCX, 63);
+                self.a.xor_rr(RAX, RCX);
+                self.a.sub_rr(RAX, RCX);
+                self.istore(dst, RAX);
+            }
+
+            Op::FConst { dst, bits } => {
+                self.a.mov_ri(RAX, bits as i64);
+                self.a.mov_mr(R13, disp_of(dst), RAX);
+            }
+            Op::FCopy { dst, src } => {
+                self.a.mov_rm(RAX, R13, disp_of(src));
+                self.a.mov_mr(R13, disp_of(dst), RAX);
+            }
+            Op::FAdd { dst, a, b }
+            | Op::FSub { dst, a, b }
+            | Op::FMul { dst, a, b }
+            | Op::FDiv { dst, a, b } => {
+                self.a.movsd_xm(XMM0, R13, disp_of(a));
+                self.a.movsd_xm(XMM1, R13, disp_of(b));
+                match op {
+                    Op::FAdd { .. } => self.a.addsd(XMM0, XMM1),
+                    Op::FSub { .. } => self.a.subsd(XMM0, XMM1),
+                    Op::FMul { .. } => self.a.mulsd(XMM0, XMM1),
+                    _ => self.a.divsd(XMM0, XMM1),
+                }
+                self.a.movsd_mx(R13, disp_of(dst), XMM0);
+            }
+            Op::FMin { dst, a, b } | Op::FMax { dst, a, b } => {
+                // Rust f64::min/max are NaN-ignoring; SSE minsd/maxsd are
+                // not. Helper call keeps bitwise parity with the VM.
+                self.a.movsd_xm(XMM0, R13, disp_of(a));
+                self.a.movsd_xm(XMM1, R13, disp_of(b));
+                let f = if matches!(op, Op::FMin { .. }) {
+                    nat_fmin as usize
+                } else {
+                    nat_fmax as usize
+                };
+                self.helper(f);
+                self.a.movsd_mx(R13, disp_of(dst), XMM0);
+            }
+            Op::FPow { dst, a, exp } => {
+                self.a.movsd_xm(XMM0, R13, disp_of(a));
+                self.a.mov_ri(RDI, exp as i64);
+                self.helper(nat_fpow as usize);
+                self.a.movsd_mx(R13, disp_of(dst), XMM0);
+            }
+            Op::FExp { dst, a } | Op::FLog2 { dst, a } | Op::FFloor { dst, a } => {
+                self.a.movsd_xm(XMM0, R13, disp_of(a));
+                let f = match op {
+                    Op::FExp { .. } => nat_fexp as usize,
+                    Op::FLog2 { .. } => nat_flog2 as usize,
+                    _ => nat_ffloor as usize,
+                };
+                self.helper(f);
+                self.a.movsd_mx(R13, disp_of(dst), XMM0);
+            }
+            Op::FSqrt { dst, a } => {
+                // sqrtsd is IEEE-exact — same bits as Rust f64::sqrt.
+                self.a.movsd_xm(XMM0, R13, disp_of(a));
+                self.a.sqrtsd(XMM0, XMM0);
+                self.a.movsd_mx(R13, disp_of(dst), XMM0);
+            }
+            Op::FAbs { dst, a } => {
+                // Clear the sign bit via integer shift pair.
+                self.a.mov_rm(RAX, R13, disp_of(a));
+                self.a.shl1(RAX);
+                self.a.shr1(RAX);
+                self.a.mov_mr(R13, disp_of(dst), RAX);
+            }
+            Op::FSelect { dst, cond, a, b } => {
+                // VM: if cond > 0.0 { a } else { b }; NaN takes b
+                // (ucomisd sets PF on unordered, and `ja` is false).
+                self.a.movsd_xm(XMM0, R13, disp_of(cond));
+                self.a.xorpd(XMM1, XMM1);
+                self.a.ucomisd(XMM0, XMM1);
+                let take_a = self.a.label();
+                let done = self.a.label();
+                self.a.jcc(Cc::A, take_a);
+                self.a.mov_rm(RAX, R13, disp_of(b));
+                self.a.jmp(done);
+                self.a.bind(take_a);
+                self.a.mov_rm(RAX, R13, disp_of(a));
+                self.a.bind(done);
+                self.a.mov_mr(R13, disp_of(dst), RAX);
+            }
+            Op::FFromI { dst, src } => {
+                // cvtsi2sd rounds exactly like `i64 as f64`.
+                self.iload(RAX, src);
+                self.a.cvtsi2sd(XMM0, RAX);
+                self.a.movsd_mx(R13, disp_of(dst), XMM0);
+            }
+
+            Op::Load { dst, cont, idx } => {
+                self.eff_index(idx, 0);
+                self.load_base(cont);
+                self.a.mov_rm_sib(RDX, RCX, RAX, 0);
+                self.a.mov_mr(R13, disp_of(dst), RDX);
+            }
+            Op::LoadOff {
+                dst,
+                cont,
+                idx,
+                off,
+            } => {
+                self.iload(RAX, idx);
+                self.load_base(cont);
+                match off.checked_mul(8) {
+                    Some(d) => self.a.mov_rm_sib(RDX, RCX, RAX, d),
+                    None => {
+                        self.a.add_ri(RAX, off);
+                        self.a.mov_rm_sib(RDX, RCX, RAX, 0);
+                    }
+                }
+                self.a.mov_mr(R13, disp_of(dst), RDX);
+            }
+            Op::LoadAt2 { dst, cont, a, b } => {
+                self.iload(RAX, a);
+                self.iload(RDX, b);
+                self.a.add_rr(RAX, RDX);
+                self.load_base(cont);
+                self.a.mov_rm_sib(RDX, RCX, RAX, 0);
+                self.a.mov_mr(R13, disp_of(dst), RDX);
+            }
+            Op::Store { cont, idx, src } => {
+                self.eff_index(idx, 0);
+                self.load_base(cont);
+                self.a.mov_rm(RDX, R13, disp_of(src));
+                self.a.mov_mr_sib(RCX, RAX, 0, RDX);
+            }
+            Op::StoreOff {
+                cont,
+                idx,
+                off,
+                src,
+            } => {
+                self.iload(RAX, idx);
+                self.load_base(cont);
+                self.a.mov_rm(RDX, R13, disp_of(src));
+                match off.checked_mul(8) {
+                    Some(d) => self.a.mov_mr_sib(RCX, RAX, d, RDX),
+                    None => {
+                        self.a.add_ri(RAX, off);
+                        self.a.mov_mr_sib(RCX, RAX, 0, RDX);
+                    }
+                }
+            }
+            Op::StoreF32 { cont, idx, src } | Op::StoreOffF32 { cont, idx, src, .. } => {
+                let off = match *op {
+                    Op::StoreOffF32 { off, .. } => off,
+                    _ => 0,
+                };
+                self.iload(RAX, idx);
+                self.load_base(cont);
+                // Round through f32 exactly like `v as f32 as f64`.
+                self.a.movsd_xm(XMM0, R13, disp_of(src));
+                self.a.cvtsd2ss(XMM0, XMM0);
+                self.a.cvtss2sd(XMM0, XMM0);
+                match off.checked_mul(8) {
+                    Some(d) => self.a.movsd_mx_sib(RCX, RAX, d, XMM0),
+                    None => {
+                        self.a.add_ri(RAX, off);
+                        self.a.movsd_mx_sib(RCX, RAX, 0, XMM0);
+                    }
+                }
+            }
+            Op::Prefetch { cont, idx, .. } => {
+                // prefetcht0 never faults, so no bounds logic is needed;
+                // `write` hints are folded into t0 (no prefetchw on SSE2
+                // baseline).
+                self.iload(RAX, idx);
+                self.load_base(cont);
+                self.a.prefetcht0_sib(RCX, RAX, 0);
+            }
+            Op::BoundsCheck { cont, idx, off } => {
+                self.eff_index(idx, off);
+                self.a.mov_rm(RCX, RBP, CTX_LENS);
+                self.a.mov_rm(RCX, RCX, cont as i32 * 8);
+                let bad = self.a.label();
+                let good = self.a.label();
+                self.a.test_rr(RAX, RAX);
+                self.a.jcc(Cc::S, bad);
+                self.a.cmp_rr(RAX, RCX);
+                self.a.jcc(Cc::L, good);
+                self.a.bind(bad);
+                self.a.mov_ri(RDX, cont as i64);
+                self.oob_used = true;
+                let oob = self.oob;
+                self.a.jmp(oob);
+                self.a.bind(good);
+            }
+
+            Op::Jump { target } => {
+                let l = a_ptr(op_labels, target as usize)?;
+                self.a.jmp(l);
+            }
+            Op::LoopCond {
+                var,
+                end,
+                stride,
+                exit,
+            } => {
+                let exit_l = a_ptr(op_labels, exit as usize)?;
+                self.iload(RAX, var);
+                self.iload(RCX, end);
+                self.iload(RDX, stride);
+                // done = s == 0 || (s > 0 && v >= e) || (s < 0 && v <= e)
+                self.a.test_rr(RDX, RDX);
+                self.a.jcc(Cc::E, exit_l);
+                let neg = self.a.label();
+                let cont = self.a.label();
+                self.a.jcc(Cc::S, neg);
+                self.a.cmp_rr(RAX, RCX);
+                self.a.jcc(Cc::Ge, exit_l);
+                self.a.jmp(cont);
+                self.a.bind(neg);
+                self.a.cmp_rr(RAX, RCX);
+                self.a.jcc(Cc::Le, exit_l);
+                self.a.bind(cont);
+                // Back-edge: burn one fuel unit (trap when it goes
+                // negative), then the deadline tick countdown.
+                self.a.mov_rm(RSI, RBP, CTX_FUEL);
+                self.a.sub_mem1(RSI, 0);
+                self.fuel_used = true;
+                let fuel = self.fuel;
+                self.a.jcc(Cc::S, fuel);
+                self.a.sub_mem1(RBP, CTX_TICK);
+                let after = self.a.label();
+                self.a.jcc(Cc::Ne, after);
+                self.a.mov_ri(RAX, DEADLINE_TICK as i64);
+                self.a.mov_mr(RBP, CTX_TICK, RAX);
+                self.a.mov_rr(RDI, RBP);
+                self.helper(nat_deadline_hit as usize);
+                self.a.test_rr(RAX, RAX);
+                self.time_used = true;
+                let time = self.time;
+                self.a.jcc(Cc::Ne, time);
+                self.a.bind(after);
+            }
+            Op::GuardSkip { cond, skip } => {
+                // VM: if cond <= 0.0 skip the next `skip` ops. NaN compares
+                // unordered (PF set) and must NOT skip — test PF first.
+                let target = a_ptr(op_labels, pc + skip as usize + 1)?;
+                self.a.movsd_xm(XMM0, R13, disp_of(cond));
+                self.a.xorpd(XMM1, XMM1);
+                self.a.ucomisd(XMM0, XMM1);
+                let noskip = self.a.label();
+                self.a.jcc(Cc::P, noskip);
+                self.a.jcc(Cc::Be, target);
+                self.a.bind(noskip);
+            }
+            Op::Halt => {
+                let end = op_labels[op_labels.len() - 1];
+                self.a.jmp(end);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Emit one block as a complete function; returns its byte offset in
+/// the assembler's buffer. `Err` marks an op the backend cannot compile
+/// (the caller falls back to the VM tier).
+pub fn emit_block(a: &mut Asm, ops: &[Op]) -> Result<usize, String> {
+    let offset = a.here();
+    let pins = choose_pins(ops);
+
+    // Labels: one per op position plus the fallthrough end.
+    let op_labels: Vec<Label> = (0..=ops.len()).map(|_| a.label()).collect();
+    let epilogue = a.label();
+    let oob = a.label();
+    let fuel = a.label();
+    let time = a.label();
+
+    // Prologue.
+    for &r in &[RBP, RBX, R12, R13, R14, R15] {
+        a.push(r);
+    }
+    a.sub_rsp8();
+    a.mov_rr(RBP, RDI);
+    a.mov_rm(R12, RBP, CTX_INTS);
+    a.mov_rm(R13, RBP, CTX_FLOATS);
+    a.mov_rm(R14, RBP, CTX_BASES);
+    let pinned: Vec<(u16, u8)> = {
+        let mut v: Vec<(u16, u8)> = pins.map.iter().map(|(k, p)| (*k, *p)).collect();
+        v.sort();
+        v
+    };
+    for &(vreg, phys) in &pinned {
+        a.mov_rm(phys, R12, disp_of(vreg));
+    }
+
+    let mut e = BlockEmitter {
+        a,
+        pins,
+        oob,
+        fuel,
+        time,
+        oob_used: false,
+        fuel_used: false,
+        time_used: false,
+    };
+    for (pc, op) in ops.iter().enumerate() {
+        e.a.bind(op_labels[pc]);
+        e.emit_op(pc, op, &op_labels)?;
+    }
+    let (oob_used, fuel_used, time_used) = (e.oob_used, e.fuel_used, e.time_used);
+
+    // Fallthrough / Halt: return RC_OK through the shared epilogue.
+    a.bind(op_labels[ops.len()]);
+    a.xor_rr(RAX, RAX);
+    a.bind(epilogue);
+    for &(vreg, phys) in &pinned {
+        a.mov_mr(R12, disp_of(vreg), phys);
+    }
+    a.add_rsp8();
+    for &r in &[R15, R14, R13, R12, RBX, RBP] {
+        a.pop(r);
+    }
+    a.ret();
+
+    // Trap stubs (only when referenced; unreferenced labels stay bound
+    // at a dead position for `finish`).
+    if oob_used {
+        a.bind(oob);
+        // rax = failing index, rcx = len, rdx = container id.
+        a.mov_mr(RBP, CTX_TRAP_INDEX, RAX);
+        a.mov_mr(RBP, CTX_TRAP_LEN, RCX);
+        a.mov_mr(RBP, CTX_TRAP_CONT, RDX);
+        a.mov_ri(RAX, RC_OOB);
+        a.jmp(epilogue);
+    } else {
+        a.bind(oob);
+    }
+    if fuel_used {
+        a.bind(fuel);
+        a.mov_ri(RAX, RC_FUEL);
+        a.jmp(epilogue);
+    } else {
+        a.bind(fuel);
+    }
+    if time_used {
+        a.bind(time);
+        a.mov_ri(RAX, RC_TIME);
+        a.jmp(epilogue);
+    } else {
+        a.bind(time);
+    }
+    Ok(offset)
+}

@@ -1,0 +1,499 @@
+//! The native program: compiled blocks plus a tree walker that mirrors
+//! [`crate::exec::vm`] step for step.
+//!
+//! The loop *tree* (bounds evaluation, sequential/DOALL/DOACROSS
+//! dispatch, fuel sharing, privatization) stays in Rust and reuses the
+//! VM's `Frame`; only the flat bytecode blocks — where all the
+//! iteration time goes — run as machine code. This keeps the two tiers'
+//! observable semantics identical by construction: same iteration
+//! order, same fuel accounting, same trap kinds and payloads, same
+//! parallel synchronization (the DOALL chunking and DOACROSS
+//! wait/release protocol are literal mirrors of `exec::parallel`).
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+use anyhow::Result;
+
+use crate::exec::values::{Frame, Storage};
+use crate::exec::vm::{ExecLimits, VmRun};
+use crate::exec::Trap;
+use crate::lowering::bytecode::{CodeBlock, ExecNode, ExecProgram, ExecSchedule, LoopExec};
+use crate::symbolic::{ContainerId, Sym};
+
+use super::asm::Asm;
+use super::emit::emit_block;
+use super::mem::ExecBuf;
+use super::runtime::{BlockFn, NativeCtx, RC_FUEL, RC_OK, RC_OOB, RC_TIME};
+
+/// Sentinel for an empty block: skipped at run time instead of paying a
+/// call into a function that would do nothing (the VM's interpreter
+/// loop falls straight through on empty op lists).
+const NO_BLOCK: usize = usize::MAX;
+
+/// Mirror of [`ExecNode`] with blocks resolved to function indices.
+enum NNode {
+    Code(usize),
+    Loop(Box<NLoop>),
+}
+
+/// Mirror of [`LoopExec`].
+struct NLoop {
+    var_reg: u16,
+    start: usize,
+    start_reg: u16,
+    end: usize,
+    end_reg: u16,
+    stride: usize,
+    stride_reg: u16,
+    schedule: ExecSchedule,
+    body: Vec<NNode>,
+    pre_body: usize,
+    prefetch: usize,
+    post_body: usize,
+    post_loop: usize,
+}
+
+/// A fully-compiled native program. Holds the executable buffer for its
+/// lifetime; the block function pointers index into it.
+pub struct NativeProgram {
+    fns: Vec<BlockFn>,
+    root: Vec<NNode>,
+    _buf: ExecBuf,
+}
+
+struct Compiler {
+    asm: Asm,
+    offsets: Vec<usize>,
+}
+
+impl Compiler {
+    fn block(&mut self, b: &CodeBlock) -> Result<usize, String> {
+        if b.ops.is_empty() {
+            return Ok(NO_BLOCK);
+        }
+        let off = emit_block(&mut self.asm, &b.ops)?;
+        self.offsets.push(off);
+        Ok(self.offsets.len() - 1)
+    }
+
+    fn nodes(&mut self, nodes: &[ExecNode]) -> Result<Vec<NNode>, String> {
+        nodes.iter().map(|n| self.node(n)).collect()
+    }
+
+    fn node(&mut self, n: &ExecNode) -> Result<NNode, String> {
+        match n {
+            ExecNode::Code(b) => Ok(NNode::Code(self.block(b)?)),
+            ExecNode::Loop(l) => Ok(NNode::Loop(Box::new(self.tree_loop(l)?))),
+        }
+    }
+
+    fn tree_loop(&mut self, l: &LoopExec) -> Result<NLoop, String> {
+        Ok(NLoop {
+            var_reg: l.var_reg,
+            start: self.block(&l.start)?,
+            start_reg: l.start_reg,
+            end: self.block(&l.end)?,
+            end_reg: l.end_reg,
+            stride: self.block(&l.stride)?,
+            stride_reg: l.stride_reg,
+            schedule: l.schedule.clone(),
+            body: self.nodes(&l.body)?,
+            pre_body: self.block(&l.pre_body)?,
+            prefetch: self.block(&l.prefetch)?,
+            post_body: self.block(&l.post_body)?,
+            post_loop: self.block(&l.post_loop)?,
+        })
+    }
+}
+
+impl NativeProgram {
+    /// Compile every block of `prog` into one executable buffer.
+    /// `Err` means the program (or host) is outside what the backend
+    /// supports — callers fall back to the VM tier.
+    pub fn compile(prog: &ExecProgram) -> Result<NativeProgram, String> {
+        if !super::available() {
+            return Err("native tier unavailable on this host".into());
+        }
+        let mut c = Compiler {
+            asm: Asm::new(),
+            offsets: Vec::new(),
+        };
+        let root = c.nodes(&prog.root)?;
+        let Compiler { asm, offsets } = c;
+        if offsets.is_empty() {
+            // Degenerate but valid: a program with no code at all.
+            return Ok(NativeProgram {
+                fns: Vec::new(),
+                root,
+                _buf: ExecBuf::map(&[0xc3])?,
+            });
+        }
+        let code = asm.finish()?;
+        let buf = ExecBuf::map(&code)?;
+        let fns = offsets
+            .iter()
+            .map(|&off| unsafe { std::mem::transmute::<*const u8, BlockFn>(buf.at(off)) })
+            .collect();
+        Ok(NativeProgram {
+            fns,
+            root,
+            _buf: buf,
+        })
+    }
+
+    /// Run under limits — the native counterpart of
+    /// `Vm::run_limited`, with identical storage allocation, fuel
+    /// accounting, and trap surfacing (including the container-name
+    /// context on bounds traps).
+    pub fn run_limited(
+        &self,
+        prog: &ExecProgram,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+        limits: &ExecLimits,
+    ) -> Result<VmRun> {
+        let mut storage = Storage::allocate(prog, params)?;
+        for (c, data) in inputs {
+            storage.set(*c, data)?;
+        }
+        let lens: Vec<usize> = storage.arrays.iter().map(|a| a.len()).collect();
+        let mut frame = Frame::new(prog, &mut storage, params);
+        let initial_fuel = match limits.fuel {
+            Some(f) => {
+                frame.metered = true;
+                i64::try_from(f).unwrap_or(i64::MAX).max(1)
+            }
+            None => i64::MAX,
+        };
+        frame.fuel = initial_fuel;
+        frame.deadline = limits.wall.map(|w| std::time::Instant::now() + w);
+        let res = self.exec_nnodes(prog, &self.root, &mut frame, &lens, threads);
+        let fuel_used = initial_fuel.saturating_sub(frame.fuel.max(0)) as u64;
+        drop(frame);
+        match res {
+            Ok(()) => Ok(VmRun { storage, fuel_used }),
+            Err(trap @ Trap::OutOfBounds { cont, .. }) => {
+                let name = prog
+                    .containers
+                    .get(cont as usize)
+                    .map(|c| c.name.clone())
+                    .unwrap_or_else(|| format!("#{cont}"));
+                Err(anyhow::Error::new(trap).context(format!("in container `{name}`")))
+            }
+            Err(trap) => Err(anyhow::Error::new(trap)),
+        }
+    }
+
+    /// Invoke one compiled block on `frame`.
+    fn call(&self, idx: usize, frame: &mut Frame) -> Result<(), Trap> {
+        if idx == NO_BLOCK {
+            return Ok(());
+        }
+        let mut ctx = NativeCtx {
+            ints: frame.ints.as_mut_ptr(),
+            floats: frame.floats.as_mut_ptr(),
+            bases: frame.bases.as_ptr(),
+            lens: frame.lens.as_ptr(),
+            fuel: &mut frame.fuel,
+            deadline: &frame.deadline as *const Option<std::time::Instant> as *const u8,
+            tick: frame.tick as i64,
+            trap_cont: 0,
+            trap_index: 0,
+            trap_len: 0,
+        };
+        // Safety: the block was compiled for this program shape; all
+        // pointers are live for the duration of the call, and the
+        // emitted code only indexes register files within `n_int` /
+        // `n_float` and containers through the checked `bases`/`lens`.
+        let rc = unsafe { (self.fns[idx])(&mut ctx) };
+        frame.tick = ctx.tick as u32;
+        match rc {
+            RC_OK => Ok(()),
+            RC_OOB => Err(Trap::OutOfBounds {
+                cont: ctx.trap_cont as u16,
+                index: ctx.trap_index,
+                len: ctx.trap_len as usize,
+            }),
+            RC_FUEL => Err(Trap::FuelExhausted),
+            RC_TIME => Err(Trap::TimeLimit),
+            other => unreachable!("native block returned unknown code {other}"),
+        }
+    }
+
+    fn exec_nnodes(
+        &self,
+        prog: &ExecProgram,
+        nodes: &[NNode],
+        frame: &mut Frame,
+        lens: &[usize],
+        threads: usize,
+    ) -> Result<(), Trap> {
+        for n in nodes {
+            match n {
+                NNode::Code(idx) => self.call(*idx, frame)?,
+                NNode::Loop(l) => self.exec_loop(prog, l, frame, lens, threads)?,
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_loop(
+        &self,
+        prog: &ExecProgram,
+        l: &NLoop,
+        frame: &mut Frame,
+        lens: &[usize],
+        threads: usize,
+    ) -> Result<(), Trap> {
+        self.call(l.start, frame)?;
+        let start_val = frame.ints[l.start_reg as usize];
+        self.call(l.end, frame)?;
+        let end_val = frame.ints[l.end_reg as usize];
+
+        let effective_threads = match l.schedule {
+            ExecSchedule::Seq => 1,
+            _ => threads,
+        };
+
+        if effective_threads <= 1 {
+            let mut v = start_val;
+            loop {
+                frame.ints[l.var_reg as usize] = v;
+                self.call(l.stride, frame)?;
+                let s = frame.ints[l.stride_reg as usize];
+                if s == 0 || (s > 0 && v >= end_val) || (s < 0 && v <= end_val) {
+                    break;
+                }
+                frame.backedge()?;
+                self.call(l.pre_body, frame)?;
+                self.call(l.prefetch, frame)?;
+                self.exec_nnodes(prog, &l.body, frame, lens, threads)?;
+                self.call(l.post_body, frame)?;
+                v += s;
+            }
+            self.call(l.post_loop, frame)?;
+            return Ok(());
+        }
+
+        match &l.schedule {
+            ExecSchedule::Par => {
+                self.run_par(prog, l, frame, lens, start_val, end_val, threads)?;
+                self.call(l.post_loop, frame)?;
+            }
+            ExecSchedule::Doacross {
+                waits,
+                release_after,
+            } => {
+                self.run_doacross(
+                    prog,
+                    l,
+                    frame,
+                    lens,
+                    start_val,
+                    end_val,
+                    threads,
+                    waits,
+                    *release_after,
+                )?;
+                self.call(l.post_loop, frame)?;
+            }
+            ExecSchedule::Seq => unreachable!(),
+        }
+        Ok(())
+    }
+
+    /// Mirror of `exec::parallel::stride_and_trip_count`.
+    fn stride_and_trip_count(
+        &self,
+        l: &NLoop,
+        frame: &mut Frame,
+        start_val: i64,
+        end_val: i64,
+    ) -> Result<(i64, usize), Trap> {
+        frame.ints[l.var_reg as usize] = start_val;
+        self.call(l.stride, frame)?;
+        let s = frame.ints[l.stride_reg as usize];
+        let count: u128 = if s > 0 && start_val < end_val {
+            let span = (end_val as i128 - start_val as i128) as u128;
+            span.div_ceil(s as u128)
+        } else if s < 0 && start_val > end_val {
+            let span = (start_val as i128 - end_val as i128) as u128;
+            span.div_ceil((s as i128).unsigned_abs())
+        } else {
+            0
+        };
+        Ok((s, usize::try_from(count).unwrap_or(usize::MAX)))
+    }
+
+    /// Mirror of `exec::parallel::run_par` (DOALL), calling compiled
+    /// blocks instead of the interpreter.
+    #[allow(clippy::too_many_arguments)]
+    fn run_par(
+        &self,
+        prog: &ExecProgram,
+        l: &NLoop,
+        frame: &mut Frame,
+        lens: &[usize],
+        start_val: i64,
+        end_val: i64,
+        threads: usize,
+    ) -> Result<(), Trap> {
+        let (s, count) = self.stride_and_trip_count(l, frame, start_val, end_val)?;
+        if count == 0 {
+            return Ok(());
+        }
+        let nthreads = threads.min(count).max(1);
+        let chunk = count.div_ceil(nthreads);
+        let share = fuel_share(frame, nthreads);
+        let mut results: Vec<Result<i64, Trap>> = Vec::new();
+        let mut handed_out = 0usize;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for t in 0..nthreads {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(count);
+                if lo >= hi {
+                    continue;
+                }
+                let mut my_frame = frame.fork(prog, lens);
+                my_frame.fuel = share;
+                handed_out += 1;
+                handles.push(scope.spawn(move || -> Result<i64, Trap> {
+                    for idx in lo..hi {
+                        let v = start_val + (idx as i64) * s;
+                        my_frame.ints[l.var_reg as usize] = v;
+                        my_frame.backedge()?;
+                        self.call(l.pre_body, &mut my_frame)?;
+                        self.call(l.prefetch, &mut my_frame)?;
+                        self.exec_nnodes(prog, &l.body, &mut my_frame, lens, 1)?;
+                        self.call(l.post_body, &mut my_frame)?;
+                    }
+                    Ok(my_frame.fuel)
+                }));
+            }
+            for h in handles {
+                results.push(h.join().expect("parallel worker panicked"));
+            }
+        });
+        settle(frame, share, handed_out, results)
+    }
+
+    /// Mirror of `exec::parallel::run_doacross`: round-robin iteration
+    /// assignment with per-iteration release flags and abort polling.
+    #[allow(clippy::too_many_arguments)]
+    fn run_doacross(
+        &self,
+        prog: &ExecProgram,
+        l: &NLoop,
+        frame: &mut Frame,
+        lens: &[usize],
+        start_val: i64,
+        end_val: i64,
+        threads: usize,
+        waits: &[(usize, i64)],
+        release_after: Option<usize>,
+    ) -> Result<(), Trap> {
+        let (s, count) = self.stride_and_trip_count(l, frame, start_val, end_val)?;
+        if count == 0 {
+            return Ok(());
+        }
+        let nthreads = threads.min(count).max(1);
+        let flags: Vec<AtomicU8> = (0..count).map(|_| AtomicU8::new(0)).collect();
+        let flags = &flags;
+        let aborted = AtomicBool::new(false);
+        let aborted = &aborted;
+        let share = fuel_share(frame, nthreads);
+        let mut results: Vec<Result<i64, Trap>> = Vec::new();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for tid in 0..nthreads {
+                let mut my_frame = frame.fork(prog, lens);
+                my_frame.fuel = share;
+                handles.push(scope.spawn(move || -> Result<i64, Trap> {
+                    let mut t = tid;
+                    let mut run = || -> Result<i64, Trap> {
+                        while t < count {
+                            let v = start_val + (t as i64) * s;
+                            my_frame.ints[l.var_reg as usize] = v;
+                            my_frame.backedge()?;
+                            self.call(l.pre_body, &mut my_frame)?;
+                            self.call(l.prefetch, &mut my_frame)?;
+                            for (ei, node) in l.body.iter().enumerate() {
+                                for (w_elem, delta) in waits {
+                                    if *w_elem == ei && t as i64 - delta >= 0 {
+                                        let target = t - *delta as usize;
+                                        while flags[target].load(Ordering::Acquire) == 0 {
+                                            if aborted.load(Ordering::Acquire) {
+                                                return Ok(my_frame.fuel);
+                                            }
+                                            std::thread::yield_now();
+                                        }
+                                    }
+                                }
+                                self.exec_nnodes(
+                                    prog,
+                                    std::slice::from_ref(node),
+                                    &mut my_frame,
+                                    lens,
+                                    1,
+                                )?;
+                                if release_after == Some(ei) {
+                                    flags[t].store(1, Ordering::Release);
+                                }
+                            }
+                            self.call(l.post_body, &mut my_frame)?;
+                            if release_after.is_none() {
+                                flags[t].store(1, Ordering::Release);
+                            }
+                            t += nthreads;
+                        }
+                        Ok(my_frame.fuel)
+                    };
+                    let out = run();
+                    if out.is_err() {
+                        aborted.store(true, Ordering::Release);
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                results.push(h.join().expect("doacross worker panicked"));
+            }
+        });
+        settle(frame, share, nthreads, results)
+    }
+}
+
+/// Mirror of `exec::parallel::fuel_share`.
+fn fuel_share(frame: &Frame, nthreads: usize) -> i64 {
+    if frame.metered {
+        frame.fuel.max(0) / nthreads as i64
+    } else {
+        i64::MAX
+    }
+}
+
+/// Mirror of `exec::parallel::settle`.
+fn settle(
+    frame: &mut Frame,
+    share: i64,
+    shares_handed_out: usize,
+    results: Vec<Result<i64, Trap>>,
+) -> Result<(), Trap> {
+    if frame.metered {
+        let distributed = share.saturating_mul(shares_handed_out as i64);
+        let mut remaining = frame.fuel.saturating_sub(distributed);
+        for r in &results {
+            if let Ok(leftover) = r {
+                remaining = remaining.saturating_add((*leftover).max(0));
+            }
+        }
+        frame.fuel = remaining;
+    }
+    for r in results {
+        r?;
+    }
+    Ok(())
+}

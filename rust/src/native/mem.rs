@@ -1,0 +1,151 @@
+//! Executable memory for the JIT: an mmap'd buffer with a strict W^X
+//! lifecycle, implemented with raw Linux syscalls so the crate stays
+//! std-only (no libc dependency).
+//!
+//! Protocol: `mmap(PROT_READ|PROT_WRITE)` → copy code bytes →
+//! `mprotect(PROT_READ|PROT_EXEC)` → execute. The buffer is never
+//! writable and executable at the same time, and `munmap` runs on drop.
+//! Every failure is surfaced as `Err(String)` so callers can fall back
+//! to the VM tier instead of aborting.
+
+use std::arch::asm;
+
+const SYS_MMAP: i64 = 9;
+const SYS_MPROTECT: i64 = 10;
+const SYS_MUNMAP: i64 = 11;
+
+const PROT_READ: i64 = 1;
+const PROT_WRITE: i64 = 2;
+const PROT_EXEC: i64 = 4;
+const MAP_PRIVATE: i64 = 2;
+const MAP_ANONYMOUS: i64 = 0x20;
+
+const PAGE: usize = 4096;
+
+/// `syscall` returns a negative errno in rax on failure; the kernel
+/// reserves the top 4095 values of the address space for that encoding.
+fn syscall_failed(ret: i64) -> Option<i64> {
+    if (ret as u64) >= (-4095i64) as u64 {
+        Some(-ret)
+    } else {
+        None
+    }
+}
+
+#[inline]
+unsafe fn sys3(n: i64, a: i64, b: i64, c: i64) -> i64 {
+    let ret: i64;
+    asm!(
+        "syscall",
+        inlateout("rax") n => ret,
+        in("rdi") a,
+        in("rsi") b,
+        in("rdx") c,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+#[inline]
+unsafe fn sys6(n: i64, a: i64, b: i64, c: i64, d: i64, e: i64, f: i64) -> i64 {
+    let ret: i64;
+    asm!(
+        "syscall",
+        inlateout("rax") n => ret,
+        in("rdi") a,
+        in("rsi") b,
+        in("rdx") c,
+        in("r10") d,
+        in("r8") e,
+        in("r9") f,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack),
+    );
+    ret
+}
+
+/// An executable code buffer. Immutable (RX) once constructed.
+pub struct ExecBuf {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The mapping is read+execute only after construction and freed only in
+// `drop`; sharing the raw pointer across threads is sound.
+unsafe impl Send for ExecBuf {}
+unsafe impl Sync for ExecBuf {}
+
+impl ExecBuf {
+    /// Map `code` into fresh executable memory (W^X: written while RW,
+    /// flipped to RX before the pointer is ever handed out).
+    pub fn map(code: &[u8]) -> Result<ExecBuf, String> {
+        if code.is_empty() {
+            return Err("empty code buffer".into());
+        }
+        let len = code.len().div_ceil(PAGE) * PAGE;
+        let ptr = unsafe {
+            sys6(
+                SYS_MMAP,
+                0,
+                len as i64,
+                PROT_READ | PROT_WRITE,
+                MAP_PRIVATE | MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if let Some(errno) = syscall_failed(ptr) {
+            return Err(format!("mmap failed (errno {errno})"));
+        }
+        let ptr = ptr as *mut u8;
+        unsafe {
+            std::ptr::copy_nonoverlapping(code.as_ptr(), ptr, code.len());
+        }
+        let rc = unsafe { sys3(SYS_MPROTECT, ptr as i64, len as i64, PROT_READ | PROT_EXEC) };
+        if let Some(errno) = syscall_failed(rc) {
+            unsafe { sys3(SYS_MUNMAP, ptr as i64, len as i64, 0) };
+            return Err(format!("mprotect(PROT_EXEC) failed (errno {errno})"));
+        }
+        Ok(ExecBuf { ptr, len })
+    }
+
+    /// Pointer to the code at byte offset `off`.
+    ///
+    /// # Safety-relevant contract
+    /// The caller transmutes this into a function pointer; `off` must be
+    /// the start of a function emitted into this buffer.
+    pub fn at(&self, off: usize) -> *const u8 {
+        debug_assert!(off < self.len);
+        unsafe { self.ptr.add(off) }
+    }
+}
+
+impl Drop for ExecBuf {
+    fn drop(&mut self) {
+        unsafe { sys3(SYS_MUNMAP, self.ptr as i64, self.len as i64, 0) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_and_execute_trivial_fn() {
+        // movabs rax, 0x51C0DE; ret
+        let mut code = vec![0x48, 0xb8];
+        code.extend_from_slice(&0x51C0DEi64.to_le_bytes());
+        code.push(0xc3);
+        let buf = ExecBuf::map(&code).expect("map");
+        let f: extern "C" fn() -> i64 = unsafe { std::mem::transmute(buf.at(0)) };
+        assert_eq!(f(), 0x51C0DE);
+    }
+
+    #[test]
+    fn empty_code_rejected() {
+        assert!(ExecBuf::map(&[]).is_err());
+    }
+}

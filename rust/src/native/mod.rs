@@ -1,0 +1,140 @@
+//! Native x86-64 code tier: a self-contained, std-only JIT that
+//! compiles the lowered bytecode into machine code, so ptr-inc
+//! schedules become real pointer arithmetic, prefetch hints become
+//! `prefetcht0`, and bounds checks become branch-to-trap stubs — the
+//! schedule wins the tuner models finally happen in silicon.
+//!
+//! The VM remains the semantic ground truth: the native tier is
+//! differential-tested bitwise against it (see `rust/tests/native.rs`
+//! and the extended fuzz in `rust/tests/vm_exec.rs`), and every
+//! unsupported situation — non-x86-64 host, non-Linux mmap protocol,
+//! a future op the emitter doesn't know — degrades to the VM, never to
+//! an error. See DESIGN.md §Native tier for the ABI, the W^X buffer
+//! lifecycle, and the fallback matrix.
+
+/// Which execution backend to run a compiled kernel on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Tier {
+    /// The bytecode interpreter (`exec::vm`) — always available.
+    #[default]
+    Vm,
+    /// JIT-compiled machine code; silently falls back to [`Tier::Vm`]
+    /// when unavailable for the host or program.
+    Native,
+}
+
+impl Tier {
+    pub fn parse(s: &str) -> Result<Tier, String> {
+        match s {
+            "vm" => Ok(Tier::Vm),
+            "native" => Ok(Tier::Native),
+            other => Err(format!("unknown backend `{other}` (expected vm|native)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Tier::Vm => "vm",
+            Tier::Native => "native",
+        }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub mod asm;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub mod emit;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub mod mem;
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub mod runtime;
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod exec;
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub use exec::NativeProgram;
+
+/// Whether this host can map and execute JIT'd code. Probed once by
+/// compiling and running a trivial function (sandboxes may deny
+/// `PROT_EXEC` even on x86-64 Linux).
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+pub fn available() -> bool {
+    static PROBE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *PROBE.get_or_init(|| {
+        let mut a = asm::Asm::new();
+        a.mov_ri(asm::RAX, 0x51C0DE);
+        a.ret();
+        let code = match a.finish() {
+            Ok(c) => c,
+            Err(_) => return false,
+        };
+        match mem::ExecBuf::map(&code) {
+            Ok(buf) => {
+                let f: extern "C" fn() -> i64 = unsafe { std::mem::transmute(buf.at(0)) };
+                f() == 0x51C0DE
+            }
+            Err(_) => false,
+        }
+    })
+}
+
+/// Stub for hosts without the JIT (non-x86-64 or non-Linux): the type
+/// exists so the coordinator wiring compiles, but it can never be
+/// constructed — every `--backend native` request silently runs on the
+/// VM tier.
+#[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+mod stub {
+    use crate::exec::vm::{ExecLimits, VmRun};
+    use crate::lowering::bytecode::ExecProgram;
+    use crate::symbolic::{ContainerId, Sym};
+
+    pub struct NativeProgram {
+        _private: (),
+    }
+
+    impl NativeProgram {
+        pub fn compile(_prog: &ExecProgram) -> Result<NativeProgram, String> {
+            Err("native tier is only supported on x86-64 Linux".into())
+        }
+
+        pub fn run_limited(
+            &self,
+            _prog: &ExecProgram,
+            _params: &[(Sym, i64)],
+            _inputs: &[(ContainerId, &[f64])],
+            _threads: usize,
+            _limits: &ExecLimits,
+        ) -> anyhow::Result<VmRun> {
+            unreachable!("stub NativeProgram cannot be constructed")
+        }
+    }
+
+    pub fn available() -> bool {
+        false
+    }
+}
+
+#[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+pub use stub::{available, NativeProgram};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_parse_roundtrip() {
+        assert_eq!(Tier::parse("vm").unwrap(), Tier::Vm);
+        assert_eq!(Tier::parse("native").unwrap(), Tier::Native);
+        assert!(Tier::parse("gpu").is_err());
+        assert_eq!(Tier::Native.as_str(), "native");
+        assert_eq!(Tier::default(), Tier::Vm);
+    }
+
+    #[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+    #[test]
+    fn probe_is_stable() {
+        // Whatever the sandbox says, it must say it twice.
+        assert_eq!(available(), available());
+    }
+}

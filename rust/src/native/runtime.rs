@@ -1,0 +1,182 @@
+//! The JIT ↔ Rust runtime boundary.
+//!
+//! Every compiled block is an `extern "C" fn(*mut NativeCtx) -> i64`
+//! returning one of the [`RC_OK`]..[`RC_TIME`] codes. The context struct
+//! is `#[repr(C)]` with offsets the emitter hard-codes (pinned by a
+//! layout test below). Ops whose semantics SSE2 cannot reproduce
+//! bit-for-bit (NaN-aware min/max, `exp`, `floor`, euclidean div/mod,
+//! wrapping pow) call back into these `extern "C"` helpers, which are
+//! the *same Rust expressions the VM interpreter evaluates* — bitwise
+//! parity is by construction, not by approximation.
+
+/// Per-invocation execution context handed to compiled blocks.
+///
+/// Field offsets (hard-coded in `emit.rs`):
+/// `0x00` ints · `0x08` floats · `0x10` bases · `0x18` lens ·
+/// `0x20` fuel · `0x28` deadline · `0x30` tick · `0x38` trap_cont ·
+/// `0x40` trap_index · `0x48` trap_len.
+#[repr(C)]
+pub struct NativeCtx {
+    /// Integer register file (`Frame::ints`).
+    pub ints: *mut i64,
+    /// Float register file (`Frame::floats`).
+    pub floats: *mut f64,
+    /// Per-container base pointers (`Frame::bases`).
+    pub bases: *const *mut f64,
+    /// Per-container lengths (`Frame::lens`) for checked-tier guards.
+    pub lens: *const usize,
+    /// Remaining fuel; decremented in-code at every loop back-edge.
+    pub fuel: *mut i64,
+    /// Borrow of `Frame::deadline` (`*const Option<Instant>`), probed
+    /// via [`nat_deadline_hit`] every `DEADLINE_TICK` back-edges.
+    pub deadline: *const u8,
+    /// Countdown to the next deadline probe (synced with `Frame::tick`
+    /// around each block invocation).
+    pub tick: i64,
+    /// Trap out-params, valid when the block returns [`RC_OOB`].
+    pub trap_cont: i64,
+    pub trap_index: i64,
+    pub trap_len: i64,
+}
+
+pub const CTX_INTS: i32 = 0x00;
+pub const CTX_FLOATS: i32 = 0x08;
+pub const CTX_BASES: i32 = 0x10;
+pub const CTX_LENS: i32 = 0x18;
+pub const CTX_FUEL: i32 = 0x20;
+pub const CTX_DEADLINE: i32 = 0x28;
+pub const CTX_TICK: i32 = 0x30;
+pub const CTX_TRAP_CONT: i32 = 0x38;
+pub const CTX_TRAP_INDEX: i32 = 0x40;
+pub const CTX_TRAP_LEN: i32 = 0x48;
+
+/// Block return codes.
+pub const RC_OK: i64 = 0;
+pub const RC_OOB: i64 = 1;
+pub const RC_FUEL: i64 = 2;
+pub const RC_TIME: i64 = 3;
+
+/// Compiled block signature.
+pub type BlockFn = unsafe extern "C" fn(*mut NativeCtx) -> i64;
+
+// ---- float helpers (xmm0/xmm1 args, xmm0 result) ----
+
+pub extern "C" fn nat_fmin(a: f64, b: f64) -> f64 {
+    a.min(b)
+}
+
+pub extern "C" fn nat_fmax(a: f64, b: f64) -> f64 {
+    a.max(b)
+}
+
+pub extern "C" fn nat_fexp(a: f64) -> f64 {
+    a.exp()
+}
+
+pub extern "C" fn nat_flog2(a: f64) -> f64 {
+    a.log2()
+}
+
+pub extern "C" fn nat_ffloor(a: f64) -> f64 {
+    a.floor()
+}
+
+/// `Op::FPow` (exp arrives in edi).
+pub extern "C" fn nat_fpow(a: f64, exp: u32) -> f64 {
+    a.powi(exp as i32)
+}
+
+// ---- integer helpers (rdi/rsi args, rax result) ----
+
+pub extern "C" fn nat_ifloordiv(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        0
+    } else {
+        a.div_euclid(b)
+    }
+}
+
+pub extern "C" fn nat_imod(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        0
+    } else {
+        a.rem_euclid(b)
+    }
+}
+
+pub extern "C" fn nat_ipow(a: i64, exp: u32) -> i64 {
+    a.wrapping_pow(exp)
+}
+
+pub extern "C" fn nat_ilog2(a: i64) -> i64 {
+    if a > 0 {
+        63 - (a as u64).leading_zeros() as i64
+    } else {
+        0
+    }
+}
+
+/// Wall-clock probe: 1 when the deadline has passed. Called from
+/// emitted code every `DEADLINE_TICK` back-edges, mirroring
+/// `Frame::backedge`.
+pub extern "C" fn nat_deadline_hit(ctx: *mut NativeCtx) -> i64 {
+    let deadline = unsafe { &*((*ctx).deadline as *const Option<std::time::Instant>) };
+    match deadline {
+        Some(d) if std::time::Instant::now() >= *d => 1,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The emitter hard-codes these offsets; a layout drift must fail
+    /// loudly here rather than scribble over the wrong field at runtime.
+    #[test]
+    fn ctx_layout_matches_emitter_offsets() {
+        let ctx = NativeCtx {
+            ints: std::ptr::null_mut(),
+            floats: std::ptr::null_mut(),
+            bases: std::ptr::null(),
+            lens: std::ptr::null(),
+            fuel: std::ptr::null_mut(),
+            deadline: std::ptr::null(),
+            tick: 0,
+            trap_cont: 0,
+            trap_index: 0,
+            trap_len: 0,
+        };
+        let base = &ctx as *const NativeCtx as usize;
+        let off = |p: usize| (p - base) as i32;
+        assert_eq!(off(&ctx.ints as *const _ as usize), CTX_INTS);
+        assert_eq!(off(&ctx.floats as *const _ as usize), CTX_FLOATS);
+        assert_eq!(off(&ctx.bases as *const _ as usize), CTX_BASES);
+        assert_eq!(off(&ctx.lens as *const _ as usize), CTX_LENS);
+        assert_eq!(off(&ctx.fuel as *const _ as usize), CTX_FUEL);
+        assert_eq!(off(&ctx.deadline as *const _ as usize), CTX_DEADLINE);
+        assert_eq!(off(&ctx.tick as *const _ as usize), CTX_TICK);
+        assert_eq!(off(&ctx.trap_cont as *const _ as usize), CTX_TRAP_CONT);
+        assert_eq!(off(&ctx.trap_index as *const _ as usize), CTX_TRAP_INDEX);
+        assert_eq!(off(&ctx.trap_len as *const _ as usize), CTX_TRAP_LEN);
+    }
+
+    #[test]
+    fn helpers_match_vm_semantics() {
+        // NaN-aware min/max (SSE minsd/maxsd would get these wrong).
+        assert_eq!(nat_fmin(f64::NAN, 2.0), 2.0);
+        assert_eq!(nat_fmax(2.0, f64::NAN), 2.0);
+        assert_eq!(nat_fmin(-0.0f64, 0.0).to_bits(), (-0.0f64).to_bits());
+        // Euclidean division with the VM's divide-by-zero convention.
+        assert_eq!(nat_ifloordiv(-7, 2), -4);
+        assert_eq!(nat_ifloordiv(7, 0), 0);
+        assert_eq!(nat_imod(-7, 2), 1);
+        assert_eq!(nat_imod(7, 0), 0);
+        assert_eq!(nat_ipow(3, 4), 81);
+        assert_eq!(nat_ipow(i64::MAX, 2), i64::MAX.wrapping_pow(2));
+        assert_eq!(nat_ilog2(1), 0);
+        assert_eq!(nat_ilog2(1024), 10);
+        assert_eq!(nat_ilog2(-5), 0);
+        assert_eq!(nat_ilog2(0), 0);
+    }
+}

@@ -124,13 +124,27 @@ impl<V> ScheduleCache<V> {
         key: u64,
         build: impl FnOnce() -> Result<V, String>,
     ) -> (Result<Arc<V>, String>, Outcome) {
+        let (result, outcome, _evicted) = self.get_or_build_evicting(key, build);
+        (result, outcome)
+    }
+
+    /// [`ScheduleCache::get_or_build`], additionally returning the
+    /// entries this call evicted to stay within capacity. The daemon
+    /// uses the evicted values to drop per-entry resources the cache
+    /// itself doesn't know about (interned symbols); plain callers use
+    /// `get_or_build` and let the `Arc`s drop.
+    pub fn get_or_build_evicting(
+        &self,
+        key: u64,
+        build: impl FnOnce() -> Result<V, String>,
+    ) -> (Result<Arc<V>, String>, Outcome, Vec<Arc<V>>) {
         let waiting = {
             let mut s = self.shard(key).lock().unwrap();
             if let Some(slot) = s.entries.get_mut(&key) {
                 slot.last_used = self.next_tick();
                 slot.hits += 1;
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                return (Ok(slot.val.clone()), Outcome::Hit);
+                return (Ok(slot.val.clone()), Outcome::Hit, Vec::new());
             }
             match s.inflight.get(&key) {
                 Some(inf) => Some(inf.clone()),
@@ -150,7 +164,7 @@ impl<V> ScheduleCache<V> {
             while done.is_none() {
                 done = inf.cv.wait(done).unwrap();
             }
-            return (done.clone().unwrap(), Outcome::Coalesced);
+            return (done.clone().unwrap(), Outcome::Coalesced, Vec::new());
         }
         // This call owns the build (no lock held while it runs). A panic
         // is demoted to an error so waiters are never stranded.
@@ -158,6 +172,7 @@ impl<V> ScheduleCache<V> {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(build))
             .unwrap_or_else(|_| Err("builder panicked".to_string()))
             .map(Arc::new);
+        let mut evicted = Vec::new();
         {
             let mut s = self.shard(key).lock().unwrap();
             if let Ok(v) = &result {
@@ -173,7 +188,9 @@ impl<V> ScheduleCache<V> {
                     else {
                         break;
                     };
-                    s.entries.remove(&lru);
+                    if let Some(slot) = s.entries.remove(&lru) {
+                        evicted.push(slot.val);
+                    }
                     self.evictions.fetch_add(1, Ordering::Relaxed);
                 }
             }
@@ -186,7 +203,7 @@ impl<V> ScheduleCache<V> {
                 inf.cv.notify_all();
             }
         }
-        (result, Outcome::Miss)
+        (result, Outcome::Miss, evicted)
     }
 
     /// Recency-bumping lookup that does **not** count toward hit/miss —
@@ -330,6 +347,22 @@ mod tests {
         // Rebuilding the evicted key is a miss, not a hit.
         let (_, o) = cache.get_or_build(2, || Ok("b2"));
         assert_eq!(o, Outcome::Miss);
+    }
+
+    #[test]
+    fn evicting_variant_hands_back_displaced_entries() {
+        let cache: ScheduleCache<&'static str> = ScheduleCache::with_shards(2, 1);
+        let (_, o, ev) = cache.get_or_build_evicting(1, || Ok("a"));
+        assert_eq!((o, ev.len()), (Outcome::Miss, 0));
+        cache.get_or_build(2, || Ok("b"));
+        let (_, _, ev) = cache.get_or_build_evicting(3, || Ok("c")); // displaces 1
+        assert_eq!(ev.len(), 1);
+        assert_eq!(*ev[0], "a");
+        // Hits and failed builds evict nothing.
+        let (_, o, ev) = cache.get_or_build_evicting(3, || unreachable!());
+        assert_eq!((o, ev.len()), (Outcome::Hit, 0));
+        let (r, _, ev) = cache.get_or_build_evicting(4, || Err("no".into()));
+        assert!(r.is_err() && ev.is_empty());
     }
 
     #[test]

@@ -194,6 +194,11 @@ pub struct RunRequest {
     pub threads: usize,
     /// Argument containers to return (`None` = all of them).
     pub outputs: Option<Vec<String>>,
+    /// Execution backend (`"vm"` | `"native"`); `None` = the daemon's
+    /// configured default. A `"native"` request silently degrades to the
+    /// VM when the daemon's host has no JIT — [`RunReply::backend`]
+    /// reports what actually ran.
+    pub backend: Option<String>,
 }
 
 impl Default for RunRequest {
@@ -204,6 +209,7 @@ impl Default for RunRequest {
             inputs: Vec::new(),
             threads: 1,
             outputs: None,
+            backend: None,
         }
     }
 }
@@ -241,6 +247,9 @@ impl RunRequest {
                 Json::Arr(outs.iter().map(|s| Json::Str(s.clone())).collect()),
             ));
         }
+        if let Some(b) = &self.backend {
+            kv.push(("backend".into(), Json::Str(b.clone())));
+        }
         Json::Obj(kv)
     }
 
@@ -277,6 +286,9 @@ impl RunRequest {
                 .collect::<Result<Vec<String>, _>>()?;
             req.outputs = Some(names);
         }
+        if let Some(b) = v.get("backend") {
+            req.backend = Some(b.as_str().ok_or("field `backend` must be a string")?.to_string());
+        }
         Ok(req)
     }
 }
@@ -291,6 +303,10 @@ pub struct RunReply {
     /// Fuel spent (loop back-edges), reported on metered (untrusted)
     /// runs; `None` on unmetered daemons.
     pub fuel_used: Option<u64>,
+    /// The backend that actually executed (`"vm"` | `"native"`) — a
+    /// native *request* may still run on the VM when the daemon's host
+    /// has no JIT. Absent on replies from pre-native daemons: `"vm"`.
+    pub backend: String,
     /// `name → contents` for each requested argument container.
     pub outputs: Vec<(String, Vec<f64>)>,
 }
@@ -305,6 +321,7 @@ impl RunReply {
         if let Some(f) = self.fuel_used {
             kv.push(("fuel_used".into(), Json::Num(f as f64)));
         }
+        kv.push(("backend".into(), Json::Str(self.backend.clone())));
         kv.push((
             "outputs".into(),
             Json::Obj(
@@ -350,6 +367,11 @@ impl RunReply {
                 .get("fuel_used")
                 .and_then(Json::as_i64)
                 .map(|f| f.max(0) as u64),
+            backend: v
+                .get("backend")
+                .and_then(Json::as_str)
+                .unwrap_or("vm")
+                .to_string(),
             outputs,
         })
     }
@@ -394,6 +416,7 @@ mod tests {
             inputs: vec![("u".into(), vec![1.0, -0.5])],
             threads: 4,
             outputs: Some(vec!["u".into()]),
+            backend: Some("native".into()),
         };
         let back = RunRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back.preset, "small");
@@ -402,9 +425,11 @@ mod tests {
         assert_eq!(back.inputs[0].1, vec![1.0, -0.5]);
         assert_eq!(back.threads, 4);
         assert_eq!(back.outputs.as_deref(), Some(&["u".to_string()][..]));
+        assert_eq!(back.backend.as_deref(), Some("native"));
         // Empty object = all defaults.
         let d = RunRequest::from_json(&Json::Obj(vec![])).unwrap();
         assert_eq!((d.preset.as_str(), d.threads), ("tiny", 1));
+        assert_eq!(d.backend, None);
         // Type errors are reported by field.
         let bad = Json::parse(r#"{"params": {"N": 1.5}}"#).unwrap();
         assert!(RunRequest::from_json(&bad).unwrap_err().contains("`N`"));
@@ -447,10 +472,15 @@ mod tests {
             name: reply.name.clone(),
             wall_ms: 0.25,
             fuel_used: Some(12),
+            backend: "native".into(),
             outputs: vec![("u".into(), vec![0.0, -0.0, 2.5])],
         };
         let back = RunReply::from_json(&run.to_json()).unwrap();
         assert_eq!(back.outputs[0].0, "u");
+        assert_eq!(back.backend, "native");
+        // A pre-native reply (no backend field) parses as vm.
+        let legacy = Json::parse(r#"{"kernel":"k0","name":"t","outputs":{}}"#).unwrap();
+        assert_eq!(RunReply::from_json(&legacy).unwrap().backend, "vm");
         let bits: Vec<u64> = back.outputs[0].1.iter().map(|x| x.to_bits()).collect();
         assert_eq!(bits, vec![0.0f64.to_bits(), (-0.0f64).to_bits(), 2.5f64.to_bits()]);
     }

@@ -46,11 +46,13 @@
 //!   ([`ServedKernel::param_floors`]), so a later submission raising a
 //!   shared symbol's floor never changes which runs a cached kernel
 //!   accepts;
-//! * the intern table itself is append-only — a daemon serving an
-//!   unbounded stream of programs with *distinct* identifier sets grows
-//!   it monotonically (cache eviction frees compiled artifacts, not
-//!   interned names). Bounding that requires a scoped symbol table in
-//!   `symbolic/` (tracked in ROADMAP.md).
+//! * the intern table is bounded by the cache, not the submission
+//!   history: each compile records the symbols it touches
+//!   ([`crate::symbolic::SymScope`]), the daemon refcounts them per
+//!   cache entry ([`SymRegistry`]), and evicting an entry's last
+//!   reference releases its service-created symbols back to the
+//!   interner's free list. `/metrics` exposes the live count as
+//!   `symbols_interned`.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -68,6 +70,7 @@ use crate::exec::{ExecLimits, Trap};
 use crate::frontend::{init_value_with, InitSpec, PresetBindings};
 use crate::ir::ContainerKind;
 use crate::kernels::Preset;
+use crate::native::Tier;
 use crate::symbolic::eval::eval_int;
 use crate::symbolic::{ContainerId, Sym};
 use crate::verify::SafetyTier;
@@ -111,6 +114,11 @@ pub struct ServiceConfig {
     pub fuel_limit: u64,
     /// Per-run wall-clock cap (milliseconds) in untrusted mode.
     pub wall_ms: u64,
+    /// Default execution backend for runs that don't request one
+    /// (`silo serve --backend=native`). Per-request `backend` overrides;
+    /// either way a native run silently degrades to the VM when the
+    /// host has no JIT, and the reply reports what actually ran.
+    pub backend: Tier,
 }
 
 impl Default for ServiceConfig {
@@ -123,6 +131,111 @@ impl Default for ServiceConfig {
             untrusted: false,
             fuel_limit: 1 << 32,
             wall_ms: 30_000,
+            backend: Tier::Vm,
+        }
+    }
+}
+
+/// Refcounts of service-created interned symbols across resident cache
+/// entries, so the process-global symbol table stays bounded by the
+/// cache instead of growing with the submission history.
+///
+/// Every compile endpoint wraps its parse+build in a
+/// [`crate::symbolic::SymScope`] and brackets itself with
+/// `begin_compile`/`end_compile`. Entries `register` their captured
+/// symbols on insertion and `unregister` them on eviction; symbols are
+/// *owned* (eligible for release) once any scope records creating them,
+/// which keeps pre-service symbols — built-in kernel params, test
+/// fixtures — permanently off-limits. Actual release happens in exactly
+/// one place: the last `end_compile` drains the pending set while no
+/// compile is in flight, so an in-flight parse can never be left holding
+/// a symbol whose slot was just recycled.
+#[derive(Default)]
+struct SymRegistry {
+    inner: Mutex<SymRegistryInner>,
+}
+
+#[derive(Default)]
+struct SymRegistryInner {
+    /// Symbols some service scope created (`new == true`) — the only
+    /// ones this registry may ever release.
+    owned: std::collections::HashSet<Sym>,
+    /// Live cache-entry references per owned symbol.
+    counts: std::collections::HashMap<Sym, usize>,
+    /// Release candidates awaiting an idle moment (no compile in
+    /// flight). Re-checked against `counts` at drain time.
+    pending: std::collections::HashSet<Sym>,
+    in_flight: usize,
+}
+
+impl SymRegistry {
+    fn begin_compile(&self) {
+        self.inner.lock().unwrap().in_flight += 1;
+    }
+
+    /// Close a compile bracket; the last one out drains the pending
+    /// release candidates. `release_syms` runs under the registry lock,
+    /// so a concurrent `begin_compile` cannot start parsing (and
+    /// re-interning a doomed name) mid-drain.
+    fn end_compile(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.in_flight -= 1;
+        if g.in_flight > 0 {
+            return;
+        }
+        let candidates: Vec<Sym> = g.pending.drain().collect();
+        let free: Vec<Sym> = candidates
+            .into_iter()
+            .filter(|s| g.owned.contains(s) && !g.counts.contains_key(s))
+            .collect();
+        for s in &free {
+            g.owned.remove(s);
+        }
+        crate::symbolic::release_syms(&free);
+    }
+
+    /// Record a newly inserted cache entry's captured symbols.
+    fn register(&self, syms: &[(Sym, bool)]) {
+        let mut g = self.inner.lock().unwrap();
+        for (s, new) in syms {
+            if *new {
+                g.owned.insert(*s);
+            }
+            if g.owned.contains(s) {
+                *g.counts.entry(*s).or_insert(0) += 1;
+            }
+        }
+    }
+
+    /// A compile that produced no cache entry (parse/build error, or a
+    /// cache hit whose scope re-looked-up existing names): owned symbols
+    /// with no entry holding them become release candidates.
+    fn discard(&self, syms: &[(Sym, bool)]) {
+        let mut g = self.inner.lock().unwrap();
+        for (s, new) in syms {
+            if *new {
+                g.owned.insert(*s);
+            }
+            if g.owned.contains(s) && !g.counts.contains_key(s) {
+                g.pending.insert(*s);
+            }
+        }
+    }
+
+    /// Drop evicted entries' references; symbols with no remaining
+    /// holder become release candidates.
+    fn unregister(&self, evicted: &[std::sync::Arc<ServedKernel>]) {
+        let mut g = self.inner.lock().unwrap();
+        for e in evicted {
+            for (s, _) in &e.syms {
+                if let Some(c) = g.counts.get_mut(s) {
+                    *c -= 1;
+                    if *c == 0 {
+                        g.counts.remove(s);
+                        g.pending.insert(*s);
+                    }
+                }
+            }
         }
     }
 }
@@ -149,15 +262,22 @@ pub struct ServedKernel {
     pub compiled: CompiledKernel,
     /// Wall-clock cost of the build (optimize + tune + lower), ms.
     pub compile_ms: f64,
+    /// Symbols this entry's compile touched, captured by the build's
+    /// [`crate::symbolic::SymScope`] (`true` = the scope interned it).
+    /// The daemon's [`SymRegistry`] refcounts these and releases the
+    /// last holder's symbols on eviction.
+    pub syms: Vec<(Sym, bool)>,
 }
 
 struct ServiceState {
     cache: ScheduleCache<ServedKernel>,
+    syms: SymRegistry,
     metrics: Metrics,
     stop: AtomicBool,
     untrusted: bool,
     fuel_limit: u64,
     wall_ms: u64,
+    backend: Tier,
 }
 
 /// A running daemon. Dropping the handle leaves the threads running
@@ -178,11 +298,13 @@ impl Server {
         let addr = listener.local_addr()?;
         let state = Arc::new(ServiceState {
             cache: ScheduleCache::with_shards(config.cache_cap, config.cache_shards),
+            syms: SymRegistry::default(),
             metrics: Metrics::default(),
             stop: AtomicBool::new(false),
             untrusted: config.untrusted,
             fuel_limit: config.fuel_limit.max(1),
             wall_ms: config.wall_ms.max(1),
+            backend: config.backend,
         });
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
@@ -381,8 +503,9 @@ fn metrics_body(state: &ServiceState) -> String {
         ("rejected".into(), num(Metrics::get(&m.rejected))),
         ("trapped".into(), num(Metrics::get(&m.trapped))),
         ("untrusted".into(), Json::Bool(state.untrusted)),
-        // The ROADMAP-flagged monotonic growth, made observable: the
-        // process-global symbol intern table only ever grows.
+        // Live interned symbols. Bounded under cache churn now that
+        // eviction releases an entry's symbols (the ROADMAP-flagged
+        // monotonic growth, fixed and kept observable).
         (
             "symbols_interned".into(),
             num(crate::symbolic::intern_table_size() as u64),
@@ -420,6 +543,16 @@ fn normalize_spec(spec: &PipelineSpec) -> String {
 }
 
 fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
+    // Bracket the whole parse+build against the symbol registry: the
+    // final close drains deferred symbol releases, and no release can
+    // happen while this (or any) compile is mid-parse.
+    state.syms.begin_compile();
+    let out = compile_endpoint_inner(req, state);
+    state.syms.end_compile();
+    out
+}
+
+fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) {
     let body = match req.body_str() {
         Ok(b) => b,
         Err(e) => return (400, error_body(&format!("{e:#}"))),
@@ -440,10 +573,18 @@ fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
             return (400, error_body(&format!("{e:#}")));
         }
     }
+    // Capture every symbol the parse interns; the entry (if one is
+    // built) holds them, any other outcome hands them back to the
+    // registry as release candidates.
+    let scope = crate::symbolic::SymScope::begin();
     let parsed = match crate::frontend::parse_str(&creq.source) {
         Ok(p) => p,
-        Err(e) => return (400, error_body(&e.to_string())),
+        Err(e) => {
+            state.syms.discard(&scope.finish());
+            return (400, error_body(&e.to_string()));
+        }
     };
+    let parse_syms = scope.finish();
     // The safety policy is daemon-wide (one process is either trusted
     // or untrusted for its lifetime), so it needs no cache-key
     // component: every cached artifact was built under this policy.
@@ -455,14 +596,34 @@ fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
     let spec_name = normalize_spec(&spec);
     let key = cache::kernel_key(&parsed, &spec_name);
     let id = cache::kernel_id(key);
-    let (result, outcome) = state.cache.get_or_build(key, || {
+    let (result, outcome, evicted) = state.cache.get_or_build_evicting(key, || {
+        // The optimizer can intern fresh symbols of its own (tile/
+        // privatization temporaries) — a nested scope captures those,
+        // and the entry records both sets.
+        let bscope = crate::symbolic::SymScope::begin();
         let t0 = Instant::now();
-        let compiled =
-            compile_program_with(parsed.program.clone(), &spec, MemSchedules::default(), policy)
-                .map_err(|e| format!("{e:#}"))?;
+        let compiled = match compile_program_with(
+            parsed.program.clone(),
+            &spec,
+            MemSchedules::default(),
+            policy,
+        ) {
+            Ok(c) => c,
+            Err(e) => {
+                state.syms.discard(&bscope.finish());
+                return Err(format!("{e:#}"));
+            }
+        };
         let wall = t0.elapsed();
         Metrics::bump(&state.metrics.compiles);
         Metrics::add_time(&state.metrics.compile_us_total, wall);
+        let mut syms = parse_syms.clone();
+        for (s, new) in bscope.finish() {
+            match syms.iter_mut().find(|(x, _)| *x == s) {
+                Some((_, n)) => *n |= new,
+                None => syms.push((s, new)),
+            }
+        }
         Ok(ServedKernel {
             id: id.clone(),
             name: parsed.program.name.clone(),
@@ -477,8 +638,21 @@ fn compile_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
                 .collect(),
             compiled,
             compile_ms: wall.as_secs_f64() * 1e3,
+            syms,
         })
     });
+    match outcome {
+        // This call built and inserted the entry: it now holds its syms.
+        Outcome::Miss if result.is_ok() => {
+            if let Ok(k) = &result {
+                state.syms.register(&k.syms);
+            }
+        }
+        // Hit, coalesced, or failed build: this request's parse-time
+        // interns are not held by any new entry.
+        _ => state.syms.discard(&parse_syms),
+    }
+    state.syms.unregister(&evicted);
     let kernel = match result {
         Ok(k) => k,
         Err(e) => {
@@ -693,6 +867,13 @@ fn execute_run(
     let refs: Vec<(ContainerId, &[f64])> =
         inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
     let threads = rreq.threads.clamp(1, 8);
+    // Backend: per-request choice wins, else the daemon default. Unknown
+    // strings are caller errors; an unavailable JIT is not (the tier
+    // call degrades and the reply says what ran).
+    let backend = match &rreq.backend {
+        Some(s) => Tier::parse(s).map_err(caller)?,
+        None => state.backend,
+    };
     // Untrusted daemons meter every run; trusted daemons run unlimited.
     let limits = if state.untrusted {
         ExecLimits {
@@ -702,9 +883,9 @@ fn execute_run(
     } else {
         ExecLimits::none()
     };
-    let (storage, wall, fuel_used) = kernel
+    let (storage, wall, fuel_used, ran_on) = kernel
         .compiled
-        .execute_limited(&params, &refs, threads, &limits)
+        .execute_limited_tier(backend, &params, &refs, threads, &limits)
         .map_err(|e| {
             // Structured traps (bounds/fuel/wall) are 422 with a code;
             // anything else on this path is a caller error.
@@ -739,6 +920,7 @@ fn execute_run(
         name: kernel.name.clone(),
         wall_ms: wall.as_secs_f64() * 1e3,
         fuel_used: state.untrusted.then_some(fuel_used),
+        backend: ran_on.as_str().to_string(),
         outputs,
     })
 }

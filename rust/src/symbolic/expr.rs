@@ -231,6 +231,29 @@ struct SymTable {
     names: Vec<String>,
     assume: Vec<Assumptions>,
     by_name: HashMap<String, Sym>,
+    /// Slots handed back by [`release_syms`], reused by the next intern.
+    free: Vec<u32>,
+}
+
+impl SymTable {
+    /// Allocate a slot for a new name, reusing a released slot if any.
+    fn alloc(&mut self, name: &str) -> Sym {
+        let s = match self.free.pop() {
+            Some(i) => {
+                self.names[i as usize] = name.to_string();
+                self.assume[i as usize] = Assumptions::default();
+                Sym(i)
+            }
+            None => {
+                let s = Sym(self.names.len() as u32);
+                self.names.push(name.to_string());
+                self.assume.push(Assumptions::default());
+                s
+            }
+        };
+        self.by_name.insert(name.to_string(), s);
+        s
+    }
 }
 
 fn table() -> &'static Mutex<SymTable> {
@@ -238,12 +261,95 @@ fn table() -> &'static Mutex<SymTable> {
     TABLE.get_or_init(|| Mutex::new(SymTable::default()))
 }
 
-/// Number of symbols interned so far. The table is process-global and
-/// append-only, so this is a monotonic gauge — the service daemon
-/// exposes it on `/metrics` to make the documented unbounded-identifier
-/// growth observable.
+/// Number of *live* interned symbols (allocated minus released). The
+/// table is process-global; without scoped release it only ever grows,
+/// which the service daemon makes observable on `/metrics` and bounds
+/// by releasing each cache entry's symbols on eviction.
 pub fn intern_table_size() -> usize {
-    table().lock().unwrap().names.len()
+    let t = table().lock().unwrap();
+    t.names.len() - t.free.len()
+}
+
+// Recording scopes are per thread: the daemon compiles on several worker
+// threads at once, and one compile's scope must not capture another's
+// interns.
+thread_local! {
+    static RECORDERS: std::cell::RefCell<Vec<Vec<(Sym, bool)>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+fn record(s: Sym, newly_interned: bool) {
+    RECORDERS.with(|r| {
+        for scope in r.borrow_mut().iter_mut() {
+            scope.push((s, newly_interned));
+        }
+    });
+}
+
+/// RAII recording scope: every symbol this *thread* interns (or looks
+/// up) between [`SymScope::begin`] and [`SymScope::finish`] is captured,
+/// each tagged with whether the intern created it. The service daemon
+/// wraps each compile in one, refcounts the captured symbols per cache
+/// entry, and hands symbols whose last entry was evicted to
+/// [`release_syms`] — bounding the intern table by the cache capacity
+/// instead of the submission history.
+pub struct SymScope(());
+
+impl SymScope {
+    pub fn begin() -> SymScope {
+        RECORDERS.with(|r| r.borrow_mut().push(Vec::new()));
+        SymScope(())
+    }
+
+    /// End the scope and return the captured symbols, deduplicated (the
+    /// `bool` is true iff this scope's thread created the symbol), in
+    /// first-touch order.
+    pub fn finish(self) -> Vec<(Sym, bool)> {
+        let raw = RECORDERS.with(|r| r.borrow_mut().pop().unwrap_or_default());
+        std::mem::forget(self);
+        let mut seen: HashMap<Sym, usize> = HashMap::new();
+        let mut out: Vec<(Sym, bool)> = Vec::new();
+        for (s, new) in raw {
+            match seen.get(&s) {
+                Some(&i) => out[i].1 |= new,
+                None => {
+                    seen.insert(s, out.len());
+                    out.push((s, new));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Drop for SymScope {
+    fn drop(&mut self) {
+        // Abandoned scope (error path): discard the recording.
+        RECORDERS.with(|r| {
+            r.borrow_mut().pop();
+        });
+    }
+}
+
+/// Return symbols' slots to the interner's free list. **Caller-proved
+/// precondition**: no live [`Sym`] copy of any released symbol remains —
+/// a stale copy would read (or alias) whatever name reuses the slot.
+/// The service daemon is the intended caller: it releases a symbol only
+/// when the last cache entry recorded as touching it is evicted and no
+/// compile is in flight. Symbols whose `by_name` entry no longer points
+/// at them (already released, or renamed by a re-intern) are skipped.
+pub fn release_syms(syms: &[Sym]) {
+    let mut t = table().lock().unwrap();
+    for s in syms {
+        let i = s.0 as usize;
+        if i >= t.names.len() || t.by_name.get(&t.names[i]) != Some(s) {
+            continue;
+        }
+        let name = std::mem::take(&mut t.names[i]);
+        t.by_name.remove(&name);
+        t.assume[i] = Assumptions::default();
+        t.free.push(s.0);
+    }
 }
 
 impl Sym {
@@ -252,12 +358,14 @@ impl Sym {
     pub fn new(name: &str) -> Sym {
         let mut t = table().lock().unwrap();
         if let Some(s) = t.by_name.get(name) {
-            return *s;
+            let s = *s;
+            drop(t);
+            record(s, false);
+            return s;
         }
-        let s = Sym(t.names.len() as u32);
-        t.names.push(name.to_string());
-        t.assume.push(Assumptions::default());
-        t.by_name.insert(name.to_string(), s);
+        let s = t.alloc(name);
+        drop(t);
+        record(s, true);
         s
     }
 
@@ -294,10 +402,9 @@ impl Sym {
         loop {
             let name = format!("{prefix}#{i}");
             if !t.by_name.contains_key(&name) {
-                let s = Sym(t.names.len() as u32);
-                t.names.push(name.clone());
-                t.assume.push(Assumptions::default());
-                t.by_name.insert(name, s);
+                let s = t.alloc(&name);
+                drop(t);
+                record(s, true);
                 return s;
             }
             i += 1;
@@ -454,5 +561,72 @@ mod tests {
     fn real_bits_roundtrip() {
         let e = Expr::real(2.5);
         assert_eq!(e.real_value(), Some(2.5));
+    }
+
+    /// A recording scope captures this thread's interns (tagged new vs
+    /// looked-up), release returns their slots, and the next intern
+    /// reuses a freed slot — the table stays bounded under churn.
+    ///
+    /// The table is process-global and the test binary is multithreaded,
+    /// so the count/reuse assertions can be perturbed by a concurrent
+    /// test interning in the same instant; those run under a short
+    /// retry, while the recording-semantics assertions (deterministic:
+    /// scopes are thread-local) run once.
+    #[test]
+    fn scoped_release_reuses_slots() {
+        let scope = SymScope::begin();
+        let a = Sym::new("scoped_rel_a0");
+        let again = Sym::new("scoped_rel_a0");
+        let b = Sym::fresh("scoped_rel0");
+        let rec = scope.finish();
+        assert_eq!(again, a);
+        // Deduplicated, and `a` keeps its new=true tag despite the
+        // second (hit) touch.
+        assert_eq!(rec.iter().filter(|(s, _)| *s == a).count(), 1);
+        assert!(rec.iter().any(|(s, new)| *s == a && *new));
+        assert!(rec.iter().any(|(s, new)| *s == b && *new));
+        release_syms(&[a, b]);
+
+        let attempt = |tag: usize| -> bool {
+            let scope = SymScope::begin();
+            let x = Sym::new(&format!("scoped_rel_x{tag}"));
+            let y = Sym::new(&format!("scoped_rel_y{tag}"));
+            scope.finish();
+            let live = intern_table_size();
+            release_syms(&[x, y]);
+            if intern_table_size() != live - 2 {
+                return false;
+            }
+            // Releasing an already-released symbol is a no-op.
+            release_syms(&[y]);
+            if intern_table_size() != live - 2 {
+                return false;
+            }
+            // A fresh intern reuses one of the freed slots.
+            let z = Sym::new(&format!("scoped_rel_z{tag}"));
+            let reused = z == x || z == y;
+            reused && z.name() == format!("scoped_rel_z{tag}") && intern_table_size() == live - 1
+            // `z` stays live; its slot simply holds a new name.
+        };
+        assert!(
+            (0..64).any(attempt),
+            "release/reuse never observed cleanly despite 64 attempts"
+        );
+    }
+
+    /// An abandoned scope (dropped, not finished) discards its recording
+    /// without corrupting an enclosing scope.
+    #[test]
+    fn abandoned_scope_is_discarded() {
+        let outer = SymScope::begin();
+        {
+            let inner = SymScope::begin();
+            let _ = Sym::new("scoped_drop_x");
+            drop(inner);
+        }
+        let rec = outer.finish();
+        // The outer scope still saw the intern (it records on every
+        // scope in the stack); the inner recording just vanished.
+        assert!(rec.iter().any(|(s, _)| s.name() == "scoped_drop_x"));
     }
 }

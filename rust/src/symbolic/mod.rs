@@ -17,8 +17,8 @@ pub mod subs;
 
 pub use assume::{is_nonneg, is_positive, is_zero, Truth};
 pub use expr::{
-    fdiv, floordiv, func, imod, int, intern_table_size, load, max, min, psym, sym, Assumptions,
-    ContainerId, Expr, FuncKind, Sym,
+    fdiv, floordiv, func, imod, int, intern_table_size, load, max, min, psym, release_syms,
+    sym, Assumptions, ContainerId, Expr, FuncKind, Sym, SymScope,
 };
 pub use poly::{poly_diff, sym_eq, to_poly, Atom, Monomial, Poly};
 pub use simplify::simplify;

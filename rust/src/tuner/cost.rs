@@ -32,10 +32,56 @@ pub struct ScheduleCost {
     pub score: f64,
 }
 
+/// Calibration of the modeled cycle count against *measured* execution —
+/// the native code tier finally makes the model's unit (cycles per
+/// innermost iteration) directly observable, so a measured run can pin
+/// the model's absolute scale instead of leaving it a paper constant.
+/// Scaling every candidate by one factor never changes the tuner's
+/// *ranking*; what it buys is honest absolute predictions (reports,
+/// budget estimates) and a place to fold in future per-op refits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostCalibration {
+    /// Multiplier applied to modeled cycles per iteration
+    /// (1.0 = trust the model as-is).
+    pub scale: f64,
+}
+
+impl CostCalibration {
+    /// The uncalibrated model (what [`schedule_cost`] uses).
+    pub fn identity() -> CostCalibration {
+        CostCalibration { scale: 1.0 }
+    }
+
+    /// Pin the model to one measured kernel: `measured / modeled` cycles
+    /// per innermost iteration (`benches/bench_native.rs` derives the
+    /// measurement from a native-tier wall-clock run). Degenerate
+    /// measurements (zero, negative, NaN, or a zero model) fall back to
+    /// identity — an uncalibrated ranking still beats a poisoned one.
+    pub fn from_measurement(modeled: f64, measured: f64) -> CostCalibration {
+        let scale = measured / modeled;
+        if scale.is_finite() && scale > 0.0 {
+            CostCalibration { scale }
+        } else {
+            CostCalibration::identity()
+        }
+    }
+}
+
 /// Score `p`'s current schedule under a compiler + node model.
 pub fn schedule_cost(p: &Program, cm: &CompilerModel, node: &NodeModel) -> Result<ScheduleCost> {
+    schedule_cost_with(p, cm, node, CostCalibration::identity())
+}
+
+/// [`schedule_cost`] with a measured-cycles calibration applied to the
+/// serial term (and hence the score).
+pub fn schedule_cost_with(
+    p: &Program,
+    cm: &CompilerModel,
+    node: &NodeModel,
+    cal: CostCalibration,
+) -> Result<ScheduleCost> {
     let prog = crate::lowering::lower(p)?;
-    let cycles_per_iter = cycles_per_iteration(&prog, cm);
+    let cycles_per_iter = cycles_per_iteration(&prog, cm) * cal.scale;
     let spills = machine::analyze(&prog).worst_spills(cm);
     let parallel_speedup = parallel_speedup(p, node);
     Ok(ScheduleCost {
@@ -121,5 +167,35 @@ mod tests {
         let mut p = stream_loop();
         Pipeline::from_spec("doall").unwrap().run(&mut p).unwrap();
         assert!(parallel_speedup(&p, &node) <= node.cores as f64);
+    }
+
+    /// Calibration scales the absolute numbers but never the ranking,
+    /// and degenerate measurements collapse to identity.
+    #[test]
+    fn calibration_scales_without_reranking() {
+        let node = intel_node();
+        let cm = clang();
+        let p = stream_loop();
+        let mut par = stream_loop();
+        Pipeline::from_spec("doall").unwrap().run(&mut par).unwrap();
+
+        let base = schedule_cost(&p, &cm, &node).unwrap();
+        let cal = CostCalibration::from_measurement(2.0, 5.0);
+        assert!((cal.scale - 2.5).abs() < 1e-12);
+        let scaled = schedule_cost_with(&p, &cm, &node, cal).unwrap();
+        assert!((scaled.cycles_per_iter - base.cycles_per_iter * 2.5).abs() < 1e-9);
+        assert!((scaled.score - base.score * 2.5).abs() < 1e-9);
+
+        // Same factor on both candidates ⇒ same winner.
+        let seq = schedule_cost_with(&p, &cm, &node, cal).unwrap();
+        let opt = schedule_cost_with(&par, &cm, &node, cal).unwrap();
+        assert!(opt.score < seq.score);
+
+        for (modeled, measured) in [(0.0, 1.0), (1.0, 0.0), (1.0, -3.0), (1.0, f64::NAN)] {
+            assert_eq!(
+                CostCalibration::from_measurement(modeled, measured),
+                CostCalibration::identity()
+            );
+        }
     }
 }

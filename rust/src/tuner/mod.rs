@@ -42,7 +42,9 @@ use crate::ir::Program;
 use crate::machine::{clang, intel_node, CompilerModel, NodeModel};
 use crate::transforms::PipelineReport;
 
-pub use cost::{parallel_speedup, schedule_cost, ScheduleCost};
+pub use cost::{
+    parallel_speedup, schedule_cost, schedule_cost_with, CostCalibration, ScheduleCost,
+};
 pub use search::CandidateResult;
 pub use space::{Candidate, ParallelStrategy, SearchSpace};
 

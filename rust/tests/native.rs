@@ -1,0 +1,214 @@
+//! Native-tier acceptance: the VM as differential oracle.
+//!
+//! The JIT is only allowed to exist because these tests hold: every
+//! registered kernel, under every named pipeline configuration and the
+//! autotuner, produces outputs bit-identical to the bytecode VM at 1 and
+//! 3 threads; hostile checked programs trap with the same kind and index
+//! on both tiers; fuel metering agrees to the back-edge; and an artifact
+//! without a native form degrades silently to the VM.
+//!
+//! On hosts without the JIT (non-x86-64, non-Linux, W^X mmap refused)
+//! every test here skips — the VM remains the reference semantics.
+
+use silo::coordinator::{
+    compile_program, compile_program_verified, MemSchedules, PipelineSpec,
+};
+use silo::exec::{ExecLimits, Trap};
+use silo::ir::ContainerKind;
+use silo::kernels::{all_kernels, resolve, Preset};
+use silo::native::Tier;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The headline acceptance criterion: every registered kernel ×
+/// {none, cfg1, cfg2, cfg3, auto} × {1, 3} threads, argument containers
+/// bit-identical between the JIT and the VM, fuel identical
+/// single-threaded. One compile per (kernel, spec); both tiers execute
+/// the same artifact.
+#[test]
+fn every_kernel_matches_vm_bitwise_across_pipelines() {
+    if !silo::native::available() {
+        eprintln!("native tier unavailable on this host; VM-only");
+        return;
+    }
+    for entry in all_kernels() {
+        let kernel = resolve(entry.name).unwrap();
+        for spec_name in ["none", "cfg1", "cfg2", "cfg3", "auto"] {
+            let spec = PipelineSpec::parse(spec_name);
+            let compiled =
+                compile_program(kernel.program(), &spec, MemSchedules::default())
+                    .unwrap_or_else(|e| panic!("{}/{spec_name}: {e:#}", entry.name));
+            assert!(
+                compiled.native.is_some(),
+                "{}/{spec_name}: lowered bytecode did not JIT",
+                entry.name
+            );
+            let params = kernel.params(Preset::Tiny).unwrap();
+            let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            for threads in [1usize, 3] {
+                let (vm, _, vm_fuel, ran_vm) = compiled
+                    .execute_limited_tier(Tier::Vm, &params, &refs, threads, &ExecLimits::none())
+                    .unwrap();
+                let (nat, _, nat_fuel, ran_nat) = compiled
+                    .execute_limited_tier(
+                        Tier::Native,
+                        &params,
+                        &refs,
+                        threads,
+                        &ExecLimits::none(),
+                    )
+                    .unwrap();
+                assert_eq!(ran_vm, Tier::Vm);
+                assert_eq!(
+                    ran_nat,
+                    Tier::Native,
+                    "{}/{spec_name}: native request fell back",
+                    entry.name
+                );
+                if threads == 1 {
+                    assert_eq!(
+                        vm_fuel, nat_fuel,
+                        "{}/{spec_name}: back-edge counts diverged",
+                        entry.name
+                    );
+                }
+                // Observable outputs are argument containers (transients
+                // are scratch — privatized copies may hold different
+                // residue, exactly as in `validate_spec`).
+                for c in &compiled.program.containers {
+                    if c.kind != ContainerKind::Argument {
+                        continue;
+                    }
+                    let i = c.id.0 as usize;
+                    assert_eq!(
+                        bits(&vm.arrays[i]),
+                        bits(&nat.arrays[i]),
+                        "{}/{spec_name}@{threads}t: container `{}` diverged",
+                        entry.name,
+                        vm.names[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn hostile(file: &str) -> String {
+    format!("{}/tests/hostile/{file}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Checked-tier parity: a hostile program that escapes its bounds traps
+/// on the native tier with the *same* trap — same kind, same container,
+/// same index, same length — as the VM. The JIT's branch-to-stub
+/// `BoundsCheck` lowering is only correct if this holds exactly.
+#[test]
+fn hostile_checked_runs_trap_identically_on_both_tiers() {
+    if !silo::native::available() {
+        return;
+    }
+    for file in ["neg_stride_underrun.silo", "oob_gather.silo"] {
+        let kernel = resolve(&hostile(file)).unwrap();
+        let compiled = compile_program_verified(
+            kernel.program(),
+            &PipelineSpec::parse("none"),
+            MemSchedules::default(),
+        )
+        .unwrap_or_else(|e| panic!("{file}: {e:#}"));
+        assert!(
+            compiled.native.is_some(),
+            "{file}: checked bytecode (trap stubs) did not JIT"
+        );
+        let params = kernel.params(Preset::Tiny).unwrap();
+        let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let vm_err = compiled
+            .execute_limited_tier(Tier::Vm, &params, &refs, 1, &ExecLimits::none())
+            .unwrap_err();
+        let nat_err = compiled
+            .execute_limited_tier(Tier::Native, &params, &refs, 1, &ExecLimits::none())
+            .unwrap_err();
+        let vm_trap = *vm_err
+            .downcast_ref::<Trap>()
+            .unwrap_or_else(|| panic!("{file}: VM error is not a trap: {vm_err:#}"));
+        let nat_trap = *nat_err
+            .downcast_ref::<Trap>()
+            .unwrap_or_else(|| panic!("{file}: native error is not a trap: {nat_err:#}"));
+        assert!(
+            matches!(vm_trap, Trap::OutOfBounds { .. }),
+            "{file}: expected a bounds trap, got {vm_trap}"
+        );
+        assert_eq!(vm_trap, nat_trap, "{file}: tiers disagree on the trap");
+        // The container-name context must match too (same wire message).
+        assert_eq!(format!("{vm_err:#}"), format!("{nat_err:#}"), "{file}");
+    }
+}
+
+/// Fuel metering parity on a memory-safe but fuel-hungry program: the
+/// same budget exhausts on both tiers, and a generous budget completes
+/// with the identical back-edge count.
+#[test]
+fn fuel_metering_matches_vm() {
+    if !silo::native::available() {
+        return;
+    }
+    let kernel = resolve(&hostile("fuel_burn.silo")).unwrap();
+    let compiled = compile_program_verified(
+        kernel.program(),
+        &PipelineSpec::parse("none"),
+        MemSchedules::default(),
+    )
+    .unwrap();
+    assert!(compiled.native.is_some());
+    let params = kernel.params(Preset::Tiny).unwrap();
+    let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let tight = ExecLimits { fuel: Some(1_000), wall: None };
+    for tier in [Tier::Vm, Tier::Native] {
+        let err = compiled
+            .execute_limited_tier(tier, &params, &refs, 1, &tight)
+            .unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<Trap>(),
+            Some(&Trap::FuelExhausted),
+            "{}: {err:#}",
+            tier.as_str()
+        );
+    }
+    let roomy = ExecLimits { fuel: Some(1 << 40), wall: None };
+    let (vm, _, vm_fuel, _) = compiled
+        .execute_limited_tier(Tier::Vm, &params, &refs, 1, &roomy)
+        .unwrap();
+    let (nat, _, nat_fuel, ran_on) = compiled
+        .execute_limited_tier(Tier::Native, &params, &refs, 1, &roomy)
+        .unwrap();
+    assert_eq!(ran_on, Tier::Native);
+    assert_eq!(vm_fuel, nat_fuel, "metered back-edge counts diverged");
+    for (a, b) in vm.arrays.iter().zip(&nat.arrays) {
+        assert_eq!(bits(a), bits(b));
+    }
+}
+
+/// The fallback matrix's software row: an artifact with no native form
+/// serves a `Tier::Native` request on the VM and says so — never an
+/// error, never a lie about what ran.
+#[test]
+fn native_request_degrades_to_vm_without_native_form() {
+    let kernel = resolve("jacobi_1d").unwrap();
+    let mut compiled = compile_program(
+        kernel.program(),
+        &PipelineSpec::parse("cfg1"),
+        MemSchedules::default(),
+    )
+    .unwrap();
+    compiled.native = None; // simulate a host/program outside JIT support
+    let params = kernel.params(Preset::Tiny).unwrap();
+    let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+    let (_, _, _, ran_on) = compiled
+        .execute_limited_tier(Tier::Native, &params, &refs, 1, &ExecLimits::none())
+        .unwrap();
+    assert_eq!(ran_on, Tier::Vm, "fallback must report the tier that ran");
+}

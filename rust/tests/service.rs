@@ -526,6 +526,7 @@ fn start_untrusted(fuel: u64) -> Server {
         untrusted: true,
         fuel_limit: fuel,
         wall_ms: 60_000,
+        ..ServiceConfig::default()
     })
     .unwrap()
 }
@@ -613,4 +614,97 @@ fn untrusted_daemon_enforces_fuel() {
     assert!(err.contains("422"), "{err}");
     assert!(err.contains("fuel budget exhausted"), "{err}");
     server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Backend selection over the wire
+// ---------------------------------------------------------------------------
+
+/// `backend` on the run request picks the execution tier, the reply says
+/// what actually ran, both tiers agree bitwise, and an unknown backend
+/// string is a 400 — never a silent default.
+#[test]
+fn backend_selection_over_the_wire() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let source = "program svc_be {\n  param svc_be_N = { tiny: 16, small: 64, medium: 256 };\n  \
+                  array x[svc_be_N];\n  array y[svc_be_N];\n  for (svc_be_i = 0; svc_be_i < \
+                  svc_be_N; svc_be_i += 1) {\n    y[svc_be_i] = 2.0*x[svc_be_i] + \
+                  0.5*y[svc_be_i];\n  }\n}\n";
+    let reply = c.compile(source, "cfg1").unwrap();
+    let req = |backend: &str| RunRequest {
+        backend: Some(backend.to_string()),
+        ..RunRequest::default()
+    };
+    let vm = c.run(&reply.kernel, &req("vm")).unwrap();
+    assert_eq!(vm.backend, "vm");
+    let nat = c.run(&reply.kernel, &req("native")).unwrap();
+    if silo::native::available() {
+        assert_eq!(nat.backend, "native", "host JIT must serve this kernel");
+    } else {
+        assert_eq!(nat.backend, "vm", "no host JIT: silent VM fallback");
+    }
+    // Bitwise agreement between whatever ran and the VM baseline.
+    assert_eq!(vm.outputs, nat.outputs, "tiers disagree");
+    // Omitting `backend` uses the daemon default (vm for `start`).
+    let def = c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    assert_eq!(def.backend, "vm");
+    let err = c.run(&reply.kernel, &req("turbo")).unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    assert!(err.contains("unknown backend"), "{err}");
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Symbol interning stays bounded under cache churn
+// ---------------------------------------------------------------------------
+
+/// The ROADMAP-flagged leak: every submission used to intern its
+/// identifiers into the global symbol table forever. Now eviction
+/// releases an entry's service-created symbols, so a capacity-2 daemon
+/// fed six distinct programs keeps ~2 programs' worth of symbols live,
+/// not six. The intern table is process-global and this binary's tests
+/// run concurrently, so the count assertions retry with fresh
+/// identifiers until they observe a quiet window; the cache-shape
+/// assertions are deterministic and always checked.
+#[test]
+fn evicted_submissions_release_their_symbols() {
+    let src = |tag: &str| {
+        format!(
+            "program svc_sym_{tag} {{\n  param svc_sym_{tag}_N = {{ tiny: 8, small: 16, \
+             medium: 32 }};\n  array A[svc_sym_{tag}_N];\n  array B[svc_sym_{tag}_N];\n  \
+             for (svc_sym_{tag}_i = 0; svc_sym_{tag}_i < svc_sym_{tag}_N; svc_sym_{tag}_i \
+             += 1) {{\n    A[svc_sym_{tag}_i] = 2.0*B[svc_sym_{tag}_i];\n  }}\n  for \
+             (svc_sym_{tag}_j = 0; svc_sym_{tag}_j < svc_sym_{tag}_N; svc_sym_{tag}_j += 1) \
+             {{\n    B[svc_sym_{tag}_j] = A[svc_sym_{tag}_j] + 1.0;\n  }}\n}}\n"
+        )
+    };
+    let attempt = |round: usize| -> bool {
+        let server = start(2, 1, 2);
+        let c = client(&server);
+        // Fill the cache: two entries, ~2 programs' worth of symbols.
+        for i in 0..2 {
+            let r = c.compile(&src(&format!("r{round}t{i}")), "none").unwrap();
+            assert!(!r.cached);
+        }
+        let warm = metric(&c.metrics().unwrap(), "symbols_interned");
+        // Churn: four more distinct programs through the same two slots.
+        // Each interns 3 fresh syms (N, i, j); a leak would grow the
+        // live count by >= 12, release keeps it flat modulo noise from
+        // concurrently running tests.
+        for i in 2..6 {
+            let r = c.compile(&src(&format!("r{round}t{i}")), "none").unwrap();
+            assert!(!r.cached);
+        }
+        let m = c.metrics().unwrap();
+        assert_eq!(metric(&m, "entries"), 2, "{m}");
+        assert_eq!(metric(&m, "evictions"), 4, "{m}");
+        let end = metric(&m, "symbols_interned");
+        server.shutdown();
+        end - warm <= 6
+    };
+    assert!(
+        (0..8).any(attempt),
+        "live symbol count grew with every submission despite eviction"
+    );
 }

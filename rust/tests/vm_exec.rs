@@ -1,10 +1,59 @@
 //! Integration tests: IR → lowering → VM execution, including memory
-//! schedules and the threaded DOALL/DOACROSS runtime.
+//! schedules and the threaded DOALL/DOACROSS runtime — and the native
+//! JIT run differentially against the VM on the same handcrafted nests.
 
-use silo::exec::{CollectingTracer, Vm};
-use silo::ir::{ProgramBuilder, Program};
-use silo::symbolic::{int, load, Expr, Sym};
+use silo::coordinator::{compile_program, MemSchedules, OptConfig, PipelineSpec};
+use silo::exec::{CollectingTracer, ExecLimits, Vm};
+use silo::ir::{ContainerKind, Program, ProgramBuilder};
+use silo::native::Tier;
+use silo::symbolic::{fdiv, floordiv, imod, int, load, max, min, ContainerId, Expr, Sym};
 use silo::transforms::{silo_cfg1, silo_cfg2};
+
+/// Differential oracle: lower `p` once, execute on both tiers with the
+/// same bindings, and require bitwise-identical argument containers. A
+/// host without the JIT degrades to a VM-only smoke run.
+fn assert_native_matches_vm(
+    p: &Program,
+    params: &[(Sym, i64)],
+    inputs: &[(ContainerId, &[f64])],
+    threads_list: &[usize],
+) {
+    let compiled = compile_program(
+        p.clone(),
+        &PipelineSpec::Config(OptConfig::None),
+        MemSchedules::default(),
+    )
+    .unwrap_or_else(|e| panic!("{}: {e:#}", p.name));
+    if !silo::native::available() {
+        return;
+    }
+    assert!(compiled.native.is_some(), "{}: bytecode did not JIT", p.name);
+    for &threads in threads_list {
+        let (vm, _, vm_fuel, _) = compiled
+            .execute_limited_tier(Tier::Vm, params, inputs, threads, &ExecLimits::none())
+            .unwrap();
+        let (nat, _, nat_fuel, ran_on) = compiled
+            .execute_limited_tier(Tier::Native, params, inputs, threads, &ExecLimits::none())
+            .unwrap();
+        assert_eq!(ran_on, Tier::Native, "{}: fell back to the VM", p.name);
+        if threads == 1 {
+            assert_eq!(vm_fuel, nat_fuel, "{}: back-edge counts diverged", p.name);
+        }
+        for c in &compiled.program.containers {
+            if c.kind != ContainerKind::Argument {
+                continue;
+            }
+            let i = c.id.0 as usize;
+            let a: Vec<u64> = vm.arrays[i].iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u64> = nat.arrays[i].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(
+                a, b,
+                "{}@{threads}t: container `{}` diverged",
+                p.name, vm.names[i]
+            );
+        }
+    }
+}
 
 fn axpy() -> (Program, silo::symbolic::ContainerId, silo::symbolic::ContainerId, Sym) {
     let mut b = ProgramBuilder::new("axpy");
@@ -294,4 +343,167 @@ fn doall_parallel_matches_sequential() {
     let o1 = vm_seq.run(&[(n, 1000)], &[(x, &xs), (y, &ys)], 1).unwrap();
     let o2 = vm_par.run(&[(n, 1000)], &[(x, &xs), (y, &ys)], 4).unwrap();
     assert_eq!(o1.get(y), o2.get(y));
+}
+
+// ---------------------------------------------------------------------------
+// Native tier: the VM as differential oracle on the same nests
+// ---------------------------------------------------------------------------
+
+/// An op zoo for the JIT: integer floor-division/modulo/min/max in index
+/// arithmetic, float division, a sign-flipping guard, and a gather
+/// through computed indices — the scalar-op surface a stream kernel
+/// never touches.
+fn op_zoo() -> Program {
+    let mut b = ProgramBuilder::new("zoo");
+    let n = b.param_positive("vme9_N");
+    let a = b.array("A", Expr::Sym(n));
+    let o = b.array("O", Expr::Sym(n));
+    let i = b.sym("vme9_i");
+    b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+        let iv = Expr::Sym(i);
+        let idx = min(
+            floordiv(iv.clone() * int(7), int(3)),
+            Expr::Sym(n) - int(1),
+        );
+        let idx2 = max(imod(iv.clone() * int(5), Expr::Sym(n)), int(0));
+        b.assign(
+            o,
+            iv.clone(),
+            load(a, idx) + load(a, idx2) * Expr::real(0.5)
+                + fdiv(Expr::real(1.0), iv.clone() + Expr::real(1.0)),
+        );
+        // Executes only for i > 3: overwrites a rotated slot.
+        b.assign_if(
+            iv.clone() - int(3),
+            o,
+            imod(iv.clone() + int(2), Expr::Sym(n)),
+            load(a, iv.clone()) * Expr::real(-2.0),
+        );
+    });
+    b.finish()
+}
+
+/// The JIT agrees with the VM bit-for-bit on every handcrafted nest in
+/// this file: elementwise, sequential recurrence, the Fig. 4 nest under
+/// no transform / cfg1 / cfg2 (DOACROSS), the op zoo, the variable
+/// stride loop, and an f32 container — at 1 and 4 threads.
+#[test]
+fn native_differential_on_handcrafted_nests() {
+    // axpy, untransformed and DOALL-parallelized.
+    let (p, x, y, n) = axpy();
+    let xs: Vec<f64> = (0..100).map(|v| (v as f64) * 0.5).collect();
+    let ys: Vec<f64> = (0..100).map(|v| (v as f64) * -0.25).collect();
+    assert_native_matches_vm(&p, &[(n, 100)], &[(x, &xs), (y, &ys)], &[1]);
+    let mut doall = p.clone();
+    silo::transforms::parallelize_doall(&mut doall, true).unwrap();
+    assert_native_matches_vm(&doall, &[(n, 100)], &[(x, &xs), (y, &ys)], &[1, 4]);
+
+    // Fig. 4 nest: base, cfg1, cfg2 (pipelined DOACROSS).
+    let base = fig4_nest();
+    let fn_ = Sym::new("vme3_N");
+    let fm = Sym::new("vme3_M");
+    let bb = base.container_by_name("B").unwrap();
+    let cc = base.container_by_name("C").unwrap();
+    let (nn, mm) = (6i64, 9i64);
+    let binit: Vec<f64> = (0..nn * mm).map(|v| (v % 13) as f64 * 0.25 + 1.0).collect();
+    let cinit: Vec<f64> = (0..nn * mm).map(|v| (v % 7) as f64 * 0.5 - 1.0).collect();
+    let fig4_params = [(fn_, nn), (fm, mm)];
+    let fig4_inputs = [(bb, binit.as_slice()), (cc, cinit.as_slice())];
+    assert_native_matches_vm(&base, &fig4_params, &fig4_inputs, &[1]);
+    let mut c1 = fig4_nest();
+    silo_cfg1(&mut c1).unwrap();
+    assert_native_matches_vm(&c1, &fig4_params, &fig4_inputs, &[1, 4]);
+    let mut c2 = fig4_nest();
+    silo_cfg2(&mut c2).unwrap();
+    assert_native_matches_vm(&c2, &fig4_params, &fig4_inputs, &[1, 2, 4]);
+
+    // Scalar-op coverage.
+    let zoo = op_zoo();
+    let za = zoo.container_by_name("A").unwrap();
+    let zinit: Vec<f64> = (0..16).map(|v| (v as f64).sin() + 2.0).collect();
+    assert_native_matches_vm(&zoo, &[(Sym::new("vme9_N"), 16)], &[(za, &zinit)], &[1]);
+
+    // Variable stride (i += i) and f32 rounding, rebuilt as in the VM
+    // tests above.
+    use silo::symbolic::{func, FuncKind};
+    let mut b = ProgramBuilder::new("vstr_nat");
+    let vn = b.param_positive("vme10_N");
+    let va = b.array("A", int(8));
+    let vi = b.sym("vme10_i");
+    b.for_(vi, int(1), Expr::Sym(vn) + int(1), Expr::Sym(vi), |b| {
+        b.assign(va, func(FuncKind::Log2, vec![Expr::Sym(vi)]), Expr::real(1.0));
+    });
+    assert_native_matches_vm(&b.finish(), &[(Sym::new("vme10_N"), 64)], &[], &[1]);
+
+    use silo::ir::DType;
+    let mut b = ProgramBuilder::new("f32_nat");
+    let gn = b.param_positive("vme11_N");
+    let go = b.array_typed("O", Expr::Sym(gn), DType::F32);
+    let gi = b.sym("vme11_i");
+    b.for_(gi, int(0), Expr::Sym(gn), int(1), |b| {
+        b.assign(go, Expr::Sym(gi), Expr::real(0.1) * (Expr::Sym(gi) + Expr::real(1.0)));
+    });
+    assert_native_matches_vm(&b.finish(), &[(Sym::new("vme11_N"), 8)], &[], &[1]);
+}
+
+/// Ptr-inc and prefetch schedules execute natively and stay bitwise
+/// equal to the VM — the schedules whose wins the JIT exists to make
+/// real.
+#[test]
+fn native_differential_on_memory_schedules() {
+    // The Fig. 7 strided traversal under a pointer-increment schedule.
+    let mut b = ProgramBuilder::new("pinc_nat");
+    let ii = b.param_positive("vme12_I");
+    let jj = b.param_positive("vme12_J");
+    let si = b.param_positive("vme12_SI");
+    let sj = b.param_positive("vme12_SJ");
+    let a = b.array(
+        "A",
+        Expr::Sym(ii) * Expr::Sym(si) + Expr::Sym(jj) * Expr::Sym(sj) + int(4),
+    );
+    let o = b.array("O", Expr::Sym(ii) * Expr::Sym(jj));
+    let i = b.sym("vme12_i");
+    let j = b.sym("vme12_j");
+    b.for_(i, int(0), Expr::Sym(ii), int(1), |b| {
+        b.for_(j, int(0), Expr::Sym(jj), int(1), |b| {
+            let off = Expr::Sym(i) * Expr::Sym(si) + Expr::Sym(j) * Expr::Sym(sj);
+            b.assign(
+                o,
+                Expr::Sym(i) * Expr::Sym(jj) + Expr::Sym(j),
+                load(a, off.clone()) + load(a, off + int(2)),
+            );
+        });
+    });
+    let mut p = b.finish();
+    assert!(silo::schedules::schedule_all_ptr_inc(&mut p) >= 1);
+    let (iv, jv, siv, sjv) = (5i64, 7i64, 11i64, 1i64);
+    let ainit: Vec<f64> = (0..(iv * siv + jv * sjv + 4) as usize)
+        .map(|v| (v as f64).sin())
+        .collect();
+    assert_native_matches_vm(
+        &p,
+        &[
+            (Sym::new("vme12_I"), iv),
+            (Sym::new("vme12_J"), jv),
+            (Sym::new("vme12_SI"), siv),
+            (Sym::new("vme12_SJ"), sjv),
+        ],
+        &[(a, &ainit)],
+        &[1],
+    );
+
+    // A tiled loop with prefetch hints.
+    let mut b = ProgramBuilder::new("pfx_nat");
+    let n = b.param_positive("vme13_N");
+    let a = b.array("A", Expr::Sym(n));
+    let o = b.array("O", Expr::Sym(n));
+    let i = b.sym("vme13_i");
+    let il = b.for_id(i, int(0), Expr::Sym(n), int(1), |b| {
+        b.assign(o, Expr::Sym(i), load(a, Expr::Sym(i)) * Expr::real(3.0));
+    });
+    let mut p = b.finish();
+    silo::transforms::tile(&mut p, il, 8).unwrap();
+    assert!(silo::schedules::schedule_prefetches(&mut p) >= 1);
+    let ainit: Vec<f64> = (0..32).map(|v| v as f64).collect();
+    assert_native_matches_vm(&p, &[(Sym::new("vme13_N"), 32)], &[(a, &ainit)], &[1]);
 }
