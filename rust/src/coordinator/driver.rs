@@ -11,7 +11,7 @@
 
 use anyhow::{bail, Result};
 
-use crate::exec::{ExecLimits, Storage, Vm};
+use crate::exec::{ExecLimits, SpecStats, Storage, Vm};
 use crate::ir::Program;
 use crate::kernels::{self, Preset};
 use crate::native::{NativeProgram, Tier};
@@ -110,6 +110,9 @@ pub struct RunOutcome {
     /// The backend that actually executed (a `--backend native` request
     /// falls back to [`Tier::Vm`] when the JIT is unavailable).
     pub backend: Tier,
+    /// Speculation counters when the run went through
+    /// [`Tier::Speculative`] (`None` on the other backends).
+    pub spec: Option<SpecStats>,
 }
 
 /// Stable prefix of verifier-refusal messages. The service daemon
@@ -155,6 +158,12 @@ pub struct CompiledKernel {
     /// bytecode compiles its `BoundsCheck` guards into branch-to-trap
     /// stubs, so the checked/untrusted tier runs natively too.
     pub native: Option<NativeProgram>,
+    /// Speculative-tier artifact: the same program re-lowered with its
+    /// speculation candidates (see [`speculation_candidates`]) kept as
+    /// tree nodes for `exec::speculate`. `None` when the program has no
+    /// candidates — a [`Tier::Speculative`] request then degrades to
+    /// the VM.
+    pub spec: Option<Vm>,
 }
 
 impl CompiledKernel {
@@ -206,9 +215,78 @@ impl CompiledKernel {
                 return Ok((run.storage, t0.elapsed(), run.fuel_used, Tier::Native));
             }
         }
+        if backend == Tier::Speculative && self.spec.is_some() {
+            let (storage, wall, fuel, _) =
+                self.execute_speculative(params, inputs, threads, limits)?;
+            return Ok((storage, wall, fuel, Tier::Speculative));
+        }
         let (storage, wall, fuel) = self.execute_limited(params, inputs, threads, limits)?;
         Ok((storage, wall, fuel, Tier::Vm))
     }
+
+    /// Execute on the inspector-executor speculative tier: candidate
+    /// loops run chunk-parallel with runtime conflict detection and
+    /// fall back to sequential on misspeculation, so outputs are
+    /// bitwise identical to [`CompiledKernel::execute_limited`] either
+    /// way. Also returns the run's speculation counters. Degrades to
+    /// the plain VM (all-zero counters) when the artifact has no
+    /// speculation candidates.
+    pub fn execute_speculative(
+        &self,
+        params: &[(Sym, i64)],
+        inputs: &[(ContainerId, &[f64])],
+        threads: usize,
+        limits: &ExecLimits,
+    ) -> Result<(Storage, std::time::Duration, u64, SpecStats)> {
+        let t0 = std::time::Instant::now();
+        match &self.spec {
+            Some(svm) => {
+                let run =
+                    crate::exec::run_speculative(&svm.prog, params, inputs, threads, limits)?;
+                Ok((run.storage, t0.elapsed(), run.fuel_used, run.stats))
+            }
+            None => {
+                let run = self.vm.run_limited(params, inputs, threads, limits)?;
+                Ok((run.storage, t0.elapsed(), run.fuel_used, SpecStats::default()))
+            }
+        }
+    }
+}
+
+/// Top-level `Sequential` loops the speculative tier may attempt (see
+/// `exec::speculate`): fully sequential subtree, iteration-invariant
+/// stride (parameters only — chunk workers compute iteration `t` as
+/// `start + t·stride`), and at least one non-Register container write
+/// (something observable to privatize and commit).
+pub fn speculation_candidates(p: &Program) -> Vec<crate::ir::LoopId> {
+    fn fully_sequential(n: &crate::ir::Node) -> bool {
+        match n {
+            crate::ir::Node::Stmt(_) => true,
+            crate::ir::Node::Loop(l) => {
+                matches!(l.schedule, crate::ir::LoopSchedule::Sequential)
+                    && l.body.iter().all(fully_sequential)
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for n in &p.body {
+        let Some(l) = n.as_loop() else { continue };
+        if !matches!(l.schedule, crate::ir::LoopSchedule::Sequential)
+            || !l.body.iter().all(fully_sequential)
+        {
+            continue;
+        }
+        if l.stride.contains_load() || l.stride.symbols().iter().any(|s| !p.params.contains(s)) {
+            continue;
+        }
+        let writes_observable = n.stmts().iter().any(|s| {
+            p.container(s.write.container).kind != crate::ir::ContainerKind::Register
+        });
+        if writes_observable {
+            out.push(l.id);
+        }
+    }
+    out
 }
 
 /// Optimize `program` under `spec` (resolving `auto` through the tuner)
@@ -318,6 +396,22 @@ pub fn compile_program_with(
     } else {
         None
     };
+    // Re-lower with speculation candidates kept as tree nodes whenever
+    // the program has any. The artifact reuses the policy's CheckSet
+    // (check keys are schedule-independent), so the speculative tier
+    // inherits the same bounds-trap behavior as the sequential VM.
+    let candidates = speculation_candidates(&program);
+    let spec = if candidates.is_empty() {
+        None
+    } else {
+        let checks = match &report {
+            Some(r) => CheckSet::from_report(r),
+            None => CheckSet::none(),
+        };
+        crate::lowering::lower_speculative(&program, &checks, &candidates)
+            .ok()
+            .map(|prog| Vm { prog })
+    };
     Ok(CompiledKernel {
         name: program.name.clone(),
         program,
@@ -326,6 +420,7 @@ pub fn compile_program_with(
         tier,
         verify: report,
         native,
+        spec,
     })
 }
 
@@ -372,14 +467,24 @@ pub fn optimize_and_run_backend(
     let params: Vec<(Sym, i64)> = kernel.params(preset)?;
     let inputs = kernel.inputs(&compiled.program, &params)?;
     let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
-    let (storage, wall, _, ran_on) =
-        compiled.execute_limited_tier(backend, &params, &refs, threads, &ExecLimits::none())?;
+    let (storage, wall, ran_on, spec_stats) = if backend == Tier::Speculative
+        && compiled.spec.is_some()
+    {
+        let (storage, wall, _, stats) =
+            compiled.execute_speculative(&params, &refs, threads, &ExecLimits::none())?;
+        (storage, wall, Tier::Speculative, Some(stats))
+    } else {
+        let (storage, wall, _, ran_on) =
+            compiled.execute_limited_tier(backend, &params, &refs, threads, &ExecLimits::none())?;
+        (storage, wall, ran_on, None)
+    };
     Ok(RunOutcome {
         program: compiled.program,
         pipeline: compiled.pipeline,
         storage,
         wall,
         backend: ran_on,
+        spec: spec_stats,
     })
 }
 

@@ -7,8 +7,8 @@ pub mod report;
 
 pub use driver::{
     compile_program, compile_program_verified, compile_program_with, optimize_and_run,
-    optimize_and_run_backend, optimize_and_run_spec, validate_config, validate_spec,
-    CompiledKernel, MemSchedules, OptConfig, PipelineSpec, RunOutcome, SafetyPolicy,
-    REJECTED_PREFIX,
+    optimize_and_run_backend, optimize_and_run_spec, speculation_candidates, validate_config,
+    validate_spec, CompiledKernel, MemSchedules, OptConfig, PipelineSpec, RunOutcome,
+    SafetyPolicy, REJECTED_PREFIX,
 };
 pub use report::Table;

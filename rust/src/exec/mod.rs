@@ -3,12 +3,14 @@
 //! of the checked execution tier.
 
 pub mod parallel;
+pub mod speculate;
 pub mod trace;
 pub mod values;
 pub mod vm;
 
+pub use speculate::{run_speculative, SpecRun, SpecStats};
 pub use trace::{CollectingTracer, CountingTracer, NullTracer, TraceEvent, Tracer};
-pub use values::{Frame, Storage};
+pub use values::{Frame, SpecBits, SpecTracker, Storage};
 pub use vm::{exec_block, exec_nodes, ExecLimits, Vm, VmRun};
 
 /// A structured abort of the checked execution tier. The VM never

@@ -24,7 +24,7 @@ use super::Trap;
 /// evaluated once at entry (parallel loops require an iteration-invariant
 /// stride), so iteration `t` runs at `start + t·stride` and the whole
 /// space needs O(1) memory — no materialized value vector.
-fn stride_and_trip_count(
+pub(crate) fn stride_and_trip_count(
     l: &LoopExec,
     frame: &mut Frame,
     start_val: i64,
@@ -51,7 +51,7 @@ fn stride_and_trip_count(
 /// such workers trap on their first back-edge, which is correct when
 /// the remaining budget is smaller than the worker count (the total
 /// handed out never exceeds what remains).
-fn fuel_share(frame: &Frame, nthreads: usize) -> i64 {
+pub(crate) fn fuel_share(frame: &Frame, nthreads: usize) -> i64 {
     if frame.metered {
         frame.fuel.max(0) / nthreads as i64
     } else {
@@ -61,7 +61,7 @@ fn fuel_share(frame: &Frame, nthreads: usize) -> i64 {
 
 /// Settle worker results back into the parent frame: fold unspent fuel
 /// back into the budget and surface the first trap.
-fn settle(
+pub(crate) fn settle(
     frame: &mut Frame,
     share: i64,
     shares_handed_out: usize,

@@ -1,0 +1,411 @@
+//! Speculative chunk-parallel execution with runtime conflict detection
+//! (the "executor" half of the inspector-executor tier; LRPD-style).
+//!
+//! Loops the static δ-solver must leave `Sequential` — value-dependent
+//! subscripts, `mod`-strided footprints the lattice cannot bound — are
+//! force-lowered as tree nodes ([`crate::lowering::lower_speculative`])
+//! and run here in contiguous chunks, one worker per chunk, against
+//! **privatized copies** of every container the loop can write. Each
+//! worker logs its element-granular write set and *exposed-read* set
+//! (reads not preceded by a local write) in a [`SpecTracker`]. After the
+//! join, chunk `j` conflicts with the sequential order iff its exposed
+//! reads intersect the union of earlier chunks' writes. A clean run
+//! commits the privatized writes element-by-element in chunk order
+//! (last-write-wins reproduces sequential WAW semantics) — bitwise
+//! identical to the sequential execution. Any conflict, or any worker
+//! trap (a misspeculating chunk may compute garbage indices from stale
+//! values), discards the private buffers — shared storage has not been
+//! touched — and the loop re-runs sequentially, so outputs are bitwise
+//! identical either way and hostile programs trap exactly as they do on
+//! the sequential checked tier.
+
+use anyhow::Result;
+
+use crate::lowering::bytecode::{CodeBlock, ExecNode, ExecProgram, LoopExec, Op};
+use crate::symbolic::{ContainerId, Sym};
+
+use super::parallel::{fuel_share, stride_and_trip_count};
+use super::trace::NullTracer;
+use super::values::{Frame, SpecBits, SpecTracker, Storage};
+use super::vm::{exec_block, exec_nodes, ExecLimits};
+use super::Trap;
+
+/// Counters for one speculative-tier run (wired to the daemon's
+/// `/metrics` as `speculation_commits` / `speculation_aborts`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Chunk-parallel attempts (one per speculated loop execution with
+    /// trip count ≥ 2 and ≥ 2 threads).
+    pub attempted: u64,
+    /// Attempts whose conflict check passed; privatized writes were
+    /// committed to shared storage.
+    pub commits: u64,
+    /// Attempts discarded (conflict or worker trap) and re-run
+    /// sequentially.
+    pub aborts: u64,
+}
+
+/// Outcome of a speculative-tier run — [`super::VmRun`] plus the
+/// speculation counters.
+pub struct SpecRun {
+    pub storage: Storage,
+    pub fuel_used: u64,
+    pub stats: SpecStats,
+}
+
+/// Containers the loop subtree can write — these are privatized and
+/// tracked. Conservative over the bytecode: a store names its container
+/// statically even when its index is value-dependent.
+fn tracked_containers(prog: &ExecProgram, l: &LoopExec) -> Vec<usize> {
+    fn scan_block(b: &CodeBlock, written: &mut [bool]) {
+        for op in &b.ops {
+            match *op {
+                Op::Store { cont, .. }
+                | Op::StoreOff { cont, .. }
+                | Op::StoreF32 { cont, .. }
+                | Op::StoreOffF32 { cont, .. } => written[cont as usize] = true,
+                _ => {}
+            }
+        }
+    }
+    fn scan_loop(l: &LoopExec, written: &mut [bool]) {
+        scan_block(&l.pre_body, written);
+        scan_block(&l.prefetch, written);
+        for n in &l.body {
+            match n {
+                ExecNode::Code(c) => scan_block(c, written),
+                ExecNode::Loop(inner) => scan_loop(inner, written),
+            }
+        }
+        scan_block(&l.post_body, written);
+    }
+    let mut written = vec![false; prog.containers.len()];
+    scan_loop(l, &mut written);
+    written
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &w)| if w { Some(i) } else { None })
+        .collect()
+}
+
+/// One chunk-parallel attempt: privatize, run, conflict-check, commit.
+/// `Ok(true)` = committed; `Ok(false)` = aborted with shared storage
+/// untouched (the caller re-runs sequentially). Worker traps abort the
+/// attempt rather than surfacing — a misspeculating chunk can trap
+/// spuriously, so only the sequential re-run's verdict is trustworthy.
+#[allow(clippy::too_many_arguments)]
+fn run_chunks(
+    prog: &ExecProgram,
+    l: &LoopExec,
+    frame: &mut Frame,
+    lens: &[usize],
+    start_val: i64,
+    stride: i64,
+    count: usize,
+    threads: usize,
+    tracked: &[usize],
+) -> Result<bool, Trap> {
+    let nthreads = threads.min(count).max(1);
+    let chunk = count.div_ceil(nthreads);
+    let share = fuel_share(frame, nthreads);
+    let mut results: Vec<Result<Frame, Trap>> = Vec::new();
+    let mut handed_out = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..nthreads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(count);
+            if lo >= hi {
+                continue;
+            }
+            let mut my_frame = frame.fork(prog, lens);
+            my_frame.fuel = share;
+            // Privatize every writable container: the worker reads and
+            // writes a copy of the pre-loop contents. Shared storage is
+            // only read during the parallel phase, never written.
+            for &c in tracked {
+                let src = unsafe { std::slice::from_raw_parts(frame.bases[c], lens[c]) };
+                let mut buf = src.to_vec();
+                my_frame.bases[c] = buf.as_mut_ptr();
+                my_frame.private.push(buf);
+            }
+            my_frame.spec = Some(Box::new(SpecTracker::new(prog.containers.len(), tracked)));
+            handed_out += 1;
+            handles.push(scope.spawn(move || -> Result<Frame, Trap> {
+                let mut tr = NullTracer;
+                for idx in lo..hi {
+                    let v = start_val + (idx as i64) * stride;
+                    my_frame.ints[l.var_reg as usize] = v;
+                    my_frame.backedge()?;
+                    exec_block(&l.pre_body.ops, &mut my_frame, &mut tr)?;
+                    exec_block(&l.prefetch.ops, &mut my_frame, &mut tr)?;
+                    exec_nodes(prog, &l.body, &mut my_frame, lens, 1, &mut tr)?;
+                    exec_block(&l.post_body.ops, &mut my_frame, &mut tr)?;
+                }
+                Ok(my_frame)
+            }));
+        }
+        for h in handles {
+            results.push(h.join().expect("speculative worker panicked"));
+        }
+    });
+    // Fold unspent fuel back into the budget; a trapped worker's share
+    // is lost — the cost of misspeculating under a fuel budget.
+    if frame.metered {
+        let distributed = share.saturating_mul(handed_out as i64);
+        let mut remaining = frame.fuel.saturating_sub(distributed);
+        for r in &results {
+            if let Ok(wf) = r {
+                remaining = remaining.saturating_add(wf.fuel.max(0));
+            }
+        }
+        frame.fuel = remaining;
+    }
+    let mut workers = Vec::with_capacity(results.len());
+    for r in results {
+        match r {
+            Ok(wf) => workers.push(wf),
+            Err(_) => return Ok(false),
+        }
+    }
+    // LRPD conflict check in chunk order: chunk j is unsound iff it read
+    // (before locally writing) an element some earlier chunk wrote.
+    let mut earlier_writes: Vec<SpecBits> = vec![SpecBits::default(); tracked.len()];
+    for wf in &workers {
+        let sp = wf.spec.as_deref().expect("speculative worker lost its tracker");
+        for slot in 0..tracked.len() {
+            if sp.exposed[slot].intersects(&earlier_writes[slot]) {
+                return Ok(false);
+            }
+        }
+        for slot in 0..tracked.len() {
+            earlier_writes[slot].or_into(&sp.writes[slot]);
+        }
+    }
+    // Clean: commit written elements in chunk order (later chunks
+    // overwrite — exactly sequential last-write-wins).
+    for wf in &workers {
+        let sp = wf.spec.as_deref().expect("speculative worker lost its tracker");
+        for (slot, &c) in tracked.iter().enumerate() {
+            for e in sp.writes[slot].iter_set() {
+                if e >= lens[c] {
+                    continue;
+                }
+                unsafe { *frame.bases[c].add(e) = *wf.bases[c].add(e) };
+            }
+        }
+    }
+    Ok(true)
+}
+
+/// One chunk-parallel speculative attempt on `l` WITHOUT the sequential
+/// fallback: `Ok(true)` = committed, `Ok(false)` = aborted with shared
+/// storage bit-identical to its pre-attempt state. Public so the
+/// abort-path tests can observe the discarded state directly; the
+/// normal entry point is [`exec_spec_nodes`].
+pub fn try_speculate(
+    prog: &ExecProgram,
+    l: &LoopExec,
+    frame: &mut Frame,
+    lens: &[usize],
+    threads: usize,
+) -> Result<bool, Trap> {
+    let mut tr = NullTracer;
+    exec_block(&l.start.ops, frame, &mut tr)?;
+    let start_val = frame.ints[l.start_reg as usize];
+    exec_block(&l.end.ops, frame, &mut tr)?;
+    let end_val = frame.ints[l.end_reg as usize];
+    let (s, count) = stride_and_trip_count(l, frame, start_val, end_val)?;
+    if count == 0 {
+        return Ok(true);
+    }
+    let tracked = tracked_containers(prog, l);
+    run_chunks(prog, l, frame, lens, start_val, s, count, threads, &tracked)
+}
+
+/// Execute one speculatively-scheduled tree loop end to end: attempt the
+/// chunk-parallel run when it can pay off, fall back to the sequential
+/// path (bitwise-identical to the plain VM) on abort or when the loop is
+/// too small to bother.
+pub fn exec_spec_loop(
+    prog: &ExecProgram,
+    l: &LoopExec,
+    frame: &mut Frame,
+    lens: &[usize],
+    threads: usize,
+    stats: &mut SpecStats,
+) -> Result<(), Trap> {
+    let mut tr = NullTracer;
+    exec_block(&l.start.ops, frame, &mut tr)?;
+    let start_val = frame.ints[l.start_reg as usize];
+    exec_block(&l.end.ops, frame, &mut tr)?;
+    let end_val = frame.ints[l.end_reg as usize];
+    let (s0, count) = stride_and_trip_count(l, frame, start_val, end_val)?;
+    let tracked = tracked_containers(prog, l);
+    if threads >= 2 && count >= 2 && !tracked.is_empty() {
+        stats.attempted += 1;
+        if run_chunks(prog, l, frame, lens, start_val, s0, count, threads, &tracked)? {
+            stats.commits += 1;
+            exec_block(&l.post_loop.ops, frame, &mut tr)?;
+            return Ok(());
+        }
+        stats.aborts += 1;
+    }
+    // Sequential path — both the too-small case and the misspeculation
+    // fallback. Mirrors the VM's Seq tree loop exactly.
+    let mut v = start_val;
+    loop {
+        frame.ints[l.var_reg as usize] = v;
+        exec_block(&l.stride.ops, frame, &mut tr)?;
+        let s = frame.ints[l.stride_reg as usize];
+        if s == 0 || (s > 0 && v >= end_val) || (s < 0 && v <= end_val) {
+            break;
+        }
+        frame.backedge()?;
+        exec_block(&l.pre_body.ops, frame, &mut tr)?;
+        exec_block(&l.prefetch.ops, frame, &mut tr)?;
+        exec_nodes(prog, &l.body, frame, lens, 1, &mut tr)?;
+        exec_block(&l.post_body.ops, frame, &mut tr)?;
+        v += s;
+    }
+    exec_block(&l.post_loop.ops, frame, &mut tr)?;
+    Ok(())
+}
+
+/// Execute a node sequence, routing loops listed in
+/// [`ExecProgram::spec_loops`] through the speculative runtime and
+/// everything else through the plain tree executor.
+pub fn exec_spec_nodes(
+    prog: &ExecProgram,
+    nodes: &[ExecNode],
+    frame: &mut Frame,
+    lens: &[usize],
+    threads: usize,
+    stats: &mut SpecStats,
+) -> Result<(), Trap> {
+    let mut tr = NullTracer;
+    for n in nodes {
+        match n {
+            ExecNode::Loop(l) if prog.spec_loops.contains(&l.loop_id) => {
+                exec_spec_loop(prog, l, frame, lens, threads, stats)?;
+            }
+            _ => exec_nodes(prog, std::slice::from_ref(n), frame, lens, threads, &mut tr)?,
+        }
+    }
+    Ok(())
+}
+
+/// Mirror of [`super::Vm::run_limited_traced`] for the speculative tier:
+/// allocate, seed inputs, run under limits, report fuel and speculation
+/// counters. Traps surface exactly as on the sequential checked tier.
+pub fn run_speculative(
+    prog: &ExecProgram,
+    params: &[(Sym, i64)],
+    inputs: &[(ContainerId, &[f64])],
+    threads: usize,
+    limits: &ExecLimits,
+) -> Result<SpecRun> {
+    let mut storage = Storage::allocate(prog, params)?;
+    for (c, data) in inputs {
+        storage.set(*c, data)?;
+    }
+    let lens: Vec<usize> = storage.arrays.iter().map(|a| a.len()).collect();
+    let mut frame = Frame::new(prog, &mut storage, params);
+    let initial_fuel = match limits.fuel {
+        Some(f) => {
+            frame.metered = true;
+            i64::try_from(f).unwrap_or(i64::MAX).max(1)
+        }
+        None => i64::MAX,
+    };
+    frame.fuel = initial_fuel;
+    frame.deadline = limits.wall.map(|w| std::time::Instant::now() + w);
+    let mut stats = SpecStats::default();
+    let res = exec_spec_nodes(prog, &prog.root, &mut frame, &lens, threads, &mut stats);
+    let fuel_used = initial_fuel.saturating_sub(frame.fuel.max(0)) as u64;
+    drop(frame);
+    match res {
+        Ok(()) => Ok(SpecRun {
+            storage,
+            fuel_used,
+            stats,
+        }),
+        Err(trap @ Trap::OutOfBounds { cont, .. }) => {
+            let name = prog
+                .containers
+                .get(cont as usize)
+                .map(|c| c.name.clone())
+                .unwrap_or_else(|| format!("#{cont}"));
+            Err(anyhow::Error::new(trap).context(format!("in container `{name}`")))
+        }
+        Err(trap) => Err(anyhow::Error::new(trap)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{int, load, Expr};
+    use crate::verify::CheckSet;
+
+    /// Forced misspeculation discards every private buffer: after an
+    /// aborted [`try_speculate`] (no sequential fallback), shared storage
+    /// is bit-identical to its pre-attempt state. This is the invariant
+    /// the abort path's correctness rests on — the sequential re-run in
+    /// [`exec_spec_loop`] starts from exactly the state the plain VM
+    /// would have seen.
+    #[test]
+    fn aborted_attempt_leaves_storage_bit_identical_to_pre_run_state() {
+        // `A[i+1] = A[i] + X[i]`: a loop-carried RAW chain at distance 1.
+        // Any split into >= 2 chunks makes the later chunk's first read
+        // (`A[chunk_start]`) an exposed read of an earlier chunk's write,
+        // so the LRPD check must reject every chunk-parallel attempt.
+        let mut b = ProgramBuilder::new("spec_abort_unit");
+        let a = b.array("A", int(65));
+        let x = b.array("X", int(64));
+        let i = b.sym("sau_i");
+        b.for_(i, int(0), int(64), int(1), |b| {
+            b.assign(
+                a,
+                Expr::Sym(i) + int(1),
+                load(a, Expr::Sym(i)) + load(x, Expr::Sym(i)),
+            );
+        });
+        let p = b.finish();
+        let loop_id = p.body[0].as_loop().unwrap().id;
+        let prog = crate::lowering::lower_speculative(&p, &CheckSet::none(), &[loop_id])
+            .expect("speculative lowering");
+
+        let mut storage = Storage::allocate(&prog, &[]).unwrap();
+        for (c, data) in crate::kernels::gen_inputs(&p, &[], crate::kernels::default_init)
+            .unwrap()
+        {
+            storage.set(c, &data).unwrap();
+        }
+        let before = storage.arrays.clone();
+        let lens: Vec<usize> = storage.arrays.iter().map(|v| v.len()).collect();
+
+        let mut frame = Frame::new(&prog, &mut storage, &[]);
+        let l = match &prog.root[0] {
+            ExecNode::Loop(l) => l,
+            other => panic!("expected a tree loop at the root, got {other:?}"),
+        };
+        for threads in [2usize, 4, 8] {
+            let committed = try_speculate(&prog, l, &mut frame, &lens, threads)
+                .expect("no trap on the conflicting loop");
+            assert!(!committed, "{threads} threads: conflicting loop must abort");
+        }
+        drop(frame);
+
+        for (ci, (was, now)) in before.iter().zip(storage.arrays.iter()).enumerate() {
+            assert_eq!(was.len(), now.len());
+            for (j, (x0, x1)) in was.iter().zip(now.iter()).enumerate() {
+                assert!(
+                    x0.to_bits() == x1.to_bits(),
+                    "container #{ci}[{j}] mutated by an aborted attempt: {x0} -> {x1}"
+                );
+            }
+        }
+    }
+}

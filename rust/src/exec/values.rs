@@ -61,6 +61,119 @@ impl Storage {
 /// (`Instant::now` is far too expensive to call per iteration).
 pub const DEADLINE_TICK: u32 = 4096;
 
+/// Word-packed bitmap over a container's element indices; grows lazily
+/// to the highest index touched.
+#[derive(Debug, Default, Clone)]
+pub struct SpecBits {
+    words: Vec<u64>,
+}
+
+impl SpecBits {
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        let w = i / 64;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        self.words[w] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        let w = i / 64;
+        w < self.words.len() && self.words[w] & (1u64 << (i % 64)) != 0
+    }
+
+    /// `self |= other`.
+    pub fn or_into(&mut self, other: &SpecBits) {
+        if other.words.len() > self.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        for (d, s) in self.words.iter_mut().zip(&other.words) {
+            *d |= s;
+        }
+    }
+
+    /// Whether `self ∩ other` is non-empty.
+    pub fn intersects(&self, other: &SpecBits) -> bool {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .any(|(a, b)| a & b != 0)
+    }
+
+    /// Indices of all set bits, ascending.
+    pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(w, &bits)| {
+            (0..64).filter_map(move |b| {
+                if bits & (1u64 << b) != 0 {
+                    Some(w * 64 + b)
+                } else {
+                    None
+                }
+            })
+        })
+    }
+}
+
+/// Per-chunk access log for the speculative tier (LRPD-style): for each
+/// tracked container, which elements the chunk wrote and which it read
+/// *before* any local write (exposed reads). Chunk `j` conflicts with
+/// the sequential order iff its exposed-read set intersects the union
+/// of earlier chunks' write sets.
+///
+/// Lives behind `Frame::spec` so the VM's memory ops pay only an
+/// `Option` test on non-speculative runs — no extra bytecode, and the
+/// native tier (which never speculates) is untouched.
+#[derive(Debug)]
+pub struct SpecTracker {
+    /// Container id → dense slot index, `u32::MAX` for untracked
+    /// containers (read-only inputs, Register-kind scratch).
+    slot: Vec<u32>,
+    /// Per-slot element-write bitmaps.
+    pub writes: Vec<SpecBits>,
+    /// Per-slot exposed-read bitmaps.
+    pub exposed: Vec<SpecBits>,
+}
+
+impl SpecTracker {
+    /// Track the containers listed in `tracked` (dense container ids)
+    /// out of `n_containers` total.
+    pub fn new(n_containers: usize, tracked: &[usize]) -> SpecTracker {
+        let mut slot = vec![u32::MAX; n_containers];
+        for (s, &c) in tracked.iter().enumerate() {
+            slot[c] = s as u32;
+        }
+        SpecTracker {
+            slot,
+            writes: vec![SpecBits::default(); tracked.len()],
+            exposed: vec![SpecBits::default(); tracked.len()],
+        }
+    }
+
+    /// Record one access. Negative or out-of-range indices are ignored:
+    /// on the checked tier the bounds guard traps before the access is
+    /// performed, and unchecked speculative runs are never attempted.
+    #[inline]
+    pub fn note(&mut self, cont: usize, at: i64, write: bool) {
+        let Some(&s) = self.slot.get(cont) else {
+            return;
+        };
+        if s == u32::MAX {
+            return;
+        }
+        let Ok(i) = usize::try_from(at) else {
+            return;
+        };
+        let s = s as usize;
+        if write {
+            self.writes[s].set(i);
+        } else if !self.writes[s].get(i) {
+            self.exposed[s].set(i);
+        }
+    }
+}
+
 /// Per-thread execution frame: register files plus per-container base
 /// pointers (private containers point at thread-local buffers), the
 /// container lengths for checked-tier bounds guards, and the
@@ -86,6 +199,9 @@ pub struct Frame {
     /// Thread-local buffers backing private containers (kept alive while
     /// `bases` points into them).
     pub private: Vec<Vec<f64>>,
+    /// Access log for the speculative tier; `None` (the overwhelmingly
+    /// common case) costs one branch per memory op.
+    pub spec: Option<Box<SpecTracker>>,
 }
 
 impl Frame {
@@ -109,6 +225,7 @@ impl Frame {
             deadline: None,
             tick: DEADLINE_TICK,
             private: Vec::new(),
+            spec: None,
         }
     }
 
@@ -127,6 +244,7 @@ impl Frame {
             deadline: self.deadline,
             tick: DEADLINE_TICK,
             private: Vec::new(),
+            spec: None,
         };
         for (i, c) in prog.containers.iter().enumerate() {
             if c.private {

@@ -285,6 +285,15 @@ pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) -> Result<()
             unsafe { f.bases[$cont as usize].add($idx as usize) }
         }};
     }
+    // Speculative-tier access log: a single well-predicted branch per
+    // memory op when no tracker is installed (the common case).
+    macro_rules! spec_note {
+        ($cont:expr, $at:expr, $write:expr) => {
+            if let Some(sp) = f.spec.as_deref_mut() {
+                sp.note($cont as usize, $at, $write);
+            }
+        };
+    }
     while pc < n {
         // Safety: pc < n checked by the loop condition; jump targets are
         // compiler-generated indices within the block.
@@ -335,6 +344,7 @@ pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) -> Result<()
             Op::Load { dst, cont, idx } => {
                 let at = i!(idx);
                 tr.access(cont, at, false, false);
+                spec_note!(cont, at, false);
                 fset!(dst, unsafe { *heap_idx!(cont, at) });
             }
             Op::LoadOff {
@@ -345,16 +355,19 @@ pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) -> Result<()
             } => {
                 let at = i!(idx) + off as i64;
                 tr.access(cont, at, false, false);
+                spec_note!(cont, at, false);
                 fset!(dst, unsafe { *heap_idx!(cont, at) });
             }
             Op::LoadAt2 { dst, cont, a, b } => {
                 let at = i!(a) + i!(b);
                 tr.access(cont, at, false, false);
+                spec_note!(cont, at, false);
                 fset!(dst, unsafe { *heap_idx!(cont, at) });
             }
             Op::Store { cont, idx, src } => {
                 let at = i!(idx);
                 tr.access(cont, at, true, false);
+                spec_note!(cont, at, true);
                 unsafe { *heap_idx!(cont, at) = fl!(src) };
             }
             Op::StoreOff {
@@ -365,11 +378,13 @@ pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) -> Result<()
             } => {
                 let at = i!(idx) + off as i64;
                 tr.access(cont, at, true, false);
+                spec_note!(cont, at, true);
                 unsafe { *heap_idx!(cont, at) = fl!(src) };
             }
             Op::StoreF32 { cont, idx, src } => {
                 let at = i!(idx);
                 tr.access(cont, at, true, false);
+                spec_note!(cont, at, true);
                 unsafe { *heap_idx!(cont, at) = fl!(src) as f32 as f64 };
             }
             Op::StoreOffF32 {
@@ -380,6 +395,7 @@ pub fn exec_block<T: Tracer>(ops: &[Op], f: &mut Frame, tr: &mut T) -> Result<()
             } => {
                 let at = i!(idx) + off as i64;
                 tr.access(cont, at, true, false);
+                spec_note!(cont, at, true);
                 unsafe { *heap_idx!(cont, at) = fl!(src) as f32 as f64 };
             }
             Op::Prefetch { cont, idx, write } => {

@@ -1,0 +1,545 @@
+//! Inspector pass: runtime certification of loop parallelism.
+//!
+//! The paper's dependence test is *static* — symbolic δ-solving over the
+//! access functions. Mod-strided and parameter-dependent subscripts
+//! (`csr_gather`, `gather_stride` under `--pipeline none`) defeat it and
+//! run sequentially even when, for the concrete parameters of *this*
+//! invocation, no two iterations ever touch the same element. The
+//! inspector (Baghdadi et al., PAPERS.md arXiv 1111.6756; DESIGN.md
+//! §Inspector & Speculation) recovers that parallelism dynamically: it
+//! evaluates the symbolic access functions over the concrete iteration
+//! space — cheap, since the expressions are exactly what the VM already
+//! interprets — and issues a per-(loop, parameter-set) certificate:
+//!
+//! * [`Certificate::Doall`] — no cross-iteration dependence at all;
+//! * [`Certificate::Doacross`] — every cross-iteration dependence
+//!   distance is a multiple of the *exact* computed `delta ≥ 2`;
+//! * [`Certificate::Sequential`] — dependences at unit/irregular
+//!   distance: no parallel schedule is licensed;
+//! * [`Certificate::InputDependent`] — a subscript or guard reads array
+//!   *data*, so the footprint is not a function of the parameters alone
+//!   (the speculative tier's territory — see `exec::speculate`);
+//! * [`Certificate::BudgetExceeded`] — the iteration space is too large
+//!   to enumerate within the inspection budget.
+//!
+//! Certificates are *theorems about one parameter binding*: the daemon
+//! memoizes them per (kernel, param-set) in its content-addressed cache
+//! (`service/server.rs`), and [`apply_certificates`] re-schedules a
+//! program clone (`Doall → LoopSchedule::Parallel`, `Doacross{δ≥2} →
+//! LoopSchedule::Doacross`) for exactly that binding.
+//!
+//! Dependence distances are exact, not approximate: per touched element
+//! the inspector folds a running gcd over a generator set of the actual
+//! dependence-pair distances (first-write anchor + consecutive-write
+//! gaps), which spans the same lattice as the full pairwise set — the
+//! brute-force conflict oracle in `rust/tests/inspect.rs` pins equality
+//! on the whole corpus plus fuzzed programs.
+
+use std::collections::HashMap;
+
+use crate::ir::{
+    AccessKind, ContainerKind, Loop, LoopId, LoopSchedule, Node, Program, ReleaseSpec, WaitSpec,
+};
+use crate::symbolic::eval::eval_int;
+use crate::symbolic::{ContainerId, Expr, Sym};
+
+/// Default cap on footprint evaluations per program inspection. Beyond
+/// this the inspector reports [`Certificate::BudgetExceeded`] instead of
+/// stalling the daemon: inspection must stay cheap relative to the run.
+pub const DEFAULT_BUDGET: usize = 1 << 20;
+
+/// What the inspector concluded about one loop under one param binding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Certificate {
+    /// No element is touched by two different iterations with a write
+    /// involved: every iteration is independent.
+    Doall,
+    /// Cross-iteration dependences exist, but every dependence distance
+    /// is a multiple of `delta` (the exact gcd of all distances).
+    Doacross { delta: i64 },
+    /// Dependences at distance gcd 1 — nothing better than source order.
+    Sequential,
+    /// A subscript or guard contains a data load (or a non-integer
+    /// guard), so the footprint cannot be enumerated from parameters.
+    InputDependent { reason: String },
+    /// Enumeration exceeded the inspection budget.
+    BudgetExceeded,
+}
+
+impl Certificate {
+    /// Does this certificate license a parallel schedule?
+    pub fn parallelizable(&self) -> bool {
+        match self {
+            Certificate::Doall => true,
+            Certificate::Doacross { delta } => *delta >= 2,
+            _ => false,
+        }
+    }
+
+    /// Compact wire/CLI label (`doall`, `doacross(4)`, …).
+    pub fn label(&self) -> String {
+        match self {
+            Certificate::Doall => "doall".to_string(),
+            Certificate::Doacross { delta } => format!("doacross({delta})"),
+            Certificate::Sequential => "sequential".to_string(),
+            Certificate::InputDependent { .. } => "input-dependent".to_string(),
+            Certificate::BudgetExceeded => "budget-exceeded".to_string(),
+        }
+    }
+}
+
+/// One inspected loop.
+#[derive(Debug, Clone)]
+pub struct LoopInspection {
+    pub loop_id: LoopId,
+    pub var: Sym,
+    /// Trip count actually enumerated (0 for uncertified loops).
+    pub iters: usize,
+    pub certificate: Certificate,
+}
+
+/// The inspector's result for one program under one parameter binding.
+#[derive(Debug, Clone)]
+pub struct InspectReport {
+    pub kernel: String,
+    pub params: Vec<(Sym, i64)>,
+    /// Top-level sequential loops, in source order.
+    pub loops: Vec<LoopInspection>,
+    /// Footprint evaluations spent across all loops.
+    pub evals: usize,
+}
+
+impl InspectReport {
+    /// Loops whose certificate licenses a parallel schedule.
+    pub fn certified(&self) -> usize {
+        self.loops.iter().filter(|l| l.certificate.parallelizable()).count()
+    }
+
+    /// Human-readable per-loop table (CLI `silo inspect`).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        if self.loops.is_empty() {
+            out.push_str("no sequential top-level loops to inspect\n");
+            return out;
+        }
+        for l in &self.loops {
+            let extra = match &l.certificate {
+                Certificate::InputDependent { reason } => format!(" ({reason})"),
+                _ => format!(" ({} iteration(s))", l.iters),
+            };
+            out.push_str(&format!(
+                "L{} {}: {}{extra}\n",
+                l.loop_id.0,
+                l.var.name(),
+                l.certificate.label()
+            ));
+        }
+        out.push_str(&format!(
+            "{} loop(s) inspected, {} certified parallel, {} footprint eval(s)\n",
+            self.loops.len(),
+            self.certified(),
+            self.evals
+        ));
+        out
+    }
+}
+
+/// Per-element dependence-distance state. `g` accumulates the gcd of a
+/// generator set of actual dependence distances (see module docs).
+#[derive(Default)]
+struct ElemState {
+    /// First read iteration seen before any write.
+    pre_r0: Option<i64>,
+    /// gcd of (read_iter − pre_r0) over pre-write reads (read-read gaps;
+    /// only ever *combined* with the first-write anchor, which restores
+    /// exactness — the combined value is gcd{|first_write − read|}).
+    pre_g: i64,
+    first_write: Option<i64>,
+    last_write: i64,
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Cross-iteration dependence tracker for one loop enumeration.
+struct Footprint {
+    elems: HashMap<(ContainerId, i64), ElemState>,
+    /// Running gcd of all cross-iteration dependence distances; 0 = none.
+    g: i64,
+}
+
+impl Footprint {
+    fn new() -> Footprint {
+        Footprint { elems: HashMap::new(), g: 0 }
+    }
+
+    fn read(&mut self, c: ContainerId, at: i64, iter: i64) {
+        let e = self.elems.entry((c, at)).or_default();
+        match e.first_write {
+            Some(w0) => {
+                if iter != w0 {
+                    self.g = gcd(self.g, iter - w0);
+                }
+            }
+            None => match e.pre_r0 {
+                Some(r0) => e.pre_g = gcd(e.pre_g, iter - r0),
+                None => e.pre_r0 = Some(iter),
+            },
+        }
+    }
+
+    fn write(&mut self, c: ContainerId, at: i64, iter: i64) {
+        let e = self.elems.entry((c, at)).or_default();
+        match e.first_write {
+            Some(_) => {
+                if iter != e.last_write {
+                    self.g = gcd(self.g, iter - e.last_write);
+                }
+                e.last_write = iter;
+            }
+            None => {
+                e.first_write = Some(iter);
+                e.last_write = iter;
+                if let Some(r0) = e.pre_r0 {
+                    // gcd{first_write − pre_read} == gcd(w − r0, pre_g).
+                    let pre = gcd(iter - r0, e.pre_g);
+                    if pre != 0 {
+                        self.g = gcd(self.g, pre);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Why a loop could not be enumerated — distinguished from a completed
+/// enumeration so the two uncertified verdicts stay separate.
+enum Obstacle {
+    InputDependent(String),
+    Budget,
+}
+
+struct Enumerator<'a> {
+    p: &'a Program,
+    env: Vec<(Sym, i64)>,
+    fp: Footprint,
+    evals: usize,
+    budget: usize,
+    /// Containers the loop ever writes (superset under guards) — reads
+    /// of never-written containers carry no dependence and are skipped.
+    written: Vec<bool>,
+}
+
+impl Enumerator<'_> {
+    fn charge(&mut self) -> Result<(), Obstacle> {
+        self.evals += 1;
+        if self.evals > self.budget {
+            return Err(Obstacle::Budget);
+        }
+        Ok(())
+    }
+
+    fn eval(&mut self, e: &Expr, what: &str) -> Result<i64, Obstacle> {
+        self.charge()?;
+        if e.contains_load() {
+            return Err(Obstacle::InputDependent(format!("{what} reads array data")));
+        }
+        eval_int(e, &self.env)
+            .map_err(|err| Obstacle::InputDependent(format!("{what} not evaluable: {err}")))
+    }
+
+    /// Record one statement's accesses under outer-loop iteration `iter`.
+    fn stmt(&mut self, s: &crate::ir::Stmt, iter: i64) -> Result<(), Obstacle> {
+        if let Some(g) = &s.guard {
+            if self.eval(g, "guard")? <= 0 {
+                return Ok(());
+            }
+        }
+        for a in s.accesses() {
+            let tracked = self.written[a.container.0 as usize]
+                && self.p.container(a.container).kind != ContainerKind::Register;
+            if !tracked {
+                self.charge()?;
+                continue;
+            }
+            let at = self.eval(&a.offset, "subscript")?;
+            match a.kind {
+                AccessKind::Read => self.fp.read(a.container, at, iter),
+                AccessKind::Write => self.fp.write(a.container, at, iter),
+            }
+        }
+        Ok(())
+    }
+
+    /// Enumerate one node's footprint under outer-loop iteration `iter`.
+    fn node(&mut self, n: &Node, iter: i64) -> Result<(), Obstacle> {
+        match n {
+            Node::Stmt(s) => self.stmt(s, iter),
+            Node::Loop(l) => {
+                let start = self.eval(&l.start, "loop start")?;
+                let end = self.eval(&l.end, "loop end")?;
+                let mut v = start;
+                loop {
+                    self.env.push((l.var, v));
+                    let s = self.eval(&l.stride, "loop stride");
+                    let s = match s {
+                        Ok(s) => s,
+                        Err(e) => {
+                            self.env.pop();
+                            return Err(e);
+                        }
+                    };
+                    if s == 0 || (s > 0 && v >= end) || (s < 0 && v <= end) {
+                        self.env.pop();
+                        break;
+                    }
+                    let r = l.body.iter().try_for_each(|c| self.node(c, iter));
+                    self.env.pop();
+                    r?;
+                    v += s;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Inspect one top-level loop under `params`.
+fn inspect_loop(p: &Program, l: &Loop, params: &[(Sym, i64)], budget: usize) -> (LoopInspection, usize) {
+    let mut written = vec![false; p.containers.len()];
+    for n in &l.body {
+        n.visit(&mut |m| {
+            if let Node::Stmt(s) = m {
+                written[s.write.container.0 as usize] = true;
+            }
+        });
+    }
+    let mut e = Enumerator {
+        p,
+        env: params.to_vec(),
+        fp: Footprint::new(),
+        evals: 0,
+        budget,
+        written,
+    };
+    let done = (|| -> Result<usize, Obstacle> {
+        let start = e.eval(&l.start, "loop start")?;
+        let end = e.eval(&l.end, "loop end")?;
+        let mut v = start;
+        let mut iters = 0i64;
+        loop {
+            e.env.push((l.var, v));
+            let s = e.eval(&l.stride, "loop stride");
+            let s = match s {
+                Ok(s) => s,
+                Err(err) => {
+                    e.env.pop();
+                    return Err(err);
+                }
+            };
+            if s == 0 || (s > 0 && v >= end) || (s < 0 && v <= end) {
+                e.env.pop();
+                break;
+            }
+            let r = l.body.iter().try_for_each(|c| e.node(c, iters));
+            e.env.pop();
+            r?;
+            iters += 1;
+            v += s;
+        }
+        Ok(iters as usize)
+    })();
+    let (iters, certificate) = match done {
+        Ok(iters) => {
+            let cert = match e.fp.g {
+                0 => Certificate::Doall,
+                1 => Certificate::Sequential,
+                d => Certificate::Doacross { delta: d },
+            };
+            (iters, cert)
+        }
+        Err(Obstacle::InputDependent(reason)) => (0, Certificate::InputDependent { reason }),
+        Err(Obstacle::Budget) => (0, Certificate::BudgetExceeded),
+    };
+    (
+        LoopInspection {
+            loop_id: l.id,
+            var: l.var,
+            iters,
+            certificate,
+        },
+        e.evals,
+    )
+}
+
+/// Inspect every top-level [`LoopSchedule::Sequential`] loop of `p`
+/// under the concrete `params` binding. Loops already scheduled parallel
+/// (statically proven) are left alone; nested loops are enumerated as
+/// part of their top-level ancestor's footprint.
+pub fn inspect_program(p: &Program, params: &[(Sym, i64)], budget: usize) -> InspectReport {
+    let mut loops = Vec::new();
+    let mut evals = 0usize;
+    for n in &p.body {
+        let Some(l) = n.as_loop() else { continue };
+        if l.schedule != LoopSchedule::Sequential {
+            continue;
+        }
+        let remaining = budget.saturating_sub(evals).max(1);
+        let (insp, spent) = inspect_loop(p, l, params, remaining);
+        evals += spent;
+        loops.push(insp);
+    }
+    InspectReport {
+        kernel: p.name.clone(),
+        params: params.to_vec(),
+        loops,
+        evals,
+    }
+}
+
+/// Re-schedule a clone of `p` according to `report`: `Doall` loops
+/// become [`LoopSchedule::Parallel`]; `Doacross{δ≥2}` loops become
+/// [`LoopSchedule::Doacross`] waiting `δ` iterations before their first
+/// body statement (only when the body *starts* with a statement — the
+/// lowered wait anchors on a direct child). Everything else is left
+/// untouched. Returns `None` when no certificate changes a schedule.
+pub fn apply_certificates(p: &Program, report: &InspectReport) -> Option<Program> {
+    let mut q = p.clone();
+    let mut changed = false;
+    for insp in &report.loops {
+        for n in &mut q.body {
+            let Node::Loop(l) = n else { continue };
+            if l.id != insp.loop_id {
+                continue;
+            }
+            match &insp.certificate {
+                Certificate::Doall => {
+                    l.schedule = LoopSchedule::Parallel;
+                    changed = true;
+                }
+                Certificate::Doacross { delta } if *delta >= 2 => {
+                    let first_stmt = l.body.first().and_then(|c| c.as_stmt()).map(|s| s.id);
+                    if let Some(sid) = first_stmt {
+                        l.schedule = LoopSchedule::Doacross {
+                            waits: vec![WaitSpec {
+                                before_stmt: sid,
+                                delta: *delta,
+                            }],
+                            release: ReleaseSpec::EndOfBody,
+                        };
+                        changed = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    if changed {
+        Some(q)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::ProgramBuilder;
+    use crate::symbolic::{imod, int, load, Expr};
+
+    /// `A[i mod 8] = …` over 32 iterations: every element is rewritten
+    /// at stride-8 distance — an exact DOACROSS certificate.
+    #[test]
+    fn mod_strided_writes_certify_doacross_with_exact_distance() {
+        let mut b = ProgramBuilder::new("ins_mod");
+        let a = b.array("A", int(8));
+        let x = b.array("X", int(32));
+        let i = b.sym("ins_i");
+        b.for_(i, int(0), int(32), int(1), |b| {
+            b.assign(a, imod(Expr::Sym(i), int(8)), load(x, Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let rep = inspect_program(&p, &[], DEFAULT_BUDGET);
+        assert_eq!(rep.loops.len(), 1);
+        assert_eq!(rep.loops[0].certificate, Certificate::Doacross { delta: 8 });
+        assert_eq!(rep.loops[0].iters, 32);
+    }
+
+    /// Disjoint writes certify DOALL; the re-scheduled clone flips only
+    /// the certified loop.
+    #[test]
+    fn disjoint_writes_certify_doall_and_apply_flips_the_schedule() {
+        let mut b = ProgramBuilder::new("ins_doall");
+        let a = b.array("A", int(64));
+        let x = b.array("X", int(64));
+        let i = b.sym("ins_j");
+        b.for_(i, int(0), int(64), int(1), |b| {
+            b.assign(a, Expr::Sym(i), load(x, Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let rep = inspect_program(&p, &[], DEFAULT_BUDGET);
+        assert_eq!(rep.loops[0].certificate, Certificate::Doall);
+        let q = apply_certificates(&p, &rep).expect("a certificate applied");
+        assert_eq!(q.body[0].as_loop().unwrap().schedule, LoopSchedule::Parallel);
+        // The original program is untouched.
+        assert_eq!(p.body[0].as_loop().unwrap().schedule, LoopSchedule::Sequential);
+    }
+
+    /// A value-dependent subscript (`A[X[i]] = …`) is not enumerable from
+    /// parameters: the inspector must refuse, never guess.
+    #[test]
+    fn value_dependent_subscripts_are_input_dependent() {
+        let mut b = ProgramBuilder::new("ins_vdep");
+        let a = b.array("A", int(64));
+        let x = b.array("X", int(64));
+        let i = b.sym("ins_k");
+        b.for_(i, int(0), int(64), int(1), |b| {
+            b.assign(a, load(x, Expr::Sym(i)), Expr::real(1.0));
+        });
+        let p = b.finish();
+        let rep = inspect_program(&p, &[], DEFAULT_BUDGET);
+        assert!(
+            matches!(rep.loops[0].certificate, Certificate::InputDependent { .. }),
+            "{:?}",
+            rep.loops[0].certificate
+        );
+        assert!(apply_certificates(&p, &rep).is_none());
+    }
+
+    /// An accumulator read+written every iteration has unit distance:
+    /// sequential, never a false DOALL.
+    #[test]
+    fn reductions_stay_sequential() {
+        let mut b = ProgramBuilder::new("ins_red");
+        let acc = b.array("ACC", int(1));
+        let x = b.array("X", int(16));
+        let i = b.sym("ins_r");
+        b.for_(i, int(0), int(16), int(1), |b| {
+            b.assign(acc, int(0), load(acc, int(0)) + load(x, Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let rep = inspect_program(&p, &[], DEFAULT_BUDGET);
+        assert_eq!(rep.loops[0].certificate, Certificate::Sequential);
+    }
+
+    /// The budget is a hard cap, reported as such.
+    #[test]
+    fn budget_exhaustion_is_reported_not_stalled() {
+        let mut b = ProgramBuilder::new("ins_budget");
+        let a = b.array("A", int(1 << 16));
+        let i = b.sym("ins_b");
+        b.for_(i, int(0), int(1 << 16), int(1), |b| {
+            b.assign(a, Expr::Sym(i), Expr::real(0.0));
+        });
+        let p = b.finish();
+        let rep = inspect_program(&p, &[], 64);
+        assert_eq!(rep.loops[0].certificate, Certificate::BudgetExceeded);
+    }
+}

@@ -137,6 +137,12 @@ pub fn lookup(name: &str) -> Result<KernelEntry> {
 
 /// Closest registered kernel name within a small edit distance.
 pub fn suggestion(name: &str) -> Option<&'static str> {
+    // Nothing is "near" the empty string — without this guard the
+    // near-miss threshold (`max(2)`) would accept any short kernel name
+    // as a suggestion for no input at all.
+    if name.is_empty() {
+        return None;
+    }
     let mut best: Option<(usize, &'static str)> = None;
     for k in all_kernels() {
         let d = edit_distance(name, k.name);
@@ -187,6 +193,13 @@ pub enum ResolvedKernel {
 /// Resolve a kernel name or `.silo` path. Registry names win; anything
 /// with a path separator or a `.silo` suffix is read from disk.
 pub fn resolve(spec: &str) -> Result<ResolvedKernel> {
+    // Guard the degenerate input up front: an empty spec must produce a
+    // plain actionable error, never reach the did-you-mean machinery
+    // (whose near-miss threshold is meaningless for zero-length names)
+    // or probe the filesystem for "".
+    if spec.trim().is_empty() {
+        bail!("empty kernel name (pass a registered name — see `silo list` — or a .silo path)");
+    }
     let looks_like_path =
         spec.contains('/') || spec.contains('\\') || spec.ends_with(".silo");
     if !looks_like_path {
@@ -246,5 +259,30 @@ impl ResolvedKernel {
                 gen_inputs_with(p, params, |name, i| parsed.init_value(name, i))
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Empty and whitespace-only specs fail with the plain guard error —
+    /// no panic, no filesystem probe, no nonsense suggestion.
+    #[test]
+    fn empty_spec_is_a_plain_error() {
+        for spec in ["", "  ", "\t"] {
+            let err = resolve(spec).unwrap_err().to_string();
+            assert!(err.contains("empty kernel name"), "{spec:?}: {err}");
+            assert!(!err.contains("did you mean"), "{spec:?}: {err}");
+        }
+        assert!(suggestion("").is_none());
+    }
+
+    /// Near misses still get their suggestion after the guard.
+    #[test]
+    fn near_miss_still_suggests() {
+        assert_eq!(suggestion("vadw"), Some("vadv"));
+        let err = resolve("vadw").unwrap_err().to_string();
+        assert!(err.contains("did you mean `vadv`"), "{err}");
     }
 }

@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod exec;
 pub mod frontend;
+pub mod inspect;
 pub mod ir;
 pub mod kernels;
 pub mod lowering;

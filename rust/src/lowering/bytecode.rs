@@ -165,6 +165,11 @@ pub struct ExecProgram {
     /// Number of [`Op::BoundsCheck`] guards emitted (0 = the unchecked
     /// fast tier — bitwise-identical bytecode to a trusted compile).
     pub checked_accesses: u32,
+    /// Loops force-lowered as tree nodes for the speculative tier
+    /// (`lowering::lower_speculative`): sequential top-level loops the
+    /// runtime may run chunk-parallel against privatized buffers with
+    /// conflict detection (`exec::speculate`). Empty everywhere else.
+    pub spec_loops: Vec<crate::ir::LoopId>,
 }
 
 impl ExecProgram {

@@ -7,7 +7,7 @@
 //! become [`Op::Prefetch`] at loop-body tops, pointer-increment plans
 //! become cursor registers with init/increment/reset code.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -38,6 +38,34 @@ pub fn lower(p: &Program) -> Result<ExecProgram> {
 /// [`CheckSet::all`] every access is guarded (the differential-test
 /// tier).
 pub fn lower_with_checks(p: &Program, checks: &CheckSet) -> Result<ExecProgram> {
+    lower_impl(p, checks, &[])
+}
+
+/// Lower the speculative-tier artifact: the loops in `spec` are kept as
+/// *tree* nodes (scheduled `Seq`) instead of flattening into code
+/// blocks, so `exec::speculate` can run their iterations chunk-parallel
+/// against privatized buffers and fall back to in-place sequential
+/// execution of the very same node on conflict. Memory schedules
+/// (pointer-increment plans, prefetch hints) are stripped first: cursor
+/// initialization is emitted only on the flat path, so a force-treed
+/// loop under a ptr-inc plan would read garbage cursors. `checks` is
+/// schedule-independent (keyed by statement/container/offset), so the
+/// verifier's CheckSet applies to the stripped clone unchanged.
+pub fn lower_speculative(
+    p: &Program,
+    checks: &CheckSet,
+    spec: &[crate::ir::LoopId],
+) -> Result<ExecProgram> {
+    let mut stripped = p.clone();
+    stripped.schedules = crate::ir::ScheduleSet::default();
+    lower_impl(&stripped, checks, spec)
+}
+
+fn lower_impl(
+    p: &Program,
+    checks: &CheckSet,
+    force_tree: &[crate::ir::LoopId],
+) -> Result<ExecProgram> {
     crate::ir::validate::validate(p)?;
 
     // 1. Global symbol registers: params first, then every loop variable.
@@ -90,6 +118,7 @@ pub fn lower_with_checks(p: &Program, checks: &CheckSet) -> Result<ExecProgram> 
         max_float: 0,
         checks: Arc::new(checks.clone()),
         checks_emitted: 0,
+        force_tree: force_tree.iter().copied().collect(),
     };
     for (idx, plan) in plans.iter().enumerate() {
         match plan.init_inside {
@@ -152,6 +181,7 @@ pub fn lower_with_checks(p: &Program, checks: &CheckSet) -> Result<ExecProgram> 
         n_int: lowering.max_int,
         n_float: lowering.max_float.max(1),
         checked_accesses: lowering.checks_emitted,
+        spec_loops: force_tree.to_vec(),
     })
 }
 
@@ -179,6 +209,9 @@ struct Lowering<'a> {
     /// Verifier-unproven accesses to guard ([`lower_with_checks`]).
     checks: Arc<CheckSet>,
     checks_emitted: u32,
+    /// Loops lowered as tree nodes even though fully sequential — the
+    /// speculative tier's dispatch points ([`lower_speculative`]).
+    force_tree: HashSet<LoopId>,
 }
 
 impl<'a> Lowering<'a> {
@@ -271,7 +304,10 @@ impl<'a> Lowering<'a> {
         let mut out: Vec<ExecNode> = Vec::new();
         let mut run: Vec<&Node> = Vec::new();
         for n in nodes {
-            if Self::fully_sequential(n) {
+            let forced = n
+                .as_loop()
+                .is_some_and(|l| self.force_tree.contains(&l.id));
+            if Self::fully_sequential(n) && !forced {
                 run.push(n);
             } else {
                 if !run.is_empty() {

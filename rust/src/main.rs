@@ -6,13 +6,24 @@
 //!            [--ptr-inc] [--prefetch]
 //!   silo run <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
 //!            [--ptr-inc] [--prefetch] [--preset=tiny|small|medium]
-//!            [--threads=N] [--backend=vm|native]
+//!            [--threads=N] [--backend=vm|native|speculative]
 //!            — --backend=native executes the JIT'd x86-64 code tier
 //!              (silently falls back to the VM on hosts without it;
-//!              the output line reports the tier that actually ran)
+//!              the output line reports the tier that actually ran);
+//!              --backend=speculative runs statically-unprovable loops
+//!              chunk-parallel against privatized buffers, committing on
+//!              a clean conflict check and falling back to sequential
+//!              otherwise (bitwise-identical either way; the run line
+//!              reports attempts/commits/aborts)
 //!   silo validate <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
 //!            [--ptr-inc] [--threads=N]
 //!   silo tune <kernel>                         — autotuner candidate table
+//!   silo inspect <kernel> [--pipeline=SPEC] [--preset=P]
+//!            — inspector pass: evaluate the symbolic access functions
+//!              over the concrete iteration space of the preset's
+//!              parameter binding and print one certificate per
+//!              top-level sequential loop (doall / doacross(δ) /
+//!              sequential / input-dependent / budget-exceeded)
 //!   silo verify <kernel> [--pipeline=SPEC] [--preset=P]
 //!            — static bounds report: per-access ProvenInBounds /
 //!              NeedsCheck / ProvenOutOfBounds verdicts plus the
@@ -26,7 +37,8 @@
 //!   silo experiment <fig1|fig2|fig9|table1|fig10|autotune|all>
 //!   silo artifacts                             — list PJRT artifacts
 //!   silo serve [--addr=H:P] [--threads=N] [--cache-cap=N]
-//!            [--untrusted] [--fuel=N] [--wall-ms=N] [--backend=vm|native]
+//!            [--untrusted] [--fuel=N] [--wall-ms=N]
+//!            [--backend=vm|native|speculative]
 //!            — the service daemon: POST /compile + /run/<id>, GET
 //!              /kernels /metrics /healthz, content-addressed LRU
 //!              schedule cache (default addr 127.0.0.1:7420).
@@ -36,7 +48,7 @@
 //!              budget and wall-clock cap
 //!   silo submit <file>.silo [--addr=H:P] [--pipeline=SPEC]
 //!            [--preset=tiny|small|medium] [--threads=N]
-//!            [--backend=vm|native] [--check]
+//!            [--backend=vm|native|speculative] [--check]
 //!            — compile + run on a daemon; --check re-runs the program
 //!              locally (unoptimized) and compares outputs bitwise
 //!
@@ -169,6 +181,12 @@ fn real_main() -> anyhow::Result<()> {
                 out.backend.as_str(),
                 out.storage.arrays.len()
             );
+            if let Some(s) = out.spec {
+                println!(
+                    "speculation: {} attempted, {} committed, {} aborted",
+                    s.attempted, s.commits, s.aborts
+                );
+            }
         }
         Some("validate") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
@@ -190,6 +208,32 @@ fn real_main() -> anyhow::Result<()> {
             if outcome.refined_nests > 0 {
                 println!("per-loop ptr-inc kept on {} nest(s)", outcome.refined_nests);
             }
+        }
+        Some("inspect") => {
+            let name = args.positional.get(1).ok_or_else(usage)?;
+            let kernel = silo::kernels::resolve(name)?;
+            // Inspect the program exactly as it would execute: after the
+            // requested optimization pipeline (default: none), under the
+            // preset's concrete parameter binding.
+            let compiled =
+                coordinator::compile_program(kernel.program(), &args.spec(), args.mem())?;
+            let params = kernel.params(args.preset()?)?;
+            let report = silo::inspect::inspect_program(
+                &compiled.program,
+                &params,
+                silo::inspect::DEFAULT_BUDGET,
+            );
+            let binding: Vec<String> = params
+                .iter()
+                .map(|(s, v)| format!("{}={v}", s.name()))
+                .collect();
+            println!(
+                "{} under {:?} preset ({})",
+                compiled.name,
+                args.preset()?,
+                if binding.is_empty() { "no params".to_string() } else { binding.join(", ") }
+            );
+            print!("{}", report.summary());
         }
         Some("verify") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
@@ -421,13 +465,16 @@ fn sweep_verify(
 
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
-        "usage: silo <list|show|run|validate|tune|verify|experiment|artifacts|serve|submit> \
-         [args]\n\
+        "usage: silo <list|show|run|validate|tune|inspect|verify|experiment|artifacts|serve|\
+         submit> [args]\n\
          kernels: a registered name (see `silo list`) or a .silo file path\n\
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
-         backend: --backend=vm|native on run/serve/submit (native = JIT'd x86-64 \
-         code tier, VM fallback elsewhere)\n\
+         backend: --backend=vm|native|speculative on run/serve/submit (native = \
+         JIT'd x86-64 code tier, VM fallback elsewhere; speculative = \
+         chunk-parallel with conflict detection, sequential fallback)\n\
+         inspector: `silo inspect kernel [--preset=P]` prints one parallelism \
+         certificate per top-level sequential loop under the preset's binding\n\
          safety: `silo verify kernel [--pipeline=SPEC]` prints per-access bounds \
          verdicts + the worst-case fuel bound; `silo verify <dir>...` sweeps \
          every .silo file under the paths\n\

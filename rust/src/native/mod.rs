@@ -21,6 +21,12 @@ pub enum Tier {
     /// JIT-compiled machine code; silently falls back to [`Tier::Vm`]
     /// when unavailable for the host or program.
     Native,
+    /// Inspector-executor tier (`exec::speculate`): statically
+    /// unprovable sequential loops run chunk-parallel against
+    /// privatized buffers with runtime conflict detection, falling back
+    /// to sequential on misspeculation. Runs on the VM; degrades to
+    /// [`Tier::Vm`] when the program has no speculation candidates.
+    Speculative,
 }
 
 impl Tier {
@@ -28,7 +34,10 @@ impl Tier {
         match s {
             "vm" => Ok(Tier::Vm),
             "native" => Ok(Tier::Native),
-            other => Err(format!("unknown backend `{other}` (expected vm|native)")),
+            "speculative" => Ok(Tier::Speculative),
+            other => Err(format!(
+                "unknown backend `{other}` (expected vm|native|speculative)"
+            )),
         }
     }
 
@@ -36,6 +45,7 @@ impl Tier {
         match self {
             Tier::Vm => "vm",
             Tier::Native => "native",
+            Tier::Speculative => "speculative",
         }
     }
 }
@@ -126,8 +136,13 @@ mod tests {
     fn tier_parse_roundtrip() {
         assert_eq!(Tier::parse("vm").unwrap(), Tier::Vm);
         assert_eq!(Tier::parse("native").unwrap(), Tier::Native);
+        assert_eq!(
+            Tier::parse("speculative").unwrap(),
+            Tier::Speculative
+        );
         assert!(Tier::parse("gpu").is_err());
         assert_eq!(Tier::Native.as_str(), "native");
+        assert_eq!(Tier::Speculative.as_str(), "speculative");
         assert_eq!(Tier::default(), Tier::Vm);
     }
 

@@ -34,6 +34,15 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     /// Runs aborted by a structured trap (bounds / fuel / wall clock).
     pub trapped: AtomicU64,
+    /// Runs that went through the inspector (fresh or memoized
+    /// certificate).
+    pub runs_inspected: AtomicU64,
+    /// Speculative-tier chunk-parallel attempts whose conflict check
+    /// passed and whose privatized writes were committed.
+    pub speculation_commits: AtomicU64,
+    /// Speculative-tier attempts discarded (conflict or worker trap)
+    /// and re-run sequentially.
+    pub speculation_aborts: AtomicU64,
 }
 
 impl Metrics {

@@ -194,11 +194,19 @@ pub struct RunRequest {
     pub threads: usize,
     /// Argument containers to return (`None` = all of them).
     pub outputs: Option<Vec<String>>,
-    /// Execution backend (`"vm"` | `"native"`); `None` = the daemon's
-    /// configured default. A `"native"` request silently degrades to the
-    /// VM when the daemon's host has no JIT — [`RunReply::backend`]
+    /// Execution backend (`"vm"` | `"native"` | `"speculative"`);
+    /// `None` = the daemon's configured default. A `"native"` request
+    /// silently degrades to the VM when the daemon's host has no JIT,
+    /// and a `"speculative"` request degrades to the VM when the
+    /// program has no speculation candidates — [`RunReply::backend`]
     /// reports what actually ran.
     pub backend: Option<String>,
+    /// Run the inspector before executing: evaluate the program's
+    /// symbolic access functions over the concrete iteration space for
+    /// this param-set and report per-loop parallelization certificates
+    /// in [`RunReply::inspector`]. Certificates are memoized per
+    /// (kernel, param-set) on the daemon.
+    pub inspector: bool,
 }
 
 impl Default for RunRequest {
@@ -210,6 +218,7 @@ impl Default for RunRequest {
             threads: 1,
             outputs: None,
             backend: None,
+            inspector: false,
         }
     }
 }
@@ -250,6 +259,9 @@ impl RunRequest {
         if let Some(b) = &self.backend {
             kv.push(("backend".into(), Json::Str(b.clone())));
         }
+        if self.inspector {
+            kv.push(("inspector".into(), Json::Bool(true)));
+        }
         Json::Obj(kv)
     }
 
@@ -289,6 +301,9 @@ impl RunRequest {
         if let Some(b) = v.get("backend") {
             req.backend = Some(b.as_str().ok_or("field `backend` must be a string")?.to_string());
         }
+        if let Some(i) = v.get("inspector") {
+            req.inspector = i.as_bool().ok_or("field `inspector` must be a boolean")?;
+        }
         Ok(req)
     }
 }
@@ -303,10 +318,18 @@ pub struct RunReply {
     /// Fuel spent (loop back-edges), reported on metered (untrusted)
     /// runs; `None` on unmetered daemons.
     pub fuel_used: Option<u64>,
-    /// The backend that actually executed (`"vm"` | `"native"`) — a
-    /// native *request* may still run on the VM when the daemon's host
-    /// has no JIT. Absent on replies from pre-native daemons: `"vm"`.
+    /// The backend that actually executed (`"vm"` | `"native"` |
+    /// `"speculative"`) — a native *request* may still run on the VM
+    /// when the daemon's host has no JIT. Absent on replies from
+    /// pre-native daemons: `"vm"`.
     pub backend: String,
+    /// Speculation counters `(attempted, commits, aborts)` when the run
+    /// executed on the speculative tier; `None` otherwise (and absent
+    /// on the wire).
+    pub speculation: Option<(u64, u64, u64)>,
+    /// Per-loop inspector certificates (`"L<id> <var>: <certificate>"`)
+    /// when the request asked for inspection; `None` otherwise.
+    pub inspector: Option<Vec<String>>,
     /// `name → contents` for each requested argument container.
     pub outputs: Vec<(String, Vec<f64>)>,
 }
@@ -322,6 +345,22 @@ impl RunReply {
             kv.push(("fuel_used".into(), Json::Num(f as f64)));
         }
         kv.push(("backend".into(), Json::Str(self.backend.clone())));
+        if let Some((attempted, commits, aborts)) = self.speculation {
+            kv.push((
+                "speculation".into(),
+                Json::Obj(vec![
+                    ("attempted".into(), Json::Num(attempted as f64)),
+                    ("commits".into(), Json::Num(commits as f64)),
+                    ("aborts".into(), Json::Num(aborts as f64)),
+                ]),
+            ));
+        }
+        if let Some(lines) = &self.inspector {
+            kv.push((
+                "inspector".into(),
+                Json::Arr(lines.iter().map(|s| Json::Str(s.clone())).collect()),
+            ));
+        }
         kv.push((
             "outputs".into(),
             Json::Obj(
@@ -372,6 +411,16 @@ impl RunReply {
                 .and_then(Json::as_str)
                 .unwrap_or("vm")
                 .to_string(),
+            // Absent on replies from pre-speculation daemons.
+            speculation: v.get("speculation").map(|s| {
+                let n = |k: &str| s.get(k).and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+                (n("attempted"), n("commits"), n("aborts"))
+            }),
+            inspector: v.get("inspector").and_then(Json::as_arr).map(|arr| {
+                arr.iter()
+                    .filter_map(|e| e.as_str().map(str::to_string))
+                    .collect()
+            }),
             outputs,
         })
     }
@@ -417,6 +466,7 @@ mod tests {
             threads: 4,
             outputs: Some(vec!["u".into()]),
             backend: Some("native".into()),
+            inspector: true,
         };
         let back = RunRequest::from_json(&req.to_json()).unwrap();
         assert_eq!(back.preset, "small");
@@ -426,10 +476,12 @@ mod tests {
         assert_eq!(back.threads, 4);
         assert_eq!(back.outputs.as_deref(), Some(&["u".to_string()][..]));
         assert_eq!(back.backend.as_deref(), Some("native"));
+        assert!(back.inspector);
         // Empty object = all defaults.
         let d = RunRequest::from_json(&Json::Obj(vec![])).unwrap();
         assert_eq!((d.preset.as_str(), d.threads), ("tiny", 1));
         assert_eq!(d.backend, None);
+        assert!(!d.inspector);
         // Type errors are reported by field.
         let bad = Json::parse(r#"{"params": {"N": 1.5}}"#).unwrap();
         assert!(RunRequest::from_json(&bad).unwrap_err().contains("`N`"));
@@ -473,14 +525,21 @@ mod tests {
             wall_ms: 0.25,
             fuel_used: Some(12),
             backend: "native".into(),
+            speculation: Some((2, 1, 1)),
+            inspector: Some(vec!["L0 i: doall".into()]),
             outputs: vec![("u".into(), vec![0.0, -0.0, 2.5])],
         };
         let back = RunReply::from_json(&run.to_json()).unwrap();
         assert_eq!(back.outputs[0].0, "u");
         assert_eq!(back.backend, "native");
+        assert_eq!(back.speculation, Some((2, 1, 1)));
+        assert_eq!(back.inspector.as_deref(), Some(&["L0 i: doall".to_string()][..]));
         // A pre-native reply (no backend field) parses as vm.
         let legacy = Json::parse(r#"{"kernel":"k0","name":"t","outputs":{}}"#).unwrap();
-        assert_eq!(RunReply::from_json(&legacy).unwrap().backend, "vm");
+        let legacy = RunReply::from_json(&legacy).unwrap();
+        assert_eq!(legacy.backend, "vm");
+        assert_eq!(legacy.speculation, None);
+        assert_eq!(legacy.inspector, None);
         let bits: Vec<u64> = back.outputs[0].1.iter().map(|x| x.to_bits()).collect();
         assert_eq!(bits, vec![0.0f64.to_bits(), (-0.0f64).to_bits(), 2.5f64.to_bits()]);
     }

@@ -267,6 +267,11 @@ pub struct ServedKernel {
     /// The daemon's [`SymRegistry`] refcounts these and releases the
     /// last holder's symbols on eviction.
     pub syms: Vec<(Sym, bool)>,
+    /// Inspector certificate lines memoized per canonical parameter
+    /// binding — the content-addressed cache entry *is* the
+    /// (kernel, param-set) memo table, and eviction drops the
+    /// certificates with the artifact they describe.
+    pub inspect_memo: Mutex<std::collections::HashMap<String, Arc<Vec<String>>>>,
 }
 
 struct ServiceState {
@@ -502,6 +507,15 @@ fn metrics_body(state: &ServiceState) -> String {
         ("runs_checked".into(), num(Metrics::get(&m.runs_checked))),
         ("rejected".into(), num(Metrics::get(&m.rejected))),
         ("trapped".into(), num(Metrics::get(&m.trapped))),
+        ("runs_inspected".into(), num(Metrics::get(&m.runs_inspected))),
+        (
+            "speculation_commits".into(),
+            num(Metrics::get(&m.speculation_commits)),
+        ),
+        (
+            "speculation_aborts".into(),
+            num(Metrics::get(&m.speculation_aborts)),
+        ),
         ("untrusted".into(), Json::Bool(state.untrusted)),
         // Live interned symbols. Bounded under cache churn now that
         // eviction releases an entry's symbols (the ROADMAP-flagged
@@ -639,6 +653,7 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
             compiled,
             compile_ms: wall.as_secs_f64() * 1e3,
             syms,
+            inspect_memo: Mutex::new(std::collections::HashMap::new()),
         })
     });
     match outcome {
@@ -883,20 +898,33 @@ fn execute_run(
     } else {
         ExecLimits::none()
     };
-    let (storage, wall, fuel_used, ran_on) = kernel
-        .compiled
-        .execute_limited_tier(backend, &params, &refs, threads, &limits)
-        .map_err(|e| {
-            // Structured traps (bounds/fuel/wall) are 422 with a code;
-            // anything else on this path is a caller error.
-            match e.downcast_ref::<Trap>() {
-                Some(trap) => {
-                    Metrics::bump(&state.metrics.trapped);
-                    (422u16, error_body_code(&format!("{e:#}"), trap.code()))
-                }
-                None => caller(format!("{e:#}")),
-            }
-        })?;
+    // Structured traps (bounds/fuel/wall) are 422 with a code; anything
+    // else on the execution path is a caller error.
+    let trap_err = |e: anyhow::Error| match e.downcast_ref::<Trap>() {
+        Some(trap) => {
+            Metrics::bump(&state.metrics.trapped);
+            (422u16, error_body_code(&format!("{e:#}"), trap.code()))
+        }
+        None => caller(format!("{e:#}")),
+    };
+    // The speculative tier returns its commit/abort accounting alongside
+    // the storage; the other tiers go through the common dispatch. A
+    // kernel with no speculation candidates degrades to the VM and the
+    // reply says so, mirroring the native-tier convention.
+    let (storage, wall, fuel_used, ran_on, spec_stats) = if backend == Tier::Speculative {
+        let (storage, wall, fuel, stats) = kernel
+            .compiled
+            .execute_speculative(&params, &refs, threads, &limits)
+            .map_err(|e| trap_err(e))?;
+        let ran = if kernel.compiled.spec.is_some() { Tier::Speculative } else { Tier::Vm };
+        (storage, wall, fuel, ran, Some(stats))
+    } else {
+        let (storage, wall, fuel, ran) = kernel
+            .compiled
+            .execute_limited_tier(backend, &params, &refs, threads, &limits)
+            .map_err(|e| trap_err(e))?;
+        (storage, wall, fuel, ran, None)
+    };
     Metrics::bump(&state.metrics.runs);
     Metrics::add_time(&state.metrics.run_us_total, wall);
     match kernel.compiled.tier {
@@ -904,6 +932,50 @@ fn execute_run(
         SafetyTier::Checked => Metrics::bump(&state.metrics.runs_checked),
         SafetyTier::Trusted => {}
     }
+    if let Some(st) = &spec_stats {
+        state.metrics.speculation_commits.fetch_add(st.commits, Ordering::Relaxed);
+        state.metrics.speculation_aborts.fetch_add(st.aborts, Ordering::Relaxed);
+    }
+    // Inspector: certify this binding's sequential loops, memoized per
+    // canonical parameter string on the cache entry.
+    let inspector = if rreq.inspector {
+        Metrics::bump(&state.metrics.runs_inspected);
+        let key: String = params
+            .iter()
+            .map(|(s, v)| format!("{}={v}", s.name()))
+            .collect::<Vec<_>>()
+            .join(",");
+        let memoized = kernel.inspect_memo.lock().unwrap().get(&key).cloned();
+        let lines = match memoized {
+            Some(l) => l,
+            None => {
+                let rep = crate::inspect::inspect_program(
+                    &kernel.compiled.program,
+                    &params,
+                    crate::inspect::DEFAULT_BUDGET,
+                );
+                let fresh: Arc<Vec<String>> = Arc::new(
+                    rep.loops
+                        .iter()
+                        .map(|l| {
+                            format!("L{} {}: {}", l.loop_id.0, l.var.name(), l.certificate.label())
+                        })
+                        .collect(),
+                );
+                Arc::clone(
+                    kernel
+                        .inspect_memo
+                        .lock()
+                        .unwrap()
+                        .entry(key)
+                        .or_insert(fresh),
+                )
+            }
+        };
+        Some(lines.as_ref().clone())
+    } else {
+        None
+    };
 
     let wanted = |name: &str| match &rreq.outputs {
         Some(outs) => outs.iter().any(|n| n == name),
@@ -921,6 +993,8 @@ fn execute_run(
         wall_ms: wall.as_secs_f64() * 1e3,
         fuel_used: state.untrusted.then_some(fuel_used),
         backend: ran_on.as_str().to_string(),
+        speculation: spec_stats.map(|s| (s.attempted, s.commits, s.aborts)),
+        inspector,
         outputs,
     })
 }

@@ -40,6 +40,7 @@ use anyhow::{ensure, Result};
 
 use crate::ir::Program;
 use crate::machine::{clang, intel_node, CompilerModel, NodeModel};
+use crate::symbolic::Sym;
 use crate::transforms::PipelineReport;
 
 pub use cost::{
@@ -62,6 +63,13 @@ pub struct TuneOptions {
     pub node: NodeModel,
     /// Run the per-loop pointer-increment refinement on the winner.
     pub per_loop_ptr_inc: bool,
+    /// Concrete parameter binding for the inspector: when set, loops the
+    /// static dependence test left sequential are enumerated under this
+    /// binding ([`crate::inspect`]) and a certified DOALL/DOACROSS
+    /// schedule competes against the winner in the same cost model. The
+    /// certified schedule is a theorem about *this* binding only, so it
+    /// is opt-in, never part of the parameter-free default search.
+    pub inspect_params: Option<Vec<(Sym, i64)>>,
 }
 
 impl Default for TuneOptions {
@@ -72,6 +80,7 @@ impl Default for TuneOptions {
             compiler: clang(),
             node: intel_node(),
             per_loop_ptr_inc: true,
+            inspect_params: None,
         }
     }
 }
@@ -108,6 +117,9 @@ pub struct TuneOutcome {
     /// Top-level nests that kept the per-loop ptr-inc schedule (0 when
     /// the refinement was disabled or did not pay).
     pub refined_nests: usize,
+    /// An inspector certificate ([`TuneOptions::inspect_params`]) was
+    /// applied to the winner and improved its modeled score.
+    pub inspector_certified: bool,
 }
 
 impl TuneOutcome {
@@ -131,6 +143,15 @@ impl TuneOutcome {
             rep.push(
                 "auto",
                 format!("per-loop ptr-inc kept on {} nest(s)", self.refined_nests),
+            );
+        }
+        if self.inspector_certified {
+            rep.push(
+                "auto",
+                format!(
+                    "inspector certificate applied (modeled score {:.3})",
+                    self.cost.score
+                ),
             );
         }
         rep
@@ -201,6 +222,26 @@ pub fn autotune_program(base: &Program, opts: &TuneOptions) -> Result<TuneOutcom
             refined_nests = kept;
         }
     }
+
+    // Inspector-certified candidate (DESIGN.md §Inspector & Speculation):
+    // under a concrete parameter binding, a loop the static dependence
+    // test left sequential can carry a runtime DOALL/DOACROSS
+    // certificate. Applying it to the winner lets certified parallelism
+    // compete in the same cost model as the static candidates; the
+    // strict `<` keeps ties with the binding-free winner deterministic.
+    let mut inspector_certified = false;
+    if let Some(binding) = &opts.inspect_params {
+        let rep =
+            crate::inspect::inspect_program(&program, binding, crate::inspect::DEFAULT_BUDGET);
+        if let Some(certified) = crate::inspect::apply_certificates(&program, &rep) {
+            let c2 = schedule_cost(&certified, &opts.compiler, &opts.node)?;
+            if c2.score < cost.score {
+                program = certified;
+                cost = c2;
+                inspector_certified = true;
+            }
+        }
+    }
     crate::ir::validate::validate(&program)?;
 
     Ok(TuneOutcome {
@@ -212,6 +253,7 @@ pub fn autotune_program(base: &Program, opts: &TuneOptions) -> Result<TuneOutcom
         analysis_hits,
         analysis_misses,
         refined_nests,
+        inspector_certified,
     })
 }
 
@@ -334,5 +376,40 @@ mod tests {
     #[test]
     fn unknown_kernel_is_rejected() {
         assert!(autotune_kernel("no_such_kernel", &TuneOptions::default()).is_err());
+    }
+
+    /// `A[(5·i) mod N] = X[i]` defeats the static dependence test (a mod
+    /// bijection is invisible symbolically) but is disjoint under N=64,
+    /// so the inspector certifies DOALL and the certified schedule must
+    /// beat the binding-free winner in the same cost model.
+    #[test]
+    fn inspector_certificate_enters_candidate_space() {
+        use crate::symbolic::imod;
+        let mut b = ProgramBuilder::new("tu_insp");
+        let n = b.param_positive("tu_insp_N");
+        let a = b.array("A", Expr::Sym(n));
+        let x = b.array("X", Expr::Sym(n));
+        let i = b.sym("tu_insp_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(a, imod(Expr::Sym(i) * int(5), Expr::Sym(n)), load(x, Expr::Sym(i)));
+        });
+        let p = b.finish();
+        let plain = autotune_program(&p, &TuneOptions::default()).unwrap();
+        assert!(!plain.inspector_certified);
+        let insp = autotune_program(
+            &p,
+            &TuneOptions {
+                inspect_params: Some(vec![(n, 64)]),
+                ..TuneOptions::default()
+            },
+        )
+        .unwrap();
+        assert!(
+            insp.inspector_certified,
+            "certified DOALL did not improve the modeled score"
+        );
+        assert!(insp.cost.score < plain.cost.score);
+        // The certificate shows up in the pass log the CLI renders.
+        assert!(insp.report().log.iter().any(|l| l.detail.contains("inspector")));
     }
 }

@@ -15,12 +15,22 @@
 //!   of the two obligations; the checked VM tier guards this access
 //!   with an [`Op::BoundsCheck`](crate::lowering::bytecode::Op) at run
 //!   time.
+//! * [`AccessVerdict::RuntimeCheckable`] — unprovable for a *structural*
+//!   reason the runtime tiers are built for: the subscript contains
+//!   `mod`/`floordiv` arithmetic or a value-dependent `Load`. Such an
+//!   access still carries an `Op::BoundsCheck` (it lowers exactly like
+//!   `NeedsCheck`), but the verdict additionally marks the program as a
+//!   candidate for the inspector ([`crate::inspect`]) and the
+//!   speculative executor (`exec::speculate`), which decide
+//!   parallelizability from concrete runtime values.
 //! * [`AccessVerdict::ProvenOutOfBounds`] — the access can *never* be
 //!   in bounds (its derived lower bound is ≥ the extent, or its upper
 //!   bound is < 0); an untrusted service refuses such programs outright.
 //!
-//! The verdict lattice orders `ProvenInBounds < NeedsCheck <
-//! ProvenOutOfBounds`; a program's tier is the join over its accesses.
+//! The verdict lattice orders `ProvenInBounds < NeedsCheck =
+//! RuntimeCheckable < ProvenOutOfBounds` (the two middle verdicts lower
+//! identically; they differ only in what they tell the runtime tiers);
+//! a program's tier is the join over its accesses.
 //! The report also carries a **symbolic worst-case fuel bound** — an
 //! upper bound on loop back-edges the program can execute — which is
 //! what a fuel-budgeted runtime compares its meter against.
@@ -72,6 +82,11 @@ impl SafetyTier {
 pub enum AccessVerdict {
     ProvenInBounds,
     NeedsCheck { reason: String },
+    /// Unprovable because the subscript is structurally irregular
+    /// (`mod`/`floordiv`/value-dependent `Load`) — guarded at run time
+    /// like [`AccessVerdict::NeedsCheck`], and additionally a candidate
+    /// for inspector-executor runtime analysis.
+    RuntimeCheckable { reason: String },
     ProvenOutOfBounds { reason: String },
 }
 
@@ -158,6 +173,9 @@ impl VerifyReport {
             let verdict = match &a.verdict {
                 AccessVerdict::ProvenInBounds => "proven in bounds".to_string(),
                 AccessVerdict::NeedsCheck { reason } => format!("NEEDS CHECK — {reason}"),
+                AccessVerdict::RuntimeCheckable { reason } => {
+                    format!("RUNTIME CHECKABLE — {reason}")
+                }
                 AccessVerdict::ProvenOutOfBounds { reason } => {
                     format!("OUT OF BOUNDS — {reason}")
                 }
@@ -465,6 +483,9 @@ impl Verifier<'_> {
                 match judge(&off_rel, rel, &size) {
                     Judge::Proven => AccessVerdict::ProvenInBounds,
                     Judge::Oob(reason) => AccessVerdict::ProvenOutOfBounds { reason },
+                    Judge::Unknown(_) if structurally_irregular(off) => {
+                        AccessVerdict::RuntimeCheckable { reason }
+                    }
                     Judge::Unknown(_) => AccessVerdict::NeedsCheck { reason },
                 }
             }
@@ -477,6 +498,26 @@ impl Verifier<'_> {
             offset: off.clone(),
             verdict,
         });
+    }
+}
+
+/// Does the subscript contain arithmetic the interval prover cannot see
+/// through for *structural* reasons — `mod`, `floordiv`, or a
+/// value-dependent `Load`? These are the shapes the runtime tiers
+/// (inspector, speculative executor) exist for, so a double-`Unknown`
+/// verdict on such an offset reports `RuntimeCheckable` rather than the
+/// generic `NeedsCheck`.
+fn structurally_irregular(e: &Expr) -> bool {
+    match e {
+        Expr::Mod(..) | Expr::FloorDiv(..) | Expr::Load(..) => true,
+        Expr::Int(_) | Expr::Real(_) | Expr::Sym(_) => false,
+        Expr::Add(xs) | Expr::Mul(xs) | Expr::Func(_, xs) => {
+            xs.iter().any(structurally_irregular)
+        }
+        Expr::Pow(a, _) => structurally_irregular(a),
+        Expr::Min(a, b) | Expr::Max(a, b) => {
+            structurally_irregular(a) || structurally_irregular(b)
+        }
     }
 }
 

@@ -395,7 +395,7 @@ fn df_gen(
     conts: &[silo::symbolic::ContainerId],
 ) {
     for nest in 0..rng.int(1, 3) {
-        match rng.int(0, 2) {
+        match rng.int(0, 3) {
             0 => {
                 let v = b.sym(&format!("df{case}_a{nest}"));
                 let hi = rng.int(8, DF_SIZE - DF_PAD);
@@ -438,7 +438,7 @@ fn df_gen(
                     });
                 });
             }
-            _ => {
+            2 => {
                 let v1 = b.sym(&format!("df{case}_s{nest}"));
                 let v2 = b.sym(&format!("df{case}_t{nest}"));
                 let (src, tmp) = (conts[0], conts[2]);
@@ -454,6 +454,32 @@ fn df_gen(
                 });
                 b.for_(v2, int(1), int(k), int(1), |b| {
                     b.assign(src, Expr::Sym(v2), load(tmp, Expr::Sym(v2)));
+                });
+            }
+            _ => {
+                // Mod-strided subscripts under an (optionally)
+                // value-dependent guard: whether two iterations collide
+                // depends on the concrete mod pattern and, under a data
+                // guard, on the input values themselves — statically
+                // unprovable, exactly the inspector/speculation surface.
+                // (Value-dependent *subscripts* are exercised at the
+                // inspector level in tests/inspect.rs: the bytecode
+                // lowering rejects loads inside index expressions.)
+                let v = b.sym(&format!("df{case}_m{nest}"));
+                let w = *rng.pick(conts);
+                let r = *rng.pick(conts);
+                let mult = rng.int(1, 7);
+                let span = rng.int(8, DF_SIZE);
+                let hi = rng.int(8, DF_SIZE - DF_PAD);
+                let off = imod(Expr::Sym(v) * int(mult), int(span));
+                let guarded = rng.bool();
+                b.for_(v, int(0), int(hi), int(1), |b| {
+                    let rhs = df_rhs(rng, conts, w, &off, &Expr::Sym(v));
+                    if guarded {
+                        b.assign_if(load(r, Expr::Sym(v)), w, off.clone(), rhs);
+                    } else {
+                        b.assign(w, off.clone(), rhs);
+                    }
                 });
             }
         }
@@ -515,6 +541,77 @@ fn random_programs_agree_bitwise_under_auto_on_the_vm() {
                     c.name,
                     tuned.best.candidate.spec(),
                 );
+            }
+        }
+    });
+}
+
+/// Speculative-tier differential fuzz: on every generated program —
+/// value-dependent guards, mod-strided subscripts, reductions, and
+/// stencil RAW chains included — the chunk-parallel speculative executor
+/// must produce output bitwise identical to the sequential VM, at every
+/// thread count. Conflicting programs exercise the abort + sequential
+/// re-run path; conflict-free ones exercise privatize + commit. Either
+/// way the contract is the same: bit equality, no exceptions.
+#[test]
+fn random_programs_agree_bitwise_under_the_speculative_tier() {
+    use silo::coordinator::{compile_program_with, SafetyPolicy};
+    silo::proptest_lite::check("frontend_speculative_differential", 24, |rng| {
+        let case = rng.int(0, 1_000_000) as u64;
+        let mut b = ProgramBuilder::new(&format!("dsz_{case}"));
+        let conts = vec![
+            b.array("A", int(DF_SIZE)),
+            b.array("B", int(DF_SIZE)),
+            b.transient("T", int(DF_SIZE)),
+        ];
+        df_gen(&mut b, rng, case, &conts);
+        let p = b.finish();
+        silo::ir::validate::validate(&p).unwrap();
+        let text = pretty(&p);
+
+        let inputs = silo::kernels::gen_inputs(&p, &[], silo::kernels::default_init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+
+        // Sequential ground truth on the plain VM.
+        let vm = silo::exec::Vm::compile(&p)
+            .unwrap_or_else(|e| panic!("VM compile failed: {e:#}\n{text}"));
+        let base = vm
+            .run(&[], &refs, 1)
+            .unwrap_or_else(|e| panic!("VM run failed: {e:#}\n{text}"))
+            .arrays;
+
+        // Speculative tier: `--pipeline none` leaves every loop
+        // sequential, so all eligible top-level loops become speculation
+        // candidates.
+        let compiled = compile_program_with(
+            p.clone(),
+            &PipelineSpec::parse("none"),
+            MemSchedules::default(),
+            SafetyPolicy::Trusted,
+        )
+        .unwrap_or_else(|e| panic!("compile failed: {e:#}\n{text}"));
+        for threads in [2usize, 4] {
+            let (storage, _wall, _fuel, stats) = compiled
+                .execute_speculative(&[], &refs, threads, &silo::exec::ExecLimits::none())
+                .unwrap_or_else(|e| panic!("speculative run failed: {e:#}\n{text}"));
+            assert_eq!(
+                stats.commits + stats.aborts,
+                stats.attempted,
+                "speculation accounting out of balance\n{text}"
+            );
+            for c in &p.containers {
+                let i = c.id.0 as usize;
+                assert_eq!(base[i].len(), storage.arrays[i].len(), "{}\n{text}", c.name);
+                for (j, (x, y)) in base[i].iter().zip(storage.arrays[i].iter()).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "{}[{j}] diverged under speculation ({threads} threads, \
+                         {} commits, {} aborts): {x} vs {y}\n{text}",
+                        c.name,
+                        stats.commits,
+                        stats.aborts,
+                    );
+                }
             }
         }
     });

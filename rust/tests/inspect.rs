@@ -1,0 +1,552 @@
+//! Differential validation of the inspector pass (`src/inspect`)
+//! against a brute-force conflict oracle, plus end-to-end abort/commit
+//! accounting for the speculative tier.
+//!
+//! The inspector folds an *incremental* gcd over a generator set of
+//! dependence distances (first-write anchors + consecutive-write gaps).
+//! The oracle here does it the slow, obviously-correct way: enumerate
+//! the loop, record the complete read/write iteration sets per touched
+//! element, and take the gcd over **all** pairwise distances involving
+//! at least one write. The two must agree exactly on every loop:
+//!
+//! * a `Doall` certificate means the oracle found **zero** dependence
+//!   pairs (a false DOALL would license a racy schedule — the one bug
+//!   this harness exists to make impossible);
+//! * a `Doacross{delta}` certificate's distance equals the oracle gcd
+//!   exactly (an over-estimate would over-synchronize, an
+//!   under-estimate would race);
+//! * `Sequential` means the oracle gcd is 1;
+//! * `InputDependent` iff the oracle also refuses to enumerate (a
+//!   subscript or guard reads array data / is not parameter-evaluable).
+//!
+//! Checked over the full registered kernel corpus at the tiny preset
+//! and over >= 100 fuzzed programs mixing affine, mod-strided,
+//! parameter-dependent, and value-dependent subscripts, reductions,
+//! guards, and nested loops.
+
+use std::collections::HashMap;
+
+use silo::inspect::{inspect_program, Certificate, DEFAULT_BUDGET};
+use silo::ir::pretty::pretty;
+use silo::ir::{AccessKind, ContainerKind, Loop, Node, Program, ProgramBuilder};
+use silo::kernels::{all_kernels, Preset};
+use silo::proptest_lite::Rng;
+use silo::symbolic::eval::eval_int;
+use silo::symbolic::{imod, int, load, ContainerId, Expr, Sym};
+
+// ---------------------------------------------------------------------------
+// The oracle
+// ---------------------------------------------------------------------------
+
+fn gcd(a: i64, b: i64) -> i64 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Complete per-element touch record: every iteration ordinal that read
+/// or wrote the element.
+#[derive(Default)]
+struct Touch {
+    reads: Vec<i64>,
+    writes: Vec<i64>,
+}
+
+struct Oracle<'a> {
+    p: &'a Program,
+    env: Vec<(Sym, i64)>,
+    touches: HashMap<(ContainerId, i64), Touch>,
+    /// Containers written anywhere in the loop (the inspector's tracked
+    /// set): reads of never-written containers carry no dependence, and
+    /// their subscripts are deliberately *not* evaluated — a data-
+    /// dependent read of a read-only table must not block certification.
+    written: Vec<bool>,
+    evals: usize,
+}
+
+impl Oracle<'_> {
+    fn eval(&mut self, e: &Expr, what: &str) -> Result<i64, String> {
+        self.evals += 1;
+        assert!(
+            self.evals < 16_000_000,
+            "oracle enumeration blew its sanity cap — shrink the test program"
+        );
+        if e.contains_load() {
+            return Err(format!("{what} reads array data"));
+        }
+        eval_int(e, &self.env).map_err(|err| format!("{what} not evaluable: {err}"))
+    }
+
+    fn stmt(&mut self, s: &silo::ir::Stmt, iter: i64) -> Result<(), String> {
+        if let Some(g) = &s.guard {
+            if self.eval(g, "guard")? <= 0 {
+                return Ok(());
+            }
+        }
+        for a in s.accesses() {
+            let tracked = self.written[a.container.0 as usize]
+                && self.p.container(a.container).kind != ContainerKind::Register;
+            if !tracked {
+                continue;
+            }
+            let at = self.eval(&a.offset, "subscript")?;
+            let t = self.touches.entry((a.container, at)).or_default();
+            match a.kind {
+                AccessKind::Read => t.reads.push(iter),
+                AccessKind::Write => t.writes.push(iter),
+            }
+        }
+        Ok(())
+    }
+
+    /// Walk one node under top-level iteration ordinal `iter`, with the
+    /// exact trip semantics of the VM and the inspector: the stride is
+    /// re-evaluated every iteration with the loop variable bound, and
+    /// the loop exits on `s == 0`, or when `v` passes `end` in the
+    /// direction of `s`.
+    fn node(&mut self, n: &Node, iter: i64) -> Result<(), String> {
+        match n {
+            Node::Stmt(s) => self.stmt(s, iter),
+            Node::Loop(l) => {
+                let start = self.eval(&l.start, "loop start")?;
+                let end = self.eval(&l.end, "loop end")?;
+                let mut v = start;
+                loop {
+                    self.env.push((l.var, v));
+                    let s = self.eval(&l.stride, "loop stride");
+                    let s = match s {
+                        Ok(s) => s,
+                        Err(e) => {
+                            self.env.pop();
+                            return Err(e);
+                        }
+                    };
+                    if s == 0 || (s > 0 && v >= end) || (s < 0 && v <= end) {
+                        self.env.pop();
+                        break;
+                    }
+                    let r = l.body.iter().try_for_each(|c| self.node(c, iter));
+                    self.env.pop();
+                    r?;
+                    v += s;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Brute-force certificate for one top-level loop: full pairwise
+/// dependence-distance gcd. `Err` = the footprint is not a function of
+/// the parameters (the oracle refuses exactly when the inspector must).
+fn oracle_certificate(
+    p: &Program,
+    l: &Loop,
+    params: &[(Sym, i64)],
+) -> Result<Certificate, String> {
+    let mut written = vec![false; p.containers.len()];
+    for n in &l.body {
+        n.visit(&mut |m| {
+            if let Node::Stmt(s) = m {
+                written[s.write.container.0 as usize] = true;
+            }
+        });
+    }
+    let mut o = Oracle {
+        p,
+        env: params.to_vec(),
+        touches: HashMap::new(),
+        written,
+        evals: 0,
+    };
+    let start = o.eval(&l.start, "loop start")?;
+    let end = o.eval(&l.end, "loop end")?;
+    let mut v = start;
+    let mut iter = 0i64;
+    loop {
+        o.env.push((l.var, v));
+        let s = o.eval(&l.stride, "loop stride");
+        let s = match s {
+            Ok(s) => s,
+            Err(e) => {
+                o.env.pop();
+                return Err(e);
+            }
+        };
+        if s == 0 || (s > 0 && v >= end) || (s < 0 && v <= end) {
+            o.env.pop();
+            break;
+        }
+        let r = l.body.iter().try_for_each(|c| o.node(c, iter));
+        o.env.pop();
+        r?;
+        iter += 1;
+        v += s;
+    }
+
+    // Full pairwise gcd: every (write, write) and (write, read) pair of
+    // distinct iterations of the same element is a dependence.
+    let mut g = 0i64;
+    for t in o.touches.values() {
+        if t.writes.is_empty() {
+            continue;
+        }
+        for (k, w) in t.writes.iter().enumerate() {
+            for w2 in &t.writes[k + 1..] {
+                if w2 != w {
+                    g = gcd(g, w2 - w);
+                }
+            }
+            for r in &t.reads {
+                if r != w {
+                    g = gcd(g, r - w);
+                }
+            }
+        }
+    }
+    Ok(match g {
+        0 => Certificate::Doall,
+        1 => Certificate::Sequential,
+        d => Certificate::Doacross { delta: d },
+    })
+}
+
+/// Cross-check every certificate the inspector issues for `p` against
+/// the oracle. Returns the number of loops actually compared.
+fn cross_check(p: &Program, params: &[(Sym, i64)], context: &str) -> usize {
+    let rep = inspect_program(p, params, DEFAULT_BUDGET);
+    let mut compared = 0;
+    for insp in &rep.loops {
+        if matches!(insp.certificate, Certificate::BudgetExceeded) {
+            continue;
+        }
+        let l = p
+            .body
+            .iter()
+            .filter_map(Node::as_loop)
+            .find(|l| l.id == insp.loop_id)
+            .expect("inspected loop is a top-level loop");
+        match oracle_certificate(p, l, params) {
+            Err(reason) => assert!(
+                matches!(insp.certificate, Certificate::InputDependent { .. }),
+                "{context}: oracle refused L{} ({reason}) but the inspector \
+                 certified {:?} — a guessed certificate on data-dependent \
+                 accesses is unsound",
+                insp.loop_id.0,
+                insp.certificate,
+            ),
+            Ok(cert) => assert_eq!(
+                insp.certificate, cert,
+                "{context}: L{} ({}) — inspector vs full-pairwise oracle \
+                 (a Doall mismatch is a false parallelism proof; a Doacross \
+                 mismatch is a wrong synchronization distance)",
+                insp.loop_id.0,
+                insp.var.name(),
+            ),
+        }
+        compared += 1;
+    }
+    compared
+}
+
+// ---------------------------------------------------------------------------
+// Corpus cross-check
+// ---------------------------------------------------------------------------
+
+/// Every certificate on every registered kernel (tiny preset) matches
+/// the brute-force oracle: no false DOALL, exact DOACROSS distances.
+#[test]
+fn inspector_certificates_match_the_conflict_oracle_on_the_full_corpus() {
+    let mut compared = 0;
+    for entry in all_kernels() {
+        let p = (entry.build)();
+        let params = (entry.preset)(Preset::Tiny);
+        compared += cross_check(&p, &params, entry.name);
+    }
+    assert!(
+        compared >= 10,
+        "corpus cross-check compared only {compared} loops — the corpus \
+         shrank or the inspector stopped certifying"
+    );
+}
+
+/// The headline irregular kernels — statically unprovable under
+/// `--pipeline none` — earn parallel certificates from the inspector at
+/// concrete parameters, which is the whole point of the tier.
+#[test]
+fn headline_irregular_kernels_certify_parallel() {
+    for name in ["csr_gather", "gather_stride"] {
+        let entry = silo::kernels::kernel(name).expect("registered kernel");
+        let p = (entry.build)();
+        let params = (entry.preset)(Preset::Tiny);
+        let rep = inspect_program(&p, &params, DEFAULT_BUDGET);
+        assert!(
+            rep.loops.iter().any(|l| l.certificate.parallelizable()),
+            "{name}: no parallel certificate at tiny params\n{}",
+            rep.summary()
+        );
+        compared_is_sound(&p, &params, name);
+    }
+}
+
+fn compared_is_sound(p: &Program, params: &[(Sym, i64)], name: &str) {
+    assert!(cross_check(p, params, name) >= 1);
+}
+
+// ---------------------------------------------------------------------------
+// Fuzzed cross-check
+// ---------------------------------------------------------------------------
+
+const FZ_SIZE: i64 = 48;
+
+/// The containers and the one symbolic parameter a fuzzed program draws
+/// its accesses from.
+struct FzWorld {
+    arrays: Vec<ContainerId>,
+    acc: ContainerId,
+    table: ContainerId,
+    p_sym: Sym,
+}
+
+/// Generate one random top-level loop over `i`. Returns `true` when the
+/// loop was built with a data-dependent subscript or guard (the
+/// inspector must answer `InputDependent`, never guess).
+fn fz_loop(b: &mut ProgramBuilder, rng: &mut Rng, case: u64, slot: usize, w0: &FzWorld) -> bool {
+    let FzWorld { arrays, acc, table, p_sym } = w0;
+    let (arrays, acc, table, p_sym) = (arrays.as_slice(), *acc, *table, *p_sym);
+    let i = b.sym(&format!("fz{case}_{slot}_i"));
+    let down = rng.int(0, 7) == 0;
+    let hi = rng.int(8, 40);
+    let stride = if down { int(-1) } else { int(*rng.pick(&[1, 1, 1, 2])) };
+    let (start, end) = if down { (int(hi), int(0)) } else { (int(0), int(hi)) };
+    let mut data_dependent = false;
+    let nested = rng.int(0, 2) == 0;
+    b.for_(i, start, end, stride, |b| {
+        let mut emit = |b: &mut ProgramBuilder, rng: &mut Rng, inner: Option<Sym>| {
+            let w = *rng.pick(arrays);
+            let iv = Expr::Sym(i);
+            let jv = inner.map(Expr::Sym).unwrap_or_else(|| int(0));
+            // Subscript families: affine-in-mod, mod-strided,
+            // parameter-dependent stride, value-dependent (data).
+            let off = match rng.int(0, 6) {
+                0 | 1 => imod(iv.clone() + jv.clone() + int(rng.int(0, 4)), int(FZ_SIZE)),
+                2 | 3 => imod(
+                    iv.clone() * int(rng.int(1, 7)) + jv.clone(),
+                    int(rng.int(4, FZ_SIZE)),
+                ),
+                4 => imod(
+                    iv.clone() * Expr::Sym(p_sym) + jv.clone(),
+                    int(rng.int(4, FZ_SIZE)),
+                ),
+                5 => imod(iv.clone() + jv.clone(), int(rng.int(2, 9))),
+                _ => {
+                    data_dependent = true;
+                    load(table, imod(iv.clone() + jv.clone(), int(FZ_SIZE)))
+                }
+            };
+            // Reads: the read-only table (untracked — even through a
+            // nested data-dependent subscript), or a tracked array at an
+            // independent mod-strided offset.
+            let rhs = match rng.int(0, 4) {
+                0 => load(table, imod(iv.clone(), int(FZ_SIZE))),
+                1 => load(table, load(table, imod(iv.clone(), int(FZ_SIZE)))),
+                2 => {
+                    let r = *rng.pick(arrays);
+                    load(r, imod(iv.clone() * int(rng.int(1, 5)), int(FZ_SIZE)))
+                        + load(table, imod(iv.clone(), int(FZ_SIZE)))
+                }
+                _ => load(w, off.clone()) + Expr::real(1.0),
+            };
+            match rng.int(0, 3) {
+                0 => {
+                    // Integer guard: parameter-evaluable, thins the
+                    // footprint without blocking certification.
+                    let g = imod(iv.clone(), int(rng.int(2, 4)));
+                    b.assign_if(g, w, off, rhs);
+                }
+                1 if rng.int(0, 3) == 0 => {
+                    // Data guard: reads array values — InputDependent.
+                    data_dependent = true;
+                    b.assign_if(load(table, imod(iv.clone(), int(FZ_SIZE))), w, off, rhs);
+                }
+                _ => b.assign(w, off, rhs),
+            }
+        };
+        if nested {
+            let j = b.sym(&format!("fz{case}_{slot}_j"));
+            b.for_(j, int(0), int(rng.int(2, 6)), int(1), |b| {
+                emit(b, rng, Some(j));
+            });
+        } else {
+            for _ in 0..rng.int(1, 2) {
+                emit(b, rng, None);
+            }
+        }
+        if rng.int(0, 3) == 0 {
+            // A reduction rides along: unit-distance dependence on ACC.
+            b.assign(
+                acc,
+                int(0),
+                load(acc, int(0)) + load(table, imod(Expr::Sym(i), int(FZ_SIZE))),
+            );
+        }
+    });
+    data_dependent
+}
+
+/// >= 100 fuzzed programs: every certificate matches the oracle, and
+/// data-dependent programs are always refused, never guessed.
+#[test]
+fn inspector_certificates_match_the_conflict_oracle_on_fuzzed_programs() {
+    let mut data_dependent_seen = 0u32;
+    let mut parallel_seen = 0u32;
+    silo::proptest_lite::check("inspect_conflict_oracle", 128, |rng| {
+        let case = rng.int(0, 1_000_000) as u64;
+        let mut b = ProgramBuilder::new(&format!("fz_{case}"));
+        let world = FzWorld {
+            p_sym: b.param_positive(&format!("fz{case}_P")),
+            arrays: vec![b.array("A", int(FZ_SIZE)), b.array("B", int(FZ_SIZE))],
+            acc: b.array("ACC", int(1)),
+            table: b.array("TBL", int(FZ_SIZE)),
+        };
+        let nloops = rng.int(1, 2);
+        let mut any_data_dependent = false;
+        for slot in 0..nloops {
+            any_data_dependent |= fz_loop(&mut b, rng, case, slot as usize, &world);
+        }
+        let p = b.finish();
+        let params = vec![(world.p_sym, rng.int(1, 8))];
+
+        let compared = cross_check(&p, &params, &format!("fuzz case {case}\n{}", pretty(&p)));
+        assert_eq!(compared, nloops as usize, "every top-level loop gets a verdict");
+
+        let rep = inspect_program(&p, &params, DEFAULT_BUDGET);
+        if any_data_dependent {
+            data_dependent_seen += 1;
+        }
+        parallel_seen += rep.loops.iter().any(|l| l.certificate.parallelizable()) as u32;
+    });
+    // The generator must actually exercise both interesting regimes.
+    assert!(
+        data_dependent_seen >= 5,
+        "only {data_dependent_seen} data-dependent programs generated"
+    );
+    assert!(
+        parallel_seen >= 5,
+        "only {parallel_seen} programs earned a parallel certificate"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Speculative-tier abort path, end to end
+// ---------------------------------------------------------------------------
+
+/// Forced misspeculation through the public API: a loop-carried RAW
+/// chain aborts every chunk-parallel attempt, the sequential fallback
+/// reproduces the plain VM bit for bit, and the counters account for
+/// exactly one attempt / zero commits / one abort per run. The
+/// conflict-free twin commits with the mirrored accounting.
+#[test]
+fn misspeculation_falls_back_bitwise_identical_with_exact_accounting() {
+    use silo::coordinator::{compile_program_with, MemSchedules, PipelineSpec, SafetyPolicy};
+
+    struct Case {
+        name: &'static str,
+        commits: u64,
+        aborts: u64,
+        build: fn() -> Program,
+    }
+    let cases = [
+        Case {
+            name: "raw chain aborts",
+            commits: 0,
+            aborts: 1,
+            build: || {
+                // A[i+1] = A[i] + X[i]: every chunk split conflicts.
+                let mut b = ProgramBuilder::new("spec_abort_e2e");
+                let a = b.array("A", int(65));
+                let x = b.array("X", int(64));
+                let i = b.sym("sae_i");
+                b.for_(i, int(0), int(64), int(1), |b| {
+                    b.assign(
+                        a,
+                        Expr::Sym(i) + int(1),
+                        load(a, Expr::Sym(i)) + load(x, Expr::Sym(i)),
+                    );
+                });
+                b.finish()
+            },
+        },
+        Case {
+            name: "disjoint writes commit",
+            commits: 1,
+            aborts: 0,
+            build: || {
+                let mut b = ProgramBuilder::new("spec_commit_e2e");
+                let d = b.array("D", int(64));
+                let x = b.array("X", int(64));
+                let i = b.sym("sce_i");
+                b.for_(i, int(0), int(64), int(1), |b| {
+                    b.assign(
+                        d,
+                        Expr::Sym(i),
+                        load(x, Expr::Sym(i)) * Expr::real(2.0) + Expr::real(1.0),
+                    );
+                });
+                b.finish()
+            },
+        },
+    ];
+
+    for case in &cases {
+        let p = (case.build)();
+        silo::ir::validate::validate(&p).unwrap();
+        let inputs = silo::kernels::gen_inputs(&p, &[], silo::kernels::default_init).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+
+        let vm = silo::exec::Vm::compile(&p).unwrap();
+        let base = vm.run(&[], &refs, 1).unwrap().arrays;
+
+        let compiled = compile_program_with(
+            p.clone(),
+            &PipelineSpec::parse("none"),
+            MemSchedules::default(),
+            SafetyPolicy::Trusted,
+        )
+        .unwrap();
+        assert!(
+            compiled.spec.is_some(),
+            "{}: the loop must be a speculation candidate",
+            case.name
+        );
+
+        for threads in [2usize, 4, 8] {
+            let (storage, _wall, _fuel, stats) = compiled
+                .execute_speculative(&[], &refs, threads, &silo::exec::ExecLimits::none())
+                .unwrap();
+            assert_eq!(
+                (stats.attempted, stats.commits, stats.aborts),
+                (1, case.commits, case.aborts),
+                "{} at {threads} threads: exact accounting",
+                case.name
+            );
+            for c in &p.containers {
+                let ci = c.id.0 as usize;
+                assert_eq!(base[ci].len(), storage.arrays[ci].len());
+                for (j, (x0, x1)) in base[ci].iter().zip(storage.arrays[ci].iter()).enumerate()
+                {
+                    assert!(
+                        x0.to_bits() == x1.to_bits(),
+                        "{} at {threads} threads: {}[{j}] diverged: {x0} vs {x1}",
+                        case.name,
+                        c.name
+                    );
+                }
+            }
+        }
+    }
+}

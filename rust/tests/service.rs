@@ -708,3 +708,150 @@ fn evicted_submissions_release_their_symbols() {
         "live symbol count grew with every submission despite eviction"
     );
 }
+
+// ---------------------------------------------------------------------------
+// Speculative tier + inspector over the wire
+// ---------------------------------------------------------------------------
+
+/// The speculative backend and the inspector over the wire: commit and
+/// abort runs report exact `(attempted, commits, aborts)` accounting in
+/// the reply AND in `/metrics`, an aborted run's outputs equal the
+/// sequential VM's, and inspector certificates are returned (memoized —
+/// a repeat request yields identical lines and certifies the kernel's
+/// DOALL loop).
+#[test]
+fn speculative_tier_and_inspector_over_the_wire() {
+    use silo::ir::ProgramBuilder;
+    use silo::symbolic::{int, load, Expr};
+
+    let commit_program = || {
+        // D[i] = 2*X[i] + 1: disjoint writes — every attempt commits.
+        let mut b = ProgramBuilder::new("svc_spec_commit");
+        let d = b.array("D", int(64));
+        let x = b.array("X", int(64));
+        let i = b.sym("svc_spc_i");
+        b.for_(i, int(0), int(64), int(1), |b| {
+            b.assign(
+                d,
+                Expr::Sym(i),
+                load(x, Expr::Sym(i)) * Expr::real(2.0) + Expr::real(1.0),
+            );
+        });
+        b.finish()
+    };
+    let conflict_program = || {
+        // A[i+1] = A[i] + X[i]: loop-carried RAW — every attempt aborts.
+        let mut b = ProgramBuilder::new("svc_spec_abort");
+        let a = b.array("A", int(65));
+        let x = b.array("X", int(64));
+        let i = b.sym("svc_spa_i");
+        b.for_(i, int(0), int(64), int(1), |b| {
+            b.assign(
+                a,
+                Expr::Sym(i) + int(1),
+                load(a, Expr::Sym(i)) + load(x, Expr::Sym(i)),
+            );
+        });
+        b.finish()
+    };
+
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let spec_req = || RunRequest {
+        threads: 2,
+        backend: Some("speculative".to_string()),
+        inspector: true,
+        ..RunRequest::default()
+    };
+
+    // Commit path, twice: identical certificates both times (memo), one
+    // commit each time.
+    let rc = c.compile(&pretty(&commit_program()), "none").unwrap();
+    let run1 = c.run(&rc.kernel, &spec_req()).unwrap();
+    assert_eq!(run1.backend, "speculative");
+    assert_eq!(run1.speculation, Some((1, 1, 0)), "commit accounting");
+    let lines = run1.inspector.expect("inspector lines requested");
+    assert!(
+        lines.iter().any(|l| l.contains("doall")),
+        "disjoint writes must certify doall: {lines:?}"
+    );
+    let run2 = c.run(&rc.kernel, &spec_req()).unwrap();
+    assert_eq!(run2.inspector.as_ref(), Some(&lines), "memoized certificates drifted");
+    assert_eq!(run2.speculation, Some((1, 1, 0)));
+
+    // Abort path: exact accounting, outputs bit-identical to the
+    // sequential VM run of the same kernel with the same default inputs.
+    let ra = c.compile(&pretty(&conflict_program()), "none").unwrap();
+    let aborted = c
+        .run(
+            &ra.kernel,
+            &RunRequest {
+                threads: 2,
+                backend: Some("speculative".to_string()),
+                ..RunRequest::default()
+            },
+        )
+        .unwrap();
+    assert_eq!(aborted.backend, "speculative");
+    assert_eq!(aborted.speculation, Some((1, 0, 1)), "abort accounting");
+    let sequential = c.run(&ra.kernel, &RunRequest::default()).unwrap();
+    assert_eq!(sequential.backend, "vm");
+    assert_eq!(sequential.speculation, None, "vm runs carry no speculation counters");
+    assert_eq!(
+        aborted.outputs, sequential.outputs,
+        "aborted speculation must fall back to the exact sequential result"
+    );
+
+    // Exact daemon-wide accounting for everything above.
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "runs_inspected"), 2, "{m}");
+    assert_eq!(metric(&m, "speculation_commits"), 2, "{m}");
+    assert_eq!(metric(&m, "speculation_aborts"), 1, "{m}");
+    server.shutdown();
+}
+
+/// A hostile out-of-bounds program run on the speculative backend traps
+/// exactly as on the sequential checked tier: HTTP 422 with the
+/// structured `out_of_bounds` code in the body — checked at the raw
+/// wire level, not through the client's error formatting.
+#[test]
+fn speculative_backend_traps_hostile_programs_with_422() {
+    let server = start_untrusted(1 << 30);
+    let c = client(&server);
+    let source = include_str!("hostile/oob_gather.silo");
+    let reply = c.compile(source, "none").unwrap();
+    assert_eq!(reply.tier, "checked");
+
+    let body = RunRequest {
+        threads: 2,
+        backend: Some("speculative".to_string()),
+        ..RunRequest::default()
+    }
+    .to_json()
+    .to_string();
+    let (status, text) = silo::service::http::roundtrip(
+        &server.addr().to_string(),
+        "POST",
+        &format!("/run/{}", reply.kernel),
+        &body,
+    )
+    .unwrap();
+    assert_eq!(status, 422, "{text}");
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(
+        v.get("code").and_then(Json::as_str),
+        Some("out_of_bounds"),
+        "structured trap code missing: {text}"
+    );
+    assert!(
+        v.get("error")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .contains("out-of-bounds access"),
+        "{text}"
+    );
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "trapped"), 1, "{m}");
+    assert_eq!(metric(&m, "runs_checked"), 0, "a trapped run never completes: {m}");
+    server.shutdown();
+}
