@@ -397,16 +397,23 @@ pub fn compile_program_with(
         None
     };
     // Re-lower with speculation candidates kept as tree nodes whenever
-    // the program has any. The artifact reuses the policy's CheckSet
-    // (check keys are schedule-independent), so the speculative tier
-    // inherits the same bounds-trap behavior as the sequential VM.
+    // the program has any. The speculative artifact is ALWAYS lowered
+    // with bounds guards, even under SafetyPolicy::Trusted: a
+    // misspeculating chunk reads stale pre-loop values from its
+    // privatized buffers and can compute subscript indices that never
+    // occur in sequential execution, so an unchecked parallel attempt
+    // would be raw-pointer UB on a program that is perfectly safe
+    // sequentially. The abort path in `exec::speculate` relies on those
+    // traps to discard garbage-index chunks; the verified tier reuses
+    // the report's CheckSet (check keys are schedule-independent), the
+    // trusted tier guards every access.
     let candidates = speculation_candidates(&program);
     let spec = if candidates.is_empty() {
         None
     } else {
         let checks = match &report {
             Some(r) => CheckSet::from_report(r),
-            None => CheckSet::none(),
+            None => CheckSet::all(),
         };
         crate::lowering::lower_speculative(&program, &checks, &candidates)
             .ok()

@@ -188,6 +188,17 @@ fn run_chunks(
         let sp = wf.spec.as_deref().expect("speculative worker lost its tracker");
         for (slot, &c) in tracked.iter().enumerate() {
             for e in sp.writes[slot].iter_set() {
+                // Unreachable: speculative artifacts are always lowered
+                // with bounds guards, so an OOB write traps and aborts
+                // the attempt before any commit. The assert catches a
+                // violated guard invariant in tests; release builds
+                // skip rather than write out of bounds.
+                debug_assert!(
+                    e < lens[c],
+                    "committed speculative write out of bounds: \
+                     container #{c}[{e}] >= len {} — bounds guard missing",
+                    lens[c]
+                );
                 if e >= lens[c] {
                     continue;
                 }
@@ -246,6 +257,17 @@ pub fn exec_spec_loop(
         stats.attempted += 1;
         if run_chunks(prog, l, frame, lens, start_val, s0, count, threads, &tracked)? {
             stats.commits += 1;
+            // Leave the exact loop-control register state the sequential
+            // path exits with: the loop var holds the first value that
+            // fails the exit test, and the stride block has been
+            // evaluated at it. The parallel stride is iteration-
+            // invariant, so one final evaluation at the terminal value
+            // reproduces the sequential path's last stride execution —
+            // any later bytecode reading these registers matches the
+            // sequential VM bitwise.
+            let v_exit = start_val.wrapping_add((count as i64).wrapping_mul(s0));
+            frame.ints[l.var_reg as usize] = v_exit;
+            exec_block(&l.stride.ops, frame, &mut tr)?;
             exec_block(&l.post_loop.ops, frame, &mut tr)?;
             return Ok(());
         }
@@ -374,7 +396,10 @@ mod tests {
         });
         let p = b.finish();
         let loop_id = p.body[0].as_loop().unwrap().id;
-        let prog = crate::lowering::lower_speculative(&p, &CheckSet::none(), &[loop_id])
+        // CheckSet::all() mirrors production: the driver never lowers a
+        // speculative artifact unchecked (Trusted uses all(), Verified
+        // the report's set).
+        let prog = crate::lowering::lower_speculative(&p, &CheckSet::all(), &[loop_id])
             .expect("speculative lowering");
 
         let mut storage = Storage::allocate(&prog, &[]).unwrap();
