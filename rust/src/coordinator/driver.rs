@@ -17,6 +17,7 @@ use crate::kernels::{self, Preset};
 use crate::native::{NativeProgram, Tier};
 use crate::symbolic::{ContainerId, Sym};
 use crate::transforms::{Pipeline, PipelineReport, PrefetchPass, PtrIncPass};
+use crate::tuner::CostCalibration;
 use crate::verify::{self, CheckSet, SafetyTier, VerifyReport};
 
 /// Which optimization pipeline to run.
@@ -164,6 +165,11 @@ pub struct CompiledKernel {
     /// candidates — a [`Tier::Speculative`] request then degrades to
     /// the VM.
     pub spec: Option<Vm>,
+    /// The machine model's cost estimate for the lowered bytecode
+    /// (cycles per innermost iteration, clang model, *uncalibrated*).
+    /// The daemon divides measured `/run` latency by this to export the
+    /// modeled-vs-measured drift gauge.
+    pub modeled_cycles_per_iter: f64,
 }
 
 impl CompiledKernel {
@@ -313,19 +319,41 @@ pub fn compile_program_verified(
     compile_program_with(program, spec, mem, SafetyPolicy::Verified)
 }
 
-/// The policy-parameterized compile everything above routes through.
+/// The policy-parameterized compile everything above routes through
+/// (identity calibration — the cost model's raw cycle estimates).
 pub fn compile_program_with(
-    mut program: Program,
+    program: Program,
     spec: &PipelineSpec,
     mem: MemSchedules,
     policy: SafetyPolicy,
 ) -> Result<CompiledKernel> {
+    compile_program_calibrated(program, spec, mem, policy, CostCalibration::identity())
+}
+
+/// [`compile_program_with`] with a measured-latency [`CostCalibration`]
+/// applied to every cost-model query the autotuner makes (the daemon
+/// feeds `/run` latencies back through this; see `service::server`).
+/// A shared scale never reorders candidates of one search, but it keeps
+/// the reported scores and the drift gauge in measured units.
+pub fn compile_program_calibrated(
+    mut program: Program,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+    policy: SafetyPolicy,
+    cal: CostCalibration,
+) -> Result<CompiledKernel> {
+    let _sp = crate::obs::span("compile", || format!("compile:{}", program.name));
     let pipeline = if matches!(spec, PipelineSpec::Auto) {
         // Cost-model-driven schedule search: the tuner picks the pipeline
         // per program; explicit --ptr-inc/--prefetch requests still apply
         // on top (ungated, exactly as for the named configurations).
-        let outcome =
-            crate::tuner::autotune_program(&program, &crate::tuner::TuneOptions::default())?;
+        let outcome = crate::tuner::autotune_program(
+            &program,
+            &crate::tuner::TuneOptions {
+                calibration: cal,
+                ..Default::default()
+            },
+        )?;
         let mut rep = outcome.report();
         program = outcome.program;
         let mut extra = Pipeline::new();
@@ -348,6 +376,7 @@ pub fn compile_program_with(
         }
     };
     crate::ir::validate::validate(&program)?;
+    let lower_sp = crate::obs::span("compile", || format!("lower:{}", program.name));
     let (vm, tier, report) = match policy {
         SafetyPolicy::Trusted => (Vm::compile(&program)?, SafetyTier::Trusted, None),
         SafetyPolicy::Verified => {
@@ -388,10 +417,12 @@ pub fn compile_program_with(
             (vm, tier, Some(report))
         }
     };
+    drop(lower_sp);
     // JIT the lowered bytecode whenever the host supports it. Failure is
     // not an error — the artifact simply has no native form and every
     // `Tier::Native` request degrades to the VM.
     let native = if crate::native::available() {
+        let _jit_sp = crate::obs::span("compile", || format!("jit:{}", program.name));
         NativeProgram::compile(&vm.prog).ok()
     } else {
         None
@@ -419,6 +450,8 @@ pub fn compile_program_with(
             .ok()
             .map(|prog| Vm { prog })
     };
+    let modeled_cycles_per_iter =
+        crate::machine::cycles_per_iteration(&vm.prog, &crate::machine::clang());
     Ok(CompiledKernel {
         name: program.name.clone(),
         program,
@@ -428,6 +461,7 @@ pub fn compile_program_with(
         verify: report,
         native,
         spec,
+        modeled_cycles_per_iter,
     })
 }
 

@@ -3,12 +3,14 @@
 
 pub mod driver;
 pub mod experiments;
+pub mod profile;
 pub mod report;
 
 pub use driver::{
-    compile_program, compile_program_verified, compile_program_with, optimize_and_run,
-    optimize_and_run_backend, optimize_and_run_spec, speculation_candidates, validate_config,
-    validate_spec, CompiledKernel, MemSchedules, OptConfig, PipelineSpec, RunOutcome,
-    SafetyPolicy, REJECTED_PREFIX,
+    compile_program, compile_program_calibrated, compile_program_verified, compile_program_with,
+    optimize_and_run, optimize_and_run_backend, optimize_and_run_spec, speculation_candidates,
+    validate_config, validate_spec, CompiledKernel, MemSchedules, OptConfig, PipelineSpec,
+    RunOutcome, SafetyPolicy, REJECTED_PREFIX,
 };
+pub use profile::{profile_kernel, ProfileOutcome};
 pub use report::Table;

@@ -1,0 +1,206 @@
+//! The `silo profile` driver: one compile, two runs, one report.
+//!
+//! A profile run compiles the kernel exactly as `silo run` would
+//! (per-pass wall/cache timings ride along in the [`PipelineReport`]),
+//! then executes **twice**:
+//!
+//! 1. the *real* artifact on the requested backend — the wall-clock
+//!    number the user cares about, untouched by instrumentation;
+//! 2. the *profiled* artifact ([`Vm::compile_profiled`]: every loop
+//!    force-treed, memory schedules stripped) sequentially with a
+//!    [`ProfileTracer`] — per-loop iteration and access tallies.
+//!
+//! The two artifacts lower from the same optimized program, so the
+//! profiled run's semantic loop structure (and total back-edge count)
+//! matches what the real artifact executed. Span events for the whole
+//! run (passes, tuner candidates, lowering, the runs themselves) are
+//! collected and returned for Chrome-trace export.
+
+use anyhow::Result;
+
+use crate::exec::{ExecLimits, Vm};
+use crate::kernels::{self, Preset};
+use crate::native::Tier;
+use crate::obs::{self, ExecProfile, ProfileTracer, SpanEvent};
+use crate::transforms::PipelineReport;
+use crate::verify::CheckSet;
+
+use super::driver::{compile_program, MemSchedules, PipelineSpec};
+
+/// Everything one profile run produced.
+pub struct ProfileOutcome {
+    pub kernel: String,
+    /// Pass log + per-pass timings of the compile.
+    pub pipeline: Option<PipelineReport>,
+    /// The backend the real run actually executed on.
+    pub backend: Tier,
+    /// Wall-clock time of the real (uninstrumented) run.
+    pub wall: std::time::Duration,
+    /// Per-loop iteration/access tallies from the profiled run.
+    pub exec: ExecProfile,
+    /// Trap message if the profiled run aborted (tallies up to the trap
+    /// are still reported).
+    pub trap: Option<String>,
+    /// Cost-model estimate, nanoseconds per iteration (clang model on
+    /// the reference node, uncalibrated).
+    pub modeled_ns_per_iter: f64,
+    /// Real wall time ÷ total profiled iterations (`None` when the
+    /// program performed no iterations).
+    pub measured_ns_per_iter: Option<f64>,
+    /// measured ÷ modeled — 1.0 means the cost model is exact; the
+    /// daemon exports the same ratio as a gauge.
+    pub drift: Option<f64>,
+    /// Every span recorded during this run, for Chrome-trace export.
+    pub events: Vec<SpanEvent>,
+}
+
+/// Profile one kernel (registry name or `.silo` path). Spans are enabled
+/// for the duration of the run and restored afterwards.
+pub fn profile_kernel(
+    name: &str,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+    preset: Preset,
+    threads: usize,
+    backend: Tier,
+) -> Result<ProfileOutcome> {
+    let was_enabled = obs::enabled();
+    obs::set_enabled(true);
+    let prev_trace = obs::span::set_current_trace(obs::next_trace_id());
+    let result = profile_inner(name, spec, mem, preset, threads, backend);
+    obs::span::set_current_trace(prev_trace);
+    let events = obs::take_events();
+    obs::set_enabled(was_enabled);
+    let mut outcome = result?;
+    outcome.events = events;
+    Ok(outcome)
+}
+
+fn profile_inner(
+    name: &str,
+    spec: &PipelineSpec,
+    mem: MemSchedules,
+    preset: Preset,
+    threads: usize,
+    backend: Tier,
+) -> Result<ProfileOutcome> {
+    let _sp = obs::span("exec", || format!("profile:{name}"));
+    let kernel = kernels::resolve(name)?;
+    let compiled = compile_program(kernel.program(), spec, mem)?;
+    let params = kernel.params(preset)?;
+    let inputs = kernel.inputs(&compiled.program, &params)?;
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+
+    // 1. Real artifact on the requested backend: the honest wall clock.
+    let (_, wall, _, ran_on) =
+        compiled.execute_limited_tier(backend, &params, &refs, threads, &ExecLimits::none())?;
+
+    // 2. Profiled artifact, sequential: loop identity + tallies. A trap
+    // here is reported, not fatal — partial tallies are still useful.
+    let pvm = Vm::compile_profiled(&compiled.program, &CheckSet::none())?;
+    let mut tracer = ProfileTracer::new();
+    let trap = {
+        let _run_sp = obs::span("exec", || format!("profiled-run:{}", compiled.name));
+        match pvm.run_limited_traced(&params, &refs, 1, &ExecLimits::none(), &mut tracer) {
+            Ok(_) => None,
+            Err(e) => Some(format!("{e:#}")),
+        }
+    };
+    let exec = tracer.finish(&compiled.program);
+
+    let node = crate::machine::intel_node();
+    let modeled_ns_per_iter = compiled.modeled_cycles_per_iter / node.ghz;
+    let iters = exec.total_iters();
+    let measured_ns_per_iter = (iters > 0).then(|| wall.as_nanos() as f64 / iters as f64);
+    let drift = measured_ns_per_iter
+        .map(|m| m / modeled_ns_per_iter)
+        .filter(|d| d.is_finite());
+
+    Ok(ProfileOutcome {
+        kernel: compiled.name.clone(),
+        pipeline: compiled.pipeline,
+        backend: ran_on,
+        wall,
+        exec,
+        trap,
+        modeled_ns_per_iter,
+        measured_ns_per_iter,
+        drift,
+        events: Vec::new(),
+    })
+}
+
+impl ProfileOutcome {
+    /// The full human-readable report `silo profile` prints.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "== profile: {} ==\nbackend: {}   wall: {:.3} ms\n",
+            self.kernel,
+            self.backend.as_str(),
+            self.wall.as_secs_f64() * 1e3,
+        ));
+        out.push_str("\n-- compile passes --\n");
+        match &self.pipeline {
+            Some(rep) if !rep.timings.is_empty() => out.push_str(&rep.timing_summary()),
+            _ => out.push_str("  (no optimization pipeline)\n"),
+        }
+        out.push_str("\n-- loop execution --\n");
+        out.push_str(&self.exec.render());
+        out.push_str(&format!(
+            "  total iterations: {}\n",
+            self.exec.total_iters()
+        ));
+        if let Some(t) = &self.trap {
+            out.push_str(&format!("  profiled run trapped: {t}\n"));
+        }
+        out.push_str("\n-- cost model --\n");
+        out.push_str(&format!(
+            "  modeled: {:.2} ns/iter",
+            self.modeled_ns_per_iter
+        ));
+        match (self.measured_ns_per_iter, self.drift) {
+            (Some(m), Some(d)) => {
+                out.push_str(&format!("   measured: {m:.2} ns/iter   drift: {d:.2}x\n"))
+            }
+            (Some(m), None) => out.push_str(&format!("   measured: {m:.2} ns/iter\n")),
+            _ => out.push_str("   measured: n/a (no iterations)\n"),
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::driver::OptConfig;
+
+    /// End-to-end on a registry kernel: trip counts are exact, the
+    /// report renders, and spans from every layer were collected.
+    #[test]
+    fn profile_reports_exact_trip_counts() {
+        let _g = crate::obs::span::TEST_GUARD
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let out = profile_kernel(
+            "jacobi_1d",
+            &PipelineSpec::Config(OptConfig::Cfg1),
+            MemSchedules::default(),
+            Preset::Tiny,
+            1,
+            Tier::Vm,
+        )
+        .unwrap();
+        assert!(out.trap.is_none(), "{:?}", out.trap);
+        assert!(!out.exec.loops.is_empty());
+        assert!(out.exec.total_iters() > 0);
+        let rep = out.render();
+        assert!(rep.contains("total iterations"), "{rep}");
+        // The compile span and the profiled-run span both made it out.
+        assert!(out.events.iter().any(|e| e.cat == "compile"));
+        assert!(out
+            .events
+            .iter()
+            .any(|e| e.name.starts_with("profiled-run:")));
+    }
+}

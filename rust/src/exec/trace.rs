@@ -1,8 +1,34 @@
 //! Memory-trace hooks feeding the machine models.
 
-/// Observer of every data access the VM performs (element granularity).
+use crate::ir::LoopId;
+
+/// Observer of every data access the VM performs (element granularity), plus
+/// optional loop-lifecycle hooks used by the profiler.
+///
+/// All methods default to no-ops so existing tracers (and `NullTracer`) stay
+/// zero-cost: the VM is monomorphized over the tracer type, so empty bodies
+/// vanish entirely and the lowered bytecode is untouched — differential
+/// tests against the native and speculative tiers remain bitwise-identical.
+///
+/// The loop hooks only fire for *tree-lowered* loops (flat-lowered loops
+/// have no runtime identity); `lowering::lower_profiled` force-trees every
+/// loop so the profiler sees the whole nest.
 pub trait Tracer {
     fn access(&mut self, cont: u16, idx: i64, write: bool, prefetch: bool);
+
+    /// A tree-lowered loop is about to run its first iteration check.
+    #[inline(always)]
+    fn loop_enter(&mut self, _id: LoopId) {}
+
+    /// One iteration of the identified loop is about to run, immediately
+    /// after its back-edge charged fuel — so per-loop iteration tallies
+    /// sum exactly to `fuel_used` even on trapped runs.
+    #[inline(always)]
+    fn loop_iter(&mut self, _id: LoopId) {}
+
+    /// The identified loop exited normally.
+    #[inline(always)]
+    fn loop_exit(&mut self, _id: LoopId) {}
 }
 
 /// Zero-cost tracer for untraced runs — all calls inline to nothing.
@@ -22,14 +48,45 @@ pub struct TraceEvent {
     pub prefetch: bool,
 }
 
-/// Collects the full trace in memory (tests, small workloads).
-#[derive(Default)]
+/// Default `CollectingTracer` event cap: 4M events ≈ 64 MiB. Large enough
+/// for every experiment preset in the repo, small enough that a hostile or
+/// runaway profiled run cannot OOM the process.
+pub const DEFAULT_EVENT_CAP: usize = 1 << 22;
+
+/// Collects the full trace in memory (tests, small workloads), bounded by
+/// an event cap. Once the cap is hit further events are dropped and
+/// `truncated` is set so downstream analyses can refuse partial traces.
 pub struct CollectingTracer {
     pub events: Vec<TraceEvent>,
+    /// Maximum number of events retained.
+    pub cap: usize,
+    /// True iff at least one event was dropped because the cap was hit.
+    pub truncated: bool,
+}
+
+impl Default for CollectingTracer {
+    fn default() -> Self {
+        Self::with_cap(DEFAULT_EVENT_CAP)
+    }
+}
+
+impl CollectingTracer {
+    /// A tracer retaining at most `cap` events.
+    pub fn with_cap(cap: usize) -> Self {
+        CollectingTracer {
+            events: Vec::new(),
+            cap,
+            truncated: false,
+        }
+    }
 }
 
 impl Tracer for CollectingTracer {
     fn access(&mut self, cont: u16, idx: i64, write: bool, prefetch: bool) {
+        if self.events.len() >= self.cap {
+            self.truncated = true;
+            return;
+        }
         self.events.push(TraceEvent {
             cont,
             idx,
@@ -57,5 +114,29 @@ impl Tracer for CountingTracer {
         } else {
             self.reads += 1;
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collecting_tracer_caps_and_flags_truncation() {
+        let mut tr = CollectingTracer::with_cap(3);
+        for i in 0..5 {
+            tr.access(0, i, false, false);
+        }
+        assert_eq!(tr.events.len(), 3);
+        assert!(tr.truncated);
+        assert_eq!(tr.events[2].idx, 2);
+    }
+
+    #[test]
+    fn collecting_tracer_under_cap_is_complete() {
+        let mut tr = CollectingTracer::default();
+        tr.access(1, 7, true, false);
+        assert_eq!(tr.events.len(), 1);
+        assert!(!tr.truncated);
     }
 }

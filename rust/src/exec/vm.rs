@@ -71,6 +71,16 @@ impl Vm {
         })
     }
 
+    /// Compile the profiling artifact: every loop stays a tree node so
+    /// the [`Tracer`] loop hooks observe per-loop iteration counts (see
+    /// [`crate::lowering::compile::lower_profiled`]). Slower than
+    /// [`Vm::compile`]'s flat lowering — use only for `silo profile`.
+    pub fn compile_profiled(p: &Program, checks: &CheckSet) -> Result<Vm> {
+        Ok(Vm {
+            prog: crate::lowering::compile::lower_profiled(p, checks)?,
+        })
+    }
+
     /// Run with `threads` workers. `inputs` seeds argument containers.
     pub fn run(
         &self,
@@ -194,6 +204,7 @@ fn exec_tree_loop<T: Tracer>(
     if effective_threads <= 1 {
         // Sequential execution honors every schedule trivially (iteration
         // order satisfies all wait/release orderings).
+        tr.loop_enter(l.loop_id);
         let mut v = start_val;
         loop {
             frame.ints[l.var_reg as usize] = v;
@@ -203,6 +214,7 @@ fn exec_tree_loop<T: Tracer>(
                 break;
             }
             frame.backedge()?;
+            tr.loop_iter(l.loop_id);
             exec_block(&l.pre_body.ops, frame, tr)?;
             exec_block(&l.prefetch.ops, frame, tr)?;
             exec_nodes(prog, &l.body, frame, lens, threads, tr)?;
@@ -210,6 +222,7 @@ fn exec_tree_loop<T: Tracer>(
             v += s;
         }
         exec_block(&l.post_loop.ops, frame, tr)?;
+        tr.loop_exit(l.loop_id);
         return Ok(());
     }
 

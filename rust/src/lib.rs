@@ -28,6 +28,7 @@ pub mod kernels;
 pub mod lowering;
 pub mod machine;
 pub mod native;
+pub mod obs;
 pub mod proptest_lite;
 pub mod runtime;
 pub mod service;

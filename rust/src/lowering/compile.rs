@@ -61,6 +61,27 @@ pub fn lower_speculative(
     lower_impl(&stripped, checks, spec)
 }
 
+/// Lower the profiling artifact: *every* loop is kept as a tree node so
+/// the runtime retains loop identity and the [`crate::exec::Tracer`]
+/// loop hooks fire per nest level — flat-lowered loops have no runtime
+/// identity at all. Memory schedules are stripped for the same reason as
+/// [`lower_speculative`] (cursor initialization is flat-path-only), so
+/// the profiled artifact reports the program's *semantic* accesses, not
+/// schedule-injected prefetches. The bytecode this produces is only used
+/// by `silo profile` / explicit profiling entry points; ordinary runs are
+/// untouched.
+pub fn lower_profiled(p: &Program, checks: &CheckSet) -> Result<ExecProgram> {
+    let mut stripped = p.clone();
+    stripped.schedules = crate::ir::ScheduleSet::default();
+    let every_loop: Vec<LoopId> = stripped.loops().iter().map(|l| l.id).collect();
+    let mut prog = lower_impl(&stripped, checks, &every_loop)?;
+    // `lower_impl` records `force_tree` as speculative candidates; the
+    // profiled artifact runs on the ordinary VM, never the speculative
+    // runtime, so none of its loops are speculation targets.
+    prog.spec_loops.clear();
+    Ok(prog)
+}
+
 fn lower_impl(
     p: &Program,
     checks: &CheckSet,

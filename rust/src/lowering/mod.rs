@@ -6,4 +6,4 @@ pub mod compile;
 pub mod expr_compile;
 
 pub use bytecode::{CodeBlock, ContainerMeta, ExecNode, ExecProgram, ExecSchedule, LoopExec, Op};
-pub use compile::{lower, lower_speculative, lower_with_checks};
+pub use compile::{lower, lower_profiled, lower_speculative, lower_with_checks};

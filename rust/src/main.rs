@@ -17,7 +17,17 @@
 //!              reports attempts/commits/aborts)
 //!   silo validate <kernel> [--cfg1|--cfg2|--cfg3|--pipeline=SPEC]
 //!            [--ptr-inc] [--threads=N]
-//!   silo tune <kernel>                         — autotuner candidate table
+//!   silo tune <kernel> [--explain]             — autotuner candidate table
+//!            — --explain additionally prints the ranked candidate list
+//!              with each schedule's modeled cost terms, so a surprising
+//!              choice can be audited instead of trusted
+//!   silo profile <kernel> [--pipeline=SPEC] [--preset=P] [--threads=N]
+//!            [--backend=vm|native|speculative] [--trace-out=FILE]
+//!            — per-pass compile timings (wall + analysis-cache hits),
+//!              per-loop iteration/access tallies from an instrumented
+//!              sequential replay, and modeled-vs-measured ns/iter drift;
+//!              --trace-out writes every span as Chrome trace-event JSON
+//!              (load in chrome://tracing or Perfetto)
 //!   silo inspect <kernel> [--pipeline=SPEC] [--preset=P]
 //!            — inspector pass: evaluate the symbolic access functions
 //!              over the concrete iteration space of the preset's
@@ -38,14 +48,18 @@
 //!   silo artifacts                             — list PJRT artifacts
 //!   silo serve [--addr=H:P] [--threads=N] [--cache-cap=N]
 //!            [--untrusted] [--fuel=N] [--wall-ms=N]
-//!            [--backend=vm|native|speculative]
+//!            [--backend=vm|native|speculative] [--access-log]
 //!            — the service daemon: POST /compile + /run/<id>, GET
 //!              /kernels /metrics /healthz, content-addressed LRU
 //!              schedule cache (default addr 127.0.0.1:7420).
 //!              --untrusted verifies every submission (rejecting
 //!              provably out-of-bounds programs, check-compiling
 //!              unproven accesses) and meters every run with a fuel
-//!              budget and wall-clock cap
+//!              budget and wall-clock cap; --access-log emits one
+//!              structured JSON line per request (id, method, path,
+//!              status, latency) on stderr. GET /metrics also serves
+//!              `?format=prometheus` text exposition with per-endpoint
+//!              latency histograms and the cost-model drift gauge
 //!   silo submit <file>.silo [--addr=H:P] [--pipeline=SPEC]
 //!            [--preset=tiny|small|medium] [--threads=N]
 //!            [--backend=vm|native|speculative] [--check]
@@ -208,6 +222,30 @@ fn real_main() -> anyhow::Result<()> {
             if outcome.refined_nests > 0 {
                 println!("per-loop ptr-inc kept on {} nest(s)", outcome.refined_nests);
             }
+            if args.has("--explain") {
+                print!("\n{}", outcome.explain());
+            }
+        }
+        Some("profile") => {
+            let name = args.positional.get(1).ok_or_else(usage)?;
+            let outcome = coordinator::profile_kernel(
+                name,
+                &args.spec(),
+                args.mem(),
+                args.preset()?,
+                args.threads(),
+                args.backend()?,
+            )?;
+            print!("{}", outcome.render());
+            if let Some(path) = args.value("--trace-out") {
+                let json = silo::obs::chrome_trace_json(&outcome.events);
+                std::fs::write(&path, &json)
+                    .map_err(|e| anyhow::anyhow!("cannot write {path}: {e}"))?;
+                println!(
+                    "\nwrote {} span(s) as Chrome trace-event JSON to {path}",
+                    outcome.events.len()
+                );
+            }
         }
         Some("inspect") => {
             let name = args.positional.get(1).ok_or_else(usage)?;
@@ -300,6 +338,7 @@ fn real_main() -> anyhow::Result<()> {
                     .and_then(|v| v.parse().ok())
                     .unwrap_or(defaults.wall_ms),
                 backend: args.backend()?,
+                access_log: args.has("--access-log"),
                 ..defaults
             };
             let server = silo::service::Server::serve(&config)?;
@@ -465,11 +504,15 @@ fn sweep_verify(
 
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
-        "usage: silo <list|show|run|validate|tune|inspect|verify|experiment|artifacts|serve|\
-         submit> [args]\n\
+        "usage: silo <list|show|run|validate|tune|profile|inspect|verify|experiment|artifacts|\
+         serve|submit> [args]\n\
          kernels: a registered name (see `silo list`) or a .silo file path\n\
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
+         profiling: `silo profile kernel [--pipeline=SPEC --preset=P --backend=B \
+         --trace-out=trace.json]` prints per-pass compile timings, per-loop \
+         iteration tallies, and modeled-vs-measured drift; `silo tune kernel \
+         --explain` ranks every candidate with its cost terms\n\
          backend: --backend=vm|native|speculative on run/serve/submit (native = \
          JIT'd x86-64 code tier, VM fallback elsewhere; speculative = \
          chunk-parallel with conflict detection, sequential fallback)\n\
@@ -479,7 +522,7 @@ fn usage() -> anyhow::Error {
          verdicts + the worst-case fuel bound; `silo verify <dir>...` sweeps \
          every .silo file under the paths\n\
          service: `silo serve [--addr=H:P --threads=N --cache-cap=N --untrusted \
-         --fuel=N --wall-ms=N --backend=B]`, then\n\
+         --fuel=N --wall-ms=N --backend=B --access-log]`, then\n\
          `silo submit file.silo [--addr=H:P --pipeline=SPEC --preset=P \
          --backend=B --check]`\n\
          see rust/src/main.rs header for details"

@@ -1,0 +1,92 @@
+//! Chrome trace-event JSON export.
+//!
+//! Serializes collected [`SpanEvent`]s into the Trace Event Format's
+//! JSON-object form (`{"traceEvents": [...]}` with complete `"ph": "X"`
+//! events), loadable directly by `chrome://tracing` and Perfetto. Events
+//! are sorted by `(start, tid, name)` so the export is deterministic for
+//! a given event set — the golden-file test depends on that.
+
+use crate::service::json::Json;
+
+use super::span::SpanEvent;
+
+/// Render events as a Chrome trace JSON document.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> String {
+    let mut sorted: Vec<&SpanEvent> = events.iter().collect();
+    sorted.sort_by(|a, b| {
+        a.start_us
+            .cmp(&b.start_us)
+            .then(a.tid.cmp(&b.tid))
+            .then(a.name.cmp(&b.name))
+    });
+    let rows: Vec<Json> = sorted.iter().map(|e| event_json(e)).collect();
+    let doc = Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(rows)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ]);
+    doc.to_string()
+}
+
+fn event_json(e: &SpanEvent) -> Json {
+    let mut args: Vec<(String, Json)> = e
+        .args
+        .iter()
+        .map(|(k, v)| ((*k).to_string(), Json::Str(v.clone())))
+        .collect();
+    if e.trace != 0 {
+        args.push(("trace".into(), Json::Num(e.trace as f64)));
+    }
+    let mut obj = vec![
+        ("name".into(), Json::Str(e.name.clone())),
+        ("cat".into(), Json::Str(e.cat.to_string())),
+        ("ph".into(), Json::Str("X".into())),
+        ("ts".into(), Json::Num(e.start_us as f64)),
+        ("dur".into(), Json::Num(e.dur_us as f64)),
+        ("pid".into(), Json::Num(1.0)),
+        ("tid".into(), Json::Num(e.tid as f64)),
+    ];
+    if !args.is_empty() {
+        obj.push(("args".into(), Json::Obj(args)));
+    }
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_is_parseable_and_sorted() {
+        let evs = vec![
+            SpanEvent {
+                name: "later".into(),
+                cat: "compile",
+                trace: 2,
+                tid: 1,
+                start_us: 50,
+                dur_us: 5,
+                args: vec![],
+            },
+            SpanEvent {
+                name: "earlier".into(),
+                cat: "tune",
+                trace: 0,
+                tid: 1,
+                start_us: 10,
+                dur_us: 30,
+                args: vec![("score", "0.5".into())],
+            },
+        ];
+        let s = chrome_trace_json(&evs);
+        let doc = Json::parse(&s).expect("valid JSON");
+        let rows = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").and_then(|v| v.as_str()), Some("earlier"));
+        assert_eq!(rows[0].get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(rows[1].get("ts").and_then(|v| v.as_i64()), Some(50));
+        assert_eq!(
+            rows[0].get("args").and_then(|a| a.get("score")).and_then(|v| v.as_str()),
+            Some("0.5")
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! Log₂-bucketed latency histograms.
+//!
+//! Fixed bucket layout shared by the plain and atomic variants: bucket
+//! `i` counts samples `v` (in microseconds) with
+//! `lower_edge(i) < v ≤ upper_edge(i)` where `upper_edge(i) = 2^i` µs,
+//! except bucket 0 which also absorbs `v = 0` and the last bucket whose
+//! upper edge is +∞. 28 buckets span 1 µs … 67 s — the full range of a
+//! compile or metered run — in a fixed 224-byte footprint, which is what
+//! lets the daemon keep one histogram per endpoint with no allocation on
+//! the request path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets (last one is the +∞ overflow bucket).
+pub const BUCKETS: usize = 28;
+
+/// Index of the bucket that counts `us`.
+#[inline]
+pub fn bucket_of(us: u64) -> usize {
+    if us <= 1 {
+        return 0;
+    }
+    // Smallest i with us <= 2^i, i.e. ceil(log2(us)).
+    let i = (64 - (us - 1).leading_zeros()) as usize;
+    i.min(BUCKETS - 1)
+}
+
+/// Inclusive upper edge of bucket `i` in µs (+∞ for the last bucket).
+pub fn upper_edge(i: usize) -> f64 {
+    if i >= BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        (1u64 << i) as f64
+    }
+}
+
+/// Exclusive lower edge of bucket `i` in µs.
+pub fn lower_edge(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        (1u64 << (i - 1)) as f64
+    }
+}
+
+/// A plain (single-writer) histogram of microsecond samples.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Histogram {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    /// Sum of all recorded samples, µs.
+    pub sum_us: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    pub fn record(&mut self, us: u64) {
+        self.counts[bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+    }
+
+    /// Fold another histogram into this one (same fixed layout).
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..BUCKETS {
+            self.counts[i] += other.counts[i];
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+    }
+
+    /// Arithmetic mean in µs (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Estimate the `p`-quantile (`0 ≤ p ≤ 1`) by linear interpolation
+    /// inside the bucket containing the target rank. The overflow bucket
+    /// has no finite upper edge, so samples landing there estimate as its
+    /// lower edge — an admitted underestimate, stated rather than hidden.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = p.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for i in 0..BUCKETS {
+            let c = self.counts[i];
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= target {
+                let lo = lower_edge(i);
+                let hi = upper_edge(i);
+                if !hi.is_finite() {
+                    return lo;
+                }
+                let within = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * within;
+            }
+            cum = next;
+        }
+        lower_edge(BUCKETS - 1)
+    }
+}
+
+/// Shared-writer histogram: relaxed atomics, fixed footprint, snapshot
+/// by copy. The counters are monotone and read individually, so a
+/// snapshot taken under concurrent writes is a valid (if slightly torn)
+/// histogram — exactly the Prometheus scrape model.
+#[derive(Debug, Default)]
+pub struct AtomicHistogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram::default()
+    }
+
+    pub fn record(&self, us: u64) {
+        self.counts[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for i in 0..BUCKETS {
+            h.counts[i] = self.counts[i].load(Ordering::Relaxed);
+        }
+        h.count = self.count.load(Ordering::Relaxed);
+        h.sum_us = self.sum_us.load(Ordering::Relaxed);
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(5), 3);
+        assert_eq!(bucket_of(1 << 20), 20);
+        assert_eq!(bucket_of((1 << 20) + 1), 21);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn record_merge_and_mean() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1);
+        a.record(100);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.sum_us, 1101);
+        assert_eq!(a.counts.iter().sum::<u64>(), 3);
+        assert!((a.mean() - 367.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn percentile_estimation() {
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record(3); // bucket 2: (2, 4]
+        }
+        // All mass in one bucket: quantiles interpolate across (2, 4].
+        assert!(h.percentile(0.0) >= 2.0);
+        assert!(h.percentile(1.0) <= 4.0);
+        assert!(h.percentile(0.5) > 2.0 && h.percentile(0.5) < 4.0);
+        // Empty histogram.
+        assert_eq!(Histogram::new().percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn atomic_snapshot_matches_plain() {
+        let ah = AtomicHistogram::new();
+        let mut h = Histogram::new();
+        for v in [0, 1, 7, 4096, 1 << 30] {
+            ah.record(v);
+            h.record(v);
+        }
+        assert_eq!(ah.snapshot(), h);
+    }
+}

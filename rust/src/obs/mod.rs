@@ -1,0 +1,31 @@
+//! Full-stack observability: spans, profiles, histograms, exports.
+//!
+//! SILO's schedule decisions are only as good as the machine model behind
+//! them, and the model is only as good as what we can *measure*. This
+//! subsystem (std-only, like everything else in the crate) provides the
+//! measurement substrate threaded through every layer:
+//!
+//! | Module      | Role                                                    |
+//! |-------------|---------------------------------------------------------|
+//! | [`span`]    | Monotonic-clock spans, thread-buffered, trace-scoped    |
+//! | [`chrome`]  | Chrome trace-event JSON export (`chrome://tracing`)     |
+//! | [`hist`]    | Log₂-bucketed latency histograms (plain + atomic)       |
+//! | [`profile`] | Per-loop execution profiles via the VM `Tracer` hooks   |
+//!
+//! Design contract: **off means off**. Span collection is gated on one
+//! relaxed atomic load and allocates nothing when disabled; the VM loop
+//! hooks are default-empty trait methods monomorphized away for
+//! [`crate::exec::NullTracer`]; profiled execution uses a *separate*
+//! lowering ([`crate::lowering::lower_profiled`]) so ordinary artifacts —
+//! and therefore all differential VM/native/speculative tests — are
+//! byte-for-byte unaffected by this subsystem's existence.
+
+pub mod chrome;
+pub mod hist;
+pub mod profile;
+pub mod span;
+
+pub use chrome::chrome_trace_json;
+pub use hist::{AtomicHistogram, Histogram, BUCKETS};
+pub use profile::{ExecProfile, LoopProfile, ProfileTracer};
+pub use span::{enabled, next_trace_id, set_enabled, span, take_events, Span, SpanEvent};

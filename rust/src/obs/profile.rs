@@ -1,0 +1,189 @@
+//! Per-loop execution profiles via the VM's [`Tracer`] loop hooks.
+//!
+//! [`ProfileTracer`] rides along a VM run of a *profiled* artifact
+//! ([`crate::lowering::lower_profiled`] keeps every loop a tree node so
+//! the hooks see loop identity) and tallies, per loop: iterations and the
+//! reads/writes/prefetches its body performed. Accesses are attributed
+//! to the innermost live loop — the hook call order is a well-nested
+//! enter/iter/…/exit bracket on the sequential path, which is the only
+//! path `silo profile` uses (it runs the profiled artifact at 1 thread
+//! for determinism; wall-clock numbers come from the real artifact).
+
+use std::collections::HashMap;
+
+use crate::exec::trace::Tracer;
+use crate::ir::{LoopId, Program};
+
+/// Raw per-loop tallies.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LoopTally {
+    pub iters: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub prefetches: u64,
+}
+
+/// Tracer that builds an [`ExecProfile`] from one sequential VM run.
+#[derive(Default)]
+pub struct ProfileTracer {
+    /// First-enter order, for stable reporting.
+    order: Vec<LoopId>,
+    tallies: HashMap<LoopId, LoopTally>,
+    stack: Vec<LoopId>,
+    /// Accesses performed outside any tree loop (prologue/epilogue code).
+    pub outside: LoopTally,
+}
+
+impl ProfileTracer {
+    pub fn new() -> ProfileTracer {
+        ProfileTracer::default()
+    }
+
+    /// Resolve tallies into a report, naming loops via `program` (the
+    /// *same* program the profiled artifact was lowered from, so every
+    /// hook id resolves).
+    pub fn finish(self, program: &Program) -> ExecProfile {
+        let parents = program.loop_parents();
+        let loops = self
+            .order
+            .iter()
+            .map(|id| {
+                let t = self.tallies.get(id).copied().unwrap_or_default();
+                LoopProfile {
+                    id: *id,
+                    var: program
+                        .find_loop(*id)
+                        .map(|l| l.var.name())
+                        .unwrap_or_else(|| format!("loop#{}", id.0)),
+                    depth: parents.get(id).map(|p| p.len()).unwrap_or(0),
+                    iters: t.iters,
+                    reads: t.reads,
+                    writes: t.writes,
+                    prefetches: t.prefetches,
+                }
+            })
+            .collect();
+        ExecProfile {
+            loops,
+            outside: self.outside,
+        }
+    }
+}
+
+impl Tracer for ProfileTracer {
+    fn access(&mut self, _cont: u16, _idx: i64, write: bool, prefetch: bool) {
+        let t = match self.stack.last() {
+            Some(id) => self.tallies.entry(*id).or_default(),
+            None => &mut self.outside,
+        };
+        if prefetch {
+            t.prefetches += 1;
+        } else if write {
+            t.writes += 1;
+        } else {
+            t.reads += 1;
+        }
+    }
+
+    fn loop_enter(&mut self, id: LoopId) {
+        if !self.tallies.contains_key(&id) {
+            self.order.push(id);
+            self.tallies.insert(id, LoopTally::default());
+        }
+        self.stack.push(id);
+    }
+
+    fn loop_iter(&mut self, id: LoopId) {
+        self.tallies.entry(id).or_default().iters += 1;
+    }
+
+    fn loop_exit(&mut self, id: LoopId) {
+        // Pop to (and including) the matching frame; tolerate an
+        // unbalanced stack rather than corrupting attribution.
+        while let Some(top) = self.stack.pop() {
+            if top == id {
+                break;
+            }
+        }
+    }
+}
+
+/// One loop's row in the execution profile.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoopProfile {
+    pub id: LoopId,
+    /// The loop variable's name (`i`, `k`, …).
+    pub var: String,
+    /// Nesting depth (0 = outermost).
+    pub depth: usize,
+    pub iters: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub prefetches: u64,
+}
+
+/// The full per-loop execution report of one profiled run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ExecProfile {
+    /// Loops in first-execution order.
+    pub loops: Vec<LoopProfile>,
+    /// Accesses attributed to no loop (prologue/epilogue).
+    pub outside: LoopTally,
+}
+
+impl ExecProfile {
+    /// Total iterations across all loops — equals the sequential run's
+    /// `fuel_used` (one fuel unit per back-edge; see `Tracer::loop_iter`).
+    pub fn total_iters(&self) -> u64 {
+        self.loops.iter().map(|l| l.iters).sum()
+    }
+
+    /// Human-readable table, one row per loop.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("  loop        iters        reads       writes   prefetches\n");
+        for l in &self.loops {
+            let name = format!("{}{}", "  ".repeat(l.depth), l.var);
+            out.push_str(&format!(
+                "  {:<8} {:>10} {:>12} {:>12} {:>12}\n",
+                name, l.iters, l.reads, l.writes, l.prefetches
+            ));
+        }
+        if self.outside.reads + self.outside.writes + self.outside.prefetches > 0 {
+            out.push_str(&format!(
+                "  {:<8} {:>10} {:>12} {:>12} {:>12}\n",
+                "(outer)", "-", self.outside.reads, self.outside.writes, self.outside.prefetches
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribution_follows_the_loop_stack() {
+        let mut tr = ProfileTracer::new();
+        let outer = LoopId(0);
+        let inner = LoopId(1);
+        tr.access(0, 0, false, false); // before any loop → outside
+        tr.loop_enter(outer);
+        tr.loop_iter(outer);
+        tr.access(0, 1, true, false); // outer body write
+        tr.loop_enter(inner);
+        tr.loop_iter(inner);
+        tr.access(0, 2, false, false); // inner body read
+        tr.loop_iter(inner);
+        tr.access(0, 3, false, true); // inner prefetch
+        tr.loop_exit(inner);
+        tr.loop_exit(outer);
+
+        assert_eq!(tr.outside.reads, 1);
+        let o = tr.tallies[&outer];
+        let i = tr.tallies[&inner];
+        assert_eq!((o.iters, o.writes), (1, 1));
+        assert_eq!((i.iters, i.reads, i.prefetches), (2, 1, 1));
+    }
+}

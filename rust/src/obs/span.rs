@@ -1,0 +1,232 @@
+//! Span/event core: monotonic-clock spans with per-thread buffers.
+//!
+//! A [`Span`] is an RAII guard: construct it where the work starts, drop
+//! it where the work ends, and (iff collection is enabled) a
+//! [`SpanEvent`] with microsecond start/duration lands in the current
+//! thread's buffer. Buffers flush into a global sink in batches — and
+//! unconditionally when their thread exits, so spans recorded on scoped
+//! worker threads (the tuner's candidate evaluators) are never lost.
+//!
+//! Cost model: when collection is disabled (the default), `span()` is a
+//! single relaxed atomic load and **zero allocations** — callers may
+//! leave instrumentation in place permanently. When enabled, recording a
+//! span is a clock read, a `String`, and an (amortized) uncontended
+//! buffer push.
+//!
+//! Trace scoping: [`next_trace_id`] mints process-unique ids; the daemon
+//! assigns one per HTTP request and the profiler one per profile run, so
+//! exported events group by the request that caused them.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// One completed span, timestamped in microseconds since the process
+/// epoch (the first clock read after the observability layer woke up).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// What ran (e.g. a pass name, an endpoint, a kernel).
+    pub name: String,
+    /// Coarse taxonomy bucket: `"compile"`, `"tune"`, `"exec"`, `"http"`.
+    pub cat: &'static str,
+    /// Request/run-scoped trace id (0 = unscoped).
+    pub trace: u64,
+    /// Small dense per-thread tag (not the OS tid).
+    pub tid: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Free-form key/value annotations (score, cache hits, …).
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// Serializes in-crate tests that toggle the process-global enabled
+/// flag or drain the sink (the harness runs tests on parallel threads).
+#[cfg(test)]
+pub(crate) static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<Vec<SpanEvent>> = Mutex::new(Vec::new());
+
+/// Hard cap on buffered events; beyond it new spans are dropped (never
+/// an OOM vector, mirroring `CollectingTracer`'s cap).
+const SINK_CAP: usize = 1 << 20;
+/// Thread-local batch size before flushing into the global sink.
+const FLUSH_AT: usize = 256;
+
+/// Turn span collection on or off process-wide.
+pub fn set_enabled(on: bool) {
+    // Pin the epoch before the first span so timestamps are meaningful.
+    if on {
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is span collection currently enabled?
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Microseconds since the process epoch.
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Mint a process-unique trace id (requests, profile runs).
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    static CUR_TRACE: RefCell<u64> = const { RefCell::new(0) };
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        events: Vec::new(),
+        tag: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+    });
+}
+
+struct ThreadBuf {
+    events: Vec<SpanEvent>,
+    tag: u64,
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        flush_into_sink(&mut self.events);
+    }
+}
+
+fn flush_into_sink(events: &mut Vec<SpanEvent>) {
+    if events.is_empty() {
+        return;
+    }
+    if let Ok(mut sink) = SINK.lock() {
+        let room = SINK_CAP.saturating_sub(sink.len());
+        let take = events.len().min(room);
+        sink.extend(events.drain(..take));
+    }
+    events.clear();
+}
+
+/// Set the current thread's trace id; returns the previous one so callers
+/// can restore it (request handlers bracket their work with this).
+pub fn set_current_trace(id: u64) -> u64 {
+    CUR_TRACE.with(|t| std::mem::replace(&mut *t.borrow_mut(), id))
+}
+
+/// The current thread's trace id (0 = unscoped).
+pub fn current_trace() -> u64 {
+    CUR_TRACE.with(|t| *t.borrow())
+}
+
+/// Drain every buffered event: the current thread's batch plus the
+/// global sink. Other *live* threads' partial batches are not visible
+/// until they flush or exit — the CLI profiler drains after its scoped
+/// workers have joined, so it always sees a complete trace.
+pub fn take_events() -> Vec<SpanEvent> {
+    BUF.with(|b| flush_into_sink(&mut b.borrow_mut().events));
+    match SINK.lock() {
+        Ok(mut sink) => std::mem::take(&mut *sink),
+        Err(_) => Vec::new(),
+    }
+}
+
+/// RAII span guard — see the module docs. Obtain via [`span`].
+pub struct Span {
+    live: Option<LiveSpan>,
+}
+
+struct LiveSpan {
+    name: String,
+    cat: &'static str,
+    trace: u64,
+    start_us: u64,
+    args: Vec<(&'static str, String)>,
+}
+
+/// Open a span. When collection is disabled this is one atomic load and
+/// the `name` closure is never called (no allocation).
+pub fn span(cat: &'static str, name: impl FnOnce() -> String) -> Span {
+    if !enabled() {
+        return Span { live: None };
+    }
+    Span {
+        live: Some(LiveSpan {
+            name: name(),
+            cat,
+            trace: current_trace(),
+            start_us: now_us(),
+            args: Vec::new(),
+        }),
+    }
+}
+
+impl Span {
+    /// Attach a key/value annotation (no-op when the span is dead).
+    pub fn arg(&mut self, key: &'static str, val: impl FnOnce() -> String) {
+        if let Some(l) = self.live.as_mut() {
+            l.args.push((key, val()));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(l) = self.live.take() {
+            let dur_us = now_us().saturating_sub(l.start_us);
+            let ev = SpanEvent {
+                name: l.name,
+                cat: l.cat,
+                trace: l.trace,
+                tid: BUF.with(|b| b.borrow().tag),
+                start_us: l.start_us,
+                dur_us,
+                args: l.args,
+            };
+            BUF.with(|b| {
+                let mut b = b.borrow_mut();
+                b.events.push(ev);
+                if b.events.len() >= FLUSH_AT {
+                    flush_into_sink(&mut b.events);
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test, not several: the enabled flag is process-global and the
+    // test harness runs threads concurrently.
+    #[test]
+    fn span_lifecycle() {
+        let _g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        drop(span("compile", || "never".into()));
+        assert!(!take_events().iter().any(|e| e.name == "never"));
+
+        set_enabled(true);
+        let t = next_trace_id();
+        let prev = set_current_trace(t);
+        {
+            let mut s = span("tune", || "candidate".into());
+            s.arg("score", || "1.5".into());
+        }
+        set_current_trace(prev);
+        set_enabled(false);
+        let evs = take_events();
+        let ev = evs
+            .iter()
+            .find(|e| e.name == "candidate" && e.trace == t)
+            .expect("span recorded");
+        assert_eq!(ev.cat, "tune");
+        assert_eq!(ev.args, vec![("score", "1.5".to_string())]);
+    }
+}

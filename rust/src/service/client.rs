@@ -53,6 +53,16 @@ impl Client {
         self.request("GET", "/metrics", "")
     }
 
+    /// The Prometheus text exposition (`GET /metrics?format=prometheus`)
+    /// — raw text, not JSON.
+    pub fn metrics_prometheus(&self) -> Result<String> {
+        let (status, text) = http::roundtrip(&self.addr, "GET", "/metrics?format=prometheus", "")?;
+        if status != 200 {
+            bail!("GET /metrics?format=prometheus: HTTP {status}: {text}");
+        }
+        Ok(text)
+    }
+
     pub fn kernels(&self) -> Result<Json> {
         self.request("GET", "/kernels", "")
     }

@@ -121,6 +121,18 @@ pub fn write_response_conn<W: Write>(
     body: &str,
     close: bool,
 ) -> Result<()> {
+    write_response_full(stream, status, "application/json", body, close)
+}
+
+/// [`write_response_conn`] with an explicit content type (the protocol
+/// is JSON everywhere except the Prometheus text exposition).
+pub fn write_response_full<W: Write>(
+    stream: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    close: bool,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -133,7 +145,7 @@ pub fn write_response_conn<W: Write>(
     };
     let conn = if close { "close" } else { "keep-alive" };
     let msg = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
         body.len()
     );

@@ -1,13 +1,66 @@
-//! Service request counters (`GET /metrics`).
+//! Service request counters and latency histograms (`GET /metrics`,
+//! JSON or Prometheus text exposition).
 //!
 //! All updates are relaxed atomics — the endpoint is an observability
 //! surface, not a synchronization point. Cache-level counters
 //! (hits/misses/coalesced/evictions) live on the
 //! [`ScheduleCache`](super::cache::ScheduleCache) itself; the metrics
-//! endpoint merges both sets into one JSON document.
+//! endpoint merges both sets into one document. Per-endpoint request
+//! latencies go into log₂-bucketed [`AtomicHistogram`]s
+//! ([`crate::obs::hist`]), which the Prometheus exposition renders as
+//! cumulative `_bucket{le=...}` series.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::obs::AtomicHistogram;
+
+/// The daemon's endpoints, as latency-histogram labels. `Other` absorbs
+/// unroutable paths so 404 scans cannot mint unbounded label values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Endpoint {
+    Healthz,
+    Metrics,
+    Kernels,
+    Compile,
+    Run,
+    Other,
+}
+
+impl Endpoint {
+    pub const ALL: [Endpoint; 6] = [
+        Endpoint::Healthz,
+        Endpoint::Metrics,
+        Endpoint::Kernels,
+        Endpoint::Compile,
+        Endpoint::Run,
+        Endpoint::Other,
+    ];
+
+    /// Stable label used in the Prometheus exposition.
+    pub fn label(self) -> &'static str {
+        match self {
+            Endpoint::Healthz => "healthz",
+            Endpoint::Metrics => "metrics",
+            Endpoint::Kernels => "kernels",
+            Endpoint::Compile => "compile",
+            Endpoint::Run => "run",
+            Endpoint::Other => "other",
+        }
+    }
+
+    /// Classify a request path (query string already stripped).
+    pub fn of_path(path: &str) -> Endpoint {
+        match path {
+            "/healthz" => Endpoint::Healthz,
+            "/metrics" => Endpoint::Metrics,
+            "/kernels" => Endpoint::Kernels,
+            "/compile" => Endpoint::Compile,
+            p if p.starts_with("/run/") => Endpoint::Run,
+            _ => Endpoint::Other,
+        }
+    }
+}
 
 /// Monotonic daemon counters. Latency totals are in microseconds so tiny
 /// kernels still register; `/metrics` reports derived milliseconds.
@@ -15,8 +68,14 @@ use std::time::Duration;
 pub struct Metrics {
     /// Every request that reached the router (any endpoint, any status).
     pub requests: AtomicU64,
-    /// Responses with a non-200 status.
+    /// Responses with a non-200 status (= `errors_client` +
+    /// `errors_server`; kept whole for wire compatibility).
     pub errors: AtomicU64,
+    /// 4xx responses: the caller's fault (malformed body, unknown
+    /// kernel, refused program, trapped run).
+    pub errors_client: AtomicU64,
+    /// 5xx responses: the daemon's fault.
+    pub errors_server: AtomicU64,
     /// Builder runs: compile-path cache misses that actually optimized,
     /// tuned, and lowered a program.
     pub compiles: AtomicU64,
@@ -43,6 +102,12 @@ pub struct Metrics {
     /// Speculative-tier attempts discarded (conflict or worker trap)
     /// and re-run sequentially.
     pub speculation_aborts: AtomicU64,
+    /// Measured-latency calibration samples folded into the cost model
+    /// (successful `/run`s with a positive fuel count).
+    pub cal_samples: AtomicU64,
+    /// Per-endpoint request latency, microseconds, log₂ buckets —
+    /// indexed by [`Endpoint`]'s position in [`Endpoint::ALL`].
+    pub latency: [AtomicHistogram; 6],
 }
 
 impl Metrics {
@@ -56,6 +121,22 @@ impl Metrics {
 
     pub fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
+    }
+
+    /// Record one routed response: latency into the endpoint's
+    /// histogram, status into the error counters.
+    pub fn observe(&self, endpoint: Endpoint, status: u16, wall: Duration) {
+        Metrics::bump(&self.requests);
+        if status != 200 {
+            Metrics::bump(&self.errors);
+            if status >= 500 {
+                Metrics::bump(&self.errors_server);
+            } else {
+                Metrics::bump(&self.errors_client);
+            }
+        }
+        let idx = Endpoint::ALL.iter().position(|e| *e == endpoint).unwrap_or(5);
+        self.latency[idx].record(wall.as_micros() as u64);
     }
 }
 
@@ -71,5 +152,29 @@ mod tests {
         Metrics::add_time(&m.run_us_total, Duration::from_millis(3));
         assert_eq!(Metrics::get(&m.requests), 2);
         assert_eq!(Metrics::get(&m.run_us_total), 3000);
+    }
+
+    #[test]
+    fn observe_splits_errors_and_records_latency() {
+        let m = Metrics::default();
+        m.observe(Endpoint::Run, 200, Duration::from_micros(100));
+        m.observe(Endpoint::Run, 404, Duration::from_micros(10));
+        m.observe(Endpoint::Compile, 500, Duration::from_micros(10));
+        assert_eq!(Metrics::get(&m.requests), 3);
+        assert_eq!(Metrics::get(&m.errors), 2);
+        assert_eq!(Metrics::get(&m.errors_client), 1);
+        assert_eq!(Metrics::get(&m.errors_server), 1);
+        let run = m.latency[4].snapshot();
+        assert_eq!(run.count, 2);
+        assert_eq!(run.sum_us, 110);
+    }
+
+    #[test]
+    fn endpoint_classification() {
+        assert_eq!(Endpoint::of_path("/healthz"), Endpoint::Healthz);
+        assert_eq!(Endpoint::of_path("/run/abc123"), Endpoint::Run);
+        assert_eq!(Endpoint::of_path("/nope"), Endpoint::Other);
+        assert_eq!(Endpoint::of_path("/metrics"), Endpoint::Metrics);
+        assert_eq!(Endpoint::of_path("/compile"), Endpoint::Compile);
     }
 }

@@ -64,7 +64,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{
-    compile_program_with, CompiledKernel, MemSchedules, PipelineSpec, SafetyPolicy,
+    compile_program_calibrated, CompiledKernel, MemSchedules, PipelineSpec, SafetyPolicy,
 };
 use crate::exec::{ExecLimits, Trap};
 use crate::frontend::{init_value_with, InitSpec, PresetBindings};
@@ -73,12 +73,13 @@ use crate::kernels::Preset;
 use crate::native::Tier;
 use crate::symbolic::eval::eval_int;
 use crate::symbolic::{ContainerId, Sym};
+use crate::tuner::CostCalibration;
 use crate::verify::SafetyTier;
 
 use super::cache::{self, Outcome, ScheduleCache};
 use super::http::{self, Request};
 use super::json::Json;
-use super::metrics::Metrics;
+use super::metrics::{Endpoint, Metrics};
 use super::protocol::{
     error_body, error_body_code, CompileReply, CompileRequest, RunReply, RunRequest,
 };
@@ -119,6 +120,10 @@ pub struct ServiceConfig {
     /// either way a native run silently degrades to the VM when the
     /// host has no JIT, and the reply reports what actually ran.
     pub backend: Tier,
+    /// Emit a structured (JSON-lines) access log on stderr: one line
+    /// per routed request with its daemon-assigned request id, method,
+    /// path, status, and latency (`silo serve --access-log`).
+    pub access_log: bool,
 }
 
 impl Default for ServiceConfig {
@@ -132,6 +137,24 @@ impl Default for ServiceConfig {
             fuel_limit: 1 << 32,
             wall_ms: 30_000,
             backend: Tier::Vm,
+            access_log: false,
+        }
+    }
+}
+
+/// EWMA of the measured-vs-modeled cycles-per-iteration ratio across
+/// completed runs (the daemon's live cost-model calibration).
+struct CalEwma {
+    /// Smoothed measured ÷ modeled ratio (1.0 until the first sample).
+    ratio: f64,
+    samples: u64,
+}
+
+impl Default for CalEwma {
+    fn default() -> CalEwma {
+        CalEwma {
+            ratio: 1.0,
+            samples: 0,
         }
     }
 }
@@ -272,6 +295,10 @@ pub struct ServedKernel {
     /// (kernel, param-set) memo table, and eviction drops the
     /// certificates with the artifact they describe.
     pub inspect_memo: Mutex<std::collections::HashMap<String, Arc<Vec<String>>>>,
+    /// Last measured ÷ modeled cycles-per-iteration ratio observed by a
+    /// `/run` of this artifact (`None` until it has run with fuel
+    /// accounting; surfaced per kernel in `GET /kernels`).
+    pub drift: Mutex<Option<f64>>,
 }
 
 struct ServiceState {
@@ -283,6 +310,29 @@ struct ServiceState {
     fuel_limit: u64,
     wall_ms: u64,
     backend: Tier,
+    access_log: bool,
+    started: Instant,
+    /// Daemon-assigned request ids (access log + request spans).
+    next_req: std::sync::atomic::AtomicU64,
+    /// Live measured-latency calibration fed by `/run`, consumed by
+    /// every subsequent autotuned compile.
+    cal: Mutex<CalEwma>,
+}
+
+impl ServiceState {
+    /// The calibration new compiles should use: identity until a run
+    /// has been measured, then the smoothed ratio (clamped so one
+    /// absurd sample cannot poison the search space's scores).
+    fn calibration(&self) -> CostCalibration {
+        let g = self.cal.lock().unwrap();
+        if g.samples == 0 {
+            CostCalibration::identity()
+        } else {
+            CostCalibration {
+                scale: g.ratio.clamp(1e-3, 1e3),
+            }
+        }
+    }
 }
 
 /// A running daemon. Dropping the handle leaves the threads running
@@ -310,6 +360,10 @@ impl Server {
             fuel_limit: config.fuel_limit.max(1),
             wall_ms: config.wall_ms.max(1),
             backend: config.backend,
+            access_log: config.access_log,
+            started: Instant::now(),
+            next_req: std::sync::atomic::AtomicU64::new(1),
+            cal: Mutex::new(CalEwma::default()),
         });
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
@@ -425,8 +479,9 @@ fn handle_connection(stream: TcpStream, state: &ServiceState) {
                 // Framing-layer size rejections are 413 per the wire
                 // protocol; everything else malformed is a 400.
                 let status = if msg.contains("body too large") { 413 } else { 400 };
-                Metrics::bump(&state.metrics.requests);
-                Metrics::bump(&state.metrics.errors);
+                state
+                    .metrics
+                    .observe(Endpoint::Other, status, std::time::Duration::ZERO);
                 let _ = http::write_response(&mut (&stream), status, &error_body(&msg));
                 return;
             }
@@ -439,43 +494,107 @@ fn handle_connection(stream: TcpStream, state: &ServiceState) {
             .map(|v| v.eq_ignore_ascii_case("close"))
             .unwrap_or(false);
         let close = client_close || served + 1 == MAX_REQUESTS_PER_CONN;
-        let (status, body) = route(&req, state);
-        Metrics::bump(&state.metrics.requests);
-        if status != 200 {
-            Metrics::bump(&state.metrics.errors);
+        // Request bracket: a daemon-assigned id, a request-scoped trace
+        // id (so spans recorded while handling group under it), latency
+        // into the endpoint's histogram, and the optional access log.
+        let path_only = req.path.split('?').next().unwrap_or("").to_string();
+        let endpoint = Endpoint::of_path(&path_only);
+        let req_id = state
+            .next_req
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let prev_trace = crate::obs::span::set_current_trace(crate::obs::next_trace_id());
+        let mut sp = crate::obs::span("http", || format!("{} {path_only}", req.method));
+        let t0 = Instant::now();
+        let (status, body, content_type) = route(&req, state);
+        let wall = t0.elapsed();
+        sp.arg("status", || status.to_string());
+        sp.arg("req_id", || req_id.to_string());
+        drop(sp);
+        crate::obs::span::set_current_trace(prev_trace);
+        state.metrics.observe(endpoint, status, wall);
+        if state.access_log {
+            access_log_line(req_id, &req.method, &path_only, endpoint.label(), status, wall);
         }
-        if http::write_response_conn(&mut (&stream), status, &body, close).is_err() || close {
+        let ok =
+            http::write_response_full(&mut (&stream), status, content_type, &body, close).is_ok();
+        if !ok || close {
             return;
         }
     }
 }
 
-fn route(req: &Request, state: &ServiceState) -> (u16, String) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (200, healthz_body()),
-        ("GET", "/metrics") => (200, metrics_body(state)),
-        ("GET", "/kernels") => (200, kernels_body(state)),
-        ("POST", "/compile") => compile_endpoint(req, state),
-        ("POST", p) if p.starts_with("/run/") => {
-            run_endpoint(req, state, &p["/run/".len()..])
+/// One structured access-log line on stderr (JSON lines; `Json::Str`
+/// escapes the attacker-controlled path).
+fn access_log_line(
+    id: u64,
+    method: &str,
+    path: &str,
+    endpoint: &str,
+    status: u16,
+    wall: std::time::Duration,
+) {
+    let line = Json::Obj(vec![
+        ("id".into(), Json::Num(id as f64)),
+        ("method".into(), Json::Str(method.into())),
+        ("path".into(), Json::Str(path.into())),
+        ("endpoint".into(), Json::Str(endpoint.into())),
+        ("status".into(), Json::Num(status as f64)),
+        ("ms".into(), Json::Num(wall.as_secs_f64() * 1e3)),
+    ]);
+    eprintln!("{line}");
+}
+
+/// Prometheus text exposition content type (scrapers accept plain text,
+/// but the versioned type is the documented contract).
+const PROMETHEUS_CT: &str = "text/plain; version=0.0.4";
+const JSON_CT: &str = "application/json";
+
+fn route(req: &Request, state: &ServiceState) -> (u16, String, &'static str) {
+    // Split the query string off: `/metrics?format=prometheus` must
+    // route like `/metrics`.
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    let json = |(status, body): (u16, String)| (status, body, JSON_CT);
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => json((200, healthz_body(state))),
+        ("GET", "/metrics") if query.split('&').any(|kv| kv == "format=prometheus") => {
+            (200, prometheus_body(state), PROMETHEUS_CT)
         }
-        ("GET" | "POST", _) => (
+        ("GET", "/metrics") => json((200, metrics_body(state))),
+        ("GET", "/kernels") => json((200, kernels_body(state))),
+        ("POST", "/compile") => json(compile_endpoint(req, state)),
+        ("POST", p) if p.starts_with("/run/") => {
+            json(run_endpoint(req, state, &p["/run/".len()..]))
+        }
+        ("GET" | "POST", _) => json((
             404,
             error_body(&format!(
                 "no such route {} {} (endpoints: GET /healthz /metrics /kernels, \
                  POST /compile /run/<id>)",
                 req.method, req.path
             )),
-        ),
-        _ => (405, error_body(&format!("method {} not allowed", req.method))),
+        )),
+        _ => json((405, error_body(&format!("method {} not allowed", req.method)))),
     }
 }
 
-fn healthz_body() -> String {
+fn healthz_body(state: &ServiceState) -> String {
     Json::Obj(vec![
         ("ok".into(), Json::Bool(true)),
         ("service".into(), Json::Str("silo".into())),
         ("version".into(), Json::Str(env!("CARGO_PKG_VERSION").into())),
+        (
+            "uptime_s".into(),
+            Json::Num(state.started.elapsed().as_secs_f64()),
+        ),
+        ("pid".into(), Json::Num(std::process::id() as f64)),
+        (
+            "backend_default".into(),
+            Json::Str(state.backend.as_str().into()),
+        ),
+        ("untrusted".into(), Json::Bool(state.untrusted)),
     ])
     .to_string()
 }
@@ -483,6 +602,10 @@ fn healthz_body() -> String {
 fn metrics_body(state: &ServiceState) -> String {
     let s = state.cache.stats();
     let m = &state.metrics;
+    let cal = {
+        let c = state.cal.lock().unwrap();
+        (c.ratio, c.samples)
+    };
     let num = |v: u64| Json::Num(v as f64);
     Json::Obj(vec![
         ("hits".into(), num(s.hits)),
@@ -493,6 +616,8 @@ fn metrics_body(state: &ServiceState) -> String {
         ("capacity".into(), num(s.capacity as u64)),
         ("requests".into(), num(Metrics::get(&m.requests))),
         ("errors".into(), num(Metrics::get(&m.errors))),
+        ("errors_client".into(), num(Metrics::get(&m.errors_client))),
+        ("errors_server".into(), num(Metrics::get(&m.errors_server))),
         ("compiles".into(), num(Metrics::get(&m.compiles))),
         (
             "compile_ms_total".into(),
@@ -524,8 +649,126 @@ fn metrics_body(state: &ServiceState) -> String {
             "symbols_interned".into(),
             num(crate::symbolic::intern_table_size() as u64),
         ),
+        // Measured-latency cost-model feedback: the smoothed
+        // measured ÷ modeled cycles-per-iteration ratio (1.0 = the
+        // model is exact) and how many runs have fed it.
+        ("model_drift".into(), Json::Num(cal.0)),
+        ("cal_samples".into(), num(cal.1)),
+        (
+            "uptime_s".into(),
+            Json::Num(state.started.elapsed().as_secs_f64()),
+        ),
     ])
     .to_string()
+}
+
+/// The same counters in Prometheus text exposition format
+/// (`GET /metrics?format=prometheus`), plus per-endpoint latency
+/// histograms that the JSON document does not carry.
+fn prometheus_body(state: &ServiceState) -> String {
+    fn metric(out: &mut String, name: &str, kind: &str, help: &str, v: f64) {
+        out.push_str(&format!(
+            "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {v}\n"
+        ));
+    }
+    let s = state.cache.stats();
+    let m = &state.metrics;
+    let g = |c: &std::sync::atomic::AtomicU64| Metrics::get(c) as f64;
+    let mut out = String::new();
+    let counters = [
+        ("silo_cache_hits_total", s.hits as f64, "Compile cache hits."),
+        ("silo_cache_misses_total", s.misses as f64, "Compile cache misses."),
+        ("silo_cache_coalesced_total", s.coalesced as f64, "Coalesced builds."),
+        ("silo_cache_evictions_total", s.evictions as f64, "Evicted entries."),
+        ("silo_requests_total", g(&m.requests), "Requests routed."),
+        ("silo_errors_total", g(&m.errors), "Non-200 responses."),
+        ("silo_errors_client_total", g(&m.errors_client), "4xx responses."),
+        ("silo_errors_server_total", g(&m.errors_server), "5xx responses."),
+        ("silo_compiles_total", g(&m.compiles), "Builder runs."),
+        ("silo_runs_total", g(&m.runs), "Completed /run executions."),
+        ("silo_runs_proven_total", g(&m.runs_proven), "Proven-tier runs."),
+        ("silo_runs_checked_total", g(&m.runs_checked), "Checked-tier runs."),
+        ("silo_runs_inspected_total", g(&m.runs_inspected), "Inspector runs."),
+        ("silo_rejected_total", g(&m.rejected), "Verifier refusals."),
+        ("silo_trapped_total", g(&m.trapped), "Trapped runs."),
+        ("silo_speculation_commits_total", g(&m.speculation_commits), "Chunks committed."),
+        ("silo_speculation_aborts_total", g(&m.speculation_aborts), "Chunks aborted."),
+    ];
+    for (name, v, help) in counters {
+        metric(&mut out, name, "counter", help, v);
+    }
+    metric(
+        &mut out,
+        "silo_cache_entries",
+        "gauge",
+        "Resident compiled kernels.",
+        s.entries as f64,
+    );
+    metric(
+        &mut out,
+        "silo_symbols_interned",
+        "gauge",
+        "Live interned symbols.",
+        crate::symbolic::intern_table_size() as f64,
+    );
+    let cal = {
+        let c = state.cal.lock().unwrap();
+        (c.ratio, c.samples)
+    };
+    metric(
+        &mut out,
+        "silo_model_drift",
+        "gauge",
+        "Smoothed measured/modeled cycles-per-iteration ratio (1 = exact).",
+        cal.0,
+    );
+    metric(
+        &mut out,
+        "silo_cal_samples_total",
+        "counter",
+        "Runs folded into the cost-model calibration.",
+        cal.1 as f64,
+    );
+    metric(
+        &mut out,
+        "silo_uptime_seconds",
+        "gauge",
+        "Seconds since the daemon started.",
+        state.started.elapsed().as_secs_f64(),
+    );
+    // Per-endpoint latency histograms: one metric family, one series
+    // set per endpoint, cumulative le buckets per the exposition spec.
+    out.push_str(
+        "# HELP silo_request_duration_us Request latency by endpoint, microseconds.\n\
+         # TYPE silo_request_duration_us histogram\n",
+    );
+    for (i, e) in Endpoint::ALL.iter().enumerate() {
+        let h = m.latency[i].snapshot();
+        let label = e.label();
+        let mut cum = 0u64;
+        for b in 0..crate::obs::BUCKETS {
+            cum += h.counts[b];
+            let le = crate::obs::hist::upper_edge(b);
+            if le.is_finite() {
+                out.push_str(&format!(
+                    "silo_request_duration_us_bucket{{endpoint=\"{label}\",le=\"{le}\"}} {cum}\n"
+                ));
+            } else {
+                out.push_str(&format!(
+                    "silo_request_duration_us_bucket{{endpoint=\"{label}\",le=\"+Inf\"}} {cum}\n"
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "silo_request_duration_us_sum{{endpoint=\"{label}\"}} {}\n",
+            h.sum_us
+        ));
+        out.push_str(&format!(
+            "silo_request_duration_us_count{{endpoint=\"{label}\"}} {}\n",
+            h.count
+        ));
+    }
+    out
 }
 
 fn kernels_body(state: &ServiceState) -> String {
@@ -534,13 +777,17 @@ fn kernels_body(state: &ServiceState) -> String {
         .entries()
         .into_iter()
         .map(|(_, k, hits)| {
-            Json::Obj(vec![
+            let mut fields = vec![
                 ("id".into(), Json::Str(k.id.clone())),
                 ("name".into(), Json::Str(k.name.clone())),
                 ("pipeline".into(), Json::Str(k.spec.clone())),
                 ("hits".into(), Json::Num(hits as f64)),
                 ("compile_ms".into(), Json::Num(k.compile_ms)),
-            ])
+            ];
+            if let Some(d) = *k.drift.lock().unwrap() {
+                fields.push(("drift".into(), Json::Num(d)));
+            }
+            Json::Obj(fields)
         })
         .collect();
     Json::Arr(list).to_string()
@@ -616,11 +863,16 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
         // and the entry records both sets.
         let bscope = crate::symbolic::SymScope::begin();
         let t0 = Instant::now();
-        let compiled = match compile_program_with(
+        // New builds compile under the daemon's live measured-latency
+        // calibration. One shared scale never reorders one search's
+        // candidates, so the cache key needs no calibration component —
+        // a cached artifact is byte-identical either way.
+        let compiled = match compile_program_calibrated(
             parsed.program.clone(),
             &spec,
             MemSchedules::default(),
             policy,
+            state.calibration(),
         ) {
             Ok(c) => c,
             Err(e) => {
@@ -654,6 +906,7 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
             compile_ms: wall.as_secs_f64() * 1e3,
             syms,
             inspect_memo: Mutex::new(std::collections::HashMap::new()),
+            drift: Mutex::new(None),
         })
     });
     match outcome {
@@ -935,6 +1188,28 @@ fn execute_run(
     if let Some(st) = &spec_stats {
         state.metrics.speculation_commits.fetch_add(st.commits, Ordering::Relaxed);
         state.metrics.speculation_aborts.fetch_add(st.aborts, Ordering::Relaxed);
+    }
+    // Measured-latency feedback: this run's observed cycles per
+    // iteration (wall × node GHz ÷ back-edges) over the artifact's
+    // modeled cycles per iteration, folded into the daemon-wide
+    // calibration EWMA and remembered per kernel as its drift. The
+    // smoothed ratio calibrates every subsequent autotuned compile and
+    // is exported as the `model_drift` gauge.
+    if fuel_used > 0 && kernel.compiled.modeled_cycles_per_iter > 0.0 {
+        let node = crate::machine::intel_node();
+        let measured = wall.as_secs_f64() * node.ghz * 1e9 / fuel_used as f64;
+        let ratio = measured / kernel.compiled.modeled_cycles_per_iter;
+        if ratio.is_finite() && ratio > 0.0 {
+            Metrics::bump(&state.metrics.cal_samples);
+            let mut cal = state.cal.lock().unwrap();
+            cal.ratio = if cal.samples == 0 {
+                ratio
+            } else {
+                0.7 * cal.ratio + 0.3 * ratio
+            };
+            cal.samples += 1;
+            *kernel.drift.lock().unwrap() = Some(ratio);
+        }
     }
     // Inspector: certify this binding's sequential loops, memoized per
     // canonical parameter string on the cache entry.

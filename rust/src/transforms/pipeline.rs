@@ -563,7 +563,20 @@ impl Pipeline {
         cache.rebind(p);
         let mut report = PipelineReport::default();
         for pass in &self.passes {
+            let mut sp = crate::obs::span("compile", || format!("pass:{}", pass.name()));
+            let (h0, m0) = (cache.hits(), cache.misses());
+            let t0 = std::time::Instant::now();
             let r = pass.run(p, cache)?;
+            let micros = t0.elapsed().as_micros() as u64;
+            let (hits, misses) = (cache.hits() - h0, cache.misses() - m0);
+            sp.arg("rewrites", || r.log.len().to_string());
+            report.timings.push(crate::transforms::pass::PassTiming {
+                pass: pass.name().to_string(),
+                micros,
+                cache_hits: hits,
+                cache_misses: misses,
+                rewrites: r.log.len(),
+            });
             report.log.extend(r.log);
         }
         debug_assert!(crate::ir::validate::validate(p).is_ok());

@@ -70,6 +70,12 @@ pub struct TuneOptions {
     /// certified schedule is a theorem about *this* binding only, so it
     /// is opt-in, never part of the parameter-free default search.
     pub inspect_params: Option<Vec<(Sym, i64)>>,
+    /// Measured-cycles calibration applied to every candidate's serial
+    /// term ([`schedule_cost_with`]). One shared factor never changes the
+    /// *ranking* — it pins absolute predictions to reality. The daemon
+    /// feeds its live measured/modeled drift in here so cached compiles
+    /// report honest costs (DESIGN.md §Observability).
+    pub calibration: CostCalibration,
 }
 
 impl Default for TuneOptions {
@@ -81,6 +87,7 @@ impl Default for TuneOptions {
             node: intel_node(),
             per_loop_ptr_inc: true,
             inspect_params: None,
+            calibration: CostCalibration::identity(),
         }
     }
 }
@@ -128,6 +135,7 @@ impl TuneOutcome {
     pub fn report(&self) -> PipelineReport {
         let mut rep = PipelineReport {
             log: self.best.log.clone(),
+            ..Default::default()
         };
         rep.push(
             "auto",
@@ -186,13 +194,87 @@ impl TuneOutcome {
         }
         out
     }
+
+    /// Why the argmin won (`silo tune --explain`): the winner's score
+    /// decomposition, then every losing candidate's margin and which
+    /// component (serial cycles vs modeled parallelism) lost it.
+    pub fn explain(&self) -> String {
+        let mut idx: Vec<usize> = (0..self.candidates.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.candidates[a]
+                .cost
+                .score
+                .partial_cmp(&self.candidates[b].cost.score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut out = String::new();
+        let Some(&wi) = idx.first() else {
+            return out;
+        };
+        let w = &self.candidates[wi];
+        out.push_str(&format!(
+            "winner: {}\n  score {:.3} = {:.2} cyc/iter ÷ {:.1}x modeled speedup ({} spills)\n",
+            w.candidate.spec(),
+            w.cost.score,
+            w.cost.cycles_per_iter,
+            w.cost.parallel_speedup,
+            w.cost.spills
+        ));
+        out.push_str(&format!(
+            "  argmin over {} candidates; ties break to the earliest \
+             (simplest) enumeration point\n",
+            self.candidates.len()
+        ));
+        if self.refined_nests > 0 {
+            out.push_str(&format!(
+                "  per-loop ptr-inc refinement kept {} nest(s) \
+                 (final score {:.3})\n",
+                self.refined_nests, self.cost.score
+            ));
+        }
+        if self.inspector_certified {
+            out.push_str(&format!(
+                "  inspector certificate beat the static winner \
+                 (final score {:.3})\n",
+                self.cost.score
+            ));
+        }
+        out.push_str("losing candidates (vs the winner):\n");
+        for &i in idx.iter().skip(1) {
+            let c = &self.candidates[i];
+            let margin = if w.cost.score > 0.0 {
+                (c.cost.score / w.cost.score - 1.0) * 100.0
+            } else {
+                0.0
+            };
+            let serial = c.cost.cycles_per_iter / w.cost.cycles_per_iter.max(f64::MIN_POSITIVE);
+            let par = w.cost.parallel_speedup / c.cost.parallel_speedup.max(f64::MIN_POSITIVE);
+            let why = if margin.abs() <= 1e-9 {
+                "exact tie — lost on enumeration order"
+            } else if serial >= par {
+                "loses on serial cycles/iter"
+            } else {
+                "loses on modeled parallelism"
+            };
+            out.push_str(&format!(
+                "  {:<28} +{:>6.1}%  {}\n",
+                c.candidate.spec(),
+                margin,
+                why
+            ));
+        }
+        out
+    }
 }
 
 /// Search the schedule space for `base` and return the best schedule the
 /// cost model can find, with the full candidate table.
 pub fn autotune_program(base: &Program, opts: &TuneOptions) -> Result<TuneOutcome> {
+    let mut sp = crate::obs::span("tune", || format!("autotune:{}", base.name));
     let cands = opts.space.candidates();
     ensure!(!cands.is_empty(), "autotuner invoked with an empty search space");
+    sp.arg("candidates", || cands.len().to_string());
     let prefixes = search::run_prefixes(base, &opts.space.strategies)?;
     let analysis_hits: u64 = prefixes.iter().map(|p| p.hits).sum();
     let analysis_misses: u64 = prefixes.iter().map(|p| p.misses).sum();
@@ -214,8 +296,12 @@ pub fn autotune_program(base: &Program, opts: &TuneOptions) -> Result<TuneOutcom
 
     let mut refined_nests = 0usize;
     if opts.per_loop_ptr_inc && best.candidate.ptr_inc {
-        let (p2, c2, kept) =
-            search::refine_ptr_inc_per_loop(&program, &opts.compiler, &opts.node)?;
+        let (p2, c2, kept) = search::refine_ptr_inc_per_loop(
+            &program,
+            &opts.compiler,
+            &opts.node,
+            opts.calibration,
+        )?;
         if c2.score <= cost.score {
             program = p2;
             cost = c2;
@@ -234,7 +320,7 @@ pub fn autotune_program(base: &Program, opts: &TuneOptions) -> Result<TuneOutcom
         let rep =
             crate::inspect::inspect_program(&program, binding, crate::inspect::DEFAULT_BUDGET);
         if let Some(certified) = crate::inspect::apply_certificates(&program, &rep) {
-            let c2 = schedule_cost(&certified, &opts.compiler, &opts.node)?;
+            let c2 = schedule_cost_with(&certified, &opts.compiler, &opts.node, opts.calibration)?;
             if c2.score < cost.score {
                 program = certified;
                 cost = c2;
@@ -243,6 +329,8 @@ pub fn autotune_program(base: &Program, opts: &TuneOptions) -> Result<TuneOutcom
         }
     }
     crate::ir::validate::validate(&program)?;
+    sp.arg("winner", || best.candidate.spec());
+    sp.arg("score", || format!("{:.3}", cost.score));
 
     Ok(TuneOutcome {
         kernel: base.name.clone(),

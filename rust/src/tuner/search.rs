@@ -20,7 +20,7 @@ use crate::ir::{LoopId, Node, Program};
 use crate::machine::{CompilerModel, NodeModel};
 use crate::transforms::PassLog;
 
-use super::cost::{schedule_cost, ScheduleCost};
+use super::cost::{schedule_cost_with, CostCalibration, ScheduleCost};
 use super::space::{Candidate, ParallelStrategy};
 use super::TuneOptions;
 
@@ -53,6 +53,7 @@ pub(super) fn run_prefixes(
         if out.iter().any(|r| r.strategy == strategy) {
             continue;
         }
+        let _sp = crate::obs::span("tune", || format!("prefix:{}", strategy.name()));
         let mut program = base.clone();
         let mut cache = AnalysisCache::new();
         let rep = strategy
@@ -77,7 +78,9 @@ fn evaluate(
     prefixes: &[PrefixRun],
     cm: &CompilerModel,
     node: &NodeModel,
+    cal: CostCalibration,
 ) -> Result<(CandidateResult, Program)> {
+    let mut sp = crate::obs::span("tune", || format!("candidate:{}", cand.spec()));
     let prefix = prefixes
         .iter()
         .find(|r| r.strategy == cand.strategy)
@@ -87,7 +90,8 @@ fn evaluate(
         .tail()
         .run(&mut program)
         .with_context(|| format!("schedule tail {}", cand.spec()))?;
-    let cost = schedule_cost(&program, cm, node)?;
+    let cost = schedule_cost_with(&program, cm, node, cal)?;
+    sp.arg("score", || format!("{:.3}", cost.score));
     let mut log = prefix.log.clone();
     log.extend(rep.log);
     Ok((
@@ -111,7 +115,7 @@ pub(super) fn evaluate_all(
     if workers == 1 {
         return cands
             .iter()
-            .map(|c| evaluate(c, prefixes, &opts.compiler, &opts.node))
+            .map(|c| evaluate(c, prefixes, &opts.compiler, &opts.node, opts.calibration))
             .collect();
     }
     let next = AtomicUsize::new(0);
@@ -128,7 +132,10 @@ pub(super) fn evaluate_all(
                     if i >= cands.len() {
                         break;
                     }
-                    got.push((i, evaluate(&cands[i], prefixes, &opts.compiler, &opts.node)));
+                    got.push((
+                        i,
+                        evaluate(&cands[i], prefixes, &opts.compiler, &opts.node, opts.calibration),
+                    ));
                 }
                 got
             }));
@@ -154,10 +161,11 @@ pub(super) fn refine_ptr_inc_per_loop(
     winner: &Program,
     cm: &CompilerModel,
     node: &NodeModel,
+    cal: CostCalibration,
 ) -> Result<(Program, ScheduleCost, usize)> {
     let mut p = winner.clone();
     p.schedules.ptr_inc.clear();
-    let mut cur = schedule_cost(&p, cm, node)?;
+    let mut cur = schedule_cost_with(&p, cm, node, cal)?;
     let mut kept = 0usize;
     let tops: Vec<LoopId> = p
         .body
@@ -172,7 +180,7 @@ pub(super) fn refine_ptr_inc_per_loop(
         if crate::schedules::schedule_ptr_inc_in(&mut trial, lid) == 0 {
             continue;
         }
-        let c = schedule_cost(&trial, cm, node)?;
+        let c = schedule_cost_with(&trial, cm, node, cal)?;
         if c.score <= cur.score {
             p = trial;
             cur = c;

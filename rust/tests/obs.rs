@@ -1,0 +1,125 @@
+//! Observability acceptance, all through the public API:
+//! * the Chrome trace-event export is pinned byte-for-byte by a golden
+//!   snapshot (the format is a wire contract with chrome://tracing);
+//! * `profile_kernel` reports *exact* per-loop trip and access counts
+//!   for a known kernel under a known preset;
+//! * the bounded `CollectingTracer` truncates a real VM run's trace at
+//!   its cap (flagged), and an uncapped run of the same program is the
+//!   capped run's prefix.
+
+use silo::coordinator::{profile_kernel, MemSchedules, OptConfig, PipelineSpec};
+use silo::exec::{CollectingTracer, Vm};
+use silo::kernels::{resolve, Preset};
+use silo::native::Tier;
+use silo::obs::{chrome_trace_json, SpanEvent};
+
+fn manifest_path(rel: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+/// The export of a fixed event set must match the committed snapshot
+/// byte for byte; `SILO_BLESS=1` rewrites it after a deliberate format
+/// change.
+#[test]
+fn chrome_trace_export_matches_golden_snapshot() {
+    let events = vec![
+        SpanEvent {
+            name: "parse".into(),
+            cat: "compile",
+            trace: 7,
+            tid: 1,
+            start_us: 10,
+            dur_us: 40,
+            args: vec![("rewrites", "3".into())],
+        },
+        SpanEvent {
+            name: "run".into(),
+            cat: "exec",
+            trace: 0,
+            tid: 2,
+            start_us: 60,
+            dur_us: 900,
+            args: vec![],
+        },
+    ];
+    let text = chrome_trace_json(&events);
+    let path = manifest_path("tests/golden/chrome_trace.json");
+    if std::env::var("SILO_BLESS").is_ok() {
+        std::fs::write(&path, format!("{text}\n")).unwrap();
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        text,
+        want.trim_end(),
+        "trace export drifted from {} (re-bless with SILO_BLESS=1)",
+        path.display()
+    );
+}
+
+/// jacobi_1d under the tiny preset (N = 30, T = 4) with no optimization:
+/// the profiled replay reports the source nest's exact trip counts —
+/// 4 time steps, two inner sweeps of N-2 = 28 iterations each per step,
+/// 3 loads + 1 store per inner iteration.
+#[test]
+fn profile_reports_exact_trip_counts_per_loop() {
+    let out = profile_kernel(
+        "jacobi_1d",
+        &PipelineSpec::Config(OptConfig::None),
+        MemSchedules::default(),
+        Preset::Tiny,
+        1,
+        Tier::Vm,
+    )
+    .unwrap();
+    assert!(out.trap.is_none(), "{:?}", out.trap);
+    assert_eq!(out.backend, Tier::Vm);
+    let by_var: Vec<(&str, u64, u64, u64)> = out
+        .exec
+        .loops
+        .iter()
+        .map(|l| (l.var.as_str(), l.iters, l.reads, l.writes))
+        .collect();
+    assert_eq!(
+        by_var,
+        vec![
+            ("j1d_t", 4, 0, 0),
+            ("j1d_i1", 112, 336, 112),
+            ("j1d_i2", 112, 336, 112),
+        ],
+        "{:?}",
+        out.exec
+    );
+    assert_eq!(out.exec.total_iters(), 228);
+    assert!(out.measured_ns_per_iter.is_some());
+    assert!(out.drift.is_some());
+    let report = out.render();
+    assert!(report.contains("-- loop execution --"), "{report}");
+    assert!(report.contains("-- cost model --"), "{report}");
+    assert!(report.contains("total iterations: 228"), "{report}");
+}
+
+/// The bounded trace collector over a real run: the default cap keeps
+/// the whole trace, a tiny cap keeps exactly its prefix and raises the
+/// truncation flag.
+#[test]
+fn collecting_tracer_bounds_a_real_run() {
+    let kernel = resolve("jacobi_1d").unwrap();
+    let program = kernel.program();
+    let vm = Vm::compile(&program).unwrap();
+    let params = kernel.params(Preset::Tiny).unwrap();
+    let inputs = kernel.inputs(&program, &params).unwrap();
+    let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+
+    let mut full = CollectingTracer::default();
+    vm.run_traced(&params, &refs, 1, &mut full).unwrap();
+    // 4 time steps × two sweeps of 28 iterations × (3 reads + 1 write).
+    assert_eq!(full.events.len(), 4 * 2 * 28 * 4);
+    assert!(!full.truncated);
+
+    let mut capped = CollectingTracer::with_cap(10);
+    vm.run_traced(&params, &refs, 1, &mut capped).unwrap();
+    assert_eq!(capped.events.len(), 10);
+    assert!(capped.truncated);
+    assert_eq!(capped.events[..], full.events[..10]);
+}

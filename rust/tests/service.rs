@@ -810,6 +810,165 @@ fn speculative_tier_and_inspector_over_the_wire() {
     server.shutdown();
 }
 
+// ---------------------------------------------------------------------------
+// Observability: Prometheus exposition, error split, drift gauge
+// ---------------------------------------------------------------------------
+
+/// `GET /metrics?format=prometheus` parses line by line, every counter
+/// family agrees with the JSON document, the per-endpoint latency
+/// histograms are cumulative and account for every routed request, and
+/// the response carries the versioned text-exposition content type.
+#[test]
+fn prometheus_exposition_agrees_with_json_metrics() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    // Traffic to count: one compile, one run, one 404, one healthz.
+    let source = "program svc_prom {\n  param svc_pm_N = { tiny: 16, small: 64, \
+                  medium: 256 };\n  array A[svc_pm_N];\n  for (svc_pm_i = 0; svc_pm_i < \
+                  svc_pm_N; svc_pm_i += 1) {\n    A[svc_pm_i] = 2.0*A[svc_pm_i] + 1.0;\n  }\n}\n";
+    let reply = c.compile(source, "cfg1").unwrap();
+    c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    assert!(c.run("not-an-id", &RunRequest::default()).is_err());
+    c.healthz().unwrap();
+
+    // Content type at the raw wire level (the client strips headers).
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(server.addr()).unwrap();
+        write!(
+            s,
+            "GET /metrics?format=prometheus HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+             Content-Length: 0\r\n\r\n"
+        )
+        .unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.contains("Content-Type: text/plain; version=0.0.4"), "{raw}");
+    }
+
+    let text = c.metrics_prometheus().unwrap();
+    // Every line is `# HELP`/`# TYPE` or `name[{labels}] value`.
+    let mut samples: Vec<(String, f64)> = Vec::new();
+    let mut helps = 0;
+    for line in text.lines() {
+        if line.starts_with("# HELP ") || line.starts_with("# TYPE ") {
+            helps += usize::from(line.starts_with("# HELP "));
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unknown comment form: {line}");
+        let (name, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("unparseable sample line: {line}"));
+        let v: f64 = value.parse().unwrap_or_else(|_| panic!("non-numeric value in: {line}"));
+        samples.push((name.to_string(), v));
+    }
+    assert!(helps >= 20, "only {helps} HELP lines:\n{text}");
+    assert!(text.contains("# TYPE silo_request_duration_us histogram"), "{text}");
+    let sample = |n: &str| -> f64 {
+        samples
+            .iter()
+            .find(|(k, _)| k == n)
+            .unwrap_or_else(|| panic!("missing sample {n}:\n{text}"))
+            .1
+    };
+
+    // Counter families agree with the JSON document. The JSON scrape
+    // happens after the text scrape, so only counters the metrics
+    // endpoint itself does not advance are compared.
+    let m = c.metrics().unwrap();
+    for (prom, json) in [
+        ("silo_cache_hits_total", "hits"),
+        ("silo_cache_misses_total", "misses"),
+        ("silo_cache_coalesced_total", "coalesced"),
+        ("silo_cache_evictions_total", "evictions"),
+        ("silo_compiles_total", "compiles"),
+        ("silo_runs_total", "runs"),
+        ("silo_errors_total", "errors"),
+        ("silo_errors_client_total", "errors_client"),
+        ("silo_errors_server_total", "errors_server"),
+        ("silo_trapped_total", "trapped"),
+        ("silo_rejected_total", "rejected"),
+    ] {
+        assert_eq!(sample(prom), metric(&m, json) as f64, "{prom} vs {json}");
+    }
+    // The one 404 above is the caller's fault; the daemon took no blame.
+    assert_eq!(metric(&m, "errors_client"), 1, "{m}");
+    assert_eq!(metric(&m, "errors_server"), 0, "{m}");
+    assert_eq!(
+        metric(&m, "errors"),
+        metric(&m, "errors_client") + metric(&m, "errors_server"),
+        "split counters must sum to the legacy total: {m}"
+    );
+
+    // Histograms: cumulative buckets, +Inf == count, and the endpoint
+    // counts sum to every routed request the exposition itself saw.
+    let mut total = 0.0;
+    for e in ["healthz", "metrics", "kernels", "compile", "run", "other"] {
+        let count = sample(&format!("silo_request_duration_us_count{{endpoint=\"{e}\"}}"));
+        let inf =
+            sample(&format!("silo_request_duration_us_bucket{{endpoint=\"{e}\",le=\"+Inf\"}}"));
+        assert_eq!(inf, count, "{e}: +Inf bucket must equal the series count");
+        let prefix = format!("silo_request_duration_us_bucket{{endpoint=\"{e}\",");
+        let buckets: Vec<f64> =
+            samples.iter().filter(|(k, _)| k.starts_with(&prefix)).map(|(_, v)| *v).collect();
+        assert!(!buckets.is_empty(), "{e}: no bucket series");
+        assert!(
+            buckets.windows(2).all(|w| w[0] <= w[1]),
+            "{e}: buckets not cumulative: {buckets:?}"
+        );
+        total += count;
+    }
+    assert_eq!(total, sample("silo_requests_total"), "histograms must cover every request");
+    server.shutdown();
+}
+
+/// Completed runs feed the measured-latency calibration: the sample
+/// counter counts them, the drift gauge leaves its identity default,
+/// and the kernel listing carries the artifact's last observed ratio.
+#[test]
+fn run_traffic_updates_the_drift_gauge() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let source = "program svc_drift {\n  param svc_dr_N = { tiny: 64, small: 256, \
+                  medium: 1024 };\n  array A[svc_dr_N];\n  for (svc_dr_i = 0; svc_dr_i < \
+                  svc_dr_N; svc_dr_i += 1) {\n    A[svc_dr_i] = 0.5*A[svc_dr_i] + 2.0;\n  }\n}\n";
+    let reply = c.compile(source, "cfg1").unwrap();
+    let m0 = c.metrics().unwrap();
+    assert_eq!(metric(&m0, "cal_samples"), 0, "{m0}");
+    assert_eq!(m0.get("model_drift").and_then(Json::as_f64), Some(1.0), "{m0}");
+    for _ in 0..3 {
+        c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    }
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "cal_samples"), 3, "every run must feed the EWMA: {m}");
+    let drift = m.get("model_drift").and_then(Json::as_f64).unwrap();
+    assert!(drift.is_finite() && drift > 0.0, "nonsense drift gauge: {drift}");
+    let listing = c.kernels().unwrap();
+    let k = &listing.as_arr().unwrap()[0];
+    let kd = k
+        .get("drift")
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("per-kernel drift missing: {listing}"));
+    assert!(kd.is_finite() && kd > 0.0, "{kd}");
+    server.shutdown();
+}
+
+/// `/healthz` carries liveness plus build/process identity.
+#[test]
+fn healthz_reports_uptime_and_build_info() {
+    let server = start(4, 1, 2);
+    let c = client(&server);
+    let h = c.healthz().unwrap();
+    assert_eq!(h.get("ok").and_then(Json::as_bool), Some(true), "{h}");
+    assert_eq!(h.get("service").and_then(Json::as_str), Some("silo"), "{h}");
+    assert!(!h.get("version").and_then(Json::as_str).unwrap().is_empty(), "{h}");
+    assert!(h.get("uptime_s").and_then(Json::as_f64).unwrap() >= 0.0, "{h}");
+    assert!(h.get("pid").and_then(Json::as_i64).unwrap() > 0, "{h}");
+    assert_eq!(h.get("backend_default").and_then(Json::as_str), Some("vm"), "{h}");
+    assert_eq!(h.get("untrusted").and_then(Json::as_bool), Some(false), "{h}");
+    server.shutdown();
+}
+
 /// A hostile out-of-bounds program run on the speculative backend traps
 /// exactly as on the sequential checked tier: HTTP 422 with the
 /// structured `out_of_bounds` code in the body — checked at the raw
