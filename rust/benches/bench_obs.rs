@@ -1,0 +1,143 @@
+//! Bench: what observability costs — the plain execution path (tracing
+//! compiled away), the instrumented profiled replay, and hardware
+//! counters around a run. `cargo bench --bench bench_obs`
+//!
+//! Emits `BENCH_obs.json` at the repository root. The headline
+//! invariant is the off-path: the plain VM run is measured twice and
+//! the two samples must agree within noise — observability that is
+//! switched off has no business showing up in the run loop. The
+//! tracer-on and `--hw` columns quantify the *opt-in* overheads so a
+//! regression there is visible in the trajectory, not asserted away.
+//!
+//! Per-measurement time budget defaults to 200 ms; set
+//! `BENCH_OBS_BUDGET_MS` to change it.
+
+use std::time::Duration;
+
+use silo::bench::{black_box, time_budgeted};
+use silo::coordinator::{compile_program, MemSchedules, PipelineSpec};
+use silo::exec::{ExecLimits, Vm};
+use silo::kernels::{resolve, Preset};
+use silo::native::Tier;
+use silo::obs::{HwGroup, ProfileTracer};
+use silo::verify::CheckSet;
+
+const KERNELS: [&str; 3] = ["jacobi_1d", "softmax", "matmul_tiled"];
+
+fn budget() -> Duration {
+    let ms = std::env::var("BENCH_OBS_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(200);
+    Duration::from_millis(ms.max(10))
+}
+
+fn main() {
+    let hw = silo::obs::perf::available();
+    if !hw {
+        eprintln!("hardware counters unavailable on this host; hw columns will be null");
+    }
+    let mut rows = Vec::new();
+    let mut worst_noise = 1.0f64;
+    println!(
+        "{:<16} {:>9} {:>9} {:>11} {:>9} {:>9}",
+        "kernel", "off ms", "off2 ms", "profiled ms", "hw ms", "hw over"
+    );
+    for name in KERNELS {
+        let kernel = resolve(name).unwrap();
+        let compiled = compile_program(
+            kernel.program(),
+            &PipelineSpec::parse("cfg1"),
+            MemSchedules::default(),
+        )
+        .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let params = kernel.params(Preset::Small).unwrap();
+        let inputs = kernel.inputs(&compiled.program, &params).unwrap();
+        let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+        let limits = ExecLimits::none();
+
+        // Off path, twice: the second sample is the noise floor the
+        // first is judged against.
+        let run_off = || {
+            time_budgeted(budget(), || {
+                black_box(
+                    compiled
+                        .execute_limited_tier(Tier::Vm, &params, &refs, 1, &limits)
+                        .unwrap(),
+                );
+            })
+            .mean_ms()
+        };
+        let off_ms = run_off();
+        let off2_ms = run_off();
+        let noise = (off_ms / off2_ms).max(off2_ms / off_ms);
+        worst_noise = worst_noise.max(noise);
+
+        // Tracer on: the profiled artifact replayed under ProfileTracer
+        // (what `silo profile` pays for per-loop attribution).
+        let pvm = Vm::compile_profiled(&compiled.program, &CheckSet::none()).unwrap();
+        let profiled_ms = time_budgeted(budget(), || {
+            let mut tracer = ProfileTracer::new();
+            black_box(
+                pvm.run_limited_traced(&params, &refs, 1, &limits, &mut tracer)
+                    .unwrap(),
+            );
+        })
+        .mean_ms();
+
+        // `--hw`: the plain run bracketed by a counter window (open +
+        // reset/enable + run + disable/read + close per measurement).
+        let hw_ms = hw.then(|| {
+            time_budgeted(budget(), || {
+                let g = HwGroup::open().unwrap();
+                g.start().unwrap();
+                black_box(
+                    compiled
+                        .execute_limited_tier(Tier::Vm, &params, &refs, 1, &limits)
+                        .unwrap(),
+                );
+                black_box(g.stop().unwrap());
+            })
+            .mean_ms()
+        });
+
+        let hw_over = hw_ms.map(|h| h / off_ms.min(off2_ms));
+        println!(
+            "{:<16} {:>9.3} {:>9.3} {:>11.3} {:>9} {:>9}",
+            name,
+            off_ms,
+            off2_ms,
+            profiled_ms,
+            hw_ms.map_or("-".into(), |v| format!("{v:.3}")),
+            hw_over.map_or("-".into(), |v| format!("{v:.2}x")),
+        );
+        rows.push(format!(
+            "    {{\"name\": \"{name}\", \"off_ms\": {off_ms:.4}, \"off2_ms\": {off2_ms:.4}, \
+             \"profiled_ms\": {profiled_ms:.4}, \"hw_ms\": {}, \"hw_overhead\": {}, \
+             \"profiled_overhead\": {:.3}}}",
+            hw_ms.map_or("null".into(), |v| format!("{v:.4}")),
+            hw_over.map_or("null".into(), |v| format!("{v:.3}")),
+            profiled_ms / off_ms.min(off2_ms),
+        ));
+    }
+
+    println!("\nworst off-path repeat ratio: {worst_noise:.3}x");
+    // Lenient on purpose: CI machines are noisy neighbors. A genuine
+    // always-on instrumentation cost shows up as a systematic gap far
+    // beyond this bound.
+    assert!(
+        worst_noise < 1.5,
+        "tracer-off runs disagree by {worst_noise:.3}x — the off path is not free"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"obs\",\n  \"hw_available\": {hw},\n  \"preset\": \"small\",\n  \
+         \"worst_off_repeat_ratio\": {worst_noise:.4},\n  \"kernels\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_obs.json");
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

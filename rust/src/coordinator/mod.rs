@@ -12,5 +12,5 @@ pub use driver::{
     validate_config, validate_spec, CompiledKernel, MemSchedules, OptConfig, PipelineSpec,
     RunOutcome, SafetyPolicy, REJECTED_PREFIX,
 };
-pub use profile::{profile_kernel, ProfileOutcome};
+pub use profile::{profile_kernel, HwLoopSample, HwReport, ProfileOutcome};
 pub use report::Table;

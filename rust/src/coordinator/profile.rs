@@ -21,11 +21,45 @@ use anyhow::Result;
 use crate::exec::{ExecLimits, Vm};
 use crate::kernels::{self, Preset};
 use crate::native::Tier;
-use crate::obs::{self, ExecProfile, ProfileTracer, SpanEvent};
+use crate::obs::{self, perf, ExecProfile, HwCounts, HwProfileTracer, ProfileTracer, SpanEvent};
 use crate::transforms::PipelineReport;
 use crate::verify::CheckSet;
 
 use super::driver::{compile_program, MemSchedules, PipelineSpec};
+
+/// Hardware counters attributed to one loop of the profiled replay.
+pub struct HwLoopSample {
+    /// Loop variable name (matches the `-- loop execution --` rows).
+    pub var: String,
+    /// Nesting depth (indentation in the report).
+    pub depth: usize,
+    /// Exclusive counter deltas for this loop.
+    pub counts: HwCounts,
+}
+
+/// What `--hw` measured — or the explicit reason it couldn't. The
+/// distinction is the contract: a locked-down host must render
+/// `hw: unavailable (<reason>)`, never a row of zeros.
+pub enum HwReport {
+    /// `perf_event_open` was denied or unsupported.
+    Unavailable { reason: String },
+    /// Counters sampled on this host.
+    Sampled {
+        /// Totals around the *real* (uninstrumented) run on the
+        /// requested backend — the honest whole-kernel IPC / miss rate.
+        real: HwCounts,
+        /// Per-loop attribution from the instrumented replay. These
+        /// measure the profiled VM executing the same loop structure:
+        /// trustworthy *relative* to each other (which loop misses),
+        /// not as absolute cycle counts for the real artifact.
+        loops: Vec<HwLoopSample>,
+        /// Replay deltas outside any loop (prologue/epilogue).
+        outside: HwCounts,
+        /// Set when a mid-replay counter read failed; per-loop rows are
+        /// partial below this point.
+        partial: Option<String>,
+    },
+}
 
 /// Everything one profile run produced.
 pub struct ProfileOutcome {
@@ -50,6 +84,9 @@ pub struct ProfileOutcome {
     /// measured ÷ modeled — 1.0 means the cost model is exact; the
     /// daemon exports the same ratio as a gauge.
     pub drift: Option<f64>,
+    /// Hardware-counter report when `--hw` was requested (`None` when
+    /// it wasn't).
+    pub hw: Option<HwReport>,
     /// Every span recorded during this run, for Chrome-trace export.
     pub events: Vec<SpanEvent>,
 }
@@ -63,11 +100,12 @@ pub fn profile_kernel(
     preset: Preset,
     threads: usize,
     backend: Tier,
+    hw: bool,
 ) -> Result<ProfileOutcome> {
     let was_enabled = obs::enabled();
     obs::set_enabled(true);
     let prev_trace = obs::span::set_current_trace(obs::next_trace_id());
-    let result = profile_inner(name, spec, mem, preset, threads, backend);
+    let result = profile_inner(name, spec, mem, preset, threads, backend, hw);
     obs::span::set_current_trace(prev_trace);
     let events = obs::take_events();
     obs::set_enabled(was_enabled);
@@ -83,6 +121,7 @@ fn profile_inner(
     preset: Preset,
     threads: usize,
     backend: Tier,
+    hw: bool,
 ) -> Result<ProfileOutcome> {
     let _sp = obs::span("exec", || format!("profile:{name}"));
     let kernel = kernels::resolve(name)?;
@@ -91,22 +130,83 @@ fn profile_inner(
     let inputs = kernel.inputs(&compiled.program, &params)?;
     let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
 
-    // 1. Real artifact on the requested backend: the honest wall clock.
+    // 1. Real artifact on the requested backend: the honest wall clock,
+    // optionally bracketed by hardware counters. Any counter failure
+    // downgrades to the explicit-unavailable report, never to zeros.
+    let mut hw_denied: Option<String> = None;
+    let real_group = if hw {
+        match perf::status().and_then(|()| perf::HwGroup::open()) {
+            Ok(g) => match g.start() {
+                Ok(()) => Some(g),
+                Err(e) => {
+                    hw_denied = Some(e);
+                    None
+                }
+            },
+            Err(e) => {
+                hw_denied = Some(e);
+                None
+            }
+        }
+    } else {
+        None
+    };
     let (_, wall, _, ran_on) =
         compiled.execute_limited_tier(backend, &params, &refs, threads, &ExecLimits::none())?;
+    let real_counts = match &real_group {
+        Some(g) => match g.stop() {
+            Ok(c) => Some(c),
+            Err(e) => {
+                hw_denied = Some(e);
+                None
+            }
+        },
+        None => None,
+    };
+    drop(real_group);
 
-    // 2. Profiled artifact, sequential: loop identity + tallies. A trap
+    // 2. Profiled artifact, sequential: loop identity + tallies (and,
+    // under `--hw`, per-loop counter deltas from the replay). A trap
     // here is reported, not fatal — partial tallies are still useful.
     let pvm = Vm::compile_profiled(&compiled.program, &CheckSet::none())?;
-    let mut tracer = ProfileTracer::new();
-    let trap = {
-        let _run_sp = obs::span("exec", || format!("profiled-run:{}", compiled.name));
-        match pvm.run_limited_traced(&params, &refs, 1, &ExecLimits::none(), &mut tracer) {
-            Ok(_) => None,
-            Err(e) => Some(format!("{e:#}")),
-        }
+    let limits = ExecLimits::none();
+    let run_plain_replay = || {
+        let mut tracer = ProfileTracer::new();
+        let trap = {
+            let _run_sp = obs::span("exec", || format!("profiled-run:{}", compiled.name));
+            match pvm.run_limited_traced(&params, &refs, 1, &limits, &mut tracer) {
+                Ok(_) => None,
+                Err(e) => Some(format!("{e:#}")),
+            }
+        };
+        (
+            tracer.finish(&compiled.program),
+            None::<crate::obs::HwLoopProfile>,
+            trap,
+        )
     };
-    let exec = tracer.finish(&compiled.program);
+    let sample_loops = hw && hw_denied.is_none();
+    let (exec, hw_loops, trap) = if sample_loops {
+        match perf::HwGroup::open().and_then(HwProfileTracer::start) {
+            Ok(mut tracer) => {
+                let trap = {
+                    let _run_sp = obs::span("exec", || format!("profiled-run:{}", compiled.name));
+                    match pvm.run_limited_traced(&params, &refs, 1, &limits, &mut tracer) {
+                        Ok(_) => None,
+                        Err(e) => Some(format!("{e:#}")),
+                    }
+                };
+                let (inner, hw_prof) = tracer.finish();
+                (inner.finish(&compiled.program), Some(hw_prof), trap)
+            }
+            Err(e) => {
+                hw_denied = Some(e);
+                run_plain_replay()
+            }
+        }
+    } else {
+        run_plain_replay()
+    };
 
     let node = crate::machine::intel_node();
     let modeled_ns_per_iter = compiled.modeled_cycles_per_iter / node.ghz;
@@ -115,6 +215,37 @@ fn profile_inner(
     let drift = measured_ns_per_iter
         .map(|m| m / modeled_ns_per_iter)
         .filter(|d| d.is_finite());
+
+    let hw_report = if hw {
+        Some(match hw_denied {
+            Some(reason) => HwReport::Unavailable { reason },
+            None => {
+                let hw_prof = hw_loops.unwrap_or_default();
+                let parents = compiled.program.loop_parents();
+                let loops = hw_prof
+                    .order
+                    .iter()
+                    .map(|id| HwLoopSample {
+                        var: compiled
+                            .program
+                            .find_loop(*id)
+                            .map(|l| l.var.name())
+                            .unwrap_or_else(|| format!("loop#{}", id.0)),
+                        depth: parents.get(id).map(|p| p.len()).unwrap_or(0),
+                        counts: hw_prof.per_loop.get(id).copied().unwrap_or_default(),
+                    })
+                    .collect();
+                HwReport::Sampled {
+                    real: real_counts.unwrap_or_default(),
+                    loops,
+                    outside: hw_prof.outside,
+                    partial: hw_prof.failed,
+                }
+            }
+        })
+    } else {
+        None
+    };
 
     Ok(ProfileOutcome {
         kernel: compiled.name.clone(),
@@ -126,6 +257,7 @@ fn profile_inner(
         modeled_ns_per_iter,
         measured_ns_per_iter,
         drift,
+        hw: hw_report,
         events: Vec::new(),
     })
 }
@@ -166,6 +298,48 @@ impl ProfileOutcome {
             (Some(m), None) => out.push_str(&format!("   measured: {m:.2} ns/iter\n")),
             _ => out.push_str("   measured: n/a (no iterations)\n"),
         }
+        if let Some(hw) = &self.hw {
+            out.push_str("\n-- hardware counters --\n");
+            match hw {
+                HwReport::Unavailable { reason } => {
+                    out.push_str(&format!("  hw: unavailable ({reason})\n"));
+                }
+                HwReport::Sampled {
+                    real,
+                    loops,
+                    outside,
+                    partial,
+                } => {
+                    out.push_str(&format!("  real run: {}\n", real.render()));
+                    if !loops.is_empty() {
+                        out.push_str("  per-loop (instrumented replay, relative):\n");
+                        for l in loops {
+                            let ipc = l
+                                .counts
+                                .ipc()
+                                .map(|v| format!("{v:.2}"))
+                                .unwrap_or_else(|| "n/a".into());
+                            let miss = l
+                                .counts
+                                .miss_rate()
+                                .map(|v| format!("{:.2}%", v * 100.0))
+                                .unwrap_or_else(|| "n/a".into());
+                            let name = format!("{}{}", "  ".repeat(l.depth), l.var);
+                            out.push_str(&format!(
+                                "    {:<10} ipc {:>6}   miss {:>7}   cycles {:>12}   misses {:>10}\n",
+                                name, ipc, miss, l.counts.cycles, l.counts.cache_misses
+                            ));
+                        }
+                    }
+                    if outside.cycles > 0 {
+                        out.push_str(&format!("    {:<10} cycles {:>12}\n", "(outer)", outside.cycles));
+                    }
+                    if let Some(p) = partial {
+                        out.push_str(&format!("  per-loop attribution partial: {p}\n"));
+                    }
+                }
+            }
+        }
         out
     }
 }
@@ -189,8 +363,10 @@ mod tests {
             Preset::Tiny,
             1,
             Tier::Vm,
+            false,
         )
         .unwrap();
+        assert!(out.hw.is_none(), "hw report only when --hw is requested");
         assert!(out.trap.is_none(), "{:?}", out.trap);
         assert!(!out.exec.loops.is_empty());
         assert!(out.exec.total_iters() > 0);

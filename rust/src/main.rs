@@ -22,12 +22,16 @@
 //!              with each schedule's modeled cost terms, so a surprising
 //!              choice can be audited instead of trusted
 //!   silo profile <kernel> [--pipeline=SPEC] [--preset=P] [--threads=N]
-//!            [--backend=vm|native|speculative] [--trace-out=FILE]
+//!            [--backend=vm|native|speculative] [--trace-out=FILE] [--hw]
 //!            — per-pass compile timings (wall + analysis-cache hits),
 //!              per-loop iteration/access tallies from an instrumented
 //!              sequential replay, and modeled-vs-measured ns/iter drift;
 //!              --trace-out writes every span as Chrome trace-event JSON
-//!              (load in chrome://tracing or Perfetto)
+//!              (load in chrome://tracing or Perfetto); --hw additionally
+//!              samples hardware counters via raw perf_event_open —
+//!              whole-run IPC/miss counts around the real run plus
+//!              per-loop attribution from the replay, or an explicit
+//!              `hw: unavailable (<reason>)` where the syscall is denied
 //!   silo inspect <kernel> [--pipeline=SPEC] [--preset=P]
 //!            — inspector pass: evaluate the symbolic access functions
 //!              over the concrete iteration space of the preset's
@@ -49,6 +53,7 @@
 //!   silo serve [--addr=H:P] [--threads=N] [--cache-cap=N]
 //!            [--untrusted] [--fuel=N] [--wall-ms=N]
 //!            [--backend=vm|native|speculative] [--access-log]
+//!            [--retune-drift=R] [--retune-min=N]
 //!            — the service daemon: POST /compile + /run/<id>, GET
 //!              /kernels /metrics /healthz, content-addressed LRU
 //!              schedule cache (default addr 127.0.0.1:7420).
@@ -59,7 +64,14 @@
 //!              structured JSON line per request (id, method, path,
 //!              status, latency) on stderr. GET /metrics also serves
 //!              `?format=prometheus` text exposition with per-endpoint
-//!              latency histograms and the cost-model drift gauge
+//!              latency histograms and the cost-model drift gauge.
+//!              --retune-drift=R arms adaptive recompilation: when a
+//!              cached artifact's per-kernel drift EWMA leaves [1/R, R]
+//!              (after --retune-min samples, default 3), a single-flight
+//!              background worker re-tunes it with the kernel's
+//!              calibrated cost model and atomically hot-swaps the
+//!              artifact — outputs stay bitwise identical, old artifact
+//!              serves until the swap
 //!   silo submit <file>.silo [--addr=H:P] [--pipeline=SPEC]
 //!            [--preset=tiny|small|medium] [--threads=N]
 //!            [--backend=vm|native|speculative] [--check]
@@ -235,6 +247,7 @@ fn real_main() -> anyhow::Result<()> {
                 args.preset()?,
                 args.threads(),
                 args.backend()?,
+                args.has("--hw"),
             )?;
             print!("{}", outcome.render());
             if let Some(path) = args.value("--trace-out") {
@@ -339,10 +352,26 @@ fn real_main() -> anyhow::Result<()> {
                     .unwrap_or(defaults.wall_ms),
                 backend: args.backend()?,
                 access_log: args.has("--access-log"),
+                retune_drift: match args.value("--retune-drift") {
+                    Some(v) => {
+                        let r: f64 = v
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("--retune-drift={v}: {e}"))?;
+                        if r <= 1.0 || !r.is_finite() {
+                            anyhow::bail!("--retune-drift must be a finite ratio > 1.0 (got {v})");
+                        }
+                        Some(r)
+                    }
+                    None => None,
+                },
+                retune_min: args
+                    .value("--retune-min")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(defaults.retune_min),
                 ..defaults
             };
             let server = silo::service::Server::serve(&config)?;
-            let mode = if config.untrusted {
+            let mut mode = if config.untrusted {
                 format!(
                     ", untrusted mode: verify + fuel {} + wall {} ms",
                     config.fuel_limit, config.wall_ms
@@ -350,6 +379,12 @@ fn real_main() -> anyhow::Result<()> {
             } else {
                 String::new()
             };
+            if let Some(r) = config.retune_drift {
+                mode.push_str(&format!(
+                    ", adaptive retune at drift {r}x after {} sample(s)",
+                    config.retune_min
+                ));
+            }
             println!(
                 "silo service listening on http://{} ({} workers, cache capacity {}{mode})",
                 server.addr(),
@@ -510,8 +545,10 @@ fn usage() -> anyhow::Error {
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
          profiling: `silo profile kernel [--pipeline=SPEC --preset=P --backend=B \
-         --trace-out=trace.json]` prints per-pass compile timings, per-loop \
-         iteration tallies, and modeled-vs-measured drift; `silo tune kernel \
+         --trace-out=trace.json --hw]` prints per-pass compile timings, per-loop \
+         iteration tallies, and modeled-vs-measured drift (--hw adds hardware \
+         counters: IPC + cache-miss rates, or an explicit `hw: unavailable` \
+         where perf_event_open is denied); `silo tune kernel \
          --explain` ranks every candidate with its cost terms\n\
          backend: --backend=vm|native|speculative on run/serve/submit (native = \
          JIT'd x86-64 code tier, VM fallback elsewhere; speculative = \
@@ -522,7 +559,8 @@ fn usage() -> anyhow::Error {
          verdicts + the worst-case fuel bound; `silo verify <dir>...` sweeps \
          every .silo file under the paths\n\
          service: `silo serve [--addr=H:P --threads=N --cache-cap=N --untrusted \
-         --fuel=N --wall-ms=N --backend=B --access-log]`, then\n\
+         --fuel=N --wall-ms=N --backend=B --access-log --retune-drift=R \
+         --retune-min=N]`, then\n\
          `silo submit file.silo [--addr=H:P --pipeline=SPEC --preset=P \
          --backend=B --check]`\n\
          see rust/src/main.rs header for details"

@@ -11,6 +11,7 @@
 //! | [`chrome`]  | Chrome trace-event JSON export (`chrome://tracing`)     |
 //! | [`hist`]    | Log₂-bucketed latency histograms (plain + atomic)       |
 //! | [`profile`] | Per-loop execution profiles via the VM `Tracer` hooks   |
+//! | [`perf`]    | Hardware counters via raw `perf_event_open` syscalls    |
 //!
 //! Design contract: **off means off**. Span collection is gated on one
 //! relaxed atomic load and allocates nothing when disabled; the VM loop
@@ -22,10 +23,12 @@
 
 pub mod chrome;
 pub mod hist;
+pub mod perf;
 pub mod profile;
 pub mod span;
 
 pub use chrome::chrome_trace_json;
 pub use hist::{AtomicHistogram, Histogram, BUCKETS};
+pub use perf::{HwCounts, HwGroup, HwLoopProfile, HwProfileTracer};
 pub use profile::{ExecProfile, LoopProfile, ProfileTracer};
 pub use span::{enabled, next_trace_id, set_enabled, span, take_events, Span, SpanEvent};

@@ -1,0 +1,591 @@
+//! Hardware performance counters over raw `perf_event_open`, std-only.
+//!
+//! The cost model predicts cycles; the observability stack so far could
+//! only *infer* them from wall clock × nominal GHz. This module makes
+//! the hardware's own counts observable — cycles, instructions, cache
+//! references/misses, branch misses — sampled around kernel execution
+//! with the same no-crates raw-syscall discipline as `native/mem.rs`'s
+//! mmap (a `#[repr(C)]` `perf_event_attr`, `syscall` via inline asm,
+//! errno decoding by hand).
+//!
+//! Counters are opened per measurement as five independent fds with
+//! `inherit = 1`, so worker threads the VM spawns *during* the run are
+//! counted too (the kernel forbids combining `inherit` with group
+//! reads, hence five fds instead of one group). Each is user-space
+//! only (`exclude_kernel`/`exclude_hv`) so the default
+//! `perf_event_paranoid = 2` policy still admits them.
+//!
+//! **Graceful degradation is the contract.** Containers, seccomp
+//! filters, and locked-down hosts commonly deny `perf_event_open`, and
+//! VMs without a PMU report `ENOENT` for hardware events. Every entry
+//! point returns `Result<_, String>` with a human-actionable reason,
+//! [`available`] probes once per process, and callers are expected to
+//! surface `hw: unavailable (<reason>)` — never silent zeros (a 0.0
+//! miss rate must mean "measured zero misses", not "could not
+//! measure"). [`HwCounts::ipc`]/[`HwCounts::miss_rate`] return `None`
+//! on a zero denominator for the same reason.
+
+use std::collections::HashMap;
+
+use crate::ir::LoopId;
+
+use super::profile::ProfileTracer;
+use crate::exec::trace::Tracer;
+
+/// One sample of the five hardware counters (totals since the group's
+/// last reset).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HwCounts {
+    pub cycles: u64,
+    pub instructions: u64,
+    pub cache_references: u64,
+    pub cache_misses: u64,
+    pub branch_misses: u64,
+}
+
+impl HwCounts {
+    /// Instructions per cycle — `None` when no cycles were counted, so
+    /// an unmeasured sample can never read as an IPC of 0.0.
+    pub fn ipc(&self) -> Option<f64> {
+        (self.cycles > 0).then(|| self.instructions as f64 / self.cycles as f64)
+    }
+
+    /// Cache misses ÷ cache references — `None` when no references were
+    /// counted (see [`HwCounts::ipc`] for why not 0.0).
+    pub fn miss_rate(&self) -> Option<f64> {
+        (self.cache_references > 0)
+            .then(|| self.cache_misses as f64 / self.cache_references as f64)
+    }
+
+    /// Counter-wise `self − earlier`, saturating (counters are
+    /// monotonic within one enable window, but saturate anyway so a
+    /// reordered read cannot produce garbage deltas).
+    pub fn minus(&self, earlier: &HwCounts) -> HwCounts {
+        HwCounts {
+            cycles: self.cycles.saturating_sub(earlier.cycles),
+            instructions: self.instructions.saturating_sub(earlier.instructions),
+            cache_references: self.cache_references.saturating_sub(earlier.cache_references),
+            cache_misses: self.cache_misses.saturating_sub(earlier.cache_misses),
+            branch_misses: self.branch_misses.saturating_sub(earlier.branch_misses),
+        }
+    }
+
+    /// Counter-wise accumulate.
+    pub fn add(&mut self, d: &HwCounts) {
+        self.cycles += d.cycles;
+        self.instructions += d.instructions;
+        self.cache_references += d.cache_references;
+        self.cache_misses += d.cache_misses;
+        self.branch_misses += d.branch_misses;
+    }
+
+    /// One compact human-readable line (`silo profile --hw`).
+    pub fn render(&self) -> String {
+        let ipc = self
+            .ipc()
+            .map(|v| format!("{v:.2}"))
+            .unwrap_or_else(|| "n/a".into());
+        let miss = self
+            .miss_rate()
+            .map(|v| format!("{:.2}%", v * 100.0))
+            .unwrap_or_else(|| "n/a".into());
+        format!(
+            "cycles {}  instructions {}  ipc {}  cache {}/{} ({})  branch-misses {}",
+            self.cycles,
+            self.instructions,
+            ipc,
+            self.cache_misses,
+            self.cache_references,
+            miss,
+            self.branch_misses,
+        )
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", target_os = "linux"))]
+mod imp {
+    use super::HwCounts;
+    use std::arch::asm;
+
+    const SYS_READ: i64 = 0;
+    const SYS_CLOSE: i64 = 3;
+    const SYS_IOCTL: i64 = 16;
+    const SYS_PERF_EVENT_OPEN: i64 = 298;
+
+    const PERF_TYPE_HARDWARE: u32 = 0;
+    /// `perf_event_attr.size` of the original ABI revision. The kernel
+    /// accepts any published size and treats the missing tail as
+    /// zeroed, and the five fields this module sets all live in the
+    /// first 64 bytes — pinning VER0 keeps the struct layout below
+    /// honest on every kernel that has `perf_event_open` at all.
+    const PERF_ATTR_SIZE_VER0: u32 = 64;
+
+    /// Flag bits in the attr bitfield word: `disabled` (start stopped,
+    /// enabled explicitly around the measured region), `inherit`
+    /// (count threads spawned during the run), `exclude_kernel` +
+    /// `exclude_hv` (user-space only, admissible under
+    /// `perf_event_paranoid = 2`).
+    const ATTR_DISABLED: u64 = 1 << 0;
+    const ATTR_INHERIT: u64 = 1 << 1;
+    const ATTR_EXCLUDE_KERNEL: u64 = 1 << 5;
+    const ATTR_EXCLUDE_HV: u64 = 1 << 6;
+
+    const PERF_EVENT_IOC_ENABLE: i64 = 0x2400;
+    const PERF_EVENT_IOC_DISABLE: i64 = 0x2401;
+    const PERF_EVENT_IOC_RESET: i64 = 0x2403;
+
+    /// The five sampled events: `PERF_COUNT_HW_*` config values, in
+    /// [`HwCounts`] field order.
+    const EVENTS: [(&str, u64); 5] = [
+        ("cycles", 0),            // PERF_COUNT_HW_CPU_CYCLES
+        ("instructions", 1),      // PERF_COUNT_HW_INSTRUCTIONS
+        ("cache-references", 2),  // PERF_COUNT_HW_CACHE_REFERENCES
+        ("cache-misses", 3),      // PERF_COUNT_HW_CACHE_MISSES
+        ("branch-misses", 5),     // PERF_COUNT_HW_BRANCH_MISSES
+    ];
+
+    /// First 64 bytes of the kernel's `perf_event_attr` (VER0 layout):
+    /// everything this module needs, valid at `size = 64` everywhere.
+    #[repr(C)]
+    struct PerfEventAttr {
+        type_: u32,
+        size: u32,
+        config: u64,
+        sample_period: u64,
+        sample_type: u64,
+        read_format: u64,
+        flags: u64,
+        wakeup_events: u32,
+        bp_type: u32,
+        config1: u64,
+    }
+
+    /// `syscall` returns a negative errno in rax on failure; the kernel
+    /// reserves the top 4095 values of the address space for that
+    /// encoding (same decoding as `native/mem.rs`).
+    fn syscall_failed(ret: i64) -> Option<i64> {
+        if (ret as u64) >= (-4095i64) as u64 {
+            Some(-ret)
+        } else {
+            None
+        }
+    }
+
+    #[inline]
+    unsafe fn sys3(n: i64, a: i64, b: i64, c: i64) -> i64 {
+        let ret: i64;
+        asm!(
+            "syscall",
+            inlateout("rax") n => ret,
+            in("rdi") a,
+            in("rsi") b,
+            in("rdx") c,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[inline]
+    unsafe fn sys5(n: i64, a: i64, b: i64, c: i64, d: i64, e: i64) -> i64 {
+        let ret: i64;
+        asm!(
+            "syscall",
+            inlateout("rax") n => ret,
+            in("rdi") a,
+            in("rsi") b,
+            in("rdx") c,
+            in("r10") d,
+            in("r8") e,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Human hint for the errnos `perf_event_open` actually returns.
+    fn errno_hint(errno: i64) -> &'static str {
+        match errno {
+            1 | 13 => "denied — raise /proc/sys/kernel/perf_event_paranoid or grant \
+                       CAP_PERFMON",
+            2 => "hardware events unsupported on this host (no PMU — common in VMs)",
+            22 => "attr rejected (EINVAL)",
+            38 => "perf_event_open not implemented (seccomp or ancient kernel)",
+            _ => "see perf_event_open(2)",
+        }
+    }
+
+    /// One measurement window over the five hardware counters.
+    ///
+    /// Lifecycle: [`HwGroup::open`] (counters exist, stopped) →
+    /// [`HwGroup::start`] (reset + enable) → run the measured code →
+    /// [`HwGroup::stop`] (disable + read), with [`HwGroup::snapshot`]
+    /// available for mid-window reads (the per-loop tracer). Fds close
+    /// on drop.
+    pub struct HwGroup {
+        fds: [i64; 5],
+    }
+
+    impl HwGroup {
+        /// Open all five counters for this thread (+ future children,
+        /// via `inherit`). Any single failure closes what was opened
+        /// and reports which event was refused and why.
+        pub fn open() -> Result<HwGroup, String> {
+            let mut fds = [-1i64; 5];
+            for (i, (name, config)) in EVENTS.iter().enumerate() {
+                let attr = PerfEventAttr {
+                    type_: PERF_TYPE_HARDWARE,
+                    size: PERF_ATTR_SIZE_VER0,
+                    config: *config,
+                    sample_period: 0,
+                    sample_type: 0,
+                    read_format: 0,
+                    flags: ATTR_DISABLED
+                        | ATTR_INHERIT
+                        | ATTR_EXCLUDE_KERNEL
+                        | ATTR_EXCLUDE_HV,
+                    wakeup_events: 0,
+                    bp_type: 0,
+                    config1: 0,
+                };
+                // pid = 0 (this thread), cpu = -1 (any), no group fd,
+                // no flags. Group reads are incompatible with inherit,
+                // which is why every event is its own fd.
+                let ret = unsafe {
+                    sys5(
+                        SYS_PERF_EVENT_OPEN,
+                        &attr as *const PerfEventAttr as i64,
+                        0,
+                        -1,
+                        -1,
+                        0,
+                    )
+                };
+                if let Some(errno) = syscall_failed(ret) {
+                    for fd in fds.iter().take(i) {
+                        unsafe { sys3(SYS_CLOSE, *fd, 0, 0) };
+                    }
+                    return Err(format!(
+                        "perf_event_open({name}) failed (errno {errno}: {})",
+                        errno_hint(errno)
+                    ));
+                }
+                fds[i] = ret;
+            }
+            Ok(HwGroup { fds })
+        }
+
+        fn ioctl_all(&self, op: i64) -> Result<(), String> {
+            for fd in self.fds {
+                let ret = unsafe { sys3(SYS_IOCTL, fd, op, 0) };
+                if let Some(errno) = syscall_failed(ret) {
+                    return Err(format!("perf ioctl {op:#x} failed (errno {errno})"));
+                }
+            }
+            Ok(())
+        }
+
+        /// Reset all counters to zero and start counting.
+        pub fn start(&self) -> Result<(), String> {
+            self.ioctl_all(PERF_EVENT_IOC_RESET)?;
+            self.ioctl_all(PERF_EVENT_IOC_ENABLE)
+        }
+
+        /// Read the current totals without stopping the counters
+        /// (inherited children are summed into each read).
+        pub fn snapshot(&self) -> Result<HwCounts, String> {
+            let mut vals = [0u64; 5];
+            for (i, fd) in self.fds.iter().enumerate() {
+                let mut buf = [0u8; 8];
+                let ret =
+                    unsafe { sys3(SYS_READ, *fd, buf.as_mut_ptr() as i64, buf.len() as i64) };
+                if let Some(errno) = syscall_failed(ret) {
+                    return Err(format!("perf read failed (errno {errno})"));
+                }
+                if ret != 8 {
+                    return Err(format!("perf read returned {ret} bytes, expected 8"));
+                }
+                vals[i] = u64::from_ne_bytes(buf);
+            }
+            Ok(HwCounts {
+                cycles: vals[0],
+                instructions: vals[1],
+                cache_references: vals[2],
+                cache_misses: vals[3],
+                branch_misses: vals[4],
+            })
+        }
+
+        /// Stop counting and return the window's totals.
+        pub fn stop(&self) -> Result<HwCounts, String> {
+            self.ioctl_all(PERF_EVENT_IOC_DISABLE)?;
+            self.snapshot()
+        }
+    }
+
+    impl Drop for HwGroup {
+        fn drop(&mut self) {
+            for fd in self.fds {
+                unsafe { sys3(SYS_CLOSE, fd, 0, 0) };
+            }
+        }
+    }
+
+    /// One open → start → stop round trip, run once per process.
+    pub(super) fn probe() -> Result<(), String> {
+        let g = HwGroup::open()?;
+        g.start()?;
+        g.stop().map(|_| ())
+    }
+}
+
+/// Stub for hosts without the raw-syscall implementation (non-x86-64 or
+/// non-Linux): [`HwGroup::open`] always fails with the reason, so every
+/// caller takes its graceful-degradation path.
+#[cfg(not(all(target_arch = "x86_64", target_os = "linux")))]
+mod imp {
+    use super::HwCounts;
+
+    pub struct HwGroup {
+        _private: (),
+    }
+
+    impl HwGroup {
+        pub fn open() -> Result<HwGroup, String> {
+            Err("hardware counters are only supported on x86-64 Linux".into())
+        }
+
+        pub fn start(&self) -> Result<(), String> {
+            unreachable!("stub HwGroup cannot be constructed")
+        }
+
+        pub fn snapshot(&self) -> Result<HwCounts, String> {
+            unreachable!("stub HwGroup cannot be constructed")
+        }
+
+        pub fn stop(&self) -> Result<HwCounts, String> {
+            unreachable!("stub HwGroup cannot be constructed")
+        }
+    }
+
+    pub(super) fn probe() -> Result<(), String> {
+        HwGroup::open().map(|_| ())
+    }
+}
+
+pub use imp::HwGroup;
+
+/// Whether this host can count (probed once per process, like
+/// [`crate::native::available`]). `false` means every `HwGroup::open`
+/// would fail; [`status`] carries the reason.
+pub fn available() -> bool {
+    status().is_ok()
+}
+
+/// The probe's verdict: `Ok(())` or the denial reason callers must
+/// surface as `hw: unavailable (<reason>)`.
+pub fn status() -> Result<(), String> {
+    static PROBE: std::sync::OnceLock<Result<(), String>> = std::sync::OnceLock::new();
+    PROBE.get_or_init(imp::probe).clone()
+}
+
+/// Per-loop hardware-counter attribution from one instrumented replay:
+/// what [`HwProfileTracer`] hands back next to the trip/access tallies.
+#[derive(Debug, Default)]
+pub struct HwLoopProfile {
+    /// Loops in first-enter order (matches the [`ProfileTracer`] order).
+    pub order: Vec<LoopId>,
+    /// Exclusive counter deltas attributed to each loop (time spent in
+    /// an inner loop is attributed to the inner loop, not its parents).
+    pub per_loop: HashMap<LoopId, HwCounts>,
+    /// Deltas attributed to no loop (prologue/epilogue).
+    pub outside: HwCounts,
+    /// First mid-run read failure, if any — partial attributions are
+    /// reported, flagged, never passed off as complete.
+    pub failed: Option<String>,
+}
+
+/// A [`ProfileTracer`] that additionally samples the hardware counters
+/// at every loop boundary and attributes the deltas to the innermost
+/// live loop — `silo profile --hw`'s per-loop IPC and miss-rate rows.
+///
+/// Sampling happens on `loop_enter`/`loop_exit` only (five `read`
+/// syscalls per boundary); `loop_iter` stays unsampled so the replay's
+/// cost stays proportional to the loop *structure*, not the trip count.
+pub struct HwProfileTracer {
+    inner: ProfileTracer,
+    group: HwGroup,
+    hw: HwLoopProfile,
+    stack: Vec<LoopId>,
+    last: HwCounts,
+}
+
+impl HwProfileTracer {
+    /// Open-and-started tracer: counters run from here until
+    /// [`HwProfileTracer::finish`].
+    pub fn start(group: HwGroup) -> Result<HwProfileTracer, String> {
+        group.start()?;
+        let last = group.snapshot()?;
+        Ok(HwProfileTracer {
+            inner: ProfileTracer::new(),
+            group,
+            hw: HwLoopProfile::default(),
+            stack: Vec::new(),
+            last,
+        })
+    }
+
+    /// Attribute the delta since the previous boundary to the loop that
+    /// was innermost *during* that window (top of stack before the
+    /// event that triggered this call).
+    fn boundary(&mut self) {
+        match self.group.snapshot() {
+            Ok(now) => {
+                let delta = now.minus(&self.last);
+                match self.stack.last() {
+                    Some(id) => self.hw.per_loop.entry(*id).or_default().add(&delta),
+                    None => self.hw.outside.add(&delta),
+                }
+                self.last = now;
+            }
+            Err(e) => {
+                if self.hw.failed.is_none() {
+                    self.hw.failed = Some(e);
+                }
+            }
+        }
+    }
+
+    /// Flush the trailing window and split into the access/trip tracer
+    /// and the per-loop counter attribution.
+    pub fn finish(mut self) -> (ProfileTracer, HwLoopProfile) {
+        self.boundary();
+        let _ = self.group.stop();
+        (self.inner, self.hw)
+    }
+}
+
+impl Tracer for HwProfileTracer {
+    fn access(&mut self, cont: u16, idx: i64, write: bool, prefetch: bool) {
+        self.inner.access(cont, idx, write, prefetch);
+    }
+
+    fn loop_enter(&mut self, id: LoopId) {
+        self.boundary();
+        if !self.hw.per_loop.contains_key(&id) {
+            self.hw.order.push(id);
+            self.hw.per_loop.insert(id, HwCounts::default());
+        }
+        self.stack.push(id);
+        self.inner.loop_enter(id);
+    }
+
+    fn loop_iter(&mut self, id: LoopId) {
+        self.inner.loop_iter(id);
+    }
+
+    fn loop_exit(&mut self, id: LoopId) {
+        self.boundary();
+        while let Some(top) = self.stack.pop() {
+            if top == id {
+                break;
+            }
+        }
+        self.inner.loop_exit(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A zero denominator must read as "unmeasured", never as 0.0 —
+    /// the gauge-can't-silently-read-zero contract.
+    #[test]
+    fn derived_rates_refuse_zero_denominators() {
+        let zero = HwCounts::default();
+        assert_eq!(zero.ipc(), None);
+        assert_eq!(zero.miss_rate(), None);
+        let c = HwCounts {
+            cycles: 100,
+            instructions: 250,
+            cache_references: 50,
+            cache_misses: 5,
+            branch_misses: 1,
+        };
+        assert_eq!(c.ipc(), Some(2.5));
+        assert_eq!(c.miss_rate(), Some(0.1));
+        assert!(c.render().contains("ipc 2.50"));
+        assert!(zero.render().contains("n/a"));
+    }
+
+    #[test]
+    fn delta_arithmetic_saturates() {
+        let a = HwCounts {
+            cycles: 10,
+            instructions: 20,
+            cache_references: 5,
+            cache_misses: 1,
+            branch_misses: 0,
+        };
+        let b = HwCounts {
+            cycles: 25,
+            instructions: 60,
+            cache_references: 9,
+            cache_misses: 1,
+            branch_misses: 2,
+        };
+        let d = b.minus(&a);
+        assert_eq!(d.cycles, 15);
+        assert_eq!(d.instructions, 40);
+        assert_eq!(a.minus(&b).cycles, 0, "reordered reads saturate, never wrap");
+        let mut acc = HwCounts::default();
+        acc.add(&d);
+        acc.add(&d);
+        assert_eq!(acc.instructions, 80);
+    }
+
+    /// Whatever the sandbox says, it must say it twice, and the probe's
+    /// verdict must agree with a fresh open attempt.
+    #[test]
+    fn probe_is_stable_and_honest() {
+        assert_eq!(available(), available());
+        assert_eq!(available(), status().is_ok());
+        match status() {
+            Ok(()) => assert!(HwGroup::open().is_ok()),
+            Err(reason) => {
+                assert!(!reason.is_empty(), "denials must carry a reason");
+                assert!(HwGroup::open().is_err());
+            }
+        }
+    }
+
+    /// On counting hosts: a real measurement window sees instructions
+    /// retire. Hosts that deny the syscall exercise the degradation
+    /// path instead — the test must pass both ways.
+    #[test]
+    fn measurement_window_counts_or_degrades() {
+        let group = match HwGroup::open() {
+            Ok(g) => g,
+            Err(reason) => {
+                assert!(!reason.is_empty());
+                return;
+            }
+        };
+        group.start().unwrap();
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        let counts = group.stop().unwrap();
+        assert!(
+            counts.instructions > 10_000,
+            "a 100k-iteration loop retired only {} instructions",
+            counts.instructions
+        );
+        assert!(counts.ipc().is_some());
+    }
+}

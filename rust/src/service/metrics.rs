@@ -105,6 +105,13 @@ pub struct Metrics {
     /// Measured-latency calibration samples folded into the cost model
     /// (successful `/run`s with a positive fuel count).
     pub cal_samples: AtomicU64,
+    /// Adaptive recompilations triggered: a cached artifact's measured
+    /// drift crossed `--retune-drift` and a background re-tune ran
+    /// (whether or not it ended up swapping the artifact).
+    pub retunes: AtomicU64,
+    /// Retunes whose re-tuned schedule scored strictly better under the
+    /// kernel's calibrated cost model and was hot-swapped in.
+    pub retunes_improved: AtomicU64,
     /// Per-endpoint request latency, microseconds, log₂ buckets —
     /// indexed by [`Endpoint`]'s position in [`Endpoint::ALL`].
     pub latency: [AtomicHistogram; 6],

@@ -124,6 +124,16 @@ pub struct ServiceConfig {
     /// per routed request with its daemon-assigned request id, method,
     /// path, status, and latency (`silo serve --access-log`).
     pub access_log: bool,
+    /// Adaptive recompilation threshold (`silo serve --retune-drift=R`,
+    /// R > 1.0). When a cached autotuned artifact's per-kernel drift
+    /// EWMA leaves the band [1/R, R], a single-flight background worker
+    /// re-tunes it under the kernel's own calibration and hot-swaps the
+    /// artifact (outputs verified bitwise identical first). `None`
+    /// disables retuning entirely.
+    pub retune_drift: Option<f64>,
+    /// Minimum measured samples before a kernel's drift can trigger a
+    /// retune — one cold-cache run must not tear down a warm artifact.
+    pub retune_min: u64,
 }
 
 impl Default for ServiceConfig {
@@ -138,24 +148,69 @@ impl Default for ServiceConfig {
             wall_ms: 30_000,
             backend: Tier::Vm,
             access_log: false,
+            retune_drift: None,
+            retune_min: 3,
         }
     }
 }
 
-/// EWMA of the measured-vs-modeled cycles-per-iteration ratio across
-/// completed runs (the daemon's live cost-model calibration).
-struct CalEwma {
-    /// Smoothed measured ÷ modeled ratio (1.0 until the first sample).
-    ratio: f64,
+/// Fuel-weighted aggregate of every per-kernel drift sample, for the
+/// daemon-wide `model_drift` gauge (and as the calibration prior for
+/// kernels that haven't run yet). Weighting by fuel makes the gauge
+/// follow where the cycles actually went instead of letting a tiny
+/// kernel's noisy ratio swamp the heavy hitters.
+#[derive(Default)]
+struct CalAgg {
+    /// Σ fuel·ratio over accepted samples.
+    weighted: f64,
+    /// Σ fuel over accepted samples.
+    weight: f64,
     samples: u64,
 }
 
-impl Default for CalEwma {
-    fn default() -> CalEwma {
-        CalEwma {
-            ratio: 1.0,
-            samples: 0,
+impl CalAgg {
+    fn fold(&mut self, ratio: f64, fuel: u64) {
+        self.weighted += ratio * fuel as f64;
+        self.weight += fuel as f64;
+        self.samples += 1;
+    }
+
+    /// The aggregate ratio (1.0 until a sample lands — the gauge's
+    /// documented "model is exact" resting value).
+    fn ratio(&self) -> f64 {
+        if self.weight > 0.0 {
+            self.weighted / self.weight
+        } else {
+            1.0
         }
+    }
+}
+
+/// Per-kernel EWMA of whole-run hardware-counter rates, sampled around
+/// `/run` executions when `perf_event_open` is available on this host.
+#[derive(Default)]
+struct HwStats {
+    ipc: Option<f64>,
+    miss_rate: Option<f64>,
+    samples: u64,
+}
+
+impl HwStats {
+    /// Fold one run's counts in. Each rate updates only when the sample
+    /// defines it (a run with zero cache references must not drag the
+    /// miss-rate EWMA toward a fake 0.0).
+    fn fold(&mut self, counts: &crate::obs::HwCounts) {
+        fn ewma(slot: &mut Option<f64>, sample: Option<f64>) {
+            if let Some(s) = sample {
+                *slot = Some(match *slot {
+                    Some(prev) => 0.7 * prev + 0.3 * s,
+                    None => s,
+                });
+            }
+        }
+        ewma(&mut self.ipc, counts.ipc());
+        ewma(&mut self.miss_rate, counts.miss_rate());
+        self.samples += 1;
     }
 }
 
@@ -282,7 +337,17 @@ pub struct ServedKernel {
     /// raised by a *later* submission reusing a name, which must not
     /// retroactively change which runs this cached artifact accepts.
     pub param_floors: Vec<(Sym, i64)>,
-    pub compiled: CompiledKernel,
+    /// The live artifact, behind an `Arc` swap point: `/run` snapshots
+    /// the `Arc` once and executes that artifact end to end, so an
+    /// adaptive retune can replace the artifact mid-traffic without
+    /// tearing schedules out from under an in-flight run (the old
+    /// artifact serves until its last holder drops it).
+    artifact: Mutex<Arc<CompiledKernel>>,
+    /// The submission's unoptimized program, kept only when adaptive
+    /// retuning is armed and this artifact was autotuned — a retune
+    /// must re-run the search from the pristine nest, not re-optimize
+    /// an already-scheduled one.
+    pristine: Option<crate::ir::Program>,
     /// Wall-clock cost of the build (optimize + tune + lower), ms.
     pub compile_ms: f64,
     /// Symbols this entry's compile touched, captured by the build's
@@ -295,10 +360,26 @@ pub struct ServedKernel {
     /// (kernel, param-set) memo table, and eviction drops the
     /// certificates with the artifact they describe.
     pub inspect_memo: Mutex<std::collections::HashMap<String, Arc<Vec<String>>>>,
-    /// Last measured ÷ modeled cycles-per-iteration ratio observed by a
-    /// `/run` of this artifact (`None` until it has run with fuel
-    /// accounting; surfaced per kernel in `GET /kernels`).
-    pub drift: Mutex<Option<f64>>,
+    /// Per-kernel measured ÷ modeled drift EWMA (keyed by this cache
+    /// entry's content id, i.e. per artifact). Feeds this kernel's own
+    /// recompile calibration and the `drift` field in `GET /kernels`;
+    /// reset after every retune so post-swap drift re-accumulates
+    /// against the *new* artifact's model.
+    cal: Mutex<crate::tuner::CalEwma>,
+    /// Whole-run hardware-counter EWMAs (empty where `perf_event_open`
+    /// is unavailable — exported as explicit `hw: unavailable`, never
+    /// as zeros).
+    hw: Mutex<HwStats>,
+    /// Single-flight latch: at most one background retune per kernel.
+    retuning: AtomicBool,
+}
+
+impl ServedKernel {
+    /// Snapshot the current artifact. Callers hold the `Arc` across
+    /// their whole run; the mutex guards only the pointer swap.
+    pub fn compiled(&self) -> Arc<CompiledKernel> {
+        Arc::clone(&self.artifact.lock().unwrap())
+    }
 }
 
 struct ServiceState {
@@ -314,22 +395,30 @@ struct ServiceState {
     started: Instant,
     /// Daemon-assigned request ids (access log + request spans).
     next_req: std::sync::atomic::AtomicU64,
-    /// Live measured-latency calibration fed by `/run`, consumed by
-    /// every subsequent autotuned compile.
-    cal: Mutex<CalEwma>,
+    /// Fuel-weighted aggregate of per-kernel drift samples, fed by
+    /// `/run`, exported as `model_drift`, and used as the calibration
+    /// prior for kernels that haven't run yet.
+    cal: Mutex<CalAgg>,
+    /// Adaptive-recompilation threshold (ratio band edge, > 1.0);
+    /// `None` = retuning disabled.
+    retune_drift: Option<f64>,
+    /// Samples a kernel needs before its drift can trigger a retune.
+    retune_min: u64,
 }
 
 impl ServiceState {
-    /// The calibration new compiles should use: identity until a run
-    /// has been measured, then the smoothed ratio (clamped so one
-    /// absurd sample cannot poison the search space's scores).
+    /// The calibration a *fresh* compile should use: the fuel-weighted
+    /// aggregate across all kernels (identity until any run has been
+    /// measured), clamped so one absurd sample cannot poison the search
+    /// space's scores. Retunes of an already-measured kernel use that
+    /// kernel's own EWMA instead.
     fn calibration(&self) -> CostCalibration {
         let g = self.cal.lock().unwrap();
         if g.samples == 0 {
             CostCalibration::identity()
         } else {
             CostCalibration {
-                scale: g.ratio.clamp(1e-3, 1e3),
+                scale: g.ratio().clamp(1e-3, 1e3),
             }
         }
     }
@@ -363,7 +452,9 @@ impl Server {
             access_log: config.access_log,
             started: Instant::now(),
             next_req: std::sync::atomic::AtomicU64::new(1),
-            cal: Mutex::new(CalEwma::default()),
+            cal: Mutex::new(CalAgg::default()),
+            retune_drift: config.retune_drift.filter(|r| r.is_finite() && *r > 1.0),
+            retune_min: config.retune_min.max(1),
         });
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
@@ -445,7 +536,7 @@ impl Server {
 /// HTTP keep-alive. The connection closes when the client asks
 /// (`Connection: close`), on a framing error, at the request cap, or
 /// on a clean client hang-up between requests.
-fn handle_connection(stream: TcpStream, state: &ServiceState) {
+fn handle_connection(stream: TcpStream, state: &Arc<ServiceState>) {
     let _ = stream.set_read_timeout(Some(http::IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(http::IO_TIMEOUT));
     let mut reader = BufReader::new(&stream);
@@ -549,7 +640,7 @@ fn access_log_line(
 const PROMETHEUS_CT: &str = "text/plain; version=0.0.4";
 const JSON_CT: &str = "application/json";
 
-fn route(req: &Request, state: &ServiceState) -> (u16, String, &'static str) {
+fn route(req: &Request, state: &Arc<ServiceState>) -> (u16, String, &'static str) {
     // Split the query string off: `/metrics?format=prometheus` must
     // route like `/metrics`.
     let (path, query) = match req.path.split_once('?') {
@@ -604,10 +695,10 @@ fn metrics_body(state: &ServiceState) -> String {
     let m = &state.metrics;
     let cal = {
         let c = state.cal.lock().unwrap();
-        (c.ratio, c.samples)
+        (c.ratio(), c.samples)
     };
     let num = |v: u64| Json::Num(v as f64);
-    Json::Obj(vec![
+    let mut fields = vec![
         ("hits".into(), num(s.hits)),
         ("misses".into(), num(s.misses)),
         ("coalesced".into(), num(s.coalesced)),
@@ -649,17 +740,33 @@ fn metrics_body(state: &ServiceState) -> String {
             "symbols_interned".into(),
             num(crate::symbolic::intern_table_size() as u64),
         ),
-        // Measured-latency cost-model feedback: the smoothed
-        // measured ÷ modeled cycles-per-iteration ratio (1.0 = the
+        // Measured-latency cost-model feedback: the fuel-weighted
+        // aggregate of per-kernel measured ÷ modeled ratios (1.0 = the
         // model is exact) and how many runs have fed it.
         ("model_drift".into(), Json::Num(cal.0)),
         ("cal_samples".into(), num(cal.1)),
+        // Adaptive recompilation: drift-triggered background re-tunes
+        // of cached artifacts, and how many ended up hot-swapped in.
+        ("retunes".into(), num(Metrics::get(&m.retunes))),
+        (
+            "retunes_improved".into(),
+            num(Metrics::get(&m.retunes_improved)),
+        ),
         (
             "uptime_s".into(),
             Json::Num(state.started.elapsed().as_secs_f64()),
         ),
-    ])
-    .to_string()
+    ];
+    // Hardware-counter availability: an explicit marker, so a scraper
+    // can tell "no cache misses" apart from "cannot measure".
+    match crate::obs::perf::status() {
+        Ok(()) => fields.push(("hw_available".into(), Json::Bool(true))),
+        Err(_) => {
+            fields.push(("hw_available".into(), Json::Bool(false)));
+            fields.push(("hw".into(), Json::Str("unavailable".into())));
+        }
+    }
+    Json::Obj(fields).to_string()
 }
 
 /// The same counters in Prometheus text exposition format
@@ -693,6 +800,8 @@ fn prometheus_body(state: &ServiceState) -> String {
         ("silo_trapped_total", g(&m.trapped), "Trapped runs."),
         ("silo_speculation_commits_total", g(&m.speculation_commits), "Chunks committed."),
         ("silo_speculation_aborts_total", g(&m.speculation_aborts), "Chunks aborted."),
+        ("silo_retunes_total", g(&m.retunes), "Drift-triggered background re-tunes."),
+        ("silo_retunes_improved_total", g(&m.retunes_improved), "Re-tunes hot-swapped in."),
     ];
     for (name, v, help) in counters {
         metric(&mut out, name, "counter", help, v);
@@ -713,13 +822,13 @@ fn prometheus_body(state: &ServiceState) -> String {
     );
     let cal = {
         let c = state.cal.lock().unwrap();
-        (c.ratio, c.samples)
+        (c.ratio(), c.samples)
     };
     metric(
         &mut out,
         "silo_model_drift",
         "gauge",
-        "Smoothed measured/modeled cycles-per-iteration ratio (1 = exact).",
+        "Fuel-weighted measured/modeled cycles-per-iteration ratio (1 = exact).",
         cal.0,
     );
     metric(
@@ -731,11 +840,75 @@ fn prometheus_body(state: &ServiceState) -> String {
     );
     metric(
         &mut out,
+        "silo_hw_available",
+        "gauge",
+        "1 when perf_event_open hardware counters work on this host, else 0.",
+        if crate::obs::perf::available() { 1.0 } else { 0.0 },
+    );
+    metric(
+        &mut out,
         "silo_uptime_seconds",
         "gauge",
         "Seconds since the daemon started.",
         state.started.elapsed().as_secs_f64(),
     );
+    // Per-kernel observability: one labeled series per resident cache
+    // entry that has actually been measured. Series appear only once a
+    // sample exists — an unmeasured kernel must be *absent*, not 0.0.
+    // Kernel names come from submissions, so label values are escaped
+    // per the exposition format (backslash, quote, newline).
+    fn prom_label(s: &str) -> String {
+        s.chars()
+            .flat_map(|c| match c {
+                '\\' => vec!['\\', '\\'],
+                '"' => vec!['\\', '"'],
+                '\n' => vec!['\\', 'n'],
+                c => vec![c],
+            })
+            .collect()
+    }
+    let entries = state.cache.entries();
+    out.push_str(
+        "# HELP silo_kernel_drift Per-kernel measured/modeled drift EWMA.\n\
+         # TYPE silo_kernel_drift gauge\n",
+    );
+    for (_, k, _) in &entries {
+        let c = *k.cal.lock().unwrap();
+        if c.samples > 0 {
+            out.push_str(&format!(
+                "silo_kernel_drift{{kernel=\"{}\",id=\"{}\"}} {}\n",
+                prom_label(&k.name),
+                k.id,
+                c.ratio
+            ));
+        }
+    }
+    out.push_str(
+        "# HELP silo_kernel_hw_ipc Per-kernel instructions-per-cycle EWMA (hardware counters).\n\
+         # TYPE silo_kernel_hw_ipc gauge\n",
+    );
+    for (_, k, _) in &entries {
+        if let Some(ipc) = k.hw.lock().unwrap().ipc {
+            out.push_str(&format!(
+                "silo_kernel_hw_ipc{{kernel=\"{}\",id=\"{}\"}} {ipc}\n",
+                prom_label(&k.name),
+                k.id
+            ));
+        }
+    }
+    out.push_str(
+        "# HELP silo_kernel_hw_miss_rate Per-kernel cache-miss-rate EWMA (hardware counters).\n\
+         # TYPE silo_kernel_hw_miss_rate gauge\n",
+    );
+    for (_, k, _) in &entries {
+        if let Some(mr) = k.hw.lock().unwrap().miss_rate {
+            out.push_str(&format!(
+                "silo_kernel_hw_miss_rate{{kernel=\"{}\",id=\"{}\"}} {mr}\n",
+                prom_label(&k.name),
+                k.id
+            ));
+        }
+    }
     // Per-endpoint latency histograms: one metric family, one series
     // set per endpoint, cumulative le buckets per the exposition spec.
     out.push_str(
@@ -772,6 +945,7 @@ fn prometheus_body(state: &ServiceState) -> String {
 }
 
 fn kernels_body(state: &ServiceState) -> String {
+    let hw_ok = crate::obs::perf::available();
     let list: Vec<Json> = state
         .cache
         .entries()
@@ -784,8 +958,23 @@ fn kernels_body(state: &ServiceState) -> String {
                 ("hits".into(), Json::Num(hits as f64)),
                 ("compile_ms".into(), Json::Num(k.compile_ms)),
             ];
-            if let Some(d) = *k.drift.lock().unwrap() {
-                fields.push(("drift".into(), Json::Num(d)));
+            let cal = *k.cal.lock().unwrap();
+            if cal.samples > 0 {
+                fields.push(("drift".into(), Json::Num(cal.ratio)));
+                fields.push(("drift_samples".into(), Json::Num(cal.samples as f64)));
+            }
+            if hw_ok {
+                let hw = k.hw.lock().unwrap();
+                if let Some(ipc) = hw.ipc {
+                    fields.push(("hw_ipc".into(), Json::Num(ipc)));
+                }
+                if let Some(mr) = hw.miss_rate {
+                    fields.push(("hw_miss_rate".into(), Json::Num(mr)));
+                }
+            } else {
+                // Explicit marker so a 0.0 miss rate can never mean
+                // "could not measure" on locked-down hosts.
+                fields.push(("hw".into(), Json::Str("unavailable".into())));
             }
             Json::Obj(fields)
         })
@@ -890,6 +1079,11 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
                 None => syms.push((s, new)),
             }
         }
+        // Retunes re-run the schedule search, so they only make sense
+        // for autotuned artifacts — and they need the unoptimized nest
+        // to search from (the cached program is already scheduled).
+        let pristine = (state.retune_drift.is_some() && spec_name == "auto")
+            .then(|| parsed.program.clone());
         Ok(ServedKernel {
             id: id.clone(),
             name: parsed.program.name.clone(),
@@ -902,11 +1096,14 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
                 .iter()
                 .map(|s| (*s, s.assumptions().min))
                 .collect(),
-            compiled,
+            artifact: Mutex::new(Arc::new(compiled)),
+            pristine,
             compile_ms: wall.as_secs_f64() * 1e3,
             syms,
             inspect_memo: Mutex::new(std::collections::HashMap::new()),
-            drift: Mutex::new(None),
+            cal: Mutex::new(crate::tuner::CalEwma::default()),
+            hw: Mutex::new(HwStats::default()),
+            retuning: AtomicBool::new(false),
         })
     });
     match outcome {
@@ -935,36 +1132,33 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
             return (400, error_body(&e));
         }
     };
+    let compiled = kernel.compiled();
     let reply = CompileReply {
         kernel: kernel.id.clone(),
         name: kernel.name.clone(),
         pipeline: kernel.spec.clone(),
         cached: outcome == Outcome::Hit,
         coalesced: outcome == Outcome::Coalesced,
-        passes: kernel
-            .compiled
+        passes: compiled
             .pipeline
             .as_ref()
             .map(|r| r.log.iter().map(|l| (l.pass.clone(), l.detail.clone())).collect())
             .unwrap_or_default(),
-        params: kernel.compiled.program.params.iter().map(|s| s.name().to_string()).collect(),
-        arguments: kernel
-            .compiled
+        params: compiled.program.params.iter().map(|s| s.name().to_string()).collect(),
+        arguments: compiled
             .program
             .containers
             .iter()
             .filter(|c| c.kind == ContainerKind::Argument)
             .map(|c| c.name.clone())
             .collect(),
-        tier: kernel.compiled.tier.as_str().to_string(),
-        unproven: kernel
-            .compiled
+        tier: compiled.tier.as_str().to_string(),
+        unproven: compiled
             .verify
             .as_ref()
             .map(|r| r.unproven().len() as u64)
             .unwrap_or(0),
-        fuel_bound: kernel
-            .compiled
+        fuel_bound: compiled
             .verify
             .as_ref()
             .and_then(|r| r.fuel_bound.as_ref())
@@ -973,7 +1167,7 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
     (200, reply.to_json().to_string())
 }
 
-fn run_endpoint(req: &Request, state: &ServiceState, id_str: &str) -> (u16, String) {
+fn run_endpoint(req: &Request, state: &Arc<ServiceState>, id_str: &str) -> (u16, String) {
     let Some(key) = cache::parse_kernel_id(id_str) else {
         return (404, error_body(&format!("malformed kernel id `{id_str}`")));
     };
@@ -1006,17 +1200,167 @@ fn run_endpoint(req: &Request, state: &ServiceState, id_str: &str) -> (u16, Stri
     }
 }
 
+/// Kick off at most one background re-tune of `kernel` (the observe→act
+/// close of the calibration loop). The `retuning` latch makes the worker
+/// single-flight per kernel; the latch clears — and the kernel's drift
+/// EWMA resets — only when the worker finishes, so a crossing triggers
+/// exactly one retune and post-swap drift re-accumulates against the
+/// live artifact from scratch (the min-sample gate then stops an
+/// immediate re-fire).
+fn spawn_retune(state: &Arc<ServiceState>, kernel: &Arc<ServedKernel>) {
+    if kernel
+        .retuning
+        .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+        .is_err()
+    {
+        return;
+    }
+    Metrics::bump(&state.metrics.retunes);
+    let state = Arc::clone(state);
+    let kernel = Arc::clone(kernel);
+    std::thread::spawn(move || {
+        // A panicking retune must neither take the daemon down nor wedge
+        // the latch shut forever.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            retune_kernel(&state, &kernel);
+        }));
+        *kernel.cal.lock().unwrap() = crate::tuner::CalEwma::default();
+        kernel.retuning.store(false, Ordering::SeqCst);
+    });
+}
+
+/// The retune body: re-run the schedule search from the pristine nest
+/// under this kernel's *own* measured calibration, prove the re-tuned
+/// artifact produces bitwise-identical outputs, and hot-swap it in. Any
+/// failure on this path simply keeps the old artifact serving — a
+/// background optimization must never degrade a working kernel.
+fn retune_kernel(state: &ServiceState, kernel: &ServedKernel) {
+    let Some(pristine) = &kernel.pristine else {
+        return;
+    };
+    let policy = if state.untrusted {
+        SafetyPolicy::Verified
+    } else {
+        SafetyPolicy::Trusted
+    };
+    let cal = kernel.cal.lock().unwrap().calibration();
+    let old = kernel.compiled();
+    // Bracket against the symbol registry so a concurrent eviction's
+    // deferred symbol release cannot run mid-search. Symbols the search
+    // interns (tile temporaries) are deliberately *not* scoped for
+    // release: the swapped-in artifact holds them, and their names are
+    // deterministic, so re-interning dedups and the table stays bounded.
+    state.syms.begin_compile();
+    let rebuilt = compile_program_calibrated(
+        pristine.clone(),
+        &PipelineSpec::Auto,
+        MemSchedules::default(),
+        policy,
+        cal,
+    );
+    state.syms.end_compile();
+    let Ok(new) = rebuilt else {
+        return;
+    };
+
+    // Differential gate under the kernel's Tiny preset binding: no
+    // binding, no proof, no swap.
+    let mut params: Vec<(Sym, i64)> = Vec::new();
+    for sym in &new.program.params {
+        let bound = kernel
+            .presets
+            .iter()
+            .find(|(s, _)| s == sym)
+            .and_then(|(_, b)| b.get(Preset::Tiny));
+        match bound {
+            Some(v) => params.push((*sym, v)),
+            None => return,
+        }
+    }
+    let mut arg_data: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut total: i64 = 0;
+    for c in &new.program.containers {
+        let Ok(n) = eval_int(&c.size, &params) else {
+            return;
+        };
+        total = total.checked_add(n).unwrap_or(i64::MAX);
+        if !(0..=(1 << 28)).contains(&n) || total > (1 << 28) {
+            return;
+        }
+        if c.kind != ContainerKind::Argument {
+            continue;
+        }
+        let data = (0..n as usize)
+            .map(|i| init_value_with(&kernel.inits, &c.name, i))
+            .collect();
+        arg_data.push((c.name.clone(), data));
+    }
+    // Old and new programs were optimized independently, so arguments
+    // are matched by name, not container id.
+    let bind = |prog: &crate::ir::Program| -> Option<Vec<(ContainerId, &[f64])>> {
+        arg_data
+            .iter()
+            .map(|(name, v)| prog.container_by_name(name).map(|id| (id, v.as_slice())))
+            .collect()
+    };
+    let (Some(old_refs), Some(new_refs)) = (bind(&old.program), bind(&new.program)) else {
+        return;
+    };
+    let limits = ExecLimits {
+        fuel: Some(state.fuel_limit),
+        wall: Some(std::time::Duration::from_millis(state.wall_ms)),
+    };
+    let Ok((old_out, _, _, _)) = old.execute_limited_tier(Tier::Vm, &params, &old_refs, 1, &limits)
+    else {
+        return;
+    };
+    let Ok((new_out, _, _, _)) = new.execute_limited_tier(Tier::Vm, &params, &new_refs, 1, &limits)
+    else {
+        return;
+    };
+    for (name, _) in &arg_data {
+        let (Some(a), Some(b)) = (old_out.by_name(name), new_out.by_name(name)) else {
+            return;
+        };
+        let identical =
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+        if !identical {
+            return;
+        }
+    }
+
+    // Did the calibrated search actually find a better schedule, or just
+    // re-confirm the old one? Counted either way the swap is safe — the
+    // new artifact is the search's pick under the *measured* scale.
+    let cm = crate::machine::clang();
+    let node = crate::machine::intel_node();
+    let improved = match (
+        crate::tuner::schedule_cost_with(&old.program, &cm, &node, cal),
+        crate::tuner::schedule_cost_with(&new.program, &cm, &node, cal),
+    ) {
+        (Ok(o), Ok(n)) => n.score < o.score,
+        _ => false,
+    };
+    if improved {
+        Metrics::bump(&state.metrics.retunes_improved);
+    }
+    *kernel.artifact.lock().unwrap() = Arc::new(new);
+}
+
 /// Bind params, materialize inputs, execute the cached VM, and shape the
 /// reply. Pre-execution failures are caller errors (HTTP 400); checked
 /// runs can additionally trap (HTTP 422 with a structured code).
 fn execute_run(
-    kernel: &ServedKernel,
+    kernel: &Arc<ServedKernel>,
     rreq: &RunRequest,
-    state: &ServiceState,
+    state: &Arc<ServiceState>,
 ) -> Result<RunReply, (u16, String)> {
     let caller = |m: String| (400u16, error_body(&m));
     let preset = Preset::parse(&rreq.preset).map_err(|e| caller(format!("{e:#}")))?;
-    let prog = &kernel.compiled.program;
+    // One artifact snapshot for the whole request: a concurrent retune
+    // swap must not change which artifact this run executes or reports.
+    let compiled = kernel.compiled();
+    let prog = &compiled.program;
 
     // Parameter bindings: explicit values win, preset annotations fill
     // the rest; anything unbound is an actionable error.
@@ -1164,23 +1508,35 @@ fn execute_run(
     // the storage; the other tiers go through the common dispatch. A
     // kernel with no speculation candidates degrades to the VM and the
     // reply says so, mirroring the native-tier convention.
+    // Hardware counters around the execution, where the host allows
+    // them. A failed open/start degrades to "no sample" — the /kernels
+    // and /metrics expositions mark the whole host `hw: unavailable`
+    // via the probe, so absence is explicit rather than zero.
+    let hw_group = crate::obs::perf::available()
+        .then(|| {
+            crate::obs::HwGroup::open()
+                .and_then(|g| g.start().map(|()| g))
+                .ok()
+        })
+        .flatten();
     let (storage, wall, fuel_used, ran_on, spec_stats) = if backend == Tier::Speculative {
-        let (storage, wall, fuel, stats) = kernel
-            .compiled
+        let (storage, wall, fuel, stats) = compiled
             .execute_speculative(&params, &refs, threads, &limits)
             .map_err(|e| trap_err(e))?;
-        let ran = if kernel.compiled.spec.is_some() { Tier::Speculative } else { Tier::Vm };
+        let ran = if compiled.spec.is_some() { Tier::Speculative } else { Tier::Vm };
         (storage, wall, fuel, ran, Some(stats))
     } else {
-        let (storage, wall, fuel, ran) = kernel
-            .compiled
+        let (storage, wall, fuel, ran) = compiled
             .execute_limited_tier(backend, &params, &refs, threads, &limits)
             .map_err(|e| trap_err(e))?;
         (storage, wall, fuel, ran, None)
     };
+    if let Some(counts) = hw_group.and_then(|g| g.stop().ok()) {
+        kernel.hw.lock().unwrap().fold(&counts);
+    }
     Metrics::bump(&state.metrics.runs);
     Metrics::add_time(&state.metrics.run_us_total, wall);
-    match kernel.compiled.tier {
+    match compiled.tier {
         SafetyTier::Proven => Metrics::bump(&state.metrics.runs_proven),
         SafetyTier::Checked => Metrics::bump(&state.metrics.runs_checked),
         SafetyTier::Trusted => {}
@@ -1191,24 +1547,32 @@ fn execute_run(
     }
     // Measured-latency feedback: this run's observed cycles per
     // iteration (wall × node GHz ÷ back-edges) over the artifact's
-    // modeled cycles per iteration, folded into the daemon-wide
-    // calibration EWMA and remembered per kernel as its drift. The
-    // smoothed ratio calibrates every subsequent autotuned compile and
-    // is exported as the `model_drift` gauge.
-    if fuel_used > 0 && kernel.compiled.modeled_cycles_per_iter > 0.0 {
+    // modeled cycles per iteration. The ratio folds into this kernel's
+    // *own* drift EWMA (keyed by content id — it calibrates retunes of
+    // this artifact and surfaces as `drift` in /kernels) and into the
+    // fuel-weighted daemon aggregate behind the `model_drift` gauge.
+    // When retuning is armed, a settled EWMA outside [1/R, R] kicks off
+    // the single-flight background retune of this artifact.
+    if fuel_used > 0 && compiled.modeled_cycles_per_iter > 0.0 {
         let node = crate::machine::intel_node();
         let measured = wall.as_secs_f64() * node.ghz * 1e9 / fuel_used as f64;
-        let ratio = measured / kernel.compiled.modeled_cycles_per_iter;
+        let ratio = measured / compiled.modeled_cycles_per_iter;
         if ratio.is_finite() && ratio > 0.0 {
             Metrics::bump(&state.metrics.cal_samples);
-            let mut cal = state.cal.lock().unwrap();
-            cal.ratio = if cal.samples == 0 {
-                ratio
-            } else {
-                0.7 * cal.ratio + 0.3 * ratio
+            state.cal.lock().unwrap().fold(ratio, fuel_used);
+            let settled = {
+                let mut cal = kernel.cal.lock().unwrap();
+                cal.fold(ratio);
+                *cal
             };
-            cal.samples += 1;
-            *kernel.drift.lock().unwrap() = Some(ratio);
+            if let Some(threshold) = state.retune_drift {
+                let drifted =
+                    settled.ratio >= threshold || settled.ratio <= 1.0 / threshold;
+                if settled.samples >= state.retune_min && drifted && kernel.pristine.is_some()
+                {
+                    spawn_retune(state, kernel);
+                }
+            }
         }
     }
     // Inspector: certify this binding's sequential loops, memoized per
@@ -1225,7 +1589,7 @@ fn execute_run(
             Some(l) => l,
             None => {
                 let rep = crate::inspect::inspect_program(
-                    &kernel.compiled.program,
+                    &compiled.program,
                     &params,
                     crate::inspect::DEFAULT_BUDGET,
                 );

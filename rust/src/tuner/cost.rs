@@ -67,6 +67,66 @@ impl CostCalibration {
     }
 }
 
+/// Exponentially-weighted running estimate of measured÷modeled cycle
+/// drift — the feedback half of the observe→act loop. Every measured
+/// run [`CalEwma::fold`]s its ratio in; [`CalEwma::calibration`] turns
+/// the current estimate into the [`CostCalibration`] the next compile
+/// of the *same* kernel uses. The daemon keeps one per cached artifact
+/// (per-kernel calibration, keyed by content id) plus a fuel-weighted
+/// aggregate for the global `model_drift` gauge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalEwma {
+    /// Current drift estimate (measured ÷ modeled; 1.0 = model exact).
+    pub ratio: f64,
+    /// Measured runs folded in so far.
+    pub samples: u64,
+}
+
+impl Default for CalEwma {
+    fn default() -> CalEwma {
+        CalEwma {
+            ratio: 1.0,
+            samples: 0,
+        }
+    }
+}
+
+impl CalEwma {
+    /// EWMA smoothing: how much one new measurement moves the estimate.
+    /// 0.3 converges in a handful of runs while one cold-cache outlier
+    /// can't whipsaw the calibration.
+    const ALPHA: f64 = 0.3;
+
+    /// Fold one measured÷modeled ratio in. Non-finite or non-positive
+    /// ratios are rejected outright (a poisoned sample must not poison
+    /// the estimate); the first accepted sample seeds the EWMA.
+    pub fn fold(&mut self, ratio: f64) -> bool {
+        if !ratio.is_finite() || ratio <= 0.0 {
+            return false;
+        }
+        self.ratio = if self.samples == 0 {
+            ratio
+        } else {
+            (1.0 - Self::ALPHA) * self.ratio + Self::ALPHA * ratio
+        };
+        self.samples += 1;
+        true
+    }
+
+    /// The calibration a recompile should use: identity until at least
+    /// one sample exists, then the estimate clamped to [1e-3, 1e3] so a
+    /// wild measurement can't collapse or explode every candidate score.
+    pub fn calibration(&self) -> CostCalibration {
+        if self.samples == 0 {
+            CostCalibration::identity()
+        } else {
+            CostCalibration {
+                scale: self.ratio.clamp(1e-3, 1e3),
+            }
+        }
+    }
+}
+
 /// Score `p`'s current schedule under a compiler + node model.
 pub fn schedule_cost(p: &Program, cm: &CompilerModel, node: &NodeModel) -> Result<ScheduleCost> {
     schedule_cost_with(p, cm, node, CostCalibration::identity())
@@ -197,5 +257,32 @@ mod tests {
                 CostCalibration::identity()
             );
         }
+    }
+
+    /// The EWMA seeds on the first sample, smooths afterwards, rejects
+    /// poisoned ratios, and clamps the derived calibration.
+    #[test]
+    fn ewma_folds_and_clamps() {
+        let mut e = CalEwma::default();
+        assert_eq!(e.calibration(), CostCalibration::identity());
+
+        assert!(e.fold(2.0));
+        assert_eq!(e.samples, 1);
+        assert!((e.ratio - 2.0).abs() < 1e-12, "first sample seeds");
+        assert!(e.fold(4.0));
+        assert!((e.ratio - (0.7 * 2.0 + 0.3 * 4.0)).abs() < 1e-12);
+
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let before = e;
+            assert!(!e.fold(bad));
+            assert_eq!(e, before, "rejected samples leave the estimate alone");
+        }
+
+        let mut wild = CalEwma::default();
+        wild.fold(1e9);
+        assert_eq!(wild.calibration().scale, 1e3);
+        let mut tiny = CalEwma::default();
+        tiny.fold(1e-9);
+        assert_eq!(tiny.calibration().scale, 1e-3);
     }
 }

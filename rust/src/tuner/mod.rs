@@ -44,7 +44,7 @@ use crate::symbolic::Sym;
 use crate::transforms::PipelineReport;
 
 pub use cost::{
-    parallel_speedup, schedule_cost, schedule_cost_with, CostCalibration, ScheduleCost,
+    parallel_speedup, schedule_cost, schedule_cost_with, CalEwma, CostCalibration, ScheduleCost,
 };
 pub use search::CandidateResult;
 pub use space::{Candidate, ParallelStrategy, SearchSpace};

@@ -7,11 +7,11 @@
 //!   its cap (flagged), and an uncapped run of the same program is the
 //!   capped run's prefix.
 
-use silo::coordinator::{profile_kernel, MemSchedules, OptConfig, PipelineSpec};
+use silo::coordinator::{profile_kernel, HwReport, MemSchedules, OptConfig, PipelineSpec};
 use silo::exec::{CollectingTracer, Vm};
 use silo::kernels::{resolve, Preset};
 use silo::native::Tier;
-use silo::obs::{chrome_trace_json, SpanEvent};
+use silo::obs::{chrome_trace_json, perf, SpanEvent};
 
 fn manifest_path(rel: &str) -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
@@ -70,8 +70,10 @@ fn profile_reports_exact_trip_counts_per_loop() {
         Preset::Tiny,
         1,
         Tier::Vm,
+        false,
     )
     .unwrap();
+    assert!(out.hw.is_none(), "no --hw, no hw report");
     assert!(out.trap.is_none(), "{:?}", out.trap);
     assert_eq!(out.backend, Tier::Vm);
     let by_var: Vec<(&str, u64, u64, u64)> = out
@@ -122,4 +124,57 @@ fn collecting_tracer_bounds_a_real_run() {
     assert_eq!(capped.events.len(), 10);
     assert!(capped.truncated);
     assert_eq!(capped.events[..], full.events[..10]);
+}
+
+/// `--hw` through the public driver: on hosts that can count, the report
+/// is `Sampled` with a real-run window and per-loop rows matching the
+/// trip-count loops; on hosts that deny `perf_event_open`, it is the
+/// explicit `Unavailable { reason }` — never zeros, never `None`.
+#[test]
+fn hw_profile_samples_or_degrades_explicitly() {
+    let out = profile_kernel(
+        "jacobi_1d",
+        &PipelineSpec::Config(OptConfig::None),
+        MemSchedules::default(),
+        Preset::Tiny,
+        1,
+        Tier::Vm,
+        true,
+    )
+    .unwrap();
+    assert!(out.trap.is_none(), "{:?}", out.trap);
+    let report = out.render();
+    assert!(report.contains("-- hardware counters --"), "{report}");
+    match out.hw.as_ref().expect("--hw must always produce a report") {
+        HwReport::Unavailable { reason } => {
+            assert!(!perf::available());
+            assert!(!reason.is_empty(), "denial must carry a reason");
+            assert!(report.contains("hw: unavailable ("), "{report}");
+        }
+        HwReport::Sampled { real, loops, partial, .. } => {
+            assert!(perf::available());
+            // The real run retired work; zeroed counters would mean the
+            // window never actually enabled.
+            assert!(real.instructions > 0, "{real:?}");
+            if partial.is_none() {
+                let vars: Vec<&str> = loops.iter().map(|l| l.var.as_str()).collect();
+                assert_eq!(vars, vec!["j1d_t", "j1d_i1", "j1d_i2"], "{vars:?}");
+            }
+        }
+    }
+}
+
+/// The probe is process-stable and `--hw` output agrees with it; the
+/// derived-rate contract (zero denominator → `None`) holds through the
+/// public surface.
+#[test]
+fn perf_probe_agrees_with_itself() {
+    assert_eq!(perf::available(), perf::available());
+    assert_eq!(perf::available(), perf::status().is_ok());
+    if let Err(reason) = perf::status() {
+        assert!(!reason.is_empty());
+    }
+    let zero = silo::obs::HwCounts::default();
+    assert_eq!(zero.ipc(), None);
+    assert_eq!(zero.miss_rate(), None);
 }

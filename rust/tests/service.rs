@@ -1014,3 +1014,114 @@ fn speculative_backend_traps_hostile_programs_with_422() {
     assert_eq!(metric(&m, "runs_checked"), 0, "a trapped run never completes: {m}");
     server.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// Adaptive recompilation: drift-triggered retune + hot swap
+// ---------------------------------------------------------------------------
+
+fn start_retuning(threshold: f64, min: u64) -> Server {
+    Server::serve(&ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        cache_cap: 16,
+        cache_shards: 1,
+        retune_drift: Some(threshold),
+        retune_min: min,
+        ..ServiceConfig::default()
+    })
+    .unwrap()
+}
+
+/// With an aggressive drift threshold, measured traffic triggers exactly
+/// one background retune (single-flight), the hot-swapped artifact's
+/// outputs are bitwise identical to the pre-swap artifact's, and the
+/// JSON and Prometheus expositions agree on the counter.
+#[test]
+fn drift_triggers_one_retune_and_swaps_bitwise() {
+    let server = start_retuning(1.000_001, 2);
+    let c = client(&server);
+    let source = "program svc_ret {\n  param svc_rt_N = { tiny: 64, small: 256, \
+                  medium: 1024 };\n  array A[svc_rt_N];\n  for (svc_rt_i = 0; svc_rt_i < \
+                  svc_rt_N; svc_rt_i += 1) {\n    A[svc_rt_i] = 0.5*A[svc_rt_i] + 2.0;\n  }\n}\n";
+    let reply = c.compile(source, "auto").unwrap();
+    let bits = |r: &silo::service::RunReply| -> Vec<u64> {
+        r.outputs[0].1.iter().map(|x| x.to_bits()).collect()
+    };
+    let pre = bits(&c.run(&reply.kernel, &RunRequest::default()).unwrap());
+
+    // Any measured ratio off exact 1.0 counts as drifted at this
+    // threshold, so the run that reaches the sample minimum fires. Stop
+    // at the first trigger: re-firing would need a whole new sample
+    // window, which this test never feeds.
+    for _ in 0..20 {
+        if metric(&c.metrics().unwrap(), "retunes") >= 1 {
+            break;
+        }
+        c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    }
+    assert_eq!(metric(&c.metrics().unwrap(), "retunes"), 1, "retune must fire exactly once");
+
+    // The worker resets the kernel's calibration window when it
+    // finishes (swap or not): `drift` leaving the listing is the
+    // completion signal.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let listing = c.kernels().unwrap();
+        let k = &listing.as_arr().unwrap()[0];
+        if k.get("drift").is_none() {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "retune worker never finished: {listing}");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+
+    // The swapped-in artifact must be observably the same function.
+    let post = bits(&c.run(&reply.kernel, &RunRequest::default()).unwrap());
+    assert_eq!(pre, post, "hot swap changed the kernel's outputs");
+
+    // The post-swap sample is below the minimum: still exactly one.
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "retunes"), 1, "{m}");
+    let prom = c.metrics_prometheus().unwrap();
+    let line = prom
+        .lines()
+        .find(|l| l.starts_with("silo_retunes_total "))
+        .unwrap_or_else(|| panic!("silo_retunes_total missing:\n{prom}"));
+    assert_eq!(line, "silo_retunes_total 1", "JSON and Prometheus disagree");
+    server.shutdown();
+}
+
+/// Without `--retune-drift` the observe→act loop stays observe-only:
+/// traffic never retunes. The hardware-counter surface is reported
+/// honestly either way — an explicit availability flag, and explicit
+/// `unavailable` markers (never zeros) on locked-down hosts.
+#[test]
+fn retune_requires_opt_in_and_hw_degrades_explicitly() {
+    let server = start(16, 1, 2);
+    let c = client(&server);
+    let source = "program svc_noret {\n  param svc_nr_N = { tiny: 32, small: 128, \
+                  medium: 512 };\n  array A[svc_nr_N];\n  for (svc_nr_i = 0; svc_nr_i < \
+                  svc_nr_N; svc_nr_i += 1) {\n    A[svc_nr_i] = 2.0*A[svc_nr_i];\n  }\n}\n";
+    let reply = c.compile(source, "auto").unwrap();
+    for _ in 0..4 {
+        c.run(&reply.kernel, &RunRequest::default()).unwrap();
+    }
+    let m = c.metrics().unwrap();
+    assert_eq!(metric(&m, "retunes"), 0, "retuning must be opt-in: {m}");
+    assert_eq!(metric(&m, "retunes_improved"), 0, "{m}");
+    let prom = c.metrics_prometheus().unwrap();
+    assert!(prom.lines().any(|l| l == "silo_retunes_total 0"), "{prom}");
+
+    let hw_ok = m.get("hw_available").and_then(Json::as_bool).unwrap();
+    assert_eq!(hw_ok, silo::obs::perf::available(), "{m}");
+    let listing = c.kernels().unwrap();
+    let k = &listing.as_arr().unwrap()[0];
+    if hw_ok {
+        assert!(m.get("hw").is_none(), "{m}");
+    } else {
+        assert_eq!(m.get("hw").and_then(Json::as_str), Some("unavailable"), "{m}");
+        assert_eq!(k.get("hw").and_then(Json::as_str), Some("unavailable"), "{listing}");
+        assert!(k.get("hw_ipc").is_none(), "zeros must never pose as measurements: {listing}");
+    }
+    server.shutdown();
+}
