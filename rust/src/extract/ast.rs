@@ -1,0 +1,125 @@
+//! Language-neutral source AST shared by the C and Fortran frontends.
+//!
+//! The frontends deliberately parse *more* than the liftable subset:
+//! constructs they recognize but cannot lift become [`SNode::Reject`]
+//! markers carrying the source line, the construct kind, and a
+//! human-readable reason. The lifter ([`super::lift`]) turns a reject
+//! inside a loop nest into a skip of the whole top-level nest, and a
+//! reject at function top level into an individual skip-report entry —
+//! extraction never silently drops or mis-lifts a construct.
+
+/// Source-level expression. Subscripted references keep one entry per
+/// subscript (`A[i][j]` in C, `A(i, j)` in Fortran); the lifter
+/// flattens them against the declared dims (row-major for C,
+/// column-major 1-based for Fortran).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SExpr {
+    Int(i64),
+    Real(f64),
+    Var(String),
+    Index { base: String, subs: Vec<SExpr> },
+    Bin(BOp, Box<SExpr>, Box<SExpr>),
+    Neg(Box<SExpr>),
+    Not(Box<SExpr>),
+    Call(String, Vec<SExpr>),
+    /// `x ** k` (Fortran only).
+    Pow(Box<SExpr>, Box<SExpr>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+/// A counted loop as written in the source. `cmp` keeps the original
+/// comparison (`Lt`/`Le` ascending, `Gt`/`Ge` descending; Fortran `DO`
+/// ranges are inclusive and arrive as `Le`/`Ge`); `step` is the signed
+/// constant increment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SLoop {
+    pub line: u32,
+    pub var: String,
+    pub start: SExpr,
+    pub cmp: BOp,
+    pub end: SExpr,
+    pub step: i64,
+    pub body: Vec<SNode>,
+}
+
+/// A statement inside a function body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SNode {
+    Loop(SLoop),
+    /// `base[subs...] (op)= rhs` — `op` is `Some` for compound
+    /// assignment (`+=` lifts as `base[subs] = base[subs] + rhs`).
+    Assign {
+        line: u32,
+        base: String,
+        subs: Vec<SExpr>,
+        op: Option<BOp>,
+        rhs: SExpr,
+    },
+    /// `if (cond) { then } else { els }` — lifted to statement guards.
+    If {
+        line: u32,
+        cond: SExpr,
+        then: Vec<SNode>,
+        els: Vec<SNode>,
+    },
+    /// A recognized-but-unliftable construct (see module doc).
+    Reject {
+        line: u32,
+        construct: String,
+        reason: String,
+    },
+}
+
+/// Classification of one function/subroutine parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PKind {
+    /// Scalar integer — becomes a SILO `param`.
+    Int,
+    /// Scalar floating-point — becomes a one-element argument container.
+    Scalar,
+    /// Array with declared extents — becomes an argument container.
+    Array { dims: Vec<SExpr> },
+    /// Pointer (or `[]`) with no declared extent: liftable only if
+    /// unused; any use rejects the nest (extent/aliasing unknown).
+    Pointer,
+    /// Recognized but unliftable type (integer arrays, `logical`, ...);
+    /// any use rejects the nest with this reason.
+    Other { reason: String },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SParam {
+    pub name: String,
+    pub kind: PKind,
+}
+
+/// One function (C) or subroutine (Fortran) with its body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SFunc {
+    pub name: String,
+    pub line: u32,
+    pub params: Vec<SParam>,
+    /// Local array declarations — become transient containers.
+    pub local_arrays: Vec<(String, Vec<SExpr>)>,
+    /// Local scalar names (loop counters aside, any value use rejects).
+    pub local_scalars: Vec<String>,
+    pub body: Vec<SNode>,
+    /// Fortran: subscripts are 1-based and flatten column-major.
+    pub one_based: bool,
+}

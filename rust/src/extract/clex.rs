@@ -1,0 +1,223 @@
+//! Tokenizer for the pragmatic C subset (`extract::cparse`).
+//!
+//! Line-tracking, dependency-free. Comments (`//`, `/* */`) and
+//! preprocessor lines (`#...`, with `\` continuation) are skipped;
+//! everything else becomes a token so the parser can name exactly what
+//! it refused in the skip report.
+
+/// One C token with its 1-based source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CTok {
+    pub tok: CT,
+    pub line: u32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CT {
+    Id(String),
+    Int(i64),
+    Real(f64),
+    Str(String),
+    /// Punctuation / operator, spelled exactly (`"+="`, `"&&"`, ...).
+    Op(&'static str),
+    /// A byte the lexer has no rule for (reported, never fatal).
+    Other(char),
+    Eof,
+}
+
+impl CT {
+    pub fn is_op(&self, s: &str) -> bool {
+        matches!(self, CT::Op(o) if *o == s)
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            CT::Id(s) => format!("`{s}`"),
+            CT::Int(v) => format!("integer `{v}`"),
+            CT::Real(v) => format!("number `{v}`"),
+            CT::Str(_) => "string literal".into(),
+            CT::Op(o) => format!("`{o}`"),
+            CT::Other(c) => format!("`{c}`"),
+            CT::Eof => "end of file".into(),
+        }
+    }
+}
+
+/// Multi-character operators first so maximal munch wins.
+const OPS: &[&str] = &[
+    "->", "++", "--", "+=", "-=", "*=", "/=", "%=", "<<", ">>", "<=", ">=", "==", "!=", "&&",
+    "||", "(", ")", "[", "]", "{", "}", ";", ",", "+", "-", "*", "/", "%", "=", "<", ">", "!",
+    "&", "|", "^", "?", ":", ".", "~",
+];
+
+/// Tokenize `src`. Never fails: unknown bytes become [`CT::Other`].
+pub fn lex(src: &str) -> Vec<CTok> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i] as char;
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Preprocessor line (only at logical line start is fine for the
+        // subset; being lenient here just skips more).
+        if c == '#' {
+            while i < b.len() && b[i] != b'\n' {
+                // `\`-continued preprocessor lines span newlines.
+                if b[i] == b'\\' && i + 1 < b.len() && b[i + 1] == b'\n' {
+                    line += 1;
+                    i += 2;
+                    continue;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            i += 2;
+            while i + 1 < b.len() && !(b[i] == b'*' && b[i + 1] == b'/') {
+                if b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i = (i + 2).min(b.len());
+            continue;
+        }
+        if c == '"' || c == '\'' {
+            let quote = b[i];
+            let start = i + 1;
+            i += 1;
+            while i < b.len() && b[i] != quote {
+                if b[i] == b'\\' {
+                    i += 1;
+                }
+                if i < b.len() && b[i] == b'\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            let s = String::from_utf8_lossy(&b[start..i.min(b.len())]).into_owned();
+            i = (i + 1).min(b.len());
+            toks.push(CTok { tok: CT::Str(s), line });
+            continue;
+        }
+        if c.is_ascii_digit() || (c == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit()) {
+            let (tok, len) = lex_number(&b[i..]);
+            toks.push(CTok { tok, line });
+            i += len;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            let s = String::from_utf8_lossy(&b[start..i]).into_owned();
+            toks.push(CTok { tok: CT::Id(s), line });
+            continue;
+        }
+        if let Some(op) = OPS.iter().find(|op| src[i..].starts_with(*op)) {
+            toks.push(CTok { tok: CT::Op(op), line });
+            i += op.len();
+            continue;
+        }
+        toks.push(CTok { tok: CT::Other(c), line });
+        i += 1;
+    }
+    toks.push(CTok { tok: CT::Eof, line });
+    toks
+}
+
+/// Lex one numeric literal (decimal or hex int, or float with optional
+/// exponent); trailing C suffixes (`u`, `l`, `f`) are consumed.
+fn lex_number(b: &[u8]) -> (CT, usize) {
+    let mut i = 0usize;
+    if b.len() > 1 && b[0] == b'0' && (b[1] == b'x' || b[1] == b'X') {
+        i = 2;
+        while i < b.len() && b[i].is_ascii_hexdigit() {
+            i += 1;
+        }
+        let v = i64::from_str_radix(&String::from_utf8_lossy(&b[2..i]), 16).unwrap_or(0);
+        while i < b.len() && matches!(b[i], b'u' | b'U' | b'l' | b'L') {
+            i += 1;
+        }
+        return (CT::Int(v), i);
+    }
+    let mut is_real = false;
+    while i < b.len() && b[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'.' {
+        is_real = true;
+        i += 1;
+        while i < b.len() && b[i].is_ascii_digit() {
+            i += 1;
+        }
+    }
+    if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+        let mut j = i + 1;
+        if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+            j += 1;
+        }
+        if j < b.len() && b[j].is_ascii_digit() {
+            is_real = true;
+            i = j;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+    }
+    let text = String::from_utf8_lossy(&b[..i]).into_owned();
+    let mut end = i;
+    while end < b.len() && matches!(b[end], b'f' | b'F' | b'u' | b'U' | b'l' | b'L') {
+        // A float suffix (`1.0f`) forces a real literal.
+        if matches!(b[end], b'f' | b'F') {
+            is_real = true;
+        }
+        end += 1;
+    }
+    if is_real {
+        (CT::Real(text.parse::<f64>().unwrap_or(0.0)), end)
+    } else {
+        (CT::Int(text.parse::<i64>().unwrap_or(0)), end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_ops_numbers_idents() {
+        let t = lex("for (i = 0; i < N; i += 2) u[i] *= 0.5; // c\n/* m */ 0x10");
+        let kinds: Vec<&CT> = t.iter().map(|t| &t.tok).collect();
+        assert!(kinds.contains(&&CT::Id("for".into())));
+        assert!(kinds.contains(&&CT::Op("+=")));
+        assert!(kinds.contains(&&CT::Op("*=")));
+        assert!(kinds.contains(&&CT::Real(0.5)));
+        assert!(kinds.contains(&&CT::Int(16)));
+        assert_eq!(t.last().unwrap().tok, CT::Eof);
+    }
+
+    #[test]
+    fn preprocessor_and_lines_tracked() {
+        let t = lex("#include <x.h>\nint a;\n");
+        assert_eq!(t[0].tok, CT::Id("int".into()));
+        assert_eq!(t[0].line, 2);
+    }
+}

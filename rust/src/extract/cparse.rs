@@ -1,0 +1,1175 @@
+//! Recursive-descent parser for the pragmatic C subset.
+//!
+//! Parses function definitions (`type name(params) { ... }`) whose
+//! bodies are built from counted `for` loops, `if`/`else` guards,
+//! (compound) assignments through array subscripts, and local
+//! declarations. Everything else it *recognizes and refuses*: the
+//! offending construct becomes an [`SNode::Reject`] (or a file-level
+//! skip) with its exact line and reason, and parsing continues after
+//! it — one hostile statement never loses the rest of the file.
+
+use super::ast::{BOp, PKind, SExpr, SFunc, SLoop, SNode, SParam};
+use super::clex::{lex, CT, CTok};
+use super::Skip;
+
+/// Parse a C translation unit into functions + file-level skips.
+pub fn parse_c(src: &str) -> (Vec<SFunc>, Vec<Skip>) {
+    let mut p = Parser {
+        toks: lex(src),
+        pos: 0,
+    };
+    let mut funcs = Vec::new();
+    let mut skips = Vec::new();
+    while !matches!(p.peek(), CT::Eof) {
+        if p.at_type_kw() {
+            match p.parse_function() {
+                Ok(Some(f)) => funcs.push(f),
+                Ok(None) => {}
+                Err(s) => {
+                    skips.push(s);
+                    p.recover_top();
+                }
+            }
+        } else {
+            // Typedefs, globals with odd shapes, stray tokens: skip the
+            // top-level item without failing the file.
+            p.recover_top();
+        }
+    }
+    (funcs, skips)
+}
+
+const TYPE_KWS: &[&str] = &[
+    "void", "int", "long", "short", "char", "float", "double", "unsigned", "signed", "const",
+    "static", "inline", "restrict", "register", "volatile", "extern", "size_t", "ssize_t",
+    "int32_t", "int64_t", "uint32_t", "uint64_t",
+];
+
+fn is_float_ty(specs: &[String]) -> bool {
+    specs.iter().any(|s| s == "float" || s == "double")
+}
+
+fn is_int_ty(specs: &[String]) -> bool {
+    !is_float_ty(specs)
+        && specs.iter().any(|s| {
+            matches!(
+                s.as_str(),
+                "int" | "long" | "short" | "char" | "size_t" | "ssize_t" | "int32_t" | "int64_t"
+                    | "uint32_t" | "uint64_t" | "unsigned" | "signed"
+            )
+        })
+}
+
+struct Parser {
+    toks: Vec<CTok>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &CT {
+        &self.toks[self.pos].tok
+    }
+
+    fn peek2(&self) -> &CT {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].tok
+    }
+
+    fn line(&self) -> u32 {
+        self.toks[self.pos].line
+    }
+
+    fn bump(&mut self) -> CTok {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat_op(&mut self, s: &str) -> bool {
+        if self.peek().is_op(s) {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn at_kw(&self, kw: &str) -> bool {
+        matches!(self.peek(), CT::Id(s) if s == kw)
+    }
+
+    fn at_type_kw(&self) -> bool {
+        matches!(self.peek(), CT::Id(s) if TYPE_KWS.contains(&s.as_str()))
+    }
+
+    fn skip(&self, line: u32, construct: &str, reason: String) -> Skip {
+        Skip {
+            line,
+            construct: construct.to_string(),
+            reason,
+        }
+    }
+
+    /// Consume one top-level item: to `;` at depth 0, or through a
+    /// balanced `{...}` once one opens.
+    fn recover_top(&mut self) {
+        let mut depth = 0usize;
+        loop {
+            match self.peek() {
+                CT::Eof => return,
+                CT::Op("{") => {
+                    depth += 1;
+                    self.bump();
+                }
+                CT::Op("}") => {
+                    self.bump();
+                    if depth <= 1 {
+                        return;
+                    }
+                    depth -= 1;
+                }
+                CT::Op(";") if depth == 0 => {
+                    self.bump();
+                    return;
+                }
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+    }
+
+    /// Consume to the next `;` at bracket depth 0 (stops before a `}`
+    /// closing the enclosing block).
+    fn recover_stmt(&mut self) {
+        let mut depth = 0usize;
+        loop {
+            match self.peek() {
+                CT::Eof => return,
+                CT::Op("(") | CT::Op("[") | CT::Op("{") => {
+                    depth += 1;
+                    self.bump();
+                }
+                CT::Op(")") | CT::Op("]") => {
+                    depth = depth.saturating_sub(1);
+                    self.bump();
+                }
+                CT::Op("}") => {
+                    if depth == 0 {
+                        return;
+                    }
+                    depth -= 1;
+                    self.bump();
+                }
+                CT::Op(";") if depth == 0 => {
+                    self.bump();
+                    return;
+                }
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+    }
+
+    /// Skip a statement or a balanced `{...}` block.
+    fn recover_stmt_or_block(&mut self) {
+        if self.peek().is_op("{") {
+            let mut depth = 0usize;
+            loop {
+                match self.peek() {
+                    CT::Eof => return,
+                    CT::Op("{") => {
+                        depth += 1;
+                        self.bump();
+                    }
+                    CT::Op("}") => {
+                        self.bump();
+                        if depth <= 1 {
+                            return;
+                        }
+                        depth -= 1;
+                    }
+                    _ => {
+                        self.bump();
+                    }
+                }
+            }
+        } else {
+            self.recover_stmt();
+        }
+    }
+
+    /// Skip a balanced `(...)` group (assumes the `(` is next).
+    fn recover_parens(&mut self) {
+        let mut depth = 0usize;
+        loop {
+            match self.peek() {
+                CT::Eof => return,
+                CT::Op("(") => {
+                    depth += 1;
+                    self.bump();
+                }
+                CT::Op(")") => {
+                    self.bump();
+                    if depth <= 1 {
+                        return;
+                    }
+                    depth -= 1;
+                }
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+    }
+
+    // -- declarations ------------------------------------------------------
+
+    fn take_specs(&mut self) -> Vec<String> {
+        let mut specs = Vec::new();
+        while self.at_type_kw() {
+            if let CT::Id(s) = self.bump().tok {
+                specs.push(s);
+            }
+        }
+        specs
+    }
+
+    /// `Some(f)` for a definition, `None` for prototypes/globals.
+    fn parse_function(&mut self) -> Result<Option<SFunc>, Skip> {
+        let line = self.line();
+        let specs = self.take_specs();
+        while self.eat_op("*") {}
+        let name = match self.bump().tok {
+            CT::Id(s) => s,
+            other => {
+                return Err(self.skip(
+                    line,
+                    "declaration",
+                    format!(
+                        "expected a name after `{}`, found {}",
+                        specs.join(" "),
+                        other.describe()
+                    ),
+                ))
+            }
+        };
+        if !self.peek().is_op("(") {
+            // Global variable — consume and move on.
+            self.recover_stmt();
+            return Ok(None);
+        }
+        self.bump();
+        let params = self.parse_params(&name, line)?;
+        if !self.eat_op(")") {
+            return Err(self.skip(
+                line,
+                "function",
+                format!("unclosed parameter list of `{name}`"),
+            ));
+        }
+        if self.eat_op(";") {
+            return Ok(None); // prototype
+        }
+        if !self.eat_op("{") {
+            return Err(self.skip(
+                line,
+                "function",
+                format!("expected `{{` to open the body of `{name}`"),
+            ));
+        }
+        let mut f = SFunc {
+            name,
+            line,
+            params,
+            local_arrays: Vec::new(),
+            local_scalars: Vec::new(),
+            body: Vec::new(),
+            one_based: false,
+        };
+        while !self.peek().is_op("}") {
+            if matches!(self.peek(), CT::Eof) {
+                return Err(self.skip(
+                    self.line(),
+                    "function",
+                    format!("unexpected end of file inside `{}`", f.name),
+                ));
+            }
+            let nodes = self.parse_stmt(&mut f);
+            f.body.extend(nodes);
+        }
+        self.bump(); // `}`
+        Ok(Some(f))
+    }
+
+    fn parse_params(&mut self, fname: &str, line: u32) -> Result<Vec<SParam>, Skip> {
+        let mut params = Vec::new();
+        if self.peek().is_op(")") {
+            return Ok(params);
+        }
+        if self.at_kw("void") && self.peek2().is_op(")") {
+            self.bump();
+            return Ok(params);
+        }
+        loop {
+            let specs = self.take_specs();
+            if specs.is_empty() {
+                return Err(self.skip(
+                    line,
+                    "function",
+                    format!("unsupported parameter of `{fname}` ({})", self.peek().describe()),
+                ));
+            }
+            let mut stars = 0;
+            while self.eat_op("*") {
+                stars += 1;
+                let _ = self.take_specs(); // `* const restrict`
+            }
+            let pname = match self.bump().tok {
+                CT::Id(s) => s,
+                other => {
+                    return Err(self.skip(
+                        line,
+                        "function",
+                        format!(
+                            "expected a parameter name in `{fname}`, found {}",
+                            other.describe()
+                        ),
+                    ))
+                }
+            };
+            let mut dims = Vec::new();
+            let mut open_dim = false;
+            while self.eat_op("[") {
+                if self.eat_op("]") {
+                    open_dim = true;
+                    continue;
+                }
+                // `double u[restrict N]` — qualifiers inside dims.
+                let _ = self.take_specs();
+                let d = self.parse_expr().map_err(|s| Skip {
+                    construct: "function".into(),
+                    reason: format!("parameter `{pname}` extent: {}", s.reason),
+                    ..s
+                })?;
+                if !self.eat_op("]") {
+                    let r = format!("unclosed extent of `{pname}`");
+                    return Err(self.skip(line, "function", r));
+                }
+                dims.push(d);
+            }
+            let kind = if stars > 0 || open_dim {
+                PKind::Pointer
+            } else if !dims.is_empty() {
+                if is_float_ty(&specs) {
+                    PKind::Array { dims }
+                } else {
+                    PKind::Other {
+                        reason: format!(
+                            "integer-typed array `{pname}` (lifted containers are f64)"
+                        ),
+                    }
+                }
+            } else if is_float_ty(&specs) {
+                PKind::Scalar
+            } else if is_int_ty(&specs) {
+                PKind::Int
+            } else {
+                return Err(self.skip(
+                    line,
+                    "function",
+                    format!(
+                        "parameter `{pname}` of `{fname}` has unsupported type `{}`",
+                        specs.join(" ")
+                    ),
+                ));
+            };
+            params.push(SParam { name: pname, kind });
+            if !self.eat_op(",") {
+                return Ok(params);
+            }
+        }
+    }
+
+    fn parse_local_decl(&mut self, f: &mut SFunc) -> Vec<SNode> {
+        let line = self.line();
+        let specs = self.take_specs();
+        let mut out = Vec::new();
+        loop {
+            let mut stars = 0;
+            while self.eat_op("*") {
+                stars += 1;
+            }
+            let name = match self.bump().tok {
+                CT::Id(s) => s,
+                other => {
+                    out.push(reject(line, "declaration", format!(
+                        "expected a name in the declaration, found {}",
+                        other.describe()
+                    )));
+                    self.recover_stmt();
+                    return out;
+                }
+            };
+            if stars > 0 {
+                out.push(reject(line, "pointer alias", format!(
+                    "local pointer `{name}` (aliasing not analyzable)"
+                )));
+                self.recover_stmt();
+                return out;
+            }
+            let mut dims = Vec::new();
+            while self.eat_op("[") {
+                match self.parse_expr() {
+                    Ok(d) => dims.push(d),
+                    Err(s) => {
+                        out.push(SNode::Reject {
+                            line: s.line,
+                            construct: "declaration".into(),
+                            reason: format!("extent of local array `{name}`: {}", s.reason),
+                        });
+                        self.recover_stmt();
+                        return out;
+                    }
+                }
+                if !self.eat_op("]") {
+                    out.push(reject(line, "declaration", format!("unclosed extent of `{name}`")));
+                    self.recover_stmt();
+                    return out;
+                }
+            }
+            if self.peek().is_op("=") {
+                if dims.is_empty() {
+                    // `int i = 0;` — counter-style; the initializer value
+                    // is irrelevant (loops re-assign), value uses reject.
+                    self.recover_stmt();
+                    f.local_scalars.push(name);
+                    return out;
+                }
+                out.push(reject(line, "declaration", format!(
+                    "initialized local array `{name}` (initializer lists are not liftable)"
+                )));
+                self.recover_stmt();
+                return out;
+            }
+            if dims.is_empty() {
+                f.local_scalars.push(name);
+            } else if is_float_ty(&specs) {
+                f.local_arrays.push((name, dims));
+            } else {
+                out.push(reject(
+                    line,
+                    "declaration",
+                    format!("integer-typed local array `{name}` (lifted containers are f64)"),
+                ));
+            }
+            if self.eat_op(",") {
+                continue;
+            }
+            if !self.eat_op(";") {
+                out.push(reject(line, "declaration", "malformed declaration".into()));
+                self.recover_stmt();
+            }
+            let _ = specs;
+            return out;
+        }
+    }
+
+    // -- statements --------------------------------------------------------
+
+    fn parse_stmt(&mut self, f: &mut SFunc) -> Vec<SNode> {
+        let line = self.line();
+        match self.peek().clone() {
+            CT::Op(";") => {
+                self.bump();
+                vec![]
+            }
+            CT::Op("{") => {
+                self.bump();
+                let mut v = Vec::new();
+                while !self.peek().is_op("}") && !matches!(self.peek(), CT::Eof) {
+                    v.extend(self.parse_stmt(f));
+                }
+                self.bump();
+                v
+            }
+            CT::Id(kw) if kw == "for" => vec![self.parse_for(f)],
+            CT::Id(kw) if kw == "if" => vec![self.parse_if(f)],
+            CT::Id(kw) if kw == "while" => {
+                self.bump();
+                self.recover_parens();
+                self.recover_stmt_or_block();
+                vec![reject(line, "while loop", "only counted `for` loops are liftable".into())]
+            }
+            CT::Id(kw) if kw == "do" => {
+                self.bump();
+                self.recover_stmt_or_block();
+                self.recover_stmt(); // `while (...);`
+                vec![reject(line, "do-while loop", "only counted `for` loops are liftable".into())]
+            }
+            CT::Id(kw) if kw == "switch" => {
+                self.bump();
+                self.recover_parens();
+                self.recover_stmt_or_block();
+                vec![reject(line, "switch statement", "control flow is not liftable".into())]
+            }
+            CT::Id(kw) if kw == "break" || kw == "continue" => {
+                self.bump();
+                self.recover_stmt();
+                vec![reject(
+                    line,
+                    &format!("{kw} statement"),
+                    "early exit makes the trip count data-dependent".into(),
+                )]
+            }
+            CT::Id(kw) if kw == "goto" => {
+                self.bump();
+                self.recover_stmt();
+                vec![reject(
+                    line,
+                    "goto statement",
+                    "unstructured control flow is not liftable".into(),
+                )]
+            }
+            CT::Id(kw) if kw == "return" => {
+                self.bump();
+                if self.eat_op(";") {
+                    vec![]
+                } else {
+                    self.recover_stmt();
+                    vec![reject(line, "return statement", "value returns are not liftable".into())]
+                }
+            }
+            CT::Id(_) if self.at_type_kw() => self.parse_local_decl(f),
+            CT::Id(name) => {
+                if self.peek2().is_op(":") {
+                    self.bump();
+                    self.bump();
+                    return vec![reject(line, "label", format!("label `{name}:` (goto target)"))];
+                }
+                vec![self.parse_assign()]
+            }
+            CT::Op("*") => {
+                self.recover_stmt();
+                vec![reject(
+                    line,
+                    "pointer store",
+                    "store through a pointer (aliasing unknown)".into(),
+                )]
+            }
+            other => {
+                self.recover_stmt();
+                let r = format!("unsupported statement starting with {}", other.describe());
+                vec![reject(line, "statement", r)]
+            }
+        }
+    }
+
+    fn parse_for(&mut self, f: &mut SFunc) -> SNode {
+        let line = self.line();
+        self.bump(); // `for`
+        if !self.eat_op("(") {
+            self.recover_stmt_or_block();
+            return reject(line, "for loop", "malformed `for` header".into());
+        }
+        let hdr = self.parse_for_header(line);
+        match hdr {
+            Ok((var, start, cmp, end, step)) => {
+                let body = self.parse_stmt(f);
+                SNode::Loop(SLoop {
+                    line,
+                    var,
+                    start,
+                    cmp,
+                    end,
+                    step,
+                    body,
+                })
+            }
+            Err(s) => {
+                // Abandon the header wherever it failed, then the body.
+                self.recover_parens_from_inside();
+                self.recover_stmt_or_block();
+                SNode::Reject {
+                    line: s.line,
+                    construct: s.construct,
+                    reason: s.reason,
+                }
+            }
+        }
+    }
+
+    /// Like [`recover_parens`] but already inside the group.
+    fn recover_parens_from_inside(&mut self) {
+        let mut depth = 1usize;
+        loop {
+            match self.peek() {
+                CT::Eof => return,
+                CT::Op("(") => {
+                    depth += 1;
+                    self.bump();
+                }
+                CT::Op(")") => {
+                    self.bump();
+                    depth -= 1;
+                    if depth == 0 {
+                        return;
+                    }
+                }
+                _ => {
+                    self.bump();
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn parse_for_header(&mut self, line: u32) -> Result<(String, SExpr, BOp, SExpr, i64), Skip> {
+        let _ = self.take_specs(); // `for (int i = ...`
+        let var = match self.bump().tok {
+            CT::Id(s) => s,
+            other => {
+                return Err(self.skip(line, "for loop", format!(
+                    "expected a loop variable, found {}",
+                    other.describe()
+                )))
+            }
+        };
+        if !self.eat_op("=") {
+            return Err(self.skip(line, "for loop", format!("expected `=` after `{var}`")));
+        }
+        let start = self.parse_expr()?;
+        if !self.eat_op(";") {
+            return Err(self.skip(line, "for loop", "expected `;` after the loop init".into()));
+        }
+        let cline = self.line();
+        let cvar = match self.bump().tok {
+            CT::Id(s) => s,
+            other => {
+                return Err(self.skip(cline, "loop condition", format!(
+                    "expected the loop variable, found {}",
+                    other.describe()
+                )))
+            }
+        };
+        if cvar != var {
+            return Err(self.skip(cline, "loop condition", format!(
+                "condition tests `{cvar}`, not the loop variable `{var}`"
+            )));
+        }
+        let cmp = match self.bump().tok {
+            CT::Op("<") => BOp::Lt,
+            CT::Op("<=") => BOp::Le,
+            CT::Op(">") => BOp::Gt,
+            CT::Op(">=") => BOp::Ge,
+            CT::Op("!=") | CT::Op("==") => {
+                return Err(self.skip(cline, "loop condition", format!(
+                    "`{var} !=`/`==` condition (iteration direction unknown)"
+                )))
+            }
+            other => {
+                return Err(self.skip(cline, "loop condition", format!(
+                    "expected a comparison, found {}",
+                    other.describe()
+                )))
+            }
+        };
+        let end = self.parse_expr()?;
+        if !self.eat_op(";") {
+            return Err(self.skip(
+                cline,
+                "for loop",
+                "expected `;` after the loop condition".into(),
+            ));
+        }
+        let sline = self.line();
+        let step = self.parse_for_step(&var, sline)?;
+        if step == 0 {
+            return Err(self.skip(sline, "loop stride", "zero stride never terminates".into()));
+        }
+        if !self.eat_op(")") {
+            return Err(self.skip(
+                sline,
+                "for loop",
+                "expected `)` to close the loop header".into(),
+            ));
+        }
+        Ok((var, start, cmp, end, step))
+    }
+
+    fn parse_for_step(&mut self, var: &str, line: u32) -> Result<i64, Skip> {
+        // Prefix `++i` / `--i`.
+        if self.peek().is_op("++") || self.peek().is_op("--") {
+            let sign = if self.bump().tok.is_op("++") { 1 } else { -1 };
+            match self.bump().tok {
+                CT::Id(s) if s == var => return Ok(sign),
+                _ => {
+                    return Err(self.skip(line, "loop stride", format!(
+                        "step must update the loop variable `{var}`"
+                    )))
+                }
+            }
+        }
+        match self.bump().tok {
+            CT::Id(s) if s == var => {}
+            other => {
+                return Err(self.skip(line, "loop stride", format!(
+                    "step must update `{var}`, found {}",
+                    other.describe()
+                )))
+            }
+        }
+        let op = self.bump().tok;
+        match op {
+            CT::Op("++") => Ok(1),
+            CT::Op("--") => Ok(-1),
+            CT::Op("+=") | CT::Op("-=") => {
+                let sign = if op.is_op("+=") { 1 } else { -1 };
+                match self.step_constant() {
+                    Some(v) => Ok(sign * v),
+                    None => Err(self.skip(line, "loop stride", format!(
+                        "symbolic stride `{var} {}= ...` (not a compile-time constant)",
+                        if sign > 0 { '+' } else { '-' }
+                    ))),
+                }
+            }
+            CT::Op("*=") | CT::Op("/=") | CT::Op("%=") | CT::Op("<<") | CT::Op(">>") => {
+                let o = match op {
+                    CT::Op(o) => o,
+                    _ => unreachable!(),
+                };
+                Err(self.skip(line, "loop stride", format!(
+                    "multiplicative stride `{var} {o} ...` is not affine"
+                )))
+            }
+            CT::Op("=") => {
+                // `i = i + 2` / `i = i - 2`.
+                let ok = matches!(self.bump().tok, CT::Id(s) if s == var);
+                let sign = if self.eat_op("+") {
+                    1
+                } else if self.eat_op("-") {
+                    -1
+                } else {
+                    0
+                };
+                match (ok, sign, self.step_constant()) {
+                    (true, s, Some(v)) if s != 0 => Ok(s * v),
+                    _ => Err(self.skip(line, "loop stride", format!(
+                        "stride of `{var}` is not a constant additive update"
+                    ))),
+                }
+            }
+            other => Err(self.skip(line, "loop stride", format!(
+                "unsupported loop step ({})",
+                other.describe()
+            ))),
+        }
+    }
+
+    /// A (possibly negated) integer literal, or `None`.
+    fn step_constant(&mut self) -> Option<i64> {
+        let neg = self.eat_op("-");
+        match self.peek().clone() {
+            CT::Int(v) if self.peek2().is_op(")") => {
+                self.bump();
+                Some(if neg { -v } else { v })
+            }
+            _ => None,
+        }
+    }
+
+    fn parse_if(&mut self, f: &mut SFunc) -> SNode {
+        let line = self.line();
+        self.bump(); // `if`
+        if !self.eat_op("(") {
+            self.recover_stmt_or_block();
+            return reject(line, "if statement", "malformed `if` condition".into());
+        }
+        let cond = match self.parse_expr() {
+            Ok(c) => c,
+            Err(s) => {
+                self.recover_parens_from_inside();
+                self.recover_stmt_or_block();
+                if self.at_kw("else") {
+                    self.bump();
+                    self.recover_stmt_or_block();
+                }
+                return SNode::Reject {
+                    line: s.line,
+                    construct: "if condition".into(),
+                    reason: s.reason,
+                };
+            }
+        };
+        if !self.eat_op(")") {
+            self.recover_parens_from_inside();
+            self.recover_stmt_or_block();
+            return reject(line, "if statement", "unclosed `if` condition".into());
+        }
+        let then = self.parse_stmt(f);
+        let els = if self.at_kw("else") {
+            self.bump();
+            self.parse_stmt(f)
+        } else {
+            Vec::new()
+        };
+        SNode::If {
+            line,
+            cond,
+            then,
+            els,
+        }
+    }
+
+    fn parse_assign(&mut self) -> SNode {
+        let line = self.line();
+        let base = match self.bump().tok {
+            CT::Id(s) => s,
+            _ => unreachable!("caller dispatched on an identifier"),
+        };
+        if self.peek().is_op("(") {
+            self.recover_stmt();
+            return reject(line, "call statement", format!(
+                "call to `{base}(...)` has unknown effects"
+            ));
+        }
+        if self.peek().is_op(".") || self.peek().is_op("->") {
+            self.recover_stmt();
+            return reject(line, "struct access", format!(
+                "member access on `{base}` is not liftable"
+            ));
+        }
+        let mut subs = Vec::new();
+        while self.eat_op("[") {
+            match self.parse_expr() {
+                Ok(e) => subs.push(e),
+                Err(s) => {
+                    self.recover_stmt();
+                    return SNode::Reject {
+                        line: s.line,
+                        construct: "subscript".into(),
+                        reason: s.reason,
+                    };
+                }
+            }
+            if !self.eat_op("]") {
+                self.recover_stmt();
+                return reject(line, "subscript", format!("unclosed subscript of `{base}`"));
+            }
+        }
+        let op = match self.bump().tok {
+            CT::Op("=") => None,
+            CT::Op("+=") => Some(BOp::Add),
+            CT::Op("-=") => Some(BOp::Sub),
+            CT::Op("*=") => Some(BOp::Mul),
+            CT::Op("/=") => Some(BOp::Div),
+            CT::Op("%=") => Some(BOp::Mod),
+            CT::Op("++") => {
+                if !self.eat_op(";") {
+                    self.recover_stmt();
+                }
+                return assign_or_scalar(line, base, subs, Some(BOp::Add), SExpr::Int(1));
+            }
+            CT::Op("--") => {
+                if !self.eat_op(";") {
+                    self.recover_stmt();
+                }
+                return assign_or_scalar(line, base, subs, Some(BOp::Sub), SExpr::Int(1));
+            }
+            other => {
+                self.recover_stmt();
+                return reject(line, "statement", format!(
+                    "unsupported statement (`{base}` followed by {})",
+                    other.describe()
+                ));
+            }
+        };
+        let rhs = match self.parse_expr() {
+            Ok(e) => e,
+            Err(s) => {
+                self.recover_stmt();
+                return SNode::Reject {
+                    line: s.line,
+                    construct: "assignment".into(),
+                    reason: s.reason,
+                };
+            }
+        };
+        if !self.eat_op(";") {
+            self.recover_stmt();
+            return reject(line, "assignment", "expected `;` after the assignment".into());
+        }
+        assign_or_scalar(line, base, subs, op, rhs)
+    }
+
+    // -- expressions -------------------------------------------------------
+
+    fn parse_expr(&mut self) -> Result<SExpr, Skip> {
+        let e = self.parse_or()?;
+        if self.peek().is_op("?") {
+            return Err(self.skip(self.line(), "expression", "conditional `?:` expression".into()));
+        }
+        Ok(e)
+    }
+
+    fn parse_or(&mut self) -> Result<SExpr, Skip> {
+        let mut e = self.parse_and()?;
+        while self.eat_op("||") {
+            e = SExpr::Bin(BOp::Or, Box::new(e), Box::new(self.parse_and()?));
+        }
+        Ok(e)
+    }
+
+    fn parse_and(&mut self) -> Result<SExpr, Skip> {
+        let mut e = self.parse_eq()?;
+        while self.eat_op("&&") {
+            e = SExpr::Bin(BOp::And, Box::new(e), Box::new(self.parse_eq()?));
+        }
+        Ok(e)
+    }
+
+    fn parse_eq(&mut self) -> Result<SExpr, Skip> {
+        let mut e = self.parse_rel()?;
+        loop {
+            let op = if self.eat_op("==") {
+                BOp::Eq
+            } else if self.eat_op("!=") {
+                BOp::Ne
+            } else {
+                return Ok(e);
+            };
+            e = SExpr::Bin(op, Box::new(e), Box::new(self.parse_rel()?));
+        }
+    }
+
+    fn parse_rel(&mut self) -> Result<SExpr, Skip> {
+        let mut e = self.parse_add()?;
+        loop {
+            let op = if self.eat_op("<") {
+                BOp::Lt
+            } else if self.eat_op("<=") {
+                BOp::Le
+            } else if self.eat_op(">") {
+                BOp::Gt
+            } else if self.eat_op(">=") {
+                BOp::Ge
+            } else {
+                return Ok(e);
+            };
+            e = SExpr::Bin(op, Box::new(e), Box::new(self.parse_add()?));
+        }
+    }
+
+    fn parse_add(&mut self) -> Result<SExpr, Skip> {
+        let mut e = self.parse_mul()?;
+        loop {
+            let op = if self.eat_op("+") {
+                BOp::Add
+            } else if self.eat_op("-") {
+                BOp::Sub
+            } else {
+                return Ok(e);
+            };
+            e = SExpr::Bin(op, Box::new(e), Box::new(self.parse_mul()?));
+        }
+    }
+
+    fn parse_mul(&mut self) -> Result<SExpr, Skip> {
+        let mut e = self.parse_unary()?;
+        loop {
+            let op = if self.eat_op("*") {
+                BOp::Mul
+            } else if self.eat_op("/") {
+                BOp::Div
+            } else if self.eat_op("%") {
+                BOp::Mod
+            } else {
+                return Ok(e);
+            };
+            e = SExpr::Bin(op, Box::new(e), Box::new(self.parse_unary()?));
+        }
+    }
+
+    fn parse_unary(&mut self) -> Result<SExpr, Skip> {
+        let line = self.line();
+        if self.eat_op("-") {
+            return Ok(SExpr::Neg(Box::new(self.parse_unary()?)));
+        }
+        if self.eat_op("+") {
+            return self.parse_unary();
+        }
+        if self.eat_op("!") {
+            return Ok(SExpr::Not(Box::new(self.parse_unary()?)));
+        }
+        if self.peek().is_op("&") {
+            return Err(self.skip(line, "expression", "address-of `&` (pointer aliasing)".into()));
+        }
+        if self.peek().is_op("*") {
+            return Err(self.skip(line, "expression", "pointer dereference `*`".into()));
+        }
+        if self.peek().is_op("(")
+            && matches!(self.peek2(), CT::Id(s) if TYPE_KWS.contains(&s.as_str()))
+        {
+            return Err(self.skip(line, "expression", "cast expression".into()));
+        }
+        self.parse_postfix()
+    }
+
+    fn parse_postfix(&mut self) -> Result<SExpr, Skip> {
+        let line = self.line();
+        let prim = match self.bump().tok {
+            CT::Int(v) => return Ok(SExpr::Int(v)),
+            CT::Real(v) => return Ok(SExpr::Real(v)),
+            CT::Op("(") => {
+                let e = self.parse_expr()?;
+                if !self.eat_op(")") {
+                    return Err(self.skip(line, "expression", "unclosed parenthesis".into()));
+                }
+                if self.peek().is_op("[") {
+                    return Err(self.skip(
+                        line,
+                        "expression",
+                        "subscript of a computed base".into(),
+                    ));
+                }
+                return Ok(e);
+            }
+            CT::Id(s) => s,
+            CT::Str(_) => {
+                return Err(self.skip(line, "expression", "string literal".into()));
+            }
+            other => {
+                return Err(self.skip(line, "expression", format!(
+                    "expected an expression, found {}",
+                    other.describe()
+                )))
+            }
+        };
+        if self.peek().is_op("(") {
+            self.bump();
+            let mut args = Vec::new();
+            if !self.peek().is_op(")") {
+                loop {
+                    args.push(self.parse_expr()?);
+                    if !self.eat_op(",") {
+                        break;
+                    }
+                }
+            }
+            if !self.eat_op(")") {
+                return Err(self.skip(line, "expression", format!("unclosed call to `{prim}`")));
+            }
+            if self.peek().is_op("[") {
+                return Err(self.skip(line, "expression", format!(
+                    "subscript of a call result `{prim}(...)[...]`"
+                )));
+            }
+            return Ok(SExpr::Call(prim, args));
+        }
+        let mut subs = Vec::new();
+        while self.eat_op("[") {
+            subs.push(self.parse_expr()?);
+            if !self.eat_op("]") {
+                let r = format!("unclosed subscript of `{prim}`");
+                return Err(self.skip(line, "expression", r));
+            }
+        }
+        if self.peek().is_op(".") || self.peek().is_op("->") {
+            return Err(self.skip(line, "expression", format!("member access on `{prim}`")));
+        }
+        if subs.is_empty() {
+            Ok(SExpr::Var(prim))
+        } else {
+            Ok(SExpr::Index {
+                base: prim,
+                subs,
+            })
+        }
+    }
+}
+
+fn reject(line: u32, construct: &str, reason: String) -> SNode {
+    SNode::Reject {
+        line,
+        construct: construct.to_string(),
+        reason,
+    }
+}
+
+fn assign_or_scalar(
+    line: u32,
+    base: String,
+    subs: Vec<SExpr>,
+    op: Option<BOp>,
+    rhs: SExpr,
+) -> SNode {
+    if subs.is_empty() {
+        return reject(line, "scalar assignment", format!(
+            "assignment to scalar `{base}` is not single-assignment over a container"
+        ));
+    }
+    SNode::Assign {
+        line,
+        base,
+        subs,
+        op,
+        rhs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_simple_stencil() {
+        let src = "void st(int N, double u[N], double out[N]) {\n\
+                   for (int i = 1; i < N - 1; i++)\n\
+                   out[i] = 0.5*u[i-1] + 0.5*u[i+1];\n}\n";
+        let (fs, skips) = parse_c(src);
+        assert!(skips.is_empty(), "{skips:?}");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(fs[0].params.len(), 3);
+        assert!(matches!(fs[0].body[0], SNode::Loop(_)));
+    }
+
+    #[test]
+    fn multiplicative_stride_rejects_with_line() {
+        let src = "void f(int N, double a[N]) {\n  for (int i = 1; i < N; i *= 2) {\n    \
+                   a[i] = 0.0;\n  }\n  a[0] = 1.0;\n}\n";
+        let (fs, _) = parse_c(src);
+        assert_eq!(fs.len(), 1);
+        match &fs[0].body[0] {
+            SNode::Reject {
+                line,
+                construct,
+                reason,
+            } => {
+                assert_eq!(*line, 2);
+                assert_eq!(construct, "loop stride");
+                assert!(reason.contains("*="), "{reason}");
+            }
+            other => panic!("expected reject, got {other:?}"),
+        }
+        // Recovery: the assignment after the hostile loop still parses.
+        assert!(matches!(fs[0].body[1], SNode::Assign { .. }), "{:?}", fs[0].body);
+    }
+
+    #[test]
+    fn break_and_goto_reject() {
+        let src = "void f(int N, double a[N]) {\n  for (int i = 0; i < N; i++) {\n    \
+                   if (a[i] > 3.0) break;\n    a[i] = 1.0;\n  }\n}\n";
+        let (fs, _) = parse_c(src);
+        let SNode::Loop(l) = &fs[0].body[0] else {
+            panic!("expected loop");
+        };
+        let SNode::If { then, .. } = &l.body[0] else {
+            panic!("expected if, got {:?}", l.body[0]);
+        };
+        assert!(
+            matches!(&then[0], SNode::Reject { construct, .. } if construct == "break statement")
+        );
+    }
+}

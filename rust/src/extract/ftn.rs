@@ -1,0 +1,1256 @@
+//! Fortran frontend: fixed-form (`.f`) and free-form (`.f90`)
+//! subroutines with counted `DO` loops.
+//!
+//! Line-oriented: physical lines are assembled into logical statements
+//! (column-6 continuation in fixed form, trailing `&` in free form,
+//! comments stripped), then each statement is classified. Subscripts
+//! are 1-based and flatten column-major ([`SFunc::one_based`]); `DO`
+//! bounds are inclusive and arrive as `Le`/`Ge` loops. Unsupported
+//! statements become [`SNode::Reject`] markers exactly like the C
+//! frontend's, so the lifter applies one skip policy to both.
+
+use std::collections::HashSet;
+
+use super::ast::{BOp, PKind, SExpr, SFunc, SLoop, SNode, SParam};
+use super::Skip;
+
+/// Parse Fortran source into subroutines + file-level skips.
+pub fn parse_fortran(src: &str, fixed_form: bool) -> (Vec<SFunc>, Vec<Skip>) {
+    let stmts = if fixed_form {
+        logical_fixed(src)
+    } else {
+        logical_free(src)
+    };
+    Driver::default().run(&stmts)
+}
+
+/// One logical statement: first physical line, optional label, text.
+struct FStmt {
+    line: u32,
+    label: Option<u32>,
+    text: String,
+}
+
+fn logical_fixed(src: &str) -> Vec<FStmt> {
+    let mut out: Vec<FStmt> = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let line = i as u32 + 1;
+        let first = raw.chars().next().unwrap_or(' ');
+        if matches!(first, 'c' | 'C' | '*' | '!') || raw.trim().is_empty() {
+            continue;
+        }
+        let chars: Vec<char> = raw.chars().collect();
+        let body: String = chars[6.min(chars.len())..72.min(chars.len())]
+            .iter()
+            .collect();
+        let body = strip_bang(&body);
+        let cont = chars.len() > 5 && chars[5] != ' ' && chars[5] != '0';
+        if cont {
+            if let Some(prev) = out.last_mut() {
+                prev.text.push(' ');
+                prev.text.push_str(body.trim());
+                continue;
+            }
+        }
+        let label_field: String = chars[..5.min(chars.len())].iter().collect();
+        let label = label_field.trim().parse::<u32>().ok();
+        out.push(FStmt {
+            line,
+            label,
+            text: body.trim().to_ascii_lowercase(),
+        });
+    }
+    out
+}
+
+fn logical_free(src: &str) -> Vec<FStmt> {
+    let mut out: Vec<FStmt> = Vec::new();
+    let mut pending_cont = false;
+    for (i, raw) in src.lines().enumerate() {
+        let line = i as u32 + 1;
+        let t = strip_bang(raw);
+        let mut t = t.trim().to_string();
+        if t.is_empty() {
+            continue;
+        }
+        let cont_next = t.ends_with('&');
+        if cont_next {
+            t.truncate(t.len() - 1);
+        }
+        if pending_cont {
+            let t = t.strip_prefix('&').unwrap_or(&t);
+            if let Some(prev) = out.last_mut() {
+                prev.text.push(' ');
+                prev.text.push_str(t.trim());
+            }
+        } else {
+            // Optional leading numeric statement label.
+            let (label, rest) = match t.split_once(' ') {
+                Some((head, rest))
+                    if head.chars().all(|c| c.is_ascii_digit()) && !head.is_empty() =>
+                {
+                    (head.parse::<u32>().ok(), rest.trim().to_string())
+                }
+                _ => (None, t.clone()),
+            };
+            out.push(FStmt {
+                line,
+                label,
+                text: rest.to_ascii_lowercase(),
+            });
+        }
+        pending_cont = cont_next;
+    }
+    out
+}
+
+fn strip_bang(s: &str) -> String {
+    match s.find('!') {
+        Some(i) => s[..i].to_string(),
+        None => s.to_string(),
+    }
+}
+
+// -- statement tokens --------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum FT {
+    Id(String),
+    Int(i64),
+    Real(f64),
+    Op(&'static str),
+    Dot(String),
+    Other(char),
+    End,
+}
+
+const FOPS: &[&str] = &[
+    "::", "**", "<=", ">=", "==", "/=", "(", ")", ",", "+", "-", "*", "/", "=", "<", ">", ":",
+];
+
+fn flex(text: &str) -> Vec<FT> {
+    let b = text.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i] as char;
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '.' && i + 1 < b.len() && (b[i + 1] as char).is_ascii_alphabetic() {
+            if let Some(end) = text[i + 1..].find('.') {
+                let word = &text[i + 1..i + 1 + end];
+                toks.push(FT::Dot(word.to_string()));
+                i += end + 2;
+                continue;
+            }
+        }
+        if c.is_ascii_digit() || (c == '.' && i + 1 < b.len() && b[i + 1].is_ascii_digit()) {
+            let (t, n) = flex_number(&text[i..]);
+            toks.push(t);
+            i += n;
+            continue;
+        }
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            toks.push(FT::Id(text[start..i].to_string()));
+            continue;
+        }
+        if let Some(op) = FOPS.iter().find(|op| text[i..].starts_with(*op)) {
+            toks.push(FT::Op(op));
+            i += op.len();
+            continue;
+        }
+        toks.push(FT::Other(c));
+        i += 1;
+    }
+    toks.push(FT::End);
+    toks
+}
+
+/// Fortran numeric literal: `12`, `1.5`, `1.d0`, `2.5e-3`, `4.0_8`.
+fn flex_number(s: &str) -> (FT, usize) {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    let mut is_real = false;
+    while i < b.len() && b[i].is_ascii_digit() {
+        i += 1;
+    }
+    if i < b.len() && b[i] == b'.' {
+        // Not a dot-operator (`.and.`): only a real point if followed by
+        // a digit, `d`/`e` exponent, or end-of-number context.
+        let next = b.get(i + 1).copied().map(|c| c as char);
+        let looks_real = match next {
+            Some(c) if c.is_ascii_digit() => true,
+            Some('d') | Some('D') | Some('e') | Some('E') => true,
+            _ => {
+                // `1.` at end or before an operator.
+                !matches!(next, Some(c) if c.is_ascii_alphabetic())
+            }
+        };
+        if looks_real {
+            is_real = true;
+            i += 1;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+    }
+    if i < b.len() && matches!(b[i], b'd' | b'D' | b'e' | b'E') {
+        let mut j = i + 1;
+        if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+            j += 1;
+        }
+        if j < b.len() && b[j].is_ascii_digit() {
+            is_real = true;
+            i = j;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+    }
+    let text: String = s[..i].replace(['d', 'D'], "e");
+    let mut end = i;
+    if end < b.len() && b[end] == b'_' {
+        end += 1;
+        while end < b.len() && b[end].is_ascii_alphanumeric() {
+            end += 1;
+        }
+    }
+    if is_real {
+        (FT::Real(text.parse::<f64>().unwrap_or(0.0)), end)
+    } else {
+        (FT::Int(text.parse::<i64>().unwrap_or(0)), end)
+    }
+}
+
+// -- driver ------------------------------------------------------------------
+
+enum Frame {
+    Do {
+        line: u32,
+        var: String,
+        start: SExpr,
+        cmp: BOp,
+        end: SExpr,
+        step: i64,
+        label: Option<u32>,
+        body: Vec<SNode>,
+        poison: Option<(String, String)>,
+    },
+    If {
+        line: u32,
+        cond: Option<SExpr>,
+        then: Vec<SNode>,
+        els: Vec<SNode>,
+        in_else: bool,
+        poison: Option<(String, String)>,
+    },
+}
+
+#[derive(Default)]
+struct Driver {
+    funcs: Vec<SFunc>,
+    skips: Vec<Skip>,
+    cur: Option<SFunc>,
+    stack: Vec<Frame>,
+    arrays: HashSet<String>,
+    /// Inside an unsupported `function`/`program` unit until `end`.
+    skipping_unit: bool,
+}
+
+impl Driver {
+    fn run(mut self, stmts: &[FStmt]) -> (Vec<SFunc>, Vec<Skip>) {
+        for s in stmts {
+            self.stmt(s);
+        }
+        if let Some(f) = self.cur.take() {
+            self.skips.push(Skip {
+                line: f.line,
+                construct: "subroutine".into(),
+                reason: format!("`{}` has no `end subroutine`", f.name),
+            });
+        }
+        (self.funcs, self.skips)
+    }
+
+    fn push_node(&mut self, n: SNode) {
+        match self.stack.last_mut() {
+            Some(Frame::Do { body, .. }) => body.push(n),
+            Some(Frame::If {
+                then,
+                els,
+                in_else,
+                ..
+            }) => {
+                if *in_else {
+                    els.push(n)
+                } else {
+                    then.push(n)
+                }
+            }
+            None => {
+                if let Some(f) = self.cur.as_mut() {
+                    f.body.push(n);
+                }
+            }
+        }
+    }
+
+    fn reject(&mut self, line: u32, construct: &str, reason: String) {
+        self.push_node(SNode::Reject {
+            line,
+            construct: construct.to_string(),
+            reason,
+        });
+    }
+
+    fn stmt(&mut self, s: &FStmt) {
+        let toks = flex(&s.text);
+        let head = match &toks[0] {
+            FT::Id(w) => w.clone(),
+            FT::End => return,
+            _ => String::new(),
+        };
+        if self.skipping_unit {
+            if head == "end"
+                && matches!(
+                    toks.get(1),
+                    Some(FT::End) | Some(FT::Id(_))
+                )
+            {
+                let second = matches!(&toks[1], FT::Id(w) if w == "do" || w == "if");
+                if !second {
+                    self.skipping_unit = false;
+                }
+            }
+            return;
+        }
+        match head.as_str() {
+            "subroutine" => self.start_subroutine(s, &toks),
+            "function" | "program" | "module" => {
+                self.skips.push(Skip {
+                    line: s.line,
+                    construct: format!("{head} unit"),
+                    reason: "only `subroutine` bodies are extracted".into(),
+                });
+                self.skipping_unit = true;
+            }
+            "end" => self.end_stmt(s, &toks),
+            "enddo" => self.close_do(s.line, None),
+            "endif" => self.close_if(s.line),
+            "integer" | "real" | "double" | "logical" | "character" | "dimension" => {
+                self.declaration(s, &toks)
+            }
+            "implicit" | "use" | "intrinsic" | "external" | "save" | "intent" => {}
+            "parameter" => self.reject(
+                s.line,
+                "parameter statement",
+                "named constants are not lifted".into(),
+            ),
+            "do" => self.do_stmt(s, &toks),
+            "if" => self.if_stmt(s, &toks),
+            "else" => self.else_stmt(s, &toks),
+            "elseif" => self.poison_if("else-if branch", "ELSE IF chains are not liftable"),
+            "continue" => {
+                if let Some(l) = s.label {
+                    self.close_do(s.line, Some(l));
+                }
+            }
+            "call" => self.reject(
+                s.line,
+                "call statement",
+                format!("`{}` has unknown effects", s.text),
+            ),
+            "return" => {}
+            "goto" => self.reject(
+                s.line,
+                "goto statement",
+                "unstructured control flow is not liftable".into(),
+            ),
+            "go" => self.reject(
+                s.line,
+                "goto statement",
+                "unstructured control flow is not liftable".into(),
+            ),
+            "exit" | "cycle" => self.reject(
+                s.line,
+                &format!("{head} statement"),
+                "early exit makes the trip count data-dependent".into(),
+            ),
+            "print" | "write" | "read" | "open" | "close" => self.reject(
+                s.line,
+                "io statement",
+                format!("I/O (`{head}`) is not liftable"),
+            ),
+            "stop" | "error" => {
+                self.reject(s.line, "stop statement", "aborts are not liftable".into())
+            }
+            _ => {
+                if self.cur.is_none() {
+                    return;
+                }
+                self.assignment(s, &toks)
+            }
+        }
+    }
+
+    fn start_subroutine(&mut self, s: &FStmt, toks: &[FT]) {
+        if self.cur.is_some() {
+            self.skips.push(Skip {
+                line: s.line,
+                construct: "subroutine".into(),
+                reason: "nested subroutine (missing `end subroutine`?)".into(),
+            });
+            self.cur = None;
+            self.stack.clear();
+        }
+        let mut i = 1usize;
+        let name = match toks.get(i) {
+            Some(FT::Id(n)) => n.clone(),
+            _ => {
+                self.skips.push(Skip {
+                    line: s.line,
+                    construct: "subroutine".into(),
+                    reason: "missing subroutine name".into(),
+                });
+                return;
+            }
+        };
+        i += 1;
+        let mut params = Vec::new();
+        if matches!(toks.get(i), Some(FT::Op("("))) {
+            i += 1;
+            while let Some(FT::Id(p)) = toks.get(i) {
+                // Implicit typing default: I–N integers, else real scalar;
+                // declarations refine (arrays get their dims).
+                let c = p.chars().next().unwrap_or('a');
+                let kind = if ('i'..='n').contains(&c) {
+                    PKind::Int
+                } else {
+                    PKind::Scalar
+                };
+                params.push(SParam {
+                    name: p.clone(),
+                    kind,
+                });
+                i += 1;
+                if matches!(toks.get(i), Some(FT::Op(","))) {
+                    i += 1;
+                }
+            }
+        }
+        self.arrays.clear();
+        self.cur = Some(SFunc {
+            name,
+            line: s.line,
+            params,
+            local_arrays: Vec::new(),
+            local_scalars: Vec::new(),
+            body: Vec::new(),
+            one_based: true,
+        });
+    }
+
+    fn end_stmt(&mut self, s: &FStmt, toks: &[FT]) {
+        match toks.get(1) {
+            Some(FT::Id(w)) if w == "do" => self.close_do(s.line, None),
+            Some(FT::Id(w)) if w == "if" => self.close_if(s.line),
+            _ => {
+                // `end` / `end subroutine [name]` — finalize.
+                if !self.stack.is_empty() {
+                    let line = self.cur.as_ref().map_or(s.line, |f| f.line);
+                    self.skips.push(Skip {
+                        line,
+                        construct: "subroutine".into(),
+                        reason: "unclosed DO/IF block at `end subroutine`".into(),
+                    });
+                    self.stack.clear();
+                    self.cur = None;
+                    return;
+                }
+                if let Some(f) = self.cur.take() {
+                    self.funcs.push(f);
+                }
+            }
+        }
+    }
+
+    fn declaration(&mut self, s: &FStmt, toks: &[FT]) {
+        if self.cur.is_none() {
+            return;
+        }
+        let is_int = matches!(&toks[0], FT::Id(w) if w == "integer");
+        let unsupported = matches!(&toks[0], FT::Id(w) if w == "logical" || w == "character");
+        let ty_word = match &toks[0] {
+            FT::Id(w) => w.clone(),
+            _ => String::new(),
+        };
+        // Attribute part: skip to `::` if present, collecting a
+        // `dimension(...)` attribute on the way.
+        let mut i = 1usize;
+        let mut attr_dims: Option<Vec<SExpr>> = None;
+        let mut depth = 0usize;
+        let mut split = None;
+        for (j, t) in toks.iter().enumerate().skip(1) {
+            match t {
+                FT::Op("(") => depth += 1,
+                FT::Op(")") => depth = depth.saturating_sub(1),
+                FT::Op("::") if depth == 0 => {
+                    split = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+        }
+        if let Some(j) = split {
+            // Scan attributes before `::` for `dimension(dims)`.
+            let mut k = 1usize;
+            while k < j {
+                if matches!(&toks[k], FT::Id(w) if w == "dimension") {
+                    if let Some((dims, _)) = parse_paren_list(&toks[k + 1..j], &self.arrays) {
+                        attr_dims = Some(dims);
+                    }
+                }
+                k += 1;
+            }
+            i = j + 1;
+        } else {
+            // No `::` — `real u(n,k)` / `integer i, j` / `real(8) x`.
+            // Skip one optional kind-spec paren group right after the
+            // type word, and `precision` after `double`.
+            if matches!(&toks[i], FT::Id(w) if w == "precision") {
+                i += 1;
+            }
+            // F77 kind suffix: `real*8 x(n)` / `integer*4 i`.
+            if matches!(toks.get(i), Some(FT::Op("*")))
+                && matches!(toks.get(i + 1), Some(FT::Int(_)))
+            {
+                i += 2;
+            }
+            if matches!(toks.get(i), Some(FT::Op("("))) {
+                let mut d = 0usize;
+                while i < toks.len() {
+                    match &toks[i] {
+                        FT::Op("(") => d += 1,
+                        FT::Op(")") => {
+                            d -= 1;
+                            if d == 0 {
+                                i += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            }
+        }
+        // Entity list: `name` or `name(d1, d2)`, comma-separated.
+        while i < toks.len() {
+            let FT::Id(name) = &toks[i] else { break };
+            let name = name.clone();
+            i += 1;
+            let mut dims: Option<Vec<SExpr>> = attr_dims.clone();
+            if matches!(toks.get(i), Some(FT::Op("("))) {
+                match parse_paren_list(&toks[i..], &self.arrays) {
+                    Some((d, used)) => {
+                        dims = Some(d);
+                        i += used;
+                    }
+                    None => {
+                        self.push_reject_decl(s.line, &name);
+                        return;
+                    }
+                }
+            }
+            self.declare_entity(s.line, name, dims, is_int, unsupported, &ty_word);
+            if matches!(toks.get(i), Some(FT::Op(","))) {
+                i += 1;
+                continue;
+            }
+            break;
+        }
+    }
+
+    /// Apply one declared entity to the current subroutine.
+    fn declare_entity(
+        &mut self,
+        line: u32,
+        name: String,
+        dims: Option<Vec<SExpr>>,
+        is_int: bool,
+        unsupported: bool,
+        ty_word: &str,
+    ) {
+        let is_param = {
+            let f = self.cur.as_ref().expect("declaration context");
+            f.params.iter().any(|p| p.name == name)
+        };
+        if unsupported {
+            let f = self.cur.as_mut().expect("declaration context");
+            if is_param {
+                let p = f.params.iter_mut().find(|p| p.name == name).unwrap();
+                p.kind = PKind::Other {
+                    reason: format!("`{ty_word}`-typed `{name}` is not liftable"),
+                };
+            } else {
+                f.local_scalars.push(name);
+            }
+            return;
+        }
+        match dims {
+            Some(dims) => {
+                // Subscript uses must parse as Index (not Call) so the
+                // skip reason names the array, even when unliftable.
+                self.arrays.insert(name.clone());
+                if is_int {
+                    let reason =
+                        format!("integer-typed array `{name}` (lifted containers are f64)");
+                    if is_param {
+                        let f = self.cur.as_mut().expect("declaration context");
+                        let p = f.params.iter_mut().find(|p| p.name == name).unwrap();
+                        p.kind = PKind::Other { reason };
+                    } else {
+                        self.reject(line, "declaration", reason);
+                    }
+                    return;
+                }
+                let f = self.cur.as_mut().expect("declaration context");
+                if is_param {
+                    let p = f.params.iter_mut().find(|p| p.name == name).unwrap();
+                    p.kind = PKind::Array { dims };
+                } else {
+                    f.local_arrays.push((name, dims));
+                }
+            }
+            None => {
+                let f = self.cur.as_mut().expect("declaration context");
+                if is_param {
+                    let p = f.params.iter_mut().find(|p| p.name == name).unwrap();
+                    p.kind = if is_int { PKind::Int } else { PKind::Scalar };
+                } else {
+                    f.local_scalars.push(name);
+                }
+            }
+        }
+    }
+
+    fn push_reject_decl(&mut self, line: u32, name: &str) {
+        self.reject(
+            line,
+            "declaration",
+            format!("unparsable extents in the declaration of `{name}`"),
+        );
+    }
+
+    fn do_stmt(&mut self, s: &FStmt, toks: &[FT]) {
+        let mut i = 1usize;
+        let mut label = None;
+        if let Some(FT::Int(l)) = toks.get(i) {
+            label = Some(*l as u32);
+            i += 1;
+        }
+        if matches!(toks.get(i), Some(FT::Id(w)) if w == "while") {
+            self.stack.push(Frame::Do {
+                line: s.line,
+                var: String::new(),
+                start: SExpr::Int(0),
+                cmp: BOp::Le,
+                end: SExpr::Int(0),
+                step: 1,
+                label,
+                body: Vec::new(),
+                poison: Some((
+                    "do-while loop".into(),
+                    "only counted `DO` loops are liftable".into(),
+                )),
+            });
+            return;
+        }
+        let hdr = (|| -> Result<(String, SExpr, SExpr, i64), String> {
+            let var = match toks.get(i) {
+                Some(FT::Id(v)) => v.clone(),
+                _ => return Err("expected a loop variable after `do`".into()),
+            };
+            i += 1;
+            if !matches!(toks.get(i), Some(FT::Op("="))) {
+                return Err(format!("expected `=` after `do {var}`"));
+            }
+            i += 1;
+            let mut ep = EParser {
+                toks: &toks[i..],
+                pos: 0,
+                arrays: &self.arrays,
+            };
+            let start = ep.expr().map_err(|e| e.reason)?;
+            if !ep.eat_op(",") {
+                return Err("expected `,` between DO bounds".into());
+            }
+            let end = ep.expr().map_err(|e| e.reason)?;
+            let step = if ep.eat_op(",") {
+                let neg = ep.eat_op("-");
+                match ep.bump() {
+                    FT::Int(v) => {
+                        if neg {
+                            -v
+                        } else {
+                            v
+                        }
+                    }
+                    _ => return Err("DO step must be an integer constant".into()),
+                }
+            } else {
+                1
+            };
+            if !matches!(ep.peek(), FT::End) {
+                return Err("trailing tokens after the DO header".into());
+            }
+            if step == 0 {
+                return Err("zero DO step never terminates".into());
+            }
+            Ok((var, start, end, step))
+        })();
+        match hdr {
+            Ok((var, start, end, step)) => self.stack.push(Frame::Do {
+                line: s.line,
+                var,
+                start,
+                cmp: if step > 0 { BOp::Le } else { BOp::Ge },
+                end,
+                step,
+                label,
+                body: Vec::new(),
+                poison: None,
+            }),
+            Err(reason) => self.stack.push(Frame::Do {
+                line: s.line,
+                var: String::new(),
+                start: SExpr::Int(0),
+                cmp: BOp::Le,
+                end: SExpr::Int(0),
+                step: 1,
+                label,
+                body: Vec::new(),
+                poison: Some(("do loop".into(), reason)),
+            }),
+        }
+    }
+
+    fn close_do(&mut self, line: u32, label: Option<u32>) {
+        loop {
+            match self.stack.pop() {
+                Some(Frame::Do {
+                    line: lline,
+                    var,
+                    start,
+                    cmp,
+                    end,
+                    step,
+                    label: llabel,
+                    body,
+                    poison,
+                }) => {
+                    let node = match poison {
+                        Some((construct, reason)) => SNode::Reject {
+                            line: lline,
+                            construct,
+                            reason,
+                        },
+                        None => SNode::Loop(SLoop {
+                            line: lline,
+                            var,
+                            start,
+                            cmp,
+                            end,
+                            step,
+                            body,
+                        }),
+                    };
+                    self.push_node(node);
+                    // A labeled `continue` closes every DO sharing it.
+                    if label.is_some() && llabel == label {
+                        if let Some(Frame::Do {
+                            label: next_label, ..
+                        }) = self.stack.last()
+                        {
+                            if *next_label == label {
+                                continue;
+                            }
+                        }
+                    }
+                    return;
+                }
+                Some(other) => {
+                    // `end do` closing across an open IF — malformed.
+                    self.stack.push(other);
+                    self.reject(line, "do loop", "`end do` without an open DO".into());
+                    return;
+                }
+                None => {
+                    self.reject(line, "do loop", "`end do` without an open DO".into());
+                    return;
+                }
+            }
+        }
+    }
+
+    fn if_stmt(&mut self, s: &FStmt, toks: &[FT]) {
+        let mut ep = EParser {
+            toks: &toks[1..],
+            pos: 0,
+            arrays: &self.arrays,
+        };
+        if !ep.eat_op("(") {
+            self.reject(s.line, "if statement", "malformed `if` condition".into());
+            return;
+        }
+        let cond = match ep.expr() {
+            Ok(c) => c,
+            Err(e) => {
+                self.reject(s.line, "if condition", e.reason);
+                return;
+            }
+        };
+        if !ep.eat_op(")") {
+            self.reject(s.line, "if statement", "unclosed `if` condition".into());
+            return;
+        }
+        let rest = &toks[1 + ep.pos..];
+        if matches!(rest.first(), Some(FT::Id(w)) if w == "then") {
+            self.stack.push(Frame::If {
+                line: s.line,
+                cond: Some(cond),
+                then: Vec::new(),
+                els: Vec::new(),
+                in_else: false,
+                poison: None,
+            });
+            return;
+        }
+        // One-line `if (cond) stmt`: re-drive the tail as a statement.
+        let tail_text: String = untokenize(rest);
+        let saved_depth = self.stack.len();
+        self.stack.push(Frame::If {
+            line: s.line,
+            cond: Some(cond),
+            then: Vec::new(),
+            els: Vec::new(),
+            in_else: false,
+            poison: None,
+        });
+        self.stmt(&FStmt {
+            line: s.line,
+            label: None,
+            text: tail_text,
+        });
+        if self.stack.len() == saved_depth + 1 {
+            self.close_if(s.line);
+        } else {
+            // The tail opened a construct (`if (c) do ...` is invalid
+            // Fortran anyway) — poison and close.
+            self.stack.truncate(saved_depth + 1);
+            self.poison_if("if statement", "unsupported one-line `if` body");
+            self.close_if(s.line);
+        }
+    }
+
+    fn else_stmt(&mut self, s: &FStmt, toks: &[FT]) {
+        if matches!(toks.get(1), Some(FT::Id(w)) if w == "if") {
+            self.poison_if("else-if branch", "ELSE IF chains are not liftable");
+            return;
+        }
+        match self.stack.last_mut() {
+            Some(Frame::If { in_else, .. }) => *in_else = true,
+            _ => self.reject(s.line, "if statement", "`else` without an open IF".into()),
+        }
+    }
+
+    fn poison_if(&mut self, construct: &str, reason: &str) {
+        if let Some(Frame::If { poison, .. }) = self.stack.last_mut() {
+            if poison.is_none() {
+                *poison = Some((construct.to_string(), reason.to_string()));
+            }
+        }
+    }
+
+    fn close_if(&mut self, line: u32) {
+        match self.stack.pop() {
+            Some(Frame::If {
+                line: iline,
+                cond,
+                then,
+                els,
+                poison,
+                ..
+            }) => {
+                let node = match (poison, cond) {
+                    (Some((construct, reason)), _) => SNode::Reject {
+                        line: iline,
+                        construct,
+                        reason,
+                    },
+                    (None, Some(cond)) => SNode::If {
+                        line: iline,
+                        cond,
+                        then,
+                        els,
+                    },
+                    (None, None) => SNode::Reject {
+                        line: iline,
+                        construct: "if statement".into(),
+                        reason: "malformed IF".into(),
+                    },
+                };
+                self.push_node(node);
+            }
+            Some(other) => {
+                self.stack.push(other);
+                self.reject(line, "if statement", "`end if` without an open IF".into());
+            }
+            None => self.reject(line, "if statement", "`end if` without an open IF".into()),
+        }
+    }
+
+    fn assignment(&mut self, s: &FStmt, toks: &[FT]) {
+        let mut ep = EParser {
+            toks,
+            pos: 0,
+            arrays: &self.arrays,
+        };
+        let lhs = match ep.expr() {
+            Ok(l) => l,
+            Err(e) => {
+                self.reject(s.line, "statement", e.reason);
+                return;
+            }
+        };
+        if !ep.eat_op("=") {
+            self.reject(
+                s.line,
+                "statement",
+                format!("unsupported statement `{}`", s.text),
+            );
+            return;
+        }
+        let rhs = match ep.expr() {
+            Ok(r) => r,
+            Err(e) => {
+                self.reject(s.line, "assignment", e.reason);
+                return;
+            }
+        };
+        match lhs {
+            SExpr::Index { base, subs } => self.push_node(SNode::Assign {
+                line: s.line,
+                base,
+                subs,
+                op: None,
+                rhs,
+            }),
+            SExpr::Var(name) => self.reject(
+                s.line,
+                "scalar assignment",
+                format!("assignment to scalar `{name}` is not single-assignment over a container"),
+            ),
+            _ => self.reject(s.line, "assignment", "unsupported assignment target".into()),
+        }
+    }
+}
+
+/// Render tokens back to text (for one-line `if` tails).
+fn untokenize(toks: &[FT]) -> String {
+    let mut s = String::new();
+    for t in toks {
+        match t {
+            FT::Id(w) => {
+                s.push_str(w);
+                s.push(' ');
+            }
+            FT::Int(v) => {
+                s.push_str(&v.to_string());
+                s.push(' ');
+            }
+            FT::Real(v) => {
+                s.push_str(&format!("{v:?} "));
+            }
+            FT::Op(o) => {
+                s.push_str(o);
+                s.push(' ');
+            }
+            FT::Dot(d) => {
+                s.push_str(&format!(".{d}. "));
+            }
+            FT::Other(c) => {
+                s.push(*c);
+                s.push(' ');
+            }
+            FT::End => {}
+        }
+    }
+    s.trim().to_string()
+}
+
+/// Parse `(e1, e2, ...)` starting at a `(`; returns the items and the
+/// token count consumed.
+fn parse_paren_list(toks: &[FT], arrays: &HashSet<String>) -> Option<(Vec<SExpr>, usize)> {
+    if !matches!(toks.first(), Some(FT::Op("("))) {
+        return None;
+    }
+    let mut ep = EParser {
+        toks,
+        pos: 1,
+        arrays,
+    };
+    let mut items = Vec::new();
+    loop {
+        items.push(ep.expr().ok()?);
+        if ep.eat_op(",") {
+            continue;
+        }
+        break;
+    }
+    if !ep.eat_op(")") {
+        return None;
+    }
+    Some((items, ep.pos))
+}
+
+struct EErr {
+    reason: String,
+}
+
+struct EParser<'a> {
+    toks: &'a [FT],
+    pos: usize,
+    arrays: &'a HashSet<String>,
+}
+
+impl<'a> EParser<'a> {
+    fn peek(&self) -> &FT {
+        self.toks.get(self.pos).unwrap_or(&FT::End)
+    }
+
+    fn bump(&mut self) -> FT {
+        let t = self.peek().clone();
+        if self.pos < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat_op(&mut self, s: &str) -> bool {
+        if matches!(self.peek(), FT::Op(o) if *o == s) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn eat_dot(&mut self, s: &str) -> bool {
+        if matches!(self.peek(), FT::Dot(d) if d == s) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn err<T>(&self, reason: String) -> Result<T, EErr> {
+        Err(EErr { reason })
+    }
+
+    fn expr(&mut self) -> Result<SExpr, EErr> {
+        let mut e = self.and_expr()?;
+        while self.eat_dot("or") {
+            e = SExpr::Bin(BOp::Or, Box::new(e), Box::new(self.and_expr()?));
+        }
+        Ok(e)
+    }
+
+    fn and_expr(&mut self) -> Result<SExpr, EErr> {
+        let mut e = self.not_expr()?;
+        while self.eat_dot("and") {
+            e = SExpr::Bin(BOp::And, Box::new(e), Box::new(self.not_expr()?));
+        }
+        Ok(e)
+    }
+
+    fn not_expr(&mut self) -> Result<SExpr, EErr> {
+        if self.eat_dot("not") {
+            return Ok(SExpr::Not(Box::new(self.not_expr()?)));
+        }
+        self.rel_expr()
+    }
+
+    fn rel_expr(&mut self) -> Result<SExpr, EErr> {
+        let e = self.add_expr()?;
+        let op = match self.peek() {
+            FT::Op("<") => Some(BOp::Lt),
+            FT::Op("<=") => Some(BOp::Le),
+            FT::Op(">") => Some(BOp::Gt),
+            FT::Op(">=") => Some(BOp::Ge),
+            FT::Op("==") => Some(BOp::Eq),
+            FT::Op("/=") => Some(BOp::Ne),
+            FT::Dot(d) => match d.as_str() {
+                "lt" => Some(BOp::Lt),
+                "le" => Some(BOp::Le),
+                "gt" => Some(BOp::Gt),
+                "ge" => Some(BOp::Ge),
+                "eq" => Some(BOp::Eq),
+                "ne" => Some(BOp::Ne),
+                _ => None,
+            },
+            _ => None,
+        };
+        match op {
+            Some(op) => {
+                self.bump();
+                Ok(SExpr::Bin(op, Box::new(e), Box::new(self.add_expr()?)))
+            }
+            None => Ok(e),
+        }
+    }
+
+    fn add_expr(&mut self) -> Result<SExpr, EErr> {
+        let mut e = self.mul_expr()?;
+        loop {
+            if self.eat_op("+") {
+                e = SExpr::Bin(BOp::Add, Box::new(e), Box::new(self.mul_expr()?));
+            } else if self.eat_op("-") {
+                e = SExpr::Bin(BOp::Sub, Box::new(e), Box::new(self.mul_expr()?));
+            } else {
+                return Ok(e);
+            }
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<SExpr, EErr> {
+        let mut e = self.unary_expr()?;
+        loop {
+            if self.eat_op("*") {
+                e = SExpr::Bin(BOp::Mul, Box::new(e), Box::new(self.unary_expr()?));
+            } else if self.eat_op("/") {
+                e = SExpr::Bin(BOp::Div, Box::new(e), Box::new(self.unary_expr()?));
+            } else {
+                return Ok(e);
+            }
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<SExpr, EErr> {
+        if self.eat_op("-") {
+            return Ok(SExpr::Neg(Box::new(self.unary_expr()?)));
+        }
+        if self.eat_op("+") {
+            return self.unary_expr();
+        }
+        self.pow_expr()
+    }
+
+    fn pow_expr(&mut self) -> Result<SExpr, EErr> {
+        let base = self.primary()?;
+        if self.eat_op("**") {
+            let exp = self.unary_expr()?;
+            return Ok(SExpr::Pow(Box::new(base), Box::new(exp)));
+        }
+        Ok(base)
+    }
+
+    fn primary(&mut self) -> Result<SExpr, EErr> {
+        match self.bump() {
+            FT::Int(v) => Ok(SExpr::Int(v)),
+            FT::Real(v) => Ok(SExpr::Real(v)),
+            FT::Op("(") => {
+                let e = self.expr()?;
+                if !self.eat_op(")") {
+                    return self.err("unclosed parenthesis".into());
+                }
+                Ok(e)
+            }
+            FT::Id(name) => {
+                if matches!(self.peek(), FT::Op("(")) {
+                    self.bump();
+                    let mut args = Vec::new();
+                    if !matches!(self.peek(), FT::Op(")")) {
+                        loop {
+                            args.push(self.expr()?);
+                            if !self.eat_op(",") {
+                                break;
+                            }
+                        }
+                    }
+                    if !self.eat_op(")") {
+                        return self.err(format!("unclosed `{name}(...)`"));
+                    }
+                    if self.arrays.contains(&name) {
+                        return Ok(SExpr::Index {
+                            base: name,
+                            subs: args,
+                        });
+                    }
+                    return Ok(SExpr::Call(name, args));
+                }
+                Ok(SExpr::Var(name))
+            }
+            FT::Dot(d) if d == "true" || d == "false" => {
+                self.err(format!("logical literal `.{d}.`"))
+            }
+            other => self.err(format!("unexpected token in expression ({other:?})")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn free_form_subroutine_parses() {
+        let src = "subroutine sweep(n, u, w)\n  integer :: n\n  real(8) :: u(n), w(n)\n  \
+                   integer :: i\n  do i = 2, n\n    u(i) = u(i) - w(i)*u(i-1)\n  end do\n\
+                   end subroutine sweep\n";
+        let (fs, skips) = parse_fortran(src, false);
+        assert!(skips.is_empty(), "{skips:?}");
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].one_based);
+        assert!(matches!(fs[0].params[1].kind, PKind::Array { .. }));
+        assert!(matches!(fs[0].body[0], SNode::Loop(_)));
+    }
+
+    #[test]
+    fn fixed_form_labeled_do_parses() {
+        let src = "c fixed-form comment\n      subroutine scale(n, x)\n      integer n\n\
+                         real*8 x(n)\n      integer i\n      do 10 i = 1, n\n\
+                           x(i) = 2.0d0*x(i)\n   10 continue\n      end\n";
+        let (fs, skips) = parse_fortran(src, true);
+        assert!(skips.is_empty(), "{skips:?}");
+        assert_eq!(fs.len(), 1);
+        let SNode::Loop(l) = &fs[0].body[0] else {
+            panic!("expected loop, got {:?}", fs[0].body)
+        };
+        assert_eq!(l.var, "i");
+        assert_eq!(l.step, 1);
+        assert_eq!(l.cmp, BOp::Le);
+    }
+
+    #[test]
+    fn do_while_rejects() {
+        let src = "subroutine f(n, x)\n  integer :: n\n  real(8) :: x(n)\n  \
+                   do while (n > 0)\n    x(1) = 0.0\n  end do\nend subroutine\n";
+        let (fs, _) = parse_fortran(src, false);
+        assert!(
+            matches!(
+                &fs[0].body[0],
+                SNode::Reject { construct, .. } if construct == "do-while loop"
+            ),
+            "{:?}",
+            fs[0].body
+        );
+    }
+}

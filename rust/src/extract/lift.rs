@@ -1,0 +1,979 @@
+//! Lift source loop nests ([`super::ast`]) into [`crate::ir::Program`].
+//!
+//! The lifter mirrors the SILO-Text parser's construction discipline
+//! exactly — expressions are built through the same simplifying
+//! operators, containers and params register in first-use order, loop
+//! ids pre-order and statement ids in source order — so a lifted
+//! program is structurally equal to `parse(pretty(program))`, the
+//! round-trip the extractor verifies before publishing a kernel.
+//!
+//! Lifting is per top-level nest and atomic: a reject anywhere inside
+//! a nest rolls the program (and any params/containers the nest
+//! registered) back to the pre-nest snapshot and records one
+//! [`Skip`] — a hostile statement never produces a half-lifted kernel.
+//!
+//! Naming: params are prefixed with the program name (the corpus
+//! convention that keeps the process-global symbol interner from
+//! sharing positivity assumptions across kernels); loop variables stay
+//! unprefixed like hand-written corpus kernels.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::nest::{Loop, LoopSchedule, Node, Stmt};
+use crate::ir::{Access, ContainerKind, DType, Program};
+use crate::symbolic::{fdiv, floordiv, imod, load, max, min, simplify};
+use crate::symbolic::{ContainerId, Expr, FuncKind, Sym};
+
+use super::ast::{BOp, PKind, SExpr, SFunc, SLoop, SNode};
+use super::Skip;
+
+/// Lift one function into a program named `prog_name`. Returns the
+/// program (if at least one nest lifted) plus skips for everything the
+/// lifter refused. The caller adds file context to the skips.
+pub fn lift_function(prog_name: &str, f: &SFunc) -> (Option<Program>, Vec<Skip>) {
+    let mut lifter = Lifter {
+        prog: Program::new(prog_name),
+        f,
+        params: HashMap::new(),
+        arrays: HashMap::new(),
+        scalars: HashMap::new(),
+        scopes: Vec::new(),
+        dim_names: dim_param_names(f),
+    };
+    let mut skips = Vec::new();
+    for node in &f.body {
+        match node {
+            SNode::Loop(l) => {
+                let snap = lifter.snapshot();
+                match lifter.lift_loop(l) {
+                    Ok(n) => lifter.prog.body.push(n),
+                    Err(s) => {
+                        lifter.restore(snap);
+                        skips.push(s);
+                    }
+                }
+            }
+            SNode::Reject {
+                line,
+                construct,
+                reason,
+            } => skips.push(Skip {
+                line: *line,
+                construct: construct.clone(),
+                reason: reason.clone(),
+            }),
+            SNode::Assign { line, .. } => skips.push(Skip {
+                line: *line,
+                construct: "top-level statement".into(),
+                reason: "assignment outside any loop is not extracted".into(),
+            }),
+            SNode::If { line, .. } => skips.push(Skip {
+                line: *line,
+                construct: "top-level if".into(),
+                reason: "guarded code outside any loop is not extracted".into(),
+            }),
+        }
+    }
+    if lifter.prog.body.is_empty() {
+        return (None, skips);
+    }
+    if let Err(e) = crate::ir::validate::validate(&lifter.prog) {
+        skips.push(Skip {
+            line: f.line,
+            construct: "internal".into(),
+            reason: format!("lifted program failed validation: {e}"),
+        });
+        return (None, skips);
+    }
+    (Some(lifter.prog), skips)
+}
+
+/// Param names that appear as flattening multipliers of some array
+/// (non-leading dims row-major, non-trailing column-major). These must
+/// register as `: dim` params so the affinity classifier treats
+/// `var·extent` products as multidimensional-affine.
+fn dim_param_names(f: &SFunc) -> HashSet<String> {
+    let mut out = HashSet::new();
+    let mut visit = |dims: &[SExpr]| {
+        let mult: &[SExpr] = if dims.len() < 2 {
+            &[]
+        } else if f.one_based {
+            &dims[..dims.len() - 1]
+        } else {
+            &dims[1..]
+        };
+        for d in mult {
+            if let SExpr::Var(n) = d {
+                out.insert(n.clone());
+            }
+        }
+    };
+    for p in &f.params {
+        if let PKind::Array { dims } = &p.kind {
+            visit(dims);
+        }
+    }
+    for (_, dims) in &f.local_arrays {
+        visit(dims);
+    }
+    out
+}
+
+/// Expression lifting context: index arithmetic (subscripts, bounds,
+/// guards, extents — integer, affine) vs compute values (statement
+/// right-hand sides — reals, loads, math calls allowed).
+#[derive(Clone, Copy)]
+enum Cx {
+    Index(&'static str),
+    Value,
+}
+
+type Snapshot = (
+    Program,
+    HashMap<String, Sym>,
+    HashMap<String, (ContainerId, Vec<Expr>)>,
+    HashMap<String, ContainerId>,
+);
+
+struct Lifter<'a> {
+    prog: Program,
+    f: &'a SFunc,
+    /// Source param name → registered (prefixed) symbol.
+    params: HashMap<String, Sym>,
+    /// Array name → (container, lifted per-dimension extents).
+    arrays: HashMap<String, (ContainerId, Vec<Expr>)>,
+    /// Float scalar param name → its one-element argument container.
+    scalars: HashMap<String, ContainerId>,
+    /// Enclosing loop variables, outermost first.
+    scopes: Vec<(String, Sym)>,
+    dim_names: HashSet<String>,
+}
+
+fn err<T>(line: u32, construct: &str, reason: String) -> Result<T, Skip> {
+    Err(Skip {
+        line,
+        construct: construct.to_string(),
+        reason,
+    })
+}
+
+impl<'a> Lifter<'a> {
+    fn snapshot(&self) -> Snapshot {
+        (
+            self.prog.clone(),
+            self.params.clone(),
+            self.arrays.clone(),
+            self.scalars.clone(),
+        )
+    }
+
+    fn restore(&mut self, snap: Snapshot) {
+        (self.prog, self.params, self.arrays, self.scalars) = snap;
+    }
+
+    fn scope_syms(&self) -> Vec<Sym> {
+        self.scopes.iter().map(|(_, s)| *s).collect()
+    }
+
+    /// The declared kind of a source parameter. The returned reference
+    /// borrows the source function (`'a`), not `self`, so match arms on
+    /// it may still mutate the lifter.
+    fn src_param(&self, name: &str) -> Option<&'a PKind> {
+        self.f
+            .params
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| &p.kind)
+    }
+
+    /// Register (or fetch) the SILO param for a source integer param.
+    fn register_param(&mut self, name: &str) -> Sym {
+        if let Some(s) = self.params.get(name) {
+            return *s;
+        }
+        let pname = format!("{}_{}", self.prog.name, name);
+        let dim = self.dim_names.contains(name);
+        let sym = if dim {
+            Sym::positive_min(&pname, 2)
+        } else {
+            Sym::positive(&pname)
+        };
+        self.params.insert(name.to_string(), sym);
+        self.prog.params.push(sym);
+        if dim {
+            self.prog.dim_syms.push(sym);
+        }
+        sym
+    }
+
+    // -- loops ------------------------------------------------------------
+
+    fn lift_loop(&mut self, l: &SLoop) -> Result<Node, Skip> {
+        if self.scopes.iter().any(|(n, _)| *n == l.var) {
+            return err(
+                l.line,
+                "loop variable",
+                format!("`{}` shadows an enclosing loop variable", l.var),
+            );
+        }
+        let start = self.lift_expr(&l.start, Cx::Index("loop bound"), l.line)?;
+        let raw_end = self.lift_expr(&l.end, Cx::Index("loop bound"), l.line)?;
+        let ascending = l.step > 0;
+        let dir_ok = match l.cmp {
+            BOp::Lt | BOp::Le => ascending,
+            BOp::Gt | BOp::Ge => !ascending,
+            _ => false,
+        };
+        if !dir_ok {
+            return err(
+                l.line,
+                "loop direction",
+                format!(
+                    "condition direction contradicts the {} step",
+                    if ascending { "positive" } else { "negative" }
+                ),
+            );
+        }
+        // Inclusive bounds normalize onto the exclusive IR form, exactly
+        // like the SILO-Text parser's `<=` / `>=` handling.
+        let end = match l.cmp {
+            BOp::Lt | BOp::Gt => raw_end,
+            BOp::Le => raw_end + Expr::Int(1),
+            BOp::Ge => raw_end - Expr::Int(1),
+            _ => unreachable!("direction check covers other comparisons"),
+        };
+        let vars = self.scope_syms();
+        for (e, which) in [(&start, "start"), (&end, "end")] {
+            if degree(e, &vars) > 1 {
+                return err(
+                    l.line,
+                    "loop bound",
+                    format!("loop {which} is not affine in the enclosing loop variables"),
+                );
+            }
+        }
+        let var = Sym::new(&l.var);
+        for e in [&start, &end] {
+            if e.depends_on(var) {
+                return err(
+                    l.line,
+                    "loop bound",
+                    format!("loop bound references the loop's own variable `{}`", l.var),
+                );
+            }
+        }
+        let id = self.prog.fresh_loop_id();
+        self.scopes.push((l.var.clone(), var));
+        let body = self.lift_body(&l.body, &mut Vec::new());
+        self.scopes.pop();
+        let body = body?;
+        if body.is_empty() {
+            return err(
+                l.line,
+                "loop",
+                "loop body has no liftable statements".into(),
+            );
+        }
+        Ok(Node::Loop(Loop {
+            id,
+            var,
+            start,
+            end,
+            stride: Expr::Int(l.step),
+            schedule: LoopSchedule::Sequential,
+            body,
+        }))
+    }
+
+    /// Lift a loop-body statement list under a stack of active guards.
+    fn lift_body(&mut self, nodes: &[SNode], guards: &mut Vec<Expr>) -> Result<Vec<Node>, Skip> {
+        let mut out = Vec::new();
+        for n in nodes {
+            match n {
+                SNode::Reject {
+                    line,
+                    construct,
+                    reason,
+                } => {
+                    return Err(Skip {
+                        line: *line,
+                        construct: construct.clone(),
+                        reason: reason.clone(),
+                    })
+                }
+                SNode::Loop(l) => {
+                    if !guards.is_empty() {
+                        return err(
+                            l.line,
+                            "guarded loop",
+                            "a loop inside `if` is not liftable (guards apply to statements)"
+                                .into(),
+                        );
+                    }
+                    out.push(self.lift_loop(l)?);
+                }
+                SNode::Assign {
+                    line,
+                    base,
+                    subs,
+                    op,
+                    rhs,
+                } => out.push(self.lift_assign(*line, base, subs, *op, rhs, guards)?),
+                SNode::If {
+                    line,
+                    cond,
+                    then,
+                    els,
+                } => {
+                    let g = self.lift_guard(cond, true, *line)?;
+                    guards.push(g);
+                    let lifted = self.lift_body(then, guards);
+                    guards.pop();
+                    out.extend(lifted?);
+                    if !els.is_empty() {
+                        let g = self.lift_guard(cond, false, *line)?;
+                        guards.push(g);
+                        let lifted = self.lift_body(els, guards);
+                        guards.pop();
+                        out.extend(lifted?);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // -- statements -------------------------------------------------------
+
+    fn lift_assign(
+        &mut self,
+        line: u32,
+        base: &str,
+        subs: &[SExpr],
+        op: Option<BOp>,
+        rhs: &SExpr,
+        guards: &[Expr],
+    ) -> Result<Node, Skip> {
+        if subs.is_empty() {
+            return err(
+                line,
+                "scalar assignment",
+                format!("assignment to scalar `{base}` is not liftable"),
+            );
+        }
+        let (cid, off) = self.lift_subscript(base, subs, line)?;
+        let mut rhs_e = self.lift_expr(rhs, Cx::Value, line)?;
+        if let Some(op) = op {
+            let cur = load(cid, off.clone());
+            rhs_e = match op {
+                BOp::Add => cur + rhs_e,
+                BOp::Sub => cur - rhs_e,
+                BOp::Mul => cur * rhs_e,
+                BOp::Div => fdiv(cur, rhs_e),
+                BOp::Mod => imod(cur, rhs_e),
+                _ => {
+                    return err(
+                        line,
+                        "assignment",
+                        "unsupported compound assignment operator".into(),
+                    )
+                }
+            };
+        }
+        let guard = guards.iter().cloned().reduce(min);
+        if let Some(g) = &guard {
+            if degree(g, &self.scope_syms()) > 1 {
+                return err(
+                    line,
+                    "guard",
+                    "guard is not affine in the loop variables".into(),
+                );
+            }
+        }
+        let id = self.prog.fresh_stmt_id();
+        Ok(Node::Stmt(Stmt {
+            id,
+            write: Access::write(cid, simplify(&off)),
+            rhs: simplify(&rhs_e),
+            guard: guard.map(|g| simplify(&g)),
+        }))
+    }
+
+    // -- guards -----------------------------------------------------------
+
+    /// Lift a condition to a SILO guard expression (fires when > 0).
+    /// `pos = false` lifts the negation (for `else` branches).
+    fn lift_guard(&mut self, cond: &SExpr, pos: bool, line: u32) -> Result<Expr, Skip> {
+        match cond {
+            SExpr::Bin(op, a, b) => {
+                let rel = |l: &mut Self, ge_like: bool| -> Result<Expr, Skip> {
+                    let a = l.lift_expr(a, Cx::Index("guard"), line)?;
+                    let b = l.lift_expr(b, Cx::Index("guard"), line)?;
+                    // `a < b` ⇔ `b − a > 0`; `a <= b` ⇔ `b − a + 1 > 0`.
+                    Ok(if ge_like { a - b } else { b - a })
+                };
+                match (op, pos) {
+                    (BOp::Lt, true) => rel(self, false),
+                    (BOp::Lt, false) => rel(self, true).map(|e| e + Expr::Int(1)),
+                    (BOp::Le, true) => rel(self, false).map(|e| e + Expr::Int(1)),
+                    (BOp::Le, false) => rel(self, true),
+                    (BOp::Gt, true) => rel(self, true),
+                    (BOp::Gt, false) => rel(self, false).map(|e| e + Expr::Int(1)),
+                    (BOp::Ge, true) => rel(self, true).map(|e| e + Expr::Int(1)),
+                    (BOp::Ge, false) => rel(self, false),
+                    (BOp::Eq | BOp::Ne, _) => err(
+                        line,
+                        "guard",
+                        "equality guard is not a half-space (not liftable)".into(),
+                    ),
+                    (BOp::And, _) => {
+                        let ga = self.lift_guard(a, pos, line)?;
+                        let gb = self.lift_guard(b, pos, line)?;
+                        // ¬(a ∧ b) = ¬a ∨ ¬b, so polarity flips the combiner.
+                        Ok(if pos { min(ga, gb) } else { max(ga, gb) })
+                    }
+                    (BOp::Or, _) => {
+                        let ga = self.lift_guard(a, pos, line)?;
+                        let gb = self.lift_guard(b, pos, line)?;
+                        Ok(if pos { max(ga, gb) } else { min(ga, gb) })
+                    }
+                    _ => err(
+                        line,
+                        "guard",
+                        "guard must be a comparison of index expressions".into(),
+                    ),
+                }
+            }
+            SExpr::Not(inner) => self.lift_guard(inner, !pos, line),
+            _ => err(
+                line,
+                "guard",
+                "guard must be a comparison of index expressions".into(),
+            ),
+        }
+    }
+
+    // -- subscripts and containers ----------------------------------------
+
+    fn lift_subscript(
+        &mut self,
+        base: &str,
+        subs: &[SExpr],
+        line: u32,
+    ) -> Result<(ContainerId, Expr), Skip> {
+        let (cid, dims) = self.container_for(base, line)?;
+        if subs.len() != dims.len() {
+            return err(
+                line,
+                "subscript",
+                format!(
+                    "rank mismatch: `{base}` has {} dimension(s), subscripted with {}",
+                    dims.len(),
+                    subs.len()
+                ),
+            );
+        }
+        let lifted: Vec<Expr> = subs
+            .iter()
+            .map(|s| self.lift_expr(s, Cx::Index("subscript"), line))
+            .collect::<Result<_, _>>()?;
+        let off = flatten(&dims, lifted, self.f.one_based);
+        if degree(&off, &self.scope_syms()) > 1 {
+            return err(
+                line,
+                "subscript",
+                format!("subscript of `{base}` is not affine in the loop variables"),
+            );
+        }
+        Ok((cid, off))
+    }
+
+    /// Resolve `name` to a container, declaring it on first use.
+    fn container_for(&mut self, name: &str, line: u32) -> Result<(ContainerId, Vec<Expr>), Skip> {
+        if let Some((id, dims)) = self.arrays.get(name) {
+            return Ok((*id, dims.clone()));
+        }
+        let (src_dims, kind) = match self.src_param(name) {
+            Some(PKind::Array { dims }) => (dims.clone(), ContainerKind::Argument),
+            Some(PKind::Int) | Some(PKind::Scalar) => {
+                return err(
+                    line,
+                    "subscript",
+                    format!("scalar `{name}` cannot be subscripted"),
+                )
+            }
+            Some(PKind::Pointer) => {
+                return err(
+                    line,
+                    "pointer alias",
+                    format!("pointer parameter `{name}` (extent and aliasing unknown)"),
+                )
+            }
+            Some(PKind::Other { reason }) => {
+                return err(line, "parameter", reason.clone());
+            }
+            None => match self.f.local_arrays.iter().find(|(n, _)| n == name) {
+                Some((_, dims)) => (dims.clone(), ContainerKind::Transient),
+                None => {
+                    return err(
+                        line,
+                        "subscript",
+                        format!("`{name}` has no liftable declaration"),
+                    )
+                }
+            },
+        };
+        // Extents are evaluated at declaration: loop variables are out of
+        // scope, so resolution goes through params only.
+        let saved = std::mem::take(&mut self.scopes);
+        let dims: Result<Vec<Expr>, Skip> = src_dims
+            .iter()
+            .map(|d| self.lift_expr(d, Cx::Index("array extent"), line))
+            .collect();
+        self.scopes = saved;
+        let dims = dims.map_err(|s| Skip {
+            reason: format!("extent of `{name}`: {}", s.reason),
+            ..s
+        })?;
+        let size = dims
+            .iter()
+            .cloned()
+            .reduce(|a, b| a * b)
+            .unwrap_or(Expr::Int(1));
+        let id = self.prog.add_container(name, size, DType::F64, kind);
+        self.arrays.insert(name.to_string(), (id, dims.clone()));
+        Ok((id, dims))
+    }
+
+    /// The one-element argument container backing a float scalar param.
+    fn scalar_container(&mut self, name: &str) -> ContainerId {
+        if let Some(id) = self.scalars.get(name) {
+            return *id;
+        }
+        let id = self
+            .prog
+            .add_container(name, Expr::Int(1), DType::F64, ContainerKind::Argument);
+        self.scalars.insert(name.to_string(), id);
+        id
+    }
+
+    // -- expressions ------------------------------------------------------
+
+    fn lift_expr(&mut self, e: &SExpr, cx: Cx, line: u32) -> Result<Expr, Skip> {
+        match e {
+            SExpr::Int(v) => Ok(Expr::Int(*v)),
+            SExpr::Real(v) => match cx {
+                Cx::Value => Ok(Expr::real(*v)),
+                Cx::Index(what) => err(
+                    line,
+                    "expression",
+                    format!("non-integer constant `{v}` in a {what}"),
+                ),
+            },
+            SExpr::Var(name) => self.resolve_var(name, cx, line),
+            SExpr::Index { base, subs } => match cx {
+                Cx::Value => {
+                    let (cid, off) = self.lift_subscript(base, subs, line)?;
+                    Ok(load(cid, off))
+                }
+                Cx::Index(what) => err(
+                    line,
+                    "subscript",
+                    format!(
+                        "array reference `{base}` inside a {what} (value-dependent addressing)"
+                    ),
+                ),
+            },
+            SExpr::Bin(op, a, b) => {
+                let lift2 = |l: &mut Self| -> Result<(Expr, Expr), Skip> {
+                    Ok((l.lift_expr(a, cx, line)?, l.lift_expr(b, cx, line)?))
+                };
+                match op {
+                    BOp::Add => lift2(self).map(|(a, b)| a + b),
+                    BOp::Sub => lift2(self).map(|(a, b)| a - b),
+                    BOp::Mul => lift2(self).map(|(a, b)| a * b),
+                    BOp::Mod => lift2(self).map(|(a, b)| imod(a, b)),
+                    BOp::Div => match cx {
+                        // Integer division in index arithmetic, real
+                        // division (`a * recip(b)`) in compute.
+                        Cx::Index(_) => lift2(self).map(|(a, b)| floordiv(a, b)),
+                        Cx::Value => lift2(self).map(|(a, b)| fdiv(a, b)),
+                    },
+                    _ => err(
+                        line,
+                        "expression",
+                        "comparison/logical operator outside a guard".into(),
+                    ),
+                }
+            }
+            SExpr::Neg(inner) => Ok(-self.lift_expr(inner, cx, line)?),
+            SExpr::Not(_) => err(
+                line,
+                "expression",
+                "logical negation outside a guard".into(),
+            ),
+            SExpr::Pow(base, exp) => {
+                let SExpr::Int(k) = **exp else {
+                    return err(
+                        line,
+                        "expression",
+                        "exponent must be a non-negative integer constant".into(),
+                    );
+                };
+                if !(0..=u32::MAX as i64).contains(&k) {
+                    return err(
+                        line,
+                        "expression",
+                        format!("exponent `{k}` out of range"),
+                    );
+                }
+                let b = self.lift_expr(base, cx, line)?;
+                Ok(simplify(&Expr::Pow(Box::new(b), k as u32)))
+            }
+            SExpr::Call(name, args) => self.lift_call(name, args, cx, line),
+        }
+    }
+
+    fn resolve_var(&mut self, name: &str, cx: Cx, line: u32) -> Result<Expr, Skip> {
+        if let Some((_, sym)) = self.scopes.iter().rev().find(|(n, _)| n == name) {
+            return Ok(Expr::Sym(*sym));
+        }
+        match self.src_param(name) {
+            Some(PKind::Int) => Ok(Expr::Sym(self.register_param(name))),
+            Some(PKind::Scalar) => match cx {
+                Cx::Value => {
+                    let c = self.scalar_container(name);
+                    Ok(load(c, Expr::Int(0)))
+                }
+                Cx::Index(what) => err(
+                    line,
+                    "expression",
+                    format!("floating-point scalar `{name}` in a {what}"),
+                ),
+            },
+            Some(PKind::Array { .. }) => err(
+                line,
+                "pointer alias",
+                format!("bare array reference `{name}` (pointer arithmetic is not liftable)"),
+            ),
+            Some(PKind::Pointer) => err(
+                line,
+                "pointer alias",
+                format!("pointer parameter `{name}` (extent and aliasing unknown)"),
+            ),
+            Some(PKind::Other { reason }) => err(line, "parameter", reason.clone()),
+            None => {
+                if self.f.local_arrays.iter().any(|(n, _)| n == name) {
+                    return err(
+                        line,
+                        "pointer alias",
+                        format!(
+                            "bare array reference `{name}` (pointer arithmetic is not liftable)"
+                        ),
+                    );
+                }
+                if self.f.local_scalars.iter().any(|n| n == name) {
+                    return err(
+                        line,
+                        "scalar temporary",
+                        format!(
+                            "scalar temporary `{name}` is not single-assignment over a container"
+                        ),
+                    );
+                }
+                err(line, "expression", format!("`{name}` has no liftable declaration"))
+            }
+        }
+    }
+
+    fn lift_call(
+        &mut self,
+        name: &str,
+        args: &[SExpr],
+        cx: Cx,
+        line: u32,
+    ) -> Result<Expr, Skip> {
+        let what = match cx {
+            Cx::Index(w) => w,
+            Cx::Value => "",
+        };
+        let arity = |want: usize| -> Result<(), Skip> {
+            if args.len() == want {
+                Ok(())
+            } else {
+                err(
+                    line,
+                    "call",
+                    format!("`{name}` takes {want} argument(s), found {}", args.len()),
+                )
+            }
+        };
+        // min/max are affine-monotone and allowed in both contexts.
+        if matches!(name, "min" | "max" | "fmin" | "fmax") {
+            arity(2)?;
+            let a = self.lift_expr(&args[0], cx, line)?;
+            let b = self.lift_expr(&args[1], cx, line)?;
+            return Ok(if name.ends_with("min") { min(a, b) } else { max(a, b) });
+        }
+        if let Cx::Index(_) = cx {
+            return err(
+                line,
+                "call",
+                format!("call to `{name}(...)` in a {what} is not affine"),
+            );
+        }
+        let kind = match name {
+            "sqrt" => Some(FuncKind::Sqrt),
+            "fabs" | "abs" | "dabs" => Some(FuncKind::Abs),
+            "exp" => Some(FuncKind::Exp),
+            "log2" => Some(FuncKind::Log2),
+            _ => None,
+        };
+        match kind {
+            Some(k) => {
+                arity(1)?;
+                let a = self.lift_expr(&args[0], Cx::Value, line)?;
+                Ok(crate::symbolic::func(k, vec![a]))
+            }
+            None => err(
+                line,
+                "call",
+                format!("call to `{name}(...)` has unknown effects"),
+            ),
+        }
+    }
+}
+
+/// Flatten multi-dimensional subscripts to a linear offset: row-major
+/// 0-based for C, column-major 1-based for Fortran.
+fn flatten(dims: &[Expr], subs: Vec<Expr>, one_based: bool) -> Expr {
+    if one_based {
+        // off = (s0−1) + d0·(s1−1) + d0·d1·(s2−1) + …
+        let n = subs.len();
+        let mut acc = subs[n - 1].clone() - Expr::Int(1);
+        for k in (0..n - 1).rev() {
+            acc = acc * dims[k].clone() + (subs[k].clone() - Expr::Int(1));
+        }
+        acc
+    } else {
+        // off = ((s0·d1) + s1)·d2 + s2 + …
+        let mut it = subs.into_iter();
+        let mut acc = it.next().expect("rank checked non-empty");
+        for (k, s) in it.enumerate() {
+            acc = acc * dims[k + 1].clone() + s;
+        }
+        acc
+    }
+}
+
+/// Degree of `e` as a polynomial in `vars`; `u32::MAX` marks
+/// non-polynomial dependence (loads, opaque functions). Affine = ≤ 1.
+fn degree(e: &Expr, vars: &[Sym]) -> u32 {
+    const INF: u32 = u32::MAX;
+    match e {
+        Expr::Int(_) | Expr::Real(_) => 0,
+        Expr::Sym(s) => {
+            if vars.contains(s) {
+                1
+            } else {
+                0
+            }
+        }
+        Expr::Add(xs) => xs.iter().map(|x| degree(x, vars)).max().unwrap_or(0),
+        Expr::Mul(xs) => xs
+            .iter()
+            .map(|x| degree(x, vars))
+            .fold(0u32, |a, b| a.saturating_add(b)),
+        Expr::Pow(b, k) => degree(b, vars).saturating_mul(*k),
+        Expr::FloorDiv(a, b) | Expr::Mod(a, b) => {
+            if degree(b, vars) != 0 {
+                INF
+            } else {
+                degree(a, vars)
+            }
+        }
+        Expr::Min(a, b) | Expr::Max(a, b) => degree(a, vars).max(degree(b, vars)),
+        // min/max are the only function heads index lifting admits;
+        // their degree is the max over arguments. Anything else in a
+        // compute expression never reaches a degree check.
+        Expr::Func(_, xs) => xs.iter().map(|x| degree(x, vars)).max().unwrap_or(0),
+        Expr::Load(..) => INF,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ast::*;
+    use super::*;
+
+    fn loop1(var: &str, n: SExpr, body: Vec<SNode>) -> SNode {
+        SNode::Loop(SLoop {
+            line: 2,
+            var: var.into(),
+            start: SExpr::Int(0),
+            cmp: BOp::Lt,
+            end: n,
+            step: 1,
+            body,
+        })
+    }
+
+    #[test]
+    fn lifts_simple_copy_nest() {
+        let f = SFunc {
+            name: "copy".into(),
+            line: 1,
+            params: vec![
+                SParam {
+                    name: "n".into(),
+                    kind: PKind::Int,
+                },
+                SParam {
+                    name: "a".into(),
+                    kind: PKind::Array {
+                        dims: vec![SExpr::Var("n".into())],
+                    },
+                },
+                SParam {
+                    name: "b".into(),
+                    kind: PKind::Array {
+                        dims: vec![SExpr::Var("n".into())],
+                    },
+                },
+            ],
+            local_arrays: vec![],
+            local_scalars: vec![],
+            body: vec![loop1(
+                "i",
+                SExpr::Var("n".into()),
+                vec![SNode::Assign {
+                    line: 3,
+                    base: "a".into(),
+                    subs: vec![SExpr::Var("i".into())],
+                    op: None,
+                    rhs: SExpr::Index {
+                        base: "b".into(),
+                        subs: vec![SExpr::Var("i".into())],
+                    },
+                }],
+            )],
+            one_based: false,
+        };
+        let (prog, skips) = lift_function("lift_copy", &f);
+        assert!(skips.is_empty(), "{skips:?}");
+        let prog = prog.expect("lifts");
+        assert_eq!(prog.params.len(), 1);
+        assert_eq!(prog.containers.len(), 2);
+        assert_eq!(prog.stmts().len(), 1);
+    }
+
+    #[test]
+    fn nonaffine_subscript_skips_nest() {
+        let f = SFunc {
+            name: "sq".into(),
+            line: 1,
+            params: vec![
+                SParam {
+                    name: "n".into(),
+                    kind: PKind::Int,
+                },
+                SParam {
+                    name: "a".into(),
+                    kind: PKind::Array {
+                        dims: vec![SExpr::Var("n".into())],
+                    },
+                },
+            ],
+            local_arrays: vec![],
+            local_scalars: vec![],
+            body: vec![loop1(
+                "i",
+                SExpr::Var("n".into()),
+                vec![SNode::Assign {
+                    line: 3,
+                    base: "a".into(),
+                    subs: vec![SExpr::Bin(
+                        BOp::Mul,
+                        Box::new(SExpr::Var("i".into())),
+                        Box::new(SExpr::Var("i".into())),
+                    )],
+                    op: None,
+                    rhs: SExpr::Real(1.0),
+                }],
+            )],
+            one_based: false,
+        };
+        let (prog, skips) = lift_function("lift_sq", &f);
+        assert!(prog.is_none());
+        assert_eq!(skips.len(), 1);
+        assert!(skips[0].reason.contains("not affine"), "{skips:?}");
+        assert_eq!(skips[0].line, 3);
+    }
+
+    #[test]
+    fn fortran_one_based_flattening() {
+        // u(i, j) with dims (n, m), column-major: off = (i−1) + n·(j−1).
+        let f = SFunc {
+            name: "cm".into(),
+            line: 1,
+            params: vec![
+                SParam {
+                    name: "n".into(),
+                    kind: PKind::Int,
+                },
+                SParam {
+                    name: "m".into(),
+                    kind: PKind::Int,
+                },
+                SParam {
+                    name: "u".into(),
+                    kind: PKind::Array {
+                        dims: vec![SExpr::Var("n".into()), SExpr::Var("m".into())],
+                    },
+                },
+            ],
+            local_arrays: vec![],
+            local_scalars: vec![],
+            body: vec![SNode::Loop(SLoop {
+                line: 2,
+                var: "j".into(),
+                start: SExpr::Int(1),
+                cmp: BOp::Le,
+                end: SExpr::Var("m".into()),
+                step: 1,
+                body: vec![SNode::Loop(SLoop {
+                    line: 3,
+                    var: "i".into(),
+                    start: SExpr::Int(1),
+                    cmp: BOp::Le,
+                    end: SExpr::Var("n".into()),
+                    step: 1,
+                    body: vec![SNode::Assign {
+                        line: 4,
+                        base: "u".into(),
+                        subs: vec![SExpr::Var("i".into()), SExpr::Var("j".into())],
+                        op: None,
+                        rhs: SExpr::Real(0.0),
+                    }],
+                })],
+            })],
+            one_based: true,
+        };
+        let (prog, skips) = lift_function("lift_cm", &f);
+        assert!(skips.is_empty(), "{skips:?}");
+        let prog = prog.expect("lifts");
+        // n is a flattening multiplier → dim param; m is a plain param.
+        let n = prog
+            .params
+            .iter()
+            .find(|s| s.name() == "lift_cm_n")
+            .copied()
+            .expect("n registered");
+        assert!(prog.dim_syms.contains(&n));
+        let s = prog.stmts()[0].clone();
+        let i = Sym::new("i");
+        let j = Sym::new("j");
+        // Offset must be i−1 + n·(j−1), i.e. affine with degree 1.
+        assert_eq!(degree(&s.write.offset, &[i, j]), 1);
+    }
+}

@@ -21,6 +21,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod dataflow;
 pub mod exec;
+pub mod extract;
 pub mod frontend;
 pub mod inspect;
 pub mod ir;

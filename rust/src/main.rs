@@ -45,9 +45,22 @@
 //!              provably out-of-bounds access)
 //!   silo verify <dir|file>... — sweep mode: verify every .silo file
 //!            under the given paths (directories recurse), one compact
-//!            proven/checked/rejected line each; exits nonzero only on
-//!            parse/compile errors, so CI can sweep the benign corpus
-//!            and the hostile corpus in one invocation
+//!            proven/checked/rejected line each plus per-directory
+//!            subtotals when the sweep spans several directories; exits
+//!            nonzero only on parse/compile errors, so CI can sweep the
+//!            benign corpus and the hostile corpus in one invocation
+//!   silo extract <src>... [--out-dir=DIR] [--emit-skipped]
+//!            [--addr=H:P] [--pipeline=SPEC]
+//!            — lift affine loop nests out of C/Fortran application
+//!              sources (.c, .f/.for/.f77, .f90/.f95; directories
+//!              recurse): each liftable nest becomes a round-trip-
+//!              verified SILO kernel written to --out-dir (default
+//!              extracted/), and every refused construct is counted in
+//!              a structured skip report (--emit-skipped prints each as
+//!              file:line: skipped <construct>: <reason>). With --addr
+//!              the sources are POSTed to a daemon's /extract endpoint
+//!              instead, which compiles every lifted kernel through the
+//!              content-addressed schedule cache and returns kernel ids
 //!   silo experiment <fig1|fig2|fig9|table1|fig10|autotune|all>
 //!   silo artifacts                             — list PJRT artifacts
 //!   silo serve [--addr=H:P] [--threads=N] [--cache-cap=N]
@@ -317,6 +330,12 @@ fn real_main() -> anyhow::Result<()> {
                 );
             }
         }
+        Some("extract") => {
+            if args.positional.len() < 2 {
+                return Err(usage());
+            }
+            return run_extract(&args);
+        }
         Some("experiment") => {
             let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             print!("{}", coordinator::experiments::run(id)?);
@@ -465,8 +484,11 @@ fn real_main() -> anyhow::Result<()> {
 /// `silo verify <dir|file>...` sweep: verify every `.silo` file under the
 /// given paths (directories recurse), one compact verdict line each —
 /// `proven`, `checked (N unproven)`, or `rejected (N provably oob)`.
-/// Rejections are *expected* for a hostile corpus, so only files that
-/// fail to parse or compile make the sweep exit nonzero.
+/// Sweeps spanning several directories additionally print indented
+/// per-directory subtotals, so a corpus/hostile-corpus split stays
+/// legible in one invocation. Rejections are *expected* for a hostile
+/// corpus, so only files that fail to parse or compile make the sweep
+/// exit nonzero.
 fn sweep_verify(
     targets: &[String],
     spec: &PipelineSpec,
@@ -500,14 +522,25 @@ fn sweep_verify(
         anyhow::bail!("no .silo files under {}", targets.join(" "));
     }
     let (mut proven, mut checked, mut rejected, mut errors) = (0usize, 0usize, 0usize, 0usize);
+    // Per-directory subtotals: [files, proven, checked, rejected, errors].
+    let mut by_dir: std::collections::BTreeMap<String, [usize; 5]> =
+        std::collections::BTreeMap::new();
     for file in &files {
         let path = file.display();
+        let dir = file
+            .parent()
+            .filter(|p| !p.as_os_str().is_empty())
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|| ".".to_string());
+        let tally = by_dir.entry(dir).or_default();
+        tally[0] += 1;
         let program = match silo::kernels::resolve(&file.to_string_lossy())
             .and_then(|k| coordinator::compile_program(k.program(), spec, mem))
         {
             Ok(compiled) => compiled.program,
             Err(e) => {
                 errors += 1;
+                tally[4] += 1;
                 println!("{path}: error: {e:#}");
                 continue;
             }
@@ -517,13 +550,21 @@ fn sweep_verify(
         let unproven = report.unproven().len() - oob;
         if oob > 0 {
             rejected += 1;
+            tally[3] += 1;
             println!("{path}: rejected ({oob} provably out of bounds)");
         } else if unproven > 0 {
             checked += 1;
+            tally[2] += 1;
             println!("{path}: checked ({unproven} unproven access(es))");
         } else {
             proven += 1;
+            tally[1] += 1;
             println!("{path}: proven");
+        }
+    }
+    if by_dir.len() > 1 {
+        for (dir, [n, p, c, r, e]) in &by_dir {
+            println!("  {dir}: {n} file(s) — {p} proven, {c} checked, {r} rejected, {e} error(s)");
         }
     }
     println!(
@@ -537,10 +578,167 @@ fn sweep_verify(
     Ok(())
 }
 
+/// `silo extract <src>... [--out-dir=DIR] [--emit-skipped] [--addr=H:P]`
+/// — lift affine loop nests out of C/Fortran sources. Local mode writes
+/// one round-trip-verified `<name>.silo` per extracted kernel; `--addr`
+/// posts each source to a daemon's `/extract` endpoint instead, which
+/// compiles every lifted kernel through the schedule cache and returns
+/// ids. Extraction itself never fails on unliftable code — refused
+/// constructs are counted (and listed with `--emit-skipped`); only
+/// unreadable inputs or an unreachable daemon exit nonzero.
+fn run_extract(args: &Args) -> anyhow::Result<()> {
+    fn collect(path: &std::path::Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+        if path.is_dir() {
+            for entry in std::fs::read_dir(path)? {
+                collect(&entry?.path(), out)?;
+            }
+        } else if silo::extract::lang_for_path(path).is_some() {
+            out.push(path.to_path_buf());
+        }
+        Ok(())
+    }
+    let mut files = Vec::new();
+    for t in &args.positional[1..] {
+        let p = std::path::Path::new(t);
+        if !p.exists() {
+            anyhow::bail!("no such file or directory: {t}");
+        }
+        if p.is_dir() {
+            collect(p, &mut files)?;
+        } else {
+            // Explicit files are taken verbatim; extract_file reports
+            // unrecognized extensions itself.
+            files.push(p.to_path_buf());
+        }
+    }
+    files.sort();
+    files.dedup();
+    if files.is_empty() {
+        anyhow::bail!(
+            "no C/Fortran sources under {}",
+            args.positional[1..].join(" ")
+        );
+    }
+
+    if let Some(addr) = args.value("--addr") {
+        return extract_remote(args, &files, &addr);
+    }
+
+    let out_dir = args
+        .value("--out-dir")
+        .unwrap_or_else(|| "extracted".to_string());
+    std::fs::create_dir_all(&out_dir)
+        .map_err(|e| anyhow::anyhow!("cannot create {out_dir}: {e}"))?;
+    let (mut total_kernels, mut total_skips) = (0usize, 0usize);
+    for file in &files {
+        let report = silo::extract::extract_file(file)?;
+        println!(
+            "{}: {} kernel(s), {} skip(s)",
+            report.file,
+            report.kernels.len(),
+            report.skips.len()
+        );
+        for k in &report.kernels {
+            let out = format!("{out_dir}/{}.silo", k.name);
+            std::fs::write(&out, &k.silo)
+                .map_err(|e| anyhow::anyhow!("cannot write {out}: {e}"))?;
+            println!("  {} (line {}) -> {out}", k.name, k.line);
+        }
+        if args.has("--emit-skipped") {
+            for s in &report.skips {
+                println!(
+                    "  {}:{}: skipped {}: {}",
+                    report.file, s.line, s.construct, s.reason
+                );
+            }
+        }
+        total_kernels += report.kernels.len();
+        total_skips += report.skips.len();
+    }
+    println!(
+        "extracted {total_kernels} kernel(s) from {} source file(s) \
+         ({total_skips} construct(s) skipped)",
+        files.len()
+    );
+    Ok(())
+}
+
+/// Daemon mode for [`run_extract`]: POST each source to `/extract` and
+/// report the content-addressed kernel id per lifted nest.
+fn extract_remote(args: &Args, files: &[std::path::PathBuf], addr: &str) -> anyhow::Result<()> {
+    let pipeline = args
+        .value("--pipeline")
+        .unwrap_or_else(|| "auto".to_string());
+    let client = silo::service::Client::new(addr);
+    let (mut total_kernels, mut total_skips) = (0usize, 0usize);
+    for file in files {
+        let lang = match silo::extract::lang_for_path(file) {
+            Some(silo::extract::Lang::C) => "c",
+            Some(silo::extract::Lang::FortranFixed) => "fixed",
+            Some(silo::extract::Lang::FortranFree) => "free",
+            None => anyhow::bail!(
+                "{}: unrecognized source extension (expected .c, .f/.for/.f77, .f90/.f95)",
+                file.display()
+            ),
+        };
+        let source = std::fs::read_to_string(file)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", file.display()))?;
+        let stem = file
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("kernel");
+        let req = silo::service::ExtractRequest {
+            source,
+            lang: lang.to_string(),
+            pipeline: pipeline.clone(),
+            stem: stem.to_string(),
+        };
+        let reply = client.extract(&req)?;
+        println!(
+            "{}: {} kernel(s), {} skip(s)",
+            file.display(),
+            reply.kernels.len(),
+            reply.skipped.len()
+        );
+        for k in &reply.kernels {
+            let status = if k.compile.cached {
+                "cache hit"
+            } else if k.compile.coalesced {
+                "coalesced"
+            } else {
+                "compiled"
+            };
+            println!(
+                "  {}: kernel {} ({}, {status})",
+                k.compile.name, k.compile.kernel, k.compile.pipeline
+            );
+        }
+        if args.has("--emit-skipped") {
+            for s in &reply.skipped {
+                println!(
+                    "  {}:{}: skipped {}: {}",
+                    file.display(),
+                    s.line,
+                    s.construct,
+                    s.reason
+                );
+            }
+        }
+        total_kernels += reply.kernels.len();
+        total_skips += reply.skipped.len();
+    }
+    println!(
+        "extracted {total_kernels} kernel(s) from {} source file(s) \
+         ({total_skips} construct(s) skipped)",
+        files.len()
+    );
+    Ok(())
+}
+
 fn usage() -> anyhow::Error {
     anyhow::anyhow!(
-        "usage: silo <list|show|run|validate|tune|profile|inspect|verify|experiment|artifacts|\
-         serve|submit> [args]\n\
+        "usage: silo <list|show|run|validate|tune|profile|inspect|verify|extract|experiment|\
+         artifacts|serve|submit> [args]\n\
          kernels: a registered name (see `silo list`) or a .silo file path\n\
          optimization: --cfg1|--cfg2|--cfg3 or \
          --pipeline=<none|cfg1|cfg2|cfg3|auto|pass,pass,...>\n\
@@ -557,7 +755,11 @@ fn usage() -> anyhow::Error {
          certificate per top-level sequential loop under the preset's binding\n\
          safety: `silo verify kernel [--pipeline=SPEC]` prints per-access bounds \
          verdicts + the worst-case fuel bound; `silo verify <dir>...` sweeps \
-         every .silo file under the paths\n\
+         every .silo file under the paths with per-directory subtotals\n\
+         extraction: `silo extract <src>... [--out-dir=DIR --emit-skipped]` lifts \
+         affine C/Fortran loop nests into .silo kernels (skips are reported, \
+         never fatal); add --addr=H:P to extract through a daemon's /extract \
+         endpoint instead\n\
          service: `silo serve [--addr=H:P --threads=N --cache-cap=N --untrusted \
          --fuel=N --wall-ms=N --backend=B --access-log --retune-drift=R \
          --retune-min=N]`, then\n\

@@ -11,7 +11,9 @@ use crate::symbolic::Sym;
 
 use super::http;
 use super::json::Json;
-use super::protocol::{CompileReply, CompileRequest, RunReply, RunRequest};
+use super::protocol::{
+    CompileReply, CompileRequest, ExtractReply, ExtractRequest, RunReply, RunRequest,
+};
 
 /// A thin, connection-per-request client (mirrors the daemon's
 /// `Connection: close` policy).
@@ -72,6 +74,14 @@ impl Client {
         let body = CompileRequest::new(source, pipeline).to_json().to_string();
         let v = self.request("POST", "/compile", &body)?;
         CompileReply::from_json(&v).map_err(|e| anyhow!("POST /compile: {e}"))
+    }
+
+    /// Submit raw C/Fortran source for extraction: the daemon lifts
+    /// every affine nest it recognizes, compiles each through the
+    /// normal cache, and reports refused constructs in `skipped`.
+    pub fn extract(&self, req: &ExtractRequest) -> Result<ExtractReply> {
+        let v = self.request("POST", "/extract", &req.to_json().to_string())?;
+        ExtractReply::from_json(&v).map_err(|e| anyhow!("POST /extract: {e}"))
     }
 
     /// Execute a compiled kernel by id.

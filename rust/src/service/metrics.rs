@@ -24,16 +24,18 @@ pub enum Endpoint {
     Kernels,
     Compile,
     Run,
+    Extract,
     Other,
 }
 
 impl Endpoint {
-    pub const ALL: [Endpoint; 6] = [
+    pub const ALL: [Endpoint; 7] = [
         Endpoint::Healthz,
         Endpoint::Metrics,
         Endpoint::Kernels,
         Endpoint::Compile,
         Endpoint::Run,
+        Endpoint::Extract,
         Endpoint::Other,
     ];
 
@@ -45,6 +47,7 @@ impl Endpoint {
             Endpoint::Kernels => "kernels",
             Endpoint::Compile => "compile",
             Endpoint::Run => "run",
+            Endpoint::Extract => "extract",
             Endpoint::Other => "other",
         }
     }
@@ -56,6 +59,7 @@ impl Endpoint {
             "/metrics" => Endpoint::Metrics,
             "/kernels" => Endpoint::Kernels,
             "/compile" => Endpoint::Compile,
+            "/extract" => Endpoint::Extract,
             p if p.starts_with("/run/") => Endpoint::Run,
             _ => Endpoint::Other,
         }
@@ -114,7 +118,7 @@ pub struct Metrics {
     pub retunes_improved: AtomicU64,
     /// Per-endpoint request latency, microseconds, log₂ buckets —
     /// indexed by [`Endpoint`]'s position in [`Endpoint::ALL`].
-    pub latency: [AtomicHistogram; 6],
+    pub latency: [AtomicHistogram; 7],
 }
 
 impl Metrics {
@@ -142,7 +146,7 @@ impl Metrics {
                 Metrics::bump(&self.errors_client);
             }
         }
-        let idx = Endpoint::ALL.iter().position(|e| *e == endpoint).unwrap_or(5);
+        let idx = Endpoint::ALL.iter().position(|e| *e == endpoint).unwrap_or(6);
         self.latency[idx].record(wall.as_micros() as u64);
     }
 }
@@ -183,5 +187,6 @@ mod tests {
         assert_eq!(Endpoint::of_path("/nope"), Endpoint::Other);
         assert_eq!(Endpoint::of_path("/metrics"), Endpoint::Metrics);
         assert_eq!(Endpoint::of_path("/compile"), Endpoint::Compile);
+        assert_eq!(Endpoint::of_path("/extract"), Endpoint::Extract);
     }
 }

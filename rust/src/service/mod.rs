@@ -42,5 +42,8 @@ pub use cache::{CacheStats, Outcome, ScheduleCache};
 pub use client::{check_against_local, Client, SubmitOutcome};
 pub use json::Json;
 pub use metrics::Metrics;
-pub use protocol::{CompileReply, CompileRequest, RunReply, RunRequest};
+pub use protocol::{
+    CompileReply, CompileRequest, ExtractReply, ExtractRequest, ExtractedKernelReply, RunReply,
+    RunRequest, SkipReply,
+};
 pub use server::{ServedKernel, Server, ServiceConfig};

@@ -5,6 +5,7 @@
 //! | Endpoint          | Request            | Response           |
 //! |-------------------|--------------------|--------------------|
 //! | `POST /compile`   | [`CompileRequest`] | [`CompileReply`]   |
+//! | `POST /extract`   | [`ExtractRequest`] | [`ExtractReply`]   |
 //! | `POST /run/<id>`  | [`RunRequest`]     | [`RunReply`]       |
 //! | `GET /kernels`    | —                  | array of kernels   |
 //! | `GET /metrics`    | —                  | counter object     |
@@ -174,6 +175,176 @@ impl CompileReply {
                 .and_then(Json::as_str)
                 .map(str::to_string),
         })
+    }
+}
+
+/// `POST /extract`: raw C/Fortran application source. The daemon lifts
+/// every affine loop nest it recognizes ([`crate::extract`]), compiles
+/// each through the normal `/compile` path (same cache, same safety
+/// policy), and reports everything it refused in the skip list.
+#[derive(Debug, Clone)]
+pub struct ExtractRequest {
+    /// The application source text (not SILO-Text).
+    pub source: String,
+    /// Language tag: `c`, `f`/`fixed` (fixed-form Fortran), or
+    /// `f90`/`free` (free-form).
+    pub lang: String,
+    /// Pipeline for the per-kernel compiles (defaults to `auto`).
+    pub pipeline: String,
+    /// Name stem prefixed onto extracted kernel names (defaults to
+    /// `app`) — plays the role the file stem plays on the CLI.
+    pub stem: String,
+}
+
+impl ExtractRequest {
+    pub fn new(source: &str, lang: &str, pipeline: &str, stem: &str) -> ExtractRequest {
+        ExtractRequest {
+            source: source.to_string(),
+            lang: lang.to_string(),
+            pipeline: pipeline.to_string(),
+            stem: stem.to_string(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("source".into(), Json::Str(self.source.clone())),
+            ("lang".into(), Json::Str(self.lang.clone())),
+            ("pipeline".into(), Json::Str(self.pipeline.clone())),
+            ("stem".into(), Json::Str(self.stem.clone())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExtractRequest, String> {
+        let source = v
+            .get("source")
+            .and_then(Json::as_str)
+            .ok_or("missing string field `source` (C or Fortran text)")?
+            .to_string();
+        let lang = v
+            .get("lang")
+            .and_then(Json::as_str)
+            .ok_or("missing string field `lang` (c | f | f90)")?
+            .to_string();
+        let pipeline = match v.get("pipeline") {
+            None | Some(Json::Null) => "auto".to_string(),
+            Some(p) => p.as_str().ok_or("field `pipeline` must be a string")?.to_string(),
+        };
+        let stem = match v.get("stem") {
+            None | Some(Json::Null) => "app".to_string(),
+            Some(s) => s.as_str().ok_or("field `stem` must be a string")?.to_string(),
+        };
+        Ok(ExtractRequest {
+            source,
+            lang,
+            pipeline,
+            stem,
+        })
+    }
+}
+
+/// One kernel in an [`ExtractReply`]: the compile outcome (identical in
+/// shape to `POST /compile`'s reply, content-addressed id included) plus
+/// the canonical SILO-Text the extractor emitted for it.
+#[derive(Debug, Clone)]
+pub struct ExtractedKernelReply {
+    pub compile: CompileReply,
+    pub silo: String,
+}
+
+/// One refused construct in an [`ExtractReply`] (`line` is 1-based in
+/// the submitted source).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SkipReply {
+    pub line: u64,
+    pub construct: String,
+    pub reason: String,
+}
+
+/// `POST /extract` success reply. An extraction with zero kernels is
+/// still a 200 — the skip list says why nothing lifted.
+#[derive(Debug, Clone)]
+pub struct ExtractReply {
+    pub kernels: Vec<ExtractedKernelReply>,
+    pub skipped: Vec<SkipReply>,
+}
+
+impl ExtractReply {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            (
+                "kernels".into(),
+                Json::Arr(
+                    self.kernels
+                        .iter()
+                        .map(|k| {
+                            // The compile object plus a `silo` key.
+                            let mut kv = match k.compile.to_json() {
+                                Json::Obj(kv) => kv,
+                                _ => unreachable!("CompileReply::to_json is an object"),
+                            };
+                            kv.push(("silo".into(), Json::Str(k.silo.clone())));
+                            Json::Obj(kv)
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "skipped".into(),
+                Json::Arr(
+                    self.skipped
+                        .iter()
+                        .map(|s| {
+                            Json::Obj(vec![
+                                ("line".into(), Json::Num(s.line as f64)),
+                                ("construct".into(), Json::Str(s.construct.clone())),
+                                ("reason".into(), Json::Str(s.reason.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ExtractReply, String> {
+        let kernels = v
+            .get("kernels")
+            .and_then(Json::as_arr)
+            .ok_or("missing array field `kernels`")?
+            .iter()
+            .map(|x| {
+                let compile = CompileReply::from_json(x)?;
+                let silo = x
+                    .get("silo")
+                    .and_then(Json::as_str)
+                    .ok_or("kernel entry missing string field `silo`")?
+                    .to_string();
+                Ok(ExtractedKernelReply { compile, silo })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let skipped = v
+            .get("skipped")
+            .and_then(Json::as_arr)
+            .ok_or("missing array field `skipped`")?
+            .iter()
+            .map(|x| {
+                Ok(SkipReply {
+                    line: x.get("line").and_then(Json::as_i64).unwrap_or(0).max(0) as u64,
+                    construct: x
+                        .get("construct")
+                        .and_then(Json::as_str)
+                        .ok_or("skip entry missing string field `construct`")?
+                        .to_string(),
+                    reason: x
+                        .get("reason")
+                        .and_then(Json::as_str)
+                        .ok_or("skip entry missing string field `reason`")?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ExtractReply { kernels, skipped })
     }
 }
 
@@ -542,6 +713,51 @@ mod tests {
         assert_eq!(legacy.inspector, None);
         let bits: Vec<u64> = back.outputs[0].1.iter().map(|x| x.to_bits()).collect();
         assert_eq!(bits, vec![0.0f64.to_bits(), (-0.0f64).to_bits(), 2.5f64.to_bits()]);
+    }
+
+    #[test]
+    fn extract_request_and_reply_round_trip() {
+        let req = ExtractRequest::new("void f(int n) {}", "c", "cfg2", "demo");
+        let back = ExtractRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back.source, "void f(int n) {}");
+        assert_eq!((back.lang.as_str(), back.pipeline.as_str()), ("c", "cfg2"));
+        assert_eq!(back.stem, "demo");
+        // `pipeline` and `stem` default; `source` and `lang` are required.
+        let v = Json::parse(r#"{"source": "x", "lang": "f90"}"#).unwrap();
+        let d = ExtractRequest::from_json(&v).unwrap();
+        assert_eq!((d.pipeline.as_str(), d.stem.as_str()), ("auto", "app"));
+        assert!(ExtractRequest::from_json(&Json::Obj(vec![])).is_err());
+
+        let reply = ExtractReply {
+            kernels: vec![ExtractedKernelReply {
+                compile: CompileReply {
+                    kernel: "kfeedfacefeedface".into(),
+                    name: "demo_stencil".into(),
+                    pipeline: "auto".into(),
+                    cached: false,
+                    coalesced: false,
+                    passes: vec![],
+                    params: vec!["demo_stencil_n".into()],
+                    arguments: vec!["a".into(), "b".into()],
+                    tier: "proven".into(),
+                    unproven: 0,
+                    fuel_bound: Some("demo_stencil_n".into()),
+                },
+                silo: "program demo_stencil { }".into(),
+            }],
+            skipped: vec![SkipReply {
+                line: 7,
+                construct: "goto statement".into(),
+                reason: "unstructured control flow is not liftable".into(),
+            }],
+        };
+        let back = ExtractReply::from_json(&reply.to_json()).unwrap();
+        assert_eq!(back.kernels.len(), 1);
+        assert_eq!(back.kernels[0].compile.kernel, "kfeedfacefeedface");
+        assert_eq!(back.kernels[0].silo, "program demo_stencil { }");
+        assert_eq!(back.skipped.len(), 1);
+        assert_eq!(back.skipped[0].line, 7);
+        assert_eq!(back.skipped[0].construct, "goto statement");
     }
 
     #[test]

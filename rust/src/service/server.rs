@@ -81,7 +81,8 @@ use super::http::{self, Request};
 use super::json::Json;
 use super::metrics::{Endpoint, Metrics};
 use super::protocol::{
-    error_body, error_body_code, CompileReply, CompileRequest, RunReply, RunRequest,
+    error_body, error_body_code, CompileReply, CompileRequest, ExtractReply, ExtractRequest,
+    ExtractedKernelReply, RunReply, RunRequest, SkipReply,
 };
 
 /// Requests served on one keep-alive connection before the daemon
@@ -656,6 +657,7 @@ fn route(req: &Request, state: &Arc<ServiceState>) -> (u16, String, &'static str
         ("GET", "/metrics") => json((200, metrics_body(state))),
         ("GET", "/kernels") => json((200, kernels_body(state))),
         ("POST", "/compile") => json(compile_endpoint(req, state)),
+        ("POST", "/extract") => json(extract_endpoint(req, state)),
         ("POST", p) if p.starts_with("/run/") => {
             json(run_endpoint(req, state, &p["/run/".len()..]))
         }
@@ -663,7 +665,7 @@ fn route(req: &Request, state: &Arc<ServiceState>) -> (u16, String, &'static str
             404,
             error_body(&format!(
                 "no such route {} {} (endpoints: GET /healthz /metrics /kernels, \
-                 POST /compile /run/<id>)",
+                 POST /compile /extract /run/<id>)",
                 req.method, req.path
             )),
         )),
@@ -1023,15 +1025,30 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
             return (400, error_body(&format!("{e:#}")));
         }
     }
+    match compile_source_to_reply(state, &creq.source, &spec) {
+        Ok(reply) => (200, reply.to_json().to_string()),
+        Err(err) => err,
+    }
+}
+
+/// Parse + cache-compile one SILO-Text module and shape the
+/// [`CompileReply`] — the shared core of `POST /compile` and the
+/// per-kernel compiles of `POST /extract`. The caller holds the
+/// `begin_compile` symbol-registry bracket and has validated the spec.
+fn compile_source_to_reply(
+    state: &ServiceState,
+    source: &str,
+    spec: &PipelineSpec,
+) -> Result<CompileReply, (u16, String)> {
     // Capture every symbol the parse interns; the entry (if one is
     // built) holds them, any other outcome hands them back to the
     // registry as release candidates.
     let scope = crate::symbolic::SymScope::begin();
-    let parsed = match crate::frontend::parse_str(&creq.source) {
+    let parsed = match crate::frontend::parse_str(source) {
         Ok(p) => p,
         Err(e) => {
             state.syms.discard(&scope.finish());
-            return (400, error_body(&e.to_string()));
+            return Err((400, error_body(&e.to_string())));
         }
     };
     let parse_syms = scope.finish();
@@ -1043,7 +1060,7 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
     } else {
         SafetyPolicy::Trusted
     };
-    let spec_name = normalize_spec(&spec);
+    let spec_name = normalize_spec(spec);
     let key = cache::kernel_key(&parsed, &spec_name);
     let id = cache::kernel_id(key);
     let (result, outcome, evicted) = state.cache.get_or_build_evicting(key, || {
@@ -1058,7 +1075,7 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
         // a cached artifact is byte-identical either way.
         let compiled = match compile_program_calibrated(
             parsed.program.clone(),
-            &spec,
+            spec,
             MemSchedules::default(),
             policy,
             state.calibration(),
@@ -1127,9 +1144,9 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
             // constant, so driver rewording cannot silently break this.
             if e.starts_with(crate::coordinator::REJECTED_PREFIX) {
                 Metrics::bump(&state.metrics.rejected);
-                return (422, error_body_code(&e, "rejected"));
+                return Err((422, error_body_code(&e, "rejected")));
             }
-            return (400, error_body(&e));
+            return Err((400, error_body(&e)));
         }
     };
     let compiled = kernel.compiled();
@@ -1163,6 +1180,79 @@ fn compile_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) 
             .as_ref()
             .and_then(|r| r.fuel_bound.as_ref())
             .map(|f| f.to_string()),
+    };
+    Ok(reply)
+}
+
+fn extract_endpoint(req: &Request, state: &ServiceState) -> (u16, String) {
+    // Same symbol-registry bracket as /compile: the extractor's lifter
+    // and round-trip parse intern symbols, and so does each per-kernel
+    // compile below.
+    state.syms.begin_compile();
+    let out = extract_endpoint_inner(req, state);
+    state.syms.end_compile();
+    out
+}
+
+fn extract_endpoint_inner(req: &Request, state: &ServiceState) -> (u16, String) {
+    let body = match req.body_str() {
+        Ok(b) => b,
+        Err(e) => return (400, error_body(&format!("{e:#}"))),
+    };
+    let v = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return (400, error_body(&format!("malformed JSON body: {e}"))),
+    };
+    let ereq = match ExtractRequest::from_json(&v) {
+        Ok(r) => r,
+        Err(e) => return (400, error_body(&e)),
+    };
+    let Some(lang) = crate::extract::lang_for_tag(&ereq.lang) else {
+        return (
+            400,
+            error_body(&format!(
+                "unknown `lang` `{}` (expected c, f/fixed, or f90/free)",
+                ereq.lang
+            )),
+        );
+    };
+    let spec = PipelineSpec::parse(&ereq.pipeline);
+    if let PipelineSpec::Custom(_) = &spec {
+        if let Err(e) = spec.build(MemSchedules::default()) {
+            return (400, error_body(&format!("{e:#}")));
+        }
+    }
+    // The extraction itself (lifting + the round-trip re-parse) interns
+    // symbols no cache entry will hold — discard them as release
+    // candidates; each kernel's compile below re-interns what it needs
+    // under its own scope, exactly like a direct /compile.
+    let scope = crate::symbolic::SymScope::begin();
+    let report = crate::extract::extract_source(&ereq.stem, &ereq.source, lang);
+    state.syms.discard(&scope.finish());
+    let mut kernels = Vec::new();
+    for k in &report.kernels {
+        // Extracted kernels re-parse by construction, so a failure here
+        // is a genuine compile/verify outcome (e.g. an untrusted daemon
+        // refusing a provably-oob nest) — surface it as-is.
+        match compile_source_to_reply(state, &k.silo, &spec) {
+            Ok(reply) => kernels.push(ExtractedKernelReply {
+                compile: reply,
+                silo: k.silo.clone(),
+            }),
+            Err(err) => return err,
+        }
+    }
+    let reply = ExtractReply {
+        kernels,
+        skipped: report
+            .skips
+            .iter()
+            .map(|s| SkipReply {
+                line: s.line as u64,
+                construct: s.construct.clone(),
+                reason: s.reason.clone(),
+            })
+            .collect(),
     };
     (200, reply.to_json().to_string())
 }

@@ -26,9 +26,13 @@
 //! * **Opaque rules.** Non-polynomial heads get sound VM-semantics
 //!   intervals: `mod(a,b) ∈ [0, b−1]` for a provably positive divisor
 //!   (the VM computes `rem_euclid`, and 0 on a zero divisor),
-//!   `floordiv` by a positive divisor stays within `[min(a,0),
-//!   max(a,0)]`, `log2 ∈ [0, 62]` (i64 inputs; non-positive clamps to
-//!   0), `abs ∈ [0, max(hi, −lo)]`.
+//!   `floordiv` by a *constant* positive divisor is monotone so the
+//!   numerator endpoints map through exactly (symbolic positive
+//!   divisors fall back to `[min(a,0), max(a,0)]`), `log2 ∈ [0, 62]`
+//!   (i64 inputs; non-positive clamps to 0), `abs ∈ [0, max(hi, −lo)]`.
+//!   [`prove_nonneg`] then discharges residual constant-divisor
+//!   `floordiv` terms through their rational envelope
+//!   (`(num−c+1)/c ≤ floordiv(num,c) ≤ num/c`).
 
 use crate::symbolic::{
     int, is_nonneg, max as emax, min as emin, simplify, to_poly, Atom, Expr, FuncKind, Sym, Truth,
@@ -507,6 +511,18 @@ fn opaque_interval(e: &Expr, env: &BoundEnv, depth: u32) -> Iv {
                 return Iv::default();
             }
             let ia = interval_at(a, env, depth - 1);
+            // A constant positive divisor makes floor division monotone
+            // in the numerator, so the numerator's endpoints map through
+            // exactly: `i/2` over `i ∈ [0, N−1]` is `[0, (N−1)/2]`, not
+            // the sign-clamped envelope below. The elimination step in
+            // [`prove_nonneg`] discharges the resulting symbolic
+            // `floordiv` endpoints.
+            if let Some(c) = b.as_int().filter(|c| *c >= 1) {
+                return Iv {
+                    lo: ia.lo.map(|l| crate::symbolic::floordiv(l, int(c))),
+                    hi: ia.hi.map(|h| crate::symbolic::floordiv(h, int(c))),
+                };
+            }
             Iv {
                 lo: ia.lo.map(|l| smin(l, int(0))),
                 hi: ia.hi.map(|h| smax(h, int(0))),
@@ -551,7 +567,7 @@ fn prove_nonneg_at(e: &Expr, depth: u32) -> bool {
         return false;
     }
     let Some(m) = find_minmax(&e) else {
-        return false;
+        return fd_eliminate(&e, depth);
     };
     let (is_min, a, b) = match &m {
         Expr::Min(a, b) => (true, (**a).clone(), (**b).clone()),
@@ -571,6 +587,84 @@ fn prove_nonneg_at(e: &Expr, depth: u32) -> bool {
         prove_nonneg_at(&ea, depth - 1) || prove_nonneg_at(&eb, depth - 1)
     } else {
         prove_nonneg_at(&ea, depth - 1) && prove_nonneg_at(&eb, depth - 1)
+    }
+}
+
+/// First `floordiv(num, c)` subterm of `e` with a constant divisor
+/// `c ≥ 1` (pre-order), if any.
+fn find_const_floordiv(e: &Expr) -> Option<(Expr, Expr, i64)> {
+    let mut found: Option<(Expr, Expr, i64)> = None;
+    e.visit(&mut |x| {
+        if found.is_none() {
+            if let Expr::FloorDiv(num, den) = x {
+                if let Some(c) = den.as_int().filter(|c| *c >= 1) {
+                    found = Some((x.clone(), (**num).clone(), c));
+                }
+            }
+        }
+    });
+    found
+}
+
+/// Eliminate one constant-divisor `floordiv` via its rational envelope.
+///
+/// Writing `e = A·q + B` with `q = floordiv(num, c)`, `c ≥ 1`, and a
+/// constant coefficient `A`, Euclidean division gives the two-sided
+/// envelope `(num − c + 1)/c ≤ q ≤ num/c`. Scaling the obligation by the
+/// positive `c` (which preserves sign) turns `e ≥ 0` into a `floordiv`-
+/// free sufficient condition:
+///
+/// * `A ≥ 0`: prove `A·(num − c + 1) + c·B ≥ 0` — or, when the envelope
+///   is too loose, `num ≥ 0 ∧ B ≥ 0` (then `q ≥ 0` and `e ≥ B`).
+/// * `A < 0`: prove `A·num + c·B ≥ 0`.
+///
+/// This is a local judging step, not a rewrite in `simplify` — the
+/// canonical form (and with it printed kernels and cache keys) keeps
+/// `floordiv` intact.
+fn fd_eliminate(e: &Expr, depth: u32) -> bool {
+    if depth == 0 {
+        return false;
+    }
+    let Some((m, num, c)) = find_const_floordiv(e) else {
+        return false;
+    };
+    // Reuse the unlexable hole symbol (see `minmax_polarity`) to expose
+    // the subterm's linear coefficient.
+    let hole = Sym::new("silo#bounds#hole");
+    let et = replace_subterm(e, &m, &Expr::Sym(hole));
+    let Some(p) = to_poly(&et) else {
+        return false;
+    };
+    let ah = Atom::Sym(hole);
+    // The hole must not hide inside another opaque atom.
+    for (mono, _) in &p.0 {
+        for (a, _) in &mono.0 {
+            if *a != ah && a.depends_on(hole) {
+                return false;
+            }
+        }
+    }
+    let by = p.collect(&ah);
+    if by.keys().max().copied().unwrap_or(0) > 1 {
+        return false;
+    }
+    let Some(a_coef) = by.get(&1).map(|q| q.as_constant()) else {
+        return false;
+    };
+    let Some(a_coef) = a_coef else {
+        return false;
+    };
+    let b_rest = by
+        .get(&0)
+        .cloned()
+        .unwrap_or_else(crate::symbolic::Poly::zero)
+        .to_expr();
+    if a_coef >= 0 {
+        let env_lo = int(a_coef) * (num.clone() - int(c - 1)) + int(c) * b_rest.clone();
+        prove_nonneg_at(&env_lo, depth - 1)
+            || (prove_nonneg_at(&num, depth - 1) && prove_nonneg_at(&b_rest, depth - 1))
+    } else {
+        prove_nonneg_at(&(int(a_coef) * num + int(c) * b_rest), depth - 1)
     }
 }
 
@@ -644,6 +738,34 @@ mod tests {
         assert!(prove_nonneg(&emin(int(32), n.clone())));
         // max needs only one arm for a lower bound: max(N − 100, 5) ≥ 0.
         assert!(prove_nonneg(&emax(n - int(100), int(5))));
+    }
+
+    #[test]
+    fn floordiv_const_divisor_interval_is_exact() {
+        let n = psym("bnd_fdN");
+        let i = Sym::nonneg("bnd_fdi");
+        let env = env_with(i, int(0), n.clone() - int(1));
+        // i/2 over i ∈ [0, N−1] → [0, (N−1)/2]; against extent N the
+        // slack N − 1 − (N−1)/2 must prove (the old sign-clamped rule
+        // gave hi = max(N−1, 0) and the proof failed).
+        let off = crate::symbolic::floordiv(Expr::Sym(i), int(2));
+        let iv = interval(&off, &env);
+        assert_eq!(iv.lo, Some(int(0)));
+        let hi = iv.hi.expect("upper bound");
+        assert!(prove_nonneg(&(n - int(1) - hi)), "slack unproven: {hi}");
+    }
+
+    #[test]
+    fn floordiv_envelope_elimination() {
+        let n = psym("bnd_feN");
+        let q = crate::symbolic::floordiv(n.clone() - int(1), int(2));
+        // Lower side via num ≥ 0: floor((N−1)/2) ≥ 0.
+        assert!(prove_nonneg(&q));
+        // Negative-coefficient side: N − 1 − floor((N−1)/2) ≥ 0.
+        assert!(prove_nonneg(&(n.clone() - int(1) - q.clone())));
+        // Unsound direction must stay unproven: floor((N−1)/2) ≥ N − 1
+        // already fails at N = 2.
+        assert!(!prove_nonneg(&(q - n + int(1))));
     }
 
     #[test]

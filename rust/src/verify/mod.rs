@@ -39,6 +39,10 @@
 //! body accesses when `g > 0`, so for integer-valued guards linear in a
 //! single loop variable the variable's range is tightened before
 //! judging the guarded accesses (the `blur_guard` boundary pattern).
+//! Relational guards over *several* loop variables (`i + j < N`) go
+//! through a λ=1 slack fallback instead ([`judge_guarded`]): the
+//! obligation is judged with the guard slack `g − 1` subtracted once,
+//! which cancels correlated subscripts symbolically.
 //!
 //! Soundness direction: everything here over-approximates. A
 //! `ProvenInBounds` verdict is a theorem under the parameter floors the
@@ -433,7 +437,16 @@ impl Verifier<'_> {
         if let Some(g) = &s.guard {
             for (c, off) in g.loads() {
                 if seen.insert((c, off.clone(), false)) {
-                    self.record(s, c, &off, AccessKind::Read, &ctx.abs, &ctx.rel, &ctx.subs);
+                    self.record(
+                        s,
+                        c,
+                        &off,
+                        AccessKind::Read,
+                        &ctx.abs,
+                        &ctx.rel,
+                        &ctx.subs,
+                        None,
+                    );
                 }
             }
         }
@@ -447,9 +460,12 @@ impl Verifier<'_> {
         };
         let abs_env = abs_ref.as_ref().unwrap_or(&ctx.abs);
         let rel_env = rel_ref.as_ref().unwrap_or(&ctx.rel);
+        // Guard handed to `record` for the λ=1 slack fallback — only
+        // integer guards give `g > 0 ⟺ g − 1 ≥ 0`.
+        let guard = s.guard.as_ref().filter(|g| integer_guard(g));
         for (c, off) in s.rhs.loads() {
             if seen.insert((c, off.clone(), false)) {
-                self.record(s, c, &off, AccessKind::Read, abs_env, rel_env, &ctx.subs);
+                self.record(s, c, &off, AccessKind::Read, abs_env, rel_env, &ctx.subs, guard);
             }
         }
         self.record(
@@ -460,6 +476,7 @@ impl Verifier<'_> {
             abs_env,
             rel_env,
             &ctx.subs,
+            guard,
         );
     }
 
@@ -472,6 +489,7 @@ impl Verifier<'_> {
         abs: &BoundEnv,
         rel: &BoundEnv,
         subs: &[(Sym, Expr)],
+        guard: Option<&Expr>,
     ) {
         let size = self.p.container(c).size.clone();
         let verdict = match judge(off, abs, &size) {
@@ -483,6 +501,14 @@ impl Verifier<'_> {
                 match judge(&off_rel, rel, &size) {
                     Judge::Proven => AccessVerdict::ProvenInBounds,
                     Judge::Oob(reason) => AccessVerdict::ProvenOutOfBounds { reason },
+                    Judge::Unknown(_)
+                        if guard.is_some_and(|g| {
+                            judge_guarded(off, g, abs, &size)
+                                || judge_guarded(&off_rel, &subs_many(g, subs), rel, &size)
+                        }) =>
+                    {
+                        AccessVerdict::ProvenInBounds
+                    }
                     Judge::Unknown(_) if structurally_irregular(off) => {
                         AccessVerdict::RuntimeCheckable { reason }
                     }
@@ -561,6 +587,36 @@ fn judge(off: &Expr, env: &BoundEnv, size: &Expr) -> Judge {
         }
     };
     Judge::Unknown(side)
+}
+
+/// λ=1 guard-slack judging — the fallback for relational guards the
+/// per-variable refinement cannot use.
+///
+/// The guarded body runs only where the integer guard satisfies
+/// `g ≥ 1`, i.e. where the slack `g − 1` is nonnegative. Subtracting
+/// that slack once from a failing obligation is sound (a Farkas
+/// combination with multiplier 1): `off − (g − 1) ≥ 0` over the whole
+/// iteration box implies `off ≥ 0` wherever the body actually executes,
+/// and symmetrically for the extent side. Unlike
+/// [`guard_refinement`], the subtraction keeps correlated variables
+/// together — for `if (i + j < N) … x[i + j]` the guard
+/// `N − i − j` cancels the subscript symbolically, which no
+/// per-variable interval can express. Each side independently accepts
+/// the plain or the slack-adjusted obligation: the slack helps exactly
+/// one side and can loosen the other.
+fn judge_guarded(off: &Expr, g: &Expr, env: &BoundEnv, size: &Expr) -> bool {
+    let in_lo = |e: &Expr| {
+        interval(e, env)
+            .lo
+            .as_ref()
+            .map(prove_nonneg)
+            .unwrap_or(false)
+    };
+    let slack = g.clone() - int(1);
+    let lo = off.clone();
+    let hi = size.clone() - int(1) - off.clone();
+    (in_lo(&lo) || in_lo(&(lo.clone() - slack.clone())))
+        && (in_lo(&hi) || in_lo(&(hi.clone() - slack)))
 }
 
 /// Is `g` a purely integer-valued expression (so `g > 0 ⟺ g ≥ 1`)?
@@ -752,6 +808,55 @@ mod tests {
                 y,
                 Expr::Sym(i),
                 load(x, Expr::Sym(i)),
+            );
+        });
+        let p = b.finish();
+        let r = verify_program(&p);
+        assert!(r.all_proven(), "{}", r.summary());
+    }
+
+    #[test]
+    fn two_variable_guard_proves_antidiagonal() {
+        // for i, j in [0, N): if (i + j < N) y[i + j] = x[i + j] — the
+        // guard `N − i − j` correlates i and j, which per-variable
+        // refinement cannot represent; the λ=1 slack fallback cancels
+        // the subscript against the guard symbolically.
+        let mut b = ProgramBuilder::new("ver_diag");
+        let n = b.param_positive("vdg_N");
+        let x = b.array("x", Expr::Sym(n));
+        let y = b.array("y", Expr::Sym(n));
+        let i = b.sym("vdg_i");
+        let j = b.sym("vdg_j");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.for_(j, int(0), Expr::Sym(n), int(1), |b| {
+                b.assign_if(
+                    Expr::Sym(n) - Expr::Sym(i) - Expr::Sym(j),
+                    y,
+                    Expr::Sym(i) + Expr::Sym(j),
+                    load(x, Expr::Sym(i) + Expr::Sym(j)),
+                );
+            });
+        });
+        let p = b.finish();
+        let r = verify_program(&p);
+        assert!(r.all_proven(), "{}", r.summary());
+    }
+
+    #[test]
+    fn floordiv_subscript_proves_with_const_divisor() {
+        // dst[i/2] over i ∈ [0, N) with |dst| = N: the exact
+        // constant-divisor interval plus envelope elimination prove
+        // both sides, so no runtime check is emitted.
+        let mut b = ProgramBuilder::new("ver_fd");
+        let n = b.param_positive("vfd_N");
+        let src = b.array("src", Expr::Sym(n));
+        let dst = b.array("dst", Expr::Sym(n));
+        let i = b.sym("vfd_i");
+        b.for_(i, int(0), Expr::Sym(n), int(1), |b| {
+            b.assign(
+                dst,
+                floordiv(Expr::Sym(i), int(2)),
+                load(src, Expr::Sym(i)),
             );
         });
         let p = b.finish();

@@ -1,0 +1,8 @@
+/* Pairwise fold: cell i accumulates into dst[i/2]. The floor-division
+   subscript exercises the bounds prover's exact constant-divisor
+   interval rule. */
+void halve(int n, double src[n], double dst[n]) {
+    for (int i = 0; i < n; i++) {
+        dst[i / 2] += 0.5 * src[i];
+    }
+}

@@ -1,0 +1,15 @@
+/* Pointer parameters defeat extent and alias analysis; so do locally
+   declared pointers that launder an array's identity. */
+void scale(int n, double *p) {
+    for (int i = 0; i < n; i++) {
+        p[i] = 2.0 * p[i];
+    }
+}
+
+void stash(int n, double a[n]) {
+    double *q;
+    q = a;
+    for (int i = 0; i < n; i++) {
+        q[i] = 0.0;
+    }
+}

@@ -1,0 +1,13 @@
+/* Calls have unknown effects: in a loop bound they break affinity,
+   as a statement they may write anything. */
+int bound(int n);
+
+void fill(int n, double a[n]) {
+    for (int i = 0; i < bound(n); i++) {
+        a[i] = 1.0;
+    }
+}
+
+void touch(int n, double a[n]) {
+    init(a, n);
+}

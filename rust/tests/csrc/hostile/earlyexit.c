@@ -1,0 +1,18 @@
+/* Early exits make the trip count depend on data, and gotos destroy
+   the structured nesting the lifter relies on. */
+void clampsum(int n, double a[n], double b[n]) {
+    for (int i = 0; i < n; i++) {
+        if (i > 100) {
+            break;
+        }
+        b[i] = b[i] + a[i];
+    }
+}
+
+void jump(int n, double a[n]) {
+    for (int i = 0; i < n; i++) {
+        goto done;
+    }
+done:
+    a[0] = 1.0;
+}

@@ -1,0 +1,7 @@
+/* The induction update is multiplicative, so the nest has no affine
+   trip count. */
+void doubling(int n, double a[n]) {
+    for (int i = 1; i < n; i *= 2) {
+        a[i] = 2.0 * a[i];
+    }
+}

@@ -1,0 +1,10 @@
+c     classic fixed-form daxpy: y <- y + a*x over unit stride
+      subroutine daxpy(n, a, x, y)
+      integer n
+      real*8 a
+      real*8 x(n), y(n)
+      integer i
+      do 10 i = 1, n
+         y(i) = y(i) + a*x(i)
+   10 continue
+      end

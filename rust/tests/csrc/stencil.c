@@ -1,0 +1,6 @@
+/* Three-point smoothing pass over the interior of a 1-D field. */
+void smooth(int n, double u[n], double out[n]) {
+    for (int i = 1; i < n - 1; i++) {
+        out[i] = 0.25 * u[i - 1] + 0.5 * u[i] + 0.25 * u[i + 1];
+    }
+}

@@ -1,0 +1,32 @@
+/* 2-D blur with edge guards (each neighbor contribution is gated on a
+   boundary test), plus an anti-diagonal accumulation whose guard
+   couples both loop variables — the relational-guard proving case. */
+void blur(int n, int m, double img[n][m], double out[n][m]) {
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < m; j++) {
+            out[i][j] = 0.5 * img[i][j];
+            if (i > 0) {
+                out[i][j] += 0.125 * img[i - 1][j];
+            }
+            if (i < n - 1) {
+                out[i][j] += 0.125 * img[i + 1][j];
+            }
+            if (j > 0) {
+                out[i][j] += 0.125 * img[i][j - 1];
+            }
+            if (j < m - 1) {
+                out[i][j] += 0.125 * img[i][j + 1];
+            }
+        }
+    }
+}
+
+void taper(int n, double acc[n], double w[n]) {
+    for (int i = 0; i < n; i++) {
+        for (int j = 0; j < n; j++) {
+            if (i + j < n) {
+                acc[i + j] += 0.5 * w[i];
+            }
+        }
+    }
+}

@@ -1,0 +1,9 @@
+/* Forward-elimination sweep of a tridiagonal solve: every row
+   eliminates against the previous one, a genuine loop-carried
+   dependence the optimizer must respect. */
+void sweep(int n, double diag[n], double rhs[n], double sub[n]) {
+    for (int i = 1; i < n; i++) {
+        diag[i] = diag[i] - sub[i] * diag[i - 1];
+        rhs[i] = rhs[i] - sub[i] * rhs[i - 1];
+    }
+}

@@ -1,0 +1,12 @@
+! Vertical forward substitution: every column i runs a sequential
+! sweep over k against the level below, column-major storage.
+subroutine column_sweep(ni, nk, ccol, dcol)
+  integer :: ni, nk
+  real(8) :: ccol(ni, nk), dcol(ni, nk)
+  integer :: i, k
+  do k = 2, nk
+    do i = 1, ni
+      dcol(i, k) = dcol(i, k) - ccol(i, k) * dcol(i, k - 1)
+    end do
+  end do
+end subroutine column_sweep

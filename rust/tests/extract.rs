@@ -1,0 +1,301 @@
+//! `silo extract` subsystem acceptance: real C/Fortran sources lift
+//! into SILO kernels that round-trip through the frontend, prove or
+//! check (never reject), and run bitwise-identically under `auto`
+//! vs. no optimization; hostile constructs are refused with exact
+//! file:line reasons — never silently dropped, never miscompiled.
+//!
+//! Golden snapshots of extractor output live in `corpus/extracted/`
+//! under the same bless convention as `tests/frontend.rs`:
+//! `SILO_BLESS=1 cargo test -q --test extract` seeds or refreshes them.
+
+use silo::extract::ExtractReport;
+use silo::frontend::parse_str;
+use silo::ir::ContainerKind;
+use silo::kernels::{gen_inputs_with, Preset};
+use silo::service::{Client, ExtractRequest, Server, ServiceConfig};
+use silo::tuner::{autotune_program, TuneOptions};
+
+fn manifest_path(rel: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+fn extract(rel: &str) -> ExtractReport {
+    silo::extract::extract_file(&manifest_path(rel)).unwrap_or_else(|e| panic!("{rel}: {e:#}"))
+}
+
+/// The benign sample tree: each file must lift exactly these kernels,
+/// in source order, with an empty skip list.
+const BENIGN: &[(&str, &[&str])] = &[
+    ("tests/csrc/stencil.c", &["stencil_smooth"]),
+    ("tests/csrc/tridiag.c", &["tridiag_sweep"]),
+    ("tests/csrc/gather.c", &["gather_halve"]),
+    ("tests/csrc/stencil2d.c", &["stencil2d_blur", "stencil2d_taper"]),
+    ("tests/csrc/vert.f90", &["vert_column_sweep"]),
+    ("tests/csrc/saxpy.f", &["saxpy_daxpy"]),
+];
+
+// ---------------------------------------------------------------------------
+// Benign sources: extraction, round-trip, presets
+// ---------------------------------------------------------------------------
+
+/// Every benign sample extracts all of its loop nests — at least five
+/// distinct sources, at least one of them Fortran — and refuses nothing.
+#[test]
+fn benign_sources_extract_every_expected_kernel() {
+    let mut fortran = 0;
+    for (rel, want) in BENIGN {
+        let rep = extract(rel);
+        let got: Vec<&str> = rep.kernels.iter().map(|k| k.name.as_str()).collect();
+        assert_eq!(got.as_slice(), *want, "{rel}: kernel set");
+        assert!(rep.skips.is_empty(), "{rel}: unexpected skips: {:?}", rep.skips);
+        if rel.ends_with(".f") || rel.ends_with(".f90") {
+            fortran += 1;
+        }
+    }
+    assert!(BENIGN.len() >= 5, "sample tree shrank below five sources");
+    assert!(fortran >= 1, "sample tree lost its Fortran coverage");
+}
+
+/// Emitted SILO-Text is canonical: reparsing it reconstructs the very
+/// program the extractor handed out, and every param carries a `tiny`
+/// preset binding so the kernel is runnable out of the box.
+#[test]
+fn extracted_kernels_round_trip_through_the_frontend() {
+    for (rel, _) in BENIGN {
+        for k in extract(rel).kernels {
+            let parsed = parse_str(&k.silo)
+                .unwrap_or_else(|e| panic!("{}: reparse failed: {e}\n{}", k.name, k.silo));
+            assert_eq!(parsed.program, k.parsed.program, "{}: reparse diverged", k.name);
+            k.parsed.params_for(Preset::Tiny).unwrap_or_else(|e| panic!("{}: {e:#}", k.name));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Safety: prove or check, never reject
+// ---------------------------------------------------------------------------
+
+/// No extracted kernel may carry a provable out-of-bounds access, and
+/// the 1-D C kernels — including the floor-division gather that the
+/// widened interval rule exists for — must prove outright.
+#[test]
+fn extracted_kernels_prove_or_check_never_reject() {
+    let must_prove = ["stencil_smooth", "tridiag_sweep", "gather_halve"];
+    for (rel, _) in BENIGN {
+        for k in extract(rel).kernels {
+            let report = silo::verify::verify_program(&k.parsed.program);
+            assert!(
+                report.proven_oob().is_empty(),
+                "{}: provably out of bounds: {:?}",
+                k.name,
+                report.proven_oob()
+            );
+            if must_prove.contains(&k.name.as_str()) {
+                assert!(
+                    report.all_proven(),
+                    "{}: expected a full proof: {}",
+                    k.name,
+                    report.summary()
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Correctness: auto vs. sequential, bit for bit
+// ---------------------------------------------------------------------------
+
+/// Each extracted kernel runs under the autotuned schedule (threaded)
+/// and with no optimization at all (sequential); every argument array
+/// must come back bit-identical. The extractor earns no correctness
+/// exemptions just because its input was C or Fortran.
+#[test]
+fn extracted_kernels_agree_bitwise_auto_vs_sequential() {
+    for (rel, _) in BENIGN {
+        for k in extract(rel).kernels {
+            let prog = &k.parsed.program;
+            let params = k.parsed.params_for(Preset::Tiny).unwrap();
+            let inputs = gen_inputs_with(prog, &params, |n, i| k.parsed.init_value(n, i))
+                .unwrap_or_else(|e| panic!("{}: inputs: {e:#}", k.name));
+            let refs: Vec<_> = inputs.iter().map(|(c, v)| (*c, v.as_slice())).collect();
+            let run = |p: &silo::ir::Program, threads: usize| -> Vec<Vec<f64>> {
+                let vm = silo::exec::Vm::compile(p)
+                    .unwrap_or_else(|e| panic!("{}: VM compile: {e}\n{}", k.name, k.silo));
+                vm.run(&params, &refs, threads)
+                    .unwrap_or_else(|e| panic!("{}: VM run: {e}\n{}", k.name, k.silo))
+                    .arrays
+            };
+            let base = run(prog, 1);
+            let tuned = autotune_program(prog, &TuneOptions::default())
+                .unwrap_or_else(|e| panic!("{}: autotune: {e:#}", k.name));
+            let opt = run(&tuned.program, 3);
+            for c in &prog.containers {
+                if c.kind != ContainerKind::Argument {
+                    continue;
+                }
+                let i = c.id.0 as usize;
+                assert_eq!(base[i].len(), opt[i].len(), "{}: {}", k.name, c.name);
+                for (j, (x, y)) in base[i].iter().zip(opt[i].iter()).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "{}: {}[{j}] diverged under {}: {x} vs {y}",
+                        k.name,
+                        c.name,
+                        tuned.best.candidate.spec(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Golden snapshots
+// ---------------------------------------------------------------------------
+
+/// Committed `corpus/extracted/<kernel>.silo` snapshots pin the
+/// extractor's emission byte for byte. `SILO_BLESS=1` seeds missing
+/// snapshots and rewrites stale ones; files not yet blessed are
+/// skipped, so a fresh checkout stays green before the first bless.
+#[test]
+fn golden_snapshots_match_extractor_output() {
+    let bless = std::env::var("SILO_BLESS").is_ok();
+    let dir = manifest_path("../corpus/extracted");
+    if bless {
+        std::fs::create_dir_all(&dir).unwrap();
+    }
+    for (rel, _) in BENIGN {
+        for k in extract(rel).kernels {
+            let path = dir.join(format!("{}.silo", k.name));
+            if bless {
+                std::fs::write(&path, &k.silo).unwrap();
+                continue;
+            }
+            if !path.is_file() {
+                continue;
+            }
+            let want = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                k.silo,
+                want,
+                "{}: extractor output drifted from {} (re-bless with SILO_BLESS=1)",
+                k.name,
+                path.display()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure honesty: hostile sources
+// ---------------------------------------------------------------------------
+
+/// Hostile constructs are refused with the exact line, construct, and
+/// reason — and never lift a kernel. The skip report is the contract:
+/// a user pointing `silo extract` at real application code must learn
+/// precisely which loop was left behind and why.
+#[test]
+fn hostile_sources_refuse_with_exact_file_line_reasons() {
+    let cases: &[(&str, &[(u32, &str, &str)])] = &[
+        (
+            "tests/csrc/hostile/varstride.c",
+            &[(4, "loop stride", "multiplicative stride `i *= ...` is not affine")],
+        ),
+        (
+            "tests/csrc/hostile/alias.c",
+            &[
+                (5, "pointer alias", "pointer parameter `p` (extent and aliasing unknown)"),
+                (10, "pointer alias", "local pointer `q` (aliasing not analyzable)"),
+                (
+                    11,
+                    "scalar assignment",
+                    "assignment to scalar `q` is not single-assignment over a container",
+                ),
+                (13, "subscript", "`q` has no liftable declaration"),
+            ],
+        ),
+        (
+            "tests/csrc/hostile/earlyexit.c",
+            &[
+                (6, "break statement", "early exit makes the trip count data-dependent"),
+                (14, "goto statement", "unstructured control flow is not liftable"),
+                (16, "label", "label `done:` (goto target)"),
+                (17, "top-level statement", "assignment outside any loop is not extracted"),
+            ],
+        ),
+        (
+            "tests/csrc/hostile/callbound.c",
+            &[
+                (6, "call", "call to `bound(...)` in a loop bound is not affine"),
+                (12, "call statement", "call to `init(...)` has unknown effects"),
+            ],
+        ),
+    ];
+    for (rel, want) in cases {
+        let rep = extract(rel);
+        assert!(
+            rep.kernels.is_empty(),
+            "{rel}: lifted {} kernel(s) from a hostile source",
+            rep.kernels.len()
+        );
+        let got: Vec<(u32, &str, &str)> = rep
+            .skips
+            .iter()
+            .map(|s| (s.line, s.construct.as_str(), s.reason.as_str()))
+            .collect();
+        assert_eq!(got.as_slice(), *want, "{rel}: skip report");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Daemon: POST /extract
+// ---------------------------------------------------------------------------
+
+fn start(cache_cap: usize, cache_shards: usize, workers: usize) -> Server {
+    Server::serve(&ServiceConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        cache_cap,
+        cache_shards,
+        ..ServiceConfig::default()
+    })
+    .unwrap()
+}
+
+/// `POST /extract` lifts a C source over the wire, compiles the kernel
+/// through the normal content-addressed cache (a second identical
+/// extraction is a cache hit), and the emitted SILO-Text carries
+/// runnable preset bindings.
+#[test]
+fn daemon_extracts_compiles_and_caches_over_the_wire() {
+    let server = start(64, 1, 2);
+    let c = Client::new(&server.addr().to_string());
+    let source = std::fs::read_to_string(manifest_path("tests/csrc/stencil.c")).unwrap();
+    let req = ExtractRequest::new(&source, "c", "auto", "stencil");
+    let first = c.extract(&req).unwrap();
+    assert_eq!(first.kernels.len(), 1, "expected exactly one kernel");
+    assert_eq!(first.kernels[0].compile.name, "stencil_smooth");
+    assert!(!first.kernels[0].compile.cached, "first extraction cannot be cached");
+    assert!(first.skipped.is_empty(), "clean source must report no skips");
+    assert!(first.kernels[0].silo.contains("param"), "presets missing from emitted text");
+    let again = c.extract(&req).unwrap();
+    assert!(again.kernels[0].compile.cached, "second extraction must hit the compile cache");
+}
+
+/// The daemon is honest about refusals: hostile sources come back as a
+/// 200 with an empty kernel list and the same structured skip report
+/// the CLI prints, while an unknown language tag is a client error.
+#[test]
+fn daemon_reports_skips_and_rejects_unknown_lang() {
+    let server = start(64, 1, 2);
+    let c = Client::new(&server.addr().to_string());
+    let hostile = std::fs::read_to_string(manifest_path("tests/csrc/hostile/varstride.c")).unwrap();
+    let rep = c.extract(&ExtractRequest::new(&hostile, "c", "auto", "varstride")).unwrap();
+    assert!(rep.kernels.is_empty(), "hostile source must lift nothing");
+    assert_eq!(rep.skipped.len(), 1);
+    assert_eq!(rep.skipped[0].line, 4);
+    assert_eq!(rep.skipped[0].construct, "loop stride");
+    let err = c.extract(&ExtractRequest::new(&hostile, "cobol", "auto", "x"));
+    assert!(err.is_err(), "unknown lang tag must be a client error");
+}
